@@ -1,0 +1,73 @@
+//! Quickstart: train a small quantized network on the digits task,
+//! cluster its weights to 100 unique values, compile it to the
+//! multiplication-free integer engine, and verify it against the float
+//! path.
+//!
+//!     cargo run --release --example quickstart
+
+use qnn::data::digits;
+use qnn::fixedpoint::UniformQuant;
+use qnn::inference::{verify, CodebookSet, CompileCfg, FloatEngine, LutNetwork};
+use qnn::nn::{accuracy, ActSpec, NetSpec, Network, SoftmaxCrossEntropy, Target};
+use qnn::train::{ClusterCfg, TrainCfg, Trainer};
+use qnn::util::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Architecture: an MLP with tanh quantized to 32 levels (§2.1).
+    let spec = NetSpec::mlp(
+        "quickstart",
+        digits::FEATURES,
+        &[64, 64],
+        digits::CLASSES,
+        ActSpec::tanh_d(32),
+    );
+    let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(1));
+    println!("{}", net.summary());
+
+    // 2. Train with the paper's periodic weight clustering (§2.2):
+    //    every 250 steps, k-means all weights to |W|=100 and replace
+    //    each with its centroid.
+    let cfg = TrainCfg::adam(3e-3, 1500).with_cluster(ClusterCfg {
+        every: 250,
+        ..ClusterCfg::kmeans(100)
+    });
+    let mut trainer = Trainer::new(cfg);
+    let dcfg = digits::DigitsCfg::default();
+    let result = trainer.train(&mut net, &SoftmaxCrossEntropy, |rng| {
+        let (x, labels) = digits::batch(32, &dcfg, rng);
+        (x, Target::Labels(labels))
+    });
+    let codebook = result.codebook.expect("clustering enabled");
+    println!(
+        "trained: final loss {:.4}, |W| = {} unique weights",
+        result.final_loss,
+        codebook.len()
+    );
+
+    // 3. Compile to the §4 integer engine: no multiplies, no floats, no
+    //    non-linearity evaluation.
+    let lut = LutNetwork::compile(&net, &CodebookSet::Global(codebook), &CompileCfg::default())?;
+    println!(
+        "compiled LUT engine: s={}, Δx={:.4}, tables={} bytes, overflow bound {:e} (i64 ok: {})",
+        lut.plan.s,
+        lut.plan.dx,
+        lut.table_bytes(),
+        lut.plan.overflow.max_accum as f64,
+        lut.plan.overflow.fits_i64
+    );
+
+    // 4. Evaluate and cross-check both engines.
+    let eval = digits::eval_set(500, 99);
+    let int_logits = lut.forward(&eval.x).to_tensor();
+    let int_acc = accuracy(&int_logits, &eval.labels);
+    let levels = lut.input_quant.levels;
+    let mut float_engine = FloatEngine::with_input_quant(net, UniformQuant::unit(levels));
+    let rep = verify(&lut, &mut float_engine, &eval.x);
+    println!("integer-engine accuracy: {int_acc:.3}");
+    println!(
+        "float-vs-integer: argmax agreement {:.1}%, mean |logit Δ| {:.4}",
+        rep.argmax_agree * 100.0,
+        rep.mean_logit_diff
+    );
+    Ok(())
+}

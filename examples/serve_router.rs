@@ -1,0 +1,97 @@
+//! Serving demo: the router fronts three backends for the same digits
+//! model — the integer LUT engine, the float reference, and (when
+//! artifacts are present) an AOT-compiled XLA graph via PJRT — and
+//! drives concurrent load through each, printing comparative metrics.
+//!
+//!     make artifacts && cargo run --release --example serve_router
+
+use qnn::coordinator::{FloatNetEngine, LutEngine, PjrtEngine, Router, Server, ServerCfg};
+use qnn::data::digits;
+use qnn::inference::{CodebookSet, CompileCfg, FloatEngine, LutNetwork};
+use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::util::rng::Xoshiro256;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // Build a trained-ish quantized model (short training keeps the demo
+    // snappy; see e2e_digits for the full pipeline).
+    let spec = NetSpec::mlp(
+        "digits",
+        digits::FEATURES,
+        &[64, 64],
+        digits::CLASSES,
+        ActSpec::tanh_d(32),
+    );
+    let mut rng = Xoshiro256::new(11);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(1000), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default())?;
+    let levels = lut.input_quant.levels;
+
+    let cfg = ServerCfg {
+        max_batch: 32,
+        max_wait: Duration::from_millis(2),
+        workers: 2,
+    };
+
+    let mut router = Router::new();
+    router.register(
+        "digits-lut",
+        Server::start(
+            Arc::new(LutEngine::new("lut", lut, digits::FEATURES)),
+            cfg.clone(),
+        ),
+    );
+    router.register(
+        "digits-float",
+        Server::start(
+            Arc::new(FloatNetEngine::new(
+                "float",
+                FloatEngine::with_input_quant(
+                    net,
+                    qnn::fixedpoint::UniformQuant::unit(levels),
+                ),
+                digits::FEATURES,
+                digits::CLASSES,
+            )),
+            cfg.clone(),
+        ),
+    );
+    // PJRT backend (baked-weights serving graph) — optional.
+    match PjrtEngine::spawn("pjrt", "artifacts", "mlp_serve") {
+        Ok(engine) => {
+            router.register("digits-pjrt", Server::start(Arc::new(engine), cfg.clone()));
+        }
+        Err(e) => eprintln!("(skipping PJRT backend: {e:#})"),
+    }
+
+    println!("router serving models: {:?}", router.models());
+
+    // Drive load through every model.
+    for model in router.models().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        let mut joins = Vec::new();
+        for c in 0..8u64 {
+            let h = router.handle(&model)?;
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Xoshiro256::new(1000 + c);
+                let dcfg = digits::DigitsCfg::default();
+                for _ in 0..50 {
+                    let (x, _) = digits::batch(1, &dcfg, &mut rng);
+                    let _ = h.infer(x.into_vec()).expect("infer");
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        println!("done loading {model}");
+    }
+    println!("\n{}", router.report());
+    router.shutdown();
+    Ok(())
+}

@@ -1,0 +1,211 @@
+"""AOT lowering (build-time only): JAX graphs → HLO *text* + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Default exported model config: the digits task (16×16 inputs, 10
+# classes) matching rust/src/data/digits.rs.
+FEATURES = 256
+CLASSES = 10
+HIDDEN = [64, 64]
+LEVELS = 32
+TRAIN_BATCH = 32
+INFER_BATCH = 32
+LR = 1e-3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default ELIDES big constants as
+    # "{...}", which parses back as garbage on the Rust side. Baked
+    # weights (mlp_serve) must survive the text round-trip.
+    return comp.as_hlo_text(True)
+
+
+def slot(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def param_shapes(dims):
+    return [((dims[i], dims[i + 1]), (dims[i + 1],)) for i in range(len(dims) - 1)]
+
+
+def export_smoke(out_dir):
+    """Runtime smoke graph: (x@y + 2, x + y) over f32[2,2]."""
+
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0, x + y)
+
+    s = spec((2, 2))
+    lowered = jax.jit(fn).lower(s, s)
+    fname = "smoke.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "name": "smoke",
+        "file": fname,
+        "inputs": [slot("x", (2, 2)), slot("y", (2, 2))],
+        "outputs": [slot("xy_plus_2", (2, 2)), slot("x_plus_y", (2, 2))],
+        "meta": {},
+    }
+
+
+def export_infer(out_dir, dims, levels, batch):
+    """Float inference graph with quantized (Pallas) activations."""
+
+    def fn(*flat):
+        params = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(dims) - 1)]
+        x = flat[-1]
+        return (M.mlp_forward(params, x, levels),)
+
+    shapes = param_shapes(dims)
+    args = []
+    inputs = []
+    for i, (ws, bs) in enumerate(shapes):
+        args += [spec(ws), spec(bs)]
+        inputs += [slot(f"w{i}", ws), slot(f"b{i}", bs)]
+    args.append(spec((batch, dims[0])))
+    inputs.append(slot("x", (batch, dims[0])))
+
+    lowered = jax.jit(fn).lower(*args)
+    fname = "mlp_infer.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "name": "mlp_infer",
+        "file": fname,
+        "inputs": inputs,
+        "outputs": [slot("logits", (batch, dims[-1]))],
+        "meta": {"dims": dims, "levels": levels},
+    }
+
+
+def export_serve_infer(out_dir, dims, levels, batch, weights=None):
+    """Single-input serving graph: weights baked in as constants
+    (x → logits), the shape PjrtEngine expects."""
+    if weights is None:
+        params = M.init_params(jax.random.PRNGKey(7), dims)
+    else:
+        params = weights
+
+    def fn(x):
+        return (M.mlp_forward(params, x, levels),)
+
+    lowered = jax.jit(fn).lower(spec((batch, dims[0])))
+    fname = "mlp_serve.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "name": "mlp_serve",
+        "file": fname,
+        "inputs": [slot("x", (batch, dims[0]))],
+        "outputs": [slot("logits", (batch, dims[-1]))],
+        "meta": {"dims": dims, "levels": levels, "baked_weights": True},
+    }
+
+
+def export_train_step(out_dir, dims, levels, batch, lr):
+    """Functional Adam train step: the Rust coordinator drives the loop
+    and performs the paper's periodic weight clustering between calls."""
+
+    n_layers = len(dims) - 1
+
+    def fn(*flat):
+        # Layout: params (2L), m (2L), v (2L), step, x, labels_f32.
+        def grp(off):
+            return [(flat[off + 2 * i], flat[off + 2 * i + 1]) for i in range(n_layers)]
+
+        params = grp(0)
+        m = grp(2 * n_layers)
+        v = grp(4 * n_layers)
+        step = flat[6 * n_layers]
+        x = flat[6 * n_layers + 1]
+        labels = flat[6 * n_layers + 2].astype(jnp.int32)
+        new_p, new_m, new_v, new_step, loss = M.train_step(
+            params, m, v, step, x, labels, levels, lr=lr
+        )
+        outs = []
+        for grp_out in (new_p, new_m, new_v):
+            for w, b in grp_out:
+                outs += [w, b]
+        outs += [new_step, loss]
+        return tuple(outs)
+
+    shapes = param_shapes(dims)
+    args, inputs, outputs = [], [], []
+    for group in ("p", "m", "v"):
+        for i, (ws, bs) in enumerate(shapes):
+            args += [spec(ws), spec(bs)]
+            inputs += [slot(f"{group}_w{i}", ws), slot(f"{group}_b{i}", bs)]
+    args.append(spec(()))
+    inputs.append(slot("step", ()))
+    args.append(spec((batch, dims[0])))
+    inputs.append(slot("x", (batch, dims[0])))
+    args.append(spec((batch,)))
+    inputs.append(slot("labels", (batch,)))
+
+    for group in ("p", "m", "v"):
+        for i, (ws, bs) in enumerate(shapes):
+            outputs += [slot(f"{group}_w{i}_out", ws), slot(f"{group}_b{i}_out", bs)]
+    outputs.append(slot("step_out", ()))
+    outputs.append(slot("loss", ()))
+
+    lowered = jax.jit(fn).lower(*args)
+    fname = "train_step.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "name": "train_step",
+        "file": fname,
+        "inputs": inputs,
+        "outputs": outputs,
+        "meta": {"dims": dims, "levels": levels, "lr": lr, "batch": batch},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    dims = [FEATURES] + HIDDEN + [CLASSES]
+    graphs = [
+        export_smoke(args.out),
+        export_infer(args.out, dims, LEVELS, INFER_BATCH),
+        export_serve_infer(args.out, dims, LEVELS, INFER_BATCH),
+        export_train_step(args.out, dims, LEVELS, TRAIN_BATCH, LR),
+    ]
+    manifest = {"graphs": graphs}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    total = sum(
+        os.path.getsize(os.path.join(args.out, g["file"])) for g in graphs
+    )
+    print(f"wrote {len(graphs)} graphs ({total/1e6:.2f} MB HLO text) to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

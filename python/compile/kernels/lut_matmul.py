@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: the multiplication-free LUT gather-accumulate
+(paper §4, Figures 8/9) as a TPU-shaped kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+fixed-point ASIC/DSP deployment, so there is no CUDA idiom to port. On a
+TPU-like memory hierarchy the natural mapping is:
+
+* the (A+2)×W product table is small (A=32, W=1000 → ~136 KB as i32) and
+  is given a whole-array BlockSpec so it is resident in VMEM for every
+  grid step — the analogue of the paper's L1-cache argument for the LUT;
+* activation-index and weight-index tiles stream HBM→VMEM, with the grid
+  parallelizing over output blocks;
+* the inner loop is a vectorized gather + integer add on the VPU. The MXU
+  is deliberately idle: the whole point is *no multiplies*.
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+run Mosaic custom-calls; real-TPU numbers are estimated in DESIGN.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_matmul_kernel(a_idx_ref, w_idx_ref, b_idx_ref, table_ref, o_ref):
+    """One output-block program: sums[b, o] = Σ_i T[a[b,i], w[i,o]] + T[A, bias[o]]."""
+    a = a_idx_ref[...]  # [B, In]       int32
+    w = w_idx_ref[...]  # [In, O_blk]   int32
+    bias = b_idx_ref[...]  # [O_blk]    int32
+    t = table_ref[...]  # [A+2, W]      int32 (whole table, VMEM-resident)
+    w_cols = t.shape[1]
+    flat = t.reshape(-1)
+    # Vectorized gather: [B, In, O_blk] products, summed over In.
+    prods = jnp.take(flat, a[:, :, None] * w_cols + w[None, :, :], axis=0)
+    bias_row = (t.shape[0] - 2) * w_cols
+    b_prod = jnp.take(flat, bias_row + bias, axis=0)  # [O_blk]
+    o_ref[...] = prods.sum(axis=1, dtype=jnp.int32) + b_prod[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_out",))
+def lut_matmul(a_idx, w_idx, b_idx, table, block_out: int = 128):
+    """Batched LUT matmul via pallas_call with an output-block grid.
+
+    a_idx : [B, In] int32, w_idx : [In, Out] int32, b_idx : [Out] int32,
+    table : [A+2, W] int32  →  [B, Out] int32 fixed-point sums.
+    """
+    batch, in_dim = a_idx.shape
+    out_dim = w_idx.shape[1]
+    blk = min(block_out, out_dim)
+    # Pad Out to a multiple of the block.
+    pad = (-out_dim) % blk
+    if pad:
+        w_idx = jnp.pad(w_idx, ((0, 0), (0, pad)))
+        b_idx = jnp.pad(b_idx, (0, pad))
+    padded_out = out_dim + pad
+    grid = (padded_out // blk,)
+    out = pl.pallas_call(
+        _lut_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, in_dim), lambda o: (0, 0)),  # a_idx: replicated
+            pl.BlockSpec((in_dim, blk), lambda o: (0, o)),  # w_idx: output tile
+            pl.BlockSpec((blk,), lambda o: (o,)),  # b_idx: output tile
+            pl.BlockSpec(table.shape, lambda o: (0, 0)),  # table: VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((batch, blk), lambda o: (0, o)),
+        out_shape=jax.ShapeDtypeStruct((batch, padded_out), jnp.int32),
+        interpret=True,
+    )(a_idx, w_idx, b_idx, table)
+    return out[:, :out_dim]
+
+
+def _act_lookup_kernel(sums_ref, act_table_ref, o_ref, *, shift, offset):
+    """Fig-9: arithmetic shift → offset → clamp → table index."""
+    s = sums_ref[...]
+    t = act_table_ref[...]
+    bins = jnp.clip((s >> shift) - offset, 0, t.shape[0] - 1)
+    o_ref[...] = jnp.take(t, bins, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "offset"))
+def act_lookup(sums, act_table, shift: int, offset: int):
+    """Activation-table lookup kernel: [B, O] i32 sums → [B, O] i32 level
+    indices, integer ops only."""
+    return pl.pallas_call(
+        functools.partial(_act_lookup_kernel, shift=shift, offset=offset),
+        out_shape=jax.ShapeDtypeStruct(sums.shape, jnp.int32),
+        interpret=True,
+    )(sums, act_table)
+
+
+def lut_layer(a_idx, w_idx, b_idx, table, act_table, shift: int, offset: int):
+    """One full LUT layer: gather-accumulate + activation lookup."""
+    sums = lut_matmul(a_idx, w_idx, b_idx, table)
+    return act_lookup(sums, act_table, shift, offset)

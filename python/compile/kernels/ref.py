@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here; pytest
+asserts exact (integer) or allclose (float) agreement. These are also the
+specs: if a kernel and its ref disagree, the kernel is wrong.
+"""
+
+import jax.numpy as jnp
+
+
+def tanh_d_ref(x, levels: int):
+    """Quantized tanh: L output levels equally spaced in output space.
+
+    Forward-only reference (the straight-through backward lives in
+    model.py as a custom_vjp).
+    """
+    t = jnp.tanh(x)
+    i = jnp.round((t + 1.0) * 0.5 * (levels - 1))
+    return -1.0 + 2.0 * i / (levels - 1)
+
+
+def tanh_d_index_ref(x, levels: int):
+    """Level *index* of the quantized tanh (int32)."""
+    t = jnp.tanh(x)
+    i = jnp.round((t + 1.0) * 0.5 * (levels - 1))
+    return i.astype(jnp.int32)
+
+
+def lut_matmul_ref(a_idx, w_idx, b_idx, table):
+    """The paper's Fig-8 inner loop, vectorized in pure jnp.
+
+    a_idx : [B, In]   int32 — activation level indices
+    w_idx : [In, Out] int32 — weight codebook indices
+    b_idx : [Out]     int32 — bias codebook indices
+    table : [A+2, W]  int32 — fixed-point product table;
+            row A   (index -2) is the bias (constant 1.0) row,
+            row A+1 (index -1) is the zero/padding row.
+    returns [B, Out] int32 fixed-point sums.
+    """
+    w_cols = table.shape[1]
+    flat = table.reshape(-1)
+    gather = flat[a_idx[:, :, None] * w_cols + w_idx[None, :, :]]  # [B,In,Out]
+    bias = flat[(table.shape[0] - 2) * w_cols + b_idx]  # [Out]
+    return gather.sum(axis=1, dtype=jnp.int32) + bias[None, :]
+
+
+def act_lookup_ref(sums, act_table, shift: int, offset: int):
+    """Fig-9 activation lookup: shift, offset, clamp, index (int ops)."""
+    bins = (sums >> shift) - offset
+    bins = jnp.clip(bins, 0, act_table.shape[0] - 1)
+    return act_table[bins]

@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: quantized tanh activation (paper §2.1, Fig 1).
+
+Forward quantization to L levels equally spaced in output space. The
+training-path straight-through backward lives in model.py (custom_vjp);
+this kernel is the forward used both in training and inference graphs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tanh_d_kernel(x_ref, o_ref, *, levels):
+    x = x_ref[...]
+    t = jnp.tanh(x)
+    i = jnp.round((t + 1.0) * 0.5 * (levels - 1))
+    o_ref[...] = -1.0 + 2.0 * i / (levels - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("levels",))
+def tanh_d(x, levels: int):
+    """Quantized tanh forward: emits one of `levels` output values."""
+    return pl.pallas_call(
+        functools.partial(_tanh_d_kernel, levels=levels),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _tanh_d_index_kernel(x_ref, o_ref, *, levels):
+    x = x_ref[...]
+    t = jnp.tanh(x)
+    o_ref[...] = jnp.round((t + 1.0) * 0.5 * (levels - 1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("levels",))
+def tanh_d_index(x, levels: int):
+    """Level-index variant (int32) — feeds the LUT engine."""
+    return pl.pallas_call(
+        functools.partial(_tanh_d_index_kernel, levels=levels),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        interpret=True,
+    )(x)

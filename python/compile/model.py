@@ -1,0 +1,130 @@
+"""L2: the paper's model as a JAX compute graph, calling the L1 Pallas
+kernels, with the §2.1 straight-through training rule as a custom_vjp.
+
+Exposed graphs (AOT-lowered by aot.py):
+* ``infer``      — float forward with quantized activations.
+* ``train_step`` — one Adam step (functional: params/opt-state in & out)
+                   so the Rust coordinator can own the training loop and
+                   run the paper's periodic clustering between calls.
+* ``lut_infer``  — the §4 integer path: Pallas LUT gather-accumulate +
+                   activation-table lookups, argmax in-graph.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lut_matmul as lk
+from .kernels import tanhd as tk
+
+# ---------------------------------------------------------------------------
+# Quantized activation with straight-through analytic derivative (§2.1).
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def make_tanh_d(levels: int):
+    """tanhD(levels) with backward = d tanh/dx (ignoring quantization)."""
+
+    @jax.custom_vjp
+    def tanh_d(x):
+        return tk.tanh_d(x, levels)
+
+    def fwd(x):
+        return tanh_d(x), x
+
+    def bwd(x, g):
+        t = jnp.tanh(x)
+        return (g * (1.0 - t * t),)
+
+    tanh_d.defvjp(fwd, bwd)
+    return tanh_d
+
+
+# ---------------------------------------------------------------------------
+# MLP definition (params = flat list of (w, b) pairs).
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, dims):
+    """dims = [in, h1, ..., out]; returns [(w, b), ...]."""
+    params = []
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (dims[i], dims[i + 1])) / jnp.sqrt(dims[i])
+        b = jnp.zeros((dims[i + 1],))
+        params.append((w, b))
+    return params
+
+
+def mlp_forward(params, x, levels: int):
+    """Quantized-activation MLP; final layer linear (logits)."""
+    act = make_tanh_d(levels)
+    h = x
+    for w, b in params[:-1]:
+        h = act(h @ w + b)
+    w, b = params[-1]
+    return h @ w + b
+
+
+def softmax_xent(logits, labels):
+    """labels: int32 [B]. Returns mean loss."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(params, x, labels, levels: int):
+    return softmax_xent(mlp_forward(params, x, levels), labels)
+
+
+# ---------------------------------------------------------------------------
+# Functional Adam train step (opt state carried as explicit arrays).
+# ---------------------------------------------------------------------------
+
+
+def train_step(params, m, v, step, x, labels, levels: int, lr: float = 1e-3,
+               beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8):
+    """One Adam step. All state in/out so the caller owns the loop."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, labels, levels)
+    step = step + 1.0
+    bc1 = 1.0 - beta1 ** step
+    bc2 = 1.0 - beta2 ** step
+
+    new_params, new_m, new_v = [], [], []
+    for (p_w, p_b), (g_w, g_b), (m_w, m_b), (v_w, v_b) in zip(params, grads, m, v):
+        out_p, out_m, out_v = [], [], []
+        for p, g, mm, vv in ((p_w, g_w, m_w, v_w), (p_b, g_b, m_b, v_b)):
+            mm = beta1 * mm + (1.0 - beta1) * g
+            vv = beta2 * vv + (1.0 - beta2) * g * g
+            p = p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            out_p.append(p)
+            out_m.append(mm)
+            out_v.append(vv)
+        new_params.append(tuple(out_p))
+        new_m.append(tuple(out_m))
+        new_v.append(tuple(out_v))
+    return new_params, new_m, new_v, step, loss
+
+
+# ---------------------------------------------------------------------------
+# Integer LUT inference graph (§4) built from the L1 kernels.
+# ---------------------------------------------------------------------------
+
+
+def lut_infer(a_idx, layer_params, table, act_table, shift: int, offset: int):
+    """Multiplication-free forward pass.
+
+    a_idx        : [B, In] int32 input level indices
+    layer_params : list of (w_idx [I,O] i32, b_idx [O] i32); the last
+                   layer emits raw sums (no activation lookup).
+    Returns (pred int32 [B], sums int32 [B, Out_last]).
+    """
+    h = a_idx
+    for w_idx, b_idx in layer_params[:-1]:
+        h = lk.lut_layer(h, w_idx, b_idx, table, act_table, shift, offset)
+    w_idx, b_idx = layer_params[-1]
+    sums = lk.lut_matmul(h, w_idx, b_idx, table)
+    pred = jnp.argmax(sums, axis=-1).astype(jnp.int32)
+    return pred, sums

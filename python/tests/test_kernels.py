@@ -1,0 +1,136 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Integer kernels must match EXACTLY; float kernels to float tolerance.
+Hypothesis sweeps shapes and value ranges.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lut_matmul as lk
+from compile.kernels import ref
+from compile.kernels import tanhd as tk
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_lut_case(r, batch, in_dim, out_dim, a_levels, w_size):
+    a_idx = r.integers(0, a_levels, size=(batch, in_dim)).astype(np.int32)
+    w_idx = r.integers(0, w_size, size=(in_dim, out_dim)).astype(np.int32)
+    b_idx = r.integers(0, w_size, size=(out_dim,)).astype(np.int32)
+    table = r.integers(-(2**15), 2**15, size=(a_levels + 2, w_size)).astype(np.int32)
+    table[-1, :] = 0  # zero/padding row
+    return a_idx, w_idx, b_idx, table
+
+
+class TestLutMatmul:
+    def test_exact_vs_ref_small(self):
+        a_idx, w_idx, b_idx, table = make_lut_case(rng(0), 4, 8, 5, 6, 10)
+        got = lk.lut_matmul(a_idx, w_idx, b_idx, table)
+        want = ref.lut_matmul_ref(a_idx, w_idx, b_idx, table)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_exact_with_blocking_and_padding(self):
+        # out_dim not a multiple of the block exercises the pad path.
+        a_idx, w_idx, b_idx, table = make_lut_case(rng(1), 3, 16, 37, 8, 33)
+        got = lk.lut_matmul(a_idx, w_idx, b_idx, table, block_out=16)
+        want = ref.lut_matmul_ref(a_idx, w_idx, b_idx, table)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_bias_row_used(self):
+        # Zero all products except the bias row: output == bias products.
+        r = rng(2)
+        a_idx, w_idx, b_idx, table = make_lut_case(r, 2, 4, 3, 4, 6)
+        table[:-2, :] = 0
+        got = np.asarray(lk.lut_matmul(a_idx, w_idx, b_idx, table))
+        bias_row = table[-2]
+        want = np.stack([bias_row[b_idx]] * 2)
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 8),
+        in_dim=st.integers(1, 32),
+        out_dim=st.integers(1, 48),
+        a_levels=st.integers(2, 32),
+        w_size=st.integers(2, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_exact(self, batch, in_dim, out_dim, a_levels, w_size, seed):
+        a_idx, w_idx, b_idx, table = make_lut_case(
+            rng(seed), batch, in_dim, out_dim, a_levels, w_size
+        )
+        got = lk.lut_matmul(a_idx, w_idx, b_idx, table)
+        want = ref.lut_matmul_ref(a_idx, w_idx, b_idx, table)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestActLookup:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 8),
+        out_dim=st.integers(1, 32),
+        shift=st.integers(1, 16),
+        offset=st.integers(-64, 64),
+        table_len=st.integers(2, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_exact(self, batch, out_dim, shift, offset, table_len, seed):
+        r = rng(seed)
+        sums = r.integers(-(2**28), 2**28, size=(batch, out_dim)).astype(np.int32)
+        act_table = r.integers(0, 32, size=(table_len,)).astype(np.int32)
+        got = lk.act_lookup(sums, act_table, shift, offset)
+        want = ref.act_lookup_ref(sums, act_table, shift, offset)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_saturation(self):
+        act_table = np.arange(8, dtype=np.int32)
+        sums = np.array([[-(2**30), 2**30]], dtype=np.int32)
+        got = np.asarray(lk.act_lookup(sums, act_table, 10, 0))
+        assert got[0, 0] == 0
+        assert got[0, 1] == 7
+
+
+class TestTanhD:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 64),
+        levels=st.sampled_from([2, 4, 8, 32, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, n, levels, seed):
+        x = rng(seed).normal(0, 2, size=(n,)).astype(np.float32)
+        got = tk.tanh_d(x, levels)
+        want = ref.tanh_d_ref(x, levels)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+    def test_emits_only_levels(self):
+        x = rng(3).normal(0, 3, size=(500,)).astype(np.float32)
+        y = np.asarray(tk.tanh_d(x, 8))
+        levels = -1.0 + 2.0 * np.arange(8) / 7.0
+        for v in y:
+            assert np.min(np.abs(levels - v)) < 1e-6
+
+    def test_index_variant_consistent(self):
+        x = rng(4).normal(0, 2, size=(100,)).astype(np.float32)
+        idx = np.asarray(tk.tanh_d_index(x, 16))
+        val = np.asarray(tk.tanh_d(x, 16))
+        levels = -1.0 + 2.0 * np.arange(16) / 15.0
+        np.testing.assert_allclose(levels[idx], val, atol=1e-6)
+
+
+class TestLayerComposition:
+    def test_lut_layer_matches_ref_chain(self):
+        r = rng(5)
+        a_idx, w_idx, b_idx, table = make_lut_case(r, 4, 12, 10, 8, 16)
+        act_table = r.integers(0, 8, size=(24,)).astype(np.int32)
+        shift, offset = 8, -12
+        got = lk.lut_layer(a_idx, w_idx, b_idx, table, act_table, shift, offset)
+        sums = ref.lut_matmul_ref(a_idx, w_idx, b_idx, table)
+        want = ref.act_lookup_ref(sums, act_table, shift, offset)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

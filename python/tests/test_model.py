@@ -1,0 +1,132 @@
+"""L2 model tests: straight-through gradients, train-step convergence,
+and float-vs-LUT agreement on the same weights."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def test_straight_through_gradient_is_smooth_derivative():
+    act = M.make_tanh_d(4)
+    x = jnp.linspace(-2.0, 2.0, 9)
+    g = jax.vmap(jax.grad(lambda v: act(v.reshape(1))[0]))(x)
+    want = 1.0 - jnp.tanh(x) ** 2
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want), atol=1e-5)
+
+
+def test_forward_emits_quantized_activations():
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, [8, 16, 3])
+    x = jax.random.normal(key, (4, 8))
+    # Hidden activations restricted to 8 levels → logits vary but the
+    # hidden layer output check: recompute manually.
+    act = M.make_tanh_d(8)
+    h = act(x @ params[0][0] + params[0][1])
+    levels = -1.0 + 2.0 * np.arange(8) / 7.0
+    hv = np.asarray(h).ravel()
+    for v in hv:
+        assert np.min(np.abs(levels - v)) < 1e-6
+
+
+def test_train_step_reduces_loss():
+    key = jax.random.PRNGKey(1)
+    dims = [16, 32, 4]
+    params = M.init_params(key, dims)
+    m = [tuple(jnp.zeros_like(t) for t in p) for p in params]
+    v = [tuple(jnp.zeros_like(t) for t in p) for p in params]
+    step = jnp.array(0.0)
+
+    # Fixed synthetic task: label = argmax of 4 input groups.
+    kx, _ = jax.random.split(key)
+    x = jax.random.uniform(kx, (64, 16))
+    labels = jnp.argmax(x.reshape(64, 4, 4).sum(-1), axis=-1).astype(jnp.int32)
+
+    jit_step = jax.jit(lambda p, m, v, s: M.train_step(p, m, v, s, x, labels, 16, lr=3e-3))
+    first = None
+    for _ in range(150):
+        params, m, v, step, loss = jit_step(params, m, v, step)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.5, (first, float(loss))
+
+
+def test_lut_infer_matches_float_argmax():
+    """Quantize a float model by k-means (numpy), build the §4 tables,
+    and check the integer graph's argmax matches the float graph."""
+    key = jax.random.PRNGKey(2)
+    dims, levels = [12, 16, 3], 16
+    params = M.init_params(key, dims)
+
+    # --- cluster weights to 32 unique values (1-D k-means, numpy) ---
+    flat = np.concatenate([np.asarray(t).ravel() for p in params for t in p])
+    centers = np.quantile(flat, (np.arange(32) + 0.5) / 32)
+    for _ in range(30):
+        mids = (centers[1:] + centers[:-1]) / 2
+        assign = np.searchsorted(mids, flat)
+        for k in range(32):
+            sel = flat[assign == k]
+            if len(sel):
+                centers[k] = sel.mean()
+        centers = np.sort(centers)
+    mids = (centers[1:] + centers[:-1]) / 2
+
+    def q(t):
+        a = np.searchsorted(mids, np.asarray(t))
+        return centers[a].astype(np.float32), a.astype(np.int32)
+
+    qparams, idx_params = [], []
+    for w, b in params:
+        wq, wi = q(w)
+        bq, bi = q(b)
+        qparams.append((jnp.asarray(wq), jnp.asarray(bq)))
+        idx_params.append((jnp.asarray(wi), jnp.asarray(bi)))
+
+    # --- fixed-point plan (mirrors rust fixedpoint::plan) ---
+    lev_vals = -1.0 + 2.0 * np.arange(levels) / (levels - 1)
+    bounds = np.arctanh((lev_vals[:-1] + lev_vals[1:]) / 2.0)
+    act_table_len = 256
+    dx = (bounds[-1] - bounds[0]) / act_table_len
+    s = 10
+    scale = (1 << s) / dx
+    m_lo = int(np.floor(bounds[0] / dx)) - 1
+    m_hi = int(np.floor(bounds[-1] / dx)) + 1
+    act_table = np.array(
+        [
+            int(np.searchsorted(bounds, (m + 0.5) * dx, side="right"))
+            for m in range(m_lo, m_hi + 1)
+        ],
+        dtype=np.int32,
+    )
+
+    # Input quantization: 16 uniform levels on [0, 1].
+    in_vals = np.arange(levels) / (levels - 1)
+    # Product table rows: input levels ARE the activation domain for layer
+    # 0 and tanh levels for layer 1 — for this test use a single table
+    # over tanh levels and quantize inputs to tanh's value set via a
+    # separate input table... simpler: inputs already in [-1,1] tanh-like.
+    table = np.zeros((levels + 2, 32), dtype=np.int32)
+    for i, a in enumerate(lev_vals):
+        table[i] = np.round(a * centers * scale)
+    table[levels] = np.round(1.0 * centers * scale)  # bias row
+    table[levels + 1] = 0
+
+    # Inputs drawn from the tanh level set so the same table serves both
+    # layers exactly.
+    r = np.random.default_rng(3)
+    a_idx = r.integers(0, levels, size=(8, 12)).astype(np.int32)
+    x = jnp.asarray(lev_vals[a_idx], dtype=jnp.float32)
+
+    pred_i, sums = M.lut_infer(
+        jnp.asarray(a_idx), idx_params, jnp.asarray(table), jnp.asarray(act_table),
+        s, m_lo,
+    )
+    logits_f = M.mlp_forward(qparams, x, levels)
+    pred_f = jnp.argmax(logits_f, axis=-1)
+    agree = float((pred_i == pred_f).mean())
+    assert agree >= 0.75, f"argmax agreement {agree}"
+    # Descaled integer sums approximate float logits.
+    approx = np.asarray(sums, dtype=np.float64) / scale
+    np.testing.assert_allclose(approx, np.asarray(logits_f), atol=0.25)

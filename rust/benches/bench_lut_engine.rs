@@ -1,0 +1,81 @@
+//! §4 speed claim: "we expect our implementation to be as fast as or
+//! faster than the baseline due to the relative speed of lookups versus
+//! multiplies." Micro-benchmarks the integer LUT engine against the
+//! float engine on identical topologies, across sizes and batch sizes.
+
+use qnn::inference::{CodebookSet, CompileCfg, FloatEngine, LutNetwork};
+use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::report::table::TableBuilder;
+use qnn::tensor::Tensor;
+use qnn::util::rng::Xoshiro256;
+use qnn::util::timer::{bench_for, fmt_ns};
+use std::time::Duration;
+
+fn prepare(hidden: &[usize], in_dim: usize, out_dim: usize, seed: u64) -> (Network, LutNetwork) {
+    let spec = NetSpec::mlp("bench", in_dim, hidden, out_dim, ActSpec::tanh_d(32));
+    let mut rng = Xoshiro256::new(seed);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(1000), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    let lut =
+        LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap();
+    (net, lut)
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let min_time = Duration::from_millis(if full { 800 } else { 250 });
+    println!("=== LUT engine vs float engine throughput ===");
+
+    let configs: Vec<(&str, Vec<usize>, usize, usize)> = vec![
+        ("small  256-64-64-10", vec![64, 64], 256, 10),
+        ("medium 256-256-256-10", vec![256, 256], 256, 10),
+        ("wide   1024-512-10", vec![512], 1024, 10),
+    ];
+    let batches = [1usize, 8, 64];
+
+    let mut table = TableBuilder::new("per-batch inference time").header(&[
+        "topology",
+        "batch",
+        "float",
+        "LUT (int)",
+        "LUT/float",
+        "inputs/s (LUT)",
+    ]);
+
+    for (name, hidden, in_dim, out_dim) in &configs {
+        let (net, lut) = prepare(hidden, *in_dim, *out_dim, 7);
+        let mut fe = FloatEngine::new(net);
+        for &b in &batches {
+            let mut rng = Xoshiro256::new(100 + b as u64);
+            let x = Tensor::rand_uniform(&[b, *in_dim], 0.0, 1.0, &mut rng);
+            // Pre-quantized input indices: the deployment-realistic path
+            // (the previous layer/sensor already emits level indices).
+            let idx = lut.quantize_input(&x);
+
+            let rf = bench_for("float", min_time, || {
+                std::hint::black_box(fe.forward(&x));
+            });
+            let rl = bench_for("lut", min_time, || {
+                std::hint::black_box(lut.forward_indices(&idx, b));
+            });
+            table.row(&[
+                name.to_string(),
+                format!("{b}"),
+                fmt_ns(rf.mean_ns),
+                fmt_ns(rl.mean_ns),
+                format!("{:.2}x", rl.mean_ns / rf.mean_ns),
+                format!("{:.0}", b as f64 * rl.throughput()),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "LUT/float < 1.0 means the multiplication-free engine is faster.\n\
+         (Modern CPUs have fast FP multipliers; the paper's claim targets \
+         fixed-point-only hardware — see EXPERIMENTS.md for discussion.)"
+    );
+}

@@ -1,0 +1,103 @@
+//! End-to-end serving benchmark: the coordinator (router → dynamic
+//! batcher → workers) in front of the integer LUT engine, under a
+//! closed-loop multi-client load. Reports throughput and latency
+//! percentiles per batching configuration.
+
+use qnn::coordinator::{Engine, LutEngine, Server, ServerCfg};
+use qnn::data::digits;
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::report::table::TableBuilder;
+use qnn::util::rng::Xoshiro256;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn build_engine() -> LutEngine {
+    let spec = NetSpec::mlp(
+        "digits",
+        digits::FEATURES,
+        &[64, 64],
+        digits::CLASSES,
+        ActSpec::tanh_d(32),
+    );
+    let mut rng = Xoshiro256::new(3);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(1000), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    let lut =
+        LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap();
+    LutEngine::new("lut-digits", lut, digits::FEATURES)
+}
+
+fn run_load(cfg: ServerCfg, clients: usize, per_client: usize) -> qnn::coordinator::MetricsSnapshot {
+    let server = Server::start(Arc::new(build_engine()), cfg);
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = server.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Xoshiro256::new(500 + c as u64);
+            let dcfg = digits::DigitsCfg::default();
+            for _ in 0..per_client {
+                let (x, _) = digits::batch(1, &dcfg, &mut rng);
+                let out = h.infer(x.into_vec()).expect("infer");
+                std::hint::black_box(out);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let snap = server.metrics.snapshot();
+    server.shutdown();
+    snap
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let per_client = if full { 400 } else { 100 };
+    println!("=== serving benchmark: coordinator + integer LUT engine ===");
+
+    let mut table = TableBuilder::new("closed-loop load").header(&[
+        "clients",
+        "max_batch",
+        "max_wait",
+        "mean batch",
+        "throughput (req/s)",
+        "p50 (ms)",
+        "p95 (ms)",
+        "p99 (ms)",
+    ]);
+    let cfgs = [
+        (1usize, 1usize, 0u64),
+        (8, 1, 0),
+        (8, 16, 2),
+        (32, 16, 2),
+        (32, 64, 5),
+    ];
+    for (clients, max_batch, wait_ms) in cfgs {
+        let snap = run_load(
+            ServerCfg {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+                workers: 2,
+            },
+            clients,
+            per_client,
+        );
+        table.row(&[
+            format!("{clients}"),
+            format!("{max_batch}"),
+            format!("{wait_ms}ms"),
+            format!("{:.1}", snap.mean_batch),
+            format!("{:.0}", snap.throughput_rps),
+            format!("{:.3}", snap.p50_ms),
+            format!("{:.3}", snap.p95_ms),
+            format!("{:.3}", snap.p99_ms),
+        ]);
+    }
+    table.print();
+    println!("shape check: batching raises throughput under concurrency at bounded latency cost.");
+}

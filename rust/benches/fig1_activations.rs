@@ -1,0 +1,56 @@
+//! Figure 1: quantized non-linearities. Prints the output levels and
+//! input-space decision boundaries of tanhD at 4, 9, and 64 levels —
+//! the paper's "detailed for reproducibility" panel — and verifies the
+//! stated property (plateaus narrowest where tanh is steepest).
+
+use qnn::quant::QuantAct;
+use qnn::report::plot::{ascii_plot, Series};
+use qnn::report::table::TableBuilder;
+
+fn main() {
+    println!("=== Figure 1: quantized tanh (tanhD) ===");
+    for levels in [4usize, 9, 64] {
+        let q = QuantAct::tanh_d(levels);
+        let mut t = TableBuilder::new(&format!("tanhD({levels})"))
+            .header(&["level idx", "output", "boundary (input x)"]);
+        let show = levels.min(9);
+        for i in 0..show {
+            let b = if i < q.boundaries().len() {
+                format!("{:+.4}", q.boundaries()[i])
+            } else {
+                "-".to_string()
+            };
+            t.row(&[format!("{i}"), format!("{:+.4}", q.value(i)), b]);
+        }
+        if levels > show {
+            t.row_strs(&["...", "...", "..."]);
+        }
+        t.print();
+
+        // Plateau-width property from §2.1.
+        if levels >= 8 {
+            let b = q.boundaries();
+            let mid_gap = b[levels / 2] - b[levels / 2 - 1];
+            let tail_gap = b[levels - 2] - b[levels - 3];
+            println!(
+                "  plateau width near 0: {mid_gap:.4}   near saturation: {tail_gap:.4}  \
+                 (ratio {:.2}x — smallest where tanh is steepest)",
+                tail_gap / mid_gap
+            );
+        }
+    }
+
+    // The quantized curve itself, as in the figure.
+    let xs: Vec<f64> = (0..240).map(|i| -3.0 + i as f64 * 0.025).collect();
+    let series: Vec<Series> = [2usize, 4, 9, 64]
+        .iter()
+        .map(|&l| {
+            let q = QuantAct::tanh_d(l);
+            Series::new(
+                &format!("tanhD({l})"),
+                xs.iter().map(|&x| q.forward(x as f32) as f64).collect(),
+            )
+        })
+        .collect();
+    println!("{}", ascii_plot("tanhD curves on [-3, 3]", &series, 76, 17));
+}

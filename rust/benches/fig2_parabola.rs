@@ -1,0 +1,65 @@
+//! Figure 2: fitting a parabola with 2 hidden units under tanh, ReLU,
+//! and tanhD(2/8/256). Expected shape: tanhD(2) finds a symmetric but
+//! coarse approximation; error shrinks as L grows; tanhD(256) ≈ tanh.
+
+use qnn::nn::ActSpec;
+use qnn::report::experiments::run_parabola;
+use qnn::report::plot::{ascii_plot, Series};
+use qnn::report::table::TableBuilder;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    // The paper trains 100k epochs; 2-hidden-unit nets also have bad
+    // local minima, so we report the best of several seeds.
+    let steps: u64 = if full { 100_000 } else { 20_000 };
+    let seeds: u64 = if full { 5 } else { 3 };
+    println!("=== Figure 2: parabola fit, 2 hidden units ({steps} steps × {seeds} seeds) ===");
+
+    let configs: Vec<(&str, ActSpec)> = vec![
+        ("tanh", ActSpec::tanh()),
+        ("relu", ActSpec::relu()),
+        ("tanhD(2)", ActSpec::tanh_d(2)),
+        ("tanhD(8)", ActSpec::tanh_d(8)),
+        ("tanhD(256)", ActSpec::tanh_d(256)),
+    ];
+
+    let mut table = TableBuilder::new("Fig 2: eval MSE (best of seeds)")
+        .header(&["activation", "mse", "vs tanh"]);
+    let mut curves: Vec<Series> = Vec::new();
+    // Target curve for the plot.
+    let (x, _) = qnn::data::parabola::dataset(64);
+    curves.push(Series::new(
+        "target x^2",
+        x.data().iter().map(|&v| (v * v) as f64).collect(),
+    ));
+
+    let mut tanh_mse = None;
+    for (name, act) in configs {
+        let mut best = f64::INFINITY;
+        let mut fit = Vec::new();
+        for seed in 0..seeds {
+            let (mse, f) = run_parabola(act.clone(), steps, 10 + seed);
+            if mse < best {
+                best = mse;
+                fit = f;
+            }
+        }
+        let mse = best;
+        if name == "tanh" {
+            tanh_mse = Some(mse);
+        }
+        let rel = tanh_mse.map(|t| format!("{:.1}x", mse / t)).unwrap_or_default();
+        table.row(&[name.to_string(), format!("{mse:.6}"), rel]);
+        if name != "relu" {
+            curves.push(Series::new(name, fit));
+        }
+    }
+    table.print();
+    println!(
+        "{}",
+        ascii_plot("fits on [-1,1] (seed 0)", &curves, 72, 16)
+    );
+    println!(
+        "paper-shape check: error(tanhD(2)) > error(tanhD(8)) > error(tanhD(256)) ≈ error(tanh)"
+    );
+}

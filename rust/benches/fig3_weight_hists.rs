@@ -1,0 +1,77 @@
+//! Figure 3: weight distributions over training, with and without the
+//! periodic clustering step. Three panels per run (early / mid / late),
+//! log-scale counts, plus the unique-weight collapse after replacement.
+
+use qnn::data::digits;
+use qnn::nn::{ActSpec, NetSpec, Network, SoftmaxCrossEntropy, Target};
+use qnn::report::plot::ascii_hist;
+use qnn::train::{ClusterCfg, TrainCfg, Trainer};
+use qnn::util::rng::Xoshiro256;
+use qnn::util::stats::unique_values;
+
+fn run(clustered: bool, steps: u64) {
+    let title = if clustered {
+        "WITH clustering (|W|=1000, every 200 steps)"
+    } else {
+        "NO clustering"
+    };
+    println!("\n######## {title} ########");
+    let spec = NetSpec::mlp(
+        "digits",
+        digits::FEATURES,
+        &[48, 48],
+        digits::CLASSES,
+        ActSpec::tanh_d(32),
+    );
+    let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(33));
+    let mut cfg = TrainCfg::adam(3e-3, steps);
+    if clustered {
+        cfg = cfg.with_cluster(ClusterCfg {
+            every: 200,
+            ..ClusterCfg::kmeans(1000)
+        });
+    }
+    // Run in three chunks so we can snapshot the distribution; each chunk
+    // continues with a fresh Trainer (optimizer state resets — acceptable
+    // for the distribution visualization).
+    let chunk = steps / 3;
+    let dcfg = digits::DigitsCfg::default();
+    for phase in 0..3 {
+        let mut tr = Trainer::new(TrainCfg {
+            steps: chunk,
+            seed: 100 + phase,
+            ..cfg.clone()
+        });
+        let _ = tr.train(&mut net, &SoftmaxCrossEntropy, |rng| {
+            let (x, l) = digits::batch(32, &dcfg, rng);
+            (x, Target::Labels(l))
+        });
+        let w = net.flat_weights();
+        println!(
+            "{}",
+            ascii_hist(
+                &format!(
+                    "after {} steps — unique weights: {}",
+                    chunk * (phase + 1),
+                    unique_values(&w, 0.0)
+                ),
+                &w,
+                21,
+                48
+            )
+        );
+    }
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let steps: u64 = if full { 6000 } else { 1500 };
+    println!("=== Figure 3: weight histograms during training ({steps} steps) ===");
+    run(false, steps);
+    run(true, steps);
+    println!(
+        "\npaper-shape check: clustered runs keep a near-Laplacian envelope but \
+         collapse to ≤1000 unique values after each replacement step;\n\
+         unclustered runs spread monotonically with dense (≈param-count) support."
+    );
+}

@@ -1,0 +1,69 @@
+//! Figure 5: model-based quantization centers and bin occupancies for a
+//! Laplacian with σ = √2 (unit scale), |W| = 1000, 100k samples —
+//! minimizing L1 (green in the paper) vs L2 (blue).
+//!
+//! Expected shape: centers spread wider at large amplitude; occupancy
+//! falls LINEARLY for L1 and faster (quadratically) for L2.
+
+use qnn::quant::laplacian::{levels, lloyd_max_l1, model_occupancy, ErrNorm, LaplacianQuant};
+use qnn::report::plot::{ascii_plot, Series};
+use qnn::report::table::TableBuilder;
+use qnn::util::rng::Xoshiro256;
+
+fn main() {
+    let n_samples = 100_000;
+    let w = 1001usize; // odd |W| ≈ 1000, matching the closed form
+    println!("=== Figure 5: Laplacian quantization centers & occupancy (|W|={w}) ===");
+
+    let mut rng = Xoshiro256::new(55);
+    // σ = √2 Laplacian has unit scale b = 1.
+    let xs: Vec<f32> = (0..n_samples).map(|_| rng.laplacian(0.0, 1.0) as f32).collect();
+
+    let mut center_series = Vec::new();
+    let mut occ_series = Vec::new();
+    let mut table = TableBuilder::new("center ladder L_i (unit scale)")
+        .header(&["i", "L1 center", "L2 center", "L1 occupancy model", "L2 occupancy model"]);
+
+    for norm in [ErrNorm::L1, ErrNorm::L2] {
+        let ls = levels(w, norm);
+        let occ_model = model_occupancy(w, norm);
+        center_series.push(Series::new(
+            &format!("{norm:?} centers"),
+            ls.iter().copied().collect(),
+        ));
+        // Empirical occupancy from the sample set.
+        let lq = LaplacianQuant { n: w, norm, nudge: false };
+        let cb = lq.codebook_with_scale(0.0, 1.0);
+        let occ = cb.occupancy(&xs);
+        let mid = cb.len() / 2;
+        let pos: Vec<f64> = (mid..cb.len()).map(|i| occ[i] as f64).collect();
+        occ_series.push(Series::new(&format!("{norm:?} occupancy (empirical)"), pos));
+        if norm == ErrNorm::L2 {
+            let l1 = levels(w, ErrNorm::L1);
+            let o1 = model_occupancy(w, ErrNorm::L1);
+            for &i in &[0usize, 100, 250, 400, 499] {
+                table.row(&[
+                    format!("{i}"),
+                    format!("{:.3}", l1[i.min(l1.len() - 1)]),
+                    format!("{:.3}", ls[i.min(ls.len() - 1)]),
+                    format!("{:.4}", o1[i.min(o1.len() - 1)]),
+                    format!("{:.4}", occ_model[i.min(occ_model.len() - 1)]),
+                ]);
+            }
+        }
+    }
+    table.print();
+    println!("{}", ascii_plot("centers vs index (left panel)", &center_series, 72, 14));
+    println!("{}", ascii_plot("occupancy vs index (right panel)", &occ_series, 72, 14));
+
+    // Quantitative check vs the empirically optimal L1 quantizer.
+    let model_err = LaplacianQuant { n: 101, norm: ErrNorm::L1, nudge: false }
+        .codebook_with_scale(0.0, 1.0)
+        .l1_error(&xs);
+    let lloyd_err = lloyd_max_l1(&xs, 101, 60).l1_error(&xs);
+    println!(
+        "closed-form L1 error {model_err:.5} vs empirical Lloyd-Max {lloyd_err:.5} \
+         (ratio {:.3} — the model is near-optimal on a fair sample)",
+        model_err / lloyd_err
+    );
+}

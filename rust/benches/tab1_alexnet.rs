@@ -1,0 +1,108 @@
+//! Table 1: the AlexNet experiment grid on AlexNet-S / ImageNet-sim.
+//!
+//! Rows reproduce the paper's ten experiments:
+//!   #0 ReLU baseline            #1 ReLU6 baseline
+//!   #2-#5 activation quantization only (A = 256, 32, 16, 8)
+//!   #6/#7 k-means weights (2% subsample), A=32, |W| = 1000 / 100
+//!   #8/#9 Laplacian-L1 weights, A=32, |W|=1000, with / without dropout
+//! plus the right-hand "quantized inputs" columns for the quantized rows,
+//! and (extension) a per-layer-clustering and an annealed-|W| ablation.
+
+use qnn::nn::ActSpec;
+use qnn::quant::{ErrNorm, Granularity, WeightScheme};
+use qnn::report::experiments::{run_alexnet_s, ExpCfg};
+use qnn::report::table::TableBuilder;
+use qnn::train::{ClusterCfg, ClusterSchedule};
+
+struct Row {
+    id: &'static str,
+    desc: String,
+    act: ActSpec,
+    dropout: Option<f32>,
+    cluster: Option<ClusterCfg>,
+    input_levels: Option<usize>,
+}
+
+fn cluster(scheme: WeightScheme, every: u64) -> ClusterCfg {
+    ClusterCfg {
+        scheme,
+        every,
+        granularity: Granularity::Global,
+        schedule: ClusterSchedule::Constant,
+    }
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let steps: u64 = if full { 2500 } else { 400 };
+    let every = (steps / 5).max(1);
+    println!("=== Table 1: AlexNet-S quantization grid ({steps} steps/row) ===");
+
+    let km = |w: usize| cluster(WeightScheme::KMeans { w, subsample: 0.02 }, every);
+    let lap = |w: usize| {
+        cluster(
+            WeightScheme::Laplacian { w, norm: ErrNorm::L1 },
+            every,
+        )
+    };
+
+    let mut rows = vec![
+        Row { id: "0", desc: "ReLU baseline".into(), act: ActSpec::relu(), dropout: Some(0.5), cluster: None, input_levels: None },
+        Row { id: "1", desc: "ReLU6 baseline".into(), act: ActSpec::relu6(), dropout: Some(0.5), cluster: None, input_levels: None },
+        Row { id: "2", desc: "A=256".into(), act: ActSpec::relu6_d(256), dropout: Some(0.5), cluster: None, input_levels: None },
+        Row { id: "3", desc: "A=32".into(), act: ActSpec::relu6_d(32), dropout: Some(0.5), cluster: None, input_levels: Some(32) },
+        Row { id: "4", desc: "A=16".into(), act: ActSpec::relu6_d(16), dropout: Some(0.5), cluster: None, input_levels: Some(16) },
+        Row { id: "5", desc: "A=8".into(), act: ActSpec::relu6_d(8), dropout: Some(0.5), cluster: None, input_levels: Some(8) },
+        Row { id: "6", desc: "A=32 kmeans2% |W|=1000 (no dropout)".into(), act: ActSpec::relu6_d(32), dropout: None, cluster: Some(km(1000)), input_levels: Some(32) },
+        Row { id: "7", desc: "A=32 kmeans2% |W|=100 (no dropout)".into(), act: ActSpec::relu6_d(32), dropout: None, cluster: Some(km(100)), input_levels: Some(32) },
+        Row { id: "8", desc: "A=32 laplacian |W|=1000 + dropout".into(), act: ActSpec::relu6_d(32), dropout: Some(0.5), cluster: Some(lap(1000)), input_levels: Some(32) },
+        Row { id: "9", desc: "A=32 laplacian |W|=1000 (no dropout)".into(), act: ActSpec::relu6_d(32), dropout: None, cluster: Some(lap(1000)), input_levels: Some(32) },
+    ];
+    // §5 future-work ablations (extensions implemented in this repo).
+    let mut per_layer = lap(1000);
+    per_layer.granularity = Granularity::PerLayer;
+    rows.push(Row { id: "E1", desc: "ext: per-layer laplacian |W|=1000".into(), act: ActSpec::relu6_d(32), dropout: None, cluster: Some(per_layer), input_levels: Some(32) });
+    let mut annealed = km(100);
+    annealed.schedule = ClusterSchedule::Annealed { start_w: 1000, by_step: steps / 2 };
+    rows.push(Row { id: "E2", desc: "ext: annealed |W| 1000→100".into(), act: ActSpec::relu6_d(32), dropout: None, cluster: Some(annealed), input_levels: Some(32) });
+
+    let mut table = TableBuilder::new("Table 1 (AlexNet-S / ImageNet-sim)")
+        .header(&["#", "experiment", "r@1", "r@5", "r@1 (q-in)", "r@5 (q-in)", "uniq W"]);
+    for row in &rows {
+        let base_cfg = ExpCfg {
+            lr: 5e-4,
+            batch: 16,
+            cluster: row.cluster.clone(),
+            input_levels: None,
+            ..ExpCfg::quick(steps, 77)
+        };
+        let (r, _, _) = run_alexnet_s(row.act.clone(), row.dropout, &base_cfg);
+        // Quantized-inputs column (only for the quantized rows, as in the
+        // paper).
+        let (q1, q5) = if let Some(lv) = row.input_levels {
+            let qcfg = ExpCfg {
+                input_levels: Some(lv),
+                ..base_cfg
+            };
+            let (rq, _, _) = run_alexnet_s(row.act.clone(), row.dropout, &qcfg);
+            (format!("{:.3}", rq.recall1), format!("{:.3}", rq.recall5))
+        } else {
+            ("-".into(), "-".into())
+        };
+        table.row(&[
+            row.id.to_string(),
+            row.desc.clone(),
+            format!("{:.3}", r.recall1),
+            format!("{:.3}", r.recall5),
+            q1,
+            q5,
+            format!("{}", r.unique_weights),
+        ]);
+    }
+    table.print();
+    println!(
+        "paper-shape check: #2/#3 ≈ #1; recall falls below A=32 (#4, #5); \
+         |W|=100 (#7) < |W|=1000 (#6); laplacian-no-dropout (#9) ≥ kmeans (#6) \
+         and ≈ or > the continuous baseline (#1)."
+    );
+}

@@ -1,0 +1,100 @@
+//! §4 memory/bandwidth accounting: float baseline vs index-coded weights
+//! + LUT tables, and entropy-coded download size — regenerates the
+//! ">69% memory / >78% download" analysis at both our scale and
+//! extrapolated AlexNet scale.
+
+use qnn::entropy::{decode, encode, memory_report, FreqModel};
+use qnn::nn::ActSpec;
+use qnn::report::experiments::{compile_lut, run_alexnet_s, run_digits, ExpCfg};
+use qnn::report::table::TableBuilder;
+use qnn::train::ClusterCfg;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let steps: u64 = if full { 2000 } else { 400 };
+    println!("=== §4 memory accounting ({steps} training steps) ===");
+
+    let mut table = TableBuilder::new("deployed model memory").header(&[
+        "model",
+        "weights",
+        "|W|",
+        "float bytes",
+        "idx bits",
+        "packed+tables",
+        "deploy saving",
+        "entropy b/w",
+        "download saving",
+    ]);
+
+    // Digits MLP: |W| sized to the model (a 1000-entry codebook's tables
+    // would dwarf a 21k-weight index stream; the paper's |W|=1000 is for
+    // 50M-weight AlexNet).
+    let cfg = ExpCfg::quick(steps, 91).with_cluster(ClusterCfg {
+        every: (steps / 4).max(1),
+        ..ClusterCfg::kmeans(100)
+    });
+    let (res, net, cb) = run_digits(&[64, 64], ActSpec::tanh_d(32), &cfg);
+    println!("digits MLP accuracy (quantized): {:.3}", res.accuracy);
+    let cb = cb.expect("clustered");
+    let lut = compile_lut(&net, cb.clone(), 32).expect("compile");
+    let idx = lut.all_indices();
+    let rep = memory_report(&idx, cb.len(), lut.table_bytes());
+    table.row(&[
+        "digits MLP".into(),
+        format!("{}", rep.n_weights),
+        format!("{}", rep.codebook_size),
+        format!("{}", rep.float_bytes),
+        format!("{}", rep.index_bits),
+        format!("{}", rep.packed_bytes + rep.table_bytes),
+        format!("{:.1}%", rep.deploy_saving() * 100.0),
+        format!("{:.2}", rep.entropy_bits_per_weight),
+        format!("{:.1}%", rep.download_saving() * 100.0),
+    ]);
+
+    // AlexNet-S, Laplacian |W|=1000 (the paper's headline config).
+    let cfg = ExpCfg {
+        lr: 5e-4,
+        batch: 16,
+        ..ExpCfg::quick(steps, 92)
+    }
+    .with_cluster(ClusterCfg {
+        every: (steps / 4).max(1),
+        ..ClusterCfg::laplacian(1000)
+    });
+    let (res, net, cb) = run_alexnet_s(ActSpec::relu6_d(32), None, &cfg);
+    println!("AlexNet-S recall@1 (quantized): {:.3}", res.recall1);
+    let cb = cb.expect("clustered");
+    let lut = compile_lut(&net, cb.clone(), 32).expect("compile");
+    let idx = lut.all_indices();
+    let rep = memory_report(&idx, cb.len(), lut.table_bytes());
+    table.row(&[
+        "AlexNet-S".into(),
+        format!("{}", rep.n_weights),
+        format!("{}", rep.codebook_size),
+        format!("{}", rep.float_bytes),
+        format!("{}", rep.index_bits),
+        format!("{}", rep.packed_bytes + rep.table_bytes),
+        format!("{:.1}%", rep.deploy_saving() * 100.0),
+        format!("{:.2}", rep.entropy_bits_per_weight),
+        format!("{:.1}%", rep.download_saving() * 100.0),
+    ]);
+    table.print();
+
+    // Entropy-coding round-trip proof on the real index stream.
+    let model = FreqModel::from_symbols(&idx, cb.len());
+    let coded = encode(&idx, &model);
+    assert_eq!(decode(&coded, idx.len(), &model), idx);
+    println!(
+        "range-coder round-trip OK: {} indices → {} bytes ({:.2} bits/weight, model entropy {:.2})",
+        idx.len(),
+        coded.len(),
+        coded.len() as f64 * 8.0 / idx.len() as f64,
+        model.entropy_bits()
+    );
+    println!(
+        "\npaper-shape check: 10-bit indices → ~69% deployed saving at AlexNet scale \
+         (table overhead amortizes with weight count); entropy coding pushes the \
+         download saving higher — the skew comes from heterogeneous layer scales \
+         sharing one global codebook."
+    );
+}

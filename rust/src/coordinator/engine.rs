@@ -1,0 +1,162 @@
+//! The engine abstraction the coordinator serves: a batched inference
+//! backend. Three implementations —
+//!
+//! * [`LutEngine`] — the paper's pure-integer LUT network (the
+//!   deployment target);
+//! * [`FloatNetEngine`] — the float reference network;
+//! * [`crate::coordinator::pjrt_engine::PjrtEngine`] — an AOT-compiled
+//!   XLA graph via PJRT.
+
+use crate::inference::{FloatEngine, LutNetwork};
+use crate::tensor::Tensor;
+use std::sync::Mutex;
+
+/// A batched inference backend. `infer_batch` takes `batch` rows of
+/// `input_len` floats and returns `batch` rows of `output_len` floats.
+pub trait Engine: Send + Sync {
+    fn name(&self) -> &str;
+    fn input_len(&self) -> usize;
+    fn output_len(&self) -> usize;
+    fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32>;
+    /// Largest batch this engine accepts at once.
+    fn max_batch(&self) -> usize {
+        256
+    }
+}
+
+/// The paper's integer engine as a serving backend. Stateless forward →
+/// trivially Sync, no lock needed.
+pub struct LutEngine {
+    pub lut: LutNetwork,
+    input_len: usize,
+    name: String,
+}
+
+impl LutEngine {
+    pub fn new(name: &str, lut: LutNetwork, input_len: usize) -> Self {
+        Self {
+            lut,
+            input_len,
+            name: name.to_string(),
+        }
+    }
+}
+
+impl Engine for LutEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+    fn output_len(&self) -> usize {
+        self.lut.out_dim()
+    }
+    fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32> {
+        debug_assert_eq!(flat.len(), batch * self.input_len);
+        let idx = self
+            .lut
+            .input_quant
+            .quantize_to_indices(flat);
+        let out = self.lut.forward_indices(&idx, batch);
+        out.to_tensor().into_vec()
+    }
+}
+
+/// Float reference backend (mutex-guarded: layer forward caches make the
+/// network `&mut`).
+pub struct FloatNetEngine {
+    engine: Mutex<FloatEngine>,
+    input_len: usize,
+    output_len: usize,
+    name: String,
+}
+
+impl FloatNetEngine {
+    pub fn new(name: &str, engine: FloatEngine, input_len: usize, output_len: usize) -> Self {
+        Self {
+            engine: Mutex::new(engine),
+            input_len,
+            output_len,
+            name: name.to_string(),
+        }
+    }
+}
+
+impl Engine for FloatNetEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+    fn output_len(&self) -> usize {
+        self.output_len
+    }
+    fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32> {
+        let x = Tensor::from_vec(&[batch, self.input_len], flat.to_vec());
+        let y = self.engine.lock().expect("engine poisoned").forward(&x);
+        y.into_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::{CodebookSet, CompileCfg};
+    use crate::nn::{ActSpec, NetSpec, Network};
+    use crate::quant::{kmeans_1d, KMeansCfg};
+    use crate::util::rng::Xoshiro256;
+
+    fn small_lut() -> (LutEngine, Network) {
+        let spec = NetSpec::mlp("m", 8, &[8], 3, ActSpec::tanh_d(16));
+        let mut rng = Xoshiro256::new(1);
+        let mut net = Network::from_spec(&spec, &mut rng);
+        let mut flat = net.flat_weights();
+        let cb = kmeans_1d(&flat, &KMeansCfg::with_k(32), &mut rng);
+        cb.quantize_slice(&mut flat);
+        net.set_flat_weights(&flat);
+        let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default())
+            .unwrap();
+        (LutEngine::new("lut", lut, 8), net)
+    }
+
+    #[test]
+    fn lut_engine_batches() {
+        let (e, _) = small_lut();
+        let mut rng = Xoshiro256::new(2);
+        let x: Vec<f32> = (0..4 * 8).map(|_| rng.uniform_f32()).collect();
+        let y = e.infer_batch(&x, 4);
+        assert_eq!(y.len(), 4 * 3);
+        assert_eq!(e.output_len(), 3);
+    }
+
+    #[test]
+    fn engines_agree_on_same_net() {
+        let (e, net) = small_lut();
+        let fe = FloatNetEngine::new(
+            "float",
+            FloatEngine::with_input_quant(
+                net,
+                crate::fixedpoint::UniformQuant::unit(e.lut.input_quant.levels),
+            ),
+            8,
+            3,
+        );
+        let mut rng = Xoshiro256::new(3);
+        let x: Vec<f32> = (0..6 * 8).map(|_| rng.uniform_f32()).collect();
+        let a = e.infer_batch(&x, 6);
+        let b = fe.infer_batch(&x, 6);
+        // Argmax agreement per row.
+        for i in 0..6 {
+            let am = |v: &[f32]| {
+                v.iter()
+                    .enumerate()
+                    .max_by(|p, q| p.1.total_cmp(q.1))
+                    .unwrap()
+                    .0
+            };
+            assert_eq!(am(&a[i * 3..(i + 1) * 3]), am(&b[i * 3..(i + 1) * 3]));
+        }
+    }
+}

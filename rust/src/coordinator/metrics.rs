@@ -1,0 +1,113 @@
+//! Serving metrics: request latencies, batch-size distribution,
+//! throughput.
+
+use crate::util::stats::percentile_f64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Thread-safe metrics sink shared by the batcher and workers.
+pub struct Metrics {
+    started: Instant,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    /// Per-request end-to-end latency (ms).
+    latencies_ms: Mutex<Vec<f64>>,
+    /// Per-batch sizes.
+    batch_sizes: Mutex<Vec<usize>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            latencies_ms: Mutex::new(Vec::new()),
+            batch_sizes: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn record_batch(&self, size: usize, request_latencies_ms: &[f64]) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().push(size);
+        self.latencies_ms
+            .lock()
+            .unwrap()
+            .extend_from_slice(request_latencies_ms);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lats = self.latencies_ms.lock().unwrap().clone();
+        let sizes = self.batch_sizes.lock().unwrap().clone();
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let requests = self.requests.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            requests,
+            batches: self.batches.load(Ordering::Relaxed),
+            throughput_rps: requests as f64 / elapsed.max(1e-9),
+            p50_ms: percentile_f64(&lats, 50.0),
+            p95_ms: percentile_f64(&lats, 95.0),
+            p99_ms: percentile_f64(&lats, 99.0),
+            mean_batch: if sizes.is_empty() {
+                0.0
+            } else {
+                sizes.iter().sum::<usize>() as f64 / sizes.len() as f64
+            },
+        }
+    }
+}
+
+/// A point-in-time metrics view.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch: f64,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "requests={} batches={} mean_batch={:.1} throughput={:.0} rps \
+             latency p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+            self.requests,
+            self.batches,
+            self.mean_batch,
+            self.throughput_rps,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(3, &[1.0, 2.0, 3.0]);
+        m.record_batch(1, &[10.0]);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.mean_batch, 2.0);
+        assert!(s.p99_ms >= s.p50_ms);
+        assert!(s.throughput_rps > 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 serving coordinator: model router → dynamic batcher → worker pool
+//! → pluggable engines (integer LUT, float reference, PJRT graph).
+
+pub mod engine;
+pub mod metrics;
+pub mod pjrt_engine;
+pub mod router;
+pub mod server;
+
+pub use engine::{Engine, FloatNetEngine, LutEngine};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use pjrt_engine::PjrtEngine;
+pub use router::Router;
+pub use server::{Server, ServerCfg, ServerHandle};

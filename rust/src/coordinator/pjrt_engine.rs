@@ -1,0 +1,147 @@
+//! PJRT-backed serving engine.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (not `Send`), so the
+//! compiled graph lives on a dedicated executor thread; the [`Engine`]
+//! facade communicates with it over channels (actor pattern). Partial
+//! batches are padded up to the graph's compiled batch size.
+
+use super::engine::Engine;
+use crate::runtime::{Manifest, Runtime};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+struct Job {
+    flat: Vec<f32>,
+    batch: usize,
+    resp: mpsc::Sender<Vec<f32>>,
+}
+
+/// Engine wrapper over an AOT graph whose single input is
+/// `[batch, features]` and single output `[batch, out]`.
+pub struct PjrtEngine {
+    name: String,
+    compiled_batch: usize,
+    features: usize,
+    out: usize,
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl PjrtEngine {
+    /// Spawn the executor thread: it creates its own PJRT client, loads
+    /// `graph_name` from `artifacts_dir`, then serves jobs until drop.
+    pub fn spawn(name: &str, artifacts_dir: &str, graph_name: &str) -> Result<PjrtEngine> {
+        let (meta_tx, meta_rx) = mpsc::channel::<Result<(usize, usize, usize)>>();
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let dir = artifacts_dir.to_string();
+        let gname = graph_name.to_string();
+
+        let thread = std::thread::Builder::new()
+            .name(format!("pjrt-{graph_name}"))
+            .spawn(move || {
+                // Everything PJRT stays on this thread.
+                let setup = (|| -> Result<_> {
+                    let rt = Runtime::cpu()?;
+                    let manifest = Manifest::load(&dir)?;
+                    let graph = rt.load(&manifest, &gname)?;
+                    let ishape = &graph.entry.inputs[0].shape;
+                    let oshape = &graph.entry.outputs[0].shape;
+                    anyhow::ensure!(
+                        graph.entry.inputs.len() == 1
+                            && graph.entry.outputs.len() == 1
+                            && ishape.len() == 2
+                            && oshape.len() == 2
+                            && ishape[0] == oshape[0],
+                        "expected single [B,F]→[B,O] graph, got {ishape:?}→{oshape:?}"
+                    );
+                    let (b, f, o) = (ishape[0], ishape[1], oshape[1]);
+                    Ok((graph, b, f, o))
+                })();
+                let (graph, b, f, o) = match setup {
+                    Ok(v) => {
+                        let meta = (v.1, v.2, v.3);
+                        let _ = meta_tx.send(Ok(meta));
+                        v
+                    }
+                    Err(e) => {
+                        let _ = meta_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = job_rx.recv() {
+                    let mut padded = vec![0.0f32; b * f];
+                    padded[..job.flat.len()].copy_from_slice(&job.flat);
+                    let x = Tensor::from_vec(&[b, f], padded);
+                    let result = graph
+                        .run(&[&x])
+                        .map(|outs| outs[0].data()[..job.batch * o].to_vec())
+                        .unwrap_or_else(|e| {
+                            eprintln!("pjrt execution failed: {e:#}");
+                            vec![0.0; job.batch * o]
+                        });
+                    let _ = job.resp.send(result);
+                }
+            })
+            .context("spawning pjrt executor")?;
+
+        let (compiled_batch, features, out) = meta_rx
+            .recv()
+            .context("pjrt executor died during setup")??;
+        Ok(PjrtEngine {
+            name: name.to_string(),
+            compiled_batch,
+            features,
+            out,
+            tx: Mutex::new(Some(job_tx)),
+            thread: Mutex::new(Some(thread)),
+        })
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn input_len(&self) -> usize {
+        self.features
+    }
+    fn output_len(&self) -> usize {
+        self.out
+    }
+    fn max_batch(&self) -> usize {
+        self.compiled_batch
+    }
+    fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32> {
+        assert!(batch <= self.compiled_batch, "batch exceeds compiled size");
+        let (rtx, rrx) = mpsc::channel();
+        {
+            let guard = self.tx.lock().expect("pjrt sender poisoned");
+            guard
+                .as_ref()
+                .expect("pjrt engine shut down")
+                .send(Job {
+                    flat: flat.to_vec(),
+                    batch,
+                    resp: rtx,
+                })
+                .expect("pjrt executor gone");
+        }
+        rrx.recv().expect("pjrt executor dropped job")
+    }
+}
+
+impl Drop for PjrtEngine {
+    fn drop(&mut self) {
+        // Close the channel, then join the executor.
+        if let Ok(mut g) = self.tx.lock() {
+            g.take();
+        }
+        if let Ok(mut t) = self.thread.lock() {
+            if let Some(t) = t.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}

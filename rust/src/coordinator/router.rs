@@ -1,0 +1,102 @@
+//! Model router: front-door that maps model names to running servers
+//! (e.g. the integer LUT deployment next to its float reference for A/B
+//! verification in production).
+
+use super::server::{Server, ServerHandle};
+use std::collections::BTreeMap;
+
+/// Routes requests to named backends.
+pub struct Router {
+    servers: BTreeMap<String, Server>,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router {
+            servers: BTreeMap::new(),
+        }
+    }
+
+    pub fn register(&mut self, name: &str, server: Server) {
+        self.servers.insert(name.to_string(), server);
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.servers.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn handle(&self, name: &str) -> anyhow::Result<ServerHandle> {
+        self.servers
+            .get(name)
+            .map(|s| s.handle())
+            .ok_or_else(|| anyhow::anyhow!("no model {name:?} (have {:?})", self.models()))
+    }
+
+    /// Blocking inference through a named model.
+    pub fn infer(&self, name: &str, input: Vec<f32>) -> anyhow::Result<Vec<f32>> {
+        self.handle(name)?.infer(input)
+    }
+
+    /// Metrics line for every model.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, server) in &self.servers {
+            s.push_str(&format!(
+                "{name} [{}]: {}\n",
+                server.engine_name,
+                server.metrics.snapshot()
+            ));
+        }
+        s
+    }
+
+    /// Shut all servers down.
+    pub fn shutdown(self) {
+        for (_, s) in self.servers {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Engine;
+    use crate::coordinator::server::ServerCfg;
+    use std::sync::Arc;
+
+    struct ConstEngine(f32);
+    impl Engine for ConstEngine {
+        fn name(&self) -> &str {
+            "const"
+        }
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn infer_batch(&self, _flat: &[f32], batch: usize) -> Vec<f32> {
+            vec![self.0; batch]
+        }
+    }
+
+    #[test]
+    fn routes_by_name() {
+        let mut r = Router::new();
+        r.register("a", Server::start(Arc::new(ConstEngine(1.0)), ServerCfg::default()));
+        r.register("b", Server::start(Arc::new(ConstEngine(2.0)), ServerCfg::default()));
+        assert_eq!(r.infer("a", vec![0.0, 0.0]).unwrap(), vec![1.0]);
+        assert_eq!(r.infer("b", vec![0.0, 0.0]).unwrap(), vec![2.0]);
+        assert!(r.infer("c", vec![0.0, 0.0]).is_err());
+        assert_eq!(r.models(), vec!["a", "b"]);
+        assert!(r.report().contains("a [const]"));
+        r.shutdown();
+    }
+}

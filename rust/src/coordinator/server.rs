@@ -1,0 +1,265 @@
+//! The serving loop: a dynamic batcher in front of a worker pool.
+//!
+//! Requests stream into an mpsc queue; the collector thread groups them
+//! into batches (up to `max_batch`, waiting at most `max_wait` for
+//! stragglers — the standard serving trade-off), and hands each batch to
+//! a worker that runs the engine and scatters replies. This is the
+//! deployment story the paper motivates: the quantized model behind a
+//! real request path with no Python and no floats in the inference hot
+//! loop.
+
+use super::engine::Engine;
+use super::metrics::Metrics;
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerCfg {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub workers: usize,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        Self {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+        }
+    }
+}
+
+struct Request {
+    input: Vec<f32>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Vec<f32>>,
+}
+
+/// Handle for submitting requests (cheap to clone).
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Request>,
+    input_len: usize,
+}
+
+impl ServerHandle {
+    /// Blocking inference call.
+    pub fn infer(&self, input: Vec<f32>) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            input.len() == self.input_len,
+            "input length {} != expected {}",
+            input.len(),
+            self.input_len
+        );
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Request {
+                input,
+                enqueued: Instant::now(),
+                resp: rtx,
+            })
+            .map_err(|_| anyhow::anyhow!("server shut down"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+}
+
+/// A running server instance.
+pub struct Server {
+    handle: ServerHandle,
+    pub metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    collector: Option<std::thread::JoinHandle<()>>,
+    pub engine_name: String,
+}
+
+impl Server {
+    pub fn start(engine: Arc<dyn Engine>, cfg: ServerCfg) -> Server {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let input_len = engine.input_len();
+        let engine_name = engine.name().to_string();
+
+        let m = Arc::clone(&metrics);
+        let stop = Arc::clone(&shutdown);
+        let max_batch = cfg.max_batch.min(engine.max_batch()).max(1);
+        let max_wait = cfg.max_wait;
+        let workers = ThreadPool::new(cfg.workers.max(1));
+        let rx = Mutex::new(rx);
+
+        let collector = std::thread::Builder::new()
+            .name("qnn-batcher".into())
+            .spawn(move || {
+                let rx = rx.lock().unwrap();
+                loop {
+                    // Block for the first request (with periodic shutdown
+                    // checks).
+                    let first = loop {
+                        match rx.recv_timeout(Duration::from_millis(20)) {
+                            Ok(r) => break Some(r),
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                if stop.load(Ordering::SeqCst) {
+                                    break None;
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break None,
+                        }
+                    };
+                    let Some(first) = first else { break };
+
+                    // Gather stragglers until the batch fills or the
+                    // deadline passes.
+                    let mut batch = vec![first];
+                    let deadline = Instant::now() + max_wait;
+                    while batch.len() < max_batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(r) => batch.push(r),
+                            Err(_) => break,
+                        }
+                    }
+
+                    // Dispatch to the worker pool.
+                    let engine = Arc::clone(&engine);
+                    let metrics = Arc::clone(&m);
+                    workers.execute(move || {
+                        let n = batch.len();
+                        let in_len = engine.input_len();
+                        let out_len = engine.output_len();
+                        let mut flat = Vec::with_capacity(n * in_len);
+                        for r in &batch {
+                            flat.extend_from_slice(&r.input);
+                        }
+                        let out = engine.infer_batch(&flat, n);
+                        debug_assert_eq!(out.len(), n * out_len);
+                        // Record metrics BEFORE replying so a client that
+                        // reads the snapshot right after its response sees
+                        // its own request counted.
+                        let lats: Vec<f64> = batch
+                            .iter()
+                            .map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3)
+                            .collect();
+                        metrics.record_batch(n, &lats);
+                        for (i, r) in batch.into_iter().enumerate() {
+                            // Receiver may have given up; ignore errors.
+                            let _ = r.resp.send(out[i * out_len..(i + 1) * out_len].to_vec());
+                        }
+                    });
+                }
+                workers.wait_idle();
+            })
+            .expect("spawn batcher");
+
+        Server {
+            handle: ServerHandle { tx, input_len },
+            metrics,
+            shutdown,
+            collector: Some(collector),
+            engine_name,
+        }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful shutdown: drains the queue, then joins.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic toy engine: output = [sum(input), batch_marker].
+    struct SumEngine;
+    impl Engine for SumEngine {
+        fn name(&self) -> &str {
+            "sum"
+        }
+        fn input_len(&self) -> usize {
+            4
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32> {
+            (0..batch)
+                .map(|i| flat[i * 4..(i + 1) * 4].iter().sum())
+                .collect()
+        }
+    }
+
+    #[test]
+    fn serves_correct_answers() {
+        let server = Server::start(Arc::new(SumEngine), ServerCfg::default());
+        let h = server.handle();
+        for i in 0..20 {
+            let v = i as f32;
+            let out = h.infer(vec![v, 1.0, 2.0, 3.0]).unwrap();
+            assert_eq!(out, vec![v + 6.0]);
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 20);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let server = Server::start(
+            Arc::new(SumEngine),
+            ServerCfg {
+                max_batch: 16,
+                max_wait: Duration::from_millis(10),
+                workers: 2,
+            },
+        );
+        let h = server.handle();
+        let mut joins = Vec::new();
+        for i in 0..64 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                let v = i as f32;
+                let out = h.infer(vec![v, 0.0, 0.0, 0.0]).unwrap();
+                assert_eq!(out, vec![v]);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.requests, 64);
+        // Concurrency should have produced some multi-request batches.
+        assert!(snap.mean_batch > 1.01, "mean batch {}", snap.mean_batch);
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_input_len() {
+        let server = Server::start(Arc::new(SumEngine), ServerCfg::default());
+        assert!(server.handle().infer(vec![1.0]).is_err());
+        server.shutdown();
+    }
+}

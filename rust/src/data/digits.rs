@@ -1,0 +1,216 @@
+//! Synthetic stroke-digit dataset — the MNIST stand-in (see DESIGN.md
+//! §4: the environment has no dataset downloads, so we procedurally
+//! render a 10-class digit task that exercises the same experimental
+//! axes: multi-class image classification where network capacity vs
+//! quantization trade-offs are visible).
+//!
+//! Each class is a fixed seven-segment-style stroke pattern rendered at
+//! 16×16 with random translation, per-stroke jitter, thickness variation
+//! and pixel noise.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Xoshiro256;
+
+pub const SIDE: usize = 16;
+pub const CLASSES: usize = 10;
+pub const FEATURES: usize = SIDE * SIDE;
+
+/// Segment layout (seven-segment display):
+///   0: top, 1: top-left, 2: top-right, 3: middle, 4: bottom-left,
+///   5: bottom-right, 6: bottom.
+const SEGMENTS: [(f32, f32, f32, f32); 7] = [
+    (0.2, 0.15, 0.8, 0.15), // top
+    (0.2, 0.15, 0.2, 0.5),  // top-left
+    (0.8, 0.15, 0.8, 0.5),  // top-right
+    (0.2, 0.5, 0.8, 0.5),   // middle
+    (0.2, 0.5, 0.2, 0.85),  // bottom-left
+    (0.8, 0.5, 0.8, 0.85),  // bottom-right
+    (0.2, 0.85, 0.8, 0.85), // bottom
+];
+
+/// Which segments each digit lights up.
+const DIGIT_SEGMENTS: [&[usize]; 10] = [
+    &[0, 1, 2, 4, 5, 6],    // 0
+    &[2, 5],                // 1
+    &[0, 2, 3, 4, 6],       // 2
+    &[0, 2, 3, 5, 6],       // 3
+    &[1, 2, 3, 5],          // 4
+    &[0, 1, 3, 5, 6],       // 5
+    &[0, 1, 3, 4, 5, 6],    // 6
+    &[0, 2, 5],             // 7
+    &[0, 1, 2, 3, 4, 5, 6], // 8
+    &[0, 1, 2, 3, 5, 6],    // 9
+];
+
+/// Dataset generator configuration.
+#[derive(Clone, Debug)]
+pub struct DigitsCfg {
+    /// Pixel noise sd.
+    pub noise: f32,
+    /// Max translation in pixels.
+    pub shift: f32,
+    /// Per-endpoint stroke jitter in pixels.
+    pub jitter: f32,
+}
+
+impl Default for DigitsCfg {
+    fn default() -> Self {
+        Self {
+            noise: 0.08,
+            shift: 1.5,
+            jitter: 0.7,
+        }
+    }
+}
+
+/// Render one digit into a FEATURES-length buffer (values in [0, 1]).
+pub fn render_digit(class: usize, cfg: &DigitsCfg, rng: &mut Xoshiro256, out: &mut [f32]) {
+    assert!(class < CLASSES);
+    assert_eq!(out.len(), FEATURES);
+    out.iter_mut().for_each(|p| *p = 0.0);
+
+    let s = SIDE as f32;
+    let dx = rng.range_f32(-cfg.shift, cfg.shift);
+    let dy = rng.range_f32(-cfg.shift, cfg.shift);
+    let thick = rng.range_f32(0.6, 1.1);
+
+    for &seg in DIGIT_SEGMENTS[class] {
+        let (x0, y0, x1, y1) = SEGMENTS[seg];
+        let jx0 = rng.range_f32(-cfg.jitter, cfg.jitter);
+        let jy0 = rng.range_f32(-cfg.jitter, cfg.jitter);
+        let jx1 = rng.range_f32(-cfg.jitter, cfg.jitter);
+        let jy1 = rng.range_f32(-cfg.jitter, cfg.jitter);
+        let (ax, ay) = (x0 * s + dx + jx0, y0 * s + dy + jy0);
+        let (bx, by) = (x1 * s + dx + jx1, y1 * s + dy + jy1);
+        draw_line(out, ax, ay, bx, by, thick);
+    }
+
+    if cfg.noise > 0.0 {
+        for p in out.iter_mut() {
+            *p = (*p + rng.normal_f32(0.0, cfg.noise)).clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// Soft anti-aliased line segment rendering.
+fn draw_line(img: &mut [f32], x0: f32, y0: f32, x1: f32, y1: f32, thick: f32) {
+    let (dx, dy) = (x1 - x0, y1 - y0);
+    let len2 = (dx * dx + dy * dy).max(1e-6);
+    let pad = thick.ceil() as isize + 1;
+    let min_x = (x0.min(x1) as isize - pad).max(0);
+    let max_x = (x0.max(x1) as isize + pad).min(SIDE as isize - 1);
+    let min_y = (y0.min(y1) as isize - pad).max(0);
+    let max_y = (y0.max(y1) as isize + pad).min(SIDE as isize - 1);
+    for py in min_y..=max_y {
+        for px in min_x..=max_x {
+            let (fx, fy) = (px as f32, py as f32);
+            // Distance from pixel to the segment.
+            let t = (((fx - x0) * dx + (fy - y0) * dy) / len2).clamp(0.0, 1.0);
+            let (cx, cy) = (x0 + t * dx, y0 + t * dy);
+            let d = ((fx - cx) * (fx - cx) + (fy - cy) * (fy - cy)).sqrt();
+            let v = (1.0 - (d - thick * 0.5).max(0.0)).clamp(0.0, 1.0);
+            let at = py as usize * SIDE + px as usize;
+            img[at] = img[at].max(v);
+        }
+    }
+}
+
+/// A generated batch: inputs [B, FEATURES] in [0,1] and labels.
+pub fn batch(b: usize, cfg: &DigitsCfg, rng: &mut Xoshiro256) -> (Tensor, Vec<usize>) {
+    let mut x = Tensor::zeros(&[b, FEATURES]);
+    let mut labels = Vec::with_capacity(b);
+    for i in 0..b {
+        let class = rng.below(CLASSES);
+        let row = &mut x.data_mut()[i * FEATURES..(i + 1) * FEATURES];
+        render_digit(class, cfg, rng, row);
+        labels.push(class);
+    }
+    (x, labels)
+}
+
+/// A fixed evaluation set (deterministic given the seed).
+pub struct DigitsEval {
+    pub x: Tensor,
+    pub labels: Vec<usize>,
+}
+
+pub fn eval_set(n: usize, seed: u64) -> DigitsEval {
+    let mut rng = Xoshiro256::new(seed ^ 0xE7A1);
+    let (x, labels) = batch(n, &DigitsCfg::default(), &mut rng);
+    DigitsEval { x, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_in_unit_range() {
+        let mut rng = Xoshiro256::new(1);
+        let mut buf = vec![0.0f32; FEATURES];
+        for c in 0..CLASSES {
+            render_digit(c, &DigitsCfg::default(), &mut rng, &mut buf);
+            assert!(buf.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            // The digit must actually draw something.
+            assert!(buf.iter().sum::<f32>() > 5.0, "class {c} nearly empty");
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Average images of different classes must differ meaningfully.
+        let mut rng = Xoshiro256::new(2);
+        let cfg = DigitsCfg {
+            noise: 0.0,
+            ..Default::default()
+        };
+        let mut means = vec![vec![0.0f32; FEATURES]; CLASSES];
+        let reps = 24;
+        let mut buf = vec![0.0f32; FEATURES];
+        for c in 0..CLASSES {
+            for _ in 0..reps {
+                render_digit(c, &cfg, &mut rng, &mut buf);
+                for (m, &v) in means[c].iter_mut().zip(&buf) {
+                    *m += v / reps as f32;
+                }
+            }
+        }
+        for a in 0..CLASSES {
+            for b in (a + 1)..CLASSES {
+                let d: f32 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!(d > 1.0, "classes {a} and {b} too similar: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_shapes_and_determinism() {
+        let (x1, l1) = batch(32, &DigitsCfg::default(), &mut Xoshiro256::new(3));
+        let (x2, l2) = batch(32, &DigitsCfg::default(), &mut Xoshiro256::new(3));
+        assert_eq!(x1.shape(), &[32, FEATURES]);
+        assert_eq!(l1, l2);
+        assert_eq!(x1, x2);
+    }
+
+    #[test]
+    fn a_small_mlp_can_learn_it() {
+        // End-to-end sanity: the task is learnable well above chance.
+        use crate::nn::{accuracy, ActSpec, NetSpec, Network, SoftmaxCrossEntropy, Target};
+        use crate::train::{TrainCfg, Trainer};
+        let spec = NetSpec::mlp("d", FEATURES, &[32], CLASSES, ActSpec::tanh());
+        let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(4));
+        let mut tr = Trainer::new(TrainCfg::adam(0.003, 400));
+        let cfg = DigitsCfg::default();
+        let _ = tr.train(&mut net, &SoftmaxCrossEntropy, |rng| {
+            let (x, l) = batch(32, &cfg, rng);
+            (x, Target::Labels(l))
+        });
+        let eval = eval_set(200, 42);
+        let acc = accuracy(&net.forward(&eval.x, false), &eval.labels);
+        assert!(acc > 0.8, "accuracy only {acc}");
+    }
+}

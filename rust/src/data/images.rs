@@ -1,0 +1,212 @@
+//! Synthetic structured image patches — stand-ins for the ImageNet
+//! imagery used by the paper's auto-encoding (§3.2) and AlexNet (§3.3)
+//! experiments (see DESIGN.md §4 for the substitution rationale).
+//!
+//! * [`patch`] — band-limited textured RGB patches for auto-encoding:
+//!   mixtures of smooth gradients, oriented sinusoids and shapes, so a
+//!   real-valued regression target with non-trivial structure.
+//! * [`imagenet_sim`] — a 20-class labelled variant where each class
+//!   fixes the texture parameters (orientation band, frequency band,
+//!   color palette, overlay shape), giving a conv-net classification
+//!   task with intra-class variation.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Xoshiro256;
+
+/// Auto-encoder patch side / channels.
+pub const AE_SIDE: usize = 16;
+pub const AE_CHANNELS: usize = 3;
+pub const AE_FEATURES: usize = AE_SIDE * AE_SIDE * AE_CHANNELS;
+
+/// Classification image parameters.
+pub const IM_SIDE: usize = 24;
+pub const IM_CHANNELS: usize = 3;
+pub const IM_CLASSES: usize = 20;
+pub const IM_FEATURES: usize = IM_SIDE * IM_SIDE * IM_CHANNELS;
+
+/// Render one textured patch (side×side×3, HWC, values in [0,1]).
+fn render_texture(
+    side: usize,
+    freq: f32,
+    theta: f32,
+    phase: f32,
+    palette: [f32; 3],
+    grad_dir: (f32, f32),
+    shape_kind: usize,
+    shape_pos: (f32, f32),
+    shape_r: f32,
+    noise: f32,
+    rng: &mut Xoshiro256,
+    out: &mut [f32],
+) {
+    let s = side as f32;
+    let (ct, st) = (theta.cos(), theta.sin());
+    for y in 0..side {
+        for x in 0..side {
+            let (fx, fy) = (x as f32 / s, y as f32 / s);
+            // Oriented sinusoid + linear gradient.
+            let u = fx * ct + fy * st;
+            let wave = 0.5 + 0.5 * (2.0 * std::f32::consts::PI * freq * u + phase).sin();
+            let grad = (fx * grad_dir.0 + fy * grad_dir.1).clamp(0.0, 1.0);
+            // Shape overlay.
+            let (sx, sy) = shape_pos;
+            let inside = match shape_kind {
+                0 => {
+                    let d = ((fx - sx) * (fx - sx) + (fy - sy) * (fy - sy)).sqrt();
+                    d < shape_r
+                }
+                1 => (fx - sx).abs() < shape_r && (fy - sy).abs() < shape_r,
+                _ => (fx - sx).abs() + (fy - sy).abs() < shape_r,
+            };
+            let base = 0.45 * wave + 0.35 * grad + if inside { 0.25 } else { 0.0 };
+            for c in 0..3 {
+                let v = (base * (0.5 + palette[c] * 0.5)
+                    + if noise > 0.0 {
+                        rng.normal_f32(0.0, noise)
+                    } else {
+                        0.0
+                    })
+                .clamp(0.0, 1.0);
+                out[(y * side + x) * 3 + c] = v;
+            }
+        }
+    }
+}
+
+/// One random auto-encoding patch.
+pub fn patch(rng: &mut Xoshiro256, out: &mut [f32]) {
+    assert_eq!(out.len(), AE_FEATURES);
+    let freq = rng.range_f32(1.0, 6.0);
+    let theta = rng.range_f32(0.0, std::f32::consts::PI);
+    let phase = rng.range_f32(0.0, 6.28);
+    let palette = [rng.uniform_f32(), rng.uniform_f32(), rng.uniform_f32()];
+    let grad = (rng.range_f32(-1.0, 1.0), rng.range_f32(-1.0, 1.0));
+    let kind = rng.below(3);
+    let pos = (rng.range_f32(0.2, 0.8), rng.range_f32(0.2, 0.8));
+    let r = rng.range_f32(0.1, 0.35);
+    render_texture(
+        AE_SIDE, freq, theta, phase, palette, grad, kind, pos, r, 0.02, rng, out,
+    );
+}
+
+/// Batch of auto-encoding patches [B, AE_FEATURES].
+pub fn ae_batch(b: usize, rng: &mut Xoshiro256) -> Tensor {
+    let mut x = Tensor::zeros(&[b, AE_FEATURES]);
+    for i in 0..b {
+        patch(rng, &mut x.data_mut()[i * AE_FEATURES..(i + 1) * AE_FEATURES]);
+    }
+    x
+}
+
+/// Batch of auto-encoding patches in NHWC form [B, S, S, 3].
+pub fn ae_batch_nhwc(b: usize, rng: &mut Xoshiro256) -> Tensor {
+    ae_batch(b, rng).reshape(&[b, AE_SIDE, AE_SIDE, AE_CHANNELS])
+}
+
+/// Class-conditioned texture parameters for the classification variant.
+fn class_params(class: usize) -> (f32, f32, [f32; 3], usize) {
+    // 20 classes = 5 orientation bands × 2 frequency bands × 2 shapes,
+    // with a class-specific palette.
+    let ori = (class % 5) as f32 * std::f32::consts::PI / 5.0;
+    let freq = if (class / 5) % 2 == 0 { 2.0 } else { 5.0 };
+    let shape = (class / 10) % 2;
+    let palette = [
+        0.25 + 0.75 * ((class * 7) % 10) as f32 / 10.0,
+        0.25 + 0.75 * ((class * 3) % 10) as f32 / 10.0,
+        0.25 + 0.75 * ((class * 9) % 10) as f32 / 10.0,
+    ];
+    (ori, freq, palette, shape)
+}
+
+/// One labelled image of the given class (IM_SIDE², HWC in [0,1]).
+pub fn render_class_image(class: usize, rng: &mut Xoshiro256, out: &mut [f32]) {
+    assert!(class < IM_CLASSES);
+    assert_eq!(out.len(), IM_FEATURES);
+    let (ori, freq, palette, shape) = class_params(class);
+    // Intra-class variation: jitter all parameters.
+    let theta = ori + rng.range_f32(-0.15, 0.15);
+    let f = freq * rng.range_f32(0.85, 1.15);
+    let phase = rng.range_f32(0.0, 6.28);
+    let grad = (rng.range_f32(-0.5, 0.5), rng.range_f32(-0.5, 0.5));
+    let pos = (rng.range_f32(0.3, 0.7), rng.range_f32(0.3, 0.7));
+    let r = rng.range_f32(0.15, 0.3);
+    render_texture(
+        IM_SIDE, f, theta, phase, palette, grad, shape, pos, r, 0.05, rng, out,
+    );
+}
+
+/// Labelled batch for the ImageNet-sim task: ([B,H,W,C], labels).
+pub fn imagenet_sim_batch(b: usize, rng: &mut Xoshiro256) -> (Tensor, Vec<usize>) {
+    let mut x = Tensor::zeros(&[b, IM_SIDE, IM_SIDE, IM_CHANNELS]);
+    let mut labels = Vec::with_capacity(b);
+    for i in 0..b {
+        let class = rng.below(IM_CLASSES);
+        render_class_image(
+            class,
+            rng,
+            &mut x.data_mut()[i * IM_FEATURES..(i + 1) * IM_FEATURES],
+        );
+        labels.push(class);
+    }
+    (x, labels)
+}
+
+/// Deterministic evaluation set.
+pub fn imagenet_sim_eval(n: usize, seed: u64) -> (Tensor, Vec<usize>) {
+    let mut rng = Xoshiro256::new(seed ^ 0x135E7);
+    imagenet_sim_batch(n, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patches_in_unit_range_with_structure() {
+        let mut rng = Xoshiro256::new(1);
+        let x = ae_batch(8, &mut rng);
+        assert!(x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Patches should have spatial variance (not flat).
+        for i in 0..8 {
+            let row = x.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / row.len() as f32;
+            let var: f32 =
+                row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / row.len() as f32;
+            assert!(var > 0.005, "patch {i} flat: var={var}");
+        }
+    }
+
+    #[test]
+    fn class_images_distinct_across_classes() {
+        let mut rng = Xoshiro256::new(2);
+        let reps = 12;
+        let mut means = vec![vec![0.0f32; IM_FEATURES]; 4];
+        let mut buf = vec![0.0f32; IM_FEATURES];
+        for (ci, &c) in [0usize, 4, 9, 15].iter().enumerate() {
+            for _ in 0..reps {
+                render_class_image(c, &mut rng, &mut buf);
+                for (m, &v) in means[ci].iter_mut().zip(&buf) {
+                    *m += v / reps as f32;
+                }
+            }
+        }
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                let d: f32 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                assert!(d > 1.0, "classes {a},{b} too similar: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_deterministic() {
+        let (x1, l1) = imagenet_sim_eval(16, 7);
+        let (x2, l2) = imagenet_sim_eval(16, 7);
+        assert_eq!(l1, l2);
+        assert!(x1.mse(&x2) == 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Synthetic datasets — offline stand-ins for MNIST and ImageNet with
+//! the substitution rationale documented in DESIGN.md §4.
+
+pub mod digits;
+pub mod images;
+pub mod parabola;

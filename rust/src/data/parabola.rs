@@ -1,0 +1,34 @@
+//! The parabola-fitting toy task of paper Figure 2: a 1-input,
+//! 1-output regression (y = x²) fit by a 2-hidden-unit network, used to
+//! visualize how tanhD(L) quantization artifacts shrink as L grows.
+
+use crate::tensor::Tensor;
+
+/// Uniform sample of the parabola on [-1, 1].
+pub fn dataset(n: usize) -> (Tensor, Tensor) {
+    let xs: Vec<f32> = (0..n)
+        .map(|i| -1.0 + 2.0 * i as f32 / (n - 1) as f32)
+        .collect();
+    let ys: Vec<f32> = xs.iter().map(|&x| x * x).collect();
+    (
+        Tensor::from_vec(&[n, 1], xs),
+        Tensor::from_vec(&[n, 1], ys),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_is_parabola() {
+        let (x, y) = dataset(11);
+        assert_eq!(x.shape(), &[11, 1]);
+        for i in 0..11 {
+            let xi = x.data()[i];
+            assert!((y.data()[i] - xi * xi).abs() < 1e-6);
+        }
+        assert_eq!(x.data()[0], -1.0);
+        assert_eq!(x.data()[10], 1.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Entropy coding of weight-index streams and the §4 memory accounting.
+
+pub mod model_size;
+pub mod rangecoder;
+
+pub use model_size::{memory_report, MemoryReport};
+pub use rangecoder::{decode, encode, FreqModel};

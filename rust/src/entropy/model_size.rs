@@ -1,0 +1,145 @@
+//! Model memory/bandwidth accounting (paper §4):
+//!
+//! * float baseline: 32 bits per weight;
+//! * LUT deployment: ⌈log2|W|⌉ bits per weight index + the (A+2)×|W|
+//!   product table + the activation table;
+//! * download size: entropy-coded indices ("below 7 bits", ">78%
+//!   savings" for AlexNet-scale networks).
+
+use super::rangecoder::{encode, FreqModel};
+
+/// Memory accounting for a quantized model.
+#[derive(Clone, Debug)]
+pub struct MemoryReport {
+    pub n_weights: usize,
+    pub codebook_size: usize,
+    /// Bits per raw weight index (⌈log2 |W|⌉).
+    pub index_bits: u32,
+    /// Bytes of float baseline (32-bit weights).
+    pub float_bytes: usize,
+    /// Bytes of index-coded weights (packed at index_bits).
+    pub packed_bytes: usize,
+    /// Bytes of LUT tables (product + activation).
+    pub table_bytes: usize,
+    /// Bytes of entropy-coded index stream (+ model/codebook overhead).
+    pub entropy_bytes: usize,
+    /// Empirical bits/weight achieved by the range coder.
+    pub entropy_bits_per_weight: f64,
+}
+
+impl MemoryReport {
+    /// Deployed-memory saving vs float weights, including table overhead.
+    pub fn deploy_saving(&self) -> f64 {
+        1.0 - (self.packed_bytes + self.table_bytes) as f64 / self.float_bytes as f64
+    }
+
+    /// Download-bandwidth saving (entropy-coded indices + codebook).
+    pub fn download_saving(&self) -> f64 {
+        let codebook_bytes = self.codebook_size * 4;
+        1.0 - (self.entropy_bytes + codebook_bytes) as f64 / self.float_bytes as f64
+    }
+}
+
+/// Compute the report for a weight-index stream.
+pub fn memory_report(
+    indices: &[u32],
+    codebook_size: usize,
+    table_bytes: usize,
+) -> MemoryReport {
+    let n = indices.len();
+    let index_bits = (codebook_size.max(2) as f64).log2().ceil() as u32;
+    let model = FreqModel::from_symbols(indices, codebook_size);
+    let coded = encode(indices, &model);
+    // Shipping the static model costs one frequency per symbol (u16).
+    let model_overhead = codebook_size * 2;
+    MemoryReport {
+        n_weights: n,
+        codebook_size,
+        index_bits,
+        float_bytes: n * 4,
+        packed_bytes: (n * index_bits as usize).div_ceil(8),
+        table_bytes,
+        entropy_bytes: coded.len() + model_overhead,
+        entropy_bits_per_weight: (coded.len() * 8) as f64 / n.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    /// Indices produced by the real deployment pipeline on an AlexNet-
+    /// like weight population: a *global* codebook over layers with very
+    /// different scales (Fig 4: conv layers are wide Laplacians, the
+    /// fc layers — which hold ~90% of AlexNet's weights — are narrow
+    /// Gaussians). The global codebook must span the widest layer, so
+    /// the narrow fc mass collapses onto few center-adjacent entries:
+    /// that skew is what makes entropy coding beat the raw 10-bit index.
+    fn realistic_indices(n: usize, w: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Xoshiro256::new(seed);
+        let weights: Vec<f32> = (0..n)
+            .map(|_| {
+                let u = rng.uniform();
+                if u < 0.88 {
+                    rng.normal_f32(0.0, 0.01) // fc6/fc7-like bulk
+                } else if u < 0.97 {
+                    rng.laplacian(0.0, 0.03) as f32 // mid conv layers
+                } else {
+                    rng.laplacian(0.0, 0.25) as f32 // conv1-like spread
+                }
+            })
+            .collect();
+        let cb = crate::quant::LaplacianQuant::new(w).codebook(&weights);
+        cb.assign_slice(&weights)
+    }
+
+    #[test]
+    fn paper_savings_shape_holds() {
+        // §4 with |W|=1000: indices at 10 bits → >69% deployed saving for
+        // AlexNet-scale nets; entropy coding → <7 bits → >78% download
+        // saving. Our stand-in network is smaller, so table overhead eats
+        // more — check at AlexNet-ish weight counts.
+        let n = 2_000_000; // big enough that the 1000×34 table amortizes
+        let w = 1000;
+        let idx = realistic_indices(n, w, 1);
+        let table_bytes = (32 + 2) * w * 4;
+        let rep = memory_report(&idx, w, table_bytes);
+        assert_eq!(rep.index_bits, 10);
+        // Index-only saving is exactly 1 − 10/32 = 68.75% (the paper
+        // rounds this to ">69%"); table overhead shaves a little at 2M
+        // weights and vanishes at AlexNet's 50M.
+        let index_only = 1.0 - rep.index_bits as f64 / 32.0;
+        assert!((index_only - 0.6875).abs() < 1e-9);
+        assert!(
+            rep.deploy_saving() > 0.66,
+            "deploy saving {}",
+            rep.deploy_saving()
+        );
+        assert!(
+            rep.entropy_bits_per_weight < 7.0,
+            "entropy bits {}",
+            rep.entropy_bits_per_weight
+        );
+        assert!(
+            rep.download_saving() > 0.78,
+            "download saving {}",
+            rep.download_saving()
+        );
+    }
+
+    #[test]
+    fn entropy_never_exceeds_raw_bits_much() {
+        let idx = realistic_indices(50_000, 100, 2);
+        let rep = memory_report(&idx, 100, 0);
+        assert!(rep.entropy_bits_per_weight <= rep.index_bits as f64 + 0.2);
+    }
+
+    #[test]
+    fn uniform_indices_give_log2_w_bits() {
+        let mut rng = Xoshiro256::new(3);
+        let idx: Vec<u32> = (0..100_000).map(|_| rng.below(256) as u32).collect();
+        let rep = memory_report(&idx, 256, 0);
+        assert!((rep.entropy_bits_per_weight - 8.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,243 @@
+//! Byte-oriented range coder with a static frequency model — used to
+//! entropy-code weight-index streams (paper §4: "even the simplest
+//! (non-adaptive, marginal-only) entropy coding reduces the index size
+//! from 10 bits to below 7 bits").
+
+/// Static frequency model over a symbol alphabet.
+#[derive(Clone, Debug)]
+pub struct FreqModel {
+    /// Cumulative frequencies, len = alphabet + 1, cum[0] = 0.
+    cum: Vec<u32>,
+}
+
+impl FreqModel {
+    /// Build from symbol counts (zero counts get a floor of 1 so every
+    /// symbol stays codable).
+    pub fn from_counts(counts: &[u64]) -> FreqModel {
+        assert!(!counts.is_empty());
+        // Scale total to ≤ 1<<16 to keep range-coder precision safe.
+        let total: u64 = counts.iter().map(|&c| c.max(1)).sum();
+        let target = 1u64 << 16;
+        let mut freqs: Vec<u32> = counts
+            .iter()
+            .map(|&c| {
+                let c = c.max(1);
+                (((c * target) / total).max(1)) as u32
+            })
+            .collect();
+        // Fix rounding drift.
+        let mut cum = Vec::with_capacity(freqs.len() + 1);
+        let sum: u64 = freqs.iter().map(|&f| f as u64).sum();
+        if sum > target {
+            // Shave the largest bucket.
+            let overflow = (sum - target) as u32;
+            let imax = (0..freqs.len()).max_by_key(|&i| freqs[i]).unwrap();
+            assert!(freqs[imax] > overflow, "cannot normalize model");
+            freqs[imax] -= overflow;
+        }
+        let mut acc = 0u32;
+        cum.push(0);
+        for &f in &freqs {
+            acc += f;
+            cum.push(acc);
+        }
+        FreqModel { cum }
+    }
+
+    /// Build from a symbol stream.
+    pub fn from_symbols(symbols: &[u32], alphabet: usize) -> FreqModel {
+        let mut counts = vec![0u64; alphabet];
+        for &s in symbols {
+            counts[s as usize] += 1;
+        }
+        Self::from_counts(&counts)
+    }
+
+    pub fn alphabet(&self) -> usize {
+        self.cum.len() - 1
+    }
+
+    fn total(&self) -> u32 {
+        *self.cum.last().unwrap()
+    }
+
+    fn range_of(&self, sym: usize) -> (u32, u32) {
+        (self.cum[sym], self.cum[sym + 1])
+    }
+
+    /// Find the symbol whose cumulative range contains `v`.
+    fn symbol_of(&self, v: u32) -> usize {
+        // partition_point: first index with cum > v, minus one.
+        self.cum.partition_point(|&c| c <= v) - 1
+    }
+
+    /// Shannon entropy (bits/symbol) of the *model* distribution.
+    pub fn entropy_bits(&self) -> f64 {
+        let total = self.total() as f64;
+        let mut h = 0.0;
+        for w in self.cum.windows(2) {
+            let f = (w[1] - w[0]) as f64;
+            if f > 0.0 {
+                let p = f / total;
+                h -= p * p.log2();
+            }
+        }
+        h
+    }
+}
+
+const TOP: u32 = 1 << 24;
+const BOT: u32 = 1 << 16;
+
+/// Encode a symbol stream with a static model. Returns the byte stream.
+pub fn encode(symbols: &[u32], model: &FreqModel) -> Vec<u8> {
+    let mut low: u32 = 0;
+    let mut range: u32 = u32::MAX;
+    let mut out = Vec::new();
+    for &s in symbols {
+        let (c_lo, c_hi) = model.range_of(s as usize);
+        let total = model.total();
+        let r = range / total;
+        low = low.wrapping_add(r * c_lo);
+        range = r * (c_hi - c_lo);
+        // Renormalize.
+        loop {
+            if (low ^ low.wrapping_add(range)) < TOP {
+                // Top byte settled.
+            } else if range < BOT {
+                range = low.wrapping_neg() & (BOT - 1);
+            } else {
+                break;
+            }
+            out.push((low >> 24) as u8);
+            low <<= 8;
+            range <<= 8;
+        }
+    }
+    for _ in 0..4 {
+        out.push((low >> 24) as u8);
+        low <<= 8;
+    }
+    out
+}
+
+/// Decode `n` symbols.
+pub fn decode(bytes: &[u8], n: usize, model: &FreqModel) -> Vec<u32> {
+    let mut low: u32 = 0;
+    let mut range: u32 = u32::MAX;
+    let mut code: u32 = 0;
+    let mut pos = 0usize;
+    for _ in 0..4 {
+        code = (code << 8) | bytes.get(pos).copied().unwrap_or(0) as u32;
+        pos += 1;
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let total = model.total();
+        let r = range / total;
+        let v = (code.wrapping_sub(low) / r).min(total - 1);
+        let sym = model.symbol_of(v);
+        let (c_lo, c_hi) = model.range_of(sym);
+        low = low.wrapping_add(r * c_lo);
+        range = r * (c_hi - c_lo);
+        loop {
+            if (low ^ low.wrapping_add(range)) < TOP {
+            } else if range < BOT {
+                range = low.wrapping_neg() & (BOT - 1);
+            } else {
+                break;
+            }
+            code = (code << 8) | bytes.get(pos).copied().unwrap_or(0) as u32;
+            pos += 1;
+            low <<= 8;
+            range <<= 8;
+        }
+        out.push(sym as u32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn roundtrip_uniform_symbols() {
+        let mut rng = Xoshiro256::new(1);
+        let syms: Vec<u32> = (0..5000).map(|_| rng.below(17) as u32).collect();
+        let model = FreqModel::from_symbols(&syms, 17);
+        let bytes = encode(&syms, &model);
+        let back = decode(&bytes, syms.len(), &model);
+        assert_eq!(syms, back);
+    }
+
+    #[test]
+    fn roundtrip_skewed_symbols() {
+        // Laplacian-ish skew, like clustered weight indices.
+        let mut rng = Xoshiro256::new(2);
+        let syms: Vec<u32> = (0..20_000)
+            .map(|_| {
+                let v = rng.laplacian(0.0, 6.0).abs().min(63.0);
+                v as u32
+            })
+            .collect();
+        let model = FreqModel::from_symbols(&syms, 64);
+        let bytes = encode(&syms, &model);
+        assert_eq!(decode(&bytes, syms.len(), &model), syms);
+        // Compression: skewed stream must beat the 6-bit raw size.
+        let raw_bits = syms.len() as f64 * 6.0;
+        let coded_bits = bytes.len() as f64 * 8.0;
+        assert!(
+            coded_bits < raw_bits * 0.85,
+            "coded {coded_bits} vs raw {raw_bits}"
+        );
+    }
+
+    #[test]
+    fn coded_size_near_model_entropy() {
+        let mut rng = Xoshiro256::new(3);
+        let syms: Vec<u32> = (0..50_000)
+            .map(|_| if rng.bernoulli(0.9) { 0 } else { 1 + rng.below(7) as u32 })
+            .collect();
+        let model = FreqModel::from_symbols(&syms, 8);
+        let bytes = encode(&syms, &model);
+        let bits_per_sym = bytes.len() as f64 * 8.0 / syms.len() as f64;
+        let h = model.entropy_bits();
+        assert!(
+            bits_per_sym < h * 1.05 + 0.05,
+            "bits/sym {bits_per_sym} vs entropy {h}"
+        );
+        assert_eq!(decode(&bytes, syms.len(), &model), syms);
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let syms = vec![0u32; 100];
+        let model = FreqModel::from_symbols(&syms, 1);
+        let bytes = encode(&syms, &model);
+        assert_eq!(decode(&bytes, 100, &model), syms);
+        assert!(bytes.len() <= 8);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let model = FreqModel::from_counts(&[1, 1]);
+        let bytes = encode(&[], &model);
+        assert_eq!(decode(&bytes, 0, &model), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn property_roundtrip() {
+        use crate::util::prop::check;
+        check("range coder roundtrips arbitrary streams", 32, |g| {
+            let alphabet = g.usize_in(2, 100);
+            let n = g.usize_in(1, 2000);
+            let rng = g.rng();
+            let syms: Vec<u32> = (0..n).map(|_| rng.below(alphabet) as u32).collect();
+            let model = FreqModel::from_symbols(&syms, alphabet);
+            let bytes = encode(&syms, &model);
+            assert_eq!(decode(&bytes, n, &model), syms);
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! The activation lookup table (paper §4, Figure 9).
+//!
+//! After summing fixed-point products, the accumulator holds the
+//! activation input scaled by `2^s/Δx`. An arithmetic shift by `s` bits
+//! yields the Δx-grid bin; subtracting the grid offset and clamping gives
+//! a direct index into this table, whose entries are the *activation
+//! level indices* fed to the next layer. Non-uniform boundaries (tanhD)
+//! are handled by making the table longer than |A| — boundaries are
+//! snapped to the Δx grid (the paper's 12-entry table for 6 tanh levels).
+
+use super::plan::FixedPointPlan;
+use crate::quant::QuantAct;
+
+/// Maps shifted accumulator values to activation level indices.
+#[derive(Clone, Debug)]
+pub struct ActTable {
+    /// Right-shift amount (the plan's `s`).
+    pub shift: u32,
+    /// Grid offset: the Δx-bin index of the table's first entry.
+    pub offset: i64,
+    /// Entries: activation level index per Δx bin.
+    entries: Vec<u16>,
+}
+
+impl ActTable {
+    /// Build the table for an activation quantizer under a plan.
+    pub fn build(act: &QuantAct, plan: &FixedPointPlan) -> ActTable {
+        let b = act.boundaries();
+        let (b_lo, b_hi) = (b[0] as f64, b[b.len() - 1] as f64);
+        let dx = plan.dx;
+        // Cover [b_lo, b_hi] with Δx bins anchored at the origin, plus
+        // one bin on each side so the clamped extremes classify as the
+        // extreme levels (their midpoints fall outside the boundary span).
+        let m_lo = (b_lo / dx).floor() as i64 - 1;
+        let m_hi = (b_hi / dx).floor() as i64 + 1;
+        let len = (m_hi - m_lo + 1) as usize;
+        let entries: Vec<u16> = (0..len)
+            .map(|j| {
+                // Classify the bin by its midpoint — this is the "slight
+                // adjustment of boundaries" the paper describes.
+                let mid = ((m_lo + j as i64) as f64 + 0.5) * dx;
+                act.index_of(mid as f32) as u16
+            })
+            .collect();
+        ActTable {
+            shift: plan.s,
+            offset: m_lo,
+            entries,
+        }
+    }
+
+    /// Number of table entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The Figure-9 lookup: shift, offset, clamp, index — integer ops
+    /// only.
+    #[inline]
+    pub fn lookup(&self, accum: i64) -> u16 {
+        // Arithmetic shift = floor division by 2^s (also for negatives).
+        let bin = (accum >> self.shift) - self.offset;
+        if bin < 0 {
+            self.entries[0]
+        } else if bin as usize >= self.entries.len() {
+            self.entries[self.entries.len() - 1]
+        } else {
+            self.entries[bin as usize]
+        }
+    }
+
+    /// Memory footprint in bytes ("negligible" per §4 — verified in the
+    /// memory report).
+    pub fn bytes(&self) -> usize {
+        self.entries.len() * std::mem::size_of::<u16>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_agrees_with_float_quantizer() {
+        // The defining correctness property of the whole §4 construction:
+        // for any pre-activation x, quantize-via-integer-LUT equals
+        // quantize-via-float within one Δx of the boundaries.
+        let act = QuantAct::tanh_d(6);
+        let plan = FixedPointPlan::build(&act, 48, 1.0, 1.0, 16);
+        let table = ActTable::build(&act, &plan);
+        let scale = plan.scale();
+        let mut mismatches = 0;
+        let mut total = 0;
+        for i in -4000..=4000 {
+            let x = i as f64 * 0.001;
+            let accum = (x * scale).round() as i64;
+            let got = table.lookup(accum) as usize;
+            let want = act.index_of(x as f32);
+            total += 1;
+            if got != want {
+                // Only allowed very near a boundary (snapping error ≤ Δx).
+                let nearest = act
+                    .boundaries()
+                    .iter()
+                    .map(|&b| (b as f64 - x).abs())
+                    .fold(f64::INFINITY, f64::min);
+                assert!(
+                    nearest <= plan.dx,
+                    "x={x}: got {got} want {want}, nearest boundary {nearest} > dx {}",
+                    plan.dx
+                );
+                mismatches += 1;
+            }
+        }
+        // Mismatches must be rare (only within Δx of the 5 boundaries).
+        assert!(
+            (mismatches as f64) < 0.02 * total as f64,
+            "{mismatches}/{total}"
+        );
+    }
+
+    #[test]
+    fn saturates_beyond_range() {
+        let act = QuantAct::tanh_d(8);
+        let plan = FixedPointPlan::build(&act, 32, 1.0, 1.0, 8);
+        let table = ActTable::build(&act, &plan);
+        let scale = plan.scale();
+        let lo = table.lookup((-100.0 * scale) as i64);
+        let hi = table.lookup((100.0 * scale) as i64);
+        assert_eq!(lo, 0);
+        assert_eq!(hi, 7);
+    }
+
+    #[test]
+    fn paper_example_six_levels_twelve_entries() {
+        // Fig 9: tanhD(6) with a 12-entry activation table pointing at 6
+        // distinct levels.
+        let act = QuantAct::tanh_d(6);
+        let plan = FixedPointPlan::build(&act, 12, 1.0, 1.0, 8);
+        let table = ActTable::build(&act, &plan);
+        assert!(
+            (12..=16).contains(&table.len()),
+            "len={} (grid anchoring + sentinel bins add ≤4)",
+            table.len()
+        );
+        // Entries are monotone non-decreasing level indices covering 0..5.
+        let mut prev = 0u16;
+        for i in 0..table.len() {
+            let e = table.entries[i];
+            assert!(e >= prev);
+            prev = e;
+        }
+        assert_eq!(table.entries[0], 0);
+        assert_eq!(*table.entries.last().unwrap(), 5);
+    }
+
+    #[test]
+    fn relu6_table_is_identity_like() {
+        // §4 footnote: for ReLU6 with Δx = 6/(|A|−1) the activation table
+        // is an identity mapping.
+        let act = QuantAct::relu6_d(8);
+        // act_table_len = levels−1 makes Δx exactly the boundary spacing.
+        let plan = FixedPointPlan::build(&act, 7, 1.0, 6.0, 8);
+        let table = ActTable::build(&act, &plan);
+        for (i, w) in table.entries.windows(2).enumerate() {
+            assert!(w[1] as i32 - w[0] as i32 <= 1, "jump at {i}");
+        }
+    }
+
+    #[test]
+    fn arithmetic_shift_handles_negative_sums() {
+        let act = QuantAct::tanh_d(4);
+        let plan = FixedPointPlan::build(&act, 64, 1.0, 1.0, 8);
+        let table = ActTable::build(&act, &plan);
+        let scale = plan.scale();
+        // A modestly negative x must land in a low (not wrapped) bin.
+        let x = -0.6f64;
+        let got = table.lookup((x * scale).round() as i64) as usize;
+        assert_eq!(got, act.index_of(x as f32));
+    }
+}

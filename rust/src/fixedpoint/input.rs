@@ -1,0 +1,90 @@
+//! Uniform input quantization (Table 1 "quantized inputs" columns).
+//!
+//! Network inputs (e.g. pixels) are quantized to the same number of
+//! levels used for activation quantization, uniformly over their range.
+
+/// Uniform quantizer over [lo, hi] with `levels` output values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UniformQuant {
+    pub lo: f32,
+    pub hi: f32,
+    pub levels: usize,
+}
+
+impl UniformQuant {
+    pub fn new(lo: f32, hi: f32, levels: usize) -> Self {
+        assert!(levels >= 2 && hi > lo);
+        Self { lo, hi, levels }
+    }
+
+    /// Unit-interval inputs (images in [0, 1]).
+    pub fn unit(levels: usize) -> Self {
+        Self::new(0.0, 1.0, levels)
+    }
+
+    #[inline]
+    pub fn step(&self) -> f32 {
+        (self.hi - self.lo) / (self.levels - 1) as f32
+    }
+
+    /// Level value for an index.
+    #[inline]
+    pub fn value(&self, idx: usize) -> f32 {
+        self.lo + self.step() * idx as f32
+    }
+
+    /// Nearest-level index for a raw input.
+    #[inline]
+    pub fn index_of(&self, x: f32) -> usize {
+        let t = ((x - self.lo) / self.step()).round();
+        (t.max(0.0) as usize).min(self.levels - 1)
+    }
+
+    /// Quantize a raw input to its level value.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        self.value(self.index_of(x))
+    }
+
+    /// Bulk index quantization.
+    pub fn quantize_to_indices(&self, xs: &[f32]) -> Vec<u16> {
+        xs.iter().map(|&x| self.index_of(x) as u16).collect()
+    }
+
+    /// All level values, ascending.
+    pub fn values(&self) -> Vec<f32> {
+        (0..self.levels).map(|i| self.value(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_grid() {
+        let q = UniformQuant::unit(5);
+        assert_eq!(q.values(), vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+        assert_eq!(q.index_of(0.3), 1);
+        assert_eq!(q.index_of(0.4), 2);
+        assert_eq!(q.quantize(0.9), 1.0);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let q = UniformQuant::unit(4);
+        assert_eq!(q.index_of(-5.0), 0);
+        assert_eq!(q.index_of(9.0), 3);
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_half_step() {
+        use crate::util::prop::check;
+        check("uniform quant error <= step/2", 128, |g| {
+            let levels = g.usize_in(2, 256);
+            let q = UniformQuant::new(-2.0, 3.0, levels);
+            let x = g.f32_in(-2.0, 3.0);
+            assert!((q.quantize(x) - x).abs() <= q.step() / 2.0 + 1e-6);
+        });
+    }
+}

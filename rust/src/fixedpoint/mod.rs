@@ -1,0 +1,13 @@
+//! Fixed-point deployment substrate (paper §4): scale planning with a
+//! static overflow guarantee, the pre-computed multiplication table, the
+//! bit-shift activation table, and uniform input quantization.
+
+pub mod acttable;
+pub mod input;
+pub mod multable;
+pub mod plan;
+
+pub use acttable::ActTable;
+pub use input::UniformQuant;
+pub use multable::{bias_row, zero_row, MulTable};
+pub use plan::{FixedPointPlan, OverflowAnalysis};

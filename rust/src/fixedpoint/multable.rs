@@ -1,0 +1,153 @@
+//! The pre-computed multiplication table (paper §4, Figures 8/9).
+//!
+//! `table[a][w] = round(value_a · weight_w · 2^s / Δx)` — every product a
+//! unit can ever need, stored once for the whole network. Two extra rows
+//! extend the paper's A×W layout:
+//!
+//! * row `A`   — the constant 1.0 (the bias unit's "activation", Fig 8);
+//! * row `A+1` — the constant 0.0 (zero padding for convolutions).
+
+use super::plan::FixedPointPlan;
+use crate::quant::Codebook;
+
+/// A fixed-point product lookup table.
+#[derive(Clone, Debug)]
+pub struct MulTable {
+    /// Number of *value* rows (= |A| activation levels; rows A and A+1
+    /// are the bias/padding constants).
+    pub a_levels: usize,
+    pub w_cols: usize,
+    /// Row-major [(a_levels + 2) × w_cols] fixed-point products.
+    data: Vec<i32>,
+}
+
+/// Row index of the constant-1.0 (bias) row.
+#[inline]
+pub fn bias_row(a_levels: usize) -> usize {
+    a_levels
+}
+
+/// Row index of the constant-0.0 (padding) row.
+#[inline]
+pub fn zero_row(a_levels: usize) -> usize {
+    a_levels + 1
+}
+
+impl MulTable {
+    /// Build the table for a set of activation level values and a weight
+    /// codebook under a fixed-point plan.
+    pub fn build(values: &[f32], codebook: &Codebook, plan: &FixedPointPlan) -> MulTable {
+        let scale = plan.scale();
+        let a_levels = values.len();
+        let w_cols = codebook.len();
+        let mut data = Vec::with_capacity((a_levels + 2) * w_cols);
+        let mut push_row = |v: f64| {
+            for &w in codebook.centers() {
+                let prod = (v * w as f64 * scale).round();
+                debug_assert!(
+                    prod.abs() <= i32::MAX as f64,
+                    "table entry overflows i32: {prod}"
+                );
+                data.push(prod as i32);
+            }
+        };
+        for &v in values {
+            push_row(v as f64);
+        }
+        push_row(1.0); // bias row
+        push_row(0.0); // padding row
+        MulTable {
+            a_levels,
+            w_cols,
+            data,
+        }
+    }
+
+    /// Total rows including the two constant rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.a_levels + 2
+    }
+
+    /// One row of products (all weights for a fixed activation value).
+    #[inline]
+    pub fn row(&self, a_idx: usize) -> &[i32] {
+        &self.data[a_idx * self.w_cols..(a_idx + 1) * self.w_cols]
+    }
+
+    /// Single entry lookup.
+    #[inline]
+    pub fn at(&self, a_idx: usize, w_idx: usize) -> i32 {
+        self.data[a_idx * self.w_cols + w_idx]
+    }
+
+    /// Memory footprint in bytes (for the §4 memory accounting).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<i32>()
+    }
+
+    /// Largest |entry| actually stored.
+    pub fn max_abs_entry(&self) -> i64 {
+        self.data.iter().map(|&e| (e as i64).abs()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QuantAct;
+
+    fn setup() -> (QuantAct, Codebook, FixedPointPlan) {
+        let act = QuantAct::tanh_d(6);
+        let cb = Codebook::new(vec![-0.75, -0.25, 0.0, 0.25, 0.5, 1.0]);
+        let plan = FixedPointPlan::build(&act, 12, 1.0, 1.0, 8);
+        (act, cb, plan)
+    }
+
+    #[test]
+    fn entries_encode_scaled_products() {
+        let (act, cb, plan) = setup();
+        let t = MulTable::build(act.outputs(), &cb, &plan);
+        let scale = plan.scale();
+        for (ai, &a) in act.outputs().iter().enumerate() {
+            for (wi, &w) in cb.centers().iter().enumerate() {
+                let want = (a as f64 * w as f64 * scale).round() as i32;
+                assert_eq!(t.at(ai, wi), want);
+            }
+        }
+    }
+
+    #[test]
+    fn bias_row_is_weight_times_one() {
+        let (act, cb, plan) = setup();
+        let t = MulTable::build(act.outputs(), &cb, &plan);
+        let scale = plan.scale();
+        for (wi, &w) in cb.centers().iter().enumerate() {
+            let want = (w as f64 * scale).round() as i32;
+            assert_eq!(t.at(bias_row(t.a_levels), wi), want);
+        }
+    }
+
+    #[test]
+    fn zero_row_is_zero() {
+        let (act, cb, plan) = setup();
+        let t = MulTable::build(act.outputs(), &cb, &plan);
+        for wi in 0..cb.len() {
+            assert_eq!(t.at(zero_row(t.a_levels), wi), 0);
+        }
+    }
+
+    #[test]
+    fn paper_table_size_example() {
+        // §4: A=32, |W|=1000 → 32,000 product entries (plus our 2 constant
+        // rows) at 4 bytes each ≈ 128 KB + change.
+        let act = QuantAct::relu6_d(32);
+        let centers: Vec<f32> = (0..1000).map(|i| i as f32 * 0.002 - 1.0).collect();
+        let cb = Codebook::new(centers);
+        let plan = FixedPointPlan::build(&act, 64, 1.0, 6.0, 4096);
+        let t = MulTable::build(act.outputs(), &cb, &plan);
+        assert_eq!(t.a_levels * t.w_cols, 32_000);
+        assert_eq!(t.bytes(), (32 + 2) * 1000 * 4);
+        assert!(t.max_abs_entry() <= plan.overflow.max_entry);
+    }
+}

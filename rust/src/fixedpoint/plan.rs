@@ -1,0 +1,184 @@
+//! Fixed-point deployment plan (paper §4, Figure 9).
+//!
+//! Everything stored in the lookup tables is pre-multiplied by a large
+//! scale factor `2^s` and divided by `Δx`, the sampling interval in
+//! activation-input space. Summing table entries then yields the
+//! activation-function input scaled by `2^s/Δx`; a single arithmetic
+//! right-shift by `s` bits turns the sum into a direct index into the
+//! activation table — no scan, no multiply, no divide.
+//!
+//! The plan also carries the overflow *guarantee*: weights come from a
+//! known codebook, activations from |A| known levels, and the network's
+//! maximum fan-in bounds how many entries are summed, so we can prove
+//! the accumulator never overflows before deploying (§4).
+
+use crate::quant::QuantAct;
+
+/// Result of the static overflow analysis.
+#[derive(Clone, Debug)]
+pub struct OverflowAnalysis {
+    /// Largest |table entry| in fixed-point units.
+    pub max_entry: i64,
+    /// Maximum fan-in (+1 for the bias) across the network.
+    pub max_terms: usize,
+    /// Proven bound on |accumulator|.
+    pub max_accum: i128,
+    /// True iff `max_accum` fits an i64 accumulator.
+    pub fits_i64: bool,
+    /// True iff `max_accum` fits an i32 accumulator (enables the SIMD
+    /// gather fast path in the LUT engine).
+    pub fits_i32: bool,
+    /// True iff every entry fits an i32 table cell.
+    pub entries_fit_i32: bool,
+}
+
+/// The fixed-point scaling plan shared by all tables of a network.
+#[derive(Clone, Debug)]
+pub struct FixedPointPlan {
+    /// Scale exponent: stored values carry a factor 2^s.
+    pub s: u32,
+    /// Activation-input sampling interval Δx (boundaries are snapped to
+    /// multiples of Δx, paper Fig 9).
+    pub dx: f64,
+    pub overflow: OverflowAnalysis,
+}
+
+impl FixedPointPlan {
+    /// The multiplicative factor applied to stored products.
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1u64 << self.s) as f64 / self.dx
+    }
+
+    /// Build a plan.
+    ///
+    /// * `act` — the hidden activation quantizer (its boundary span
+    ///   determines Δx).
+    /// * `act_table_len` — desired activation-table length (the paper's
+    ///   example uses 12 entries for 6 levels; more entries = finer Δx =
+    ///   less boundary-snapping error).
+    /// * `max_abs_w` — largest |weight| in the codebook.
+    /// * `max_abs_a` — largest |activation/input level| (including the
+    ///   bias constant 1.0).
+    /// * `max_fan_in` — largest number of summed products of any unit.
+    /// * `guard_bits` — extra precision bits beyond what fan-in rounding
+    ///   requires (default 4 via [`Self::build`]).
+    pub fn build_with_guard(
+        act: &QuantAct,
+        act_table_len: usize,
+        max_abs_w: f64,
+        max_abs_a: f64,
+        max_fan_in: usize,
+        guard_bits: u32,
+    ) -> FixedPointPlan {
+        assert!(act_table_len >= 2);
+        let b = act.boundaries();
+        let (b_lo, b_hi) = (b[0] as f64, b[b.len() - 1] as f64);
+        // Δx from the boundary span; degenerate span (L=2) gets a small
+        // symmetric window around the single boundary.
+        let span = (b_hi - b_lo).max(1e-3);
+        let dx = span / act_table_len as f64;
+
+        // Rounding: each table entry is off by ≤ ½ fixed-point ulp; a sum
+        // of (fan_in + 1) entries is off by ≤ (fan_in+1)/2 ulp. We want
+        // that error to stay ≪ one Δx bin, i.e. (fan_in+1)/2 < 2^s /
+        // 2^guard_bits, so s ≥ log2(fan_in+1) + guard_bits − 1.
+        let need = ((max_fan_in + 1) as f64).log2().ceil() as u32;
+        let mut s = need + guard_bits;
+
+        // Shrink s if entries would overflow i32 (keeps tables compact).
+        loop {
+            let max_entry = (max_abs_w * max_abs_a * (1u64 << s) as f64 / dx).round() as i64;
+            if max_entry <= i32::MAX as i64 / 2 || s == 1 {
+                break;
+            }
+            s -= 1;
+        }
+
+        let max_entry = (max_abs_w * max_abs_a * (1u64 << s) as f64 / dx).round() as i64;
+        let max_terms = max_fan_in + 1;
+        let max_accum = (max_entry as i128) * (max_terms as i128);
+        FixedPointPlan {
+            s,
+            dx,
+            overflow: OverflowAnalysis {
+                max_entry,
+                max_terms,
+                max_accum,
+                fits_i64: max_accum < (i64::MAX / 2) as i128,
+                fits_i32: max_accum < (i32::MAX / 2) as i128,
+                entries_fit_i32: max_entry <= i32::MAX as i64,
+            },
+        }
+    }
+
+    /// Build with the default 4 guard bits.
+    pub fn build(
+        act: &QuantAct,
+        act_table_len: usize,
+        max_abs_w: f64,
+        max_abs_a: f64,
+        max_fan_in: usize,
+    ) -> FixedPointPlan {
+        Self::build_with_guard(act, act_table_len, max_abs_w, max_abs_a, max_fan_in, 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_guarantees_no_overflow_for_typical_nets() {
+        // A=32 tanhD, |W|≈1000 with |w|≤3, fan-in 4096 — bigger than any
+        // experiment in the paper's Table 1.
+        let act = QuantAct::tanh_d(32);
+        let plan = FixedPointPlan::build(&act, 128, 3.0, 1.0, 4096);
+        assert!(plan.overflow.fits_i64);
+        assert!(plan.overflow.entries_fit_i32);
+        assert!(plan.s >= 12, "s={}", plan.s);
+    }
+
+    #[test]
+    fn scale_consistency() {
+        let act = QuantAct::tanh_d(8);
+        let plan = FixedPointPlan::build(&act, 32, 1.0, 1.0, 16);
+        let sc = plan.scale();
+        assert!((sc - (1u64 << plan.s) as f64 / plan.dx).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dx_covers_boundary_span() {
+        let act = QuantAct::tanh_d(6);
+        let plan = FixedPointPlan::build(&act, 12, 1.0, 1.0, 8);
+        let b = act.boundaries();
+        let span = (b[b.len() - 1] - b[0]) as f64;
+        assert!((plan.dx * 12.0 - span).abs() < 1e-9);
+        // The paper's example: 6 levels, 12-entry table, Δx ≈ 0.218.
+        // (Exact value depends on the boundary convention; same order.)
+        assert!(plan.dx > 0.05 && plan.dx < 0.5, "dx={}", plan.dx);
+    }
+
+    #[test]
+    fn binary_activation_degenerate_span_ok() {
+        let act = QuantAct::tanh_d(2);
+        let plan = FixedPointPlan::build(&act, 8, 1.0, 1.0, 32);
+        assert!(plan.dx > 0.0);
+        assert!(plan.overflow.fits_i64);
+    }
+
+    #[test]
+    fn property_overflow_bound_is_sound() {
+        use crate::util::prop::check;
+        check("declared accumulator bound dominates any real sum", 64, |g| {
+            let levels = *g.choice(&[2usize, 8, 32]);
+            let act = QuantAct::tanh_d(levels);
+            let max_w = g.f64_in(0.1, 5.0);
+            let fan_in = g.usize_in(1, 2048);
+            let plan = FixedPointPlan::build(&act, 64, max_w, 1.0, fan_in);
+            // Worst-case sum of fan_in+1 max-magnitude entries.
+            let worst = plan.overflow.max_entry as i128 * (fan_in as i128 + 1);
+            assert!(worst <= plan.overflow.max_accum);
+        });
+    }
+}

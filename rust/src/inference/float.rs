@@ -1,0 +1,73 @@
+//! Float reference engine — the baseline the LUT engine is verified
+//! against and benchmarked against ("as fast as or faster than the
+//! baseline due to the relative speed of lookups versus multiplies", §4).
+
+use crate::fixedpoint::UniformQuant;
+use crate::nn::Network;
+use crate::tensor::Tensor;
+
+/// Thin inference wrapper around a trained [`Network`].
+///
+/// Note: if the network spec uses quantized activations, its `forward`
+/// already quantizes — this wrapper adds optional *input* quantization so
+/// the float path simulates exactly what the integer engine computes
+/// (weights = centroids, activations = levels, inputs = levels), with
+/// float arithmetic in between. The difference between this engine and
+/// [`super::lut::LutNetwork`] is therefore pure fixed-point rounding.
+pub struct FloatEngine {
+    pub net: Network,
+    pub input_quant: Option<UniformQuant>,
+}
+
+impl FloatEngine {
+    pub fn new(net: Network) -> Self {
+        Self {
+            net,
+            input_quant: None,
+        }
+    }
+
+    pub fn with_input_quant(net: Network, q: UniformQuant) -> Self {
+        Self {
+            net,
+            input_quant: Some(q),
+        }
+    }
+
+    /// Forward pass (inference mode: no dropout).
+    pub fn forward(&mut self, x: &Tensor) -> Tensor {
+        match &self.input_quant {
+            Some(q) => {
+                let xq = x.map(|v| q.quantize(v));
+                self.net.forward(&xq, false)
+            }
+            None => self.net.forward(x, false),
+        }
+    }
+
+    /// Predicted classes.
+    pub fn classify(&mut self, x: &Tensor) -> Vec<usize> {
+        self.forward(x).argmax_rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{ActSpec, NetSpec, Network};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn input_quantization_changes_little_for_many_levels() {
+        let spec = NetSpec::mlp("t", 8, &[16], 4, ActSpec::tanh());
+        let mut rng = Xoshiro256::new(1);
+        let net1 = Network::from_spec(&spec, &mut rng);
+        let mut rng2 = Xoshiro256::new(1);
+        let net2 = Network::from_spec(&spec, &mut rng2);
+        let x = Tensor::rand_uniform(&[4, 8], 0.0, 1.0, &mut rng);
+        let mut plain = FloatEngine::new(net1);
+        let mut quant = FloatEngine::with_input_quant(net2, UniformQuant::unit(256));
+        let d = plain.forward(&x).mse(&quant.forward(&x));
+        assert!(d < 1e-4, "mse {d}");
+    }
+}

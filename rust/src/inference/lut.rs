@@ -1,0 +1,687 @@
+//! The multiplication-free, floating-point-free inference engine
+//! (paper §4, Figures 8 and 9).
+//!
+//! A trained, weight-clustered, activation-quantized [`Network`] compiles
+//! into a [`LutNetwork`]: weights become u32 indices into a codebook,
+//! activations become u16 level indices, and the forward pass is nothing
+//! but table lookups, integer additions, and bit shifts:
+//!
+//! ```text
+//!   acc  = Σ_i  mul_table[act_idx_i][w_idx_i]  + mul_table[BIAS][b_idx]
+//!   next = act_table[(acc >> s) − offset]          (level index)
+//! ```
+//!
+//! No multiply, no float, no tanh. The final layer emits raw fixed-point
+//! sums: classification takes an integer argmax; regression reads the
+//! quantized output level (a stored value, not a computation).
+
+use crate::fixedpoint::{bias_row, zero_row, ActTable, FixedPointPlan, MulTable, UniformQuant};
+use crate::nn::{ActSpec, LayerSpec, NetSpec, Network};
+use crate::quant::{Codebook, QuantAct};
+use crate::tensor::{Conv2dSpec, Tensor};
+use anyhow::{bail, Context, Result};
+
+/// Weight codebooks for compilation: one global book (the paper's
+/// default) or one per parameterized layer (§5 future work 1).
+#[derive(Clone, Debug)]
+pub enum CodebookSet {
+    Global(Codebook),
+    PerLayer(Vec<Codebook>),
+}
+
+impl CodebookSet {
+    fn book_for(&self, layer_idx: usize) -> &Codebook {
+        match self {
+            CodebookSet::Global(cb) => cb,
+            CodebookSet::PerLayer(cbs) => &cbs[layer_idx],
+        }
+    }
+    pub fn max_abs(&self) -> f32 {
+        match self {
+            CodebookSet::Global(cb) => cb.max_abs(),
+            CodebookSet::PerLayer(cbs) => cbs.iter().map(|c| c.max_abs()).fold(0.0, f32::max),
+        }
+    }
+    pub fn count(&self) -> usize {
+        match self {
+            CodebookSet::Global(_) => 1,
+            CodebookSet::PerLayer(cbs) => cbs.len(),
+        }
+    }
+}
+
+/// One compiled layer.
+enum LutLayer {
+    Dense {
+        in_dim: usize,
+        out_dim: usize,
+        /// Row-major [in_dim × out_dim] codebook indices.
+        w_idx: Vec<u32>,
+        b_idx: Vec<u32>,
+        /// Which multiplication table the *incoming* values index.
+        table: usize,
+        /// Activation table producing the next layer's level indices;
+        /// None = final layer (emit raw sums).
+        act: Option<usize>,
+    },
+    Conv {
+        spec: Conv2dSpec,
+        /// [fan_in × out_c] codebook indices (im2col layout).
+        w_idx: Vec<u32>,
+        b_idx: Vec<u32>,
+        table: usize,
+        act: Option<usize>,
+    },
+    MaxPool {
+        k: usize,
+        stride: usize,
+    },
+    Flatten,
+}
+
+/// The compiled integer network.
+pub struct LutNetwork {
+    pub plan: FixedPointPlan,
+    /// Input quantizer (pixels → level indices).
+    pub input_quant: UniformQuant,
+    /// Hidden activation quantizer (for reporting / output levels).
+    pub act: QuantAct,
+    tables: Vec<MulTable>,
+    act_tables: Vec<ActTable>,
+    layers: Vec<LutLayer>,
+    /// Spatial shape tracking for conv nets: input [H, W, C] or [F].
+    input_shape: Vec<usize>,
+    out_dim: usize,
+}
+
+/// Result of an integer forward pass: raw fixed-point sums of the final
+/// layer, shape [batch, out_dim].
+pub struct LutOutput {
+    pub sums: Vec<i64>,
+    pub batch: usize,
+    pub out_dim: usize,
+    /// Scale to convert sums back to real units (only used at the
+    /// reporting boundary, never inside inference).
+    pub inv_scale: f64,
+}
+
+impl LutOutput {
+    /// Integer argmax per row — classification without ever leaving
+    /// fixed point.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.batch)
+            .map(|i| {
+                let row = &self.sums[i * self.out_dim..(i + 1) * self.out_dim];
+                row.iter()
+                    .enumerate()
+                    .max_by_key(|(_, &v)| v)
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Convert to float logits (reporting/verification only).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::from_vec(
+            &[self.batch, self.out_dim],
+            self.sums
+                .iter()
+                .map(|&s| (s as f64 * self.inv_scale) as f32)
+                .collect(),
+        )
+    }
+}
+
+/// Compilation options.
+#[derive(Clone, Debug)]
+pub struct CompileCfg {
+    /// Input value range (pixels default to [0, 1]).
+    pub input_range: (f32, f32),
+    /// Input quantization levels; None = reuse the activation level
+    /// count (the paper's "quantized inputs" setting).
+    pub input_levels: Option<usize>,
+    /// Target activation-table length (longer = finer Δx).
+    pub act_table_len: usize,
+}
+
+impl Default for CompileCfg {
+    fn default() -> Self {
+        Self {
+            input_range: (0.0, 1.0),
+            input_levels: None,
+            act_table_len: 256,
+        }
+    }
+}
+
+impl LutNetwork {
+    /// Compile a trained network whose weights already live on the
+    /// codebook centers (i.e. after the final clustering step).
+    pub fn compile(net: &Network, books: &CodebookSet, cfg: &CompileCfg) -> Result<LutNetwork> {
+        let spec = &net.spec;
+        let act = hidden_activation(spec)?;
+        let input_quant = UniformQuant::new(
+            cfg.input_range.0,
+            cfg.input_range.1,
+            cfg.input_levels.unwrap_or(act.levels),
+        );
+
+        // ---- fixed-point plan over the whole network ----
+        let max_fan_in = max_fan_in(spec)?;
+        let max_abs_a = act
+            .outputs()
+            .iter()
+            .chain(input_quant.values().iter())
+            .fold(1.0f32, |m, &v| m.max(v.abs())) as f64;
+        let plan = FixedPointPlan::build(
+            &act,
+            cfg.act_table_len,
+            books.max_abs() as f64,
+            max_abs_a,
+            max_fan_in,
+        );
+        if !plan.overflow.fits_i64 {
+            bail!("fixed-point plan cannot guarantee i64 accumulators");
+        }
+
+        // ---- tables ----
+        // For each codebook we may need an input-domain and an
+        // activation-domain table; build lazily and cache by
+        // (book, domain).
+        let mut tables: Vec<MulTable> = Vec::new();
+        let mut table_key: Vec<(usize, bool)> = Vec::new(); // (book idx, is_input)
+        let get_table = |book_idx: usize,
+                             is_input: bool,
+                             books: &CodebookSet,
+                             tables: &mut Vec<MulTable>,
+                             table_key: &mut Vec<(usize, bool)>|
+         -> usize {
+            let book_idx = match books {
+                CodebookSet::Global(_) => 0,
+                CodebookSet::PerLayer(_) => book_idx,
+            };
+            if let Some(pos) = table_key.iter().position(|&k| k == (book_idx, is_input)) {
+                return pos;
+            }
+            let values = if is_input {
+                input_quant.values()
+            } else {
+                act.outputs().to_vec()
+            };
+            tables.push(MulTable::build(&values, books.book_for(book_idx), &plan));
+            table_key.push((book_idx, is_input));
+            tables.len() - 1
+        };
+
+        let act_table = ActTable::build(&act, &plan);
+        let act_tables = vec![act_table];
+
+        // ---- walk the spec, pairing param layers with activations ----
+        let params = net.params();
+        let mut layers: Vec<LutLayer> = Vec::new();
+        let mut param_idx = 0usize; // index into params (w, b pairs)
+        let mut layer_book = 0usize; // parameterized-layer counter
+        let mut shape = spec.input_shape.clone();
+        let mut is_input_domain = true;
+
+        let specs = &spec.layers;
+        let mut i = 0;
+        while i < specs.len() {
+            match &specs[i] {
+                LayerSpec::Dense { units } => {
+                    let book = books.book_for(layer_book);
+                    let w = &params[param_idx].value;
+                    let b = &params[param_idx + 1].value;
+                    anyhow::ensure!(shape.len() == 1, "Dense on non-flat shape {shape:?}");
+                    let in_dim = shape[0];
+                    // Next quantized activation (skipping dropout) decides
+                    // whether this layer has an activation table.
+                    let has_act = next_is_quantized_act(specs, i + 1);
+                    let tbl =
+                        get_table(layer_book, is_input_domain, books, &mut tables, &mut table_key);
+                    layers.push(LutLayer::Dense {
+                        in_dim,
+                        out_dim: *units,
+                        w_idx: book.assign_slice(w.data()),
+                        b_idx: book.assign_slice(b.data()),
+                        table: tbl,
+                        act: if has_act { Some(0) } else { None },
+                    });
+                    check_exact_assignment(w.data(), book, &params[param_idx].name)?;
+                    shape = vec![*units];
+                    param_idx += 2;
+                    layer_book += 1;
+                    is_input_domain = false;
+                }
+                LayerSpec::Conv { k, out_c, stride, pad } => {
+                    anyhow::ensure!(shape.len() == 3, "Conv on shape {shape:?}");
+                    let cs = Conv2dSpec {
+                        in_h: shape[0],
+                        in_w: shape[1],
+                        in_c: shape[2],
+                        k_h: *k,
+                        k_w: *k,
+                        out_c: *out_c,
+                        stride: *stride,
+                        pad: *pad,
+                    };
+                    let book = books.book_for(layer_book);
+                    let w = &params[param_idx].value;
+                    let b = &params[param_idx + 1].value;
+                    let has_act = next_is_quantized_act(specs, i + 1);
+                    let tbl =
+                        get_table(layer_book, is_input_domain, books, &mut tables, &mut table_key);
+                    layers.push(LutLayer::Conv {
+                        spec: cs,
+                        w_idx: book.assign_slice(w.data()),
+                        b_idx: book.assign_slice(b.data()),
+                        table: tbl,
+                        act: if has_act { Some(0) } else { None },
+                    });
+                    check_exact_assignment(w.data(), book, &params[param_idx].name)?;
+                    shape = vec![cs.out_h(), cs.out_w(), cs.out_c];
+                    param_idx += 2;
+                    layer_book += 1;
+                    is_input_domain = false;
+                }
+                LayerSpec::Act(a) => {
+                    // Validated in hidden_activation(); consumed by the
+                    // preceding param layer. Final-layer Linear is a no-op.
+                    anyhow::ensure!(
+                        a.levels.is_some() || a.kind == "linear",
+                        "continuous activation {a:?} cannot compile to LUT"
+                    );
+                }
+                LayerSpec::MaxPool { k, stride } => {
+                    anyhow::ensure!(shape.len() == 3, "MaxPool on shape {shape:?}");
+                    layers.push(LutLayer::MaxPool { k: *k, stride: *stride });
+                    shape = vec![
+                        (shape[0] - k) / stride + 1,
+                        (shape[1] - k) / stride + 1,
+                        shape[2],
+                    ];
+                }
+                LayerSpec::AvgPool { .. } => {
+                    bail!("AvgPool needs division — not representable in the LUT engine")
+                }
+                LayerSpec::Dropout { .. } => {} // identity at inference
+                LayerSpec::Flatten => {
+                    layers.push(LutLayer::Flatten);
+                    shape = vec![shape.iter().product()];
+                }
+            }
+            i += 1;
+        }
+
+        anyhow::ensure!(shape.len() == 1, "network must end flat, got {shape:?}");
+        Ok(LutNetwork {
+            plan,
+            input_quant,
+            act,
+            tables,
+            act_tables,
+            layers,
+            input_shape: spec.input_shape.clone(),
+            out_dim: shape[0],
+        })
+    }
+
+    /// Quantize raw float inputs to input level indices.
+    pub fn quantize_input(&self, x: &Tensor) -> Vec<u16> {
+        self.input_quant.quantize_to_indices(x.data())
+    }
+
+    /// Integer-only forward pass over a batch of pre-quantized inputs.
+    /// `idx` has batch·prod(input_shape) entries.
+    pub fn forward_indices(&self, idx: &[u16], batch: usize) -> LutOutput {
+        let feat: usize = self.input_shape.iter().product();
+        assert_eq!(idx.len(), batch * feat, "input index count mismatch");
+
+        // Current representation: level indices (u16) + logical shape.
+        let mut cur: Vec<u16> = idx.to_vec();
+        let mut shape: Vec<usize> = self.input_shape.clone();
+        let mut final_sums: Option<Vec<i64>> = None;
+
+        for layer in &self.layers {
+            match layer {
+                LutLayer::Dense {
+                    in_dim,
+                    out_dim,
+                    w_idx,
+                    b_idx,
+                    table,
+                    act,
+                } => {
+                    let t = &self.tables[*table];
+                    let mut sums = vec![0i64; batch * out_dim];
+                    let brow = t.row(bias_row(t.a_levels));
+                    if self.plan.overflow.fits_i32 {
+                        // Fast path (§Perf): the plan PROVED i32
+                        // accumulators cannot overflow, so the inner loop
+                        // runs 8-wide via AVX2 vpgatherdd + vpaddd.
+                        let mut acc = vec![0i32; *out_dim];
+                        for bi in 0..batch {
+                            let arow = &cur[bi * in_dim..(bi + 1) * in_dim];
+                            for (o, bidx) in b_idx.iter().enumerate() {
+                                acc[o] = brow[*bidx as usize];
+                            }
+                            for (ii, &aidx) in arow.iter().enumerate() {
+                                super::simd::gather_acc(
+                                    &mut acc,
+                                    t.row(aidx as usize),
+                                    &w_idx[ii * out_dim..(ii + 1) * out_dim],
+                                );
+                            }
+                            let orow = &mut sums[bi * out_dim..(bi + 1) * out_dim];
+                            for (o, &v) in acc.iter().enumerate() {
+                                orow[o] = v as i64;
+                            }
+                        }
+                    } else {
+                        for bi in 0..batch {
+                            let arow = &cur[bi * in_dim..(bi + 1) * in_dim];
+                            let orow = &mut sums[bi * out_dim..(bi + 1) * out_dim];
+                            // Bias first (the bias unit's table row, Fig 8).
+                            for (o, bidx) in b_idx.iter().enumerate() {
+                                orow[o] = brow[*bidx as usize] as i64;
+                            }
+                            // Gather-accumulate: the §4 inner loop.
+                            for (ii, &aidx) in arow.iter().enumerate() {
+                                let trow = t.row(aidx as usize);
+                                let wrow = &w_idx[ii * out_dim..(ii + 1) * out_dim];
+                                for (o, &wi) in wrow.iter().enumerate() {
+                                    orow[o] += trow[wi as usize] as i64;
+                                }
+                            }
+                        }
+                    }
+                    match act {
+                        Some(ai) => {
+                            let at = &self.act_tables[*ai];
+                            cur = sums.iter().map(|&s| at.lookup(s)).collect();
+                            shape = vec![*out_dim];
+                        }
+                        None => {
+                            final_sums = Some(sums);
+                            shape = vec![*out_dim];
+                        }
+                    }
+                }
+                LutLayer::Conv {
+                    spec,
+                    w_idx,
+                    b_idx,
+                    table,
+                    act,
+                } => {
+                    let t = &self.tables[*table];
+                    let (oh, ow, oc) = (spec.out_h(), spec.out_w(), spec.out_c);
+                    let fan = spec.fan_in();
+                    let mut sums = vec![0i64; batch * oh * ow * oc];
+                    let brow = t.row(bias_row(t.a_levels));
+                    let pad_idx = zero_row(t.a_levels) as u16;
+                    let row_stride = spec.in_w * spec.in_c;
+                    let img_stride = spec.in_h * row_stride;
+                    // Patch gather (integer im2col) fused with the LUT
+                    // accumulation.
+                    let mut patch: Vec<u16> = vec![pad_idx; fan];
+                    let mut acc_vec = vec![0i32; oc];
+                    for bi in 0..batch {
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                // Collect the patch's activation indices.
+                                patch.iter_mut().for_each(|p| *p = pad_idx);
+                                let iy0 = (oy * spec.stride) as isize - spec.pad as isize;
+                                let ix0 = (ox * spec.stride) as isize - spec.pad as isize;
+                                for ky in 0..spec.k_h {
+                                    let iy = iy0 + ky as isize;
+                                    if iy < 0 || iy >= spec.in_h as isize {
+                                        continue;
+                                    }
+                                    for kx in 0..spec.k_w {
+                                        let ix = ix0 + kx as isize;
+                                        if ix < 0 || ix >= spec.in_w as isize {
+                                            continue;
+                                        }
+                                        let src = bi * img_stride
+                                            + iy as usize * row_stride
+                                            + ix as usize * spec.in_c;
+                                        let dst = (ky * spec.k_w + kx) * spec.in_c;
+                                        patch[dst..dst + spec.in_c]
+                                            .copy_from_slice(&cur[src..src + spec.in_c]);
+                                    }
+                                }
+                                let out_off = ((bi * oh + oy) * ow + ox) * oc;
+                                let orow = &mut sums[out_off..out_off + oc];
+                                if self.plan.overflow.fits_i32 {
+                                    // SIMD fast path (see Dense arm).
+                                    let acc = &mut acc_vec[..];
+                                    for (o, bidx) in b_idx.iter().enumerate() {
+                                        acc[o] = brow[*bidx as usize];
+                                    }
+                                    for (pi, &aidx) in patch.iter().enumerate() {
+                                        super::simd::gather_acc(
+                                            acc,
+                                            t.row(aidx as usize),
+                                            &w_idx[pi * oc..(pi + 1) * oc],
+                                        );
+                                    }
+                                    for (o, &v) in acc.iter().enumerate() {
+                                        orow[o] = v as i64;
+                                    }
+                                    continue;
+                                }
+                                for (o, bidx) in b_idx.iter().enumerate() {
+                                    orow[o] = brow[*bidx as usize] as i64;
+                                }
+                                for (pi, &aidx) in patch.iter().enumerate() {
+                                    let trow = t.row(aidx as usize);
+                                    let wrow = &w_idx[pi * oc..(pi + 1) * oc];
+                                    for (o, &wi) in wrow.iter().enumerate() {
+                                        orow[o] += trow[wi as usize] as i64;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    match act {
+                        Some(ai) => {
+                            let at = &self.act_tables[*ai];
+                            cur = sums.iter().map(|&s| at.lookup(s)).collect();
+                            shape = vec![oh, ow, oc];
+                        }
+                        None => {
+                            final_sums = Some(sums);
+                            shape = vec![oh * ow * oc];
+                        }
+                    }
+                }
+                LutLayer::MaxPool { k, stride } => {
+                    // Level indices are order-isomorphic to level values,
+                    // so max-pooling indices == max-pooling values.
+                    let (h, w, c) = (shape[0], shape[1], shape[2]);
+                    let oh = (h - k) / stride + 1;
+                    let ow = (w - k) / stride + 1;
+                    let mut out = vec![0u16; batch * oh * ow * c];
+                    let mut oidx = 0;
+                    for bi in 0..batch {
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                for ci in 0..c {
+                                    let mut best = 0u16;
+                                    for ky in 0..*k {
+                                        for kx in 0..*k {
+                                            let iy = oy * stride + ky;
+                                            let ix = ox * stride + kx;
+                                            let v = cur[((bi * h + iy) * w + ix) * c + ci];
+                                            best = best.max(v);
+                                        }
+                                    }
+                                    out[oidx] = best;
+                                    oidx += 1;
+                                }
+                            }
+                        }
+                    }
+                    cur = out;
+                    shape = vec![oh, ow, c];
+                }
+                LutLayer::Flatten => {
+                    shape = vec![shape.iter().product()];
+                }
+            }
+        }
+
+        let sums = final_sums.expect("network had no final linear layer");
+        LutOutput {
+            batch,
+            out_dim: self.out_dim,
+            inv_scale: 1.0 / self.plan.scale(),
+            sums,
+        }
+    }
+
+    /// Convenience: quantize floats + integer forward.
+    pub fn forward(&self, x: &Tensor) -> LutOutput {
+        let batch = x.dim(0);
+        let idx = self.quantize_input(x);
+        self.forward_indices(&idx, batch)
+    }
+
+    /// Quantized output values (regression): map final sums through the
+    /// activation table and read the stored level value — "the activation
+    /// output is also stored and not computed" (§4).
+    pub fn forward_quantized_values(&self, x: &Tensor) -> Tensor {
+        let out = self.forward(x);
+        let at = &self.act_tables[0];
+        Tensor::from_vec(
+            &[out.batch, out.out_dim],
+            out.sums
+                .iter()
+                .map(|&s| self.act.value(at.lookup(s) as usize))
+                .collect(),
+        )
+    }
+
+    /// Total bytes of all multiplication tables (§4 memory accounting).
+    pub fn table_bytes(&self) -> usize {
+        self.tables.iter().map(|t| t.bytes()).sum::<usize>()
+            + self.act_tables.iter().map(|t| t.bytes()).sum::<usize>()
+    }
+
+    /// Number of weight indices stored (== network weight count).
+    pub fn index_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                LutLayer::Dense { w_idx, b_idx, .. } | LutLayer::Conv { w_idx, b_idx, .. } => {
+                    w_idx.len() + b_idx.len()
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// All weight indices concatenated (for entropy coding, §4).
+    pub fn all_indices(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.index_count());
+        for l in &self.layers {
+            if let LutLayer::Dense { w_idx, b_idx, .. } | LutLayer::Conv { w_idx, b_idx, .. } = l {
+                out.extend_from_slice(w_idx);
+                out.extend_from_slice(b_idx);
+            }
+        }
+        out
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+}
+
+/// Extract and validate the single hidden activation quantizer.
+fn hidden_activation(spec: &NetSpec) -> Result<QuantAct> {
+    let mut found: Option<ActSpec> = None;
+    for ls in &spec.layers {
+        if let LayerSpec::Act(a) = ls {
+            if a.kind == "linear" {
+                continue;
+            }
+            let _lv = a
+                .levels
+                .with_context(|| format!("activation {a:?} is continuous; LUT needs quantized"))?;
+            match &found {
+                None => found = Some(a.clone()),
+                Some(prev) => anyhow::ensure!(
+                    prev == a,
+                    "LUT engine needs a single activation spec, got {prev:?} and {a:?}"
+                ),
+            }
+        }
+    }
+    let a = found.context("no quantized activation found in spec")?;
+    match a.to_activation() {
+        crate::nn::Activation::Quantized(q) => Ok(q),
+        _ => unreachable!(),
+    }
+}
+
+/// Largest fan-in of any parameterized layer.
+fn max_fan_in(spec: &NetSpec) -> Result<usize> {
+    let mut shape = spec.input_shape.clone();
+    let mut max_fan = 0usize;
+    for ls in &spec.layers {
+        match ls {
+            LayerSpec::Dense { units } => {
+                max_fan = max_fan.max(shape[0]);
+                shape = vec![*units];
+            }
+            LayerSpec::Conv { k, out_c, stride, pad } => {
+                let fan = k * k * shape[2];
+                max_fan = max_fan.max(fan);
+                let oh = (shape[0] + 2 * pad - k) / stride + 1;
+                let ow = (shape[1] + 2 * pad - k) / stride + 1;
+                shape = vec![oh, ow, *out_c];
+            }
+            LayerSpec::MaxPool { k, stride } | LayerSpec::AvgPool { k, stride } => {
+                shape = vec![
+                    (shape[0] - k) / stride + 1,
+                    (shape[1] - k) / stride + 1,
+                    shape[2],
+                ];
+            }
+            LayerSpec::Flatten => shape = vec![shape.iter().product()],
+            _ => {}
+        }
+    }
+    Ok(max_fan)
+}
+
+/// Is the next non-dropout layer a quantized activation?
+fn next_is_quantized_act(specs: &[LayerSpec], mut i: usize) -> bool {
+    while i < specs.len() {
+        match &specs[i] {
+            LayerSpec::Dropout { .. } => i += 1,
+            LayerSpec::Act(a) => return a.levels.is_some(),
+            _ => return false,
+        }
+    }
+    false
+}
+
+/// Compilation sanity check: weights must already sit (near-)exactly on
+/// codebook centers — compiling an unclustered network silently changes
+/// it, so we refuse.
+fn check_exact_assignment(w: &[f32], book: &Codebook, name: &str) -> Result<()> {
+    let mut worst = 0.0f32;
+    for &v in w {
+        worst = worst.max((v - book.quantize(v)).abs());
+    }
+    anyhow::ensure!(
+        worst < 1e-5,
+        "layer {name}: weights are {worst} away from codebook centers — \
+         run the clustering step before compiling"
+    );
+    Ok(())
+}

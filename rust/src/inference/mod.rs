@@ -1,0 +1,11 @@
+//! Inference engines: the paper's pure-integer LUT engine (§4) and the
+//! float reference engine, plus cross-verification.
+
+pub mod float;
+pub mod lut;
+pub mod simd;
+pub mod verify;
+
+pub use float::FloatEngine;
+pub use lut::{CodebookSet, CompileCfg, LutNetwork, LutOutput};
+pub use verify::{verify, VerifyReport};

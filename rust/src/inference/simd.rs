@@ -1,0 +1,193 @@
+//! SIMD gather-accumulate kernels for the LUT engine hot loop
+//! (EXPERIMENTS.md §Perf).
+//!
+//! The §4 inner loop is `acc[o] += table_row[w_idx[o]]` — a gather plus
+//! an integer add. On x86-64 with AVX2 this is exactly `vpgatherdd` +
+//! `vpaddd`, 8 lanes at a time. The fast path requires the fixed-point
+//! plan to have *proven* that accumulators fit i32
+//! (`OverflowAnalysis::fits_i32`); otherwise the engine stays on the
+//! scalar i64 path.
+
+/// Is the AVX2 fast path available at runtime?
+#[inline]
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::OnceLock;
+        static AVX2: OnceLock<bool> = OnceLock::new();
+        *AVX2.get_or_init(|| std::is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Is the AVX-512F fast path available at runtime?
+#[inline]
+pub fn avx512_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::OnceLock;
+        static AVX512: OnceLock<bool> = OnceLock::new();
+        *AVX512.get_or_init(|| std::is_x86_feature_detected!("avx512f"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// acc[o] += trow[wrow[o]] for all o. Scalar version (any platform,
+/// i32 accumulators).
+#[inline]
+pub fn gather_acc_scalar(acc: &mut [i32], trow: &[i32], wrow: &[u32]) {
+    debug_assert_eq!(acc.len(), wrow.len());
+    // Unrolled by 4 to give the compiler independent dependency chains.
+    let n = acc.len();
+    let mut o = 0;
+    while o + 4 <= n {
+        // SAFETY: o+3 < n; w indices are codebook assignments < trow.len()
+        // by construction (Codebook::assign yields < centers.len()).
+        unsafe {
+            *acc.get_unchecked_mut(o) +=
+                *trow.get_unchecked(*wrow.get_unchecked(o) as usize);
+            *acc.get_unchecked_mut(o + 1) +=
+                *trow.get_unchecked(*wrow.get_unchecked(o + 1) as usize);
+            *acc.get_unchecked_mut(o + 2) +=
+                *trow.get_unchecked(*wrow.get_unchecked(o + 2) as usize);
+            *acc.get_unchecked_mut(o + 3) +=
+                *trow.get_unchecked(*wrow.get_unchecked(o + 3) as usize);
+        }
+        o += 4;
+    }
+    while o < n {
+        unsafe {
+            *acc.get_unchecked_mut(o) +=
+                *trow.get_unchecked(*wrow.get_unchecked(o) as usize);
+        }
+        o += 1;
+    }
+}
+
+/// acc[o] += trow[wrow[o]], AVX2 `vpgatherdd` 8 lanes at a time.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_acc_avx2_impl(acc: &mut [i32], trow: &[i32], wrow: &[u32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let base = trow.as_ptr();
+    let mut o = 0;
+    while o + 8 <= n {
+        // SAFETY: wrow entries are valid indices into trow (codebook
+        // assignments); loads are unaligned-safe (loadu/storeu).
+        let idx = _mm256_loadu_si256(wrow.as_ptr().add(o) as *const __m256i);
+        let vals = _mm256_i32gather_epi32::<4>(base, idx);
+        let a = _mm256_loadu_si256(acc.as_ptr().add(o) as *const __m256i);
+        let sum = _mm256_add_epi32(a, vals);
+        _mm256_storeu_si256(acc.as_mut_ptr().add(o) as *mut __m256i, sum);
+        o += 8;
+    }
+    if o < n {
+        gather_acc_scalar(&mut acc[o..], trow, &wrow[o..]);
+    }
+}
+
+/// acc[o] += trow[wrow[o]], AVX-512F `vpgatherdd` 16 lanes at a time.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn gather_acc_avx512_impl(acc: &mut [i32], trow: &[i32], wrow: &[u32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let mut o = 0;
+    while o + 16 <= n {
+        // SAFETY: wrow entries are valid indices into trow; unaligned
+        // loads/stores used throughout.
+        let idx = _mm512_loadu_si512(wrow.as_ptr().add(o) as *const _);
+        let vals = _mm512_i32gather_epi32::<4>(idx, trow.as_ptr());
+        let a = _mm512_loadu_si512(acc.as_ptr().add(o) as *const _);
+        let sum = _mm512_add_epi32(a, vals);
+        _mm512_storeu_si512(acc.as_mut_ptr().add(o) as *mut _, sum);
+        o += 16;
+    }
+    if o < n {
+        gather_acc_avx2_impl(&mut acc[o..], trow, &wrow[o..]);
+    }
+}
+
+/// Dispatching gather-accumulate: AVX-512F → AVX2 → scalar.
+#[inline]
+pub fn gather_acc(acc: &mut [i32], trow: &[i32], wrow: &[u32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if acc.len() >= 16 && avx512_available() && avx2_available() {
+            // SAFETY: feature checked at runtime; index validity as in
+            // the scalar path.
+            unsafe { gather_acc_avx512_impl(acc, trow, wrow) };
+            return;
+        }
+        if avx2_available() {
+            // SAFETY: as above.
+            unsafe { gather_acc_avx2_impl(acc, trow, wrow) };
+            return;
+        }
+    }
+    gather_acc_scalar(acc, trow, wrow);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn reference(acc: &mut [i32], trow: &[i32], wrow: &[u32]) {
+        for (a, &w) in acc.iter_mut().zip(wrow) {
+            *a += trow[w as usize];
+        }
+    }
+
+    #[test]
+    fn scalar_matches_reference() {
+        let mut rng = Xoshiro256::new(1);
+        for n in [0usize, 1, 3, 4, 7, 8, 33, 100] {
+            let trow: Vec<i32> = (0..64).map(|_| rng.next_u64() as i32 % 10000).collect();
+            let wrow: Vec<u32> = (0..n).map(|_| rng.below(64) as u32).collect();
+            let mut a = vec![7i32; n];
+            let mut b = vec![7i32; n];
+            gather_acc_scalar(&mut a, &trow, &wrow);
+            reference(&mut b, &trow, &wrow);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatch_matches_reference() {
+        let mut rng = Xoshiro256::new(2);
+        for n in [1usize, 8, 9, 16, 63, 257] {
+            let trow: Vec<i32> = (0..1000).map(|_| rng.next_u64() as i32 % 100000).collect();
+            let wrow: Vec<u32> = (0..n).map(|_| rng.below(1000) as u32).collect();
+            let mut a = vec![-3i32; n];
+            let mut b = vec![-3i32; n];
+            gather_acc(&mut a, &trow, &wrow);
+            reference(&mut b, &trow, &wrow);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn property_random_streams() {
+        use crate::util::prop::check;
+        check("simd gather == scalar reference", 64, |g| {
+            let w = g.usize_in(1, 512);
+            let n = g.usize_in(1, 300);
+            let rng = g.rng();
+            let trow: Vec<i32> = (0..w).map(|_| rng.next_u64() as i32).collect();
+            let wrow: Vec<u32> = (0..n).map(|_| rng.below(w) as u32).collect();
+            let mut a = vec![0i32; n];
+            let mut b = vec![0i32; n];
+            gather_acc(&mut a, &trow, &wrow);
+            reference(&mut b, &trow, &wrow);
+            assert_eq!(a, b);
+        });
+    }
+}

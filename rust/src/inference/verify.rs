@@ -1,0 +1,261 @@
+//! Cross-verification of the integer LUT engine against the float
+//! simulation — the correctness gate before deployment.
+
+use super::float::FloatEngine;
+use super::lut::LutNetwork;
+use crate::tensor::Tensor;
+
+/// Agreement report between the two engines on a batch.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub n: usize,
+    /// Fraction of rows where integer argmax == float argmax.
+    pub argmax_agree: f64,
+    /// Max |float_logit − descaled_integer_logit|.
+    pub max_logit_diff: f64,
+    /// Mean |...|.
+    pub mean_logit_diff: f64,
+}
+
+/// Run both engines on the same batch and compare.
+///
+/// The float engine must be built from the *same* clustered network and
+/// configured with the same input quantizer, so the only remaining
+/// discrepancy is fixed-point rounding (bounded by the plan's guard
+/// bits).
+pub fn verify(lut: &LutNetwork, float_engine: &mut FloatEngine, x: &Tensor) -> VerifyReport {
+    let fl = float_engine.forward(x);
+    let il = lut.forward(x).to_tensor();
+    assert_eq!(fl.shape(), il.shape());
+    let n = x.dim(0);
+
+    let fa = fl.argmax_rows();
+    let ia = il.argmax_rows();
+    let agree = fa.iter().zip(&ia).filter(|(a, b)| a == b).count();
+
+    let mut max_d = 0.0f64;
+    let mut sum_d = 0.0f64;
+    for (a, b) in fl.data().iter().zip(il.data()) {
+        let d = (*a as f64 - *b as f64).abs();
+        max_d = max_d.max(d);
+        sum_d += d;
+    }
+    VerifyReport {
+        n,
+        argmax_agree: agree as f64 / n as f64,
+        max_logit_diff: max_d,
+        mean_logit_diff: sum_d / fl.len() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixedpoint::UniformQuant;
+    use crate::inference::lut::{CodebookSet, CompileCfg};
+    use crate::nn::{ActSpec, LayerSpec, NetSpec, Network, SoftmaxCrossEntropy, Target};
+    use crate::quant::WeightScheme;
+    use crate::train::{ClusterCfg, TrainCfg, Trainer};
+    use crate::util::rng::Xoshiro256;
+
+    fn toy_batch(rng: &mut Xoshiro256) -> (Tensor, Target) {
+        // 3-class toy problem on 12 inputs in [0,1]: class = argmax of
+        // three fixed input groups.
+        let b = 24;
+        let mut x = Tensor::zeros(&[b, 12]);
+        let mut labels = Vec::new();
+        for i in 0..b {
+            let mut sums = [0.0f32; 3];
+            for j in 0..12 {
+                let v = rng.uniform_f32();
+                x.set2(i, j, v);
+                sums[j / 4] += v;
+            }
+            labels.push(
+                sums.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0,
+            );
+        }
+        (x, Target::Labels(labels))
+    }
+
+    /// Train a small quantized+clustered net and return it with its
+    /// codebook.
+    fn trained_net(seed: u64) -> (Network, crate::quant::Codebook) {
+        let spec = NetSpec::mlp("toy", 12, &[16, 16], 3, ActSpec::tanh_d(16));
+        let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(seed));
+        let cfg = TrainCfg {
+            seed,
+            ..TrainCfg::adam(0.01, 600)
+        }
+        .with_cluster(ClusterCfg {
+            every: 200,
+            scheme: WeightScheme::KMeans {
+                w: 64,
+                subsample: 1.0,
+            },
+            ..ClusterCfg::kmeans(64)
+        });
+        let mut tr = Trainer::new(cfg);
+        let r = tr.train(&mut net, &SoftmaxCrossEntropy, toy_batch);
+        (net, r.codebook.unwrap())
+    }
+
+    #[test]
+    fn integer_engine_matches_float_simulation() {
+        let (net, cb) = trained_net(11);
+        let cfg = CompileCfg::default();
+        let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb), &cfg).unwrap();
+        let mut fe = FloatEngine::with_input_quant(
+            net,
+            UniformQuant::unit(lut.input_quant.levels),
+        );
+        let mut rng = Xoshiro256::new(99);
+        let (x, _) = toy_batch(&mut rng);
+        let rep = verify(&lut, &mut fe, &x);
+        assert!(
+            rep.argmax_agree >= 0.95,
+            "argmax agreement {}",
+            rep.argmax_agree
+        );
+        // The engines legitimately differ where a pre-activation falls
+        // within Δx of a quantization boundary (the paper's boundary
+        // snapping) — a mismatch there shifts that unit by one level and
+        // can move a downstream logit by a few level-steps. What must
+        // hold: the *typical* discrepancy is far below one level step.
+        assert!(
+            rep.mean_logit_diff < 0.08,
+            "mean logit diff {}",
+            rep.mean_logit_diff
+        );
+        assert!(
+            rep.max_logit_diff < 1.5,
+            "max logit diff {}",
+            rep.max_logit_diff
+        );
+    }
+
+    #[test]
+    fn relu6_uniform_boundaries_match_exactly() {
+        // With ReLU6 the quantization boundaries are already uniform, so
+        // Δx snapping introduces NO boundary error and the only remaining
+        // difference is fixed-point rounding — bounded by the plan's
+        // guard-bit analysis, far below one output unit.
+        let mut rng = Xoshiro256::new(31);
+        let spec = NetSpec::mlp("toy", 12, &[16], 3, ActSpec::relu6_d(32));
+        let mut net = Network::from_spec(&spec, &mut rng);
+        let mut flat = net.flat_weights();
+        let cb = crate::quant::kmeans_1d(
+            &flat,
+            &crate::quant::KMeansCfg::with_k(64),
+            &mut rng,
+        );
+        cb.quantize_slice(&mut flat);
+        net.set_flat_weights(&flat);
+
+        // ReLU6(32) boundaries sit at odd multiples of step/2 where
+        // step = 6/31; the boundary span is 30·step. Choosing
+        // act_table_len = 60 gives Δx = step/2, putting every boundary
+        // exactly on a grid edge — zero snapping error.
+        let cfg = CompileCfg {
+            act_table_len: 60,
+            ..CompileCfg::default()
+        };
+        let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb), &cfg).unwrap();
+        let mut fe =
+            FloatEngine::with_input_quant(net, UniformQuant::unit(lut.input_quant.levels));
+        let (x, _) = toy_batch(&mut rng);
+        let rep = verify(&lut, &mut fe, &x);
+        assert_eq!(rep.argmax_agree, 1.0, "{rep:?}");
+        assert!(rep.max_logit_diff < 2e-2, "{rep:?}");
+    }
+
+    #[test]
+    fn refuses_unclustered_network() {
+        let spec = NetSpec::mlp("toy", 12, &[8], 3, ActSpec::tanh_d(16));
+        let net = Network::from_spec(&spec, &mut Xoshiro256::new(1));
+        // Codebook that the raw random weights do NOT sit on.
+        let cb = crate::quant::Codebook::new(vec![-1.0, 0.0, 1.0]);
+        let res = LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default());
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn refuses_continuous_activation() {
+        let spec = NetSpec::mlp("toy", 12, &[8], 3, ActSpec::tanh());
+        let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(1));
+        let mut flat = net.flat_weights();
+        let cb = crate::quant::Codebook::new(vec![-0.5, 0.0, 0.5]);
+        cb.quantize_slice(&mut flat);
+        net.set_flat_weights(&flat);
+        let res = LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default());
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn conv_pipeline_compiles_and_runs() {
+        let spec = NetSpec {
+            name: "convq".into(),
+            input_shape: vec![8, 8, 1],
+            layers: vec![
+                LayerSpec::Conv { k: 3, out_c: 4, stride: 1, pad: 1 },
+                LayerSpec::Act(ActSpec::tanh_d(8)),
+                LayerSpec::MaxPool { k: 2, stride: 2 },
+                LayerSpec::Conv { k: 3, out_c: 6, stride: 1, pad: 0 },
+                LayerSpec::Act(ActSpec::tanh_d(8)),
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 3 },
+            ],
+            init_sd: None,
+        };
+        let mut rng = Xoshiro256::new(7);
+        let mut net = Network::from_spec(&spec, &mut rng);
+        // Cluster weights so compile accepts the net.
+        let mut flat = net.flat_weights();
+        let cb = crate::quant::kmeans_1d(
+            &flat,
+            &crate::quant::KMeansCfg::with_k(32),
+            &mut rng,
+        );
+        cb.quantize_slice(&mut flat);
+        net.set_flat_weights(&flat);
+
+        let lut =
+            LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap();
+        let x = Tensor::rand_uniform(&[2, 8, 8, 1], 0.0, 1.0, &mut rng);
+        let out = lut.forward(&x);
+        assert_eq!(out.batch, 2);
+        assert_eq!(out.out_dim, 3);
+
+        // Against float simulation.
+        let mut fe =
+            FloatEngine::with_input_quant(net, UniformQuant::unit(lut.input_quant.levels));
+        let rep = verify(&lut, &mut fe, &x);
+        assert!(rep.max_logit_diff < 0.2, "{rep:?}");
+    }
+
+    #[test]
+    fn per_layer_codebooks_compile() {
+        let spec = NetSpec::mlp("toy", 12, &[8, 8], 3, ActSpec::tanh_d(16));
+        let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(21));
+        let mut ccfg = ClusterCfg::kmeans(16);
+        ccfg.granularity = crate::quant::Granularity::PerLayer;
+        let cbs = Trainer::cluster_now(&mut net, &ccfg, 0, &mut Xoshiro256::new(22));
+        assert_eq!(cbs.len(), 3);
+        let lut = LutNetwork::compile(
+            &net,
+            &CodebookSet::PerLayer(cbs),
+            &CompileCfg::default(),
+        )
+        .unwrap();
+        let mut rng = Xoshiro256::new(23);
+        let x = Tensor::rand_uniform(&[4, 12], 0.0, 1.0, &mut rng);
+        let out = lut.forward(&x);
+        assert_eq!(out.out_dim, 3);
+        // Per-layer mode stores one table pair per distinct layer book.
+        assert!(lut.table_bytes() > 0);
+    }
+}

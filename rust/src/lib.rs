@@ -1,0 +1,32 @@
+//! # qnn — multiplication-free, floating-point-free neural inference
+//!
+//! A production-grade reproduction of *“No Multiplication? No Floating
+//! Point? No Problem! Training Networks for Efficient Inference”*
+//! (Baluja, Marwood, Covell, Johnston — 2018).
+//!
+//! The library trains networks with quantized activations (§2.1) and a
+//! periodically clustered weight set (§2.2), then deploys them through a
+//! pure-integer lookup-table engine with no multiplications, no floating
+//! point, and no non-linearity evaluation (§4, Fig 8/9).
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * L1 — Pallas kernels (`python/compile/kernels/`), build-time only.
+//! * L2 — JAX model + AOT lowering to HLO text (`python/compile/`).
+//! * L3 — this crate: training coordinator, quantization, fixed-point
+//!   deployment, serving (router + dynamic batcher), PJRT runtime.
+//!
+//! See DESIGN.md for the full system inventory and the experiment index
+//! mapping every figure/table of the paper to a bench target.
+
+pub mod coordinator;
+pub mod data;
+pub mod entropy;
+pub mod fixedpoint;
+pub mod inference;
+pub mod nn;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

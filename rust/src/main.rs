@@ -1,0 +1,239 @@
+//! `qnn` — the command-line entry point for the library.
+//!
+//! Subcommands:
+//!   train      train a digits model (optionally with weight clustering)
+//!              and save it as .qnn
+//!   quantize   cluster an existing model's weights to |W| values
+//!   infer      classify digits with the integer LUT engine
+//!   report     print a model's §4 memory accounting
+//!   check      verify the AOT artifacts load and execute (PJRT smoke)
+
+use qnn::data::digits;
+use qnn::entropy::memory_report;
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{accuracy, ActSpec, NetSpec, Network, SoftmaxCrossEntropy, Target};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::runtime::{Manifest, Runtime};
+use qnn::train::{ClusterCfg, TrainCfg, Trainer};
+use qnn::util::cli::Cli;
+use qnn::util::rng::Xoshiro256;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    let code = match cmd {
+        "train" => cmd_train(rest),
+        "quantize" => cmd_quantize(rest),
+        "infer" => cmd_infer(rest),
+        "report" => cmd_report(rest),
+        "check" => cmd_check(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "qnn — multiplication-free, floating-point-free neural inference\n\n\
+         usage: qnn <subcommand> [flags]\n\n\
+         subcommands:\n\
+         \u{20}  train      train a digits classifier (--cluster-w for |W|)\n\
+         \u{20}  quantize   cluster a saved model's weights\n\
+         \u{20}  infer      evaluate a saved model with the integer engine\n\
+         \u{20}  report     §4 memory accounting for a saved model\n\
+         \u{20}  check      PJRT artifact smoke test\n\n\
+         Every subcommand accepts --help."
+    );
+}
+
+fn parse_or_exit(cli: &Cli, rest: &[String]) -> qnn::util::cli::Args {
+    match cli.parse(rest) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(rest: &[String]) -> i32 {
+    let cli = Cli::new("qnn train", "train a digits classifier")
+        .flag("steps", "1500", "training steps")
+        .flag("hidden", "64,64", "hidden layer sizes, comma separated")
+        .flag("levels", "32", "activation quantization levels (0 = continuous tanh)")
+        .flag("cluster-w", "0", "cluster weights to |W| values (0 = off)")
+        .flag("cluster-every", "250", "steps between clustering passes")
+        .flag("lr", "0.003", "learning rate (Adam)")
+        .flag("seed", "1", "rng seed")
+        .flag("out", "model.qnn", "output model path");
+    let a = parse_or_exit(&cli, rest);
+
+    let hidden: Vec<usize> = a
+        .get("hidden")
+        .split(',')
+        .map(|s| s.trim().parse().expect("bad --hidden"))
+        .collect();
+    let levels = a.get_usize("levels");
+    let act = if levels == 0 {
+        ActSpec::tanh()
+    } else {
+        ActSpec::tanh_d(levels)
+    };
+    let spec = NetSpec::mlp("digits", digits::FEATURES, &hidden, digits::CLASSES, act);
+    let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(a.get_u64("seed")));
+    println!("{}", net.summary());
+
+    let mut cfg = TrainCfg {
+        seed: a.get_u64("seed"),
+        log_every: (a.get_u64("steps") / 10).max(1),
+        ..TrainCfg::adam(a.get_f32("lr"), a.get_u64("steps"))
+    };
+    let w = a.get_usize("cluster-w");
+    if w > 0 {
+        cfg = cfg.with_cluster(ClusterCfg {
+            every: a.get_u64("cluster-every"),
+            ..ClusterCfg::kmeans(w)
+        });
+    }
+    let mut tr = Trainer::new(cfg);
+    let dcfg = digits::DigitsCfg::default();
+    let r = tr.train(&mut net, &SoftmaxCrossEntropy, |rng| {
+        let (x, l) = digits::batch(32, &dcfg, rng);
+        (x, Target::Labels(l))
+    });
+    let eval = digits::eval_set(500, 0xE7A1);
+    let acc = accuracy(&net.forward(&eval.x, false), &eval.labels);
+    println!("final loss {:.4}, eval accuracy {:.3}", r.final_loss, acc);
+    net.save(a.get("out")).expect("save model");
+    println!("saved {}", a.get("out"));
+    0
+}
+
+fn cmd_quantize(rest: &[String]) -> i32 {
+    let cli = Cli::new("qnn quantize", "cluster a saved model's weights")
+        .required("model", "input .qnn model")
+        .flag("w", "1000", "|W| — number of unique weights")
+        .flag("out", "model.quant.qnn", "output path");
+    let a = parse_or_exit(&cli, rest);
+    let mut net = Network::load(a.get("model")).expect("load model");
+    let mut flat = net.flat_weights();
+    let before = qnn::util::stats::unique_values(&flat, 0.0);
+    let cb = kmeans_1d(
+        &flat,
+        &KMeansCfg::with_k(a.get_usize("w")),
+        &mut Xoshiro256::new(0),
+    );
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    net.save(a.get("out")).expect("save");
+    println!(
+        "clustered {} → {} unique weights; saved {}",
+        before,
+        cb.len(),
+        a.get("out")
+    );
+    0
+}
+
+fn cmd_infer(rest: &[String]) -> i32 {
+    let cli = Cli::new("qnn infer", "evaluate a model with the integer LUT engine")
+        .required("model", "trained clustered .qnn model")
+        .flag("w", "1000", "|W| used at clustering time")
+        .flag("n", "500", "eval set size");
+    let a = parse_or_exit(&cli, rest);
+    let mut net = Network::load(a.get("model")).expect("load model");
+    let flat = net.flat_weights();
+    let cb = kmeans_1d(
+        &flat,
+        &KMeansCfg::with_k(a.get_usize("w")),
+        &mut Xoshiro256::new(0),
+    );
+    let lut = match LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("compile failed: {e:#}");
+            return 1;
+        }
+    };
+    let eval = digits::eval_set(a.get_usize("n"), 0xE7A1);
+    let int_logits = lut.forward(&eval.x).to_tensor();
+    let float_logits = net.forward(&eval.x, false);
+    println!(
+        "integer engine accuracy {:.3} | float path {:.3} | tables {} KB, s={}, Δx={:.4}",
+        accuracy(&int_logits, &eval.labels),
+        accuracy(&float_logits, &eval.labels),
+        lut.table_bytes() / 1024,
+        lut.plan.s,
+        lut.plan.dx
+    );
+    0
+}
+
+fn cmd_report(rest: &[String]) -> i32 {
+    let cli = Cli::new("qnn report", "§4 memory accounting for a saved model")
+        .required("model", "trained clustered .qnn model")
+        .flag("w", "1000", "|W| used at clustering time");
+    let a = parse_or_exit(&cli, rest);
+    let net = Network::load(a.get("model")).expect("load model");
+    let flat = net.flat_weights();
+    let cb = kmeans_1d(
+        &flat,
+        &KMeansCfg::with_k(a.get_usize("w")),
+        &mut Xoshiro256::new(0),
+    );
+    let lut =
+        match LutNetwork::compile(&net, &CodebookSet::Global(cb.clone()), &CompileCfg::default()) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("compile failed (is the model clustered?): {e:#}");
+                return 1;
+            }
+        };
+    let rep = memory_report(&lut.all_indices(), cb.len(), lut.table_bytes());
+    println!(
+        "weights {} | |W| {} | float {} B | packed+tables {} B ({:.1}% saving) | \
+         entropy {:.2} bits/w (download saving {:.1}%)",
+        rep.n_weights,
+        rep.codebook_size,
+        rep.float_bytes,
+        rep.packed_bytes + rep.table_bytes,
+        rep.deploy_saving() * 100.0,
+        rep.entropy_bits_per_weight,
+        rep.download_saving() * 100.0
+    );
+    0
+}
+
+fn cmd_check(rest: &[String]) -> i32 {
+    let cli = Cli::new("qnn check", "PJRT artifact smoke test")
+        .flag("artifacts", "artifacts", "artifacts directory");
+    let a = parse_or_exit(&cli, rest);
+    let manifest = match Manifest::load(a.get("artifacts")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e:#}");
+            return 1;
+        }
+    };
+    let rt = Runtime::cpu().expect("pjrt client");
+    println!("platform: {}", rt.platform());
+    for entry in &manifest.entries {
+        match rt.load(&manifest, &entry.name) {
+            Ok(_) => println!("  {:<12} OK ({} inputs)", entry.name, entry.inputs.len()),
+            Err(e) => {
+                println!("  {:<12} FAILED: {e:#}", entry.name);
+                return 1;
+            }
+        }
+    }
+    0
+}

@@ -1,0 +1,242 @@
+//! Activation layers: continuous (tanh, ReLU, ReLU6, sigmoid) and the
+//! paper's quantized variants (tanhD(L), relu6D(L), …).
+//!
+//! The quantized layer is the paper's §2.1 training trick in layer form:
+//! forward emits the quantized level; backward multiplies the incoming
+//! gradient by the *underlying* function's derivative at the cached
+//! pre-activation.
+
+use super::layer::Layer;
+use crate::quant::{ActKind, QuantAct};
+use crate::tensor::Tensor;
+
+/// Continuous or quantized activation.
+#[derive(Clone, Debug)]
+pub enum Activation {
+    /// The smooth function itself (baseline networks).
+    Continuous(ActKind),
+    /// ReLU (unbounded — cannot be quantized; baseline only).
+    Relu,
+    /// Quantized to L levels (the paper's fD(L)).
+    Quantized(QuantAct),
+    /// Identity (linear output units, e.g. regression heads).
+    Linear,
+}
+
+impl Activation {
+    pub fn tanh() -> Self {
+        Activation::Continuous(ActKind::Tanh)
+    }
+    pub fn relu() -> Self {
+        Activation::Relu
+    }
+    pub fn relu6() -> Self {
+        Activation::Continuous(ActKind::Relu6)
+    }
+    pub fn tanh_d(levels: usize) -> Self {
+        Activation::Quantized(QuantAct::tanh_d(levels))
+    }
+    pub fn relu6_d(levels: usize) -> Self {
+        Activation::Quantized(QuantAct::relu6_d(levels))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Activation::Continuous(k) => k.name().to_string(),
+            Activation::Relu => "relu".into(),
+            Activation::Quantized(q) => q.name(),
+            Activation::Linear => "linear".into(),
+        }
+    }
+
+    #[inline]
+    pub fn f(&self, x: f32) -> f32 {
+        match self {
+            Activation::Continuous(k) => k.f(x),
+            Activation::Relu => x.max(0.0),
+            Activation::Quantized(q) => q.forward(x),
+            Activation::Linear => x,
+        }
+    }
+
+    #[inline]
+    pub fn df(&self, x: f32) -> f32 {
+        match self {
+            Activation::Continuous(k) => k.df(x),
+            Activation::Relu => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            // Paper §2.1: ignore the quantization in the backward pass.
+            Activation::Quantized(q) => q.backward(x),
+            Activation::Linear => 1.0,
+        }
+    }
+
+    /// The quantizer, if this is a quantized activation.
+    pub fn quantizer(&self) -> Option<&QuantAct> {
+        match self {
+            Activation::Quantized(q) => Some(q),
+            _ => None,
+        }
+    }
+}
+
+/// Activation as a network layer.
+pub struct ActLayer {
+    pub act: Activation,
+    cache_x: Option<Tensor>,
+}
+
+impl ActLayer {
+    pub fn new(act: Activation) -> Self {
+        Self { act, cache_x: None }
+    }
+}
+
+impl Layer for ActLayer {
+    fn forward(&mut self, x: &Tensor, _train: bool) -> Tensor {
+        let y = x.map(|v| self.act.f(v));
+        self.cache_x = Some(x.clone());
+        y
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let x = self.cache_x.as_ref().expect("backward before forward");
+        grad_out.zip(x, |g, xv| g * self.act.df(xv))
+    }
+
+    fn describe(&self) -> String {
+        format!("Act({})", self.act.name())
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        in_shape.to_vec()
+    }
+}
+
+/// Dropout layer (used by the baseline AlexNet-S config; the paper shows
+/// weight clustering regularizes enough that dropout should be removed —
+/// Table 1 #8 vs #9).
+pub struct Dropout {
+    pub rate: f32,
+    mask: Option<Tensor>,
+    rng: crate::util::rng::Xoshiro256,
+}
+
+impl Dropout {
+    pub fn new(rate: f32, seed: u64) -> Self {
+        assert!((0.0..1.0).contains(&rate));
+        Self {
+            rate,
+            mask: None,
+            rng: crate::util::rng::Xoshiro256::new(seed),
+        }
+    }
+}
+
+impl Layer for Dropout {
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        if !train || self.rate == 0.0 {
+            self.mask = None;
+            return x.clone();
+        }
+        let keep = 1.0 - self.rate;
+        let scale = 1.0 / keep;
+        let mut mask = Tensor::zeros(x.shape());
+        for m in mask.data_mut() {
+            *m = if self.rng.bernoulli(keep as f64) {
+                scale
+            } else {
+                0.0
+            };
+        }
+        let y = x.mul(&mask);
+        self.mask = Some(mask);
+        y
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        match &self.mask {
+            Some(m) => grad_out.mul(m),
+            None => grad_out.clone(),
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("Dropout({})", self.rate)
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        in_shape.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::numeric_grad_check;
+
+    #[test]
+    fn continuous_tanh_gradcheck() {
+        numeric_grad_check(
+            Box::new(ActLayer::new(Activation::tanh())),
+            &[3, 5],
+            1e-3,
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn quantized_forward_is_quantized_backward_is_smooth() {
+        let mut l = ActLayer::new(ActLayer::new(Activation::tanh_d(4)).act.clone());
+        let x = Tensor::vec1(&[-3.0, -0.2, 0.2, 3.0]);
+        let y = l.forward(&x, true);
+        // Outputs restricted to the 4 levels.
+        let q = QuantAct::tanh_d(4);
+        for &v in y.data() {
+            assert!(q.outputs().iter().any(|&o| (o - v).abs() < 1e-6));
+        }
+        // Backward equals d tanh/dx regardless of quantization.
+        let g = l.backward(&Tensor::vec1(&[1.0, 1.0, 1.0, 1.0]));
+        for (i, &xv) in x.data().iter().enumerate() {
+            let t = xv.tanh();
+            assert!((g.data()[i] - (1.0 - t * t)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dropout_eval_is_identity() {
+        let mut d = Dropout::new(0.5, 1);
+        let x = Tensor::vec1(&[1.0, 2.0, 3.0]);
+        assert_eq!(d.forward(&x, false), x);
+    }
+
+    #[test]
+    fn dropout_train_preserves_mean() {
+        let mut d = Dropout::new(0.3, 2);
+        let x = Tensor::full(&[100, 100], 1.0);
+        let y = d.forward(&x, true);
+        let mean = y.sum() / y.len() as f64;
+        assert!((mean - 1.0).abs() < 0.02, "{mean}");
+        // Entries are either 0 or 1/keep.
+        for &v in y.data() {
+            assert!(v == 0.0 || (v - 1.0 / 0.7).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dropout_backward_uses_same_mask() {
+        let mut d = Dropout::new(0.5, 3);
+        let x = Tensor::full(&[1, 64], 1.0);
+        let y = d.forward(&x, true);
+        let g = d.backward(&Tensor::full(&[1, 64], 1.0));
+        // Gradient zero exactly where output was zero.
+        for (yv, gv) in y.data().iter().zip(g.data()) {
+            assert_eq!(*yv == 0.0, *gv == 0.0);
+        }
+    }
+}

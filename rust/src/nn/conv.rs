@@ -1,0 +1,307 @@
+//! Convolution and pooling layers (NHWC) built on the im2col substrate.
+
+use super::layer::{Layer, Param};
+use crate::tensor::{
+    avgpool, col2im, im2col, matmul, matmul_nt, matmul_tn, maxpool, maxpool_backward, sum_rows,
+    Conv2dSpec, Tensor,
+};
+use crate::util::rng::Xoshiro256;
+
+/// 2-D convolution: x [B,H,W,Cin] → y [B,OH,OW,Cout].
+/// Weights stored as a [KH·KW·Cin, Cout] matrix (im2col layout).
+pub struct Conv2d {
+    pub w: Param,
+    pub b: Param,
+    pub spec: Conv2dSpec,
+    cache_cols: Option<Tensor>,
+    cache_batch: usize,
+}
+
+impl Conv2d {
+    pub fn new(name: &str, spec: Conv2dSpec, init_sd: Option<f32>, rng: &mut Xoshiro256) -> Self {
+        let fan_in = spec.fan_in();
+        let sd = init_sd.unwrap_or(1.0 / (fan_in as f32).sqrt());
+        Self {
+            w: Param::new(
+                &format!("{name}/w"),
+                Tensor::randn(&[fan_in, spec.out_c], sd, rng),
+                false,
+            ),
+            b: Param::new(&format!("{name}/b"), Tensor::zeros(&[spec.out_c]), true),
+            spec,
+            cache_cols: None,
+            cache_batch: 0,
+        }
+    }
+}
+
+impl Layer for Conv2d {
+    fn forward(&mut self, x: &Tensor, _train: bool) -> Tensor {
+        let b = x.dim(0);
+        let cols = im2col(x, &self.spec);
+        let mut y = matmul(&cols, &self.w.value);
+        crate::tensor::add_bias(&mut y, &self.b.value);
+        self.cache_cols = Some(cols);
+        self.cache_batch = b;
+        y.reshape(&[b, self.spec.out_h(), self.spec.out_w(), self.spec.out_c])
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let cols = self.cache_cols.as_ref().expect("backward before forward");
+        let b = self.cache_batch;
+        let g2 = grad_out.reshape(&[
+            b * self.spec.out_h() * self.spec.out_w(),
+            self.spec.out_c,
+        ]);
+        self.w.grad = self.w.grad.add(&matmul_tn(cols, &g2));
+        self.b.grad = self.b.grad.add(&sum_rows(&g2));
+        let gcols = matmul_nt(&g2, &self.w.value);
+        col2im(&gcols, b, &self.spec)
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    fn params(&self) -> Vec<&Param> {
+        vec![&self.w, &self.b]
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "Conv2d({}x{}x{}→{}, s{}, p{})",
+            self.spec.k_h, self.spec.k_w, self.spec.in_c, self.spec.out_c, self.spec.stride,
+            self.spec.pad
+        )
+    }
+
+    fn out_shape(&self, _in: &[usize]) -> Vec<usize> {
+        vec![self.spec.out_h(), self.spec.out_w(), self.spec.out_c]
+    }
+}
+
+/// Max-pooling layer.
+pub struct MaxPool2d {
+    pub k: usize,
+    pub stride: usize,
+    cache_arg: Option<Vec<u32>>,
+    cache_in_shape: Vec<usize>,
+}
+
+impl MaxPool2d {
+    pub fn new(k: usize, stride: usize) -> Self {
+        Self {
+            k,
+            stride,
+            cache_arg: None,
+            cache_in_shape: Vec::new(),
+        }
+    }
+}
+
+impl Layer for MaxPool2d {
+    fn forward(&mut self, x: &Tensor, _train: bool) -> Tensor {
+        let (y, arg) = maxpool(x, self.k, self.stride);
+        self.cache_arg = Some(arg);
+        self.cache_in_shape = x.shape().to_vec();
+        y
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let arg = self.cache_arg.as_ref().expect("backward before forward");
+        maxpool_backward(grad_out, arg, &self.cache_in_shape)
+    }
+
+    fn describe(&self) -> String {
+        format!("MaxPool({}x{}, s{})", self.k, self.k, self.stride)
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        vec![
+            (in_shape[0] - self.k) / self.stride + 1,
+            (in_shape[1] - self.k) / self.stride + 1,
+            in_shape[2],
+        ]
+    }
+}
+
+/// Average-pooling layer (gradient spreads uniformly).
+pub struct AvgPool2d {
+    pub k: usize,
+    pub stride: usize,
+    cache_in_shape: Vec<usize>,
+}
+
+impl AvgPool2d {
+    pub fn new(k: usize, stride: usize) -> Self {
+        Self {
+            k,
+            stride,
+            cache_in_shape: Vec::new(),
+        }
+    }
+}
+
+impl Layer for AvgPool2d {
+    fn forward(&mut self, x: &Tensor, _train: bool) -> Tensor {
+        self.cache_in_shape = x.shape().to_vec();
+        avgpool(x, self.k, self.stride)
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let (b, h, w, c) = (
+            self.cache_in_shape[0],
+            self.cache_in_shape[1],
+            self.cache_in_shape[2],
+            self.cache_in_shape[3],
+        );
+        let oh = (h - self.k) / self.stride + 1;
+        let ow = (w - self.k) / self.stride + 1;
+        let norm = 1.0 / (self.k * self.k) as f32;
+        let mut gx = Tensor::zeros(&self.cache_in_shape);
+        let gd = gx.data_mut();
+        let god = grad_out.data();
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ci in 0..c {
+                        let g = god[((bi * oh + oy) * ow + ox) * c + ci] * norm;
+                        for ky in 0..self.k {
+                            for kx in 0..self.k {
+                                let iy = oy * self.stride + ky;
+                                let ix = ox * self.stride + kx;
+                                gd[((bi * h + iy) * w + ix) * c + ci] += g;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        gx
+    }
+
+    fn describe(&self) -> String {
+        format!("AvgPool({}x{}, s{})", self.k, self.k, self.stride)
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        vec![
+            (in_shape[0] - self.k) / self.stride + 1,
+            (in_shape[1] - self.k) / self.stride + 1,
+            in_shape[2],
+        ]
+    }
+}
+
+/// Flatten [B, ...] → [B, prod(...)].
+pub struct Flatten {
+    cache_shape: Vec<usize>,
+}
+
+impl Flatten {
+    pub fn new() -> Self {
+        Self {
+            cache_shape: Vec::new(),
+        }
+    }
+}
+
+impl Default for Flatten {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for Flatten {
+    fn forward(&mut self, x: &Tensor, _train: bool) -> Tensor {
+        self.cache_shape = x.shape().to_vec();
+        let b = x.dim(0);
+        x.reshape(&[b, x.len() / b])
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        grad_out.reshape(&self.cache_shape)
+    }
+
+    fn describe(&self) -> String {
+        "Flatten".into()
+    }
+
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize> {
+        vec![in_shape.iter().product()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::numeric_grad_check;
+
+    #[test]
+    fn conv_gradcheck() {
+        let mut rng = Xoshiro256::new(4);
+        let spec = Conv2dSpec {
+            in_h: 5,
+            in_w: 5,
+            in_c: 2,
+            k_h: 3,
+            k_w: 3,
+            out_c: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let layer = Conv2d::new("c", spec, None, &mut rng);
+        numeric_grad_check(Box::new(layer), &[2, 5, 5, 2], 1e-2, 2e-2);
+    }
+
+    #[test]
+    fn conv_output_shape() {
+        let mut rng = Xoshiro256::new(5);
+        let spec = Conv2dSpec {
+            in_h: 8,
+            in_w: 8,
+            in_c: 3,
+            k_h: 2,
+            k_w: 2,
+            out_c: 16,
+            stride: 2,
+            pad: 0,
+        };
+        let mut c = Conv2d::new("c", spec, None, &mut rng);
+        let y = c.forward(&Tensor::zeros(&[2, 8, 8, 3]), false);
+        assert_eq!(y.shape(), &[2, 4, 4, 16]);
+    }
+
+    #[test]
+    fn maxpool_gradcheck_routes_to_argmax() {
+        // With distinct values the pooling gradient is well-defined.
+        let mut mp = MaxPool2d::new(2, 2);
+        let x = Tensor::from_vec(
+            &[1, 4, 4, 1],
+            (0..16).map(|i| i as f32).collect(),
+        );
+        let y = mp.forward(&x, true);
+        assert_eq!(y.data(), &[5., 7., 13., 15.]);
+        let g = mp.backward(&Tensor::from_vec(&[1, 2, 2, 1], vec![1., 2., 3., 4.]));
+        assert_eq!(g.data()[5], 1.0);
+        assert_eq!(g.data()[7], 2.0);
+        assert_eq!(g.data()[13], 3.0);
+        assert_eq!(g.data()[15], 4.0);
+        assert_eq!(g.sum(), 10.0);
+    }
+
+    #[test]
+    fn avgpool_gradcheck() {
+        numeric_grad_check(Box::new(AvgPool2d::new(2, 2)), &[1, 4, 4, 2], 1e-2, 1e-2);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut f = Flatten::new();
+        let x = Tensor::zeros(&[2, 3, 4, 5]);
+        let y = f.forward(&x, false);
+        assert_eq!(y.shape(), &[2, 60]);
+        let g = f.backward(&y);
+        assert_eq!(g.shape(), &[2, 3, 4, 5]);
+    }
+}

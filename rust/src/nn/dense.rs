@@ -1,0 +1,108 @@
+//! Fully-connected layer with manual backprop.
+
+use super::layer::{Layer, Param};
+use crate::tensor::{add_bias, matmul, matmul_nt, matmul_tn, sum_rows, Tensor};
+use crate::util::rng::Xoshiro256;
+
+/// y = x·W + b, x: [B, in], W: [in, out], b: [out].
+pub struct Dense {
+    pub w: Param,
+    pub b: Param,
+    in_dim: usize,
+    out_dim: usize,
+    cache_x: Option<Tensor>,
+}
+
+impl Dense {
+    /// He/Kaiming-ish initialization: sd = init_sd / sqrt(in_dim) when
+    /// `init_sd` is None, or a fixed sd (the paper's AlexNet runs use a
+    /// fixed sd = 0.005 for weights, 0.1 for biases).
+    pub fn new(
+        name: &str,
+        in_dim: usize,
+        out_dim: usize,
+        init_sd: Option<f32>,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        let sd = init_sd.unwrap_or(1.0 / (in_dim as f32).sqrt());
+        Self {
+            w: Param::new(
+                &format!("{name}/w"),
+                Tensor::randn(&[in_dim, out_dim], sd, rng),
+                false,
+            ),
+            b: Param::new(&format!("{name}/b"), Tensor::zeros(&[out_dim]), true),
+            in_dim,
+            out_dim,
+            cache_x: None,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+}
+
+impl Layer for Dense {
+    fn forward(&mut self, x: &Tensor, _train: bool) -> Tensor {
+        assert_eq!(x.rank(), 2, "Dense expects [B, in]");
+        assert_eq!(x.dim(1), self.in_dim);
+        let mut y = matmul(x, &self.w.value);
+        add_bias(&mut y, &self.b.value);
+        self.cache_x = Some(x.clone());
+        y
+    }
+
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let x = self.cache_x.as_ref().expect("backward before forward");
+        // dW = xᵀ · g
+        self.w.grad = self.w.grad.add(&matmul_tn(x, grad_out));
+        // db = column sums of g
+        self.b.grad = self.b.grad.add(&sum_rows(grad_out));
+        // dx = g · Wᵀ
+        matmul_nt(grad_out, &self.w.value)
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    fn params(&self) -> Vec<&Param> {
+        vec![&self.w, &self.b]
+    }
+
+    fn describe(&self) -> String {
+        format!("Dense({}→{})", self.in_dim, self.out_dim)
+    }
+
+    fn out_shape(&self, _in_shape: &[usize]) -> Vec<usize> {
+        vec![self.out_dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::testutil::numeric_grad_check;
+
+    #[test]
+    fn forward_shape_and_bias() {
+        let mut rng = Xoshiro256::new(1);
+        let mut d = Dense::new("d", 3, 2, None, &mut rng);
+        d.b.value = Tensor::vec1(&[10.0, 20.0]);
+        let x = Tensor::zeros(&[4, 3]);
+        let y = d.forward(&x, false);
+        assert_eq!(y.shape(), &[4, 2]);
+        assert_eq!(y.row(0), &[10.0, 20.0]);
+    }
+
+    #[test]
+    fn gradcheck_dense() {
+        let mut rng = Xoshiro256::new(2);
+        let layer = Dense::new("d", 4, 3, None, &mut rng);
+        numeric_grad_check(Box::new(layer), &[2, 4], 1e-2, 2e-2);
+    }
+}

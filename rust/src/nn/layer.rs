@@ -1,0 +1,69 @@
+//! The layer abstraction: forward / backward / parameter access.
+
+use crate::tensor::Tensor;
+
+/// A trainable parameter: value plus accumulated gradient.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub value: Tensor,
+    pub grad: Tensor,
+    /// Stable name for diagnostics ("dense0/w", "conv2/b", ...).
+    pub name: String,
+    /// Biases are clustered together with weights in the paper ("all of
+    /// the weights in the network, including the bias weights"), but the
+    /// flag lets experiments separate them.
+    pub is_bias: bool,
+}
+
+impl Param {
+    pub fn new(name: &str, value: Tensor, is_bias: bool) -> Self {
+        let grad = Tensor::zeros(value.shape());
+        Self {
+            value,
+            grad,
+            name: name.to_string(),
+            is_bias,
+        }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.grad.fill(0.0);
+    }
+
+    pub fn len(&self) -> usize {
+        self.value.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.value.is_empty()
+    }
+}
+
+/// A network layer. Layers own their parameters and cache whatever they
+/// need from `forward` to compute `backward`. `Send` so trained networks
+/// can move behind the serving coordinator's worker threads.
+pub trait Layer: Send {
+    /// Forward pass. `train` toggles train-time behaviour (dropout).
+    fn forward(&mut self, x: &Tensor, train: bool) -> Tensor;
+
+    /// Backward pass: given dL/d(output), accumulate parameter gradients
+    /// and return dL/d(input). Must be called after `forward`.
+    fn backward(&mut self, grad_out: &Tensor) -> Tensor;
+
+    /// Mutable access to this layer's parameters (empty for stateless
+    /// layers).
+    fn params_mut(&mut self) -> Vec<&mut Param> {
+        Vec::new()
+    }
+
+    /// Immutable access.
+    fn params(&self) -> Vec<&Param> {
+        Vec::new()
+    }
+
+    /// Human-readable description.
+    fn describe(&self) -> String;
+
+    /// Output shape given an input shape (excluding the batch dim).
+    fn out_shape(&self, in_shape: &[usize]) -> Vec<usize>;
+}

@@ -1,0 +1,182 @@
+//! Loss functions: softmax cross-entropy (classification) and L2
+//! (the regression/auto-encoding tasks of §3.2).
+
+use crate::tensor::Tensor;
+
+/// A loss: value + gradient with respect to the network output.
+pub trait Loss {
+    /// Returns (mean loss, dL/dlogits) for a batch.
+    fn compute(&self, output: &Tensor, target: &Target) -> (f64, Tensor);
+    fn name(&self) -> &'static str;
+}
+
+/// Training target: class labels or a regression tensor.
+#[derive(Clone, Debug)]
+pub enum Target {
+    Labels(Vec<usize>),
+    Values(Tensor),
+}
+
+impl Target {
+    pub fn labels(&self) -> &[usize] {
+        match self {
+            Target::Labels(l) => l,
+            _ => panic!("target is not labels"),
+        }
+    }
+    pub fn values(&self) -> &Tensor {
+        match self {
+            Target::Values(v) => v,
+            _ => panic!("target is not values"),
+        }
+    }
+}
+
+/// Numerically stable softmax cross-entropy over logits [B, C].
+pub struct SoftmaxCrossEntropy;
+
+impl Loss for SoftmaxCrossEntropy {
+    fn compute(&self, logits: &Tensor, target: &Target) -> (f64, Tensor) {
+        let labels = target.labels();
+        assert_eq!(logits.rank(), 2);
+        let (b, c) = (logits.dim(0), logits.dim(1));
+        assert_eq!(labels.len(), b);
+        let mut grad = Tensor::zeros(&[b, c]);
+        let mut total = 0.0f64;
+        let ld = logits.data();
+        let gd = grad.data_mut();
+        let inv_b = 1.0 / b as f32;
+        for i in 0..b {
+            let row = &ld[i * c..(i + 1) * c];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x));
+            let exps: Vec<f32> = row.iter().map(|&x| (x - m).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            let logz = z.ln() + m;
+            total += (logz - row[labels[i]]) as f64;
+            for j in 0..c {
+                let p = exps[j] / z;
+                gd[i * c + j] = (p - if j == labels[i] { 1.0 } else { 0.0 }) * inv_b;
+            }
+        }
+        (total / b as f64, grad)
+    }
+
+    fn name(&self) -> &'static str {
+        "softmax_xent"
+    }
+}
+
+/// Mean squared error over arbitrary-shape outputs.
+pub struct L2Loss;
+
+impl Loss for L2Loss {
+    fn compute(&self, output: &Tensor, target: &Target) -> (f64, Tensor) {
+        let t = target.values();
+        assert_eq!(output.shape(), t.shape());
+        let n = output.len() as f64;
+        let loss = output.mse(t);
+        // d/dy mean((y−t)²) = 2(y−t)/n
+        let grad = output.zip(t, |y, tv| 2.0 * (y - tv) / n as f32);
+        (loss, grad)
+    }
+
+    fn name(&self) -> &'static str {
+        "l2"
+    }
+}
+
+/// Classification accuracy from logits.
+pub fn accuracy(logits: &Tensor, labels: &[usize]) -> f64 {
+    let preds = logits.argmax_rows();
+    let correct = preds
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| p == l)
+        .count();
+    correct as f64 / labels.len().max(1) as f64
+}
+
+/// Recall@k: fraction of rows whose true label is among the top-k logits
+/// (the paper reports recall@1 and recall@5 for AlexNet).
+pub fn recall_at_k(logits: &Tensor, labels: &[usize], k: usize) -> f64 {
+    assert_eq!(logits.rank(), 2);
+    let (b, c) = (logits.dim(0), logits.dim(1));
+    let mut hit = 0usize;
+    for i in 0..b {
+        let row = logits.row(i);
+        let mut idx: Vec<usize> = (0..c).collect();
+        idx.sort_by(|&a, &bb| row[bb].total_cmp(&row[a]));
+        if idx[..k.min(c)].contains(&labels[i]) {
+            hit += 1;
+        }
+    }
+    hit as f64 / b.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xent_perfect_prediction_low_loss() {
+        let logits = Tensor::from_vec(&[2, 3], vec![10., 0., 0., 0., 10., 0.]);
+        let (loss, _) = SoftmaxCrossEntropy.compute(&logits, &Target::Labels(vec![0, 1]));
+        assert!(loss < 1e-3);
+    }
+
+    #[test]
+    fn xent_uniform_is_log_c() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let (loss, _) = SoftmaxCrossEntropy.compute(&logits, &Target::Labels(vec![0; 4]));
+        assert!((loss - (10.0f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn xent_grad_matches_fd() {
+        let logits = Tensor::from_vec(&[2, 3], vec![0.5, -0.2, 0.1, -1.0, 0.3, 0.7]);
+        let target = Target::Labels(vec![2, 0]);
+        let (_, grad) = SoftmaxCrossEntropy.compute(&logits, &target);
+        let eps = 1e-3f32;
+        for i in 0..logits.len() {
+            let mut lp = logits.clone();
+            lp.data_mut()[i] += eps;
+            let mut lm = logits.clone();
+            lm.data_mut()[i] -= eps;
+            let fp = SoftmaxCrossEntropy.compute(&lp, &target).0;
+            let fm = SoftmaxCrossEntropy.compute(&lm, &target).0;
+            let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - grad.data()[i]).abs() < 1e-3,
+                "i={i} fd={fd} an={}",
+                grad.data()[i]
+            );
+        }
+    }
+
+    #[test]
+    fn xent_grad_sums_to_zero_per_row() {
+        let logits = Tensor::from_vec(&[1, 4], vec![0.1, 0.2, 0.3, 0.4]);
+        let (_, g) = SoftmaxCrossEntropy.compute(&logits, &Target::Labels(vec![1]));
+        assert!(g.sum().abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2_loss_and_grad() {
+        let y = Tensor::vec1(&[1.0, 2.0]);
+        let t = Target::Values(Tensor::vec1(&[0.0, 0.0]));
+        let (loss, grad) = L2Loss.compute(&y, &t);
+        assert!((loss - 2.5).abs() < 1e-6);
+        assert_eq!(grad.data(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn accuracy_and_recall() {
+        let logits = Tensor::from_vec(
+            &[2, 4],
+            vec![0.9, 0.5, 0.1, 0.0, 0.1, 0.2, 0.3, 0.9],
+        );
+        assert_eq!(accuracy(&logits, &[0, 0]), 0.5);
+        assert_eq!(recall_at_k(&logits, &[1, 2], 2), 1.0);
+        assert_eq!(recall_at_k(&logits, &[3, 3], 1), 0.5);
+    }
+}

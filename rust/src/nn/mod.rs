@@ -1,0 +1,18 @@
+//! Neural-network layers with manual backprop: the float training stack
+//! the paper's quantization methods plug into.
+
+pub mod activation;
+pub mod conv;
+pub mod dense;
+pub mod layer;
+pub mod loss;
+pub mod network;
+#[cfg(test)]
+pub mod testutil;
+
+pub use activation::{ActLayer, Activation, Dropout};
+pub use conv::{AvgPool2d, Conv2d, Flatten, MaxPool2d};
+pub use dense::Dense;
+pub use layer::{Layer, Param};
+pub use loss::{accuracy, recall_at_k, L2Loss, Loss, SoftmaxCrossEntropy, Target};
+pub use network::{ActSpec, LayerSpec, NetSpec, Network};

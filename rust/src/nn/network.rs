@@ -1,0 +1,555 @@
+//! Sequential network container, spec-driven so the same architecture
+//! description can build the float training net, the quantized training
+//! net, and (after training) compile to the integer LUT engine.
+
+use super::activation::{ActLayer, Activation, Dropout};
+use super::conv::{AvgPool2d, Conv2d, Flatten, MaxPool2d};
+use super::dense::Dense;
+use super::layer::{Layer, Param};
+use crate::quant::{ActKind, QuantAct};
+use crate::tensor::{Conv2dSpec, Tensor};
+use crate::util::json::Json;
+use crate::util::rng::Xoshiro256;
+
+/// Serializable activation description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ActSpec {
+    pub kind: String,
+    /// None = continuous; Some(L) = quantized to L levels.
+    pub levels: Option<usize>,
+}
+
+impl ActSpec {
+    pub fn tanh() -> Self {
+        Self { kind: "tanh".into(), levels: None }
+    }
+    pub fn relu() -> Self {
+        Self { kind: "relu".into(), levels: None }
+    }
+    pub fn relu6() -> Self {
+        Self { kind: "relu6".into(), levels: None }
+    }
+    pub fn linear() -> Self {
+        Self { kind: "linear".into(), levels: None }
+    }
+    pub fn tanh_d(levels: usize) -> Self {
+        Self { kind: "tanh".into(), levels: Some(levels) }
+    }
+    pub fn relu6_d(levels: usize) -> Self {
+        Self { kind: "relu6".into(), levels: Some(levels) }
+    }
+
+    pub fn to_activation(&self) -> Activation {
+        let kind = match self.kind.as_str() {
+            "tanh" => Some(ActKind::Tanh),
+            "relu6" => Some(ActKind::Relu6),
+            "rect_tanh" => Some(ActKind::RectTanh),
+            "sigmoid" => Some(ActKind::Sigmoid),
+            "relu" => None,
+            "linear" => None,
+            other => panic!("unknown activation kind {other:?}"),
+        };
+        match (kind, self.levels) {
+            (Some(k), Some(l)) => Activation::Quantized(QuantAct::new(k, l)),
+            (Some(k), None) => Activation::Continuous(k),
+            (None, _) if self.kind == "relu" => Activation::Relu,
+            (None, _) => Activation::Linear,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str(self.kind.clone())),
+            (
+                "levels",
+                match self.levels {
+                    Some(l) => Json::Num(l as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        Self {
+            kind: j.get("kind").as_str().unwrap_or("linear").to_string(),
+            levels: j.get("levels").as_usize(),
+        }
+    }
+}
+
+/// Serializable layer description.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerSpec {
+    Dense { units: usize },
+    Conv { k: usize, out_c: usize, stride: usize, pad: usize },
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    Act(ActSpec),
+    Dropout { rate: f32 },
+    Flatten,
+}
+
+impl LayerSpec {
+    pub fn to_json(&self) -> Json {
+        match self {
+            LayerSpec::Dense { units } => Json::obj(vec![
+                ("type", Json::Str("dense".into())),
+                ("units", Json::Num(*units as f64)),
+            ]),
+            LayerSpec::Conv { k, out_c, stride, pad } => Json::obj(vec![
+                ("type", Json::Str("conv".into())),
+                ("k", Json::Num(*k as f64)),
+                ("out_c", Json::Num(*out_c as f64)),
+                ("stride", Json::Num(*stride as f64)),
+                ("pad", Json::Num(*pad as f64)),
+            ]),
+            LayerSpec::MaxPool { k, stride } => Json::obj(vec![
+                ("type", Json::Str("maxpool".into())),
+                ("k", Json::Num(*k as f64)),
+                ("stride", Json::Num(*stride as f64)),
+            ]),
+            LayerSpec::AvgPool { k, stride } => Json::obj(vec![
+                ("type", Json::Str("avgpool".into())),
+                ("k", Json::Num(*k as f64)),
+                ("stride", Json::Num(*stride as f64)),
+            ]),
+            LayerSpec::Act(a) => Json::obj(vec![
+                ("type", Json::Str("act".into())),
+                ("act", a.to_json()),
+            ]),
+            LayerSpec::Dropout { rate } => Json::obj(vec![
+                ("type", Json::Str("dropout".into())),
+                ("rate", Json::Num(*rate as f64)),
+            ]),
+            LayerSpec::Flatten => Json::obj(vec![("type", Json::Str("flatten".into()))]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        match j.get("type").as_str().unwrap_or("") {
+            "dense" => LayerSpec::Dense { units: j.get("units").as_usize().unwrap() },
+            "conv" => LayerSpec::Conv {
+                k: j.get("k").as_usize().unwrap(),
+                out_c: j.get("out_c").as_usize().unwrap(),
+                stride: j.get("stride").as_usize().unwrap(),
+                pad: j.get("pad").as_usize().unwrap(),
+            },
+            "maxpool" => LayerSpec::MaxPool {
+                k: j.get("k").as_usize().unwrap(),
+                stride: j.get("stride").as_usize().unwrap(),
+            },
+            "avgpool" => LayerSpec::AvgPool {
+                k: j.get("k").as_usize().unwrap(),
+                stride: j.get("stride").as_usize().unwrap(),
+            },
+            "act" => LayerSpec::Act(ActSpec::from_json(j.get("act"))),
+            "dropout" => LayerSpec::Dropout {
+                rate: j.get("rate").as_f64().unwrap() as f32,
+            },
+            "flatten" => LayerSpec::Flatten,
+            other => panic!("unknown layer type {other:?}"),
+        }
+    }
+}
+
+/// Serializable network architecture.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetSpec {
+    pub name: String,
+    /// Input shape excluding the batch dimension: [features] for MLPs,
+    /// [H, W, C] for conv nets.
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<LayerSpec>,
+    /// Fixed weight init sd; None = fan-in scaled.
+    pub init_sd: Option<f32>,
+}
+
+impl NetSpec {
+    /// A fully-connected classifier/regressor builder.
+    pub fn mlp(name: &str, input: usize, hidden: &[usize], out: usize, act: ActSpec) -> Self {
+        let mut layers = Vec::new();
+        for &h in hidden {
+            layers.push(LayerSpec::Dense { units: h });
+            layers.push(LayerSpec::Act(act.clone()));
+        }
+        layers.push(LayerSpec::Dense { units: out });
+        NetSpec {
+            name: name.into(),
+            input_shape: vec![input],
+            layers,
+            init_sd: None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("input_shape", Json::arr_usize(&self.input_shape)),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
+            ),
+            (
+                "init_sd",
+                match self.init_sd {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        NetSpec {
+            name: j.get("name").as_str().unwrap_or("net").to_string(),
+            input_shape: j
+                .get("input_shape")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_usize().unwrap())
+                .collect(),
+            layers: j
+                .get("layers")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(LayerSpec::from_json)
+                .collect(),
+            init_sd: j.get("init_sd").as_f64().map(|v| v as f32),
+        }
+    }
+}
+
+/// A sequential network: the spec plus instantiated layers.
+pub struct Network {
+    pub spec: NetSpec,
+    pub layers: Vec<Box<dyn Layer>>,
+}
+
+impl Network {
+    /// Instantiate a network from its spec with fresh random weights.
+    pub fn from_spec(spec: &NetSpec, rng: &mut Xoshiro256) -> Self {
+        let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+        let mut shape = spec.input_shape.clone();
+        for (li, ls) in spec.layers.iter().enumerate() {
+            match ls {
+                LayerSpec::Dense { units } => {
+                    assert_eq!(shape.len(), 1, "Dense after non-flat shape {shape:?}");
+                    layers.push(Box::new(Dense::new(
+                        &format!("dense{li}"),
+                        shape[0],
+                        *units,
+                        spec.init_sd,
+                        rng,
+                    )));
+                    shape = vec![*units];
+                }
+                LayerSpec::Conv { k, out_c, stride, pad } => {
+                    assert_eq!(shape.len(), 3, "Conv needs [H,W,C] input, got {shape:?}");
+                    let cs = Conv2dSpec {
+                        in_h: shape[0],
+                        in_w: shape[1],
+                        in_c: shape[2],
+                        k_h: *k,
+                        k_w: *k,
+                        out_c: *out_c,
+                        stride: *stride,
+                        pad: *pad,
+                    };
+                    let conv = Conv2d::new(&format!("conv{li}"), cs, spec.init_sd, rng);
+                    shape = conv.out_shape(&shape);
+                    layers.push(Box::new(conv));
+                }
+                LayerSpec::MaxPool { k, stride } => {
+                    let mp = MaxPool2d::new(*k, *stride);
+                    shape = mp.out_shape(&shape);
+                    layers.push(Box::new(mp));
+                }
+                LayerSpec::AvgPool { k, stride } => {
+                    let ap = AvgPool2d::new(*k, *stride);
+                    shape = ap.out_shape(&shape);
+                    layers.push(Box::new(ap));
+                }
+                LayerSpec::Act(a) => {
+                    layers.push(Box::new(ActLayer::new(a.to_activation())));
+                }
+                LayerSpec::Dropout { rate } => {
+                    layers.push(Box::new(Dropout::new(*rate, rng.next_u64())));
+                }
+                LayerSpec::Flatten => {
+                    layers.push(Box::new(Flatten::new()));
+                    shape = vec![shape.iter().product()];
+                }
+            }
+        }
+        Self {
+            spec: spec.clone(),
+            layers,
+        }
+    }
+
+    /// Forward pass through all layers.
+    pub fn forward(&mut self, x: &Tensor, train: bool) -> Tensor {
+        let mut cur = x.clone();
+        for l in &mut self.layers {
+            cur = l.forward(&cur, train);
+        }
+        cur
+    }
+
+    /// Backward pass; returns dL/dinput.
+    pub fn backward(&mut self, grad_out: &Tensor) -> Tensor {
+        let mut g = grad_out.clone();
+        for l in self.layers.iter_mut().rev() {
+            g = l.backward(&g);
+        }
+        g
+    }
+
+    pub fn zero_grads(&mut self) {
+        for l in &mut self.layers {
+            for p in l.params_mut() {
+                p.zero_grad();
+            }
+        }
+    }
+
+    /// All parameters, in layer order.
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        self.layers
+            .iter_mut()
+            .flat_map(|l| l.params_mut())
+            .collect()
+    }
+
+    pub fn params(&self) -> Vec<&Param> {
+        self.layers.iter().flat_map(|l| l.params()).collect()
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.params().iter().map(|p| p.len()).sum()
+    }
+
+    /// Copy of all parameter values concatenated (weights + biases) —
+    /// the population the paper's clustering step operates on.
+    pub fn flat_weights(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_params());
+        for p in self.params() {
+            out.extend_from_slice(p.value.data());
+        }
+        out
+    }
+
+    /// Write back a flat weight vector (inverse of `flat_weights`).
+    pub fn set_flat_weights(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for p in self.params_mut() {
+            let n = p.value.len();
+            p.value.data_mut().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        assert_eq!(off, flat.len(), "flat weight length mismatch");
+    }
+
+    /// Per-parameter-group weight populations (for per-layer clustering,
+    /// paper §5 future-work 1). Groups by owning layer index.
+    pub fn layer_weight_groups(&mut self) -> Vec<Vec<usize>> {
+        // Returns, for each layer with params, the indices of its params
+        // in the `params()` ordering.
+        let mut groups = Vec::new();
+        let mut idx = 0;
+        for l in &self.layers {
+            let n = l.params().len();
+            if n > 0 {
+                groups.push((idx..idx + n).collect());
+            }
+            idx += n;
+        }
+        groups
+    }
+
+    /// Architecture summary string.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{} (input {:?}, {} params)\n",
+            self.spec.name,
+            self.spec.input_shape,
+            self.num_params()
+        );
+        for l in &self.layers {
+            s.push_str(&format!("  {}\n", l.describe()));
+        }
+        s
+    }
+
+    // ---- model serialization (.qnn format) ----
+    //
+    // magic "QNN1" | u32 header_len | header JSON | f32-LE param data.
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let header = Json::obj(vec![
+            ("spec", self.spec.to_json()),
+            (
+                "params",
+                Json::Arr(
+                    self.params()
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("name", Json::Str(p.name.clone())),
+                                ("shape", Json::arr_usize(p.value.shape())),
+                                ("is_bias", Json::Bool(p.is_bias)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"QNN1")?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for p in self.params() {
+            for &v in p.value.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> std::io::Result<Network> {
+        let bytes = std::fs::read(path)?;
+        let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+        if bytes.len() < 8 || &bytes[0..4] != b"QNN1" {
+            return Err(err("not a QNN1 file"));
+        }
+        let hlen = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let header = std::str::from_utf8(&bytes[8..8 + hlen]).map_err(|_| err("bad header"))?;
+        let j = Json::parse(header).map_err(|e| err(&format!("bad header json: {e}")))?;
+        let spec = NetSpec::from_json(j.get("spec"));
+        let mut rng = Xoshiro256::new(0);
+        let mut net = Network::from_spec(&spec, &mut rng);
+        let mut off = 8 + hlen;
+        for p in net.params_mut() {
+            let n = p.value.len();
+            if off + n * 4 > bytes.len() {
+                return Err(err("truncated param data"));
+            }
+            for v in p.value.data_mut().iter_mut() {
+                *v = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+                off += 4;
+            }
+        }
+        if off != bytes.len() {
+            return Err(err("trailing data"));
+        }
+        Ok(net)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn digits_spec() -> NetSpec {
+        NetSpec::mlp("test", 16, &[8, 8], 4, ActSpec::tanh_d(8))
+    }
+
+    #[test]
+    fn build_and_forward_shapes() {
+        let mut rng = Xoshiro256::new(1);
+        let mut net = Network::from_spec(&digits_spec(), &mut rng);
+        let y = net.forward(&Tensor::zeros(&[3, 16]), false);
+        assert_eq!(y.shape(), &[3, 4]);
+        assert_eq!(net.num_params(), 16 * 8 + 8 + 8 * 8 + 8 + 8 * 4 + 4);
+    }
+
+    #[test]
+    fn conv_net_spec_builds() {
+        let spec = NetSpec {
+            name: "convnet".into(),
+            input_shape: vec![8, 8, 3],
+            layers: vec![
+                LayerSpec::Conv { k: 3, out_c: 4, stride: 1, pad: 1 },
+                LayerSpec::Act(ActSpec::relu6_d(16)),
+                LayerSpec::MaxPool { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 10 },
+            ],
+            init_sd: None,
+        };
+        let mut rng = Xoshiro256::new(2);
+        let mut net = Network::from_spec(&spec, &mut rng);
+        let y = net.forward(&Tensor::zeros(&[2, 8, 8, 3]), false);
+        assert_eq!(y.shape(), &[2, 10]);
+    }
+
+    #[test]
+    fn flat_weights_roundtrip() {
+        let mut rng = Xoshiro256::new(3);
+        let mut net = Network::from_spec(&digits_spec(), &mut rng);
+        let w = net.flat_weights();
+        assert_eq!(w.len(), net.num_params());
+        let mut w2 = w.clone();
+        for v in &mut w2 {
+            *v += 1.0;
+        }
+        net.set_flat_weights(&w2);
+        assert_eq!(net.flat_weights(), w2);
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let spec = NetSpec {
+            name: "x".into(),
+            input_shape: vec![8, 8, 3],
+            layers: vec![
+                LayerSpec::Conv { k: 2, out_c: 4, stride: 2, pad: 0 },
+                LayerSpec::Act(ActSpec::tanh_d(32)),
+                LayerSpec::Dropout { rate: 0.5 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 7 },
+                LayerSpec::Act(ActSpec::linear()),
+            ],
+            init_sd: Some(0.005),
+        };
+        let back = NetSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap());
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Xoshiro256::new(4);
+        let mut net = Network::from_spec(&digits_spec(), &mut rng);
+        let x = Tensor::randn(&[2, 16], 1.0, &mut rng);
+        let y1 = net.forward(&x, false);
+        let path = "/tmp/qnn_test_model.qnn";
+        net.save(path).unwrap();
+        let mut net2 = Network::load(path).unwrap();
+        let y2 = net2.forward(&x, false);
+        assert!(y1.mse(&y2) < 1e-12);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        std::fs::write("/tmp/qnn_bad.qnn", b"NOPE").unwrap();
+        assert!(Network::load("/tmp/qnn_bad.qnn").is_err());
+        std::fs::remove_file("/tmp/qnn_bad.qnn").ok();
+    }
+
+    #[test]
+    fn layer_groups_cover_all_params() {
+        let mut rng = Xoshiro256::new(5);
+        let mut net = Network::from_spec(&digits_spec(), &mut rng);
+        let groups = net.layer_weight_groups();
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, net.params().len());
+        assert_eq!(groups.len(), 3); // three Dense layers
+    }
+}

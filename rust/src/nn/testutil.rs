@@ -1,0 +1,83 @@
+//! Shared test helper: finite-difference gradient checking for layers.
+
+#![cfg(test)]
+
+use super::layer::Layer;
+use crate::tensor::Tensor;
+use crate::util::rng::Xoshiro256;
+
+/// Check a layer's analytic gradients (input + parameters) against
+/// central finite differences on the scalar loss L = Σ y ⊙ R for a fixed
+/// random R. `eps` is the FD step, `tol` the allowed relative error.
+pub fn numeric_grad_check(
+    mut layer: Box<dyn Layer>,
+    in_shape: &[usize],
+    eps: f32,
+    tol: f32,
+) {
+    let mut rng = Xoshiro256::new(0xFEED);
+    let x = Tensor::randn(in_shape, 1.0, &mut rng);
+
+    // Fixed projection tensor R defines the scalar loss.
+    let y0 = layer.forward(&x, true);
+    let r = Tensor::randn(y0.shape(), 1.0, &mut rng);
+    let loss = |y: &Tensor| -> f64 {
+        y.data()
+            .iter()
+            .zip(r.data())
+            .map(|(&a, &b)| (a * b) as f64)
+            .sum()
+    };
+
+    // Analytic grads.
+    for p in layer.params_mut() {
+        p.zero_grad();
+    }
+    let _ = layer.forward(&x, true);
+    let gx = layer.backward(&r);
+
+    // FD on the input.
+    let mut max_rel = 0.0f32;
+    for i in (0..x.len()).step_by((x.len() / 24).max(1)) {
+        let mut xp = x.clone();
+        xp.data_mut()[i] += eps;
+        let mut xm = x.clone();
+        xm.data_mut()[i] -= eps;
+        let fd = ((loss(&layer.forward(&xp, true)) - loss(&layer.forward(&xm, true)))
+            / (2.0 * eps as f64)) as f32;
+        let an = gx.data()[i];
+        let rel = (fd - an).abs() / (fd.abs().max(an.abs()).max(1.0));
+        max_rel = max_rel.max(rel);
+        assert!(
+            rel < tol,
+            "input grad mismatch at {i}: fd={fd} analytic={an} rel={rel}"
+        );
+    }
+
+    // FD on each parameter (sampled entries).
+    // Re-run analytic grads cleanly (forward state may be stale).
+    for p in layer.params_mut() {
+        p.zero_grad();
+    }
+    let _ = layer.forward(&x, true);
+    let _ = layer.backward(&r);
+    let n_params = layer.params().len();
+    for pi in 0..n_params {
+        let plen = layer.params()[pi].len();
+        for i in (0..plen).step_by((plen / 16).max(1)) {
+            let orig = layer.params()[pi].value.data()[i];
+            layer.params_mut()[pi].value.data_mut()[i] = orig + eps;
+            let lp = loss(&layer.forward(&x, true));
+            layer.params_mut()[pi].value.data_mut()[i] = orig - eps;
+            let lm = loss(&layer.forward(&x, true));
+            layer.params_mut()[pi].value.data_mut()[i] = orig;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let an = layer.params()[pi].grad.data()[i];
+            let rel = (fd - an).abs() / (fd.abs().max(an.abs()).max(1.0));
+            assert!(
+                rel < tol,
+                "param {pi} grad mismatch at {i}: fd={fd} analytic={an} rel={rel}"
+            );
+        }
+    }
+}

@@ -1,0 +1,320 @@
+//! Activation quantization (paper §2.1, Figure 1).
+//!
+//! A quantized activation `fD(L)` emits one of `L` predefined output
+//! levels, **equally spaced in the output space** of the underlying
+//! smooth function `f` (tanh, ReLU6, rectified-tanh, sigmoid). The input-
+//! space decision boundaries are wherever `f` crosses the midpoint
+//! between adjacent output levels — so where `f` is steepest the plateaus
+//! are narrowest (Fig 1), which is what makes training behave.
+//!
+//! Forward (both training and inference) emits the quantized level.
+//! Backward ignores the quantization and uses the derivative of the
+//! underlying function (e.g. `1 − tanh²(x)` for tanhD) — a straight-
+//! through estimator with the true analytic derivative.
+
+/// The underlying smooth non-linearity being quantized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActKind {
+    Tanh,
+    Relu6,
+    /// max(0, tanh(x)) — mentioned in §2.1.
+    RectTanh,
+    Sigmoid,
+}
+
+impl ActKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActKind::Tanh => "tanh",
+            ActKind::Relu6 => "relu6",
+            ActKind::RectTanh => "rect_tanh",
+            ActKind::Sigmoid => "sigmoid",
+        }
+    }
+
+    /// f(x).
+    #[inline]
+    pub fn f(&self, x: f32) -> f32 {
+        match self {
+            ActKind::Tanh => x.tanh(),
+            ActKind::Relu6 => x.clamp(0.0, 6.0),
+            ActKind::RectTanh => x.tanh().max(0.0),
+            ActKind::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+        }
+    }
+
+    /// f'(x) — used verbatim in the backward pass of the quantized unit.
+    #[inline]
+    pub fn df(&self, x: f32) -> f32 {
+        match self {
+            ActKind::Tanh => {
+                let t = x.tanh();
+                1.0 - t * t
+            }
+            ActKind::Relu6 => {
+                if (0.0..6.0).contains(&x) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            ActKind::RectTanh => {
+                if x > 0.0 {
+                    let t = x.tanh();
+                    1.0 - t * t
+                } else {
+                    0.0
+                }
+            }
+            ActKind::Sigmoid => {
+                let s = 1.0 / (1.0 + (-x).exp());
+                s * (1.0 - s)
+            }
+        }
+    }
+
+    /// Output range [lo, hi] of f.
+    pub fn out_range(&self) -> (f32, f32) {
+        match self {
+            ActKind::Tanh => (-1.0, 1.0),
+            ActKind::Relu6 => (0.0, 6.0),
+            ActKind::RectTanh => (0.0, 1.0),
+            ActKind::Sigmoid => (0.0, 1.0),
+        }
+    }
+
+    /// Inverse of f restricted to the open output interval; used to place
+    /// input-space boundaries at output-midpoints.
+    fn f_inv(&self, y: f32) -> f32 {
+        match self {
+            ActKind::Tanh => atanh(y),
+            ActKind::Relu6 => y, // identity on (0, 6)
+            ActKind::RectTanh => atanh(y),
+            ActKind::Sigmoid => (y / (1.0 - y)).ln(),
+        }
+    }
+}
+
+#[inline]
+fn atanh(y: f32) -> f32 {
+    0.5 * ((1.0 + y) / (1.0 - y)).ln()
+}
+
+/// A quantized activation function: `kind` quantized to `levels` output
+/// values (the paper's `|A|`).
+#[derive(Clone, Debug)]
+pub struct QuantAct {
+    pub kind: ActKind,
+    pub levels: usize,
+    /// The L output levels, ascending, equally spaced in output space.
+    outputs: Vec<f32>,
+    /// L−1 input-space decision boundaries, ascending. Output index for
+    /// input x is the number of boundaries ≤ x.
+    boundaries: Vec<f32>,
+}
+
+impl QuantAct {
+    pub fn new(kind: ActKind, levels: usize) -> Self {
+        assert!(levels >= 2, "need at least 2 quantization levels");
+        let (lo, hi) = kind.out_range();
+        let step = (hi - lo) / (levels - 1) as f32;
+        let outputs: Vec<f32> = (0..levels).map(|i| lo + step * i as f32).collect();
+        // Boundary between level i and i+1 sits where f crosses the output
+        // midpoint. For saturating f (tanh/sigmoid) the extreme outputs
+        // equal the asymptotes; midpoints stay strictly inside the open
+        // range so f_inv is finite.
+        let boundaries: Vec<f32> = (0..levels - 1)
+            .map(|i| {
+                let mid = 0.5 * (outputs[i] + outputs[i + 1]);
+                kind.f_inv(mid)
+            })
+            .collect();
+        Self {
+            kind,
+            levels,
+            outputs,
+            boundaries,
+        }
+    }
+
+    /// tanhD(L) — the paper's headline activation.
+    pub fn tanh_d(levels: usize) -> Self {
+        Self::new(ActKind::Tanh, levels)
+    }
+
+    /// relu6D(L) — used for the AlexNet experiments (Table 1).
+    pub fn relu6_d(levels: usize) -> Self {
+        Self::new(ActKind::Relu6, levels)
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}D({})", self.kind.name(), self.levels)
+    }
+
+    /// Output levels (ascending).
+    pub fn outputs(&self) -> &[f32] {
+        &self.outputs
+    }
+
+    /// Input-space boundaries (ascending, len = levels − 1).
+    pub fn boundaries(&self) -> &[f32] {
+        &self.boundaries
+    }
+
+    /// Quantized output index for pre-activation x: number of boundaries
+    /// strictly below-or-equal, via binary search.
+    #[inline]
+    pub fn index_of(&self, x: f32) -> usize {
+        // partition_point returns the count of boundaries b with b <= x.
+        self.boundaries.partition_point(|&b| b <= x)
+    }
+
+    /// Forward: quantized activation value.
+    #[inline]
+    pub fn forward(&self, x: f32) -> f32 {
+        self.outputs[self.index_of(x)]
+    }
+
+    /// Backward: derivative of the underlying smooth function at x.
+    #[inline]
+    pub fn backward(&self, x: f32) -> f32 {
+        self.kind.df(x)
+    }
+
+    /// Output value for a level index.
+    #[inline]
+    pub fn value(&self, idx: usize) -> f32 {
+        self.outputs[idx]
+    }
+
+    /// Quantize an input vector (e.g. network-input pixel quantization in
+    /// Table 1's right-hand columns) returning level indices.
+    pub fn quantize_to_indices(&self, xs: &[f32]) -> Vec<u16> {
+        xs.iter().map(|&x| self.index_of(x) as u16).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tanhd2_is_sign() {
+        let q = QuantAct::tanh_d(2);
+        assert_eq!(q.outputs(), &[-1.0, 1.0]);
+        assert_eq!(q.boundaries().len(), 1);
+        assert!(q.boundaries()[0].abs() < 1e-6);
+        assert_eq!(q.forward(-0.3), -1.0);
+        assert_eq!(q.forward(0.3), 1.0);
+    }
+
+    #[test]
+    fn levels_equally_spaced_in_output_space() {
+        for l in [4, 9, 64] {
+            let q = QuantAct::tanh_d(l);
+            let outs = q.outputs();
+            let step = outs[1] - outs[0];
+            for w in outs.windows(2) {
+                assert!((w[1] - w[0] - step).abs() < 1e-5);
+            }
+            assert_eq!(outs[0], -1.0);
+            assert_eq!(*outs.last().unwrap(), 1.0);
+        }
+    }
+
+    #[test]
+    fn plateaus_narrowest_where_slope_largest() {
+        // Paper Fig 1: boundary gaps grow towards the saturated tails.
+        let q = QuantAct::tanh_d(16);
+        let b = q.boundaries();
+        let mid_gap = b[8] - b[7]; // around x=0
+        let tail_gap = b[14] - b[13];
+        assert!(
+            tail_gap > 2.0 * mid_gap,
+            "tail {tail_gap} vs mid {mid_gap}"
+        );
+    }
+
+    #[test]
+    fn forward_is_nearest_level_of_underlying() {
+        for kind in [ActKind::Tanh, ActKind::Relu6, ActKind::Sigmoid, ActKind::RectTanh] {
+            let q = QuantAct::new(kind, 16);
+            for i in -40..=40 {
+                let x = i as f32 * 0.2;
+                let y = q.forward(x);
+                let fx = kind.f(x);
+                // y must be (one of) the closest level(s) to f(x) — exact
+                // midpoints may tie-break either way.
+                let best_dist = q
+                    .outputs()
+                    .iter()
+                    .map(|&a| (a - fx).abs())
+                    .fold(f32::INFINITY, f32::min);
+                assert!(
+                    (y - fx).abs() <= best_dist + 1e-5,
+                    "{kind:?} x={x} quantized {y} (d={}) but best d={best_dist}",
+                    (y - fx).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn index_and_value_roundtrip() {
+        let q = QuantAct::relu6_d(32);
+        for i in 0..200 {
+            let x = -1.0 + i as f32 * 0.05;
+            let idx = q.index_of(x);
+            assert!(idx < 32);
+            assert_eq!(q.value(idx), q.forward(x));
+        }
+    }
+
+    #[test]
+    fn relu6_boundaries_uniform() {
+        // Paper §4: ReLU6 boundaries are uniformly spaced, Δx = 6/(|A|−1);
+        // this is what lets its activation table be the identity mapping.
+        let q = QuantAct::relu6_d(32);
+        let b = q.boundaries();
+        let dx = 6.0 / 31.0;
+        for w in b.windows(2) {
+            assert!((w[1] - w[0] - dx).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn backward_matches_analytic_derivative() {
+        let q = QuantAct::tanh_d(8);
+        for i in -20..=20 {
+            let x = i as f32 * 0.25;
+            let t = x.tanh();
+            assert!((q.backward(x) - (1.0 - t * t)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn monotone_quantizer() {
+        use crate::util::prop::check;
+        check("quantized activation is monotone non-decreasing", 64, |g| {
+            let kind = *g.choice(&[ActKind::Tanh, ActKind::Relu6, ActKind::Sigmoid]);
+            let l = g.usize_in(2, 256);
+            let q = QuantAct::new(kind, l);
+            let mut xs = g.vec_f32(2, 64, -8.0, 8.0);
+            xs.sort_by(|a, b| a.total_cmp(b));
+            let ys: Vec<f32> = xs.iter().map(|&x| q.forward(x)).collect();
+            for w in ys.windows(2) {
+                assert!(w[1] >= w[0]);
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_indices_bulk() {
+        let q = QuantAct::tanh_d(4);
+        let idx = q.quantize_to_indices(&[-5.0, -0.2, 0.2, 5.0]);
+        assert_eq!(idx.len(), 4);
+        assert_eq!(idx[0], 0);
+        assert_eq!(idx[3], 3);
+        assert!(idx[1] < idx[2]);
+    }
+}

@@ -1,0 +1,165 @@
+//! Weight codebooks: the small set of unique weight values (the paper's
+//! `|W|`) plus assignment of raw weights to codebook entries.
+
+/// A set of allowed weight values (cluster centers), kept sorted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebook {
+    centers: Vec<f32>,
+    /// Midpoints between adjacent centers; assignment is a binary search.
+    mids: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn new(mut centers: Vec<f32>) -> Self {
+        assert!(!centers.is_empty(), "codebook needs at least one center");
+        centers.sort_by(|a, b| a.total_cmp(b));
+        centers.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        let mids = centers
+            .windows(2)
+            .map(|w| 0.5 * (w[0] + w[1]))
+            .collect();
+        Self { centers, mids }
+    }
+
+    pub fn len(&self) -> usize {
+        self.centers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.centers.is_empty()
+    }
+
+    pub fn centers(&self) -> &[f32] {
+        &self.centers
+    }
+
+    /// Index of the nearest center to `x`.
+    #[inline]
+    pub fn assign(&self, x: f32) -> usize {
+        self.mids.partition_point(|&m| m < x)
+    }
+
+    /// Nearest center value.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        self.centers[self.assign(x)]
+    }
+
+    /// Replace every value with its nearest center in place — this is the
+    /// paper's periodic "weight replacement" step.
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+
+    /// Assign every value to its nearest center index (the deployed model
+    /// stores these indices, ~10 bits each, instead of 32-bit floats).
+    pub fn assign_slice(&self, xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|&x| self.assign(x) as u32).collect()
+    }
+
+    /// Mean |x − q(x)| over a slice: the L1 quantization error the
+    /// Laplacian model clustering minimizes.
+    pub fn l1_error(&self, xs: &[f32]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter()
+            .map(|&x| (x - self.quantize(x)).abs() as f64)
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+
+    /// Mean (x − q(x))² over a slice.
+    pub fn l2_error(&self, xs: &[f32]) -> f64 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter()
+            .map(|&x| ((x - self.quantize(x)) as f64).powi(2))
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+
+    /// Occupancy histogram: how many of `xs` land in each center's cell.
+    pub fn occupancy(&self, xs: &[f32]) -> Vec<u64> {
+        let mut counts = vec![0u64; self.len()];
+        for &x in xs {
+            counts[self.assign(x)] += 1;
+        }
+        counts
+    }
+
+    /// Index of the center closest to `v` (used to find the w=1.0 column
+    /// for the paper's final-layer value lookup, and the bias handling).
+    pub fn nearest_to(&self, v: f32) -> usize {
+        self.assign(v)
+    }
+
+    /// Maximum |center| — one side of the fixed-point overflow bound.
+    pub fn max_abs(&self) -> f32 {
+        self.centers.iter().fold(0.0f32, |m, &c| m.max(c.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_nearest() {
+        let cb = Codebook::new(vec![-1.0, 0.0, 1.0]);
+        assert_eq!(cb.assign(-0.8), 0);
+        assert_eq!(cb.assign(-0.4), 1);
+        assert_eq!(cb.assign(0.6), 2);
+        assert_eq!(cb.quantize(0.4), 0.0);
+    }
+
+    #[test]
+    fn centers_sorted_and_deduped() {
+        let cb = Codebook::new(vec![1.0, -1.0, 1.0, 0.5]);
+        assert_eq!(cb.centers(), &[-1.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn quantize_slice_collapses_uniques() {
+        use crate::util::stats::unique_values;
+        let mut xs: Vec<f32> = (0..1000).map(|i| (i as f32) * 0.01 - 5.0).collect();
+        let cb = Codebook::new(vec![-4.0, -2.0, 0.0, 2.0, 4.0]);
+        cb.quantize_slice(&mut xs);
+        assert!(unique_values(&xs, 1e-6) <= 5);
+    }
+
+    #[test]
+    fn errors_zero_on_centers() {
+        let cb = Codebook::new(vec![-1.0, 2.0]);
+        assert_eq!(cb.l1_error(&[-1.0, 2.0, 2.0]), 0.0);
+        assert_eq!(cb.l2_error(&[-1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn occupancy_sums_to_n() {
+        let cb = Codebook::new(vec![0.0, 1.0, 5.0]);
+        let xs = [0.1f32, 0.9, 4.0, 5.0, -3.0];
+        let occ = cb.occupancy(&xs);
+        assert_eq!(occ.iter().sum::<u64>(), xs.len() as u64);
+    }
+
+    #[test]
+    fn assignment_minimizes_distance_property() {
+        use crate::util::prop::check;
+        check("codebook assignment is nearest-center", 128, |g| {
+            let centers = g.vec_f32(1, 32, -3.0, 3.0);
+            let cb = Codebook::new(centers);
+            let x = g.f32_in(-5.0, 5.0);
+            let d_assigned = (x - cb.quantize(x)).abs();
+            for &c in cb.centers() {
+                assert!(
+                    d_assigned <= (x - c).abs() + 1e-6,
+                    "x={x} assigned d={d_assigned} but center {c} closer"
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,125 @@
+//! Distribution fitting for weight histograms (paper Figure 4: conv
+//! layers look Laplacian, late fc layers look Gaussian).
+
+use crate::util::stats;
+
+/// Which parametric family fits a weight set best.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Laplacian,
+    Gaussian,
+}
+
+/// Maximum-likelihood fit of one family.
+#[derive(Clone, Copy, Debug)]
+pub struct Fit {
+    pub family: Family,
+    /// Location (mean / median).
+    pub loc: f64,
+    /// Scale: σ for Gaussian, b for Laplacian.
+    pub scale: f64,
+    /// Mean log-likelihood per sample.
+    pub mean_ll: f64,
+}
+
+/// Fit a Gaussian by maximum likelihood.
+pub fn fit_gaussian(xs: &[f32]) -> Fit {
+    let mu = stats::mean(xs);
+    let sigma = stats::std_dev(xs).max(1e-12);
+    // Mean LL of N(mu, sigma^2) at its MLE: −½ln(2πσ²) − ½.
+    let mean_ll = -0.5 * (2.0 * std::f64::consts::PI * sigma * sigma).ln() - 0.5;
+    Fit {
+        family: Family::Gaussian,
+        loc: mu,
+        scale: sigma,
+        mean_ll,
+    }
+}
+
+/// Fit a Laplacian by maximum likelihood (location = mean here; the
+/// true MLE location is the median, but network weight distributions are
+/// symmetric enough that the paper uses the mean — we follow it).
+pub fn fit_laplacian(xs: &[f32]) -> Fit {
+    let mu = stats::mean(xs);
+    let b = stats::mean_abs_dev(xs).max(1e-12);
+    // Mean LL of Laplace(mu, b) at scale MLE: −ln(2b) − 1.
+    let mean_ll = -(2.0 * b).ln() - 1.0;
+    Fit {
+        family: Family::Laplacian,
+        loc: mu,
+        scale: b,
+        mean_ll,
+    }
+}
+
+/// Fit both families and return (best, gaussian, laplacian).
+pub fn best_fit(xs: &[f32]) -> (Fit, Fit, Fit) {
+    let g = fit_gaussian(xs);
+    let l = fit_laplacian(xs);
+    let best = if l.mean_ll >= g.mean_ll { l } else { g };
+    (best, g, l)
+}
+
+/// Density of the fitted distribution at x (for plotting Fig 4's red
+/// overlay curves).
+pub fn density(fit: &Fit, x: f64) -> f64 {
+    match fit.family {
+        Family::Gaussian => {
+            let z = (x - fit.loc) / fit.scale;
+            (-0.5 * z * z).exp() / (fit.scale * (2.0 * std::f64::consts::PI).sqrt())
+        }
+        Family::Laplacian => {
+            (-((x - fit.loc).abs() / fit.scale)).exp() / (2.0 * fit.scale)
+        }
+    }
+}
+
+/// Excess kurtosis — a quick sanity statistic: ~0 for Gaussian, 3 for
+/// Laplacian. Used in tests and the Fig 4 report.
+pub fn excess_kurtosis(xs: &[f32]) -> f64 {
+    let m = stats::mean(xs);
+    let n = xs.len() as f64;
+    let m2: f64 = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n;
+    let m4: f64 = xs.iter().map(|&x| (x as f64 - m).powi(4)).sum::<f64>() / n;
+    m4 / (m2 * m2).max(1e-300) - 3.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn laplacian_samples_prefer_laplacian() {
+        let mut rng = Xoshiro256::new(1);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.laplacian(0.0, 0.3) as f32).collect();
+        let (best, _, l) = best_fit(&xs);
+        assert_eq!(best.family, Family::Laplacian);
+        assert!((l.scale - 0.3).abs() < 0.01);
+        assert!(excess_kurtosis(&xs) > 1.5);
+    }
+
+    #[test]
+    fn gaussian_samples_prefer_gaussian() {
+        let mut rng = Xoshiro256::new(2);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.normal_f32(0.0, 0.2)).collect();
+        let (best, g, _) = best_fit(&xs);
+        assert_eq!(best.family, Family::Gaussian);
+        assert!((g.scale - 0.2).abs() < 0.01);
+        assert!(excess_kurtosis(&xs).abs() < 0.3);
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        for fit in [
+            fit_gaussian(&[0.0, 1.0, -1.0, 0.5, -0.5]),
+            fit_laplacian(&[0.0, 1.0, -1.0, 0.5, -0.5]),
+        ] {
+            let dx = 0.001;
+            let total: f64 = (-20_000..20_000)
+                .map(|i| density(&fit, i as f64 * dx) * dx)
+                .sum();
+            assert!((total - 1.0).abs() < 1e-3, "{fit:?}: {total}");
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! One-dimensional k-means over network weights (paper §2.2).
+//!
+//! The paper clusters *all* weights and biases of the network in a 1-D
+//! (weight-value) k-means every 1000 training steps. For networks past
+//! ~1M parameters it clusters a 2% subsample instead (§3.3). Both paths
+//! are here.
+//!
+//! 1-D k-means admits a much faster Lloyd step than the general case:
+//! sort the values once, then each assignment step is a partition of the
+//! sorted array by center midpoints (binary search) and each update step
+//! is a segment mean via prefix sums — O(k log n) per iteration after the
+//! O(n log n) sort.
+
+use super::codebook::Codebook;
+use crate::util::rng::Xoshiro256;
+
+/// Configuration for the k-means weight clustering step.
+#[derive(Clone, Debug)]
+pub struct KMeansCfg {
+    /// Number of clusters (the paper's |W|).
+    pub k: usize,
+    /// Max Lloyd iterations.
+    pub max_iters: usize,
+    /// Early-stop when no center moves more than this.
+    pub tol: f64,
+    /// Fraction of values to subsample (1.0 = exact; the paper uses 0.02
+    /// for AlexNet-scale networks).
+    pub subsample: f64,
+}
+
+impl Default for KMeansCfg {
+    fn default() -> Self {
+        Self {
+            k: 1000,
+            max_iters: 40,
+            tol: 1e-7,
+            subsample: 1.0,
+        }
+    }
+}
+
+impl KMeansCfg {
+    pub fn with_k(k: usize) -> Self {
+        Self {
+            k,
+            ..Default::default()
+        }
+    }
+    pub fn subsampled(k: usize, frac: f64) -> Self {
+        Self {
+            k,
+            subsample: frac,
+            ..Default::default()
+        }
+    }
+}
+
+/// Run 1-D k-means over `values`, returning the codebook of centers.
+pub fn kmeans_1d(values: &[f32], cfg: &KMeansCfg, rng: &mut Xoshiro256) -> Codebook {
+    assert!(!values.is_empty(), "kmeans over empty values");
+    assert!(cfg.k >= 1);
+
+    // Optional subsampling (the paper's 2% trick for >1M-param nets).
+    let mut sample: Vec<f32> = if cfg.subsample < 1.0 {
+        let n = ((values.len() as f64) * cfg.subsample).ceil().max(cfg.k as f64) as usize;
+        let n = n.min(values.len());
+        rng.sample_indices(values.len(), n)
+            .into_iter()
+            .map(|i| values[i])
+            .collect()
+    } else {
+        values.to_vec()
+    };
+    sample.sort_by(|a, b| a.total_cmp(b));
+
+    let k = cfg.k.min(sample.len());
+
+    // Prefix sums for O(1) segment means.
+    let mut prefix = vec![0.0f64; sample.len() + 1];
+    for (i, &v) in sample.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + v as f64;
+    }
+
+    // Initialize centers at data quantiles: robust, deterministic, and a
+    // good match for the Laplacian-ish weight distributions (Fig 3/4).
+    let mut centers: Vec<f64> = (0..k)
+        .map(|i| {
+            let q = (i as f64 + 0.5) / k as f64;
+            sample[((q * sample.len() as f64) as usize).min(sample.len() - 1)] as f64
+        })
+        .collect();
+    centers.dedup();
+    // If the data has few distinct values, dedup may shrink the center
+    // set — that's correct (can't have more clusters than values).
+
+    for _ in 0..cfg.max_iters {
+        // Partition sorted sample by midpoints.
+        let mut max_move = 0.0f64;
+        let mut new_centers = Vec::with_capacity(centers.len());
+        let mut seg_start = 0usize;
+        for ci in 0..centers.len() {
+            let seg_end = if ci + 1 < centers.len() {
+                let mid = 0.5 * (centers[ci] + centers[ci + 1]);
+                // First index with value > mid.
+                seg_start + sample[seg_start..].partition_point(|&v| (v as f64) <= mid)
+            } else {
+                sample.len()
+            };
+            if seg_end > seg_start {
+                let mean = (prefix[seg_end] - prefix[seg_start]) / (seg_end - seg_start) as f64;
+                max_move = max_move.max((mean - centers[ci]).abs());
+                new_centers.push(mean);
+            } else {
+                // Empty cell: keep the center where it is.
+                new_centers.push(centers[ci]);
+            }
+            seg_start = seg_end;
+        }
+        centers = new_centers;
+        centers.sort_by(|a, b| a.total_cmp(b));
+        if max_move < cfg.tol {
+            break;
+        }
+    }
+
+    Codebook::new(centers.into_iter().map(|c| c as f32).collect())
+}
+
+/// Convenience: cluster and immediately replace values with centroids
+/// (the paper's periodic quantization step), returning the codebook.
+pub fn cluster_and_replace(
+    values: &mut [f32],
+    cfg: &KMeansCfg,
+    rng: &mut Xoshiro256,
+) -> Codebook {
+    let cb = kmeans_1d(values, cfg, rng);
+    cb.quantize_slice(values);
+    cb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::unique_values;
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let mut rng = Xoshiro256::new(1);
+        let mut values = Vec::new();
+        for &c in &[-2.0f32, 0.0, 3.0] {
+            for _ in 0..500 {
+                values.push(c + rng.normal_f32(0.0, 0.05));
+            }
+        }
+        let cb = kmeans_1d(&values, &KMeansCfg::with_k(3), &mut rng);
+        assert_eq!(cb.len(), 3);
+        let c = cb.centers();
+        assert!((c[0] + 2.0).abs() < 0.05, "{c:?}");
+        assert!(c[1].abs() < 0.05, "{c:?}");
+        assert!((c[2] - 3.0).abs() < 0.05, "{c:?}");
+    }
+
+    #[test]
+    fn replacement_reduces_unique_count() {
+        let mut rng = Xoshiro256::new(2);
+        let mut values: Vec<f32> = (0..20_000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let cb = cluster_and_replace(&mut values, &KMeansCfg::with_k(100), &mut rng);
+        assert!(cb.len() <= 100);
+        assert!(unique_values(&values, 0.0) <= 100);
+    }
+
+    #[test]
+    fn k_larger_than_n_is_fine() {
+        let mut rng = Xoshiro256::new(3);
+        let values = vec![1.0f32, 2.0, 3.0];
+        let cb = kmeans_1d(&values, &KMeansCfg::with_k(10), &mut rng);
+        assert!(cb.len() <= 3);
+        assert_eq!(cb.l2_error(&values), 0.0);
+    }
+
+    #[test]
+    fn subsampled_close_to_exact_on_smooth_dist() {
+        let mut rng = Xoshiro256::new(4);
+        let values: Vec<f32> = (0..100_000)
+            .map(|_| rng.laplacian(0.0, 0.3) as f32)
+            .collect();
+        let exact = kmeans_1d(&values, &KMeansCfg::with_k(32), &mut rng);
+        let sub = kmeans_1d(&values, &KMeansCfg::subsampled(32, 0.02), &mut rng);
+        let e_exact = exact.l2_error(&values);
+        let e_sub = sub.l2_error(&values);
+        // Subsampling costs accuracy but should be in the same ballpark
+        // (the paper reports ~3% task-accuracy loss from the 2% sample).
+        assert!(
+            e_sub < e_exact * 2.0,
+            "exact {e_exact} vs subsampled {e_sub}"
+        );
+    }
+
+    #[test]
+    fn lloyd_never_increases_l2_error() {
+        use crate::util::prop::check;
+        check("kmeans l2 error <= quantile-init error", 24, |g| {
+            let values = g.vec_normal(50, 4000, 1.0);
+            let k = g.usize_in(2, 64);
+            let mut rng = g.rng().fork();
+            let cb = kmeans_1d(&values, &KMeansCfg::with_k(k), &mut rng);
+            // Compare against the quantile initialization it started from.
+            let mut sorted = values.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            let init: Vec<f32> = (0..k)
+                .map(|i| {
+                    let q = (i as f64 + 0.5) / k as f64;
+                    sorted[((q * sorted.len() as f64) as usize).min(sorted.len() - 1)]
+                })
+                .collect();
+            let init_cb = Codebook::new(init);
+            assert!(
+                cb.l2_error(&values) <= init_cb.l2_error(&values) + 1e-9,
+                "lloyd made things worse"
+            );
+        });
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let values: Vec<f32> = (0..5000).map(|i| ((i * 37) % 100) as f32 / 10.0).collect();
+        let a = kmeans_1d(&values, &KMeansCfg::with_k(16), &mut Xoshiro256::new(7));
+        let b = kmeans_1d(&values, &KMeansCfg::with_k(16), &mut Xoshiro256::new(7));
+        assert_eq!(a.centers(), b.centers());
+    }
+}

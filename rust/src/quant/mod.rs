@@ -1,0 +1,27 @@
+//! The paper's quantization core (§2):
+//!
+//! * [`activation`] — quantized non-linearities (tanhD, relu6D, …) with
+//!   straight-through analytic-derivative backward (§2.1, Fig 1/2).
+//! * [`codebook`] — the |W| unique weight values + assignment.
+//! * [`kmeans`] — periodic adaptive 1-D k-means clustering, exact and
+//!   2%-subsampled (§2.2, §3.3).
+//! * [`laplacian`] — closed-form Laplacian model-based clustering with
+//!   the paper's `b` nudges (§2.2, Fig 5; best AlexNet result).
+//! * [`fit`] — Laplacian/Gaussian fits of weight histograms (Fig 4).
+//! * [`scheme`] — unified scheme enum incl. Table 2 prior-work baselines
+//!   (DoReFa, QNN/BNN, XNOR, ternary, WAGE, uniform fixed-point).
+
+pub mod activation;
+pub mod alt_cluster;
+pub mod codebook;
+pub mod fit;
+pub mod kmeans;
+pub mod laplacian;
+pub mod scheme;
+
+pub use activation::{ActKind, QuantAct};
+pub use alt_cluster::{hac_1d, lvq_1d};
+pub use codebook::Codebook;
+pub use kmeans::{cluster_and_replace, kmeans_1d, KMeansCfg};
+pub use laplacian::{ErrNorm, LaplacianQuant};
+pub use scheme::{Granularity, WeightScheme};

@@ -1,0 +1,358 @@
+//! Reusable experiment runners behind the figure/table benches
+//! (DESIGN.md §4 experiment index). Each runner trains with the paper's
+//! procedure and returns the metrics the corresponding figure/table
+//! reports.
+
+use crate::data::{digits, images, parabola};
+use crate::inference::{CodebookSet, CompileCfg, LutNetwork};
+use crate::nn::{
+    accuracy, recall_at_k, ActSpec, L2Loss, LayerSpec, NetSpec, Network, SoftmaxCrossEntropy,
+    Target,
+};
+use crate::quant::Codebook;
+use crate::train::{ClusterCfg, TrainCfg, TrainResult, Trainer};
+use crate::util::rng::Xoshiro256;
+
+/// Outcome of a classification experiment.
+#[derive(Clone, Debug)]
+pub struct ClassResult {
+    pub accuracy: f64,
+    pub recall1: f64,
+    pub recall5: f64,
+    pub final_loss: f64,
+    pub unique_weights: usize,
+}
+
+/// Common experiment knobs.
+#[derive(Clone, Debug)]
+pub struct ExpCfg {
+    pub steps: u64,
+    pub batch: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub cluster: Option<ClusterCfg>,
+    /// Quantize network inputs to this many uniform levels (Table 1's
+    /// right-hand columns). None = raw inputs.
+    pub input_levels: Option<usize>,
+}
+
+impl ExpCfg {
+    pub fn quick(steps: u64, seed: u64) -> Self {
+        Self {
+            steps,
+            batch: 32,
+            lr: 3e-3,
+            seed,
+            cluster: None,
+            input_levels: None,
+        }
+    }
+
+    pub fn with_cluster(mut self, c: ClusterCfg) -> Self {
+        self.cluster = Some(c);
+        self
+    }
+}
+
+fn quantize_input(x: &crate::tensor::Tensor, levels: Option<usize>) -> crate::tensor::Tensor {
+    match levels {
+        None => x.clone(),
+        Some(l) => {
+            let q = crate::fixedpoint::UniformQuant::unit(l);
+            x.map(|v| q.quantize(v))
+        }
+    }
+}
+
+/// Train a digits MLP (the Fig 6 axis: hidden units × activation ×
+/// |W|) and evaluate on a held-out set.
+pub fn run_digits(
+    hidden: &[usize],
+    act: ActSpec,
+    cfg: &ExpCfg,
+) -> (ClassResult, Network, Option<Codebook>) {
+    let spec = NetSpec::mlp("digits", digits::FEATURES, hidden, digits::CLASSES, act);
+    let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(cfg.seed));
+    let tcfg = TrainCfg {
+        optimizer: crate::train::OptimizerCfg::adam(cfg.lr),
+        cluster: cfg.cluster.clone(),
+        lr_schedule: None,
+        steps: cfg.steps,
+        log_every: 0,
+        seed: cfg.seed,
+    };
+    let mut tr = Trainer::new(tcfg);
+    let dcfg = digits::DigitsCfg::default();
+    let batch = cfg.batch;
+    let in_levels = cfg.input_levels;
+    let r: TrainResult = tr.train(&mut net, &SoftmaxCrossEntropy, |rng| {
+        let (x, l) = digits::batch(batch, &dcfg, rng);
+        (quantize_input(&x, in_levels), Target::Labels(l))
+    });
+    let eval = digits::eval_set(500, 0xD161);
+    let logits = net.forward(&quantize_input(&eval.x, in_levels), false);
+    let res = ClassResult {
+        accuracy: accuracy(&logits, &eval.labels),
+        recall1: recall_at_k(&logits, &eval.labels, 1),
+        recall5: recall_at_k(&logits, &eval.labels, 5),
+        final_loss: r.final_loss,
+        unique_weights: crate::util::stats::unique_values(&net.flat_weights(), 0.0),
+    };
+    (res, net, r.codebook)
+}
+
+/// AlexNet-S: the scaled-down AlexNet analogue used for Table 1/2
+/// (conv-conv-pool-conv-pool-fc-fc on the 20-class ImageNet-sim task;
+/// both Laplacian-shaped conv layers and Gaussian-shaped fc layers).
+pub fn alexnet_s_spec(act: ActSpec, dropout: Option<f32>) -> NetSpec {
+    let mut layers = vec![
+        LayerSpec::Conv { k: 3, out_c: 12, stride: 1, pad: 1 },
+        LayerSpec::Act(act.clone()),
+        LayerSpec::MaxPool { k: 2, stride: 2 }, // 12×12
+        LayerSpec::Conv { k: 3, out_c: 24, stride: 1, pad: 1 },
+        LayerSpec::Act(act.clone()),
+        LayerSpec::MaxPool { k: 2, stride: 2 }, // 6×6
+        LayerSpec::Conv { k: 3, out_c: 32, stride: 1, pad: 1 },
+        LayerSpec::Act(act.clone()),
+        LayerSpec::Flatten, // 6*6*32 = 1152
+        LayerSpec::Dense { units: 192 },
+        LayerSpec::Act(act.clone()),
+    ];
+    if let Some(rate) = dropout {
+        layers.push(LayerSpec::Dropout { rate });
+    }
+    layers.push(LayerSpec::Dense { units: 128 });
+    layers.push(LayerSpec::Act(act));
+    if let Some(rate) = dropout {
+        layers.push(LayerSpec::Dropout { rate });
+    }
+    layers.push(LayerSpec::Dense { units: images::IM_CLASSES });
+    NetSpec {
+        name: "alexnet-s".into(),
+        input_shape: vec![images::IM_SIDE, images::IM_SIDE, images::IM_CHANNELS],
+        layers,
+        init_sd: None,
+    }
+}
+
+/// Train AlexNet-S on ImageNet-sim (Table 1 rows).
+pub fn run_alexnet_s(
+    act: ActSpec,
+    dropout: Option<f32>,
+    cfg: &ExpCfg,
+) -> (ClassResult, Network, Option<Codebook>) {
+    let spec = alexnet_s_spec(act, dropout);
+    let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(cfg.seed));
+    let tcfg = TrainCfg {
+        optimizer: crate::train::OptimizerCfg::rmsprop(cfg.lr), // paper: RMSProp for AlexNet
+        cluster: cfg.cluster.clone(),
+        lr_schedule: None,
+        steps: cfg.steps,
+        log_every: 0,
+        seed: cfg.seed,
+    };
+    let mut tr = Trainer::new(tcfg);
+    let batch = cfg.batch;
+    let in_levels = cfg.input_levels;
+    let r = tr.train(&mut net, &SoftmaxCrossEntropy, |rng| {
+        let (x, l) = images::imagenet_sim_batch(batch, rng);
+        (quantize_input(&x, in_levels), Target::Labels(l))
+    });
+    let (ex, el) = images::imagenet_sim_eval(400, 0xA1EC);
+    let logits = net.forward(&quantize_input(&ex, in_levels), false);
+    let res = ClassResult {
+        accuracy: accuracy(&logits, &el),
+        recall1: recall_at_k(&logits, &el, 1),
+        recall5: recall_at_k(&logits, &el, 5),
+        final_loss: r.final_loss,
+        unique_weights: crate::util::stats::unique_values(&net.flat_weights(), 0.0),
+    };
+    (res, net, r.codebook)
+}
+
+/// Auto-encoder architectures for Fig 7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AeArch {
+    FullyConnected,
+    Conv,
+}
+
+/// Fig 7: train an auto-encoder on textured patches; returns final
+/// eval L2 error (per pixel).
+pub fn run_autoencoder(
+    arch: AeArch,
+    n_scale: f32,
+    act: ActSpec,
+    cfg: &ExpCfg,
+) -> (f64, Network, Option<Codebook>) {
+    let n = |base: usize| ((base as f32 * n_scale).round() as usize).max(2);
+    let spec = match arch {
+        AeArch::FullyConnected => {
+            // Paper §3.2: 7 hidden layers (50n,50n,40n,20n,40n,50n,50n)
+            // at our patch scale.
+            let mut layers = Vec::new();
+            for &h in &[n(50), n(50), n(40), n(20), n(40), n(50), n(50)] {
+                layers.push(LayerSpec::Dense { units: h });
+                layers.push(LayerSpec::Act(act.clone()));
+            }
+            layers.push(LayerSpec::Dense { units: images::AE_FEATURES });
+            NetSpec {
+                name: "ae-fc".into(),
+                input_shape: vec![images::AE_FEATURES],
+                layers,
+                init_sd: None,
+            }
+        }
+        AeArch::Conv => {
+            // Conv encoder + 1×1 decoder head (kept spatial so the
+            // output matches the input patch exactly).
+            NetSpec {
+                name: "ae-conv".into(),
+                input_shape: vec![images::AE_SIDE, images::AE_SIDE, images::AE_CHANNELS],
+                layers: vec![
+                    LayerSpec::Conv { k: 2, out_c: n(12), stride: 1, pad: 1 },
+                    LayerSpec::Act(act.clone()),
+                    LayerSpec::Conv { k: 2, out_c: n(10), stride: 1, pad: 0 },
+                    LayerSpec::Act(act.clone()),
+                    LayerSpec::Conv { k: 1, out_c: n(5), stride: 1, pad: 0 },
+                    LayerSpec::Act(act.clone()),
+                    LayerSpec::Conv { k: 1, out_c: images::AE_CHANNELS, stride: 1, pad: 0 },
+                    LayerSpec::Flatten,
+                ],
+                init_sd: None,
+            }
+        }
+    };
+    let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(cfg.seed));
+    let tcfg = TrainCfg {
+        optimizer: crate::train::OptimizerCfg::adam(cfg.lr),
+        cluster: cfg.cluster.clone(),
+        lr_schedule: None,
+        steps: cfg.steps,
+        log_every: 0,
+        seed: cfg.seed,
+    };
+    let mut tr = Trainer::new(tcfg);
+    let batch = cfg.batch;
+    let is_conv = arch == AeArch::Conv;
+    let r = tr.train(&mut net, &L2Loss, |rng| {
+        let x = if is_conv {
+            images::ae_batch_nhwc(batch, rng)
+        } else {
+            images::ae_batch(batch, rng)
+        };
+        let flat = x.reshape(&[batch, images::AE_FEATURES]);
+        (x, Target::Values(flat))
+    });
+    // Eval.
+    let mut erng = Xoshiro256::new(0xAEAE);
+    let ex = if is_conv {
+        images::ae_batch_nhwc(128, &mut erng)
+    } else {
+        images::ae_batch(128, &mut erng)
+    };
+    let out = net.forward(&ex, false);
+    let err = out.mse(&ex.reshape(&[128, images::AE_FEATURES]));
+    (err, net, r.codebook)
+}
+
+/// Fig 2: fit the parabola with 2 hidden units; returns eval MSE and the
+/// fitted curve for plotting.
+pub fn run_parabola(act: ActSpec, steps: u64, seed: u64) -> (f64, Vec<f64>) {
+    let spec = NetSpec {
+        name: "parabola".into(),
+        input_shape: vec![1],
+        layers: vec![
+            LayerSpec::Dense { units: 2 },
+            LayerSpec::Act(act),
+            LayerSpec::Dense { units: 1 },
+        ],
+        init_sd: None,
+    };
+    let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(seed));
+    let (x, y) = parabola::dataset(64);
+    let mut tr = Trainer::new(TrainCfg {
+        seed,
+        ..TrainCfg::adam(0.01, steps)
+    });
+    let xc = x.clone();
+    let yc = y.clone();
+    let _ = tr.train(&mut net, &L2Loss, move |_| {
+        (xc.clone(), Target::Values(yc.clone()))
+    });
+    let fit = net.forward(&x, false);
+    let mse = fit.mse(&y);
+    (mse, fit.data().iter().map(|&v| v as f64).collect())
+}
+
+/// Compile a clustered network to the LUT engine and measure its eval
+/// agreement with the float path (used by Table 1-style reporting and
+/// the memory bench).
+pub fn compile_lut(
+    net: &Network,
+    cb: Codebook,
+    input_levels: usize,
+) -> anyhow::Result<LutNetwork> {
+    LutNetwork::compile(
+        net,
+        &CodebookSet::Global(cb),
+        &CompileCfg {
+            input_levels: Some(input_levels),
+            ..CompileCfg::default()
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::ClusterCfg;
+
+    #[test]
+    fn digits_runner_learns_above_chance() {
+        let (r, _, _) = run_digits(&[16], ActSpec::tanh_d(32), &ExpCfg::quick(150, 1));
+        assert!(r.accuracy > 0.3, "acc {}", r.accuracy);
+    }
+
+    #[test]
+    fn digits_runner_with_cluster_quantizes() {
+        let cfg = ExpCfg::quick(120, 2).with_cluster(ClusterCfg {
+            every: 50,
+            ..ClusterCfg::kmeans(64)
+        });
+        let (r, _, cb) = run_digits(&[8], ActSpec::tanh_d(16), &cfg);
+        assert!(cb.is_some());
+        assert!(r.unique_weights <= 64);
+    }
+
+    #[test]
+    fn parabola_runner_small_error_with_tanh() {
+        let (mse, fit) = run_parabola(ActSpec::tanh(), 3000, 3);
+        assert_eq!(fit.len(), 64);
+        assert!(mse < 0.01, "mse {mse}");
+    }
+
+    #[test]
+    fn alexnet_s_builds_and_counts_params() {
+        let spec = alexnet_s_spec(ActSpec::relu6_d(32), None);
+        let net = Network::from_spec(&spec, &mut Xoshiro256::new(4));
+        // Big enough to exercise the subsampled k-means path meaningfully.
+        assert!(net.num_params() > 200_000, "{}", net.num_params());
+    }
+
+    #[test]
+    fn autoencoder_runner_reconstructs_roughly() {
+        let (err, _, _) = run_autoencoder(
+            AeArch::FullyConnected,
+            0.5,
+            ActSpec::tanh(),
+            &ExpCfg {
+                lr: 1e-3,
+                ..ExpCfg::quick(150, 5)
+            },
+        );
+        // Untrained error on unit-range patches is ~variance (≈0.05-0.1);
+        // a short training run must get visibly below that.
+        assert!(err < 0.05, "l2 err {err}");
+    }
+}

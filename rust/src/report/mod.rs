@@ -1,0 +1,9 @@
+//! Reporting: ASCII tables, histograms and line plots used by the
+//! figure/table regeneration benches (no plotting libs offline).
+
+pub mod experiments;
+pub mod plot;
+pub mod table;
+
+pub use plot::{ascii_hist, ascii_plot, Series};
+pub use table::TableBuilder;

@@ -1,0 +1,139 @@
+//! ASCII plots: line series (training curves, Fig 5 center curves) and
+//! histograms (Fig 3/4 weight distributions).
+
+/// A named data series.
+pub struct Series {
+    pub name: String,
+    pub ys: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: &str, ys: Vec<f64>) -> Self {
+        Self {
+            name: name.to_string(),
+            ys,
+        }
+    }
+}
+
+/// Render multiple series as an ASCII line chart (shared y-scale,
+/// x = sample index resampled to the width).
+pub fn ascii_plot(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for s in series {
+        for &y in &s.ys {
+            if y.is_finite() {
+                lo = lo.min(y);
+                hi = hi.max(y);
+            }
+        }
+    }
+    if !lo.is_finite() || hi <= lo {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        if s.ys.is_empty() {
+            continue;
+        }
+        let mark = marks[si % marks.len()];
+        for px in 0..width {
+            // Resample.
+            let t = px as f64 / (width - 1).max(1) as f64;
+            let idx = (t * (s.ys.len() - 1) as f64).round() as usize;
+            let y = s.ys[idx];
+            if !y.is_finite() {
+                continue;
+            }
+            let fy = (y - lo) / (hi - lo);
+            let py = ((1.0 - fy) * (height - 1) as f64).round() as usize;
+            grid[py.min(height - 1)][px] = mark;
+        }
+    }
+    let mut out = format!("\n-- {title} --  [{lo:.4} .. {hi:.4}]\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], s.name));
+    }
+    out
+}
+
+/// Render a histogram of values as vertical ASCII bars with log-scale
+/// counts (the paper's Fig 3 uses log-scale y "to show lesser occupied
+/// bins").
+pub fn ascii_hist(title: &str, values: &[f32], bins: usize, width: usize) -> String {
+    use crate::util::stats::{min_max, Histogram};
+    if values.is_empty() {
+        return format!("-- {title} -- (empty)\n");
+    }
+    let (lo, hi) = min_max(values);
+    let (lo, hi) = if hi > lo {
+        (lo as f64, hi as f64 + 1e-9)
+    } else {
+        (lo as f64 - 0.5, hi as f64 + 0.5)
+    };
+    let h = Histogram::build(values, lo, hi, bins);
+    let max_log = h
+        .counts
+        .iter()
+        .map(|&c| ((c + 1) as f64).ln())
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    let mut out = format!(
+        "\n-- {title} --  n={} range=[{lo:.4},{hi:.4}] occupied_bins={}\n",
+        h.total,
+        h.occupied()
+    );
+    for (i, &c) in h.counts.iter().enumerate() {
+        let centers = h.centers();
+        let bar_len = (((c + 1) as f64).ln() / max_log * width as f64) as usize;
+        out.push_str(&format!(
+            "{:>9.4} |{} {}\n",
+            centers[i],
+            "#".repeat(bar_len),
+            c
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_renders_all_series() {
+        let s = vec![
+            Series::new("up", (0..50).map(|i| i as f64).collect()),
+            Series::new("down", (0..50).map(|i| 50.0 - i as f64).collect()),
+        ];
+        let p = ascii_plot("test", &s, 40, 10);
+        assert!(p.contains("up") && p.contains("down"));
+        assert!(p.contains('*') && p.contains('o'));
+        assert_eq!(p.lines().filter(|l| l.starts_with('|')).count(), 10);
+    }
+
+    #[test]
+    fn hist_renders() {
+        let vals: Vec<f32> = (0..1000).map(|i| ((i % 100) as f32) / 50.0 - 1.0).collect();
+        let h = ascii_hist("w", &vals, 10, 30);
+        assert!(h.contains("n=1000"));
+        assert!(h.lines().count() > 10);
+    }
+
+    #[test]
+    fn degenerate_inputs_no_panic() {
+        let _ = ascii_plot("flat", &[Series::new("c", vec![1.0; 5])], 20, 5);
+        let _ = ascii_hist("one", &[0.5], 5, 10);
+        let _ = ascii_hist("empty", &[], 5, 10);
+    }
+}

@@ -1,0 +1,152 @@
+//! The artifact manifest: `artifacts/manifest.json` written by
+//! `python/compile/aot.py`, describing each exported HLO graph — file,
+//! input order/shapes/dtypes, outputs, and model metadata. The Rust side
+//! validates shapes against the manifest before feeding PJRT.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One named tensor slot (input or output) of an exported graph.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Slot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl Slot {
+    fn from_json(j: &Json) -> Slot {
+        Slot {
+            name: j.get("name").as_str().unwrap_or("?").to_string(),
+            shape: j
+                .get("shape")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default(),
+            dtype: j.get("dtype").as_str().unwrap_or("f32").to_string(),
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One exported graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub inputs: Vec<Slot>,
+    pub outputs: Vec<Slot>,
+    /// Free-form metadata (model config, levels, |W|, …).
+    pub meta: Json,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let entries = j
+            .get("graphs")
+            .as_arr()
+            .context("manifest missing 'graphs' array")?
+            .iter()
+            .map(|g| ArtifactEntry {
+                name: g.get("name").as_str().unwrap_or("?").to_string(),
+                file: g.get("file").as_str().unwrap_or("?").to_string(),
+                inputs: g
+                    .get("inputs")
+                    .as_arr()
+                    .map(|a| a.iter().map(Slot::from_json).collect())
+                    .unwrap_or_default(),
+                outputs: g
+                    .get("outputs")
+                    .as_arr()
+                    .map(|a| a.iter().map(Slot::from_json).collect())
+                    .unwrap_or_default(),
+                meta: g.get("meta").clone(),
+            })
+            .collect();
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| {
+                format!(
+                    "graph {name:?} not in manifest (have: {:?})",
+                    self.entries.iter().map(|e| &e.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "graphs": [
+        {
+          "name": "train_step",
+          "file": "train_step.hlo.txt",
+          "inputs": [
+            {"name": "w0", "shape": [256, 64], "dtype": "f32"},
+            {"name": "x", "shape": [32, 256], "dtype": "f32"}
+          ],
+          "outputs": [
+            {"name": "w0_new", "shape": [256, 64], "dtype": "f32"},
+            {"name": "loss", "shape": [], "dtype": "f32"}
+          ],
+          "meta": {"levels": 32}
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let e = m.get("train_step").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].shape, vec![256, 64]);
+        assert_eq!(e.inputs[0].elems(), 256 * 64);
+        assert_eq!(e.outputs[1].shape, Vec::<usize>::new());
+        assert_eq!(e.meta.get("levels").as_usize(), Some(32));
+        assert_eq!(m.hlo_path(e), PathBuf::from("/tmp/train_step.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_graph_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_json() {
+        assert!(Manifest::parse("{", PathBuf::from("/tmp")).is_err());
+        assert!(Manifest::parse("{}", PathBuf::from("/tmp")).is_err());
+    }
+}

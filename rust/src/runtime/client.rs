@@ -1,0 +1,157 @@
+//! The PJRT client wrapper: HLO text → compiled executable → execution
+//! with [`Tensor`] inputs/outputs. Pattern from /opt/xla-example/load_hlo.
+
+use super::artifact::{ArtifactEntry, Manifest};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client plus compiled-graph cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled graph with its manifest entry (for shape validation).
+pub struct LoadedGraph {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one graph from a manifest.
+    pub fn load(&self, manifest: &Manifest, name: &str) -> Result<LoadedGraph> {
+        let entry = manifest.get(name)?.clone();
+        let path = manifest.hlo_path(&entry);
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling graph {name:?}"))?;
+        Ok(LoadedGraph { entry, exe })
+    }
+}
+
+impl LoadedGraph {
+    /// Execute with f32 tensors in the manifest's input order; returns
+    /// the outputs in manifest order. The exported graphs always return
+    /// a tuple (lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "graph {} expects {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, slot) in inputs.iter().zip(&self.entry.inputs) {
+            anyhow::ensure!(
+                t.shape() == slot.shape.as_slice(),
+                "graph {} input {:?}: shape {:?} != manifest {:?}",
+                self.entry.name,
+                slot.name,
+                t.shape(),
+                slot.shape
+            );
+            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(t.data())
+                .reshape(&dims)
+                .with_context(|| format!("building literal for {:?}", slot.name))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.entry.name))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .context("no output buffer")?;
+        let lit = first.to_literal_sync().context("fetching result")?;
+        let parts = lit.to_tuple().context("decomposing output tuple")?;
+        anyhow::ensure!(
+            parts.len() == self.entry.outputs.len(),
+            "graph {} returned {} outputs, manifest says {}",
+            self.entry.name,
+            parts.len(),
+            self.entry.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, slot) in parts.into_iter().zip(&self.entry.outputs) {
+            let v: Vec<f32> = lit
+                .to_vec()
+                .with_context(|| format!("reading output {:?}", slot.name))?;
+            anyhow::ensure!(
+                v.len() == slot.elems(),
+                "output {:?}: {} elems vs manifest {:?}",
+                slot.name,
+                v.len(),
+                slot.shape
+            );
+            out.push(Tensor::from_vec(&slot.shape, v));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests exercise the real PJRT path and need `make artifacts`
+    //! to have run. They skip (with a note) when artifacts are missing so
+    //! `cargo test` works in a fresh checkout.
+    use super::*;
+
+    fn artifacts_dir() -> Option<Manifest> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn smoke_graph_roundtrip() {
+        let Some(m) = artifacts_dir() else {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        };
+        if m.get("smoke").is_err() {
+            eprintln!("SKIP: no smoke graph in manifest");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let g = rt.load(&m, "smoke").unwrap();
+        // smoke: f(x, y) = (x @ y + 2, x + y) over f32[2,2].
+        let x = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let y = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let out = g.run(&[&x, &y]).unwrap();
+        assert_eq!(out[0].data(), &[5., 5., 9., 9.]);
+        assert_eq!(out[1].data(), &[2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let Some(m) = artifacts_dir() else {
+            eprintln!("SKIP: artifacts/ missing");
+            return;
+        };
+        if m.get("smoke").is_err() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let g = rt.load(&m, "smoke").unwrap();
+        let bad = Tensor::zeros(&[3, 3]);
+        let y = Tensor::zeros(&[2, 2]);
+        assert!(g.run(&[&bad, &y]).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/`
+//! (HLO **text** — see DESIGN.md and /opt/xla-example/README.md for why
+//! text, not serialized protos) and executes them from Rust. Python is
+//! never on this path; `make artifacts` runs once at build time.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactEntry, Manifest};
+pub use client::{LoadedGraph, Runtime};

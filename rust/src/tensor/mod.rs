@@ -1,0 +1,8 @@
+//! Dense tensor substrate: row-major f32 ND tensors plus the linear
+//! algebra the training/inference stacks need (matmul, im2col conv).
+
+mod ops;
+mod tensor;
+
+pub use ops::*;
+pub use tensor::Tensor;

@@ -1,0 +1,466 @@
+//! Linear-algebra kernels over [`Tensor`]: blocked matmul, im2col/col2im
+//! convolution, pooling. These are the float reference path; the paper's
+//! contribution (the integer LUT path) lives in `crate::inference::lut`.
+
+use super::Tensor;
+
+/// C = A·B for rank-2 tensors, [m,k]·[k,n] → [m,n].
+///
+/// Inner loop is written i-k-j over row-major data so the compiler can
+/// auto-vectorize the j loop (this matters: the float engine is the
+/// baseline the paper's LUT engine is compared against in §4).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2, "matmul lhs must be rank-2");
+    assert_eq!(b.rank(), 2, "matmul rhs must be rank-2");
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (k2, n) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// C = Aᵀ·B, [k,m]ᵀ·[k,n] → [m,n] without materializing the transpose.
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (k, m) = (a.dim(0), a.dim(1));
+    let (k2, n) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for p in 0..k {
+        let arow = &ad[p * m..(p + 1) * m];
+        let brow = &bd[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut od[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// C = A·Bᵀ, [m,k]·[n,k]ᵀ → [m,n] without materializing the transpose.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (n, k2) = (b.dim(0), b.dim(1));
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            od[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Add a bias row-vector [n] to every row of a [m,n] tensor, in place.
+pub fn add_bias(x: &mut Tensor, bias: &Tensor) {
+    assert_eq!(x.rank(), 2);
+    assert_eq!(bias.rank(), 1);
+    let (m, n) = (x.dim(0), x.dim(1));
+    assert_eq!(bias.dim(0), n);
+    let bd = bias.data().to_vec();
+    let xd = x.data_mut();
+    for i in 0..m {
+        for j in 0..n {
+            xd[i * n + j] += bd[j];
+        }
+    }
+}
+
+/// Sum over rows: [m,n] → [n] (bias gradient).
+pub fn sum_rows(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    let (m, n) = (x.dim(0), x.dim(1));
+    let mut out = Tensor::zeros(&[n]);
+    let od = out.data_mut();
+    for i in 0..m {
+        let row = &x.data()[i * n..(i + 1) * n];
+        for j in 0..n {
+            od[j] += row[j];
+        }
+    }
+    out
+}
+
+/// Parameters of a 2-D convolution (NHWC layout).
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dSpec {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub k_h: usize,
+    pub k_w: usize,
+    pub out_c: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dSpec {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k_h) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k_w) / self.stride + 1
+    }
+    /// Number of input values feeding one output unit (the fan-in that
+    /// the fixed-point overflow analysis needs).
+    pub fn fan_in(&self) -> usize {
+        self.k_h * self.k_w * self.in_c
+    }
+}
+
+/// im2col: [B,H,W,C] → [B·OH·OW, KH·KW·C] patch matrix.
+pub fn im2col(x: &Tensor, s: &Conv2dSpec) -> Tensor {
+    assert_eq!(x.rank(), 4, "im2col expects NHWC");
+    let b = x.dim(0);
+    assert_eq!(x.dim(1), s.in_h);
+    assert_eq!(x.dim(2), s.in_w);
+    assert_eq!(x.dim(3), s.in_c);
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let patch = s.k_h * s.k_w * s.in_c;
+    let mut out = Tensor::zeros(&[b * oh * ow, patch]);
+    let xd = x.data();
+    let od = out.data_mut();
+    let row_stride = s.in_w * s.in_c;
+    let img_stride = s.in_h * row_stride;
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let orow = ((bi * oh + oy) * ow + ox) * patch;
+                let iy0 = (oy * s.stride) as isize - s.pad as isize;
+                let ix0 = (ox * s.stride) as isize - s.pad as isize;
+                for ky in 0..s.k_h {
+                    let iy = iy0 + ky as isize;
+                    if iy < 0 || iy >= s.in_h as isize {
+                        continue; // zero padding: leave zeros
+                    }
+                    for kx in 0..s.k_w {
+                        let ix = ix0 + kx as isize;
+                        if ix < 0 || ix >= s.in_w as isize {
+                            continue;
+                        }
+                        let src = bi * img_stride + iy as usize * row_stride + ix as usize * s.in_c;
+                        let dst = orow + (ky * s.k_w + kx) * s.in_c;
+                        od[dst..dst + s.in_c].copy_from_slice(&xd[src..src + s.in_c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// col2im: scatter-add the patch-matrix gradient back to [B,H,W,C].
+pub fn col2im(cols: &Tensor, batch: usize, s: &Conv2dSpec) -> Tensor {
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let patch = s.k_h * s.k_w * s.in_c;
+    assert_eq!(cols.shape(), &[batch * oh * ow, patch]);
+    let mut out = Tensor::zeros(&[batch, s.in_h, s.in_w, s.in_c]);
+    let cd = cols.data();
+    let od = out.data_mut();
+    let row_stride = s.in_w * s.in_c;
+    let img_stride = s.in_h * row_stride;
+    for bi in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let crow = ((bi * oh + oy) * ow + ox) * patch;
+                let iy0 = (oy * s.stride) as isize - s.pad as isize;
+                let ix0 = (ox * s.stride) as isize - s.pad as isize;
+                for ky in 0..s.k_h {
+                    let iy = iy0 + ky as isize;
+                    if iy < 0 || iy >= s.in_h as isize {
+                        continue;
+                    }
+                    for kx in 0..s.k_w {
+                        let ix = ix0 + kx as isize;
+                        if ix < 0 || ix >= s.in_w as isize {
+                            continue;
+                        }
+                        let dst = bi * img_stride + iy as usize * row_stride + ix as usize * s.in_c;
+                        let src = crow + (ky * s.k_w + kx) * s.in_c;
+                        for c in 0..s.in_c {
+                            od[dst + c] += cd[src + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2×2 (or k×k) max pooling over NHWC; returns (output, argmax indices
+/// into the flattened input) so backward can route gradients.
+pub fn maxpool(x: &Tensor, k: usize, stride: usize) -> (Tensor, Vec<u32>) {
+    assert_eq!(x.rank(), 4);
+    let (b, h, w, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(&[b, oh, ow, c]);
+    let mut arg = vec![0u32; out.len()];
+    let xd = x.data();
+    let od = out.data_mut();
+    let mut oidx = 0;
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_at = 0usize;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = oy * stride + ky;
+                            let ix = ox * stride + kx;
+                            let at = ((bi * h + iy) * w + ix) * c + ci;
+                            if xd[at] > best {
+                                best = xd[at];
+                                best_at = at;
+                            }
+                        }
+                    }
+                    od[oidx] = best;
+                    arg[oidx] = best_at as u32;
+                    oidx += 1;
+                }
+            }
+        }
+    }
+    (out, arg)
+}
+
+/// Backward of maxpool: route each output gradient to its argmax input.
+pub fn maxpool_backward(grad_out: &Tensor, arg: &[u32], input_shape: &[usize]) -> Tensor {
+    let mut gx = Tensor::zeros(input_shape);
+    let gd = gx.data_mut();
+    for (g, &a) in grad_out.data().iter().zip(arg) {
+        gd[a as usize] += g;
+    }
+    gx
+}
+
+/// Average pooling over NHWC.
+pub fn avgpool(x: &Tensor, k: usize, stride: usize) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    let (b, h, w, c) = (x.dim(0), x.dim(1), x.dim(2), x.dim(3));
+    let oh = (h - k) / stride + 1;
+    let ow = (w - k) / stride + 1;
+    let mut out = Tensor::zeros(&[b, oh, ow, c]);
+    let norm = 1.0 / (k * k) as f32;
+    let xd = x.data();
+    let od = out.data_mut();
+    let mut oidx = 0;
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut acc = 0.0;
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = oy * stride + ky;
+                            let ix = ox * stride + kx;
+                            acc += xd[((bi * h + iy) * w + ix) * c + ci];
+                        }
+                    }
+                    od[oidx] = acc * norm;
+                    oidx += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![5., 6., 7., 8.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let eye = Tensor::from_vec(&[3, 3], vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]);
+        assert_eq!(matmul(&a, &eye), a);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(2);
+        let a = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let b = Tensor::randn(&[6, 5], 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        let c_tn = matmul_tn(&a.transpose(), &b);
+        let c_nt = matmul_nt(&a, &b.transpose());
+        assert!(c.mse(&c_tn) < 1e-10);
+        assert!(c.mse(&c_nt) < 1e-10);
+    }
+
+    #[test]
+    fn bias_and_sum_rows() {
+        let mut x = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        add_bias(&mut x, &Tensor::vec1(&[10., 20.]));
+        assert_eq!(x.data(), &[11., 22., 13., 24.]);
+        assert_eq!(sum_rows(&x).data(), &[24., 46.]);
+    }
+
+    fn spec_3x3() -> Conv2dSpec {
+        Conv2dSpec {
+            in_h: 4,
+            in_w: 4,
+            in_c: 1,
+            k_h: 3,
+            k_w: 3,
+            out_c: 1,
+            stride: 1,
+            pad: 0,
+        }
+    }
+
+    #[test]
+    fn im2col_shapes_and_values() {
+        let s = spec_3x3();
+        let x = Tensor::from_vec(&[1, 4, 4, 1], (0..16).map(|i| i as f32).collect());
+        let cols = im2col(&x, &s);
+        assert_eq!(cols.shape(), &[4, 9]); // 2x2 output positions
+        // First patch = rows 0-2, cols 0-2 of the image.
+        assert_eq!(cols.row(0), &[0., 1., 2., 4., 5., 6., 8., 9., 10.]);
+        // Last patch = rows 1-3, cols 1-3.
+        assert_eq!(cols.row(3), &[5., 6., 7., 9., 10., 11., 13., 14., 15.]);
+    }
+
+    #[test]
+    fn conv_via_im2col_matches_direct() {
+        // 2x2 all-ones kernel on a known image == sum of each 2x2 patch.
+        let s = Conv2dSpec {
+            in_h: 3,
+            in_w: 3,
+            in_c: 1,
+            k_h: 2,
+            k_w: 2,
+            out_c: 1,
+            stride: 1,
+            pad: 0,
+        };
+        let x = Tensor::from_vec(&[1, 3, 3, 1], (1..=9).map(|i| i as f32).collect());
+        let cols = im2col(&x, &s);
+        let w = Tensor::full(&[4, 1], 1.0);
+        let y = matmul(&cols, &w);
+        assert_eq!(y.data(), &[12., 16., 24., 28.]);
+    }
+
+    #[test]
+    fn padding_zero_fills() {
+        let s = Conv2dSpec {
+            in_h: 2,
+            in_w: 2,
+            in_c: 1,
+            k_h: 3,
+            k_w: 3,
+            out_c: 1,
+            stride: 1,
+            pad: 1,
+        };
+        let x = Tensor::full(&[1, 2, 2, 1], 1.0);
+        let cols = im2col(&x, &s);
+        assert_eq!(cols.shape(), &[4, 9]);
+        // Corner patch touches 4 real pixels only.
+        assert_eq!(cols.row(0).iter().sum::<f32>(), 4.0);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> — the defining adjoint identity,
+        // which is exactly what backward needs.
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::new(3);
+        let s = Conv2dSpec {
+            in_h: 5,
+            in_w: 4,
+            in_c: 2,
+            k_h: 3,
+            k_w: 2,
+            out_c: 1,
+            stride: 1,
+            pad: 1,
+        };
+        let x = Tensor::randn(&[2, 5, 4, 2], 1.0, &mut rng);
+        let cols = im2col(&x, &s);
+        let y = Tensor::randn(cols.shape(), 1.0, &mut rng);
+        let lhs: f64 = cols
+            .data()
+            .iter()
+            .zip(y.data())
+            .map(|(&a, &b)| (a * b) as f64)
+            .sum();
+        let back = col2im(&y, 2, &s);
+        let rhs: f64 = x
+            .data()
+            .iter()
+            .zip(back.data())
+            .map(|(&a, &b)| (a * b) as f64)
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn maxpool_and_backward() {
+        let x = Tensor::from_vec(
+            &[1, 2, 2, 1],
+            vec![1., 5., 3., 2.],
+        );
+        let (y, arg) = maxpool(&x, 2, 2);
+        assert_eq!(y.data(), &[5.0]);
+        let g = Tensor::vec1(&[2.0]).reshape(&[1, 1, 1, 1]);
+        let gx = maxpool_backward(&g, &arg, x.shape());
+        assert_eq!(gx.data(), &[0., 2., 0., 0.]);
+    }
+
+    #[test]
+    fn avgpool_values() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1., 2., 3., 4.]);
+        let y = avgpool(&x, 2, 2);
+        assert_eq!(y.data(), &[2.5]);
+    }
+}

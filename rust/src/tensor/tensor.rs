@@ -1,0 +1,335 @@
+//! Row-major dense f32 tensor.
+
+use crate::util::rng::Xoshiro256;
+use std::fmt;
+
+/// Dense, contiguous, row-major f32 tensor of arbitrary rank.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    /// Build from existing data (length must match shape product).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn vec1(data: &[f32]) -> Self {
+        Self::from_vec(&[data.len()], data.to_vec())
+    }
+
+    /// i.i.d. normal(0, sd) entries.
+    pub fn randn(shape: &[usize], sd: f32, rng: &mut Xoshiro256) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal_f32(0.0, sd)).collect(),
+        }
+    }
+
+    /// i.i.d. uniform [lo, hi) entries.
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Xoshiro256) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.range_f32(lo, hi)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Size of dimension `d`.
+    #[inline]
+    pub fn dim(&self, d: usize) -> usize {
+        self.shape[d]
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.len(),
+            "cannot reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        }
+    }
+
+    /// 2-D element access.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Apply `f` elementwise, returning a new tensor.
+    pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Apply `f` elementwise in place.
+    pub fn map_inplace<F: Fn(f32) -> f32>(&mut self, f: F) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// Elementwise binary op; shapes must match.
+    pub fn zip<F: Fn(f32, f32) -> f32>(&self, other: &Tensor, f: F) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// self += other * s  (axpy).
+    pub fn add_scaled(&mut self, other: &Tensor, s: f32) {
+        assert_eq!(self.shape, other.shape);
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += b * s;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Mean squared difference to another tensor.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / self.len() as f64
+    }
+
+    /// Index of the maximum within each row of a rank-2 tensor.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let row = self.row(i);
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// 2-D transpose.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Check all entries finite (NaN/Inf guard for training).
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.len() <= 16 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{:?}, ... {} elems]", &self.data[..8], self.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.dim(1), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at2(2, 1), 6.0);
+        assert_eq!(tt.transpose(), t);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = Tensor::vec1(&[1., 2., 3.]);
+        let b = Tensor::vec1(&[4., 5., 6.]);
+        assert_eq!(a.add(&b).data(), &[5., 7., 9.]);
+        assert_eq!(b.sub(&a).data(), &[3., 3., 3.]);
+        assert_eq!(a.mul(&b).data(), &[4., 10., 18.]);
+        assert_eq!(a.scale(2.0).data(), &[2., 4., 6.]);
+        let mut c = a.clone();
+        c.add_scaled(&b, 0.5);
+        assert_eq!(c.data(), &[3., 4.5, 6.]);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.3, 0.7, 0.2, 0.1]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Xoshiro256::new(1);
+        let t = Tensor::randn(&[100, 100], 0.5, &mut rng);
+        let mean = t.sum() / t.len() as f64;
+        assert!(mean.abs() < 0.02);
+        let var = t.data().iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / t.len() as f64;
+        assert!((var - 0.25).abs() < 0.02);
+    }
+
+    #[test]
+    fn mse_and_finite() {
+        let a = Tensor::vec1(&[1., 2.]);
+        let b = Tensor::vec1(&[2., 4.]);
+        assert!((a.mse(&b) - 2.5).abs() < 1e-9);
+        assert!(a.all_finite());
+        let bad = Tensor::vec1(&[f32::NAN]);
+        assert!(!bad.all_finite());
+    }
+}

@@ -1,0 +1,8 @@
+//! Training: optimizers, LR schedules, and the trainer loop with the
+//! paper's periodic weight-clustering step (§2.2).
+
+pub mod optimizer;
+pub mod trainer;
+
+pub use optimizer::{Optimizer, OptimizerCfg, StepDecay};
+pub use trainer::{ClusterCfg, ClusterSchedule, HistoryPoint, TrainCfg, TrainResult, Trainer};

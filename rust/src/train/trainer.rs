@@ -1,0 +1,358 @@
+//! The training loop with the paper's periodic weight-clustering step.
+//!
+//! Training is ordinary float backprop (the paper does not stay quantized
+//! *during* training, §2.2). Every `cluster_every` steps (1000 in all of
+//! the paper's experiments) all weights+biases are clustered to |W|
+//! unique values and each weight is replaced by its cluster centroid;
+//! training then continues unmodified until the next clustering step.
+
+use super::optimizer::{Optimizer, OptimizerCfg, StepDecay};
+use crate::nn::{Loss, Network, Target};
+use crate::quant::{Codebook, Granularity, WeightScheme};
+use crate::tensor::Tensor;
+use crate::util::rng::Xoshiro256;
+
+/// |W| schedule across training (paper §5 future work 2: annealing |W|
+/// from large to small tames early-training instability).
+#[derive(Clone, Debug)]
+pub enum ClusterSchedule {
+    Constant,
+    /// Start at `start_w`, decay multiplicatively to the scheme's target
+    /// |W| by `by_step`.
+    Annealed { start_w: usize, by_step: u64 },
+}
+
+/// Weight-clustering configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterCfg {
+    pub scheme: WeightScheme,
+    /// Steps between clustering passes (paper: 1000).
+    pub every: u64,
+    pub granularity: Granularity,
+    pub schedule: ClusterSchedule,
+}
+
+impl ClusterCfg {
+    pub fn kmeans(w: usize) -> Self {
+        Self {
+            scheme: WeightScheme::KMeans { w, subsample: 1.0 },
+            every: 1000,
+            granularity: Granularity::Global,
+            schedule: ClusterSchedule::Constant,
+        }
+    }
+    pub fn laplacian(w: usize) -> Self {
+        Self {
+            scheme: WeightScheme::Laplacian {
+                w,
+                norm: crate::quant::ErrNorm::L1,
+            },
+            every: 1000,
+            granularity: Granularity::Global,
+            schedule: ClusterSchedule::Constant,
+        }
+    }
+
+    /// The scheme with |W| overridden (used by the annealing schedule).
+    fn scheme_with_w(&self, w: usize) -> WeightScheme {
+        match &self.scheme {
+            WeightScheme::KMeans { subsample, .. } => WeightScheme::KMeans {
+                w,
+                subsample: *subsample,
+            },
+            WeightScheme::Laplacian { norm, .. } => WeightScheme::Laplacian { w, norm: *norm },
+            WeightScheme::Uniform { .. } => WeightScheme::Uniform { w },
+            other => other.clone(),
+        }
+    }
+
+    /// Effective |W| at a training step under the schedule.
+    fn w_at(&self, step: u64) -> usize {
+        let target = self.scheme.codebook_size();
+        match self.schedule {
+            ClusterSchedule::Constant => target,
+            ClusterSchedule::Annealed { start_w, by_step } => {
+                if step >= by_step {
+                    target
+                } else {
+                    // Geometric interpolation start_w → target.
+                    let frac = step as f64 / by_step as f64;
+                    let lw = (start_w as f64).ln() * (1.0 - frac) + (target as f64).ln() * frac;
+                    lw.exp().round() as usize
+                }
+            }
+        }
+    }
+}
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub optimizer: OptimizerCfg,
+    pub cluster: Option<ClusterCfg>,
+    pub lr_schedule: Option<StepDecay>,
+    pub steps: u64,
+    /// Log every N steps (0 = never).
+    pub log_every: u64,
+    pub seed: u64,
+}
+
+impl TrainCfg {
+    pub fn adam(lr: f32, steps: u64) -> Self {
+        Self {
+            optimizer: OptimizerCfg::adam(lr),
+            cluster: None,
+            lr_schedule: None,
+            steps,
+            log_every: 0,
+            seed: 0,
+        }
+    }
+
+    pub fn with_cluster(mut self, c: ClusterCfg) -> Self {
+        self.cluster = Some(c);
+        self
+    }
+}
+
+/// A point in the training history.
+#[derive(Clone, Debug)]
+pub struct HistoryPoint {
+    pub step: u64,
+    pub loss: f64,
+}
+
+/// Training outcome.
+pub struct TrainResult {
+    pub history: Vec<HistoryPoint>,
+    /// Final codebook if clustering was enabled (the network's weights
+    /// are already replaced by these centroids). For per-layer
+    /// granularity this is the codebook of the *last* group; use
+    /// `codebooks` for all of them.
+    pub codebook: Option<Codebook>,
+    pub codebooks: Vec<Codebook>,
+    pub final_loss: f64,
+}
+
+/// Runs the paper's training procedure on a network.
+pub struct Trainer {
+    pub cfg: TrainCfg,
+    opt: Optimizer,
+    rng: Xoshiro256,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainCfg) -> Self {
+        let opt = Optimizer::new(cfg.optimizer.clone());
+        let rng = Xoshiro256::new(cfg.seed ^ 0x7261_696E);
+        Self { cfg, opt, rng }
+    }
+
+    /// Cluster all weights of `net` per the config; replaces weights with
+    /// centroids and returns the codebook(s).
+    pub fn cluster_now(
+        net: &mut Network,
+        ccfg: &ClusterCfg,
+        step: u64,
+        rng: &mut Xoshiro256,
+    ) -> Vec<Codebook> {
+        let w = ccfg.w_at(step);
+        let scheme = ccfg.scheme_with_w(w);
+        match ccfg.granularity {
+            Granularity::Global => {
+                let mut flat = net.flat_weights();
+                let cb = scheme.codebook(&flat, rng);
+                cb.quantize_slice(&mut flat);
+                net.set_flat_weights(&flat);
+                vec![cb]
+            }
+            Granularity::PerLayer => {
+                let groups = net.layer_weight_groups();
+                let mut cbs = Vec::new();
+                for group in groups {
+                    // Gather this layer's params into one population.
+                    let mut vals = Vec::new();
+                    {
+                        let params = net.params();
+                        for &pi in &group {
+                            vals.extend_from_slice(params[pi].value.data());
+                        }
+                    }
+                    let cb = scheme.codebook(&vals, rng);
+                    {
+                        let mut params = net.params_mut();
+                        for &pi in &group {
+                            cb.quantize_slice(params[pi].value.data_mut());
+                        }
+                    }
+                    cbs.push(cb);
+                }
+                cbs
+            }
+        }
+    }
+
+    /// Train `net` for `cfg.steps` steps. `next_batch` produces
+    /// (input, target) pairs; `loss` scores them.
+    pub fn train<F>(
+        &mut self,
+        net: &mut Network,
+        loss: &dyn Loss,
+        mut next_batch: F,
+    ) -> TrainResult
+    where
+        F: FnMut(&mut Xoshiro256) -> (Tensor, Target),
+    {
+        let mut history = Vec::new();
+        let mut codebooks: Vec<Codebook> = Vec::new();
+        let mut last_loss = f64::NAN;
+
+        for step in 1..=self.cfg.steps {
+            if let Some(sched) = &self.cfg.lr_schedule {
+                self.opt.cfg.set_lr(sched.lr_at(step));
+            }
+            let (x, target) = next_batch(&mut self.rng);
+            net.zero_grads();
+            let out = net.forward(&x, true);
+            let (l, grad) = loss.compute(&out, &target);
+            net.backward(&grad);
+            self.opt.step(net.params_mut());
+            last_loss = l;
+
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                println!("step {step:>6}  loss {l:.5}");
+            }
+            if history.is_empty()
+                || step == self.cfg.steps
+                || step % (self.cfg.steps / 200).max(1) == 0
+            {
+                history.push(HistoryPoint { step, loss: l });
+            }
+
+            // The paper's periodic clustering step.
+            if let Some(ccfg) = &self.cfg.cluster {
+                if step % ccfg.every == 0 {
+                    codebooks = Self::cluster_now(net, ccfg, step, &mut self.rng);
+                }
+            }
+        }
+
+        // Leave the network quantized: a final clustering pass at the end
+        // (matters when steps % every != 0, and for short smoke runs).
+        if let Some(ccfg) = &self.cfg.cluster {
+            codebooks = Self::cluster_now(net, ccfg, self.cfg.steps, &mut self.rng);
+        }
+
+        TrainResult {
+            codebook: codebooks.last().cloned(),
+            codebooks,
+            history,
+            final_loss: last_loss,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{ActSpec, NetSpec, Network, SoftmaxCrossEntropy, Target};
+    use crate::util::stats::unique_values;
+
+    /// Tiny synthetic two-class task: class = sign of sum of inputs.
+    fn batch(rng: &mut Xoshiro256) -> (Tensor, Target) {
+        let b = 16;
+        let mut x = Tensor::zeros(&[b, 8]);
+        let mut labels = Vec::with_capacity(b);
+        for i in 0..b {
+            let mut s = 0.0;
+            for j in 0..8 {
+                let v = rng.normal_f32(0.0, 1.0);
+                x.set2(i, j, v);
+                s += v;
+            }
+            labels.push(if s > 0.0 { 1 } else { 0 });
+        }
+        (x, Target::Labels(labels))
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let spec = NetSpec::mlp("t", 8, &[16], 2, ActSpec::tanh());
+        let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(1));
+        let mut tr = Trainer::new(TrainCfg::adam(0.01, 400));
+        let r = tr.train(&mut net, &SoftmaxCrossEntropy, batch);
+        let first = r.history.first().unwrap().loss;
+        assert!(
+            r.final_loss < first * 0.5,
+            "loss {first} -> {}",
+            r.final_loss
+        );
+    }
+
+    #[test]
+    fn clustered_training_quantizes_weights() {
+        let spec = NetSpec::mlp("t", 8, &[16], 2, ActSpec::tanh_d(16));
+        let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(2));
+        let cfg = TrainCfg::adam(0.01, 300).with_cluster(ClusterCfg {
+            every: 100,
+            ..ClusterCfg::kmeans(32)
+        });
+        let mut tr = Trainer::new(cfg);
+        let r = tr.train(&mut net, &SoftmaxCrossEntropy, batch);
+        assert!(r.codebook.is_some());
+        let w = net.flat_weights();
+        assert!(
+            unique_values(&w, 0.0) <= 32,
+            "weights not quantized: {} uniques",
+            unique_values(&w, 0.0)
+        );
+        // And it still learned something.
+        assert!(r.final_loss < 0.6, "final loss {}", r.final_loss);
+    }
+
+    #[test]
+    fn per_layer_granularity_gives_one_codebook_per_layer() {
+        let spec = NetSpec::mlp("t", 8, &[8, 8], 2, ActSpec::tanh());
+        let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(3));
+        let mut ccfg = ClusterCfg::kmeans(16);
+        ccfg.granularity = Granularity::PerLayer;
+        let cbs = Trainer::cluster_now(&mut net, &ccfg, 0, &mut Xoshiro256::new(4));
+        assert_eq!(cbs.len(), 3);
+        for cb in &cbs {
+            assert!(cb.len() <= 16);
+        }
+    }
+
+    #[test]
+    fn annealed_schedule_decreases_w() {
+        let ccfg = ClusterCfg {
+            schedule: ClusterSchedule::Annealed {
+                start_w: 1000,
+                by_step: 1000,
+            },
+            ..ClusterCfg::kmeans(100)
+        };
+        let w0 = ccfg.w_at(0);
+        let w_mid = ccfg.w_at(500);
+        let w_end = ccfg.w_at(1000);
+        assert_eq!(w0, 1000);
+        assert!(w_mid < w0 && w_mid > 100, "w_mid={w_mid}");
+        assert_eq!(w_end, 100);
+    }
+
+    #[test]
+    fn lr_schedule_applied() {
+        let spec = NetSpec::mlp("t", 8, &[4], 2, ActSpec::tanh());
+        let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(5));
+        let mut cfg = TrainCfg::adam(0.1, 50);
+        cfg.lr_schedule = Some(StepDecay {
+            base_lr: 0.1,
+            factor: 0.1,
+            every: 10,
+        });
+        let mut tr = Trainer::new(cfg);
+        let _ = tr.train(&mut net, &SoftmaxCrossEntropy, batch);
+        // After 50 steps the lr should have decayed to 0.1 * 0.1^5.
+        assert!((tr.opt.cfg.lr() - 0.1 * 0.1f32.powi(5)).abs() < 1e-9);
+    }
+}

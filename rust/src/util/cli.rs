@@ -1,0 +1,234 @@
+//! Tiny declarative command-line flag parser (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with automatic `--help` text generation.
+
+use std::collections::BTreeMap;
+
+/// Specification of one flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_bool: bool,
+}
+
+/// A declarative CLI argument parser.
+#[derive(Default)]
+pub struct Cli {
+    pub program: String,
+    pub about: String,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+        }
+    }
+
+    /// Register a value flag with a default.
+    pub fn flag(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a required value flag (no default).
+    pub fn required(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a boolean flag (defaults to false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nflags:\n", self.program, self.about);
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => " (bool)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse a raw token list (without argv[0]).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if f.is_bool {
+                args.bools.insert(f.name.to_string(), false);
+            } else if let Some(d) = &f.default {
+                args.values.insert(f.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.is_bool {
+                    let v = match inline_val.as_deref() {
+                        None => true,
+                        Some("true") => true,
+                        Some("false") => false,
+                        Some(v) => return Err(format!("bad bool for --{name}: {v}")),
+                    };
+                    args.bools.insert(name, v);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    args.values.insert(name, v);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if !f.is_bool && !args.values.contains_key(f.name) {
+                return Err(format!("missing required flag --{}\n\n{}", f.name, self.usage()));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("flag --{name} not registered"))
+    }
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self
+            .bools
+            .get(name)
+            .unwrap_or_else(|| panic!("switch --{name} not registered"))
+    }
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer, got {:?}", self.get(name)))
+    }
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer, got {:?}", self.get(name)))
+    }
+    pub fn get_f32(&self, name: &str) -> f32 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a float, got {:?}", self.get(name)))
+    }
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a float, got {:?}", self.get(name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test", "test program")
+            .flag("steps", "100", "training steps")
+            .flag("lr", "0.01", "learning rate")
+            .switch("verbose", "chatty output")
+            .required("model", "model path")
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let a = cli()
+            .parse(&toks(&["--model", "m.qnn", "--steps", "5"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps"), 5);
+        assert_eq!(a.get_f32("lr"), 0.01);
+        assert_eq!(a.get("model"), "m.qnn");
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_bools() {
+        let a = cli()
+            .parse(&toks(&["--model=x", "--verbose", "--lr=0.5"]))
+            .unwrap();
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_f32("lr"), 0.5);
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(cli().parse(&toks(&["--steps", "5"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert!(cli().parse(&toks(&["--model=x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse(&toks(&["--model=x", "pos1", "pos2"])).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+}

@@ -1,0 +1,14 @@
+//! From-scratch infrastructure substrates.
+//!
+//! The build environment is fully offline with only the `xla`, `anyhow`,
+//! `num-traits` and `thiserror` crates resolvable, so the usual ecosystem
+//! pieces (rand, serde, clap, tokio, proptest, criterion) are implemented
+//! here at the scale this library needs. See DESIGN.md §3.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

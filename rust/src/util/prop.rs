@@ -1,0 +1,132 @@
+//! Seeded randomized property-testing harness (no `proptest` offline).
+//!
+//! Runs a property over many generated cases; on failure it reports the
+//! case index and seed so the exact failing input can be replayed:
+//!
+//! ```no_run
+//! use qnn::util::prop::{check, Gen};
+//! check("sum is commutative", 256, |g: &mut Gen| {
+//!     let a = g.f32_in(-10.0, 10.0);
+//!     let b = g.f32_in(-10.0, 10.0);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+
+/// Case-local generator handed to each property invocation.
+pub struct Gen {
+    rng: Xoshiro256,
+    pub case: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi + 1)
+    }
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.uniform()
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+    /// Vector of f32 drawn uniformly from [lo, hi), length in [min_len, max_len].
+    pub fn vec_f32(&mut self, min_len: usize, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+    /// Vector of normal(0, sd) samples — shaped like network weights.
+    pub fn vec_normal(&mut self, min_len: usize, max_len: usize, sd: f32) -> Vec<f32> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.rng.normal_f32(0.0, sd)).collect()
+    }
+    /// Pick one element of a slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Base seed: fixed by default for reproducible CI, overridable via
+/// the QNN_PROP_SEED environment variable.
+fn base_seed() -> u64 {
+    std::env::var("QNN_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x0051_4E4E_5052_4F50) // "QNNPROP"
+}
+
+/// Run `cases` random cases of a property. Panics (with replay info) on
+/// the first failing case.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen {
+            rng: Xoshiro256::new(seed),
+            case,
+            seed,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case}/{cases} (replay: QNN_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run a single replayed case with an explicit seed.
+pub fn replay<F: FnOnce(&mut Gen)>(seed: u64, prop: F) {
+    let mut g = Gen {
+        rng: Xoshiro256::new(seed),
+        case: 0,
+        seed,
+    };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is non-negative", 128, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 8, |_g| panic!("boom"));
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("always fails"), "{msg}");
+        assert!(msg.contains("replay"), "{msg}");
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("ranges", 64, |g| {
+            let n = g.usize_in(3, 9);
+            assert!((3..=9).contains(&n));
+            let v = g.vec_f32(1, 5, -1.0, 1.0);
+            assert!(!v.is_empty() && v.len() <= 5);
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        });
+    }
+}

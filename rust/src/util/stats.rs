@@ -1,0 +1,183 @@
+//! Small statistics helpers shared by quantization, reporting and benches.
+
+/// Arithmetic mean. Returns 0 for empty input.
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Mean absolute deviation around the mean (Laplacian scale estimator:
+/// for Laplacian(μ, b), E|x−μ| = b).
+pub fn mean_abs_dev(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).abs()).sum::<f64>() / xs.len() as f64
+}
+
+/// Mean absolute value (deviation around zero): the L2-optimal scale α
+/// for sign(w)·α binarization, used by the binary/ternary baselines.
+pub fn mean_abs_dev_zero(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x.abs() as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Minimum and maximum of a non-empty slice.
+pub fn min_max(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+/// p-th percentile (0..=100) using nearest-rank on a copy.
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f32> = xs.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+    s[rank.min(s.len() - 1)]
+}
+
+/// Percentile over f64 durations (used by the serving metrics).
+pub fn percentile_f64(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+    s[rank.min(s.len() - 1)]
+}
+
+/// Histogram with uniformly sized bins over [lo, hi].
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn build(xs: &[f32], lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo);
+        let mut h = Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+            underflow: 0,
+            overflow: 0,
+        };
+        let w = (hi - lo) / bins as f64;
+        for &x in xs {
+            let x = x as f64;
+            h.total += 1;
+            if x < lo {
+                h.underflow += 1;
+            } else if x >= hi {
+                h.overflow += 1;
+            } else {
+                h.counts[((x - lo) / w) as usize] += 1;
+            }
+        }
+        h
+    }
+
+    /// Bin centers.
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+
+    /// Count of distinct non-empty bins (used to verify weight clustering
+    /// actually collapsed the weight set).
+    pub fn occupied(&self) -> usize {
+        self.counts.iter().filter(|&&c| c > 0).count()
+    }
+}
+
+/// Number of unique values in a slice up to absolute tolerance `tol`,
+/// computed by sorting and counting gaps. O(n log n).
+pub fn unique_values(xs: &[f32], tol: f32) -> usize {
+    if xs.is_empty() {
+        return 0;
+    }
+    let mut s: Vec<f32> = xs.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    let mut n = 1;
+    for i in 1..s.len() {
+        if (s[i] - s[i - 1]).abs() > tol {
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-9);
+        assert!((variance(&xs) - 1.25).abs() < 1e-9);
+        assert!((mean_abs_dev(&xs) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_ranks() {
+        let xs: Vec<f32> = (0..101).map(|i| i as f32).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.1f32, 0.2, 0.9, -1.0, 2.0];
+        let h = Histogram::build(&xs, 0.0, 1.0, 10);
+        assert_eq!(h.total, 5);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts.iter().sum::<u64>(), 3);
+        assert_eq!(h.occupied(), 3);
+    }
+
+    #[test]
+    fn unique_value_counting() {
+        let xs = [1.0f32, 1.0, 2.0, 2.00001, 3.0];
+        assert_eq!(unique_values(&xs, 1e-4), 3);
+        assert_eq!(unique_values(&xs, 0.0), 4);
+        assert_eq!(unique_values(&[], 0.0), 0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Fixed-size worker thread pool over std::thread + mpsc (no `tokio`
+//! offline). Used by the serving coordinator's worker side and by the
+//! benchmark harness's load generators.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size thread pool. Jobs are executed FIFO by the first free
+/// worker. Dropping the pool joins all workers after draining the queue.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::Builder::new()
+                    .name(format!("qnn-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("worker queue poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                in_flight.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            sender: Some(tx),
+            workers,
+            in_flight,
+        }
+    }
+
+    /// Submit a job for execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker pool closed");
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Busy-wait (with yield) until all submitted jobs have finished.
+    pub fn wait_idle(&self) {
+        while self.in_flight() > 0 {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            let done = done_tx.clone();
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+                let _ = done.send(());
+            });
+        }
+        drop(done_tx);
+        for _ in 0..n {
+            done_rx.recv().expect("worker died");
+        }
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("missing result"))
+            .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take()); // close the channel; workers exit on recv Err
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // should not hang or panic
+    }
+}

@@ -1,0 +1,121 @@
+//! Timing utilities for the bench harness (no `criterion` offline).
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+}
+
+/// Result of a micro-benchmark run.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in nanoseconds.
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    /// Iterations per second implied by the mean.
+    pub fn throughput(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then `iters` timed runs.
+/// Each run is timed individually so percentiles are meaningful.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pick = |p: f64| samples[(((samples.len() - 1) as f64) * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: pick(0.50),
+        p95_ns: pick(0.95),
+        min_ns: samples[0],
+    }
+}
+
+/// Benchmark a closure for at least `min_time`, auto-scaling iterations.
+pub fn bench_for<F: FnMut()>(name: &str, min_time: Duration, mut f: F) -> BenchResult {
+    // Calibrate.
+    let t = Instant::now();
+    f();
+    let one = t.elapsed().max(Duration::from_nanos(50));
+    let iters = ((min_time.as_secs_f64() / one.as_secs_f64()).ceil() as usize).clamp(5, 1_000_000);
+    bench(name, iters / 10 + 1, iters, f)
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let r = bench("noop-ish", 3, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+        assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}
