@@ -1,81 +1,174 @@
-//! §4 speed claim: "we expect our implementation to be as fast as or
-//! faster than the baseline due to the relative speed of lookups versus
-//! multiplies." Micro-benchmarks the integer LUT engine against the
-//! float engine on identical topologies, across sizes and batch sizes.
+//! §4 speed claim + §Perf trajectory: micro-benchmarks the integer LUT
+//! engine against (a) the float engine, (b) its own pre-ExecPlan
+//! interpreter (`forward_naive` — the speedup baseline), measuring the
+//! zero-allocation serial path and the batch-parallel path separately.
+//!
+//! Emits `BENCH_lut_engine.json` at the repo root (schema
+//! `qnn.bench_lut_engine.v1`, see `qnn::report::perf`) so every run
+//! extends the machine-readable perf trajectory.
+//!
+//!     cargo bench --bench bench_lut_engine [-- --full]
 
 use qnn::inference::{CodebookSet, CompileCfg, FloatEngine, LutNetwork};
 use qnn::nn::{ActSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::report::perf::{lut_bench_report, write_bench_file, LutBenchRecord};
 use qnn::report::table::TableBuilder;
 use qnn::tensor::Tensor;
 use qnn::util::rng::Xoshiro256;
 use qnn::util::timer::{bench_for, fmt_ns};
 use std::time::Duration;
 
-fn prepare(hidden: &[usize], in_dim: usize, out_dim: usize, seed: u64) -> (Network, LutNetwork) {
+fn prepare(
+    hidden: &[usize],
+    in_dim: usize,
+    out_dim: usize,
+    seed: u64,
+    k: usize,
+    cfg: &CompileCfg,
+) -> (Network, LutNetwork) {
     let spec = NetSpec::mlp("bench", in_dim, hidden, out_dim, ActSpec::tanh_d(32));
     let mut rng = Xoshiro256::new(seed);
     let mut net = Network::from_spec(&spec, &mut rng);
     let mut flat = net.flat_weights();
-    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(1000), &mut rng);
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(k), &mut rng);
     cb.quantize_slice(&mut flat);
     net.set_flat_weights(&flat);
-    let lut =
-        LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap();
+    let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb), cfg).unwrap();
     (net, lut)
+}
+
+struct Cfg {
+    name: &'static str,
+    hidden: Vec<usize>,
+    in_dim: usize,
+    out_dim: usize,
+    k: usize,
+    compile: CompileCfg,
 }
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
-    let min_time = Duration::from_millis(if full { 800 } else { 250 });
-    println!("=== LUT engine vs float engine throughput ===");
+    let min_time = Duration::from_millis(if full { 800 } else { 200 });
+    println!("=== LUT engine throughput: naive vs serial vs parallel (+float) ===");
 
-    let configs: Vec<(&str, Vec<usize>, usize, usize)> = vec![
-        ("small  256-64-64-10", vec![64, 64], 256, 10),
-        ("medium 256-256-256-10", vec![256, 256], 256, 10),
-        ("wide   1024-512-10", vec![512], 1024, 10),
+    let configs = vec![
+        Cfg {
+            name: "small  256-64-64-10",
+            hidden: vec![64, 64],
+            in_dim: 256,
+            out_dim: 10,
+            k: 1000,
+            compile: CompileCfg::default(),
+        },
+        Cfg {
+            name: "medium 256-256-256-10",
+            hidden: vec![256, 256],
+            in_dim: 256,
+            out_dim: 10,
+            k: 1000,
+            compile: CompileCfg::default(),
+        },
+        Cfg {
+            name: "wide   1024-512-10",
+            hidden: vec![512],
+            in_dim: 1024,
+            out_dim: 10,
+            k: 1000,
+            compile: CompileCfg::default(),
+        },
+        Cfg {
+            // Coarse Δx keeps table entries inside i16: exercises the
+            // compact-table kernel (I16xI32) and its widened gather.
+            name: "compact 256-128-10 (i16 tables)",
+            hidden: vec![128],
+            in_dim: 256,
+            out_dim: 10,
+            k: 100,
+            compile: CompileCfg {
+                act_table_len: 16,
+                ..CompileCfg::default()
+            },
+        },
     ];
-    let batches = [1usize, 8, 64];
+    let batches = [1usize, 8, 64, 256];
 
-    let mut table = TableBuilder::new("per-batch inference time").header(&[
+    let mut table = TableBuilder::new("per-row inference time").header(&[
         "topology",
         "batch",
+        "kernel",
         "float",
-        "LUT (int)",
-        "LUT/float",
-        "inputs/s (LUT)",
+        "LUT naive",
+        "LUT serial",
+        "LUT parallel",
+        "par/naive",
+        "rows/s (par)",
     ]);
+    let mut records: Vec<LutBenchRecord> = Vec::new();
 
-    for (name, hidden, in_dim, out_dim) in &configs {
-        let (net, lut) = prepare(hidden, *in_dim, *out_dim, 7);
+    for c in &configs {
+        let (net, lut) = prepare(&c.hidden, c.in_dim, c.out_dim, 7, c.k, &c.compile);
         let mut fe = FloatEngine::new(net);
+        let kernel = format!("{:?}", lut.kernel());
         for &b in &batches {
             let mut rng = Xoshiro256::new(100 + b as u64);
-            let x = Tensor::rand_uniform(&[b, *in_dim], 0.0, 1.0, &mut rng);
+            let x = Tensor::rand_uniform(&[b, c.in_dim], 0.0, 1.0, &mut rng);
             // Pre-quantized input indices: the deployment-realistic path
             // (the previous layer/sensor already emits level indices).
             let idx = lut.quantize_input(&x);
+            let mut scratch = lut.new_scratch();
+            let mut sums = vec![0i64; b * lut.out_dim()];
 
             let rf = bench_for("float", min_time, || {
                 std::hint::black_box(fe.forward(&x));
             });
-            let rl = bench_for("lut", min_time, || {
-                std::hint::black_box(lut.forward_indices(&idx, b));
+            let rn = bench_for("naive", min_time, || {
+                std::hint::black_box(lut.forward_naive(&idx, b));
+            });
+            let rs = bench_for("serial", min_time, || {
+                lut.forward_into(&idx, b, &mut sums, &mut scratch);
+                std::hint::black_box(&sums);
+            });
+            let rp = bench_for("parallel", min_time, || {
+                lut.forward_indices_into(&idx, b, &mut sums);
+                std::hint::black_box(&sums);
+            });
+
+            let rb = b as f64;
+            records.push(LutBenchRecord {
+                topology: c.name.to_string(),
+                batch: b,
+                kernel: kernel.clone(),
+                ns_per_row_naive: rn.mean_ns / rb,
+                ns_per_row_serial: rs.mean_ns / rb,
+                ns_per_row_parallel: rp.mean_ns / rb,
+                ns_per_row_float: Some(rf.mean_ns / rb),
             });
             table.row(&[
-                name.to_string(),
+                c.name.to_string(),
                 format!("{b}"),
-                fmt_ns(rf.mean_ns),
-                fmt_ns(rl.mean_ns),
-                format!("{:.2}x", rl.mean_ns / rf.mean_ns),
-                format!("{:.0}", b as f64 * rl.throughput()),
+                kernel.clone(),
+                fmt_ns(rf.mean_ns / rb),
+                fmt_ns(rn.mean_ns / rb),
+                fmt_ns(rs.mean_ns / rb),
+                fmt_ns(rp.mean_ns / rb),
+                format!("{:.2}x", rn.mean_ns / rp.mean_ns),
+                format!("{:.0}", rb * rp.throughput()),
             ]);
         }
     }
     table.print();
     println!(
-        "LUT/float < 1.0 means the multiplication-free engine is faster.\n\
-         (Modern CPUs have fast FP multipliers; the paper's claim targets \
-         fixed-point-only hardware — see EXPERIMENTS.md for discussion.)"
+        "par/naive > 1.0 means the compiled ExecPlan beats the pre-PR \
+         interpreter; large batches on multi-core hosts should clear 3x.\n\
+         (LUT vs float: modern CPUs have fast FP multipliers; the paper's \
+         claim targets fixed-point-only hardware.)"
     );
+
+    let provenance = if full { "bench:full" } else { "bench:quick" };
+    let doc = lut_bench_report(&records, provenance);
+    match write_bench_file("BENCH_lut_engine.json", &doc) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_lut_engine.json: {e}"),
+    }
 }

@@ -9,6 +9,7 @@
 
 use crate::inference::{FloatEngine, LutNetwork};
 use crate::tensor::Tensor;
+use std::cell::RefCell;
 use std::sync::Mutex;
 
 /// A batched inference backend. `infer_batch` takes `batch` rows of
@@ -54,12 +55,22 @@ impl Engine for LutEngine {
     }
     fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32> {
         debug_assert_eq!(flat.len(), batch * self.input_len);
-        let idx = self
-            .lut
-            .input_quant
-            .quantize_to_indices(flat);
-        let out = self.lut.forward_indices(&idx, batch);
-        out.to_tensor().into_vec()
+        // Per-worker scratch: each server worker thread reuses its own
+        // index/sum buffers across requests, so the steady-state request
+        // path performs no quantization-buffer or accumulator
+        // allocations — only the returned Vec<f32> is fresh.
+        thread_local! {
+            static BUFS: RefCell<(Vec<u16>, Vec<i64>)> = RefCell::new((Vec::new(), Vec::new()));
+        }
+        BUFS.with(|b| {
+            let (idx, sums) = &mut *b.borrow_mut();
+            self.lut.input_quant.quantize_into(flat, idx);
+            sums.clear();
+            sums.resize(batch * self.lut.out_dim(), 0);
+            self.lut.forward_indices_into(idx, batch, sums);
+            let inv = 1.0 / self.lut.plan.scale();
+            sums.iter().map(|&s| (s as f64 * inv) as f32).collect()
+        })
     }
 }
 
@@ -129,6 +140,21 @@ mod tests {
         let y = e.infer_batch(&x, 4);
         assert_eq!(y.len(), 4 * 3);
         assert_eq!(e.output_len(), 3);
+    }
+
+    #[test]
+    fn scratch_reuse_is_stable_across_requests() {
+        // The per-worker buffers must not leak state between calls:
+        // identical inputs give identical outputs across a request
+        // stream mixing batch sizes.
+        let (e, _) = small_lut();
+        let mut rng = Xoshiro256::new(7);
+        let x: Vec<f32> = (0..8 * 8).map(|_| rng.uniform_f32()).collect();
+        let first = e.infer_batch(&x, 8);
+        for b in [1usize, 3, 8, 2, 8] {
+            let _ = e.infer_batch(&x[..b * 8], b);
+            assert_eq!(e.infer_batch(&x, 8), first);
+        }
     }
 
     #[test]

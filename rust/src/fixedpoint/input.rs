@@ -51,6 +51,13 @@ impl UniformQuant {
         xs.iter().map(|&x| self.index_of(x) as u16).collect()
     }
 
+    /// Bulk index quantization into a reused buffer — allocation-free
+    /// once `out` has grown to capacity (serving hot path).
+    pub fn quantize_into(&self, xs: &[f32], out: &mut Vec<u16>) {
+        out.clear();
+        out.extend(xs.iter().map(|&x| self.index_of(x) as u16));
+    }
+
     /// All level values, ascending.
     pub fn values(&self) -> Vec<f32> {
         (0..self.levels).map(|i| self.value(i)).collect()
@@ -68,6 +75,15 @@ mod tests {
         assert_eq!(q.index_of(0.3), 1);
         assert_eq!(q.index_of(0.4), 2);
         assert_eq!(q.quantize(0.9), 1.0);
+    }
+
+    #[test]
+    fn quantize_into_matches_allocating_path() {
+        let q = UniformQuant::unit(16);
+        let xs: Vec<f32> = (0..100).map(|i| i as f32 / 99.0).collect();
+        let mut buf = vec![9u16; 3]; // stale contents must be cleared
+        q.quantize_into(&xs, &mut buf);
+        assert_eq!(buf, q.quantize_to_indices(&xs));
     }
 
     #[test]

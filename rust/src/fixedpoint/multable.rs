@@ -19,6 +19,12 @@ pub struct MulTable {
     pub w_cols: usize,
     /// Row-major [(a_levels + 2) × w_cols] fixed-point products.
     data: Vec<i32>,
+    /// Compact i16 copy of `data` when every entry fits (§Perf: halves
+    /// the hot working set and feeds the widened SIMD gather). One zero
+    /// pad element is appended so a 4-byte gather of the final entry
+    /// stays inside the allocation; [`Self::row16`] slices include the
+    /// following element for the same reason.
+    data16: Option<Vec<i16>>,
 }
 
 /// Row index of the constant-1.0 (bias) row.
@@ -56,11 +62,46 @@ impl MulTable {
         }
         push_row(1.0); // bias row
         push_row(0.0); // padding row
+        let fits_i16 = data
+            .iter()
+            .all(|&e| (i16::MIN as i32..=i16::MAX as i32).contains(&e));
+        let data16 = if fits_i16 {
+            let mut v: Vec<i16> = data.iter().map(|&e| e as i16).collect();
+            v.push(0); // SIMD read-past pad (see `data16` field docs)
+            Some(v)
+        } else {
+            None
+        };
         MulTable {
             a_levels,
             w_cols,
             data,
+            data16,
         }
+    }
+
+    /// Is the compact i16 representation available? (True iff every
+    /// actual entry fits i16 — compaction is bit-exact by construction:
+    /// the same values, stored narrower.)
+    #[inline]
+    pub fn is_compact(&self) -> bool {
+        self.data16.is_some()
+    }
+
+    /// The compact entries (including the trailing pad element), when
+    /// available.
+    #[inline]
+    pub fn data16(&self) -> Option<&[i16]> {
+        self.data16.as_deref()
+    }
+
+    /// One compact row of products plus one extra readable element (the
+    /// widened SIMD gather may touch 2 bytes past the last entry).
+    /// Panics if the table is not compact.
+    #[inline]
+    pub fn row16(&self, a_idx: usize) -> &[i16] {
+        let d = self.data16.as_ref().expect("table not compacted to i16");
+        &d[a_idx * self.w_cols..(a_idx + 1) * self.w_cols + 1]
     }
 
     /// Total rows including the two constant rows.
@@ -81,9 +122,14 @@ impl MulTable {
         self.data[a_idx * self.w_cols + w_idx]
     }
 
-    /// Memory footprint in bytes (for the §4 memory accounting).
+    /// Deployment memory footprint in bytes (for the §4 memory
+    /// accounting): the compact i16 table when available (that is the
+    /// only copy a deployment ships), else the i32 table.
     pub fn bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<i32>()
+        match &self.data16 {
+            Some(d) => d.len() * std::mem::size_of::<i16>(),
+            None => self.data.len() * std::mem::size_of::<i32>(),
+        }
     }
 
     /// Largest |entry| actually stored.
@@ -135,6 +181,39 @@ mod tests {
         for wi in 0..cb.len() {
             assert_eq!(t.at(zero_row(t.a_levels), wi), 0);
         }
+    }
+
+    #[test]
+    fn compact_tables_are_bit_exact_and_padded() {
+        let (act, cb, plan) = setup();
+        let t = MulTable::build(act.outputs(), &cb, &plan);
+        assert!(t.is_compact(), "small-scale plan must compact to i16");
+        // Every compact row holds exactly the i32 entries, plus one
+        // readable pad element shared with the next row (or the final
+        // zero pad).
+        for ai in 0..t.rows() {
+            let r32 = t.row(ai);
+            let r16 = t.row16(ai);
+            assert_eq!(r16.len(), t.w_cols + 1);
+            for wi in 0..t.w_cols {
+                assert_eq!(r16[wi] as i32, r32[wi], "row {ai} col {wi}");
+            }
+        }
+        assert_eq!(*t.data16().unwrap().last().unwrap(), 0);
+        // Deployment footprint halves (modulo the 2-byte pad).
+        assert_eq!(t.bytes(), (t.rows() * t.w_cols + 1) * 2);
+    }
+
+    #[test]
+    fn oversized_entries_stay_i32() {
+        // Huge scale ⇒ entries overflow i16 ⇒ no compact copy.
+        let act = QuantAct::relu6_d(32);
+        let cb = Codebook::new(vec![-3.0, 0.0, 3.0]);
+        let plan = FixedPointPlan::build(&act, 64, 3.0, 6.0, 4096);
+        let t = MulTable::build(act.outputs(), &cb, &plan);
+        assert!(!t.is_compact());
+        assert!(t.data16().is_none());
+        assert_eq!(t.bytes(), t.rows() * t.w_cols * 4);
     }
 
     #[test]

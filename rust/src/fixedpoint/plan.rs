@@ -30,6 +30,12 @@ pub struct OverflowAnalysis {
     pub fits_i32: bool,
     /// True iff every entry fits an i32 table cell.
     pub entries_fit_i32: bool,
+    /// True iff every entry provably fits an i16 table cell (enables
+    /// the compact-table path: half the mul-table cache footprint and a
+    /// widened SIMD gather). This is the conservative a-priori bound;
+    /// [`super::MulTable::build`] additionally compacts whenever the
+    /// *actual* entries fit, which is strictly more often.
+    pub entries_fit_i16: bool,
 }
 
 /// The fixed-point scaling plan shared by all tables of a network.
@@ -108,6 +114,7 @@ impl FixedPointPlan {
                 fits_i64: max_accum < (i64::MAX / 2) as i128,
                 fits_i32: max_accum < (i32::MAX / 2) as i128,
                 entries_fit_i32: max_entry <= i32::MAX as i64,
+                entries_fit_i16: max_entry <= i16::MAX as i64,
             },
         }
     }
@@ -157,6 +164,19 @@ mod tests {
         // The paper's example: 6 levels, 12-entry table, Δx ≈ 0.218.
         // (Exact value depends on the boundary convention; same order.)
         assert!(plan.dx > 0.05 && plan.dx < 0.5, "dx={}", plan.dx);
+    }
+
+    #[test]
+    fn i16_entry_bound_tracks_scale() {
+        // Wide fan-in + default guard bits drive entries far above i16…
+        let act = QuantAct::tanh_d(32);
+        let big = FixedPointPlan::build(&act, 256, 3.0, 1.0, 4096);
+        assert!(!big.overflow.entries_fit_i16);
+        // …while a small net with few guard bits provably fits.
+        let act = QuantAct::tanh_d(8);
+        let small = FixedPointPlan::build_with_guard(&act, 8, 0.5, 1.0, 8, 2);
+        assert!(small.overflow.entries_fit_i16, "{:?}", small.overflow);
+        assert!(small.overflow.entries_fit_i32);
     }
 
     #[test]

@@ -14,12 +14,45 @@
 //! No multiply, no float, no tanh. The final layer emits raw fixed-point
 //! sums: classification takes an integer argmax; regression reads the
 //! quantized output level (a stored value, not a computation).
+//!
+//! # Execution plan (§Perf)
+//!
+//! `compile` also builds an [`ExecPlan`]: per-layer strides, precomputed
+//! bias accumulators, the integer [`Kernel`] the whole net runs on, and
+//! the sizing of a reusable [`ExecScratch`] arena. The executor then
+//! performs **zero heap allocations** after warmup, processes rows in
+//! cache-blocked chunks (one streamed pass over `w_idx` serves
+//! [`DENSE_ROW_BLOCK`] examples), and fans batches out across the shared
+//! thread pool in bit-exact row chunks. The kernel ladder:
+//!
+//! * `I16xI32` — compact i16 tables + i32 accumulators (widened SIMD
+//!   gather; half the table cache footprint). Chosen when the overflow
+//!   analysis proves i32 accumulation safe and every table entry fits
+//!   i16.
+//! * `I32xI32` — i32 tables + i32 accumulators (AVX2/AVX-512 gather).
+//! * `I32xI64` — i32 tables + i64 accumulators; scalar, always safe.
 
 use crate::fixedpoint::{bias_row, zero_row, ActTable, FixedPointPlan, MulTable, UniformQuant};
 use crate::nn::{ActSpec, LayerSpec, NetSpec, Network};
 use crate::quant::{Codebook, QuantAct};
 use crate::tensor::{Conv2dSpec, Tensor};
 use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+/// Rows processed per `w_idx` pass in dense layers (cache blocking: one
+/// streamed read of the index matrix serves this many examples).
+const DENSE_ROW_BLOCK: usize = 8;
+
+/// Output columns per dense accumulator tile — an 8×512 i32 tile is
+/// 16 KB and stays L1-resident while `w_idx` streams past it.
+const DENSE_COL_BLOCK: usize = 512;
+
+/// Target bytes for a chunk's ping-pong index buffers (both u16 planes).
+const CHUNK_TARGET_BYTES: usize = 128 * 1024;
+
+/// Upper bound on rows per chunk regardless of how small the net is.
+const MAX_CHUNK_ROWS: usize = 64;
 
 /// Weight codebooks for compilation: one global book (the paper's
 /// default) or one per parameterized layer (§5 future work 1).
@@ -58,6 +91,10 @@ enum LutLayer {
         /// Row-major [in_dim × out_dim] codebook indices.
         w_idx: Vec<u32>,
         b_idx: Vec<u32>,
+        /// Precomputed bias contribution per output unit:
+        /// `mul_table[BIAS][b_idx[o]]` (the bias row is constant, so the
+        /// executor starts from a memcpy instead of per-call lookups).
+        bias_acc: Vec<i32>,
         /// Which multiplication table the *incoming* values index.
         table: usize,
         /// Activation table producing the next layer's level indices;
@@ -69,14 +106,116 @@ enum LutLayer {
         /// [fan_in × out_c] codebook indices (im2col layout).
         w_idx: Vec<u32>,
         b_idx: Vec<u32>,
+        /// Precomputed bias contribution per output channel.
+        bias_acc: Vec<i32>,
         table: usize,
         act: Option<usize>,
     },
     MaxPool {
         k: usize,
         stride: usize,
+        /// Input/output spatial dims, frozen at compile time so the
+        /// executor never re-derives shapes.
+        in_h: usize,
+        in_w: usize,
+        chans: usize,
+        out_h: usize,
+        out_w: usize,
     },
     Flatten,
+}
+
+/// The integer kernel a compiled network executes on (table width ×
+/// accumulator width). See the module docs for the ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Compact i16 tables + i32 accumulators (widened SIMD gather).
+    I16xI32,
+    /// i32 tables + i32 accumulators (SIMD gather).
+    I32xI32,
+    /// i32 tables + i64 accumulators (scalar; always safe).
+    I32xI64,
+}
+
+/// Precomputed executor metadata (built once by `compile`).
+#[derive(Clone, Debug)]
+struct ExecPlan {
+    /// Max u16 elements per example at any layer boundary — the fixed
+    /// row stride of the ping-pong index buffers.
+    max_elems: usize,
+    /// Max simultaneous accumulators (dense column tile / conv out_c).
+    max_acc: usize,
+    /// Max conv patch length (0 for pure-MLP nets).
+    max_patch: usize,
+    /// Rows per work chunk, sized so a chunk's scratch stays
+    /// cache-resident.
+    chunk_rows: usize,
+    /// The integer kernel the whole net runs on.
+    kernel: Kernel,
+}
+
+/// Reusable scratch arena for the LUT executor. Buffers grow to the
+/// compiled plan's sizes on first use (warmup); after that,
+/// [`LutNetwork::forward_into`] performs **no heap allocation at all**
+/// (verified by `tests/zero_alloc.rs` with a counting allocator).
+pub struct ExecScratch {
+    /// Ping-pong level-index planes, `chunk_rows × max_elems` each.
+    cur: Vec<u16>,
+    nxt: Vec<u16>,
+    /// Accumulator tile, `DENSE_ROW_BLOCK × max_acc`.
+    acc: Vec<i32>,
+    acc64: Vec<i64>,
+    /// Conv patch gather buffer, `max_patch`.
+    patch: Vec<u16>,
+}
+
+impl ExecScratch {
+    pub fn new() -> ExecScratch {
+        ExecScratch {
+            cur: Vec::new(),
+            nxt: Vec::new(),
+            acc: Vec::new(),
+            acc64: Vec::new(),
+            patch: Vec::new(),
+        }
+    }
+
+    fn ensure(&mut self, plan: &ExecPlan) {
+        let elems = plan.chunk_rows * plan.max_elems;
+        if self.cur.len() < elems {
+            self.cur.resize(elems, 0);
+            self.nxt.resize(elems, 0);
+        }
+        let acc = DENSE_ROW_BLOCK * plan.max_acc;
+        if self.acc.len() < acc {
+            self.acc.resize(acc, 0);
+            self.acc64.resize(acc, 0);
+        }
+        if self.patch.len() < plan.max_patch {
+            self.patch.resize(plan.max_patch, 0);
+        }
+    }
+}
+
+impl Default for ExecScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-thread scratch for the implicit-scratch entry points.
+fn with_scratch<R>(f: impl FnOnce(&mut ExecScratch) -> R) -> R {
+    thread_local! {
+        static SCRATCH: RefCell<ExecScratch> = RefCell::new(ExecScratch::new());
+    }
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Batch-chunk parallelism kill switch (`QNN_SERIAL=1`); thread count
+/// comes from the shared pool (`QNN_THREADS`).
+fn parallel_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("QNN_SERIAL").map(|v| v != "1").unwrap_or(true))
 }
 
 /// The compiled integer network.
@@ -92,6 +231,7 @@ pub struct LutNetwork {
     /// Spatial shape tracking for conv nets: input [H, W, C] or [F].
     input_shape: Vec<usize>,
     out_dim: usize,
+    exec: ExecPlan,
 }
 
 /// Result of an integer forward pass: raw fixed-point sums of the final
@@ -143,6 +283,10 @@ pub struct CompileCfg {
     pub input_levels: Option<usize>,
     /// Target activation-table length (longer = finer Δx).
     pub act_table_len: usize,
+    /// Run on compact i16 tables when every entry provably fits
+    /// (bit-exact — the same values stored narrower). Disable to force
+    /// the i32 tables, e.g. for A/B parity testing.
+    pub compact_tables: bool,
 }
 
 impl Default for CompileCfg {
@@ -151,6 +295,7 @@ impl Default for CompileCfg {
             input_range: (0.0, 1.0),
             input_levels: None,
             act_table_len: 256,
+            compact_tables: true,
         }
     }
 }
@@ -240,11 +385,14 @@ impl LutNetwork {
                     let has_act = next_is_quantized_act(specs, i + 1);
                     let tbl =
                         get_table(layer_book, is_input_domain, books, &mut tables, &mut table_key);
+                    let b_idx = book.assign_slice(b.data());
+                    let bias_acc = bias_accumulators(&tables[tbl], &b_idx);
                     layers.push(LutLayer::Dense {
                         in_dim,
                         out_dim: *units,
                         w_idx: book.assign_slice(w.data()),
-                        b_idx: book.assign_slice(b.data()),
+                        b_idx,
+                        bias_acc,
                         table: tbl,
                         act: if has_act { Some(0) } else { None },
                     });
@@ -272,10 +420,13 @@ impl LutNetwork {
                     let has_act = next_is_quantized_act(specs, i + 1);
                     let tbl =
                         get_table(layer_book, is_input_domain, books, &mut tables, &mut table_key);
+                    let b_idx = book.assign_slice(b.data());
+                    let bias_acc = bias_accumulators(&tables[tbl], &b_idx);
                     layers.push(LutLayer::Conv {
                         spec: cs,
                         w_idx: book.assign_slice(w.data()),
-                        b_idx: book.assign_slice(b.data()),
+                        b_idx,
+                        bias_acc,
                         table: tbl,
                         act: if has_act { Some(0) } else { None },
                     });
@@ -295,12 +446,19 @@ impl LutNetwork {
                 }
                 LayerSpec::MaxPool { k, stride } => {
                     anyhow::ensure!(shape.len() == 3, "MaxPool on shape {shape:?}");
-                    layers.push(LutLayer::MaxPool { k: *k, stride: *stride });
-                    shape = vec![
-                        (shape[0] - k) / stride + 1,
-                        (shape[1] - k) / stride + 1,
-                        shape[2],
-                    ];
+                    let (h, w, c) = (shape[0], shape[1], shape[2]);
+                    let oh = (h - k) / stride + 1;
+                    let ow = (w - k) / stride + 1;
+                    layers.push(LutLayer::MaxPool {
+                        k: *k,
+                        stride: *stride,
+                        in_h: h,
+                        in_w: w,
+                        chans: c,
+                        out_h: oh,
+                        out_w: ow,
+                    });
+                    shape = vec![oh, ow, c];
                 }
                 LayerSpec::AvgPool { .. } => {
                     bail!("AvgPool needs division — not representable in the LUT engine")
@@ -315,6 +473,27 @@ impl LutNetwork {
         }
 
         anyhow::ensure!(shape.len() == 1, "network must end flat, got {shape:?}");
+        // The executor routes sums from exactly one layer — the final
+        // parameterized one — to the output buffer. Reject both a net
+        // whose last parameterized layer is activated (no sum-emitting
+        // layer) and one with an unactivated layer in the middle (its
+        // sums cannot feed a following layer).
+        let param_acts: Vec<bool> = layers
+            .iter()
+            .filter_map(|l| match l {
+                LutLayer::Dense { act, .. } | LutLayer::Conv { act, .. } => Some(act.is_some()),
+                _ => None,
+            })
+            .collect();
+        anyhow::ensure!(
+            param_acts.last() == Some(&false),
+            "network must end with a linear (no-activation) layer"
+        );
+        anyhow::ensure!(
+            param_acts[..param_acts.len() - 1].iter().all(|&a| a),
+            "only the final parameterized layer may omit a quantized activation"
+        );
+        let exec = build_exec_plan(&spec.input_shape, &layers, &tables, &plan, cfg);
         Ok(LutNetwork {
             plan,
             input_quant,
@@ -324,6 +503,7 @@ impl LutNetwork {
             layers,
             input_shape: spec.input_shape.clone(),
             out_dim: shape[0],
+            exec,
         })
     }
 
@@ -332,9 +512,365 @@ impl LutNetwork {
         self.input_quant.quantize_to_indices(x.data())
     }
 
+    /// The integer kernel the compiled network executes on.
+    pub fn kernel(&self) -> Kernel {
+        self.exec.kernel
+    }
+
+    /// Rows per executor work chunk (the batch-parallel granularity).
+    pub fn chunk_rows(&self) -> usize {
+        self.exec.chunk_rows
+    }
+
+    /// A scratch arena pre-sized for this network (so the first real
+    /// call is already allocation-free).
+    pub fn new_scratch(&self) -> ExecScratch {
+        let mut s = ExecScratch::new();
+        s.ensure(&self.exec);
+        s
+    }
+
     /// Integer-only forward pass over a batch of pre-quantized inputs.
     /// `idx` has batch·prod(input_shape) entries.
     pub fn forward_indices(&self, idx: &[u16], batch: usize) -> LutOutput {
+        let mut sums = vec![0i64; batch * self.out_dim];
+        self.forward_indices_into(idx, batch, &mut sums);
+        LutOutput {
+            batch,
+            out_dim: self.out_dim,
+            inv_scale: 1.0 / self.plan.scale(),
+            sums,
+        }
+    }
+
+    /// Batch forward into a caller-provided buffer, fanning row chunks
+    /// out across the shared thread pool when the batch is large enough
+    /// (`QNN_SERIAL=1` disables). Rows are independent, so the parallel
+    /// path is bit-exact vs the serial one. Allocation-free after
+    /// warmup apart from per-chunk job boxes (O(chunks), not O(rows)).
+    pub fn forward_indices_into(&self, idx: &[u16], batch: usize, out: &mut [i64]) {
+        let feat: usize = self.input_shape.iter().product();
+        assert_eq!(idx.len(), batch * feat, "input index count mismatch");
+        assert_eq!(out.len(), batch * self.out_dim, "output buffer size mismatch");
+        if batch == 0 {
+            return;
+        }
+        if batch > 1 && parallel_enabled() {
+            let pool = crate::util::threadpool::global();
+            let threads = pool.threads();
+            // ~2 chunks per thread for load balance, capped by the
+            // cache-sized chunk the scratch arena is provisioned for.
+            let chunk = ((batch + 2 * threads - 1) / (2 * threads)).clamp(1, self.exec.chunk_rows);
+            if threads > 1 && chunk < batch {
+                let out_dim = self.out_dim;
+                pool.parallel_chunks(out, chunk * out_dim, |ci, out_chunk| {
+                    let rows = out_chunk.len() / out_dim;
+                    let start = ci * chunk;
+                    with_scratch(|s| {
+                        self.exec_chunk(
+                            &idx[start * feat..(start + rows) * feat],
+                            rows,
+                            out_chunk,
+                            s,
+                        )
+                    });
+                });
+                return;
+            }
+        }
+        with_scratch(|s| self.forward_into(idx, batch, out, s));
+    }
+
+    /// Fully-explicit serial forward: caller owns both the output buffer
+    /// and the scratch arena, so the call performs **zero heap
+    /// allocations** once the scratch has warmed up (or was pre-sized
+    /// via [`Self::new_scratch`]).
+    pub fn forward_into(
+        &self,
+        idx: &[u16],
+        batch: usize,
+        out: &mut [i64],
+        scratch: &mut ExecScratch,
+    ) {
+        let feat: usize = self.input_shape.iter().product();
+        assert_eq!(idx.len(), batch * feat, "input index count mismatch");
+        assert_eq!(out.len(), batch * self.out_dim, "output buffer size mismatch");
+        let chunk = self.exec.chunk_rows;
+        let mut r0 = 0;
+        while r0 < batch {
+            let rows = chunk.min(batch - r0);
+            self.exec_chunk(
+                &idx[r0 * feat..(r0 + rows) * feat],
+                rows,
+                &mut out[r0 * self.out_dim..(r0 + rows) * self.out_dim],
+                scratch,
+            );
+            r0 += rows;
+        }
+    }
+
+    /// Run up to `chunk_rows` examples through every layer using the
+    /// scratch arena. `input` is `rows × feat` level indices; `out` is
+    /// `rows × out_dim` final sums.
+    fn exec_chunk(&self, input: &[u16], rows: usize, out: &mut [i64], scratch: &mut ExecScratch) {
+        scratch.ensure(&self.exec);
+        let row_stride = self.exec.max_elems;
+        let feat: usize = self.input_shape.iter().product();
+        let use_i16 = self.exec.kernel == Kernel::I16xI32;
+        let ExecScratch {
+            cur,
+            nxt,
+            acc,
+            acc64,
+            patch,
+        } = scratch;
+
+        for r in 0..rows {
+            cur[r * row_stride..r * row_stride + feat]
+                .copy_from_slice(&input[r * feat..(r + 1) * feat]);
+        }
+
+        for layer in &self.layers {
+            match layer {
+                LutLayer::Dense {
+                    in_dim,
+                    out_dim,
+                    w_idx,
+                    bias_acc,
+                    table,
+                    act,
+                    ..
+                } => {
+                    let t = &self.tables[*table];
+                    let od = *out_dim;
+                    match (self.exec.kernel, act) {
+                        (Kernel::I32xI64, Some(ai)) => {
+                            let at = &self.act_tables[*ai];
+                            dense_exec_i64(
+                                t,
+                                *in_dim,
+                                od,
+                                w_idx,
+                                bias_acc,
+                                rows,
+                                row_stride,
+                                cur,
+                                acc64,
+                                |r, ob, accs| {
+                                    let base = r * row_stride + ob;
+                                    for (j, &a) in accs.iter().enumerate() {
+                                        nxt[base + j] = at.lookup(a);
+                                    }
+                                },
+                            );
+                        }
+                        (Kernel::I32xI64, None) => {
+                            dense_exec_i64(
+                                t,
+                                *in_dim,
+                                od,
+                                w_idx,
+                                bias_acc,
+                                rows,
+                                row_stride,
+                                cur,
+                                acc64,
+                                |r, ob, accs| {
+                                    let base = r * od + ob;
+                                    for (j, &a) in accs.iter().enumerate() {
+                                        out[base + j] = a;
+                                    }
+                                },
+                            );
+                        }
+                        (_, Some(ai)) => {
+                            let at = &self.act_tables[*ai];
+                            dense_exec_i32(
+                                t,
+                                use_i16,
+                                *in_dim,
+                                od,
+                                w_idx,
+                                bias_acc,
+                                rows,
+                                row_stride,
+                                cur,
+                                acc,
+                                |r, ob, accs| {
+                                    let base = r * row_stride + ob;
+                                    for (j, &a) in accs.iter().enumerate() {
+                                        nxt[base + j] = at.lookup(a as i64);
+                                    }
+                                },
+                            );
+                        }
+                        (_, None) => {
+                            dense_exec_i32(
+                                t,
+                                use_i16,
+                                *in_dim,
+                                od,
+                                w_idx,
+                                bias_acc,
+                                rows,
+                                row_stride,
+                                cur,
+                                acc,
+                                |r, ob, accs| {
+                                    let base = r * od + ob;
+                                    for (j, &a) in accs.iter().enumerate() {
+                                        out[base + j] = a as i64;
+                                    }
+                                },
+                            );
+                        }
+                    }
+                    if act.is_some() {
+                        std::mem::swap(cur, nxt);
+                    }
+                }
+                LutLayer::Conv {
+                    spec: cs,
+                    w_idx,
+                    bias_acc,
+                    table,
+                    act,
+                    ..
+                } => {
+                    let t = &self.tables[*table];
+                    let (ow, oc) = (cs.out_w(), cs.out_c);
+                    let od = cs.out_h() * ow * oc;
+                    match (self.exec.kernel, act) {
+                        (Kernel::I32xI64, Some(ai)) => {
+                            let at = &self.act_tables[*ai];
+                            conv_exec_i64(
+                                t,
+                                cs,
+                                w_idx,
+                                bias_acc,
+                                rows,
+                                row_stride,
+                                cur,
+                                acc64,
+                                patch,
+                                |r, off, accs| {
+                                    let base = r * row_stride + off;
+                                    for (j, &a) in accs.iter().enumerate() {
+                                        nxt[base + j] = at.lookup(a);
+                                    }
+                                },
+                            );
+                        }
+                        (Kernel::I32xI64, None) => {
+                            conv_exec_i64(
+                                t,
+                                cs,
+                                w_idx,
+                                bias_acc,
+                                rows,
+                                row_stride,
+                                cur,
+                                acc64,
+                                patch,
+                                |r, off, accs| {
+                                    let base = r * od + off;
+                                    for (j, &a) in accs.iter().enumerate() {
+                                        out[base + j] = a;
+                                    }
+                                },
+                            );
+                        }
+                        (_, Some(ai)) => {
+                            let at = &self.act_tables[*ai];
+                            conv_exec_i32(
+                                t,
+                                use_i16,
+                                cs,
+                                w_idx,
+                                bias_acc,
+                                rows,
+                                row_stride,
+                                cur,
+                                acc,
+                                patch,
+                                |r, off, accs| {
+                                    let base = r * row_stride + off;
+                                    for (j, &a) in accs.iter().enumerate() {
+                                        nxt[base + j] = at.lookup(a as i64);
+                                    }
+                                },
+                            );
+                        }
+                        (_, None) => {
+                            conv_exec_i32(
+                                t,
+                                use_i16,
+                                cs,
+                                w_idx,
+                                bias_acc,
+                                rows,
+                                row_stride,
+                                cur,
+                                acc,
+                                patch,
+                                |r, off, accs| {
+                                    let base = r * od + off;
+                                    for (j, &a) in accs.iter().enumerate() {
+                                        out[base + j] = a as i64;
+                                    }
+                                },
+                            );
+                        }
+                    }
+                    if act.is_some() {
+                        std::mem::swap(cur, nxt);
+                    }
+                }
+                LutLayer::MaxPool {
+                    k,
+                    stride: pstep,
+                    in_h,
+                    in_w,
+                    chans,
+                    out_h,
+                    out_w,
+                } => {
+                    // Level indices are order-isomorphic to level values,
+                    // so max-pooling indices == max-pooling values.
+                    for r in 0..rows {
+                        let src = &cur[r * row_stride..r * row_stride + in_h * in_w * chans];
+                        let dst = &mut nxt[r * row_stride..(r + 1) * row_stride];
+                        let mut oidx = 0;
+                        for oy in 0..*out_h {
+                            for ox in 0..*out_w {
+                                for ci in 0..*chans {
+                                    let mut best = 0u16;
+                                    for ky in 0..*k {
+                                        for kx in 0..*k {
+                                            let iy = oy * pstep + ky;
+                                            let ix = ox * pstep + kx;
+                                            best = best.max(src[(iy * in_w + ix) * chans + ci]);
+                                        }
+                                    }
+                                    dst[oidx] = best;
+                                    oidx += 1;
+                                }
+                            }
+                        }
+                    }
+                    std::mem::swap(cur, nxt);
+                }
+                LutLayer::Flatten => {} // row layout is already flat
+            }
+        }
+    }
+
+    /// The pre-ExecPlan executor: per-row interpretation with per-layer
+    /// heap allocation and no batch blocking. Kept as the bit-exactness
+    /// oracle for the optimized paths and as the benchmark baseline the
+    /// perf trajectory (`BENCH_lut_engine.json`) measures speedups
+    /// against.
+    pub fn forward_naive(&self, idx: &[u16], batch: usize) -> LutOutput {
         let feat: usize = self.input_shape.iter().product();
         assert_eq!(idx.len(), batch * feat, "input index count mismatch");
 
@@ -352,14 +888,12 @@ impl LutNetwork {
                     b_idx,
                     table,
                     act,
+                    ..
                 } => {
                     let t = &self.tables[*table];
                     let mut sums = vec![0i64; batch * out_dim];
                     let brow = t.row(bias_row(t.a_levels));
                     if self.plan.overflow.fits_i32 {
-                        // Fast path (§Perf): the plan PROVED i32
-                        // accumulators cannot overflow, so the inner loop
-                        // runs 8-wide via AVX2 vpgatherdd + vpaddd.
                         let mut acc = vec![0i32; *out_dim];
                         for bi in 0..batch {
                             let arow = &cur[bi * in_dim..(bi + 1) * in_dim];
@@ -414,6 +948,7 @@ impl LutNetwork {
                     b_idx,
                     table,
                     act,
+                    ..
                 } => {
                     let t = &self.tables[*table];
                     let (oh, ow, oc) = (spec.out_h(), spec.out_w(), spec.out_c);
@@ -455,7 +990,6 @@ impl LutNetwork {
                                 let out_off = ((bi * oh + oy) * ow + ox) * oc;
                                 let orow = &mut sums[out_off..out_off + oc];
                                 if self.plan.overflow.fits_i32 {
-                                    // SIMD fast path (see Dense arm).
                                     let acc = &mut acc_vec[..];
                                     for (o, bidx) in b_idx.iter().enumerate() {
                                         acc[o] = brow[*bidx as usize];
@@ -497,9 +1031,7 @@ impl LutNetwork {
                         }
                     }
                 }
-                LutLayer::MaxPool { k, stride } => {
-                    // Level indices are order-isomorphic to level values,
-                    // so max-pooling indices == max-pooling values.
+                LutLayer::MaxPool { k, stride, .. } => {
                     let (h, w, c) = (shape[0], shape[1], shape[2]);
                     let oh = (h - k) / stride + 1;
                     let ow = (w - k) / stride + 1;
@@ -600,6 +1132,307 @@ impl LutNetwork {
     }
 }
 
+/// Precompute the bias contribution of every output unit: the bias row
+/// is constant per table, so the executor initializes accumulators with
+/// a memcpy instead of per-call gathers.
+fn bias_accumulators(t: &MulTable, b_idx: &[u32]) -> Vec<i32> {
+    let brow = t.row(bias_row(t.a_levels));
+    b_idx.iter().map(|&bi| brow[bi as usize]).collect()
+}
+
+/// Derive the executor metadata from the compiled layers.
+fn build_exec_plan(
+    input_shape: &[usize],
+    layers: &[LutLayer],
+    tables: &[MulTable],
+    plan: &FixedPointPlan,
+    cfg: &CompileCfg,
+) -> ExecPlan {
+    let feat: usize = input_shape.iter().product();
+    let mut elems = feat;
+    let mut max_elems = feat;
+    let mut max_acc = 1usize;
+    let mut max_patch = 0usize;
+    for layer in layers {
+        match layer {
+            LutLayer::Dense { out_dim, .. } => {
+                elems = *out_dim;
+                max_acc = max_acc.max((*out_dim).min(DENSE_COL_BLOCK));
+            }
+            LutLayer::Conv { spec, .. } => {
+                elems = spec.out_h() * spec.out_w() * spec.out_c;
+                max_acc = max_acc.max(spec.out_c);
+                max_patch = max_patch.max(spec.fan_in());
+            }
+            LutLayer::MaxPool {
+                out_h, out_w, chans, ..
+            } => {
+                elems = out_h * out_w * chans;
+            }
+            LutLayer::Flatten => {}
+        }
+        max_elems = max_elems.max(elems);
+    }
+    // Two u16 ping-pong planes per row.
+    let per_row_bytes = 4 * max_elems.max(1);
+    let chunk_rows = (CHUNK_TARGET_BYTES / per_row_bytes).clamp(1, MAX_CHUNK_ROWS);
+    let all_compact = tables.iter().all(|t| t.is_compact());
+    let kernel = if plan.overflow.fits_i32 {
+        if all_compact && cfg.compact_tables {
+            Kernel::I16xI32
+        } else {
+            Kernel::I32xI32
+        }
+    } else {
+        Kernel::I32xI64
+    };
+    ExecPlan {
+        max_elems,
+        max_acc,
+        max_patch,
+        chunk_rows,
+        kernel,
+    }
+}
+
+/// Blocked dense layer on i32 accumulators. `emit(row, out_offset,
+/// acc_block)` receives each finished (row × column-block) tile.
+#[allow(clippy::too_many_arguments)]
+fn dense_exec_i32<E: FnMut(usize, usize, &[i32])>(
+    t: &MulTable,
+    use_i16: bool,
+    in_dim: usize,
+    out_dim: usize,
+    w_idx: &[u32],
+    bias_acc: &[i32],
+    rows: usize,
+    row_stride: usize,
+    cur: &[u16],
+    acc: &mut [i32],
+    mut emit: E,
+) {
+    let d16 = if use_i16 { t.data16() } else { None };
+    let w = t.w_cols;
+    let mut r0 = 0;
+    while r0 < rows {
+        let m = DENSE_ROW_BLOCK.min(rows - r0);
+        let mut ob = 0;
+        while ob < out_dim {
+            let bw = DENSE_COL_BLOCK.min(out_dim - ob);
+            for r in 0..m {
+                acc[r * bw..(r + 1) * bw].copy_from_slice(&bias_acc[ob..ob + bw]);
+            }
+            // One streamed pass over w_idx serves all `m` rows — the
+            // cache-blocking at the heart of the batch speedup: the
+            // index block is reused from L1/L2 instead of re-streamed
+            // per example.
+            for ii in 0..in_dim {
+                let wrow = &w_idx[ii * out_dim + ob..ii * out_dim + ob + bw];
+                match d16 {
+                    Some(d) => {
+                        for r in 0..m {
+                            let a = cur[(r0 + r) * row_stride + ii] as usize;
+                            super::simd::gather_acc_i16(
+                                &mut acc[r * bw..(r + 1) * bw],
+                                &d[a * w..a * w + w + 1],
+                                wrow,
+                            );
+                        }
+                    }
+                    None => {
+                        for r in 0..m {
+                            let a = cur[(r0 + r) * row_stride + ii] as usize;
+                            super::simd::gather_acc(&mut acc[r * bw..(r + 1) * bw], t.row(a), wrow);
+                        }
+                    }
+                }
+            }
+            for r in 0..m {
+                emit(r0 + r, ob, &acc[r * bw..(r + 1) * bw]);
+            }
+            ob += bw;
+        }
+        r0 += m;
+    }
+}
+
+/// Blocked dense layer on i64 accumulators (the always-safe fallback).
+#[allow(clippy::too_many_arguments)]
+fn dense_exec_i64<E: FnMut(usize, usize, &[i64])>(
+    t: &MulTable,
+    in_dim: usize,
+    out_dim: usize,
+    w_idx: &[u32],
+    bias_acc: &[i32],
+    rows: usize,
+    row_stride: usize,
+    cur: &[u16],
+    acc64: &mut [i64],
+    mut emit: E,
+) {
+    let mut r0 = 0;
+    while r0 < rows {
+        let m = DENSE_ROW_BLOCK.min(rows - r0);
+        let mut ob = 0;
+        while ob < out_dim {
+            let bw = DENSE_COL_BLOCK.min(out_dim - ob);
+            for r in 0..m {
+                for (j, &b) in bias_acc[ob..ob + bw].iter().enumerate() {
+                    acc64[r * bw + j] = b as i64;
+                }
+            }
+            for ii in 0..in_dim {
+                let wrow = &w_idx[ii * out_dim + ob..ii * out_dim + ob + bw];
+                for r in 0..m {
+                    let a = cur[(r0 + r) * row_stride + ii] as usize;
+                    let trow = t.row(a);
+                    let arow = &mut acc64[r * bw..(r + 1) * bw];
+                    for (j, &wi) in wrow.iter().enumerate() {
+                        arow[j] += trow[wi as usize] as i64;
+                    }
+                }
+            }
+            for r in 0..m {
+                emit(r0 + r, ob, &acc64[r * bw..(r + 1) * bw]);
+            }
+            ob += bw;
+        }
+        r0 += m;
+    }
+}
+
+/// Conv layer on i32 accumulators: integer im2col patch gather fused
+/// with the LUT accumulation. `emit(row, out_offset, accs)` receives
+/// each output position's `out_c` sums.
+#[allow(clippy::too_many_arguments)]
+fn conv_exec_i32<E: FnMut(usize, usize, &[i32])>(
+    t: &MulTable,
+    use_i16: bool,
+    cs: &Conv2dSpec,
+    w_idx: &[u32],
+    bias_acc: &[i32],
+    rows: usize,
+    row_stride: usize,
+    cur: &[u16],
+    acc: &mut [i32],
+    patch: &mut [u16],
+    mut emit: E,
+) {
+    let (oh, ow, oc) = (cs.out_h(), cs.out_w(), cs.out_c);
+    let fan = cs.fan_in();
+    let pad_idx = zero_row(t.a_levels) as u16;
+    let in_row = cs.in_w * cs.in_c;
+    let d16 = if use_i16 { t.data16() } else { None };
+    let w = t.w_cols;
+    let patch = &mut patch[..fan];
+    for r in 0..rows {
+        let base = r * row_stride;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                gather_patch(cs, cur, base, in_row, pad_idx, oy, ox, patch);
+                let accs = &mut acc[..oc];
+                accs.copy_from_slice(bias_acc);
+                match d16 {
+                    Some(d) => {
+                        for (pi, &aidx) in patch.iter().enumerate() {
+                            let a = aidx as usize;
+                            super::simd::gather_acc_i16(
+                                accs,
+                                &d[a * w..a * w + w + 1],
+                                &w_idx[pi * oc..(pi + 1) * oc],
+                            );
+                        }
+                    }
+                    None => {
+                        for (pi, &aidx) in patch.iter().enumerate() {
+                            super::simd::gather_acc(
+                                accs,
+                                t.row(aidx as usize),
+                                &w_idx[pi * oc..(pi + 1) * oc],
+                            );
+                        }
+                    }
+                }
+                emit(r, (oy * ow + ox) * oc, &acc[..oc]);
+            }
+        }
+    }
+}
+
+/// Conv layer on i64 accumulators (the always-safe fallback).
+#[allow(clippy::too_many_arguments)]
+fn conv_exec_i64<E: FnMut(usize, usize, &[i64])>(
+    t: &MulTable,
+    cs: &Conv2dSpec,
+    w_idx: &[u32],
+    bias_acc: &[i32],
+    rows: usize,
+    row_stride: usize,
+    cur: &[u16],
+    acc64: &mut [i64],
+    patch: &mut [u16],
+    mut emit: E,
+) {
+    let (oh, ow, oc) = (cs.out_h(), cs.out_w(), cs.out_c);
+    let fan = cs.fan_in();
+    let pad_idx = zero_row(t.a_levels) as u16;
+    let in_row = cs.in_w * cs.in_c;
+    let patch = &mut patch[..fan];
+    for r in 0..rows {
+        let base = r * row_stride;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                gather_patch(cs, cur, base, in_row, pad_idx, oy, ox, patch);
+                let accs = &mut acc64[..oc];
+                for (j, &b) in bias_acc.iter().enumerate() {
+                    accs[j] = b as i64;
+                }
+                for (pi, &aidx) in patch.iter().enumerate() {
+                    let trow = t.row(aidx as usize);
+                    let wrow = &w_idx[pi * oc..(pi + 1) * oc];
+                    for (j, &wi) in wrow.iter().enumerate() {
+                        accs[j] += trow[wi as usize] as i64;
+                    }
+                }
+                emit(r, (oy * ow + ox) * oc, &acc64[..oc]);
+            }
+        }
+    }
+}
+
+/// Collect one output position's receptive field into `patch`
+/// (zero-padding index outside the image).
+#[allow(clippy::too_many_arguments)]
+fn gather_patch(
+    cs: &Conv2dSpec,
+    cur: &[u16],
+    base: usize,
+    in_row: usize,
+    pad_idx: u16,
+    oy: usize,
+    ox: usize,
+    patch: &mut [u16],
+) {
+    patch.iter_mut().for_each(|p| *p = pad_idx);
+    let iy0 = (oy * cs.stride) as isize - cs.pad as isize;
+    let ix0 = (ox * cs.stride) as isize - cs.pad as isize;
+    for ky in 0..cs.k_h {
+        let iy = iy0 + ky as isize;
+        if iy < 0 || iy >= cs.in_h as isize {
+            continue;
+        }
+        for kx in 0..cs.k_w {
+            let ix = ix0 + kx as isize;
+            if ix < 0 || ix >= cs.in_w as isize {
+                continue;
+            }
+            let src = base + iy as usize * in_row + ix as usize * cs.in_c;
+            let dst = (ky * cs.k_w + kx) * cs.in_c;
+            patch[dst..dst + cs.in_c].copy_from_slice(&cur[src..src + cs.in_c]);
+        }
+    }
+}
+
 /// Extract and validate the single hidden activation quantizer.
 fn hidden_activation(spec: &NetSpec) -> Result<QuantAct> {
     let mut found: Option<ActSpec> = None;
@@ -684,4 +1517,149 @@ fn check_exact_assignment(w: &[f32], book: &Codebook, name: &str) -> Result<()> 
          run the clustering step before compiling"
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{kmeans_1d, KMeansCfg};
+    use crate::util::rng::Xoshiro256;
+
+    /// Train-free fixture: random weights snapped to a k-means codebook.
+    fn clustered_net(spec: &NetSpec, k: usize, seed: u64) -> (Network, Codebook) {
+        let mut rng = Xoshiro256::new(seed);
+        let mut net = Network::from_spec(spec, &mut rng);
+        let mut flat = net.flat_weights();
+        let cb = kmeans_1d(&flat, &KMeansCfg::with_k(k), &mut rng);
+        cb.quantize_slice(&mut flat);
+        net.set_flat_weights(&flat);
+        (net, cb)
+    }
+
+    fn mlp_lut(seed: u64, levels: usize, cfg: &CompileCfg) -> LutNetwork {
+        let spec = NetSpec::mlp("t", 24, &[32, 16], 5, ActSpec::tanh_d(levels));
+        let (net, cb) = clustered_net(&spec, 64, seed);
+        LutNetwork::compile(&net, &CodebookSet::Global(cb), cfg).unwrap()
+    }
+
+    fn conv_spec() -> NetSpec {
+        // Small out_c (3) leaves SIMD tail lanes on every gather; the
+        // maxpool + dense tail exercises the full layer mix.
+        NetSpec {
+            name: "conv-t".into(),
+            input_shape: vec![8, 8, 2],
+            layers: vec![
+                LayerSpec::Conv { k: 3, out_c: 3, stride: 1, pad: 1 },
+                LayerSpec::Act(ActSpec::tanh_d(8)),
+                LayerSpec::MaxPool { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 5 },
+            ],
+            init_sd: None,
+        }
+    }
+
+    fn random_indices(rng: &mut Xoshiro256, lut: &LutNetwork, batch: usize) -> Vec<u16> {
+        let feat: usize = lut.input_shape.iter().product();
+        (0..batch * feat)
+            .map(|_| rng.below(lut.input_quant.levels) as u16)
+            .collect()
+    }
+
+    #[test]
+    fn compiled_executor_is_bit_exact_vs_naive_mlp() {
+        let lut = mlp_lut(1, 16, &CompileCfg::default());
+        let mut rng = Xoshiro256::new(9);
+        // Batch spans multiple chunks so the parallel path engages.
+        let batch = lut.chunk_rows() * 2 + 5;
+        let idx = random_indices(&mut rng, &lut, batch);
+        let fast = lut.forward_indices(&idx, batch);
+        let naive = lut.forward_naive(&idx, batch);
+        assert_eq!(fast.sums, naive.sums);
+    }
+
+    #[test]
+    fn explicit_scratch_serial_path_matches_parallel() {
+        let lut = mlp_lut(2, 32, &CompileCfg::default());
+        let mut rng = Xoshiro256::new(10);
+        let batch = 77;
+        let idx = random_indices(&mut rng, &lut, batch);
+        let parallel = lut.forward_indices(&idx, batch);
+        let mut scratch = lut.new_scratch();
+        let mut serial = vec![0i64; batch * lut.out_dim()];
+        lut.forward_into(&idx, batch, &mut serial, &mut scratch);
+        assert_eq!(parallel.sums, serial);
+    }
+
+    #[test]
+    fn compact_i16_tables_match_i32_tables_exactly() {
+        // Coarse plan so entries fit i16 and the ladder reaches I16xI32.
+        let cfg16 = CompileCfg {
+            act_table_len: 16,
+            ..CompileCfg::default()
+        };
+        let cfg32 = CompileCfg {
+            compact_tables: false,
+            ..cfg16.clone()
+        };
+        let lut16 = mlp_lut(3, 8, &cfg16);
+        let lut32 = mlp_lut(3, 8, &cfg32);
+        assert_eq!(lut16.kernel(), Kernel::I16xI32, "plan should compact");
+        assert_ne!(lut32.kernel(), Kernel::I16xI32);
+        let mut rng = Xoshiro256::new(11);
+        let batch = 33;
+        let idx = random_indices(&mut rng, &lut16, batch);
+        let a = lut16.forward_indices(&idx, batch);
+        let b = lut32.forward_indices(&idx, batch);
+        assert_eq!(a.sums, b.sums);
+        assert!(lut16.table_bytes() > 0);
+    }
+
+    #[test]
+    fn conv_pipeline_bit_exact_vs_naive() {
+        let (net, cb) = clustered_net(&conv_spec(), 32, 4);
+        let lut =
+            LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap();
+        let mut rng = Xoshiro256::new(12);
+        let batch = lut.chunk_rows() + 3;
+        let idx = random_indices(&mut rng, &lut, batch);
+        let fast = lut.forward_indices(&idx, batch);
+        let naive = lut.forward_naive(&idx, batch);
+        assert_eq!(fast.sums, naive.sums);
+        assert_eq!(fast.out_dim, 5);
+    }
+
+    #[test]
+    fn property_parallel_and_compact_paths_match_naive() {
+        use crate::util::prop::check;
+        check("ExecPlan paths == naive reference", 12, |g| {
+            let levels = *g.choice(&[8usize, 16, 32]);
+            let batch = g.usize_in(1, 90);
+            let act_table_len = *g.choice(&[16usize, 64, 256]);
+            let seed = g.seed;
+            let cfg = CompileCfg {
+                act_table_len,
+                compact_tables: g.bool(),
+                ..CompileCfg::default()
+            };
+            let lut = mlp_lut(seed, levels, &cfg);
+            let idx = {
+                let rng = g.rng();
+                let feat: usize = lut.input_shape.iter().product();
+                (0..batch * feat)
+                    .map(|_| rng.below(lut.input_quant.levels) as u16)
+                    .collect::<Vec<u16>>()
+            };
+            let fast = lut.forward_indices(&idx, batch);
+            let naive = lut.forward_naive(&idx, batch);
+            assert_eq!(fast.sums, naive.sums);
+        });
+    }
+
+    #[test]
+    fn forward_indices_handles_empty_batch() {
+        let lut = mlp_lut(5, 16, &CompileCfg::default());
+        let out = lut.forward_indices(&[], 0);
+        assert!(out.sums.is_empty());
+    }
 }

@@ -7,5 +7,5 @@ pub mod simd;
 pub mod verify;
 
 pub use float::FloatEngine;
-pub use lut::{CodebookSet, CompileCfg, LutNetwork, LutOutput};
+pub use lut::{CodebookSet, CompileCfg, ExecScratch, Kernel, LutNetwork, LutOutput};
 pub use verify::{verify, VerifyReport};

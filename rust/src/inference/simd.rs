@@ -115,6 +115,91 @@ unsafe fn gather_acc_avx512_impl(acc: &mut [i32], trow: &[i32], wrow: &[u32]) {
     }
 }
 
+/// acc[o] += trow[wrow[o]] for all o, with compact i16 table entries
+/// widened to the i32 accumulator. Scalar version (any platform).
+///
+/// Contract (shared with the SIMD variants): every index in `wrow` is
+/// `< trow.len() - 1` — the final element of `trow` is the read-past
+/// pad [`crate::fixedpoint::MulTable`] appends to each compact row.
+#[inline]
+pub fn gather_acc_i16_scalar(acc: &mut [i32], trow: &[i16], wrow: &[u32]) {
+    debug_assert_eq!(acc.len(), wrow.len());
+    // Strictly below len-1: the final element is the pad the AVX2 path's
+    // 4-byte gather may spill into — an index pointing AT it would read
+    // out of bounds there.
+    debug_assert!(wrow.iter().all(|&w| (w as usize) < trow.len() - 1));
+    // Unrolled by 4 to give the compiler independent dependency chains.
+    let n = acc.len();
+    let mut o = 0;
+    while o + 4 <= n {
+        // SAFETY: o+3 < n; w indices are codebook assignments < the
+        // row's entry count by construction.
+        unsafe {
+            *acc.get_unchecked_mut(o) +=
+                *trow.get_unchecked(*wrow.get_unchecked(o) as usize) as i32;
+            *acc.get_unchecked_mut(o + 1) +=
+                *trow.get_unchecked(*wrow.get_unchecked(o + 1) as usize) as i32;
+            *acc.get_unchecked_mut(o + 2) +=
+                *trow.get_unchecked(*wrow.get_unchecked(o + 2) as usize) as i32;
+            *acc.get_unchecked_mut(o + 3) +=
+                *trow.get_unchecked(*wrow.get_unchecked(o + 3) as usize) as i32;
+        }
+        o += 4;
+    }
+    while o < n {
+        unsafe {
+            *acc.get_unchecked_mut(o) +=
+                *trow.get_unchecked(*wrow.get_unchecked(o) as usize) as i32;
+        }
+        o += 1;
+    }
+}
+
+/// acc[o] += trow[wrow[o]] over i16 entries, AVX2. There is no 16-bit
+/// gather instruction, so each lane gathers the 4 bytes at byte offset
+/// `2·idx` (scale-2 `vpgatherdd`) and a shift pair sign-extends the low
+/// half. The 4-byte read at the final entry spills 2 bytes into the
+/// next element — in bounds because of the pad contract above.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_acc_i16_avx2_impl(acc: &mut [i32], trow: &[i16], wrow: &[u32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let base = trow.as_ptr() as *const i32;
+    let mut o = 0;
+    while o + 8 <= n {
+        // SAFETY: indices are < trow.len() - 1 (pad contract), so the
+        // scale-2 gather reads bytes [2·idx, 2·idx + 4) ⊆ the slice;
+        // unaligned loads/stores used throughout.
+        let idx = _mm256_loadu_si256(wrow.as_ptr().add(o) as *const __m256i);
+        let raw = _mm256_i32gather_epi32::<2>(base, idx);
+        let vals = _mm256_srai_epi32::<16>(_mm256_slli_epi32::<16>(raw));
+        let a = _mm256_loadu_si256(acc.as_ptr().add(o) as *const __m256i);
+        let sum = _mm256_add_epi32(a, vals);
+        _mm256_storeu_si256(acc.as_mut_ptr().add(o) as *mut __m256i, sum);
+        o += 8;
+    }
+    if o < n {
+        gather_acc_i16_scalar(&mut acc[o..], trow, &wrow[o..]);
+    }
+}
+
+/// Dispatching i16 gather-accumulate: AVX2 → scalar. Requires the
+/// pad contract documented on [`gather_acc_i16_scalar`].
+#[inline]
+pub fn gather_acc_i16(acc: &mut [i32], trow: &[i16], wrow: &[u32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_available() {
+            // SAFETY: feature checked at runtime; pad contract upheld by
+            // the caller (MulTable::row16 slices include the pad).
+            unsafe { gather_acc_i16_avx2_impl(acc, trow, wrow) };
+            return;
+        }
+    }
+    gather_acc_i16_scalar(acc, trow, wrow);
+}
+
 /// Dispatching gather-accumulate: AVX-512F → AVX2 → scalar.
 #[inline]
 pub fn gather_acc(acc: &mut [i32], trow: &[i32], wrow: &[u32]) {
@@ -172,6 +257,76 @@ mod tests {
             reference(&mut b, &trow, &wrow);
             assert_eq!(a, b, "n={n}");
         }
+    }
+
+    fn reference_i16(acc: &mut [i32], trow: &[i16], wrow: &[u32]) {
+        for (a, &w) in acc.iter_mut().zip(wrow) {
+            *a += trow[w as usize] as i32;
+        }
+    }
+
+    /// A padded i16 "row": indices stay < len-1, like MulTable::row16.
+    fn padded_row(rng: &mut Xoshiro256, entries: usize) -> Vec<i16> {
+        let mut v: Vec<i16> = (0..entries).map(|_| rng.next_u64() as i16).collect();
+        v.push(0);
+        v
+    }
+
+    #[test]
+    fn i16_scalar_matches_reference() {
+        let mut rng = Xoshiro256::new(3);
+        for n in [0usize, 1, 3, 4, 7, 8, 33, 100] {
+            let trow = padded_row(&mut rng, 64);
+            let wrow: Vec<u32> = (0..n).map(|_| rng.below(64) as u32).collect();
+            let mut a = vec![5i32; n];
+            let mut b = vec![5i32; n];
+            gather_acc_i16_scalar(&mut a, &trow, &wrow);
+            reference_i16(&mut b, &trow, &wrow);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn i16_dispatch_matches_reference_including_extreme_entries() {
+        let mut rng = Xoshiro256::new(4);
+        for n in [1usize, 7, 8, 9, 16, 63, 257] {
+            let mut trow = padded_row(&mut rng, 500);
+            // Force sign-extension edge cases into play.
+            trow[0] = i16::MIN;
+            trow[1] = i16::MAX;
+            trow[2] = -1;
+            let mut wrow: Vec<u32> = (0..n).map(|_| rng.below(500) as u32).collect();
+            wrow[0] = 0;
+            if n > 3 {
+                wrow[1] = 1;
+                wrow[2] = 2;
+                // Last *indexable* entry: exercises the read-past pad.
+                wrow[3] = 499;
+            }
+            let mut a = vec![-11i32; n];
+            let mut b = vec![-11i32; n];
+            gather_acc_i16(&mut a, &trow, &wrow);
+            reference_i16(&mut b, &trow, &wrow);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn property_i16_random_streams() {
+        use crate::util::prop::check;
+        check("i16 gather == scalar reference", 64, |g| {
+            let w = g.usize_in(1, 512);
+            let n = g.usize_in(1, 300);
+            let rng = g.rng();
+            let mut trow: Vec<i16> = (0..w).map(|_| rng.next_u64() as i16).collect();
+            trow.push(0); // pad
+            let wrow: Vec<u32> = (0..n).map(|_| rng.below(w) as u32).collect();
+            let mut a = vec![0i32; n];
+            let mut b = vec![0i32; n];
+            gather_acc_i16(&mut a, &trow, &wrow);
+            reference_i16(&mut b, &trow, &wrow);
+            assert_eq!(a, b);
+        });
     }
 
     #[test]

@@ -1,0 +1,126 @@
+//! Machine-readable performance trajectory records (`BENCH_*.json` at
+//! the repository root).
+//!
+//! Two producers share this schema: the full benchmark
+//! (`cargo bench --bench bench_lut_engine`) and the quick recorder that
+//! runs during plain `cargo test` (`tests/bench_trajectory.rs`), so the
+//! perf trajectory is seeded on every tier-1 run and refined whenever
+//! the dedicated bench runs.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One (topology × batch) measurement of the LUT engine.
+pub struct LutBenchRecord {
+    pub topology: String,
+    pub batch: usize,
+    /// Kernel the compiled net ran on (`I16xI32` / `I32xI32` / `I32xI64`).
+    pub kernel: String,
+    /// Pre-ExecPlan interpreter (`forward_naive`) — the speedup baseline.
+    pub ns_per_row_naive: f64,
+    /// Optimized serial path (`forward_into`, zero-allocation).
+    pub ns_per_row_serial: f64,
+    /// Batch-parallel path (`forward_indices_into` on the shared pool).
+    pub ns_per_row_parallel: f64,
+    /// Float reference engine on the same topology, when measured.
+    pub ns_per_row_float: Option<f64>,
+}
+
+impl LutBenchRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("topology", Json::Str(self.topology.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("ns_per_row_naive", Json::Num(self.ns_per_row_naive)),
+            ("ns_per_row_serial", Json::Num(self.ns_per_row_serial)),
+            ("ns_per_row_parallel", Json::Num(self.ns_per_row_parallel)),
+            ("rows_per_s_parallel", Json::Num(1e9 / self.ns_per_row_parallel)),
+            (
+                "speedup_serial_vs_naive",
+                Json::Num(self.ns_per_row_naive / self.ns_per_row_serial),
+            ),
+            (
+                "speedup_parallel_vs_naive",
+                Json::Num(self.ns_per_row_naive / self.ns_per_row_parallel),
+            ),
+        ];
+        if let Some(f) = self.ns_per_row_float {
+            pairs.push(("ns_per_row_float", Json::Num(f)));
+            pairs.push(("lut_vs_float", Json::Num(self.ns_per_row_parallel / f)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Assemble the full report document.
+pub fn lut_bench_report(records: &[LutBenchRecord], provenance: &str) -> Json {
+    let best = records
+        .iter()
+        .map(|r| r.ns_per_row_naive / r.ns_per_row_parallel)
+        .fold(0.0, f64::max);
+    let threads = crate::util::threadpool::global().threads();
+    Json::obj(vec![
+        ("schema", Json::Str("qnn.bench_lut_engine.v1".into())),
+        ("provenance", Json::Str(provenance.into())),
+        ("threads", Json::Num(threads as f64)),
+        (
+            "simd",
+            Json::obj(vec![
+                ("avx2", Json::Bool(crate::inference::simd::avx2_available())),
+                ("avx512", Json::Bool(crate::inference::simd::avx512_available())),
+            ]),
+        ),
+        (
+            "zero_alloc_serial",
+            Json::Str("verified by tests/zero_alloc.rs (counting allocator)".into()),
+        ),
+        ("max_speedup_parallel_vs_naive", Json::Num(best)),
+        ("results", Json::Arr(records.iter().map(|r| r.to_json()).collect())),
+    ])
+}
+
+/// Repo-root path for a bench artifact (the manifest dir is `rust/`).
+pub fn bench_file_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
+
+/// Write a bench document to the repo root, pretty-printed.
+pub fn write_bench_file(name: &str, doc: &Json) -> std::io::Result<PathBuf> {
+    let path = bench_file_path(name);
+    std::fs::write(&path, doc.to_pretty())?;
+    Ok(path)
+}
+
+/// The `provenance` field of an existing bench file, if it parses.
+pub fn existing_provenance(name: &str) -> Option<String> {
+    let text = std::fs::read_to_string(bench_file_path(name)).ok()?;
+    let doc = Json::parse(&text).ok()?;
+    doc.get("provenance").as_str().map(|s| s.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_schema_roundtrips() {
+        let rec = LutBenchRecord {
+            topology: "256-64-10".into(),
+            batch: 64,
+            kernel: "I16xI32".into(),
+            ns_per_row_naive: 4000.0,
+            ns_per_row_serial: 2000.0,
+            ns_per_row_parallel: 500.0,
+            ns_per_row_float: Some(3000.0),
+        };
+        let doc = lut_bench_report(&[rec], "unit-test");
+        let back = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_lut_engine.v1"));
+        assert_eq!(back.get("provenance").as_str(), Some("unit-test"));
+        let row = back.get("results").at(0);
+        assert_eq!(row.get("speedup_parallel_vs_naive").as_f64(), Some(8.0));
+        assert_eq!(row.get("rows_per_s_parallel").as_f64(), Some(2e6));
+        assert_eq!(back.get("max_speedup_parallel_vs_naive").as_f64(), Some(8.0));
+    }
+}

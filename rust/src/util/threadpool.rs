@@ -1,25 +1,83 @@
 //! Fixed-size worker thread pool over std::thread + mpsc (no `tokio`
-//! offline). Used by the serving coordinator's worker side and by the
-//! benchmark harness's load generators.
+//! offline). Used by the serving coordinator's worker side, by the LUT
+//! engine's batch-parallel executor ([`global`]), and by the benchmark
+//! harness's load generators.
+//!
+//! Panic safety: a panicking job can neither kill its worker nor wedge
+//! the pool — workers catch the unwind and keep serving, and the
+//! in-flight counter is decremented by a drop guard that runs even
+//! while unwinding.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Unique pool ids so a thread can tell *which* pool it belongs to
+/// (see the nested-call guard in [`ThreadPool::parallel_chunks`]).
+static POOL_IDS: AtomicUsize = AtomicUsize::new(1);
+
+thread_local! {
+    /// Id of the pool that owns this thread (0 = not a pool worker).
+    static WORKER_OF: Cell<usize> = Cell::new(0);
+}
+
 /// A fixed-size thread pool. Jobs are executed FIFO by the first free
 /// worker. Dropping the pool joins all workers after draining the queue.
 pub struct ThreadPool {
+    id: usize,
     sender: Option<mpsc::Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     in_flight: Arc<AtomicUsize>,
 }
 
+/// Decrements the in-flight counter even if the job unwinds.
+struct InFlightGuard(Arc<AtomicUsize>);
+
+impl Drop for InFlightGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Completion latch for scoped parallel sections.
+struct Latch {
+    left: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            left: Mutex::new(n),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut left = self.left.lock().unwrap_or_else(|e| e.into_inner());
+        *left -= 1;
+        if *left == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.left.lock().unwrap_or_else(|e| e.into_inner());
+        while *left > 0 {
+            left = self.cv.wait(left).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
 impl ThreadPool {
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0);
+        let id = POOL_IDS.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let in_flight = Arc::new(AtomicUsize::new(0));
@@ -28,38 +86,56 @@ impl ThreadPool {
                 let rx = Arc::clone(&rx);
                 let in_flight = Arc::clone(&in_flight);
                 std::thread::Builder::new()
-                    .name(format!("qnn-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().expect("worker queue poisoned");
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => {
-                                job();
-                                in_flight.fetch_sub(1, Ordering::SeqCst);
+                    .name(format!("qnn-worker-{id}-{i}"))
+                    .spawn(move || {
+                        WORKER_OF.with(|w| w.set(id));
+                        loop {
+                            let job = {
+                                let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+                                guard.recv()
+                            };
+                            match job {
+                                Ok(job) => {
+                                    let _guard = InFlightGuard(Arc::clone(&in_flight));
+                                    // A panicking job must not kill the
+                                    // worker: swallow the unwind and keep
+                                    // serving (the submitter observes the
+                                    // failure through its own channel /
+                                    // latch, not through a dead thread).
+                                    let _ = catch_unwind(AssertUnwindSafe(job));
+                                }
+                                Err(_) => break, // channel closed: shut down
                             }
-                            Err(_) => break, // channel closed: shut down
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
         Self {
+            id,
             sender: Some(tx),
             workers,
             in_flight,
         }
     }
 
-    /// Submit a job for execution.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn execute_job(&self, job: Job) {
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         self.sender
             .as_ref()
             .expect("pool shut down")
-            .send(Box::new(f))
+            .send(job)
             .expect("worker pool closed");
+    }
+
+    /// Submit a job for execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.execute_job(Box::new(f));
     }
 
     /// Number of jobs submitted but not yet finished.
@@ -71,6 +147,62 @@ impl ThreadPool {
     pub fn wait_idle(&self) {
         while self.in_flight() > 0 {
             std::thread::yield_now();
+        }
+    }
+
+    /// Scoped parallel-for over mutable chunks: splits `data` into
+    /// consecutive runs of `chunk` elements and executes
+    /// `f(chunk_index, chunk_slice)` on the pool, returning once every
+    /// chunk has completed. Chunks are disjoint, so no synchronization
+    /// is needed inside `f`; results are deterministic regardless of
+    /// scheduling. If any chunk panics, the panic is re-raised here
+    /// after the section completes (the workers themselves survive).
+    ///
+    /// Calls made from one of this pool's own workers run inline
+    /// (sequentially): the caller already occupies a worker, and
+    /// blocking it on nested jobs could deadlock a small pool.
+    pub fn parallel_chunks<T, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk > 0, "chunk size must be positive");
+        if data.is_empty() {
+            return;
+        }
+        let n_chunks = (data.len() + chunk - 1) / chunk;
+        if n_chunks == 1 || WORKER_OF.with(|w| w.get()) == self.id {
+            for (ci, part) in data.chunks_mut(chunk).enumerate() {
+                f(ci, part);
+            }
+            return;
+        }
+        let panicked = AtomicBool::new(false);
+        let latch = Latch::new(n_chunks);
+        {
+            let f = &f;
+            let panicked = &panicked;
+            let latch = &latch;
+            for (ci, part) in data.chunks_mut(chunk).enumerate() {
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    if catch_unwind(AssertUnwindSafe(|| f(ci, part))).is_err() {
+                        panicked.store(true, Ordering::SeqCst);
+                    }
+                    latch.count_down();
+                });
+                // SAFETY: `latch.wait()` below does not return until every
+                // chunk job has run to completion, so the borrows of
+                // `data`, `f`, `panicked` and `latch` captured by the job
+                // never outlive this stack frame; erasing the lifetime to
+                // feed the 'static queue is sound.
+                let job: Job =
+                    unsafe { Box::from_raw(Box::into_raw(job) as *mut (dyn FnOnce() + Send)) };
+                self.execute_job(job);
+            }
+        }
+        latch.wait();
+        if panicked.load(Ordering::SeqCst) {
+            panic!("parallel_chunks: a chunk job panicked");
         }
     }
 
@@ -98,7 +230,7 @@ impl ThreadPool {
         }
         drop(done_tx);
         for _ in 0..n {
-            done_rx.recv().expect("worker died");
+            done_rx.recv().expect("a map job panicked before finishing");
         }
         Arc::try_unwrap(results)
             .unwrap_or_else(|_| panic!("results still shared"))
@@ -117,6 +249,26 @@ impl Drop for ThreadPool {
             let _ = w.join();
         }
     }
+}
+
+/// The shared process-wide pool for data-parallel kernels (the LUT
+/// engine's batch chunking). Sized by `QNN_THREADS` when set, else the
+/// machine's available parallelism. Never dropped — it lives for the
+/// process.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::env::var("QNN_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4)
+            });
+        ThreadPool::new(n)
+    })
 }
 
 #[cfg(test)]
@@ -150,5 +302,94 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.execute(|| std::thread::sleep(std::time::Duration::from_millis(5)));
         drop(pool); // should not hang or panic
+    }
+
+    #[test]
+    fn panicking_job_does_not_wedge_the_pool() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..8 {
+            pool.execute(|| panic!("poisoned batch"));
+        }
+        // The pool must drain the panicked jobs (drop-guard decrements)…
+        pool.wait_idle();
+        assert_eq!(pool.in_flight(), 0);
+        // …and its workers must still be alive to run new work.
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..16 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn parallel_chunks_writes_disjoint_slices() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u32; 1003];
+        pool.parallel_chunks(&mut data, 64, |ci, part| {
+            for (j, v) in part.iter_mut().enumerate() {
+                *v = (ci * 64 + j) as u32;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_propagates_panics_but_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let mut data = vec![0u8; 100];
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_chunks(&mut data, 10, |ci, _part| {
+                if ci == 3 {
+                    panic!("bad chunk");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // Pool still functional afterwards.
+        let mut data2 = vec![0u8; 20];
+        pool.parallel_chunks(&mut data2, 5, |_ci, part| {
+            for v in part.iter_mut() {
+                *v = 7;
+            }
+        });
+        assert!(data2.iter().all(|&v| v == 7));
+    }
+
+    #[test]
+    fn nested_parallel_chunks_runs_inline_without_deadlock() {
+        // A single-worker pool: a nested parallel_chunks from inside the
+        // worker would classically deadlock (the waiter holds the only
+        // worker). The nested-call guard runs it inline instead.
+        let pool = Arc::new(ThreadPool::new(1));
+        let (tx, rx) = mpsc::channel::<u32>();
+        let p = Arc::clone(&pool);
+        pool.execute(move || {
+            let mut data = vec![0u32; 32];
+            p.parallel_chunks(&mut data, 4, |ci, part| {
+                for v in part.iter_mut() {
+                    *v = ci as u32;
+                }
+            });
+            let _ = tx.send(data.iter().sum());
+        });
+        let sum = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("nested call deadlocked");
+        // 8 chunks of 4 elements holding their chunk index: 4·(0+…+7).
+        assert_eq!(sum, 4 * 28);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_alive() {
+        let a = global() as *const ThreadPool;
+        let b = global() as *const ThreadPool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1);
     }
 }

@@ -1,0 +1,75 @@
+//! Seeds the perf trajectory during plain `cargo test`: quick,
+//! non-asserting throughput measurements of the LUT engine written to
+//! `BENCH_lut_engine.json` at the repo root, in the same schema the full
+//! bench uses (`qnn.bench_lut_engine.v1`).
+//!
+//! Timings are recorded, never asserted — CI machines are noisy and a
+//! perf regression should show up in the trajectory, not flake a test.
+//! A file produced by the dedicated bench (`provenance: "bench:*"`) is
+//! left alone; this recorder only creates or refreshes quick records.
+
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::report::perf::{existing_provenance, lut_bench_report, write_bench_file, LutBenchRecord};
+use qnn::util::rng::Xoshiro256;
+use qnn::util::timer::bench_for;
+use std::time::Duration;
+
+fn prepare(hidden: &[usize], in_dim: usize, out_dim: usize) -> LutNetwork {
+    let spec = NetSpec::mlp("traj", in_dim, hidden, out_dim, ActSpec::tanh_d(32));
+    let mut rng = Xoshiro256::new(7);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(256), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap()
+}
+
+#[test]
+fn record_lut_bench_trajectory() {
+    if let Some(p) = existing_provenance("BENCH_lut_engine.json") {
+        if p.starts_with("bench:") {
+            eprintln!("keeping existing BENCH_lut_engine.json from {p}");
+            return;
+        }
+    }
+    let min_time = Duration::from_millis(60);
+    let mut records = Vec::new();
+    let lut = prepare(&[128, 128], 256, 10);
+    let kernel = format!("{:?}", lut.kernel());
+    for b in [64usize, 256] {
+        let mut rng = Xoshiro256::new(b as u64);
+        let feat = 256;
+        let idx: Vec<u16> = (0..b * feat)
+            .map(|_| rng.below(lut.input_quant.levels) as u16)
+            .collect();
+        let mut scratch = lut.new_scratch();
+        let mut sums = vec![0i64; b * lut.out_dim()];
+
+        let rn = bench_for("naive", min_time, || {
+            std::hint::black_box(lut.forward_naive(&idx, b));
+        });
+        let rs = bench_for("serial", min_time, || {
+            lut.forward_into(&idx, b, &mut sums, &mut scratch);
+            std::hint::black_box(&sums);
+        });
+        let rp = bench_for("parallel", min_time, || {
+            lut.forward_indices_into(&idx, b, &mut sums);
+            std::hint::black_box(&sums);
+        });
+        records.push(LutBenchRecord {
+            topology: "256-128-128-10".into(),
+            batch: b,
+            kernel: kernel.clone(),
+            ns_per_row_naive: rn.mean_ns / b as f64,
+            ns_per_row_serial: rs.mean_ns / b as f64,
+            ns_per_row_parallel: rp.mean_ns / b as f64,
+            ns_per_row_float: None,
+        });
+    }
+    let doc = lut_bench_report(&records, "cargo-test-quick");
+    let path = write_bench_file("BENCH_lut_engine.json", &doc).expect("write bench json");
+    eprintln!("recorded perf trajectory at {}", path.display());
+}

@@ -1,0 +1,93 @@
+//! Proves the ExecPlan acceptance criterion with a counting global
+//! allocator: after warmup, the serial LUT forward pass
+//! (`forward_into` with a caller-owned scratch arena and output buffer)
+//! performs **zero heap allocations per call**.
+//!
+//! This file is its own test binary on purpose — the `#[global_allocator]`
+//! must not interfere with the rest of the suite, and the single test
+//! keeps the counter free of concurrent-test noise.
+
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{ActSpec, LayerSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::util::rng::Xoshiro256;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn clustered(spec: &NetSpec, k: usize) -> LutNetwork {
+    let mut rng = Xoshiro256::new(3);
+    let mut net = Network::from_spec(spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(k), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap()
+}
+
+#[test]
+fn forward_into_allocates_nothing_after_warmup() {
+    // One MLP and one conv topology: both layer kinds must be clean.
+    let mlp = clustered(&NetSpec::mlp("za", 64, &[96, 48], 10, ActSpec::tanh_d(32)), 128);
+    let conv = clustered(
+        &NetSpec {
+            name: "za-conv".into(),
+            input_shape: vec![10, 10, 2],
+            layers: vec![
+                LayerSpec::Conv { k: 3, out_c: 4, stride: 1, pad: 1 },
+                LayerSpec::Act(ActSpec::tanh_d(32)),
+                LayerSpec::MaxPool { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 6 },
+            ],
+            init_sd: None,
+        },
+        64,
+    );
+
+    for (name, lut, feat) in [("mlp", &mlp, 64usize), ("conv", &conv, 200)] {
+        let batch = 37;
+        let mut rng = Xoshiro256::new(11);
+        let idx: Vec<u16> = (0..batch * feat)
+            .map(|_| rng.below(lut.input_quant.levels) as u16)
+            .collect();
+        let mut scratch = lut.new_scratch();
+        let mut out = vec![0i64; batch * lut.out_dim()];
+
+        // Warmup (new_scratch pre-sizes, but take no chances).
+        lut.forward_into(&idx, batch, &mut out, &mut scratch);
+        lut.forward_into(&idx, batch, &mut out, &mut scratch);
+
+        let before = ALLOCS.load(Ordering::SeqCst);
+        for _ in 0..10 {
+            lut.forward_into(&idx, batch, &mut out, &mut scratch);
+        }
+        let after = ALLOCS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "{name}: forward_into allocated {} times in 10 warm calls",
+            after - before
+        );
+    }
+}

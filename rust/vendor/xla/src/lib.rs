@@ -1,0 +1,136 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The build image has no XLA shared library, so this crate provides the
+//! exact API surface `qnn::runtime` uses with constructors that fail at
+//! runtime. Everything that needs PJRT (the `check` subcommand, the
+//! PJRT serving backend, the AOT round-trip tests) detects the error and
+//! skips gracefully; the integer LUT engine — the paper's deployment
+//! target — never touches this crate. Swap this path dependency for the
+//! real `xla` crate to run the AOT graphs.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's: a displayable status message.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable() -> Error {
+        Error {
+            msg: "xla unavailable: offline stub built without PJRT \
+                  (vendor the real `xla` crate to run AOT graphs)"
+                .to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module proto (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+/// An XLA computation wrapping a module proto (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable (stub: never constructible, so `execute` is
+/// unreachable but must type-check).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A device buffer handle (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A host literal (stub).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+    }
+}
