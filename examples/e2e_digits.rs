@@ -17,7 +17,7 @@
 //!
 //!     make artifacts && cargo run --release --example e2e_digits
 
-use qnn::coordinator::{LutEngine, Server, ServerCfg};
+use qnn::coordinator::{Router, ServerCfg};
 use qnn::data::digits;
 use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
 use qnn::nn::{accuracy, ActSpec, NetSpec, Network};
@@ -26,7 +26,6 @@ use qnn::report::plot::{ascii_plot, Series};
 use qnn::runtime::{Manifest, Runtime};
 use qnn::tensor::Tensor;
 use qnn::util::rng::Xoshiro256;
-use std::sync::Arc;
 use std::time::Duration;
 
 const STEPS: u64 = 600;
@@ -151,17 +150,28 @@ fn main() -> anyhow::Result<()> {
         / eval.labels.len() as f64;
     println!("eval accuracy: float(quantized-weights) {float_eval:.3}, integer LUT engine {int_acc:.3}");
 
-    // ---- serve the integer engine through the coordinator ----
-    let engine = LutEngine::new("lut-e2e", lut, digits::FEATURES);
-    let server = Server::start(
-        Arc::new(engine),
+    // ---- save the deployment artifact, then serve it via load_dir ----
+    // (the redesigned lifecycle: the served model is the *reloaded*
+    // artifact, not the in-process compilation — what production does.)
+    let art_dir = std::env::temp_dir().join(format!("qnn_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&art_dir)?;
+    let art_path = art_dir.join("lut-e2e.qnn");
+    lut.save(&art_path)?;
+    println!(
+        "saved {} ({} bytes; float equivalent {} bytes)",
+        art_path.display(),
+        std::fs::metadata(&art_path)?.len(),
+        net.num_params() * 4
+    );
+    let router = Router::load_dir_with(
+        &art_dir,
         ServerCfg {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
             workers: 2,
         },
-    );
-    let h = server.handle();
+    )?;
+    let h = router.handle("lut-e2e")?;
     let clients = 8;
     let per_client = 100;
     let mut joins = Vec::new();
@@ -188,15 +198,15 @@ fn main() -> anyhow::Result<()> {
         }));
     }
     let correct: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
-    let snap = server.metrics.snapshot();
     println!(
-        "served {} requests: accuracy {:.3}, {}",
+        "served {} requests: accuracy {:.3}",
         clients * per_client,
         correct as f64 / (clients * per_client) as f64,
-        snap
     );
-    server.shutdown();
-    println!("\nE2E OK: JAX/Pallas train_step → PJRT → Rust clustering → integer LUT → batched serving.");
+    println!("{}", router.report());
+    router.shutdown();
+    std::fs::remove_dir_all(&art_dir).ok();
+    println!("\nE2E OK: JAX/Pallas train_step → PJRT → Rust clustering → integer LUT → .qnn artifact → Router::load_dir → batched serving.");
     Ok(())
 }
 

@@ -1,0 +1,146 @@
+//! Artifact lifecycle walkthrough + CI gate: train quantized digits
+//! models (a classifier and an autoencoder), compile them to the integer
+//! LUT engine, **save** `.qnn` LUT artifacts next to their float
+//! reference networks, **reload** everything through `Router::load_dir`,
+//! verify the loaded models are bit-exact, and assert the paper's memory
+//! claim — the serialized integer deployment must be well under half the
+//! float artifact (§5 targets less than a third).
+//!
+//!     cargo run --release --example export_artifact
+//!
+//! Exits non-zero if a reload is not bit-exact or a memory ratio is not
+//! < 0.5 (CI runs this as a gate and uploads `artifacts/models/`).
+
+use qnn::coordinator::Router;
+use qnn::data::digits;
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{accuracy, ActSpec, L2Loss, NetSpec, Network, SoftmaxCrossEntropy, Target};
+use qnn::train::{ClusterCfg, TrainCfg, Trainer};
+use qnn::util::rng::Xoshiro256;
+use std::path::Path;
+
+/// Save the LUT + float artifact pair, returning (lut_bytes, float_bytes).
+fn export_pair(
+    dir: &Path,
+    name: &str,
+    lut: &LutNetwork,
+    net: &Network,
+) -> anyhow::Result<(u64, u64)> {
+    let lut_path = dir.join(format!("{name}-lut.qnn"));
+    let float_path = dir.join(format!("{name}-float.qnn"));
+    lut.save(&lut_path)?;
+    net.save(float_path.to_str().unwrap())?;
+    Ok((
+        std::fs::metadata(&lut_path)?.len(),
+        std::fs::metadata(&float_path)?.len(),
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts/models");
+    std::fs::create_dir_all(dir)?;
+    let dcfg = digits::DigitsCfg::default();
+
+    // ---- 1. digits classifier: train → cluster → compile ----
+    let spec = NetSpec::mlp(
+        "digits",
+        digits::FEATURES,
+        &[64, 64],
+        digits::CLASSES,
+        ActSpec::tanh_d(32),
+    );
+    let mut net = Network::from_spec(&spec, &mut Xoshiro256::new(1));
+    let mut trainer = Trainer::new(TrainCfg::adam(3e-3, 1200).with_cluster(ClusterCfg {
+        every: 250,
+        ..ClusterCfg::kmeans(100)
+    }));
+    let result = trainer.train(&mut net, &SoftmaxCrossEntropy, |rng| {
+        let (x, labels) = digits::batch(32, &dcfg, rng);
+        (x, Target::Labels(labels))
+    });
+    let codebook = result.codebook.expect("clustering enabled");
+    println!(
+        "classifier trained: final loss {:.4}, |W| = {}",
+        result.final_loss,
+        codebook.len()
+    );
+    let lut = LutNetwork::compile(&net, &CodebookSet::Global(codebook), &CompileCfg::default())?;
+    let (cls_lut_b, cls_float_b) = export_pair(dir, "digits", &lut, &net)?;
+
+    // ---- 2. digits autoencoder (the §3.2 regression workload) ----
+    let ae_spec = NetSpec::mlp(
+        "digits-ae",
+        digits::FEATURES,
+        &[64, 32, 64],
+        digits::FEATURES,
+        ActSpec::tanh_d(32),
+    );
+    let mut ae_net = Network::from_spec(&ae_spec, &mut Xoshiro256::new(2));
+    let mut ae_trainer = Trainer::new(TrainCfg::adam(2e-3, 900).with_cluster(ClusterCfg {
+        every: 200,
+        ..ClusterCfg::kmeans(100)
+    }));
+    let ae_result = ae_trainer.train(&mut ae_net, &L2Loss, |rng| {
+        let (x, _) = digits::batch(32, &dcfg, rng);
+        let target = Target::Values(x.clone());
+        (x, target)
+    });
+    let ae_codebook = ae_result.codebook.expect("clustering enabled");
+    println!(
+        "autoencoder trained: final L2 {:.4}, |W| = {}",
+        ae_result.final_loss,
+        ae_codebook.len()
+    );
+    let ae_lut =
+        LutNetwork::compile(&ae_net, &CodebookSet::Global(ae_codebook), &CompileCfg::default())?;
+    let (ae_lut_b, ae_float_b) = export_pair(dir, "digits-ae", &ae_lut, &ae_net)?;
+
+    // ---- 3. the §5 memory comparison, measured on real files ----
+    let cls_ratio = cls_lut_b as f64 / cls_float_b as f64;
+    let ae_ratio = ae_lut_b as f64 / ae_float_b as f64;
+    println!("\n| model | float .qnn | LUT .qnn | ratio |");
+    println!("|---|---|---|---|");
+    println!("| digits classifier | {cls_float_b} B | {cls_lut_b} B | {cls_ratio:.2} |");
+    println!("| digits autoencoder | {ae_float_b} B | {ae_lut_b} B | {ae_ratio:.2} |");
+    println!(
+        "(in-RAM LUT footprints: classifier {} B, autoencoder {} B — u32 indices \
+         trade memory for gather speed; the artifact packs them at ⌈log2|W|⌉ bits)",
+        lut.memory_bytes(),
+        ae_lut.memory_bytes()
+    );
+
+    // ---- 4. reload through the serving front door, verify bit-exact ----
+    let eval = digits::eval_set(500, 99);
+    let n = eval.labels.len();
+    let loaded = LutNetwork::load(dir.join("digits-lut.qnn"))?;
+    let idx = lut.quantize_input(&eval.x);
+    anyhow::ensure!(
+        loaded.forward_indices(&idx, n).sums == lut.forward_indices(&idx, n).sums,
+        "reloaded classifier artifact is not bit-exact"
+    );
+    let loaded_ae = LutNetwork::load(dir.join("digits-ae-lut.qnn"))?;
+    let ae_idx = ae_lut.quantize_input(&eval.x);
+    anyhow::ensure!(
+        loaded_ae.forward_indices(&ae_idx, n).sums == ae_lut.forward_indices(&ae_idx, n).sums,
+        "reloaded autoencoder artifact is not bit-exact"
+    );
+    let int_acc = accuracy(&loaded.forward(&eval.x).to_tensor(), &eval.labels);
+    println!("\nreloaded classifier integer-engine accuracy: {int_acc:.3}");
+
+    let router = Router::load_dir(dir)?;
+    println!("router serving models: {:?}", router.models());
+    let out = router.infer("digits-lut", eval.x.row(0).to_vec())?;
+    anyhow::ensure!(out.len() == digits::CLASSES, "served output has wrong width");
+    println!("{}", router.report());
+    router.shutdown();
+
+    // ---- 5. the CI gate ----
+    anyhow::ensure!(
+        cls_ratio < 0.5 && ae_ratio < 0.5,
+        "memory ratio not < 0.5 (classifier {cls_ratio:.3}, autoencoder {ae_ratio:.3})"
+    );
+    println!(
+        "OK: save/load/serve round trips verified; ratios {cls_ratio:.2} / {ae_ratio:.2} < 0.5"
+    );
+    Ok(())
+}

@@ -1,13 +1,16 @@
-//! Serving demo: the router fronts three backends for the same digits
-//! model — the integer LUT engine, the float reference, and (when
-//! artifacts are present) an AOT-compiled XLA graph via PJRT — and
-//! drives concurrent load through each, printing comparative metrics.
+//! Serving demo — the redesigned lifecycle end to end: build a digits
+//! model, compile it to the integer LUT engine, **save** both the `.qnn`
+//! LUT artifact and the float reference to an artifact directory, then
+//! boot everything with `Router::load_dir` (every model file becomes a
+//! running server) and drive concurrent load through each backend,
+//! printing comparative metrics and per-model memory. When PJRT AOT
+//! artifacts are present, that backend is registered alongside.
 //!
 //!     make artifacts && cargo run --release --example serve_router
 
-use qnn::coordinator::{FloatNetEngine, LutEngine, PjrtEngine, Router, Server, ServerCfg};
+use qnn::coordinator::{PjrtEngine, Router, Server, ServerCfg};
 use qnn::data::digits;
-use qnn::inference::{CodebookSet, CompileCfg, FloatEngine, LutNetwork};
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
 use qnn::nn::{ActSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
 use qnn::util::rng::Xoshiro256;
@@ -31,7 +34,15 @@ fn main() -> anyhow::Result<()> {
     cb.quantize_slice(&mut flat);
     net.set_flat_weights(&flat);
     let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default())?;
-    let levels = lut.input_quant.levels;
+
+    // compile → save: one directory holds the whole deployment.
+    // (Per-process name: a stale or foreign .qnn in a shared dir would
+    // make load_dir boot — or fail on — somebody else's model.)
+    let dir = std::env::temp_dir().join(format!("qnn_serve_router_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    lut.save(dir.join("digits-lut.qnn"))?;
+    net.save(dir.join("digits-float.qnn").to_str().unwrap())?;
+    println!("saved artifacts to {}", dir.display());
 
     let cfg = ServerCfg {
         max_batch: 32,
@@ -39,29 +50,9 @@ fn main() -> anyhow::Result<()> {
         workers: 2,
     };
 
-    let mut router = Router::new();
-    router.register(
-        "digits-lut",
-        Server::start(
-            Arc::new(LutEngine::new("lut", lut, digits::FEATURES)),
-            cfg.clone(),
-        ),
-    );
-    router.register(
-        "digits-float",
-        Server::start(
-            Arc::new(FloatNetEngine::new(
-                "float",
-                FloatEngine::with_input_quant(
-                    net,
-                    qnn::fixedpoint::UniformQuant::unit(levels),
-                ),
-                digits::FEATURES,
-                digits::CLASSES,
-            )),
-            cfg.clone(),
-        ),
-    );
+    // load → serve: the router boots every artifact it finds.
+    let mut router = Router::load_dir_with(&dir, cfg.clone())?;
+
     // PJRT backend (baked-weights serving graph) — optional.
     match PjrtEngine::spawn("pjrt", "artifacts", "mlp_serve") {
         Ok(engine) => {
@@ -71,6 +62,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("router serving models: {:?}", router.models());
+    for (name, bytes) in router.memory_bytes() {
+        println!("  {name}: {:.1} KB resident", bytes as f64 / 1024.0);
+    }
 
     // Drive load through every model.
     for model in router.models().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
@@ -93,5 +87,6 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\n{}", router.report());
     router.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
     Ok(())
 }

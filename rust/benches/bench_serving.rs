@@ -3,7 +3,7 @@
 //! closed-loop multi-client load. Reports throughput and latency
 //! percentiles per batching configuration.
 
-use qnn::coordinator::{Engine, LutEngine, Server, ServerCfg};
+use qnn::coordinator::{LutEngine, Server, ServerCfg};
 use qnn::data::digits;
 use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
 use qnn::nn::{ActSpec, NetSpec, Network};

@@ -1,27 +1,103 @@
-//! The engine abstraction the coordinator serves: a batched inference
-//! backend. Three implementations —
+//! The backend abstraction the coordinator serves: a batched inference
+//! engine behind one loader API. Three implementations —
 //!
 //! * [`LutEngine`] — the paper's pure-integer LUT network (the
 //!   deployment target);
 //! * [`FloatNetEngine`] — the float reference network;
 //! * [`crate::coordinator::pjrt_engine::PjrtEngine`] — an AOT-compiled
 //!   XLA graph via PJRT.
+//!
+//! The buffer-reusing [`Backend::infer_batch_into`] is the core method —
+//! the serving hot path writes into a caller-owned output slice and
+//! performs no per-request allocations (`tests/zero_alloc.rs` proves
+//! it). The allocating [`Backend::infer_batch`] wrapper is kept as a
+//! default impl for one-shot callers.
+//!
+//! `LutEngine` and `FloatNetEngine` also boot straight from serialized
+//! artifacts (`from_artifact`), and [`load_backend`] dispatches on the
+//! file magic so [`crate::coordinator::Router::load_dir`] can serve any
+//! mix of artifact kinds from one directory.
 
 use crate::inference::{FloatEngine, LutNetwork};
+use crate::nn::Network;
+use crate::runtime::qnn_artifact::{is_float_artifact, is_lut_artifact};
 use crate::tensor::Tensor;
+use anyhow::{Context, Result};
 use std::cell::RefCell;
-use std::sync::Mutex;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
 
-/// A batched inference backend. `infer_batch` takes `batch` rows of
-/// `input_len` floats and returns `batch` rows of `output_len` floats.
-pub trait Engine: Send + Sync {
+/// A batched inference backend. The core contract is
+/// [`Self::infer_batch_into`]: `batch` rows of `input_len` floats in,
+/// `batch` rows of `output_len` floats written to `out`.
+pub trait Backend: Send + Sync {
     fn name(&self) -> &str;
     fn input_len(&self) -> usize;
     fn output_len(&self) -> usize;
-    fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32>;
-    /// Largest batch this engine accepts at once.
+
+    /// Core inference: write `batch * output_len` results into `out`.
+    /// Implementations must not allocate per call on their steady-state
+    /// path (scratch buffers are reused across requests).
+    fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]);
+
+    /// Allocating convenience wrapper over [`Self::infer_batch_into`].
+    fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; batch * self.output_len()];
+        self.infer_batch_into(flat, batch, &mut out);
+        out
+    }
+
+    /// Resident memory the model itself occupies (tables + indices for
+    /// the LUT engine, 32-bit weights for the float engine) — the §5
+    /// deployment-memory comparison, queryable per served model.
+    fn memory_bytes(&self) -> usize;
+
+    /// Largest batch this backend accepts at once.
     fn max_batch(&self) -> usize {
         256
+    }
+}
+
+/// Model name for an artifact path: the file stem.
+fn model_name(path: &Path) -> String {
+    path.file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("model")
+        .to_string()
+}
+
+/// Boot a backend from a serialized artifact, dispatching on the file
+/// magic: `QNNLUT01` → [`LutEngine`], `QNN1` → [`FloatNetEngine`].
+pub fn load_backend(path: impl AsRef<Path>) -> Result<Arc<dyn Backend>> {
+    let path = path.as_ref();
+    let head = {
+        use std::io::Read;
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening artifact {path:?}"))?;
+        // Loop: a bare read() may legally return short or Interrupted,
+        // which must not misclassify a valid artifact.
+        let mut head = [0u8; 8];
+        let mut n = 0;
+        while n < head.len() {
+            match f.read(&mut head[n..]) {
+                Ok(0) => break,
+                Ok(m) => n += m,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(e).with_context(|| format!("reading {path:?}"));
+                }
+            }
+        }
+        head[..n].to_vec()
+    };
+    if is_lut_artifact(&head) {
+        Ok(Arc::new(LutEngine::from_artifact(path)?))
+    } else if is_float_artifact(&head) {
+        Ok(Arc::new(FloatNetEngine::from_artifact(path)?))
+    } else {
+        anyhow::bail!(
+            "{path:?} is neither a LUT artifact (QNNLUT01) nor a float network (QNN1)"
+        )
     }
 }
 
@@ -41,9 +117,18 @@ impl LutEngine {
             name: name.to_string(),
         }
     }
+
+    /// Boot from a `.qnn` LUT artifact (train → compile → save → load →
+    /// serve). The model name is the file stem.
+    pub fn from_artifact(path: impl AsRef<Path>) -> Result<LutEngine> {
+        let path = path.as_ref();
+        let lut = LutNetwork::load(path)?;
+        let input_len = lut.input_elems();
+        Ok(LutEngine::new(&model_name(path), lut, input_len))
+    }
 }
 
-impl Engine for LutEngine {
+impl Backend for LutEngine {
     fn name(&self) -> &str {
         &self.name
     }
@@ -53,12 +138,18 @@ impl Engine for LutEngine {
     fn output_len(&self) -> usize {
         self.lut.out_dim()
     }
-    fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32> {
-        debug_assert_eq!(flat.len(), batch * self.input_len);
+    fn memory_bytes(&self) -> usize {
+        self.lut.memory_bytes()
+    }
+    fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+        // Hard asserts (not debug): an undersized `out` must never
+        // silently truncate predictions in release builds.
+        assert_eq!(flat.len(), batch * self.input_len, "input buffer size");
+        assert_eq!(out.len(), batch * self.lut.out_dim(), "output buffer size");
         // Per-worker scratch: each server worker thread reuses its own
         // index/sum buffers across requests, so the steady-state request
-        // path performs no quantization-buffer or accumulator
-        // allocations — only the returned Vec<f32> is fresh.
+        // path performs no heap allocation at all — the output lands in
+        // the caller's reused buffer.
         thread_local! {
             static BUFS: RefCell<(Vec<u16>, Vec<i64>)> = RefCell::new((Vec::new(), Vec::new()));
         }
@@ -69,7 +160,9 @@ impl Engine for LutEngine {
             sums.resize(batch * self.lut.out_dim(), 0);
             self.lut.forward_indices_into(idx, batch, sums);
             let inv = 1.0 / self.lut.plan.scale();
-            sums.iter().map(|&s| (s as f64 * inv) as f32).collect()
+            for (o, &s) in out.iter_mut().zip(sums.iter()) {
+                *o = (s as f64 * inv) as f32;
+            }
         })
     }
 }
@@ -78,23 +171,58 @@ impl Engine for LutEngine {
 /// network `&mut`).
 pub struct FloatNetEngine {
     engine: Mutex<FloatEngine>,
+    /// Per-example input shape the network expects ([F] for MLPs,
+    /// [H, W, C] for conv nets) — the forward tensor is
+    /// [batch, ...input_shape].
+    input_shape: Vec<usize>,
     input_len: usize,
     output_len: usize,
+    weight_bytes: usize,
     name: String,
 }
 
 impl FloatNetEngine {
     pub fn new(name: &str, engine: FloatEngine, input_len: usize, output_len: usize) -> Self {
+        let weight_bytes = engine.net.num_params() * std::mem::size_of::<f32>();
+        let input_shape = engine.net.spec.input_shape.clone();
+        debug_assert_eq!(input_shape.iter().product::<usize>(), input_len);
         Self {
             engine: Mutex::new(engine),
+            input_shape,
             input_len,
             output_len,
+            weight_bytes,
             name: name.to_string(),
         }
     }
+
+    /// Boot from a float network file (`Network::save`, magic `QNN1`) —
+    /// the memory-ratio denominator next to the LUT deployment.
+    ///
+    /// The QNN1 format carries weights only, so the engine serves raw
+    /// (unquantized) float inputs. For a like-for-like A/B against the
+    /// LUT engine's quantized input path, construct via
+    /// [`FloatNetEngine::new`] with
+    /// [`FloatEngine::with_input_quant`] instead.
+    pub fn from_artifact(path: impl AsRef<Path>) -> Result<FloatNetEngine> {
+        let path = path.as_ref();
+        let mut net = Network::load(path.to_str().context("non-UTF-8 artifact path")?)
+            .with_context(|| format!("loading float network {path:?}"))?;
+        let input_len: usize = net.spec.input_shape.iter().product();
+        // Probe the output width with a zero forward (shape-only).
+        let mut shape = vec![1usize];
+        shape.extend_from_slice(&net.spec.input_shape);
+        let output_len = net.forward(&Tensor::zeros(&shape), false).len();
+        Ok(FloatNetEngine::new(
+            &model_name(path),
+            FloatEngine::new(net),
+            input_len,
+            output_len,
+        ))
+    }
 }
 
-impl Engine for FloatNetEngine {
+impl Backend for FloatNetEngine {
     fn name(&self) -> &str {
         &self.name
     }
@@ -104,10 +232,18 @@ impl Engine for FloatNetEngine {
     fn output_len(&self) -> usize {
         self.output_len
     }
-    fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32> {
-        let x = Tensor::from_vec(&[batch, self.input_len], flat.to_vec());
+    fn memory_bytes(&self) -> usize {
+        self.weight_bytes
+    }
+    fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+        // Shape per the network's spec ([batch, H, W, C] for conv nets —
+        // a flat 2-D tensor would make the conv im2col misindex).
+        let mut shape = Vec::with_capacity(1 + self.input_shape.len());
+        shape.push(batch);
+        shape.extend_from_slice(&self.input_shape);
+        let x = Tensor::from_vec(&shape, flat.to_vec());
         let y = self.engine.lock().expect("engine poisoned").forward(&x);
-        y.into_vec()
+        out.copy_from_slice(y.data());
     }
 }
 
@@ -140,6 +276,18 @@ mod tests {
         let y = e.infer_batch(&x, 4);
         assert_eq!(y.len(), 4 * 3);
         assert_eq!(e.output_len(), 3);
+        assert!(e.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn infer_batch_into_matches_allocating_wrapper() {
+        let (e, _) = small_lut();
+        let mut rng = Xoshiro256::new(5);
+        let x: Vec<f32> = (0..6 * 8).map(|_| rng.uniform_f32()).collect();
+        let wrapped = e.infer_batch(&x, 6);
+        let mut into = vec![9.0f32; 6 * 3];
+        e.infer_batch_into(&x, 6, &mut into);
+        assert_eq!(wrapped, into);
     }
 
     #[test]
@@ -184,5 +332,41 @@ mod tests {
             };
             assert_eq!(am(&a[i * 3..(i + 1) * 3]), am(&b[i * 3..(i + 1) * 3]));
         }
+    }
+
+    #[test]
+    fn backends_boot_from_artifacts() {
+        let (e, net) = small_lut();
+        let dir = std::env::temp_dir().join(format!("qnn_eng_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let lut_path = dir.join("m_lut.qnn");
+        let float_path = dir.join("m_float.qnn");
+        e.lut.save(&lut_path).unwrap();
+        net.save(float_path.to_str().unwrap()).unwrap();
+
+        let lb = load_backend(&lut_path).unwrap();
+        let fb = load_backend(&float_path).unwrap();
+        assert_eq!(lb.name(), "m_lut");
+        assert_eq!(fb.name(), "m_float");
+        assert_eq!(lb.input_len(), 8);
+        assert_eq!(fb.input_len(), 8);
+        assert_eq!(lb.output_len(), 3);
+        assert_eq!(fb.output_len(), 3);
+
+        // Loaded LUT backend is bit-identical to the in-memory engine.
+        let mut rng = Xoshiro256::new(4);
+        let x: Vec<f32> = (0..5 * 8).map(|_| rng.uniform_f32()).collect();
+        assert_eq!(lb.infer_batch(&x, 5), e.infer_batch(&x, 5));
+
+        // Both backends report a real footprint. (The <1/2 ratio claim
+        // is asserted on a realistically-sized model in the integration
+        // suite — on this 99-weight toy the shared tables dominate.)
+        assert!(lb.memory_bytes() > 0 && fb.memory_bytes() > 0);
+
+        // Garbage files are rejected with a clear error.
+        let bad = dir.join("bad.qnn");
+        std::fs::write(&bad, b"not an artifact").unwrap();
+        assert!(load_backend(&bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

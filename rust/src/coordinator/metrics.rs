@@ -1,20 +1,55 @@
 //! Serving metrics: request latencies, batch-size distribution,
 //! throughput.
+//!
+//! Latency percentiles (p50/p95/p99) are computed over a **bounded ring
+//! buffer** of the most recent request latencies, so a long-lived server
+//! reports its *current* tail behaviour at O(1) memory — the unbounded
+//! per-request vector a naive implementation accumulates would both leak
+//! and freeze the percentiles on ancient history.
 
 use crate::util::stats::percentile_f64;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+/// How many recent request latencies the ring keeps (per server).
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Fixed-capacity overwrite-oldest ring of f64 samples.
+struct Ring {
+    buf: Vec<f64>,
+    next: usize,
+    len: usize,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring {
+            buf: vec![0.0; cap.max(1)],
+            next: 0,
+            len: 0,
+        }
+    }
+
+    fn push(&mut self, v: f64) {
+        self.buf[self.next] = v;
+        self.next = (self.next + 1) % self.buf.len();
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    /// The retained samples (order is irrelevant for percentiles).
+    fn samples(&self) -> &[f64] {
+        &self.buf[..self.len]
+    }
+}
+
 /// Thread-safe metrics sink shared by the batcher and workers.
 pub struct Metrics {
     started: Instant,
     requests: AtomicU64,
     batches: AtomicU64,
-    /// Per-request end-to-end latency (ms).
-    latencies_ms: Mutex<Vec<f64>>,
-    /// Per-batch sizes.
-    batch_sizes: Mutex<Vec<usize>>,
+    /// Recent per-request end-to-end latencies (ms).
+    latencies_ms: Mutex<Ring>,
 }
 
 impl Default for Metrics {
@@ -25,41 +60,54 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
+        Self::with_window(LATENCY_WINDOW)
+    }
+
+    /// Custom latency-window size (tests, memory-constrained deploys).
+    pub fn with_window(window: usize) -> Self {
         Self {
             started: Instant::now(),
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
-            latencies_ms: Mutex::new(Vec::new()),
-            batch_sizes: Mutex::new(Vec::new()),
+            latencies_ms: Mutex::new(Ring::new(window)),
         }
     }
 
     pub fn record_batch(&self, size: usize, request_latencies_ms: &[f64]) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.requests.fetch_add(size as u64, Ordering::Relaxed);
-        self.batch_sizes.lock().unwrap().push(size);
-        self.latencies_ms
-            .lock()
-            .unwrap()
-            .extend_from_slice(request_latencies_ms);
+        let mut ring = self.latencies_ms.lock().unwrap();
+        for &l in request_latencies_ms {
+            ring.push(l);
+        }
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lats = self.latencies_ms.lock().unwrap().clone();
-        let sizes = self.batch_sizes.lock().unwrap().clone();
+        let (p50_ms, p95_ms, p99_ms, latency_samples) = {
+            let ring = self.latencies_ms.lock().unwrap();
+            let s = ring.samples();
+            (
+                percentile_f64(s, 50.0),
+                percentile_f64(s, 95.0),
+                percentile_f64(s, 99.0),
+                s.len(),
+            )
+        };
         let elapsed = self.started.elapsed().as_secs_f64();
         let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
         MetricsSnapshot {
             requests,
-            batches: self.batches.load(Ordering::Relaxed),
+            batches,
             throughput_rps: requests as f64 / elapsed.max(1e-9),
-            p50_ms: percentile_f64(&lats, 50.0),
-            p95_ms: percentile_f64(&lats, 95.0),
-            p99_ms: percentile_f64(&lats, 99.0),
-            mean_batch: if sizes.is_empty() {
+            p50_ms,
+            p95_ms,
+            p99_ms,
+            latency_samples,
+            mean_batch: if batches == 0 {
                 0.0
             } else {
-                sizes.iter().sum::<usize>() as f64 / sizes.len() as f64
+                requests as f64 / batches as f64
             },
         }
     }
@@ -71,9 +119,13 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub throughput_rps: f64,
+    /// Percentiles over the recent-latency ring (up to
+    /// [`LATENCY_WINDOW`] samples).
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// How many ring samples the percentiles were computed over.
+    pub latency_samples: usize,
     pub mean_batch: f64,
 }
 
@@ -82,14 +134,15 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "requests={} batches={} mean_batch={:.1} throughput={:.0} rps \
-             latency p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+             latency p50={:.3}ms p95={:.3}ms p99={:.3}ms (over {} recent)",
             self.requests,
             self.batches,
             self.mean_batch,
             self.throughput_rps,
             self.p50_ms,
             self.p95_ms,
-            self.p99_ms
+            self.p99_ms,
+            self.latency_samples
         )
     }
 }
@@ -107,7 +160,35 @@ mod tests {
         assert_eq!(s.requests, 4);
         assert_eq!(s.batches, 2);
         assert_eq!(s.mean_batch, 2.0);
+        assert_eq!(s.latency_samples, 4);
         assert!(s.p99_ms >= s.p50_ms);
         assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn ring_keeps_only_recent_latencies() {
+        // Fill far past the window with slow requests, then a window of
+        // fast ones: the percentiles must reflect only the fast tail.
+        let m = Metrics::with_window(64);
+        for _ in 0..100 {
+            m.record_batch(1, &[500.0]);
+        }
+        for _ in 0..64 {
+            m.record_batch(1, &[1.0]);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 164);
+        assert_eq!(s.latency_samples, 64);
+        assert!(s.p99_ms <= 1.0 + 1e-9, "p99 {} still sees old samples", s.p99_ms);
+    }
+
+    #[test]
+    fn ring_counts_saturate_at_capacity() {
+        let m = Metrics::with_window(8);
+        m.record_batch(20, &[2.0; 20]);
+        let s = m.snapshot();
+        assert_eq!(s.latency_samples, 8);
+        assert_eq!(s.requests, 20);
+        assert_eq!(s.p50_ms, 2.0);
     }
 }

@@ -1,5 +1,7 @@
 //! L3 serving coordinator: model router → dynamic batcher → worker pool
-//! → pluggable engines (integer LUT, float reference, PJRT graph).
+//! → pluggable backends (integer LUT, float reference, PJRT graph), all
+//! behind the [`Backend`] trait and bootable from `.qnn` artifacts via
+//! [`Router::load_dir`].
 
 pub mod engine;
 pub mod metrics;
@@ -7,8 +9,11 @@ pub mod pjrt_engine;
 pub mod router;
 pub mod server;
 
-pub use engine::{Engine, FloatNetEngine, LutEngine};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use engine::{load_backend, Backend, FloatNetEngine, LutEngine};
+/// Former name of [`Backend`], kept so downstream code migrates at its
+/// own pace.
+pub use engine::Backend as Engine;
+pub use metrics::{Metrics, MetricsSnapshot, LATENCY_WINDOW};
 pub use pjrt_engine::PjrtEngine;
 pub use router::Router;
 pub use server::{Server, ServerCfg, ServerHandle};

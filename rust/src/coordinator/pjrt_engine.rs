@@ -5,7 +5,7 @@
 //! facade communicates with it over channels (actor pattern). Partial
 //! batches are padded up to the graph's compiled batch size.
 
-use super::engine::Engine;
+use super::engine::Backend;
 use crate::runtime::{Manifest, Runtime};
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
@@ -18,13 +18,16 @@ struct Job {
     resp: mpsc::Sender<Vec<f32>>,
 }
 
-/// Engine wrapper over an AOT graph whose single input is
+/// Backend wrapper over an AOT graph whose single input is
 /// `[batch, features]` and single output `[batch, out]`.
 pub struct PjrtEngine {
     name: String,
     compiled_batch: usize,
     features: usize,
     out: usize,
+    /// On-disk size of the HLO artifact (the closest stand-in for the
+    /// compiled graph's resident footprint the stub API exposes).
+    hlo_bytes: usize,
     tx: Mutex<Option<mpsc::Sender<Job>>>,
     thread: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
@@ -33,7 +36,7 @@ impl PjrtEngine {
     /// Spawn the executor thread: it creates its own PJRT client, loads
     /// `graph_name` from `artifacts_dir`, then serves jobs until drop.
     pub fn spawn(name: &str, artifacts_dir: &str, graph_name: &str) -> Result<PjrtEngine> {
-        let (meta_tx, meta_rx) = mpsc::channel::<Result<(usize, usize, usize)>>();
+        let (meta_tx, meta_rx) = mpsc::channel::<Result<(usize, usize, usize, usize)>>();
         let (job_tx, job_rx) = mpsc::channel::<Job>();
         let dir = artifacts_dir.to_string();
         let gname = graph_name.to_string();
@@ -45,6 +48,12 @@ impl PjrtEngine {
                 let setup = (|| -> Result<_> {
                     let rt = Runtime::cpu()?;
                     let manifest = Manifest::load(&dir)?;
+                    let hlo_bytes = manifest
+                        .get(&gname)
+                        .ok()
+                        .and_then(|e| std::fs::metadata(manifest.hlo_path(e)).ok())
+                        .map(|m| m.len() as usize)
+                        .unwrap_or(0);
                     let graph = rt.load(&manifest, &gname)?;
                     let ishape = &graph.entry.inputs[0].shape;
                     let oshape = &graph.entry.outputs[0].shape;
@@ -57,11 +66,11 @@ impl PjrtEngine {
                         "expected single [B,F]→[B,O] graph, got {ishape:?}→{oshape:?}"
                     );
                     let (b, f, o) = (ishape[0], ishape[1], oshape[1]);
-                    Ok((graph, b, f, o))
+                    Ok((graph, b, f, o, hlo_bytes))
                 })();
-                let (graph, b, f, o) = match setup {
+                let (graph, b, f, o, _hlo) = match setup {
                     Ok(v) => {
-                        let meta = (v.1, v.2, v.3);
+                        let meta = (v.1, v.2, v.3, v.4);
                         let _ = meta_tx.send(Ok(meta));
                         v
                     }
@@ -86,7 +95,7 @@ impl PjrtEngine {
             })
             .context("spawning pjrt executor")?;
 
-        let (compiled_batch, features, out) = meta_rx
+        let (compiled_batch, features, out, hlo_bytes) = meta_rx
             .recv()
             .context("pjrt executor died during setup")??;
         Ok(PjrtEngine {
@@ -94,13 +103,14 @@ impl PjrtEngine {
             compiled_batch,
             features,
             out,
+            hlo_bytes,
             tx: Mutex::new(Some(job_tx)),
             thread: Mutex::new(Some(thread)),
         })
     }
 }
 
-impl Engine for PjrtEngine {
+impl Backend for PjrtEngine {
     fn name(&self) -> &str {
         &self.name
     }
@@ -113,7 +123,10 @@ impl Engine for PjrtEngine {
     fn max_batch(&self) -> usize {
         self.compiled_batch
     }
-    fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32> {
+    fn memory_bytes(&self) -> usize {
+        self.hlo_bytes
+    }
+    fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
         assert!(batch <= self.compiled_batch, "batch exceeds compiled size");
         let (rtx, rrx) = mpsc::channel();
         {
@@ -128,7 +141,8 @@ impl Engine for PjrtEngine {
                 })
                 .expect("pjrt executor gone");
         }
-        rrx.recv().expect("pjrt executor dropped job")
+        let result = rrx.recv().expect("pjrt executor dropped job");
+        out.copy_from_slice(&result);
     }
 }
 

@@ -1,9 +1,18 @@
 //! Model router: front-door that maps model names to running servers
 //! (e.g. the integer LUT deployment next to its float reference for A/B
 //! verification in production).
+//!
+//! [`Router::load_dir`] is the deployment entry point of the
+//! train → compile → save → load → serve lifecycle: point it at a
+//! directory of `.qnn` artifacts and it boots a server per model file —
+//! integer LUT artifacts and float networks alike, dispatched on the
+//! file magic.
 
-use super::server::{Server, ServerHandle};
+use super::engine::load_backend;
+use super::server::{Server, ServerCfg, ServerHandle};
+use anyhow::{Context, Result};
 use std::collections::BTreeMap;
+use std::path::Path;
 
 /// Routes requests to named backends.
 pub struct Router {
@@ -23,6 +32,33 @@ impl Router {
         }
     }
 
+    /// Boot every `.qnn` artifact in `dir` behind a default-config
+    /// server. Model names are the file stems.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Router> {
+        Self::load_dir_with(dir, ServerCfg::default())
+    }
+
+    /// [`Self::load_dir`] with an explicit server configuration.
+    pub fn load_dir_with(dir: impl AsRef<Path>, cfg: ServerCfg) -> Result<Router> {
+        let dir = dir.as_ref();
+        let mut paths: Vec<_> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading artifact directory {dir:?}"))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|e| e == "qnn").unwrap_or(false))
+            .collect();
+        paths.sort();
+        anyhow::ensure!(!paths.is_empty(), "no .qnn artifacts found in {dir:?}");
+        let mut router = Router::new();
+        for path in paths {
+            let backend = load_backend(&path)
+                .with_context(|| format!("booting backend from {path:?}"))?;
+            let name = backend.name().to_string();
+            router.register(&name, Server::start(backend, cfg.clone()));
+        }
+        Ok(router)
+    }
+
     pub fn register(&mut self, name: &str, server: Server) {
         self.servers.insert(name.to_string(), server);
     }
@@ -31,7 +67,7 @@ impl Router {
         self.servers.keys().map(|s| s.as_str()).collect()
     }
 
-    pub fn handle(&self, name: &str) -> anyhow::Result<ServerHandle> {
+    pub fn handle(&self, name: &str) -> Result<ServerHandle> {
         self.servers
             .get(name)
             .map(|s| s.handle())
@@ -39,17 +75,26 @@ impl Router {
     }
 
     /// Blocking inference through a named model.
-    pub fn infer(&self, name: &str, input: Vec<f32>) -> anyhow::Result<Vec<f32>> {
+    pub fn infer(&self, name: &str, input: Vec<f32>) -> Result<Vec<f32>> {
         self.handle(name)?.infer(input)
     }
 
-    /// Metrics line for every model.
+    /// Model-memory footprint in bytes, per model name.
+    pub fn memory_bytes(&self) -> BTreeMap<String, usize> {
+        self.servers
+            .iter()
+            .map(|(name, s)| (name.clone(), s.backend.memory_bytes()))
+            .collect()
+    }
+
+    /// Metrics + memory line for every model.
     pub fn report(&self) -> String {
         let mut s = String::new();
         for (name, server) in &self.servers {
             s.push_str(&format!(
-                "{name} [{}]: {}\n",
+                "{name} [{}] mem={:.1} KB: {}\n",
                 server.engine_name,
+                server.backend.memory_bytes() as f64 / 1024.0,
                 server.metrics.snapshot()
             ));
         }
@@ -67,12 +112,12 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::engine::Engine;
+    use crate::coordinator::engine::Backend;
     use crate::coordinator::server::ServerCfg;
     use std::sync::Arc;
 
     struct ConstEngine(f32);
-    impl Engine for ConstEngine {
+    impl Backend for ConstEngine {
         fn name(&self) -> &str {
             "const"
         }
@@ -82,8 +127,11 @@ mod tests {
         fn output_len(&self) -> usize {
             1
         }
-        fn infer_batch(&self, _flat: &[f32], batch: usize) -> Vec<f32> {
-            vec![self.0; batch]
+        fn memory_bytes(&self) -> usize {
+            4
+        }
+        fn infer_batch_into(&self, _flat: &[f32], batch: usize, out: &mut [f32]) {
+            out[..batch].fill(self.0);
         }
     }
 
@@ -97,6 +145,18 @@ mod tests {
         assert!(r.infer("c", vec![0.0, 0.0]).is_err());
         assert_eq!(r.models(), vec!["a", "b"]);
         assert!(r.report().contains("a [const]"));
+        assert!(r.report().contains("mem="));
+        assert_eq!(r.memory_bytes()["a"], 4);
         r.shutdown();
+    }
+
+    #[test]
+    fn load_dir_rejects_empty_or_missing() {
+        assert!(Router::load_dir("/nonexistent/qnn/artifacts").is_err());
+        let dir = std::env::temp_dir().join(format!("qnn_rtr_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let e = Router::load_dir(&dir).unwrap_err();
+        assert!(format!("{e:#}").contains("no .qnn artifacts"), "{e:#}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -8,9 +8,10 @@
 //! real request path with no Python and no floats in the inference hot
 //! loop.
 
-use super::engine::Engine;
+use super::engine::Backend;
 use super::metrics::Metrics;
 use crate::util::threadpool::ThreadPool;
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -75,10 +76,13 @@ pub struct Server {
     shutdown: Arc<AtomicBool>,
     collector: Option<std::thread::JoinHandle<()>>,
     pub engine_name: String,
+    /// The served backend, kept for introspection (`memory_bytes`,
+    /// `Router::report`).
+    pub backend: Arc<dyn Backend>,
 }
 
 impl Server {
-    pub fn start(engine: Arc<dyn Engine>, cfg: ServerCfg) -> Server {
+    pub fn start(engine: Arc<dyn Backend>, cfg: ServerCfg) -> Server {
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -91,6 +95,7 @@ impl Server {
         let max_wait = cfg.max_wait;
         let workers = ThreadPool::new(cfg.workers.max(1));
         let rx = Mutex::new(rx);
+        let backend = Arc::clone(&engine);
 
         let collector = std::thread::Builder::new()
             .name("qnn-batcher".into())
@@ -131,27 +136,42 @@ impl Server {
                     let engine = Arc::clone(&engine);
                     let metrics = Arc::clone(&m);
                     workers.execute(move || {
+                        // Per-worker-thread buffers, reused across every
+                        // batch this thread serves: the steady-state path
+                        // runs the backend through `infer_batch_into` with
+                        // no input/output buffer allocation. (The lats
+                        // scratch rides along for the same reason.)
+                        thread_local! {
+                            static BUFS: RefCell<(Vec<f32>, Vec<f32>, Vec<f64>)> =
+                                RefCell::new((Vec::new(), Vec::new(), Vec::new()));
+                        }
                         let n = batch.len();
-                        let in_len = engine.input_len();
                         let out_len = engine.output_len();
-                        let mut flat = Vec::with_capacity(n * in_len);
-                        for r in &batch {
-                            flat.extend_from_slice(&r.input);
-                        }
-                        let out = engine.infer_batch(&flat, n);
-                        debug_assert_eq!(out.len(), n * out_len);
-                        // Record metrics BEFORE replying so a client that
-                        // reads the snapshot right after its response sees
-                        // its own request counted.
-                        let lats: Vec<f64> = batch
-                            .iter()
-                            .map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3)
-                            .collect();
-                        metrics.record_batch(n, &lats);
-                        for (i, r) in batch.into_iter().enumerate() {
-                            // Receiver may have given up; ignore errors.
-                            let _ = r.resp.send(out[i * out_len..(i + 1) * out_len].to_vec());
-                        }
+                        BUFS.with(|b| {
+                            let (flat, out, lats) = &mut *b.borrow_mut();
+                            flat.clear();
+                            for r in &batch {
+                                flat.extend_from_slice(&r.input);
+                            }
+                            out.clear();
+                            out.resize(n * out_len, 0.0);
+                            engine.infer_batch_into(flat, n, out);
+                            // Record metrics BEFORE replying so a client
+                            // that reads the snapshot right after its
+                            // response sees its own request counted.
+                            lats.clear();
+                            lats.extend(
+                                batch
+                                    .iter()
+                                    .map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3),
+                            );
+                            metrics.record_batch(n, lats);
+                            for (i, r) in batch.into_iter().enumerate() {
+                                // Receiver may have given up; ignore errors.
+                                let _ =
+                                    r.resp.send(out[i * out_len..(i + 1) * out_len].to_vec());
+                            }
+                        });
                     });
                 }
                 workers.wait_idle();
@@ -164,6 +184,7 @@ impl Server {
             shutdown,
             collector: Some(collector),
             engine_name,
+            backend,
         }
     }
 
@@ -193,9 +214,9 @@ impl Drop for Server {
 mod tests {
     use super::*;
 
-    /// Deterministic toy engine: output = [sum(input), batch_marker].
+    /// Deterministic toy engine: output = [sum(input)] per row.
     struct SumEngine;
-    impl Engine for SumEngine {
+    impl Backend for SumEngine {
         fn name(&self) -> &str {
             "sum"
         }
@@ -205,10 +226,13 @@ mod tests {
         fn output_len(&self) -> usize {
             1
         }
-        fn infer_batch(&self, flat: &[f32], batch: usize) -> Vec<f32> {
-            (0..batch)
-                .map(|i| flat[i * 4..(i + 1) * 4].iter().sum())
-                .collect()
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+        fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+            for i in 0..batch {
+                out[i] = flat[i * 4..(i + 1) * 4].iter().sum();
+            }
         }
     }
 

@@ -49,6 +49,21 @@ impl ActTable {
         }
     }
 
+    /// Reassemble a table from its stored parts (`.qnn` artifact load).
+    pub fn from_parts(shift: u32, offset: i64, entries: Vec<u16>) -> ActTable {
+        ActTable {
+            shift,
+            offset,
+            entries,
+        }
+    }
+
+    /// The raw entries (activation level index per Δx bin) — serialized
+    /// verbatim into the `.qnn` artifact.
+    pub fn entries(&self) -> &[u16] {
+        &self.entries
+    }
+
     /// Number of table entries.
     pub fn len(&self) -> usize {
         self.entries.len()

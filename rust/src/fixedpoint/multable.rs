@@ -132,6 +132,19 @@ impl MulTable {
         }
     }
 
+    /// Actual resident bytes of this in-process table: the i32 entries
+    /// (always kept — `row()`/`forward_naive` read them) plus the
+    /// compact i16 copy when present. Larger than [`Self::bytes`] for
+    /// compacted tables; use this for capacity planning, `bytes()` for
+    /// the what-a-deployment-ships accounting.
+    pub fn resident_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<i32>()
+            + self
+                .data16
+                .as_ref()
+                .map_or(0, |d| d.len() * std::mem::size_of::<i16>())
+    }
+
     /// Largest |entry| actually stored.
     pub fn max_abs_entry(&self) -> i64 {
         self.data.iter().map(|&e| (e as i64).abs()).max().unwrap_or(0)
@@ -200,8 +213,13 @@ mod tests {
             }
         }
         assert_eq!(*t.data16().unwrap().last().unwrap(), 0);
-        // Deployment footprint halves (modulo the 2-byte pad).
+        // Deployment footprint halves (modulo the 2-byte pad)…
         assert_eq!(t.bytes(), (t.rows() * t.w_cols + 1) * 2);
+        // …while the resident footprint counts both copies.
+        assert_eq!(
+            t.resident_bytes(),
+            t.rows() * t.w_cols * 4 + (t.rows() * t.w_cols + 1) * 2
+        );
     }
 
     #[test]

@@ -63,7 +63,7 @@ pub enum CodebookSet {
 }
 
 impl CodebookSet {
-    fn book_for(&self, layer_idx: usize) -> &Codebook {
+    pub(crate) fn book_for(&self, layer_idx: usize) -> &Codebook {
         match self {
             CodebookSet::Global(cb) => cb,
             CodebookSet::PerLayer(cbs) => &cbs[layer_idx],
@@ -83,8 +83,9 @@ impl CodebookSet {
     }
 }
 
-/// One compiled layer.
-enum LutLayer {
+/// One compiled layer. Crate-visible so the `.qnn` artifact serializer
+/// (`runtime::qnn_artifact`) can walk and rebuild the topology.
+pub(crate) enum LutLayer {
     Dense {
         in_dim: usize,
         out_dim: usize,
@@ -137,9 +138,10 @@ pub enum Kernel {
     I32xI64,
 }
 
-/// Precomputed executor metadata (built once by `compile`).
+/// Precomputed executor metadata (built once by `compile`, rebuilt on
+/// artifact load).
 #[derive(Clone, Debug)]
-struct ExecPlan {
+pub(crate) struct ExecPlan {
     /// Max u16 elements per example at any layer boundary — the fixed
     /// row stride of the ping-pong index buffers.
     max_elems: usize,
@@ -225,13 +227,23 @@ pub struct LutNetwork {
     pub input_quant: UniformQuant,
     /// Hidden activation quantizer (for reporting / output levels).
     pub act: QuantAct,
-    tables: Vec<MulTable>,
-    act_tables: Vec<ActTable>,
-    layers: Vec<LutLayer>,
+    pub(crate) tables: Vec<MulTable>,
+    pub(crate) act_tables: Vec<ActTable>,
+    pub(crate) layers: Vec<LutLayer>,
     /// Spatial shape tracking for conv nets: input [H, W, C] or [F].
-    input_shape: Vec<usize>,
-    out_dim: usize,
-    exec: ExecPlan,
+    pub(crate) input_shape: Vec<usize>,
+    pub(crate) out_dim: usize,
+    pub(crate) exec: ExecPlan,
+    /// The weight codebooks the network was compiled from. Kept so the
+    /// `.qnn` artifact can ship centers instead of full mul-tables (the
+    /// tables are rebuilt deterministically at load).
+    pub(crate) books: CodebookSet,
+    /// Per-mul-table provenance: (codebook index, input-domain?) — the
+    /// recipe the artifact loader uses to rebuild `tables`.
+    pub(crate) table_info: Vec<(usize, bool)>,
+    /// Compile options, preserved for artifact round-tripping (the exec
+    /// plan rebuild needs `compact_tables`).
+    pub(crate) cfg: CompileCfg,
 }
 
 /// Result of an integer forward pass: raw fixed-point sums of the final
@@ -504,6 +516,9 @@ impl LutNetwork {
             input_shape: spec.input_shape.clone(),
             out_dim: shape[0],
             exec,
+            books: books.clone(),
+            table_info: table_key,
+            cfg: cfg.clone(),
         })
     }
 
@@ -1102,6 +1117,30 @@ impl LutNetwork {
             + self.act_tables.iter().map(|t| t.bytes()).sum::<usize>()
     }
 
+    /// Actual resident footprint in bytes of the in-process model:
+    /// mul-tables (i32 entries plus the i16 copy when compacted — both
+    /// stay in RAM), act tables, weight/bias index streams as stored
+    /// (u32), precomputed bias accumulators, and codebook centers. This
+    /// is what [`crate::coordinator::Backend::memory_bytes`] reports for
+    /// a served LUT model; the §4 ships-this-many-bytes accounting is
+    /// [`Self::table_bytes`] + packed indices (see the artifact format).
+    pub fn memory_bytes(&self) -> usize {
+        // index_count() covers every stored w_idx/b_idx entry (u32 each).
+        let mut bytes = self.tables.iter().map(|t| t.resident_bytes()).sum::<usize>()
+            + self.act_tables.iter().map(|t| t.bytes()).sum::<usize>()
+            + self.index_count() * std::mem::size_of::<u32>();
+        for l in &self.layers {
+            if let LutLayer::Dense { bias_acc, .. } | LutLayer::Conv { bias_acc, .. } = l {
+                bytes += bias_acc.len() * std::mem::size_of::<i32>();
+            }
+        }
+        let centers: usize = match &self.books {
+            CodebookSet::Global(cb) => cb.len(),
+            CodebookSet::PerLayer(cbs) => cbs.iter().map(|c| c.len()).sum(),
+        };
+        bytes + centers * std::mem::size_of::<f32>()
+    }
+
     /// Number of weight indices stored (== network weight count).
     pub fn index_count(&self) -> usize {
         self.layers
@@ -1130,18 +1169,28 @@ impl LutNetwork {
     pub fn out_dim(&self) -> usize {
         self.out_dim
     }
+
+    /// Input shape excluding the batch dimension.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    /// Flat input length per example (product of the input shape).
+    pub fn input_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
 }
 
 /// Precompute the bias contribution of every output unit: the bias row
 /// is constant per table, so the executor initializes accumulators with
 /// a memcpy instead of per-call gathers.
-fn bias_accumulators(t: &MulTable, b_idx: &[u32]) -> Vec<i32> {
+pub(crate) fn bias_accumulators(t: &MulTable, b_idx: &[u32]) -> Vec<i32> {
     let brow = t.row(bias_row(t.a_levels));
     b_idx.iter().map(|&bi| brow[bi as usize]).collect()
 }
 
 /// Derive the executor metadata from the compiled layers.
-fn build_exec_plan(
+pub(crate) fn build_exec_plan(
     input_shape: &[usize],
     layers: &[LutLayer],
     tables: &[MulTable],

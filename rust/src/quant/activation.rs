@@ -32,6 +32,17 @@ impl ActKind {
         }
     }
 
+    /// Inverse of [`Self::name`] (artifact deserialization).
+    pub fn from_name(name: &str) -> Option<ActKind> {
+        match name {
+            "tanh" => Some(ActKind::Tanh),
+            "relu6" => Some(ActKind::Relu6),
+            "rect_tanh" => Some(ActKind::RectTanh),
+            "sigmoid" => Some(ActKind::Sigmoid),
+            _ => None,
+        }
+    }
+
     /// f(x).
     #[inline]
     pub fn f(&self, x: f32) -> f32 {

@@ -1,10 +1,20 @@
-//! PJRT runtime: loads the AOT artifacts produced by `python/compile/`
-//! (HLO **text** — see DESIGN.md and /opt/xla-example/README.md for why
-//! text, not serialized protos) and executes them from Rust. Python is
-//! never on this path; `make artifacts` runs once at build time.
+//! Artifact runtimes.
+//!
+//! * `artifact`/`client` — the PJRT side: loads the AOT artifacts
+//!   produced by `python/compile/` (HLO **text** — see DESIGN.md for why
+//!   text, not serialized protos) and executes them from Rust. Python is
+//!   never on this path; `make artifacts` runs once at build time.
+//! * `qnn_artifact` — the `.qnn` serving artifact for compiled
+//!   [`crate::inference::LutNetwork`]s: save once, load anywhere,
+//!   bit-exact (the train → compile → save → load → serve lifecycle).
 
 pub mod artifact;
 pub mod client;
+pub mod qnn_artifact;
 
 pub use artifact::{ArtifactEntry, Manifest};
 pub use client::{LoadedGraph, Runtime};
+pub use qnn_artifact::{
+    artifact_meta, is_float_artifact, is_lut_artifact, QNN_FLOAT_MAGIC, QNN_LUT_MAGIC,
+    QNN_LUT_VERSION,
+};

@@ -1,0 +1,1038 @@
+//! The `.qnn` serving artifact: a compiled [`LutNetwork`] serialized to
+//! one self-contained file — **train → compile → save → load → serve**.
+//!
+//! # Layout (version 1)
+//!
+//! ```text
+//! magic    8 bytes  b"QNNLUT01"
+//! version  u32 LE
+//! meta     u32 LE length + JSON (informational: kernel, sizes, counts)
+//! body     u64 LE length + binary sections (see below)
+//! checksum u64 LE   FNV-1a over everything between magic and checksum
+//! ```
+//!
+//! The body carries, in order: input shape, output dim, compile options,
+//! input quantizer, activation quantizer (kind + levels), the fixed-point
+//! plan (scale exponent, Δx as raw f64 bits, overflow analysis), the
+//! weight codebooks (f32 centers), per-mul-table provenance, a mul-table
+//! fingerprint, the activation tables (verbatim u16 entries), and the
+//! layer topology with **bit-packed** weight/bias index streams
+//! (⌈log2 |W|⌉ bits per index — the paper's §4 deployment encoding, and
+//! what puts the artifact far below the 32-bit float baseline).
+//!
+//! Mul-tables themselves are *derived* sections: every entry is
+//! `round(value · center · 2^s / Δx)`, a pure function of data already in
+//! the artifact, so the loader rebuilds them with [`MulTable::build`] and
+//! verifies the result against the stored fingerprint. A fingerprint
+//! mismatch (or any framing/checksum failure) is a clear `Err`, never a
+//! panic — corruption cannot silently change a model.
+//!
+//! # Version policy
+//!
+//! The magic string pins the major format; `version` counts incompatible
+//! body revisions. Loaders reject any version they do not know. Additive
+//! metadata goes in the JSON `meta` block, which loaders ignore.
+
+use crate::fixedpoint::{ActTable, FixedPointPlan, MulTable, OverflowAnalysis, UniformQuant};
+use crate::inference::lut::{
+    bias_accumulators, build_exec_plan, CodebookSet, CompileCfg, LutLayer, LutNetwork,
+};
+use crate::quant::{ActKind, Codebook, QuantAct};
+use crate::tensor::Conv2dSpec;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// File magic for LUT serving artifacts.
+pub const QNN_LUT_MAGIC: &[u8; 8] = b"QNNLUT01";
+/// Current body-format version.
+pub const QNN_LUT_VERSION: u32 = 1;
+/// File magic of the float `Network::save` format (the memory-ratio
+/// denominator artifact).
+pub const QNN_FLOAT_MAGIC: &[u8; 4] = b"QNN1";
+
+/// Does this byte prefix identify a LUT serving artifact?
+pub fn is_lut_artifact(bytes: &[u8]) -> bool {
+    bytes.len() >= QNN_LUT_MAGIC.len() && &bytes[..QNN_LUT_MAGIC.len()] == QNN_LUT_MAGIC
+}
+
+/// Does this byte prefix identify a float-network artifact?
+pub fn is_float_artifact(bytes: &[u8]) -> bool {
+    bytes.len() >= QNN_FLOAT_MAGIC.len() && &bytes[..QNN_FLOAT_MAGIC.len()] == QNN_FLOAT_MAGIC
+}
+
+// ---- FNV-1a (integrity checksum; not cryptographic) ----
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_update(FNV_OFFSET, bytes)
+}
+
+/// Order-sensitive fingerprint of the rebuilt mul-tables: dims plus every
+/// i32 entry. Stored at save time, re-checked at load time so a platform
+/// whose float rounding diverged (or a corrupted codebook that slipped
+/// past the frame checksum) fails loudly instead of serving wrong sums.
+fn tables_fingerprint(tables: &[MulTable]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for t in tables {
+        h = fnv1a_update(h, &(t.rows() as u64).to_le_bytes());
+        h = fnv1a_update(h, &(t.w_cols as u64).to_le_bytes());
+        for ai in 0..t.rows() {
+            for &v in t.row(ai) {
+                h = fnv1a_update(h, &v.to_le_bytes());
+            }
+        }
+    }
+    h
+}
+
+// ---- bit-packed index streams ----
+
+/// Bits needed to store values up to `max` (≥ 1 so empty/zero streams
+/// still have a defined width).
+fn bits_for(max: u32) -> u32 {
+    (32 - max.leading_zeros()).max(1)
+}
+
+/// Pack `idx` LSB-first at `bits` bits per value.
+fn pack_indices(idx: &[u32], bits: u32) -> Vec<u8> {
+    let total_bits = idx.len() as u64 * bits as u64;
+    let mut out = vec![0u8; total_bits.div_ceil(8) as usize];
+    let mut bitpos = 0u64;
+    for &raw in idx {
+        let mut v = raw as u64;
+        let mut remaining = bits;
+        while remaining > 0 {
+            let byte = (bitpos / 8) as usize;
+            let off = (bitpos % 8) as u32;
+            let take = (8 - off).min(remaining);
+            out[byte] |= ((v & ((1u64 << take) - 1)) as u8) << off;
+            v >>= take;
+            bitpos += take as u64;
+            remaining -= take;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_indices`].
+fn unpack_indices(bytes: &[u8], count: usize, bits: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0u64;
+    for _ in 0..count {
+        let mut v = 0u64;
+        let mut got = 0u32;
+        while got < bits {
+            let byte = bytes[(bitpos / 8) as usize] as u64;
+            let off = (bitpos % 8) as u32;
+            let take = (8 - off).min(bits - got);
+            v |= ((byte >> off) & ((1u64 << take) - 1)) << got;
+            got += take;
+            bitpos += take as u64;
+        }
+        out.push(v as u32);
+    }
+    out
+}
+
+// ---- little-endian body writer/reader ----
+
+#[derive(Default)]
+struct W {
+    buf: Vec<u8>,
+}
+
+impl W {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i128(&mut self, v: i128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+    fn u16s(&mut self, xs: &[u16]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.u16(x);
+        }
+    }
+    /// Bit-packed index stream: count, bit width, packed bytes.
+    fn packed(&mut self, idx: &[u32]) {
+        let bits = bits_for(idx.iter().copied().max().unwrap_or(0));
+        self.u64(idx.len() as u64);
+        self.u8(bits as u8);
+        self.buf.extend_from_slice(&pack_indices(idx, bits));
+    }
+}
+
+struct R<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> R<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos.checked_add(n).is_some_and(|end| end <= self.b.len()),
+            "truncated artifact body: needed {n} bytes at offset {}",
+            self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i128(&mut self) -> Result<i128> {
+        Ok(i128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(u32::from_le_bytes(
+            self.take(4)?.try_into().unwrap(),
+        )))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(u64::from_le_bytes(
+            self.take(8)?.try_into().unwrap(),
+        )))
+    }
+    /// Length-limited count guard: corrupt frames must error, not OOM.
+    fn count(&mut self, what: &str) -> Result<usize> {
+        let n = self.u64()? as usize;
+        anyhow::ensure!(
+            n <= self.b.len().saturating_sub(self.pos).saturating_mul(64) + 1_000_000,
+            "implausible {what} count {n} in artifact"
+        );
+        Ok(n)
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        Ok(std::str::from_utf8(s)
+            .context("artifact string is not UTF-8")?
+            .to_string())
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.count("f32 array")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+    fn u16s(&mut self) -> Result<Vec<u16>> {
+        let n = self.count("u16 array")?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u16()?);
+        }
+        Ok(out)
+    }
+    fn packed(&mut self) -> Result<Vec<u32>> {
+        let n = self.count("index stream")?;
+        let bits = self.u8()? as u32;
+        anyhow::ensure!(
+            (1..=32).contains(&bits),
+            "index stream bit width {bits} out of range"
+        );
+        let nbytes = (n as u64 * bits as u64).div_ceil(8) as usize;
+        let bytes = self.take(nbytes)?;
+        Ok(unpack_indices(bytes, n, bits))
+    }
+}
+
+// ---- save ----
+
+impl LutNetwork {
+    /// Serialize the compiled network to `.qnn` artifact bytes.
+    pub fn to_artifact_bytes(&self) -> Vec<u8> {
+        let mut body = W::default();
+
+        // Shapes.
+        body.u32(self.input_shape.len() as u32);
+        for &d in &self.input_shape {
+            body.u32(d as u32);
+        }
+        body.u32(self.out_dim as u32);
+
+        // Compile options.
+        body.f32(self.cfg.input_range.0);
+        body.f32(self.cfg.input_range.1);
+        body.u32(self.cfg.input_levels.unwrap_or(0) as u32);
+        body.u32(self.cfg.act_table_len as u32);
+        body.u8(self.cfg.compact_tables as u8);
+
+        // Quantizers.
+        body.f32(self.input_quant.lo);
+        body.f32(self.input_quant.hi);
+        body.u32(self.input_quant.levels as u32);
+        body.str(self.act.kind.name());
+        body.u32(self.act.levels as u32);
+
+        // Fixed-point plan (Δx as raw bits: bit-exact round trip).
+        body.u32(self.plan.s);
+        body.f64(self.plan.dx);
+        body.i64(self.plan.overflow.max_entry);
+        body.u64(self.plan.overflow.max_terms as u64);
+        body.i128(self.plan.overflow.max_accum);
+        body.u8(self.plan.overflow.fits_i64 as u8);
+        body.u8(self.plan.overflow.fits_i32 as u8);
+        body.u8(self.plan.overflow.entries_fit_i32 as u8);
+        body.u8(self.plan.overflow.entries_fit_i16 as u8);
+
+        // Codebooks.
+        match &self.books {
+            CodebookSet::Global(cb) => {
+                body.u8(0);
+                body.u32(1);
+                body.f32s(cb.centers());
+            }
+            CodebookSet::PerLayer(cbs) => {
+                body.u8(1);
+                body.u32(cbs.len() as u32);
+                for cb in cbs {
+                    body.f32s(cb.centers());
+                }
+            }
+        }
+
+        // Mul-table provenance + fingerprint (tables are rebuilt at load).
+        body.u32(self.table_info.len() as u32);
+        for &(book, is_input) in &self.table_info {
+            body.u32(book as u32);
+            body.u8(is_input as u8);
+        }
+        body.u64(tables_fingerprint(&self.tables));
+
+        // Activation tables, verbatim.
+        body.u32(self.act_tables.len() as u32);
+        for at in &self.act_tables {
+            body.u32(at.shift);
+            body.i64(at.offset);
+            body.u16s(at.entries());
+        }
+
+        // Layer topology with bit-packed index streams.
+        body.u32(self.layers.len() as u32);
+        for l in &self.layers {
+            match l {
+                LutLayer::Dense {
+                    in_dim,
+                    out_dim,
+                    w_idx,
+                    b_idx,
+                    table,
+                    act,
+                    ..
+                } => {
+                    body.u8(0);
+                    body.u32(*in_dim as u32);
+                    body.u32(*out_dim as u32);
+                    body.u32(*table as u32);
+                    match act {
+                        Some(a) => {
+                            body.u8(1);
+                            body.u32(*a as u32);
+                        }
+                        None => body.u8(0),
+                    }
+                    body.packed(w_idx);
+                    body.packed(b_idx);
+                }
+                LutLayer::Conv {
+                    spec,
+                    w_idx,
+                    b_idx,
+                    table,
+                    act,
+                    ..
+                } => {
+                    body.u8(1);
+                    for d in [
+                        spec.in_h, spec.in_w, spec.in_c, spec.k_h, spec.k_w, spec.out_c,
+                        spec.stride, spec.pad,
+                    ] {
+                        body.u32(d as u32);
+                    }
+                    body.u32(*table as u32);
+                    match act {
+                        Some(a) => {
+                            body.u8(1);
+                            body.u32(*a as u32);
+                        }
+                        None => body.u8(0),
+                    }
+                    body.packed(w_idx);
+                    body.packed(b_idx);
+                }
+                LutLayer::MaxPool {
+                    k,
+                    stride,
+                    in_h,
+                    in_w,
+                    chans,
+                    out_h,
+                    out_w,
+                } => {
+                    body.u8(2);
+                    for d in [*k, *stride, *in_h, *in_w, *chans, *out_h, *out_w] {
+                        body.u32(d as u32);
+                    }
+                }
+                LutLayer::Flatten => body.u8(3),
+            }
+        }
+
+        // Informational JSON header (loaders ignore the contents).
+        let meta = Json::obj(vec![
+            ("format", Json::Str("qnn.lut_artifact.v1".into())),
+            ("kernel", Json::Str(format!("{:?}", self.kernel()))),
+            ("weights", Json::Num(self.index_count() as f64)),
+            ("tables", Json::Num(self.tables.len() as f64)),
+            ("layers", Json::Num(self.layers.len() as f64)),
+            ("memory_bytes", Json::Num(self.memory_bytes() as f64)),
+        ])
+        .to_string();
+
+        let mut file = Vec::with_capacity(body.buf.len() + meta.len() + 64);
+        file.extend_from_slice(QNN_LUT_MAGIC);
+        file.extend_from_slice(&QNN_LUT_VERSION.to_le_bytes());
+        file.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        file.extend_from_slice(meta.as_bytes());
+        file.extend_from_slice(&(body.buf.len() as u64).to_le_bytes());
+        file.extend_from_slice(&body.buf);
+        let checksum = fnv1a(&file[QNN_LUT_MAGIC.len()..]);
+        file.extend_from_slice(&checksum.to_le_bytes());
+        file
+    }
+
+    /// Write the `.qnn` artifact to disk. The write is atomic (temp file
+    /// + rename) so a crash mid-save never leaves a torn artifact for
+    /// `Router::load_dir` to choke on.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("qnn.tmp");
+        std::fs::write(&tmp, self.to_artifact_bytes())
+            .with_context(|| format!("writing artifact {tmp:?}"))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("moving artifact into place at {path:?}"))?;
+        Ok(())
+    }
+
+    /// Reconstruct a compiled network from `.qnn` artifact bytes.
+    /// Bit-exact vs. the network that was saved (mul-tables rebuilt and
+    /// fingerprint-verified); any framing, checksum, or validation
+    /// failure is a descriptive error, never a panic.
+    pub fn from_artifact_bytes(bytes: &[u8]) -> Result<LutNetwork> {
+        // Frame: magic, version, checksum.
+        anyhow::ensure!(
+            is_lut_artifact(bytes),
+            "not a .qnn LUT artifact (bad magic; expected {:?})",
+            std::str::from_utf8(QNN_LUT_MAGIC).unwrap()
+        );
+        anyhow::ensure!(
+            bytes.len() >= QNN_LUT_MAGIC.len() + 4 + 4 + 8 + 8,
+            "truncated artifact: {} bytes is smaller than the fixed frame",
+            bytes.len()
+        );
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let computed = fnv1a(&bytes[QNN_LUT_MAGIC.len()..bytes.len() - 8]);
+        anyhow::ensure!(
+            stored == computed,
+            "artifact checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — \
+             file is corrupted or truncated"
+        );
+        let mut r = R {
+            b: &bytes[..bytes.len() - 8],
+            pos: QNN_LUT_MAGIC.len(),
+        };
+        let version = r.u32()?;
+        anyhow::ensure!(
+            version == QNN_LUT_VERSION,
+            "unsupported artifact version {version} (this build reads version {QNN_LUT_VERSION})"
+        );
+        let meta_len = r.u32()? as usize;
+        r.take(meta_len).context("truncated artifact meta block")?;
+        let body_len = r.u64()? as usize;
+        anyhow::ensure!(
+            r.b.len() - r.pos == body_len,
+            "artifact body length mismatch: header says {body_len}, file has {}",
+            r.b.len() - r.pos
+        );
+
+        // Shapes.
+        let ndims = r.u32()? as usize;
+        anyhow::ensure!((1..=4).contains(&ndims), "bad input rank {ndims}");
+        let mut input_shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            input_shape.push(r.u32()? as usize);
+        }
+        let out_dim = r.u32()? as usize;
+        anyhow::ensure!(out_dim > 0, "artifact has zero output dim");
+
+        // Compile options.
+        let cfg = CompileCfg {
+            input_range: (r.f32()?, r.f32()?),
+            input_levels: match r.u32()? as usize {
+                0 => None,
+                l => Some(l),
+            },
+            act_table_len: r.u32()? as usize,
+            compact_tables: r.u8()? != 0,
+        };
+
+        // Quantizers.
+        let (q_lo, q_hi, q_levels) = (r.f32()?, r.f32()?, r.u32()? as usize);
+        anyhow::ensure!(
+            q_levels >= 2 && q_hi > q_lo,
+            "bad input quantizer: [{q_lo}, {q_hi}] with {q_levels} levels"
+        );
+        let input_quant = UniformQuant::new(q_lo, q_hi, q_levels);
+        let kind_name = r.str()?;
+        let kind = ActKind::from_name(&kind_name)
+            .with_context(|| format!("unknown activation kind {kind_name:?} in artifact"))?;
+        let act_levels = r.u32()? as usize;
+        anyhow::ensure!(
+            (2..=u16::MAX as usize).contains(&act_levels),
+            "bad activation level count {act_levels}"
+        );
+        let act = QuantAct::new(kind, act_levels);
+
+        // Fixed-point plan.
+        let plan = FixedPointPlan {
+            s: r.u32()?,
+            dx: r.f64()?,
+            overflow: OverflowAnalysis {
+                max_entry: r.i64()?,
+                max_terms: r.u64()? as usize,
+                max_accum: r.i128()?,
+                fits_i64: r.u8()? != 0,
+                fits_i32: r.u8()? != 0,
+                entries_fit_i32: r.u8()? != 0,
+                entries_fit_i16: r.u8()? != 0,
+            },
+        };
+        anyhow::ensure!(
+            plan.s < 64 && plan.dx.is_finite() && plan.dx > 0.0,
+            "bad fixed-point plan: s={}, dx={}",
+            plan.s,
+            plan.dx
+        );
+
+        // Codebooks.
+        let books = {
+            let tag = r.u8()?;
+            let n = r.u32()? as usize;
+            anyhow::ensure!(n >= 1 && n <= 10_000, "bad codebook count {n}");
+            let mut cbs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let centers = r.f32s()?;
+                anyhow::ensure!(!centers.is_empty(), "empty codebook in artifact");
+                anyhow::ensure!(
+                    centers.iter().all(|c| c.is_finite()),
+                    "non-finite codebook center in artifact"
+                );
+                cbs.push(Codebook::new(centers));
+            }
+            match tag {
+                0 => {
+                    anyhow::ensure!(cbs.len() == 1, "global codebook set with {} books", cbs.len());
+                    CodebookSet::Global(cbs.pop().unwrap())
+                }
+                1 => CodebookSet::PerLayer(cbs),
+                t => bail!("unknown codebook-set tag {t}"),
+            }
+        };
+        let n_books = books.count();
+
+        // Mul-table provenance → rebuild → verify fingerprint.
+        let n_tables = r.u32()? as usize;
+        anyhow::ensure!((1..=10_000).contains(&n_tables), "bad table count {n_tables}");
+        let mut table_info = Vec::with_capacity(n_tables);
+        for _ in 0..n_tables {
+            let book = r.u32()? as usize;
+            let is_input = r.u8()? != 0;
+            anyhow::ensure!(book < n_books, "table references codebook {book} of {n_books}");
+            table_info.push((book, is_input));
+        }
+        let stored_fp = r.u64()?;
+        let tables: Vec<MulTable> = table_info
+            .iter()
+            .map(|&(book, is_input)| {
+                let values = if is_input {
+                    input_quant.values()
+                } else {
+                    act.outputs().to_vec()
+                };
+                MulTable::build(&values, books.book_for(book), &plan)
+            })
+            .collect();
+        let rebuilt_fp = tables_fingerprint(&tables);
+        anyhow::ensure!(
+            rebuilt_fp == stored_fp,
+            "rebuilt mul-tables do not match the artifact fingerprint \
+             (stored {stored_fp:#018x}, rebuilt {rebuilt_fp:#018x}) — \
+             corrupted codebook/plan or non-reproducible float rounding"
+        );
+
+        // Activation tables.
+        let n_at = r.u32()? as usize;
+        anyhow::ensure!((1..=1_000).contains(&n_at), "bad act-table count {n_at}");
+        let mut act_tables = Vec::with_capacity(n_at);
+        for _ in 0..n_at {
+            let shift = r.u32()?;
+            let offset = r.i64()?;
+            let entries = r.u16s()?;
+            anyhow::ensure!(!entries.is_empty(), "empty activation table");
+            anyhow::ensure!(
+                entries.iter().all(|&e| (e as usize) < act_levels),
+                "activation table entry out of range (≥ {act_levels} levels)"
+            );
+            act_tables.push(ActTable::from_parts(shift, offset, entries));
+        }
+
+        // Layers.
+        let n_layers = r.u32()? as usize;
+        anyhow::ensure!((1..=10_000).contains(&n_layers), "bad layer count {n_layers}");
+        let mut layers = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let tag = r.u8()?;
+            match tag {
+                0 => {
+                    let in_dim = r.u32()? as usize;
+                    let l_out = r.u32()? as usize;
+                    let table = r.u32()? as usize;
+                    anyhow::ensure!(table < tables.len(), "layer {li}: bad table index {table}");
+                    let act_idx = if r.u8()? != 0 {
+                        let a = r.u32()? as usize;
+                        anyhow::ensure!(a < act_tables.len(), "layer {li}: bad act-table {a}");
+                        Some(a)
+                    } else {
+                        None
+                    };
+                    let w_idx = r.packed()?;
+                    let b_idx = r.packed()?;
+                    let w_cols = tables[table].w_cols;
+                    anyhow::ensure!(
+                        w_idx.len() == in_dim * l_out && b_idx.len() == l_out,
+                        "layer {li}: index stream sizes do not match {in_dim}x{l_out}"
+                    );
+                    anyhow::ensure!(
+                        w_idx.iter().chain(b_idx.iter()).all(|&i| (i as usize) < w_cols),
+                        "layer {li}: weight index exceeds codebook size {w_cols}"
+                    );
+                    let bias_acc = bias_accumulators(&tables[table], &b_idx);
+                    layers.push(LutLayer::Dense {
+                        in_dim,
+                        out_dim: l_out,
+                        w_idx,
+                        b_idx,
+                        bias_acc,
+                        table,
+                        act: act_idx,
+                    });
+                }
+                1 => {
+                    let mut d = [0usize; 8];
+                    for v in d.iter_mut() {
+                        *v = r.u32()? as usize;
+                    }
+                    let spec = Conv2dSpec {
+                        in_h: d[0],
+                        in_w: d[1],
+                        in_c: d[2],
+                        k_h: d[3],
+                        k_w: d[4],
+                        out_c: d[5],
+                        stride: d[6],
+                        pad: d[7],
+                    };
+                    anyhow::ensure!(
+                        spec.stride > 0 && spec.k_h > 0 && spec.k_w > 0 && spec.out_c > 0,
+                        "layer {li}: degenerate conv spec"
+                    );
+                    let table = r.u32()? as usize;
+                    anyhow::ensure!(table < tables.len(), "layer {li}: bad table index {table}");
+                    let act_idx = if r.u8()? != 0 {
+                        let a = r.u32()? as usize;
+                        anyhow::ensure!(a < act_tables.len(), "layer {li}: bad act-table {a}");
+                        Some(a)
+                    } else {
+                        None
+                    };
+                    let w_idx = r.packed()?;
+                    let b_idx = r.packed()?;
+                    let w_cols = tables[table].w_cols;
+                    anyhow::ensure!(
+                        w_idx.len() == spec.fan_in() * spec.out_c && b_idx.len() == spec.out_c,
+                        "layer {li}: conv index stream sizes do not match spec"
+                    );
+                    anyhow::ensure!(
+                        w_idx.iter().chain(b_idx.iter()).all(|&i| (i as usize) < w_cols),
+                        "layer {li}: weight index exceeds codebook size {w_cols}"
+                    );
+                    let bias_acc = bias_accumulators(&tables[table], &b_idx);
+                    layers.push(LutLayer::Conv {
+                        spec,
+                        w_idx,
+                        b_idx,
+                        bias_acc,
+                        table,
+                        act: act_idx,
+                    });
+                }
+                2 => {
+                    let mut d = [0usize; 7];
+                    for v in d.iter_mut() {
+                        *v = r.u32()? as usize;
+                    }
+                    anyhow::ensure!(
+                        d[0] > 0 && d[1] > 0,
+                        "layer {li}: degenerate maxpool spec"
+                    );
+                    layers.push(LutLayer::MaxPool {
+                        k: d[0],
+                        stride: d[1],
+                        in_h: d[2],
+                        in_w: d[3],
+                        chans: d[4],
+                        out_h: d[5],
+                        out_w: d[6],
+                    });
+                }
+                3 => layers.push(LutLayer::Flatten),
+                t => bail!("layer {li}: unknown layer tag {t}"),
+            }
+        }
+        anyhow::ensure!(
+            r.pos == r.b.len(),
+            "artifact has {} trailing bytes after the last section",
+            r.b.len() - r.pos
+        );
+
+        let exec = build_exec_plan(&input_shape, &layers, &tables, &plan, &cfg);
+        Ok(LutNetwork {
+            plan,
+            input_quant,
+            act,
+            tables,
+            act_tables,
+            layers,
+            input_shape,
+            out_dim,
+            exec,
+            books,
+            table_info,
+            cfg,
+        })
+    }
+
+    /// Load a `.qnn` artifact from disk.
+    pub fn load(path: impl AsRef<Path>) -> Result<LutNetwork> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading artifact {path:?}"))?;
+        Self::from_artifact_bytes(&bytes)
+            .with_context(|| format!("loading artifact {path:?}"))
+    }
+}
+
+/// Parse (and checksum-verify) just the informational JSON meta block of
+/// a `.qnn` artifact — cheap inspection without rebuilding tables.
+pub fn artifact_meta(bytes: &[u8]) -> Result<Json> {
+    anyhow::ensure!(is_lut_artifact(bytes), "not a .qnn LUT artifact");
+    anyhow::ensure!(bytes.len() >= 8 + 4 + 4 + 8 + 8, "truncated artifact");
+    let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    anyhow::ensure!(
+        stored == fnv1a(&bytes[8..bytes.len() - 8]),
+        "artifact checksum mismatch"
+    );
+    let meta_len = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    anyhow::ensure!(bytes.len() >= 16 + meta_len, "truncated artifact meta");
+    let text = std::str::from_utf8(&bytes[16..16 + meta_len]).context("meta is not UTF-8")?;
+    Json::parse(text).map_err(|e| anyhow::anyhow!("bad meta JSON: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::Kernel;
+    use crate::nn::{ActSpec, LayerSpec, NetSpec, Network};
+    use crate::quant::{kmeans_1d, KMeansCfg};
+    use crate::util::rng::Xoshiro256;
+
+    /// Train-free fixture: random weights (optionally scaled to force the
+    /// i64 kernel) snapped to a k-means codebook, compiled to a LUT.
+    fn clustered_lut(
+        spec: &NetSpec,
+        k: usize,
+        seed: u64,
+        scale: f32,
+        cfg: &CompileCfg,
+    ) -> LutNetwork {
+        let mut rng = Xoshiro256::new(seed);
+        let mut net = Network::from_spec(spec, &mut rng);
+        let mut flat = net.flat_weights();
+        for v in &mut flat {
+            *v *= scale;
+        }
+        let cb = kmeans_1d(&flat, &KMeansCfg::with_k(k), &mut rng);
+        cb.quantize_slice(&mut flat);
+        net.set_flat_weights(&flat);
+        LutNetwork::compile(&net, &CodebookSet::Global(cb), cfg).unwrap()
+    }
+
+    fn mlp_spec(levels: usize) -> NetSpec {
+        NetSpec::mlp("art", 24, &[32, 16], 5, ActSpec::tanh_d(levels))
+    }
+
+    fn random_indices(rng: &mut Xoshiro256, lut: &LutNetwork, batch: usize) -> Vec<u16> {
+        let feat: usize = lut.input_shape.iter().product();
+        (0..batch * feat)
+            .map(|_| rng.below(lut.input_quant.levels) as u16)
+            .collect()
+    }
+
+    /// Roundtrip through bytes and compare both executors bit-exactly
+    /// against the original (forward_naive is the oracle).
+    fn assert_roundtrip(lut: &LutNetwork, seed: u64) {
+        let bytes = lut.to_artifact_bytes();
+        let loaded = LutNetwork::from_artifact_bytes(&bytes).expect("load");
+        assert_eq!(loaded.kernel(), lut.kernel(), "kernel ladder must survive");
+        assert_eq!(loaded.table_bytes(), lut.table_bytes());
+        assert_eq!(loaded.memory_bytes(), lut.memory_bytes());
+        let mut rng = Xoshiro256::new(seed);
+        let batch = lut.chunk_rows() + 3;
+        let idx = random_indices(&mut rng, lut, batch);
+        let want = lut.forward_naive(&idx, batch);
+        let a = lut.forward_indices(&idx, batch);
+        let b = loaded.forward_indices(&idx, batch);
+        assert_eq!(a.sums, want.sums, "original drifted from oracle");
+        assert_eq!(b.sums, want.sums, "loaded network is not bit-exact");
+        // Explicit-scratch path on the loaded network too.
+        let mut scratch = loaded.new_scratch();
+        let mut out = vec![0i64; batch * loaded.out_dim()];
+        loaded.forward_into(&idx, batch, &mut out, &mut scratch);
+        assert_eq!(out, want.sums);
+    }
+
+    #[test]
+    fn roundtrip_bit_exact_i16_kernel() {
+        let cfg = CompileCfg {
+            act_table_len: 16,
+            ..CompileCfg::default()
+        };
+        let lut = clustered_lut(&mlp_spec(8), 64, 3, 1.0, &cfg);
+        assert_eq!(lut.kernel(), Kernel::I16xI32, "fixture should compact");
+        assert_roundtrip(&lut, 101);
+    }
+
+    #[test]
+    fn roundtrip_bit_exact_i32_kernel() {
+        let cfg = CompileCfg {
+            act_table_len: 16,
+            compact_tables: false,
+            ..CompileCfg::default()
+        };
+        let lut = clustered_lut(&mlp_spec(8), 64, 3, 1.0, &cfg);
+        assert_eq!(lut.kernel(), Kernel::I32xI32);
+        assert_roundtrip(&lut, 102);
+    }
+
+    #[test]
+    fn roundtrip_bit_exact_i64_kernel() {
+        // Huge weights + fine Δx push the accumulator bound past i32.
+        let cfg = CompileCfg {
+            act_table_len: 512,
+            ..CompileCfg::default()
+        };
+        let lut = clustered_lut(&mlp_spec(8), 64, 3, 1000.0, &cfg);
+        assert_eq!(lut.kernel(), Kernel::I32xI64, "{:?}", lut.plan.overflow);
+        assert_roundtrip(&lut, 103);
+    }
+
+    #[test]
+    fn roundtrip_conv_topology() {
+        let spec = NetSpec {
+            name: "art-conv".into(),
+            input_shape: vec![8, 8, 2],
+            layers: vec![
+                LayerSpec::Conv { k: 3, out_c: 3, stride: 1, pad: 1 },
+                LayerSpec::Act(ActSpec::tanh_d(8)),
+                LayerSpec::MaxPool { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 5 },
+            ],
+            init_sd: None,
+        };
+        let lut = clustered_lut(&spec, 32, 4, 1.0, &CompileCfg::default());
+        assert_roundtrip(&lut, 104);
+    }
+
+    #[test]
+    fn save_load_file_roundtrip_and_meta() {
+        let lut = clustered_lut(&mlp_spec(16), 64, 5, 1.0, &CompileCfg::default());
+        let path = std::env::temp_dir().join(format!("qnn_art_{}.qnn", std::process::id()));
+        lut.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(is_lut_artifact(&bytes));
+        let meta = artifact_meta(&bytes).unwrap();
+        assert_eq!(meta.get("format").as_str(), Some("qnn.lut_artifact.v1"));
+        assert_eq!(meta.get("weights").as_usize(), Some(lut.index_count()));
+        let loaded = LutNetwork::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let mut rng = Xoshiro256::new(9);
+        let idx = random_indices(&mut rng, &lut, 7);
+        assert_eq!(
+            loaded.forward_indices(&idx, 7).sums,
+            lut.forward_naive(&idx, 7).sums
+        );
+    }
+
+    #[test]
+    fn artifact_is_much_smaller_than_float_weights() {
+        // The §4 deployment claim, as a unit test: indices pack to
+        // ⌈log2|W|⌉ bits, so at realistic weight counts the artifact
+        // beats 32-bit floats by far (fixed table/header overhead
+        // amortizes away as the network grows).
+        let spec = NetSpec::mlp("art-big", 64, &[64, 32], 10, ActSpec::tanh_d(16));
+        let lut = clustered_lut(&spec, 100, 6, 1.0, &CompileCfg::default());
+        let float_bytes = lut.index_count() * 4;
+        let art = lut.to_artifact_bytes();
+        assert!(
+            (art.len() as f64) < 0.5 * float_bytes as f64,
+            "artifact {} bytes vs float {} bytes",
+            art.len(),
+            float_bytes
+        );
+    }
+
+    #[test]
+    fn corrupted_and_truncated_artifacts_fail_clearly() {
+        let lut = clustered_lut(&mlp_spec(8), 64, 7, 1.0, &CompileCfg::default());
+        let bytes = lut.to_artifact_bytes();
+
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        let e = LutNetwork::from_artifact_bytes(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("magic"), "{e:#}");
+
+        // Truncation at many cut points: always Err, never panic.
+        for cut in [0, 4, 10, 20, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+            assert!(
+                LutNetwork::from_artifact_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut} must fail"
+            );
+        }
+
+        // Single-byte corruption anywhere in the frame: the checksum
+        // catches it with a descriptive message.
+        let mut flipped = bytes.clone();
+        let mid = bytes.len() / 2;
+        flipped[mid] ^= 0x40;
+        let e = LutNetwork::from_artifact_bytes(&flipped).unwrap_err();
+        assert!(format!("{e:#}").contains("checksum"), "{e:#}");
+
+        // Unknown version.
+        let mut vbad = bytes.clone();
+        vbad[8] = 99;
+        let tail = vbad.len() - 8;
+        let sum = super::fnv1a(&vbad[8..tail]);
+        vbad[tail..].copy_from_slice(&sum.to_le_bytes());
+        let e = LutNetwork::from_artifact_bytes(&vbad).unwrap_err();
+        assert!(format!("{e:#}").contains("version"), "{e:#}");
+    }
+
+    #[test]
+    fn bitpack_roundtrips() {
+        use crate::util::prop::check;
+        check("pack/unpack identity", 64, |g| {
+            let bits = g.usize_in(1, 17) as u32;
+            let n = g.usize_in(0, 200);
+            let max = (1u64 << bits) - 1;
+            let idx: Vec<u32> = (0..n).map(|_| (g.rng().next_u64() & max) as u32).collect();
+            let packed = pack_indices(&idx, bits);
+            assert_eq!(unpack_indices(&packed, n, bits), idx);
+        });
+    }
+
+    #[test]
+    fn property_save_load_forward_is_bit_exact() {
+        use crate::util::prop::check;
+        check("artifact roundtrip == in-memory network", 10, |g| {
+            let levels = *g.choice(&[8usize, 16, 32]);
+            let act_table_len = *g.choice(&[16usize, 64, 256]);
+            let scale = *g.choice(&[1.0f32, 1.0, 1000.0]);
+            let cfg = CompileCfg {
+                act_table_len,
+                compact_tables: g.bool(),
+                ..CompileCfg::default()
+            };
+            let lut = clustered_lut(&mlp_spec(levels), 64, g.seed, scale, &cfg);
+            let loaded = LutNetwork::from_artifact_bytes(&lut.to_artifact_bytes()).unwrap();
+            let batch = g.usize_in(1, 40);
+            let idx = {
+                let rng = g.rng();
+                let feat: usize = lut.input_shape.iter().product();
+                (0..batch * feat)
+                    .map(|_| rng.below(lut.input_quant.levels) as u16)
+                    .collect::<Vec<u16>>()
+            };
+            assert_eq!(
+                loaded.forward_indices(&idx, batch).sums,
+                lut.forward_naive(&idx, batch).sums
+            );
+        });
+    }
+}

@@ -227,3 +227,60 @@ fn pjrt_train_step_roundtrip_if_artifacts_present() {
         "loss did not decrease: {first:?} -> {last}"
     );
 }
+
+#[test]
+fn artifact_lifecycle_save_load_dir_serve() {
+    // The full redesigned lifecycle: train → compile → save → load → serve.
+    let (net, cb, _) = trained(6, 100, 400);
+    let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default())
+        .expect("compile");
+    let eval = digits::eval_set(32, 6);
+    let direct = lut.forward(&eval.x).argmax_rows();
+
+    let dir = std::env::temp_dir().join(format!("qnn_lifecycle_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let lut_path = dir.join("digits-lut.qnn");
+    let float_path = dir.join("digits-float.qnn");
+    lut.save(&lut_path).unwrap();
+    net.save(float_path.to_str().unwrap()).unwrap();
+
+    // The paper's §5 memory claim as a testable number: the serialized
+    // integer deployment must be well under half the float artifact.
+    let lut_bytes = std::fs::metadata(&lut_path).unwrap().len() as f64;
+    let float_bytes = std::fs::metadata(&float_path).unwrap().len() as f64;
+    let ratio = lut_bytes / float_bytes;
+    assert!(
+        ratio < 0.5,
+        "artifact ratio {ratio:.3} ({lut_bytes} / {float_bytes} bytes) not < 0.5"
+    );
+
+    // Router boots every artifact in the directory, behind the Backend
+    // trait's buffer-reusing infer path.
+    let router = qnn::coordinator::Router::load_dir(&dir).expect("load_dir");
+    assert_eq!(router.models(), vec!["digits-float", "digits-lut"]);
+
+    for i in 0..16 {
+        let row = eval.x.row(i).to_vec();
+        let out = router.infer("digits-lut", row).unwrap();
+        let pred = out
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert_eq!(pred, direct[i], "served row {i} disagrees with direct forward");
+        // The float reference serves the same artifact directory.
+        let _ = router.infer("digits-float", eval.x.row(i).to_vec()).unwrap();
+    }
+
+    // Report surfaces per-model memory and ring-buffered percentiles.
+    let report = router.report();
+    assert!(report.contains("digits-lut"), "{report}");
+    assert!(report.contains("mem="), "{report}");
+    assert!(report.contains("p99="), "{report}");
+    let mem = router.memory_bytes();
+    assert!(mem["digits-lut"] > 0 && mem["digits-float"] > 0);
+
+    router.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,12 +1,19 @@
-//! Proves the ExecPlan acceptance criterion with a counting global
-//! allocator: after warmup, the serial LUT forward pass
-//! (`forward_into` with a caller-owned scratch arena and output buffer)
-//! performs **zero heap allocations per call**.
+//! Proves two zero-allocation acceptance criteria with a counting global
+//! allocator:
+//!
+//! 1. after warmup, the serial LUT forward pass (`forward_into` with a
+//!    caller-owned scratch arena and output buffer) performs **zero heap
+//!    allocations per call**;
+//! 2. the serving steady state — the `Backend::infer_batch_into` hot
+//!    path a warm server worker drives — is equally clean: float
+//!    quantization, integer forward, and float descale all run in
+//!    reused buffers.
 //!
 //! This file is its own test binary on purpose — the `#[global_allocator]`
 //! must not interfere with the rest of the suite, and the single test
 //! keeps the counter free of concurrent-test noise.
 
+use qnn::coordinator::{Backend, LutEngine};
 use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
 use qnn::nn::{ActSpec, LayerSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
@@ -47,6 +54,12 @@ fn clustered(spec: &NetSpec, k: usize) -> LutNetwork {
 
 #[test]
 fn forward_into_allocates_nothing_after_warmup() {
+    // The serving-path check below routes batches through
+    // forward_indices_into; force the serial executor so the assertion
+    // is deterministic (the parallel path boxes one job per chunk by
+    // design — O(chunks), not O(rows)).
+    std::env::set_var("QNN_SERIAL", "1");
+
     // One MLP and one conv topology: both layer kinds must be clean.
     let mlp = clustered(&NetSpec::mlp("za", 64, &[96, 48], 10, ActSpec::tanh_d(32)), 128);
     let conv = clustered(
@@ -90,4 +103,30 @@ fn forward_into_allocates_nothing_after_warmup() {
             after - before
         );
     }
+
+    // ---- serving steady state (Backend::infer_batch_into) ----
+    // A warm server worker reuses its response buffer and the engine's
+    // per-thread scratch: once both are sized, a request costs zero heap
+    // allocations end to end (floats in → floats out).
+    let engine = LutEngine::new("za-serve", mlp, 64);
+    let batch = 8;
+    let mut rng = Xoshiro256::new(13);
+    let x: Vec<f32> = (0..batch * 64).map(|_| rng.uniform_f32()).collect();
+    let mut out = vec![0.0f32; batch * engine.output_len()];
+
+    // Warmup sizes the engine's thread-local index/sum buffers.
+    engine.infer_batch_into(&x, batch, &mut out);
+    engine.infer_batch_into(&x, batch, &mut out);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        engine.infer_batch_into(&x, batch, &mut out);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "serving: infer_batch_into allocated {} times in 10 warm calls",
+        after - before
+    );
 }
