@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""CI gate for the LUT-engine perf trajectory (BENCH_lut_engine.json).
+
+Fails (non-zero exit) if the trajectory file is missing, is not schema
+qnn.bench_lut_engine.v2, lacks conv workloads at batch 1 and 64, or any
+conv record is missing the old-path (prepatch) timing or a
+speedup-vs-naive ratio. Timings themselves are never asserted — CI
+machines are noisy; regressions should show in the trajectory, not
+flake the gate.
+
+    python3 python/check_bench.py [path/to/BENCH_lut_engine.json]
+"""
+
+import json
+import sys
+
+REQUIRED_CONV_FIELDS = (
+    "ns_per_row_naive",
+    "ns_per_row_serial",
+    "ns_per_row_parallel",
+    "ns_per_row_prepatch",
+    "speedup_parallel_vs_naive",
+    "speedup_serial_vs_prepatch",
+    "speedup_parallel_vs_prepatch",
+)
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_lut_engine.json"
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    schema = doc.get("schema")
+    if schema != "qnn.bench_lut_engine.v2":
+        fail(f"schema is {schema!r}, expected 'qnn.bench_lut_engine.v2'")
+
+    results = doc.get("results") or []
+    if not results:
+        fail("no results records")
+
+    conv = [r for r in results if "conv" in r.get("topology", "").lower()]
+    if not conv:
+        fail("no conv workloads in the trajectory")
+    batches = {r.get("batch") for r in conv}
+    for want in (1, 64):
+        if want not in batches:
+            fail(f"conv workloads missing batch={want} (have {sorted(batches)})")
+
+    for r in conv:
+        for field in REQUIRED_CONV_FIELDS:
+            v = r.get(field)
+            if not isinstance(v, (int, float)) or v <= 0:
+                fail(
+                    f"conv record {r.get('topology')!r} batch={r.get('batch')} "
+                    f"missing or non-positive {field!r} (got {v!r})"
+                )
+
+    print(
+        f"check_bench: ok — {len(results)} records, {len(conv)} conv "
+        f"(batches {sorted(batches)}), schema {schema}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,20 @@
 //! §4 speed claim + §Perf trajectory: micro-benchmarks the integer LUT
 //! engine against (a) the float engine, (b) its own pre-ExecPlan
-//! interpreter (`forward_naive` — the speedup baseline), measuring the
-//! zero-allocation serial path and the batch-parallel path separately.
+//! interpreter (`forward_naive` — the speedup baseline), and — on conv
+//! topologies — (c) the retained pre-tiling conv executor
+//! (`forward_prepatch`, the old-path baseline for the conv speedup),
+//! measuring the zero-allocation serial path and the parallel path
+//! (batch-chunk fan-out, or intra-image band fan-out at batch=1)
+//! separately.
 //!
 //! Emits `BENCH_lut_engine.json` at the repo root (schema
-//! `qnn.bench_lut_engine.v1`, see `qnn::report::perf`) so every run
+//! `qnn.bench_lut_engine.v2`, see `qnn::report::perf`) so every run
 //! extends the machine-readable perf trajectory.
 //!
 //!     cargo bench --bench bench_lut_engine [-- --full]
 
 use qnn::inference::{CodebookSet, CompileCfg, FloatEngine, LutNetwork};
-use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::nn::{ActSpec, LayerSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
 use qnn::report::perf::{lut_bench_report, write_bench_file, LutBenchRecord};
 use qnn::report::table::TableBuilder;
@@ -19,17 +23,9 @@ use qnn::util::rng::Xoshiro256;
 use qnn::util::timer::{bench_for, fmt_ns};
 use std::time::Duration;
 
-fn prepare(
-    hidden: &[usize],
-    in_dim: usize,
-    out_dim: usize,
-    seed: u64,
-    k: usize,
-    cfg: &CompileCfg,
-) -> (Network, LutNetwork) {
-    let spec = NetSpec::mlp("bench", in_dim, hidden, out_dim, ActSpec::tanh_d(32));
+fn prepare(spec: &NetSpec, seed: u64, k: usize, cfg: &CompileCfg) -> (Network, LutNetwork) {
     let mut rng = Xoshiro256::new(seed);
-    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut net = Network::from_spec(spec, &mut rng);
     let mut flat = net.flat_weights();
     let cb = kmeans_1d(&flat, &KMeansCfg::with_k(k), &mut rng);
     cb.quantize_slice(&mut flat);
@@ -38,60 +34,96 @@ fn prepare(
     (net, lut)
 }
 
+fn conv_spec(name: &str, h: usize, w: usize, c: usize, k: usize, oc: usize) -> NetSpec {
+    NetSpec {
+        name: name.into(),
+        input_shape: vec![h, w, c],
+        layers: vec![
+            LayerSpec::Conv { k, out_c: oc, stride: 1, pad: 1 },
+            LayerSpec::Act(ActSpec::tanh_d(32)),
+            LayerSpec::MaxPool { k: 2, stride: 2 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 10 },
+        ],
+        init_sd: None,
+    }
+}
+
 struct Cfg {
     name: &'static str,
-    hidden: Vec<usize>,
-    in_dim: usize,
-    out_dim: usize,
+    spec: NetSpec,
     k: usize,
     compile: CompileCfg,
+    batches: &'static [usize],
+    /// Conv topology: also measure the pre-tiling conv baseline.
+    conv: bool,
 }
 
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let min_time = Duration::from_millis(if full { 800 } else { 200 });
-    println!("=== LUT engine throughput: naive vs serial vs parallel (+float) ===");
+    println!("=== LUT engine throughput: naive vs prepatch vs serial vs parallel (+float) ===");
 
     let configs = vec![
         Cfg {
             name: "small  256-64-64-10",
-            hidden: vec![64, 64],
-            in_dim: 256,
-            out_dim: 10,
+            spec: NetSpec::mlp("bench", 256, &[64, 64], 10, ActSpec::tanh_d(32)),
             k: 1000,
             compile: CompileCfg::default(),
+            batches: &[1, 8, 64, 256],
+            conv: false,
         },
         Cfg {
             name: "medium 256-256-256-10",
-            hidden: vec![256, 256],
-            in_dim: 256,
-            out_dim: 10,
+            spec: NetSpec::mlp("bench", 256, &[256, 256], 10, ActSpec::tanh_d(32)),
             k: 1000,
             compile: CompileCfg::default(),
+            batches: &[1, 8, 64, 256],
+            conv: false,
         },
         Cfg {
             name: "wide   1024-512-10",
-            hidden: vec![512],
-            in_dim: 1024,
-            out_dim: 10,
+            spec: NetSpec::mlp("bench", 1024, &[512], 10, ActSpec::tanh_d(32)),
             k: 1000,
             compile: CompileCfg::default(),
+            batches: &[1, 8, 64, 256],
+            conv: false,
         },
         Cfg {
             // Coarse Δx keeps table entries inside i16: exercises the
             // compact-table kernel (I16xI32) and its widened gather.
             name: "compact 256-128-10 (i16 tables)",
-            hidden: vec![128],
-            in_dim: 256,
-            out_dim: 10,
+            spec: NetSpec::mlp("bench", 256, &[128], 10, ActSpec::tanh_d(32)),
             k: 100,
             compile: CompileCfg {
                 act_table_len: 16,
                 ..CompileCfg::default()
             },
+            batches: &[1, 8, 64, 256],
+            conv: false,
+        },
+        Cfg {
+            // The conv hot path: batch=1 exercises the intra-image band
+            // parallelism, batch=64 the batch-chunk fan-out.
+            name: "conv   16x16x8 k3x32 + pool + dense",
+            spec: conv_spec("bench-conv", 16, 16, 8, 3, 32),
+            k: 1000,
+            compile: CompileCfg::default(),
+            batches: &[1, 64],
+            conv: true,
+        },
+        Cfg {
+            name: "conv compact 16x16x4 k3x16 (i16 tables)",
+            spec: conv_spec("bench-conv16", 16, 16, 4, 3, 16),
+            k: 100,
+            compile: CompileCfg {
+                act_table_len: 16,
+                ..CompileCfg::default()
+            },
+            batches: &[1, 64],
+            conv: true,
         },
     ];
-    let batches = [1usize, 8, 64, 256];
 
     let mut table = TableBuilder::new("per-row inference time").header(&[
         "topology",
@@ -99,6 +131,7 @@ fn main() {
         "kernel",
         "float",
         "LUT naive",
+        "LUT prepatch",
         "LUT serial",
         "LUT parallel",
         "par/naive",
@@ -107,15 +140,19 @@ fn main() {
     let mut records: Vec<LutBenchRecord> = Vec::new();
 
     for c in &configs {
-        let (net, lut) = prepare(&c.hidden, c.in_dim, c.out_dim, 7, c.k, &c.compile);
+        let (net, lut) = prepare(&c.spec, 7, c.k, &c.compile);
         let mut fe = FloatEngine::new(net);
         let kernel = format!("{:?}", lut.kernel());
-        for &b in &batches {
+        let feat = lut.input_elems();
+        for &b in c.batches {
             let mut rng = Xoshiro256::new(100 + b as u64);
-            let x = Tensor::rand_uniform(&[b, c.in_dim], 0.0, 1.0, &mut rng);
+            let mut xshape = vec![b];
+            xshape.extend_from_slice(lut.input_shape());
+            let x = Tensor::rand_uniform(&xshape, 0.0, 1.0, &mut rng);
             // Pre-quantized input indices: the deployment-realistic path
             // (the previous layer/sensor already emits level indices).
             let idx = lut.quantize_input(&x);
+            assert_eq!(idx.len(), b * feat);
             let mut scratch = lut.new_scratch();
             let mut sums = vec![0i64; b * lut.out_dim()];
 
@@ -125,6 +162,13 @@ fn main() {
             let rn = bench_for("naive", min_time, || {
                 std::hint::black_box(lut.forward_naive(&idx, b));
             });
+            let rpre = if c.conv {
+                Some(bench_for("prepatch", min_time, || {
+                    std::hint::black_box(lut.forward_prepatch(&idx, b));
+                }))
+            } else {
+                None
+            };
             let rs = bench_for("serial", min_time, || {
                 lut.forward_into(&idx, b, &mut sums, &mut scratch);
                 std::hint::black_box(&sums);
@@ -143,6 +187,7 @@ fn main() {
                 ns_per_row_serial: rs.mean_ns / rb,
                 ns_per_row_parallel: rp.mean_ns / rb,
                 ns_per_row_float: Some(rf.mean_ns / rb),
+                ns_per_row_prepatch: rpre.as_ref().map(|r| r.mean_ns / rb),
             });
             table.row(&[
                 c.name.to_string(),
@@ -150,6 +195,9 @@ fn main() {
                 kernel.clone(),
                 fmt_ns(rf.mean_ns / rb),
                 fmt_ns(rn.mean_ns / rb),
+                rpre.as_ref()
+                    .map(|r| fmt_ns(r.mean_ns / rb))
+                    .unwrap_or_else(|| "-".into()),
                 fmt_ns(rs.mean_ns / rb),
                 fmt_ns(rp.mean_ns / rb),
                 format!("{:.2}x", rn.mean_ns / rp.mean_ns),
@@ -160,7 +208,9 @@ fn main() {
     table.print();
     println!(
         "par/naive > 1.0 means the compiled ExecPlan beats the pre-PR \
-         interpreter; large batches on multi-core hosts should clear 3x.\n\
+         interpreter; large batches on multi-core hosts should clear 3x. \
+         On conv rows, prepatch is the pre-tiling executor the tiled \
+         im2col path is measured against.\n\
          (LUT vs float: modern CPUs have fast FP multipliers; the paper's \
          claim targets fixed-point-only hardware.)"
     );

@@ -25,15 +25,31 @@ impl FreqModel {
                 (((c * target) / total).max(1)) as u32
             })
             .collect();
-        // Fix rounding drift.
+        // Fix rounding drift: shave the excess one unit per >1 bucket
+        // per sweep (never below 1), so even a many-rare-symbols
+        // distribution — thousands of zero counts floored to 1, as in
+        // artifact index models over sparse alphabets — normalizes with
+        // minimal shape distortion instead of asserting.
         let mut cum = Vec::with_capacity(freqs.len() + 1);
         let sum: u64 = freqs.iter().map(|&f| f as u64).sum();
         if sum > target {
-            // Shave the largest bucket.
-            let overflow = (sum - target) as u32;
-            let imax = (0..freqs.len()).max_by_key(|&i| freqs[i]).unwrap();
-            assert!(freqs[imax] > overflow, "cannot normalize model");
-            freqs[imax] -= overflow;
+            let mut overflow = (sum - target) as u32;
+            while overflow > 0 {
+                let before = overflow;
+                for f in freqs.iter_mut() {
+                    if overflow == 0 {
+                        break;
+                    }
+                    if *f > 1 {
+                        *f -= 1;
+                        overflow -= 1;
+                    }
+                }
+                assert!(
+                    overflow < before,
+                    "cannot normalize model: alphabet exceeds the precision budget"
+                );
+            }
         }
         let mut acc = 0u32;
         cum.push(0);
@@ -55,6 +71,36 @@ impl FreqModel {
 
     pub fn alphabet(&self) -> usize {
         self.cum.len() - 1
+    }
+
+    /// The normalized per-symbol frequencies (differences of the
+    /// cumulative table). [`Self::from_freqs`] reconstructs the model
+    /// exactly from these — the `.qnn` artifact stores them so a
+    /// range-coded index stream stays decodable.
+    pub fn freqs(&self) -> Vec<u32> {
+        self.cum.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// Rebuild a model from stored normalized frequencies. Every
+    /// frequency must be ≥ 1 and the total must stay within the coder's
+    /// 16-bit precision budget; returns None otherwise (artifact loaders
+    /// turn that into a decode error instead of a panic).
+    pub fn from_freqs(freqs: &[u32]) -> Option<FreqModel> {
+        if freqs.is_empty() || freqs.iter().any(|&f| f == 0) {
+            return None;
+        }
+        let total: u64 = freqs.iter().map(|&f| f as u64).sum();
+        if total > 1 << 16 {
+            return None;
+        }
+        let mut cum = Vec::with_capacity(freqs.len() + 1);
+        let mut acc = 0u32;
+        cum.push(0);
+        for &f in freqs {
+            acc += f;
+            cum.push(acc);
+        }
+        Some(FreqModel { cum })
     }
 
     fn total(&self) -> u32 {
@@ -209,6 +255,45 @@ mod tests {
             "bits/sym {bits_per_sym} vs entropy {h}"
         );
         assert_eq!(decode(&bytes, syms.len(), &model), syms);
+    }
+
+    #[test]
+    fn normalizes_many_rare_symbols_without_panicking() {
+        // Thousands of never-seen symbols floor to frequency 1 and push
+        // the normalized total past the 16-bit budget; the drift fix
+        // must spread the shave across busy buckets (a single-bucket
+        // shave both panicked here and crushed the most likely symbol).
+        let mut counts = vec![0u64; 5000];
+        for (i, c) in counts.iter_mut().enumerate().take(100) {
+            *c = 1000 + i as u64;
+        }
+        let model = FreqModel::from_counts(&counts);
+        let freqs = model.freqs();
+        assert!(freqs.iter().all(|&f| f >= 1));
+        assert!(freqs.iter().map(|&f| f as u64).sum::<u64>() <= 1 << 16);
+        // Busy symbols keep (most of) their mass.
+        assert!(freqs[..100].iter().all(|&f| f > 100));
+        let syms: Vec<u32> = (0..3000).map(|i| (i % 100) as u32).collect();
+        let bytes = encode(&syms, &model);
+        assert_eq!(decode(&bytes, syms.len(), &model), syms);
+    }
+
+    #[test]
+    fn freqs_roundtrip_reconstructs_the_model() {
+        let mut rng = Xoshiro256::new(7);
+        let syms: Vec<u32> = (0..3000).map(|_| rng.below(40) as u32).collect();
+        let model = FreqModel::from_symbols(&syms, 40);
+        let stored = model.freqs();
+        // With alphabet ≥ 2 every normalized frequency fits u16 (the
+        // total is 2^16 and each is ≥ 1) — the artifact relies on this.
+        assert!(stored.iter().all(|&f| (1..=u16::MAX as u32).contains(&f)));
+        let rebuilt = FreqModel::from_freqs(&stored).expect("valid freqs");
+        let bytes = encode(&syms, &model);
+        assert_eq!(decode(&bytes, syms.len(), &rebuilt), syms);
+        // Invalid tables are rejected, not mis-decoded.
+        assert!(FreqModel::from_freqs(&[]).is_none());
+        assert!(FreqModel::from_freqs(&[3, 0, 1]).is_none());
+        assert!(FreqModel::from_freqs(&[u32::MAX, 1]).is_none());
     }
 
     #[test]

@@ -110,6 +110,13 @@ impl MulTable {
         self.a_levels + 2
     }
 
+    /// The activation index of the constant-0.0 (padding) row, as the
+    /// u16 the conv executors feed for out-of-image taps.
+    #[inline]
+    pub fn pad_index(&self) -> u16 {
+        zero_row(self.a_levels) as u16
+    }
+
     /// One row of products (all weights for a fixed activation value).
     #[inline]
     pub fn row(&self, a_idx: usize) -> &[i32] {
@@ -194,6 +201,9 @@ mod tests {
         for wi in 0..cb.len() {
             assert_eq!(t.at(zero_row(t.a_levels), wi), 0);
         }
+        // The conv padding index points at exactly this row.
+        assert_eq!(t.pad_index() as usize, zero_row(t.a_levels));
+        assert!(t.row(t.pad_index() as usize).iter().all(|&v| v == 0));
     }
 
     #[test]

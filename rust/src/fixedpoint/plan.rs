@@ -180,6 +180,20 @@ mod tests {
     }
 
     #[test]
+    fn conv_accumulation_depth_gates_the_ladder() {
+        // The kernel ladder keys off max_fan_in, which for conv layers
+        // is the full receptive field k·k·in_c: entries that are
+        // i32-safe at a shallow conv depth must lose the fits_i32
+        // guarantee once the accumulation depth grows AlexNet-deep.
+        let act = QuantAct::tanh_d(8);
+        let shallow = FixedPointPlan::build(&act, 32, 1.0, 1.0, 3 * 3 * 4);
+        let deep = FixedPointPlan::build(&act, 32, 1.0, 1.0, 11 * 11 * 512);
+        assert!(shallow.overflow.fits_i32, "{:?}", shallow.overflow);
+        assert!(!deep.overflow.fits_i32, "{:?}", deep.overflow);
+        assert!(deep.overflow.fits_i64);
+    }
+
+    #[test]
     fn binary_activation_degenerate_span_ok() {
         let act = QuantAct::tanh_d(2);
         let plan = FixedPointPlan::build(&act, 8, 1.0, 1.0, 32);

@@ -23,7 +23,9 @@
 //! performs **zero heap allocations** after warmup, processes rows in
 //! cache-blocked chunks (one streamed pass over `w_idx` serves
 //! [`DENSE_ROW_BLOCK`] examples), and fans batches out across the shared
-//! thread pool in bit-exact row chunks. The kernel ladder:
+//! thread pool in bit-exact row chunks. The kernel ladder (shared by the
+//! dense and conv executors — the overflow analysis covers the largest
+//! fan-in of either kind, i.e. `k·k·in_c` for conv layers):
 //!
 //! * `I16xI32` — compact i16 tables + i32 accumulators (widened SIMD
 //!   gather; half the table cache footprint). Chosen when the overflow
@@ -31,11 +33,27 @@
 //!   i16.
 //! * `I32xI32` — i32 tables + i32 accumulators (AVX2/AVX-512 gather).
 //! * `I32xI64` — i32 tables + i64 accumulators; scalar, always safe.
+//!
+//! # Conv execution (§Perf)
+//!
+//! Conv layers run on a **tiled im2col** strategy instead of per-patch
+//! gathers. Each input row is expanded once into an "xrow" — for every
+//! output column the `k_w·in_c` window it contributes — and kept in a
+//! ring of `k_h` slots (plus one shared padding slot), so the `k_h`
+//! output rows whose receptive fields overlap an input row all reuse the
+//! same expansion instead of re-gathering it `k_h` times. Accumulation
+//! then streams the conv `w_idx` once per [`CONV_POS_BLOCK`] output
+//! positions over [`DENSE_COL_BLOCK`]-channel tiles — the same blocking
+//! that makes the dense path fast. At batch=1 the executor additionally
+//! splits one image's output rows into bands across the shared pool
+//! (bit-exact: bands own disjoint output rows); see
+//! [`LutNetwork::forward_indices_into`].
 
 use crate::fixedpoint::{bias_row, zero_row, ActTable, FixedPointPlan, MulTable, UniformQuant};
 use crate::nn::{ActSpec, LayerSpec, NetSpec, Network};
 use crate::quant::{Codebook, QuantAct};
 use crate::tensor::{Conv2dSpec, Tensor};
+use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::sync::OnceLock;
@@ -47,6 +65,11 @@ const DENSE_ROW_BLOCK: usize = 8;
 /// Output columns per dense accumulator tile — an 8×512 i32 tile is
 /// 16 KB and stays L1-resident while `w_idx` streams past it.
 const DENSE_COL_BLOCK: usize = 512;
+
+/// Output positions per conv accumulator tile: one streamed pass over
+/// the conv `w_idx` serves this many output pixels (the conv analogue of
+/// [`DENSE_ROW_BLOCK`]; kept equal so the shared scratch tile fits both).
+const CONV_POS_BLOCK: usize = DENSE_ROW_BLOCK;
 
 /// Target bytes for a chunk's ping-pong index buffers (both u16 planes).
 const CHUNK_TARGET_BYTES: usize = 128 * 1024;
@@ -147,8 +170,18 @@ pub(crate) struct ExecPlan {
     max_elems: usize,
     /// Max simultaneous accumulators (dense column tile / conv out_c).
     max_acc: usize,
-    /// Max conv patch length (0 for pure-MLP nets).
+    /// Max conv patch length (0 for pure-MLP nets; sizes the retained
+    /// per-patch reference path, [`LutNetwork::forward_prepatch`]).
     max_patch: usize,
+    /// Elements of the conv expanded-row ring: for the largest conv
+    /// layer, `(k_h + 1)` slots of `out_w · k_w · in_c` u16s each (one
+    /// slot per kernel row plus one shared padding slot). 0 for MLPs.
+    /// Centralized here so every scratch arena — chunk-serial and
+    /// band-parallel alike — is sized once, at plan time.
+    conv_ring: usize,
+    /// Largest conv kernel height (the ring-directory length). 0 for
+    /// MLPs.
+    max_kh: usize,
     /// Rows per work chunk, sized so a chunk's scratch stays
     /// cache-resident.
     chunk_rows: usize,
@@ -167,8 +200,13 @@ pub struct ExecScratch {
     /// Accumulator tile, `DENSE_ROW_BLOCK × max_acc`.
     acc: Vec<i32>,
     acc64: Vec<i64>,
-    /// Conv patch gather buffer, `max_patch`.
+    /// Conv patch gather buffer for the retained per-patch reference
+    /// path, `max_patch`.
     patch: Vec<u16>,
+    /// Conv expanded-row ring (`conv_ring` u16s) + its slot directory
+    /// (`max_kh` entries: which input row each slot holds).
+    ring: Vec<u16>,
+    ring_iy: Vec<i64>,
 }
 
 impl ExecScratch {
@@ -179,6 +217,8 @@ impl ExecScratch {
             acc: Vec::new(),
             acc64: Vec::new(),
             patch: Vec::new(),
+            ring: Vec::new(),
+            ring_iy: Vec::new(),
         }
     }
 
@@ -196,6 +236,12 @@ impl ExecScratch {
         if self.patch.len() < plan.max_patch {
             self.patch.resize(plan.max_patch, 0);
         }
+        if self.ring.len() < plan.conv_ring {
+            self.ring.resize(plan.conv_ring, 0);
+        }
+        if self.ring_iy.len() < plan.max_kh {
+            self.ring_iy.resize(plan.max_kh, i64::MIN);
+        }
     }
 }
 
@@ -211,6 +257,53 @@ fn with_scratch<R>(f: impl FnOnce(&mut ExecScratch) -> R) -> R {
         static SCRATCH: RefCell<ExecScratch> = RefCell::new(ExecScratch::new());
     }
     SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Per-worker scratch for intra-image conv band jobs: the expanded-row
+/// ring plus accumulator tiles. Deliberately separate from the chunk
+/// scratch ([`with_scratch`]) — a band job can run inline on a thread
+/// whose chunk scratch is already mutably borrowed (the pool's nested
+/// sections execute in place), so the two must never share a `RefCell`.
+struct BandScratch {
+    ring: Vec<u16>,
+    ring_iy: Vec<i64>,
+    acc: Vec<i32>,
+    acc64: Vec<i64>,
+}
+
+impl BandScratch {
+    fn ensure(&mut self, plan: &ExecPlan) {
+        if self.ring.len() < plan.conv_ring {
+            self.ring.resize(plan.conv_ring, 0);
+        }
+        if self.ring_iy.len() < plan.max_kh {
+            self.ring_iy.resize(plan.max_kh, i64::MIN);
+        }
+        let acc = CONV_POS_BLOCK * plan.max_acc;
+        if self.acc.len() < acc {
+            self.acc.resize(acc, 0);
+            self.acc64.resize(acc, 0);
+        }
+    }
+}
+
+fn with_band_scratch<R>(f: impl FnOnce(&mut BandScratch) -> R) -> R {
+    thread_local! {
+        static BAND: RefCell<BandScratch> = RefCell::new(BandScratch {
+            ring: Vec::new(),
+            ring_iy: Vec::new(),
+            acc: Vec::new(),
+            acc64: Vec::new(),
+        });
+    }
+    BAND.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Where an intra-image conv band job writes: the next layer's level
+/// indices (activated conv) or the network's final sums (conv-final).
+enum ConvBandOut<'a> {
+    Levels(&'a mut [u16]),
+    Sums(&'a mut [i64]),
 }
 
 /// Batch-chunk parallelism kill switch (`QNN_SERIAL=1`); thread count
@@ -559,39 +652,70 @@ impl LutNetwork {
     }
 
     /// Batch forward into a caller-provided buffer, fanning row chunks
-    /// out across the shared thread pool when the batch is large enough
-    /// (`QNN_SERIAL=1` disables). Rows are independent, so the parallel
-    /// path is bit-exact vs the serial one. Allocation-free after
-    /// warmup apart from per-chunk job boxes (O(chunks), not O(rows)).
+    /// out across the shared thread pool when the batch is large enough,
+    /// and — at batch=1 on conv nets — fanning each conv layer's output
+    /// row-bands out instead, so single-image latency also scales with
+    /// cores (`QNN_SERIAL=1` disables both). Rows and bands are
+    /// independent, so every parallel path is bit-exact vs the serial
+    /// one. Allocation-free after warmup apart from per-chunk/band job
+    /// boxes (O(chunks), not O(rows)).
     pub fn forward_indices_into(&self, idx: &[u16], batch: usize, out: &mut [i64]) {
+        let pool = if parallel_enabled() {
+            Some(crate::util::threadpool::global())
+        } else {
+            None
+        };
+        self.forward_indices_into_with(idx, batch, out, pool);
+    }
+
+    /// [`Self::forward_indices_into`] with an explicit pool (None =
+    /// fully serial). Crate-visible so tests can pin the thread count
+    /// (the public path sizes the shared pool from `QNN_THREADS`).
+    pub(crate) fn forward_indices_into_with(
+        &self,
+        idx: &[u16],
+        batch: usize,
+        out: &mut [i64],
+        pool: Option<&ThreadPool>,
+    ) {
         let feat: usize = self.input_shape.iter().product();
         assert_eq!(idx.len(), batch * feat, "input index count mismatch");
         assert_eq!(out.len(), batch * self.out_dim, "output buffer size mismatch");
         if batch == 0 {
             return;
         }
-        if batch > 1 && parallel_enabled() {
-            let pool = crate::util::threadpool::global();
+        if let Some(pool) = pool {
             let threads = pool.threads();
-            // ~2 chunks per thread for load balance, capped by the
-            // cache-sized chunk the scratch arena is provisioned for.
-            let chunk = ((batch + 2 * threads - 1) / (2 * threads)).clamp(1, self.exec.chunk_rows);
-            if threads > 1 && chunk < batch {
-                let out_dim = self.out_dim;
-                pool.parallel_chunks(out, chunk * out_dim, |ci, out_chunk| {
-                    let rows = out_chunk.len() / out_dim;
-                    let start = ci * chunk;
-                    with_scratch(|s| {
-                        self.exec_chunk(
-                            &idx[start * feat..(start + rows) * feat],
-                            rows,
-                            out_chunk,
-                            s,
-                        )
+            if batch > 1 && threads > 1 {
+                // ~2 chunks per thread for load balance, capped by the
+                // cache-sized chunk the scratch arena is provisioned for.
+                let chunk =
+                    ((batch + 2 * threads - 1) / (2 * threads)).clamp(1, self.exec.chunk_rows);
+                if chunk < batch {
+                    let out_dim = self.out_dim;
+                    pool.parallel_chunks(out, chunk * out_dim, |ci, out_chunk| {
+                        let rows = out_chunk.len() / out_dim;
+                        let start = ci * chunk;
+                        with_scratch(|s| {
+                            // Batch chunks already saturate the pool —
+                            // no nested intra-image parallelism.
+                            self.exec_chunk(
+                                &idx[start * feat..(start + rows) * feat],
+                                rows,
+                                out_chunk,
+                                s,
+                                None,
+                                false,
+                            )
+                        });
                     });
-                });
-                return;
+                    return;
+                }
             }
+            // batch == 1 (or a single-thread pool): serial chunk walk
+            // with intra-image conv band parallelism enabled.
+            with_scratch(|s| self.exec_chunks(idx, batch, out, s, Some(pool), false));
+            return;
         }
         with_scratch(|s| self.forward_into(idx, batch, out, s));
     }
@@ -610,6 +734,39 @@ impl LutNetwork {
         let feat: usize = self.input_shape.iter().product();
         assert_eq!(idx.len(), batch * feat, "input index count mismatch");
         assert_eq!(out.len(), batch * self.out_dim, "output buffer size mismatch");
+        self.exec_chunks(idx, batch, out, scratch, None, false);
+    }
+
+    /// The pre-tiling conv executor: identical dense path, but conv
+    /// layers run the retained per-patch gather strategy (no expanded-row
+    /// ring, no position blocking, no intra-image parallelism). Kept as
+    /// the perf-trajectory baseline the conv speedup is measured against
+    /// (`BENCH_lut_engine.json` "prepatch" column) and as a second
+    /// bit-exactness oracle.
+    pub fn forward_prepatch(&self, idx: &[u16], batch: usize) -> LutOutput {
+        let feat: usize = self.input_shape.iter().product();
+        assert_eq!(idx.len(), batch * feat, "input index count mismatch");
+        let mut sums = vec![0i64; batch * self.out_dim];
+        with_scratch(|s| self.exec_chunks(idx, batch, &mut sums, s, None, true));
+        LutOutput {
+            batch,
+            out_dim: self.out_dim,
+            inv_scale: 1.0 / self.plan.scale(),
+            sums,
+        }
+    }
+
+    /// Walk a batch in plan-sized row chunks through [`Self::exec_chunk`].
+    fn exec_chunks(
+        &self,
+        idx: &[u16],
+        batch: usize,
+        out: &mut [i64],
+        scratch: &mut ExecScratch,
+        pool: Option<&ThreadPool>,
+        prepatch: bool,
+    ) {
+        let feat: usize = self.input_shape.iter().product();
         let chunk = self.exec.chunk_rows;
         let mut r0 = 0;
         while r0 < batch {
@@ -619,6 +776,8 @@ impl LutNetwork {
                 rows,
                 &mut out[r0 * self.out_dim..(r0 + rows) * self.out_dim],
                 scratch,
+                pool,
+                prepatch,
             );
             r0 += rows;
         }
@@ -626,8 +785,18 @@ impl LutNetwork {
 
     /// Run up to `chunk_rows` examples through every layer using the
     /// scratch arena. `input` is `rows × feat` level indices; `out` is
-    /// `rows × out_dim` final sums.
-    fn exec_chunk(&self, input: &[u16], rows: usize, out: &mut [i64], scratch: &mut ExecScratch) {
+    /// `rows × out_dim` final sums. `pool` enables intra-image conv band
+    /// parallelism (only engaged at rows == 1); `prepatch` selects the
+    /// retained per-patch conv strategy.
+    fn exec_chunk(
+        &self,
+        input: &[u16],
+        rows: usize,
+        out: &mut [i64],
+        scratch: &mut ExecScratch,
+        pool: Option<&ThreadPool>,
+        prepatch: bool,
+    ) {
         scratch.ensure(&self.exec);
         let row_stride = self.exec.max_elems;
         let feat: usize = self.input_shape.iter().product();
@@ -638,6 +807,8 @@ impl LutNetwork {
             acc,
             acc64,
             patch,
+            ring,
+            ring_iy,
         } = scratch;
 
         for r in 0..rows {
@@ -753,87 +924,170 @@ impl LutNetwork {
                     ..
                 } => {
                     let t = &self.tables[*table];
-                    let (ow, oc) = (cs.out_w(), cs.out_c);
-                    let od = cs.out_h() * ow * oc;
-                    match (self.exec.kernel, act) {
-                        (Kernel::I32xI64, Some(ai)) => {
-                            let at = &self.act_tables[*ai];
-                            conv_exec_i64(
-                                t,
-                                cs,
-                                w_idx,
-                                bias_acc,
-                                rows,
-                                row_stride,
-                                cur,
-                                acc64,
-                                patch,
-                                |r, off, accs| {
-                                    let base = r * row_stride + off;
-                                    for (j, &a) in accs.iter().enumerate() {
-                                        nxt[base + j] = at.lookup(a);
-                                    }
-                                },
-                            );
+                    let (oh, ow, oc) = (cs.out_h(), cs.out_w(), cs.out_c);
+                    let od = oh * ow * oc;
+                    let feat_in = cs.in_h * cs.in_w * cs.in_c;
+                    let kernel = self.exec.kernel;
+                    if prepatch {
+                        // ---- retained per-patch reference strategy ----
+                        match (kernel, act) {
+                            (Kernel::I32xI64, Some(ai)) => {
+                                let at = &self.act_tables[*ai];
+                                conv_exec_prepatch_i64(
+                                    t,
+                                    cs,
+                                    w_idx,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    acc64,
+                                    patch,
+                                    |r, off, accs| {
+                                        let base = r * row_stride + off;
+                                        for (j, &a) in accs.iter().enumerate() {
+                                            nxt[base + j] = at.lookup(a);
+                                        }
+                                    },
+                                );
+                            }
+                            (Kernel::I32xI64, None) => {
+                                conv_exec_prepatch_i64(
+                                    t,
+                                    cs,
+                                    w_idx,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    acc64,
+                                    patch,
+                                    |r, off, accs| {
+                                        let base = r * od + off;
+                                        for (j, &a) in accs.iter().enumerate() {
+                                            out[base + j] = a;
+                                        }
+                                    },
+                                );
+                            }
+                            (_, Some(ai)) => {
+                                let at = &self.act_tables[*ai];
+                                conv_exec_prepatch_i32(
+                                    t,
+                                    use_i16,
+                                    cs,
+                                    w_idx,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    acc,
+                                    patch,
+                                    |r, off, accs| {
+                                        let base = r * row_stride + off;
+                                        for (j, &a) in accs.iter().enumerate() {
+                                            nxt[base + j] = at.lookup(a as i64);
+                                        }
+                                    },
+                                );
+                            }
+                            (_, None) => {
+                                conv_exec_prepatch_i32(
+                                    t,
+                                    use_i16,
+                                    cs,
+                                    w_idx,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    acc,
+                                    patch,
+                                    |r, off, accs| {
+                                        let base = r * od + off;
+                                        for (j, &a) in accs.iter().enumerate() {
+                                            out[base + j] = a as i64;
+                                        }
+                                    },
+                                );
+                            }
                         }
-                        (Kernel::I32xI64, None) => {
-                            conv_exec_i64(
-                                t,
-                                cs,
-                                w_idx,
-                                bias_acc,
-                                rows,
-                                row_stride,
-                                cur,
-                                acc64,
-                                patch,
-                                |r, off, accs| {
-                                    let base = r * od + off;
-                                    for (j, &a) in accs.iter().enumerate() {
-                                        out[base + j] = a;
-                                    }
-                                },
-                            );
+                    } else if let Some(p) = pool.filter(|p| {
+                        rows == 1 && oh > 1 && p.threads() > 1 && !p.on_worker_thread()
+                    }) {
+                        // ---- intra-image band parallelism (batch = 1):
+                        // split this image's output rows into bands, one
+                        // pool job per band. Bands own disjoint output
+                        // rows, so the result is bit-exact vs serial.
+                        let row_elems = ow * oc;
+                        let band_h = ((oh + 2 * p.threads() - 1) / (2 * p.threads())).max(1);
+                        let input1 = &cur[..feat_in];
+                        match act {
+                            Some(ai) => {
+                                let at = Some(&self.act_tables[*ai]);
+                                p.parallel_chunks(&mut nxt[..od], band_h * row_elems, |bi, band| {
+                                    let y0 = bi * band_h;
+                                    let y1 = y0 + band.len() / row_elems;
+                                    self.conv_band_job(
+                                        cs,
+                                        w_idx,
+                                        bias_acc,
+                                        *table,
+                                        at,
+                                        input1,
+                                        y0,
+                                        y1,
+                                        y0 * row_elems,
+                                        ConvBandOut::Levels(band),
+                                    );
+                                });
+                            }
+                            None => {
+                                p.parallel_chunks(&mut out[..od], band_h * row_elems, |bi, band| {
+                                    let y0 = bi * band_h;
+                                    let y1 = y0 + band.len() / row_elems;
+                                    self.conv_band_job(
+                                        cs,
+                                        w_idx,
+                                        bias_acc,
+                                        *table,
+                                        None,
+                                        input1,
+                                        y0,
+                                        y1,
+                                        y0 * row_elems,
+                                        ConvBandOut::Sums(band),
+                                    );
+                                });
+                            }
                         }
-                        (_, Some(ai)) => {
-                            let at = &self.act_tables[*ai];
-                            conv_exec_i32(
+                    } else {
+                        // ---- serial tiled strategy (caller's scratch) ----
+                        let at = act.map(|ai| &self.act_tables[ai]);
+                        for r in 0..rows {
+                            let input1 = &cur[r * row_stride..r * row_stride + feat_in];
+                            let target = match act {
+                                Some(_) => ConvBandOut::Levels(
+                                    &mut nxt[r * row_stride..r * row_stride + od],
+                                ),
+                                None => ConvBandOut::Sums(&mut out[r * od..(r + 1) * od]),
+                            };
+                            conv_exec_dispatch(
                                 t,
-                                use_i16,
                                 cs,
                                 w_idx,
                                 bias_acc,
-                                rows,
-                                row_stride,
-                                cur,
+                                at,
+                                kernel,
+                                input1,
+                                0,
+                                oh,
+                                0,
+                                ring,
+                                ring_iy,
                                 acc,
-                                patch,
-                                |r, off, accs| {
-                                    let base = r * row_stride + off;
-                                    for (j, &a) in accs.iter().enumerate() {
-                                        nxt[base + j] = at.lookup(a as i64);
-                                    }
-                                },
-                            );
-                        }
-                        (_, None) => {
-                            conv_exec_i32(
-                                t,
-                                use_i16,
-                                cs,
-                                w_idx,
-                                bias_acc,
-                                rows,
-                                row_stride,
-                                cur,
-                                acc,
-                                patch,
-                                |r, off, accs| {
-                                    let base = r * od + off;
-                                    for (j, &a) in accs.iter().enumerate() {
-                                        out[base + j] = a as i64;
-                                    }
-                                },
+                                acc64,
+                                target,
                             );
                         }
                     }
@@ -878,6 +1132,54 @@ impl LutNetwork {
                 LutLayer::Flatten => {} // row layout is already flat
             }
         }
+    }
+
+    /// One intra-image conv band job: run output rows `[y0, y1)` of a
+    /// single image out of the per-worker band scratch. `base` is the
+    /// image-local element offset of the band's first row; `out` is
+    /// where the band lands — next-layer level indices (with `at`
+    /// supplying the activation table) or the network's final sums.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_band_job(
+        &self,
+        cs: &Conv2dSpec,
+        w_idx: &[u32],
+        bias_acc: &[i32],
+        table: usize,
+        at: Option<&ActTable>,
+        input: &[u16],
+        y0: usize,
+        y1: usize,
+        base: usize,
+        out: ConvBandOut<'_>,
+    ) {
+        let t = &self.tables[table];
+        with_band_scratch(|bs| {
+            bs.ensure(&self.exec);
+            let BandScratch {
+                ring,
+                ring_iy,
+                acc,
+                acc64,
+            } = bs;
+            conv_exec_dispatch(
+                t,
+                cs,
+                w_idx,
+                bias_acc,
+                at,
+                self.exec.kernel,
+                input,
+                y0,
+                y1,
+                base,
+                ring,
+                ring_iy,
+                acc,
+                acc64,
+                out,
+            );
+        });
     }
 
     /// The pre-ExecPlan executor: per-row interpretation with per-layer
@@ -1202,6 +1504,8 @@ pub(crate) fn build_exec_plan(
     let mut max_elems = feat;
     let mut max_acc = 1usize;
     let mut max_patch = 0usize;
+    let mut conv_ring = 0usize;
+    let mut max_kh = 0usize;
     for layer in layers {
         match layer {
             LutLayer::Dense { out_dim, .. } => {
@@ -1212,6 +1516,11 @@ pub(crate) fn build_exec_plan(
                 elems = spec.out_h() * spec.out_w() * spec.out_c;
                 max_acc = max_acc.max(spec.out_c);
                 max_patch = max_patch.max(spec.fan_in());
+                // k_h expanded-row slots + 1 shared padding slot, each
+                // out_w · k_w · in_c u16s (see `conv_exec_*`).
+                let xl = spec.out_w() * spec.k_w * spec.in_c;
+                conv_ring = conv_ring.max((spec.k_h + 1) * xl);
+                max_kh = max_kh.max(spec.k_h);
             }
             LutLayer::MaxPool {
                 out_h, out_w, chans, ..
@@ -1239,6 +1548,8 @@ pub(crate) fn build_exec_plan(
         max_elems,
         max_acc,
         max_patch,
+        conv_ring,
+        max_kh,
         chunk_rows,
         kernel,
     }
@@ -1350,11 +1661,15 @@ fn dense_exec_i64<E: FnMut(usize, usize, &[i64])>(
     }
 }
 
-/// Conv layer on i32 accumulators: integer im2col patch gather fused
-/// with the LUT accumulation. `emit(row, out_offset, accs)` receives
-/// each output position's `out_c` sums.
+/// Pre-tiling conv layer on i32 accumulators: per-patch integer im2col
+/// gather fused with the LUT accumulation, one output position at a
+/// time. Retained as the perf-trajectory baseline and second oracle
+/// ([`LutNetwork::forward_prepatch`]); the hot path is the tiled
+/// [`conv_exec_i32`]/[`conv_exec_i16`] family below.
+/// `emit(row, out_offset, accs)` receives each output position's
+/// `out_c` sums.
 #[allow(clippy::too_many_arguments)]
-fn conv_exec_i32<E: FnMut(usize, usize, &[i32])>(
+fn conv_exec_prepatch_i32<E: FnMut(usize, usize, &[i32])>(
     t: &MulTable,
     use_i16: bool,
     cs: &Conv2dSpec,
@@ -1408,9 +1723,10 @@ fn conv_exec_i32<E: FnMut(usize, usize, &[i32])>(
     }
 }
 
-/// Conv layer on i64 accumulators (the always-safe fallback).
+/// Pre-tiling conv layer on i64 accumulators (the always-safe fallback
+/// of the retained per-patch reference path).
 #[allow(clippy::too_many_arguments)]
-fn conv_exec_i64<E: FnMut(usize, usize, &[i64])>(
+fn conv_exec_prepatch_i64<E: FnMut(usize, usize, &[i64])>(
     t: &MulTable,
     cs: &Conv2dSpec,
     w_idx: &[u32],
@@ -1478,6 +1794,424 @@ fn gather_patch(
             let src = base + iy as usize * in_row + ix as usize * cs.in_c;
             let dst = (ky * cs.k_w + kx) * cs.in_c;
             patch[dst..dst + cs.in_c].copy_from_slice(&cur[src..src + cs.in_c]);
+        }
+    }
+}
+
+/// Expand one input row into its im2col "xrow": for every output column
+/// `ox`, the `k_w·in_c` window starting at input column `ox·stride − pad`
+/// (`pad_idx` outside the image). The interior copy is a single
+/// contiguous memcpy per output column. This expansion is what the tiled
+/// conv executor caches in the ring: the `k_h` output rows whose
+/// receptive fields overlap this input row all reuse it, so each input
+/// row is expanded once per image instead of re-gathered `k_h` times.
+fn expand_row(cs: &Conv2dSpec, row: &[u16], pad_idx: u16, xrow: &mut [u16]) {
+    let kwc = cs.k_w * cs.in_c;
+    let ow = cs.out_w();
+    for ox in 0..ow {
+        let dst = &mut xrow[ox * kwc..(ox + 1) * kwc];
+        let ix0 = (ox * cs.stride) as isize - cs.pad as isize;
+        let lo = ix0.max(0);
+        let hi = (ix0 + cs.k_w as isize).min(cs.in_w as isize);
+        if hi <= lo {
+            dst.iter_mut().for_each(|p| *p = pad_idx);
+            continue;
+        }
+        let (lo, hi) = (lo as usize, hi as usize);
+        let head = (lo as isize - ix0) as usize * cs.in_c;
+        let n = (hi - lo) * cs.in_c;
+        dst[..head].iter_mut().for_each(|p| *p = pad_idx);
+        dst[head..head + n].copy_from_slice(&row[lo * cs.in_c..hi * cs.in_c]);
+        dst[head + n..].iter_mut().for_each(|p| *p = pad_idx);
+    }
+}
+
+/// Make sure every in-image kernel row of output row `oy` is expanded in
+/// the ring. Slot `iy % k_h` holds input row `iy` (the `k_h` rows an
+/// output row needs are consecutive, so they never collide); slot `k_h`
+/// is the shared all-padding row, pre-filled by the caller. `ring_iy`
+/// tracks occupancy so a band sweep expands each input row exactly once.
+fn ensure_ring_rows(
+    cs: &Conv2dSpec,
+    input: &[u16],
+    pad_idx: u16,
+    oy: usize,
+    ring: &mut [u16],
+    ring_iy: &mut [i64],
+    xl: usize,
+) {
+    let in_row = cs.in_w * cs.in_c;
+    for ky in 0..cs.k_h {
+        let iy = (oy * cs.stride + ky) as i64 - cs.pad as i64;
+        if iy < 0 || iy >= cs.in_h as i64 {
+            continue; // reads resolve to the padding slot
+        }
+        let slot = iy as usize % cs.k_h;
+        if ring_iy[slot] == iy {
+            continue;
+        }
+        let row = &input[iy as usize * in_row..(iy as usize + 1) * in_row];
+        expand_row(cs, row, pad_idx, &mut ring[slot * xl..(slot + 1) * xl]);
+        ring_iy[slot] = iy;
+    }
+}
+
+/// Shared skeleton of the tiled conv executors, written out per kernel
+/// below: expanded-row ring + position-blocked accumulation. For output
+/// rows `y0..y1` of one image, streams the conv `w_idx` once per
+/// [`CONV_POS_BLOCK`] output positions over [`DENSE_COL_BLOCK`]-channel
+/// tiles. `emit(out_offset, accs)` receives each finished tile;
+/// `out_offset` is image-local: `(oy·ow + ox)·oc + ob`.
+///
+/// Tiled conv layer on compact i16 tables + i32 accumulators (widened
+/// SIMD gather; requires the I16xI32 kernel, i.e. compact tables and an
+/// accumulator bound — including conv `k·k·in_c` fan-in — proven to fit
+/// i32).
+#[allow(clippy::too_many_arguments)]
+fn conv_exec_i16<E: FnMut(usize, &[i32])>(
+    t: &MulTable,
+    cs: &Conv2dSpec,
+    w_idx: &[u32],
+    bias_acc: &[i32],
+    input: &[u16],
+    y0: usize,
+    y1: usize,
+    ring: &mut [u16],
+    ring_iy: &mut [i64],
+    acc: &mut [i32],
+    mut emit: E,
+) {
+    let (ow, oc) = (cs.out_w(), cs.out_c);
+    let (k_h, kwc) = (cs.k_h, cs.k_w * cs.in_c);
+    let xl = ow * kwc;
+    let pad_idx = t.pad_index();
+    let d = t.data16().expect("I16xI32 kernel requires compact tables");
+    let w = t.w_cols;
+    let ring = &mut ring[..(k_h + 1) * xl];
+    let ring_iy = &mut ring_iy[..k_h];
+    ring_iy.iter_mut().for_each(|s| *s = i64::MIN);
+    ring[k_h * xl..].iter_mut().for_each(|p| *p = pad_idx);
+    for oy in y0..y1 {
+        ensure_ring_rows(cs, input, pad_idx, oy, ring, ring_iy, xl);
+        let rring: &[u16] = ring;
+        let mut ox0 = 0;
+        while ox0 < ow {
+            let m = CONV_POS_BLOCK.min(ow - ox0);
+            let mut ob = 0;
+            while ob < oc {
+                let bw = DENSE_COL_BLOCK.min(oc - ob);
+                for p in 0..m {
+                    acc[p * bw..(p + 1) * bw].copy_from_slice(&bias_acc[ob..ob + bw]);
+                }
+                for ky in 0..k_h {
+                    let iy = (oy * cs.stride + ky) as i64 - cs.pad as i64;
+                    let slot = if iy < 0 || iy >= cs.in_h as i64 {
+                        k_h
+                    } else {
+                        iy as usize % k_h
+                    };
+                    let xrow = &rring[slot * xl..(slot + 1) * xl];
+                    for j in 0..kwc {
+                        let ii = ky * kwc + j;
+                        let wrow = &w_idx[ii * oc + ob..ii * oc + ob + bw];
+                        for p in 0..m {
+                            let a = xrow[(ox0 + p) * kwc + j] as usize;
+                            super::simd::gather_acc_i16(
+                                &mut acc[p * bw..(p + 1) * bw],
+                                &d[a * w..a * w + w + 1],
+                                wrow,
+                            );
+                        }
+                    }
+                }
+                for p in 0..m {
+                    emit((oy * ow + ox0 + p) * oc + ob, &acc[p * bw..(p + 1) * bw]);
+                }
+                ob += bw;
+            }
+            ox0 += m;
+        }
+    }
+}
+
+/// Tiled conv layer on i32 tables + i32 accumulators (AVX2/AVX-512
+/// gather). See [`conv_exec_i16`] for the tiling scheme.
+#[allow(clippy::too_many_arguments)]
+fn conv_exec_i32<E: FnMut(usize, &[i32])>(
+    t: &MulTable,
+    cs: &Conv2dSpec,
+    w_idx: &[u32],
+    bias_acc: &[i32],
+    input: &[u16],
+    y0: usize,
+    y1: usize,
+    ring: &mut [u16],
+    ring_iy: &mut [i64],
+    acc: &mut [i32],
+    mut emit: E,
+) {
+    let (ow, oc) = (cs.out_w(), cs.out_c);
+    let (k_h, kwc) = (cs.k_h, cs.k_w * cs.in_c);
+    let xl = ow * kwc;
+    let pad_idx = t.pad_index();
+    let ring = &mut ring[..(k_h + 1) * xl];
+    let ring_iy = &mut ring_iy[..k_h];
+    ring_iy.iter_mut().for_each(|s| *s = i64::MIN);
+    ring[k_h * xl..].iter_mut().for_each(|p| *p = pad_idx);
+    for oy in y0..y1 {
+        ensure_ring_rows(cs, input, pad_idx, oy, ring, ring_iy, xl);
+        let rring: &[u16] = ring;
+        let mut ox0 = 0;
+        while ox0 < ow {
+            let m = CONV_POS_BLOCK.min(ow - ox0);
+            let mut ob = 0;
+            while ob < oc {
+                let bw = DENSE_COL_BLOCK.min(oc - ob);
+                for p in 0..m {
+                    acc[p * bw..(p + 1) * bw].copy_from_slice(&bias_acc[ob..ob + bw]);
+                }
+                for ky in 0..k_h {
+                    let iy = (oy * cs.stride + ky) as i64 - cs.pad as i64;
+                    let slot = if iy < 0 || iy >= cs.in_h as i64 {
+                        k_h
+                    } else {
+                        iy as usize % k_h
+                    };
+                    let xrow = &rring[slot * xl..(slot + 1) * xl];
+                    for j in 0..kwc {
+                        let ii = ky * kwc + j;
+                        let wrow = &w_idx[ii * oc + ob..ii * oc + ob + bw];
+                        for p in 0..m {
+                            let a = xrow[(ox0 + p) * kwc + j] as usize;
+                            super::simd::gather_acc(
+                                &mut acc[p * bw..(p + 1) * bw],
+                                t.row(a),
+                                wrow,
+                            );
+                        }
+                    }
+                }
+                for p in 0..m {
+                    emit((oy * ow + ox0 + p) * oc + ob, &acc[p * bw..(p + 1) * bw]);
+                }
+                ob += bw;
+            }
+            ox0 += m;
+        }
+    }
+}
+
+/// Tiled conv layer on i64 accumulators (the always-safe scalar
+/// fallback). Same tiling as [`conv_exec_i16`] — the blocked `w_idx`
+/// streaming still pays off in cache traffic even without SIMD.
+#[allow(clippy::too_many_arguments)]
+fn conv_exec_i64<E: FnMut(usize, &[i64])>(
+    t: &MulTable,
+    cs: &Conv2dSpec,
+    w_idx: &[u32],
+    bias_acc: &[i32],
+    input: &[u16],
+    y0: usize,
+    y1: usize,
+    ring: &mut [u16],
+    ring_iy: &mut [i64],
+    acc64: &mut [i64],
+    mut emit: E,
+) {
+    let (ow, oc) = (cs.out_w(), cs.out_c);
+    let (k_h, kwc) = (cs.k_h, cs.k_w * cs.in_c);
+    let xl = ow * kwc;
+    let pad_idx = t.pad_index();
+    let ring = &mut ring[..(k_h + 1) * xl];
+    let ring_iy = &mut ring_iy[..k_h];
+    ring_iy.iter_mut().for_each(|s| *s = i64::MIN);
+    ring[k_h * xl..].iter_mut().for_each(|p| *p = pad_idx);
+    for oy in y0..y1 {
+        ensure_ring_rows(cs, input, pad_idx, oy, ring, ring_iy, xl);
+        let rring: &[u16] = ring;
+        let mut ox0 = 0;
+        while ox0 < ow {
+            let m = CONV_POS_BLOCK.min(ow - ox0);
+            let mut ob = 0;
+            while ob < oc {
+                let bw = DENSE_COL_BLOCK.min(oc - ob);
+                for p in 0..m {
+                    for (j, &b) in bias_acc[ob..ob + bw].iter().enumerate() {
+                        acc64[p * bw + j] = b as i64;
+                    }
+                }
+                for ky in 0..k_h {
+                    let iy = (oy * cs.stride + ky) as i64 - cs.pad as i64;
+                    let slot = if iy < 0 || iy >= cs.in_h as i64 {
+                        k_h
+                    } else {
+                        iy as usize % k_h
+                    };
+                    let xrow = &rring[slot * xl..(slot + 1) * xl];
+                    for j in 0..kwc {
+                        let ii = ky * kwc + j;
+                        let wrow = &w_idx[ii * oc + ob..ii * oc + ob + bw];
+                        for p in 0..m {
+                            let a = xrow[(ox0 + p) * kwc + j] as usize;
+                            let trow = t.row(a);
+                            let arow = &mut acc64[p * bw..(p + 1) * bw];
+                            for (q, &wi) in wrow.iter().enumerate() {
+                                arow[q] += trow[wi as usize] as i64;
+                            }
+                        }
+                    }
+                }
+                for p in 0..m {
+                    emit((oy * ow + ox0 + p) * oc + ob, &acc64[p * bw..(p + 1) * bw]);
+                }
+                ob += bw;
+            }
+            ox0 += m;
+        }
+    }
+}
+
+/// The six-way (kernel × output-target) dispatch shared by the serial
+/// per-row conv path and the intra-image band jobs: pick the tiled
+/// executor for `kernel` and route its tiles either through the
+/// activation table into level indices or straight out as i64 sums.
+/// `base` is subtracted from the executors' image-local offsets to
+/// index the (possibly band-sized) output slice.
+#[allow(clippy::too_many_arguments)]
+fn conv_exec_dispatch(
+    t: &MulTable,
+    cs: &Conv2dSpec,
+    w_idx: &[u32],
+    bias_acc: &[i32],
+    at: Option<&ActTable>,
+    kernel: Kernel,
+    input: &[u16],
+    y0: usize,
+    y1: usize,
+    base: usize,
+    ring: &mut [u16],
+    ring_iy: &mut [i64],
+    acc: &mut [i32],
+    acc64: &mut [i64],
+    out: ConvBandOut<'_>,
+) {
+    match (kernel, out) {
+        (Kernel::I16xI32, ConvBandOut::Levels(band)) => {
+            let at = at.expect("level output needs an activation table");
+            conv_exec_i16(
+                t,
+                cs,
+                w_idx,
+                bias_acc,
+                input,
+                y0,
+                y1,
+                ring,
+                ring_iy,
+                acc,
+                |off, accs: &[i32]| {
+                    for (j, &a) in accs.iter().enumerate() {
+                        band[off - base + j] = at.lookup(a as i64);
+                    }
+                },
+            );
+        }
+        (Kernel::I32xI32, ConvBandOut::Levels(band)) => {
+            let at = at.expect("level output needs an activation table");
+            conv_exec_i32(
+                t,
+                cs,
+                w_idx,
+                bias_acc,
+                input,
+                y0,
+                y1,
+                ring,
+                ring_iy,
+                acc,
+                |off, accs: &[i32]| {
+                    for (j, &a) in accs.iter().enumerate() {
+                        band[off - base + j] = at.lookup(a as i64);
+                    }
+                },
+            );
+        }
+        (Kernel::I32xI64, ConvBandOut::Levels(band)) => {
+            let at = at.expect("level output needs an activation table");
+            conv_exec_i64(
+                t,
+                cs,
+                w_idx,
+                bias_acc,
+                input,
+                y0,
+                y1,
+                ring,
+                ring_iy,
+                acc64,
+                |off, accs: &[i64]| {
+                    for (j, &a) in accs.iter().enumerate() {
+                        band[off - base + j] = at.lookup(a);
+                    }
+                },
+            );
+        }
+        (Kernel::I16xI32, ConvBandOut::Sums(band)) => {
+            conv_exec_i16(
+                t,
+                cs,
+                w_idx,
+                bias_acc,
+                input,
+                y0,
+                y1,
+                ring,
+                ring_iy,
+                acc,
+                |off, accs: &[i32]| {
+                    for (j, &a) in accs.iter().enumerate() {
+                        band[off - base + j] = a as i64;
+                    }
+                },
+            );
+        }
+        (Kernel::I32xI32, ConvBandOut::Sums(band)) => {
+            conv_exec_i32(
+                t,
+                cs,
+                w_idx,
+                bias_acc,
+                input,
+                y0,
+                y1,
+                ring,
+                ring_iy,
+                acc,
+                |off, accs: &[i32]| {
+                    for (j, &a) in accs.iter().enumerate() {
+                        band[off - base + j] = a as i64;
+                    }
+                },
+            );
+        }
+        (Kernel::I32xI64, ConvBandOut::Sums(band)) => {
+            conv_exec_i64(
+                t,
+                cs,
+                w_idx,
+                bias_acc,
+                input,
+                y0,
+                y1,
+                ring,
+                ring_iy,
+                acc64,
+                |off, accs: &[i64]| {
+                    for (j, &a) in accs.iter().enumerate() {
+                        band[off - base + j] = a;
+                    }
+                },
+            );
         }
     }
 }
@@ -1574,15 +2308,23 @@ mod tests {
     use crate::quant::{kmeans_1d, KMeansCfg};
     use crate::util::rng::Xoshiro256;
 
-    /// Train-free fixture: random weights snapped to a k-means codebook.
-    fn clustered_net(spec: &NetSpec, k: usize, seed: u64) -> (Network, Codebook) {
+    /// Train-free fixture: random weights (optionally scaled to force a
+    /// wider kernel down the ladder) snapped to a k-means codebook.
+    fn clustered_scaled(spec: &NetSpec, k: usize, seed: u64, scale: f32) -> (Network, Codebook) {
         let mut rng = Xoshiro256::new(seed);
         let mut net = Network::from_spec(spec, &mut rng);
         let mut flat = net.flat_weights();
+        for v in &mut flat {
+            *v *= scale;
+        }
         let cb = kmeans_1d(&flat, &KMeansCfg::with_k(k), &mut rng);
         cb.quantize_slice(&mut flat);
         net.set_flat_weights(&flat);
         (net, cb)
+    }
+
+    fn clustered_net(spec: &NetSpec, k: usize, seed: u64) -> (Network, Codebook) {
+        clustered_scaled(spec, k, seed, 1.0)
     }
 
     fn mlp_lut(seed: u64, levels: usize, cfg: &CompileCfg) -> LutNetwork {
@@ -1676,6 +2418,134 @@ mod tests {
         let naive = lut.forward_naive(&idx, batch);
         assert_eq!(fast.sums, naive.sums);
         assert_eq!(fast.out_dim, 5);
+        // The retained per-patch baseline must agree too.
+        let pre = lut.forward_prepatch(&idx, batch);
+        assert_eq!(pre.sums, naive.sums);
+    }
+
+    /// Random conv topology: varied geometry, and a coin flip between a
+    /// pooled dense tail and a conv-final (raw-sum) tail so both conv
+    /// emit paths (activation lookup and direct i64 sums) get exercised.
+    fn random_conv_spec(g: &mut crate::util::prop::Gen) -> NetSpec {
+        let in_h = g.usize_in(5, 10);
+        let in_w = g.usize_in(5, 10);
+        let in_c = g.usize_in(1, 3);
+        let k = *g.choice(&[2usize, 3]);
+        let stride = *g.choice(&[1usize, 2]);
+        let pad = g.usize_in(0, 1);
+        let out_c = g.usize_in(2, 6);
+        let mut layers = vec![
+            LayerSpec::Conv { k, out_c, stride, pad },
+            LayerSpec::Act(ActSpec::tanh_d(8)),
+        ];
+        if g.bool() {
+            // conv-final: the second conv emits the network's raw sums.
+            layers.push(LayerSpec::Conv { k: 2, out_c: 2, stride: 1, pad: 0 });
+            layers.push(LayerSpec::Flatten);
+        } else {
+            layers.push(LayerSpec::Flatten);
+            layers.push(LayerSpec::Dense { units: 4 });
+        }
+        NetSpec {
+            name: "prop-conv".into(),
+            input_shape: vec![in_h, in_w, in_c],
+            layers,
+            init_sd: None,
+        }
+    }
+
+    #[test]
+    fn property_conv_ladder_and_strategies_match_naive() {
+        use crate::util::prop::check;
+        check(
+            "conv tiled/prepatch executors == naive across the i64/i32/i16 ladder",
+            10,
+            |g| {
+                let spec = random_conv_spec(g);
+                // ×1000 weights push the accumulator bound past i32
+                // (I32xI64); compact_tables toggles I16xI32 vs I32xI32.
+                let scale = *g.choice(&[1.0f32, 1.0, 1000.0]);
+                let cfg = CompileCfg {
+                    act_table_len: *g.choice(&[16usize, 64]),
+                    compact_tables: g.bool(),
+                    ..CompileCfg::default()
+                };
+                let (net, cb) = clustered_scaled(&spec, 32, g.seed, scale);
+                let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb), &cfg).unwrap();
+                let batch = g.usize_in(1, 6);
+                let idx = {
+                    let levels = lut.input_quant.levels;
+                    let feat: usize = lut.input_shape.iter().product();
+                    let rng = g.rng();
+                    (0..batch * feat)
+                        .map(|_| rng.below(levels) as u16)
+                        .collect::<Vec<u16>>()
+                };
+                let naive = lut.forward_naive(&idx, batch);
+                let fast = lut.forward_indices(&idx, batch);
+                assert_eq!(fast.sums, naive.sums, "tiled executor ({:?})", lut.kernel());
+                let pre = lut.forward_prepatch(&idx, batch);
+                assert_eq!(pre.sums, naive.sums, "prepatch executor ({:?})", lut.kernel());
+            },
+        );
+    }
+
+    #[test]
+    fn property_batch1_band_parallel_matches_serial_across_thread_counts() {
+        use crate::util::prop::check;
+        // Pool sizes stand in for QNN_THREADS values: the public path
+        // sizes the shared pool from that env var, and the band splitter
+        // only ever sees `pool.threads()`.
+        check("batch=1 intra-image bands == serial", 6, |g| {
+            let spec = random_conv_spec(g);
+            let (net, cb) = clustered_scaled(&spec, 32, g.seed, 1.0);
+            let lut =
+                LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default())
+                    .unwrap();
+            let idx = {
+                let levels = lut.input_quant.levels;
+                let feat: usize = lut.input_shape.iter().product();
+                let rng = g.rng();
+                (0..feat).map(|_| rng.below(levels) as u16).collect::<Vec<u16>>()
+            };
+            let mut serial = vec![0i64; lut.out_dim()];
+            let mut scratch = lut.new_scratch();
+            lut.forward_into(&idx, 1, &mut serial, &mut scratch);
+            let threads = g.usize_in(1, 5);
+            let pool = crate::util::threadpool::ThreadPool::new(threads);
+            let mut par = vec![0i64; lut.out_dim()];
+            lut.forward_indices_into_with(&idx, 1, &mut par, Some(&pool));
+            assert_eq!(par, serial, "threads={threads}");
+        });
+    }
+
+    #[test]
+    fn batch1_conv_band_parallelism_is_bit_exact() {
+        // Tall output image so the band splitter produces several jobs
+        // on a 4-thread pool; every band must land exactly where the
+        // serial pass puts it.
+        let spec = NetSpec {
+            name: "band-t".into(),
+            input_shape: vec![16, 12, 2],
+            layers: vec![
+                LayerSpec::Conv { k: 3, out_c: 5, stride: 1, pad: 1 },
+                LayerSpec::Act(ActSpec::tanh_d(8)),
+                LayerSpec::MaxPool { k: 2, stride: 2 },
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 7 },
+            ],
+            init_sd: None,
+        };
+        let (net, cb) = clustered_net(&spec, 32, 8);
+        let lut =
+            LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap();
+        let mut rng = Xoshiro256::new(21);
+        let idx = random_indices(&mut rng, &lut, 1);
+        let naive = lut.forward_naive(&idx, 1);
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let mut par = vec![0i64; lut.out_dim()];
+        lut.forward_indices_into_with(&idx, 1, &mut par, Some(&pool));
+        assert_eq!(par, naive.sums);
     }
 
     #[test]

@@ -184,12 +184,47 @@ unsafe fn gather_acc_i16_avx2_impl(acc: &mut [i32], trow: &[i16], wrow: &[u32]) 
     }
 }
 
-/// Dispatching i16 gather-accumulate: AVX2 → scalar. Requires the
-/// pad contract documented on [`gather_acc_i16_scalar`].
+/// acc[o] += trow[wrow[o]] over i16 entries, AVX-512F: the same scale-2
+/// gather + shift-pair sign extension as the AVX2 path, 16 lanes at a
+/// time. Relies on the same read-past pad contract (each 4-byte gather
+/// at byte offset `2·idx` may spill 2 bytes into the next element).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn gather_acc_i16_avx512_impl(acc: &mut [i32], trow: &[i16], wrow: &[u32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let base = trow.as_ptr() as *const i32;
+    let mut o = 0;
+    while o + 16 <= n {
+        // SAFETY: indices are < trow.len() - 1 (pad contract), so the
+        // scale-2 gather reads bytes [2·idx, 2·idx + 4) ⊆ the slice;
+        // unaligned loads/stores used throughout.
+        let idx = _mm512_loadu_si512(wrow.as_ptr().add(o) as *const _);
+        let raw = _mm512_i32gather_epi32::<2>(idx, base);
+        let vals = _mm512_srai_epi32::<16>(_mm512_slli_epi32::<16>(raw));
+        let a = _mm512_loadu_si512(acc.as_ptr().add(o) as *const _);
+        let sum = _mm512_add_epi32(a, vals);
+        _mm512_storeu_si512(acc.as_mut_ptr().add(o) as *mut _, sum);
+        o += 16;
+    }
+    if o < n {
+        gather_acc_i16_avx2_impl(&mut acc[o..], trow, &wrow[o..]);
+    }
+}
+
+/// Dispatching i16 gather-accumulate: AVX-512F → AVX2 → scalar. Requires
+/// the pad contract documented on [`gather_acc_i16_scalar`].
 #[inline]
 pub fn gather_acc_i16(acc: &mut [i32], trow: &[i16], wrow: &[u32]) {
     #[cfg(target_arch = "x86_64")]
     {
+        if acc.len() >= 16 && avx512_available() && avx2_available() {
+            // SAFETY: features checked at runtime (AVX2 too — the tail
+            // falls through to the AVX2 impl); pad contract upheld by
+            // the caller (MulTable::row16 slices include the pad).
+            unsafe { gather_acc_i16_avx512_impl(acc, trow, wrow) };
+            return;
+        }
         if avx2_available() {
             // SAFETY: feature checked at runtime; pad contract upheld by
             // the caller (MulTable::row16 slices include the pad).

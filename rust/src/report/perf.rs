@@ -20,10 +20,15 @@ pub struct LutBenchRecord {
     pub ns_per_row_naive: f64,
     /// Optimized serial path (`forward_into`, zero-allocation).
     pub ns_per_row_serial: f64,
-    /// Batch-parallel path (`forward_indices_into` on the shared pool).
+    /// Batch-parallel path (`forward_indices_into` on the shared pool;
+    /// at batch=1 on conv nets this is the intra-image band path).
     pub ns_per_row_parallel: f64,
     /// Float reference engine on the same topology, when measured.
     pub ns_per_row_float: Option<f64>,
+    /// Pre-tiling conv executor (`forward_prepatch`) — the old-path
+    /// baseline conv speedups are measured against. Conv topologies
+    /// only.
+    pub ns_per_row_prepatch: Option<f64>,
 }
 
 impl LutBenchRecord {
@@ -49,6 +54,17 @@ impl LutBenchRecord {
             pairs.push(("ns_per_row_float", Json::Num(f)));
             pairs.push(("lut_vs_float", Json::Num(self.ns_per_row_parallel / f)));
         }
+        if let Some(p) = self.ns_per_row_prepatch {
+            pairs.push(("ns_per_row_prepatch", Json::Num(p)));
+            pairs.push((
+                "speedup_serial_vs_prepatch",
+                Json::Num(p / self.ns_per_row_serial),
+            ));
+            pairs.push((
+                "speedup_parallel_vs_prepatch",
+                Json::Num(p / self.ns_per_row_parallel),
+            ));
+        }
         Json::obj(pairs)
     }
 }
@@ -61,7 +77,7 @@ pub fn lut_bench_report(records: &[LutBenchRecord], provenance: &str) -> Json {
         .fold(0.0, f64::max);
     let threads = crate::util::threadpool::global().threads();
     Json::obj(vec![
-        ("schema", Json::Str("qnn.bench_lut_engine.v1".into())),
+        ("schema", Json::Str("qnn.bench_lut_engine.v2".into())),
         ("provenance", Json::Str(provenance.into())),
         ("threads", Json::Num(threads as f64)),
         (
@@ -106,21 +122,25 @@ mod tests {
     #[test]
     fn report_schema_roundtrips() {
         let rec = LutBenchRecord {
-            topology: "256-64-10".into(),
+            topology: "conv16x16x3-k3x16".into(),
             batch: 64,
             kernel: "I16xI32".into(),
             ns_per_row_naive: 4000.0,
             ns_per_row_serial: 2000.0,
             ns_per_row_parallel: 500.0,
             ns_per_row_float: Some(3000.0),
+            ns_per_row_prepatch: Some(3000.0),
         };
         let doc = lut_bench_report(&[rec], "unit-test");
         let back = Json::parse(&doc.to_pretty()).unwrap();
-        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_lut_engine.v1"));
+        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_lut_engine.v2"));
         assert_eq!(back.get("provenance").as_str(), Some("unit-test"));
         let row = back.get("results").at(0);
         assert_eq!(row.get("speedup_parallel_vs_naive").as_f64(), Some(8.0));
         assert_eq!(row.get("rows_per_s_parallel").as_f64(), Some(2e6));
+        assert_eq!(row.get("ns_per_row_prepatch").as_f64(), Some(3000.0));
+        assert_eq!(row.get("speedup_parallel_vs_prepatch").as_f64(), Some(6.0));
+        assert_eq!(row.get("speedup_serial_vs_prepatch").as_f64(), Some(1.5));
         assert_eq!(back.get("max_speedup_parallel_vs_naive").as_f64(), Some(8.0));
     }
 }

@@ -1,7 +1,7 @@
 //! The `.qnn` serving artifact: a compiled [`LutNetwork`] serialized to
 //! one self-contained file — **train → compile → save → load → serve**.
 //!
-//! # Layout (version 1)
+//! # Layout
 //!
 //! ```text
 //! magic    8 bytes  b"QNNLUT01"
@@ -15,10 +15,26 @@
 //! input quantizer, activation quantizer (kind + levels), the fixed-point
 //! plan (scale exponent, Δx as raw f64 bits, overflow analysis), the
 //! weight codebooks (f32 centers), per-mul-table provenance, a mul-table
-//! fingerprint, the activation tables (verbatim u16 entries), and the
-//! layer topology with **bit-packed** weight/bias index streams
-//! (⌈log2 |W|⌉ bits per index — the paper's §4 deployment encoding, and
-//! what puts the artifact far below the 32-bit float baseline).
+//! fingerprint, the activation tables (verbatim u16 entries), the shared
+//! index-coding model (version ≥ 2, see below), and the layer topology
+//! with coded weight/bias index streams.
+//!
+//! # Index-stream coding (version 2)
+//!
+//! Version 1 stored every index stream **bit-packed** at ⌈log2 |W|⌉ bits
+//! per index — the paper's §4 deployment encoding, already far below the
+//! 32-bit float baseline. Version 2 closes §4's other download-format
+//! observation ("even the simplest entropy coding reduces the index size
+//! from 10 bits to below 7"): the writer fits one static frequency model
+//! over the network's whole index population
+//! ([`crate::entropy::FreqModel`], stored as u16 normalized frequencies),
+//! range-codes each stream against it, and keeps the coded form only
+//! where it is smaller — every stream carries a coding tag (0 =
+//! bit-packed, 1 = range-coded), so incompressible streams lose nothing.
+//! If the total saving does not cover the model table, the writer falls
+//! back to all-bit-packed and omits the model. Decoding happens once at
+//! load time; the in-memory network is identical either way. Version-1
+//! artifacts remain loadable.
 //!
 //! Mul-tables themselves are *derived* sections: every entry is
 //! `round(value · center · 2^s / Δx)`, a pure function of data already in
@@ -33,6 +49,7 @@
 //! body revisions. Loaders reject any version they do not know. Additive
 //! metadata goes in the JSON `meta` block, which loaders ignore.
 
+use crate::entropy::{decode as range_decode, encode as range_encode, FreqModel};
 use crate::fixedpoint::{ActTable, FixedPointPlan, MulTable, OverflowAnalysis, UniformQuant};
 use crate::inference::lut::{
     bias_accumulators, build_exec_plan, CodebookSet, CompileCfg, LutLayer, LutNetwork,
@@ -45,8 +62,9 @@ use std::path::Path;
 
 /// File magic for LUT serving artifacts.
 pub const QNN_LUT_MAGIC: &[u8; 8] = b"QNNLUT01";
-/// Current body-format version.
-pub const QNN_LUT_VERSION: u32 = 1;
+/// Current body-format version (2 = range-coded index streams; loaders
+/// accept 1..=2).
+pub const QNN_LUT_VERSION: u32 = 2;
 /// File magic of the float `Network::save` format (the memory-ratio
 /// denominator artifact).
 pub const QNN_FLOAT_MAGIC: &[u8; 4] = b"QNN1";
@@ -193,13 +211,34 @@ impl W {
             self.u16(x);
         }
     }
-    /// Bit-packed index stream: count, bit width, packed bytes.
-    fn packed(&mut self, idx: &[u32]) {
-        let bits = bits_for(idx.iter().copied().max().unwrap_or(0));
+    /// Index stream (version-2 layout): count, coding tag, payload.
+    /// `rc = Some(bytes)` writes the range-coded form (tag 1); None
+    /// writes the bit-packed form (tag 0).
+    fn stream(&mut self, idx: &[u32], rc: Option<&[u8]>) {
         self.u64(idx.len() as u64);
-        self.u8(bits as u8);
-        self.buf.extend_from_slice(&pack_indices(idx, bits));
+        match rc {
+            Some(bytes) => {
+                self.u8(1);
+                self.u64(bytes.len() as u64);
+                self.buf.extend_from_slice(bytes);
+            }
+            None => {
+                let bits = bits_for(idx.iter().copied().max().unwrap_or(0));
+                self.u8(0);
+                self.u8(bits as u8);
+                self.buf.extend_from_slice(&pack_indices(idx, bits));
+            }
+        }
     }
+}
+
+/// Serialized size of a stream in each coding (for the writer's
+/// per-stream and whole-artifact decisions): count + tag already being
+/// equal, compare only the variable parts.
+fn bitpack_payload_bytes(idx: &[u32]) -> usize {
+    let bits = bits_for(idx.iter().copied().max().unwrap_or(0));
+    // 1 byte bit width + packed payload.
+    1 + (idx.len() as u64 * bits as u64).div_ceil(8) as usize
 }
 
 struct R<'a> {
@@ -278,8 +317,8 @@ impl<'a> R<'a> {
         }
         Ok(out)
     }
-    fn packed(&mut self) -> Result<Vec<u32>> {
-        let n = self.count("index stream")?;
+    /// Bit-packed payload (bit width + bytes) of an `n`-index stream.
+    fn packed_body(&mut self, n: usize) -> Result<Vec<u32>> {
         let bits = self.u8()? as u32;
         anyhow::ensure!(
             (1..=32).contains(&bits),
@@ -289,13 +328,44 @@ impl<'a> R<'a> {
         let bytes = self.take(nbytes)?;
         Ok(unpack_indices(bytes, n, bits))
     }
+
+    /// An index stream in the given body-format version: v1 is always
+    /// bit-packed; v2 carries a per-stream coding tag (0 = bit-packed,
+    /// 1 = range-coded against the artifact's shared model).
+    fn stream(&mut self, version: u32, model: Option<&FreqModel>) -> Result<Vec<u32>> {
+        let n = self.count("index stream")?;
+        if version == 1 {
+            return self.packed_body(n);
+        }
+        match self.u8()? {
+            0 => self.packed_body(n),
+            1 => {
+                let m = model
+                    .context("range-coded index stream but artifact carries no index model")?;
+                let nbytes = self.count("range-coded stream")?;
+                let bytes = self.take(nbytes)?;
+                Ok(range_decode(bytes, n, m))
+            }
+            t => bail!("unknown index-stream coding tag {t}"),
+        }
+    }
 }
 
 // ---- save ----
 
 impl LutNetwork {
-    /// Serialize the compiled network to `.qnn` artifact bytes.
+    /// Serialize the compiled network to `.qnn` artifact bytes
+    /// (current version; range-codes index streams where that wins).
     pub fn to_artifact_bytes(&self) -> Vec<u8> {
+        self.to_artifact_bytes_with(true)
+    }
+
+    /// Serialize with explicit control over index-stream coding.
+    /// `range_code = false` forces all-bit-packed streams (the
+    /// version-1 encoding in a version-2 frame) — used to measure what
+    /// the entropy coding buys (`examples/export_artifact.rs` asserts
+    /// the improvement on trained networks).
+    pub fn to_artifact_bytes_with(&self, range_code: bool) -> Vec<u8> {
         let mut body = W::default();
 
         // Shapes.
@@ -362,7 +432,70 @@ impl LutNetwork {
             body.u16s(at.entries());
         }
 
-        // Layer topology with bit-packed index streams.
+        // Index-stream coding decision: fit one static frequency model
+        // over the whole index population (one table amortizes better
+        // than per-stream models), keep range coding only where it beats
+        // bit-packing, and only if the total win covers the stored model
+        // table; otherwise fall back to all-bit-packed with no model.
+        let streams: Vec<&[u32]> = self
+            .layers
+            .iter()
+            .flat_map(|l| match l {
+                LutLayer::Dense { w_idx, b_idx, .. } | LutLayer::Conv { w_idx, b_idx, .. } => {
+                    vec![w_idx.as_slice(), b_idx.as_slice()]
+                }
+                _ => vec![],
+            })
+            .collect();
+        let model = if range_code {
+            let max = streams.iter().flat_map(|s| s.iter()).copied().max().unwrap_or(0);
+            let alphabet = max as usize + 1;
+            // Alphabet cap keeps the normalized 16-bit model well-formed
+            // (and no real codebook comes close).
+            if (2..=1 << 15).contains(&alphabet) {
+                let mut counts = vec![0u64; alphabet];
+                for s in &streams {
+                    for &i in *s {
+                        counts[i as usize] += 1;
+                    }
+                }
+                Some(FreqModel::from_counts(&counts))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        let mut encoded: Vec<Option<Vec<u8>>> = vec![None; streams.len()];
+        if let Some(m) = &model {
+            let mut saved: i64 = 0;
+            for (i, s) in streams.iter().enumerate() {
+                let rc = range_encode(s, m);
+                let bp = bitpack_payload_bytes(s);
+                // A range payload carries an 8-byte length header.
+                if rc.len() + 8 < bp {
+                    saved += (bp - (rc.len() + 8)) as i64;
+                    encoded[i] = Some(rc);
+                }
+            }
+            if saved <= 4 + 2 * m.alphabet() as i64 {
+                encoded.iter_mut().for_each(|e| *e = None);
+            }
+        }
+        let use_model = encoded.iter().any(|e| e.is_some());
+        match (&model, use_model) {
+            (Some(m), true) => {
+                body.u8(1);
+                body.u32(m.alphabet() as u32);
+                for f in m.freqs() {
+                    body.u16(f as u16);
+                }
+            }
+            _ => body.u8(0),
+        }
+
+        // Layer topology with coded index streams.
+        let mut si = 0usize;
         body.u32(self.layers.len() as u32);
         for l in &self.layers {
             match l {
@@ -386,8 +519,9 @@ impl LutNetwork {
                         }
                         None => body.u8(0),
                     }
-                    body.packed(w_idx);
-                    body.packed(b_idx);
+                    body.stream(w_idx, encoded[si].as_deref());
+                    body.stream(b_idx, encoded[si + 1].as_deref());
+                    si += 2;
                 }
                 LutLayer::Conv {
                     spec,
@@ -412,8 +546,9 @@ impl LutNetwork {
                         }
                         None => body.u8(0),
                     }
-                    body.packed(w_idx);
-                    body.packed(b_idx);
+                    body.stream(w_idx, encoded[si].as_deref());
+                    body.stream(b_idx, encoded[si + 1].as_deref());
+                    si += 2;
                 }
                 LutLayer::MaxPool {
                     k,
@@ -435,12 +570,16 @@ impl LutNetwork {
 
         // Informational JSON header (loaders ignore the contents).
         let meta = Json::obj(vec![
-            ("format", Json::Str("qnn.lut_artifact.v1".into())),
+            ("format", Json::Str("qnn.lut_artifact.v2".into())),
             ("kernel", Json::Str(format!("{:?}", self.kernel()))),
             ("weights", Json::Num(self.index_count() as f64)),
             ("tables", Json::Num(self.tables.len() as f64)),
             ("layers", Json::Num(self.layers.len() as f64)),
             ("memory_bytes", Json::Num(self.memory_bytes() as f64)),
+            (
+                "index_coding",
+                Json::Str(if use_model { "range+bitpack" } else { "bitpack" }.into()),
+            ),
         ])
         .to_string();
 
@@ -498,8 +637,8 @@ impl LutNetwork {
         };
         let version = r.u32()?;
         anyhow::ensure!(
-            version == QNN_LUT_VERSION,
-            "unsupported artifact version {version} (this build reads version {QNN_LUT_VERSION})"
+            (1..=QNN_LUT_VERSION).contains(&version),
+            "unsupported artifact version {version} (this build reads versions 1..={QNN_LUT_VERSION})"
         );
         let meta_len = r.u32()? as usize;
         r.take(meta_len).context("truncated artifact meta block")?;
@@ -641,6 +780,31 @@ impl LutNetwork {
             act_tables.push(ActTable::from_parts(shift, offset, entries));
         }
 
+        // Shared index-coding model (version ≥ 2; absent = bit-packed).
+        let model = if version >= 2 {
+            match r.u8()? {
+                0 => None,
+                1 => {
+                    let alphabet = r.u32()? as usize;
+                    anyhow::ensure!(
+                        (2..=1 << 16).contains(&alphabet),
+                        "bad index-model alphabet {alphabet}"
+                    );
+                    let mut freqs = Vec::with_capacity(alphabet);
+                    for _ in 0..alphabet {
+                        freqs.push(r.u16()? as u32);
+                    }
+                    Some(
+                        FreqModel::from_freqs(&freqs)
+                            .context("invalid index-model frequency table in artifact")?,
+                    )
+                }
+                t => bail!("unknown index-coding tag {t}"),
+            }
+        } else {
+            None
+        };
+
         // Layers.
         let n_layers = r.u32()? as usize;
         anyhow::ensure!((1..=10_000).contains(&n_layers), "bad layer count {n_layers}");
@@ -660,8 +824,8 @@ impl LutNetwork {
                     } else {
                         None
                     };
-                    let w_idx = r.packed()?;
-                    let b_idx = r.packed()?;
+                    let w_idx = r.stream(version, model.as_ref())?;
+                    let b_idx = r.stream(version, model.as_ref())?;
                     let w_cols = tables[table].w_cols;
                     anyhow::ensure!(
                         w_idx.len() == in_dim * l_out && b_idx.len() == l_out,
@@ -710,8 +874,8 @@ impl LutNetwork {
                     } else {
                         None
                     };
-                    let w_idx = r.packed()?;
-                    let b_idx = r.packed()?;
+                    let w_idx = r.stream(version, model.as_ref())?;
+                    let b_idx = r.stream(version, model.as_ref())?;
                     let w_cols = tables[table].w_cols;
                     anyhow::ensure!(
                         w_idx.len() == spec.fan_in() * spec.out_c && b_idx.len() == spec.out_c,
@@ -927,7 +1091,7 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         assert!(is_lut_artifact(&bytes));
         let meta = artifact_meta(&bytes).unwrap();
-        assert_eq!(meta.get("format").as_str(), Some("qnn.lut_artifact.v1"));
+        assert_eq!(meta.get("format").as_str(), Some("qnn.lut_artifact.v2"));
         assert_eq!(meta.get("weights").as_usize(), Some(lut.index_count()));
         let loaded = LutNetwork::load(&path).unwrap();
         std::fs::remove_file(&path).ok();
@@ -937,6 +1101,53 @@ mod tests {
             loaded.forward_indices(&idx, 7).sums,
             lut.forward_naive(&idx, 7).sums
         );
+    }
+
+    #[test]
+    fn range_coded_streams_roundtrip_and_shrink_skewed_indices() {
+        // Force a skewed index population (most weights on one center,
+        // like a trained Laplacian-ish distribution): range coding must
+        // beat bit-packing, and both encodings must load bit-exactly.
+        let spec = NetSpec::mlp("art-skew", 24, &[32, 16], 5, ActSpec::tanh_d(8));
+        let mut rng = Xoshiro256::new(11);
+        let mut net = Network::from_spec(&spec, &mut rng);
+        let mut flat = net.flat_weights();
+        let cb = kmeans_1d(&flat, &KMeansCfg::with_k(64), &mut rng);
+        cb.quantize_slice(&mut flat);
+        let c0 = cb.centers()[0];
+        for (i, v) in flat.iter_mut().enumerate() {
+            if i % 4 != 0 {
+                *v = c0;
+            }
+        }
+        net.set_flat_weights(&flat);
+        let lut =
+            LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap();
+
+        let coded = lut.to_artifact_bytes();
+        let packed = lut.to_artifact_bytes_with(false);
+        assert!(
+            coded.len() < packed.len(),
+            "range coding must shrink a skewed artifact ({} vs {})",
+            coded.len(),
+            packed.len()
+        );
+        assert_eq!(
+            artifact_meta(&coded).unwrap().get("index_coding").as_str(),
+            Some("range+bitpack")
+        );
+        assert_eq!(
+            artifact_meta(&packed).unwrap().get("index_coding").as_str(),
+            Some("bitpack")
+        );
+
+        let from_coded = LutNetwork::from_artifact_bytes(&coded).expect("load range-coded");
+        let from_packed = LutNetwork::from_artifact_bytes(&packed).expect("load bit-packed");
+        let mut rng = Xoshiro256::new(12);
+        let idx = random_indices(&mut rng, &lut, 9);
+        let want = lut.forward_naive(&idx, 9);
+        assert_eq!(from_coded.forward_indices(&idx, 9).sums, want.sums);
+        assert_eq!(from_packed.forward_indices(&idx, 9).sums, want.sums);
     }
 
     #[test]

@@ -124,6 +124,15 @@ impl ThreadPool {
         self.workers.len()
     }
 
+    /// Is the calling thread one of this pool's own workers? Nested
+    /// parallel sections run inline in that case (see
+    /// [`Self::parallel_chunks`]); callers can use this to skip the
+    /// overhead of splitting work that would execute sequentially
+    /// anyway.
+    pub fn on_worker_thread(&self) -> bool {
+        WORKER_OF.with(|w| w.get()) == self.id
+    }
+
     fn execute_job(&self, job: Job) {
         self.in_flight.fetch_add(1, Ordering::SeqCst);
         self.sender
@@ -171,7 +180,7 @@ impl ThreadPool {
             return;
         }
         let n_chunks = (data.len() + chunk - 1) / chunk;
-        if n_chunks == 1 || WORKER_OF.with(|w| w.get()) == self.id {
+        if n_chunks == 1 || self.on_worker_thread() {
             for (ci, part) in data.chunks_mut(chunk).enumerate() {
                 f(ci, part);
             }
@@ -383,6 +392,23 @@ mod tests {
             .expect("nested call deadlocked");
         // 8 chunks of 4 elements holding their chunk index: 4·(0+…+7).
         assert_eq!(sum, 4 * 28);
+    }
+
+    #[test]
+    fn on_worker_thread_discriminates_pools() {
+        let a = Arc::new(ThreadPool::new(1));
+        let b = Arc::new(ThreadPool::new(1));
+        assert!(!a.on_worker_thread(), "caller is not a pool worker");
+        let (tx, rx) = mpsc::channel::<(bool, bool)>();
+        let (ac, bc) = (Arc::clone(&a), Arc::clone(&b));
+        a.execute(move || {
+            let _ = tx.send((ac.on_worker_thread(), bc.on_worker_thread()));
+        });
+        let (on_a, on_b) = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("worker job did not run");
+        assert!(on_a, "a's worker must identify as a's");
+        assert!(!on_b, "a's worker must not identify as b's");
     }
 
     #[test]

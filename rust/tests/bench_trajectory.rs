@@ -1,7 +1,8 @@
 //! Seeds the perf trajectory during plain `cargo test`: quick,
 //! non-asserting throughput measurements of the LUT engine written to
 //! `BENCH_lut_engine.json` at the repo root, in the same schema the full
-//! bench uses (`qnn.bench_lut_engine.v1`).
+//! bench uses (`qnn.bench_lut_engine.v2`), including the conv workloads
+//! at batch 1 and 64 the CI smoke gate checks for.
 //!
 //! Timings are recorded, never asserted — CI machines are noisy and a
 //! perf regression should show up in the trajectory, not flake a test.
@@ -9,22 +10,66 @@
 //! left alone; this recorder only creates or refreshes quick records.
 
 use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
-use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::nn::{ActSpec, LayerSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
 use qnn::report::perf::{existing_provenance, lut_bench_report, write_bench_file, LutBenchRecord};
 use qnn::util::rng::Xoshiro256;
 use qnn::util::timer::bench_for;
 use std::time::Duration;
 
-fn prepare(hidden: &[usize], in_dim: usize, out_dim: usize) -> LutNetwork {
-    let spec = NetSpec::mlp("traj", in_dim, hidden, out_dim, ActSpec::tanh_d(32));
+fn prepare(spec: &NetSpec) -> LutNetwork {
     let mut rng = Xoshiro256::new(7);
-    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut net = Network::from_spec(spec, &mut rng);
     let mut flat = net.flat_weights();
     let cb = kmeans_1d(&flat, &KMeansCfg::with_k(256), &mut rng);
     cb.quantize_slice(&mut flat);
     net.set_flat_weights(&flat);
     LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap()
+}
+
+/// Measure one (lut × batch) point; `prepatch` adds the pre-tiling conv
+/// baseline column.
+fn measure(
+    lut: &LutNetwork,
+    topology: &str,
+    b: usize,
+    min_time: Duration,
+    prepatch: bool,
+) -> LutBenchRecord {
+    let mut rng = Xoshiro256::new(b as u64);
+    let feat = lut.input_elems();
+    let idx: Vec<u16> = (0..b * feat)
+        .map(|_| rng.below(lut.input_quant.levels) as u16)
+        .collect();
+    let mut scratch = lut.new_scratch();
+    let mut sums = vec![0i64; b * lut.out_dim()];
+
+    let rn = bench_for("naive", min_time, || {
+        std::hint::black_box(lut.forward_naive(&idx, b));
+    });
+    let rpre = prepatch.then(|| {
+        bench_for("prepatch", min_time, || {
+            std::hint::black_box(lut.forward_prepatch(&idx, b));
+        })
+    });
+    let rs = bench_for("serial", min_time, || {
+        lut.forward_into(&idx, b, &mut sums, &mut scratch);
+        std::hint::black_box(&sums);
+    });
+    let rp = bench_for("parallel", min_time, || {
+        lut.forward_indices_into(&idx, b, &mut sums);
+        std::hint::black_box(&sums);
+    });
+    LutBenchRecord {
+        topology: topology.into(),
+        batch: b,
+        kernel: format!("{:?}", lut.kernel()),
+        ns_per_row_naive: rn.mean_ns / b as f64,
+        ns_per_row_serial: rs.mean_ns / b as f64,
+        ns_per_row_parallel: rp.mean_ns / b as f64,
+        ns_per_row_float: None,
+        ns_per_row_prepatch: rpre.map(|r| r.mean_ns / b as f64),
+    }
 }
 
 #[test]
@@ -37,38 +82,28 @@ fn record_lut_bench_trajectory() {
     }
     let min_time = Duration::from_millis(60);
     let mut records = Vec::new();
-    let lut = prepare(&[128, 128], 256, 10);
-    let kernel = format!("{:?}", lut.kernel());
-    for b in [64usize, 256] {
-        let mut rng = Xoshiro256::new(b as u64);
-        let feat = 256;
-        let idx: Vec<u16> = (0..b * feat)
-            .map(|_| rng.below(lut.input_quant.levels) as u16)
-            .collect();
-        let mut scratch = lut.new_scratch();
-        let mut sums = vec![0i64; b * lut.out_dim()];
 
-        let rn = bench_for("naive", min_time, || {
-            std::hint::black_box(lut.forward_naive(&idx, b));
-        });
-        let rs = bench_for("serial", min_time, || {
-            lut.forward_into(&idx, b, &mut sums, &mut scratch);
-            std::hint::black_box(&sums);
-        });
-        let rp = bench_for("parallel", min_time, || {
-            lut.forward_indices_into(&idx, b, &mut sums);
-            std::hint::black_box(&sums);
-        });
-        records.push(LutBenchRecord {
-            topology: "256-128-128-10".into(),
-            batch: b,
-            kernel: kernel.clone(),
-            ns_per_row_naive: rn.mean_ns / b as f64,
-            ns_per_row_serial: rs.mean_ns / b as f64,
-            ns_per_row_parallel: rp.mean_ns / b as f64,
-            ns_per_row_float: None,
-        });
+    let mlp = prepare(&NetSpec::mlp("traj", 256, &[128, 128], 10, ActSpec::tanh_d(32)));
+    for b in [64usize, 256] {
+        records.push(measure(&mlp, "256-128-128-10", b, min_time, false));
     }
+
+    let conv = prepare(&NetSpec {
+        name: "traj-conv".into(),
+        input_shape: vec![12, 12, 3],
+        layers: vec![
+            LayerSpec::Conv { k: 3, out_c: 8, stride: 1, pad: 1 },
+            LayerSpec::Act(ActSpec::tanh_d(32)),
+            LayerSpec::MaxPool { k: 2, stride: 2 },
+            LayerSpec::Flatten,
+            LayerSpec::Dense { units: 10 },
+        ],
+        init_sd: None,
+    });
+    for b in [1usize, 64] {
+        records.push(measure(&conv, "conv12x12x3-k3x8-d10", b, min_time, true));
+    }
+
     let doc = lut_bench_report(&records, "cargo-test-quick");
     let path = write_bench_file("BENCH_lut_engine.json", &doc).expect("write bench json");
     eprintln!("recorded perf trajectory at {}", path.display());

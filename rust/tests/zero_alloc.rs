@@ -60,7 +60,10 @@ fn forward_into_allocates_nothing_after_warmup() {
     // design — O(chunks), not O(rows)).
     std::env::set_var("QNN_SERIAL", "1");
 
-    // One MLP and one conv topology: both layer kinds must be clean.
+    // One MLP and two conv topologies (stride-1 padded and stride-2
+    // unpadded): the conv executor's expanded-row ring is sized by the
+    // compiled plan — never at a call site — so every geometry must run
+    // clean out of the same pre-sized arena.
     let mlp = clustered(&NetSpec::mlp("za", 64, &[96, 48], 10, ActSpec::tanh_d(32)), 128);
     let conv = clustered(
         &NetSpec {
@@ -77,8 +80,26 @@ fn forward_into_allocates_nothing_after_warmup() {
         },
         64,
     );
+    let conv_s2 = clustered(
+        &NetSpec {
+            name: "za-conv-s2".into(),
+            input_shape: vec![9, 9, 3],
+            layers: vec![
+                LayerSpec::Conv { k: 2, out_c: 5, stride: 2, pad: 0 },
+                LayerSpec::Act(ActSpec::tanh_d(32)),
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 4 },
+            ],
+            init_sd: None,
+        },
+        64,
+    );
 
-    for (name, lut, feat) in [("mlp", &mlp, 64usize), ("conv", &conv, 200)] {
+    for (name, lut, feat) in [
+        ("mlp", &mlp, 64usize),
+        ("conv", &conv, 200),
+        ("conv-s2", &conv_s2, 243),
+    ] {
         let batch = 37;
         let mut rng = Xoshiro256::new(11);
         let idx: Vec<u16> = (0..batch * feat)
