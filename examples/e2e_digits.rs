@@ -169,6 +169,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
             workers: 2,
+            ..ServerCfg::default()
         },
     )?;
     let h = router.handle("lut-e2e")?;

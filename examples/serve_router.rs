@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         max_batch: 32,
         max_wait: Duration::from_millis(2),
         workers: 2,
+        ..ServerCfg::default()
     };
 
     // load → serve: the router boots every artifact it finds.

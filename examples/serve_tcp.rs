@@ -1,0 +1,187 @@
+//! Serving over the wire, end to end: train-ish a digits model, compile
+//! it to the integer LUT engine, save the `.qnn` artifact, boot it
+//! behind the TCP front-end (`Router::load_dir` → `NetServer::bind`),
+//! and measure it with the load generator over **both wire encodings**
+//! — `f32le` floats and `qidx` u8 codebook indices, the request path
+//! that never carries a float.
+//!
+//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v1`) at the
+//! repository root: closed-loop saturation sweep, an open-loop run at a
+//! fraction of saturation, and the wire bytes-per-request comparison
+//! CI gates on (`python/check_bench.py`).
+//!
+//!     cargo run --release --example serve_tcp [-- --full]
+
+use qnn::coordinator::wire::Dtype;
+use qnn::coordinator::{NetServer, Router, ServerCfg};
+use qnn::data::digits;
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::report::loadgen::{run_load, serving_bench_doc, LoadCfg};
+use qnn::report::perf::write_bench_file;
+use qnn::report::table::TableBuilder;
+use qnn::util::rng::Xoshiro256;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let per_client = if full { 400 } else { 120 };
+
+    // Build a quantized digits classifier (short pipeline; e2e_digits
+    // has the full training story).
+    let spec = NetSpec::mlp(
+        "digits",
+        digits::FEATURES,
+        &[64, 64],
+        digits::CLASSES,
+        ActSpec::tanh_d(32),
+    );
+    let mut rng = Xoshiro256::new(17);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(1000), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default())?;
+    let quant = lut.input_quant.clone();
+    let out_len = lut.out_dim();
+
+    // compile → save → load → serve, over a real socket.
+    let dir = std::env::temp_dir().join(format!("qnn_serve_tcp_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    lut.save(dir.join("digits-lut.qnn"))?;
+    let router = Router::load_dir_with(
+        &dir,
+        ServerCfg {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            max_queue: 512,
+        },
+    )?;
+    let net_server = NetServer::bind("127.0.0.1:0", router)?;
+    let addr = net_server.local_addr().to_string();
+    println!("serving digits-lut on {addr} (f32le + qidx wire encodings)");
+
+    // Input pool: a fixed set of rendered digits every client cycles
+    // through.
+    let dcfg = digits::DigitsCfg::default();
+    let (pool, _) = digits::batch(64, &dcfg, &mut rng);
+    let rows: Vec<Vec<f32>> = (0..64)
+        .map(|i| pool.data()[i * digits::FEATURES..(i + 1) * digits::FEATURES].to_vec())
+        .collect();
+
+    let mut reports = Vec::new();
+    // Closed-loop saturation sweep, both encodings.
+    for &clients in &[1usize, 4, 8] {
+        for encoding in [Dtype::F32Le, Dtype::QIdx] {
+            let r = run_load(
+                &LoadCfg {
+                    addr: addr.clone(),
+                    model: "digits-lut".into(),
+                    encoding,
+                    clients,
+                    requests_per_client: per_client,
+                    rate_rps: None,
+                },
+                &rows,
+                Some(&quant),
+            )?;
+            println!(
+                "closed {:>5} x{clients}: {:>7.0} rps  p50 {:.3} ms  p99 {:.3} ms  busy {}",
+                r.encoding, r.throughput_rps, r.p50_ms, r.p99_ms, r.busy
+            );
+            reports.push(r);
+        }
+    }
+
+    // Open loop at ~60% of the best closed-loop rate: tail latency at a
+    // realistic utilization, measured from the arrival schedule.
+    let saturation = reports
+        .iter()
+        .map(|r| r.throughput_rps)
+        .fold(0.0f64, f64::max);
+    for encoding in [Dtype::F32Le, Dtype::QIdx] {
+        let r = run_load(
+            &LoadCfg {
+                addr: addr.clone(),
+                model: "digits-lut".into(),
+                encoding,
+                clients: 4,
+                requests_per_client: per_client,
+                rate_rps: Some((saturation * 0.6).max(50.0)),
+            },
+            &rows,
+            Some(&quant),
+        )?;
+        println!(
+            "open   {:>5} @{:>6.0} rps offered: {:>7.0} rps  p50 {:.3} ms  p99 {:.3} ms",
+            r.encoding,
+            r.offered_rps.unwrap_or(0.0),
+            r.throughput_rps,
+            r.p50_ms,
+            r.p99_ms
+        );
+        reports.push(r);
+    }
+
+    let mut table = TableBuilder::new("serving over the wire").header(&[
+        "mode",
+        "encoding",
+        "clients",
+        "req B",
+        "throughput (req/s)",
+        "p50 (ms)",
+        "p95 (ms)",
+        "p99 (ms)",
+        "busy",
+    ]);
+    for r in &reports {
+        table.row(&[
+            r.mode.clone(),
+            r.encoding.clone(),
+            format!("{}", r.clients),
+            format!("{}", r.request_frame_bytes),
+            format!("{:.0}", r.throughput_rps),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p95_ms),
+            format!("{:.3}", r.p99_ms),
+            format!("{}", r.busy),
+        ]);
+    }
+    table.print();
+
+    let doc = serving_bench_doc(
+        "digits-lut",
+        digits::FEATURES,
+        out_len,
+        &reports,
+        if full {
+            "cargo run --release --example serve_tcp -- --full"
+        } else {
+            "cargo run --release --example serve_tcp"
+        },
+    );
+    let path = write_bench_file("BENCH_serving.json", &doc)?;
+    println!("wrote {}", path.display());
+
+    // The deployment headline, asserted here the same way CI gates it:
+    // the no-float encoding must be strictly smaller on the wire.
+    let f32_b = reports.iter().find(|r| r.encoding == "f32le").unwrap().request_frame_bytes;
+    let q_b = reports.iter().find(|r| r.encoding == "qidx").unwrap().request_frame_bytes;
+    assert!(
+        q_b < f32_b,
+        "qidx request frame ({q_b} B) must be smaller than f32le ({f32_b} B)"
+    );
+    println!(
+        "wire bytes per request: f32le {f32_b} B vs qidx {q_b} B \
+         ({:.2}x smaller, no floats on the wire)",
+        f32_b as f64 / q_b as f64
+    );
+
+    println!("\n{}", net_server.report());
+    net_server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

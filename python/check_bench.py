@@ -1,14 +1,21 @@
 #!/usr/bin/env python3
-"""CI gate for the LUT-engine perf trajectory (BENCH_lut_engine.json).
+"""CI gate for the machine-readable perf trajectories (BENCH_*.json).
 
-Fails (non-zero exit) if the trajectory file is missing, is not schema
-qnn.bench_lut_engine.v2, lacks conv workloads at batch 1 and 64, or any
-conv record is missing the old-path (prepatch) timing or a
-speedup-vs-naive ratio. Timings themselves are never asserted — CI
-machines are noisy; regressions should show in the trajectory, not
-flake the gate.
+Dispatches on the document's `schema` field:
 
-    python3 python/check_bench.py [path/to/BENCH_lut_engine.json]
+* ``qnn.bench_lut_engine.v2`` — the LUT-engine trajectory. Fails if conv
+  workloads at batch 1 and 64 are missing, or any conv record lacks the
+  old-path (prepatch) timing or a speedup-vs-naive ratio.
+* ``qnn.bench_serving.v1`` — the TCP serving trajectory
+  (examples/serve_tcp.rs). Fails if either wire encoding (f32le / qidx)
+  or load shape (closed / open) is missing, if any record lacks sane
+  throughput/latency fields, or — the deployment headline — if the qidx
+  wire encoding is not *strictly smaller* than f32le per request.
+
+Timings themselves are never asserted — CI machines are noisy;
+regressions should show in the trajectory, not flake the gate.
+
+    python3 python/check_bench.py [BENCH_file.json ...]
 """
 
 import json
@@ -24,14 +31,116 @@ REQUIRED_CONV_FIELDS = (
     "speedup_parallel_vs_prepatch",
 )
 
+REQUIRED_SERVING_FIELDS = (
+    "throughput_rps",
+    "p50_ms",
+    "p95_ms",
+    "p99_ms",
+    "elapsed_s",
+    "request_frame_bytes",
+    "response_frame_bytes",
+)
+
 
 def fail(msg: str) -> None:
     print(f"check_bench: FAIL: {msg}", file=sys.stderr)
     sys.exit(1)
 
 
-def main() -> None:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_lut_engine.json"
+def positive_number(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and v > 0
+
+
+def check_lut_engine(path: str, doc: dict) -> str:
+    results = doc.get("results") or []
+    if not results:
+        fail(f"{path}: no results records")
+
+    conv = [r for r in results if "conv" in r.get("topology", "").lower()]
+    if not conv:
+        fail(f"{path}: no conv workloads in the trajectory")
+    batches = {r.get("batch") for r in conv}
+    for want in (1, 64):
+        if want not in batches:
+            fail(f"{path}: conv workloads missing batch={want} (have {sorted(batches)})")
+
+    for r in conv:
+        for field in REQUIRED_CONV_FIELDS:
+            v = r.get(field)
+            if not positive_number(v):
+                fail(
+                    f"{path}: conv record {r.get('topology')!r} batch={r.get('batch')} "
+                    f"missing or non-positive {field!r} (got {v!r})"
+                )
+
+    return (
+        f"{len(results)} records, {len(conv)} conv (batches {sorted(batches)})"
+    )
+
+
+def check_serving(path: str, doc: dict) -> str:
+    wire = doc.get("wire_bytes_per_request") or {}
+    f32_bytes = wire.get("f32le")
+    qidx_bytes = wire.get("qidx")
+    if not positive_number(f32_bytes) or not positive_number(qidx_bytes):
+        fail(
+            f"{path}: wire_bytes_per_request must carry positive f32le and qidx "
+            f"sizes (got f32le={f32_bytes!r}, qidx={qidx_bytes!r})"
+        )
+    # The no-float encoding must win on the wire, strictly.
+    if not qidx_bytes < f32_bytes:
+        fail(
+            f"{path}: qidx wire encoding ({qidx_bytes} B/request) is not strictly "
+            f"smaller than f32le ({f32_bytes} B/request)"
+        )
+
+    results = doc.get("results") or []
+    if not results:
+        fail(f"{path}: no results records")
+    encodings = {r.get("encoding") for r in results}
+    for want in ("f32le", "qidx"):
+        if want not in encodings:
+            fail(f"{path}: no {want!r} runs in the trajectory (have {sorted(encodings)})")
+    modes = {r.get("mode") for r in results}
+    for want in ("closed", "open"):
+        if want not in modes:
+            fail(f"{path}: no {want}-loop runs in the trajectory (have {sorted(modes)})")
+
+    total_ok = 0
+    for r in results:
+        label = f"{r.get('mode')}/{r.get('encoding')} x{r.get('clients')}"
+        for field in REQUIRED_SERVING_FIELDS:
+            v = r.get(field)
+            if not positive_number(v):
+                fail(f"{path}: record {label} missing or non-positive {field!r} (got {v!r})")
+        if not (r["p50_ms"] <= r["p95_ms"] <= r["p99_ms"]):
+            fail(f"{path}: record {label} has non-monotone latency percentiles")
+        ok = r.get("ok")
+        if not isinstance(ok, (int, float)) or ok < 0:
+            fail(f"{path}: record {label} has bad 'ok' count {ok!r}")
+        total_ok += int(ok)
+    if total_ok <= 0:
+        fail(f"{path}: no request ever succeeded across {len(results)} runs")
+
+    sat = doc.get("saturation") or {}
+    if not positive_number(sat.get("throughput_rps")):
+        fail(f"{path}: saturation record missing or lacks a positive throughput_rps")
+
+    ratio = qidx_bytes / f32_bytes
+    return (
+        f"{len(results)} runs, qidx {qidx_bytes} B vs f32le {f32_bytes} B "
+        f"per request (ratio {ratio:.2f}), saturation "
+        f"{sat.get('throughput_rps'):.0f} rps"
+    )
+
+
+CHECKERS = {
+    "qnn.bench_lut_engine.v2": check_lut_engine,
+    "qnn.bench_serving.v1": check_serving,
+}
+
+
+def check_file(path: str) -> None:
     try:
         with open(path) as f:
             doc = json.load(f)
@@ -41,34 +150,19 @@ def main() -> None:
         fail(f"{path} is not valid JSON: {e}")
 
     schema = doc.get("schema")
-    if schema != "qnn.bench_lut_engine.v2":
-        fail(f"schema is {schema!r}, expected 'qnn.bench_lut_engine.v2'")
+    checker = CHECKERS.get(schema)
+    if checker is None:
+        fail(
+            f"{path}: schema is {schema!r}, expected one of {sorted(CHECKERS)}"
+        )
+    summary = checker(path, doc)
+    print(f"check_bench: ok — {path}: schema {schema}, {summary}")
 
-    results = doc.get("results") or []
-    if not results:
-        fail("no results records")
 
-    conv = [r for r in results if "conv" in r.get("topology", "").lower()]
-    if not conv:
-        fail("no conv workloads in the trajectory")
-    batches = {r.get("batch") for r in conv}
-    for want in (1, 64):
-        if want not in batches:
-            fail(f"conv workloads missing batch={want} (have {sorted(batches)})")
-
-    for r in conv:
-        for field in REQUIRED_CONV_FIELDS:
-            v = r.get(field)
-            if not isinstance(v, (int, float)) or v <= 0:
-                fail(
-                    f"conv record {r.get('topology')!r} batch={r.get('batch')} "
-                    f"missing or non-positive {field!r} (got {v!r})"
-                )
-
-    print(
-        f"check_bench: ok — {len(results)} records, {len(conv)} conv "
-        f"(batches {sorted(batches)}), schema {schema}"
-    )
+def main() -> None:
+    paths = sys.argv[1:] or ["BENCH_lut_engine.json"]
+    for path in paths:
+        check_file(path)
 
 
 if __name__ == "__main__":

@@ -69,6 +69,8 @@ fn main() {
         "p50 (ms)",
         "p95 (ms)",
         "p99 (ms)",
+        "queue p95 (ms)",
+        "service p95 (ms)",
     ]);
     let cfgs = [
         (1usize, 1usize, 0u64),
@@ -83,6 +85,7 @@ fn main() {
                 max_batch,
                 max_wait: Duration::from_millis(wait_ms),
                 workers: 2,
+                ..ServerCfg::default()
             },
             clients,
             per_client,
@@ -96,8 +99,12 @@ fn main() {
             format!("{:.3}", snap.p50_ms),
             format!("{:.3}", snap.p95_ms),
             format!("{:.3}", snap.p99_ms),
+            format!("{:.3}", snap.queue_p95_ms),
+            format!("{:.3}", snap.service_p95_ms),
         ]);
     }
     table.print();
     println!("shape check: batching raises throughput under concurrency at bounded latency cost.");
+    println!("(queue vs service split shows where added latency lives; see also the TCP front-end");
+    println!(" benchmark: cargo run --release --example serve_tcp)");
 }

@@ -18,6 +18,7 @@
 //! file magic so [`crate::coordinator::Router::load_dir`] can serve any
 //! mix of artifact kinds from one directory.
 
+use crate::fixedpoint::UniformQuant;
 use crate::inference::{FloatEngine, LutNetwork};
 use crate::nn::Network;
 use crate::runtime::qnn_artifact::{is_float_artifact, is_lut_artifact};
@@ -45,6 +46,38 @@ pub trait Backend: Send + Sync {
         let mut out = vec![0.0f32; batch * self.output_len()];
         self.infer_batch_into(flat, batch, &mut out);
         out
+    }
+
+    /// The uniform grid this backend quantizes its inputs on, if any —
+    /// the contract behind the `qidx` wire encoding (u8 codebook indices
+    /// instead of floats). `None` means the backend only takes raw
+    /// floats and qidx requests must be rejected at admission.
+    fn input_quant(&self) -> Option<UniformQuant> {
+        None
+    }
+
+    /// The no-float request path: `batch` rows of `input_len` u8 indices
+    /// into the grid reported by [`Self::input_quant`]. Callers must
+    /// gate on `input_quant()` being `Some` (with ≤ 256 levels) and
+    /// validate every index against it before calling — implementations
+    /// may assume both.
+    ///
+    /// The default implementation dequantizes through the grid and
+    /// reuses [`Self::infer_batch_into`]; integer backends override it
+    /// to skip float quantization entirely (see [`LutEngine`]).
+    fn infer_quantized_batch_into(&self, idx: &[u8], batch: usize, out: &mut [f32]) {
+        let q = self
+            .input_quant()
+            .expect("qidx inference on a backend with no input quantizer");
+        thread_local! {
+            static DEQ: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+        }
+        DEQ.with(|b| {
+            let flat = &mut *b.borrow_mut();
+            flat.clear();
+            flat.extend(idx.iter().map(|&i| q.value(i as usize)));
+            self.infer_batch_into(flat, batch, out);
+        })
     }
 
     /// Resident memory the model itself occupies (tables + indices for
@@ -141,6 +174,36 @@ impl Backend for LutEngine {
     fn memory_bytes(&self) -> usize {
         self.lut.memory_bytes()
     }
+    fn input_quant(&self) -> Option<UniformQuant> {
+        // qidx is a u8 wire encoding; a finer grid cannot ride on it.
+        (self.lut.input_quant.levels <= 256).then(|| self.lut.input_quant.clone())
+    }
+    /// The end-to-end no-float path: u8 wire indices widen straight into
+    /// the LUT executor — no `quantize_into`, no float input buffer.
+    fn infer_quantized_batch_into(&self, idx: &[u8], batch: usize, out: &mut [f32]) {
+        assert_eq!(idx.len(), batch * self.input_len, "input buffer size");
+        assert_eq!(out.len(), batch * self.lut.out_dim(), "output buffer size");
+        debug_assert!(
+            idx.iter().all(|&i| (i as usize) < self.lut.input_quant.levels),
+            "unvalidated quantized index reached the executor"
+        );
+        thread_local! {
+            static QBUFS: RefCell<(Vec<u16>, Vec<i64>)> =
+                RefCell::new((Vec::new(), Vec::new()));
+        }
+        QBUFS.with(|b| {
+            let (wide, sums) = &mut *b.borrow_mut();
+            wide.clear();
+            wide.extend(idx.iter().map(|&i| i as u16));
+            sums.clear();
+            sums.resize(batch * self.lut.out_dim(), 0);
+            self.lut.forward_indices_into(wide, batch, sums);
+            let inv = 1.0 / self.lut.plan.scale();
+            for (o, &s) in out.iter_mut().zip(sums.iter()) {
+                *o = (s as f64 * inv) as f32;
+            }
+        })
+    }
     fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
         // Hard asserts (not debug): an undersized `out` must never
         // silently truncate predictions in release builds.
@@ -178,6 +241,8 @@ pub struct FloatNetEngine {
     input_len: usize,
     output_len: usize,
     weight_bytes: usize,
+    /// Copy of the engine's input quantizer (lock-free `input_quant()`).
+    input_quant: Option<UniformQuant>,
     name: String,
 }
 
@@ -185,6 +250,7 @@ impl FloatNetEngine {
     pub fn new(name: &str, engine: FloatEngine, input_len: usize, output_len: usize) -> Self {
         let weight_bytes = engine.net.num_params() * std::mem::size_of::<f32>();
         let input_shape = engine.net.spec.input_shape.clone();
+        let input_quant = engine.input_quant.clone();
         debug_assert_eq!(input_shape.iter().product::<usize>(), input_len);
         Self {
             engine: Mutex::new(engine),
@@ -192,6 +258,7 @@ impl FloatNetEngine {
             input_len,
             output_len,
             weight_bytes,
+            input_quant,
             name: name.to_string(),
         }
     }
@@ -234,6 +301,9 @@ impl Backend for FloatNetEngine {
     }
     fn memory_bytes(&self) -> usize {
         self.weight_bytes
+    }
+    fn input_quant(&self) -> Option<UniformQuant> {
+        self.input_quant.clone().filter(|q| q.levels <= 256)
     }
     fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
         // Shape per the network's spec ([batch, H, W, C] for conv nets —
@@ -303,6 +373,23 @@ mod tests {
             let _ = e.infer_batch(&x[..b * 8], b);
             assert_eq!(e.infer_batch(&x, 8), first);
         }
+    }
+
+    #[test]
+    fn quantized_fast_path_matches_float_path_bit_exact() {
+        // The qidx override must land on exactly the floats the f32 path
+        // produces: both routes meet at forward_indices_into with the
+        // same indices and descale identically.
+        let (e, _) = small_lut();
+        let q = e.input_quant().expect("LUT engine exposes its input grid");
+        let mut rng = Xoshiro256::new(8);
+        let batch = 5;
+        let idx: Vec<u8> = (0..batch * 8).map(|_| rng.below(q.levels) as u8).collect();
+        let flat: Vec<f32> = idx.iter().map(|&i| q.value(i as usize)).collect();
+        let via_float = e.infer_batch(&flat, batch);
+        let mut via_idx = vec![0.0f32; batch * 3];
+        e.infer_quantized_batch_into(&idx, batch, &mut via_idx);
+        assert_eq!(via_float, via_idx);
     }
 
     #[test]

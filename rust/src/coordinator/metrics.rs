@@ -6,6 +6,19 @@
 //! reports its *current* tail behaviour at O(1) memory — the unbounded
 //! per-request vector a naive implementation accumulates would both leak
 //! and freeze the percentiles on ancient history.
+//!
+//! Two refinements for admission-control tuning:
+//!
+//! * End-to-end latency is **split** into `queue_wait` (enqueue → batch
+//!   dispatch, i.e. time spent waiting behind other requests plus the
+//!   batcher's straggler window) and `service` (batch dispatch → reply).
+//!   A saturating server shows queue growth; a slow model shows service
+//!   growth — the split says which knob to turn.
+//! * Throughput is computed over the **recent completion window** (the
+//!   span from the oldest retained completion to the snapshot instant),
+//!   not since `Metrics::new()`. A server that sat idle for an hour and
+//!   then served a burst reports the burst's rate, instead of the
+//!   near-zero lifetime average the old formula was stuck on forever.
 
 use crate::util::stats::percentile_f64;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -43,13 +56,25 @@ impl Ring {
     }
 }
 
+/// The per-request rings, guarded by one lock so a batch lands
+/// atomically across all of them.
+struct Rings {
+    /// End-to-end latency (ms): enqueue → reply.
+    e2e_ms: Ring,
+    /// Queue wait (ms): enqueue → batch dispatch.
+    queue_ms: Ring,
+    /// Service time (ms): batch dispatch → reply.
+    service_ms: Ring,
+    /// Completion times, seconds since `started` — the throughput window.
+    done_s: Ring,
+}
+
 /// Thread-safe metrics sink shared by the batcher and workers.
 pub struct Metrics {
     started: Instant,
     requests: AtomicU64,
     batches: AtomicU64,
-    /// Recent per-request end-to-end latencies (ms).
-    latencies_ms: Mutex<Ring>,
+    rings: Mutex<Rings>,
 }
 
 impl Default for Metrics {
@@ -69,41 +94,75 @@ impl Metrics {
             started: Instant::now(),
             requests: AtomicU64::new(0),
             batches: AtomicU64::new(0),
-            latencies_ms: Mutex::new(Ring::new(window)),
+            rings: Mutex::new(Rings {
+                e2e_ms: Ring::new(window),
+                queue_ms: Ring::new(window),
+                service_ms: Ring::new(window),
+                done_s: Ring::new(window),
+            }),
         }
     }
 
-    pub fn record_batch(&self, size: usize, request_latencies_ms: &[f64]) {
+    /// Record a served batch: one end-to-end latency per request, plus
+    /// the queue-wait / service split measured at batch-dispatch time
+    /// (`e2e ≈ queue + service` per request). The batch size is the
+    /// slice length; all three slices must agree.
+    pub fn record_batch(&self, e2e_ms: &[f64], queue_ms: &[f64], service_ms: &[f64]) {
+        debug_assert!(
+            e2e_ms.len() == queue_ms.len() && e2e_ms.len() == service_ms.len(),
+            "latency split slices disagree: {} e2e, {} queue, {} service",
+            e2e_ms.len(),
+            queue_ms.len(),
+            service_ms.len()
+        );
         self.batches.fetch_add(1, Ordering::Relaxed);
-        self.requests.fetch_add(size as u64, Ordering::Relaxed);
-        let mut ring = self.latencies_ms.lock().unwrap();
-        for &l in request_latencies_ms {
-            ring.push(l);
+        self.requests.fetch_add(e2e_ms.len() as u64, Ordering::Relaxed);
+        let done = self.started.elapsed().as_secs_f64();
+        let mut rings = self.rings.lock().unwrap();
+        for &l in e2e_ms {
+            rings.e2e_ms.push(l);
+            rings.done_s.push(done);
+        }
+        for &l in queue_ms {
+            rings.queue_ms.push(l);
+        }
+        for &l in service_ms {
+            rings.service_ms.push(l);
         }
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let (p50_ms, p95_ms, p99_ms, latency_samples) = {
-            let ring = self.latencies_ms.lock().unwrap();
-            let s = ring.samples();
-            (
-                percentile_f64(s, 50.0),
-                percentile_f64(s, 95.0),
-                percentile_f64(s, 99.0),
-                s.len(),
-            )
+        let now_s = self.started.elapsed().as_secs_f64();
+        let rings = self.rings.lock().unwrap();
+        let e2e = rings.e2e_ms.samples();
+        let queue = rings.queue_ms.samples();
+        let service = rings.service_ms.samples();
+        let done = rings.done_s.samples();
+        // Throughput over the retained-completion window: from the
+        // oldest completion still in the ring to now. A 1 ms floor keeps
+        // a single instantaneous sample from reading as infinite rate.
+        let (throughput_rps, window_s) = if done.is_empty() {
+            (0.0, 0.0)
+        } else {
+            let oldest = done.iter().copied().fold(f64::INFINITY, f64::min);
+            let w = (now_s - oldest).max(1e-3);
+            (done.len() as f64 / w, w)
         };
-        let elapsed = self.started.elapsed().as_secs_f64();
         let requests = self.requests.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
         MetricsSnapshot {
             requests,
             batches,
-            throughput_rps: requests as f64 / elapsed.max(1e-9),
-            p50_ms,
-            p95_ms,
-            p99_ms,
-            latency_samples,
+            throughput_rps,
+            window_s,
+            p50_ms: percentile_f64(e2e, 50.0),
+            p95_ms: percentile_f64(e2e, 95.0),
+            p99_ms: percentile_f64(e2e, 99.0),
+            queue_p50_ms: percentile_f64(queue, 50.0),
+            queue_p95_ms: percentile_f64(queue, 95.0),
+            service_p50_ms: percentile_f64(service, 50.0),
+            service_p95_ms: percentile_f64(service, 95.0),
+            latency_samples: e2e.len(),
             mean_batch: if batches == 0 {
                 0.0
             } else {
@@ -118,12 +177,24 @@ impl Metrics {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
+    /// Requests per second over the recent completion window — see
+    /// [`MetricsSnapshot::window_s`]. Decays toward zero while the
+    /// server idles instead of averaging over process lifetime.
     pub throughput_rps: f64,
-    /// Percentiles over the recent-latency ring (up to
+    /// Seconds the throughput window spans (oldest retained completion
+    /// to the snapshot instant; 0 before any traffic).
+    pub window_s: f64,
+    /// End-to-end percentiles over the recent-latency ring (up to
     /// [`LATENCY_WINDOW`] samples).
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// Queue-wait percentiles (enqueue → batch dispatch).
+    pub queue_p50_ms: f64,
+    pub queue_p95_ms: f64,
+    /// Service percentiles (batch dispatch → reply).
+    pub service_p50_ms: f64,
+    pub service_p95_ms: f64,
     /// How many ring samples the percentiles were computed over.
     pub latency_samples: usize,
     pub mean_batch: f64,
@@ -134,14 +205,21 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "requests={} batches={} mean_batch={:.1} throughput={:.0} rps \
-             latency p50={:.3}ms p95={:.3}ms p99={:.3}ms (over {} recent)",
+             (over {:.2}s) latency p50={:.3}ms p95={:.3}ms p99={:.3}ms \
+             [queue p50={:.3}ms p95={:.3}ms | service p50={:.3}ms p95={:.3}ms] \
+             (over {} recent)",
             self.requests,
             self.batches,
             self.mean_batch,
             self.throughput_rps,
+            self.window_s,
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
+            self.queue_p50_ms,
+            self.queue_p95_ms,
+            self.service_p50_ms,
+            self.service_p95_ms,
             self.latency_samples
         )
     }
@@ -154,14 +232,18 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record_batch(3, &[1.0, 2.0, 3.0]);
-        m.record_batch(1, &[10.0]);
+        m.record_batch(&[1.0, 2.0, 3.0], &[0.5, 1.5, 2.5], &[0.5, 0.5, 0.5]);
+        m.record_batch(&[10.0], &[4.0], &[6.0]);
         let s = m.snapshot();
         assert_eq!(s.requests, 4);
         assert_eq!(s.batches, 2);
         assert_eq!(s.mean_batch, 2.0);
         assert_eq!(s.latency_samples, 4);
         assert!(s.p99_ms >= s.p50_ms);
+        assert!(s.queue_p95_ms >= s.queue_p50_ms);
+        assert!(s.service_p95_ms >= s.service_p50_ms);
+        assert_eq!(s.queue_p95_ms, 4.0);
+        assert_eq!(s.service_p95_ms, 6.0);
         assert!(s.throughput_rps > 0.0);
     }
 
@@ -171,24 +253,58 @@ mod tests {
         // fast ones: the percentiles must reflect only the fast tail.
         let m = Metrics::with_window(64);
         for _ in 0..100 {
-            m.record_batch(1, &[500.0]);
+            m.record_batch(&[500.0], &[499.0], &[1.0]);
         }
         for _ in 0..64 {
-            m.record_batch(1, &[1.0]);
+            m.record_batch(&[1.0], &[0.5], &[0.5]);
         }
         let s = m.snapshot();
         assert_eq!(s.requests, 164);
         assert_eq!(s.latency_samples, 64);
         assert!(s.p99_ms <= 1.0 + 1e-9, "p99 {} still sees old samples", s.p99_ms);
+        assert!(s.queue_p95_ms <= 0.5 + 1e-9);
     }
 
     #[test]
     fn ring_counts_saturate_at_capacity() {
         let m = Metrics::with_window(8);
-        m.record_batch(20, &[2.0; 20]);
+        m.record_batch(&[2.0; 20], &[1.0; 20], &[1.0; 20]);
         let s = m.snapshot();
         assert_eq!(s.latency_samples, 8);
         assert_eq!(s.requests, 20);
         assert_eq!(s.p50_ms, 2.0);
+    }
+
+    #[test]
+    fn throughput_reflects_recent_window_not_lifetime() {
+        // The old formula divided total requests by time since
+        // Metrics::new(), so a long-idle server under-reported forever.
+        // Idle for 300 ms, then serve a fast burst: the reported rate
+        // must reflect the burst, not the idle gap.
+        let m = Metrics::new();
+        std::thread::sleep(std::time::Duration::from_millis(500));
+        for _ in 0..100 {
+            m.record_batch(&[0.1], &[0.05], &[0.05]);
+        }
+        let s = m.snapshot();
+        // Lifetime average would be <= 100 / 0.5s = 200 rps; the burst
+        // itself takes microseconds, so the windowed rate is >> that
+        // (the 800 threshold leaves >100 ms of scheduler-noise margin).
+        assert!(
+            s.throughput_rps > 800.0,
+            "windowed throughput {} rps still diluted by idle time (window {}s)",
+            s.throughput_rps,
+            s.window_s
+        );
+        assert!(s.window_s < 0.4, "window {}s includes the idle gap", s.window_s);
+    }
+
+    #[test]
+    fn empty_metrics_snapshot_is_zeroed() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.throughput_rps, 0.0);
+        assert_eq!(s.window_s, 0.0);
+        assert_eq!(s.p99_ms, 0.0);
     }
 }

@@ -1,19 +1,26 @@
 //! L3 serving coordinator: model router → dynamic batcher → worker pool
 //! → pluggable backends (integer LUT, float reference, PJRT graph), all
 //! behind the [`Backend`] trait and bootable from `.qnn` artifacts via
-//! [`Router::load_dir`].
+//! [`Router::load_dir`] — and servable over TCP through
+//! [`NetServer::bind`] with a no-float binary wire protocol
+//! ([`wire`]: length-framed, checksummed, `f32le` + `qidx` payload
+//! encodings) and bounded-queue admission control.
 
 pub mod engine;
 pub mod metrics;
+pub mod net;
 pub mod pjrt_engine;
 pub mod router;
 pub mod server;
+pub mod wire;
 
 pub use engine::{load_backend, Backend, FloatNetEngine, LutEngine};
 /// Former name of [`Backend`], kept so downstream code migrates at its
 /// own pace.
 pub use engine::Backend as Engine;
 pub use metrics::{Metrics, MetricsSnapshot, LATENCY_WINDOW};
+pub use net::{ClientError, NetCfg, NetClient, NetServer, RemoteError};
 pub use pjrt_engine::PjrtEngine;
 pub use router::Router;
-pub use server::{Server, ServerCfg, ServerHandle};
+pub use server::{InferError, Payload, Server, ServerCfg, ServerHandle};
+pub use wire::{Dtype, ErrCode};

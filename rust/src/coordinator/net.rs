@@ -1,0 +1,647 @@
+//! The TCP serving front-end: `.qnn` artifacts behind a real socket.
+//!
+//! [`NetServer::bind`] puts a [`Router`] (every model a running
+//! dynamic-batcher server) behind a length-framed binary protocol
+//! ([`crate::coordinator::wire`]). The design goals mirror the rest of
+//! the stack:
+//!
+//! * **No floats required on the wire.** Clients may ship `qidx`
+//!   payloads — u8 indices into the model's input codebook — which
+//!   enter the LUT executor directly
+//!   (`Backend::infer_quantized_batch_into`), so the entire request
+//!   path is integer end to end.
+//! * **Pipelining.** Each connection may stream many requests without
+//!   waiting; responses come back in request order, correlated by
+//!   request id. A reader thread parses and submits; a writer thread
+//!   owns the socket's write half and a reused encode buffer.
+//! * **Admission control.** Submission goes through the in-process
+//!   server's bounded queue; a full queue answers with a `Busy` error
+//!   frame immediately instead of queueing unboundedly — load sheds at
+//!   the socket, clients back off.
+//! * **Graceful drain.** [`NetServer::shutdown`] stops accepting,
+//!   half-closes every connection's read side, lets writers flush a
+//!   response (or clean error frame) for every request already read,
+//!   then drains the in-process servers. Accepted work is never
+//!   silently dropped.
+//!
+//! Steady state reuses per-connection read/write buffers; the only
+//! per-request allocations are the owned payload handed to the batcher
+//! and the response row it scatters back — the same contract as the
+//! in-process [`super::server::Server`].
+
+use super::router::Router;
+use super::server::{InferError, Payload, ServerHandle};
+use super::wire::{self, Dtype, ErrCode, Frame};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Front-end configuration.
+#[derive(Clone, Debug)]
+pub struct NetCfg {
+    /// Per-connection cap on responses in flight: a client that
+    /// pipelines deeper than this is back-pressured at the socket.
+    pub pipeline_depth: usize,
+}
+
+impl Default for NetCfg {
+    fn default() -> Self {
+        Self { pipeline_depth: 256 }
+    }
+}
+
+/// What the reader hands the writer: either a pending in-process
+/// response to await, or an immediately-encodable error.
+enum WriteItem {
+    Pending {
+        req_id: u64,
+        rx: std::sync::mpsc::Receiver<Vec<f32>>,
+    },
+    Error {
+        req_id: u64,
+        code: ErrCode,
+        msg: String,
+    },
+}
+
+fn code_for(e: &InferError) -> ErrCode {
+    match e {
+        InferError::Busy { .. } => ErrCode::Busy,
+        InferError::Shutdown | InferError::Dropped => ErrCode::Shutdown,
+        InferError::InputLen { .. }
+        | InferError::QidxUnsupported
+        | InferError::IndexOutOfRange { .. } => ErrCode::BadRequest,
+    }
+}
+
+/// A running TCP front-end. Owns the router (and so every model server)
+/// for its lifetime.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>>,
+    router: Option<Router>,
+}
+
+impl NetServer {
+    /// Bind and start serving every model the router holds.
+    pub fn bind(addr: impl ToSocketAddrs, router: Router) -> Result<NetServer> {
+        Self::bind_with(addr, router, NetCfg::default())
+    }
+
+    /// [`Self::bind`] with an explicit front-end configuration.
+    pub fn bind_with(addr: impl ToSocketAddrs, router: Router, cfg: NetCfg) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).context("binding serving socket")?;
+        // Non-blocking accept so shutdown can interrupt the loop.
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let handles = router.handles();
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let pipeline = cfg.pipeline_depth.max(1);
+
+        let stop_a = Arc::clone(&stop);
+        let conns_a = Arc::clone(&conns);
+        let accept = std::thread::Builder::new()
+            .name("qnn-accept".into())
+            .spawn(move || loop {
+                if stop_a.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Reap finished connections on every pass: joining the
+                // handle and dropping the registered stream clone closes
+                // the server-side fd promptly. Without this the registry
+                // grows (and holds fds in CLOSE_WAIT) for the lifetime
+                // of the server under connection churn.
+                {
+                    let mut conns = conns_a.lock().unwrap();
+                    let mut i = 0;
+                    while i < conns.len() {
+                        if conns[i].1.is_finished() {
+                            let (stream, h) = conns.swap_remove(i);
+                            drop(stream);
+                            let _ = h.join();
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        // Accepted sockets must block (inheritance of the
+                        // listener's non-blocking flag is
+                        // platform-dependent).
+                        let _ = stream.set_nonblocking(false);
+                        let _ = stream.set_nodelay(true);
+                        // Without a registered clone, shutdown could not
+                        // half-close this connection and would hang in
+                        // join() on an idle client — refuse the
+                        // connection instead (try_clone fails under fd
+                        // exhaustion, where shedding is right anyway).
+                        let Ok(registered) = stream.try_clone() else {
+                            continue;
+                        };
+                        // Every connection gets its own handle map clone
+                        // (cheap: names + channel senders).
+                        let handles = handles.clone();
+                        let stop_c = Arc::clone(&stop_a);
+                        let h = std::thread::Builder::new()
+                            .name("qnn-conn".into())
+                            .spawn(move || serve_conn(stream, handles, stop_c, pipeline))
+                            .expect("spawn connection thread");
+                        conns_a.lock().unwrap().push((registered, h));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                }
+            })
+            .expect("spawn accept thread");
+
+        Ok(NetServer {
+            addr,
+            stop,
+            accept: Some(accept),
+            conns,
+            router: Some(router),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Metrics/memory report for the served models.
+    pub fn report(&self) -> String {
+        self.router.as_ref().map(|r| r.report()).unwrap_or_default()
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        // Half-close every connection's read side: readers see EOF, stop
+        // admitting, and their writers flush a reply for everything
+        // already read — the graceful drain.
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for (stream, _) in &conns {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        for (_, h) in conns {
+            let _ = h.join();
+        }
+        // Connections are drained; now drain the in-process servers.
+        if let Some(router) = self.router.take() {
+            router.shutdown();
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, drain every connection (each
+    /// accepted request gets a response or a clean error frame), then
+    /// drain the model servers.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Per-connection reader loop: frame → route → submit → queue reply.
+fn serve_conn(
+    stream: TcpStream,
+    handles: BTreeMap<String, ServerHandle>,
+    stop: Arc<AtomicBool>,
+    pipeline: usize,
+) {
+    let Ok(wstream) = stream.try_clone() else {
+        return;
+    };
+    // A wedged client must not hold the drain hostage forever.
+    let _ = wstream.set_write_timeout(Some(Duration::from_secs(30)));
+    let (wtx, wrx): (SyncSender<WriteItem>, Receiver<WriteItem>) = sync_channel(pipeline);
+    let writer = std::thread::Builder::new()
+        .name("qnn-conn-write".into())
+        .spawn(move || writer_loop(wstream, wrx))
+        .expect("spawn connection writer");
+
+    let mut reader = std::io::BufReader::new(stream);
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut fbuf: Vec<f32> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match wire::read_frame(&mut reader, &mut rbuf) {
+            Ok(true) => {}
+            Ok(false) => break, // clean EOF: client done (or drain began)
+            Err(e) => {
+                // Torn framing: report it, then give up on the stream —
+                // there is no resync point. Blocking send like every
+                // other error path: the writer always drains (and bails
+                // on write timeout), so this cannot hang, and a full
+                // pipeline window must not swallow the diagnostic.
+                let _ = wtx.send(WriteItem::Error {
+                    req_id: 0,
+                    code: ErrCode::BadRequest,
+                    msg: format!("{e:#}"),
+                });
+                break;
+            }
+        }
+        let (req_id, model, dtype, payload) = match wire::parse_frame(&rbuf) {
+            Ok(Frame::Request { req_id, model, dtype, payload }) => {
+                (req_id, model, dtype, payload)
+            }
+            Ok(_) => {
+                // A client sending response/error frames is confused but
+                // the framing is intact; answer and carry on.
+                if wtx
+                    .send(WriteItem::Error {
+                        req_id: 0,
+                        code: ErrCode::BadRequest,
+                        msg: "only request frames are accepted".into(),
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+            Err(e) => {
+                // Checksum/validation failure inside a well-framed
+                // frame: report it and keep the connection.
+                if wtx
+                    .send(WriteItem::Error {
+                        req_id: 0,
+                        code: ErrCode::BadRequest,
+                        msg: format!("{e:#}"),
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+        };
+        let Some(handle) = handles.get(model) else {
+            let known: Vec<&str> = handles.keys().map(|s| s.as_str()).collect();
+            if wtx
+                .send(WriteItem::Error {
+                    req_id,
+                    code: ErrCode::NoModel,
+                    msg: format!("no model {model:?} (have {known:?})"),
+                })
+                .is_err()
+            {
+                break;
+            }
+            continue;
+        };
+        let payload = match dtype {
+            Dtype::F32Le => match wire::payload_f32s_into(payload, &mut fbuf) {
+                Ok(()) => Payload::F32(fbuf.clone()),
+                Err(e) => {
+                    if wtx
+                        .send(WriteItem::Error {
+                            req_id,
+                            code: ErrCode::BadRequest,
+                            msg: format!("{e:#}"),
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                    continue;
+                }
+            },
+            Dtype::QIdx => Payload::QIdx(payload.to_vec()),
+        };
+        let item = match handle.submit(payload) {
+            Ok(rx) => WriteItem::Pending { req_id, rx },
+            Err(e) => WriteItem::Error {
+                req_id,
+                code: code_for(&e),
+                msg: e.to_string(),
+            },
+        };
+        // sync_channel: blocks when the pipeline window is full — the
+        // socket back-pressures instead of buffering unboundedly.
+        if wtx.send(item).is_err() {
+            break;
+        }
+    }
+    // Dropping the sender lets the writer drain everything queued —
+    // every accepted request still gets its reply.
+    drop(wtx);
+    let _ = writer.join();
+}
+
+/// Connection writer: awaits each queued response in request order and
+/// encodes into one reused buffer.
+fn writer_loop(mut stream: TcpStream, rx: Receiver<WriteItem>) {
+    let mut wbuf: Vec<u8> = Vec::new();
+    while let Ok(item) = rx.recv() {
+        match item {
+            WriteItem::Pending { req_id, rx } => match rx.recv() {
+                Ok(out) => wire::encode_response_f32(&mut wbuf, req_id, &out),
+                // The server dropped the request mid-shutdown: a clean
+                // typed error, never silence.
+                Err(_) => wire::encode_error(
+                    &mut wbuf,
+                    req_id,
+                    ErrCode::Shutdown,
+                    &InferError::Dropped.to_string(),
+                ),
+            },
+            WriteItem::Error { req_id, code, msg } => {
+                wire::encode_error(&mut wbuf, req_id, code, &msg)
+            }
+        }
+        if stream.write_all(&wbuf).is_err() {
+            break; // client gone; pending receivers just drop
+        }
+    }
+    let _ = stream.flush();
+}
+
+// ---- client ----
+
+/// A typed error frame received from the server.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RemoteError {
+    pub code: ErrCode,
+    pub msg: String,
+}
+
+impl std::fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server error [{}]: {}", self.code.name(), self.msg)
+    }
+}
+
+impl std::error::Error for RemoteError {}
+
+/// Client-side failure modes — `Remote(Busy)` is the one load
+/// generators branch on.
+#[derive(Debug)]
+pub enum ClientError {
+    Io(std::io::Error),
+    /// Framing/parse failure: the connection is unusable.
+    Protocol(String),
+    /// The server answered with a typed error frame.
+    Remote(RemoteError),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io error: {e}"),
+            ClientError::Protocol(m) => write!(f, "protocol error: {m}"),
+            ClientError::Remote(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// Blocking wire-protocol client with reused frame buffers. Supports
+/// pipelining via the split `send_*` / `recv_response` API (responses
+/// arrive in request order); `infer_*` are the one-shot conveniences.
+pub struct NetClient {
+    reader: std::io::BufReader<TcpStream>,
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    next_id: u64,
+}
+
+impl NetClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        Ok(NetClient {
+            reader,
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            next_id: 1,
+        })
+    }
+
+    /// Send an `f32le` request; returns its request id.
+    pub fn send_f32(&mut self, model: &str, input: &[f32]) -> Result<u64, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::encode_request_f32(&mut self.wbuf, id, model, input);
+        self.stream.write_all(&self.wbuf)?;
+        Ok(id)
+    }
+
+    /// Send a `qidx` request (u8 input-codebook indices); returns its
+    /// request id.
+    pub fn send_qidx(&mut self, model: &str, idx: &[u8]) -> Result<u64, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::encode_request_qidx(&mut self.wbuf, id, model, idx);
+        self.stream.write_all(&self.wbuf)?;
+        Ok(id)
+    }
+
+    /// Receive the next response frame (in request order): the request
+    /// id it answers plus the outputs or the server's typed error.
+    pub fn recv_response(&mut self) -> Result<(u64, Result<Vec<f32>, RemoteError>), ClientError> {
+        let proto = |e: anyhow::Error| ClientError::Protocol(format!("{e:#}"));
+        if !wire::read_frame(&mut self.reader, &mut self.rbuf).map_err(proto)? {
+            return Err(ClientError::Protocol(
+                "connection closed before response".into(),
+            ));
+        }
+        match wire::parse_frame(&self.rbuf).map_err(proto)? {
+            Frame::Response { req_id, payload } => {
+                let mut out = Vec::new();
+                wire::payload_f32s_into(payload, &mut out).map_err(proto)?;
+                Ok((req_id, Ok(out)))
+            }
+            Frame::Error { req_id, code, msg } => Ok((
+                req_id,
+                Err(RemoteError {
+                    code,
+                    msg: msg.to_string(),
+                }),
+            )),
+            Frame::Request { .. } => Err(ClientError::Protocol(
+                "server sent a request frame".into(),
+            )),
+        }
+    }
+
+    fn finish(&mut self, id: u64) -> Result<Vec<f32>, ClientError> {
+        let (rid, res) = self.recv_response()?;
+        if rid != id && rid != 0 {
+            return Err(ClientError::Protocol(format!(
+                "response id {rid} != request id {id}"
+            )));
+        }
+        res.map_err(ClientError::Remote)
+    }
+
+    /// One-shot inference on raw floats.
+    pub fn infer_f32(&mut self, model: &str, input: &[f32]) -> Result<Vec<f32>, ClientError> {
+        let id = self.send_f32(model, input)?;
+        self.finish(id)
+    }
+
+    /// One-shot inference on u8 input-codebook indices — the request
+    /// never contains a float.
+    pub fn infer_qidx(&mut self, model: &str, idx: &[u8]) -> Result<Vec<f32>, ClientError> {
+        let id = self.send_qidx(model, idx)?;
+        self.finish(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Backend;
+    use crate::coordinator::server::{Server, ServerCfg};
+    use crate::fixedpoint::UniformQuant;
+
+    /// output = [sum(input)]; quantizer is the 0..=15 unit grid.
+    struct SumEngine;
+    impl Backend for SumEngine {
+        fn name(&self) -> &str {
+            "sum"
+        }
+        fn input_len(&self) -> usize {
+            4
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+        fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+            for i in 0..batch {
+                out[i] = flat[i * 4..(i + 1) * 4].iter().sum();
+            }
+        }
+        fn input_quant(&self) -> Option<UniformQuant> {
+            Some(UniformQuant::unit(16))
+        }
+    }
+
+    fn boot() -> NetServer {
+        let mut router = Router::new();
+        router.register(
+            "sum",
+            Server::start(Arc::new(SumEngine), ServerCfg::default()),
+        );
+        NetServer::bind("127.0.0.1:0", router).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_both_encodings_over_tcp() {
+        let net = boot();
+        let mut c = NetClient::connect(net.local_addr()).unwrap();
+        let out = c.infer_f32("sum", &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(out, vec![10.0]);
+        // qidx [15, 0, 0, 0] on the unit grid = [1.0, 0, 0, 0].
+        let out = c.infer_qidx("sum", &[15, 0, 0, 0]).unwrap();
+        assert_eq!(out, vec![1.0]);
+        net.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_answer_in_order() {
+        let net = boot();
+        let mut c = NetClient::connect(net.local_addr()).unwrap();
+        let mut ids = Vec::new();
+        for i in 0..10 {
+            ids.push(c.send_f32("sum", &[i as f32, 0.0, 0.0, 0.0]).unwrap());
+        }
+        for (k, id) in ids.into_iter().enumerate() {
+            let (rid, res) = c.recv_response().unwrap();
+            assert_eq!(rid, id);
+            assert_eq!(res.unwrap(), vec![k as f32]);
+        }
+        net.shutdown();
+    }
+
+    #[test]
+    fn typed_error_frames() {
+        let net = boot();
+        let mut c = NetClient::connect(net.local_addr()).unwrap();
+        // Unknown model.
+        match c.infer_f32("nope", &[0.0; 4]) {
+            Err(ClientError::Remote(e)) => {
+                assert_eq!(e.code, ErrCode::NoModel);
+                assert!(e.msg.contains("nope"), "{}", e.msg);
+            }
+            other => panic!("expected NoModel, got {other:?}"),
+        }
+        // Wrong input length — connection stays usable afterwards.
+        match c.infer_f32("sum", &[0.0; 3]) {
+            Err(ClientError::Remote(e)) => assert_eq!(e.code, ErrCode::BadRequest),
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        // qidx index outside the 16-level codebook.
+        match c.infer_qidx("sum", &[0, 1, 2, 200]) {
+            Err(ClientError::Remote(e)) => {
+                assert_eq!(e.code, ErrCode::BadRequest);
+                assert!(e.msg.contains("out of range"), "{}", e.msg);
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        // Still serving.
+        assert_eq!(c.infer_f32("sum", &[1.0, 1.0, 1.0, 1.0]).unwrap(), vec![4.0]);
+        net.shutdown();
+    }
+
+    #[test]
+    fn corrupt_frame_gets_descriptive_error() {
+        let net = boot();
+        let addr = net.local_addr();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut buf = Vec::new();
+        wire::encode_request_f32(&mut buf, 1, "sum", &[0.0; 4]);
+        let mid = buf.len() - 10;
+        buf[mid] ^= 0xff; // corrupt inside the body; framing stays intact
+        stream.write_all(&buf).unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let mut rbuf = Vec::new();
+        assert!(wire::read_frame(&mut reader, &mut rbuf).unwrap());
+        match wire::parse_frame(&rbuf).unwrap() {
+            Frame::Error { code, msg, .. } => {
+                assert_eq!(code, ErrCode::BadRequest);
+                assert!(msg.contains("checksum"), "{msg}");
+            }
+            f => panic!("expected error frame, got {f:?}"),
+        }
+        net.shutdown();
+    }
+}

@@ -74,9 +74,19 @@ impl Router {
             .ok_or_else(|| anyhow::anyhow!("no model {name:?} (have {:?})", self.models()))
     }
 
+    /// Submission handles for every served model (cheap clones) — the
+    /// routing table the TCP front-end hands each connection, so the
+    /// per-request path never touches the router itself.
+    pub fn handles(&self) -> BTreeMap<String, ServerHandle> {
+        self.servers
+            .iter()
+            .map(|(name, s)| (name.clone(), s.handle()))
+            .collect()
+    }
+
     /// Blocking inference through a named model.
     pub fn infer(&self, name: &str, input: Vec<f32>) -> Result<Vec<f32>> {
-        self.handle(name)?.infer(input)
+        Ok(self.handle(name)?.infer(input)?)
     }
 
     /// Model-memory footprint in bytes, per model name.

@@ -7,12 +7,31 @@
 //! deployment story the paper motivates: the quantized model behind a
 //! real request path with no Python and no floats in the inference hot
 //! loop.
+//!
+//! Two production properties on top of the basic loop:
+//!
+//! * **Admission control.** The queue is bounded (`ServerCfg::max_queue`
+//!   outstanding requests); past the bound, [`ServerHandle::infer`]
+//!   returns a typed [`InferError::Busy`] immediately instead of letting
+//!   the channel grow without limit. Callers (and the TCP front-end in
+//!   [`crate::coordinator::net`]) surface the rejection so load sheds at
+//!   the edge rather than as unbounded latency.
+//! * **Graceful drain.** [`Server::shutdown`] stops admitting, then the
+//!   collector drains every request already accepted and waits for the
+//!   workers — every accepted request gets a response, and every
+//!   rejected one a typed error; nothing hangs.
+//!
+//! Requests carry either raw floats or — the paper-faithful wire path —
+//! the model's own u8 input-codebook indices ([`Payload::QIdx`]), which
+//! skip float quantization entirely via
+//! [`Backend::infer_quantized_batch_into`].
 
 use super::engine::Backend;
 use super::metrics::Metrics;
+use crate::fixedpoint::UniformQuant;
 use crate::util::threadpool::ThreadPool;
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -23,6 +42,10 @@ pub struct ServerCfg {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub workers: usize,
+    /// Admission-control bound: the maximum number of accepted requests
+    /// that may be outstanding (queued or in service) at once. Further
+    /// submissions fail fast with [`InferError::Busy`].
+    pub max_queue: usize,
 }
 
 impl Default for ServerCfg {
@@ -31,12 +54,75 @@ impl Default for ServerCfg {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
             workers: 2,
+            max_queue: 1024,
         }
     }
 }
 
+/// A request body: raw floats, or u8 indices into the model's input
+/// codebook (the no-float wire encoding — one byte per feature).
+#[derive(Clone, Debug)]
+pub enum Payload {
+    F32(Vec<f32>),
+    QIdx(Vec<u8>),
+}
+
+impl Payload {
+    /// Number of input features the payload carries.
+    pub fn features(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::QIdx(v) => v.len(),
+        }
+    }
+}
+
+/// Typed serving errors — admission control and lifecycle outcomes a
+/// caller may want to branch on (`Busy` → back off / shed, `Shutdown` →
+/// reconnect elsewhere).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum InferError {
+    /// The bounded queue is full; the request was rejected at admission.
+    Busy { queued: usize, max_queue: usize },
+    /// The server is shutting down (or already gone) and admits nothing.
+    Shutdown,
+    /// The request was accepted but the server dropped it before
+    /// replying (shutdown race) — safe to retry elsewhere.
+    Dropped,
+    /// Input length does not match the model.
+    InputLen { got: usize, want: usize },
+    /// A quantized-index request was sent to a backend with no input
+    /// quantizer (or one whose codebook exceeds the u8 wire range).
+    QidxUnsupported,
+    /// A quantized index is outside the model's input codebook.
+    IndexOutOfRange { index: u8, levels: usize },
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::Busy { queued, max_queue } => {
+                write!(f, "server busy: {queued} requests outstanding (max {max_queue})")
+            }
+            InferError::Shutdown => write!(f, "server shut down"),
+            InferError::Dropped => write!(f, "server dropped request during shutdown"),
+            InferError::InputLen { got, want } => {
+                write!(f, "input length {got} != expected {want}")
+            }
+            InferError::QidxUnsupported => {
+                write!(f, "backend does not accept quantized-index (qidx) inputs")
+            }
+            InferError::IndexOutOfRange { index, levels } => {
+                write!(f, "quantized index {index} out of range (codebook has {levels} levels)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
 struct Request {
-    input: Vec<f32>,
+    payload: Payload,
     enqueued: Instant,
     resp: mpsc::Sender<Vec<f32>>,
 }
@@ -45,28 +131,125 @@ struct Request {
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: mpsc::Sender<Request>,
+    depth: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+    max_queue: usize,
     input_len: usize,
+    output_len: usize,
+    input_quant: Option<UniformQuant>,
 }
 
 impl ServerHandle {
-    /// Blocking inference call.
-    pub fn infer(&self, input: Vec<f32>) -> anyhow::Result<Vec<f32>> {
-        anyhow::ensure!(
-            input.len() == self.input_len,
-            "input length {} != expected {}",
-            input.len(),
-            self.input_len
-        );
-        let (rtx, rrx) = mpsc::channel();
-        self.tx
-            .send(Request {
-                input,
-                enqueued: Instant::now(),
-                resp: rtx,
-            })
-            .map_err(|_| anyhow::anyhow!("server shut down"))?;
-        rrx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+    pub fn input_len(&self) -> usize {
+        self.input_len
     }
+
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    /// The input-quantization grid backing the qidx encoding, if the
+    /// served backend has one representable on the u8 wire.
+    pub fn input_quant(&self) -> Option<&UniformQuant> {
+        self.input_quant.as_ref()
+    }
+
+    fn validate(&self, payload: &Payload) -> Result<(), InferError> {
+        let got = payload.features();
+        if got != self.input_len {
+            return Err(InferError::InputLen { got, want: self.input_len });
+        }
+        if let Payload::QIdx(idx) = payload {
+            let q = self.input_quant.as_ref().ok_or(InferError::QidxUnsupported)?;
+            if let Some(&bad) = idx.iter().find(|&&i| i as usize >= q.levels) {
+                return Err(InferError::IndexOutOfRange { index: bad, levels: q.levels });
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-blocking submission with admission control: validates the
+    /// payload, reserves a queue slot (or fails fast with
+    /// [`InferError::Busy`]), and returns the channel the response will
+    /// arrive on. The TCP front-end pipelines through this.
+    pub fn submit(&self, payload: Payload) -> Result<mpsc::Receiver<Vec<f32>>, InferError> {
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Err(InferError::Shutdown);
+        }
+        self.validate(&payload)?;
+        // Reserve a slot: CAS loop so concurrent submitters never
+        // overshoot the bound.
+        let mut cur = self.depth.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_queue {
+                return Err(InferError::Busy { queued: cur, max_queue: self.max_queue });
+            }
+            match self.depth.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            payload,
+            enqueued: Instant::now(),
+            resp: rtx,
+        };
+        if self.tx.send(req).is_err() {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            return Err(InferError::Shutdown);
+        }
+        Ok(rrx)
+    }
+
+    /// Blocking inference call on raw floats.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>, InferError> {
+        let rx = self.submit(Payload::F32(input))?;
+        rx.recv().map_err(|_| InferError::Dropped)
+    }
+
+    /// Blocking inference call on u8 input-codebook indices — the
+    /// no-float request path (see [`Backend::infer_quantized_batch_into`]).
+    pub fn infer_quantized(&self, idx: Vec<u8>) -> Result<Vec<f32>, InferError> {
+        let rx = self.submit(Payload::QIdx(idx))?;
+        rx.recv().map_err(|_| InferError::Dropped)
+    }
+}
+
+/// Returns a batch's admission slots on drop — including during unwind,
+/// so a panicking backend cannot permanently leak queue capacity and
+/// wedge the server into answering `Busy` forever.
+struct SlotGuard {
+    depth: Arc<AtomicUsize>,
+    n: usize,
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.depth.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
+
+/// Per-worker-thread scratch, reused across every batch a thread serves:
+/// the steady-state path runs the backend through `infer_batch_into` /
+/// `infer_quantized_batch_into` with no buffer allocation.
+#[derive(Default)]
+struct WorkerScratch {
+    flat: Vec<f32>,
+    qidx: Vec<u8>,
+    out: Vec<f32>,
+    /// Sub-batch output staging when a batch mixes payload encodings.
+    part: Vec<f32>,
+    rows_f: Vec<usize>,
+    rows_q: Vec<usize>,
+    e2e: Vec<f64>,
+    queue: Vec<f64>,
+    service: Vec<f64>,
 }
 
 /// A running server instance.
@@ -86,11 +269,16 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
+        let depth = Arc::new(AtomicUsize::new(0));
         let input_len = engine.input_len();
+        let output_len = engine.output_len();
         let engine_name = engine.name().to_string();
+        // qidx is a u8 wire encoding: only expose quantizers it can span.
+        let input_quant = engine.input_quant().filter(|q| q.levels <= 256);
 
         let m = Arc::clone(&metrics);
         let stop = Arc::clone(&shutdown);
+        let d = Arc::clone(&depth);
         let max_batch = cfg.max_batch.min(engine.max_batch()).max(1);
         let max_wait = cfg.max_wait;
         let workers = ThreadPool::new(cfg.workers.max(1));
@@ -101,6 +289,114 @@ impl Server {
             .name("qnn-batcher".into())
             .spawn(move || {
                 let rx = rx.lock().unwrap();
+                // Hand one batch to the worker pool (used by both the
+                // live loop and the shutdown drain below).
+                let dispatch = |batch: Vec<Request>| {
+                    let engine = Arc::clone(&engine);
+                    let metrics = Arc::clone(&m);
+                    let depth = Arc::clone(&d);
+                    let dispatched = Instant::now();
+                    workers.execute(move || {
+                        thread_local! {
+                            static BUFS: RefCell<WorkerScratch> =
+                                RefCell::new(WorkerScratch::default());
+                        }
+                        let n = batch.len();
+                        // Slots return when this guard drops — after the
+                        // replies below in the normal case, and during
+                        // unwind if the backend panics, so `max_queue`
+                        // capacity is never leaked.
+                        let _slots = SlotGuard { depth, n };
+                        let out_len = engine.output_len();
+                        BUFS.with(|b| {
+                            let s = &mut *b.borrow_mut();
+                            // Partition by payload encoding (stable):
+                            // each encoding runs as one batched call,
+                            // so a mixed batch costs at most two engine
+                            // entries, never per-row dispatch.
+                            s.rows_f.clear();
+                            s.rows_q.clear();
+                            for (i, r) in batch.iter().enumerate() {
+                                match r.payload {
+                                    Payload::F32(_) => s.rows_f.push(i),
+                                    Payload::QIdx(_) => s.rows_q.push(i),
+                                }
+                            }
+                            s.out.clear();
+                            s.out.resize(n * out_len, 0.0);
+                            if !s.rows_f.is_empty() {
+                                s.flat.clear();
+                                for &i in &s.rows_f {
+                                    if let Payload::F32(v) = &batch[i].payload {
+                                        s.flat.extend_from_slice(v);
+                                    }
+                                }
+                                if s.rows_f.len() == n {
+                                    engine.infer_batch_into(&s.flat, n, &mut s.out);
+                                } else {
+                                    s.part.clear();
+                                    s.part.resize(s.rows_f.len() * out_len, 0.0);
+                                    engine.infer_batch_into(&s.flat, s.rows_f.len(), &mut s.part);
+                                    for (k, &i) in s.rows_f.iter().enumerate() {
+                                        s.out[i * out_len..(i + 1) * out_len]
+                                            .copy_from_slice(
+                                                &s.part[k * out_len..(k + 1) * out_len],
+                                            );
+                                    }
+                                }
+                            }
+                            if !s.rows_q.is_empty() {
+                                s.qidx.clear();
+                                for &i in &s.rows_q {
+                                    if let Payload::QIdx(v) = &batch[i].payload {
+                                        s.qidx.extend_from_slice(v);
+                                    }
+                                }
+                                if s.rows_q.len() == n {
+                                    engine.infer_quantized_batch_into(&s.qidx, n, &mut s.out);
+                                } else {
+                                    s.part.clear();
+                                    s.part.resize(s.rows_q.len() * out_len, 0.0);
+                                    engine.infer_quantized_batch_into(
+                                        &s.qidx,
+                                        s.rows_q.len(),
+                                        &mut s.part,
+                                    );
+                                    for (k, &i) in s.rows_q.iter().enumerate() {
+                                        s.out[i * out_len..(i + 1) * out_len]
+                                            .copy_from_slice(
+                                                &s.part[k * out_len..(k + 1) * out_len],
+                                            );
+                                    }
+                                }
+                            }
+                            // Record metrics BEFORE replying so a client
+                            // that reads the snapshot right after its
+                            // response sees its own request counted.
+                            let service_ms = dispatched.elapsed().as_secs_f64() * 1e3;
+                            s.e2e.clear();
+                            s.queue.clear();
+                            s.service.clear();
+                            for r in &batch {
+                                s.queue.push(
+                                    dispatched
+                                        .saturating_duration_since(r.enqueued)
+                                        .as_secs_f64()
+                                        * 1e3,
+                                );
+                                s.e2e.push(r.enqueued.elapsed().as_secs_f64() * 1e3);
+                                s.service.push(service_ms);
+                            }
+                            metrics.record_batch(&s.e2e, &s.queue, &s.service);
+                            for (i, r) in batch.into_iter().enumerate() {
+                                // Receiver may have given up; ignore errors.
+                                let _ =
+                                    r.resp.send(s.out[i * out_len..(i + 1) * out_len].to_vec());
+                            }
+                        });
+                    });
+                };
+
                 loop {
                     // Block for the first request (with periodic shutdown
                     // checks).
@@ -131,55 +427,40 @@ impl Server {
                             Err(_) => break,
                         }
                     }
+                    dispatch(batch);
+                }
 
-                    // Dispatch to the worker pool.
-                    let engine = Arc::clone(&engine);
-                    let metrics = Arc::clone(&m);
-                    workers.execute(move || {
-                        // Per-worker-thread buffers, reused across every
-                        // batch this thread serves: the steady-state path
-                        // runs the backend through `infer_batch_into` with
-                        // no input/output buffer allocation. (The lats
-                        // scratch rides along for the same reason.)
-                        thread_local! {
-                            static BUFS: RefCell<(Vec<f32>, Vec<f32>, Vec<f64>)> =
-                                RefCell::new((Vec::new(), Vec::new(), Vec::new()));
+                // Graceful drain: handles stopped admitting the moment
+                // the shutdown flag went up, but requests accepted
+                // before that may still sit in the channel — serve them
+                // all so no accepted caller is left hanging.
+                loop {
+                    let mut batch = Vec::new();
+                    while batch.len() < max_batch {
+                        match rx.try_recv() {
+                            Ok(r) => batch.push(r),
+                            Err(_) => break,
                         }
-                        let n = batch.len();
-                        let out_len = engine.output_len();
-                        BUFS.with(|b| {
-                            let (flat, out, lats) = &mut *b.borrow_mut();
-                            flat.clear();
-                            for r in &batch {
-                                flat.extend_from_slice(&r.input);
-                            }
-                            out.clear();
-                            out.resize(n * out_len, 0.0);
-                            engine.infer_batch_into(flat, n, out);
-                            // Record metrics BEFORE replying so a client
-                            // that reads the snapshot right after its
-                            // response sees its own request counted.
-                            lats.clear();
-                            lats.extend(
-                                batch
-                                    .iter()
-                                    .map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3),
-                            );
-                            metrics.record_batch(n, lats);
-                            for (i, r) in batch.into_iter().enumerate() {
-                                // Receiver may have given up; ignore errors.
-                                let _ =
-                                    r.resp.send(out[i * out_len..(i + 1) * out_len].to_vec());
-                            }
-                        });
-                    });
+                    }
+                    if batch.is_empty() {
+                        break;
+                    }
+                    dispatch(batch);
                 }
                 workers.wait_idle();
             })
             .expect("spawn batcher");
 
         Server {
-            handle: ServerHandle { tx, input_len },
+            handle: ServerHandle {
+                tx,
+                depth,
+                shutdown: Arc::clone(&shutdown),
+                max_queue: cfg.max_queue.max(1),
+                input_len,
+                output_len,
+                input_quant,
+            },
             metrics,
             shutdown,
             collector: Some(collector),
@@ -192,7 +473,7 @@ impl Server {
         self.handle.clone()
     }
 
-    /// Graceful shutdown: drains the queue, then joins.
+    /// Graceful shutdown: stops admitting, drains the queue, then joins.
     pub fn shutdown(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         if let Some(c) = self.collector.take() {
@@ -234,6 +515,31 @@ mod tests {
                 out[i] = flat[i * 4..(i + 1) * 4].iter().sum();
             }
         }
+        fn input_quant(&self) -> Option<UniformQuant> {
+            // 0..=15 on a unit grid: index i has value i/15.
+            Some(UniformQuant::unit(16))
+        }
+    }
+
+    /// Engine that sleeps per batch — for queue-pressure tests.
+    struct SlowEngine(Duration);
+    impl Backend for SlowEngine {
+        fn name(&self) -> &str {
+            "slow"
+        }
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+        fn infer_batch_into(&self, _flat: &[f32], batch: usize, out: &mut [f32]) {
+            std::thread::sleep(self.0);
+            out[..batch].fill(1.0);
+        }
     }
 
     #[test]
@@ -258,6 +564,7 @@ mod tests {
                 max_batch: 16,
                 max_wait: Duration::from_millis(10),
                 workers: 2,
+                ..ServerCfg::default()
             },
         );
         let h = server.handle();
@@ -277,13 +584,133 @@ mod tests {
         assert_eq!(snap.requests, 64);
         // Concurrency should have produced some multi-request batches.
         assert!(snap.mean_batch > 1.01, "mean batch {}", snap.mean_batch);
+        // The latency split is populated and consistent with e2e.
+        assert!(snap.service_p95_ms > 0.0);
+        assert!(snap.p95_ms + 1e-9 >= snap.queue_p50_ms);
         server.shutdown();
     }
 
     #[test]
     fn rejects_wrong_input_len() {
         let server = Server::start(Arc::new(SumEngine), ServerCfg::default());
-        assert!(server.handle().infer(vec![1.0]).is_err());
+        assert_eq!(
+            server.handle().infer(vec![1.0]),
+            Err(InferError::InputLen { got: 1, want: 4 })
+        );
         server.shutdown();
+    }
+
+    #[test]
+    fn qidx_requests_match_float_requests() {
+        // SumEngine's quantizer is the unit grid with 16 levels, so a
+        // qidx payload [i, ...] must produce exactly the same answer as
+        // the corresponding float payload [i/15.0, ...] (the default
+        // Backend impl dequantizes through the same grid).
+        let server = Server::start(Arc::new(SumEngine), ServerCfg::default());
+        let h = server.handle();
+        let q = h.input_quant().unwrap().clone();
+        for trial in 0..8u8 {
+            let idx = vec![trial, 15 - trial, 3, 9];
+            let floats: Vec<f32> = idx.iter().map(|&i| q.value(i as usize)).collect();
+            let a = h.infer_quantized(idx).unwrap();
+            let b = h.infer(floats).unwrap();
+            assert_eq!(a, b, "trial {trial}");
+        }
+        // Out-of-range index is rejected at admission with a typed error.
+        assert_eq!(
+            h.infer_quantized(vec![0, 1, 2, 16]),
+            Err(InferError::IndexOutOfRange { index: 16, levels: 16 })
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn busy_when_bounded_queue_is_full() {
+        let server = Server::start(
+            Arc::new(SlowEngine(Duration::from_millis(40))),
+            ServerCfg {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                workers: 1,
+                max_queue: 2,
+            },
+        );
+        let h = server.handle();
+        // Fire 12 concurrent requests at a server that admits 2 at a
+        // time and needs 40 ms each: some must be shed with Busy.
+        let mut joins = Vec::new();
+        for _ in 0..12 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || h.infer(vec![0.0, 0.0])));
+        }
+        let mut ok = 0;
+        let mut busy = 0;
+        for j in joins {
+            match j.join().unwrap() {
+                Ok(out) => {
+                    assert_eq!(out, vec![1.0]);
+                    ok += 1;
+                }
+                Err(InferError::Busy { max_queue, .. }) => {
+                    assert_eq!(max_queue, 2);
+                    busy += 1;
+                }
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        assert!(ok >= 1, "no request admitted");
+        assert!(busy >= 1, "queue bound never triggered (ok={ok})");
+        assert_eq!(ok + busy, 12);
+        // Once the admitted work completes, capacity is available again.
+        assert_eq!(h.infer(vec![0.0, 0.0]).unwrap(), vec![1.0]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_under_load_drains_every_accepted_request() {
+        // Every accepted request must resolve — a response or a typed
+        // error, never a hang — even when shutdown lands mid-flood.
+        let server = Server::start(
+            Arc::new(SlowEngine(Duration::from_millis(5))),
+            ServerCfg {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                workers: 2,
+                max_queue: 256,
+            },
+        );
+        let h = server.handle();
+        let (done_tx, done_rx) = mpsc::channel();
+        let mut joins = Vec::new();
+        for c in 0..16 {
+            let h = h.clone();
+            let done = done_tx.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..8 {
+                    match h.infer(vec![c as f32, 0.0]) {
+                        Ok(out) => assert_eq!(out, vec![1.0]),
+                        // Rejected or raced with shutdown — all clean.
+                        Err(InferError::Busy { .. })
+                        | Err(InferError::Shutdown)
+                        | Err(InferError::Dropped) => {}
+                        Err(e) => panic!("unexpected error {e}"),
+                    }
+                }
+                done.send(()).unwrap();
+            }));
+        }
+        drop(done_tx);
+        // Let the flood build up, then pull the plug under load.
+        std::thread::sleep(Duration::from_millis(15));
+        server.shutdown();
+        // Every client must finish promptly; a hang here times out.
+        for _ in 0..16 {
+            done_rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("a client hung across shutdown");
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
     }
 }

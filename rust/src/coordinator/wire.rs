@@ -1,0 +1,674 @@
+//! The qnn wire protocol: a compact, versioned, length-framed binary
+//! format for inference requests over a byte stream — **no floats
+//! required on the wire**.
+//!
+//! # Frame layout
+//!
+//! ```text
+//! magic    4 bytes  b"QWF1" (protocol major version rides in the magic)
+//! len      u32 LE   bytes after this field (kind .. checksum inclusive)
+//! kind     u8       0 = request, 1 = response, 2 = error
+//! req id   u64 LE   caller-chosen correlation id, echoed in the reply
+//! ...kind-specific body (below)...
+//! checksum u64 LE   FNV-1a over magic .. end of body
+//! ```
+//!
+//! Kind-specific bodies:
+//!
+//! ```text
+//! request   name_len u8 · model name (UTF-8) · dtype u8 · payload_len u32 · payload
+//! response  dtype u8 (always 0 = f32le) · payload_len u32 · payload
+//! error     code u8 · msg_len u16 · message (UTF-8)
+//! ```
+//!
+//! Two request payload encodings ([`Dtype`]):
+//!
+//! * `f32le` (tag 0) — raw little-endian f32 features, 4 bytes each;
+//! * `qidx` (tag 1) — **u8 indices into the model's input codebook**,
+//!   1 byte per feature. This is the paper-faithful deployment path: a
+//!   client that quantizes at the sensor ships 4× fewer payload bytes
+//!   and the server enters the LUT executor without ever constructing a
+//!   float (`Backend::infer_quantized_batch_into`).
+//!
+//! Responses carry f32le outputs (logits); errors carry a typed
+//! [`ErrCode`] — notably `Busy`, the admission-control rejection — plus
+//! a descriptive message. Like the `.qnn` artifact format, every frame
+//! is checksummed and every parse failure is a descriptive `Err`, never
+//! a panic: truncation and corruption are tested the same way
+//! (`runtime/qnn_artifact.rs` is the sibling format).
+//!
+//! # Version policy
+//!
+//! The magic pins the frame layout; an incompatible revision bumps the
+//! magic (`QWF2`) so old peers fail loudly at the first frame. Unknown
+//! kind/dtype/code tags inside a valid frame are parse errors.
+
+use crate::util::fnv::fnv1a;
+use anyhow::{bail, Context, Result};
+
+/// Frame magic for wire protocol version 1.
+pub const WIRE_MAGIC: &[u8; 4] = b"QWF1";
+/// Hard cap on a frame's `len` field: corrupt or hostile lengths must
+/// not drive allocation (64 MiB is far beyond any real model's I/O).
+pub const MAX_FRAME_LEN: usize = 1 << 26;
+/// Bytes before the `len` field (magic) plus the field itself.
+const HEADER_LEN: usize = 8;
+/// Smallest legal `len`: kind + req id + checksum.
+const MIN_BODY_LEN: usize = 1 + 8 + 8;
+
+/// Request payload encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// Raw little-endian f32 features (4 bytes each).
+    F32Le,
+    /// u8 input-codebook indices (1 byte each) — the no-float path.
+    QIdx,
+}
+
+impl Dtype {
+    pub fn tag(self) -> u8 {
+        match self {
+            Dtype::F32Le => 0,
+            Dtype::QIdx => 1,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<Dtype> {
+        match tag {
+            0 => Ok(Dtype::F32Le),
+            1 => Ok(Dtype::QIdx),
+            t => bail!("unknown payload dtype tag {t}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32Le => "f32le",
+            Dtype::QIdx => "qidx",
+        }
+    }
+
+    /// Wire bytes per feature in this encoding.
+    pub fn bytes_per_feature(self) -> usize {
+        match self {
+            Dtype::F32Le => 4,
+            Dtype::QIdx => 1,
+        }
+    }
+}
+
+/// Typed error frame codes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Admission control: the model's bounded queue is full; back off.
+    Busy,
+    /// No model with the requested name is being served.
+    NoModel,
+    /// Malformed request (bad frame, wrong length, bad index, ...).
+    BadRequest,
+    /// The server is draining; reconnect elsewhere.
+    Shutdown,
+    /// The server failed internally after accepting the request.
+    Internal,
+}
+
+impl ErrCode {
+    pub fn tag(self) -> u8 {
+        match self {
+            ErrCode::Busy => 1,
+            ErrCode::NoModel => 2,
+            ErrCode::BadRequest => 3,
+            ErrCode::Shutdown => 4,
+            ErrCode::Internal => 5,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<ErrCode> {
+        match tag {
+            1 => Ok(ErrCode::Busy),
+            2 => Ok(ErrCode::NoModel),
+            3 => Ok(ErrCode::BadRequest),
+            4 => Ok(ErrCode::Shutdown),
+            5 => Ok(ErrCode::Internal),
+            t => bail!("unknown error code tag {t}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrCode::Busy => "busy",
+            ErrCode::NoModel => "no_model",
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::Shutdown => "shutdown",
+            ErrCode::Internal => "internal",
+        }
+    }
+}
+
+/// A parsed frame, borrowing the read buffer (zero-copy parse).
+#[derive(Debug, PartialEq)]
+pub enum Frame<'a> {
+    Request {
+        req_id: u64,
+        model: &'a str,
+        dtype: Dtype,
+        payload: &'a [u8],
+    },
+    Response {
+        req_id: u64,
+        /// f32le output bytes (use [`payload_f32s_into`] to decode).
+        payload: &'a [u8],
+    },
+    Error {
+        req_id: u64,
+        code: ErrCode,
+        msg: &'a str,
+    },
+}
+
+// ---- encoding ----
+
+/// Patch the length field and append the checksum. `buf` must hold a
+/// frame body built by one of the `encode_*` functions.
+fn finish(buf: &mut Vec<u8>) {
+    // `len` counts everything after itself: the body written so far
+    // minus the 8-byte header, plus the 8-byte checksum to come.
+    let len = (buf.len() - HEADER_LEN + 8) as u32;
+    buf[4..8].copy_from_slice(&len.to_le_bytes());
+    let sum = fnv1a(buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+}
+
+fn start(buf: &mut Vec<u8>, kind: u8, req_id: u64) {
+    buf.clear();
+    buf.extend_from_slice(WIRE_MAGIC);
+    buf.extend_from_slice(&0u32.to_le_bytes()); // len, patched by finish()
+    buf.push(kind);
+    buf.extend_from_slice(&req_id.to_le_bytes());
+}
+
+/// Encode a request frame into `buf` (cleared first; reuse it across
+/// requests for an allocation-free steady state). Panics if the model
+/// name exceeds 255 bytes — names are file stems, enforce at the edge.
+pub fn encode_request(buf: &mut Vec<u8>, req_id: u64, model: &str, dtype: Dtype, payload: &[u8]) {
+    assert!(model.len() <= 255, "model name longer than 255 bytes");
+    start(buf, 0, req_id);
+    buf.push(model.len() as u8);
+    buf.extend_from_slice(model.as_bytes());
+    buf.push(dtype.tag());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    finish(buf);
+}
+
+/// Encode an `f32le` request without materializing a byte payload.
+pub fn encode_request_f32(buf: &mut Vec<u8>, req_id: u64, model: &str, input: &[f32]) {
+    assert!(model.len() <= 255, "model name longer than 255 bytes");
+    start(buf, 0, req_id);
+    buf.push(model.len() as u8);
+    buf.extend_from_slice(model.as_bytes());
+    buf.push(Dtype::F32Le.tag());
+    buf.extend_from_slice(&((input.len() * 4) as u32).to_le_bytes());
+    for &x in input {
+        buf.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    finish(buf);
+}
+
+/// Encode a `qidx` request: one u8 codebook index per feature.
+pub fn encode_request_qidx(buf: &mut Vec<u8>, req_id: u64, model: &str, idx: &[u8]) {
+    encode_request(buf, req_id, model, Dtype::QIdx, idx);
+}
+
+/// Encode a response frame carrying f32le outputs.
+pub fn encode_response_f32(buf: &mut Vec<u8>, req_id: u64, out: &[f32]) {
+    start(buf, 1, req_id);
+    buf.push(Dtype::F32Le.tag());
+    buf.extend_from_slice(&((out.len() * 4) as u32).to_le_bytes());
+    for &x in out {
+        buf.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    finish(buf);
+}
+
+/// Encode an error frame (message truncated to fit the u16 length).
+pub fn encode_error(buf: &mut Vec<u8>, req_id: u64, code: ErrCode, msg: &str) {
+    // Truncate on a char boundary so the frame stays valid UTF-8.
+    let mut cut = msg.len().min(u16::MAX as usize);
+    while cut > 0 && !msg.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    let msg = &msg[..cut];
+    start(buf, 2, req_id);
+    buf.push(code.tag());
+    buf.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+    buf.extend_from_slice(msg.as_bytes());
+    finish(buf);
+}
+
+// ---- reading / parsing ----
+
+/// Read exactly one frame's bytes from `r` into `buf` (reused across
+/// calls). Returns `Ok(false)` on a clean EOF at a frame boundary,
+/// `Ok(true)` with the full frame in `buf` otherwise. Framing damage
+/// (bad magic, implausible length, mid-frame EOF) is an error — the
+/// stream cannot be resynchronized and should be closed.
+pub fn read_frame<R: std::io::Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<bool> {
+    buf.clear();
+    buf.resize(HEADER_LEN, 0);
+    // First byte by hand so EOF-at-boundary is distinguishable from a
+    // torn frame.
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut buf[got..HEADER_LEN]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(false);
+                }
+                bail!("connection closed mid-header ({got} of {HEADER_LEN} bytes)");
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame header"),
+        }
+    }
+    anyhow::ensure!(
+        &buf[..4] == WIRE_MAGIC,
+        "bad frame magic {:?} (expected {:?})",
+        &buf[..4],
+        WIRE_MAGIC
+    );
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        (MIN_BODY_LEN..=MAX_FRAME_LEN).contains(&len),
+        "implausible frame length {len}"
+    );
+    buf.resize(HEADER_LEN + len, 0);
+    let mut pos = HEADER_LEN;
+    while pos < buf.len() {
+        match r.read(&mut buf[pos..]) {
+            Ok(0) => bail!("connection closed mid-frame ({pos} of {} bytes)", HEADER_LEN + len),
+            Ok(n) => pos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame body"),
+        }
+    }
+    Ok(true)
+}
+
+/// Byte cursor over a frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos.checked_add(n).is_some_and(|end| end <= self.b.len()),
+            "truncated frame body: needed {n} bytes at offset {}",
+            self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self, n: usize) -> Result<&'a str> {
+        std::str::from_utf8(self.take(n)?).context("frame string is not UTF-8")
+    }
+}
+
+/// Parse (and checksum-verify) one complete frame as produced by
+/// [`read_frame`]. Zero-copy: the returned [`Frame`] borrows `buf`.
+pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
+    anyhow::ensure!(
+        buf.len() >= HEADER_LEN + MIN_BODY_LEN,
+        "frame of {} bytes is smaller than the fixed layout",
+        buf.len()
+    );
+    anyhow::ensure!(&buf[..4] == WIRE_MAGIC, "bad frame magic");
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        buf.len() == HEADER_LEN + len,
+        "frame length mismatch: header says {len}, buffer holds {}",
+        buf.len() - HEADER_LEN
+    );
+    let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    let computed = fnv1a(&buf[..buf.len() - 8]);
+    anyhow::ensure!(
+        stored == computed,
+        "frame checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — \
+         corrupted in transit"
+    );
+    let mut c = Cur {
+        b: &buf[..buf.len() - 8],
+        pos: HEADER_LEN,
+    };
+    let kind = c.u8()?;
+    let req_id = c.u64()?;
+    let frame = match kind {
+        0 => {
+            let name_len = c.u8()? as usize;
+            let model = c.str(name_len)?;
+            let dtype = Dtype::from_tag(c.u8()?)?;
+            let payload_len = c.u32()? as usize;
+            let payload = c.take(payload_len)?;
+            Frame::Request {
+                req_id,
+                model,
+                dtype,
+                payload,
+            }
+        }
+        1 => {
+            let dtype = Dtype::from_tag(c.u8()?)?;
+            anyhow::ensure!(
+                dtype == Dtype::F32Le,
+                "response frames carry f32le payloads, got {}",
+                dtype.name()
+            );
+            let payload_len = c.u32()? as usize;
+            anyhow::ensure!(payload_len % 4 == 0, "f32le payload of {payload_len} bytes");
+            let payload = c.take(payload_len)?;
+            Frame::Response { req_id, payload }
+        }
+        2 => {
+            let code = ErrCode::from_tag(c.u8()?)?;
+            let msg_len = c.u16()? as usize;
+            let msg = c.str(msg_len)?;
+            Frame::Error { req_id, code, msg }
+        }
+        t => bail!("unknown frame kind {t}"),
+    };
+    anyhow::ensure!(
+        c.pos == c.b.len(),
+        "frame has {} trailing bytes after its body",
+        c.b.len() - c.pos
+    );
+    Ok(frame)
+}
+
+/// Decode an f32le payload into a reused buffer.
+pub fn payload_f32s_into(payload: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    anyhow::ensure!(
+        payload.len() % 4 == 0,
+        "f32le payload of {} bytes is not a multiple of 4",
+        payload.len()
+    );
+    out.clear();
+    out.reserve(payload.len() / 4);
+    for chunk in payload.chunks_exact(4) {
+        out.push(f32::from_bits(u32::from_le_bytes(chunk.try_into().unwrap())));
+    }
+    Ok(())
+}
+
+/// Wire size of a request frame in the given encoding, for a model name
+/// and feature count — the deployment calculus the `qidx` path wins
+/// (header 17 B + name + 5 B payload framing + checksum 8 B + payload).
+pub fn request_frame_bytes(model: &str, features: usize, dtype: Dtype) -> usize {
+    HEADER_LEN + 1 + 8 + 1 + model.len() + 1 + 4 + features * dtype.bytes_per_feature() + 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use std::io::Cursor;
+
+    fn roundtrip(bytes: &[u8]) -> (Vec<u8>, bool) {
+        let mut r = Cursor::new(bytes.to_vec());
+        let mut buf = Vec::new();
+        let got = read_frame(&mut r, &mut buf).expect("read");
+        (buf, got)
+    }
+
+    #[test]
+    fn request_roundtrips_both_encodings() {
+        let mut buf = Vec::new();
+        encode_request_f32(&mut buf, 42, "digits-lut", &[0.25, -1.5, 3.0]);
+        let (frame, ok) = roundtrip(&buf);
+        assert!(ok);
+        match parse_frame(&frame).unwrap() {
+            Frame::Request { req_id, model, dtype, payload } => {
+                assert_eq!(req_id, 42);
+                assert_eq!(model, "digits-lut");
+                assert_eq!(dtype, Dtype::F32Le);
+                let mut xs = Vec::new();
+                payload_f32s_into(payload, &mut xs).unwrap();
+                assert_eq!(xs, vec![0.25, -1.5, 3.0]);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        assert_eq!(buf.len(), request_frame_bytes("digits-lut", 3, Dtype::F32Le));
+
+        encode_request_qidx(&mut buf, 7, "m", &[0, 3, 15, 255]);
+        match parse_frame(&buf).unwrap() {
+            Frame::Request { req_id, model, dtype, payload } => {
+                assert_eq!(req_id, 7);
+                assert_eq!(model, "m");
+                assert_eq!(dtype, Dtype::QIdx);
+                assert_eq!(payload, &[0, 3, 15, 255]);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        assert_eq!(buf.len(), request_frame_bytes("m", 4, Dtype::QIdx));
+    }
+
+    #[test]
+    fn qidx_requests_are_4x_smaller_than_f32() {
+        // The point of the protocol: at realistic feature counts the
+        // payload dominates and qidx approaches a 4x wire saving.
+        let f = request_frame_bytes("digits-lut", 64, Dtype::F32Le);
+        let q = request_frame_bytes("digits-lut", 64, Dtype::QIdx);
+        assert!(q < f, "qidx {q} must beat f32le {f}");
+        assert!((q as f64) < 0.4 * f as f64, "qidx {q} vs f32le {f}");
+    }
+
+    #[test]
+    fn response_and_error_roundtrip() {
+        let mut buf = Vec::new();
+        encode_response_f32(&mut buf, 9, &[1.0, 2.0]);
+        match parse_frame(&buf).unwrap() {
+            Frame::Response { req_id, payload } => {
+                assert_eq!(req_id, 9);
+                let mut xs = Vec::new();
+                payload_f32s_into(payload, &mut xs).unwrap();
+                assert_eq!(xs, vec![1.0, 2.0]);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+
+        encode_error(&mut buf, 13, ErrCode::Busy, "queue full (64 outstanding)");
+        match parse_frame(&buf).unwrap() {
+            Frame::Error { req_id, code, msg } => {
+                assert_eq!(req_id, 13);
+                assert_eq!(code, ErrCode::Busy);
+                assert_eq!(msg, "queue full (64 outstanding)");
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+    }
+
+    #[test]
+    fn pipelined_frames_read_back_to_back() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        encode_request_qidx(&mut a, 1, "m", &[1, 2]);
+        encode_request_f32(&mut b, 2, "m", &[0.5, 0.5]);
+        let mut stream = a.clone();
+        stream.extend_from_slice(&b);
+        let mut r = Cursor::new(stream);
+        let mut buf = Vec::new();
+        assert!(read_frame(&mut r, &mut buf).unwrap());
+        assert!(matches!(parse_frame(&buf).unwrap(), Frame::Request { req_id: 1, .. }));
+        assert!(read_frame(&mut r, &mut buf).unwrap());
+        assert!(matches!(parse_frame(&buf).unwrap(), Frame::Request { req_id: 2, .. }));
+        // Clean EOF at the boundary.
+        assert!(!read_frame(&mut r, &mut buf).unwrap());
+    }
+
+    #[test]
+    fn truncation_always_fails_cleanly() {
+        let mut buf = Vec::new();
+        encode_request_f32(&mut buf, 5, "model", &[1.0, 2.0, 3.0, 4.0]);
+        // Every cut point: mid-header, mid-body, one byte short.
+        for cut in 1..buf.len() {
+            let mut r = Cursor::new(buf[..cut].to_vec());
+            let mut rb = Vec::new();
+            let read = read_frame(&mut r, &mut rb);
+            match read {
+                Err(_) => {} // torn frame detected at read time
+                Ok(got) => {
+                    assert!(got, "cut {cut} misread as clean EOF");
+                    assert!(parse_frame(&rb).is_err(), "cut {cut} parsed");
+                }
+            }
+        }
+        // Truncated buffers handed straight to the parser fail too.
+        for cut in 0..buf.len() {
+            assert!(parse_frame(&buf[..cut]).is_err(), "parse at cut {cut}");
+        }
+    }
+
+    #[test]
+    fn corruption_is_caught_by_checksum() {
+        let mut buf = Vec::new();
+        encode_request_qidx(&mut buf, 77, "digits", &[1, 2, 3, 4, 5, 6, 7, 8]);
+        // Flip one bit anywhere after the header: the checksum (or a
+        // validation check) must reject — never mis-serve.
+        for pos in HEADER_LEN..buf.len() {
+            let mut bad = buf.clone();
+            bad[pos] ^= 0x10;
+            assert!(parse_frame(&bad).is_err(), "bit flip at {pos} accepted");
+        }
+        // Bad magic is rejected before anything else.
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        let e = parse_frame(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("magic"), "{e:#}");
+    }
+
+    #[test]
+    fn hostile_lengths_do_not_allocate() {
+        // A frame header claiming a huge body must be rejected at read
+        // time, before any buffer grows to match.
+        let mut hostile = Vec::new();
+        hostile.extend_from_slice(WIRE_MAGIC);
+        hostile.extend_from_slice(&(u32::MAX).to_le_bytes());
+        hostile.extend_from_slice(&[0u8; 32]);
+        let mut r = Cursor::new(hostile);
+        let mut buf = Vec::new();
+        let e = read_frame(&mut r, &mut buf).unwrap_err();
+        assert!(format!("{e:#}").contains("implausible"), "{e:#}");
+    }
+
+    #[test]
+    fn unknown_tags_are_rejected() {
+        let mut buf = Vec::new();
+        encode_request_qidx(&mut buf, 3, "m", &[0]);
+        // Kind tag lives right after the header; patch it and re-seal
+        // the checksum so only the tag is wrong.
+        let body_end = buf.len() - 8;
+        buf[HEADER_LEN] = 9;
+        let sum = fnv1a(&buf[..body_end]);
+        buf[body_end..].copy_from_slice(&sum.to_le_bytes());
+        let e = parse_frame(&buf).unwrap_err();
+        assert!(format!("{e:#}").contains("kind"), "{e:#}");
+
+        assert!(Dtype::from_tag(2).is_err());
+        assert!(ErrCode::from_tag(0).is_err());
+        assert!(ErrCode::from_tag(6).is_err());
+    }
+
+    #[test]
+    fn property_random_frames_roundtrip() {
+        check("wire frame roundtrip", 128, |g| {
+            let req_id = g.rng().next_u64();
+            let mut buf = Vec::new();
+            match g.usize_in(0, 2) {
+                0 => {
+                    let name: String =
+                        (0..g.usize_in(1, 32)).map(|i| ((b'a' + (i % 26) as u8) as char)).collect();
+                    if g.bool() {
+                        let xs = g.vec_f32(0, 200, -1e6, 1e6);
+                        encode_request_f32(&mut buf, req_id, &name, &xs);
+                        match parse_frame(&buf).unwrap() {
+                            Frame::Request { req_id: r, model, dtype, payload } => {
+                                assert_eq!(r, req_id);
+                                assert_eq!(model, name);
+                                assert_eq!(dtype, Dtype::F32Le);
+                                let mut back = Vec::new();
+                                payload_f32s_into(payload, &mut back).unwrap();
+                                // Bit-exact: encode preserved every bit.
+                                assert_eq!(
+                                    back.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                                    xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                                );
+                            }
+                            f => panic!("wrong frame {f:?}"),
+                        }
+                    } else {
+                        let n = g.usize_in(0, 300);
+                        let idx: Vec<u8> =
+                            (0..n).map(|_| (g.rng().next_u64() & 0xff) as u8).collect();
+                        encode_request_qidx(&mut buf, req_id, &name, &idx);
+                        match parse_frame(&buf).unwrap() {
+                            Frame::Request { payload, dtype, .. } => {
+                                assert_eq!(dtype, Dtype::QIdx);
+                                assert_eq!(payload, &idx[..]);
+                            }
+                            f => panic!("wrong frame {f:?}"),
+                        }
+                    }
+                }
+                1 => {
+                    let xs = g.vec_f32(0, 64, -1e3, 1e3);
+                    encode_response_f32(&mut buf, req_id, &xs);
+                    match parse_frame(&buf).unwrap() {
+                        Frame::Response { req_id: r, payload } => {
+                            assert_eq!(r, req_id);
+                            assert_eq!(payload.len(), xs.len() * 4);
+                        }
+                        f => panic!("wrong frame {f:?}"),
+                    }
+                }
+                _ => {
+                    let code = *g.choice(&[
+                        ErrCode::Busy,
+                        ErrCode::NoModel,
+                        ErrCode::BadRequest,
+                        ErrCode::Shutdown,
+                        ErrCode::Internal,
+                    ]);
+                    encode_error(&mut buf, req_id, code, "some message with détail");
+                    match parse_frame(&buf).unwrap() {
+                        Frame::Error { req_id: r, code: c, msg } => {
+                            assert_eq!(r, req_id);
+                            assert_eq!(c, code);
+                            assert_eq!(msg, "some message with détail");
+                        }
+                        f => panic!("wrong frame {f:?}"),
+                    }
+                }
+            }
+            // And the stream reader frames it identically.
+            let mut r = Cursor::new(buf.clone());
+            let mut rb = Vec::new();
+            assert!(read_frame(&mut r, &mut rb).unwrap());
+            assert_eq!(rb, buf);
+        });
+    }
+}

@@ -1,0 +1,362 @@
+//! Load generation against a live [`crate::coordinator::NetServer`]
+//! socket — the serving-side perf trajectory (`BENCH_serving.json`,
+//! schema `qnn.bench_serving.v1`).
+//!
+//! Two standard load shapes:
+//!
+//! * **Closed loop** — `clients` connections each firing back-to-back
+//!   requests. Ramping clients up finds the saturation throughput.
+//! * **Open loop** — requests *scheduled* at a fixed total arrival rate
+//!   spread round-robin across connections, latency measured from the
+//!   scheduled send time. This avoids coordinated omission: a slow
+//!   server cannot quietly slow the offered load and flatter its own
+//!   tail. (Each connection still awaits its response before its next
+//!   send, so offered rates near saturation need enough clients.)
+//!
+//! Both shapes drive either wire encoding — `f32le` floats or `qidx` u8
+//! codebook indices — so the report captures exactly what the no-float
+//! wire format buys: identical outputs at a fraction of the bytes per
+//! request. `Busy` rejections (bounded-queue admission control) are
+//! counted separately from successes; rejected requests carry no
+//! latency sample.
+
+use crate::coordinator::net::{ClientError, NetClient};
+use crate::coordinator::wire::{self, Dtype};
+use crate::coordinator::ErrCode;
+use crate::fixedpoint::UniformQuant;
+use crate::util::json::Json;
+use crate::util::stats::percentile_f64;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadCfg {
+    /// Socket address of the serving front-end (e.g. `127.0.0.1:7070`).
+    pub addr: String,
+    /// Model name to route to.
+    pub model: String,
+    /// Wire encoding for every request in this run.
+    pub encoding: Dtype,
+    /// Concurrent connections.
+    pub clients: usize,
+    /// Requests per connection.
+    pub requests_per_client: usize,
+    /// `None` = closed loop; `Some(r)` = open loop at a fixed total
+    /// arrival rate of `r` requests/s across all connections.
+    pub rate_rps: Option<f64>,
+}
+
+/// Aggregated result of one run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// "closed" or "open".
+    pub mode: String,
+    /// "f32le" or "qidx".
+    pub encoding: String,
+    pub clients: usize,
+    /// Open loop only: the configured arrival rate.
+    pub offered_rps: Option<f64>,
+    pub sent: usize,
+    pub ok: usize,
+    /// Admission-control rejections (Busy frames).
+    pub busy: usize,
+    /// Other server-side error frames.
+    pub errors: usize,
+    pub elapsed_s: f64,
+    /// Successful responses per second over the run.
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Wire bytes of one request frame in this run's encoding.
+    pub request_frame_bytes: usize,
+    /// Wire bytes of one response frame.
+    pub response_frame_bytes: usize,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("mode", Json::Str(self.mode.clone())),
+            ("encoding", Json::Str(self.encoding.clone())),
+            ("clients", Json::Num(self.clients as f64)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("busy", Json::Num(self.busy as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("request_frame_bytes", Json::Num(self.request_frame_bytes as f64)),
+            ("response_frame_bytes", Json::Num(self.response_frame_bytes as f64)),
+        ];
+        if let Some(r) = self.offered_rps {
+            pairs.push(("offered_rps", Json::Num(r)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+struct ClientStats {
+    lats_ms: Vec<f64>,
+    ok: usize,
+    busy: usize,
+    errors: usize,
+    started: Instant,
+    finished: Instant,
+}
+
+/// Drive one load run against a live socket. `rows` is the pool of
+/// f32 feature rows requests cycle through; for the `qidx` encoding,
+/// `quant` (the served model's input grid) quantizes them client-side —
+/// exactly what an edge device holding the codebook would ship.
+pub fn run_load(
+    cfg: &LoadCfg,
+    rows: &[Vec<f32>],
+    quant: Option<&UniformQuant>,
+) -> Result<LoadReport> {
+    anyhow::ensure!(!rows.is_empty(), "loadgen needs at least one input row");
+    anyhow::ensure!(cfg.clients >= 1, "loadgen needs at least one client");
+    if let Some(rate) = cfg.rate_rps {
+        anyhow::ensure!(
+            rate.is_finite() && rate > 0.0,
+            "open-loop arrival rate must be positive (got {rate})"
+        );
+    }
+    let qrows: Arc<Vec<Vec<u8>>> = Arc::new(match cfg.encoding {
+        Dtype::F32Le => Vec::new(),
+        Dtype::QIdx => {
+            let q = quant.context("qidx load generation needs the model's input quantizer")?;
+            anyhow::ensure!(
+                q.levels <= 256,
+                "input grid with {} levels does not fit the u8 qidx wire encoding",
+                q.levels
+            );
+            rows.iter()
+                .map(|r| q.quantize_to_indices(r).into_iter().map(|i| i as u8).collect())
+                .collect()
+        }
+    });
+    let rows: Arc<Vec<Vec<f32>>> = Arc::new(rows.to_vec());
+
+    // Probe request: verifies the route end to end, warms the path, and
+    // captures the response width for the frame-size accounting.
+    let out_len = {
+        let mut probe = NetClient::connect(&cfg.addr[..])
+            .with_context(|| format!("connecting to {}", cfg.addr))?;
+        let out = match cfg.encoding {
+            Dtype::F32Le => probe.infer_f32(&cfg.model, &rows[0]),
+            Dtype::QIdx => probe.infer_qidx(&cfg.model, &qrows[0]),
+        }
+        .map_err(|e| anyhow::anyhow!("probe request failed: {e}"))?;
+        out.len()
+    };
+    let features = rows[0].len();
+    let request_frame_bytes = wire::request_frame_bytes(&cfg.model, features, cfg.encoding);
+    let response_frame_bytes = {
+        let mut buf = Vec::new();
+        wire::encode_response_f32(&mut buf, 0, &vec![0.0f32; out_len]);
+        buf.len()
+    };
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..cfg.clients {
+        let cfg = cfg.clone();
+        let rows = Arc::clone(&rows);
+        let qrows = Arc::clone(&qrows);
+        joins.push(std::thread::spawn(move || -> Result<ClientStats> {
+            let mut client = NetClient::connect(&cfg.addr[..])
+                .with_context(|| format!("connecting to {}", cfg.addr))?;
+            let mut stats = ClientStats {
+                lats_ms: Vec::with_capacity(cfg.requests_per_client),
+                ok: 0,
+                busy: 0,
+                errors: 0,
+                started: Instant::now(),
+                finished: Instant::now(),
+            };
+            for k in 0..cfg.requests_per_client {
+                // Global request index: interleaves clients so the open
+                // loop's schedule is uniform at the configured rate.
+                let j = c + k * cfg.clients;
+                let measured_from = match cfg.rate_rps {
+                    Some(rate) => {
+                        let sched = t0 + Duration::from_secs_f64(j as f64 / rate);
+                        let now = Instant::now();
+                        if sched > now {
+                            std::thread::sleep(sched - now);
+                        }
+                        // Latency from the *schedule*, not the (possibly
+                        // late) send: coordinated-omission resistant.
+                        sched
+                    }
+                    None => Instant::now(),
+                };
+                let row = j % rows.len();
+                let res = match cfg.encoding {
+                    Dtype::F32Le => client.infer_f32(&cfg.model, &rows[row]),
+                    Dtype::QIdx => client.infer_qidx(&cfg.model, &qrows[row]),
+                };
+                match res {
+                    Ok(out) => {
+                        debug_assert_eq!(out.len(), out_len);
+                        stats.ok += 1;
+                        stats.lats_ms.push(measured_from.elapsed().as_secs_f64() * 1e3);
+                    }
+                    Err(ClientError::Remote(e)) if e.code == ErrCode::Busy => stats.busy += 1,
+                    Err(ClientError::Remote(_)) => stats.errors += 1,
+                    Err(e) => return Err(anyhow::anyhow!("client {c} failed: {e}")),
+                }
+            }
+            stats.finished = Instant::now();
+            Ok(stats)
+        }));
+    }
+
+    let mut lats = Vec::new();
+    let (mut ok, mut busy, mut errors) = (0usize, 0usize, 0usize);
+    let mut first = None::<Instant>;
+    let mut last = None::<Instant>;
+    for j in joins {
+        let s = j.join().expect("loadgen client panicked")?;
+        lats.extend_from_slice(&s.lats_ms);
+        ok += s.ok;
+        busy += s.busy;
+        errors += s.errors;
+        first = Some(first.map_or(s.started, |f: Instant| f.min(s.started)));
+        last = Some(last.map_or(s.finished, |l: Instant| l.max(s.finished)));
+    }
+    let elapsed_s = match (first, last) {
+        (Some(f), Some(l)) => l.saturating_duration_since(f).as_secs_f64().max(1e-9),
+        _ => 1e-9,
+    };
+
+    Ok(LoadReport {
+        mode: if cfg.rate_rps.is_some() { "open" } else { "closed" }.into(),
+        encoding: cfg.encoding.name().into(),
+        clients: cfg.clients,
+        offered_rps: cfg.rate_rps,
+        sent: cfg.clients * cfg.requests_per_client,
+        ok,
+        busy,
+        errors,
+        elapsed_s,
+        throughput_rps: ok as f64 / elapsed_s,
+        p50_ms: percentile_f64(&lats, 50.0),
+        p95_ms: percentile_f64(&lats, 95.0),
+        p99_ms: percentile_f64(&lats, 99.0),
+        request_frame_bytes,
+        response_frame_bytes,
+    })
+}
+
+/// Assemble the `qnn.bench_serving.v1` document: the runs, the wire
+/// bytes-per-request comparison (the qidx headline), and the best
+/// closed-loop throughput as the saturation point.
+pub fn serving_bench_doc(
+    model: &str,
+    input_len: usize,
+    output_len: usize,
+    reports: &[LoadReport],
+    provenance: &str,
+) -> Json {
+    let f32_bytes = reports
+        .iter()
+        .find(|r| r.encoding == "f32le")
+        .map(|r| r.request_frame_bytes)
+        .unwrap_or(0);
+    let qidx_bytes = reports
+        .iter()
+        .find(|r| r.encoding == "qidx")
+        .map(|r| r.request_frame_bytes)
+        .unwrap_or(0);
+    let saturation = reports
+        .iter()
+        .filter(|r| r.mode == "closed")
+        .max_by(|a, b| a.throughput_rps.total_cmp(&b.throughput_rps));
+    Json::obj(vec![
+        ("schema", Json::Str("qnn.bench_serving.v1".into())),
+        ("provenance", Json::Str(provenance.into())),
+        ("model", Json::Str(model.into())),
+        ("input_len", Json::Num(input_len as f64)),
+        ("output_len", Json::Num(output_len as f64)),
+        (
+            "wire_bytes_per_request",
+            Json::obj(vec![
+                ("f32le", Json::Num(f32_bytes as f64)),
+                ("qidx", Json::Num(qidx_bytes as f64)),
+                (
+                    "qidx_over_f32le",
+                    Json::Num(if f32_bytes == 0 {
+                        0.0
+                    } else {
+                        qidx_bytes as f64 / f32_bytes as f64
+                    }),
+                ),
+            ]),
+        ),
+        (
+            "saturation",
+            saturation.map(|r| r.to_json()).unwrap_or(Json::Null),
+        ),
+        ("results", Json::Arr(reports.iter().map(|r| r.to_json()).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(mode: &str, encoding: &str, rps: f64, req_bytes: usize) -> LoadReport {
+        LoadReport {
+            mode: mode.into(),
+            encoding: encoding.into(),
+            clients: 4,
+            offered_rps: (mode == "open").then_some(rps * 0.6),
+            sent: 400,
+            ok: 398,
+            busy: 2,
+            errors: 0,
+            elapsed_s: 398.0 / rps,
+            throughput_rps: rps,
+            p50_ms: 0.4,
+            p95_ms: 0.9,
+            p99_ms: 1.7,
+            request_frame_bytes: req_bytes,
+            response_frame_bytes: 61,
+        }
+    }
+
+    #[test]
+    fn serving_doc_schema_roundtrips() {
+        let reports = vec![
+            report("closed", "f32le", 9000.0, 297),
+            report("closed", "qidx", 11000.0, 105),
+            report("open", "qidx", 6000.0, 105),
+        ];
+        let doc = serving_bench_doc("digits-lut", 64, 10, &reports, "unit-test");
+        let back = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v1"));
+        assert_eq!(back.get("model").as_str(), Some("digits-lut"));
+        let wire = back.get("wire_bytes_per_request");
+        assert_eq!(wire.get("f32le").as_usize(), Some(297));
+        assert_eq!(wire.get("qidx").as_usize(), Some(105));
+        let ratio = wire.get("qidx_over_f32le").as_f64().unwrap();
+        assert!(ratio < 0.5, "ratio {ratio}");
+        // Saturation picks the best closed-loop run.
+        assert_eq!(back.get("saturation").get("encoding").as_str(), Some("qidx"));
+        assert_eq!(
+            back.get("saturation").get("throughput_rps").as_f64(),
+            Some(11000.0)
+        );
+        assert_eq!(back.get("results").as_arr().unwrap().len(), 3);
+        let open = back.get("results").at(2);
+        assert_eq!(open.get("mode").as_str(), Some("open"));
+        assert!(open.get("offered_rps").as_f64().is_some());
+    }
+}

@@ -2,6 +2,7 @@
 //! figure/table regeneration benches (no plotting libs offline).
 
 pub mod experiments;
+pub mod loadgen;
 pub mod perf;
 pub mod plot;
 pub mod table;

@@ -79,22 +79,9 @@ pub fn is_float_artifact(bytes: &[u8]) -> bool {
     bytes.len() >= QNN_FLOAT_MAGIC.len() && &bytes[..QNN_FLOAT_MAGIC.len()] == QNN_FLOAT_MAGIC
 }
 
-// ---- FNV-1a (integrity checksum; not cryptographic) ----
-
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(FNV_PRIME);
-    }
-    h
-}
-
-fn fnv1a(bytes: &[u8]) -> u64 {
-    fnv1a_update(FNV_OFFSET, bytes)
-}
+// FNV-1a (integrity checksum; not cryptographic) is shared with the
+// wire protocol — see `crate::util::fnv`.
+use crate::util::fnv::{fnv1a, fnv1a_update, FNV_OFFSET};
 
 /// Order-sensitive fingerprint of the rebuilt mul-tables: dims plus every
 /// i32 entry. Stored at save time, re-checked at load time so a platform

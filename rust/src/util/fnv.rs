@@ -1,0 +1,46 @@
+//! FNV-1a hashing — the integrity checksum shared by the `.qnn`
+//! artifact format (`runtime/qnn_artifact.rs`) and the wire protocol
+//! (`coordinator/wire.rs`). One implementation so the two formats can
+//! never drift apart. Fast and adequate for corruption detection; not
+//! cryptographic.
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `bytes` into a running FNV-1a state.
+#[inline]
+pub fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a of a byte slice.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_update(FNV_OFFSET, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn update_composes() {
+        let whole = fnv1a(b"hello world");
+        let split = fnv1a_update(fnv1a(b"hello "), b"world");
+        assert_eq!(whole, split);
+    }
+}

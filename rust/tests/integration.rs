@@ -137,6 +137,7 @@ fn served_lut_engine_matches_direct_calls() {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
             workers: 2,
+            ..ServerCfg::default()
         },
     );
     let h = server.handle();

@@ -1,0 +1,294 @@
+//! End-to-end wire serving: a `.qnn` artifact directory booted behind
+//! [`NetServer`] on a loopback port, driven by concurrent clients over
+//! **both** wire encodings (`f32le` floats and `qidx` u8 codebook
+//! indices), asserting bit-exact agreement with `forward_naive` — the
+//! same oracle the executors and the artifact roundtrip are held to.
+//! Plus the admission-control and drain contracts: a full bounded queue
+//! answers `Busy` frames, and shutdown under load never leaves an
+//! accepted request without a response or a clean error.
+
+use qnn::coordinator::wire::Dtype;
+use qnn::coordinator::{
+    Backend, ClientError, ErrCode, NetClient, NetServer, Router, Server, ServerCfg,
+};
+use qnn::fixedpoint::UniformQuant;
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::report::loadgen::{run_load, LoadCfg};
+use qnn::util::rng::Xoshiro256;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+const FEAT: usize = 16;
+const OUT: usize = 4;
+
+fn small_lut() -> LutNetwork {
+    let spec = NetSpec::mlp("wire-e2e", FEAT, &[24], OUT, ActSpec::tanh_d(16));
+    let mut rng = Xoshiro256::new(21);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(32), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap()
+}
+
+/// The acceptance-criterion test: artifact dir → NetServer → concurrent
+/// f32le + qidx clients → every response bit-exact vs forward_naive.
+#[test]
+fn tcp_serving_is_bit_exact_with_forward_naive() {
+    let lut = small_lut();
+    let quant = lut.input_quant.clone();
+    let scale_inv = 1.0 / lut.plan.scale();
+
+    // Deterministic request set and its oracle answers.
+    let mut rng = Xoshiro256::new(33);
+    let n_rows = 24;
+    let rows: Vec<Vec<f32>> = (0..n_rows)
+        .map(|_| (0..FEAT).map(|_| rng.uniform_f32()).collect())
+        .collect();
+    let mut expected = Vec::with_capacity(n_rows);
+    for row in &rows {
+        let idx = quant.quantize_to_indices(row);
+        let naive = lut.forward_naive(&idx, 1);
+        let out: Vec<f32> = naive
+            .sums
+            .iter()
+            .map(|&s| (s as f64 * scale_inv) as f32)
+            .collect();
+        assert_eq!(out.len(), OUT);
+        expected.push(out);
+    }
+    let qidx_rows: Vec<Vec<u8>> = rows
+        .iter()
+        .map(|r| quant.quantize_to_indices(r).into_iter().map(|i| i as u8).collect())
+        .collect();
+
+    // save → load_dir → bind: the full artifact lifecycle behind TCP.
+    let dir = std::env::temp_dir().join(format!("qnn_net_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    lut.save(dir.join("wire-e2e.qnn")).unwrap();
+    let router = Router::load_dir_with(
+        &dir,
+        ServerCfg {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            max_queue: 128,
+        },
+    )
+    .unwrap();
+    let net = NetServer::bind("127.0.0.1:0", router).unwrap();
+    let addr = net.local_addr();
+
+    // Concurrent clients: half speak floats, half speak u8 indices; a
+    // mixed stream exercises mixed batches inside the batcher too.
+    let rows = Arc::new(rows);
+    let qidx_rows = Arc::new(qidx_rows);
+    let expected = Arc::new(expected);
+    let mut joins = Vec::new();
+    for c in 0..6usize {
+        let rows = Arc::clone(&rows);
+        let qidx_rows = Arc::clone(&qidx_rows);
+        let expected = Arc::clone(&expected);
+        joins.push(std::thread::spawn(move || {
+            let mut client = NetClient::connect(addr).unwrap();
+            for k in 0..40 {
+                let r = (c * 7 + k) % rows.len();
+                let out = if c % 2 == 0 {
+                    client.infer_f32("wire-e2e", &rows[r]).unwrap()
+                } else {
+                    client.infer_qidx("wire-e2e", &qidx_rows[r]).unwrap()
+                };
+                // Bit-exact: same indices, same integer sums, same
+                // descale — regardless of encoding, batching, or which
+                // worker served it.
+                assert_eq!(out, expected[r], "client {c} row {r}");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    net.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Engine that sleeps per batch — deterministic queue pressure.
+struct SlowEngine;
+impl Backend for SlowEngine {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn input_len(&self) -> usize {
+        2
+    }
+    fn output_len(&self) -> usize {
+        1
+    }
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+    fn infer_batch_into(&self, _flat: &[f32], batch: usize, out: &mut [f32]) {
+        std::thread::sleep(Duration::from_millis(30));
+        out[..batch].fill(7.0);
+    }
+    fn input_quant(&self) -> Option<UniformQuant> {
+        Some(UniformQuant::unit(16))
+    }
+}
+
+/// Acceptance criterion, part two: once the bounded queue is full, the
+/// wire answers `Busy` frames — and every pipelined request gets some
+/// reply.
+#[test]
+fn busy_frames_when_bounded_queue_is_full() {
+    let mut router = Router::new();
+    router.register(
+        "slow",
+        Server::start(
+            Arc::new(SlowEngine),
+            ServerCfg {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                workers: 1,
+                max_queue: 2,
+            },
+        ),
+    );
+    let net = NetServer::bind("127.0.0.1:0", router).unwrap();
+    let mut client = NetClient::connect(net.local_addr()).unwrap();
+
+    // Flood 20 pipelined requests without reading a single response:
+    // admission control must shed most of them immediately.
+    let n = 20;
+    let mut ids = Vec::new();
+    for _ in 0..n {
+        ids.push(client.send_f32("slow", &[0.0, 0.0]).unwrap());
+    }
+    let mut ok = 0;
+    let mut busy = 0;
+    for id in ids {
+        let (rid, res) = client.recv_response().unwrap();
+        assert_eq!(rid, id, "responses must come back in request order");
+        match res {
+            Ok(out) => {
+                assert_eq!(out, vec![7.0]);
+                ok += 1;
+            }
+            Err(e) => {
+                assert_eq!(e.code, ErrCode::Busy, "unexpected error: {e}");
+                busy += 1;
+            }
+        }
+    }
+    assert!(ok >= 1, "nothing was admitted");
+    assert!(busy >= 1, "the bounded queue never rejected (ok={ok})");
+    assert_eq!(ok + busy, n);
+    net.shutdown();
+}
+
+/// Shutdown under load drains the wire too: every request read off a
+/// socket before the drain gets a response or a clean error frame — the
+/// client never hangs and never sees a torn stream.
+#[test]
+fn net_shutdown_under_load_drains_accepted_requests() {
+    let mut router = Router::new();
+    router.register(
+        "slow",
+        Server::start(
+            Arc::new(SlowEngine),
+            ServerCfg {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                workers: 1,
+                max_queue: 64,
+            },
+        ),
+    );
+    let net = NetServer::bind("127.0.0.1:0", router).unwrap();
+    let addr = net.local_addr();
+
+    let (done_tx, done_rx) = mpsc::channel();
+    let client_thread = std::thread::spawn(move || {
+        let mut client = NetClient::connect(addr).unwrap();
+        let n = 10;
+        let mut ids = Vec::new();
+        for _ in 0..n {
+            ids.push(client.send_f32("slow", &[0.0, 0.0]).unwrap());
+        }
+        let mut resolved = 0;
+        for _ in 0..n {
+            match client.recv_response() {
+                // A response or a typed error frame both count as a
+                // clean resolution.
+                Ok((_, _)) => resolved += 1,
+                // The drain half-closes reads first; if our tail
+                // requests were never read off the socket, the eventual
+                // close is also clean — but only after every frame the
+                // server *did* read was answered.
+                Err(ClientError::Protocol(_)) | Err(ClientError::Io(_)) => break,
+                // recv_response reports server error frames inside Ok;
+                // listed only for exhaustiveness.
+                Err(ClientError::Remote(_)) => resolved += 1,
+            }
+        }
+        done_tx.send(resolved).unwrap();
+    });
+
+    // Let the pipeline land, then pull the plug mid-service.
+    std::thread::sleep(Duration::from_millis(40));
+    net.shutdown();
+
+    let resolved = done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("client hung across NetServer shutdown");
+    assert!(resolved >= 1, "no request resolved before the drain");
+    client_thread.join().unwrap();
+}
+
+/// The load generator drives a real socket end to end (closed loop,
+/// both encodings) — the `BENCH_serving.json` producer in miniature.
+#[test]
+fn loadgen_closed_loop_over_real_socket() {
+    let lut = small_lut();
+    let quant = lut.input_quant.clone();
+    let mut router = Router::new();
+    router.register(
+        "m",
+        Server::start(
+            Arc::new(qnn::coordinator::LutEngine::new("m", lut, FEAT)),
+            ServerCfg::default(),
+        ),
+    );
+    let net = NetServer::bind("127.0.0.1:0", router).unwrap();
+    let addr = net.local_addr().to_string();
+
+    let mut rng = Xoshiro256::new(5);
+    let rows: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..FEAT).map(|_| rng.uniform_f32()).collect())
+        .collect();
+
+    for encoding in [Dtype::F32Le, Dtype::QIdx] {
+        let r = run_load(
+            &LoadCfg {
+                addr: addr.clone(),
+                model: "m".into(),
+                encoding,
+                clients: 2,
+                requests_per_client: 10,
+                rate_rps: None,
+            },
+            &rows,
+            Some(&quant),
+        )
+        .unwrap();
+        assert_eq!(r.ok, 20, "all requests must succeed ({:?})", r);
+        assert_eq!(r.busy + r.errors, 0);
+        assert!(r.throughput_rps > 0.0);
+        assert!(r.p99_ms >= r.p50_ms);
+        assert!(r.request_frame_bytes > 0 && r.response_frame_bytes > 0);
+    }
+    net.shutdown();
+}

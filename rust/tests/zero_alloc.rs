@@ -150,4 +150,27 @@ fn forward_into_allocates_nothing_after_warmup() {
         "serving: infer_batch_into allocated {} times in 10 warm calls",
         after - before
     );
+
+    // ---- quantized wire steady state (infer_quantized_batch_into) ----
+    // The qidx fast path (u8 wire indices → widen → LUT executor, no
+    // float quantization) must be equally clean once its own per-thread
+    // buffers are warm.
+    let levels = engine.input_quant().expect("LUT engine exposes its grid").levels;
+    let qidx: Vec<u8> = (0..batch * 64)
+        .map(|i| ((i * 7) % levels) as u8)
+        .collect();
+    engine.infer_quantized_batch_into(&qidx, batch, &mut out);
+    engine.infer_quantized_batch_into(&qidx, batch, &mut out);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        engine.infer_quantized_batch_into(&qidx, batch, &mut out);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "serving: infer_quantized_batch_into allocated {} times in 10 warm calls",
+        after - before
+    );
 }
