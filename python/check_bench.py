@@ -3,9 +3,15 @@
 
 Dispatches on the document's `schema` field:
 
-* ``qnn.bench_lut_engine.v2`` — the LUT-engine trajectory. Fails if conv
-  workloads at batch 1 and 64 are missing, or any conv record lacks the
-  old-path (prepatch) timing or a speedup-vs-naive ratio.
+* ``qnn.bench_lut_engine.v3`` — the LUT-engine trajectory. Fails if conv
+  workloads at batch 1 and 64 are missing, any conv record lacks the
+  old-path (prepatch) timing or a speedup-vs-naive ratio, the few-level
+  tier sweep (dense digits records at levels 2/3/8/32) is missing, a
+  level record lacks the gather-ladder A/B column, or — the tier's
+  headline — the few-level serial path is not *strictly faster* than
+  the gather ladder at levels ≤ 3 on the dense digits workload.
+* ``qnn.bench_lut_engine.v2`` — the pre-few-level trajectory (legacy
+  files only; new runs emit v3). Conv checks as above, no tier sweep.
 * ``qnn.bench_serving.v1`` — the TCP serving trajectory
   (examples/serve_tcp.rs). Fails if either wire encoding (f32le / qidx)
   or load shape (closed / open) is missing, if any record lacks sane
@@ -13,7 +19,10 @@ Dispatches on the document's `schema` field:
   wire encoding is not *strictly smaller* than f32le per request.
 
 Timings themselves are never asserted — CI machines are noisy;
-regressions should show in the trajectory, not flake the gate.
+regressions should show in the trajectory, not flake the gate. The one
+exception is the few-level-vs-gather *ratio*: both sides are measured
+back-to-back in the same process on the same weights, so the comparison
+is noise-robust, and losing it means the tier stopped paying for itself.
 
     python3 python/check_bench.py [BENCH_file.json ...]
 """
@@ -78,6 +87,59 @@ def check_lut_engine(path: str, doc: dict) -> str:
     )
 
 
+REQUIRED_TIER_LEVELS = (2, 3, 8, 32)
+
+
+def check_lut_engine_v3(path: str, doc: dict) -> str:
+    summary = check_lut_engine(path, doc)
+
+    results = doc.get("results") or []
+    tier = [r for r in results if r.get("levels") is not None]
+    have = {r.get("levels") for r in tier}
+    for want in REQUIRED_TIER_LEVELS:
+        if want not in have:
+            fail(
+                f"{path}: few-level tier sweep missing levels={want} "
+                f"(have {sorted(have)})"
+            )
+
+    gated = 0
+    for r in tier:
+        levels = r["levels"]
+        label = f"{r.get('topology')!r} (levels={levels})"
+        for field in ("ns_per_row_serial", "ns_per_row_gather", "speedup_fewlevel_vs_gather"):
+            if not positive_number(r.get(field)):
+                fail(f"{path}: tier record {label} missing or non-positive {field!r}")
+        engaged = r.get("fewlevel_engaged")
+        if not isinstance(engaged, bool):
+            fail(f"{path}: tier record {label} missing boolean 'fewlevel_engaged'")
+        if levels <= 8 and not engaged:
+            fail(f"{path}: few-level tier did not engage at levels={levels} ({label})")
+        if levels > 8 and engaged:
+            fail(f"{path}: few-level tier engaged beyond its ceiling ({label})")
+        # The tier's reason to exist: strictly faster than the gather
+        # ladder at the bi-level/ternary end, on the dense digits
+        # workload both producers emit.
+        if levels <= 3 and "digits" in r.get("topology", "").lower():
+            gated += 1
+            if not r["ns_per_row_serial"] < r["ns_per_row_gather"]:
+                fail(
+                    f"{path}: few-level serial ({r['ns_per_row_serial']:.0f} ns/row) is not "
+                    f"strictly faster than the gather ladder "
+                    f"({r['ns_per_row_gather']:.0f} ns/row) at levels={levels} ({label})"
+                )
+    if gated == 0:
+        fail(f"{path}: no dense digits tier record at levels <= 3 to gate")
+
+    speedups = [
+        r["speedup_fewlevel_vs_gather"]
+        for r in tier
+        if r.get("fewlevel_engaged") and positive_number(r.get("speedup_fewlevel_vs_gather"))
+    ]
+    best = max(speedups) if speedups else 0.0
+    return f"{summary}; {len(tier)} tier records, best fewlevel/gather {best:.2f}x"
+
+
 def check_serving(path: str, doc: dict) -> str:
     wire = doc.get("wire_bytes_per_request") or {}
     f32_bytes = wire.get("f32le")
@@ -136,6 +198,7 @@ def check_serving(path: str, doc: dict) -> str:
 
 CHECKERS = {
     "qnn.bench_lut_engine.v2": check_lut_engine,
+    "qnn.bench_lut_engine.v3": check_lut_engine_v3,
     "qnn.bench_serving.v1": check_serving,
 }
 

@@ -4,12 +4,17 @@
 //! topologies — (c) the retained pre-tiling conv executor
 //! (`forward_prepatch`, the old-path baseline for the conv speedup),
 //! measuring the zero-allocation serial path and the parallel path
-//! (batch-chunk fan-out, or intra-image band fan-out at batch=1)
-//! separately.
+//! (batch-chunk fan-out, or image × band fan-out at small batches)
+//! separately. A dedicated sweep pits the gather-free **few-level
+//! tier** against the gather ladder on the dense digits workload at
+//! |W| ∈ {2, 3, 8, 32} — the bi-level/ternary end of the paper's
+//! spectrum, where a multiplication is just a signed add.
 //!
 //! Emits `BENCH_lut_engine.json` at the repo root (schema
-//! `qnn.bench_lut_engine.v2`, see `qnn::report::perf`) so every run
-//! extends the machine-readable perf trajectory.
+//! `qnn.bench_lut_engine.v3`, see `qnn::report::perf`) so every run
+//! extends the machine-readable perf trajectory; CI gates the few-level
+//! tier strictly faster than the gather ladder at levels ≤ 3
+//! (`python/check_bench.py`).
 //!
 //!     cargo bench --bench bench_lut_engine [-- --full]
 
@@ -188,6 +193,9 @@ fn main() {
                 ns_per_row_parallel: rp.mean_ns / rb,
                 ns_per_row_float: Some(rf.mean_ns / rb),
                 ns_per_row_prepatch: rpre.as_ref().map(|r| r.mean_ns / rb),
+                levels: None,
+                fewlevel: None,
+                ns_per_row_gather: None,
             });
             table.row(&[
                 c.name.to_string(),
@@ -213,6 +221,103 @@ fn main() {
          im2col path is measured against.\n\
          (LUT vs float: modern CPUs have fast FP multipliers; the paper's \
          claim targets fixed-point-only hardware.)"
+    );
+
+    // ---- few-level tier sweep: dense digits workload, |W| ∈ {2,3,8,32}.
+    // The same clustered net is compiled twice — few-level on (default)
+    // and off — so the speedup column is a true A/B over identical
+    // weights. Levels 2/3 are the paper's bi-level/ternary end; 8 is
+    // the tier's ceiling; 32 stays on the gather ladder (control).
+    let mut tier_table = TableBuilder::new("few-level tier vs gather ladder").header(&[
+        "workload",
+        "|W|",
+        "kernel",
+        "tier layers",
+        "LUT gather",
+        "LUT fewlevel",
+        "few/gather",
+    ]);
+    let batch = 64usize;
+    for &levels in &[2usize, 3, 8, 32] {
+        let spec = NetSpec::mlp(
+            "bench-digits",
+            qnn::data::digits::FEATURES,
+            &[256, 128],
+            10,
+            ActSpec::tanh_d(32),
+        );
+        let name = format!("digits dense 256-256-128-10 L{levels}");
+        let mut rng = Xoshiro256::new(7);
+        let mut net = Network::from_spec(&spec, &mut rng);
+        let mut flat = net.flat_weights();
+        let cb = kmeans_1d(&flat, &KMeansCfg::with_k(levels), &mut rng);
+        cb.quantize_slice(&mut flat);
+        net.set_flat_weights(&flat);
+        let books = CodebookSet::Global(cb);
+        let lut = LutNetwork::compile(&net, &books, &CompileCfg::default()).unwrap();
+        let lut_gather = LutNetwork::compile(
+            &net,
+            &books,
+            &CompileCfg {
+                few_level: false,
+                ..CompileCfg::default()
+            },
+        )
+        .unwrap();
+        let feat = lut.input_elems();
+        let idx: Vec<u16> = (0..batch * feat)
+            .map(|_| rng.below(lut.input_quant.levels) as u16)
+            .collect();
+        let mut scratch = lut.new_scratch();
+        let mut scratch_g = lut_gather.new_scratch();
+        let mut sums = vec![0i64; batch * lut.out_dim()];
+
+        let rn = bench_for("naive", min_time, || {
+            std::hint::black_box(lut.forward_naive(&idx, batch));
+        });
+        let rg = bench_for("gather", min_time, || {
+            lut_gather.forward_into(&idx, batch, &mut sums, &mut scratch_g);
+            std::hint::black_box(&sums);
+        });
+        let rs = bench_for("fewlevel", min_time, || {
+            lut.forward_into(&idx, batch, &mut sums, &mut scratch);
+            std::hint::black_box(&sums);
+        });
+        let rp = bench_for("parallel", min_time, || {
+            lut.forward_indices_into(&idx, batch, &mut sums);
+            std::hint::black_box(&sums);
+        });
+
+        let rb = batch as f64;
+        tier_table.row(&[
+            name.clone(),
+            format!("{levels}"),
+            format!("{:?}", lut.kernel()),
+            format!("{}", lut.fewlevel_layers()),
+            fmt_ns(rg.mean_ns / rb),
+            fmt_ns(rs.mean_ns / rb),
+            format!("{:.2}x", rg.mean_ns / rs.mean_ns),
+        ]);
+        records.push(LutBenchRecord {
+            topology: name,
+            batch,
+            kernel: format!("{:?}", lut.kernel()),
+            ns_per_row_naive: rn.mean_ns / rb,
+            ns_per_row_serial: rs.mean_ns / rb,
+            ns_per_row_parallel: rp.mean_ns / rb,
+            ns_per_row_float: None,
+            ns_per_row_prepatch: None,
+            levels: Some(levels),
+            fewlevel: Some(lut.fewlevel_layers() > 0),
+            ns_per_row_gather: Some(rg.mean_ns / rb),
+        });
+    }
+    tier_table.print();
+    println!(
+        "few/gather > 1.0 means the gather-free tier beats the mul-table \
+         gather on the same weights; the baseline-level elision should \
+         clear ~1.5-2x at |W| ≤ 3 (CI gates it strictly > 1.0). L32 is \
+         the gather-ladder control (tier disengaged)."
     );
 
     let provenance = if full { "bench:full" } else { "bench:quick" };

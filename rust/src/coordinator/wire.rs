@@ -43,6 +43,7 @@
 //! magic (`QWF2`) so old peers fail loudly at the first frame. Unknown
 //! kind/dtype/code tags inside a valid frame are parse errors.
 
+use crate::util::cursor::ByteCursor;
 use crate::util::fnv::fnv1a;
 use anyhow::{bail, Context, Result};
 
@@ -296,42 +297,10 @@ pub fn read_frame<R: std::io::Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<bool
     Ok(true)
 }
 
-/// Byte cursor over a frame body.
-struct Cur<'a> {
-    b: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Cur<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        anyhow::ensure!(
-            self.pos.checked_add(n).is_some_and(|end| end <= self.b.len()),
-            "truncated frame body: needed {n} bytes at offset {}",
-            self.pos
-        );
-        let s = &self.b[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-    fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
-    }
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-    fn str(&mut self, n: usize) -> Result<&'a str> {
-        std::str::from_utf8(self.take(n)?).context("frame string is not UTF-8")
-    }
-}
-
 /// Parse (and checksum-verify) one complete frame as produced by
 /// [`read_frame`]. Zero-copy: the returned [`Frame`] borrows `buf`.
+/// Body walking uses the shared [`ByteCursor`] (`util::cursor`), the
+/// same bounds-checked reader the `.qnn` artifact parser runs on.
 pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
     anyhow::ensure!(
         buf.len() >= HEADER_LEN + MIN_BODY_LEN,
@@ -352,16 +321,13 @@ pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
         "frame checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — \
          corrupted in transit"
     );
-    let mut c = Cur {
-        b: &buf[..buf.len() - 8],
-        pos: HEADER_LEN,
-    };
+    let mut c = ByteCursor::new(&buf[..buf.len() - 8], HEADER_LEN, "frame body");
     let kind = c.u8()?;
     let req_id = c.u64()?;
     let frame = match kind {
         0 => {
             let name_len = c.u8()? as usize;
-            let model = c.str(name_len)?;
+            let model = c.str_bytes(name_len)?;
             let dtype = Dtype::from_tag(c.u8()?)?;
             let payload_len = c.u32()? as usize;
             let payload = c.take(payload_len)?;
@@ -387,15 +353,15 @@ pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
         2 => {
             let code = ErrCode::from_tag(c.u8()?)?;
             let msg_len = c.u16()? as usize;
-            let msg = c.str(msg_len)?;
+            let msg = c.str_bytes(msg_len)?;
             Frame::Error { req_id, code, msg }
         }
         t => bail!("unknown frame kind {t}"),
     };
     anyhow::ensure!(
-        c.pos == c.b.len(),
+        c.is_empty(),
         "frame has {} trailing bytes after its body",
-        c.b.len() - c.pos
+        c.remaining()
     );
     Ok(frame)
 }

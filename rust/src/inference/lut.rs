@@ -34,6 +34,37 @@
 //! * `I32xI32` — i32 tables + i32 accumulators (AVX2/AVX-512 gather).
 //! * `I32xI64` — i32 tables + i64 accumulators; scalar, always safe.
 //!
+//! # The few-level tier (§Perf)
+//!
+//! At the bi-level/ternary end of the paper's spectrum a "multiplication"
+//! degenerates to a signed add, and even the mul-table gather is
+//! overhead. When a layer's codebook has `|W| ≤` [`FEW_LEVEL_MAX`]
+//! levels, the compiler builds a **gather-free few-level plan**
+//! ([`FewLevelLayer`]): each output unit's weight-index stream is
+//! transposed and reordered into per-level runs of *input positions*
+//! (`(level, run_len)` segments alongside the position stream), the
+//! layer's globally most frequent level `v*` becomes a baseline whose
+//! positions are elided entirely, and the remaining levels keep static
+//! **difference columns** `D_v[a] = table[a][v] − table[a][v*]`. The
+//! executor then computes, per example row, one baseline constant
+//! `C = Σ_i table[a_i][v*]` plus tiny per-level value planes
+//! `DL_v[i] = D_v[a_i]`, and every output is just
+//!
+//! ```text
+//!   acc[o] = bias[o] + C + Σ_v Σ_{i ∈ run_v(o)} DL_v[i]
+//! ```
+//!
+//! — per-level partial sums of activation-table values (pure adds over
+//! an L1-resident plane, reduced by `inference::simd::gather_sum*`),
+//! finished by at most `|W| − 1` run folds. No `w_idx` gather touches
+//! the mul-table in the inner loop, and the baseline elision makes the
+//! streamed index count *strictly smaller* than the gather ladder's
+//! (½ at bi-level, ⅓ at balanced ternary, more when weights concentrate
+//! on one level, e.g. ternary zeros). Integer adds are exact and the
+//! transient bound is overflow-gated at plan time, so the tier is
+//! bit-exact vs [`LutNetwork::forward_naive`]; `CompileCfg::few_level`
+//! is the opt-out knob for A/B parity.
+//!
 //! # Conv execution (§Perf)
 //!
 //! Conv layers run on a **tiled im2col** strategy instead of per-patch
@@ -44,10 +75,15 @@
 //! same expansion instead of re-gathering it `k_h` times. Accumulation
 //! then streams the conv `w_idx` once per [`CONV_POS_BLOCK`] output
 //! positions over [`DENSE_COL_BLOCK`]-channel tiles — the same blocking
-//! that makes the dense path fast. At batch=1 the executor additionally
-//! splits one image's output rows into bands across the shared pool
-//! (bit-exact: bands own disjoint output rows); see
-//! [`LutNetwork::forward_indices_into`].
+//! that makes the dense path fast. Whenever a conv-dominated batch has
+//! fewer rows than pool workers (batch 1 up to the pool size; the
+//! compiler decides via `ExecPlan::small_batch_bands`), the executor
+//! additionally splits every image's output rows into bands and fans
+//! the (image × band) tiles across the shared pool (bit-exact: tiles
+//! own disjoint output rows); see
+//! [`LutNetwork::forward_indices_into`]. The expanded-row ring itself
+//! is keyed on (image, input row), so a chunk's serial walk resets it
+//! once per layer, not per image.
 
 use crate::fixedpoint::{bias_row, zero_row, ActTable, FixedPointPlan, MulTable, UniformQuant};
 use crate::nn::{ActSpec, LayerSpec, NetSpec, Network};
@@ -70,6 +106,11 @@ const DENSE_COL_BLOCK: usize = 512;
 /// the conv `w_idx` serves this many output pixels (the conv analogue of
 /// [`DENSE_ROW_BLOCK`]; kept equal so the shared scratch tile fits both).
 const CONV_POS_BLOCK: usize = DENSE_ROW_BLOCK;
+
+/// Largest codebook the gather-free few-level tier engages for. Beyond
+/// this the per-level run bookkeeping stops paying for itself and the
+/// gather ladder wins.
+pub const FEW_LEVEL_MAX: usize = 8;
 
 /// Target bytes for a chunk's ping-pong index buffers (both u16 planes).
 const CHUNK_TARGET_BYTES: usize = 128 * 1024;
@@ -161,6 +202,45 @@ pub enum Kernel {
     I32xI64,
 }
 
+/// The compiled gather-free plan of one few-level layer (see the
+/// module docs §"The few-level tier"). Derived deterministically from
+/// the layer's `w_idx` and mul-table by [`build_exec_plan`], so `.qnn`
+/// artifacts rebuild it bit-identically at load time.
+#[derive(Clone, Debug)]
+pub(crate) struct FewLevelLayer {
+    /// The baseline level `v*` — the layer's most frequent weight
+    /// index, whose positions are elided from the streams.
+    base: u32,
+    /// Mul-table column of the baseline: `basecol[a] = table[a][v*]`
+    /// (all `a_levels + 2` rows, so bias/padding indices work too).
+    basecol: Vec<i32>,
+    /// Static difference columns of the **contributing** non-baseline
+    /// levels in ascending level order (levels whose column is
+    /// identically zero — duplicate centers — carry no column at all),
+    /// flattened `[w1 × arows]`:
+    /// `dcols[v'·arows + a] = table[a][level_{v'}] − basecol[a]`.
+    dcols: Vec<i32>,
+    /// Compact i16 copy of `dcols` when every difference fits (feeds
+    /// the widened `gather_sum_i16`; bit-exact — same values narrower).
+    dcols16: Option<Vec<i16>>,
+    /// The reordered index stream: for each output unit, its input
+    /// positions at contributing non-baseline levels, grouped into
+    /// per-level runs (ascending position within a run).
+    pos: Vec<u32>,
+    /// Run lengths, `[n_out × w1]`: `counts[o·w1 + v']`.
+    counts: Vec<u32>,
+    /// Per-output start offset into `pos`.
+    starts: Vec<u32>,
+}
+
+impl FewLevelLayer {
+    /// Non-baseline level count (the number of difference columns).
+    #[inline]
+    fn w1(&self) -> usize {
+        self.dcols.len() / self.basecol.len()
+    }
+}
+
 /// Precomputed executor metadata (built once by `compile`, rebuilt on
 /// artifact load).
 #[derive(Clone, Debug)]
@@ -187,6 +267,22 @@ pub(crate) struct ExecPlan {
     chunk_rows: usize,
     /// The integer kernel the whole net runs on.
     kernel: Kernel,
+    /// Per-layer few-level plans, parallel to `layers` (None = the
+    /// layer runs on the gather ladder).
+    few: Vec<Option<FewLevelLayer>>,
+    /// i32 elements of the few-level difference-plane scratch (DL):
+    /// max over few-level layers of `block · (|W|−1) · fan_in`.
+    few_elems: usize,
+    /// i16 elements of the compact DL scratch (each `(fan_in + 1)`-wide
+    /// slice carries a trailing SIMD read-past pad). 0 when no layer
+    /// has compact difference columns.
+    few_elems16: usize,
+    /// Route batches smaller than the pool through the conv image ×
+    /// band fan-out? True when some conv layer can band-split
+    /// (`out_h > 1`) **and** conv work dominates dense work — a
+    /// dense-heavy net keeps the row-chunk fan-out instead, which its
+    /// dense layers can actually use.
+    small_batch_bands: bool,
 }
 
 /// Reusable scratch arena for the LUT executor. Buffers grow to the
@@ -204,9 +300,12 @@ pub struct ExecScratch {
     /// path, `max_patch`.
     patch: Vec<u16>,
     /// Conv expanded-row ring (`conv_ring` u16s) + its slot directory
-    /// (`max_kh` entries: which input row each slot holds).
+    /// (`max_kh` entries: which (image, input row) each slot holds).
     ring: Vec<u16>,
     ring_iy: Vec<i64>,
+    /// Few-level difference planes (DL), i32 and compact-i16 forms.
+    dl: Vec<i32>,
+    dl16: Vec<i16>,
 }
 
 impl ExecScratch {
@@ -219,6 +318,8 @@ impl ExecScratch {
             patch: Vec::new(),
             ring: Vec::new(),
             ring_iy: Vec::new(),
+            dl: Vec::new(),
+            dl16: Vec::new(),
         }
     }
 
@@ -241,6 +342,12 @@ impl ExecScratch {
         }
         if self.ring_iy.len() < plan.max_kh {
             self.ring_iy.resize(plan.max_kh, i64::MIN);
+        }
+        if self.dl.len() < plan.few_elems {
+            self.dl.resize(plan.few_elems, 0);
+        }
+        if self.dl16.len() < plan.few_elems16 {
+            self.dl16.resize(plan.few_elems16, 0);
         }
     }
 }
@@ -269,6 +376,8 @@ struct BandScratch {
     ring_iy: Vec<i64>,
     acc: Vec<i32>,
     acc64: Vec<i64>,
+    dl: Vec<i32>,
+    dl16: Vec<i16>,
 }
 
 impl BandScratch {
@@ -284,6 +393,12 @@ impl BandScratch {
             self.acc.resize(acc, 0);
             self.acc64.resize(acc, 0);
         }
+        if self.dl.len() < plan.few_elems {
+            self.dl.resize(plan.few_elems, 0);
+        }
+        if self.dl16.len() < plan.few_elems16 {
+            self.dl16.resize(plan.few_elems16, 0);
+        }
     }
 }
 
@@ -294,6 +409,8 @@ fn with_band_scratch<R>(f: impl FnOnce(&mut BandScratch) -> R) -> R {
             ring_iy: Vec::new(),
             acc: Vec::new(),
             acc64: Vec::new(),
+            dl: Vec::new(),
+            dl16: Vec::new(),
         });
     }
     BAND.with(|s| f(&mut s.borrow_mut()))
@@ -392,6 +509,12 @@ pub struct CompileCfg {
     /// (bit-exact — the same values stored narrower). Disable to force
     /// the i32 tables, e.g. for A/B parity testing.
     pub compact_tables: bool,
+    /// Engage the gather-free few-level tier on layers whose codebook
+    /// has ≤ [`FEW_LEVEL_MAX`] levels (bit-exact — integer adds in a
+    /// different, overflow-gated order). Disable to force the gather
+    /// ladder everywhere, e.g. for A/B parity testing or to measure
+    /// what the tier buys (the bench compiles both ways).
+    pub few_level: bool,
 }
 
 impl Default for CompileCfg {
@@ -401,6 +524,7 @@ impl Default for CompileCfg {
             input_levels: None,
             act_table_len: 256,
             compact_tables: true,
+            few_level: true,
         }
     }
 }
@@ -625,6 +749,13 @@ impl LutNetwork {
         self.exec.kernel
     }
 
+    /// How many parameterized layers run on the gather-free few-level
+    /// tier (codebook ≤ [`FEW_LEVEL_MAX`] levels and the overflow gate
+    /// cleared; 0 when `CompileCfg::few_level` is off).
+    pub fn fewlevel_layers(&self) -> usize {
+        self.exec.few.iter().filter(|f| f.is_some()).count()
+    }
+
     /// Rows per executor work chunk (the batch-parallel granularity).
     pub fn chunk_rows(&self) -> usize {
         self.exec.chunk_rows
@@ -653,12 +784,13 @@ impl LutNetwork {
 
     /// Batch forward into a caller-provided buffer, fanning row chunks
     /// out across the shared thread pool when the batch is large enough,
-    /// and — at batch=1 on conv nets — fanning each conv layer's output
-    /// row-bands out instead, so single-image latency also scales with
-    /// cores (`QNN_SERIAL=1` disables both). Rows and bands are
-    /// independent, so every parallel path is bit-exact vs the serial
-    /// one. Allocation-free after warmup apart from per-chunk/band job
-    /// boxes (O(chunks), not O(rows)).
+    /// and — on conv nets with fewer rows than workers (batch 1 up to
+    /// the pool size) — fanning each conv layer's (image × output-row
+    /// band) tiles out instead, so conv latency scales with cores all
+    /// the way down to a single image (`QNN_SERIAL=1` disables both).
+    /// Rows and bands are independent, so every parallel path is
+    /// bit-exact vs the serial one. Allocation-free after warmup apart
+    /// from per-chunk/band job boxes (O(chunks + bands), not O(rows)).
     pub fn forward_indices_into(&self, idx: &[u16], batch: usize, out: &mut [i64]) {
         let pool = if parallel_enabled() {
             Some(crate::util::threadpool::global())
@@ -686,7 +818,16 @@ impl LutNetwork {
         }
         if let Some(pool) = pool {
             let threads = pool.threads();
-            if batch > 1 && threads > 1 {
+            // Small conv batches (2..threads rows) underfill a pure
+            // row-chunk fan-out — fewer jobs than workers. Conv-heavy
+            // nets route through the chunk walk instead, where every
+            // conv layer tiles image × band across the pool. Nets whose
+            // work is dominated by dense layers (or whose conv layers
+            // cannot band-split) keep the row-chunk fan-out — that is
+            // the only axis their dense layers can use
+            // (`ExecPlan::small_batch_bands` is the plan-time call).
+            let small_conv_batch = batch > 1 && batch < threads && self.exec.small_batch_bands;
+            if batch > 1 && threads > 1 && !small_conv_batch {
                 // ~2 chunks per thread for load balance, capped by the
                 // cache-sized chunk the scratch arena is provisioned for.
                 let chunk =
@@ -712,8 +853,8 @@ impl LutNetwork {
                     return;
                 }
             }
-            // batch == 1 (or a single-thread pool): serial chunk walk
-            // with intra-image conv band parallelism enabled.
+            // batch == 1, a small conv batch, or a single-thread pool:
+            // serial chunk walk with conv image × band fan-out enabled.
             with_scratch(|s| self.exec_chunks(idx, batch, out, s, Some(pool), false));
             return;
         }
@@ -785,9 +926,9 @@ impl LutNetwork {
 
     /// Run up to `chunk_rows` examples through every layer using the
     /// scratch arena. `input` is `rows × feat` level indices; `out` is
-    /// `rows × out_dim` final sums. `pool` enables intra-image conv band
-    /// parallelism (only engaged at rows == 1); `prepatch` selects the
-    /// retained per-patch conv strategy.
+    /// `rows × out_dim` final sums. `pool` enables conv image × band
+    /// parallelism (engaged while rows < pool workers); `prepatch`
+    /// selects the retained per-patch conv strategy.
     fn exec_chunk(
         &self,
         input: &[u16],
@@ -809,6 +950,8 @@ impl LutNetwork {
             patch,
             ring,
             ring_iy,
+            dl,
+            dl16,
         } = scratch;
 
         for r in 0..rows {
@@ -816,7 +959,7 @@ impl LutNetwork {
                 .copy_from_slice(&input[r * feat..(r + 1) * feat]);
         }
 
-        for layer in &self.layers {
+        for (li, layer) in self.layers.iter().enumerate() {
             match layer {
                 LutLayer::Dense {
                     in_dim,
@@ -829,86 +972,175 @@ impl LutNetwork {
                 } => {
                     let t = &self.tables[*table];
                     let od = *out_dim;
+                    let few = self.exec.few[li].as_ref();
                     match (self.exec.kernel, act) {
                         (Kernel::I32xI64, Some(ai)) => {
                             let at = &self.act_tables[*ai];
-                            dense_exec_i64(
-                                t,
-                                *in_dim,
-                                od,
-                                w_idx,
-                                bias_acc,
-                                rows,
-                                row_stride,
-                                cur,
-                                acc64,
-                                |r, ob, accs| {
-                                    let base = r * row_stride + ob;
-                                    for (j, &a) in accs.iter().enumerate() {
-                                        nxt[base + j] = at.lookup(a);
-                                    }
-                                },
-                            );
+                            let emit = |r: usize, ob: usize, accs: &[i64]| {
+                                let base = r * row_stride + ob;
+                                for (j, &a) in accs.iter().enumerate() {
+                                    nxt[base + j] = at.lookup(a);
+                                }
+                            };
+                            match few {
+                                Some(f) => dense_exec_fewlevel_i64(
+                                    f,
+                                    *in_dim,
+                                    od,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    dl,
+                                    acc64,
+                                    emit,
+                                ),
+                                None => dense_exec_i64(
+                                    t,
+                                    *in_dim,
+                                    od,
+                                    w_idx,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    acc64,
+                                    emit,
+                                ),
+                            }
                         }
                         (Kernel::I32xI64, None) => {
-                            dense_exec_i64(
-                                t,
-                                *in_dim,
-                                od,
-                                w_idx,
-                                bias_acc,
-                                rows,
-                                row_stride,
-                                cur,
-                                acc64,
-                                |r, ob, accs| {
-                                    let base = r * od + ob;
-                                    for (j, &a) in accs.iter().enumerate() {
-                                        out[base + j] = a;
-                                    }
-                                },
-                            );
+                            let emit = |r: usize, ob: usize, accs: &[i64]| {
+                                let base = r * od + ob;
+                                for (j, &a) in accs.iter().enumerate() {
+                                    out[base + j] = a;
+                                }
+                            };
+                            match few {
+                                Some(f) => dense_exec_fewlevel_i64(
+                                    f,
+                                    *in_dim,
+                                    od,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    dl,
+                                    acc64,
+                                    emit,
+                                ),
+                                None => dense_exec_i64(
+                                    t,
+                                    *in_dim,
+                                    od,
+                                    w_idx,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    acc64,
+                                    emit,
+                                ),
+                            }
                         }
                         (_, Some(ai)) => {
                             let at = &self.act_tables[*ai];
-                            dense_exec_i32(
-                                t,
-                                use_i16,
-                                *in_dim,
-                                od,
-                                w_idx,
-                                bias_acc,
-                                rows,
-                                row_stride,
-                                cur,
-                                acc,
-                                |r, ob, accs| {
-                                    let base = r * row_stride + ob;
-                                    for (j, &a) in accs.iter().enumerate() {
-                                        nxt[base + j] = at.lookup(a as i64);
-                                    }
-                                },
-                            );
+                            let emit = |r: usize, ob: usize, accs: &[i32]| {
+                                let base = r * row_stride + ob;
+                                for (j, &a) in accs.iter().enumerate() {
+                                    nxt[base + j] = at.lookup(a as i64);
+                                }
+                            };
+                            match few {
+                                Some(f) if use_i16 && f.dcols16.is_some() => {
+                                    dense_exec_fewlevel_i16(
+                                        f,
+                                        *in_dim,
+                                        od,
+                                        bias_acc,
+                                        rows,
+                                        row_stride,
+                                        cur,
+                                        dl16,
+                                        acc,
+                                        emit,
+                                    )
+                                }
+                                Some(f) => dense_exec_fewlevel_i32(
+                                    f,
+                                    *in_dim,
+                                    od,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    dl,
+                                    acc,
+                                    emit,
+                                ),
+                                None => dense_exec_i32(
+                                    t,
+                                    use_i16,
+                                    *in_dim,
+                                    od,
+                                    w_idx,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    acc,
+                                    emit,
+                                ),
+                            }
                         }
                         (_, None) => {
-                            dense_exec_i32(
-                                t,
-                                use_i16,
-                                *in_dim,
-                                od,
-                                w_idx,
-                                bias_acc,
-                                rows,
-                                row_stride,
-                                cur,
-                                acc,
-                                |r, ob, accs| {
-                                    let base = r * od + ob;
-                                    for (j, &a) in accs.iter().enumerate() {
-                                        out[base + j] = a as i64;
-                                    }
-                                },
-                            );
+                            let emit = |r: usize, ob: usize, accs: &[i32]| {
+                                let base = r * od + ob;
+                                for (j, &a) in accs.iter().enumerate() {
+                                    out[base + j] = a as i64;
+                                }
+                            };
+                            match few {
+                                Some(f) if use_i16 && f.dcols16.is_some() => {
+                                    dense_exec_fewlevel_i16(
+                                        f,
+                                        *in_dim,
+                                        od,
+                                        bias_acc,
+                                        rows,
+                                        row_stride,
+                                        cur,
+                                        dl16,
+                                        acc,
+                                        emit,
+                                    )
+                                }
+                                Some(f) => dense_exec_fewlevel_i32(
+                                    f,
+                                    *in_dim,
+                                    od,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    dl,
+                                    acc,
+                                    emit,
+                                ),
+                                None => dense_exec_i32(
+                                    t,
+                                    use_i16,
+                                    *in_dim,
+                                    od,
+                                    w_idx,
+                                    bias_acc,
+                                    rows,
+                                    row_stride,
+                                    cur,
+                                    acc,
+                                    emit,
+                                ),
+                            }
                         }
                     }
                     if act.is_some() {
@@ -928,6 +1160,7 @@ impl LutNetwork {
                     let od = oh * ow * oc;
                     let feat_in = cs.in_h * cs.in_w * cs.in_c;
                     let kernel = self.exec.kernel;
+                    let few = self.exec.few[li].as_ref();
                     if prepatch {
                         // ---- retained per-patch reference strategy ----
                         match (kernel, act) {
@@ -1013,20 +1246,38 @@ impl LutNetwork {
                             }
                         }
                     } else if let Some(p) = pool.filter(|p| {
-                        rows == 1 && oh > 1 && p.threads() > 1 && !p.on_worker_thread()
+                        rows < p.threads() && oh > 1 && p.threads() > 1 && !p.on_worker_thread()
                     }) {
-                        // ---- intra-image band parallelism (batch = 1):
-                        // split this image's output rows into bands, one
-                        // pool job per band. Bands own disjoint output
-                        // rows, so the result is bit-exact vs serial.
+                        // ---- image × band fan-out (small batches): with
+                        // fewer rows than workers, row chunks alone would
+                        // leave cores idle, so split every image's output
+                        // rows into bands and fan all (image, band) tiles
+                        // out together — conv latency keeps scaling with
+                        // cores between batch=1 and batch=chunk. Tiles own
+                        // disjoint output rows, so the result is bit-exact
+                        // vs serial.
                         let row_elems = ow * oc;
-                        let band_h = ((oh + 2 * p.threads() - 1) / (2 * p.threads())).max(1);
-                        let input1 = &cur[..feat_in];
+                        let bands_per_img =
+                            ((2 * p.threads() + rows - 1) / rows).clamp(1, oh);
+                        let band_h = (oh + bands_per_img - 1) / bands_per_img;
+                        let cur_ref: &[u16] = cur;
                         match act {
                             Some(ai) => {
                                 let at = Some(&self.act_tables[*ai]);
-                                p.parallel_chunks(&mut nxt[..od], band_h * row_elems, |bi, band| {
-                                    let y0 = bi * band_h;
+                                let mut tiles: Vec<(usize, usize, &mut [u16])> =
+                                    Vec::with_capacity(rows * bands_per_img);
+                                for (r, img) in
+                                    nxt[..rows * row_stride].chunks_mut(row_stride).enumerate()
+                                {
+                                    for (bi, band) in
+                                        img[..od].chunks_mut(band_h * row_elems).enumerate()
+                                    {
+                                        tiles.push((r, bi * band_h, band));
+                                    }
+                                }
+                                p.parallel_items(tiles, |_ti, (r, y0, band)| {
+                                    let input1 =
+                                        &cur_ref[r * row_stride..r * row_stride + feat_in];
                                     let y1 = y0 + band.len() / row_elems;
                                     self.conv_band_job(
                                         cs,
@@ -1034,7 +1285,9 @@ impl LutNetwork {
                                         bias_acc,
                                         *table,
                                         at,
+                                        few,
                                         input1,
+                                        r as i64,
                                         y0,
                                         y1,
                                         y0 * row_elems,
@@ -1043,8 +1296,18 @@ impl LutNetwork {
                                 });
                             }
                             None => {
-                                p.parallel_chunks(&mut out[..od], band_h * row_elems, |bi, band| {
-                                    let y0 = bi * band_h;
+                                let mut tiles: Vec<(usize, usize, &mut [i64])> =
+                                    Vec::with_capacity(rows * bands_per_img);
+                                for (r, img) in out[..rows * od].chunks_mut(od).enumerate() {
+                                    for (bi, band) in
+                                        img.chunks_mut(band_h * row_elems).enumerate()
+                                    {
+                                        tiles.push((r, bi * band_h, band));
+                                    }
+                                }
+                                p.parallel_items(tiles, |_ti, (r, y0, band)| {
+                                    let input1 =
+                                        &cur_ref[r * row_stride..r * row_stride + feat_in];
                                     let y1 = y0 + band.len() / row_elems;
                                     self.conv_band_job(
                                         cs,
@@ -1052,7 +1315,9 @@ impl LutNetwork {
                                         bias_acc,
                                         *table,
                                         None,
+                                        few,
                                         input1,
+                                        r as i64,
                                         y0,
                                         y1,
                                         y0 * row_elems,
@@ -1062,8 +1327,18 @@ impl LutNetwork {
                             }
                         }
                     } else {
-                        // ---- serial tiled strategy (caller's scratch) ----
+                        // ---- serial tiled strategy (caller's scratch).
+                        // The ring is keyed on (image, input row): one
+                        // invalidation per layer, then the whole chunk's
+                        // images walk through without per-image rebuilds.
                         let at = act.map(|ai| &self.act_tables[ai]);
+                        reset_conv_ring(
+                            cs.k_h,
+                            ow * cs.k_w * cs.in_c,
+                            t.pad_index(),
+                            ring,
+                            ring_iy,
+                        );
                         for r in 0..rows {
                             let input1 = &cur[r * row_stride..r * row_stride + feat_in];
                             let target = match act {
@@ -1079,12 +1354,16 @@ impl LutNetwork {
                                 bias_acc,
                                 at,
                                 kernel,
+                                few,
                                 input1,
+                                r as i64,
                                 0,
                                 oh,
                                 0,
                                 ring,
                                 ring_iy,
+                                dl,
+                                dl16,
                                 acc,
                                 acc64,
                                 target,
@@ -1134,11 +1413,12 @@ impl LutNetwork {
         }
     }
 
-    /// One intra-image conv band job: run output rows `[y0, y1)` of a
-    /// single image out of the per-worker band scratch. `base` is the
-    /// image-local element offset of the band's first row; `out` is
-    /// where the band lands — next-layer level indices (with `at`
-    /// supplying the activation table) or the network's final sums.
+    /// One conv band job of the image × band fan-out: run output rows
+    /// `[y0, y1)` of image `img` out of the per-worker band scratch.
+    /// `base` is the image-local element offset of the band's first
+    /// row; `out` is where the band lands — next-layer level indices
+    /// (with `at` supplying the activation table) or the network's
+    /// final sums.
     #[allow(clippy::too_many_arguments)]
     fn conv_band_job(
         &self,
@@ -1147,7 +1427,9 @@ impl LutNetwork {
         bias_acc: &[i32],
         table: usize,
         at: Option<&ActTable>,
+        few: Option<&FewLevelLayer>,
         input: &[u16],
+        img: i64,
         y0: usize,
         y1: usize,
         base: usize,
@@ -1161,7 +1443,13 @@ impl LutNetwork {
                 ring_iy,
                 acc,
                 acc64,
+                dl,
+                dl16,
             } = bs;
+            // A worker's band scratch may hold another layer's (or
+            // image's) expansions; invalidate before this job's sweep.
+            let xl = cs.out_w() * cs.k_w * cs.in_c;
+            reset_conv_ring(cs.k_h, xl, t.pad_index(), ring, ring_iy);
             conv_exec_dispatch(
                 t,
                 cs,
@@ -1169,12 +1457,16 @@ impl LutNetwork {
                 bias_acc,
                 at,
                 self.exec.kernel,
+                few,
                 input,
+                img,
                 y0,
                 y1,
                 base,
                 ring,
                 ring_iy,
+                dl,
+                dl16,
                 acc,
                 acc64,
                 out,
@@ -1436,6 +1728,13 @@ impl LutNetwork {
                 bytes += bias_acc.len() * std::mem::size_of::<i32>();
             }
         }
+        // Few-level tier: reordered position/run streams + the static
+        // baseline/difference columns.
+        for f in self.exec.few.iter().flatten() {
+            bytes += (f.pos.len() + f.counts.len() + f.starts.len()) * std::mem::size_of::<u32>()
+                + (f.basecol.len() + f.dcols.len()) * std::mem::size_of::<i32>()
+                + f.dcols16.as_ref().map_or(0, |d| d.len() * std::mem::size_of::<i16>());
+        }
         let centers: usize = match &self.books {
             CodebookSet::Global(cb) => cb.len(),
             CodebookSet::PerLayer(cbs) => cbs.iter().map(|c| c.len()).sum(),
@@ -1506,11 +1805,17 @@ pub(crate) fn build_exec_plan(
     let mut max_patch = 0usize;
     let mut conv_ring = 0usize;
     let mut max_kh = 0usize;
+    let mut conv_macs = 0usize;
+    let mut dense_macs = 0usize;
+    let mut bandable_conv = false;
     for layer in layers {
         match layer {
-            LutLayer::Dense { out_dim, .. } => {
+            LutLayer::Dense {
+                in_dim, out_dim, ..
+            } => {
                 elems = *out_dim;
                 max_acc = max_acc.max((*out_dim).min(DENSE_COL_BLOCK));
+                dense_macs += in_dim * out_dim;
             }
             LutLayer::Conv { spec, .. } => {
                 elems = spec.out_h() * spec.out_w() * spec.out_c;
@@ -1521,6 +1826,8 @@ pub(crate) fn build_exec_plan(
                 let xl = spec.out_w() * spec.k_w * spec.in_c;
                 conv_ring = conv_ring.max((spec.k_h + 1) * xl);
                 max_kh = max_kh.max(spec.k_h);
+                conv_macs += elems * spec.fan_in();
+                bandable_conv |= spec.out_h() > 1;
             }
             LutLayer::MaxPool {
                 out_h, out_w, chans, ..
@@ -1531,6 +1838,7 @@ pub(crate) fn build_exec_plan(
         }
         max_elems = max_elems.max(elems);
     }
+    let small_batch_bands = bandable_conv && conv_macs >= dense_macs;
     // Two u16 ping-pong planes per row.
     let per_row_bytes = 4 * max_elems.max(1);
     let chunk_rows = (CHUNK_TARGET_BYTES / per_row_bytes).clamp(1, MAX_CHUNK_ROWS);
@@ -1544,6 +1852,42 @@ pub(crate) fn build_exec_plan(
     } else {
         Kernel::I32xI64
     };
+    // Few-level tier: a gather-free plan for every layer whose codebook
+    // is small enough (see `build_few_level` for the gating), plus the
+    // sizing of the shared difference-plane scratch. Dense row blocks
+    // and conv position blocks are the same width, so one size fits
+    // both executor families.
+    let mut few: Vec<Option<FewLevelLayer>> = Vec::with_capacity(layers.len());
+    let mut few_elems = 0usize;
+    let mut few_elems16 = 0usize;
+    for layer in layers {
+        let built = match layer {
+            LutLayer::Dense {
+                in_dim,
+                out_dim,
+                w_idx,
+                table,
+                ..
+            } => build_few_level(w_idx, *out_dim, &tables[*table], kernel, plan, cfg)
+                .map(|f| (*in_dim, f)),
+            LutLayer::Conv { spec, w_idx, table, .. } => {
+                build_few_level(w_idx, spec.out_c, &tables[*table], kernel, plan, cfg)
+                    .map(|f| (spec.fan_in(), f))
+            }
+            _ => None,
+        };
+        match built {
+            Some((n_in, f)) => {
+                let w1 = f.w1();
+                few_elems = few_elems.max(DENSE_ROW_BLOCK * w1 * n_in);
+                if f.dcols16.is_some() {
+                    few_elems16 = few_elems16.max(DENSE_ROW_BLOCK * w1 * (n_in + 1));
+                }
+                few.push(Some(f));
+            }
+            None => few.push(None),
+        }
+    }
     ExecPlan {
         max_elems,
         max_acc,
@@ -1552,7 +1896,116 @@ pub(crate) fn build_exec_plan(
         max_kh,
         chunk_rows,
         kernel,
+        few,
+        few_elems,
+        few_elems16,
+        small_batch_bands,
     }
+}
+
+/// Build the gather-free few-level plan for one parameterized layer, or
+/// None when the layer must stay on the gather ladder: codebook larger
+/// than [`FEW_LEVEL_MAX`], the knob off, a difference entry that would
+/// not fit the i32 DL cell (conceivable only under the `I32xI64`
+/// kernel), or — on the i32-accumulator kernels — a transient bound the
+/// overflow analysis cannot clear.
+///
+/// `w_idx` is the layer's `[n_in × n_out]` input-major index matrix
+/// (`n_in` = `in_dim` for dense, `fan_in` for conv).
+fn build_few_level(
+    w_idx: &[u32],
+    n_out: usize,
+    t: &MulTable,
+    kernel: Kernel,
+    plan: &FixedPointPlan,
+    cfg: &CompileCfg,
+) -> Option<FewLevelLayer> {
+    let w = t.w_cols;
+    if !cfg.few_level || !(2..=FEW_LEVEL_MAX).contains(&w) || n_out == 0 || w_idx.is_empty() {
+        return None;
+    }
+    // Transient-overflow gate for the i32-accumulator kernels: the
+    // running accumulator is bias + C + a partial sum of difference
+    // entries — bounded by max_accum (bias + baseline constant) plus
+    // 2·max_accum (|D| ≤ 2·max_entry over ≤ fan_in terms); 4× is a safe
+    // envelope. The I32xI64 kernel accumulates in i64 and needs no gate
+    // (fits_i64 is a compile precondition).
+    if kernel != Kernel::I32xI64
+        && plan.overflow.max_accum.saturating_mul(4) > i32::MAX as i128
+    {
+        return None;
+    }
+    let n_in = w_idx.len() / n_out;
+    debug_assert_eq!(n_in * n_out, w_idx.len());
+
+    // Baseline v* = the most frequent level across the whole layer —
+    // its positions are elided, so picking the mode minimizes the
+    // streamed index count (ties resolved to the lowest level, keeping
+    // the plan deterministic for artifact rebuilds).
+    let mut hist = vec![0u64; w];
+    for &i in w_idx {
+        hist[i as usize] += 1;
+    }
+    let base = (0..w).max_by_key(|&v| (hist[v], std::cmp::Reverse(v))).unwrap_or(0);
+
+    let arows = t.rows();
+    let basecol: Vec<i32> = (0..arows).map(|a| t.at(a, base)).collect();
+    // Contributing non-baseline levels, ascending. A level whose
+    // difference column is identically zero (duplicate codebook
+    // centers) is covered by the baseline constant and is dropped here
+    // entirely — no column, no runs, no DL plane built for it.
+    let mut kept: Vec<usize> = Vec::new();
+    let mut dcols: Vec<i32> = Vec::new();
+    for v in (0..w).filter(|&v| v != base) {
+        let mut col = Vec::with_capacity(arows);
+        let mut all_zero = true;
+        for (a, &b) in basecol.iter().enumerate() {
+            let d = t.at(a, v) as i64 - b as i64;
+            if i32::try_from(d).is_err() {
+                return None; // difference overflows the DL cell
+            }
+            all_zero &= d == 0;
+            col.push(d as i32);
+        }
+        if all_zero {
+            continue;
+        }
+        kept.push(v);
+        dcols.extend_from_slice(&col);
+    }
+    let w1 = kept.len();
+    let fits16 = dcols
+        .iter()
+        .all(|&d| (i16::MIN as i32..=i16::MAX as i32).contains(&d));
+    let dcols16 = fits16.then(|| dcols.iter().map(|&d| d as i16).collect::<Vec<i16>>());
+
+    // Transpose the index matrix into per-output, level-partitioned
+    // position runs (ascending position within a run: the gather walks
+    // each DL plane monotonically).
+    let mut pos: Vec<u32> = Vec::new();
+    let mut counts = vec![0u32; n_out * w1];
+    let mut starts = Vec::with_capacity(n_out);
+    for o in 0..n_out {
+        starts.push(pos.len() as u32);
+        for (vp, &v) in kept.iter().enumerate() {
+            let before = pos.len();
+            for i in 0..n_in {
+                if w_idx[i * n_out + o] as usize == v {
+                    pos.push(i as u32);
+                }
+            }
+            counts[o * w1 + vp] = (pos.len() - before) as u32;
+        }
+    }
+    Some(FewLevelLayer {
+        base: base as u32,
+        basecol,
+        dcols,
+        dcols16,
+        pos,
+        counts,
+        starts,
+    })
 }
 
 /// Blocked dense layer on i32 accumulators. `emit(row, out_offset,
@@ -1649,6 +2102,217 @@ fn dense_exec_i64<E: FnMut(usize, usize, &[i64])>(
                     let arow = &mut acc64[r * bw..(r + 1) * bw];
                     for (j, &wi) in wrow.iter().enumerate() {
                         arow[j] += trow[wi as usize] as i64;
+                    }
+                }
+            }
+            for r in 0..m {
+                emit(r0 + r, ob, &acc64[r * bw..(r + 1) * bw]);
+            }
+            ob += bw;
+        }
+        r0 += m;
+    }
+}
+
+/// Blocked dense layer on the gather-free few-level tier, i32
+/// accumulators (see the module docs §"The few-level tier"). Per row
+/// block it builds the baseline constants `C_r` and the per-level
+/// difference planes `DL_r[v'][i] = dcols[v'][a_{r,i}]` once (the only
+/// activation-indexed reads), then every output is a handful of
+/// [`super::simd::gather_sum`] run folds over those L1-resident planes
+/// — the mul-table is never touched in the inner loop. `emit` receives
+/// (row × column-block) tiles exactly like [`dense_exec_i32`].
+#[allow(clippy::too_many_arguments)]
+fn dense_exec_fewlevel_i32<E: FnMut(usize, usize, &[i32])>(
+    few: &FewLevelLayer,
+    in_dim: usize,
+    out_dim: usize,
+    bias_acc: &[i32],
+    rows: usize,
+    row_stride: usize,
+    cur: &[u16],
+    dl: &mut [i32],
+    acc: &mut [i32],
+    mut emit: E,
+) {
+    let arows = few.basecol.len();
+    let w1 = few.w1();
+    let mut r0 = 0;
+    while r0 < rows {
+        let m = DENSE_ROW_BLOCK.min(rows - r0);
+        let mut c = [0i32; DENSE_ROW_BLOCK];
+        for r in 0..m {
+            let arow = &cur[(r0 + r) * row_stride..(r0 + r) * row_stride + in_dim];
+            let mut cv = 0i32;
+            for (i, &a) in arow.iter().enumerate() {
+                let a = a as usize;
+                cv += few.basecol[a];
+                for v in 0..w1 {
+                    dl[(r * w1 + v) * in_dim + i] = few.dcols[v * arows + a];
+                }
+            }
+            c[r] = cv;
+        }
+        let mut ob = 0;
+        while ob < out_dim {
+            let bw = DENSE_COL_BLOCK.min(out_dim - ob);
+            for o in 0..bw {
+                let oo = ob + o;
+                for r in 0..m {
+                    acc[r * bw + o] = bias_acc[oo] + c[r];
+                }
+                // One walk of the output's run list serves all `m`
+                // rows — the dense path's cache blocking, applied to
+                // the reordered stream.
+                let mut p = few.starts[oo] as usize;
+                for v in 0..w1 {
+                    let n = few.counts[oo * w1 + v] as usize;
+                    if n == 0 {
+                        continue;
+                    }
+                    let run = &few.pos[p..p + n];
+                    p += n;
+                    for r in 0..m {
+                        let plane = &dl[(r * w1 + v) * in_dim..(r * w1 + v + 1) * in_dim];
+                        acc[r * bw + o] += super::simd::gather_sum(plane, run);
+                    }
+                }
+            }
+            for r in 0..m {
+                emit(r0 + r, ob, &acc[r * bw..(r + 1) * bw]);
+            }
+            ob += bw;
+        }
+        r0 += m;
+    }
+}
+
+/// Few-level dense layer on compact i16 difference planes (widened
+/// [`super::simd::gather_sum_i16`]; each DL slice carries a trailing
+/// read-past pad element). Requires `FewLevelLayer::dcols16`.
+#[allow(clippy::too_many_arguments)]
+fn dense_exec_fewlevel_i16<E: FnMut(usize, usize, &[i32])>(
+    few: &FewLevelLayer,
+    in_dim: usize,
+    out_dim: usize,
+    bias_acc: &[i32],
+    rows: usize,
+    row_stride: usize,
+    cur: &[u16],
+    dl16: &mut [i16],
+    acc: &mut [i32],
+    mut emit: E,
+) {
+    let arows = few.basecol.len();
+    let d16 = few
+        .dcols16
+        .as_deref()
+        .expect("few-level i16 executor requires compact difference columns");
+    let w1 = few.w1();
+    let sl = in_dim + 1; // DL slice stride incl. the SIMD read-past pad
+    let mut r0 = 0;
+    while r0 < rows {
+        let m = DENSE_ROW_BLOCK.min(rows - r0);
+        let mut c = [0i32; DENSE_ROW_BLOCK];
+        for r in 0..m {
+            let arow = &cur[(r0 + r) * row_stride..(r0 + r) * row_stride + in_dim];
+            let mut cv = 0i32;
+            for (i, &a) in arow.iter().enumerate() {
+                let a = a as usize;
+                cv += few.basecol[a];
+                for v in 0..w1 {
+                    dl16[(r * w1 + v) * sl + i] = d16[v * arows + a];
+                }
+            }
+            c[r] = cv;
+            for v in 0..w1 {
+                dl16[(r * w1 + v) * sl + in_dim] = 0; // pad
+            }
+        }
+        let mut ob = 0;
+        while ob < out_dim {
+            let bw = DENSE_COL_BLOCK.min(out_dim - ob);
+            for o in 0..bw {
+                let oo = ob + o;
+                for r in 0..m {
+                    acc[r * bw + o] = bias_acc[oo] + c[r];
+                }
+                let mut p = few.starts[oo] as usize;
+                for v in 0..w1 {
+                    let n = few.counts[oo * w1 + v] as usize;
+                    if n == 0 {
+                        continue;
+                    }
+                    let run = &few.pos[p..p + n];
+                    p += n;
+                    for r in 0..m {
+                        let plane = &dl16[(r * w1 + v) * sl..(r * w1 + v) * sl + sl];
+                        acc[r * bw + o] += super::simd::gather_sum_i16(plane, run);
+                    }
+                }
+            }
+            for r in 0..m {
+                emit(r0 + r, ob, &acc[r * bw..(r + 1) * bw]);
+            }
+            ob += bw;
+        }
+        r0 += m;
+    }
+}
+
+/// Few-level dense layer on i64 accumulators (the always-safe scalar
+/// fallback paired with the `I32xI64` kernel; no transient-overflow
+/// gate needed).
+#[allow(clippy::too_many_arguments)]
+fn dense_exec_fewlevel_i64<E: FnMut(usize, usize, &[i64])>(
+    few: &FewLevelLayer,
+    in_dim: usize,
+    out_dim: usize,
+    bias_acc: &[i32],
+    rows: usize,
+    row_stride: usize,
+    cur: &[u16],
+    dl: &mut [i32],
+    acc64: &mut [i64],
+    mut emit: E,
+) {
+    let arows = few.basecol.len();
+    let w1 = few.w1();
+    let mut r0 = 0;
+    while r0 < rows {
+        let m = DENSE_ROW_BLOCK.min(rows - r0);
+        let mut c = [0i64; DENSE_ROW_BLOCK];
+        for r in 0..m {
+            let arow = &cur[(r0 + r) * row_stride..(r0 + r) * row_stride + in_dim];
+            let mut cv = 0i64;
+            for (i, &a) in arow.iter().enumerate() {
+                let a = a as usize;
+                cv += few.basecol[a] as i64;
+                for v in 0..w1 {
+                    dl[(r * w1 + v) * in_dim + i] = few.dcols[v * arows + a];
+                }
+            }
+            c[r] = cv;
+        }
+        let mut ob = 0;
+        while ob < out_dim {
+            let bw = DENSE_COL_BLOCK.min(out_dim - ob);
+            for o in 0..bw {
+                let oo = ob + o;
+                for r in 0..m {
+                    acc64[r * bw + o] = bias_acc[oo] as i64 + c[r];
+                }
+                let mut p = few.starts[oo] as usize;
+                for v in 0..w1 {
+                    let n = few.counts[oo * w1 + v] as usize;
+                    if n == 0 {
+                        continue;
+                    }
+                    let run = &few.pos[p..p + n];
+                    p += n;
+                    for r in 0..m {
+                        let plane = &dl[(r * w1 + v) * in_dim..(r * w1 + v + 1) * in_dim];
+                        acc64[r * bw + o] += super::simd::gather_sum_i64(plane, run);
                     }
                 }
             }
@@ -1826,15 +2490,20 @@ fn expand_row(cs: &Conv2dSpec, row: &[u16], pad_idx: u16, xrow: &mut [u16]) {
     }
 }
 
-/// Make sure every in-image kernel row of output row `oy` is expanded in
-/// the ring. Slot `iy % k_h` holds input row `iy` (the `k_h` rows an
-/// output row needs are consecutive, so they never collide); slot `k_h`
-/// is the shared all-padding row, pre-filled by the caller. `ring_iy`
-/// tracks occupancy so a band sweep expands each input row exactly once.
+/// Make sure every in-image kernel row of output row `oy` of image
+/// `img` is expanded in the ring. Slot `iy % k_h` holds input row `iy`
+/// (the `k_h` rows an output row needs are consecutive, so they never
+/// collide); slot `k_h` is the shared all-padding row, pre-filled by
+/// [`reset_conv_ring`]. The directory is keyed on **(image, input
+/// row)** — tag `img·in_h + iy` — so a chunk's walk over a whole batch
+/// needs no per-image reset: a slot holding image `r`'s expansion can
+/// never falsely serve image `r+1`, including when `stride > 1` skips
+/// rows between occupancy checks.
 fn ensure_ring_rows(
     cs: &Conv2dSpec,
     input: &[u16],
     pad_idx: u16,
+    img: i64,
     oy: usize,
     ring: &mut [u16],
     ring_iy: &mut [i64],
@@ -1847,20 +2516,33 @@ fn ensure_ring_rows(
             continue; // reads resolve to the padding slot
         }
         let slot = iy as usize % cs.k_h;
-        if ring_iy[slot] == iy {
+        let tag = img * cs.in_h as i64 + iy;
+        if ring_iy[slot] == tag {
             continue;
         }
         let row = &input[iy as usize * in_row..(iy as usize + 1) * in_row];
         expand_row(cs, row, pad_idx, &mut ring[slot * xl..(slot + 1) * xl]);
-        ring_iy[slot] = iy;
+        ring_iy[slot] = tag;
     }
+}
+
+/// Invalidate the ring directory and fill the shared padding slot for
+/// one conv layer's geometry. Called once per (layer, chunk) and once
+/// per band job — the (image, row)-keyed directory makes any further
+/// per-image resets unnecessary.
+fn reset_conv_ring(k_h: usize, xl: usize, pad_idx: u16, ring: &mut [u16], ring_iy: &mut [i64]) {
+    ring_iy[..k_h].iter_mut().for_each(|s| *s = i64::MIN);
+    ring[k_h * xl..(k_h + 1) * xl].iter_mut().for_each(|p| *p = pad_idx);
 }
 
 /// Shared skeleton of the tiled conv executors, written out per kernel
 /// below: expanded-row ring + position-blocked accumulation. For output
-/// rows `y0..y1` of one image, streams the conv `w_idx` once per
+/// rows `y0..y1` of image `img`, streams the conv `w_idx` once per
 /// [`CONV_POS_BLOCK`] output positions over [`DENSE_COL_BLOCK`]-channel
-/// tiles. `emit(out_offset, accs)` receives each finished tile;
+/// tiles. The ring is keyed on (image, input row) and is **not** reset
+/// here — the caller invalidates it once per layer via
+/// [`reset_conv_ring`], and consecutive images of a chunk walk straight
+/// through. `emit(out_offset, accs)` receives each finished tile;
 /// `out_offset` is image-local: `(oy·ow + ox)·oc + ob`.
 ///
 /// Tiled conv layer on compact i16 tables + i32 accumulators (widened
@@ -1874,6 +2556,7 @@ fn conv_exec_i16<E: FnMut(usize, &[i32])>(
     w_idx: &[u32],
     bias_acc: &[i32],
     input: &[u16],
+    img: i64,
     y0: usize,
     y1: usize,
     ring: &mut [u16],
@@ -1889,10 +2572,8 @@ fn conv_exec_i16<E: FnMut(usize, &[i32])>(
     let w = t.w_cols;
     let ring = &mut ring[..(k_h + 1) * xl];
     let ring_iy = &mut ring_iy[..k_h];
-    ring_iy.iter_mut().for_each(|s| *s = i64::MIN);
-    ring[k_h * xl..].iter_mut().for_each(|p| *p = pad_idx);
     for oy in y0..y1 {
-        ensure_ring_rows(cs, input, pad_idx, oy, ring, ring_iy, xl);
+        ensure_ring_rows(cs, input, pad_idx, img, oy, ring, ring_iy, xl);
         let rring: &[u16] = ring;
         let mut ox0 = 0;
         while ox0 < ow {
@@ -1943,6 +2624,7 @@ fn conv_exec_i32<E: FnMut(usize, &[i32])>(
     w_idx: &[u32],
     bias_acc: &[i32],
     input: &[u16],
+    img: i64,
     y0: usize,
     y1: usize,
     ring: &mut [u16],
@@ -1956,10 +2638,8 @@ fn conv_exec_i32<E: FnMut(usize, &[i32])>(
     let pad_idx = t.pad_index();
     let ring = &mut ring[..(k_h + 1) * xl];
     let ring_iy = &mut ring_iy[..k_h];
-    ring_iy.iter_mut().for_each(|s| *s = i64::MIN);
-    ring[k_h * xl..].iter_mut().for_each(|p| *p = pad_idx);
     for oy in y0..y1 {
-        ensure_ring_rows(cs, input, pad_idx, oy, ring, ring_iy, xl);
+        ensure_ring_rows(cs, input, pad_idx, img, oy, ring, ring_iy, xl);
         let rring: &[u16] = ring;
         let mut ox0 = 0;
         while ox0 < ow {
@@ -2011,6 +2691,7 @@ fn conv_exec_i64<E: FnMut(usize, &[i64])>(
     w_idx: &[u32],
     bias_acc: &[i32],
     input: &[u16],
+    img: i64,
     y0: usize,
     y1: usize,
     ring: &mut [u16],
@@ -2024,10 +2705,8 @@ fn conv_exec_i64<E: FnMut(usize, &[i64])>(
     let pad_idx = t.pad_index();
     let ring = &mut ring[..(k_h + 1) * xl];
     let ring_iy = &mut ring_iy[..k_h];
-    ring_iy.iter_mut().for_each(|s| *s = i64::MIN);
-    ring[k_h * xl..].iter_mut().for_each(|p| *p = pad_idx);
     for oy in y0..y1 {
-        ensure_ring_rows(cs, input, pad_idx, oy, ring, ring_iy, xl);
+        ensure_ring_rows(cs, input, pad_idx, img, oy, ring, ring_iy, xl);
         let rring: &[u16] = ring;
         let mut ox0 = 0;
         while ox0 < ow {
@@ -2071,12 +2750,294 @@ fn conv_exec_i64<E: FnMut(usize, &[i64])>(
     }
 }
 
+/// Tiled conv layer on the gather-free few-level tier, i32
+/// accumulators. Same ring + position blocking as [`conv_exec_i32`],
+/// but per block of [`CONV_POS_BLOCK`] output pixels it builds each
+/// position's baseline constant `C_p` and difference planes
+/// `DL_p[v'][i] = dcols[v'][patch_p[i]]` once from the expanded rows,
+/// then every output channel folds its per-level runs over those planes
+/// ([`super::simd::gather_sum`]) — no `w_idx` gather, and baseline-level
+/// taps are never streamed at all.
+#[allow(clippy::too_many_arguments)]
+fn conv_exec_fewlevel_i32<E: FnMut(usize, &[i32])>(
+    few: &FewLevelLayer,
+    t: &MulTable,
+    cs: &Conv2dSpec,
+    bias_acc: &[i32],
+    input: &[u16],
+    img: i64,
+    y0: usize,
+    y1: usize,
+    ring: &mut [u16],
+    ring_iy: &mut [i64],
+    dl: &mut [i32],
+    acc: &mut [i32],
+    mut emit: E,
+) {
+    let (ow, oc) = (cs.out_w(), cs.out_c);
+    let (k_h, kwc) = (cs.k_h, cs.k_w * cs.in_c);
+    let fan = cs.fan_in();
+    let xl = ow * kwc;
+    let pad_idx = t.pad_index();
+    let arows = few.basecol.len();
+    let w1 = few.w1();
+    let ring = &mut ring[..(k_h + 1) * xl];
+    let ring_iy = &mut ring_iy[..k_h];
+    for oy in y0..y1 {
+        ensure_ring_rows(cs, input, pad_idx, img, oy, ring, ring_iy, xl);
+        let rring: &[u16] = ring;
+        let mut ox0 = 0;
+        while ox0 < ow {
+            let m = CONV_POS_BLOCK.min(ow - ox0);
+            let mut c = [0i32; CONV_POS_BLOCK];
+            for ky in 0..k_h {
+                let iy = (oy * cs.stride + ky) as i64 - cs.pad as i64;
+                let slot = if iy < 0 || iy >= cs.in_h as i64 {
+                    k_h
+                } else {
+                    iy as usize % k_h
+                };
+                let xrow = &rring[slot * xl..(slot + 1) * xl];
+                for p in 0..m {
+                    let win = &xrow[(ox0 + p) * kwc..(ox0 + p + 1) * kwc];
+                    let mut cv = c[p];
+                    for (j, &a) in win.iter().enumerate() {
+                        let a = a as usize;
+                        let i = ky * kwc + j;
+                        cv += few.basecol[a];
+                        for v in 0..w1 {
+                            dl[(p * w1 + v) * fan + i] = few.dcols[v * arows + a];
+                        }
+                    }
+                    c[p] = cv;
+                }
+            }
+            let mut ob = 0;
+            while ob < oc {
+                let bw = DENSE_COL_BLOCK.min(oc - ob);
+                for o in 0..bw {
+                    let oo = ob + o;
+                    for p in 0..m {
+                        acc[p * bw + o] = bias_acc[oo] + c[p];
+                    }
+                    let mut q = few.starts[oo] as usize;
+                    for v in 0..w1 {
+                        let n = few.counts[oo * w1 + v] as usize;
+                        if n == 0 {
+                            continue;
+                        }
+                        let run = &few.pos[q..q + n];
+                        q += n;
+                        for p in 0..m {
+                            let plane = &dl[(p * w1 + v) * fan..(p * w1 + v + 1) * fan];
+                            acc[p * bw + o] += super::simd::gather_sum(plane, run);
+                        }
+                    }
+                }
+                for p in 0..m {
+                    emit((oy * ow + ox0 + p) * oc + ob, &acc[p * bw..(p + 1) * bw]);
+                }
+                ob += bw;
+            }
+            ox0 += m;
+        }
+    }
+}
+
+/// Few-level conv layer on compact i16 difference planes (widened
+/// gather-sum; each DL slice carries a trailing read-past pad).
+/// Requires `FewLevelLayer::dcols16`.
+#[allow(clippy::too_many_arguments)]
+fn conv_exec_fewlevel_i16<E: FnMut(usize, &[i32])>(
+    few: &FewLevelLayer,
+    t: &MulTable,
+    cs: &Conv2dSpec,
+    bias_acc: &[i32],
+    input: &[u16],
+    img: i64,
+    y0: usize,
+    y1: usize,
+    ring: &mut [u16],
+    ring_iy: &mut [i64],
+    dl16: &mut [i16],
+    acc: &mut [i32],
+    mut emit: E,
+) {
+    let (ow, oc) = (cs.out_w(), cs.out_c);
+    let (k_h, kwc) = (cs.k_h, cs.k_w * cs.in_c);
+    let fan = cs.fan_in();
+    let xl = ow * kwc;
+    let pad_idx = t.pad_index();
+    let arows = few.basecol.len();
+    let d16 = few
+        .dcols16
+        .as_deref()
+        .expect("few-level i16 executor requires compact difference columns");
+    let w1 = few.w1();
+    let sl = fan + 1; // DL slice stride incl. the SIMD read-past pad
+    let ring = &mut ring[..(k_h + 1) * xl];
+    let ring_iy = &mut ring_iy[..k_h];
+    for oy in y0..y1 {
+        ensure_ring_rows(cs, input, pad_idx, img, oy, ring, ring_iy, xl);
+        let rring: &[u16] = ring;
+        let mut ox0 = 0;
+        while ox0 < ow {
+            let m = CONV_POS_BLOCK.min(ow - ox0);
+            let mut c = [0i32; CONV_POS_BLOCK];
+            for ky in 0..k_h {
+                let iy = (oy * cs.stride + ky) as i64 - cs.pad as i64;
+                let slot = if iy < 0 || iy >= cs.in_h as i64 {
+                    k_h
+                } else {
+                    iy as usize % k_h
+                };
+                let xrow = &rring[slot * xl..(slot + 1) * xl];
+                for p in 0..m {
+                    let win = &xrow[(ox0 + p) * kwc..(ox0 + p + 1) * kwc];
+                    let mut cv = c[p];
+                    for (j, &a) in win.iter().enumerate() {
+                        let a = a as usize;
+                        let i = ky * kwc + j;
+                        cv += few.basecol[a];
+                        for v in 0..w1 {
+                            dl16[(p * w1 + v) * sl + i] = d16[v * arows + a];
+                        }
+                    }
+                    c[p] = cv;
+                }
+            }
+            for p in 0..m {
+                for v in 0..w1 {
+                    dl16[(p * w1 + v) * sl + fan] = 0; // pad
+                }
+            }
+            let mut ob = 0;
+            while ob < oc {
+                let bw = DENSE_COL_BLOCK.min(oc - ob);
+                for o in 0..bw {
+                    let oo = ob + o;
+                    for p in 0..m {
+                        acc[p * bw + o] = bias_acc[oo] + c[p];
+                    }
+                    let mut q = few.starts[oo] as usize;
+                    for v in 0..w1 {
+                        let n = few.counts[oo * w1 + v] as usize;
+                        if n == 0 {
+                            continue;
+                        }
+                        let run = &few.pos[q..q + n];
+                        q += n;
+                        for p in 0..m {
+                            let plane = &dl16[(p * w1 + v) * sl..(p * w1 + v) * sl + sl];
+                            acc[p * bw + o] += super::simd::gather_sum_i16(plane, run);
+                        }
+                    }
+                }
+                for p in 0..m {
+                    emit((oy * ow + ox0 + p) * oc + ob, &acc[p * bw..(p + 1) * bw]);
+                }
+                ob += bw;
+            }
+            ox0 += m;
+        }
+    }
+}
+
+/// Few-level conv layer on i64 accumulators (the always-safe scalar
+/// fallback paired with the `I32xI64` kernel).
+#[allow(clippy::too_many_arguments)]
+fn conv_exec_fewlevel_i64<E: FnMut(usize, &[i64])>(
+    few: &FewLevelLayer,
+    t: &MulTable,
+    cs: &Conv2dSpec,
+    bias_acc: &[i32],
+    input: &[u16],
+    img: i64,
+    y0: usize,
+    y1: usize,
+    ring: &mut [u16],
+    ring_iy: &mut [i64],
+    dl: &mut [i32],
+    acc64: &mut [i64],
+    mut emit: E,
+) {
+    let (ow, oc) = (cs.out_w(), cs.out_c);
+    let (k_h, kwc) = (cs.k_h, cs.k_w * cs.in_c);
+    let fan = cs.fan_in();
+    let xl = ow * kwc;
+    let pad_idx = t.pad_index();
+    let arows = few.basecol.len();
+    let w1 = few.w1();
+    let ring = &mut ring[..(k_h + 1) * xl];
+    let ring_iy = &mut ring_iy[..k_h];
+    for oy in y0..y1 {
+        ensure_ring_rows(cs, input, pad_idx, img, oy, ring, ring_iy, xl);
+        let rring: &[u16] = ring;
+        let mut ox0 = 0;
+        while ox0 < ow {
+            let m = CONV_POS_BLOCK.min(ow - ox0);
+            let mut c = [0i64; CONV_POS_BLOCK];
+            for ky in 0..k_h {
+                let iy = (oy * cs.stride + ky) as i64 - cs.pad as i64;
+                let slot = if iy < 0 || iy >= cs.in_h as i64 {
+                    k_h
+                } else {
+                    iy as usize % k_h
+                };
+                let xrow = &rring[slot * xl..(slot + 1) * xl];
+                for p in 0..m {
+                    let win = &xrow[(ox0 + p) * kwc..(ox0 + p + 1) * kwc];
+                    let mut cv = c[p];
+                    for (j, &a) in win.iter().enumerate() {
+                        let a = a as usize;
+                        let i = ky * kwc + j;
+                        cv += few.basecol[a] as i64;
+                        for v in 0..w1 {
+                            dl[(p * w1 + v) * fan + i] = few.dcols[v * arows + a];
+                        }
+                    }
+                    c[p] = cv;
+                }
+            }
+            let mut ob = 0;
+            while ob < oc {
+                let bw = DENSE_COL_BLOCK.min(oc - ob);
+                for o in 0..bw {
+                    let oo = ob + o;
+                    for p in 0..m {
+                        acc64[p * bw + o] = bias_acc[oo] as i64 + c[p];
+                    }
+                    let mut q = few.starts[oo] as usize;
+                    for v in 0..w1 {
+                        let n = few.counts[oo * w1 + v] as usize;
+                        if n == 0 {
+                            continue;
+                        }
+                        let run = &few.pos[q..q + n];
+                        q += n;
+                        for p in 0..m {
+                            let plane = &dl[(p * w1 + v) * fan..(p * w1 + v + 1) * fan];
+                            acc64[p * bw + o] += super::simd::gather_sum_i64(plane, run);
+                        }
+                    }
+                }
+                for p in 0..m {
+                    emit((oy * ow + ox0 + p) * oc + ob, &acc64[p * bw..(p + 1) * bw]);
+                }
+                ob += bw;
+            }
+            ox0 += m;
+        }
+    }
+}
+
 /// The six-way (kernel × output-target) dispatch shared by the serial
-/// per-row conv path and the intra-image band jobs: pick the tiled
-/// executor for `kernel` and route its tiles either through the
-/// activation table into level indices or straight out as i64 sums.
-/// `base` is subtracted from the executors' image-local offsets to
-/// index the (possibly band-sized) output slice.
+/// per-row conv path and the image × band jobs: pick the tiled executor
+/// for `kernel` — few-level when the layer has a gather-free plan — and
+/// route its tiles either through the activation table into level
+/// indices or straight out as i64 sums. `base` is subtracted from the
+/// executors' image-local offsets to index the (possibly band-sized)
+/// output slice; `img` keys the expanded-row ring.
 #[allow(clippy::too_many_arguments)]
 fn conv_exec_dispatch(
     t: &MulTable,
@@ -2085,133 +3046,235 @@ fn conv_exec_dispatch(
     bias_acc: &[i32],
     at: Option<&ActTable>,
     kernel: Kernel,
+    few: Option<&FewLevelLayer>,
     input: &[u16],
+    img: i64,
     y0: usize,
     y1: usize,
     base: usize,
     ring: &mut [u16],
     ring_iy: &mut [i64],
+    dl: &mut [i32],
+    dl16: &mut [i16],
     acc: &mut [i32],
     acc64: &mut [i64],
     out: ConvBandOut<'_>,
 ) {
+    // The widened-i16 DL variant mirrors the table ladder: engaged only
+    // when the whole net runs the compact kernel.
+    let use_i16 = kernel == Kernel::I16xI32;
     match (kernel, out) {
-        (Kernel::I16xI32, ConvBandOut::Levels(band)) => {
+        (Kernel::I16xI32 | Kernel::I32xI32, ConvBandOut::Levels(band)) => {
             let at = at.expect("level output needs an activation table");
-            conv_exec_i16(
-                t,
-                cs,
-                w_idx,
-                bias_acc,
-                input,
-                y0,
-                y1,
-                ring,
-                ring_iy,
-                acc,
-                |off, accs: &[i32]| {
-                    for (j, &a) in accs.iter().enumerate() {
-                        band[off - base + j] = at.lookup(a as i64);
-                    }
-                },
-            );
-        }
-        (Kernel::I32xI32, ConvBandOut::Levels(band)) => {
-            let at = at.expect("level output needs an activation table");
-            conv_exec_i32(
-                t,
-                cs,
-                w_idx,
-                bias_acc,
-                input,
-                y0,
-                y1,
-                ring,
-                ring_iy,
-                acc,
-                |off, accs: &[i32]| {
-                    for (j, &a) in accs.iter().enumerate() {
-                        band[off - base + j] = at.lookup(a as i64);
-                    }
-                },
-            );
+            let emit = |off: usize, accs: &[i32]| {
+                for (j, &a) in accs.iter().enumerate() {
+                    band[off - base + j] = at.lookup(a as i64);
+                }
+            };
+            match few {
+                Some(f) if use_i16 && f.dcols16.is_some() => conv_exec_fewlevel_i16(
+                    f,
+                    t,
+                    cs,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    dl16,
+                    acc,
+                    emit,
+                ),
+                Some(f) => conv_exec_fewlevel_i32(
+                    f,
+                    t,
+                    cs,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    dl,
+                    acc,
+                    emit,
+                ),
+                None if use_i16 => conv_exec_i16(
+                    t,
+                    cs,
+                    w_idx,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    acc,
+                    emit,
+                ),
+                None => conv_exec_i32(
+                    t,
+                    cs,
+                    w_idx,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    acc,
+                    emit,
+                ),
+            }
         }
         (Kernel::I32xI64, ConvBandOut::Levels(band)) => {
             let at = at.expect("level output needs an activation table");
-            conv_exec_i64(
-                t,
-                cs,
-                w_idx,
-                bias_acc,
-                input,
-                y0,
-                y1,
-                ring,
-                ring_iy,
-                acc64,
-                |off, accs: &[i64]| {
-                    for (j, &a) in accs.iter().enumerate() {
-                        band[off - base + j] = at.lookup(a);
-                    }
-                },
-            );
+            let emit = |off: usize, accs: &[i64]| {
+                for (j, &a) in accs.iter().enumerate() {
+                    band[off - base + j] = at.lookup(a);
+                }
+            };
+            match few {
+                Some(f) => conv_exec_fewlevel_i64(
+                    f,
+                    t,
+                    cs,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    dl,
+                    acc64,
+                    emit,
+                ),
+                None => conv_exec_i64(
+                    t,
+                    cs,
+                    w_idx,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    acc64,
+                    emit,
+                ),
+            }
         }
-        (Kernel::I16xI32, ConvBandOut::Sums(band)) => {
-            conv_exec_i16(
-                t,
-                cs,
-                w_idx,
-                bias_acc,
-                input,
-                y0,
-                y1,
-                ring,
-                ring_iy,
-                acc,
-                |off, accs: &[i32]| {
-                    for (j, &a) in accs.iter().enumerate() {
-                        band[off - base + j] = a as i64;
-                    }
-                },
-            );
-        }
-        (Kernel::I32xI32, ConvBandOut::Sums(band)) => {
-            conv_exec_i32(
-                t,
-                cs,
-                w_idx,
-                bias_acc,
-                input,
-                y0,
-                y1,
-                ring,
-                ring_iy,
-                acc,
-                |off, accs: &[i32]| {
-                    for (j, &a) in accs.iter().enumerate() {
-                        band[off - base + j] = a as i64;
-                    }
-                },
-            );
+        (Kernel::I16xI32 | Kernel::I32xI32, ConvBandOut::Sums(band)) => {
+            let emit = |off: usize, accs: &[i32]| {
+                for (j, &a) in accs.iter().enumerate() {
+                    band[off - base + j] = a as i64;
+                }
+            };
+            match few {
+                Some(f) if use_i16 && f.dcols16.is_some() => conv_exec_fewlevel_i16(
+                    f,
+                    t,
+                    cs,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    dl16,
+                    acc,
+                    emit,
+                ),
+                Some(f) => conv_exec_fewlevel_i32(
+                    f,
+                    t,
+                    cs,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    dl,
+                    acc,
+                    emit,
+                ),
+                None if use_i16 => conv_exec_i16(
+                    t,
+                    cs,
+                    w_idx,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    acc,
+                    emit,
+                ),
+                None => conv_exec_i32(
+                    t,
+                    cs,
+                    w_idx,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    acc,
+                    emit,
+                ),
+            }
         }
         (Kernel::I32xI64, ConvBandOut::Sums(band)) => {
-            conv_exec_i64(
-                t,
-                cs,
-                w_idx,
-                bias_acc,
-                input,
-                y0,
-                y1,
-                ring,
-                ring_iy,
-                acc64,
-                |off, accs: &[i64]| {
-                    for (j, &a) in accs.iter().enumerate() {
-                        band[off - base + j] = a;
-                    }
-                },
-            );
+            let emit = |off: usize, accs: &[i64]| {
+                for (j, &a) in accs.iter().enumerate() {
+                    band[off - base + j] = a;
+                }
+            };
+            match few {
+                Some(f) => conv_exec_fewlevel_i64(
+                    f,
+                    t,
+                    cs,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    dl,
+                    acc64,
+                    emit,
+                ),
+                None => conv_exec_i64(
+                    t,
+                    cs,
+                    w_idx,
+                    bias_acc,
+                    input,
+                    img,
+                    y0,
+                    y1,
+                    ring,
+                    ring_iy,
+                    acc64,
+                    emit,
+                ),
+            }
         }
     }
 }
@@ -2546,6 +3609,165 @@ mod tests {
         let mut par = vec![0i64; lut.out_dim()];
         lut.forward_indices_into_with(&idx, 1, &mut par, Some(&pool));
         assert_eq!(par, naive.sums);
+    }
+
+    #[test]
+    fn fewlevel_engages_on_ternary_and_matches_gather_and_naive() {
+        // Paper-faithful ternary: symmetric {−c, 0, +c} centers. The
+        // few-level tier must engage on every parameterized layer, the
+        // opt-out knob must disable it, and all paths must agree with
+        // the oracle bit-for-bit.
+        let spec = NetSpec::mlp("tern", 24, &[32, 16], 5, ActSpec::tanh_d(8));
+        let mut rng = Xoshiro256::new(41);
+        let mut net = Network::from_spec(&spec, &mut rng);
+        let mut flat = net.flat_weights();
+        let cb = Codebook::new(vec![-0.5, 0.0, 0.5]);
+        cb.quantize_slice(&mut flat);
+        net.set_flat_weights(&flat);
+        let cfg = CompileCfg {
+            act_table_len: 16,
+            ..CompileCfg::default()
+        };
+        let cfg_gather = CompileCfg {
+            few_level: false,
+            ..cfg.clone()
+        };
+        let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb.clone()), &cfg).unwrap();
+        let lut_g = LutNetwork::compile(&net, &CodebookSet::Global(cb), &cfg_gather).unwrap();
+        assert_eq!(lut.fewlevel_layers(), 3, "every dense layer is ternary");
+        assert_eq!(lut_g.fewlevel_layers(), 0, "knob must disable the tier");
+        // The baseline level is a real codebook index and its elision
+        // strictly shrinks every reordered stream vs the full w_idx.
+        for (li, f) in lut.exec.few.iter().enumerate() {
+            let f = f.as_ref().expect("every parameterized layer is on the tier");
+            if let LutLayer::Dense { w_idx, .. } = &lut.layers[li] {
+                assert!((f.base as usize) < 3);
+                assert!(
+                    f.pos.len() < w_idx.len(),
+                    "baseline elision must shrink the stream ({} vs {})",
+                    f.pos.len(),
+                    w_idx.len()
+                );
+            }
+        }
+        let batch = lut.chunk_rows() + 3;
+        let idx = random_indices(&mut rng, &lut, batch);
+        let naive = lut.forward_naive(&idx, batch);
+        assert_eq!(lut.forward_indices(&idx, batch).sums, naive.sums, "few-level path");
+        assert_eq!(lut_g.forward_indices(&idx, batch).sums, naive.sums, "gather path");
+        let mut scratch = lut.new_scratch();
+        let mut serial = vec![0i64; batch * lut.out_dim()];
+        lut.forward_into(&idx, batch, &mut serial, &mut scratch);
+        assert_eq!(serial, naive.sums, "few-level serial path");
+    }
+
+    #[test]
+    fn property_fewlevel_tier_matches_naive_and_gather() {
+        use crate::util::prop::check;
+        check(
+            "few-level executors == gather ladder == naive at |W| in {2,3,4,8}",
+            12,
+            |g| {
+                let levels = *g.choice(&[2usize, 3, 4, 8]);
+                let conv = g.bool();
+                let spec = if conv {
+                    random_conv_spec(g)
+                } else {
+                    let h1 = g.usize_in(8, 40);
+                    let h2 = g.usize_in(4, 20);
+                    NetSpec::mlp("prop-few", g.usize_in(6, 30), &[h1, h2], 5, ActSpec::tanh_d(8))
+                };
+                // ×1000 weights force the I32xI64 kernel (the few-level
+                // i64 fallback); compact_tables toggles the i16 DL.
+                let scale = *g.choice(&[1.0f32, 1.0, 1000.0]);
+                let cfg = CompileCfg {
+                    act_table_len: *g.choice(&[16usize, 64]),
+                    compact_tables: g.bool(),
+                    ..CompileCfg::default()
+                };
+                let cfg_gather = CompileCfg {
+                    few_level: false,
+                    ..cfg.clone()
+                };
+                let (net, cb) = clustered_scaled(&spec, levels, g.seed, scale);
+                let lut =
+                    LutNetwork::compile(&net, &CodebookSet::Global(cb.clone()), &cfg).unwrap();
+                let lut_g =
+                    LutNetwork::compile(&net, &CodebookSet::Global(cb), &cfg_gather).unwrap();
+                assert_eq!(lut_g.fewlevel_layers(), 0);
+                // The tier must engage whenever the overflow gate clears
+                // (kmeans may merge centers, but |W| stays ≤ 8).
+                let gate = lut.kernel() == Kernel::I32xI64
+                    || lut.plan.overflow.max_accum.saturating_mul(4) <= i32::MAX as i128;
+                if gate && lut.plan.overflow.max_entry <= i32::MAX as i64 / 2 {
+                    assert!(
+                        lut.fewlevel_layers() > 0,
+                        "tier did not engage at |W|={levels} ({:?})",
+                        lut.kernel()
+                    );
+                }
+                let batch = g.usize_in(1, 6);
+                let idx = {
+                    let lv = lut.input_quant.levels;
+                    let feat: usize = lut.input_shape.iter().product();
+                    let rng = g.rng();
+                    (0..batch * feat).map(|_| rng.below(lv) as u16).collect::<Vec<u16>>()
+                };
+                let naive = lut.forward_naive(&idx, batch);
+                assert_eq!(
+                    lut.forward_indices(&idx, batch).sums,
+                    naive.sums,
+                    "few-level ({:?}, conv={conv})",
+                    lut.kernel()
+                );
+                assert_eq!(
+                    lut_g.forward_indices(&idx, batch).sums,
+                    naive.sums,
+                    "gather ladder ({:?})",
+                    lut_g.kernel()
+                );
+                if conv {
+                    // Band-parallel batch=1 few-level path.
+                    let one = &idx[..idx.len() / batch];
+                    let pool = crate::util::threadpool::ThreadPool::new(4);
+                    let mut par = vec![0i64; lut.out_dim()];
+                    lut.forward_indices_into_with(one, 1, &mut par, Some(&pool));
+                    assert_eq!(par, lut.forward_naive(one, 1).sums, "band-parallel few-level");
+                    // The retained prepatch baseline must agree too.
+                    assert_eq!(lut.forward_prepatch(&idx, batch).sums, naive.sums);
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn property_small_batch_conv_image_band_parallel_matches_serial() {
+        use crate::util::prop::check;
+        // Batches in 2..threads route through the image × band fan-out;
+        // every tile must land exactly where the serial pass puts it,
+        // for any pool size.
+        check("small-batch conv image×band == serial", 6, |g| {
+            let spec = random_conv_spec(g);
+            let (net, cb) = clustered_scaled(&spec, 32, g.seed, 1.0);
+            let lut =
+                LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default())
+                    .unwrap();
+            let batch = g.usize_in(2, 5);
+            let idx = {
+                let lv = lut.input_quant.levels;
+                let feat: usize = lut.input_shape.iter().product();
+                let rng = g.rng();
+                (0..batch * feat).map(|_| rng.below(lv) as u16).collect::<Vec<u16>>()
+            };
+            let mut serial = vec![0i64; batch * lut.out_dim()];
+            let mut scratch = lut.new_scratch();
+            lut.forward_into(&idx, batch, &mut serial, &mut scratch);
+            let threads = g.usize_in(2, 7);
+            let pool = crate::util::threadpool::ThreadPool::new(threads);
+            let mut par = vec![0i64; batch * lut.out_dim()];
+            lut.forward_indices_into_with(&idx, batch, &mut par, Some(&pool));
+            assert_eq!(par, serial, "batch={batch} threads={threads}");
+        });
     }
 
     #[test]

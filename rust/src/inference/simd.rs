@@ -235,6 +235,238 @@ pub fn gather_acc_i16(acc: &mut [i32], trow: &[i16], wrow: &[u32]) {
     gather_acc_i16_scalar(acc, trow, wrow);
 }
 
+// ---- gather + horizontal sum (the few-level kernel inner loop) ----
+//
+// The few-level tier replaces the per-weight mul-table gather with
+// per-level partial sums over a small per-row value table: the inner
+// loop is `Σ_p trow[idx[p]]` — a gather plus a horizontal reduction
+// instead of a gather plus an indexed accumulate. Lane sums wrap (SIMD
+// integer adds have no overflow trap); the compiler's overflow gate
+// proves the true partial sum fits the accumulator, so wrapping never
+// actually engages — the scalar path uses `wrapping_add` for bit parity
+// with the SIMD lanes either way.
+
+/// `Σ_p trow[idx[p]]` — scalar version (any platform).
+#[inline]
+pub fn gather_sum_scalar(trow: &[i32], idx: &[u32]) -> i32 {
+    // Four independent accumulators to break the dependency chain, same
+    // as `gather_acc_scalar`.
+    let n = idx.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    let mut p = 0;
+    while p + 4 <= n {
+        // SAFETY: p+3 < n; indices are codebook-derived positions
+        // < trow.len() by construction.
+        unsafe {
+            s0 = s0.wrapping_add(*trow.get_unchecked(*idx.get_unchecked(p) as usize));
+            s1 = s1.wrapping_add(*trow.get_unchecked(*idx.get_unchecked(p + 1) as usize));
+            s2 = s2.wrapping_add(*trow.get_unchecked(*idx.get_unchecked(p + 2) as usize));
+            s3 = s3.wrapping_add(*trow.get_unchecked(*idx.get_unchecked(p + 3) as usize));
+        }
+        p += 4;
+    }
+    let mut s = s0.wrapping_add(s1).wrapping_add(s2).wrapping_add(s3);
+    while p < n {
+        unsafe {
+            s = s.wrapping_add(*trow.get_unchecked(*idx.get_unchecked(p) as usize));
+        }
+        p += 1;
+    }
+    s
+}
+
+/// `Σ_p trow[idx[p]]`, AVX2: 8-lane `vpgatherdd` + vertical adds, one
+/// horizontal reduction at the end.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_sum_avx2_impl(trow: &[i32], idx: &[u32]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = idx.len();
+    let base = trow.as_ptr();
+    let mut acc = _mm256_setzero_si256();
+    let mut p = 0;
+    while p + 8 <= n {
+        // SAFETY: idx entries are valid positions into trow; unaligned
+        // loads used throughout.
+        let iv = _mm256_loadu_si256(idx.as_ptr().add(p) as *const __m256i);
+        let vals = _mm256_i32gather_epi32::<4>(base, iv);
+        acc = _mm256_add_epi32(acc, vals);
+        p += 8;
+    }
+    let mut s = hsum_epi32_avx2(acc);
+    if p < n {
+        s = s.wrapping_add(gather_sum_scalar(trow, &idx[p..]));
+    }
+    s
+}
+
+/// `Σ_p trow[idx[p]]`, AVX-512F: 16 lanes at a time.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn gather_sum_avx512_impl(trow: &[i32], idx: &[u32]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = idx.len();
+    let mut acc = _mm512_setzero_si512();
+    let mut p = 0;
+    while p + 16 <= n {
+        // SAFETY: idx entries are valid positions into trow.
+        let iv = _mm512_loadu_si512(idx.as_ptr().add(p) as *const _);
+        let vals = _mm512_i32gather_epi32::<4>(iv, trow.as_ptr());
+        acc = _mm512_add_epi32(acc, vals);
+        p += 16;
+    }
+    // _mm512_reduce_add_epi32 wraps lane-wise like the vector adds.
+    let mut s = _mm512_reduce_add_epi32(acc);
+    if p < n {
+        s = s.wrapping_add(gather_sum_avx2_impl(trow, &idx[p..]));
+    }
+    s
+}
+
+/// Wrapping horizontal sum of 8 i32 lanes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32_avx2(v: std::arch::x86_64::__m256i) -> i32 {
+    use std::arch::x86_64::*;
+    let lo = _mm256_castsi256_si128(v);
+    let hi = _mm256_extracti128_si256::<1>(v);
+    let q = _mm_add_epi32(lo, hi);
+    let q = _mm_add_epi32(q, _mm_shuffle_epi32::<0b00_01_10_11>(q));
+    let q = _mm_add_epi32(q, _mm_shuffle_epi32::<0b10_11_00_01>(q));
+    _mm_cvtsi128_si32(q)
+}
+
+/// `Σ_p trow[idx[p]]` over compact i16 entries widened to i32. Scalar
+/// version. Same pad contract as [`gather_acc_i16_scalar`]: every index
+/// is `< trow.len() - 1` (the final element is the SIMD read-past pad).
+#[inline]
+pub fn gather_sum_i16_scalar(trow: &[i16], idx: &[u32]) -> i32 {
+    debug_assert!(idx.iter().all(|&w| (w as usize) < trow.len() - 1));
+    let n = idx.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    let mut p = 0;
+    while p + 4 <= n {
+        // SAFETY: p+3 < n; indices < trow.len() - 1 by the pad contract.
+        unsafe {
+            s0 = s0.wrapping_add(*trow.get_unchecked(*idx.get_unchecked(p) as usize) as i32);
+            s1 = s1.wrapping_add(*trow.get_unchecked(*idx.get_unchecked(p + 1) as usize) as i32);
+            s2 = s2.wrapping_add(*trow.get_unchecked(*idx.get_unchecked(p + 2) as usize) as i32);
+            s3 = s3.wrapping_add(*trow.get_unchecked(*idx.get_unchecked(p + 3) as usize) as i32);
+        }
+        p += 4;
+    }
+    let mut s = s0.wrapping_add(s1).wrapping_add(s2).wrapping_add(s3);
+    while p < n {
+        unsafe {
+            s = s.wrapping_add(*trow.get_unchecked(*idx.get_unchecked(p) as usize) as i32);
+        }
+        p += 1;
+    }
+    s
+}
+
+/// i16 gather-sum, AVX2: the scale-2 `vpgatherdd` + shift-pair sign
+/// extension of [`gather_acc_i16`], reduced horizontally. Relies on the
+/// same read-past pad contract (the 4-byte gather at byte offset `2·idx`
+/// may spill 2 bytes into the next element).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn gather_sum_i16_avx2_impl(trow: &[i16], idx: &[u32]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = idx.len();
+    let base = trow.as_ptr() as *const i32;
+    let mut acc = _mm256_setzero_si256();
+    let mut p = 0;
+    while p + 8 <= n {
+        // SAFETY: indices are < trow.len() - 1 (pad contract), so the
+        // scale-2 gather reads bytes [2·idx, 2·idx + 4) ⊆ the slice.
+        let iv = _mm256_loadu_si256(idx.as_ptr().add(p) as *const __m256i);
+        let raw = _mm256_i32gather_epi32::<2>(base, iv);
+        let vals = _mm256_srai_epi32::<16>(_mm256_slli_epi32::<16>(raw));
+        acc = _mm256_add_epi32(acc, vals);
+        p += 8;
+    }
+    let mut s = hsum_epi32_avx2(acc);
+    if p < n {
+        s = s.wrapping_add(gather_sum_i16_scalar(trow, &idx[p..]));
+    }
+    s
+}
+
+/// i16 gather-sum, AVX-512F: 16 lanes of the scale-2 widened gather.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn gather_sum_i16_avx512_impl(trow: &[i16], idx: &[u32]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = idx.len();
+    let base = trow.as_ptr() as *const i32;
+    let mut acc = _mm512_setzero_si512();
+    let mut p = 0;
+    while p + 16 <= n {
+        // SAFETY: pad contract as in the AVX2 variant.
+        let iv = _mm512_loadu_si512(idx.as_ptr().add(p) as *const _);
+        let raw = _mm512_i32gather_epi32::<2>(iv, base);
+        let vals = _mm512_srai_epi32::<16>(_mm512_slli_epi32::<16>(raw));
+        acc = _mm512_add_epi32(acc, vals);
+        p += 16;
+    }
+    let mut s = _mm512_reduce_add_epi32(acc);
+    if p < n {
+        s = s.wrapping_add(gather_sum_i16_avx2_impl(trow, &idx[p..]));
+    }
+    s
+}
+
+/// Dispatching gather-sum over i32 entries: AVX-512F → AVX2 → scalar.
+#[inline]
+pub fn gather_sum(trow: &[i32], idx: &[u32]) -> i32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if idx.len() >= 16 && avx512_available() && avx2_available() {
+            // SAFETY: features checked at runtime (AVX2 too — the tail
+            // falls through to the AVX2 impl); index validity as in the
+            // scalar path.
+            return unsafe { gather_sum_avx512_impl(trow, idx) };
+        }
+        if idx.len() >= 8 && avx2_available() {
+            // SAFETY: feature checked at runtime.
+            return unsafe { gather_sum_avx2_impl(trow, idx) };
+        }
+    }
+    gather_sum_scalar(trow, idx)
+}
+
+/// Dispatching gather-sum over compact i16 entries (widened to an i32
+/// sum): AVX-512F → AVX2 → scalar. Requires the pad contract documented
+/// on [`gather_sum_i16_scalar`].
+#[inline]
+pub fn gather_sum_i16(trow: &[i16], idx: &[u32]) -> i32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if idx.len() >= 16 && avx512_available() && avx2_available() {
+            // SAFETY: features checked at runtime; pad contract upheld
+            // by the caller (few-level DL slices carry a trailing pad).
+            return unsafe { gather_sum_i16_avx512_impl(trow, idx) };
+        }
+        if idx.len() >= 8 && avx2_available() {
+            // SAFETY: as above.
+            return unsafe { gather_sum_i16_avx2_impl(trow, idx) };
+        }
+    }
+    gather_sum_i16_scalar(trow, idx)
+}
+
+/// `Σ_p trow[idx[p]]` into an i64 (the always-safe scalar fallback of
+/// the few-level tier, paired with the `I32xI64` kernel).
+#[inline]
+pub fn gather_sum_i64(trow: &[i32], idx: &[u32]) -> i64 {
+    let mut s = 0i64;
+    for &w in idx {
+        s += trow[w as usize] as i64;
+    }
+    s
+}
+
 /// Dispatching gather-accumulate: AVX-512F → AVX2 → scalar.
 #[inline]
 pub fn gather_acc(acc: &mut [i32], trow: &[i32], wrow: &[u32]) {
@@ -361,6 +593,71 @@ mod tests {
             gather_acc_i16(&mut a, &trow, &wrow);
             reference_i16(&mut b, &trow, &wrow);
             assert_eq!(a, b);
+        });
+    }
+
+    fn reference_sum(trow: &[i32], idx: &[u32]) -> i32 {
+        idx.iter().fold(0i32, |s, &w| s.wrapping_add(trow[w as usize]))
+    }
+
+    fn reference_sum_i16(trow: &[i16], idx: &[u32]) -> i32 {
+        idx.iter()
+            .fold(0i32, |s, &w| s.wrapping_add(trow[w as usize] as i32))
+    }
+
+    #[test]
+    fn gather_sum_matches_reference_across_lengths() {
+        let mut rng = Xoshiro256::new(5);
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 63, 257] {
+            let trow: Vec<i32> = (0..300).map(|_| rng.next_u64() as i32 % 100_000).collect();
+            let idx: Vec<u32> = (0..n).map(|_| rng.below(300) as u32).collect();
+            assert_eq!(gather_sum(&trow, &idx), reference_sum(&trow, &idx), "n={n}");
+            assert_eq!(gather_sum_scalar(&trow, &idx), reference_sum(&trow, &idx), "n={n}");
+            assert_eq!(
+                gather_sum_i64(&trow, &idx),
+                idx.iter().map(|&w| trow[w as usize] as i64).sum::<i64>(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn gather_sum_i16_matches_reference_including_extremes() {
+        let mut rng = Xoshiro256::new(6);
+        for n in [1usize, 4, 7, 8, 9, 16, 31, 257] {
+            let mut trow = padded_row(&mut rng, 500);
+            trow[0] = i16::MIN;
+            trow[1] = i16::MAX;
+            trow[2] = -1;
+            let mut idx: Vec<u32> = (0..n).map(|_| rng.below(500) as u32).collect();
+            idx[0] = 0;
+            if n > 3 {
+                idx[1] = 1;
+                idx[2] = 2;
+                idx[3] = 499; // last indexable entry: read-past pad
+            }
+            assert_eq!(gather_sum_i16(&trow, &idx), reference_sum_i16(&trow, &idx), "n={n}");
+            assert_eq!(
+                gather_sum_i16_scalar(&trow, &idx),
+                reference_sum_i16(&trow, &idx),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn property_gather_sum_random_streams() {
+        use crate::util::prop::check;
+        check("gather_sum == scalar reference", 64, |g| {
+            let w = g.usize_in(1, 512);
+            let n = g.usize_in(0, 300);
+            let rng = g.rng();
+            let trow: Vec<i32> = (0..w).map(|_| rng.next_u64() as i32).collect();
+            let idx: Vec<u32> = (0..n).map(|_| rng.below(w) as u32).collect();
+            assert_eq!(gather_sum(&trow, &idx), reference_sum(&trow, &idx));
+            let mut t16: Vec<i16> = trow.iter().map(|&v| v as i16).collect();
+            t16.push(0); // pad
+            assert_eq!(gather_sum_i16(&t16, &idx), reference_sum_i16(&t16, &idx));
         });
     }
 

@@ -29,6 +29,16 @@ pub struct LutBenchRecord {
     /// baseline conv speedups are measured against. Conv topologies
     /// only.
     pub ns_per_row_prepatch: Option<f64>,
+    /// Codebook size |W| of the level-tier workloads (the few-level
+    /// sweep at levels 2/3/8/32). None for the general workloads.
+    pub levels: Option<usize>,
+    /// Did the default compile engage the gather-free few-level tier?
+    /// Set on level-tier workloads only.
+    pub fewlevel: Option<bool>,
+    /// Serial time of the same net compiled with `few_level: false` —
+    /// the gather-ladder A/B baseline the few-level speedup is measured
+    /// against. Level-tier workloads only.
+    pub ns_per_row_gather: Option<f64>,
 }
 
 impl LutBenchRecord {
@@ -54,6 +64,19 @@ impl LutBenchRecord {
             pairs.push(("ns_per_row_float", Json::Num(f)));
             pairs.push(("lut_vs_float", Json::Num(self.ns_per_row_parallel / f)));
         }
+        if let Some(l) = self.levels {
+            pairs.push(("levels", Json::Num(l as f64)));
+        }
+        if let Some(e) = self.fewlevel {
+            pairs.push(("fewlevel_engaged", Json::Bool(e)));
+        }
+        if let Some(gs) = self.ns_per_row_gather {
+            pairs.push(("ns_per_row_gather", Json::Num(gs)));
+            pairs.push((
+                "speedup_fewlevel_vs_gather",
+                Json::Num(gs / self.ns_per_row_serial),
+            ));
+        }
         if let Some(p) = self.ns_per_row_prepatch {
             pairs.push(("ns_per_row_prepatch", Json::Num(p)));
             pairs.push((
@@ -77,7 +100,7 @@ pub fn lut_bench_report(records: &[LutBenchRecord], provenance: &str) -> Json {
         .fold(0.0, f64::max);
     let threads = crate::util::threadpool::global().threads();
     Json::obj(vec![
-        ("schema", Json::Str("qnn.bench_lut_engine.v2".into())),
+        ("schema", Json::Str("qnn.bench_lut_engine.v3".into())),
         ("provenance", Json::Str(provenance.into())),
         ("threads", Json::Num(threads as f64)),
         (
@@ -130,15 +153,22 @@ mod tests {
             ns_per_row_parallel: 500.0,
             ns_per_row_float: Some(3000.0),
             ns_per_row_prepatch: Some(3000.0),
+            levels: Some(3),
+            fewlevel: Some(true),
+            ns_per_row_gather: Some(4000.0),
         };
         let doc = lut_bench_report(&[rec], "unit-test");
         let back = Json::parse(&doc.to_pretty()).unwrap();
-        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_lut_engine.v2"));
+        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_lut_engine.v3"));
         assert_eq!(back.get("provenance").as_str(), Some("unit-test"));
         let row = back.get("results").at(0);
         assert_eq!(row.get("speedup_parallel_vs_naive").as_f64(), Some(8.0));
         assert_eq!(row.get("rows_per_s_parallel").as_f64(), Some(2e6));
         assert_eq!(row.get("ns_per_row_prepatch").as_f64(), Some(3000.0));
+        assert_eq!(row.get("levels").as_f64(), Some(3.0));
+        assert_eq!(row.get("fewlevel_engaged").as_bool(), Some(true));
+        assert_eq!(row.get("ns_per_row_gather").as_f64(), Some(4000.0));
+        assert_eq!(row.get("speedup_fewlevel_vs_gather").as_f64(), Some(2.0));
         assert_eq!(row.get("speedup_parallel_vs_prepatch").as_f64(), Some(6.0));
         assert_eq!(row.get("speedup_serial_vs_prepatch").as_f64(), Some(1.5));
         assert_eq!(back.get("max_speedup_parallel_vs_naive").as_f64(), Some(8.0));

@@ -36,6 +36,13 @@
 //! load time; the in-memory network is identical either way. Version-1
 //! artifacts remain loadable.
 //!
+//! Version 3 adds one body byte: the `few_level` compile knob, so a
+//! network compiled with the gather-free few-level tier disabled stays
+//! disabled after a round trip. The tier's reordered streams themselves
+//! are *derived* sections (a deterministic function of `w_idx` and the
+//! mul-table), rebuilt by `build_exec_plan` at load — like the
+//! mul-tables, they ship for free and round-trip unchanged.
+//!
 //! Mul-tables themselves are *derived* sections: every entry is
 //! `round(value · center · 2^s / Δx)`, a pure function of data already in
 //! the artifact, so the loader rebuilds them with [`MulTable::build`] and
@@ -56,15 +63,18 @@ use crate::inference::lut::{
 };
 use crate::quant::{ActKind, Codebook, QuantAct};
 use crate::tensor::Conv2dSpec;
+use crate::util::cursor::ByteCursor;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// File magic for LUT serving artifacts.
 pub const QNN_LUT_MAGIC: &[u8; 8] = b"QNNLUT01";
-/// Current body-format version (2 = range-coded index streams; loaders
-/// accept 1..=2).
-pub const QNN_LUT_VERSION: u32 = 2;
+/// Current body-format version (2 = range-coded index streams, 3 = the
+/// `few_level` compile knob travels in the body so the gather-free tier
+/// round-trips exactly as compiled; loaders accept 1..=3 — older
+/// artifacts load with the knob at its default, on).
+pub const QNN_LUT_VERSION: u32 = 3;
 /// File magic of the float `Network::save` format (the memory-ratio
 /// denominator artifact).
 pub const QNN_FLOAT_MAGIC: &[u8; 4] = b"QNN1";
@@ -228,65 +238,41 @@ fn bitpack_payload_bytes(idx: &[u32]) -> usize {
     1 + (idx.len() as u64 * bits as u64).div_ceil(8) as usize
 }
 
+/// Artifact body reader: the shared bounds-checked [`ByteCursor`]
+/// (`util::cursor` — the same reader the wire protocol parses with, so
+/// the two formats' truncation hardening stays in lockstep) plus the
+/// artifact-specific helpers (guarded counts, length-prefixed strings,
+/// coded index streams).
 struct R<'a> {
-    b: &'a [u8],
-    pos: usize,
+    c: ByteCursor<'a>,
+}
+
+impl<'a> std::ops::Deref for R<'a> {
+    type Target = ByteCursor<'a>;
+    fn deref(&self) -> &ByteCursor<'a> {
+        &self.c
+    }
+}
+
+impl<'a> std::ops::DerefMut for R<'a> {
+    fn deref_mut(&mut self) -> &mut ByteCursor<'a> {
+        &mut self.c
+    }
 }
 
 impl<'a> R<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        anyhow::ensure!(
-            self.pos.checked_add(n).is_some_and(|end| end <= self.b.len()),
-            "truncated artifact body: needed {n} bytes at offset {}",
-            self.pos
-        );
-        let s = &self.b[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-    fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
-    }
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-    fn i64(&mut self) -> Result<i64> {
-        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-    fn i128(&mut self) -> Result<i128> {
-        Ok(i128::from_le_bytes(self.take(16)?.try_into().unwrap()))
-    }
-    fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_bits(u32::from_le_bytes(
-            self.take(4)?.try_into().unwrap(),
-        )))
-    }
-    fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_bits(u64::from_le_bytes(
-            self.take(8)?.try_into().unwrap(),
-        )))
-    }
     /// Length-limited count guard: corrupt frames must error, not OOM.
     fn count(&mut self, what: &str) -> Result<usize> {
         let n = self.u64()? as usize;
         anyhow::ensure!(
-            n <= self.b.len().saturating_sub(self.pos).saturating_mul(64) + 1_000_000,
+            n <= self.remaining().saturating_mul(64) + 1_000_000,
             "implausible {what} count {n} in artifact"
         );
         Ok(n)
     }
     fn str(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
-        let s = self.take(n)?;
-        Ok(std::str::from_utf8(s)
-            .context("artifact string is not UTF-8")?
-            .to_string())
+        Ok(self.str_bytes(n)?.to_string())
     }
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.count("f32 array")?;
@@ -368,6 +354,7 @@ impl LutNetwork {
         body.u32(self.cfg.input_levels.unwrap_or(0) as u32);
         body.u32(self.cfg.act_table_len as u32);
         body.u8(self.cfg.compact_tables as u8);
+        body.u8(self.cfg.few_level as u8); // version ≥ 3
 
         // Quantizers.
         body.f32(self.input_quant.lo);
@@ -557,8 +544,9 @@ impl LutNetwork {
 
         // Informational JSON header (loaders ignore the contents).
         let meta = Json::obj(vec![
-            ("format", Json::Str("qnn.lut_artifact.v2".into())),
+            ("format", Json::Str("qnn.lut_artifact.v3".into())),
             ("kernel", Json::Str(format!("{:?}", self.kernel()))),
+            ("fewlevel_layers", Json::Num(self.fewlevel_layers() as f64)),
             ("weights", Json::Num(self.index_count() as f64)),
             ("tables", Json::Num(self.tables.len() as f64)),
             ("layers", Json::Num(self.layers.len() as f64)),
@@ -619,8 +607,7 @@ impl LutNetwork {
              file is corrupted or truncated"
         );
         let mut r = R {
-            b: &bytes[..bytes.len() - 8],
-            pos: QNN_LUT_MAGIC.len(),
+            c: ByteCursor::new(&bytes[..bytes.len() - 8], QNN_LUT_MAGIC.len(), "artifact body"),
         };
         let version = r.u32()?;
         anyhow::ensure!(
@@ -631,9 +618,9 @@ impl LutNetwork {
         r.take(meta_len).context("truncated artifact meta block")?;
         let body_len = r.u64()? as usize;
         anyhow::ensure!(
-            r.b.len() - r.pos == body_len,
+            r.remaining() == body_len,
             "artifact body length mismatch: header says {body_len}, file has {}",
-            r.b.len() - r.pos
+            r.remaining()
         );
 
         // Shapes.
@@ -646,7 +633,10 @@ impl LutNetwork {
         let out_dim = r.u32()? as usize;
         anyhow::ensure!(out_dim > 0, "artifact has zero output dim");
 
-        // Compile options.
+        // Compile options. `few_level` rides in version ≥ 3 bodies;
+        // older artifacts get the default (on) — the tier is derived,
+        // not stored, so either way the executor plan is rebuilt
+        // deterministically below.
         let cfg = CompileCfg {
             input_range: (r.f32()?, r.f32()?),
             input_levels: match r.u32()? as usize {
@@ -655,6 +645,7 @@ impl LutNetwork {
             },
             act_table_len: r.u32()? as usize,
             compact_tables: r.u8()? != 0,
+            few_level: if version >= 3 { r.u8()? != 0 } else { true },
         };
 
         // Quantizers.
@@ -906,9 +897,9 @@ impl LutNetwork {
             }
         }
         anyhow::ensure!(
-            r.pos == r.b.len(),
+            r.is_empty(),
             "artifact has {} trailing bytes after the last section",
-            r.b.len() - r.pos
+            r.remaining()
         );
 
         let exec = build_exec_plan(&input_shape, &layers, &tables, &plan, &cfg);
@@ -1053,6 +1044,34 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_preserves_fewlevel_plan_and_knob() {
+        // A ternary net engages the gather-free tier on every layer;
+        // the rebuilt plan must match (same layer count on the tier)
+        // and stay bit-exact. A net saved with the knob off must load
+        // with the knob off.
+        let cfg = CompileCfg {
+            act_table_len: 16,
+            ..CompileCfg::default()
+        };
+        let lut = clustered_lut(&mlp_spec(8), 3, 21, 1.0, &cfg);
+        assert!(lut.fewlevel_layers() > 0, "fixture should engage the tier");
+        let loaded = LutNetwork::from_artifact_bytes(&lut.to_artifact_bytes()).unwrap();
+        assert_eq!(loaded.fewlevel_layers(), lut.fewlevel_layers());
+        assert_roundtrip(&lut, 121);
+
+        let cfg_off = CompileCfg {
+            few_level: false,
+            ..cfg
+        };
+        let lut_off = clustered_lut(&mlp_spec(8), 3, 21, 1.0, &cfg_off);
+        assert_eq!(lut_off.fewlevel_layers(), 0);
+        let loaded_off =
+            LutNetwork::from_artifact_bytes(&lut_off.to_artifact_bytes()).unwrap();
+        assert_eq!(loaded_off.fewlevel_layers(), 0, "knob must round-trip");
+        assert_roundtrip(&lut_off, 122);
+    }
+
+    #[test]
     fn roundtrip_conv_topology() {
         let spec = NetSpec {
             name: "art-conv".into(),
@@ -1078,7 +1097,7 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         assert!(is_lut_artifact(&bytes));
         let meta = artifact_meta(&bytes).unwrap();
-        assert_eq!(meta.get("format").as_str(), Some("qnn.lut_artifact.v2"));
+        assert_eq!(meta.get("format").as_str(), Some("qnn.lut_artifact.v3"));
         assert_eq!(meta.get("weights").as_usize(), Some(lut.index_count()));
         let loaded = LutNetwork::load(&path).unwrap();
         std::fs::remove_file(&path).ok();

@@ -1,0 +1,168 @@
+//! Bounds-checked little-endian byte cursor — the shared parsing
+//! substrate of the repo's two binary formats, the `.qnn` serving
+//! artifact (`runtime::qnn_artifact`) and the wire protocol
+//! (`coordinator::wire`). One implementation (like `util::fnv` for the
+//! checksums) so the two formats' parse hardening — truncation
+//! detection, overflow-safe offset math, UTF-8 validation — can never
+//! drift apart.
+//!
+//! Every read is a descriptive `Err` on underrun, never a panic: both
+//! formats property-test that truncated and corrupted inputs fail
+//! cleanly, and those tests run against this cursor.
+
+use anyhow::{Context, Result};
+
+/// A forward-only cursor over a byte slice. `what` names the input in
+/// error messages ("artifact body", "frame body", ...).
+pub struct ByteCursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+    what: &'static str,
+}
+
+impl<'a> ByteCursor<'a> {
+    /// Cursor over `bytes`, starting at `pos`.
+    pub fn new(bytes: &'a [u8], pos: usize, what: &'static str) -> ByteCursor<'a> {
+        ByteCursor { b: bytes, pos, what }
+    }
+
+    /// Current offset from the start of the underlying slice.
+    #[inline]
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Total length of the underlying slice.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Bytes not yet consumed.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.b.len().saturating_sub(self.pos)
+    }
+
+    /// Has every byte been consumed?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Take the next `n` bytes, or a descriptive error if the input is
+    /// too short (overflow-safe: a hostile `n` near `usize::MAX` cannot
+    /// wrap the bounds check).
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.pos.checked_add(n).is_some_and(|end| end <= self.b.len()),
+            "truncated {}: needed {n} bytes at offset {}",
+            self.what,
+            self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i128(&mut self) -> Result<i128> {
+        Ok(i128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(u32::from_le_bytes(
+            self.take(4)?.try_into().unwrap(),
+        )))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(u64::from_le_bytes(
+            self.take(8)?.try_into().unwrap(),
+        )))
+    }
+
+    /// The next `n` bytes as UTF-8.
+    pub fn str_bytes(&mut self, n: usize) -> Result<&'a str> {
+        std::str::from_utf8(self.take(n)?)
+            .with_context(|| format!("{} string is not UTF-8", self.what))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_every_width_in_order() {
+        let mut buf = Vec::new();
+        buf.push(7u8);
+        buf.extend_from_slice(&0x1234u16.to_le_bytes());
+        buf.extend_from_slice(&0xdead_beefu32.to_le_bytes());
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        buf.extend_from_slice(&(-5i64).to_le_bytes());
+        buf.extend_from_slice(&(-(1i128 << 100)).to_le_bytes());
+        buf.extend_from_slice(&1.5f32.to_bits().to_le_bytes());
+        buf.extend_from_slice(&(-2.25f64).to_bits().to_le_bytes());
+        buf.extend_from_slice(b"abc");
+        let mut c = ByteCursor::new(&buf, 0, "test input");
+        assert_eq!(c.u8().unwrap(), 7);
+        assert_eq!(c.u16().unwrap(), 0x1234);
+        assert_eq!(c.u32().unwrap(), 0xdead_beef);
+        assert_eq!(c.u64().unwrap(), u64::MAX);
+        assert_eq!(c.i64().unwrap(), -5);
+        assert_eq!(c.i128().unwrap(), -(1i128 << 100));
+        assert_eq!(c.f32().unwrap(), 1.5);
+        assert_eq!(c.f64().unwrap(), -2.25);
+        assert_eq!(c.str_bytes(3).unwrap(), "abc");
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn underrun_is_a_descriptive_error_never_a_panic() {
+        let buf = [1u8, 2, 3];
+        let mut c = ByteCursor::new(&buf, 0, "test input");
+        assert_eq!(c.u16().unwrap(), 0x0201);
+        let e = c.u32().unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("truncated test input"), "{msg}");
+        assert!(msg.contains("offset 2"), "{msg}");
+        // The failed read consumed nothing; the last byte is intact.
+        assert_eq!(c.u8().unwrap(), 3);
+    }
+
+    #[test]
+    fn hostile_lengths_cannot_overflow_the_bounds_check() {
+        let buf = [0u8; 8];
+        let mut c = ByteCursor::new(&buf, 4, "test input");
+        assert!(c.take(usize::MAX).is_err());
+        assert!(c.take(usize::MAX - 2).is_err());
+        assert_eq!(c.take(4).unwrap(), &[0u8; 4]);
+    }
+
+    #[test]
+    fn invalid_utf8_is_rejected() {
+        let buf = [0xffu8, 0xfe, 0xfd];
+        let mut c = ByteCursor::new(&buf, 0, "test input");
+        assert!(c.str_bytes(3).is_err());
+    }
+}

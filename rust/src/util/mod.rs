@@ -6,6 +6,7 @@
 //! here at the scale this library needs. See DESIGN.md §3.
 
 pub mod cli;
+pub mod cursor;
 pub mod fnv;
 pub mod json;
 pub mod prop;

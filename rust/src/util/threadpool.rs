@@ -215,6 +215,60 @@ impl ThreadPool {
         }
     }
 
+    /// Scoped parallel-for over a list of pre-built work items: executes
+    /// `f(item_index, item)` on the pool for every item, returning once
+    /// all have completed. The items themselves carry whatever disjoint
+    /// mutable state each job needs (e.g. ragged output tiles that
+    /// `parallel_chunks`' uniform splitting cannot express — the conv
+    /// executor's image × band tiles). Panic and nested-call semantics
+    /// match [`Self::parallel_chunks`]: a job panic is re-raised here
+    /// after the section completes, and calls from one of this pool's
+    /// own workers run inline.
+    pub fn parallel_items<T, F>(&self, items: Vec<T>, f: F)
+    where
+        T: Send,
+        F: Fn(usize, T) + Sync,
+    {
+        if items.is_empty() {
+            return;
+        }
+        if items.len() == 1 || self.on_worker_thread() {
+            for (i, item) in items.into_iter().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let n = items.len();
+        let panicked = AtomicBool::new(false);
+        let latch = Latch::new(n);
+        {
+            let f = &f;
+            let panicked = &panicked;
+            let latch = &latch;
+            for (i, item) in items.into_iter().enumerate() {
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    if catch_unwind(AssertUnwindSafe(|| f(i, item))).is_err() {
+                        panicked.store(true, Ordering::SeqCst);
+                    }
+                    latch.count_down();
+                });
+                // SAFETY: `latch.wait()` below does not return until every
+                // item job has run to completion, so the borrows of `f`,
+                // `panicked`, `latch` and anything borrowed inside the
+                // items never outlive this stack frame; erasing the
+                // lifetime to feed the 'static queue is sound (same
+                // argument as `parallel_chunks`).
+                let job: Job =
+                    unsafe { Box::from_raw(Box::into_raw(job) as *mut (dyn FnOnce() + Send)) };
+                self.execute_job(job);
+            }
+        }
+        latch.wait();
+        if panicked.load(Ordering::SeqCst) {
+            panic!("parallel_items: an item job panicked");
+        }
+    }
+
     /// Map `f` over `items` in parallel, preserving order.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
@@ -346,6 +400,62 @@ mod tests {
         for (i, &v) in data.iter().enumerate() {
             assert_eq!(v, i as u32);
         }
+    }
+
+    #[test]
+    fn parallel_items_runs_ragged_disjoint_tiles() {
+        // The use case parallel_chunks cannot express: tiles of unequal
+        // length (here: split_at_mut-carved slices) mutated in parallel.
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u32; 100];
+        let mut tiles: Vec<(u32, &mut [u32])> = Vec::new();
+        let mut rest: &mut [u32] = &mut data;
+        let mut tag = 0u32;
+        for len in [7usize, 13, 30, 50] {
+            let (tile, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            tiles.push((tag, tile));
+            tag += 1;
+        }
+        pool.parallel_items(tiles, |_i, (tag, tile)| {
+            for v in tile.iter_mut() {
+                *v = tag + 1;
+            }
+        });
+        let want: Vec<u32> = std::iter::repeat(1)
+            .take(7)
+            .chain(std::iter::repeat(2).take(13))
+            .chain(std::iter::repeat(3).take(30))
+            .chain(std::iter::repeat(4).take(50))
+            .collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn parallel_items_propagates_panics_and_runs_inline_on_workers() {
+        let pool = Arc::new(ThreadPool::new(2));
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_items(vec![0usize, 1, 2, 3], |_i, item| {
+                if item == 2 {
+                    panic!("bad item");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // Nested call from a worker runs inline without deadlock.
+        let (tx, rx) = mpsc::channel::<usize>();
+        let p = Arc::clone(&pool);
+        pool.execute(move || {
+            let counter = AtomicUsize::new(0);
+            p.parallel_items(vec![1usize, 2, 3], |_i, item| {
+                counter.fetch_add(item, Ordering::SeqCst);
+            });
+            let _ = tx.send(counter.load(Ordering::SeqCst));
+        });
+        let sum = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("nested parallel_items deadlocked");
+        assert_eq!(sum, 6);
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Seeds the perf trajectory during plain `cargo test`: quick,
 //! non-asserting throughput measurements of the LUT engine written to
 //! `BENCH_lut_engine.json` at the repo root, in the same schema the full
-//! bench uses (`qnn.bench_lut_engine.v2`), including the conv workloads
-//! at batch 1 and 64 the CI smoke gate checks for.
+//! bench uses (`qnn.bench_lut_engine.v3`), including the conv workloads
+//! at batch 1 and 64 and the few-level tier sweep (dense digits at
+//! |W| ∈ {2, 3, 8, 32}) the CI smoke gate checks for.
 //!
 //! Timings are recorded, never asserted — CI machines are noisy and a
 //! perf regression should show up in the trajectory, not flake a test.
@@ -69,6 +70,75 @@ fn measure(
         ns_per_row_parallel: rp.mean_ns / b as f64,
         ns_per_row_float: None,
         ns_per_row_prepatch: rpre.map(|r| r.mean_ns / b as f64),
+        levels: None,
+        fewlevel: None,
+        ns_per_row_gather: None,
+    }
+}
+
+/// Measure one few-level tier point: the same clustered digits MLP
+/// compiled with the tier on (default) and off (gather ladder A/B).
+fn measure_tier(levels: usize, min_time: Duration) -> LutBenchRecord {
+    let spec = NetSpec::mlp(
+        "traj-digits",
+        qnn::data::digits::FEATURES,
+        &[128, 64],
+        10,
+        ActSpec::tanh_d(32),
+    );
+    let mut rng = Xoshiro256::new(7);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(levels), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    let books = CodebookSet::Global(cb);
+    let lut = LutNetwork::compile(&net, &books, &CompileCfg::default()).unwrap();
+    let lut_gather = LutNetwork::compile(
+        &net,
+        &books,
+        &CompileCfg {
+            few_level: false,
+            ..CompileCfg::default()
+        },
+    )
+    .unwrap();
+    let b = 64usize;
+    let feat = lut.input_elems();
+    let idx: Vec<u16> = (0..b * feat)
+        .map(|_| rng.below(lut.input_quant.levels) as u16)
+        .collect();
+    let mut scratch = lut.new_scratch();
+    let mut scratch_g = lut_gather.new_scratch();
+    let mut sums = vec![0i64; b * lut.out_dim()];
+
+    let rn = bench_for("naive", min_time, || {
+        std::hint::black_box(lut.forward_naive(&idx, b));
+    });
+    let rg = bench_for("gather", min_time, || {
+        lut_gather.forward_into(&idx, b, &mut sums, &mut scratch_g);
+        std::hint::black_box(&sums);
+    });
+    let rs = bench_for("fewlevel", min_time, || {
+        lut.forward_into(&idx, b, &mut sums, &mut scratch);
+        std::hint::black_box(&sums);
+    });
+    let rp = bench_for("parallel", min_time, || {
+        lut.forward_indices_into(&idx, b, &mut sums);
+        std::hint::black_box(&sums);
+    });
+    LutBenchRecord {
+        topology: format!("digits dense 256-128-64-10 L{levels}"),
+        batch: b,
+        kernel: format!("{:?}", lut.kernel()),
+        ns_per_row_naive: rn.mean_ns / b as f64,
+        ns_per_row_serial: rs.mean_ns / b as f64,
+        ns_per_row_parallel: rp.mean_ns / b as f64,
+        ns_per_row_float: None,
+        ns_per_row_prepatch: None,
+        levels: Some(levels),
+        fewlevel: Some(lut.fewlevel_layers() > 0),
+        ns_per_row_gather: Some(rg.mean_ns / b as f64),
     }
 }
 
@@ -102,6 +172,12 @@ fn record_lut_bench_trajectory() {
     });
     for b in [1usize, 64] {
         records.push(measure(&conv, "conv12x12x3-k3x8-d10", b, min_time, true));
+    }
+
+    // Few-level tier sweep (bi-level / ternary / tier ceiling / gather
+    // control) — the records the CI gate checks for.
+    for levels in [2usize, 3, 8, 32] {
+        records.push(measure_tier(levels, min_time));
     }
 
     let doc = lut_bench_report(&records, "cargo-test-quick");

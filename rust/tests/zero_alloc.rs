@@ -94,11 +94,33 @@ fn forward_into_allocates_nothing_after_warmup() {
         },
         64,
     );
+    // A 3-level codebook engages the gather-free few-level tier on both
+    // layer families: its DL difference planes come out of the plan-sized
+    // scratch, so the few-level hot path must be equally clean.
+    let fewlevel = clustered(
+        &NetSpec {
+            name: "za-few".into(),
+            input_shape: vec![8, 8, 2],
+            layers: vec![
+                LayerSpec::Conv { k: 3, out_c: 4, stride: 1, pad: 1 },
+                LayerSpec::Act(ActSpec::tanh_d(32)),
+                LayerSpec::Flatten,
+                LayerSpec::Dense { units: 6 },
+            ],
+            init_sd: None,
+        },
+        3,
+    );
+    assert!(
+        fewlevel.fewlevel_layers() > 0,
+        "3-level fixture should engage the few-level tier"
+    );
 
     for (name, lut, feat) in [
         ("mlp", &mlp, 64usize),
         ("conv", &conv, 200),
         ("conv-s2", &conv_s2, 243),
+        ("fewlevel", &fewlevel, 128),
     ] {
         let batch = 37;
         let mut rng = Xoshiro256::new(11);
