@@ -5,20 +5,28 @@
 //! — `f32le` floats and `qidx` u8 codebook indices, the request path
 //! that never carries a float.
 //!
-//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v1`) at the
+//! Then the fault-tolerance story: the same artifact is booted on
+//! **three replicas** behind a [`Fleet`] dispatcher (consistent-hash
+//! placement, health checks, deadline/retry/failover policy), the
+//! primary replica is killed mid-load and restarted on the same port,
+//! and the run must stay ≥ 99% available with observable failovers.
+//!
+//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v2`) at the
 //! repository root: closed-loop saturation sweep, an open-loop run at a
-//! fraction of saturation, and the wire bytes-per-request comparison
-//! CI gates on (`python/check_bench.py`).
+//! fraction of saturation, the wire bytes-per-request comparison, and
+//! the fleet chaos section — all gated in CI (`python/check_bench.py`).
 //!
 //!     cargo run --release --example serve_tcp [-- --full]
 
 use qnn::coordinator::wire::Dtype;
-use qnn::coordinator::{NetServer, Router, ServerCfg};
+use qnn::coordinator::{Fleet, FleetCfg, NetServer, Router, ServerCfg};
 use qnn::data::digits;
 use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
 use qnn::nn::{ActSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
-use qnn::report::loadgen::{run_load, serving_bench_doc, LoadCfg};
+use qnn::report::loadgen::{
+    fleet_section_json, run_fleet_load, run_load, serving_bench_doc, FleetLoadCfg, LoadCfg,
+};
 use qnn::report::perf::write_bench_file;
 use qnn::report::table::TableBuilder;
 use qnn::util::rng::Xoshiro256;
@@ -51,15 +59,14 @@ fn main() -> anyhow::Result<()> {
     let dir = std::env::temp_dir().join(format!("qnn_serve_tcp_{}", std::process::id()));
     std::fs::create_dir_all(&dir)?;
     lut.save(dir.join("digits-lut.qnn"))?;
-    let router = Router::load_dir_with(
-        &dir,
-        ServerCfg {
-            max_batch: 32,
-            max_wait: Duration::from_millis(1),
-            workers: 2,
-            max_queue: 512,
-        },
-    )?;
+    let server_cfg = ServerCfg {
+        max_batch: 32,
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        max_queue: 512,
+        ..ServerCfg::default()
+    };
+    let router = Router::load_dir_with(&dir, server_cfg.clone())?;
     let net_server = NetServer::bind("127.0.0.1:0", router)?;
     let addr = net_server.local_addr().to_string();
     println!("serving digits-lut on {addr} (f32le + qidx wire encodings)");
@@ -152,11 +159,107 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
+    // ---- fleet phase: 3 replicas, kill + restart the primary mid-load.
+    println!("\nbooting 3-replica fleet from {}", dir.display());
+    let mut replicas: Vec<(String, NetServer)> = (0..3)
+        .map(|_| {
+            let router = Router::load_dir_with(&dir, server_cfg.clone()).expect("replica boot");
+            let srv = NetServer::bind("127.0.0.1:0", router).expect("replica bind");
+            (srv.local_addr().to_string(), srv)
+        })
+        .collect();
+    let addrs: Vec<String> = replicas.iter().map(|(a, _)| a.clone()).collect();
+    let fleet = Fleet::connect(
+        &addrs,
+        FleetCfg {
+            replication: 3,
+            max_retries: 3,
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(2),
+            health_interval: Duration::from_millis(20),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(100),
+            default_deadline: Some(Duration::from_secs(2)),
+            ..FleetCfg::default()
+        },
+    );
+    let fleet_clients = 8usize;
+    let fleet_per_client = if full { 300 } else { 120 };
+    let total = (fleet_clients * fleet_per_client) as u64;
+    // Kill the primary for the served model so failover is guaranteed
+    // to be on the path, not a lucky hash.
+    let primary = fleet.placement("digits-lut")[0].clone();
+    let victim_at = replicas.iter().position(|(a, _)| *a == primary).unwrap();
+    let (victim_addr, victim) = replicas.remove(victim_at);
+    println!("fleet primary for digits-lut: {victim_addr} (will be killed mid-load)");
+
+    let restart_dir = dir.clone();
+    let restart_cfg = server_cfg.clone();
+    let (fleet_load, restarted) = std::thread::scope(|s| {
+        let fleet_ref = &fleet;
+        let killer = s.spawn(move || {
+            // Crash the primary once ~1/3 of the load has dispatched...
+            while fleet_ref.metrics().requests() < total / 3 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            victim.abort();
+            println!("killed replica {victim_addr} mid-load");
+            // ...and bring a fresh replica up on the same port at ~2/3.
+            while fleet_ref.metrics().requests() < 2 * total / 3 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            let back = Router::load_dir_with(&restart_dir, restart_cfg)
+                .ok()
+                .and_then(|r| NetServer::bind(victim_addr.as_str(), r).ok());
+            println!(
+                "restart on {victim_addr}: {}",
+                if back.is_some() { "up" } else { "port not reusable" }
+            );
+            back
+        });
+        let load = run_fleet_load(
+            fleet_ref,
+            &FleetLoadCfg {
+                model: "digits-lut".into(),
+                encoding: Dtype::QIdx,
+                clients: fleet_clients,
+                requests_per_client: fleet_per_client,
+            },
+            &rows,
+            Some(&quant),
+        )
+        .expect("fleet load");
+        (load, killer.join().expect("killer thread panicked"))
+    });
+
+    let snap = fleet.snapshot();
+    println!(
+        "fleet under replica kill: {}/{} ok (availability {:.4}), \
+         {} failovers, {} retries, {} ejections, {} readmissions",
+        fleet_load.ok,
+        fleet_load.sent,
+        fleet_load.availability,
+        fleet_load.failovers,
+        fleet_load.retries,
+        fleet_load.ejections,
+        fleet_load.readmissions
+    );
+    println!("{snap}");
+    let fleet_section = fleet_section_json(3, 3, true, restarted.is_some(), &fleet_load, &snap);
+    fleet.shutdown();
+    for (_, srv) in replicas {
+        srv.shutdown();
+    }
+    if let Some(srv) = restarted {
+        srv.shutdown();
+    }
+
     let doc = serving_bench_doc(
         "digits-lut",
         digits::FEATURES,
         out_len,
         &reports,
+        Some(fleet_section),
         if full {
             "cargo run --release --example serve_tcp -- --full"
         } else {

@@ -17,6 +17,13 @@ Dispatches on the document's `schema` field:
   or load shape (closed / open) is missing, if any record lacks sane
   throughput/latency fields, or — the deployment headline — if the qidx
   wire encoding is not *strictly smaller* than f32le per request.
+* ``qnn.bench_serving.v2`` — v1 plus the fleet chaos section: 3
+  replicas behind the Fleet dispatcher with the placement primary
+  killed mid-load. Fails if the kill did not happen
+  (``fleet.killed_replica``), availability under the kill is below
+  99%, no failover was observed, or the five terminal-outcome counters
+  in ``fleet.load`` do not partition ``sent`` exactly (the dispatcher's
+  one-answer-per-request contract).
 
 Timings themselves are never asserted — CI machines are noisy;
 regressions should show in the trajectory, not flake the gate. The one
@@ -196,10 +203,90 @@ def check_serving(path: str, doc: dict) -> str:
     )
 
 
+FLEET_AVAILABILITY_FLOOR = 0.99
+
+# The terminal-outcome counters that must partition `fleet.load.sent`
+# exactly: every accepted request gets exactly one answer.
+FLEET_TERMINAL_FIELDS = (
+    "ok",
+    "rejected",
+    "deadline_exceeded",
+    "exhausted",
+    "no_replica",
+)
+
+
+def nonneg_int(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and v >= 0 and v == int(v)
+
+
+def check_serving_v2(path: str, doc: dict) -> str:
+    summary = check_serving(path, doc)
+
+    fleet = doc.get("fleet")
+    if not isinstance(fleet, dict):
+        fail(f"{path}: v2 document has no fleet section (got {fleet!r})")
+
+    replicas = fleet.get("replicas")
+    replication = fleet.get("replication")
+    if not positive_number(replicas) or replicas < 3:
+        fail(f"{path}: fleet must run >= 3 replicas (got {replicas!r})")
+    if not positive_number(replication):
+        fail(f"{path}: fleet section lacks a positive replication factor")
+
+    # The chaos condition: the gate is meaningless unless a replica
+    # actually died under load.
+    if fleet.get("killed_replica") is not True:
+        fail(f"{path}: fleet run did not kill a replica — nothing was gated")
+
+    load = fleet.get("load")
+    if not isinstance(load, dict):
+        fail(f"{path}: fleet section has no load report")
+    sent = load.get("sent")
+    if not positive_number(sent):
+        fail(f"{path}: fleet load report has no positive 'sent' (got {sent!r})")
+    for field in FLEET_TERMINAL_FIELDS:
+        if not nonneg_int(load.get(field)):
+            fail(
+                f"{path}: fleet load report missing or bad terminal counter "
+                f"{field!r} (got {load.get(field)!r})"
+            )
+    terminal = sum(int(load[f]) for f in FLEET_TERMINAL_FIELDS)
+    if terminal != int(sent):
+        fail(
+            f"{path}: fleet terminal outcomes do not partition sent: "
+            f"{terminal} != {int(sent)} "
+            f"({', '.join(f'{f}={int(load[f])}' for f in FLEET_TERMINAL_FIELDS)})"
+        )
+
+    availability = fleet.get("availability")
+    if not isinstance(availability, (int, float)) or isinstance(availability, bool):
+        fail(f"{path}: fleet section has no numeric availability")
+    if availability < FLEET_AVAILABILITY_FLOOR:
+        fail(
+            f"{path}: fleet availability {availability:.4f} under a replica "
+            f"kill is below the {FLEET_AVAILABILITY_FLOOR:.2f} floor"
+        )
+
+    failovers = fleet.get("failovers")
+    if not positive_number(failovers):
+        fail(
+            f"{path}: fleet run shows no failover (failovers={failovers!r}) — "
+            f"the kill never touched the request path"
+        )
+
+    return (
+        f"{summary}; fleet {int(replicas)}x (replication {int(replication)}), "
+        f"primary killed, availability {availability:.4f}, "
+        f"{int(failovers)} failovers, {int(sent)} requests all answered"
+    )
+
+
 CHECKERS = {
     "qnn.bench_lut_engine.v2": check_lut_engine,
     "qnn.bench_lut_engine.v3": check_lut_engine_v3,
     "qnn.bench_serving.v1": check_serving,
+    "qnn.bench_serving.v2": check_serving_v2,
 }
 
 

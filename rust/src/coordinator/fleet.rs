@@ -1,0 +1,837 @@
+//! Fault-tolerant fleet dispatch over the QWF wire protocol.
+//!
+//! A [`Fleet`] fronts N [`super::net::NetServer`] replicas and gives
+//! callers one reliability contract: **every accepted request gets
+//! exactly one terminal answer** — a result, a typed rejection, or a
+//! typed exhaustion — no matter which replicas crash, hang, or corrupt
+//! frames along the way. The pieces:
+//!
+//! * **Placement** — a consistent-hash ring (FNV-1a over
+//!   `"{addr}#{vnode}"`, [`FleetCfg::vnodes`] points per replica) maps
+//!   each model name to [`FleetCfg::replication`] distinct replicas,
+//!   primary first. Adding or removing a replica only remaps the ring
+//!   arcs it owned, so a fleet resize does not reshuffle the world.
+//! * **Health** — a background thread pings every replica on a
+//!   dedicated connection ([`NetClient::ping`]) each
+//!   [`FleetCfg::health_interval`]; active probes and passive dispatch
+//!   failures feed the same per-replica consecutive-failure counter.
+//! * **Circuit breaker** — [`FleetCfg::breaker_threshold`] consecutive
+//!   failures ejects a replica for [`FleetCfg::breaker_cooldown`];
+//!   after the cooldown it is re-admitted only by a successful probe
+//!   (or a successful half-open dispatch attempt).
+//! * **Dispatch policy** — per request: optional deadline
+//!   ([`FleetCfg::default_deadline`], propagated on the wire so servers
+//!   shed work that expires queued), bounded retries with exponential
+//!   backoff + seeded jitter (a `Busy` retry-after hint floors the
+//!   backoff), and automatic failover to the next ring candidate on
+//!   timeout, transport error, torn frame, or peer shutdown. Typed
+//!   rejections (`BadRequest`/`NoModel`/`Internal`) are terminal —
+//!   replaying a bad request elsewhere returns the same answer.
+//!
+//! Accounting lives in [`FleetMetrics`]: one terminal [`Outcome`] per
+//! request (the chaos suite asserts outcomes sum exactly to requests),
+//! plus retry/failover/ejection/readmission counters and an
+//! availability ratio for the serving bench.
+
+use super::metrics::{Outcome, OutcomeCounters};
+use super::net::{ClientError, NetClient, NetClientCfg, RemoteError};
+use super::wire::ErrCode;
+use crate::util::fnv::fnv1a;
+use crate::util::rng::Xoshiro256;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Idle connections kept per replica; excess checkins are dropped.
+const POOL_CAP: usize = 8;
+
+/// Fleet dispatch configuration.
+#[derive(Clone, Debug)]
+pub struct FleetCfg {
+    /// Replicas per model (ring successors); capped at the fleet size.
+    pub replication: usize,
+    /// Virtual ring points per replica — more points, smoother balance.
+    pub vnodes: usize,
+    /// TCP connect bound per attempt.
+    pub connect_timeout: Duration,
+    /// Read/write bound on dispatch connections: a silent or wedged
+    /// replica surfaces as a retryable timeout instead of a hang.
+    pub io_timeout: Duration,
+    /// How often the health thread pings every replica.
+    pub health_interval: Duration,
+    /// Read/write bound on health-check connections.
+    pub health_timeout: Duration,
+    /// Extra attempts after the first (so `max_retries + 1` total).
+    pub max_retries: usize,
+    /// First-retry backoff; doubles per attempt.
+    pub base_backoff: Duration,
+    /// Backoff ceiling (a server Busy hint may exceed it).
+    pub max_backoff: Duration,
+    /// Consecutive failures (active or passive) that eject a replica.
+    pub breaker_threshold: u32,
+    /// How long an ejected replica sits out before probes may readmit.
+    pub breaker_cooldown: Duration,
+    /// Deadline budget stamped on every request (`None` = unbounded).
+    pub default_deadline: Option<Duration>,
+    /// Seed for backoff jitter — fleets replay deterministically.
+    pub seed: u64,
+}
+
+impl Default for FleetCfg {
+    fn default() -> Self {
+        Self {
+            replication: 2,
+            vnodes: 64,
+            connect_timeout: Duration::from_secs(1),
+            io_timeout: Duration::from_secs(5),
+            health_interval: Duration::from_millis(100),
+            health_timeout: Duration::from_secs(1),
+            max_retries: 3,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(50),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            default_deadline: None,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Terminal dispatch failures — one per request, always typed.
+#[derive(Debug)]
+pub enum FleetError {
+    /// A healthy replica rejected the request itself (bad request,
+    /// unknown model, internal failure); retrying elsewhere would
+    /// return the same answer, so the rejection is final.
+    Rejected(RemoteError),
+    /// The request's deadline budget ran out (locally or shed by a
+    /// server) before an answer was produced.
+    DeadlineExceeded,
+    /// Every attempt in the retry budget failed on transport-class
+    /// errors; `last` describes the final attempt.
+    Exhausted { attempts: usize, last: String },
+    /// No live replica could take the request (empty fleet, or every
+    /// candidate's breaker is open).
+    NoReplica,
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::Rejected(e) => write!(f, "rejected: {e}"),
+            FleetError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            FleetError::Exhausted { attempts, last } => {
+                write!(f, "exhausted after {attempts} attempts; last: {last}")
+            }
+            FleetError::NoReplica => write!(f, "no live replica available"),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// Fleet-level counters; `outcomes` records exactly one terminal
+/// [`Outcome`] per request.
+#[derive(Default)]
+pub struct FleetMetrics {
+    pub outcomes: OutcomeCounters,
+    requests: AtomicU64,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+    ejections: AtomicU64,
+    readmissions: AtomicU64,
+}
+
+impl FleetMetrics {
+    /// Fraction of terminal requests that succeeded (1.0 when idle).
+    pub fn availability(&self) -> f64 {
+        let total = self.outcomes.total();
+        if total == 0 {
+            return 1.0;
+        }
+        self.outcomes.get(Outcome::Ok) as f64 / total as f64
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    pub fn ejections(&self) -> u64 {
+        self.ejections.load(Ordering::Relaxed)
+    }
+
+    pub fn readmissions(&self) -> u64 {
+        self.readmissions.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time fleet state for reports and benches.
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    pub requests: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    pub ejections: u64,
+    pub readmissions: u64,
+    pub availability: f64,
+    /// Nonzero terminal outcomes, in [`Outcome::ALL`] order.
+    pub outcomes: Vec<(&'static str, u64)>,
+    pub replicas: Vec<ReplicaStat>,
+}
+
+/// Per-replica dispatch state in a [`FleetSnapshot`].
+#[derive(Clone, Debug)]
+pub struct ReplicaStat {
+    pub addr: String,
+    pub dispatched: u64,
+    pub failures: u64,
+    pub ejected: bool,
+}
+
+impl std::fmt::Display for FleetSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fleet requests={} retries={} failovers={} ejections={} readmissions={} availability={:.4}",
+            self.requests,
+            self.retries,
+            self.failovers,
+            self.ejections,
+            self.readmissions,
+            self.availability,
+        )?;
+        write!(f, " outcomes[")?;
+        for (i, (name, n)) in self.outcomes.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{name}={n}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum ReplicaStatus {
+    Up,
+    Ejected { until: Instant },
+}
+
+struct ReplicaHealth {
+    status: ReplicaStatus,
+    consecutive_failures: u32,
+}
+
+struct Replica {
+    addr: String,
+    state: Mutex<ReplicaHealth>,
+    pool: Mutex<Vec<NetClient>>,
+    dispatched: AtomicU64,
+    failures: AtomicU64,
+}
+
+struct FleetInner {
+    cfg: FleetCfg,
+    replicas: Vec<Replica>,
+    /// Sorted (hash, replica index) consistent-hash ring.
+    ring: Vec<(u64, usize)>,
+    metrics: FleetMetrics,
+    stop: AtomicBool,
+    rng: Mutex<Xoshiro256>,
+}
+
+/// The fleet dispatcher. Cheap to share behind `&` — all methods take
+/// `&self`; connections are pooled per replica internally.
+pub struct Fleet {
+    inner: Arc<FleetInner>,
+    health: Option<JoinHandle<()>>,
+}
+
+impl Fleet {
+    /// Stand up a dispatcher over `addrs`. Connections are opened
+    /// lazily; the health thread starts probing immediately.
+    pub fn connect(addrs: &[String], cfg: FleetCfg) -> Fleet {
+        let vnodes = cfg.vnodes.max(1);
+        let mut ring = Vec::with_capacity(addrs.len() * vnodes);
+        for (ri, addr) in addrs.iter().enumerate() {
+            for v in 0..vnodes {
+                ring.push((fnv1a(format!("{addr}#{v}").as_bytes()), ri));
+            }
+        }
+        ring.sort_unstable();
+        let replicas = addrs
+            .iter()
+            .map(|addr| Replica {
+                addr: addr.clone(),
+                state: Mutex::new(ReplicaHealth {
+                    status: ReplicaStatus::Up,
+                    consecutive_failures: 0,
+                }),
+                pool: Mutex::new(Vec::new()),
+                dispatched: AtomicU64::new(0),
+                failures: AtomicU64::new(0),
+            })
+            .collect();
+        let seed = cfg.seed;
+        let inner = Arc::new(FleetInner {
+            cfg,
+            replicas,
+            ring,
+            metrics: FleetMetrics::default(),
+            stop: AtomicBool::new(false),
+            rng: Mutex::new(Xoshiro256::new(seed)),
+        });
+        let health = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("fleet-health".into())
+                .spawn(move || health_loop(&inner))
+                .expect("spawning fleet health thread")
+        };
+        Fleet {
+            inner,
+            health: Some(health),
+        }
+    }
+
+    /// One-shot `f32le` inference with the full reliability policy.
+    pub fn infer_f32(&self, model: &str, input: &[f32]) -> Result<Vec<f32>, FleetError> {
+        self.dispatch(model, |c, m| c.infer_f32(m, input))
+    }
+
+    /// One-shot `qidx` inference with the full reliability policy.
+    pub fn infer_qidx(&self, model: &str, idx: &[u8]) -> Result<Vec<f32>, FleetError> {
+        self.dispatch(model, |c, m| c.infer_qidx(m, idx))
+    }
+
+    /// The replica addresses `model` hashes to, primary first.
+    pub fn placement(&self, model: &str) -> Vec<String> {
+        self.inner
+            .candidates(model)
+            .into_iter()
+            .map(|ri| self.inner.replicas[ri].addr.clone())
+            .collect()
+    }
+
+    pub fn metrics(&self) -> &FleetMetrics {
+        &self.inner.metrics
+    }
+
+    pub fn snapshot(&self) -> FleetSnapshot {
+        let m = &self.inner.metrics;
+        FleetSnapshot {
+            requests: m.requests(),
+            retries: m.retries(),
+            failovers: m.failovers(),
+            ejections: m.ejections(),
+            readmissions: m.readmissions(),
+            availability: m.availability(),
+            outcomes: m
+                .outcomes
+                .snapshot()
+                .into_iter()
+                .filter(|&(_, n)| n > 0)
+                .map(|(o, n)| (o.name(), n))
+                .collect(),
+            replicas: self
+                .inner
+                .replicas
+                .iter()
+                .map(|r| ReplicaStat {
+                    addr: r.addr.clone(),
+                    dispatched: r.dispatched.load(Ordering::Relaxed),
+                    failures: r.failures.load(Ordering::Relaxed),
+                    ejected: matches!(
+                        r.state.lock().unwrap().status,
+                        ReplicaStatus::Ejected { .. }
+                    ),
+                })
+                .collect(),
+        }
+    }
+
+    /// Stop the health thread and drop all pooled connections.
+    pub fn shutdown(mut self) {
+        self.stop_health();
+    }
+
+    fn stop_health(&mut self) {
+        self.inner.stop.store(true, Ordering::Release);
+        if let Some(h) = self.health.take() {
+            let _ = h.join();
+        }
+        for r in &self.inner.replicas {
+            r.pool.lock().unwrap().clear();
+        }
+    }
+
+    /// The retry/failover loop. `attempt_fn` performs one attempt on
+    /// one connection; this decides what its error means for the fleet.
+    fn dispatch<F>(&self, model: &str, mut attempt_fn: F) -> Result<Vec<f32>, FleetError>
+    where
+        F: FnMut(&mut NetClient, &str) -> Result<Vec<f32>, ClientError>,
+    {
+        let inner = &*self.inner;
+        inner.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let deadline = inner.cfg.default_deadline.map(|d| Instant::now() + d);
+        let cands = inner.candidates(model);
+        if cands.is_empty() {
+            inner.metrics.outcomes.record(Outcome::NoReplica);
+            return Err(FleetError::NoReplica);
+        }
+        let mut last_replica: Option<usize> = None;
+        let mut last_outcome = Outcome::NoReplica;
+        let mut last_err = String::from("no attempt made");
+        let mut attempt = 0usize;
+        loop {
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    inner.metrics.outcomes.record(Outcome::DeadlineExceeded);
+                    return Err(FleetError::DeadlineExceeded);
+                }
+            }
+            let Some(ri) = inner.pick(&cands, attempt) else {
+                inner.metrics.outcomes.record(Outcome::NoReplica);
+                return Err(FleetError::NoReplica);
+            };
+            if let Some(prev) = last_replica {
+                if prev != ri {
+                    inner.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            last_replica = Some(ri);
+            let replica = &inner.replicas[ri];
+            replica.dispatched.fetch_add(1, Ordering::Relaxed);
+            let mut busy_hint_ms = 0u64;
+            match inner.checkout(ri) {
+                Err(e) => {
+                    inner.mark_failure(ri);
+                    last_outcome = Outcome::Io;
+                    last_err = format!("{}: connect: {e}", replica.addr);
+                }
+                Ok(mut conn) => {
+                    conn.set_deadline(deadline.map(|d| {
+                        d.saturating_duration_since(Instant::now())
+                            .max(Duration::from_millis(1))
+                    }));
+                    match attempt_fn(&mut conn, model) {
+                        Ok(out) => {
+                            inner.checkin(ri, conn);
+                            inner.mark_success(ri);
+                            inner.metrics.outcomes.record(Outcome::Ok);
+                            return Ok(out);
+                        }
+                        // The replica answered a typed error: transport
+                        // is healthy, so the connection goes back.
+                        Err(ClientError::Remote(e)) => {
+                            inner.checkin(ri, conn);
+                            match e.code {
+                                ErrCode::Busy => {
+                                    inner.mark_success(ri);
+                                    busy_hint_ms = e.retry_after_ms as u64;
+                                    last_outcome = Outcome::Busy;
+                                    last_err = format!("{}: {e}", replica.addr);
+                                }
+                                ErrCode::Shutdown => {
+                                    inner.mark_failure(ri);
+                                    last_outcome = Outcome::PeerShutdown;
+                                    last_err = format!("{}: {e}", replica.addr);
+                                }
+                                ErrCode::DeadlineExceeded => {
+                                    inner.metrics.outcomes.record(Outcome::DeadlineExceeded);
+                                    return Err(FleetError::DeadlineExceeded);
+                                }
+                                ErrCode::NoModel => {
+                                    inner.mark_success(ri);
+                                    inner.metrics.outcomes.record(Outcome::NoModel);
+                                    return Err(FleetError::Rejected(e));
+                                }
+                                ErrCode::BadRequest => {
+                                    inner.mark_success(ri);
+                                    inner.metrics.outcomes.record(Outcome::BadRequest);
+                                    return Err(FleetError::Rejected(e));
+                                }
+                                ErrCode::Internal => {
+                                    inner.mark_success(ri);
+                                    inner.metrics.outcomes.record(Outcome::Internal);
+                                    return Err(FleetError::Rejected(e));
+                                }
+                            }
+                        }
+                        // Transport-class failures: the connection is
+                        // suspect (a late response could desync ids),
+                        // so it is dropped, the replica marked, and the
+                        // request fails over.
+                        Err(ClientError::Timeout) => {
+                            inner.mark_failure(ri);
+                            last_outcome = Outcome::Timeout;
+                            last_err = format!("{}: timed out", replica.addr);
+                        }
+                        Err(ClientError::Io(e)) => {
+                            inner.mark_failure(ri);
+                            last_outcome = Outcome::Io;
+                            last_err = format!("{}: io: {e}", replica.addr);
+                        }
+                        Err(ClientError::Protocol(m)) => {
+                            inner.mark_failure(ri);
+                            last_outcome = Outcome::Corrupt;
+                            last_err = format!("{}: protocol: {m}", replica.addr);
+                        }
+                    }
+                }
+            }
+            if attempt >= inner.cfg.max_retries {
+                inner.metrics.outcomes.record(last_outcome);
+                return Err(FleetError::Exhausted {
+                    attempts: attempt + 1,
+                    last: last_err,
+                });
+            }
+            attempt += 1;
+            inner.metrics.retries.fetch_add(1, Ordering::Relaxed);
+            inner.backoff_sleep(attempt, busy_hint_ms, deadline);
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        self.stop_health();
+    }
+}
+
+impl FleetInner {
+    /// Ring candidates for `model`: up to `replication` distinct
+    /// replicas walking clockwise from the model's hash point.
+    fn candidates(&self, model: &str) -> Vec<usize> {
+        if self.ring.is_empty() {
+            return Vec::new();
+        }
+        let key = fnv1a(model.as_bytes());
+        let start = self.ring.partition_point(|&(h, _)| h < key);
+        let want = self.cfg.replication.max(1).min(self.replicas.len());
+        let mut out = Vec::with_capacity(want);
+        for k in 0..self.ring.len() {
+            let (_, ri) = self.ring[(start + k) % self.ring.len()];
+            if !out.contains(&ri) {
+                out.push(ri);
+                if out.len() == want {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// First dispatchable candidate, rotated by attempt number so
+    /// retries naturally fail over. An ejected replica past its
+    /// cooldown is dispatchable — that half-open attempt is the probe.
+    fn pick(&self, cands: &[usize], attempt: usize) -> Option<usize> {
+        let now = Instant::now();
+        let n = cands.len();
+        for k in 0..n {
+            let ri = cands[(attempt + k) % n];
+            let st = self.replicas[ri].state.lock().unwrap();
+            match st.status {
+                ReplicaStatus::Up => return Some(ri),
+                ReplicaStatus::Ejected { until } if now >= until => return Some(ri),
+                ReplicaStatus::Ejected { .. } => {}
+            }
+        }
+        None
+    }
+
+    fn checkout(&self, ri: usize) -> std::io::Result<NetClient> {
+        if let Some(c) = self.replicas[ri].pool.lock().unwrap().pop() {
+            return Ok(c);
+        }
+        NetClient::connect_with(
+            self.replicas[ri].addr.as_str(),
+            NetClientCfg {
+                connect_timeout: Some(self.cfg.connect_timeout),
+                read_timeout: Some(self.cfg.io_timeout),
+                write_timeout: Some(self.cfg.io_timeout),
+            },
+        )
+    }
+
+    fn checkin(&self, ri: usize, conn: NetClient) {
+        let mut pool = self.replicas[ri].pool.lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push(conn);
+        }
+    }
+
+    /// Passive/active failure: bump the consecutive counter and trip
+    /// the breaker at the threshold (stale pooled connections go too).
+    fn mark_failure(&self, ri: usize) {
+        let r = &self.replicas[ri];
+        r.failures.fetch_add(1, Ordering::Relaxed);
+        let mut st = r.state.lock().unwrap();
+        st.consecutive_failures = st.consecutive_failures.saturating_add(1);
+        if st.consecutive_failures >= self.cfg.breaker_threshold {
+            if matches!(st.status, ReplicaStatus::Up) {
+                self.metrics.ejections.fetch_add(1, Ordering::Relaxed);
+            }
+            // A failed half-open probe lands here too and pushes the
+            // cooldown window out again (not double-counted).
+            st.status = ReplicaStatus::Ejected {
+                until: Instant::now() + self.cfg.breaker_cooldown,
+            };
+            drop(st);
+            r.pool.lock().unwrap().clear();
+        }
+    }
+
+    fn mark_success(&self, ri: usize) {
+        let mut st = self.replicas[ri].state.lock().unwrap();
+        st.consecutive_failures = 0;
+        if matches!(st.status, ReplicaStatus::Ejected { .. }) {
+            self.metrics.readmissions.fetch_add(1, Ordering::Relaxed);
+        }
+        st.status = ReplicaStatus::Up;
+    }
+
+    /// Sleep before retry `attempt` (1-based): exponential base with
+    /// seeded jitter, capped, floored by any Busy retry-after hint, and
+    /// never sleeping past the request deadline.
+    fn backoff_sleep(&self, attempt: usize, busy_hint_ms: u64, deadline: Option<Instant>) {
+        let base = self.cfg.base_backoff.as_millis() as u64;
+        let cap = self.cfg.max_backoff.as_millis() as u64;
+        let exp = base.saturating_mul(1u64 << (attempt - 1).min(10));
+        let jitter = if base > 0 {
+            self.rng.lock().unwrap().below(base as usize + 1) as u64
+        } else {
+            0
+        };
+        let mut ms = (exp + jitter).min(cap).max(busy_hint_ms);
+        if let Some(d) = deadline {
+            let rem = d.saturating_duration_since(Instant::now()).as_millis() as u64;
+            ms = ms.min(rem);
+        }
+        if ms > 0 {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+    }
+}
+
+/// Health thread body: ping every replica on a dedicated connection,
+/// feeding the same breaker as passive dispatch failures. Ejected
+/// replicas are left alone until their cooldown lapses, then probed
+/// for re-admission.
+fn health_loop(inner: &FleetInner) {
+    let mut conns: Vec<Option<NetClient>> = (0..inner.replicas.len()).map(|_| None).collect();
+    loop {
+        if inner.stop.load(Ordering::Acquire) {
+            return;
+        }
+        for (ri, slot) in conns.iter_mut().enumerate() {
+            if inner.stop.load(Ordering::Acquire) {
+                return;
+            }
+            let r = &inner.replicas[ri];
+            {
+                let st = r.state.lock().unwrap();
+                if let ReplicaStatus::Ejected { until } = st.status {
+                    if Instant::now() < until {
+                        *slot = None;
+                        continue;
+                    }
+                }
+            }
+            if slot.is_none() {
+                match NetClient::connect_with(
+                    r.addr.as_str(),
+                    NetClientCfg {
+                        connect_timeout: Some(inner.cfg.connect_timeout),
+                        read_timeout: Some(inner.cfg.health_timeout),
+                        write_timeout: Some(inner.cfg.health_timeout),
+                    },
+                ) {
+                    Ok(c) => *slot = Some(c),
+                    Err(_) => {
+                        inner.mark_failure(ri);
+                        continue;
+                    }
+                }
+            }
+            let healthy = matches!(slot.as_mut().unwrap().ping(), Ok(h) if !h.draining);
+            if healthy {
+                inner.mark_success(ri);
+            } else {
+                *slot = None;
+                inner.mark_failure(ri);
+            }
+        }
+        // Interruptible sleep so shutdown never waits a full interval.
+        let mut slept = Duration::ZERO;
+        while slept < inner.cfg.health_interval {
+            if inner.stop.load(Ordering::Acquire) {
+                return;
+            }
+            let chunk = Duration::from_millis(10).min(inner.cfg.health_interval - slept);
+            std::thread::sleep(chunk);
+            slept += chunk;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Backend;
+    use crate::coordinator::net::NetServer;
+    use crate::coordinator::router::Router;
+    use crate::coordinator::server::{Server, ServerCfg};
+
+    struct SumEngine;
+    impl Backend for SumEngine {
+        fn name(&self) -> &str {
+            "sum"
+        }
+        fn input_len(&self) -> usize {
+            4
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+        fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+            for i in 0..batch {
+                out[i] = flat[i * 4..(i + 1) * 4].iter().sum();
+            }
+        }
+    }
+
+    fn boot() -> NetServer {
+        let mut router = Router::new();
+        router.register(
+            "sum",
+            Server::start(Arc::new(SumEngine), ServerCfg::default()),
+        );
+        NetServer::bind("127.0.0.1:0", router).unwrap()
+    }
+
+    /// An address that is definitely closed: bind, read the port, drop.
+    fn dead_addr() -> String {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    }
+
+    fn quiet_cfg() -> FleetCfg {
+        FleetCfg {
+            health_interval: Duration::from_secs(600),
+            ..FleetCfg::default()
+        }
+    }
+
+    #[test]
+    fn placement_is_stable_and_replicated() {
+        let addrs: Vec<String> = (0..4).map(|_| dead_addr()).collect();
+        let cfg = FleetCfg {
+            replication: 3,
+            ..quiet_cfg()
+        };
+        let fleet = Fleet::connect(&addrs, cfg.clone());
+        let fleet2 = Fleet::connect(&addrs, cfg);
+        let mut primaries = std::collections::BTreeSet::new();
+        for i in 0..64 {
+            let model = format!("model-{i}");
+            let p = fleet.placement(&model);
+            // Deterministic across independently built rings.
+            assert_eq!(p, fleet2.placement(&model));
+            // Replication-many *distinct* replicas.
+            assert_eq!(p.len(), 3);
+            let uniq: std::collections::BTreeSet<_> = p.iter().collect();
+            assert_eq!(uniq.len(), 3);
+            primaries.insert(p[0].clone());
+        }
+        // 64 models over 4 replicas: every replica should own some arc.
+        assert_eq!(primaries.len(), 4, "ring is badly unbalanced");
+        fleet.shutdown();
+        fleet2.shutdown();
+    }
+
+    #[test]
+    fn breaker_ejects_dead_replicas_and_fails_fast() {
+        let addrs = vec![dead_addr(), dead_addr()];
+        let fleet = Fleet::connect(
+            &addrs,
+            FleetCfg {
+                replication: 2,
+                max_retries: 1,
+                breaker_threshold: 2,
+                breaker_cooldown: Duration::from_secs(600),
+                ..quiet_cfg()
+            },
+        );
+        // Each request burns one attempt per replica; after enough
+        // failures both breakers open.
+        for _ in 0..3 {
+            let err = fleet.infer_f32("sum", &[1.0; 4]).unwrap_err();
+            assert!(
+                matches!(err, FleetError::Exhausted { .. } | FleetError::NoReplica),
+                "unexpected error: {err}"
+            );
+        }
+        let err = fleet.infer_f32("sum", &[1.0; 4]).unwrap_err();
+        assert!(matches!(err, FleetError::NoReplica), "got: {err}");
+        let snap = fleet.snapshot();
+        assert_eq!(snap.ejections, 2, "{snap}");
+        assert_eq!(snap.readmissions, 0);
+        assert!(snap.availability == 0.0);
+        assert!(snap.replicas.iter().all(|r| r.ejected));
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn failover_survives_a_killed_replica() {
+        let n1 = boot();
+        let n2 = boot();
+        let a1 = n1.local_addr().to_string();
+        let a2 = n2.local_addr().to_string();
+        let fleet = Fleet::connect(
+            &[a1.clone(), a2.clone()],
+            FleetCfg {
+                replication: 2,
+                max_retries: 3,
+                connect_timeout: Duration::from_millis(500),
+                io_timeout: Duration::from_secs(2),
+                health_interval: Duration::from_millis(50),
+                breaker_threshold: 2,
+                breaker_cooldown: Duration::from_millis(100),
+                ..FleetCfg::default()
+            },
+        );
+        assert_eq!(
+            fleet.infer_f32("sum", &[1.0, 2.0, 3.0, 4.0]).unwrap(),
+            vec![10.0]
+        );
+        // Kill the primary for "sum" out from under the fleet.
+        let primary = fleet.placement("sum")[0].clone();
+        let (dead, alive) = if primary == a1 { (n1, n2) } else { (n2, n1) };
+        dead.abort();
+        for _ in 0..5 {
+            assert_eq!(
+                fleet.infer_f32("sum", &[1.0, 2.0, 3.0, 4.0]).unwrap(),
+                vec![10.0]
+            );
+        }
+        let snap = fleet.snapshot();
+        assert!(snap.failovers >= 1, "{snap}");
+        assert!((snap.availability - 1.0).abs() < 1e-9, "{snap}");
+        fleet.shutdown();
+        alive.shutdown();
+    }
+}

@@ -28,6 +28,111 @@ use std::time::Instant;
 /// How many recent request latencies the ring keeps (per server).
 pub const LATENCY_WINDOW: usize = 4096;
 
+/// Terminal outcome of one request, as seen by whichever layer resolved
+/// it — the in-process server, the TCP front-end, or the fleet
+/// dispatcher. One request gets exactly one outcome; the chaos test
+/// audits that accounting end to end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served: the caller got its output vector.
+    Ok,
+    /// Shed at admission (bounded queue full).
+    Busy,
+    /// Shed because its latency budget expired before service.
+    DeadlineExceeded,
+    /// An armed read/connect timeout fired before an answer arrived.
+    Timeout,
+    /// The transport failed (connect refused, reset, broken pipe).
+    Io,
+    /// A frame failed checksum/framing validation — damaged in transit.
+    Corrupt,
+    /// The peer is draining or dropped the request during shutdown.
+    PeerShutdown,
+    /// Rejected as malformed (wrong length, bad index, bad frame body).
+    BadRequest,
+    /// No replica serves a model with the requested name.
+    NoModel,
+    /// The server failed internally after accepting the request.
+    Internal,
+    /// The fleet had no healthy replica left to try.
+    NoReplica,
+}
+
+impl Outcome {
+    /// Every outcome, in counter-index order.
+    pub const ALL: [Outcome; 11] = [
+        Outcome::Ok,
+        Outcome::Busy,
+        Outcome::DeadlineExceeded,
+        Outcome::Timeout,
+        Outcome::Io,
+        Outcome::Corrupt,
+        Outcome::PeerShutdown,
+        Outcome::BadRequest,
+        Outcome::NoModel,
+        Outcome::Internal,
+        Outcome::NoReplica,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Busy => "busy",
+            Outcome::DeadlineExceeded => "deadline_exceeded",
+            Outcome::Timeout => "timeout",
+            Outcome::Io => "io",
+            Outcome::Corrupt => "corrupt",
+            Outcome::PeerShutdown => "peer_shutdown",
+            Outcome::BadRequest => "bad_request",
+            Outcome::NoModel => "no_model",
+            Outcome::Internal => "internal",
+            Outcome::NoReplica => "no_replica",
+        }
+    }
+
+    fn index(self) -> usize {
+        Outcome::ALL.iter().position(|&o| o == self).unwrap()
+    }
+}
+
+/// Lock-free per-outcome tally. Lives inside [`Metrics`] but is also
+/// usable standalone (the fleet dispatcher keeps its own).
+#[derive(Default)]
+pub struct OutcomeCounters {
+    counts: [AtomicU64; Outcome::ALL.len()],
+}
+
+impl OutcomeCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&self, outcome: Outcome) {
+        self.add(outcome, 1);
+    }
+
+    #[inline]
+    pub fn add(&self, outcome: Outcome, n: u64) {
+        self.counts[outcome.index()].fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, outcome: Outcome) -> u64 {
+        self.counts[outcome.index()].load(Ordering::Relaxed)
+    }
+
+    /// Every (outcome, count) pair, including zeros, in [`Outcome::ALL`]
+    /// order.
+    pub fn snapshot(&self) -> Vec<(Outcome, u64)> {
+        Outcome::ALL.iter().map(|&o| (o, self.get(o))).collect()
+    }
+
+    /// Total requests resolved across all outcomes.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+}
+
 /// Fixed-capacity overwrite-oldest ring of f64 samples.
 struct Ring {
     buf: Vec<f64>,
@@ -75,6 +180,8 @@ pub struct Metrics {
     requests: AtomicU64,
     batches: AtomicU64,
     rings: Mutex<Rings>,
+    /// Terminal outcome tally — served vs shed vs failed, per kind.
+    pub outcomes: OutcomeCounters,
 }
 
 impl Default for Metrics {
@@ -100,6 +207,7 @@ impl Metrics {
                 service_ms: Ring::new(window),
                 done_s: Ring::new(window),
             }),
+            outcomes: OutcomeCounters::new(),
         }
     }
 
@@ -150,9 +258,17 @@ impl Metrics {
         };
         let requests = self.requests.load(Ordering::Relaxed);
         let batches = self.batches.load(Ordering::Relaxed);
+        let outcomes = self
+            .outcomes
+            .snapshot()
+            .into_iter()
+            .filter(|&(_, n)| n > 0)
+            .map(|(o, n)| (o.name(), n))
+            .collect();
         MetricsSnapshot {
             requests,
             batches,
+            outcomes,
             throughput_rps,
             window_s,
             p50_ms: percentile_f64(e2e, 50.0),
@@ -177,6 +293,8 @@ impl Metrics {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
+    /// Nonzero terminal-outcome counts, in [`Outcome::ALL`] order.
+    pub outcomes: Vec<(&'static str, u64)>,
     /// Requests per second over the recent completion window — see
     /// [`MetricsSnapshot::window_s`]. Decays toward zero while the
     /// server idles instead of averaging over process lifetime.
@@ -221,7 +339,18 @@ impl std::fmt::Display for MetricsSnapshot {
             self.service_p50_ms,
             self.service_p95_ms,
             self.latency_samples
-        )
+        )?;
+        if !self.outcomes.is_empty() {
+            write!(f, " outcomes[")?;
+            for (i, (name, n)) in self.outcomes.iter().enumerate() {
+                if i > 0 {
+                    write!(f, " ")?;
+                }
+                write!(f, "{name}={n}")?;
+            }
+            write!(f, "]")?;
+        }
+        Ok(())
     }
 }
 
@@ -306,5 +435,32 @@ mod tests {
         assert_eq!(s.throughput_rps, 0.0);
         assert_eq!(s.window_s, 0.0);
         assert_eq!(s.p99_ms, 0.0);
+        assert!(s.outcomes.is_empty());
+    }
+
+    #[test]
+    fn outcome_counters_tally_and_surface() {
+        let m = Metrics::new();
+        m.outcomes.record(Outcome::Ok);
+        m.outcomes.record(Outcome::Ok);
+        m.outcomes.record(Outcome::Busy);
+        m.outcomes.add(Outcome::DeadlineExceeded, 3);
+        assert_eq!(m.outcomes.get(Outcome::Ok), 2);
+        assert_eq!(m.outcomes.get(Outcome::Busy), 1);
+        assert_eq!(m.outcomes.get(Outcome::Timeout), 0);
+        assert_eq!(m.outcomes.total(), 6);
+        // Snapshot keeps only nonzero outcomes, in ALL order.
+        let s = m.snapshot();
+        assert_eq!(
+            s.outcomes,
+            vec![("ok", 2), ("busy", 1), ("deadline_exceeded", 3)]
+        );
+        // Display renders them (for `Router::report` and operator eyes).
+        assert!(format!("{s}").contains("deadline_exceeded=3"), "{s}");
+        // Names are unique — the JSON emitters key on them.
+        let mut names: Vec<_> = Outcome::ALL.iter().map(|o| o.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Outcome::ALL.len());
     }
 }

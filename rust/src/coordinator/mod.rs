@@ -7,6 +7,7 @@
 //! encodings) and bounded-queue admission control.
 
 pub mod engine;
+pub mod fleet;
 pub mod metrics;
 pub mod net;
 pub mod pjrt_engine;
@@ -18,8 +19,11 @@ pub use engine::{load_backend, Backend, FloatNetEngine, LutEngine};
 /// Former name of [`Backend`], kept so downstream code migrates at its
 /// own pace.
 pub use engine::Backend as Engine;
-pub use metrics::{Metrics, MetricsSnapshot, LATENCY_WINDOW};
-pub use net::{ClientError, NetCfg, NetClient, NetServer, RemoteError};
+pub use fleet::{Fleet, FleetCfg, FleetError, FleetMetrics, FleetSnapshot};
+pub use metrics::{Metrics, MetricsSnapshot, Outcome, OutcomeCounters, LATENCY_WINDOW};
+pub use net::{
+    ClientError, HealthStatus, NetCfg, NetClient, NetClientCfg, NetServer, RemoteError,
+};
 pub use pjrt_engine::PjrtEngine;
 pub use router::Router;
 pub use server::{InferError, Payload, Server, ServerCfg, ServerHandle};

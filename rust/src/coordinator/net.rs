@@ -32,15 +32,16 @@
 use super::router::Router;
 use super::server::{InferError, Payload, ServerHandle};
 use super::wire::{self, Dtype, ErrCode, Frame};
+use crate::util::fault::{self, FrameFault};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Once};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Front-end configuration.
 #[derive(Clone, Debug)]
@@ -48,35 +49,65 @@ pub struct NetCfg {
     /// Per-connection cap on responses in flight: a client that
     /// pipelines deeper than this is back-pressured at the socket.
     pub pipeline_depth: usize,
+    /// Idle-poll interval on the connection's read half. `None` blocks
+    /// forever (shutdown still interrupts via read-half-close); `Some`
+    /// arms a socket read timeout so the reader periodically rechecks
+    /// the stop flag even on a silent connection.
+    pub read_timeout: Option<Duration>,
+    /// Write timeout per response frame: a wedged client must not hold
+    /// the drain hostage forever.
+    pub write_timeout: Duration,
 }
 
 impl Default for NetCfg {
     fn default() -> Self {
-        Self { pipeline_depth: 256 }
+        Self {
+            pipeline_depth: 256,
+            read_timeout: None,
+            write_timeout: Duration::from_secs(30),
+        }
     }
 }
 
-/// What the reader hands the writer: either a pending in-process
-/// response to await, or an immediately-encodable error.
+/// What the reader hands the writer: a pending in-process response to
+/// await, an immediately-encodable error, or a health pong.
 enum WriteItem {
     Pending {
         req_id: u64,
-        rx: std::sync::mpsc::Receiver<Vec<f32>>,
+        rx: std::sync::mpsc::Receiver<std::result::Result<Vec<f32>, InferError>>,
     },
     Error {
         req_id: u64,
         code: ErrCode,
+        retry_after_ms: u32,
         msg: String,
+    },
+    Pong {
+        req_id: u64,
+        draining: bool,
+        models: u16,
+        queued: u32,
     },
 }
 
 fn code_for(e: &InferError) -> ErrCode {
     match e {
         InferError::Busy { .. } => ErrCode::Busy,
+        InferError::DeadlineExceeded => ErrCode::DeadlineExceeded,
         InferError::Shutdown | InferError::Dropped => ErrCode::Shutdown,
         InferError::InputLen { .. }
         | InferError::QidxUnsupported
         | InferError::IndexOutOfRange { .. } => ErrCode::BadRequest,
+    }
+}
+
+/// Back-off hint carried on the error frame (0 = none).
+fn retry_hint(e: &InferError) -> u32 {
+    match e {
+        InferError::Busy { retry_after_ms, .. } => {
+            (*retry_after_ms).min(u32::MAX as u64) as u32
+        }
+        _ => 0,
     }
 }
 
@@ -98,6 +129,17 @@ impl NetServer {
 
     /// [`Self::bind`] with an explicit front-end configuration.
     pub fn bind_with(addr: impl ToSocketAddrs, router: Router, cfg: NetCfg) -> Result<NetServer> {
+        // Arm the chaos harness from the environment exactly once per
+        // process (QNN_FAULT / QNN_FAULT_SEED); the seed is logged so a
+        // failing chaos run replays bit-identically.
+        static FAULT_ENV: Once = Once::new();
+        FAULT_ENV.call_once(|| match fault::install_from_env() {
+            Ok(Some((plan, seed))) => {
+                eprintln!("qnn-net: fault injection armed (QNN_FAULT_SEED={seed}): {plan:?}")
+            }
+            Ok(None) => {}
+            Err(e) => eprintln!("qnn-net: QNN_FAULT rejected: {e}"),
+        });
         let listener = TcpListener::bind(addr).context("binding serving socket")?;
         // Non-blocking accept so shutdown can interrupt the loop.
         listener
@@ -108,7 +150,7 @@ impl NetServer {
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>> =
             Arc::new(Mutex::new(Vec::new()));
-        let pipeline = cfg.pipeline_depth.max(1);
+        let conn_cfg = cfg.clone();
 
         let stop_a = Arc::clone(&stop);
         let conns_a = Arc::clone(&conns);
@@ -155,9 +197,10 @@ impl NetServer {
                         // (cheap: names + channel senders).
                         let handles = handles.clone();
                         let stop_c = Arc::clone(&stop_a);
+                        let cfg_c = conn_cfg.clone();
                         let h = std::thread::Builder::new()
                             .name("qnn-conn".into())
-                            .spawn(move || serve_conn(stream, handles, stop_c, pipeline))
+                            .spawn(move || serve_conn(stream, handles, stop_c, cfg_c))
                             .expect("spawn connection thread");
                         conns_a.lock().unwrap().push((registered, h));
                     }
@@ -215,6 +258,30 @@ impl NetServer {
     pub fn shutdown(mut self) {
         self.shutdown_impl();
     }
+
+    /// Hard kill, as close to `kill -9` as a same-process replica gets:
+    /// stop accepting and sever every connection in **both** directions,
+    /// so in-flight requests die with a connection reset instead of a
+    /// clean error frame. This is what a crashed replica looks like to
+    /// the fleet dispatcher — the chaos tests kill replicas through
+    /// this. (Worker threads still join and engines still drain, so the
+    /// process itself stays hygienic; only the *peers* see a crash.)
+    pub fn abort(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let conns = std::mem::take(&mut *self.conns.lock().unwrap());
+        for (stream, _) in &conns {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        for (_, h) in conns {
+            let _ = h.join();
+        }
+        if let Some(router) = self.router.take() {
+            router.shutdown();
+        }
+    }
 }
 
 impl Drop for NetServer {
@@ -228,14 +295,17 @@ fn serve_conn(
     stream: TcpStream,
     handles: BTreeMap<String, ServerHandle>,
     stop: Arc<AtomicBool>,
-    pipeline: usize,
+    cfg: NetCfg,
 ) {
     let Ok(wstream) = stream.try_clone() else {
         return;
     };
     // A wedged client must not hold the drain hostage forever.
-    let _ = wstream.set_write_timeout(Some(Duration::from_secs(30)));
-    let (wtx, wrx): (SyncSender<WriteItem>, Receiver<WriteItem>) = sync_channel(pipeline);
+    let _ = wstream.set_write_timeout(Some(cfg.write_timeout));
+    // Optional idle poll: wake out of a silent read to recheck `stop`.
+    let _ = stream.set_read_timeout(cfg.read_timeout);
+    let (wtx, wrx): (SyncSender<WriteItem>, Receiver<WriteItem>) =
+        sync_channel(cfg.pipeline_depth.max(1));
     let writer = std::thread::Builder::new()
         .name("qnn-conn-write".into())
         .spawn(move || writer_loop(wstream, wrx))
@@ -251,32 +321,56 @@ fn serve_conn(
         match wire::read_frame(&mut reader, &mut rbuf) {
             Ok(true) => {}
             Ok(false) => break, // clean EOF: client done (or drain began)
+            // The armed read timeout fired between frames: the stream is
+            // still synchronized — this is just an idle poll tick.
+            Err(e) if e.is_timeout() && e.at_boundary() => continue,
             Err(e) => {
-                // Torn framing: report it, then give up on the stream —
-                // there is no resync point. Blocking send like every
-                // other error path: the writer always drains (and bails
-                // on write timeout), so this cannot hang, and a full
-                // pipeline window must not swallow the diagnostic.
+                // Torn framing (or a timeout mid-frame): report it, then
+                // give up on the stream — there is no resync point.
+                // Blocking send like every other error path: the writer
+                // always drains (and bails on write timeout), so this
+                // cannot hang, and a full pipeline window must not
+                // swallow the diagnostic.
                 let _ = wtx.send(WriteItem::Error {
                     req_id: 0,
                     code: ErrCode::BadRequest,
+                    retry_after_ms: 0,
                     msg: format!("{e:#}"),
                 });
                 break;
             }
         }
-        let (req_id, model, dtype, payload) = match wire::parse_frame(&rbuf) {
-            Ok(Frame::Request { req_id, model, dtype, payload }) => {
-                (req_id, model, dtype, payload)
+        let arrival = Instant::now();
+        let (req_id, model, dtype, deadline_ms, payload) = match wire::parse_frame(&rbuf) {
+            Ok(Frame::Request { req_id, model, dtype, deadline_ms, payload }) => {
+                (req_id, model, dtype, deadline_ms, payload)
+            }
+            Ok(Frame::HealthPing { req_id }) => {
+                // Answer from the handle map without touching any
+                // engine: drain state + total queue depth, the signals
+                // the fleet's health checker watches.
+                let queued: usize = handles.values().map(|h| h.queued()).sum();
+                let item = WriteItem::Pong {
+                    req_id,
+                    draining: stop.load(Ordering::SeqCst),
+                    models: handles.len().min(u16::MAX as usize) as u16,
+                    queued: queued.min(u32::MAX as usize) as u32,
+                };
+                if wtx.send(item).is_err() {
+                    break;
+                }
+                continue;
             }
             Ok(_) => {
-                // A client sending response/error frames is confused but
-                // the framing is intact; answer and carry on.
+                // A client sending response/error/pong frames is
+                // confused but the framing is intact; answer and carry
+                // on.
                 if wtx
                     .send(WriteItem::Error {
                         req_id: 0,
                         code: ErrCode::BadRequest,
-                        msg: "only request frames are accepted".into(),
+                        retry_after_ms: 0,
+                        msg: "only request and health ping frames are accepted".into(),
                     })
                     .is_err()
                 {
@@ -291,6 +385,7 @@ fn serve_conn(
                     .send(WriteItem::Error {
                         req_id: 0,
                         code: ErrCode::BadRequest,
+                        retry_after_ms: 0,
                         msg: format!("{e:#}"),
                     })
                     .is_err()
@@ -306,6 +401,7 @@ fn serve_conn(
                 .send(WriteItem::Error {
                     req_id,
                     code: ErrCode::NoModel,
+                    retry_after_ms: 0,
                     msg: format!("no model {model:?} (have {known:?})"),
                 })
                 .is_err()
@@ -322,6 +418,7 @@ fn serve_conn(
                         .send(WriteItem::Error {
                             req_id,
                             code: ErrCode::BadRequest,
+                            retry_after_ms: 0,
                             msg: format!("{e:#}"),
                         })
                         .is_err()
@@ -333,11 +430,16 @@ fn serve_conn(
             },
             Dtype::QIdx => Payload::QIdx(payload.to_vec()),
         };
-        let item = match handle.submit(payload) {
+        // The wire deadline is a remaining budget; anchor it at frame
+        // arrival so server-side queueing counts against it.
+        let deadline = (deadline_ms > 0)
+            .then(|| arrival + Duration::from_millis(deadline_ms as u64));
+        let item = match handle.submit_with_deadline(payload, deadline) {
             Ok(rx) => WriteItem::Pending { req_id, rx },
             Err(e) => WriteItem::Error {
                 req_id,
                 code: code_for(&e),
+                retry_after_ms: retry_hint(&e),
                 msg: e.to_string(),
             },
         };
@@ -360,25 +462,68 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<WriteItem>) {
     while let Ok(item) = rx.recv() {
         match item {
             WriteItem::Pending { req_id, rx } => match rx.recv() {
-                Ok(out) => wire::encode_response_f32(&mut wbuf, req_id, &out),
+                Ok(Ok(out)) => wire::encode_response_f32(&mut wbuf, req_id, &out),
+                // The batcher resolved it with a typed error (deadline
+                // shed, for instance) — forward it on the wire.
+                Ok(Err(e)) => wire::encode_error(
+                    &mut wbuf,
+                    req_id,
+                    code_for(&e),
+                    retry_hint(&e),
+                    &e.to_string(),
+                ),
                 // The server dropped the request mid-shutdown: a clean
                 // typed error, never silence.
                 Err(_) => wire::encode_error(
                     &mut wbuf,
                     req_id,
                     ErrCode::Shutdown,
+                    0,
                     &InferError::Dropped.to_string(),
                 ),
             },
-            WriteItem::Error { req_id, code, msg } => {
-                wire::encode_error(&mut wbuf, req_id, code, &msg)
+            WriteItem::Error { req_id, code, retry_after_ms, msg } => {
+                wire::encode_error(&mut wbuf, req_id, code, retry_after_ms, &msg)
+            }
+            WriteItem::Pong { req_id, draining, models, queued } => {
+                wire::encode_health_pong(&mut wbuf, req_id, draining, models, queued)
             }
         }
-        if stream.write_all(&wbuf).is_err() {
-            break; // client gone; pending receivers just drop
+        if !write_frame_injecting_faults(&mut stream, &wbuf) {
+            break; // client gone (or a fault severed us); receivers drop
         }
     }
     let _ = stream.flush();
+}
+
+/// Write one frame, applying the chaos harness's verdict when fault
+/// injection is armed ([`crate::util::fault`]). Returns `false` when the
+/// connection is no longer usable. A dropped frame returns `true` — from
+/// this side the connection is fine; it is the *peer's* timeout that
+/// must catch the silence. A truncated frame severs the connection in
+/// both directions, because a torn stream has no resync point anyway.
+fn write_frame_injecting_faults(stream: &mut TcpStream, wbuf: &[u8]) -> bool {
+    if !fault::is_enabled() {
+        return stream.write_all(wbuf).is_ok();
+    }
+    match fault::on_frame(wbuf.len()) {
+        FrameFault::Deliver => stream.write_all(wbuf).is_ok(),
+        FrameFault::Delay(d) => {
+            std::thread::sleep(d);
+            stream.write_all(wbuf).is_ok()
+        }
+        FrameFault::Drop => true,
+        FrameFault::Truncate(n) => {
+            let _ = stream.write_all(&wbuf[..n]);
+            let _ = stream.shutdown(Shutdown::Both);
+            false
+        }
+        FrameFault::BitFlip(pos, mask) => {
+            let mut damaged = wbuf.to_vec();
+            damaged[pos] ^= mask;
+            stream.write_all(&damaged).is_ok()
+        }
+    }
 }
 
 // ---- client ----
@@ -387,6 +532,8 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<WriteItem>) {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RemoteError {
     pub code: ErrCode,
+    /// Back-off hint in ms (0 = none); set on `Busy` rejections.
+    pub retry_after_ms: u32,
     pub msg: String,
 }
 
@@ -399,10 +546,14 @@ impl std::fmt::Display for RemoteError {
 impl std::error::Error for RemoteError {}
 
 /// Client-side failure modes — `Remote(Busy)` is the one load
-/// generators branch on.
+/// generators branch on; `Timeout` means an armed read/connect timeout
+/// fired and the connection's stream state is suspect (a response may
+/// still be in flight), so pipelined callers should discard it.
 #[derive(Debug)]
 pub enum ClientError {
     Io(std::io::Error),
+    /// An armed socket timeout fired before a full response arrived.
+    Timeout,
     /// Framing/parse failure: the connection is unusable.
     Protocol(String),
     /// The server answered with a typed error frame.
@@ -413,6 +564,7 @@ impl std::fmt::Display for ClientError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ClientError::Io(e) => write!(f, "io error: {e}"),
+            ClientError::Timeout => write!(f, "timed out waiting for the server"),
             ClientError::Protocol(m) => write!(f, "protocol error: {m}"),
             ClientError::Remote(e) => write!(f, "{e}"),
         }
@@ -423,8 +575,49 @@ impl std::error::Error for ClientError {}
 
 impl From<std::io::Error> for ClientError {
     fn from(e: std::io::Error) -> Self {
-        ClientError::Io(e)
+        if matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ) {
+            ClientError::Timeout
+        } else {
+            ClientError::Io(e)
+        }
     }
+}
+
+/// Client socket configuration. The defaults block on connect/read like
+/// a plain `TcpStream` but bound writes — pass explicit timeouts to
+/// survive a hung or crashed server (the fleet dispatcher always does).
+#[derive(Clone, Debug)]
+pub struct NetClientCfg {
+    /// Bound on TCP connect (`None` = OS default blocking connect).
+    pub connect_timeout: Option<Duration>,
+    /// Bound on waiting for a response frame (`None` = wait forever).
+    pub read_timeout: Option<Duration>,
+    /// Bound on writing a request frame.
+    pub write_timeout: Option<Duration>,
+}
+
+impl Default for NetClientCfg {
+    fn default() -> Self {
+        Self {
+            connect_timeout: None,
+            read_timeout: None,
+            write_timeout: Some(Duration::from_secs(30)),
+        }
+    }
+}
+
+/// A health pong, decoded ([`NetClient::ping`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HealthStatus {
+    /// The server is draining and will admit nothing new.
+    pub draining: bool,
+    /// How many models it serves.
+    pub models: u16,
+    /// Total requests outstanding across its bounded queues.
+    pub queued: u32,
 }
 
 /// Blocking wire-protocol client with reused frame buffers. Supports
@@ -436,12 +629,54 @@ pub struct NetClient {
     rbuf: Vec<u8>,
     wbuf: Vec<u8>,
     next_id: u64,
+    /// Deadline budget stamped on every outgoing request (0 on the wire
+    /// when unset). The server sheds work whose budget expires queued.
+    deadline: Option<Duration>,
 }
 
 impl NetClient {
+    /// Connect with default socket config (blocking connect/read,
+    /// bounded write). Fleet and chaos paths use [`connect_with`].
+    ///
+    /// [`connect_with`]: NetClient::connect_with
     pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<NetClient> {
-        let stream = TcpStream::connect(addr)?;
+        NetClient::connect_with(addr, NetClientCfg::default())
+    }
+
+    /// Connect with explicit connect/read/write timeouts. With a
+    /// connect timeout every resolved address is tried in turn and the
+    /// last error is returned.
+    pub fn connect_with(addr: impl ToSocketAddrs, cfg: NetClientCfg) -> std::io::Result<NetClient> {
+        let stream = match cfg.connect_timeout {
+            None => TcpStream::connect(addr)?,
+            Some(d) => {
+                let mut last: Option<std::io::Error> = None;
+                let mut found = None;
+                for a in addr.to_socket_addrs()? {
+                    match TcpStream::connect_timeout(&a, d) {
+                        Ok(s) => {
+                            found = Some(s);
+                            break;
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                match found {
+                    Some(s) => s,
+                    None => {
+                        return Err(last.unwrap_or_else(|| {
+                            std::io::Error::new(
+                                std::io::ErrorKind::InvalidInput,
+                                "no socket addresses resolved",
+                            )
+                        }))
+                    }
+                }
+            }
+        };
         stream.set_nodelay(true)?;
+        stream.set_read_timeout(cfg.read_timeout)?;
+        stream.set_write_timeout(cfg.write_timeout)?;
         let reader = std::io::BufReader::new(stream.try_clone()?);
         Ok(NetClient {
             reader,
@@ -449,14 +684,26 @@ impl NetClient {
             rbuf: Vec::new(),
             wbuf: Vec::new(),
             next_id: 1,
+            deadline: None,
         })
+    }
+
+    /// Set (or clear) the deadline budget stamped on future requests.
+    pub fn set_deadline(&mut self, deadline: Option<Duration>) {
+        self.deadline = deadline;
+    }
+
+    fn deadline_ms(&self) -> u32 {
+        self.deadline
+            .map(|d| d.as_millis().min(u32::MAX as u128) as u32)
+            .unwrap_or(0)
     }
 
     /// Send an `f32le` request; returns its request id.
     pub fn send_f32(&mut self, model: &str, input: &[f32]) -> Result<u64, ClientError> {
         let id = self.next_id;
         self.next_id += 1;
-        wire::encode_request_f32(&mut self.wbuf, id, model, input);
+        wire::encode_request_f32(&mut self.wbuf, id, model, input, self.deadline_ms());
         self.stream.write_all(&self.wbuf)?;
         Ok(id)
     }
@@ -466,36 +713,90 @@ impl NetClient {
     pub fn send_qidx(&mut self, model: &str, idx: &[u8]) -> Result<u64, ClientError> {
         let id = self.next_id;
         self.next_id += 1;
-        wire::encode_request_qidx(&mut self.wbuf, id, model, idx);
+        wire::encode_request_qidx(&mut self.wbuf, id, model, idx, self.deadline_ms());
         self.stream.write_all(&self.wbuf)?;
         Ok(id)
+    }
+
+    /// Read the next frame into `rbuf`, mapping the structured read
+    /// error onto client error taxonomy: armed-timeout → `Timeout`,
+    /// transport → `Io`, torn/garbled bytes → `Protocol`.
+    fn read_next_frame(&mut self) -> Result<(), ClientError> {
+        match wire::read_frame(&mut self.reader, &mut self.rbuf) {
+            Ok(true) => Ok(()),
+            Ok(false) => Err(ClientError::Protocol(
+                "connection closed before response".into(),
+            )),
+            Err(e) if e.is_timeout() => Err(ClientError::Timeout),
+            Err(wire::ReadError::Io { source, .. }) => Err(ClientError::Io(source)),
+            Err(e) => Err(ClientError::Protocol(format!("{e:#}"))),
+        }
     }
 
     /// Receive the next response frame (in request order): the request
     /// id it answers plus the outputs or the server's typed error.
     pub fn recv_response(&mut self) -> Result<(u64, Result<Vec<f32>, RemoteError>), ClientError> {
+        self.read_next_frame()?;
         let proto = |e: anyhow::Error| ClientError::Protocol(format!("{e:#}"));
-        if !wire::read_frame(&mut self.reader, &mut self.rbuf).map_err(proto)? {
-            return Err(ClientError::Protocol(
-                "connection closed before response".into(),
-            ));
-        }
         match wire::parse_frame(&self.rbuf).map_err(proto)? {
             Frame::Response { req_id, payload } => {
                 let mut out = Vec::new();
                 wire::payload_f32s_into(payload, &mut out).map_err(proto)?;
                 Ok((req_id, Ok(out)))
             }
-            Frame::Error { req_id, code, msg } => Ok((
+            Frame::Error {
+                req_id,
+                code,
+                retry_after_ms,
+                msg,
+            } => Ok((
                 req_id,
                 Err(RemoteError {
                     code,
+                    retry_after_ms,
                     msg: msg.to_string(),
                 }),
             )),
-            Frame::Request { .. } => Err(ClientError::Protocol(
-                "server sent a request frame".into(),
-            )),
+            other => Err(ClientError::Protocol(format!(
+                "server sent an unexpected frame kind: {other:?}"
+            ))),
+        }
+    }
+
+    /// Health-check the server: sends a ping and waits for the pong.
+    ///
+    /// Only valid on a connection with no pipelined responses
+    /// outstanding — a pending inference response would be misread as a
+    /// protocol violation. Fleet health threads keep a dedicated
+    /// connection for exactly this reason.
+    pub fn ping(&mut self) -> Result<HealthStatus, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::encode_health_ping(&mut self.wbuf, id);
+        self.stream.write_all(&self.wbuf)?;
+        self.read_next_frame()?;
+        let proto = |e: anyhow::Error| ClientError::Protocol(format!("{e:#}"));
+        match wire::parse_frame(&self.rbuf).map_err(proto)? {
+            Frame::HealthPong {
+                req_id,
+                draining,
+                models,
+                queued,
+            } => {
+                if req_id != id {
+                    return Err(ClientError::Protocol(format!(
+                        "pong id {req_id} != ping id {id}"
+                    )));
+                }
+                Ok(HealthStatus {
+                    draining,
+                    models,
+                    queued,
+                })
+            }
+            other => Err(ClientError::Protocol(format!(
+                "expected health pong, got: {other:?}"
+            ))),
         }
     }
 
@@ -520,6 +821,52 @@ impl NetClient {
     pub fn infer_qidx(&mut self, model: &str, idx: &[u8]) -> Result<Vec<f32>, ClientError> {
         let id = self.send_qidx(model, idx)?;
         self.finish(id)
+    }
+
+    /// Run `attempt` up to `1 + max_retries` times, retrying only on
+    /// `Busy` and honoring the server's retry-after hint (falling back
+    /// to 1·2·4·… ms exponential backoff when the server sent none).
+    fn retrying<F>(&mut self, max_retries: usize, mut attempt: F) -> Result<Vec<f32>, ClientError>
+    where
+        F: FnMut(&mut NetClient) -> Result<Vec<f32>, ClientError>,
+    {
+        let mut tries = 0;
+        loop {
+            match attempt(self) {
+                Err(ClientError::Remote(e))
+                    if e.code == ErrCode::Busy && tries < max_retries =>
+                {
+                    let ms = if e.retry_after_ms > 0 {
+                        e.retry_after_ms as u64
+                    } else {
+                        1u64 << tries.min(6)
+                    };
+                    std::thread::sleep(Duration::from_millis(ms));
+                    tries += 1;
+                }
+                done => return done,
+            }
+        }
+    }
+
+    /// [`infer_f32`](NetClient::infer_f32) with bounded Busy retries.
+    pub fn infer_f32_retrying(
+        &mut self,
+        model: &str,
+        input: &[f32],
+        max_retries: usize,
+    ) -> Result<Vec<f32>, ClientError> {
+        self.retrying(max_retries, |c| c.infer_f32(model, input))
+    }
+
+    /// [`infer_qidx`](NetClient::infer_qidx) with bounded Busy retries.
+    pub fn infer_qidx_retrying(
+        &mut self,
+        model: &str,
+        idx: &[u8],
+        max_retries: usize,
+    ) -> Result<Vec<f32>, ClientError> {
+        self.retrying(max_retries, |c| c.infer_qidx(model, idx))
     }
 }
 
@@ -628,7 +975,7 @@ mod tests {
         let addr = net.local_addr();
         let mut stream = TcpStream::connect(addr).unwrap();
         let mut buf = Vec::new();
-        wire::encode_request_f32(&mut buf, 1, "sum", &[0.0; 4]);
+        wire::encode_request_f32(&mut buf, 1, "sum", &[0.0; 4], 0);
         let mid = buf.len() - 10;
         buf[mid] ^= 0xff; // corrupt inside the body; framing stays intact
         stream.write_all(&buf).unwrap();
@@ -641,6 +988,158 @@ mod tests {
                 assert!(msg.contains("checksum"), "{msg}");
             }
             f => panic!("expected error frame, got {f:?}"),
+        }
+        net.shutdown();
+    }
+
+    #[test]
+    fn health_ping_reports_load() {
+        let net = boot();
+        let mut c = NetClient::connect(net.local_addr()).unwrap();
+        let h = c.ping().unwrap();
+        assert!(!h.draining);
+        assert_eq!(h.models, 1);
+        // Interleaves with inference on the same connection as long as
+        // no responses are outstanding when the ping goes out.
+        assert_eq!(c.infer_f32("sum", &[1.0; 4]).unwrap(), vec![4.0]);
+        let h = c.ping().unwrap();
+        assert_eq!(h.models, 1);
+        net.shutdown();
+    }
+
+    #[test]
+    fn client_read_timeout_surfaces_as_timeout() {
+        // A listener that accepts and then never speaks: the armed read
+        // timeout must fire as ClientError::Timeout, not hang.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+        let mut c = NetClient::connect_with(
+            addr,
+            NetClientCfg {
+                connect_timeout: Some(Duration::from_secs(5)),
+                read_timeout: Some(Duration::from_millis(50)),
+                ..NetClientCfg::default()
+            },
+        )
+        .unwrap();
+        match c.infer_f32("sum", &[0.0; 4]) {
+            Err(ClientError::Timeout) => {}
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        drop(hold.join().unwrap());
+    }
+
+    #[test]
+    fn busy_retry_after_hint_reaches_the_client() {
+        // One worker wedged on a slow batch + queue of 1 ⇒ the next
+        // pipelined request bounces with Busy carrying the configured
+        // retry-after hint.
+        struct SlowEngine;
+        impl Backend for SlowEngine {
+            fn name(&self) -> &str {
+                "slow"
+            }
+            fn input_len(&self) -> usize {
+                1
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn memory_bytes(&self) -> usize {
+                0
+            }
+            fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+                std::thread::sleep(Duration::from_millis(80));
+                out[..batch].copy_from_slice(&flat[..batch]);
+            }
+        }
+        let mut router = Router::new();
+        router.register(
+            "slow",
+            Server::start(
+                Arc::new(SlowEngine),
+                ServerCfg {
+                    max_batch: 1,
+                    max_queue: 1,
+                    workers: 1,
+                    busy_retry_after: Duration::from_millis(9),
+                    ..ServerCfg::default()
+                },
+            ),
+        );
+        let net = NetServer::bind("127.0.0.1:0", router).unwrap();
+        let mut c = NetClient::connect(net.local_addr()).unwrap();
+        // Saturate: several in flight; at least one must bounce Busy.
+        let mut ids = Vec::new();
+        for _ in 0..6 {
+            ids.push(c.send_f32("slow", &[1.0]).unwrap());
+        }
+        let mut saw_busy_hint = false;
+        for _ in &ids {
+            let (_, res) = c.recv_response().unwrap();
+            if let Err(e) = res {
+                assert_eq!(e.code, ErrCode::Busy);
+                assert_eq!(e.retry_after_ms, 9);
+                saw_busy_hint = true;
+            }
+        }
+        assert!(saw_busy_hint, "queue of 1 never bounced a Busy");
+        // And the retrying helper rides the hint to eventual success.
+        let out = c.infer_f32_retrying("slow", &[2.5], 64).unwrap();
+        assert_eq!(out, vec![2.5]);
+        net.shutdown();
+    }
+
+    #[test]
+    fn deadline_exceeded_travels_the_wire() {
+        struct SlowEngine;
+        impl Backend for SlowEngine {
+            fn name(&self) -> &str {
+                "slow"
+            }
+            fn input_len(&self) -> usize {
+                1
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn memory_bytes(&self) -> usize {
+                0
+            }
+            fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+                std::thread::sleep(Duration::from_millis(60));
+                out[..batch].copy_from_slice(&flat[..batch]);
+            }
+        }
+        let mut router = Router::new();
+        router.register(
+            "slow",
+            Server::start(
+                Arc::new(SlowEngine),
+                ServerCfg {
+                    max_batch: 1,
+                    workers: 1,
+                    ..ServerCfg::default()
+                },
+            ),
+        );
+        let net = NetServer::bind("127.0.0.1:0", router).unwrap();
+        let mut c = NetClient::connect(net.local_addr()).unwrap();
+        // First request wedges the single worker; the second's 5 ms
+        // budget expires while it queues and must come back typed.
+        c.set_deadline(None);
+        let a = c.send_f32("slow", &[1.0]).unwrap();
+        c.set_deadline(Some(Duration::from_millis(5)));
+        let b = c.send_f32("slow", &[2.0]).unwrap();
+        let (rid, res) = c.recv_response().unwrap();
+        assert_eq!(rid, a);
+        assert_eq!(res.unwrap(), vec![1.0]);
+        let (rid, res) = c.recv_response().unwrap();
+        assert_eq!(rid, b);
+        match res {
+            Err(e) => assert_eq!(e.code, ErrCode::DeadlineExceeded),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
         }
         net.shutdown();
     }

@@ -17,6 +17,9 @@ use std::path::Path;
 /// Routes requests to named backends.
 pub struct Router {
     servers: BTreeMap<String, Server>,
+    /// `(file name, error chain)` for artifacts that failed to boot in
+    /// [`Router::load_dir`] — the healthy rest keep serving.
+    load_errors: Vec<(String, String)>,
 }
 
 impl Default for Router {
@@ -29,11 +32,17 @@ impl Router {
     pub fn new() -> Router {
         Router {
             servers: BTreeMap::new(),
+            load_errors: Vec::new(),
         }
     }
 
     /// Boot every `.qnn` artifact in `dir` behind a default-config
     /// server. Model names are the file stems.
+    ///
+    /// A corrupt or unreadable artifact does not take the deployment
+    /// down: it is skipped and recorded in [`Router::load_errors`]
+    /// (surfaced by [`Router::report`]). Only when *nothing* boots is
+    /// the whole load an error.
     pub fn load_dir(dir: impl AsRef<Path>) -> Result<Router> {
         Self::load_dir_with(dir, ServerCfg::default())
     }
@@ -51,12 +60,35 @@ impl Router {
         anyhow::ensure!(!paths.is_empty(), "no .qnn artifacts found in {dir:?}");
         let mut router = Router::new();
         for path in paths {
-            let backend = load_backend(&path)
-                .with_context(|| format!("booting backend from {path:?}"))?;
-            let name = backend.name().to_string();
-            router.register(&name, Server::start(backend, cfg.clone()));
+            let file = path
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_else(|| path.display().to_string());
+            match load_backend(&path) {
+                Ok(backend) => {
+                    let name = backend.name().to_string();
+                    router.register(&name, Server::start(backend, cfg.clone()));
+                }
+                Err(e) => router.load_errors.push((file, format!("{e:#}"))),
+            }
+        }
+        if router.servers.is_empty() {
+            let detail: Vec<String> = router
+                .load_errors
+                .iter()
+                .map(|(f, e)| format!("{f}: {e}"))
+                .collect();
+            anyhow::bail!(
+                "no artifact in {dir:?} could be booted: {}",
+                detail.join("; ")
+            );
         }
         Ok(router)
+    }
+
+    /// Artifacts skipped by [`Router::load_dir`]: `(file name, error)`.
+    pub fn load_errors(&self) -> &[(String, String)] {
+        &self.load_errors
     }
 
     pub fn register(&mut self, name: &str, server: Server) {
@@ -107,6 +139,9 @@ impl Router {
                 server.backend.memory_bytes() as f64 / 1024.0,
                 server.metrics.snapshot()
             ));
+        }
+        for (file, err) in &self.load_errors {
+            s.push_str(&format!("SKIPPED {file}: {err}\n"));
         }
         s
     }
@@ -167,6 +202,48 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let e = Router::load_dir(&dir).unwrap_err();
         assert!(format!("{e:#}").contains("no .qnn artifacts"), "{e:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_dir_skips_corrupt_artifacts_and_records_why() {
+        use crate::nn::{ActSpec, NetSpec, Network};
+        use crate::util::rng::Xoshiro256;
+
+        let dir = std::env::temp_dir().join(format!("qnn_rtr_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // One healthy float artifact...
+        let spec = NetSpec::mlp("good", 4, &[4], 2, ActSpec::tanh_d(16));
+        let net = Network::from_spec(&spec, &mut Xoshiro256::new(3));
+        let good = dir.join("good.qnn");
+        net.save(good.to_str().unwrap()).unwrap();
+        // ...one truncated copy (valid magic, torn body), and one file
+        // that is not an artifact at all.
+        let bytes = std::fs::read(&good).unwrap();
+        std::fs::write(dir.join("torn.qnn"), &bytes[..bytes.len() / 2]).unwrap();
+        std::fs::write(dir.join("junk.qnn"), b"definitely not an artifact").unwrap();
+
+        let router = Router::load_dir(&dir).expect("healthy artifact must still boot");
+        assert_eq!(router.models(), vec!["good"]);
+        let errs = router.load_errors();
+        assert_eq!(errs.len(), 2, "{errs:?}");
+        assert!(errs.iter().any(|(f, _)| f == "torn.qnn"), "{errs:?}");
+        assert!(errs.iter().any(|(f, _)| f == "junk.qnn"), "{errs:?}");
+        assert!(errs.iter().all(|(_, e)| !e.is_empty()));
+        let report = router.report();
+        assert!(report.contains("SKIPPED torn.qnn"), "{report}");
+        assert!(report.contains("SKIPPED junk.qnn"), "{report}");
+        assert!(router.infer("good", vec![0.0; 4]).is_ok());
+
+        // A directory of *only* corrupt artifacts is a hard error that
+        // names every casualty.
+        std::fs::remove_file(&good).unwrap();
+        let e = Router::load_dir(&dir).unwrap_err();
+        let chain = format!("{e:#}");
+        assert!(chain.contains("torn.qnn") && chain.contains("junk.qnn"), "{chain}");
+
+        router.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }
 }

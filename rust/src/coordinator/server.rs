@@ -27,7 +27,7 @@
 //! [`Backend::infer_quantized_batch_into`].
 
 use super::engine::Backend;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, Outcome};
 use crate::fixedpoint::UniformQuant;
 use crate::util::threadpool::ThreadPool;
 use std::cell::RefCell;
@@ -46,6 +46,10 @@ pub struct ServerCfg {
     /// that may be outstanding (queued or in service) at once. Further
     /// submissions fail fast with [`InferError::Busy`].
     pub max_queue: usize,
+    /// Back-off hint attached to `Busy` rejections: roughly how long
+    /// until a shed caller should expect capacity back. Travels on the
+    /// wire in the error frame's retry-after field.
+    pub busy_retry_after: Duration,
 }
 
 impl Default for ServerCfg {
@@ -55,6 +59,7 @@ impl Default for ServerCfg {
             max_wait: Duration::from_millis(2),
             workers: 2,
             max_queue: 1024,
+            busy_retry_after: Duration::from_millis(2),
         }
     }
 }
@@ -83,7 +88,11 @@ impl Payload {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum InferError {
     /// The bounded queue is full; the request was rejected at admission.
-    Busy { queued: usize, max_queue: usize },
+    /// `retry_after_ms` hints when capacity is likely back.
+    Busy { queued: usize, max_queue: usize, retry_after_ms: u64 },
+    /// The request's latency budget expired before it reached the
+    /// engine; the batcher shed it instead of serving a stale answer.
+    DeadlineExceeded,
     /// The server is shutting down (or already gone) and admits nothing.
     Shutdown,
     /// The request was accepted but the server dropped it before
@@ -101,8 +110,15 @@ pub enum InferError {
 impl std::fmt::Display for InferError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            InferError::Busy { queued, max_queue } => {
-                write!(f, "server busy: {queued} requests outstanding (max {max_queue})")
+            InferError::Busy { queued, max_queue, retry_after_ms } => {
+                write!(
+                    f,
+                    "server busy: {queued} requests outstanding (max {max_queue}, \
+                     retry after {retry_after_ms}ms)"
+                )
+            }
+            InferError::DeadlineExceeded => {
+                write!(f, "deadline expired before the request reached the engine")
             }
             InferError::Shutdown => write!(f, "server shut down"),
             InferError::Dropped => write!(f, "server dropped request during shutdown"),
@@ -124,7 +140,10 @@ impl std::error::Error for InferError {}
 struct Request {
     payload: Payload,
     enqueued: Instant,
-    resp: mpsc::Sender<Vec<f32>>,
+    /// Absolute point past which the answer is worthless; the batcher
+    /// sheds expired requests at dispatch with a typed error.
+    deadline: Option<Instant>,
+    resp: mpsc::Sender<Result<Vec<f32>, InferError>>,
 }
 
 /// Handle for submitting requests (cheap to clone).
@@ -134,9 +153,11 @@ pub struct ServerHandle {
     depth: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
     max_queue: usize,
+    busy_retry_after_ms: u64,
     input_len: usize,
     output_len: usize,
     input_quant: Option<UniformQuant>,
+    metrics: Arc<Metrics>,
 }
 
 impl ServerHandle {
@@ -168,21 +189,50 @@ impl ServerHandle {
         Ok(())
     }
 
+    /// Requests currently outstanding (queued or in service) — the load
+    /// signal health pongs report.
+    pub fn queued(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
     /// Non-blocking submission with admission control: validates the
     /// payload, reserves a queue slot (or fails fast with
     /// [`InferError::Busy`]), and returns the channel the response will
     /// arrive on. The TCP front-end pipelines through this.
-    pub fn submit(&self, payload: Payload) -> Result<mpsc::Receiver<Vec<f32>>, InferError> {
+    pub fn submit(
+        &self,
+        payload: Payload,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, InferError>>, InferError> {
+        self.submit_with_deadline(payload, None)
+    }
+
+    /// [`ServerHandle::submit`] with a latency budget: if `deadline`
+    /// passes while the request queues, the batcher answers
+    /// [`InferError::DeadlineExceeded`] instead of serving it.
+    pub fn submit_with_deadline(
+        &self,
+        payload: Payload,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, InferError>>, InferError> {
         if self.shutdown.load(Ordering::SeqCst) {
+            self.metrics.outcomes.record(Outcome::PeerShutdown);
             return Err(InferError::Shutdown);
         }
-        self.validate(&payload)?;
+        if let Err(e) = self.validate(&payload) {
+            self.metrics.outcomes.record(Outcome::BadRequest);
+            return Err(e);
+        }
         // Reserve a slot: CAS loop so concurrent submitters never
         // overshoot the bound.
         let mut cur = self.depth.load(Ordering::Relaxed);
         loop {
             if cur >= self.max_queue {
-                return Err(InferError::Busy { queued: cur, max_queue: self.max_queue });
+                self.metrics.outcomes.record(Outcome::Busy);
+                return Err(InferError::Busy {
+                    queued: cur,
+                    max_queue: self.max_queue,
+                    retry_after_ms: self.busy_retry_after_ms,
+                });
             }
             match self.depth.compare_exchange_weak(
                 cur,
@@ -198,10 +248,12 @@ impl ServerHandle {
         let req = Request {
             payload,
             enqueued: Instant::now(),
+            deadline,
             resp: rtx,
         };
         if self.tx.send(req).is_err() {
             self.depth.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.outcomes.record(Outcome::PeerShutdown);
             return Err(InferError::Shutdown);
         }
         Ok(rrx)
@@ -210,14 +262,14 @@ impl ServerHandle {
     /// Blocking inference call on raw floats.
     pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>, InferError> {
         let rx = self.submit(Payload::F32(input))?;
-        rx.recv().map_err(|_| InferError::Dropped)
+        rx.recv().map_err(|_| InferError::Dropped)?
     }
 
     /// Blocking inference call on u8 input-codebook indices — the
     /// no-float request path (see [`Backend::infer_quantized_batch_into`]).
     pub fn infer_quantized(&self, idx: Vec<u8>) -> Result<Vec<f32>, InferError> {
         let rx = self.submit(Payload::QIdx(idx))?;
-        rx.recv().map_err(|_| InferError::Dropped)
+        rx.recv().map_err(|_| InferError::Dropped)?
     }
 }
 
@@ -301,12 +353,30 @@ impl Server {
                             static BUFS: RefCell<WorkerScratch> =
                                 RefCell::new(WorkerScratch::default());
                         }
-                        let n = batch.len();
+                        let mut batch = batch;
                         // Slots return when this guard drops — after the
                         // replies below in the normal case, and during
                         // unwind if the backend panics, so `max_queue`
-                        // capacity is never leaked.
-                        let _slots = SlotGuard { depth, n };
+                        // capacity is never leaked. Shed requests count
+                        // too: their slots were reserved at admission.
+                        let _slots = SlotGuard { depth, n: batch.len() };
+                        // Deadline shedding: a budget that expired while
+                        // the request queued gets a typed error now —
+                        // engine time goes to answers someone is still
+                        // waiting for.
+                        let now = Instant::now();
+                        batch.retain(|r| match r.deadline {
+                            Some(d) if now >= d => {
+                                metrics.outcomes.record(Outcome::DeadlineExceeded);
+                                let _ = r.resp.send(Err(InferError::DeadlineExceeded));
+                                false
+                            }
+                            _ => true,
+                        });
+                        if batch.is_empty() {
+                            return;
+                        }
+                        let n = batch.len();
                         let out_len = engine.output_len();
                         BUFS.with(|b| {
                             let s = &mut *b.borrow_mut();
@@ -388,10 +458,12 @@ impl Server {
                                 s.service.push(service_ms);
                             }
                             metrics.record_batch(&s.e2e, &s.queue, &s.service);
+                            metrics.outcomes.add(Outcome::Ok, n as u64);
                             for (i, r) in batch.into_iter().enumerate() {
                                 // Receiver may have given up; ignore errors.
-                                let _ =
-                                    r.resp.send(s.out[i * out_len..(i + 1) * out_len].to_vec());
+                                let _ = r
+                                    .resp
+                                    .send(Ok(s.out[i * out_len..(i + 1) * out_len].to_vec()));
                             }
                         });
                     });
@@ -457,9 +529,11 @@ impl Server {
                 depth,
                 shutdown: Arc::clone(&shutdown),
                 max_queue: cfg.max_queue.max(1),
+                busy_retry_after_ms: cfg.busy_retry_after.as_millis() as u64,
                 input_len,
                 output_len,
                 input_quant,
+                metrics: Arc::clone(&metrics),
             },
             metrics,
             shutdown,
@@ -633,6 +707,7 @@ mod tests {
                 max_wait: Duration::from_millis(0),
                 workers: 1,
                 max_queue: 2,
+                ..ServerCfg::default()
             },
         );
         let h = server.handle();
@@ -667,6 +742,87 @@ mod tests {
     }
 
     #[test]
+    fn expired_deadlines_are_shed_with_typed_errors() {
+        // One slow worker serializes the queue: the first request holds
+        // the engine for 60 ms, so a request behind it with a 5 ms
+        // budget must be shed at dispatch — typed error, not a stale
+        // answer, and the outcome counter records the shed.
+        let server = Server::start(
+            Arc::new(SlowEngine(Duration::from_millis(60))),
+            ServerCfg {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                workers: 1,
+                max_queue: 64,
+                ..ServerCfg::default()
+            },
+        );
+        let h = server.handle();
+        let first = h
+            .submit(Payload::F32(vec![0.0, 0.0]))
+            .expect("first request admitted");
+        // Give the batcher a beat to pull `first` into the engine.
+        std::thread::sleep(Duration::from_millis(10));
+        let doomed = h
+            .submit_with_deadline(
+                Payload::F32(vec![0.0, 0.0]),
+                Some(Instant::now() + Duration::from_millis(5)),
+            )
+            .expect("second request admitted");
+        let unbounded = h
+            .submit_with_deadline(Payload::F32(vec![0.0, 0.0]), None)
+            .expect("third request admitted");
+
+        assert_eq!(
+            doomed.recv().unwrap(),
+            Err(InferError::DeadlineExceeded),
+            "queued past its budget, must be shed"
+        );
+        assert_eq!(first.recv().unwrap(), Ok(vec![1.0]));
+        assert_eq!(unbounded.recv().unwrap(), Ok(vec![1.0]));
+        assert_eq!(server.metrics.outcomes.get(Outcome::DeadlineExceeded), 1);
+        assert_eq!(server.metrics.outcomes.get(Outcome::Ok), 2);
+        // Shed requests release their admission slots.
+        assert_eq!(h.queued(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn busy_carries_the_retry_after_hint() {
+        let server = Server::start(
+            Arc::new(SlowEngine(Duration::from_millis(50))),
+            ServerCfg {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                workers: 1,
+                max_queue: 1,
+                busy_retry_after: Duration::from_millis(7),
+                ..ServerCfg::default()
+            },
+        );
+        let h = server.handle();
+        let _held = h.submit(Payload::F32(vec![0.0, 0.0])).unwrap();
+        // Queue bound is 1 and one request is outstanding: the next
+        // submissions must carry the configured hint.
+        let mut saw_busy = false;
+        for _ in 0..50 {
+            match h.submit(Payload::F32(vec![0.0, 0.0])) {
+                Err(InferError::Busy { retry_after_ms, .. }) => {
+                    assert_eq!(retry_after_ms, 7);
+                    saw_busy = true;
+                    break;
+                }
+                // The first submission may land after `_held` entered
+                // service and its slot returned; keep pushing.
+                Ok(_) | Err(_) => {}
+            }
+        }
+        assert!(saw_busy, "bounded queue never rejected");
+        assert!(server.metrics.outcomes.get(Outcome::Busy) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
     fn shutdown_under_load_drains_every_accepted_request() {
         // Every accepted request must resolve — a response or a typed
         // error, never a hang — even when shutdown lands mid-flood.
@@ -677,6 +833,7 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 workers: 2,
                 max_queue: 256,
+                ..ServerCfg::default()
             },
         );
         let h = server.handle();

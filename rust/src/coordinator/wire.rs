@@ -5,9 +5,10 @@
 //! # Frame layout
 //!
 //! ```text
-//! magic    4 bytes  b"QWF1" (protocol major version rides in the magic)
+//! magic    4 bytes  b"QWF2" (protocol major version rides in the magic)
 //! len      u32 LE   bytes after this field (kind .. checksum inclusive)
-//! kind     u8       0 = request, 1 = response, 2 = error
+//! kind     u8       0 = request, 1 = response, 2 = error,
+//!                   3 = health ping, 4 = health pong
 //! req id   u64 LE   caller-chosen correlation id, echoed in the reply
 //! ...kind-specific body (below)...
 //! checksum u64 LE   FNV-1a over magic .. end of body
@@ -16,10 +17,28 @@
 //! Kind-specific bodies:
 //!
 //! ```text
-//! request   name_len u8 · model name (UTF-8) · dtype u8 · payload_len u32 · payload
-//! response  dtype u8 (always 0 = f32le) · payload_len u32 · payload
-//! error     code u8 · msg_len u16 · message (UTF-8)
+//! request      name_len u8 · model name (UTF-8) · dtype u8 ·
+//!              deadline_ms u32 (0 = none) · payload_len u32 · payload
+//! response     dtype u8 (always 0 = f32le) · payload_len u32 · payload
+//! error        code u8 · retry_after_ms u32 (0 = no hint) ·
+//!              msg_len u16 · message (UTF-8)
+//! health ping  (empty)
+//! health pong  status u8 (0 = ok, 1 = draining) · models u16 · queued u32
 //! ```
+//!
+//! Version 2 additions (the fleet tier's reliability vocabulary):
+//!
+//! * **Deadlines.** A request carries its remaining latency budget in
+//!   milliseconds; the server drops work whose deadline has already
+//!   passed (answering a typed `deadline_exceeded` error) instead of
+//!   burning cycles on an answer nobody is waiting for.
+//! * **Retry-after.** Error frames carry a back-off hint; `Busy`
+//!   rejections tell the client when capacity is likely to return, and
+//!   clients ([`super::net::NetClient`], the fleet dispatcher) honor it.
+//! * **Health frames.** A one-byte-body ping/pong pair cheap enough to
+//!   run on a tight interval; the pong reports drain state, model
+//!   count, and total queue depth so a dispatcher can see trouble
+//!   before requests do.
 //!
 //! Two request payload encodings ([`Dtype`]):
 //!
@@ -40,15 +59,16 @@
 //! # Version policy
 //!
 //! The magic pins the frame layout; an incompatible revision bumps the
-//! magic (`QWF2`) so old peers fail loudly at the first frame. Unknown
-//! kind/dtype/code tags inside a valid frame are parse errors.
+//! magic (v1 `QWF1` → v2 `QWF2`, which added the deadline, retry-after
+//! and health fields) so old peers fail loudly at the first frame.
+//! Unknown kind/dtype/code tags inside a valid frame are parse errors.
 
 use crate::util::cursor::ByteCursor;
 use crate::util::fnv::fnv1a;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-/// Frame magic for wire protocol version 1.
-pub const WIRE_MAGIC: &[u8; 4] = b"QWF1";
+/// Frame magic for wire protocol version 2.
+pub const WIRE_MAGIC: &[u8; 4] = b"QWF2";
 /// Hard cap on a frame's `len` field: corrupt or hostile lengths must
 /// not drive allocation (64 MiB is far beyond any real model's I/O).
 pub const MAX_FRAME_LEN: usize = 1 << 26;
@@ -111,6 +131,9 @@ pub enum ErrCode {
     Shutdown,
     /// The server failed internally after accepting the request.
     Internal,
+    /// The request's deadline passed before it could be served; the
+    /// server shed it instead of answering into the void.
+    DeadlineExceeded,
 }
 
 impl ErrCode {
@@ -121,6 +144,7 @@ impl ErrCode {
             ErrCode::BadRequest => 3,
             ErrCode::Shutdown => 4,
             ErrCode::Internal => 5,
+            ErrCode::DeadlineExceeded => 6,
         }
     }
 
@@ -131,6 +155,7 @@ impl ErrCode {
             3 => Ok(ErrCode::BadRequest),
             4 => Ok(ErrCode::Shutdown),
             5 => Ok(ErrCode::Internal),
+            6 => Ok(ErrCode::DeadlineExceeded),
             t => bail!("unknown error code tag {t}"),
         }
     }
@@ -142,6 +167,7 @@ impl ErrCode {
             ErrCode::BadRequest => "bad_request",
             ErrCode::Shutdown => "shutdown",
             ErrCode::Internal => "internal",
+            ErrCode::DeadlineExceeded => "deadline_exceeded",
         }
     }
 }
@@ -153,6 +179,9 @@ pub enum Frame<'a> {
         req_id: u64,
         model: &'a str,
         dtype: Dtype,
+        /// Remaining latency budget in ms (0 = no deadline). The server
+        /// sheds requests whose budget expires before dispatch.
+        deadline_ms: u32,
         payload: &'a [u8],
     },
     Response {
@@ -163,7 +192,19 @@ pub enum Frame<'a> {
     Error {
         req_id: u64,
         code: ErrCode,
+        /// Back-off hint in ms (0 = no hint) — set on `Busy` frames so
+        /// clients retry when capacity is likely back, not immediately.
+        retry_after_ms: u32,
         msg: &'a str,
+    },
+    /// Lightweight liveness probe (empty body).
+    HealthPing { req_id: u64 },
+    /// Probe reply: drain state plus a coarse load signal.
+    HealthPong {
+        req_id: u64,
+        draining: bool,
+        models: u16,
+        queued: u32,
     },
 }
 
@@ -189,26 +230,42 @@ fn start(buf: &mut Vec<u8>, kind: u8, req_id: u64) {
 }
 
 /// Encode a request frame into `buf` (cleared first; reuse it across
-/// requests for an allocation-free steady state). Panics if the model
+/// requests for an allocation-free steady state). `deadline_ms` is the
+/// remaining latency budget (0 = no deadline). Panics if the model
 /// name exceeds 255 bytes — names are file stems, enforce at the edge.
-pub fn encode_request(buf: &mut Vec<u8>, req_id: u64, model: &str, dtype: Dtype, payload: &[u8]) {
+pub fn encode_request(
+    buf: &mut Vec<u8>,
+    req_id: u64,
+    model: &str,
+    dtype: Dtype,
+    deadline_ms: u32,
+    payload: &[u8],
+) {
     assert!(model.len() <= 255, "model name longer than 255 bytes");
     start(buf, 0, req_id);
     buf.push(model.len() as u8);
     buf.extend_from_slice(model.as_bytes());
     buf.push(dtype.tag());
+    buf.extend_from_slice(&deadline_ms.to_le_bytes());
     buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     buf.extend_from_slice(payload);
     finish(buf);
 }
 
 /// Encode an `f32le` request without materializing a byte payload.
-pub fn encode_request_f32(buf: &mut Vec<u8>, req_id: u64, model: &str, input: &[f32]) {
+pub fn encode_request_f32(
+    buf: &mut Vec<u8>,
+    req_id: u64,
+    model: &str,
+    input: &[f32],
+    deadline_ms: u32,
+) {
     assert!(model.len() <= 255, "model name longer than 255 bytes");
     start(buf, 0, req_id);
     buf.push(model.len() as u8);
     buf.extend_from_slice(model.as_bytes());
     buf.push(Dtype::F32Le.tag());
+    buf.extend_from_slice(&deadline_ms.to_le_bytes());
     buf.extend_from_slice(&((input.len() * 4) as u32).to_le_bytes());
     for &x in input {
         buf.extend_from_slice(&x.to_bits().to_le_bytes());
@@ -217,8 +274,14 @@ pub fn encode_request_f32(buf: &mut Vec<u8>, req_id: u64, model: &str, input: &[
 }
 
 /// Encode a `qidx` request: one u8 codebook index per feature.
-pub fn encode_request_qidx(buf: &mut Vec<u8>, req_id: u64, model: &str, idx: &[u8]) {
-    encode_request(buf, req_id, model, Dtype::QIdx, idx);
+pub fn encode_request_qidx(
+    buf: &mut Vec<u8>,
+    req_id: u64,
+    model: &str,
+    idx: &[u8],
+    deadline_ms: u32,
+) {
+    encode_request(buf, req_id, model, Dtype::QIdx, deadline_ms, idx);
 }
 
 /// Encode a response frame carrying f32le outputs.
@@ -233,7 +296,15 @@ pub fn encode_response_f32(buf: &mut Vec<u8>, req_id: u64, out: &[f32]) {
 }
 
 /// Encode an error frame (message truncated to fit the u16 length).
-pub fn encode_error(buf: &mut Vec<u8>, req_id: u64, code: ErrCode, msg: &str) {
+/// `retry_after_ms` is the back-off hint (0 = none; meaningful on
+/// `Busy`).
+pub fn encode_error(
+    buf: &mut Vec<u8>,
+    req_id: u64,
+    code: ErrCode,
+    retry_after_ms: u32,
+    msg: &str,
+) {
     // Truncate on a char boundary so the frame stays valid UTF-8.
     let mut cut = msg.len().min(u16::MAX as usize);
     while cut > 0 && !msg.is_char_boundary(cut) {
@@ -242,19 +313,96 @@ pub fn encode_error(buf: &mut Vec<u8>, req_id: u64, code: ErrCode, msg: &str) {
     let msg = &msg[..cut];
     start(buf, 2, req_id);
     buf.push(code.tag());
+    buf.extend_from_slice(&retry_after_ms.to_le_bytes());
     buf.extend_from_slice(&(msg.len() as u16).to_le_bytes());
     buf.extend_from_slice(msg.as_bytes());
     finish(buf);
 }
 
+/// Encode a health ping (empty body — the cheapest legal frame).
+pub fn encode_health_ping(buf: &mut Vec<u8>, req_id: u64) {
+    start(buf, 3, req_id);
+    finish(buf);
+}
+
+/// Encode a health pong: drain state + coarse load signal.
+pub fn encode_health_pong(
+    buf: &mut Vec<u8>,
+    req_id: u64,
+    draining: bool,
+    models: u16,
+    queued: u32,
+) {
+    start(buf, 4, req_id);
+    buf.push(draining as u8);
+    buf.extend_from_slice(&models.to_le_bytes());
+    buf.extend_from_slice(&queued.to_le_bytes());
+    finish(buf);
+}
+
 // ---- reading / parsing ----
+
+/// Why [`read_frame`] could not deliver a frame. The split matters to
+/// callers with timeouts armed: an [`ReadError::Io`] whose kind is
+/// `WouldBlock`/`TimedOut` at `partial == 0` is an *idle* socket (the
+/// stream is still synchronized and the read can simply be retried),
+/// while the same error mid-frame — or any [`ReadError::Framing`] — is
+/// unrecoverable and the connection must be closed.
+#[derive(Debug)]
+pub enum ReadError {
+    /// The underlying read failed (or timed out). `partial` is how many
+    /// bytes of the current frame were already consumed: 0 means the
+    /// stream is still at a clean frame boundary.
+    Io { source: std::io::Error, partial: usize },
+    /// Framing damage: bad magic, implausible length, or EOF mid-frame.
+    /// The stream cannot be resynchronized.
+    Framing(anyhow::Error),
+}
+
+impl ReadError {
+    /// True when the error is a read timeout (`WouldBlock`/`TimedOut`).
+    pub fn is_timeout(&self) -> bool {
+        matches!(
+            self,
+            ReadError::Io { source, .. } if matches!(
+                source.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+        )
+    }
+
+    /// True when the stream is still at a frame boundary (nothing of the
+    /// next frame was consumed) — safe to retry the read.
+    pub fn at_boundary(&self) -> bool {
+        matches!(self, ReadError::Io { partial: 0, .. })
+    }
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Io { source, partial } => {
+                write!(f, "frame read failed after {partial} bytes: {source}")
+            }
+            ReadError::Framing(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+fn framing(msg: String) -> ReadError {
+    ReadError::Framing(anyhow::Error::msg(msg))
+}
 
 /// Read exactly one frame's bytes from `r` into `buf` (reused across
 /// calls). Returns `Ok(false)` on a clean EOF at a frame boundary,
 /// `Ok(true)` with the full frame in `buf` otherwise. Framing damage
-/// (bad magic, implausible length, mid-frame EOF) is an error — the
-/// stream cannot be resynchronized and should be closed.
-pub fn read_frame<R: std::io::Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<bool> {
+/// (bad magic, implausible length, mid-frame EOF) is a
+/// [`ReadError::Framing`] — the stream cannot be resynchronized and
+/// should be closed; I/O errors (including read timeouts, when armed)
+/// are [`ReadError::Io`] with the partial byte count.
+pub fn read_frame<R: std::io::Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<bool, ReadError> {
     buf.clear();
     buf.resize(HEADER_LEN, 0);
     // First byte by hand so EOF-at-boundary is distinguishable from a
@@ -266,32 +414,39 @@ pub fn read_frame<R: std::io::Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<bool
                 if got == 0 {
                     return Ok(false);
                 }
-                bail!("connection closed mid-header ({got} of {HEADER_LEN} bytes)");
+                return Err(framing(format!(
+                    "connection closed mid-header ({got} of {HEADER_LEN} bytes)"
+                )));
             }
             Ok(n) => got += n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e).context("reading frame header"),
+            Err(e) => return Err(ReadError::Io { source: e, partial: got }),
         }
     }
-    anyhow::ensure!(
-        &buf[..4] == WIRE_MAGIC,
-        "bad frame magic {:?} (expected {:?})",
-        &buf[..4],
-        WIRE_MAGIC
-    );
+    if &buf[..4] != WIRE_MAGIC {
+        return Err(framing(format!(
+            "bad frame magic {:?} (expected {:?})",
+            &buf[..4],
+            WIRE_MAGIC
+        )));
+    }
     let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
-    anyhow::ensure!(
-        (MIN_BODY_LEN..=MAX_FRAME_LEN).contains(&len),
-        "implausible frame length {len}"
-    );
+    if !(MIN_BODY_LEN..=MAX_FRAME_LEN).contains(&len) {
+        return Err(framing(format!("implausible frame length {len}")));
+    }
     buf.resize(HEADER_LEN + len, 0);
     let mut pos = HEADER_LEN;
     while pos < buf.len() {
         match r.read(&mut buf[pos..]) {
-            Ok(0) => bail!("connection closed mid-frame ({pos} of {} bytes)", HEADER_LEN + len),
+            Ok(0) => {
+                return Err(framing(format!(
+                    "connection closed mid-frame ({pos} of {} bytes)",
+                    HEADER_LEN + len
+                )))
+            }
             Ok(n) => pos += n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e).context("reading frame body"),
+            Err(e) => return Err(ReadError::Io { source: e, partial: pos }),
         }
     }
     Ok(true)
@@ -329,12 +484,14 @@ pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
             let name_len = c.u8()? as usize;
             let model = c.str_bytes(name_len)?;
             let dtype = Dtype::from_tag(c.u8()?)?;
+            let deadline_ms = c.u32()?;
             let payload_len = c.u32()? as usize;
             let payload = c.take(payload_len)?;
             Frame::Request {
                 req_id,
                 model,
                 dtype,
+                deadline_ms,
                 payload,
             }
         }
@@ -352,9 +509,28 @@ pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
         }
         2 => {
             let code = ErrCode::from_tag(c.u8()?)?;
+            let retry_after_ms = c.u32()?;
             let msg_len = c.u16()? as usize;
             let msg = c.str_bytes(msg_len)?;
-            Frame::Error { req_id, code, msg }
+            Frame::Error {
+                req_id,
+                code,
+                retry_after_ms,
+                msg,
+            }
+        }
+        3 => Frame::HealthPing { req_id },
+        4 => {
+            let status = c.u8()?;
+            anyhow::ensure!(status <= 1, "unknown health pong status {status}");
+            let models = c.u16()?;
+            let queued = c.u32()?;
+            Frame::HealthPong {
+                req_id,
+                draining: status == 1,
+                models,
+                queued,
+            }
         }
         t => bail!("unknown frame kind {t}"),
     };
@@ -383,9 +559,10 @@ pub fn payload_f32s_into(payload: &[u8], out: &mut Vec<f32>) -> Result<()> {
 
 /// Wire size of a request frame in the given encoding, for a model name
 /// and feature count — the deployment calculus the `qidx` path wins
-/// (header 17 B + name + 5 B payload framing + checksum 8 B + payload).
+/// (header 17 B + name + 9 B dtype/deadline/payload framing +
+/// checksum 8 B + payload).
 pub fn request_frame_bytes(model: &str, features: usize, dtype: Dtype) -> usize {
-    HEADER_LEN + 1 + 8 + 1 + model.len() + 1 + 4 + features * dtype.bytes_per_feature() + 8
+    HEADER_LEN + 1 + 8 + 1 + model.len() + 1 + 4 + 4 + features * dtype.bytes_per_feature() + 8
 }
 
 #[cfg(test)]
@@ -404,14 +581,15 @@ mod tests {
     #[test]
     fn request_roundtrips_both_encodings() {
         let mut buf = Vec::new();
-        encode_request_f32(&mut buf, 42, "digits-lut", &[0.25, -1.5, 3.0]);
+        encode_request_f32(&mut buf, 42, "digits-lut", &[0.25, -1.5, 3.0], 0);
         let (frame, ok) = roundtrip(&buf);
         assert!(ok);
         match parse_frame(&frame).unwrap() {
-            Frame::Request { req_id, model, dtype, payload } => {
+            Frame::Request { req_id, model, dtype, deadline_ms, payload } => {
                 assert_eq!(req_id, 42);
                 assert_eq!(model, "digits-lut");
                 assert_eq!(dtype, Dtype::F32Le);
+                assert_eq!(deadline_ms, 0);
                 let mut xs = Vec::new();
                 payload_f32s_into(payload, &mut xs).unwrap();
                 assert_eq!(xs, vec![0.25, -1.5, 3.0]);
@@ -420,17 +598,45 @@ mod tests {
         }
         assert_eq!(buf.len(), request_frame_bytes("digits-lut", 3, Dtype::F32Le));
 
-        encode_request_qidx(&mut buf, 7, "m", &[0, 3, 15, 255]);
+        encode_request_qidx(&mut buf, 7, "m", &[0, 3, 15, 255], 250);
         match parse_frame(&buf).unwrap() {
-            Frame::Request { req_id, model, dtype, payload } => {
+            Frame::Request { req_id, model, dtype, deadline_ms, payload } => {
                 assert_eq!(req_id, 7);
                 assert_eq!(model, "m");
                 assert_eq!(dtype, Dtype::QIdx);
+                assert_eq!(deadline_ms, 250);
                 assert_eq!(payload, &[0, 3, 15, 255]);
             }
             f => panic!("wrong frame {f:?}"),
         }
         assert_eq!(buf.len(), request_frame_bytes("m", 4, Dtype::QIdx));
+    }
+
+    #[test]
+    fn health_frames_roundtrip() {
+        let mut buf = Vec::new();
+        encode_health_ping(&mut buf, 31);
+        let (frame, ok) = roundtrip(&buf);
+        assert!(ok);
+        assert_eq!(parse_frame(&frame).unwrap(), Frame::HealthPing { req_id: 31 });
+
+        encode_health_pong(&mut buf, 31, true, 3, 17);
+        match parse_frame(&buf).unwrap() {
+            Frame::HealthPong { req_id, draining, models, queued } => {
+                assert_eq!(req_id, 31);
+                assert!(draining);
+                assert_eq!(models, 3);
+                assert_eq!(queued, 17);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        // An unknown pong status byte is a parse error, not a guess.
+        encode_health_pong(&mut buf, 1, false, 1, 1);
+        let body_end = buf.len() - 8;
+        buf[HEADER_LEN + 9] = 7;
+        let sum = fnv1a(&buf[..body_end]);
+        buf[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(parse_frame(&buf).is_err());
     }
 
     #[test]
@@ -457,11 +663,12 @@ mod tests {
             f => panic!("wrong frame {f:?}"),
         }
 
-        encode_error(&mut buf, 13, ErrCode::Busy, "queue full (64 outstanding)");
+        encode_error(&mut buf, 13, ErrCode::Busy, 5, "queue full (64 outstanding)");
         match parse_frame(&buf).unwrap() {
-            Frame::Error { req_id, code, msg } => {
+            Frame::Error { req_id, code, retry_after_ms, msg } => {
                 assert_eq!(req_id, 13);
                 assert_eq!(code, ErrCode::Busy);
+                assert_eq!(retry_after_ms, 5);
                 assert_eq!(msg, "queue full (64 outstanding)");
             }
             f => panic!("wrong frame {f:?}"),
@@ -472,8 +679,8 @@ mod tests {
     fn pipelined_frames_read_back_to_back() {
         let mut a = Vec::new();
         let mut b = Vec::new();
-        encode_request_qidx(&mut a, 1, "m", &[1, 2]);
-        encode_request_f32(&mut b, 2, "m", &[0.5, 0.5]);
+        encode_request_qidx(&mut a, 1, "m", &[1, 2], 0);
+        encode_request_f32(&mut b, 2, "m", &[0.5, 0.5], 0);
         let mut stream = a.clone();
         stream.extend_from_slice(&b);
         let mut r = Cursor::new(stream);
@@ -489,7 +696,7 @@ mod tests {
     #[test]
     fn truncation_always_fails_cleanly() {
         let mut buf = Vec::new();
-        encode_request_f32(&mut buf, 5, "model", &[1.0, 2.0, 3.0, 4.0]);
+        encode_request_f32(&mut buf, 5, "model", &[1.0, 2.0, 3.0, 4.0], 0);
         // Every cut point: mid-header, mid-body, one byte short.
         for cut in 1..buf.len() {
             let mut r = Cursor::new(buf[..cut].to_vec());
@@ -512,7 +719,7 @@ mod tests {
     #[test]
     fn corruption_is_caught_by_checksum() {
         let mut buf = Vec::new();
-        encode_request_qidx(&mut buf, 77, "digits", &[1, 2, 3, 4, 5, 6, 7, 8]);
+        encode_request_qidx(&mut buf, 77, "digits", &[1, 2, 3, 4, 5, 6, 7, 8], 0);
         // Flip one bit anywhere after the header: the checksum (or a
         // validation check) must reject — never mis-serve.
         for pos in HEADER_LEN..buf.len() {
@@ -544,7 +751,7 @@ mod tests {
     #[test]
     fn unknown_tags_are_rejected() {
         let mut buf = Vec::new();
-        encode_request_qidx(&mut buf, 3, "m", &[0]);
+        encode_request_qidx(&mut buf, 3, "m", &[0], 0);
         // Kind tag lives right after the header; patch it and re-seal
         // the checksum so only the tag is wrong.
         let body_end = buf.len() - 8;
@@ -556,7 +763,7 @@ mod tests {
 
         assert!(Dtype::from_tag(2).is_err());
         assert!(ErrCode::from_tag(0).is_err());
-        assert!(ErrCode::from_tag(6).is_err());
+        assert!(ErrCode::from_tag(7).is_err());
     }
 
     #[test]
@@ -564,18 +771,20 @@ mod tests {
         check("wire frame roundtrip", 128, |g| {
             let req_id = g.rng().next_u64();
             let mut buf = Vec::new();
-            match g.usize_in(0, 2) {
+            match g.usize_in(0, 3) {
                 0 => {
                     let name: String =
                         (0..g.usize_in(1, 32)).map(|i| ((b'a' + (i % 26) as u8) as char)).collect();
+                    let deadline = (g.rng().next_u64() & 0xffff_ffff) as u32;
                     if g.bool() {
                         let xs = g.vec_f32(0, 200, -1e6, 1e6);
-                        encode_request_f32(&mut buf, req_id, &name, &xs);
+                        encode_request_f32(&mut buf, req_id, &name, &xs, deadline);
                         match parse_frame(&buf).unwrap() {
-                            Frame::Request { req_id: r, model, dtype, payload } => {
+                            Frame::Request { req_id: r, model, dtype, deadline_ms, payload } => {
                                 assert_eq!(r, req_id);
                                 assert_eq!(model, name);
                                 assert_eq!(dtype, Dtype::F32Le);
+                                assert_eq!(deadline_ms, deadline);
                                 let mut back = Vec::new();
                                 payload_f32s_into(payload, &mut back).unwrap();
                                 // Bit-exact: encode preserved every bit.
@@ -590,10 +799,11 @@ mod tests {
                         let n = g.usize_in(0, 300);
                         let idx: Vec<u8> =
                             (0..n).map(|_| (g.rng().next_u64() & 0xff) as u8).collect();
-                        encode_request_qidx(&mut buf, req_id, &name, &idx);
+                        encode_request_qidx(&mut buf, req_id, &name, &idx, deadline);
                         match parse_frame(&buf).unwrap() {
-                            Frame::Request { payload, dtype, .. } => {
+                            Frame::Request { payload, dtype, deadline_ms, .. } => {
                                 assert_eq!(dtype, Dtype::QIdx);
+                                assert_eq!(deadline_ms, deadline);
                                 assert_eq!(payload, &idx[..]);
                             }
                             f => panic!("wrong frame {f:?}"),
@@ -611,22 +821,50 @@ mod tests {
                         f => panic!("wrong frame {f:?}"),
                     }
                 }
-                _ => {
+                2 => {
                     let code = *g.choice(&[
                         ErrCode::Busy,
                         ErrCode::NoModel,
                         ErrCode::BadRequest,
                         ErrCode::Shutdown,
                         ErrCode::Internal,
+                        ErrCode::DeadlineExceeded,
                     ]);
-                    encode_error(&mut buf, req_id, code, "some message with détail");
+                    let hint = (g.rng().next_u64() & 0xffff) as u32;
+                    encode_error(&mut buf, req_id, code, hint, "some message with détail");
                     match parse_frame(&buf).unwrap() {
-                        Frame::Error { req_id: r, code: c, msg } => {
+                        Frame::Error { req_id: r, code: c, retry_after_ms, msg } => {
                             assert_eq!(r, req_id);
                             assert_eq!(c, code);
+                            assert_eq!(retry_after_ms, hint);
                             assert_eq!(msg, "some message with détail");
                         }
                         f => panic!("wrong frame {f:?}"),
+                    }
+                }
+                _ => {
+                    if g.bool() {
+                        encode_health_ping(&mut buf, req_id);
+                        assert_eq!(
+                            parse_frame(&buf).unwrap(),
+                            Frame::HealthPing { req_id }
+                        );
+                    } else {
+                        let draining = g.bool();
+                        let models = (g.rng().next_u64() & 0xffff) as u16;
+                        let queued = (g.rng().next_u64() & 0xffff_ffff) as u32;
+                        encode_health_pong(&mut buf, req_id, draining, models, queued);
+                        match parse_frame(&buf).unwrap() {
+                            Frame::HealthPong {
+                                req_id: r,
+                                draining: d,
+                                models: m,
+                                queued: q,
+                            } => {
+                                assert_eq!((r, d, m, q), (req_id, draining, models, queued));
+                            }
+                            f => panic!("wrong frame {f:?}"),
+                        }
                     }
                 }
             }

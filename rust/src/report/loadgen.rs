@@ -1,6 +1,6 @@
 //! Load generation against a live [`crate::coordinator::NetServer`]
 //! socket — the serving-side perf trajectory (`BENCH_serving.json`,
-//! schema `qnn.bench_serving.v1`).
+//! schema `qnn.bench_serving.v2`).
 //!
 //! Two standard load shapes:
 //!
@@ -20,6 +20,7 @@
 //! counted separately from successes; rejected requests carry no
 //! latency sample.
 
+use crate::coordinator::fleet::{Fleet, FleetError, FleetSnapshot};
 use crate::coordinator::net::{ClientError, NetClient};
 use crate::coordinator::wire::{self, Dtype};
 use crate::coordinator::ErrCode;
@@ -255,14 +256,227 @@ pub fn run_load(
     })
 }
 
-/// Assemble the `qnn.bench_serving.v1` document: the runs, the wire
-/// bytes-per-request comparison (the qidx headline), and the best
-/// closed-loop throughput as the saturation point.
+/// One load run against a [`Fleet`] dispatcher (vs. a single socket in
+/// [`run_load`]): every request goes through placement, health-aware
+/// retry/failover, and deadline policy.
+#[derive(Clone, Debug)]
+pub struct FleetLoadCfg {
+    pub model: String,
+    /// Wire encoding for every request in this run.
+    pub encoding: Dtype,
+    /// Concurrent client threads driving the shared dispatcher.
+    pub clients: usize,
+    pub requests_per_client: usize,
+}
+
+/// Aggregated result of one fleet load run. The five terminal-outcome
+/// counters partition `sent` exactly — the dispatcher's
+/// one-answer-per-request contract, checked by the chaos suite and the
+/// v2 bench gate.
+#[derive(Clone, Debug)]
+pub struct FleetLoadReport {
+    pub encoding: String,
+    pub clients: usize,
+    pub sent: usize,
+    pub ok: usize,
+    /// Typed rejections (bad request / no model / internal).
+    pub rejected: usize,
+    pub deadline_exceeded: usize,
+    /// Retry budget exhausted on transport-class failures.
+    pub exhausted: usize,
+    /// No live replica (every candidate breaker open).
+    pub no_replica: usize,
+    /// `ok / sent` for this run.
+    pub availability: f64,
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Fleet counter deltas over this run.
+    pub retries: u64,
+    pub failovers: u64,
+    pub ejections: u64,
+    pub readmissions: u64,
+}
+
+impl FleetLoadReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("encoding", Json::Str(self.encoding.clone())),
+            ("clients", Json::Num(self.clients as f64)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("deadline_exceeded", Json::Num(self.deadline_exceeded as f64)),
+            ("exhausted", Json::Num(self.exhausted as f64)),
+            ("no_replica", Json::Num(self.no_replica as f64)),
+            ("availability", Json::Num(self.availability)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("failovers", Json::Num(self.failovers as f64)),
+            ("ejections", Json::Num(self.ejections as f64)),
+            ("readmissions", Json::Num(self.readmissions as f64)),
+        ])
+    }
+}
+
+/// Drive `clients` threads of closed-loop load through a shared
+/// [`Fleet`]. Unlike [`run_load`], *no* error aborts the run: every
+/// [`FleetError`] is a typed terminal outcome and is tallied, so the
+/// report accounts for every request sent even while replicas are being
+/// killed underneath it.
+pub fn run_fleet_load(
+    fleet: &Fleet,
+    cfg: &FleetLoadCfg,
+    rows: &[Vec<f32>],
+    quant: Option<&UniformQuant>,
+) -> Result<FleetLoadReport> {
+    anyhow::ensure!(!rows.is_empty(), "fleet loadgen needs at least one input row");
+    anyhow::ensure!(cfg.clients >= 1, "fleet loadgen needs at least one client");
+    let qrows: Vec<Vec<u8>> = match cfg.encoding {
+        Dtype::F32Le => Vec::new(),
+        Dtype::QIdx => {
+            let q = quant.context("qidx load generation needs the model's input quantizer")?;
+            anyhow::ensure!(
+                q.levels <= 256,
+                "input grid with {} levels does not fit the u8 qidx wire encoding",
+                q.levels
+            );
+            rows.iter()
+                .map(|r| q.quantize_to_indices(r).into_iter().map(|i| i as u8).collect())
+                .collect()
+        }
+    };
+
+    let m = fleet.metrics();
+    let before = (m.retries(), m.failovers(), m.ejections(), m.readmissions());
+
+    #[derive(Default)]
+    struct FleetClientStats {
+        lats_ms: Vec<f64>,
+        ok: usize,
+        rejected: usize,
+        deadline_exceeded: usize,
+        exhausted: usize,
+        no_replica: usize,
+    }
+
+    let t0 = Instant::now();
+    let all: Vec<FleetClientStats> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..cfg.clients {
+            let (rows, qrows, cfg) = (&rows, &qrows, &cfg);
+            handles.push(scope.spawn(move || {
+                let mut stats = FleetClientStats::default();
+                for k in 0..cfg.requests_per_client {
+                    let j = c + k * cfg.clients;
+                    let row = j % rows.len();
+                    let sent_at = Instant::now();
+                    let res = match cfg.encoding {
+                        Dtype::F32Le => fleet.infer_f32(&cfg.model, &rows[row]),
+                        Dtype::QIdx => fleet.infer_qidx(&cfg.model, &qrows[row]),
+                    };
+                    match res {
+                        Ok(_) => {
+                            stats.ok += 1;
+                            stats.lats_ms.push(sent_at.elapsed().as_secs_f64() * 1e3);
+                        }
+                        Err(FleetError::Rejected(_)) => stats.rejected += 1,
+                        Err(FleetError::DeadlineExceeded) => stats.deadline_exceeded += 1,
+                        Err(FleetError::Exhausted { .. }) => stats.exhausted += 1,
+                        Err(FleetError::NoReplica) => stats.no_replica += 1,
+                    }
+                }
+                stats
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("fleet loadgen client panicked"))
+            .collect()
+    });
+    let elapsed_s = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let mut lats = Vec::new();
+    let mut tot = FleetClientStats::default();
+    for s in all {
+        lats.extend_from_slice(&s.lats_ms);
+        tot.ok += s.ok;
+        tot.rejected += s.rejected;
+        tot.deadline_exceeded += s.deadline_exceeded;
+        tot.exhausted += s.exhausted;
+        tot.no_replica += s.no_replica;
+    }
+    let sent = cfg.clients * cfg.requests_per_client;
+
+    Ok(FleetLoadReport {
+        encoding: cfg.encoding.name().into(),
+        clients: cfg.clients,
+        sent,
+        ok: tot.ok,
+        rejected: tot.rejected,
+        deadline_exceeded: tot.deadline_exceeded,
+        exhausted: tot.exhausted,
+        no_replica: tot.no_replica,
+        availability: if sent == 0 { 1.0 } else { tot.ok as f64 / sent as f64 },
+        elapsed_s,
+        throughput_rps: tot.ok as f64 / elapsed_s,
+        p50_ms: percentile_f64(&lats, 50.0),
+        p95_ms: percentile_f64(&lats, 95.0),
+        p99_ms: percentile_f64(&lats, 99.0),
+        retries: m.retries() - before.0,
+        failovers: m.failovers() - before.1,
+        ejections: m.ejections() - before.2,
+        readmissions: m.readmissions() - before.3,
+    })
+}
+
+/// The `fleet` section of a `qnn.bench_serving.v2` document: topology,
+/// what the chaos run did to it, the load report measured across it,
+/// and the fleet's final outcome tallies.
+pub fn fleet_section_json(
+    replicas: usize,
+    replication: usize,
+    killed_replica: bool,
+    restarted_replica: bool,
+    load: &FleetLoadReport,
+    snap: &FleetSnapshot,
+) -> Json {
+    Json::obj(vec![
+        ("replicas", Json::Num(replicas as f64)),
+        ("replication", Json::Num(replication as f64)),
+        ("killed_replica", Json::Bool(killed_replica)),
+        ("restarted_replica", Json::Bool(restarted_replica)),
+        ("availability", Json::Num(load.availability)),
+        ("failovers", Json::Num(load.failovers as f64)),
+        ("load", load.to_json()),
+        (
+            "outcomes",
+            Json::Obj(
+                snap.outcomes
+                    .iter()
+                    .map(|&(name, n)| (name.to_string(), Json::Num(n as f64)))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Assemble the `qnn.bench_serving.v2` document: the runs, the wire
+/// bytes-per-request comparison (the qidx headline), the best
+/// closed-loop throughput as the saturation point, and (when the bench
+/// ran one) the fleet chaos section ([`fleet_section_json`]).
 pub fn serving_bench_doc(
     model: &str,
     input_len: usize,
     output_len: usize,
     reports: &[LoadReport],
+    fleet: Option<Json>,
     provenance: &str,
 ) -> Json {
     let f32_bytes = reports
@@ -280,8 +494,9 @@ pub fn serving_bench_doc(
         .filter(|r| r.mode == "closed")
         .max_by(|a, b| a.throughput_rps.total_cmp(&b.throughput_rps));
     Json::obj(vec![
-        ("schema", Json::Str("qnn.bench_serving.v1".into())),
+        ("schema", Json::Str("qnn.bench_serving.v2".into())),
         ("provenance", Json::Str(provenance.into())),
+        ("fleet", fleet.unwrap_or(Json::Null)),
         ("model", Json::Str(model.into())),
         ("input_len", Json::Num(input_len as f64)),
         ("output_len", Json::Num(output_len as f64)),
@@ -339,9 +554,10 @@ mod tests {
             report("closed", "qidx", 11000.0, 105),
             report("open", "qidx", 6000.0, 105),
         ];
-        let doc = serving_bench_doc("digits-lut", 64, 10, &reports, "unit-test");
+        let doc = serving_bench_doc("digits-lut", 64, 10, &reports, None, "unit-test");
         let back = Json::parse(&doc.to_pretty()).unwrap();
-        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v1"));
+        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v2"));
+        assert_eq!(back.get("fleet"), &Json::Null);
         assert_eq!(back.get("model").as_str(), Some("digits-lut"));
         let wire = back.get("wire_bytes_per_request");
         assert_eq!(wire.get("f32le").as_usize(), Some(297));
@@ -358,5 +574,57 @@ mod tests {
         let open = back.get("results").at(2);
         assert_eq!(open.get("mode").as_str(), Some("open"));
         assert!(open.get("offered_rps").as_f64().is_some());
+    }
+
+    #[test]
+    fn fleet_section_accounts_for_every_request() {
+        let load = FleetLoadReport {
+            encoding: "qidx".into(),
+            clients: 8,
+            sent: 800,
+            ok: 795,
+            rejected: 0,
+            deadline_exceeded: 2,
+            exhausted: 3,
+            no_replica: 0,
+            availability: 795.0 / 800.0,
+            elapsed_s: 1.5,
+            throughput_rps: 795.0 / 1.5,
+            p50_ms: 0.6,
+            p95_ms: 2.0,
+            p99_ms: 9.0,
+            retries: 12,
+            failovers: 7,
+            ejections: 1,
+            readmissions: 1,
+        };
+        let snap = FleetSnapshot {
+            requests: 800,
+            retries: 12,
+            failovers: 7,
+            ejections: 1,
+            readmissions: 1,
+            availability: load.availability,
+            outcomes: vec![("ok", 795), ("deadline_exceeded", 2), ("timeout", 3)],
+            replicas: Vec::new(),
+        };
+        let section = fleet_section_json(3, 3, true, true, &load, &snap);
+        let doc = serving_bench_doc("digits-lut", 64, 10, &[], Some(section), "unit-test");
+        let back = Json::parse(&doc.to_pretty()).unwrap();
+        let fleet = back.get("fleet");
+        assert_eq!(fleet.get("replicas").as_usize(), Some(3));
+        assert_eq!(fleet.get("killed_replica").as_bool(), Some(true));
+        assert_eq!(fleet.get("restarted_replica").as_bool(), Some(true));
+        assert!(fleet.get("availability").as_f64().unwrap() > 0.99);
+        assert_eq!(fleet.get("failovers").as_usize(), Some(7));
+        let l = fleet.get("load");
+        // Terminal outcomes partition sent exactly.
+        let sent = l.get("sent").as_usize().unwrap();
+        let parts = ["ok", "rejected", "deadline_exceeded", "exhausted", "no_replica"]
+            .iter()
+            .map(|k| l.get(k).as_usize().unwrap())
+            .sum::<usize>();
+        assert_eq!(sent, parts);
+        assert_eq!(fleet.get("outcomes").get("ok").as_usize(), Some(795));
     }
 }

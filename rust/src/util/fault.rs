@@ -1,0 +1,326 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Chaos testing only works when the chaos replays: every fault decision
+//! here is drawn from a seeded [`Xoshiro256`] stream, so a failing run
+//! reproduces bit-identically from its logged seed. The injection point
+//! is the server's frame writer (`coordinator::net`'s writer loop):
+//! just before a response/error frame goes on the wire,
+//! [`on_frame`] rolls once against the installed [`FaultPlan`] and
+//! returns a [`FrameFault`] verdict — deliver, delay, drop, truncate, or
+//! bit-flip. Delivering damaged frames (truncate/flip) exercises exactly
+//! the client-side defenses the wire protocol was property-tested for:
+//! the checksum catches flips, torn frames kill the connection, and the
+//! fleet dispatcher must then fail over.
+//!
+//! Off by default and free when off: a single relaxed [`AtomicBool`]
+//! load guards the hot path. Enable programmatically with [`install`]
+//! (tests) or from the environment with [`install_from_env`]
+//! (`QNN_FAULT="drop=0.02,truncate=0.01,bitflip=0.01,delay=0.05,delay_ms=20"`
+//! plus `QNN_FAULT_SEED=n`), which servers consult once at bind time.
+//!
+//! [`counts`] reports how many of each fault actually fired, so chaos
+//! tests can assert the harness was live rather than vacuously passing.
+
+use super::rng::Xoshiro256;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Per-frame fault probabilities (independent of frame contents).
+///
+/// The probabilities are tried in severity order — drop, truncate,
+/// bit-flip, delay — with a single uniform draw, so their sum must stay
+/// ≤ 1 (asserted at install).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// P(frame silently dropped) — the peer waits forever or times out.
+    pub drop_prob: f64,
+    /// P(frame truncated to a random prefix) — torn stream, peer must
+    /// treat the connection as dead.
+    pub truncate_prob: f64,
+    /// P(one random bit flipped) — caught by the frame checksum.
+    pub bitflip_prob: f64,
+    /// P(frame delayed by `delay_ms` before the write).
+    pub delay_prob: f64,
+    /// Delay applied when the delay fault fires.
+    pub delay_ms: u64,
+}
+
+impl FaultPlan {
+    /// A plan that exercises every fault kind at test-friendly rates.
+    pub fn chaos() -> FaultPlan {
+        FaultPlan {
+            drop_prob: 0.02,
+            truncate_prob: 0.01,
+            bitflip_prob: 0.02,
+            delay_prob: 0.05,
+            delay_ms: 5,
+        }
+    }
+
+    fn total(&self) -> f64 {
+        self.drop_prob + self.truncate_prob + self.bitflip_prob + self.delay_prob
+    }
+}
+
+/// The verdict for one outbound frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameFault {
+    /// Write the frame untouched.
+    Deliver,
+    /// Sleep, then write the frame intact.
+    Delay(Duration),
+    /// Do not write the frame at all.
+    Drop,
+    /// Write only the first `n` bytes, then sever the connection.
+    Truncate(usize),
+    /// XOR byte `pos` with `mask` (never zero) before writing.
+    BitFlip(usize, u8),
+}
+
+/// How many faults of each kind have fired since [`install`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub delays: u64,
+    pub drops: u64,
+    pub truncations: u64,
+    pub bitflips: u64,
+}
+
+impl FaultCounts {
+    pub fn total(&self) -> u64 {
+        self.delays + self.drops + self.truncations + self.bitflips
+    }
+}
+
+struct FaultState {
+    plan: FaultPlan,
+    rng: Xoshiro256,
+    counts: FaultCounts,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<FaultState>> = Mutex::new(None);
+
+/// Install a fault plan with an explicit seed, replacing any previous
+/// plan and zeroing the counters. Panics if the probabilities sum past 1.
+pub fn install(plan: FaultPlan, seed: u64) {
+    assert!(
+        plan.total() <= 1.0,
+        "fault probabilities sum to {} > 1",
+        plan.total()
+    );
+    let mut s = STATE.lock().unwrap();
+    *s = Some(FaultState {
+        plan,
+        rng: Xoshiro256::new(seed),
+        counts: FaultCounts::default(),
+    });
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Disable fault injection (the hot path returns to one atomic load).
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    *STATE.lock().unwrap() = None;
+}
+
+/// Whether a plan is installed — the cheap gate writers check first.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// Counters since the last [`install`] (zeroes when disabled).
+pub fn counts() -> FaultCounts {
+    STATE
+        .lock()
+        .unwrap()
+        .as_ref()
+        .map(|s| s.counts)
+        .unwrap_or_default()
+}
+
+/// Roll the dice for one outbound frame of `frame_len` bytes.
+///
+/// One uniform draw decides among the faults (severity order: drop,
+/// truncate, bit-flip, delay) so the per-kind probabilities are exact.
+/// Frames too short to damage meaningfully (< 2 bytes) are delivered.
+pub fn on_frame(frame_len: usize) -> FrameFault {
+    if !is_enabled() {
+        return FrameFault::Deliver;
+    }
+    let mut guard = STATE.lock().unwrap();
+    let s = match guard.as_mut() {
+        Some(s) => s,
+        None => return FrameFault::Deliver,
+    };
+    let u = s.rng.uniform();
+    let p = &s.plan;
+    let mut edge = p.drop_prob;
+    if u < edge {
+        s.counts.drops += 1;
+        return FrameFault::Drop;
+    }
+    edge += p.truncate_prob;
+    if u < edge {
+        if frame_len < 2 {
+            return FrameFault::Deliver;
+        }
+        let n = s.rng.range_usize(1, frame_len);
+        s.counts.truncations += 1;
+        return FrameFault::Truncate(n);
+    }
+    edge += p.bitflip_prob;
+    if u < edge {
+        if frame_len == 0 {
+            return FrameFault::Deliver;
+        }
+        let pos = s.rng.below(frame_len);
+        let mask = 1u8 << s.rng.below(8);
+        s.counts.bitflips += 1;
+        return FrameFault::BitFlip(pos, mask);
+    }
+    edge += p.delay_prob;
+    if u < edge {
+        s.counts.delays += 1;
+        return FrameFault::Delay(Duration::from_millis(p.delay_ms));
+    }
+    FrameFault::Deliver
+}
+
+/// Install a plan from `QNN_FAULT` / `QNN_FAULT_SEED` if set.
+///
+/// `QNN_FAULT` is a comma-separated key=value list with keys `drop`,
+/// `truncate`, `bitflip`, `delay` (probabilities) and `delay_ms`
+/// (milliseconds); unknown keys and malformed values are errors so a
+/// typo'd chaos job fails loudly instead of running clean. The seed
+/// defaults to 0 when `QNN_FAULT_SEED` is unset. Returns the installed
+/// (plan, seed) for logging, or `Ok(None)` when `QNN_FAULT` is unset.
+pub fn install_from_env() -> Result<Option<(FaultPlan, u64)>, String> {
+    let spec = match std::env::var("QNN_FAULT") {
+        Ok(s) if !s.trim().is_empty() => s,
+        _ => return Ok(None),
+    };
+    let mut plan = FaultPlan::default();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (key, val) = part
+            .split_once('=')
+            .ok_or_else(|| format!("QNN_FAULT entry '{part}' is not key=value"))?;
+        let parse = |v: &str| -> Result<f64, String> {
+            v.parse::<f64>()
+                .map_err(|_| format!("QNN_FAULT {key}={v} is not a number"))
+        };
+        match key.trim() {
+            "drop" => plan.drop_prob = parse(val)?,
+            "truncate" => plan.truncate_prob = parse(val)?,
+            "bitflip" => plan.bitflip_prob = parse(val)?,
+            "delay" => plan.delay_prob = parse(val)?,
+            "delay_ms" => plan.delay_ms = parse(val)? as u64,
+            k => return Err(format!("QNN_FAULT has unknown key '{k}'")),
+        }
+    }
+    if plan.total() > 1.0 {
+        return Err(format!(
+            "QNN_FAULT probabilities sum to {} > 1",
+            plan.total()
+        ));
+    }
+    let seed = std::env::var("QNN_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    install(plan, seed);
+    Ok(Some((plan, seed)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The global fault switch is process-wide; tests that install plans
+    // serialize on this lock so they can't see each other's state.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_is_always_deliver() {
+        let _l = TEST_LOCK.lock().unwrap();
+        clear();
+        for len in [0usize, 1, 64, 4096] {
+            assert_eq!(on_frame(len), FrameFault::Deliver);
+        }
+        assert_eq!(counts(), FaultCounts::default());
+    }
+
+    #[test]
+    fn seeded_plan_replays_bit_identically() {
+        let _l = TEST_LOCK.lock().unwrap();
+        let plan = FaultPlan::chaos();
+        install(plan, 42);
+        let a: Vec<FrameFault> = (0..500).map(|_| on_frame(128)).collect();
+        let ca = counts();
+        install(plan, 42);
+        let b: Vec<FrameFault> = (0..500).map(|_| on_frame(128)).collect();
+        assert_eq!(a, b, "same seed must replay the same fault stream");
+        assert_eq!(ca, counts());
+        // At these rates 500 rolls fire every fault kind with
+        // overwhelming probability — the harness is demonstrably live.
+        let c = counts();
+        assert!(c.drops > 0 && c.truncations > 0 && c.bitflips > 0 && c.delays > 0, "{c:?}");
+        clear();
+    }
+
+    #[test]
+    fn faults_respect_frame_bounds() {
+        let _l = TEST_LOCK.lock().unwrap();
+        install(
+            FaultPlan {
+                truncate_prob: 0.5,
+                bitflip_prob: 0.5,
+                ..FaultPlan::default()
+            },
+            7,
+        );
+        for _ in 0..300 {
+            match on_frame(33) {
+                FrameFault::Truncate(n) => assert!(n >= 1 && n < 33),
+                FrameFault::BitFlip(pos, mask) => {
+                    assert!(pos < 33);
+                    assert!(mask != 0 && mask.count_ones() == 1);
+                }
+                FrameFault::Deliver => {}
+                f => panic!("unexpected fault {f:?}"),
+            }
+        }
+        clear();
+    }
+
+    #[test]
+    fn env_spec_parses_and_rejects() {
+        let _l = TEST_LOCK.lock().unwrap();
+        // install_from_env reads the process environment; drive the
+        // parser through a scoped set/unset.
+        std::env::set_var("QNN_FAULT", "drop=0.1,delay=0.2,delay_ms=15");
+        std::env::set_var("QNN_FAULT_SEED", "99");
+        let got = install_from_env().unwrap().expect("plan installed");
+        assert_eq!(got.1, 99);
+        assert!((got.0.drop_prob - 0.1).abs() < 1e-12);
+        assert!((got.0.delay_prob - 0.2).abs() < 1e-12);
+        assert_eq!(got.0.delay_ms, 15);
+        assert!(is_enabled());
+        clear();
+
+        std::env::set_var("QNN_FAULT", "bogus=1");
+        assert!(install_from_env().is_err());
+        std::env::set_var("QNN_FAULT", "drop=0.9,delay=0.9");
+        assert!(install_from_env().is_err());
+        std::env::remove_var("QNN_FAULT");
+        std::env::remove_var("QNN_FAULT_SEED");
+        assert!(install_from_env().unwrap().is_none());
+        clear();
+    }
+}

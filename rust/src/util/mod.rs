@@ -7,6 +7,7 @@
 
 pub mod cli;
 pub mod cursor;
+pub mod fault;
 pub mod fnv;
 pub mod json;
 pub mod prop;

@@ -1,0 +1,234 @@
+//! The fleet chaos suite: 3 replicas behind the [`Fleet`] dispatcher,
+//! seeded fault injection live on every replica's frame writer
+//! (delays, drops, truncations, bit-flips), and the primary replica
+//! killed mid-load and restarted on the same port — while 8 client
+//! threads drive 1000 requests through the dispatcher.
+//!
+//! The contracts asserted:
+//!
+//! * **Exactly one terminal answer per request** — the five terminal
+//!   outcome counters partition `sent` with no remainder, and the
+//!   fleet's own outcome tally agrees.
+//! * **Availability ≥ 99%** under a replica kill plus frame chaos.
+//! * **Failover is observable**, not incidental: the killed replica is
+//!   the model's placement primary.
+//! * **The fault harness was live** — injected-fault counters are
+//!   nonzero, so a green run can't be vacuous.
+//! * **No thread leaks** — after every shutdown the process thread
+//!   count returns to its pre-test baseline (replica kill via
+//!   `abort()` still joins its threads; only the *peers* see a crash).
+//!
+//! The fault plan and seed come from `QNN_FAULT` / `QNN_FAULT_SEED`
+//! when set (the CI chaos job sets and logs them) and fall back to a
+//! built-in plan with a fixed seed; either way they are printed, so a
+//! failing run replays bit-identically.
+
+use qnn::coordinator::wire::Dtype;
+use qnn::coordinator::{Backend, Fleet, FleetCfg, NetServer, Router, Server, ServerCfg};
+use qnn::report::loadgen::{run_fleet_load, FleetLoadCfg};
+use qnn::util::fault::{self, FaultPlan};
+use std::sync::Arc;
+use std::time::Duration;
+
+const CLIENTS: usize = 8;
+const PER_CLIENT: usize = 125;
+
+struct SumEngine;
+impl Backend for SumEngine {
+    fn name(&self) -> &str {
+        "sum"
+    }
+    fn input_len(&self) -> usize {
+        4
+    }
+    fn output_len(&self) -> usize {
+        1
+    }
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+    fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+        for i in 0..batch {
+            out[i] = flat[i * 4..(i + 1) * 4].iter().sum();
+        }
+    }
+}
+
+fn boot_replica(addr: &str) -> NetServer {
+    let mut router = Router::new();
+    router.register(
+        "sum",
+        Server::start(Arc::new(SumEngine), ServerCfg::default()),
+    );
+    NetServer::bind(addr, router).unwrap()
+}
+
+fn thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|n| n.parse().ok())
+}
+
+#[test]
+fn chaos_every_request_gets_exactly_one_terminal_answer() {
+    let baseline_threads = thread_count();
+
+    // Fault plan: environment-driven when the chaos job sets it,
+    // built-in otherwise — always seeded, always printed.
+    let (plan, seed) = match fault::install_from_env().expect("QNN_FAULT must parse") {
+        Some((plan, seed)) => (plan, seed),
+        None => {
+            let seed = std::env::var("QNN_FAULT_SEED")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0xC4A05);
+            let plan = FaultPlan {
+                drop_prob: 0.01,
+                truncate_prob: 0.005,
+                bitflip_prob: 0.01,
+                delay_prob: 0.03,
+                delay_ms: 2,
+            };
+            fault::install(plan, seed);
+            (plan, seed)
+        }
+    };
+    println!("QNN_FAULT_SEED={seed} plan={plan:?}");
+
+    let replicas_boot: Vec<(String, NetServer)> = (0..3)
+        .map(|_| {
+            let srv = boot_replica("127.0.0.1:0");
+            (srv.local_addr().to_string(), srv)
+        })
+        .collect();
+    let addrs: Vec<String> = replicas_boot.iter().map(|(a, _)| a.clone()).collect();
+    let fleet = Fleet::connect(
+        &addrs,
+        FleetCfg {
+            replication: 3,
+            max_retries: 3,
+            connect_timeout: Duration::from_millis(500),
+            // Short enough that a dropped response frame costs little,
+            // long enough that real service never trips it.
+            io_timeout: Duration::from_millis(300),
+            health_interval: Duration::from_millis(20),
+            health_timeout: Duration::from_millis(300),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(100),
+            // Generous budget: exercises the deadline wire field on
+            // every request without shedding any in a healthy run.
+            default_deadline: Some(Duration::from_secs(10)),
+            ..FleetCfg::default()
+        },
+    );
+
+    // Kill the placement primary so failover is on the request path by
+    // construction, not by luck.
+    let mut replicas = replicas_boot;
+    let primary = fleet.placement("sum")[0].clone();
+    let victim_at = replicas.iter().position(|(a, _)| *a == primary).unwrap();
+    let (victim_addr, victim) = replicas.remove(victim_at);
+    println!("placement primary {victim_addr} will be killed mid-load");
+
+    let rows: Vec<Vec<f32>> = (0..32)
+        .map(|i| (0..4).map(|k| ((i + k) % 7) as f32 * 0.125).collect())
+        .collect();
+
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    let (report, restarted) = std::thread::scope(|s| {
+        let fleet_ref = &fleet;
+        let addr = victim_addr.clone();
+        let killer = s.spawn(move || {
+            while fleet_ref.metrics().requests() < total / 3 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            victim.abort();
+            println!("killed {addr} mid-load");
+            while fleet_ref.metrics().requests() < 2 * total / 3 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            let back = boot_replica(addr.as_str());
+            println!("restarted a fresh replica on {addr}");
+            back
+        });
+        let report = run_fleet_load(
+            fleet_ref,
+            &FleetLoadCfg {
+                model: "sum".into(),
+                encoding: Dtype::F32Le,
+                clients: CLIENTS,
+                requests_per_client: PER_CLIENT,
+            },
+            &rows,
+            None,
+        )
+        .expect("fleet load");
+        (report, killer.join().expect("killer thread panicked"))
+    });
+
+    let counts = fault::counts();
+    let snap = fleet.snapshot();
+    println!("report: {report:?}");
+    println!("fault counts: {counts:?}");
+    println!("{snap}");
+
+    // One terminal answer per request, no remainder, no duplicates.
+    assert_eq!(report.sent, CLIENTS * PER_CLIENT);
+    assert_eq!(
+        report.sent,
+        report.ok
+            + report.rejected
+            + report.deadline_exceeded
+            + report.exhausted
+            + report.no_replica,
+        "terminal outcomes must partition sent exactly: {report:?}"
+    );
+    // The fleet's own per-outcome tally tells the same story.
+    assert_eq!(
+        snap.requests,
+        fleet.metrics().outcomes.total(),
+        "fleet outcome tally disagrees with dispatched requests: {snap}"
+    );
+    // Nothing here sends malformed requests, so rejections mean a bug.
+    assert_eq!(report.rejected, 0, "{report:?}");
+
+    // Availability under a primary kill + frame chaos.
+    assert!(
+        report.availability >= 0.99,
+        "availability {} < 0.99 (seed {seed}): {report:?}",
+        report.availability
+    );
+    assert!(report.failovers >= 1, "no failover observed: {report:?}");
+
+    // The harness must demonstrably have fired, including frame damage
+    // (drops/truncations/bit-flips), or this test proves nothing.
+    assert!(counts.total() > 0, "fault injection never fired: {counts:?}");
+    assert!(
+        counts.drops + counts.truncations + counts.bitflips > 0,
+        "no damaging fault fired: {counts:?}"
+    );
+
+    fleet.shutdown();
+    for (_, srv) in replicas {
+        srv.shutdown();
+    }
+    restarted.shutdown();
+    fault::clear();
+
+    // Thread hygiene: everything joined, nothing leaked. (Skipped off
+    // Linux where /proc is unavailable.)
+    if let Some(base) = baseline_threads {
+        let mut now = thread_count().unwrap();
+        for _ in 0..200 {
+            if now <= base {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+            now = thread_count().unwrap();
+        }
+        assert!(now <= base, "thread leak: {now} threads > baseline {base}");
+    }
+}

@@ -76,6 +76,7 @@ fn tcp_serving_is_bit_exact_with_forward_naive() {
             max_wait: Duration::from_millis(1),
             workers: 2,
             max_queue: 128,
+            ..ServerCfg::default()
         },
     )
     .unwrap();
@@ -154,6 +155,7 @@ fn busy_frames_when_bounded_queue_is_full() {
                 max_wait: Duration::from_millis(0),
                 workers: 1,
                 max_queue: 2,
+                ..ServerCfg::default()
             },
         ),
     );
@@ -204,6 +206,7 @@ fn net_shutdown_under_load_drains_accepted_requests() {
                 max_wait: Duration::from_millis(1),
                 workers: 1,
                 max_queue: 64,
+                ..ServerCfg::default()
             },
         ),
     );
@@ -228,7 +231,9 @@ fn net_shutdown_under_load_drains_accepted_requests() {
                 // requests were never read off the socket, the eventual
                 // close is also clean — but only after every frame the
                 // server *did* read was answered.
-                Err(ClientError::Protocol(_)) | Err(ClientError::Io(_)) => break,
+                Err(ClientError::Protocol(_))
+                | Err(ClientError::Io(_))
+                | Err(ClientError::Timeout) => break,
                 // recv_response reports server error frames inside Ok;
                 // listed only for exhaustiveness.
                 Err(ClientError::Remote(_)) => resolved += 1,
@@ -246,6 +251,104 @@ fn net_shutdown_under_load_drains_accepted_requests() {
         .expect("client hung across NetServer shutdown");
     assert!(resolved >= 1, "no request resolved before the drain");
     client_thread.join().unwrap();
+}
+
+/// Property: an arbitrary pipelined interleaving of valid requests,
+/// wrong-length payloads, out-of-range qidx indices, and unknown-model
+/// requests comes back **in order**, every response matched to its
+/// request id with the outcome that request deserved — ok frames and
+/// typed error frames never slip against each other.
+#[test]
+fn property_pipelined_interleaved_outcomes_stay_matched() {
+    struct SumEngine4;
+    impl Backend for SumEngine4 {
+        fn name(&self) -> &str {
+            "sum"
+        }
+        fn input_len(&self) -> usize {
+            4
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+        fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+            for i in 0..batch {
+                out[i] = flat[i * 4..(i + 1) * 4].iter().sum();
+            }
+        }
+        fn input_quant(&self) -> Option<UniformQuant> {
+            Some(UniformQuant::unit(16))
+        }
+    }
+
+    let mut router = Router::new();
+    router.register(
+        "sum",
+        Server::start(
+            Arc::new(SumEngine4),
+            ServerCfg {
+                // Deep queue: admission control must never turn an
+                // expected outcome into a Busy in this property.
+                max_queue: 1024,
+                ..ServerCfg::default()
+            },
+        ),
+    );
+    let net = NetServer::bind("127.0.0.1:0", router).unwrap();
+    let addr = net.local_addr();
+
+    #[derive(Debug)]
+    enum Want {
+        Sum(f32),
+        BadRequest,
+        NoModel,
+    }
+
+    qnn::util::prop::check("pipelined_interleaved_outcomes", 25, |g| {
+        let mut client = NetClient::connect(addr).unwrap();
+        let n = g.usize_in(1, 16);
+        let mut sent: Vec<(u64, Want)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            match g.usize_in(0, 3) {
+                0 => {
+                    let vals: Vec<f32> = (0..4).map(|_| g.f32_in(0.0, 1.0)).collect();
+                    let id = client.send_f32("sum", &vals).unwrap();
+                    sent.push((id, Want::Sum(vals.iter().sum())));
+                }
+                1 => {
+                    // Wrong input length.
+                    let id = client.send_f32("sum", &[0.25; 3]).unwrap();
+                    sent.push((id, Want::BadRequest));
+                }
+                2 => {
+                    // qidx index outside the 16-level codebook.
+                    let id = client.send_qidx("sum", &[0, 1, 2, 200]).unwrap();
+                    sent.push((id, Want::BadRequest));
+                }
+                _ => {
+                    let id = client.send_f32("nope", &[0.0; 4]).unwrap();
+                    sent.push((id, Want::NoModel));
+                }
+            }
+        }
+        for (id, want) in sent {
+            let (rid, res) = client.recv_response().unwrap();
+            assert_eq!(rid, id, "response id slipped against the pipeline");
+            match (&want, &res) {
+                (Want::Sum(s), Ok(out)) => {
+                    assert_eq!(out.len(), 1);
+                    assert!((out[0] - s).abs() < 1e-5, "sum {} != {s}", out[0]);
+                }
+                (Want::BadRequest, Err(e)) => assert_eq!(e.code, ErrCode::BadRequest),
+                (Want::NoModel, Err(e)) => assert_eq!(e.code, ErrCode::NoModel),
+                _ => panic!("request {id} wanted {want:?}, got {res:?}"),
+            }
+        }
+    });
+    net.shutdown();
 }
 
 /// The load generator drives a real socket end to end (closed loop,
