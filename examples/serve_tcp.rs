@@ -11,21 +11,31 @@
 //! primary replica is killed mid-load and restarted on the same port,
 //! and the run must stay ≥ 99% available with observable failovers.
 //!
-//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v2`) at the
+//! Then the connection-scaling story: the same artifact boots behind
+//! the event-driven `ReactorServer` (one loop thread, cross-connection
+//! batching) and the multiplexed open-loop generator offers identical
+//! load — thousands of concurrent connections — to it and to the
+//! thread-per-connection front-end, head to head per tier.
+//!
+//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v3`) at the
 //! repository root: closed-loop saturation sweep, an open-loop run at a
-//! fraction of saturation, the wire bytes-per-request comparison, and
-//! the fleet chaos section — all gated in CI (`python/check_bench.py`).
+//! fraction of saturation, the wire bytes-per-request comparison, the
+//! fleet chaos section, and the reactor tier comparison — all gated in
+//! CI (`python/check_bench.py`).
 //!
 //!     cargo run --release --example serve_tcp [-- --full]
 
 use qnn::coordinator::wire::Dtype;
-use qnn::coordinator::{Fleet, FleetCfg, NetServer, Router, ServerCfg};
+use qnn::coordinator::{
+    BatcherCfg, Fleet, FleetCfg, NetServer, ReactorCfg, ReactorServer, Router, ServerCfg,
+};
 use qnn::data::digits;
 use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
 use qnn::nn::{ActSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
 use qnn::report::loadgen::{
-    fleet_section_json, run_fleet_load, run_load, serving_bench_doc, FleetLoadCfg, LoadCfg,
+    fleet_section_json, reactor_section_json, run_fleet_load, run_load, run_mux_load,
+    serving_bench_doc, FleetLoadCfg, LoadCfg, MuxLoadCfg,
 };
 use qnn::report::perf::write_bench_file;
 use qnn::report::table::TableBuilder;
@@ -254,12 +264,82 @@ fn main() -> anyhow::Result<()> {
         srv.shutdown();
     }
 
+    // ---- reactor phase: the event-driven front-end vs the
+    // thread-per-connection one, same artifact, same offered load, at
+    // connection counts where a thread per socket stops being free.
+    let reactor_batch = BatcherCfg {
+        max_batch: 64,
+        max_delay: Duration::from_millis(2),
+        workers: 2,
+        max_queue: 2048,
+        ..BatcherCfg::default()
+    };
+    let reactor = ReactorServer::bind_dir(
+        "127.0.0.1:0",
+        &dir,
+        ReactorCfg { batch: reactor_batch.clone(), ..ReactorCfg::default() },
+    )?;
+    let raddr = reactor.local_addr().to_string();
+    println!("\nreactor front-end on {raddr} ({} backend)", reactor.poller_backend());
+    let mut conn_tiers = vec![256usize, 1024];
+    if full {
+        conn_tiers.push(4096);
+    }
+    // Offer past saturation so both front-ends are limited by the
+    // engine path, not the arrival schedule: the reactor's edge is how
+    // cheaply it holds the connections and how well it batches across
+    // them.
+    let offered = (saturation * 1.5).max(200.0);
+    let mut tiers = Vec::new();
+    for &connections in &conn_tiers {
+        let mux = |target: &str| MuxLoadCfg {
+            addr: target.into(),
+            model: "digits-lut".into(),
+            encoding: Dtype::QIdx,
+            connections,
+            threads: 2,
+            rate_rps: offered,
+            total_requests: (offered as usize)
+                .clamp(2000, if full { 40_000 } else { 12_000 })
+                .max(connections * 2),
+            drain_timeout: Duration::from_secs(10),
+        };
+        let r = run_mux_load(&mux(&raddr), &rows, Some(&quant))?;
+        let n = run_mux_load(&mux(&addr), &rows, Some(&quant))?;
+        println!(
+            "mux {connections:>4} conns @{offered:>7.0} rps offered: \
+             reactor {:>7.0} rps (p99 {:.2} ms, busy {}) vs \
+             net {:>7.0} rps (p99 {:.2} ms, busy {})",
+            r.throughput_rps, r.p99_ms, r.busy, n.throughput_rps, n.p99_ms, n.busy
+        );
+        tiers.push((connections, r, n));
+    }
+    let mean_batch = reactor
+        .model_metrics()
+        .iter()
+        .map(|(_, m)| m.snapshot().mean_batch)
+        .fold(0.0f64, f64::max);
+    println!(
+        "reactor peak connections {} | mean engine batch {mean_batch:.2}",
+        reactor.peak_connections()
+    );
+    let reactor_section = reactor_section_json(
+        reactor.poller_backend(),
+        reactor.peak_connections(),
+        mean_batch,
+        reactor_batch.max_batch,
+        reactor_batch.max_delay.as_micros() as u64,
+        &tiers,
+    );
+    reactor.shutdown();
+
     let doc = serving_bench_doc(
         "digits-lut",
         digits::FEATURES,
         out_len,
         &reports,
         Some(fleet_section),
+        Some(reactor_section),
         if full {
             "cargo run --release --example serve_tcp -- --full"
         } else {

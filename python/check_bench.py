@@ -24,6 +24,16 @@ Dispatches on the document's `schema` field:
   99%, no failover was observed, or the five terminal-outcome counters
   in ``fleet.load`` do not partition ``sent`` exactly (the dispatcher's
   one-answer-per-request contract).
+* ``qnn.bench_serving.v3`` — v2 plus the reactor section: the
+  event-driven front-end vs the thread-per-connection one under the
+  multiplexed open-loop generator at connection-count tiers. Fails if
+  the section or any tier is missing, the peak connection count never
+  reached the largest tier, cross-connection batching never engaged
+  (``mean_batch`` <= 1), or — the subsystem's reason to exist — the
+  reactor's delivered throughput falls meaningfully below the
+  thread-per-connection front-end at the highest-connection tier (a
+  10% noise allowance; both sides are driven back-to-back by the same
+  generator at the same offered rate).
 
 Timings themselves are never asserted — CI machines are noisy;
 regressions should show in the trajectory, not flake the gate. The one
@@ -282,11 +292,88 @@ def check_serving_v2(path: str, doc: dict) -> str:
     )
 
 
+# Throughput comparisons across two separately-booted servers carry
+# scheduler noise even when driven back-to-back; the reactor must land
+# within this factor of the thread-per-connection front-end (and
+# usually beats it outright at high connection counts).
+REACTOR_RPS_NOISE_FACTOR = 0.9
+
+
+def check_mux_record(path: str, label: str, rec) -> None:
+    if not isinstance(rec, dict):
+        fail(f"{path}: reactor tier {label} is not a record (got {rec!r})")
+    for field in REQUIRED_SERVING_FIELDS:
+        v = rec.get(field)
+        if not positive_number(v):
+            fail(f"{path}: reactor tier {label} missing or non-positive {field!r} (got {v!r})")
+    if not (rec["p50_ms"] <= rec["p95_ms"] <= rec["p99_ms"]):
+        fail(f"{path}: reactor tier {label} has non-monotone latency percentiles")
+    if not positive_number(rec.get("ok")):
+        fail(f"{path}: reactor tier {label} never completed a request (ok={rec.get('ok')!r})")
+
+
+def check_serving_v3(path: str, doc: dict) -> str:
+    summary = check_serving_v2(path, doc)
+
+    reactor = doc.get("reactor")
+    if not isinstance(reactor, dict):
+        fail(f"{path}: v3 document has no reactor section (got {reactor!r})")
+
+    poller = reactor.get("poller")
+    if poller not in ("epoll", "poll"):
+        fail(f"{path}: reactor section has unknown poller backend {poller!r}")
+
+    tiers = reactor.get("tiers")
+    if not isinstance(tiers, list) or not tiers:
+        fail(f"{path}: reactor section has no connection tiers")
+    top = None
+    for tier in tiers:
+        if not isinstance(tier, dict) or not positive_number(tier.get("connections")):
+            fail(f"{path}: reactor tier lacks a positive connection count (got {tier!r})")
+        conns = int(tier["connections"])
+        check_mux_record(path, f"{conns}-conn reactor", tier.get("reactor"))
+        check_mux_record(path, f"{conns}-conn net", tier.get("net"))
+        if top is None or conns > int(top["connections"]):
+            top = tier
+
+    peak = reactor.get("peak_connections")
+    if not positive_number(peak) or peak < int(top["connections"]):
+        fail(
+            f"{path}: reactor peak_connections {peak!r} never reached the "
+            f"largest tier ({int(top['connections'])} connections)"
+        )
+
+    mean_batch = reactor.get("mean_batch")
+    if not positive_number(mean_batch) or mean_batch <= 1.0:
+        fail(
+            f"{path}: cross-connection batching never engaged "
+            f"(mean_batch={mean_batch!r}, need > 1)"
+        )
+
+    # The headline: at the highest connection count the event loop must
+    # at least keep pace with a thread per socket.
+    r_rps = top["reactor"]["throughput_rps"]
+    n_rps = top["net"]["throughput_rps"]
+    if r_rps < n_rps * REACTOR_RPS_NOISE_FACTOR:
+        fail(
+            f"{path}: reactor throughput {r_rps:.0f} rps falls below the "
+            f"thread-per-connection front-end ({n_rps:.0f} rps, floor "
+            f"{REACTOR_RPS_NOISE_FACTOR:.0%}) at {int(top['connections'])} connections"
+        )
+
+    return (
+        f"{summary}; reactor ({poller}) {len(tiers)} tiers, peak {int(peak)} conns, "
+        f"mean batch {mean_batch:.2f}, {r_rps:.0f} vs {n_rps:.0f} rps at "
+        f"{int(top['connections'])} conns"
+    )
+
+
 CHECKERS = {
     "qnn.bench_lut_engine.v2": check_lut_engine,
     "qnn.bench_lut_engine.v3": check_lut_engine_v3,
     "qnn.bench_serving.v1": check_serving,
     "qnn.bench_serving.v2": check_serving_v2,
+    "qnn.bench_serving.v3": check_serving_v3,
 }
 
 

@@ -1,0 +1,723 @@
+//! Cross-connection batch scheduling for the event-driven front-end.
+//!
+//! [`super::server::Server`] batches requests *within* one submission
+//! stream; under a thread-per-connection front-end each connection's
+//! pipelined stream is the only coalescing opportunity, so light
+//! per-connection traffic reaches the engine as batch-1 work — exactly
+//! the shape the LUT executor is slowest at. The [`Batcher`] inverts
+//! that: the reactor decodes frames from *all* connections onto one
+//! queue, and batches form across connections under a deadline/size
+//! policy — dispatch as soon as `max_batch` requests are waiting, or
+//! when the oldest waiting request has aged `max_delay`. Heavy traffic
+//! turns into exactly the large batches the kernel ladder was built
+//! for; an idle trickle still pays at most `max_delay` of added
+//! latency.
+//!
+//! Everything else matches the serving loop's semantics: bounded-queue
+//! admission ([`InferError::Busy`] with a retry-after hint),
+//! deadline-expired entries shed with a typed error before dispatch,
+//! mixed f32/qidx batches partitioned into at most two zero-alloc
+//! engine calls, and a graceful drain that resolves every accepted
+//! request. Responses route back through a [`CompletionSink`] tagged
+//! with the submitting connection id — the reactor's completion queue —
+//! instead of per-request channels, so a completion costs one callback,
+//! not a channel pair.
+
+use super::engine::Backend;
+use super::metrics::{Metrics, Outcome};
+use super::server::{InferError, Payload};
+use crate::fixedpoint::UniformQuant;
+use crate::util::threadpool::ThreadPool;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batch-formation policy and capacity bounds.
+#[derive(Clone, Debug)]
+pub struct BatcherCfg {
+    /// Dispatch as soon as this many requests are waiting (clamped to
+    /// the engine's own `max_batch`).
+    pub max_batch: usize,
+    /// Dispatch when the oldest waiting request has aged this long —
+    /// the latency a lone request pays for the chance to share a batch.
+    pub max_delay: Duration,
+    /// Worker threads running the engine.
+    pub workers: usize,
+    /// Admission bound: max requests outstanding (queued or in
+    /// service); past it submissions fail fast with [`InferError::Busy`].
+    pub max_queue: usize,
+    /// Back-off hint attached to `Busy` rejections.
+    pub busy_retry_after: Duration,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            max_delay: Duration::from_micros(500),
+            workers: 2,
+            max_queue: 1024,
+            busy_retry_after: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A resolved request, routed back to the connection that submitted it.
+#[derive(Debug)]
+pub struct Completion {
+    /// The submitter's connection token, echoed from
+    /// [`BatcherHandle::submit`].
+    pub conn: u64,
+    /// The wire correlation id, echoed into the response frame.
+    pub req_id: u64,
+    pub result: Result<Vec<f32>, InferError>,
+}
+
+/// Where completions go: called from worker threads, once per accepted
+/// request (response or typed error — never silence).
+pub type CompletionSink = Arc<dyn Fn(Completion) + Send + Sync>;
+
+struct Entry {
+    conn: u64,
+    req_id: u64,
+    payload: Payload,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+/// Submission side of a [`Batcher`] (cheap to clone).
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: mpsc::Sender<Entry>,
+    depth: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+    max_queue: usize,
+    busy_retry_after_ms: u64,
+    input_len: usize,
+    output_len: usize,
+    input_quant: Option<UniformQuant>,
+    metrics: Arc<Metrics>,
+}
+
+impl BatcherHandle {
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+
+    /// The input-quantization grid backing the qidx encoding, if the
+    /// engine has one representable on the u8 wire.
+    pub fn input_quant(&self) -> Option<&UniformQuant> {
+        self.input_quant.as_ref()
+    }
+
+    /// Requests outstanding (queued or in service) — the health pong's
+    /// load signal.
+    pub fn queued(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    fn validate(&self, payload: &Payload) -> Result<(), InferError> {
+        let got = payload.features();
+        if got != self.input_len {
+            return Err(InferError::InputLen { got, want: self.input_len });
+        }
+        if let Payload::QIdx(idx) = payload {
+            let q = self.input_quant.as_ref().ok_or(InferError::QidxUnsupported)?;
+            if let Some(&bad) = idx.iter().find(|&&i| i as usize >= q.levels) {
+                return Err(InferError::IndexOutOfRange { index: bad, levels: q.levels });
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-blocking admission: validate, reserve a queue slot (or fail
+    /// fast with [`InferError::Busy`]), enqueue. An `Ok(())` is a
+    /// promise that exactly one [`Completion`] for `(conn, req_id)`
+    /// will reach the sink; an `Err` means nothing was enqueued and the
+    /// caller answers the client directly.
+    pub fn submit(
+        &self,
+        conn: u64,
+        req_id: u64,
+        payload: Payload,
+        deadline: Option<Instant>,
+    ) -> Result<(), InferError> {
+        if self.shutdown.load(Ordering::SeqCst) {
+            self.metrics.outcomes.record(Outcome::PeerShutdown);
+            return Err(InferError::Shutdown);
+        }
+        if let Err(e) = self.validate(&payload) {
+            self.metrics.outcomes.record(Outcome::BadRequest);
+            return Err(e);
+        }
+        // Reserve a slot: CAS loop so concurrent submitters never
+        // overshoot the bound.
+        let mut cur = self.depth.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_queue {
+                self.metrics.outcomes.record(Outcome::Busy);
+                return Err(InferError::Busy {
+                    queued: cur,
+                    max_queue: self.max_queue,
+                    retry_after_ms: self.busy_retry_after_ms,
+                });
+            }
+            match self.depth.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(now) => cur = now,
+            }
+        }
+        let entry = Entry {
+            conn,
+            req_id,
+            payload,
+            enqueued: Instant::now(),
+            deadline,
+        };
+        if self.tx.send(entry).is_err() {
+            self.depth.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.outcomes.record(Outcome::PeerShutdown);
+            return Err(InferError::Shutdown);
+        }
+        Ok(())
+    }
+}
+
+/// Returns a batch's admission slots on drop — including during unwind,
+/// so a panicking backend cannot leak queue capacity.
+struct SlotGuard {
+    depth: Arc<AtomicUsize>,
+    n: usize,
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.depth.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
+
+/// Per-worker-thread scratch, reused across batches: the steady state
+/// runs `infer_batch_into` / `infer_quantized_batch_into` with no
+/// buffer allocation beyond the per-request output vectors handed to
+/// the sink.
+#[derive(Default)]
+struct WorkerScratch {
+    flat: Vec<f32>,
+    qidx: Vec<u8>,
+    out: Vec<f32>,
+    part: Vec<f32>,
+    rows_f: Vec<usize>,
+    rows_q: Vec<usize>,
+    e2e: Vec<f64>,
+    queue: Vec<f64>,
+    service: Vec<f64>,
+}
+
+/// A running cross-connection batcher for one engine.
+pub struct Batcher {
+    handle: BatcherHandle,
+    pub metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    collector: Option<std::thread::JoinHandle<()>>,
+    pub engine_name: String,
+    pub backend: Arc<dyn Backend>,
+}
+
+impl Batcher {
+    pub fn start(engine: Arc<dyn Backend>, cfg: BatcherCfg, sink: CompletionSink) -> Batcher {
+        let (tx, rx) = mpsc::channel::<Entry>();
+        let metrics = Arc::new(Metrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let depth = Arc::new(AtomicUsize::new(0));
+        let input_len = engine.input_len();
+        let output_len = engine.output_len();
+        let engine_name = engine.name().to_string();
+        // qidx is a u8 wire encoding: only expose quantizers it can span.
+        let input_quant = engine.input_quant().filter(|q| q.levels <= 256);
+
+        let m = Arc::clone(&metrics);
+        let stop = Arc::clone(&shutdown);
+        let d = Arc::clone(&depth);
+        let max_batch = cfg.max_batch.min(engine.max_batch()).max(1);
+        let max_delay = cfg.max_delay;
+        let workers = ThreadPool::new(cfg.workers.max(1));
+        let rx = Mutex::new(rx);
+        let backend = Arc::clone(&engine);
+
+        let collector = std::thread::Builder::new()
+            .name("qnn-xbatcher".into())
+            .spawn(move || {
+                let rx = rx.lock().unwrap();
+                // Hand one batch to the worker pool (used by both the
+                // live loop and the shutdown drain below).
+                let dispatch = |batch: Vec<Entry>| {
+                    let engine = Arc::clone(&engine);
+                    let metrics = Arc::clone(&m);
+                    let depth = Arc::clone(&d);
+                    let sink = Arc::clone(&sink);
+                    let dispatched = Instant::now();
+                    workers.execute(move || {
+                        thread_local! {
+                            static BUFS: RefCell<WorkerScratch> =
+                                RefCell::new(WorkerScratch::default());
+                        }
+                        let mut batch = batch;
+                        // Slots return when this guard drops — after the
+                        // completions below normally, during unwind if
+                        // the backend panics. Shed entries count too.
+                        let _slots = SlotGuard { depth, n: batch.len() };
+                        // Deadline shedding: budgets that expired while
+                        // queued resolve with a typed error now, before
+                        // any engine time is spent on them.
+                        let now = Instant::now();
+                        batch.retain(|e| match e.deadline {
+                            Some(d) if now >= d => {
+                                metrics.outcomes.record(Outcome::DeadlineExceeded);
+                                sink(Completion {
+                                    conn: e.conn,
+                                    req_id: e.req_id,
+                                    result: Err(InferError::DeadlineExceeded),
+                                });
+                                false
+                            }
+                            _ => true,
+                        });
+                        if batch.is_empty() {
+                            return;
+                        }
+                        let n = batch.len();
+                        let out_len = engine.output_len();
+                        BUFS.with(|b| {
+                            let s = &mut *b.borrow_mut();
+                            // Partition by payload encoding (stable): a
+                            // mixed batch costs at most two engine
+                            // entries, never per-row dispatch.
+                            s.rows_f.clear();
+                            s.rows_q.clear();
+                            for (i, e) in batch.iter().enumerate() {
+                                match e.payload {
+                                    Payload::F32(_) => s.rows_f.push(i),
+                                    Payload::QIdx(_) => s.rows_q.push(i),
+                                }
+                            }
+                            s.out.clear();
+                            s.out.resize(n * out_len, 0.0);
+                            if !s.rows_f.is_empty() {
+                                s.flat.clear();
+                                for &i in &s.rows_f {
+                                    if let Payload::F32(v) = &batch[i].payload {
+                                        s.flat.extend_from_slice(v);
+                                    }
+                                }
+                                if s.rows_f.len() == n {
+                                    engine.infer_batch_into(&s.flat, n, &mut s.out);
+                                } else {
+                                    s.part.clear();
+                                    s.part.resize(s.rows_f.len() * out_len, 0.0);
+                                    engine.infer_batch_into(&s.flat, s.rows_f.len(), &mut s.part);
+                                    for (k, &i) in s.rows_f.iter().enumerate() {
+                                        s.out[i * out_len..(i + 1) * out_len]
+                                            .copy_from_slice(
+                                                &s.part[k * out_len..(k + 1) * out_len],
+                                            );
+                                    }
+                                }
+                            }
+                            if !s.rows_q.is_empty() {
+                                s.qidx.clear();
+                                for &i in &s.rows_q {
+                                    if let Payload::QIdx(v) = &batch[i].payload {
+                                        s.qidx.extend_from_slice(v);
+                                    }
+                                }
+                                if s.rows_q.len() == n {
+                                    engine.infer_quantized_batch_into(&s.qidx, n, &mut s.out);
+                                } else {
+                                    s.part.clear();
+                                    s.part.resize(s.rows_q.len() * out_len, 0.0);
+                                    engine.infer_quantized_batch_into(
+                                        &s.qidx,
+                                        s.rows_q.len(),
+                                        &mut s.part,
+                                    );
+                                    for (k, &i) in s.rows_q.iter().enumerate() {
+                                        s.out[i * out_len..(i + 1) * out_len]
+                                            .copy_from_slice(
+                                                &s.part[k * out_len..(k + 1) * out_len],
+                                            );
+                                    }
+                                }
+                            }
+                            // Record metrics BEFORE completing so a
+                            // snapshot read right after a response sees
+                            // the request counted.
+                            let service_ms = dispatched.elapsed().as_secs_f64() * 1e3;
+                            s.e2e.clear();
+                            s.queue.clear();
+                            s.service.clear();
+                            for e in &batch {
+                                s.queue.push(
+                                    dispatched
+                                        .saturating_duration_since(e.enqueued)
+                                        .as_secs_f64()
+                                        * 1e3,
+                                );
+                                s.e2e.push(e.enqueued.elapsed().as_secs_f64() * 1e3);
+                                s.service.push(service_ms);
+                            }
+                            metrics.record_batch(&s.e2e, &s.queue, &s.service);
+                            metrics.outcomes.add(Outcome::Ok, n as u64);
+                            for (i, e) in batch.into_iter().enumerate() {
+                                sink(Completion {
+                                    conn: e.conn,
+                                    req_id: e.req_id,
+                                    result: Ok(s.out[i * out_len..(i + 1) * out_len].to_vec()),
+                                });
+                            }
+                        });
+                    });
+                };
+
+                loop {
+                    // Block for the first entry (with periodic shutdown
+                    // checks).
+                    let first = loop {
+                        match rx.recv_timeout(Duration::from_millis(20)) {
+                            Ok(e) => break Some(e),
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                if stop.load(Ordering::SeqCst) {
+                                    break None;
+                                }
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break None,
+                        }
+                    };
+                    let Some(first) = first else { break };
+
+                    // The dispatch policy: fill to max_batch, or age the
+                    // oldest entry (== `first`) to max_delay, whichever
+                    // comes first.
+                    let mut batch = vec![first];
+                    let deadline = batch[0].enqueued + max_delay;
+                    while batch.len() < max_batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(e) => batch.push(e),
+                            Err(_) => break,
+                        }
+                    }
+                    dispatch(batch);
+                }
+
+                // Graceful drain: admission stopped when the shutdown
+                // flag went up; entries already accepted still resolve.
+                loop {
+                    let mut batch = Vec::new();
+                    while batch.len() < max_batch {
+                        match rx.try_recv() {
+                            Ok(e) => batch.push(e),
+                            Err(_) => break,
+                        }
+                    }
+                    if batch.is_empty() {
+                        break;
+                    }
+                    dispatch(batch);
+                }
+                workers.wait_idle();
+            })
+            .expect("spawn cross-connection batcher");
+
+        Batcher {
+            handle: BatcherHandle {
+                tx,
+                depth,
+                shutdown: Arc::clone(&shutdown),
+                max_queue: cfg.max_queue.max(1),
+                busy_retry_after_ms: cfg.busy_retry_after.as_millis() as u64,
+                input_len,
+                output_len,
+                input_quant,
+                metrics: Arc::clone(&metrics),
+            },
+            metrics,
+            shutdown,
+            collector: Some(collector),
+            engine_name,
+            backend,
+        }
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful shutdown: stop admitting, drain accepted entries (every
+    /// one reaches the sink), join the collector and workers.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(c) = self.collector.take() {
+            let _ = c.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic toy engine: output = [sum(input)] per row.
+    struct SumEngine;
+    impl Backend for SumEngine {
+        fn name(&self) -> &str {
+            "sum"
+        }
+        fn input_len(&self) -> usize {
+            4
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+        fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+            for i in 0..batch {
+                out[i] = flat[i * 4..(i + 1) * 4].iter().sum();
+            }
+        }
+        fn input_quant(&self) -> Option<UniformQuant> {
+            Some(UniformQuant::unit(16))
+        }
+    }
+
+    /// Engine that sleeps per batch — for queue-pressure tests.
+    struct SlowEngine(Duration);
+    impl Backend for SlowEngine {
+        fn name(&self) -> &str {
+            "slow"
+        }
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+        fn infer_batch_into(&self, _flat: &[f32], batch: usize, out: &mut [f32]) {
+            std::thread::sleep(self.0);
+            out[..batch].fill(1.0);
+        }
+    }
+
+    /// Collects completions for assertions.
+    fn collecting_sink() -> (CompletionSink, Arc<Mutex<Vec<Completion>>>) {
+        let got = Arc::new(Mutex::new(Vec::new()));
+        let g = Arc::clone(&got);
+        let sink: CompletionSink = Arc::new(move |c| g.lock().unwrap().push(c));
+        (sink, got)
+    }
+
+    fn wait_for<F: Fn() -> bool>(cond: F) {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while !cond() {
+            assert!(Instant::now() < deadline, "condition never held");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn completions_route_back_by_conn_and_req_id() {
+        let (sink, got) = collecting_sink();
+        let b = Batcher::start(Arc::new(SumEngine), BatcherCfg::default(), sink);
+        let h = b.handle();
+        // Requests from distinct "connections", interleaved.
+        for conn in 0..4u64 {
+            for r in 0..8u64 {
+                let v = (conn * 8 + r) as f32;
+                h.submit(conn, r, Payload::F32(vec![v, 1.0, 2.0, 3.0]), None).unwrap();
+            }
+        }
+        wait_for(|| got.lock().unwrap().len() == 32);
+        let got = got.lock().unwrap();
+        for c in got.iter() {
+            let v = (c.conn * 8 + c.req_id) as f32;
+            assert_eq!(c.result, Ok(vec![v + 6.0]), "conn {} req {}", c.conn, c.req_id);
+        }
+        assert_eq!(b.metrics.snapshot().requests, 32);
+    }
+
+    #[test]
+    fn requests_across_conns_share_batches() {
+        // 64 single-request "connections" submitted faster than
+        // max_delay: the whole point of the cross-connection batcher is
+        // that these coalesce.
+        let (sink, got) = collecting_sink();
+        let b = Batcher::start(
+            Arc::new(SumEngine),
+            BatcherCfg { max_batch: 32, max_delay: Duration::from_millis(20), ..Default::default() },
+            sink,
+        );
+        let h = b.handle();
+        for conn in 0..64u64 {
+            h.submit(conn, 1, Payload::F32(vec![conn as f32, 0.0, 0.0, 0.0]), None).unwrap();
+        }
+        wait_for(|| got.lock().unwrap().len() == 64);
+        let snap = b.metrics.snapshot();
+        assert_eq!(snap.requests, 64);
+        assert!(
+            snap.mean_batch > 1.5,
+            "single-request conns did not coalesce: mean batch {}",
+            snap.mean_batch
+        );
+    }
+
+    #[test]
+    fn mixed_encodings_agree_with_each_other() {
+        let (sink, got) = collecting_sink();
+        let b = Batcher::start(Arc::new(SumEngine), BatcherCfg::default(), sink);
+        let h = b.handle();
+        let q = h.input_quant().unwrap().clone();
+        let idx = vec![3u8, 12, 0, 9];
+        let floats: Vec<f32> = idx.iter().map(|&i| q.value(i as usize)).collect();
+        // Same logical input in both encodings, same batch window.
+        h.submit(0, 1, Payload::QIdx(idx), None).unwrap();
+        h.submit(0, 2, Payload::F32(floats), None).unwrap();
+        wait_for(|| got.lock().unwrap().len() == 2);
+        let got = got.lock().unwrap();
+        let a = got.iter().find(|c| c.req_id == 1).unwrap().result.clone().unwrap();
+        let f = got.iter().find(|c| c.req_id == 2).unwrap().result.clone().unwrap();
+        assert_eq!(a, f);
+    }
+
+    #[test]
+    fn admission_rejects_at_bound_and_validates() {
+        let (sink, got) = collecting_sink();
+        let b = Batcher::start(
+            Arc::new(SlowEngine(Duration::from_millis(40))),
+            BatcherCfg {
+                max_batch: 1,
+                max_delay: Duration::from_millis(0),
+                workers: 1,
+                max_queue: 2,
+                busy_retry_after: Duration::from_millis(7),
+            },
+            sink,
+        );
+        let h = b.handle();
+        // Fill the bound, then the next submission sheds with the hint.
+        let mut accepted = 0u64;
+        let mut saw_busy = false;
+        for r in 0..16u64 {
+            match h.submit(1, r, Payload::F32(vec![0.0, 0.0]), None) {
+                Ok(()) => accepted += 1,
+                Err(InferError::Busy { max_queue, retry_after_ms, .. }) => {
+                    assert_eq!(max_queue, 2);
+                    assert_eq!(retry_after_ms, 7);
+                    saw_busy = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        assert!(saw_busy, "bounded queue never rejected");
+        // Malformed payloads are typed errors, not enqueued work.
+        assert_eq!(
+            h.submit(1, 99, Payload::F32(vec![0.0]), None),
+            Err(InferError::InputLen { got: 1, want: 2 })
+        );
+        assert_eq!(
+            h.submit(1, 99, Payload::QIdx(vec![0, 1]), None),
+            Err(InferError::QidxUnsupported)
+        );
+        // Every accepted entry still resolves.
+        wait_for(|| got.lock().unwrap().len() == accepted as usize);
+        assert!(b.metrics.outcomes.get(Outcome::Busy) >= 1);
+    }
+
+    #[test]
+    fn expired_deadlines_shed_before_dispatch() {
+        let (sink, got) = collecting_sink();
+        let b = Batcher::start(
+            Arc::new(SlowEngine(Duration::from_millis(60))),
+            BatcherCfg {
+                max_batch: 1,
+                max_delay: Duration::from_millis(0),
+                workers: 1,
+                max_queue: 64,
+                ..Default::default()
+            },
+            sink,
+        );
+        let h = b.handle();
+        h.submit(7, 1, Payload::F32(vec![0.0, 0.0]), None).unwrap();
+        // Let the first entry reach the engine and hold the worker.
+        std::thread::sleep(Duration::from_millis(10));
+        h.submit(7, 2, Payload::F32(vec![0.0, 0.0]), Some(Instant::now() + Duration::from_millis(5)))
+            .unwrap();
+        h.submit(7, 3, Payload::F32(vec![0.0, 0.0]), None).unwrap();
+        wait_for(|| got.lock().unwrap().len() == 3);
+        let got = got.lock().unwrap();
+        let by_id = |id: u64| got.iter().find(|c| c.req_id == id).unwrap();
+        assert_eq!(by_id(2).result, Err(InferError::DeadlineExceeded));
+        assert_eq!(by_id(1).result, Ok(vec![1.0]));
+        assert_eq!(by_id(3).result, Ok(vec![1.0]));
+        assert_eq!(b.metrics.outcomes.get(Outcome::DeadlineExceeded), 1);
+        drop(got);
+        // Slots return when the worker's batch guard drops, a beat
+        // after the completions land.
+        wait_for(|| h.queued() == 0);
+    }
+
+    #[test]
+    fn shutdown_drains_every_accepted_entry() {
+        let (sink, got) = collecting_sink();
+        let b = Batcher::start(
+            Arc::new(SlowEngine(Duration::from_millis(2))),
+            BatcherCfg { max_batch: 4, workers: 2, max_queue: 256, ..Default::default() },
+            sink,
+        );
+        let h = b.handle();
+        let mut accepted = 0usize;
+        for r in 0..128u64 {
+            if h.submit(r % 8, r, Payload::F32(vec![0.0, 0.0]), None).is_ok() {
+                accepted += 1;
+            }
+        }
+        // Pull the plug with work still queued: every accepted entry
+        // must reach the sink (response or typed error), none twice.
+        b.shutdown();
+        let got = got.lock().unwrap();
+        assert_eq!(got.len(), accepted, "accepted entries went unresolved");
+        // After shutdown the handle admits nothing.
+        assert_eq!(
+            h.submit(0, 999, Payload::F32(vec![0.0, 0.0]), None),
+            Err(InferError::Shutdown)
+        );
+    }
+}

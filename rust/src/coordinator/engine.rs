@@ -92,7 +92,7 @@ pub trait Backend: Send + Sync {
 }
 
 /// Model name for an artifact path: the file stem.
-fn model_name(path: &Path) -> String {
+pub(crate) fn model_name(path: &Path) -> String {
     path.file_stem()
         .and_then(|s| s.to_str())
         .unwrap_or("model")

@@ -15,6 +15,10 @@
 //!   dedicated connection ([`NetClient::ping`]) each
 //!   [`FleetCfg::health_interval`]; active probes and passive dispatch
 //!   failures feed the same per-replica consecutive-failure counter.
+//!   Each pong also carries the replica's queue depth, which dispatch
+//!   uses as a load signal: when every candidate has a fresh sample,
+//!   the first attempt goes to the least-loaded one (ring order breaks
+//!   ties and is the fallback whenever any sample is stale).
 //! * **Circuit breaker** — [`FleetCfg::breaker_threshold`] consecutive
 //!   failures ejects a replica for [`FleetCfg::breaker_cooldown`];
 //!   after the cooldown it is re-admitted only by a successful probe
@@ -229,6 +233,9 @@ enum ReplicaStatus {
 struct ReplicaHealth {
     status: ReplicaStatus,
     consecutive_failures: u32,
+    /// Latest health-pong queue depth and when it was sampled — the
+    /// load signal behind least-loaded dispatch ordering.
+    last_queued: Option<(u32, Instant)>,
 }
 
 struct Replica {
@@ -275,6 +282,7 @@ impl Fleet {
                 state: Mutex::new(ReplicaHealth {
                     status: ReplicaStatus::Up,
                     consecutive_failures: 0,
+                    last_queued: None,
                 }),
                 pool: Mutex::new(Vec::new()),
                 dispatched: AtomicU64::new(0),
@@ -383,7 +391,7 @@ impl Fleet {
         let inner = &*self.inner;
         inner.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let deadline = inner.cfg.default_deadline.map(|d| Instant::now() + d);
-        let cands = inner.candidates(model);
+        let cands = inner.ordered_candidates(model);
         if cands.is_empty() {
             inner.metrics.outcomes.record(Outcome::NoReplica);
             return Err(FleetError::NoReplica);
@@ -532,6 +540,33 @@ impl FleetInner {
         out
     }
 
+    /// Ring candidates reordered by load when the health signal allows
+    /// it: ascending by each replica's latest pong queue depth, but
+    /// only when **every** candidate has a fresh sample (within three
+    /// health intervals). One stale or missing sample falls the whole
+    /// set back to pure ring order — dispatch must never favor a
+    /// replica merely for being unprobed. The sort is stable, so ties
+    /// keep ring (placement-affinity) order.
+    fn ordered_candidates(&self, model: &str) -> Vec<usize> {
+        let cands = self.candidates(model);
+        if cands.len() < 2 {
+            return cands;
+        }
+        let horizon = self.cfg.health_interval * 3;
+        let now = Instant::now();
+        let mut depths = Vec::with_capacity(cands.len());
+        for &ri in &cands {
+            let st = self.replicas[ri].state.lock().unwrap();
+            match st.last_queued {
+                Some((q, at)) if now.duration_since(at) <= horizon => depths.push(q),
+                _ => return cands,
+            }
+        }
+        let mut order: Vec<usize> = (0..cands.len()).collect();
+        order.sort_by_key(|&i| depths[i]);
+        order.into_iter().map(|i| cands[i]).collect()
+    }
+
     /// First dispatchable candidate, rotated by attempt number so
     /// retries naturally fail over. An ejected replica past its
     /// cooldown is dispatchable — that half-open attempt is the probe.
@@ -664,12 +699,15 @@ fn health_loop(inner: &FleetInner) {
                     }
                 }
             }
-            let healthy = matches!(slot.as_mut().unwrap().ping(), Ok(h) if !h.draining);
-            if healthy {
-                inner.mark_success(ri);
-            } else {
-                *slot = None;
-                inner.mark_failure(ri);
+            match slot.as_mut().unwrap().ping() {
+                Ok(h) if !h.draining => {
+                    r.state.lock().unwrap().last_queued = Some((h.queued, Instant::now()));
+                    inner.mark_success(ri);
+                }
+                _ => {
+                    *slot = None;
+                    inner.mark_failure(ri);
+                }
             }
         }
         // Interruptible sleep so shutdown never waits a full interval.
@@ -792,6 +830,39 @@ mod tests {
         assert_eq!(snap.readmissions, 0);
         assert!(snap.availability == 0.0);
         assert!(snap.replicas.iter().all(|r| r.ejected));
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn load_aware_ordering_deprioritizes_queued_replicas() {
+        let addrs: Vec<String> = (0..3).map(|_| dead_addr()).collect();
+        let fleet = Fleet::connect(
+            &addrs,
+            FleetCfg {
+                replication: 3,
+                health_interval: Duration::from_millis(10),
+                ..quiet_cfg()
+            },
+        );
+        let ring = fleet.inner.candidates("sum");
+        assert_eq!(ring.len(), 3);
+        // No load samples yet: dispatch order is pure ring order.
+        assert_eq!(fleet.inner.ordered_candidates("sum"), ring);
+        // Fresh samples everywhere: the heavily queued primary is
+        // deprioritized, the emptiest replica goes first.
+        let now = Instant::now();
+        for (&ri, &q) in ring.iter().zip([40u32, 2, 9].iter()) {
+            fleet.inner.replicas[ri].state.lock().unwrap().last_queued = Some((q, now));
+        }
+        assert_eq!(
+            fleet.inner.ordered_candidates("sum"),
+            vec![ring[1], ring[2], ring[0]],
+            "least-loaded replica must be tried first"
+        );
+        // Once the samples age past the freshness horizon (3 × 10 ms
+        // here), the load signal is distrusted and ring order returns.
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(fleet.inner.ordered_candidates("sum"), ring);
         fleet.shutdown();
     }
 

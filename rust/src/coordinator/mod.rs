@@ -4,17 +4,23 @@
 //! [`Router::load_dir`] — and servable over TCP through
 //! [`NetServer::bind`] with a no-float binary wire protocol
 //! ([`wire`]: length-framed, checksummed, `f32le` + `qidx` payload
-//! encodings) and bounded-queue admission control.
+//! encodings) and bounded-queue admission control. Two front-ends share
+//! that protocol: thread-per-connection [`NetServer`] and the
+//! event-driven [`ReactorServer`] (one loop thread, all connections,
+//! cross-connection batching via [`batcher`]).
 
+pub mod batcher;
 pub mod engine;
 pub mod fleet;
 pub mod metrics;
 pub mod net;
 pub mod pjrt_engine;
+pub mod reactor;
 pub mod router;
 pub mod server;
 pub mod wire;
 
+pub use batcher::{Batcher, BatcherCfg, BatcherHandle, Completion, CompletionSink};
 pub use engine::{load_backend, Backend, FloatNetEngine, LutEngine};
 /// Former name of [`Backend`], kept so downstream code migrates at its
 /// own pace.
@@ -25,6 +31,7 @@ pub use net::{
     ClientError, HealthStatus, NetCfg, NetClient, NetClientCfg, NetServer, RemoteError,
 };
 pub use pjrt_engine::PjrtEngine;
+pub use reactor::{ReactorCfg, ReactorServer};
 pub use router::Router;
 pub use server::{InferError, Payload, Server, ServerCfg, ServerHandle};
 pub use wire::{Dtype, ErrCode};

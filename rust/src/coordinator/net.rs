@@ -90,7 +90,7 @@ enum WriteItem {
     },
 }
 
-fn code_for(e: &InferError) -> ErrCode {
+pub(crate) fn code_for(e: &InferError) -> ErrCode {
     match e {
         InferError::Busy { .. } => ErrCode::Busy,
         InferError::DeadlineExceeded => ErrCode::DeadlineExceeded,
@@ -102,7 +102,7 @@ fn code_for(e: &InferError) -> ErrCode {
 }
 
 /// Back-off hint carried on the error frame (0 = none).
-fn retry_hint(e: &InferError) -> u32 {
+pub(crate) fn retry_hint(e: &InferError) -> u32 {
     match e {
         InferError::Busy { retry_after_ms, .. } => {
             (*retry_after_ms).min(u32::MAX as u64) as u32
@@ -824,8 +824,11 @@ impl NetClient {
     }
 
     /// Run `attempt` up to `1 + max_retries` times, retrying only on
-    /// `Busy` and honoring the server's retry-after hint (falling back
-    /// to 1·2·4·… ms exponential backoff when the server sent none).
+    /// `Busy`. The sleep is the server's retry-after hint or the
+    /// client's own 1·2·4·… ms exponential backoff, whichever is
+    /// larger: a server that sends no hint (`retry_after_ms = 0`) — or
+    /// a stingy one — must not turn the retry loop into a hot spin
+    /// against a saturated queue.
     fn retrying<F>(&mut self, max_retries: usize, mut attempt: F) -> Result<Vec<f32>, ClientError>
     where
         F: FnMut(&mut NetClient) -> Result<Vec<f32>, ClientError>,
@@ -836,11 +839,7 @@ impl NetClient {
                 Err(ClientError::Remote(e))
                     if e.code == ErrCode::Busy && tries < max_retries =>
                 {
-                    let ms = if e.retry_after_ms > 0 {
-                        e.retry_after_ms as u64
-                    } else {
-                        1u64 << tries.min(6)
-                    };
+                    let ms = (e.retry_after_ms as u64).max(1u64 << tries.min(6));
                     std::thread::sleep(Duration::from_millis(ms));
                     tries += 1;
                 }
@@ -1089,6 +1088,42 @@ mod tests {
         let out = c.infer_f32_retrying("slow", &[2.5], 64).unwrap();
         assert_eq!(out, vec![2.5]);
         net.shutdown();
+    }
+
+    #[test]
+    fn retrying_without_a_hint_backs_off_instead_of_hot_spinning() {
+        // Regression: a Busy frame with retry_after_ms = 0 used to be
+        // retried immediately — max_retries attempts hammered into a
+        // saturated server with zero sleep between them. The backoff
+        // floor must apply even with no hint. The attempt closure never
+        // touches the socket, so a held listener-accept pair stands in
+        // for a server.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || listener.accept().map(|(s, _)| s));
+        let mut c = NetClient::connect(addr).unwrap();
+        let attempts = std::cell::Cell::new(0u32);
+        let started = Instant::now();
+        let res = c.retrying(5, |_| {
+            attempts.set(attempts.get() + 1);
+            Err(ClientError::Remote(RemoteError {
+                code: ErrCode::Busy,
+                retry_after_ms: 0, // "no hint" — the old code slept 0 ms
+                msg: "queue full".into(),
+            }))
+        });
+        let elapsed = started.elapsed();
+        assert_eq!(attempts.get(), 6, "1 initial + 5 retries");
+        match res {
+            Err(ClientError::Remote(e)) => assert_eq!(e.code, ErrCode::Busy),
+            other => panic!("expected Remote(Busy), got {other:?}"),
+        }
+        // Exponential floor 1+2+4+8+16 = 31 ms of mandatory backoff.
+        assert!(
+            elapsed >= Duration::from_millis(31),
+            "retry loop hot-spun: 6 attempts in {elapsed:?}"
+        );
+        drop(hold.join().unwrap());
     }
 
     #[test]

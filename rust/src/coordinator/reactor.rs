@@ -1,0 +1,1123 @@
+//! Event-driven TCP serving: every connection on one reactor thread.
+//!
+//! [`super::net::NetServer`] spends two OS threads per connection —
+//! fine at tens of clients, a wall at thousands. [`ReactorServer`]
+//! serves the same QWF2 wire protocol with a fixed thread budget: one
+//! event-loop thread owns **all** nonblocking connection sockets (via
+//! [`crate::util::poll::Poller`] — epoll on Linux, `poll(2)` fallback),
+//! doing incremental frame assembly
+//! ([`super::wire::FrameAssembler`]) on reads and buffered flushes on
+//! writes, while a [`super::batcher::Batcher`] per model forms engine
+//! batches *across* connections and a small worker pool runs them.
+//! Total threads: `1 + models × (1 + workers)` — O(workers), not
+//! O(connections).
+//!
+//! Semantics match the thread-per-connection front-end:
+//!
+//! * **Admission control**: bounded per-model queues answer `Busy`
+//!   frames with a retry-after hint once full.
+//! * **Backpressure**: a connection pipelining past `pipeline_depth`
+//!   in-flight requests (or whose write buffer backs up past
+//!   `max_wbuf`) stops being read until it drains — interest re-arming,
+//!   not unbounded buffering.
+//! * **Timeouts**: idle connections and slow-loris partial frames are
+//!   closed on a sweep timer.
+//! * **Graceful drain**: [`ReactorServer::shutdown`] stops accepting,
+//!   stops reading, resolves every accepted request (response or typed
+//!   error), flushes, then closes; wedged peers are force-closed after
+//!   `drain_timeout`.
+//!
+//! One deliberate difference: responses on a connection are **not**
+//! guaranteed to come back in request order. Cross-connection batches
+//! complete as workers finish, so two pipelined requests from one
+//! client may resolve out of order — clients correlate by request id
+//! (which the protocol has always carried; the loadgen's mux client
+//! does exactly this).
+
+use super::batcher::{Batcher, BatcherCfg, BatcherHandle, Completion, CompletionSink};
+use super::engine::{self, Backend};
+use super::net::{code_for, retry_hint};
+use super::server::Payload;
+use super::wire::{self, Dtype, ErrCode, Frame, FrameAssembler};
+use crate::util::fault::{self, FrameFault};
+use crate::util::poll::{Event, Interest, Poller, WakePipe};
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, Once};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Reactor front-end configuration.
+#[derive(Clone, Debug)]
+pub struct ReactorCfg {
+    /// Cross-connection batch policy (per model).
+    pub batch: BatcherCfg,
+    /// Per-connection cap on in-flight requests: past it the socket
+    /// stops being read until completions drain.
+    pub pipeline_depth: usize,
+    /// Per-connection write-buffer high-water mark: a peer that does
+    /// not read its responses stops being read itself.
+    pub max_wbuf: usize,
+    /// Close a connection with nothing in flight after this much
+    /// silence (`None` = never).
+    pub idle_timeout: Option<Duration>,
+    /// Close a connection that has held a partial frame this long — the
+    /// slow-loris guard.
+    pub partial_frame_timeout: Duration,
+    /// During drain, force-close connections still unflushed or
+    /// unresolved after this long (a wedged peer must not hold
+    /// shutdown hostage).
+    pub drain_timeout: Duration,
+}
+
+impl Default for ReactorCfg {
+    fn default() -> Self {
+        Self {
+            batch: BatcherCfg::default(),
+            pipeline_depth: 256,
+            max_wbuf: 1 << 20,
+            idle_timeout: Some(Duration::from_secs(300)),
+            partial_frame_timeout: Duration::from_secs(10),
+            drain_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const TOKEN_FIRST_CONN: u64 = 2;
+
+/// A running event-driven front-end.
+pub struct ReactorServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    hard_abort: Arc<AtomicBool>,
+    wake: Arc<WakePipe>,
+    event_loop: Option<JoinHandle<()>>,
+    batchers: Vec<Batcher>,
+    handles: BTreeMap<String, BatcherHandle>,
+    peak_conns: Arc<AtomicUsize>,
+    poller_backend: &'static str,
+}
+
+impl ReactorServer {
+    /// Bind and serve the given models with the default configuration.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        models: Vec<(String, Arc<dyn Backend>)>,
+    ) -> Result<ReactorServer> {
+        Self::bind_with(addr, models, ReactorCfg::default())
+    }
+
+    /// Load every `.qnn` artifact in `dir` (model name = file stem) and
+    /// serve the lot — the reactor twin of `Router::load_dir`.
+    pub fn bind_dir(
+        addr: impl ToSocketAddrs,
+        dir: impl AsRef<std::path::Path>,
+        cfg: ReactorCfg,
+    ) -> Result<ReactorServer> {
+        let dir = dir.as_ref();
+        let mut paths: Vec<_> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading artifact dir {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map(|e| e == "qnn").unwrap_or(false))
+            .collect();
+        paths.sort();
+        anyhow::ensure!(!paths.is_empty(), "no .qnn artifacts in {}", dir.display());
+        let mut models = Vec::new();
+        for p in &paths {
+            let backend = engine::load_backend(p)
+                .with_context(|| format!("loading {}", p.display()))?;
+            models.push((engine::model_name(p), backend));
+        }
+        Self::bind_with(addr, models, cfg)
+    }
+
+    /// [`Self::bind`] with an explicit configuration.
+    pub fn bind_with(
+        addr: impl ToSocketAddrs,
+        models: Vec<(String, Arc<dyn Backend>)>,
+        cfg: ReactorCfg,
+    ) -> Result<ReactorServer> {
+        anyhow::ensure!(!models.is_empty(), "reactor needs at least one model");
+        // Arm the chaos harness from the environment exactly once per
+        // process — same contract as `NetServer::bind_with`.
+        static FAULT_ENV: Once = Once::new();
+        FAULT_ENV.call_once(|| match fault::install_from_env() {
+            Ok(Some((plan, seed))) => {
+                eprintln!("qnn-reactor: fault injection armed (QNN_FAULT_SEED={seed}): {plan:?}")
+            }
+            Ok(None) => {}
+            Err(e) => eprintln!("qnn-reactor: QNN_FAULT rejected: {e}"),
+        });
+
+        let listener = TcpListener::bind(addr).context("binding reactor socket")?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let addr = listener.local_addr().context("reading bound address")?;
+        let poller = Poller::new().context("creating poller")?;
+        let poller_backend = poller.backend_name();
+        let wake = Arc::new(WakePipe::new().context("creating wake pipe")?);
+        let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
+
+        // The sink workers call: stash the completion, poke the loop.
+        let sink: CompletionSink = {
+            let completions = Arc::clone(&completions);
+            let wake = Arc::clone(&wake);
+            Arc::new(move |c: Completion| {
+                completions.lock().unwrap().push(c);
+                wake.wake();
+            })
+        };
+
+        let mut batchers = Vec::new();
+        let mut handles = BTreeMap::new();
+        for (name, backend) in models {
+            let b = Batcher::start(backend, cfg.batch.clone(), Arc::clone(&sink));
+            handles.insert(name, b.handle());
+            batchers.push(b);
+        }
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let hard_abort = Arc::new(AtomicBool::new(false));
+        let peak_conns = Arc::new(AtomicUsize::new(0));
+
+        let event_loop = {
+            let mut lp = ReactorLoop {
+                poller,
+                listener,
+                handles: handles.clone(),
+                completions,
+                wake: Arc::clone(&wake),
+                stop: Arc::clone(&stop),
+                hard_abort: Arc::clone(&hard_abort),
+                cfg,
+                conns: HashMap::new(),
+                next_token: TOKEN_FIRST_CONN,
+                peak_conns: Arc::clone(&peak_conns),
+                ebuf: Vec::new(),
+                fbuf: Vec::new(),
+                xbuf: Vec::new(),
+                draining_since: None,
+                last_sweep: Instant::now(),
+            };
+            std::thread::Builder::new()
+                .name("qnn-reactor".into())
+                .spawn(move || lp.run())
+                .expect("spawn reactor event loop")
+        };
+
+        Ok(ReactorServer {
+            addr,
+            stop,
+            hard_abort,
+            wake,
+            event_loop: Some(event_loop),
+            batchers,
+            handles,
+            peak_conns,
+            poller_backend,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Which readiness backend the loop runs on ("epoll" or "poll") —
+    /// recorded in bench provenance.
+    pub fn poller_backend(&self) -> &'static str {
+        self.poller_backend
+    }
+
+    /// High-water mark of concurrently open connections.
+    pub fn peak_connections(&self) -> usize {
+        self.peak_conns.load(Ordering::Relaxed)
+    }
+
+    /// Requests outstanding across every model's bounded queue.
+    pub fn queued_total(&self) -> usize {
+        self.handles.values().map(|h| h.queued()).sum()
+    }
+
+    /// Per-model serving metrics (name, metrics) — mean batch size here
+    /// is the cross-connection coalescing the bench gates on.
+    pub fn model_metrics(&self) -> Vec<(String, Arc<super::metrics::Metrics>)> {
+        self.batchers
+            .iter()
+            .map(|b| (b.engine_name.clone(), Arc::clone(&b.metrics)))
+            .collect()
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wake.wake();
+        // The loop resolves all in-flight work (batchers are still live
+        // here — order matters), flushes, closes, then exits.
+        if let Some(h) = self.event_loop.take() {
+            let _ = h.join();
+        }
+        for b in self.batchers.drain(..) {
+            b.shutdown();
+        }
+    }
+
+    /// Graceful drain: stop accepting and reading, answer every
+    /// accepted request, flush, close, then stop the batchers.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    /// Hard kill for chaos tests: sever every connection immediately —
+    /// peers see a reset, not a clean error frame.
+    pub fn abort(mut self) {
+        self.hard_abort.store(true, Ordering::SeqCst);
+        self.shutdown_impl();
+    }
+}
+
+impl Drop for ReactorServer {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Per-connection state owned by the loop.
+struct Conn {
+    token: u64,
+    stream: TcpStream,
+    asm: FrameAssembler,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Requests submitted to a batcher whose completion has not yet
+    /// been encoded.
+    inflight: usize,
+    /// Read side done (EOF, framing damage, or drain): no more
+    /// requests; close once in-flight work resolves and flushes.
+    closing: bool,
+    /// Sever as soon as the write buffer flushes, in-flight or not
+    /// (fault-injected truncation).
+    kill_after_flush: bool,
+    /// Remove on the next reap.
+    sever: bool,
+    last_activity: Instant,
+    /// When the currently-buffered partial frame started arriving.
+    partial_since: Option<Instant>,
+    interest: Interest,
+}
+
+impl Conn {
+    fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+}
+
+struct ReactorLoop {
+    poller: Poller,
+    listener: TcpListener,
+    handles: BTreeMap<String, BatcherHandle>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    wake: Arc<WakePipe>,
+    stop: Arc<AtomicBool>,
+    hard_abort: Arc<AtomicBool>,
+    cfg: ReactorCfg,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    peak_conns: Arc<AtomicUsize>,
+    /// Encode scratch: every outbound frame is built here, then
+    /// appended (through the fault harness) to the owning connection's
+    /// write buffer.
+    ebuf: Vec<u8>,
+    /// Copy of the frame being processed (ends the assembler borrow so
+    /// handlers can mutate the connection while parsing zero-copy).
+    fbuf: Vec<u8>,
+    /// f32 payload decode scratch.
+    xbuf: Vec<f32>,
+    draining_since: Option<Instant>,
+    last_sweep: Instant,
+}
+
+impl ReactorLoop {
+    fn run(&mut self) {
+        if self
+            .poller
+            .register(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+            .is_err()
+        {
+            return;
+        }
+        if self
+            .poller
+            .register(self.wake.read_fd(), TOKEN_WAKE, Interest::READ)
+            .is_err()
+        {
+            return;
+        }
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                if self.draining_since.is_none() {
+                    self.begin_drain();
+                }
+                if self.hard_abort.load(Ordering::SeqCst) {
+                    self.sever_all();
+                }
+                if self.conns.is_empty() {
+                    break;
+                }
+                if let Some(t0) = self.draining_since {
+                    if t0.elapsed() >= self.cfg.drain_timeout {
+                        // Wedged peers do not get to hold the drain
+                        // hostage.
+                        self.sever_all();
+                        break;
+                    }
+                }
+            }
+            // Bounded wait so timers (sweeps, drain deadline) always
+            // get a look even on a silent fleet of sockets.
+            let _ = self.poller.wait(&mut events, Some(Duration::from_millis(25)));
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKE => self.wake.drain(),
+                    token => self.conn_event(token, ev.readable, ev.writable),
+                }
+            }
+            self.drain_completions();
+            self.sweep_timers();
+        }
+    }
+
+    /// Run `f` against one connection with the loop free to mutate
+    /// itself: the connection is taken out of the map for the duration
+    /// and either reinserted or closed.
+    fn with_conn<F: FnOnce(&mut Self, &mut Conn)>(&mut self, token: u64, f: F) {
+        let Some(mut conn) = self.conns.remove(&token) else {
+            return;
+        };
+        f(self, &mut conn);
+        if conn.sever {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            // Dropping the stream closes the socket.
+        } else {
+            self.update_interest(&mut conn);
+            self.conns.insert(token, conn);
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self
+                        .poller
+                        .register(stream.as_raw_fd(), token, Interest::READ)
+                        .is_err()
+                    {
+                        continue; // fd pressure: shed the connection
+                    }
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            token,
+                            stream,
+                            asm: FrameAssembler::new(),
+                            wbuf: Vec::new(),
+                            wpos: 0,
+                            inflight: 0,
+                            closing: false,
+                            kill_after_flush: false,
+                            sever: false,
+                            last_activity: Instant::now(),
+                            partial_since: None,
+                            interest: Interest::READ,
+                        },
+                    );
+                    self.peak_conns.fetch_max(self.conns.len(), Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, readable: bool, writable: bool) {
+        self.with_conn(token, |lp, conn| {
+            if writable {
+                lp.flush(conn);
+            }
+            if readable && !conn.closing && !conn.sever {
+                lp.read_ready(conn);
+            }
+            // Attempt a flush for anything the read handlers queued.
+            if conn.pending_write() > 0 && !conn.sever {
+                lp.flush(conn);
+            }
+            lp.maybe_finish(conn);
+        });
+    }
+
+    fn read_ready(&mut self, conn: &mut Conn) {
+        let mut scratch = [0u8; 16 * 1024];
+        loop {
+            // Backpressure: a connection pipelined to its cap (or whose
+            // peer is not consuming responses) stops being read; the
+            // interest update below parks it until completions drain.
+            if conn.inflight >= self.cfg.pipeline_depth
+                || conn.pending_write() >= self.cfg.max_wbuf
+            {
+                break;
+            }
+            match conn.stream.read(&mut scratch) {
+                Ok(0) => {
+                    // Clean EOF (or drain's read-shutdown): no more
+                    // requests; in-flight work still resolves.
+                    conn.closing = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.last_activity = Instant::now();
+                    conn.asm.push(&scratch[..n]);
+                    if !self.drain_frames(conn) {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.sever = true;
+                    break;
+                }
+            }
+        }
+        // Age the partial frame for the slow-loris sweep.
+        if conn.asm.has_partial() {
+            if conn.partial_since.is_none() {
+                conn.partial_since = Some(Instant::now());
+            }
+        } else {
+            conn.partial_since = None;
+        }
+    }
+
+    /// Process every complete frame buffered in the assembler. Returns
+    /// `false` when the connection stopped accepting input (framing
+    /// damage or backpressure cap hit mid-buffer).
+    fn drain_frames(&mut self, conn: &mut Conn) -> bool {
+        loop {
+            if conn.inflight >= self.cfg.pipeline_depth
+                || conn.pending_write() >= self.cfg.max_wbuf
+            {
+                return false;
+            }
+            match conn.asm.next_frame() {
+                Ok(None) => return true,
+                Ok(Some(frame)) => {
+                    self.fbuf.clear();
+                    self.fbuf.extend_from_slice(frame);
+                }
+                Err(e) => {
+                    // Framing damage: no resync point. Report, stop
+                    // reading, flush what we owe, close.
+                    let msg = format!("{e}");
+                    self.send_error(conn, 0, ErrCode::BadRequest, 0, &msg);
+                    conn.closing = true;
+                    return false;
+                }
+            }
+            self.process_frame(conn);
+        }
+    }
+
+    /// Handle the frame sitting in `self.fbuf`.
+    fn process_frame(&mut self, conn: &mut Conn) {
+        let arrival = Instant::now();
+        // Take the frame buffer so the zero-copy parse borrow does not
+        // pin `self` (handlers below need it mutably).
+        let fbuf = std::mem::take(&mut self.fbuf);
+        match wire::parse_frame(&fbuf) {
+            Ok(Frame::Request { req_id, model, dtype, deadline_ms, payload }) => {
+                match self.handles.get(model).cloned() {
+                    None => {
+                        let known: Vec<String> = self.handles.keys().cloned().collect();
+                        let msg = format!("no model {model:?} (have {known:?})");
+                        self.send_error(conn, req_id, ErrCode::NoModel, 0, &msg);
+                    }
+                    Some(h) => {
+                        let payload = match dtype {
+                            Dtype::F32Le => {
+                                match wire::payload_f32s_into(payload, &mut self.xbuf) {
+                                    Ok(()) => Some(Payload::F32(self.xbuf.clone())),
+                                    Err(e) => {
+                                        let msg = format!("{e:#}");
+                                        self.send_error(
+                                            conn,
+                                            req_id,
+                                            ErrCode::BadRequest,
+                                            0,
+                                            &msg,
+                                        );
+                                        None
+                                    }
+                                }
+                            }
+                            Dtype::QIdx => Some(Payload::QIdx(payload.to_vec())),
+                        };
+                        if let Some(payload) = payload {
+                            // The wire deadline is a remaining budget;
+                            // anchor it at arrival so server-side
+                            // queueing counts against it.
+                            let deadline = (deadline_ms > 0)
+                                .then(|| arrival + Duration::from_millis(deadline_ms as u64));
+                            match h.submit(conn.token, req_id, payload, deadline) {
+                                Ok(()) => conn.inflight += 1,
+                                Err(e) => {
+                                    let msg = e.to_string();
+                                    self.send_error(
+                                        conn,
+                                        req_id,
+                                        code_for(&e),
+                                        retry_hint(&e),
+                                        &msg,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(Frame::HealthPing { req_id }) => {
+                let queued: usize = self.handles.values().map(|h| h.queued()).sum();
+                let draining = self.stop.load(Ordering::SeqCst);
+                let models = self.handles.len().min(u16::MAX as usize) as u16;
+                wire::encode_health_pong(
+                    &mut self.ebuf,
+                    req_id,
+                    draining,
+                    models,
+                    queued.min(u32::MAX as usize) as u32,
+                );
+                self.append_wire(conn);
+            }
+            Ok(_) => {
+                self.send_error(
+                    conn,
+                    0,
+                    ErrCode::BadRequest,
+                    0,
+                    "only request and health ping frames are accepted",
+                );
+            }
+            Err(e) => {
+                // Checksum/validation failure inside a well-framed
+                // frame: report it and keep the connection.
+                let msg = format!("{e:#}");
+                self.send_error(conn, 0, ErrCode::BadRequest, 0, &msg);
+            }
+        }
+        self.fbuf = fbuf;
+    }
+
+    fn send_error(&mut self, conn: &mut Conn, req_id: u64, code: ErrCode, hint: u32, msg: &str) {
+        wire::encode_error(&mut self.ebuf, req_id, code, hint, msg);
+        self.append_wire(conn);
+    }
+
+    /// Append the frame in `self.ebuf` to the connection's write
+    /// buffer, letting the chaos harness damage it first when armed —
+    /// the buffered twin of `net::write_frame_injecting_faults`.
+    fn append_wire(&mut self, conn: &mut Conn) {
+        if !fault::is_enabled() {
+            conn.wbuf.extend_from_slice(&self.ebuf);
+            return;
+        }
+        match fault::on_frame(self.ebuf.len()) {
+            // The loop cannot sleep: a delayed frame simply delivers.
+            FrameFault::Deliver | FrameFault::Delay(_) => {
+                conn.wbuf.extend_from_slice(&self.ebuf)
+            }
+            FrameFault::Drop => {}
+            FrameFault::Truncate(n) => {
+                conn.wbuf.extend_from_slice(&self.ebuf[..n]);
+                conn.closing = true;
+                conn.kill_after_flush = true;
+            }
+            FrameFault::BitFlip(pos, mask) => {
+                let start = conn.wbuf.len();
+                conn.wbuf.extend_from_slice(&self.ebuf);
+                conn.wbuf[start + pos] ^= mask;
+            }
+        }
+    }
+
+    fn flush(&mut self, conn: &mut Conn) {
+        while conn.wpos < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => {
+                    conn.sever = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.wpos += n;
+                    conn.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.sever = true;
+                    break;
+                }
+            }
+        }
+        if conn.wpos == conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+        } else if conn.wpos > (1 << 20) {
+            // Keep a slow reader's buffer from growing unboundedly at
+            // the front.
+            conn.wbuf.drain(..conn.wpos);
+            conn.wpos = 0;
+        }
+    }
+
+    /// Close conditions that do not need a socket event.
+    fn maybe_finish(&mut self, conn: &mut Conn) {
+        if conn.sever {
+            return;
+        }
+        if conn.kill_after_flush && conn.pending_write() == 0 {
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            conn.sever = true;
+            return;
+        }
+        if conn.closing && conn.inflight == 0 && conn.pending_write() == 0 {
+            conn.sever = true;
+        }
+    }
+
+    fn update_interest(&mut self, conn: &mut Conn) {
+        let desired = Interest {
+            readable: !conn.closing
+                && conn.inflight < self.cfg.pipeline_depth
+                && conn.pending_write() < self.cfg.max_wbuf,
+            writable: conn.pending_write() > 0,
+        };
+        if desired != conn.interest {
+            if self
+                .poller
+                .modify(conn.stream.as_raw_fd(), conn.token, desired)
+                .is_ok()
+            {
+                conn.interest = desired;
+            }
+        }
+    }
+
+    fn drain_completions(&mut self) {
+        let batch = {
+            let mut guard = self.completions.lock().unwrap();
+            if guard.is_empty() {
+                return;
+            }
+            std::mem::take(&mut *guard)
+        };
+        for c in batch {
+            // A completion for a connection that died in the meantime
+            // has nowhere to go; its work is simply discarded.
+            self.with_conn(c.conn, |lp, conn| {
+                conn.inflight = conn.inflight.saturating_sub(1);
+                match &c.result {
+                    Ok(out) => {
+                        wire::encode_response_f32(&mut lp.ebuf, c.req_id, out);
+                        lp.append_wire(conn);
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        wire::encode_error(
+                            &mut lp.ebuf,
+                            c.req_id,
+                            code_for(e),
+                            retry_hint(e),
+                            &msg,
+                        );
+                        lp.append_wire(conn);
+                    }
+                }
+                lp.flush(conn);
+                lp.maybe_finish(conn);
+            });
+        }
+    }
+
+    fn sweep_timers(&mut self) {
+        if self.last_sweep.elapsed() < Duration::from_millis(100) {
+            return;
+        }
+        self.last_sweep = Instant::now();
+        let now = Instant::now();
+        let mut doomed: Vec<u64> = Vec::new();
+        for (tok, conn) in &self.conns {
+            // Slow loris: a partial frame aging past the bound.
+            if let Some(t0) = conn.partial_since {
+                if now.duration_since(t0) >= self.cfg.partial_frame_timeout {
+                    doomed.push(*tok);
+                    continue;
+                }
+            }
+            // Idle: nothing in flight, nothing to write, long silence.
+            if let Some(idle) = self.cfg.idle_timeout {
+                if conn.inflight == 0
+                    && conn.pending_write() == 0
+                    && now.duration_since(conn.last_activity) >= idle
+                {
+                    doomed.push(*tok);
+                }
+            }
+        }
+        for tok in doomed {
+            self.with_conn(tok, |_, conn| conn.sever = true);
+        }
+    }
+
+    fn begin_drain(&mut self) {
+        self.draining_since = Some(Instant::now());
+        let _ = self.poller.deregister(self.listener.as_raw_fd());
+        // Half-close every read side: no new requests; accepted work
+        // resolves and flushes before the close.
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for tok in tokens {
+            self.with_conn(tok, |_, conn| {
+                let _ = conn.stream.shutdown(Shutdown::Read);
+                conn.closing = true;
+            });
+        }
+    }
+
+    fn sever_all(&mut self) {
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for tok in tokens {
+            self.with_conn(tok, |_, conn| {
+                let _ = conn.stream.shutdown(Shutdown::Both);
+                conn.sever = true;
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::net::{ClientError, NetClient};
+    use crate::coordinator::server::InferError;
+    use crate::fixedpoint::UniformQuant;
+
+    /// output = [sum(input)]; quantizer is the 0..=15 unit grid.
+    struct SumEngine;
+    impl Backend for SumEngine {
+        fn name(&self) -> &str {
+            "sum"
+        }
+        fn input_len(&self) -> usize {
+            4
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+        fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+            for i in 0..batch {
+                out[i] = flat[i * 4..(i + 1) * 4].iter().sum();
+            }
+        }
+        fn input_quant(&self) -> Option<UniformQuant> {
+            Some(UniformQuant::unit(16))
+        }
+    }
+
+    fn boot() -> ReactorServer {
+        ReactorServer::bind("127.0.0.1:0", vec![("sum".to_string(), Arc::new(SumEngine))])
+            .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_both_encodings() {
+        let srv = boot();
+        let mut c = NetClient::connect(srv.local_addr()).unwrap();
+        assert_eq!(c.infer_f32("sum", &[1.0, 2.0, 3.0, 4.0]).unwrap(), vec![10.0]);
+        assert_eq!(c.infer_qidx("sum", &[15, 0, 0, 0]).unwrap(), vec![1.0]);
+        // Typed errors, connection stays usable.
+        match c.infer_f32("nope", &[0.0; 4]) {
+            Err(ClientError::Remote(e)) => assert_eq!(e.code, ErrCode::NoModel),
+            other => panic!("expected NoModel, got {other:?}"),
+        }
+        match c.infer_f32("sum", &[0.0; 3]) {
+            Err(ClientError::Remote(e)) => assert_eq!(e.code, ErrCode::BadRequest),
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        assert_eq!(c.infer_f32("sum", &[1.0; 4]).unwrap(), vec![4.0]);
+        assert!(srv.peak_connections() >= 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn health_ping_and_drain_state() {
+        let srv = boot();
+        let mut c = NetClient::connect(srv.local_addr()).unwrap();
+        let h = c.ping().unwrap();
+        assert!(!h.draining);
+        assert_eq!(h.models, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pipelined_responses_match_by_request_id() {
+        let srv = boot();
+        let mut c = NetClient::connect(srv.local_addr()).unwrap();
+        let mut want = std::collections::HashMap::new();
+        for i in 0..32 {
+            let id = c.send_f32("sum", &[i as f32, 0.0, 0.0, 0.0]).unwrap();
+            want.insert(id, i as f32);
+        }
+        // Responses may arrive out of order — correlate by id.
+        for _ in 0..32 {
+            let (rid, res) = c.recv_response().unwrap();
+            let want_v = want.remove(&rid).expect("unknown or duplicate response id");
+            assert_eq!(res.unwrap(), vec![want_v]);
+        }
+        assert!(want.is_empty());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn bad_magic_answers_then_closes() {
+        let srv = boot();
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        s.write_all(b"GARBAGE!").unwrap();
+        // The reactor answers one BadRequest frame, then closes.
+        let mut reader = std::io::BufReader::new(s.try_clone().unwrap());
+        let mut rbuf = Vec::new();
+        assert!(wire::read_frame(&mut reader, &mut rbuf).unwrap());
+        match wire::parse_frame(&rbuf).unwrap() {
+            Frame::Error { req_id, code, .. } => {
+                assert_eq!(req_id, 0);
+                assert_eq!(code, ErrCode::BadRequest);
+            }
+            f => panic!("expected error frame, got {f:?}"),
+        }
+        assert!(!wire::read_frame(&mut reader, &mut rbuf).unwrap(), "connection not closed");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn corrupt_checksum_is_reported_and_conn_survives() {
+        let srv = boot();
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        let mut buf = Vec::new();
+        wire::encode_request_f32(&mut buf, 1, "sum", &[0.0; 4], 0);
+        let mid = buf.len() - 10;
+        buf[mid] ^= 0xff; // body corruption; framing intact
+        s.write_all(&buf).unwrap();
+        let mut reader = std::io::BufReader::new(s.try_clone().unwrap());
+        let mut rbuf = Vec::new();
+        assert!(wire::read_frame(&mut reader, &mut rbuf).unwrap());
+        match wire::parse_frame(&rbuf).unwrap() {
+            Frame::Error { code, msg, .. } => {
+                assert_eq!(code, ErrCode::BadRequest);
+                assert!(msg.contains("checksum"), "{msg}");
+            }
+            f => panic!("expected error frame, got {f:?}"),
+        }
+        // The connection still serves intact frames.
+        wire::encode_request_f32(&mut buf, 2, "sum", &[1.0, 1.0, 1.0, 1.0], 0);
+        s.write_all(&buf).unwrap();
+        assert!(wire::read_frame(&mut reader, &mut rbuf).unwrap());
+        match wire::parse_frame(&rbuf).unwrap() {
+            Frame::Response { req_id, payload } => {
+                assert_eq!(req_id, 2);
+                let mut out = Vec::new();
+                wire::payload_f32s_into(payload, &mut out).unwrap();
+                assert_eq!(out, vec![4.0]);
+            }
+            f => panic!("expected response, got {f:?}"),
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn busy_surfaces_once_admission_fills() {
+        struct SlowEngine;
+        impl Backend for SlowEngine {
+            fn name(&self) -> &str {
+                "slow"
+            }
+            fn input_len(&self) -> usize {
+                1
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn memory_bytes(&self) -> usize {
+                0
+            }
+            fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+                std::thread::sleep(Duration::from_millis(50));
+                out[..batch].copy_from_slice(&flat[..batch]);
+            }
+        }
+        let srv = ReactorServer::bind_with(
+            "127.0.0.1:0",
+            vec![("slow".to_string(), Arc::new(SlowEngine))],
+            ReactorCfg {
+                batch: BatcherCfg {
+                    max_batch: 1,
+                    max_delay: Duration::from_millis(0),
+                    workers: 1,
+                    max_queue: 2,
+                    busy_retry_after: Duration::from_millis(9),
+                },
+                ..ReactorCfg::default()
+            },
+        )
+        .unwrap();
+        let mut c = NetClient::connect(srv.local_addr()).unwrap();
+        let mut ids = Vec::new();
+        for _ in 0..10 {
+            ids.push(c.send_f32("slow", &[1.0]).unwrap());
+        }
+        let (mut ok, mut busy) = (0, 0);
+        for _ in &ids {
+            let (_, res) = c.recv_response().unwrap();
+            match res {
+                Ok(out) => {
+                    assert_eq!(out, vec![1.0]);
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert_eq!(e.code, ErrCode::Busy);
+                    assert_eq!(e.retry_after_ms, 9);
+                    busy += 1;
+                }
+            }
+        }
+        assert!(ok >= 1, "nothing admitted");
+        assert!(busy >= 1, "admission bound never triggered");
+        assert_eq!(ok + busy, 10);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn slow_loris_partial_frame_is_cut() {
+        let srv = ReactorServer::bind_with(
+            "127.0.0.1:0",
+            vec![("sum".to_string(), Arc::new(SumEngine))],
+            ReactorCfg {
+                partial_frame_timeout: Duration::from_millis(150),
+                ..ReactorCfg::default()
+            },
+        )
+        .unwrap();
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        // Half a header, then silence.
+        s.write_all(b"QWF2").unwrap();
+        let mut one = [0u8; 1];
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // The reactor must cut us off (EOF or reset) well before the
+        // read timeout above — a timeout means it never did.
+        match s.read(&mut one) {
+            Ok(0) => {}
+            Ok(n) => panic!("unexpected {n} bytes from the server"),
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => {}
+            Err(e) => panic!("slow-loris connection was not closed: {e}"),
+        }
+        srv.shutdown();
+    }
+
+    #[test]
+    fn drain_answers_inflight_before_closing() {
+        struct SlowEngine;
+        impl Backend for SlowEngine {
+            fn name(&self) -> &str {
+                "slow"
+            }
+            fn input_len(&self) -> usize {
+                1
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn memory_bytes(&self) -> usize {
+                0
+            }
+            fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+                std::thread::sleep(Duration::from_millis(30));
+                out[..batch].copy_from_slice(&flat[..batch]);
+            }
+        }
+        let srv = ReactorServer::bind(
+            "127.0.0.1:0",
+            vec![("slow".to_string(), Arc::new(SlowEngine))],
+        )
+        .unwrap();
+        let mut c = NetClient::connect(srv.local_addr()).unwrap();
+        let mut ids = std::collections::HashSet::new();
+        for i in 0..6 {
+            ids.insert(c.send_f32("slow", &[i as f32]).unwrap());
+        }
+        // Shut down with requests in flight: every accepted request
+        // still resolves (response or typed error), then EOF.
+        let shut = std::thread::spawn(move || srv.shutdown());
+        for _ in 0..6 {
+            let (rid, res) = c.recv_response().unwrap();
+            assert!(ids.remove(&rid), "unknown/duplicate id {rid}");
+            match res {
+                Ok(_) => {}
+                Err(e) => assert!(
+                    matches!(e.code, ErrCode::Shutdown | ErrCode::DeadlineExceeded),
+                    "unexpected error {e:?}"
+                ),
+            }
+        }
+        assert!(ids.is_empty());
+        shut.join().unwrap();
+    }
+
+    #[test]
+    fn submit_errors_map_to_wire_codes() {
+        // Spot-check the InferError → ErrCode mapping the reactor
+        // shares with NetServer.
+        assert_eq!(
+            code_for(&InferError::Busy { queued: 1, max_queue: 1, retry_after_ms: 2 }),
+            ErrCode::Busy
+        );
+        assert_eq!(code_for(&InferError::DeadlineExceeded), ErrCode::DeadlineExceeded);
+        assert_eq!(code_for(&InferError::Shutdown), ErrCode::Shutdown);
+        assert_eq!(
+            code_for(&InferError::InputLen { got: 1, want: 2 }),
+            ErrCode::BadRequest
+        );
+        assert_eq!(
+            retry_hint(&InferError::Busy { queued: 1, max_queue: 1, retry_after_ms: 7 }),
+            7
+        );
+    }
+}

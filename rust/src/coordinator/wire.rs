@@ -565,6 +565,99 @@ pub fn request_frame_bytes(model: &str, features: usize, dtype: Dtype) -> usize 
     HEADER_LEN + 1 + 8 + 1 + model.len() + 1 + 4 + 4 + features * dtype.bytes_per_feature() + 8
 }
 
+// ---- incremental assembly (nonblocking readers) ----
+
+/// Incremental frame assembly for nonblocking sockets: feed whatever
+/// bytes the kernel hands you with [`FrameAssembler::push`], then drain
+/// complete frames with [`FrameAssembler::next_frame`]. The blocking
+/// twin of [`read_frame`] — same validation, same error taxonomy — but
+/// structured as a state machine so one reactor thread can interleave
+/// partial reads from thousands of connections.
+///
+/// Framing damage (bad magic, implausible length) is detected at the
+/// earliest byte that proves it, before the rest of the frame arrives:
+/// a hostile length never drives allocation and a desynchronized peer
+/// is caught on its first bad prefix byte.
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    /// Start of the unconsumed region in `buf`.
+    pos: usize,
+}
+
+impl Default for FrameAssembler {
+    fn default() -> Self {
+        FrameAssembler::new()
+    }
+}
+
+impl FrameAssembler {
+    pub fn new() -> FrameAssembler {
+        FrameAssembler { buf: Vec::new(), pos: 0 }
+    }
+
+    /// Append freshly-read bytes. Consumed prefix is compacted away
+    /// lazily so steady-state pushes are a plain `extend`.
+    pub fn push(&mut self, bytes: &[u8]) {
+        // Compact when the dead prefix dominates the live tail (or the
+        // buffer is fully drained) to keep memory bounded per
+        // connection without memmoving on every frame.
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos > 64 * 1024 && self.pos > self.buf.len() - self.pos {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet returned as a frame — nonzero across
+    /// calls is how a reactor ages partially-received frames
+    /// (slow-loris detection).
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when a frame has started arriving but is not complete.
+    pub fn has_partial(&self) -> bool {
+        self.pending_bytes() > 0
+    }
+
+    /// Pop the next complete frame, if one is fully buffered. Returns
+    /// `Ok(None)` when more bytes are needed. Validation mirrors
+    /// [`read_frame`]: a non-magic prefix or implausible length is a
+    /// [`ReadError::Framing`] — raised as soon as the offending bytes
+    /// arrive — after which the stream cannot be resynchronized and the
+    /// connection must be closed.
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>, ReadError> {
+        let avail = &self.buf[self.pos..];
+        // Reject a bad magic on whatever prefix has arrived: one wrong
+        // byte is enough, no need to wait for a full header.
+        let prefix = avail.len().min(4);
+        if avail[..prefix] != WIRE_MAGIC[..prefix] {
+            return Err(framing(format!(
+                "bad frame magic {:?} (expected {:?})",
+                &avail[..prefix],
+                WIRE_MAGIC
+            )));
+        }
+        if avail.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes(avail[4..8].try_into().unwrap()) as usize;
+        if !(MIN_BODY_LEN..=MAX_FRAME_LEN).contains(&len) {
+            return Err(framing(format!("implausible frame length {len}")));
+        }
+        let total = HEADER_LEN + len;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let start = self.pos;
+        self.pos += total;
+        Ok(Some(&self.buf[start..start + total]))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -764,6 +857,102 @@ mod tests {
         assert!(Dtype::from_tag(2).is_err());
         assert!(ErrCode::from_tag(0).is_err());
         assert!(ErrCode::from_tag(7).is_err());
+    }
+
+    #[test]
+    fn assembler_single_byte_feed() {
+        // The pathological slow sender: one byte per push. Every frame
+        // must come out whole and in order.
+        let mut stream = Vec::new();
+        let mut f = Vec::new();
+        for id in 0..5u64 {
+            encode_request_qidx(&mut f, id, "m", &[id as u8, 1, 2], 0);
+            stream.extend_from_slice(&f);
+        }
+        let mut asm = FrameAssembler::new();
+        let mut ids = Vec::new();
+        for &b in &stream {
+            asm.push(&[b]);
+            while let Some(frame) = asm.next_frame().unwrap() {
+                match parse_frame(frame).unwrap() {
+                    Frame::Request { req_id, .. } => ids.push(req_id),
+                    f => panic!("wrong frame {f:?}"),
+                }
+            }
+        }
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(!asm.has_partial());
+    }
+
+    #[test]
+    fn assembler_detects_bad_magic_on_first_byte() {
+        let mut asm = FrameAssembler::new();
+        asm.push(b"X");
+        assert!(matches!(asm.next_frame(), Err(ReadError::Framing(_))));
+
+        // A correct prefix is not an error — just incomplete.
+        let mut asm = FrameAssembler::new();
+        asm.push(b"QW");
+        assert!(asm.next_frame().unwrap().is_none());
+        assert!(asm.has_partial());
+        // ...until a byte contradicts the magic.
+        asm.push(b"X");
+        assert!(matches!(asm.next_frame(), Err(ReadError::Framing(_))));
+    }
+
+    #[test]
+    fn assembler_rejects_hostile_length_at_header() {
+        let mut asm = FrameAssembler::new();
+        asm.push(WIRE_MAGIC);
+        asm.push(&u32::MAX.to_le_bytes());
+        let e = asm.next_frame().unwrap_err();
+        assert!(format!("{e}").contains("implausible"), "{e}");
+
+        // Too-small lengths are equally implausible.
+        let mut asm = FrameAssembler::new();
+        asm.push(WIRE_MAGIC);
+        asm.push(&3u32.to_le_bytes());
+        assert!(asm.next_frame().is_err());
+    }
+
+    #[test]
+    fn assembler_property_random_splits() {
+        check("assembler random splits", 64, |g| {
+            // A pipelined stream of random frames, delivered in random
+            // chunk sizes, reassembles to exactly the encoded sequence.
+            let n = g.usize_in(1, 8);
+            let mut stream = Vec::new();
+            let mut want = Vec::new();
+            let mut f = Vec::new();
+            for _ in 0..n {
+                let req_id = g.rng().next_u64();
+                if g.bool() {
+                    let xs = g.vec_f32(0, 40, -1e3, 1e3);
+                    encode_request_f32(&mut f, req_id, "model-a", &xs, 0);
+                } else {
+                    encode_response_f32(&mut f, req_id, &[1.0, 2.0, 3.0]);
+                }
+                want.push(f.clone());
+                stream.extend_from_slice(&f);
+            }
+            let mut asm = FrameAssembler::new();
+            let mut got: Vec<Vec<u8>> = Vec::new();
+            let mut off = 0;
+            while off < stream.len() {
+                let take = g.usize_in(1, 64).min(stream.len() - off);
+                asm.push(&stream[off..off + take]);
+                off += take;
+                while let Some(frame) = asm.next_frame().unwrap() {
+                    got.push(frame.to_vec());
+                }
+            }
+            assert_eq!(got, want);
+            assert_eq!(asm.pending_bytes(), 0);
+            // Each reassembled frame still parses and checksums.
+            for frame in &got {
+                parse_frame(frame).unwrap();
+            }
+        });
     }
 
     #[test]

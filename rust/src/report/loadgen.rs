@@ -1,8 +1,10 @@
-//! Load generation against a live [`crate::coordinator::NetServer`]
-//! socket — the serving-side perf trajectory (`BENCH_serving.json`,
-//! schema `qnn.bench_serving.v2`).
+//! Load generation against a live serving socket
+//! ([`crate::coordinator::NetServer`] or
+//! [`crate::coordinator::ReactorServer`] — same wire protocol) — the
+//! serving-side perf trajectory (`BENCH_serving.json`, schema
+//! `qnn.bench_serving.v3`).
 //!
-//! Two standard load shapes:
+//! Three standard load shapes:
 //!
 //! * **Closed loop** — `clients` connections each firing back-to-back
 //!   requests. Ramping clients up finds the saturation throughput.
@@ -12,6 +14,14 @@
 //!   server cannot quietly slow the offered load and flatter its own
 //!   tail. (Each connection still awaits its response before its next
 //!   send, so offered rates near saturation need enough clients.)
+//! * **Multiplexed open loop** ([`run_mux_load`]) — thousands of
+//!   concurrent connections held by a handful of mux threads, each
+//!   running its own nonblocking [`Poller`] + [`FrameAssembler`] loop
+//!   (the client-side twin of the reactor). This is the only way to
+//!   offer 1k–4k-connection load without the load *generator* needing
+//!   a thread per connection; responses are matched to their requests
+//!   by id, so it drives the out-of-order reactor and the in-order
+//!   thread-per-connection front-end identically.
 //!
 //! Both shapes drive either wire encoding — `f32le` floats or `qidx` u8
 //! codebook indices — so the report captures exactly what the no-float
@@ -22,12 +32,17 @@
 
 use crate::coordinator::fleet::{Fleet, FleetError, FleetSnapshot};
 use crate::coordinator::net::{ClientError, NetClient};
-use crate::coordinator::wire::{self, Dtype};
+use crate::coordinator::wire::{self, Dtype, Frame, FrameAssembler};
 use crate::coordinator::ErrCode;
 use crate::fixedpoint::UniformQuant;
 use crate::util::json::Json;
+use crate::util::poll::{Event, Interest, Poller};
 use crate::util::stats::percentile_f64;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::AsRawFd;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -256,6 +271,395 @@ pub fn run_load(
     })
 }
 
+/// One multiplexed open-loop run: `connections` sockets held open by
+/// `threads` mux threads, offering `rate_rps` total.
+#[derive(Clone, Debug)]
+pub struct MuxLoadCfg {
+    /// Socket address of the serving front-end.
+    pub addr: String,
+    pub model: String,
+    /// Wire encoding for every request in this run.
+    pub encoding: Dtype,
+    /// Concurrent connections held open for the whole run.
+    pub connections: usize,
+    /// Mux threads the connections are spread across (each runs one
+    /// poller loop — this is the loadgen's whole thread budget).
+    pub threads: usize,
+    /// Total offered arrival rate (requests/s) across all connections.
+    pub rate_rps: f64,
+    /// Requests to offer in total.
+    pub total_requests: usize,
+    /// After the last scheduled send, how long to keep collecting
+    /// straggler responses before declaring them lost.
+    pub drain_timeout: Duration,
+}
+
+/// One mux thread's view of a connection.
+struct MuxConn {
+    stream: TcpStream,
+    asm: FrameAssembler,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// req id → scheduled send time (latency measures from schedule).
+    pending: HashMap<u64, Instant>,
+    interest: Interest,
+    dead: bool,
+}
+
+impl MuxConn {
+    fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Nonblocking flush; a transport error kills the connection (its
+    /// pending requests are counted lost at the end of the run).
+    fn flush(&mut self) {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+    }
+}
+
+/// Drive a multiplexed open-loop run: the connection-count tiers of the
+/// reactor bench. Latency is measured from each request's scheduled
+/// send time (coordinated-omission resistant), and responses are
+/// matched to requests by id, so out-of-order completion (the reactor's
+/// cross-connection batching) is handled naturally. Requests still
+/// unanswered `drain_timeout` after the last scheduled send — and
+/// requests stranded on connections the server severed — count as
+/// `errors`, never silently dropped.
+pub fn run_mux_load(
+    cfg: &MuxLoadCfg,
+    rows: &[Vec<f32>],
+    quant: Option<&UniformQuant>,
+) -> Result<LoadReport> {
+    anyhow::ensure!(!rows.is_empty(), "loadgen needs at least one input row");
+    anyhow::ensure!(cfg.connections >= 1, "mux loadgen needs at least one connection");
+    anyhow::ensure!(cfg.threads >= 1, "mux loadgen needs at least one thread");
+    anyhow::ensure!(
+        cfg.rate_rps.is_finite() && cfg.rate_rps > 0.0,
+        "open-loop arrival rate must be positive (got {})",
+        cfg.rate_rps
+    );
+    let threads = cfg.threads.min(cfg.connections);
+    let qrows: Arc<Vec<Vec<u8>>> = Arc::new(match cfg.encoding {
+        Dtype::F32Le => Vec::new(),
+        Dtype::QIdx => {
+            let q = quant.context("qidx load generation needs the model's input quantizer")?;
+            anyhow::ensure!(
+                q.levels <= 256,
+                "input grid with {} levels does not fit the u8 qidx wire encoding",
+                q.levels
+            );
+            rows.iter()
+                .map(|r| q.quantize_to_indices(r).into_iter().map(|i| i as u8).collect())
+                .collect()
+        }
+    });
+    let rows: Arc<Vec<Vec<f32>>> = Arc::new(rows.to_vec());
+
+    // Probe request: verifies the route and captures the output width.
+    let out_len = {
+        let mut probe = NetClient::connect(&cfg.addr[..])
+            .with_context(|| format!("connecting to {}", cfg.addr))?;
+        let out = match cfg.encoding {
+            Dtype::F32Le => probe.infer_f32(&cfg.model, &rows[0]),
+            Dtype::QIdx => probe.infer_qidx(&cfg.model, &qrows[0]),
+        }
+        .map_err(|e| anyhow::anyhow!("probe request failed: {e}"))?;
+        out.len()
+    };
+    let features = rows[0].len();
+    let request_frame_bytes = wire::request_frame_bytes(&cfg.model, features, cfg.encoding);
+    let response_frame_bytes = {
+        let mut buf = Vec::new();
+        wire::encode_response_f32(&mut buf, 0, &vec![0.0f32; out_len]);
+        buf.len()
+    };
+
+    // All threads connect first, then release together so the offered
+    // schedule starts clean rather than under a connect storm.
+    let barrier = Arc::new(std::sync::Barrier::new(threads));
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let cfg = cfg.clone();
+        let rows = Arc::clone(&rows);
+        let qrows = Arc::clone(&qrows);
+        let barrier = Arc::clone(&barrier);
+        joins.push(std::thread::spawn(move || -> Result<ClientStats> {
+            mux_thread(t, threads, &cfg, &rows, &qrows, &barrier)
+        }));
+    }
+
+    let mut lats = Vec::new();
+    let (mut ok, mut busy, mut errors) = (0usize, 0usize, 0usize);
+    let mut first = None::<Instant>;
+    let mut last = None::<Instant>;
+    for j in joins {
+        let s = j.join().expect("mux loadgen thread panicked")?;
+        lats.extend_from_slice(&s.lats_ms);
+        ok += s.ok;
+        busy += s.busy;
+        errors += s.errors;
+        first = Some(first.map_or(s.started, |f: Instant| f.min(s.started)));
+        last = Some(last.map_or(s.finished, |l: Instant| l.max(s.finished)));
+    }
+    let elapsed_s = match (first, last) {
+        (Some(f), Some(l)) => l.saturating_duration_since(f).as_secs_f64().max(1e-9),
+        _ => 1e-9,
+    };
+
+    Ok(LoadReport {
+        mode: "open-mux".into(),
+        encoding: cfg.encoding.name().into(),
+        clients: cfg.connections,
+        offered_rps: Some(cfg.rate_rps),
+        sent: cfg.total_requests,
+        ok,
+        busy,
+        errors,
+        elapsed_s,
+        throughput_rps: ok as f64 / elapsed_s,
+        p50_ms: percentile_f64(&lats, 50.0),
+        p95_ms: percentile_f64(&lats, 95.0),
+        p99_ms: percentile_f64(&lats, 99.0),
+        request_frame_bytes,
+        response_frame_bytes,
+    })
+}
+
+/// One mux thread: owns every connection with index ≡ `t` (mod
+/// `threads`) and offers every request with global index ≡ `t` (mod
+/// `threads`), so the union of threads produces one uniform schedule.
+fn mux_thread(
+    t: usize,
+    threads: usize,
+    cfg: &MuxLoadCfg,
+    rows: &[Vec<f32>],
+    qrows: &[Vec<u8>],
+    barrier: &std::sync::Barrier,
+) -> Result<ClientStats> {
+    let mut conns: Vec<MuxConn> = Vec::new();
+    let mut poller = Poller::new().context("creating mux poller")?;
+    for (k, _c) in (t..cfg.connections).step_by(threads).enumerate() {
+        let stream = TcpStream::connect(&cfg.addr[..])
+            .with_context(|| format!("connecting to {}", cfg.addr))?;
+        let _ = stream.set_nodelay(true);
+        stream.set_nonblocking(true).context("set_nonblocking")?;
+        poller
+            .register(stream.as_raw_fd(), k as u64, Interest::READ)
+            .context("registering mux connection")?;
+        conns.push(MuxConn {
+            stream,
+            asm: FrameAssembler::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: HashMap::new(),
+            interest: Interest::READ,
+            dead: false,
+        });
+        // Pace the connect storm: the server's accept backlog is finite
+        // and a dropped SYN costs seconds of kernel retry.
+        if k % 32 == 31 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut stats = ClientStats {
+        lats_ms: Vec::new(),
+        ok: 0,
+        busy: 0,
+        errors: 0,
+        started: t0,
+        finished: t0,
+    };
+    // This thread's slice of the global schedule.
+    let idxs: Vec<usize> = (t..cfg.total_requests).step_by(threads).collect();
+    let sched_of = |j: usize| t0 + Duration::from_secs_f64(j as f64 / cfg.rate_rps);
+    let mut next = 0usize;
+    let mut sent = 0usize;
+    let mut outstanding = 0usize;
+    let mut ebuf = Vec::new();
+    let mut events: Vec<Event> = Vec::new();
+    let mut scratch = [0u8; 16 * 1024];
+    let mut last_sched = t0;
+    loop {
+        // Offer everything the schedule says is due. The loop never
+        // waits for responses to send — that is what "open" means.
+        let now = Instant::now();
+        while next < idxs.len() && sched_of(idxs[next]) <= now {
+            let j = idxs[next];
+            let sched = sched_of(j);
+            last_sched = sched;
+            let ci = sent % conns.len();
+            let conn = &mut conns[ci];
+            sent += 1;
+            next += 1;
+            if conn.dead {
+                stats.errors += 1;
+                continue;
+            }
+            let row = j % rows.len();
+            match cfg.encoding {
+                Dtype::F32Le => {
+                    wire::encode_request_f32(&mut ebuf, j as u64, &cfg.model, &rows[row], 0)
+                }
+                Dtype::QIdx => {
+                    wire::encode_request_qidx(&mut ebuf, j as u64, &cfg.model, &qrows[row], 0)
+                }
+            }
+            conn.wbuf.extend_from_slice(&ebuf);
+            conn.pending.insert(j as u64, sched);
+            outstanding += 1;
+            conn.flush();
+            if conn.dead {
+                let _ = poller.deregister(conn.stream.as_raw_fd());
+            } else {
+                arm_mux_interest(&mut poller, conn, ci);
+            }
+        }
+        if next >= idxs.len() {
+            if outstanding == 0 {
+                break;
+            }
+            if Instant::now() >= last_sched + cfg.drain_timeout {
+                break; // stragglers are counted lost below
+            }
+        }
+        let timeout = if next < idxs.len() {
+            sched_of(idxs[next])
+                .saturating_duration_since(Instant::now())
+                .min(Duration::from_millis(50))
+        } else {
+            Duration::from_millis(50)
+        };
+        let _ = poller.wait(&mut events, Some(timeout));
+        for i in 0..events.len() {
+            let ev = events[i];
+            let ci = ev.token as usize;
+            let conn = &mut conns[ci];
+            if conn.dead {
+                continue;
+            }
+            if ev.writable {
+                conn.flush();
+            }
+            if ev.readable {
+                read_mux_conn(conn, &mut scratch, &mut stats, &mut outstanding);
+            }
+            if conn.dead {
+                let _ = poller.deregister(conn.stream.as_raw_fd());
+            } else {
+                arm_mux_interest(&mut poller, conn, ci);
+            }
+        }
+    }
+    // Whatever never came back — severed connections or responses the
+    // server still owed at the drain deadline — is an error, so the
+    // report accounts for every offered request.
+    for conn in &conns {
+        let lost = conn.pending.len();
+        stats.errors += lost;
+        outstanding -= lost;
+    }
+    debug_assert_eq!(outstanding, 0);
+    stats.finished = Instant::now();
+    Ok(stats)
+}
+
+fn arm_mux_interest(poller: &mut Poller, conn: &mut MuxConn, token: usize) {
+    let desired = Interest { readable: true, writable: conn.pending_write() > 0 };
+    if desired != conn.interest
+        && poller
+            .modify(conn.stream.as_raw_fd(), token as u64, desired)
+            .is_ok()
+    {
+        conn.interest = desired;
+    }
+}
+
+/// Drain one readable mux connection: read until `WouldBlock`, feed the
+/// assembler, and tally every complete frame against its pending entry.
+fn read_mux_conn(
+    conn: &mut MuxConn,
+    scratch: &mut [u8],
+    stats: &mut ClientStats,
+    outstanding: &mut usize,
+) {
+    loop {
+        match conn.stream.read(scratch) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => conn.asm.push(&scratch[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+        loop {
+            let frame = match conn.asm.next_frame() {
+                Ok(Some(f)) => f,
+                Ok(None) => break,
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            };
+            match wire::parse_frame(frame) {
+                Ok(Frame::Response { req_id, .. }) => {
+                    if let Some(sched) = conn.pending.remove(&req_id) {
+                        stats.ok += 1;
+                        stats
+                            .lats_ms
+                            .push(sched.elapsed().as_secs_f64() * 1e3);
+                        *outstanding -= 1;
+                    }
+                }
+                Ok(Frame::Error { req_id, code, .. }) => {
+                    if let Some(_sched) = conn.pending.remove(&req_id) {
+                        *outstanding -= 1;
+                        if code == ErrCode::Busy {
+                            stats.busy += 1;
+                        } else {
+                            stats.errors += 1;
+                        }
+                    } else {
+                        // A connection-scoped error (req id 0): nothing
+                        // to match, but it is still a server complaint.
+                        stats.errors += 1;
+                    }
+                }
+                Ok(_) => stats.errors += 1,
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+}
+
 /// One load run against a [`Fleet`] dispatcher (vs. a single socket in
 /// [`run_load`]): every request goes through placement, health-aware
 /// retry/failover, and deadline policy.
@@ -467,16 +871,61 @@ pub fn fleet_section_json(
     ])
 }
 
-/// Assemble the `qnn.bench_serving.v2` document: the runs, the wire
+/// The `reactor` section of a `qnn.bench_serving.v3` document: which
+/// readiness backend ran, the batcher knobs, the high-water connection
+/// count, the achieved mean engine batch size (the cross-connection
+/// coalescing the v3 gate checks is > 1), and per-connection-tier
+/// head-to-head reports — the same multiplexed open-loop offered to the
+/// event-driven reactor and the thread-per-connection front-end.
+pub fn reactor_section_json(
+    poller: &str,
+    peak_connections: usize,
+    mean_batch: f64,
+    max_batch: usize,
+    max_delay_us: u64,
+    tiers: &[(usize, LoadReport, LoadReport)],
+) -> Json {
+    Json::obj(vec![
+        ("poller", Json::Str(poller.into())),
+        ("peak_connections", Json::Num(peak_connections as f64)),
+        ("mean_batch", Json::Num(mean_batch)),
+        (
+            "batcher",
+            Json::obj(vec![
+                ("max_batch", Json::Num(max_batch as f64)),
+                ("max_delay_us", Json::Num(max_delay_us as f64)),
+            ]),
+        ),
+        (
+            "tiers",
+            Json::Arr(
+                tiers
+                    .iter()
+                    .map(|(connections, reactor, net)| {
+                        Json::obj(vec![
+                            ("connections", Json::Num(*connections as f64)),
+                            ("reactor", reactor.to_json()),
+                            ("net", net.to_json()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Assemble the `qnn.bench_serving.v3` document: the runs, the wire
 /// bytes-per-request comparison (the qidx headline), the best
 /// closed-loop throughput as the saturation point, and (when the bench
-/// ran one) the fleet chaos section ([`fleet_section_json`]).
+/// ran them) the fleet chaos section ([`fleet_section_json`]) and the
+/// reactor connection-scaling section ([`reactor_section_json`]).
 pub fn serving_bench_doc(
     model: &str,
     input_len: usize,
     output_len: usize,
     reports: &[LoadReport],
     fleet: Option<Json>,
+    reactor: Option<Json>,
     provenance: &str,
 ) -> Json {
     let f32_bytes = reports
@@ -494,9 +943,10 @@ pub fn serving_bench_doc(
         .filter(|r| r.mode == "closed")
         .max_by(|a, b| a.throughput_rps.total_cmp(&b.throughput_rps));
     Json::obj(vec![
-        ("schema", Json::Str("qnn.bench_serving.v2".into())),
+        ("schema", Json::Str("qnn.bench_serving.v3".into())),
         ("provenance", Json::Str(provenance.into())),
         ("fleet", fleet.unwrap_or(Json::Null)),
+        ("reactor", reactor.unwrap_or(Json::Null)),
         ("model", Json::Str(model.into())),
         ("input_len", Json::Num(input_len as f64)),
         ("output_len", Json::Num(output_len as f64)),
@@ -554,10 +1004,11 @@ mod tests {
             report("closed", "qidx", 11000.0, 105),
             report("open", "qidx", 6000.0, 105),
         ];
-        let doc = serving_bench_doc("digits-lut", 64, 10, &reports, None, "unit-test");
+        let doc = serving_bench_doc("digits-lut", 64, 10, &reports, None, None, "unit-test");
         let back = Json::parse(&doc.to_pretty()).unwrap();
-        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v2"));
+        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v3"));
         assert_eq!(back.get("fleet"), &Json::Null);
+        assert_eq!(back.get("reactor"), &Json::Null);
         assert_eq!(back.get("model").as_str(), Some("digits-lut"));
         let wire = back.get("wire_bytes_per_request");
         assert_eq!(wire.get("f32le").as_usize(), Some(297));
@@ -609,7 +1060,7 @@ mod tests {
             replicas: Vec::new(),
         };
         let section = fleet_section_json(3, 3, true, true, &load, &snap);
-        let doc = serving_bench_doc("digits-lut", 64, 10, &[], Some(section), "unit-test");
+        let doc = serving_bench_doc("digits-lut", 64, 10, &[], Some(section), None, "unit-test");
         let back = Json::parse(&doc.to_pretty()).unwrap();
         let fleet = back.get("fleet");
         assert_eq!(fleet.get("replicas").as_usize(), Some(3));
@@ -626,5 +1077,35 @@ mod tests {
             .sum::<usize>();
         assert_eq!(sent, parts);
         assert_eq!(fleet.get("outcomes").get("ok").as_usize(), Some(795));
+    }
+
+    #[test]
+    fn reactor_section_carries_tiers_and_batch_signal() {
+        let mk = |rps: f64| {
+            let mut r = report("open", "qidx", rps, 105);
+            r.mode = "open-mux".into();
+            r
+        };
+        let tiers = vec![
+            (256usize, mk(9000.0), mk(8000.0)),
+            (1024, mk(8500.0), mk(4000.0)),
+        ];
+        let section = reactor_section_json("epoll", 1026, 11.7, 64, 2000, &tiers);
+        let doc = serving_bench_doc("digits-lut", 64, 10, &[], None, Some(section), "unit-test");
+        let back = Json::parse(&doc.to_pretty()).unwrap();
+        let reactor = back.get("reactor");
+        assert_eq!(reactor.get("poller").as_str(), Some("epoll"));
+        assert_eq!(reactor.get("peak_connections").as_usize(), Some(1026));
+        assert!(reactor.get("mean_batch").as_f64().unwrap() > 1.0);
+        assert_eq!(reactor.get("batcher").get("max_batch").as_usize(), Some(64));
+        let tiers = reactor.get("tiers").as_arr().unwrap();
+        assert_eq!(tiers.len(), 2);
+        let high = reactor.get("tiers").at(1);
+        assert_eq!(high.get("connections").as_usize(), Some(1024));
+        assert_eq!(high.get("reactor").get("mode").as_str(), Some("open-mux"));
+        // The v3 gate's comparison is representable straight off the doc.
+        let r_rps = high.get("reactor").get("throughput_rps").as_f64().unwrap();
+        let n_rps = high.get("net").get("throughput_rps").as_f64().unwrap();
+        assert!(r_rps >= n_rps);
     }
 }

@@ -10,6 +10,7 @@ pub mod cursor;
 pub mod fault;
 pub mod fnv;
 pub mod json;
+pub mod poll;
 pub mod prop;
 pub mod rng;
 pub mod stats;

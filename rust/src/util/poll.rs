@@ -1,0 +1,583 @@
+//! Std-only socket readiness: a small [`Poller`] over raw `epoll` on
+//! Linux with a portable `poll(2)` fallback — the substrate under the
+//! event-driven serving front-end (`coordinator/reactor.rs`).
+//!
+//! The build environment is fully offline (no `libc`, `mio`, or
+//! `polling` crates), so the syscall surface is declared here directly
+//! against the C library `std` already links — the same vendored-offline
+//! pattern the rest of `util/` follows. The API is deliberately tiny:
+//!
+//! * [`Poller::register`]/[`Poller::modify`]/[`Poller::deregister`] an
+//!   fd with a caller-chosen `u64` token and an [`Interest`] mask;
+//! * [`Poller::wait`] fills a reused `Vec<Event>` (level-triggered:
+//!   a readiness you do not consume is reported again next wait);
+//! * [`WakePipe`], a self-pipe that any thread may [`WakePipe::wake`]
+//!   to interrupt a blocked `wait` — how worker completions get the
+//!   reactor's attention.
+//!
+//! Backend selection: Linux uses `epoll` (O(ready) waits at thousands
+//! of registered connections) unless `QNN_POLLER=poll` forces the
+//! `poll(2)` backend (O(registered) per wait — fine at test scale, and
+//! it keeps the fallback continuously exercised). Other unix targets
+//! always take the `poll(2)` path.
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+// ---- raw C library surface (linked by std; no crates) ----
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+extern "C" {
+    // `nfds_t` is the platform's unsigned long; on the 64-bit Linux
+    // targets this library supports it matches `usize`.
+    fn poll(fds: *mut PollFd, nfds: usize, timeout_ms: i32) -> i32;
+    fn pipe(fds: *mut i32) -> i32;
+    fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+    fn close(fd: i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+}
+
+const F_GETFL: i32 = 3;
+const F_SETFL: i32 = 4;
+const O_NONBLOCK: i32 = 0o4000;
+
+#[cfg(target_os = "linux")]
+mod epoll_sys {
+    // The kernel ABI packs the event struct on x86_64 only.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32)
+            -> i32;
+    }
+}
+
+fn cvt(ret: i32) -> io::Result<i32> {
+    if ret < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(ret)
+    }
+}
+
+/// Put an fd into non-blocking mode (sockets use
+/// `TcpStream::set_nonblocking`; this is for pipe fds).
+fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    let flags = cvt(unsafe { fcntl(fd, F_GETFL, 0) })?;
+    cvt(unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) })?;
+    Ok(())
+}
+
+/// Readiness interest for a registered fd.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    pub const WRITE: Interest = Interest { readable: false, writable: true };
+    pub const BOTH: Interest = Interest { readable: true, writable: true };
+}
+
+/// One readiness event out of [`Poller::wait`]. On error/hangup both
+/// `readable` and `writable` are set so the owner's next I/O attempt
+/// surfaces the real `io::Error`; `hangup` additionally marks peer
+/// closure for callers that want to skip straight to teardown.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub hangup: bool,
+}
+
+struct PollReg {
+    fd: RawFd,
+    token: u64,
+    interest: Interest,
+}
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Epoll {
+        epfd: RawFd,
+        /// Reused kernel-side event buffer.
+        events: Vec<epoll_sys::EpollEvent>,
+    },
+    Poll {
+        regs: Vec<PollReg>,
+        /// Reused pollfd array rebuilt from `regs` each wait.
+        fds: Vec<PollFd>,
+    },
+}
+
+/// A readiness poller owned by one thread. Registrations map raw fds to
+/// caller tokens; the caller keeps the fds alive (and deregisters
+/// before closing them — required on the `poll(2)` backend, polite on
+/// epoll).
+pub struct Poller {
+    backend: Backend,
+}
+
+impl Poller {
+    /// Platform default: `epoll` on Linux (unless `QNN_POLLER=poll`),
+    /// `poll(2)` elsewhere.
+    pub fn new() -> io::Result<Poller> {
+        #[cfg(target_os = "linux")]
+        {
+            let forced = std::env::var("QNN_POLLER").map(|v| v == "poll").unwrap_or(false);
+            if !forced {
+                match cvt(unsafe { epoll_sys::epoll_create1(epoll_sys::EPOLL_CLOEXEC) }) {
+                    Ok(epfd) => {
+                        return Ok(Poller {
+                            backend: Backend::Epoll { epfd, events: vec![zero_event(); 256] },
+                        })
+                    }
+                    // ENOSYS/EMFILE etc.: fall through to poll(2).
+                    Err(_) => {}
+                }
+            }
+        }
+        Ok(Poller::new_poll())
+    }
+
+    /// The portable `poll(2)` backend, constructible explicitly so both
+    /// backends stay test-covered on Linux.
+    pub fn new_poll() -> Poller {
+        Poller { backend: Backend::Poll { regs: Vec::new(), fds: Vec::new() } }
+    }
+
+    /// Which backend is live ("epoll" or "poll") — logged by the
+    /// reactor so bench provenance records what actually ran.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { .. } => "epoll",
+            Backend::Poll { .. } => "poll",
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, .. } => {
+                let mut ev = epoll_sys::EpollEvent { events: epoll_mask(interest), data: token };
+                cvt(unsafe { epoll_sys::epoll_ctl(*epfd, epoll_sys::EPOLL_CTL_ADD, fd, &mut ev) })?;
+                Ok(())
+            }
+            Backend::Poll { regs, .. } => {
+                if regs.iter().any(|r| r.fd == fd) {
+                    return Err(io::Error::new(
+                        io::ErrorKind::AlreadyExists,
+                        format!("fd {fd} is already registered"),
+                    ));
+                }
+                regs.push(PollReg { fd, token, interest });
+                Ok(())
+            }
+        }
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, .. } => {
+                let mut ev = epoll_sys::EpollEvent { events: epoll_mask(interest), data: token };
+                cvt(unsafe { epoll_sys::epoll_ctl(*epfd, epoll_sys::EPOLL_CTL_MOD, fd, &mut ev) })?;
+                Ok(())
+            }
+            Backend::Poll { regs, .. } => {
+                let reg = regs.iter_mut().find(|r| r.fd == fd).ok_or_else(|| {
+                    io::Error::new(io::ErrorKind::NotFound, format!("fd {fd} is not registered"))
+                })?;
+                reg.token = token;
+                reg.interest = interest;
+                Ok(())
+            }
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, .. } => {
+                let mut ev = epoll_sys::EpollEvent { events: 0, data: 0 };
+                cvt(unsafe { epoll_sys::epoll_ctl(*epfd, epoll_sys::EPOLL_CTL_DEL, fd, &mut ev) })?;
+                Ok(())
+            }
+            Backend::Poll { regs, .. } => {
+                let i = regs.iter().position(|r| r.fd == fd).ok_or_else(|| {
+                    io::Error::new(io::ErrorKind::NotFound, format!("fd {fd} is not registered"))
+                })?;
+                regs.swap_remove(i);
+                Ok(())
+            }
+        }
+    }
+
+    /// Block until readiness (or `timeout`); fills `out` with this
+    /// round's events and returns the count. `None` waits forever.
+    /// `EINTR` retries internally; a zero-duration timeout polls.
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<usize> {
+        out.clear();
+        let timeout_ms = match timeout {
+            None => -1,
+            // Round up so a sub-millisecond timeout still sleeps
+            // instead of spinning.
+            Some(d) => {
+                let ms = d.as_millis();
+                if ms == 0 && !d.is_zero() {
+                    1
+                } else {
+                    ms.min(i32::MAX as u128) as i32
+                }
+            }
+        };
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, events } => {
+                let n = loop {
+                    let r = unsafe {
+                        epoll_sys::epoll_wait(
+                            *epfd,
+                            events.as_mut_ptr(),
+                            events.len() as i32,
+                            timeout_ms,
+                        )
+                    };
+                    match cvt(r) {
+                        Ok(n) => break n as usize,
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                            if timeout.is_some() {
+                                // Good enough for the reactor's timer
+                                // granularity: treat as a timeout tick.
+                                break 0;
+                            }
+                        }
+                        Err(e) => return Err(e),
+                    }
+                };
+                for ev in &events[..n] {
+                    let bits = ev.events;
+                    let err = bits & (epoll_sys::EPOLLERR | epoll_sys::EPOLLHUP) != 0;
+                    out.push(Event {
+                        token: ev.data,
+                        readable: bits & (epoll_sys::EPOLLIN | epoll_sys::EPOLLRDHUP) != 0 || err,
+                        writable: bits & epoll_sys::EPOLLOUT != 0 || err,
+                        hangup: bits & (epoll_sys::EPOLLHUP | epoll_sys::EPOLLRDHUP) != 0,
+                    });
+                }
+                // Saturated kernel buffer: give the next wait headroom.
+                if n == events.len() {
+                    events.resize(n * 2, zero_event());
+                }
+                Ok(out.len())
+            }
+            Backend::Poll { regs, fds } => {
+                fds.clear();
+                for r in regs.iter() {
+                    let mut events = 0i16;
+                    if r.interest.readable {
+                        events |= POLLIN;
+                    }
+                    if r.interest.writable {
+                        events |= POLLOUT;
+                    }
+                    fds.push(PollFd { fd: r.fd, events, revents: 0 });
+                }
+                let n = loop {
+                    let r = unsafe { poll(fds.as_mut_ptr(), fds.len(), timeout_ms) };
+                    match cvt(r) {
+                        Ok(n) => break n as usize,
+                        Err(e) if e.kind() == io::ErrorKind::Interrupted => {
+                            if timeout.is_some() {
+                                break 0;
+                            }
+                        }
+                        Err(e) => return Err(e),
+                    }
+                };
+                if n > 0 {
+                    for (reg, pfd) in regs.iter().zip(fds.iter()) {
+                        let bits = pfd.revents;
+                        if bits == 0 {
+                            continue;
+                        }
+                        let err = bits & (POLLERR | POLLHUP | POLLNVAL) != 0;
+                        out.push(Event {
+                            token: reg.token,
+                            readable: bits & POLLIN != 0 || err,
+                            writable: bits & POLLOUT != 0 || err,
+                            hangup: bits & (POLLHUP | POLLNVAL) != 0,
+                        });
+                    }
+                }
+                Ok(out.len())
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn zero_event() -> epoll_sys::EpollEvent {
+    epoll_sys::EpollEvent { events: 0, data: 0 }
+}
+
+#[cfg(target_os = "linux")]
+fn epoll_mask(interest: Interest) -> u32 {
+    let mut m = epoll_sys::EPOLLRDHUP;
+    if interest.readable {
+        m |= epoll_sys::EPOLLIN;
+    }
+    if interest.writable {
+        m |= epoll_sys::EPOLLOUT;
+    }
+    m
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Backend::Epoll { epfd, .. } = &self.backend {
+            unsafe { close(*epfd) };
+        }
+    }
+}
+
+/// A self-pipe wakeup: the read end registers with the [`Poller`]; any
+/// thread calls [`WakePipe::wake`] to make a blocked `wait` return.
+/// Both ends are non-blocking, so `wake` on a full pipe is a no-op (a
+/// wakeup is already pending — that is exactly the semantics wanted).
+pub struct WakePipe {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        let mut fds = [0i32; 2];
+        cvt(unsafe { pipe(fds.as_mut_ptr()) })?;
+        let (read_fd, write_fd) = (fds[0], fds[1]);
+        let arm = set_nonblocking(read_fd).and_then(|()| set_nonblocking(write_fd));
+        if let Err(e) = arm {
+            unsafe {
+                close(read_fd);
+                close(write_fd);
+            }
+            return Err(e);
+        }
+        Ok(WakePipe { read_fd, write_fd })
+    }
+
+    /// The fd to register for read interest.
+    pub fn read_fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Make the poller's next (or current) wait return. Cheap and
+    /// signal-safe; coalesces when a wakeup is already pending.
+    pub fn wake(&self) {
+        let byte = 1u8;
+        // EAGAIN = pipe already holds a pending wakeup; fine.
+        unsafe { write(self.write_fd, &byte, 1) };
+    }
+
+    /// Consume pending wakeups (call after the read end polls ready).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe { read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+            if n <= 0 {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.read_fd);
+            close(self.write_fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    fn pollers() -> Vec<Poller> {
+        // Exercise both backends on Linux; elsewhere the default IS the
+        // poll backend and the pair still runs.
+        vec![Poller::new().unwrap(), Poller::new_poll()]
+    }
+
+    fn loopback_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn readability_tracks_buffered_bytes() {
+        for mut p in pollers() {
+            let (mut a, mut b) = loopback_pair();
+            b.set_nonblocking(true).unwrap();
+            p.register(b.as_raw_fd(), 7, Interest::READ).unwrap();
+            let mut evs = Vec::new();
+
+            // Nothing buffered: a bounded wait times out empty.
+            let n = p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+            assert_eq!(n, 0, "{}: spurious readiness", p.backend_name());
+
+            a.write_all(b"ping").unwrap();
+            let n = p.wait(&mut evs, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(n, 1, "{}", p.backend_name());
+            assert_eq!(evs[0].token, 7);
+            assert!(evs[0].readable && !evs[0].hangup);
+
+            // Level-triggered: unread bytes report again...
+            let n = p.wait(&mut evs, Some(Duration::from_millis(50))).unwrap();
+            assert_eq!(n, 1, "{}: not level-triggered", p.backend_name());
+
+            // ...and consuming them clears the readiness.
+            let mut buf = [0u8; 16];
+            assert_eq!(b.read(&mut buf).unwrap(), 4);
+            let n = p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+            assert_eq!(n, 0, "{}: readiness survived the read", p.backend_name());
+
+            // Peer close: readable (EOF) and flagged as hangup by at
+            // least the read path.
+            drop(a);
+            let n = p.wait(&mut evs, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(n, 1, "{}", p.backend_name());
+            assert!(evs[0].readable);
+            p.deregister(b.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn write_interest_arms_and_disarms() {
+        for mut p in pollers() {
+            let (_a, b) = loopback_pair();
+            b.set_nonblocking(true).unwrap();
+            // An idle socket's send buffer is empty: write-ready at once.
+            p.register(b.as_raw_fd(), 3, Interest::BOTH).unwrap();
+            let mut evs = Vec::new();
+            let n = p.wait(&mut evs, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(n, 1, "{}", p.backend_name());
+            assert!(evs[0].writable && !evs[0].readable);
+
+            // Dropping write interest silences it.
+            p.modify(b.as_raw_fd(), 3, Interest::READ).unwrap();
+            let n = p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+            assert_eq!(n, 0, "{}: write interest survived modify", p.backend_name());
+            p.deregister(b.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn wake_pipe_interrupts_wait_and_coalesces() {
+        for mut p in pollers() {
+            let wake = std::sync::Arc::new(WakePipe::new().unwrap());
+            p.register(wake.read_fd(), 0, Interest::READ).unwrap();
+            let w = std::sync::Arc::clone(&wake);
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(20));
+                // Many wakes from another thread coalesce into >= 1 event.
+                for _ in 0..100 {
+                    w.wake();
+                }
+            });
+            let mut evs = Vec::new();
+            let n = p.wait(&mut evs, Some(Duration::from_secs(10))).unwrap();
+            assert_eq!(n, 1, "{}", p.backend_name());
+            assert_eq!(evs[0].token, 0);
+            wake.drain();
+            let n = p.wait(&mut evs, Some(Duration::from_millis(10))).unwrap();
+            assert_eq!(n, 0, "{}: drain left the pipe readable", p.backend_name());
+            t.join().unwrap();
+            p.deregister(wake.read_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn many_registrations_route_by_token() {
+        for mut p in pollers() {
+            let mut pairs = Vec::new();
+            for i in 0..32 {
+                let (a, b) = loopback_pair();
+                b.set_nonblocking(true).unwrap();
+                p.register(b.as_raw_fd(), 100 + i, Interest::READ).unwrap();
+                pairs.push((a, b));
+            }
+            // Write on a subset; exactly those tokens must surface.
+            for &i in &[1usize, 7, 30] {
+                pairs[i].0.write_all(b"x").unwrap();
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            let mut evs = Vec::new();
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            while seen.len() < 3 && std::time::Instant::now() < deadline {
+                p.wait(&mut evs, Some(Duration::from_millis(100))).unwrap();
+                for e in &evs {
+                    seen.insert(e.token);
+                    // Consume so level-triggering doesn't loop forever.
+                    let idx = (e.token - 100) as usize;
+                    let mut buf = [0u8; 4];
+                    let _ = pairs[idx].1.read(&mut buf);
+                }
+            }
+            assert_eq!(
+                seen.into_iter().collect::<Vec<_>>(),
+                vec![101, 107, 130],
+                "{}",
+                p.backend_name()
+            );
+            for (_, b) in &pairs {
+                p.deregister(b.as_raw_fd()).unwrap();
+            }
+        }
+    }
+}

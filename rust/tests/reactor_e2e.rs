@@ -1,0 +1,403 @@
+//! End-to-end acceptance for the event-driven front-end: a `.qnn`
+//! artifact directory booted behind [`ReactorServer`] on a loopback
+//! port and driven at connection counts no thread-per-connection server
+//! should be asked to hold — while staying bit-exact with
+//! `forward_naive`, the same oracle every other serving surface is held
+//! to. Plus the reactor twins of the wire contracts: `Busy` frames when
+//! admission fills, graceful drain that answers everything it accepted,
+//! and checksum rejection of corrupted frames without losing the
+//! connection.
+
+use qnn::coordinator::wire::{self, Frame};
+use qnn::coordinator::{
+    Backend, BatcherCfg, ClientError, ErrCode, NetClient, ReactorCfg, ReactorServer,
+};
+use qnn::data::digits;
+use qnn::fixedpoint::UniformQuant;
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::util::rng::Xoshiro256;
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+fn digits_lut() -> LutNetwork {
+    let spec = NetSpec::mlp(
+        "digits-lut",
+        digits::FEATURES,
+        &[24],
+        digits::CLASSES,
+        ActSpec::tanh_d(16),
+    );
+    let mut rng = Xoshiro256::new(21);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(32), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap()
+}
+
+fn thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|n| n.parse().ok())
+}
+
+/// The acceptance-criterion test: 1000 concurrent loopback connections
+/// into one reactor, one pipelined request per connection over a mix of
+/// both wire encodings, every response bit-exact vs `forward_naive` —
+/// and the process grows O(workers) threads, not O(connections).
+#[test]
+fn reactor_serves_1k_connections_bit_exact_with_lean_threads() {
+    let baseline = thread_count();
+
+    let lut = digits_lut();
+    let quant = lut.input_quant.clone();
+    let scale_inv = 1.0 / lut.plan.scale();
+
+    // Deterministic request pool and its oracle answers.
+    let mut rng = Xoshiro256::new(33);
+    let dcfg = digits::DigitsCfg::default();
+    let (pool, _) = digits::batch(24, &dcfg, &mut rng);
+    let rows: Vec<Vec<f32>> = (0..24)
+        .map(|i| pool.data()[i * digits::FEATURES..(i + 1) * digits::FEATURES].to_vec())
+        .collect();
+    let mut expected = Vec::with_capacity(rows.len());
+    let mut qidx_rows = Vec::with_capacity(rows.len());
+    for row in &rows {
+        let idx = quant.quantize_to_indices(row);
+        let naive = lut.forward_naive(&idx, 1);
+        let out: Vec<f32> = naive
+            .sums
+            .iter()
+            .map(|&s| (s as f64 * scale_inv) as f32)
+            .collect();
+        assert_eq!(out.len(), digits::CLASSES);
+        expected.push(out);
+        qidx_rows.push(idx.into_iter().map(|i| i as u8).collect::<Vec<u8>>());
+    }
+
+    // save → bind_dir: the artifact lifecycle behind the event loop.
+    let dir = std::env::temp_dir().join(format!("qnn_reactor_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    lut.save(dir.join("digits-lut.qnn")).unwrap();
+    let reactor = ReactorServer::bind_dir(
+        "127.0.0.1:0",
+        &dir,
+        ReactorCfg {
+            batch: BatcherCfg {
+                max_batch: 64,
+                max_delay: Duration::from_millis(1),
+                workers: 2,
+                max_queue: 2048,
+                ..BatcherCfg::default()
+            },
+            ..ReactorCfg::default()
+        },
+    )
+    .unwrap();
+    let addr = reactor.local_addr();
+
+    const CONNS: usize = 1000;
+    let mut clients = Vec::with_capacity(CONNS);
+    for i in 0..CONNS {
+        clients.push(NetClient::connect(addr).unwrap());
+        // Pace connects under the listener's accept backlog.
+        if i % 32 == 31 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    // One request per connection, all in flight before any read — the
+    // cross-connection coalescing case the batcher exists for.
+    let mut sent = Vec::with_capacity(CONNS);
+    for (i, client) in clients.iter_mut().enumerate() {
+        let r = i % rows.len();
+        let id = if i % 2 == 0 {
+            client.send_f32("digits-lut", &rows[r]).unwrap()
+        } else {
+            client.send_qidx("digits-lut", &qidx_rows[r]).unwrap()
+        };
+        sent.push((id, r));
+    }
+    for (i, client) in clients.iter_mut().enumerate() {
+        let (id, r) = sent[i];
+        let (rid, res) = client.recv_response().unwrap();
+        assert_eq!(rid, id, "conn {i} got a response for someone else's id");
+        let out = res.unwrap_or_else(|e| panic!("conn {i} row {r}: {e}"));
+        // Bit-exact: same indices, same integer sums, same descale —
+        // regardless of encoding, which batch coalesced it, or which
+        // worker served it.
+        assert_eq!(out, expected[r], "conn {i} row {r}");
+    }
+
+    // The thread ledger: 1000 connections may cost a loop thread and a
+    // batcher (collector + workers) — never a thread per socket.
+    if let (Some(before), Some(after)) = (baseline, thread_count()) {
+        let grew = after.saturating_sub(before);
+        assert!(
+            grew <= 12,
+            "reactor grew {grew} threads for {CONNS} connections (want O(workers))"
+        );
+    }
+    // Every response has been read, so every connection was accepted.
+    assert!(reactor.peak_connections() >= CONNS);
+    let model_metrics = reactor.model_metrics();
+    let (name, metrics) = &model_metrics[0];
+    let snap = metrics.snapshot();
+    println!(
+        "{name}: {CONNS} conns, mean batch {:.2} over {} requests",
+        snap.mean_batch, snap.requests
+    );
+    assert_eq!(snap.requests, CONNS as u64);
+
+    reactor.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Engine that sleeps per batch — deterministic queue pressure.
+struct SlowEngine;
+impl Backend for SlowEngine {
+    fn name(&self) -> &str {
+        "slow"
+    }
+    fn input_len(&self) -> usize {
+        2
+    }
+    fn output_len(&self) -> usize {
+        1
+    }
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+    fn infer_batch_into(&self, _flat: &[f32], batch: usize, out: &mut [f32]) {
+        std::thread::sleep(Duration::from_millis(30));
+        out[..batch].fill(7.0);
+    }
+    fn input_quant(&self) -> Option<UniformQuant> {
+        Some(UniformQuant::unit(16))
+    }
+}
+
+/// Admission control over the reactor wire: a full bounded queue
+/// answers `Busy` frames carrying the configured retry hint, every
+/// pipelined request resolves exactly once, and — unlike the
+/// thread-per-connection server — responses may arrive out of order, so
+/// the tally is by request id.
+#[test]
+fn reactor_busy_frames_account_for_every_pipelined_request() {
+    let reactor = ReactorServer::bind_with(
+        "127.0.0.1:0",
+        vec![("slow".to_string(), Arc::new(SlowEngine) as Arc<dyn Backend>)],
+        ReactorCfg {
+            batch: BatcherCfg {
+                max_batch: 1,
+                max_delay: Duration::ZERO,
+                workers: 1,
+                max_queue: 2,
+                busy_retry_after: Duration::from_millis(7),
+            },
+            ..ReactorCfg::default()
+        },
+    )
+    .unwrap();
+    let mut client = NetClient::connect(reactor.local_addr()).unwrap();
+
+    let n = 24;
+    let mut ids = Vec::new();
+    for _ in 0..n {
+        ids.push(client.send_f32("slow", &[0.0, 0.0]).unwrap());
+    }
+    let mut outcomes: HashMap<u64, Result<Vec<f32>, ErrCode>> = HashMap::new();
+    for _ in 0..n {
+        let (rid, res) = client.recv_response().unwrap();
+        let prior = outcomes.insert(
+            rid,
+            match res {
+                Ok(out) => Ok(out),
+                Err(e) => {
+                    if e.code == ErrCode::Busy {
+                        assert_eq!(e.retry_after_ms, 7, "busy frame lost its retry hint");
+                    }
+                    Err(e.code)
+                }
+            },
+        );
+        assert!(prior.is_none(), "request {rid} resolved twice");
+    }
+    let mut ok = 0;
+    let mut busy = 0;
+    for id in ids {
+        match outcomes.get(&id) {
+            Some(Ok(out)) => {
+                assert_eq!(out, &vec![7.0]);
+                ok += 1;
+            }
+            Some(Err(ErrCode::Busy)) => busy += 1,
+            other => panic!("request {id} resolved as {other:?}"),
+        }
+    }
+    assert!(ok >= 1, "nothing was admitted");
+    assert!(busy >= 1, "the bounded queue never rejected (ok={ok})");
+    assert_eq!(ok + busy, n);
+    reactor.shutdown();
+}
+
+/// Graceful drain over the wire: every request the reactor read off a
+/// socket before shutdown gets a response or a clean error frame — the
+/// client never hangs and never sees a torn stream.
+#[test]
+fn reactor_shutdown_under_load_drains_accepted_requests() {
+    let reactor = ReactorServer::bind_with(
+        "127.0.0.1:0",
+        vec![("slow".to_string(), Arc::new(SlowEngine) as Arc<dyn Backend>)],
+        ReactorCfg {
+            batch: BatcherCfg {
+                max_batch: 4,
+                max_delay: Duration::from_millis(1),
+                workers: 1,
+                max_queue: 64,
+                ..BatcherCfg::default()
+            },
+            ..ReactorCfg::default()
+        },
+    )
+    .unwrap();
+    let addr = reactor.local_addr();
+
+    let (done_tx, done_rx) = mpsc::channel();
+    let client_thread = std::thread::spawn(move || {
+        let mut client = NetClient::connect(addr).unwrap();
+        let n = 10;
+        for _ in 0..n {
+            client.send_f32("slow", &[0.0, 0.0]).unwrap();
+        }
+        let mut resolved = 0;
+        for _ in 0..n {
+            match client.recv_response() {
+                // A response or a typed error frame both count as a
+                // clean resolution.
+                Ok((_, _)) => resolved += 1,
+                // The drain half-closes reads first; requests it never
+                // read off the socket end in a clean close — but only
+                // after everything it *did* read was answered.
+                Err(ClientError::Protocol(_))
+                | Err(ClientError::Io(_))
+                | Err(ClientError::Timeout) => break,
+                Err(ClientError::Remote(_)) => resolved += 1,
+            }
+        }
+        done_tx.send(resolved).unwrap();
+    });
+
+    // Let the pipeline land, then pull the plug mid-service.
+    std::thread::sleep(Duration::from_millis(40));
+    reactor.shutdown();
+
+    let resolved = done_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("client hung across ReactorServer shutdown");
+    assert!(resolved >= 1, "no request resolved before the drain");
+    client_thread.join().unwrap();
+}
+
+/// Property: flip any single bit of a valid request frame past the
+/// length header and the reactor answers a typed `BadRequest` naming
+/// the checksum, attributed to req id 0 (the id can't be trusted in a
+/// corrupt frame) — one error per flip, and the connection survives the
+/// whole barrage to serve a clean frame afterwards.
+#[test]
+fn property_bit_flips_get_checksum_errors_and_the_conn_survives() {
+    let lut = digits_lut();
+    let quant = lut.input_quant.clone();
+    let mut rng = Xoshiro256::new(9);
+    let row: Vec<f32> = (0..digits::FEATURES).map(|_| rng.uniform_f32()).collect();
+    let idx: Vec<u8> = quant
+        .quantize_to_indices(&row)
+        .into_iter()
+        .map(|i| i as u8)
+        .collect();
+
+    let dir = std::env::temp_dir().join(format!("qnn_reactor_flip_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    lut.save(dir.join("digits-lut.qnn")).unwrap();
+    let reactor =
+        ReactorServer::bind_dir("127.0.0.1:0", &dir, ReactorCfg::default()).unwrap();
+
+    let mut stream = TcpStream::connect(reactor.local_addr()).unwrap();
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let mut rbuf = Vec::new();
+    let read_one = |stream: &mut TcpStream, rbuf: &mut Vec<u8>| {
+        assert!(
+            wire::read_frame(stream, rbuf).expect("torn stream"),
+            "connection closed mid-property"
+        );
+    };
+
+    // The reference answer, served before any corruption.
+    let mut good = Vec::new();
+    wire::encode_request_qidx(&mut good, 7, "digits-lut", &idx, 0);
+    stream.write_all(&good).unwrap();
+    read_one(&mut stream, &mut rbuf);
+    let reference = match wire::parse_frame(&rbuf).unwrap() {
+        Frame::Response { req_id, payload } => {
+            assert_eq!(req_id, 7);
+            payload.to_vec()
+        }
+        other => panic!("clean frame got {other:?}"),
+    };
+
+    // Every byte past the magic + length header is under the checksum:
+    // walk the frame flipping one bit per position (rotating which bit
+    // so the high and low nibbles both get exercised).
+    let mut flips = 0;
+    let mut errors = 0;
+    for pos in 8..good.len() {
+        let mut bad = good.clone();
+        bad[pos] ^= 1 << (pos % 8);
+        stream.write_all(&bad).unwrap();
+        flips += 1;
+        read_one(&mut stream, &mut rbuf);
+        match wire::parse_frame(&rbuf).unwrap() {
+            Frame::Error {
+                req_id, code, msg, ..
+            } => {
+                assert_eq!(req_id, 0, "corrupt frames must not echo a trusted id");
+                assert_eq!(code, ErrCode::BadRequest, "flip at byte {pos}: {msg}");
+                assert!(
+                    msg.contains("checksum"),
+                    "flip at byte {pos} was rejected for the wrong reason: {msg}"
+                );
+                errors += 1;
+            }
+            other => panic!("flip at byte {pos} got {other:?}"),
+        }
+    }
+    assert_eq!(errors, flips, "every corrupt frame gets exactly one error");
+
+    // The connection outlived the barrage and still serves — with the
+    // exact same bytes as before it.
+    let mut again = Vec::new();
+    wire::encode_request_qidx(&mut again, 9, "digits-lut", &idx, 0);
+    stream.write_all(&again).unwrap();
+    read_one(&mut stream, &mut rbuf);
+    match wire::parse_frame(&rbuf).unwrap() {
+        Frame::Response { req_id, payload } => {
+            assert_eq!(req_id, 9);
+            assert_eq!(payload, &reference[..], "post-corruption answer drifted");
+        }
+        other => panic!("post-corruption frame got {other:?}"),
+    }
+    reactor.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
