@@ -31,7 +31,7 @@ use crate::util::threadpool::ThreadPool;
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Batch-formation policy and capacity bounds.
@@ -73,6 +73,10 @@ pub struct Completion {
     /// The wire correlation id, echoed into the response frame.
     pub req_id: u64,
     pub result: Result<Vec<f32>, InferError>,
+    /// The request payload, handed back so the submitter can recycle
+    /// its buffers — the reactor's event loop pools these instead of
+    /// allocating per request.
+    pub payload: Payload,
 }
 
 /// Where completions go: called from worker threads, once per accepted
@@ -92,7 +96,12 @@ struct Entry {
 pub struct BatcherHandle {
     tx: mpsc::Sender<Entry>,
     depth: Arc<AtomicUsize>,
-    shutdown: Arc<AtomicBool>,
+    /// Admission gate. [`Self::submit`] holds it shared across the
+    /// check-and-send; the collector's shutdown path flips it to
+    /// `false` under the write lock *before* its final drain, so every
+    /// entry a submit ever got an `Ok(())` for is provably received —
+    /// a send cannot race past the drain into a dropped receiver.
+    gate: Arc<RwLock<bool>>,
     max_queue: usize,
     busy_retry_after_ms: u64,
     input_len: usize,
@@ -148,7 +157,11 @@ impl BatcherHandle {
         payload: Payload,
         deadline: Option<Instant>,
     ) -> Result<(), InferError> {
-        if self.shutdown.load(Ordering::SeqCst) {
+        // Held (shared) until the send below completes: the collector
+        // closes this gate exclusively before its final drain, so an
+        // `Ok(())` here is a hard guarantee the entry will be received.
+        let accepting = self.gate.read().unwrap();
+        if !*accepting {
             self.metrics.outcomes.record(Outcome::PeerShutdown);
             return Err(InferError::Shutdown);
         }
@@ -239,6 +252,8 @@ impl Batcher {
         let (tx, rx) = mpsc::channel::<Entry>();
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new(RwLock::new(true));
+        let handle_gate = Arc::clone(&gate);
         let depth = Arc::new(AtomicUsize::new(0));
         let input_len = engine.input_len();
         let output_len = engine.output_len();
@@ -281,18 +296,22 @@ impl Batcher {
                         // queued resolve with a typed error now, before
                         // any engine time is spent on them.
                         let now = Instant::now();
-                        batch.retain(|e| match e.deadline {
-                            Some(d) if now >= d => {
-                                metrics.outcomes.record(Outcome::DeadlineExceeded);
-                                sink(Completion {
-                                    conn: e.conn,
-                                    req_id: e.req_id,
-                                    result: Err(InferError::DeadlineExceeded),
-                                });
-                                false
-                            }
-                            _ => true,
-                        });
+                        batch = batch
+                            .into_iter()
+                            .filter_map(|e| match e.deadline {
+                                Some(d) if now >= d => {
+                                    metrics.outcomes.record(Outcome::DeadlineExceeded);
+                                    sink(Completion {
+                                        conn: e.conn,
+                                        req_id: e.req_id,
+                                        result: Err(InferError::DeadlineExceeded),
+                                        payload: e.payload,
+                                    });
+                                    None
+                                }
+                                _ => Some(e),
+                            })
+                            .collect();
                         if batch.is_empty() {
                             return;
                         }
@@ -383,6 +402,7 @@ impl Batcher {
                                     conn: e.conn,
                                     req_id: e.req_id,
                                     result: Ok(s.out[i * out_len..(i + 1) * out_len].to_vec()),
+                                    payload: e.payload,
                                 });
                             }
                         });
@@ -423,8 +443,17 @@ impl Batcher {
                     dispatch(batch);
                 }
 
-                // Graceful drain: admission stopped when the shutdown
-                // flag went up; entries already accepted still resolve.
+                // Close the admission gate before the final drain:
+                // taking the write lock waits out any submit mid-send,
+                // and afterwards no send can succeed — so the drain
+                // below provably sees every entry ever accepted. A
+                // submit that raced the shutdown flag either landed
+                // before this flip (and resolves below) or fails with
+                // `Shutdown` having enqueued nothing.
+                *gate.write().unwrap() = false;
+
+                // Graceful drain: entries already accepted still
+                // resolve.
                 loop {
                     let mut batch = Vec::new();
                     while batch.len() < max_batch {
@@ -446,7 +475,7 @@ impl Batcher {
             handle: BatcherHandle {
                 tx,
                 depth,
-                shutdown: Arc::clone(&shutdown),
+                gate: handle_gate,
                 max_queue: cfg.max_queue.max(1),
                 busy_retry_after_ms: cfg.busy_retry_after.as_millis() as u64,
                 input_len,
@@ -718,6 +747,52 @@ mod tests {
         assert_eq!(
             h.submit(0, 999, Payload::F32(vec![0.0, 0.0]), None),
             Err(InferError::Shutdown)
+        );
+    }
+
+    #[test]
+    fn submits_racing_shutdown_never_strand_an_accepted_entry() {
+        // Hammer the admission gate: four threads submit full-tilt
+        // while the batcher shuts down mid-stream. Every Ok(()) must
+        // produce exactly one completion — a send slipping past the
+        // final drain into a dropped receiver would leave got < accepted.
+        let (sink, got) = collecting_sink();
+        let b = Batcher::start(
+            Arc::new(SumEngine),
+            BatcherCfg { max_queue: 1 << 16, ..Default::default() },
+            sink,
+        );
+        let h = b.handle();
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let threads: Vec<_> = (0..4u64)
+            .map(|t| {
+                let h = h.clone();
+                let accepted = Arc::clone(&accepted);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let mut r = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        if h.submit(t, r, Payload::F32(vec![0.0; 4]), None).is_ok() {
+                            accepted.fetch_add(1, Ordering::SeqCst);
+                        }
+                        r += 1;
+                    }
+                })
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(20));
+        // Pull the plug with submitters still running: shutdown joins
+        // the collector, which closes the gate and drains.
+        b.shutdown();
+        stop.store(true, Ordering::Relaxed);
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(
+            got.lock().unwrap().len(),
+            accepted.load(Ordering::SeqCst),
+            "an accepted entry was stranded by the shutdown race"
         );
     }
 }

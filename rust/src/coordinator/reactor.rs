@@ -160,9 +160,18 @@ impl ReactorServer {
             .set_nonblocking(true)
             .context("setting listener non-blocking")?;
         let addr = listener.local_addr().context("reading bound address")?;
-        let poller = Poller::new().context("creating poller")?;
+        let mut poller = Poller::new().context("creating poller")?;
         let poller_backend = poller.backend_name();
         let wake = Arc::new(WakePipe::new().context("creating wake pipe")?);
+        // Register the loop's two fixed fds here, not on the spawned
+        // thread: a failure must reach the caller as a bind error, not
+        // leave a server that accepts into the backlog but never serves.
+        poller
+            .register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
+            .context("registering listener with poller")?;
+        poller
+            .register(wake.read_fd(), TOKEN_WAKE, Interest::READ)
+            .context("registering wake pipe with poller")?;
         let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
 
         // The sink workers call: stash the completion, poke the loop.
@@ -202,7 +211,8 @@ impl ReactorServer {
                 peak_conns: Arc::clone(&peak_conns),
                 ebuf: Vec::new(),
                 fbuf: Vec::new(),
-                xbuf: Vec::new(),
+                pool_f32: Vec::new(),
+                pool_u8: Vec::new(),
                 draining_since: None,
                 last_sweep: Instant::now(),
             };
@@ -337,28 +347,26 @@ struct ReactorLoop {
     /// Copy of the frame being processed (ends the assembler borrow so
     /// handlers can mutate the connection while parsing zero-copy).
     fbuf: Vec<u8>,
-    /// f32 payload decode scratch.
-    xbuf: Vec<f32>,
+    /// Recycled f32 buffers: request payloads and response vectors come
+    /// back through completions and are reused for the next decode —
+    /// the steady state allocates nothing per request on the loop
+    /// thread.
+    pool_f32: Vec<Vec<f32>>,
+    /// Recycled qidx payload buffers (same loop as `pool_f32`).
+    pool_u8: Vec<Vec<u8>>,
     draining_since: Option<Instant>,
     last_sweep: Instant,
 }
 
+/// Cap on each recycled-buffer pool — bounds loop-thread memory while
+/// still covering a full pipeline window of in-flight requests.
+const POOL_CAP: usize = 256;
+
 impl ReactorLoop {
     fn run(&mut self) {
-        if self
-            .poller
-            .register(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)
-            .is_err()
-        {
-            return;
-        }
-        if self
-            .poller
-            .register(self.wake.read_fd(), TOKEN_WAKE, Interest::READ)
-            .is_err()
-        {
-            return;
-        }
+        // The listener and wake pipe were registered in `bind_with`
+        // (before this thread existed) so registration failures surface
+        // to the caller.
         let mut events: Vec<Event> = Vec::new();
         loop {
             if self.stop.load(Ordering::SeqCst) {
@@ -388,7 +396,7 @@ impl ReactorLoop {
                 match ev.token {
                     TOKEN_LISTENER => self.accept_ready(),
                     TOKEN_WAKE => self.wake.drain(),
-                    token => self.conn_event(token, ev.readable, ev.writable),
+                    token => self.conn_event(token, ev.readable, ev.writable, ev.hangup),
                 }
             }
             self.drain_completions();
@@ -459,10 +467,23 @@ impl ReactorLoop {
         }
     }
 
-    fn conn_event(&mut self, token: u64, readable: bool, writable: bool) {
+    fn conn_event(&mut self, token: u64, readable: bool, writable: bool, hangup: bool) {
         self.with_conn(token, |lp, conn| {
+            // A hangup on a read-disarmed connection is a *full* peer
+            // close (EPOLLRDHUP only rides read interest): nothing more
+            // can be delivered either way, and with reads refused by
+            // the backpressure cap the level-triggered event would
+            // otherwise spin the loop until the backlog drained.
+            if hangup && !conn.interest.readable {
+                conn.sever = true;
+                return;
+            }
             if writable {
                 lp.flush(conn);
+                // The flush may have dropped pending_write below the
+                // cap: process frames parked in the assembler while the
+                // peer wasn't consuming responses.
+                lp.resume_frames(conn);
             }
             if readable && !conn.closing && !conn.sever {
                 lp.read_ready(conn);
@@ -508,13 +529,46 @@ impl ReactorLoop {
                 }
             }
         }
-        // Age the partial frame for the slow-loris sweep.
-        if conn.asm.has_partial() {
+        self.age_partial(conn);
+    }
+
+    /// Age the slow-loris clock: only trailing bytes that form a
+    /// *genuinely incomplete* frame count. Complete frames parked by
+    /// backpressure are a healthy peer waiting on us, not an attack.
+    fn age_partial(&mut self, conn: &mut Conn) {
+        if conn.asm.has_incomplete_frame() {
             if conn.partial_since.is_none() {
                 conn.partial_since = Some(Instant::now());
             }
         } else {
             conn.partial_since = None;
+        }
+    }
+
+    /// Re-examine parked input after a backpressure cap moved (a
+    /// completion drained or the write buffer flushed). Frames the
+    /// assembler buffered while the connection was capped have no read
+    /// event left to process them — all their bytes were consumed from
+    /// the kernel long ago — so every cap release must drive the drain.
+    fn resume_frames(&mut self, conn: &mut Conn) {
+        if conn.closing || conn.sever {
+            return;
+        }
+        self.drain_frames(conn);
+        self.age_partial(conn);
+    }
+
+    fn recycle_f32(&mut self, mut v: Vec<f32>) {
+        if self.pool_f32.len() < POOL_CAP {
+            v.clear();
+            self.pool_f32.push(v);
+        }
+    }
+
+    fn recycle_u8(&mut self, mut v: Vec<u8>) {
+        if self.pool_u8.len() < POOL_CAP {
+            v.clear();
+            self.pool_u8.push(v);
         }
     }
 
@@ -555,50 +609,54 @@ impl ReactorLoop {
         let fbuf = std::mem::take(&mut self.fbuf);
         match wire::parse_frame(&fbuf) {
             Ok(Frame::Request { req_id, model, dtype, deadline_ms, payload }) => {
-                match self.handles.get(model).cloned() {
-                    None => {
-                        let known: Vec<String> = self.handles.keys().cloned().collect();
-                        let msg = format!("no model {model:?} (have {known:?})");
-                        self.send_error(conn, req_id, ErrCode::NoModel, 0, &msg);
-                    }
-                    Some(h) => {
-                        let payload = match dtype {
-                            Dtype::F32Le => {
-                                match wire::payload_f32s_into(payload, &mut self.xbuf) {
-                                    Ok(()) => Some(Payload::F32(self.xbuf.clone())),
-                                    Err(e) => {
-                                        let msg = format!("{e:#}");
-                                        self.send_error(
-                                            conn,
-                                            req_id,
-                                            ErrCode::BadRequest,
-                                            0,
-                                            &msg,
-                                        );
-                                        None
-                                    }
+                if !self.handles.contains_key(model) {
+                    let known: Vec<String> = self.handles.keys().cloned().collect();
+                    let msg = format!("no model {model:?} (have {known:?})");
+                    self.send_error(conn, req_id, ErrCode::NoModel, 0, &msg);
+                } else {
+                    // Decode into a recycled buffer (returned by the
+                    // completion path) — no per-request allocation on
+                    // the loop thread in the steady state.
+                    let payload = match dtype {
+                        Dtype::F32Le => {
+                            let mut buf = self.pool_f32.pop().unwrap_or_default();
+                            match wire::payload_f32s_into(payload, &mut buf) {
+                                Ok(()) => Some(Payload::F32(buf)),
+                                Err(e) => {
+                                    let msg = format!("{e:#}");
+                                    self.recycle_f32(buf);
+                                    self.send_error(conn, req_id, ErrCode::BadRequest, 0, &msg);
+                                    None
                                 }
                             }
-                            Dtype::QIdx => Some(Payload::QIdx(payload.to_vec())),
-                        };
-                        if let Some(payload) = payload {
-                            // The wire deadline is a remaining budget;
-                            // anchor it at arrival so server-side
-                            // queueing counts against it.
-                            let deadline = (deadline_ms > 0)
-                                .then(|| arrival + Duration::from_millis(deadline_ms as u64));
-                            match h.submit(conn.token, req_id, payload, deadline) {
-                                Ok(()) => conn.inflight += 1,
-                                Err(e) => {
-                                    let msg = e.to_string();
-                                    self.send_error(
-                                        conn,
-                                        req_id,
-                                        code_for(&e),
-                                        retry_hint(&e),
-                                        &msg,
-                                    );
-                                }
+                        }
+                        Dtype::QIdx => {
+                            let mut buf = self.pool_u8.pop().unwrap_or_default();
+                            buf.clear();
+                            buf.extend_from_slice(payload);
+                            Some(Payload::QIdx(buf))
+                        }
+                    };
+                    if let Some(payload) = payload {
+                        // The wire deadline is a remaining budget;
+                        // anchor it at arrival so server-side
+                        // queueing counts against it.
+                        let deadline = (deadline_ms > 0)
+                            .then(|| arrival + Duration::from_millis(deadline_ms as u64));
+                        // By-ref lookup: a handle clone per frame is an
+                        // avoidable allocation on the hot path.
+                        let h = self.handles.get(model).expect("checked above");
+                        match h.submit(conn.token, req_id, payload, deadline) {
+                            Ok(()) => conn.inflight += 1,
+                            Err(e) => {
+                                let msg = e.to_string();
+                                self.send_error(
+                                    conn,
+                                    req_id,
+                                    code_for(&e),
+                                    retry_hint(&e),
+                                    &msg,
+                                );
                             }
                         }
                     }
@@ -742,26 +800,41 @@ impl ReactorLoop {
         for c in batch {
             // A completion for a connection that died in the meantime
             // has nowhere to go; its work is simply discarded.
-            self.with_conn(c.conn, |lp, conn| {
+            let Completion { conn: token, req_id, result, payload } = c;
+            self.with_conn(token, |lp, conn| {
                 conn.inflight = conn.inflight.saturating_sub(1);
-                match &c.result {
+                match result {
                     Ok(out) => {
-                        wire::encode_response_f32(&mut lp.ebuf, c.req_id, out);
+                        wire::encode_response_f32(&mut lp.ebuf, req_id, &out);
                         lp.append_wire(conn);
+                        lp.recycle_f32(out);
                     }
                     Err(e) => {
                         let msg = e.to_string();
                         wire::encode_error(
                             &mut lp.ebuf,
-                            c.req_id,
-                            code_for(e),
-                            retry_hint(e),
+                            req_id,
+                            code_for(&e),
+                            retry_hint(&e),
                             &msg,
                         );
                         lp.append_wire(conn);
                     }
                 }
+                // The request payload comes back for buffer reuse.
+                match payload {
+                    Payload::F32(v) => lp.recycle_f32(v),
+                    Payload::QIdx(v) => lp.recycle_u8(v),
+                }
                 lp.flush(conn);
+                // inflight dropped (and the flush may have cleared the
+                // write cap): frames parked in the assembler under
+                // backpressure get processed now — there is no pending
+                // read event left to do it.
+                lp.resume_frames(conn);
+                if conn.pending_write() > 0 && !conn.sever {
+                    lp.flush(conn);
+                }
                 lp.maybe_finish(conn);
             });
         }
@@ -1022,6 +1095,68 @@ mod tests {
         assert!(ok >= 1, "nothing admitted");
         assert!(busy >= 1, "admission bound never triggered");
         assert_eq!(ok + busy, 10);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pipelining_past_depth_resumes_when_completions_drain() {
+        // Regression: a client bursts far past pipeline_depth and then
+        // just waits. Every byte is consumed from the kernel up front,
+        // so the frames parked in the assembler have no read event left
+        // — only the completion drain can resume them. Before the fix
+        // this hung, and the loris sweep (wrongly counting parked
+        // complete frames as a partial) then cut the connection.
+        struct SlowEngine;
+        impl Backend for SlowEngine {
+            fn name(&self) -> &str {
+                "slow"
+            }
+            fn input_len(&self) -> usize {
+                1
+            }
+            fn output_len(&self) -> usize {
+                1
+            }
+            fn memory_bytes(&self) -> usize {
+                0
+            }
+            fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+                std::thread::sleep(Duration::from_millis(10));
+                out[..batch].copy_from_slice(&flat[..batch]);
+            }
+        }
+        let srv = ReactorServer::bind_with(
+            "127.0.0.1:0",
+            vec![("slow".to_string(), Arc::new(SlowEngine))],
+            ReactorCfg {
+                pipeline_depth: 4,
+                // Tight loris bound: parked-but-complete frames must
+                // NOT trip it while the slow engine works through the
+                // backlog.
+                partial_frame_timeout: Duration::from_millis(250),
+                batch: BatcherCfg {
+                    max_batch: 4,
+                    max_delay: Duration::from_millis(0),
+                    workers: 1,
+                    max_queue: 64,
+                    ..BatcherCfg::default()
+                },
+                ..ReactorCfg::default()
+            },
+        )
+        .unwrap();
+        let mut c = NetClient::connect(srv.local_addr()).unwrap();
+        let mut want = std::collections::HashMap::new();
+        for i in 0..32 {
+            let id = c.send_f32("slow", &[i as f32]).unwrap();
+            want.insert(id, i as f32);
+        }
+        for _ in 0..32 {
+            let (rid, res) = c.recv_response().unwrap();
+            let v = want.remove(&rid).expect("unknown or duplicate response id");
+            assert_eq!(res.unwrap(), vec![v]);
+        }
+        assert!(want.is_empty());
         srv.shutdown();
     }
 

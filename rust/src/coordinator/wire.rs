@@ -623,6 +623,35 @@ impl FrameAssembler {
         self.pending_bytes() > 0
     }
 
+    /// True when the trailing buffered bytes form a *genuinely
+    /// incomplete* frame — the slow-loris signal. Complete frames that
+    /// merely have not been popped yet (a reactor parks them under
+    /// backpressure) do not count: a backpressured-but-healthy peer
+    /// must not look like an attacker. Framing damage counts as
+    /// incomplete (the next [`Self::next_frame`] raises it anyway).
+    pub fn has_incomplete_frame(&self) -> bool {
+        let avail = &self.buf[self.pos..];
+        // Walk complete frames without consuming them; in steady state
+        // the drain already popped everything poppable, so this sees at
+        // most one (partial) frame.
+        let mut pos = 0;
+        loop {
+            let rest = &avail[pos..];
+            if rest.is_empty() {
+                return false;
+            }
+            let prefix = rest.len().min(4);
+            if rest[..prefix] != WIRE_MAGIC[..prefix] || rest.len() < HEADER_LEN {
+                return true;
+            }
+            let len = u32::from_le_bytes(rest[4..8].try_into().unwrap()) as usize;
+            if !(MIN_BODY_LEN..=MAX_FRAME_LEN).contains(&len) || rest.len() < HEADER_LEN + len {
+                return true;
+            }
+            pos += HEADER_LEN + len;
+        }
+    }
+
     /// Pop the next complete frame, if one is fully buffered. Returns
     /// `Ok(None)` when more bytes are needed. Validation mirrors
     /// [`read_frame`]: a non-magic prefix or implausible length is a
@@ -882,6 +911,38 @@ mod tests {
         }
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
         assert!(!asm.has_partial());
+    }
+
+    #[test]
+    fn incomplete_frame_excludes_parked_complete_frames() {
+        let mut f = Vec::new();
+        encode_request_qidx(&mut f, 1, "m", &[0, 1, 2], 0);
+        let mut asm = FrameAssembler::new();
+
+        // Two complete frames buffered but not popped: pending, yes —
+        // but NOT an incomplete frame (backpressure parking, not loris).
+        asm.push(&f);
+        asm.push(&f);
+        assert!(asm.has_partial());
+        assert!(!asm.has_incomplete_frame());
+
+        // A trailing half frame behind them IS incomplete.
+        asm.push(&f[..5]);
+        assert!(asm.has_incomplete_frame());
+
+        // Completing it clears the signal again.
+        asm.push(&f[5..]);
+        assert!(!asm.has_incomplete_frame());
+
+        // Popping everything leaves neither pending nor incomplete.
+        while asm.next_frame().unwrap().is_some() {}
+        assert!(!asm.has_partial());
+        assert!(!asm.has_incomplete_frame());
+
+        // A bare magic prefix counts as incomplete.
+        let mut asm = FrameAssembler::new();
+        asm.push(b"QW");
+        assert!(asm.has_incomplete_frame());
     }
 
     #[test]

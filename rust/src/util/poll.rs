@@ -360,9 +360,14 @@ fn zero_event() -> epoll_sys::EpollEvent {
 
 #[cfg(target_os = "linux")]
 fn epoll_mask(interest: Interest) -> u32 {
-    let mut m = epoll_sys::EPOLLRDHUP;
+    // EPOLLRDHUP rides read interest only: a read-disarmed
+    // (backpressured) fd must not level-trigger on a peer half-close it
+    // is not ready to consume — that would spin the wait loop until the
+    // owner re-arms reads. Full hangup (EPOLLHUP) is unmaskable and
+    // still delivered.
+    let mut m = 0;
     if interest.readable {
-        m |= epoll_sys::EPOLLIN;
+        m |= epoll_sys::EPOLLIN | epoll_sys::EPOLLRDHUP;
     }
     if interest.writable {
         m |= epoll_sys::EPOLLOUT;
