@@ -17,30 +17,38 @@
 //! load — thousands of concurrent connections — to it and to the
 //! thread-per-connection front-end, head to head per tier.
 //!
-//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v3`) at the
+//! Then the self-healing story: a replica boots from a store holding a
+//! torn artifact and a junk file, quarantines both, repairs itself from
+//! the live server over the wire (chunked, checksum-verified, atomically
+//! installed), and must serve the full load bit-exact afterwards —
+//! time-to-heal and post-heal availability are measured and gated.
+//!
+//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v4`) at the
 //! repository root: closed-loop saturation sweep, an open-loop run at a
 //! fraction of saturation, the wire bytes-per-request comparison, the
-//! fleet chaos section, and the reactor tier comparison — all gated in
-//! CI (`python/check_bench.py`).
+//! fleet chaos section, the reactor tier comparison, and the heal
+//! section — all gated in CI (`python/check_bench.py`).
 //!
 //!     cargo run --release --example serve_tcp [-- --full]
 
 use qnn::coordinator::wire::Dtype;
 use qnn::coordinator::{
-    BatcherCfg, Fleet, FleetCfg, NetServer, ReactorCfg, ReactorServer, Router, ServerCfg,
+    BatcherCfg, Fleet, FleetCfg, NetServer, ReactorCfg, ReactorServer, RepairCfg, Repairer,
+    Router, ServerCfg,
 };
 use qnn::data::digits;
 use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
 use qnn::nn::{ActSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
 use qnn::report::loadgen::{
-    fleet_section_json, reactor_section_json, run_fleet_load, run_load, run_mux_load,
-    serving_bench_doc, FleetLoadCfg, LoadCfg, MuxLoadCfg,
+    fleet_section_json, heal_section_json, reactor_section_json, run_fleet_load, run_load,
+    run_mux_load, serving_bench_doc, FleetLoadCfg, LoadCfg, MuxLoadCfg,
 };
 use qnn::report::perf::write_bench_file;
 use qnn::report::table::TableBuilder;
+use qnn::util::fnv::fnv1a;
 use qnn::util::rng::Xoshiro256;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
@@ -333,6 +341,89 @@ fn main() -> anyhow::Result<()> {
     );
     reactor.shutdown();
 
+    // ---- heal phase: a replica boots from a corrupt store — a torn
+    // prefix of the real artifact plus a junk file — quarantines both,
+    // and repairs itself from the live server over the wire. The main
+    // `net_server` on `addr` is still up and acts as the donor.
+    let heal_dir = std::env::temp_dir().join(format!("qnn_serve_heal_{}", std::process::id()));
+    std::fs::remove_dir_all(&heal_dir).ok();
+    std::fs::create_dir_all(&heal_dir)?;
+    let good = std::fs::read(dir.join("digits-lut.qnn"))?;
+    std::fs::write(heal_dir.join("digits-lut.qnn"), &good[..good.len() / 2])?;
+    std::fs::write(heal_dir.join("junk.qnn"), b"definitely not a qnn artifact")?;
+    let heal_router = Router::open_dir_with(&heal_dir, server_cfg.clone())?;
+    let quarantined = heal_router.load_errors().len();
+    let heal_srv = NetServer::bind("127.0.0.1:0", heal_router.clone())?;
+    println!(
+        "\nhealing replica on {} ({} corrupt artifacts quarantined at boot, {} models live)",
+        heal_srv.local_addr(),
+        quarantined,
+        heal_router.model_count()
+    );
+    let heal_t0 = Instant::now();
+    let repairer = Repairer::start(
+        heal_router.clone(),
+        vec![addr.clone()],
+        RepairCfg { interval: Duration::from_millis(25), ..RepairCfg::default() },
+    );
+    repairer.kick();
+    // Healed means the replica's manifest describes the donor's exact
+    // bytes; the checksum is verified before install, so matching here
+    // is matching on content.
+    let want = fnv1a(&good);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let healed = heal_router
+            .store()
+            .and_then(|s| s.entry("digits-lut"))
+            .map(|e| e.checksum == want)
+            .unwrap_or(false);
+        if healed {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "healing replica did not converge on the donor artifact within 30s"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let time_to_heal_s = heal_t0.elapsed().as_secs_f64();
+    let heal_stats = repairer.stats();
+    // Post-heal: the healed replica must take real load cleanly.
+    let post_heal = run_load(
+        &LoadCfg {
+            addr: heal_srv.local_addr().to_string(),
+            model: "digits-lut".into(),
+            encoding: Dtype::QIdx,
+            clients: 4,
+            requests_per_client: per_client,
+            rate_rps: None,
+        },
+        &rows,
+        Some(&quant),
+    )?;
+    println!(
+        "healed in {time_to_heal_s:.3} s ({} installed, {} B fetched, {} retries); \
+         post-heal {}/{} ok at {:.0} rps",
+        heal_stats.installed,
+        heal_stats.bytes_fetched,
+        heal_stats.retries,
+        post_heal.ok,
+        post_heal.sent,
+        post_heal.throughput_rps
+    );
+    let heal_section = heal_section_json(
+        time_to_heal_s,
+        heal_router.model_count(),
+        quarantined,
+        heal_stats.bytes_fetched,
+        heal_stats.retries,
+        &post_heal,
+    );
+    repairer.stop();
+    heal_srv.shutdown();
+    std::fs::remove_dir_all(&heal_dir).ok();
+
     let doc = serving_bench_doc(
         "digits-lut",
         digits::FEATURES,
@@ -340,6 +431,7 @@ fn main() -> anyhow::Result<()> {
         &reports,
         Some(fleet_section),
         Some(reactor_section),
+        Some(heal_section),
         if full {
             "cargo run --release --example serve_tcp -- --full"
         } else {

@@ -34,6 +34,13 @@ Dispatches on the document's `schema` field:
   thread-per-connection front-end at the highest-connection tier (a
   10% noise allowance; both sides are driven back-to-back by the same
   generator at the same offered rate).
+* ``qnn.bench_serving.v4`` — v3 plus the heal section: a replica boots
+  from a corrupt artifact store (a torn file and a junk file), must
+  quarantine both, and must repair itself from a live peer over the
+  wire. Fails if nothing was quarantined, no model was recovered, no
+  bytes were fetched from the peer, time-to-heal is missing or exceeds
+  the ceiling, or post-heal availability on the healed replica is
+  below 99%.
 
 Timings themselves are never asserted — CI machines are noisy;
 regressions should show in the trajectory, not flake the gate. The one
@@ -368,12 +375,77 @@ def check_serving_v3(path: str, doc: dict) -> str:
     )
 
 
+# The serve_tcp heal phase itself aborts if convergence takes more than
+# 30 s; the gate mirrors that ceiling. A real heal of the digits model
+# over loopback lands in well under a second.
+HEAL_TIME_CEILING_S = 30.0
+HEAL_AVAILABILITY_FLOOR = 0.99
+
+
+def check_serving_v4(path: str, doc: dict) -> str:
+    summary = check_serving_v3(path, doc)
+
+    heal = doc.get("heal")
+    if not isinstance(heal, dict):
+        fail(f"{path}: v4 document has no heal section (got {heal!r})")
+
+    # The chaos condition: the gate is meaningless unless the replica
+    # actually booted corrupt and actually fetched the repair bytes.
+    quarantined = heal.get("quarantined")
+    if not positive_number(quarantined):
+        fail(
+            f"{path}: heal run quarantined nothing (quarantined={quarantined!r}) "
+            f"— the store was never corrupt"
+        )
+    recovered = heal.get("models_recovered")
+    if not positive_number(recovered):
+        fail(f"{path}: heal run recovered no models (models_recovered={recovered!r})")
+    bytes_fetched = heal.get("bytes_fetched")
+    if not positive_number(bytes_fetched):
+        fail(
+            f"{path}: heal run fetched no bytes from the peer "
+            f"(bytes_fetched={bytes_fetched!r})"
+        )
+
+    ttl = heal.get("time_to_heal_s")
+    if not positive_number(ttl):
+        fail(f"{path}: heal section has no positive time_to_heal_s (got {ttl!r})")
+    if ttl > HEAL_TIME_CEILING_S:
+        fail(
+            f"{path}: time to heal {ttl:.2f} s exceeds the "
+            f"{HEAL_TIME_CEILING_S:.0f} s ceiling"
+        )
+
+    availability = heal.get("post_heal_availability")
+    if not isinstance(availability, (int, float)) or isinstance(availability, bool):
+        fail(f"{path}: heal section has no numeric post_heal_availability")
+    if availability < HEAL_AVAILABILITY_FLOOR:
+        fail(
+            f"{path}: post-heal availability {availability:.4f} is below the "
+            f"{HEAL_AVAILABILITY_FLOOR:.2f} floor — the healed replica is not serving"
+        )
+    # The healed replica's load report must be a full, sane serving
+    # record — same shape the mux tiers carry.
+    check_mux_record(path, "post-heal load", heal.get("post_heal_load"))
+
+    retries = heal.get("fetch_retries")
+    if not nonneg_int(retries):
+        fail(f"{path}: heal section missing fetch_retries counter (got {retries!r})")
+
+    return (
+        f"{summary}; heal {ttl:.2f} s, {int(recovered)} models recovered, "
+        f"{int(quarantined)} quarantined, {int(bytes_fetched)} B fetched, "
+        f"post-heal availability {availability:.4f}"
+    )
+
+
 CHECKERS = {
     "qnn.bench_lut_engine.v2": check_lut_engine,
     "qnn.bench_lut_engine.v3": check_lut_engine_v3,
     "qnn.bench_serving.v1": check_serving,
     "qnn.bench_serving.v2": check_serving_v2,
     "qnn.bench_serving.v3": check_serving_v3,
+    "qnn.bench_serving.v4": check_serving_v4,
 }
 
 

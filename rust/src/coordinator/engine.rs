@@ -103,6 +103,14 @@ pub(crate) fn model_name(path: &Path) -> String {
 /// magic: `QNNLUT01` → [`LutEngine`], `QNN1` → [`FloatNetEngine`].
 pub fn load_backend(path: impl AsRef<Path>) -> Result<Arc<dyn Backend>> {
     let path = path.as_ref();
+    load_backend_as(path, &model_name(path))
+}
+
+/// [`load_backend`] with an explicit model name instead of the file
+/// stem — the hot-reload path boots from a tmp file whose stem is not
+/// the model's name.
+pub fn load_backend_as(path: impl AsRef<Path>, name: &str) -> Result<Arc<dyn Backend>> {
+    let path = path.as_ref();
     let head = {
         use std::io::Read;
         let mut f = std::fs::File::open(path)
@@ -124,9 +132,11 @@ pub fn load_backend(path: impl AsRef<Path>) -> Result<Arc<dyn Backend>> {
         head[..n].to_vec()
     };
     if is_lut_artifact(&head) {
-        Ok(Arc::new(LutEngine::from_artifact(path)?))
+        let lut = LutNetwork::load(path)?;
+        let input_len = lut.input_elems();
+        Ok(Arc::new(LutEngine::new(name, lut, input_len)))
     } else if is_float_artifact(&head) {
-        Ok(Arc::new(FloatNetEngine::from_artifact(path)?))
+        Ok(Arc::new(FloatNetEngine::from_artifact_named(path, name)?))
     } else {
         anyhow::bail!(
             "{path:?} is neither a LUT artifact (QNNLUT01) nor a float network (QNN1)"
@@ -273,6 +283,12 @@ impl FloatNetEngine {
     /// [`FloatEngine::with_input_quant`] instead.
     pub fn from_artifact(path: impl AsRef<Path>) -> Result<FloatNetEngine> {
         let path = path.as_ref();
+        Self::from_artifact_named(path, &model_name(path))
+    }
+
+    /// [`Self::from_artifact`] with an explicit model name (hot-reload
+    /// boots from tmp files whose stems are not the model name).
+    pub fn from_artifact_named(path: &Path, name: &str) -> Result<FloatNetEngine> {
         let mut net = Network::load(path.to_str().context("non-UTF-8 artifact path")?)
             .with_context(|| format!("loading float network {path:?}"))?;
         let input_len: usize = net.spec.input_shape.iter().product();
@@ -281,7 +297,7 @@ impl FloatNetEngine {
         shape.extend_from_slice(&net.spec.input_shape);
         let output_len = net.forward(&Tensor::zeros(&shape), false).len();
         Ok(FloatNetEngine::new(
-            &model_name(path),
+            name,
             FloatEngine::new(net),
             input_len,
             output_len,

@@ -11,10 +11,14 @@
 //!   each model name to [`FleetCfg::replication`] distinct replicas,
 //!   primary first. Adding or removing a replica only remaps the ring
 //!   arcs it owned, so a fleet resize does not reshuffle the world.
-//! * **Health** — a background thread pings every replica on a
+//! * **Health** — one background thread per replica pings it on a
 //!   dedicated connection ([`NetClient::ping`]) each
-//!   [`FleetCfg::health_interval`]; active probes and passive dispatch
-//!   failures feed the same per-replica consecutive-failure counter.
+//!   [`FleetCfg::health_interval`], with seeded jittered start offsets
+//!   so probes spread over the interval instead of landing in
+//!   lockstep. Probes are independent: a replica that hangs for the
+//!   full health timeout stales only its own sample. Active probes and
+//!   passive dispatch failures feed the same per-replica
+//!   consecutive-failure counter.
 //!   Each pong also carries the replica's queue depth, which dispatch
 //!   uses as a load signal: when every candidate has a fresh sample,
 //!   the first attempt goes to the least-loaded one (ring order breaks
@@ -29,8 +33,12 @@
 //!   backoff + seeded jitter (a `Busy` retry-after hint floors the
 //!   backoff), and automatic failover to the next ring candidate on
 //!   timeout, transport error, torn frame, or peer shutdown. Typed
-//!   rejections (`BadRequest`/`NoModel`/`Internal`) are terminal —
-//!   replaying a bad request elsewhere returns the same answer.
+//!   rejections (`BadRequest`/`Internal`) are terminal — replaying a
+//!   bad request elsewhere returns the same answer. `NoModel` is not:
+//!   in a self-healing fleet a missing artifact means *that replica's*
+//!   store hasn't converged yet (its repair loop is already kicked by
+//!   the miss), so the request fails over to the next candidate and
+//!   only exhausting every candidate makes the rejection final.
 //!
 //! Accounting lives in [`FleetMetrics`]: one terminal [`Outcome`] per
 //! request (the chaos suite asserts outcomes sum exactly to requests),
@@ -105,9 +113,10 @@ impl Default for FleetCfg {
 /// Terminal dispatch failures — one per request, always typed.
 #[derive(Debug)]
 pub enum FleetError {
-    /// A healthy replica rejected the request itself (bad request,
-    /// unknown model, internal failure); retrying elsewhere would
-    /// return the same answer, so the rejection is final.
+    /// A healthy replica rejected the request itself. For bad requests
+    /// and internal failures the first answer is final — replaying
+    /// elsewhere returns the same thing. An unknown model becomes this
+    /// only after every candidate in the retry budget said so.
     Rejected(RemoteError),
     /// The request's deadline budget ran out (locally or shed by a
     /// server) before an answer was produced.
@@ -260,12 +269,14 @@ struct FleetInner {
 /// `&self`; connections are pooled per replica internally.
 pub struct Fleet {
     inner: Arc<FleetInner>,
-    health: Option<JoinHandle<()>>,
+    health: Vec<JoinHandle<()>>,
 }
 
 impl Fleet {
     /// Stand up a dispatcher over `addrs`. Connections are opened
-    /// lazily; the health thread starts probing immediately.
+    /// lazily; one health-probe thread per replica starts immediately,
+    /// each with a seeded jittered start offset so probes don't land
+    /// on the wire in lockstep.
     pub fn connect(addrs: &[String], cfg: FleetCfg) -> Fleet {
         let vnodes = cfg.vnodes.max(1);
         let mut ring = Vec::with_capacity(addrs.len() * vnodes);
@@ -298,17 +309,22 @@ impl Fleet {
             stop: AtomicBool::new(false),
             rng: Mutex::new(Xoshiro256::new(seed)),
         });
-        let health = {
+        let mut health = Vec::with_capacity(inner.replicas.len());
+        for ri in 0..inner.replicas.len() {
+            let jitter = {
+                let span = inner.cfg.health_interval.as_millis().max(1) as usize;
+                let mut rng = inner.rng.lock().unwrap();
+                Duration::from_millis(rng.below(span) as u64)
+            };
             let inner = Arc::clone(&inner);
-            std::thread::Builder::new()
-                .name("fleet-health".into())
-                .spawn(move || health_loop(&inner))
-                .expect("spawning fleet health thread")
-        };
-        Fleet {
-            inner,
-            health: Some(health),
+            health.push(
+                std::thread::Builder::new()
+                    .name(format!("fleet-health-{ri}"))
+                    .spawn(move || health_probe_loop(&inner, ri, jitter))
+                    .expect("spawning fleet health thread"),
+            );
         }
+        Fleet { inner, health }
     }
 
     /// One-shot `f32le` inference with the full reliability policy.
@@ -367,14 +383,14 @@ impl Fleet {
         }
     }
 
-    /// Stop the health thread and drop all pooled connections.
+    /// Stop the health threads and drop all pooled connections.
     pub fn shutdown(mut self) {
         self.stop_health();
     }
 
     fn stop_health(&mut self) {
         self.inner.stop.store(true, Ordering::Release);
-        if let Some(h) = self.health.take() {
+        for h in self.health.drain(..) {
             let _ = h.join();
         }
         for r in &self.inner.replicas {
@@ -399,6 +415,10 @@ impl Fleet {
         let mut last_replica: Option<usize> = None;
         let mut last_outcome = Outcome::NoReplica;
         let mut last_err = String::from("no attempt made");
+        // Set only when the *latest* attempt was a NoModel answer, so
+        // an exhausted request surfaces the typed rejection instead of
+        // a generic transport story.
+        let mut last_rejection: Option<RemoteError> = None;
         let mut attempt = 0usize;
         loop {
             if let Some(d) = deadline {
@@ -417,6 +437,7 @@ impl Fleet {
                 }
             }
             last_replica = Some(ri);
+            last_rejection = None;
             let replica = &inner.replicas[ri];
             replica.dispatched.fetch_add(1, Ordering::Relaxed);
             let mut busy_hint_ms = 0u64;
@@ -458,10 +479,15 @@ impl Fleet {
                                     inner.metrics.outcomes.record(Outcome::DeadlineExceeded);
                                     return Err(FleetError::DeadlineExceeded);
                                 }
+                                // Not terminal: this replica's store
+                                // may still be healing (the miss also
+                                // kicked its repair loop), so try the
+                                // next candidate before giving up.
                                 ErrCode::NoModel => {
                                     inner.mark_success(ri);
-                                    inner.metrics.outcomes.record(Outcome::NoModel);
-                                    return Err(FleetError::Rejected(e));
+                                    last_outcome = Outcome::NoModel;
+                                    last_err = format!("{}: {e}", replica.addr);
+                                    last_rejection = Some(e);
                                 }
                                 ErrCode::BadRequest => {
                                     inner.mark_success(ri);
@@ -499,6 +525,9 @@ impl Fleet {
             }
             if attempt >= inner.cfg.max_retries {
                 inner.metrics.outcomes.record(last_outcome);
+                if let Some(e) = last_rejection {
+                    return Err(FleetError::Rejected(e));
+                }
                 return Err(FleetError::Exhausted {
                     attempts: attempt + 1,
                     last: last_err,
@@ -659,68 +688,81 @@ impl FleetInner {
     }
 }
 
-/// Health thread body: ping every replica on a dedicated connection,
-/// feeding the same breaker as passive dispatch failures. Ejected
-/// replicas are left alone until their cooldown lapses, then probed
-/// for re-admission.
-fn health_loop(inner: &FleetInner) {
-    let mut conns: Vec<Option<NetClient>> = (0..inner.replicas.len()).map(|_| None).collect();
+/// Per-replica health-probe thread body: ping one replica on a
+/// dedicated connection every [`FleetCfg::health_interval`], feeding
+/// the same breaker as passive dispatch failures. Probes are
+/// independent — one wedged replica (a connect or ping hanging for the
+/// full [`FleetCfg::health_timeout`]) stales only its own load sample,
+/// never the whole fleet's, so least-loaded dispatch keeps a fresh
+/// signal for every responsive replica. Ejected replicas are left
+/// alone until their cooldown lapses, then probed for re-admission.
+fn health_probe_loop(inner: &FleetInner, ri: usize, start_jitter: Duration) {
+    if !sleep_interruptible(inner, start_jitter) {
+        return;
+    }
+    let mut slot: Option<NetClient> = None;
     loop {
-        if inner.stop.load(Ordering::Acquire) {
+        probe_replica(inner, ri, &mut slot);
+        if !sleep_interruptible(inner, inner.cfg.health_interval) {
             return;
         }
-        for (ri, slot) in conns.iter_mut().enumerate() {
-            if inner.stop.load(Ordering::Acquire) {
+    }
+}
+
+/// One probe round for replica `ri`, reusing `slot`'s connection when
+/// the previous round left it healthy.
+fn probe_replica(inner: &FleetInner, ri: usize, slot: &mut Option<NetClient>) {
+    let r = &inner.replicas[ri];
+    {
+        let st = r.state.lock().unwrap();
+        if let ReplicaStatus::Ejected { until } = st.status {
+            if Instant::now() < until {
+                *slot = None;
                 return;
             }
-            let r = &inner.replicas[ri];
-            {
-                let st = r.state.lock().unwrap();
-                if let ReplicaStatus::Ejected { until } = st.status {
-                    if Instant::now() < until {
-                        *slot = None;
-                        continue;
-                    }
-                }
-            }
-            if slot.is_none() {
-                match NetClient::connect_with(
-                    r.addr.as_str(),
-                    NetClientCfg {
-                        connect_timeout: Some(inner.cfg.connect_timeout),
-                        read_timeout: Some(inner.cfg.health_timeout),
-                        write_timeout: Some(inner.cfg.health_timeout),
-                    },
-                ) {
-                    Ok(c) => *slot = Some(c),
-                    Err(_) => {
-                        inner.mark_failure(ri);
-                        continue;
-                    }
-                }
-            }
-            match slot.as_mut().unwrap().ping() {
-                Ok(h) if !h.draining => {
-                    r.state.lock().unwrap().last_queued = Some((h.queued, Instant::now()));
-                    inner.mark_success(ri);
-                }
-                _ => {
-                    *slot = None;
-                    inner.mark_failure(ri);
-                }
-            }
-        }
-        // Interruptible sleep so shutdown never waits a full interval.
-        let mut slept = Duration::ZERO;
-        while slept < inner.cfg.health_interval {
-            if inner.stop.load(Ordering::Acquire) {
-                return;
-            }
-            let chunk = Duration::from_millis(10).min(inner.cfg.health_interval - slept);
-            std::thread::sleep(chunk);
-            slept += chunk;
         }
     }
+    if slot.is_none() {
+        match NetClient::connect_with(
+            r.addr.as_str(),
+            NetClientCfg {
+                connect_timeout: Some(inner.cfg.connect_timeout),
+                read_timeout: Some(inner.cfg.health_timeout),
+                write_timeout: Some(inner.cfg.health_timeout),
+            },
+        ) {
+            Ok(c) => *slot = Some(c),
+            Err(_) => {
+                inner.mark_failure(ri);
+                return;
+            }
+        }
+    }
+    match slot.as_mut().unwrap().ping() {
+        Ok(h) if !h.draining => {
+            r.state.lock().unwrap().last_queued = Some((h.queued, Instant::now()));
+            inner.mark_success(ri);
+        }
+        _ => {
+            *slot = None;
+            inner.mark_failure(ri);
+        }
+    }
+}
+
+/// Sleep up to `dur` in small chunks, returning `false` the moment the
+/// stop flag is raised so shutdown never waits a full interval.
+fn sleep_interruptible(inner: &FleetInner, dur: Duration) -> bool {
+    let mut slept = Duration::ZERO;
+    while slept < dur {
+        if inner.stop.load(Ordering::Acquire) {
+            return false;
+        }
+        let chunk = Duration::from_millis(10).min(dur - slept);
+        std::thread::sleep(chunk);
+        slept += chunk;
+    }
+    !inner.stop.load(Ordering::Acquire)
 }
 
 #[cfg(test)]
@@ -753,7 +795,7 @@ mod tests {
     }
 
     fn boot() -> NetServer {
-        let mut router = Router::new();
+        let router = Router::new();
         router.register(
             "sum",
             Server::start(Arc::new(SumEngine), ServerCfg::default()),
@@ -864,6 +906,61 @@ mod tests {
         std::thread::sleep(Duration::from_millis(60));
         assert_eq!(fleet.inner.ordered_candidates("sum"), ring);
         fleet.shutdown();
+    }
+
+    #[test]
+    fn one_stalled_replica_does_not_stale_the_others() {
+        let live1 = boot();
+        let live2 = boot();
+        // A listener that is never accepted: connects land in the TCP
+        // backlog and succeed, but every ping against it then blocks
+        // for the full health timeout — the wedged-replica shape that
+        // used to starve the whole sequential probe pass.
+        let stall = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addrs = vec![
+            stall.local_addr().unwrap().to_string(),
+            live1.local_addr().to_string(),
+            live2.local_addr().to_string(),
+        ];
+        let interval = Duration::from_millis(20);
+        let fleet = Fleet::connect(
+            &addrs,
+            FleetCfg {
+                health_interval: interval,
+                health_timeout: Duration::from_secs(1),
+                // Keep the stalled replica Up so its probe keeps
+                // wedging instead of sitting out an ejection cooldown.
+                breaker_threshold: 1000,
+                ..FleetCfg::default()
+            },
+        );
+        // Far longer than the stalled probe's read timeout would allow
+        // a shared sequential loop to refresh anyone else.
+        std::thread::sleep(Duration::from_millis(400));
+        for ri in [1, 2] {
+            let sampled_at = {
+                let st = fleet.inner.replicas[ri].state.lock().unwrap();
+                st.last_queued.expect("live replica was never sampled").1
+            };
+            assert!(
+                sampled_at.elapsed() <= interval * 5,
+                "replica {ri} sample is {:?} old: a wedged peer must not starve it",
+                sampled_at.elapsed()
+            );
+        }
+        assert!(
+            fleet.inner.replicas[0]
+                .state
+                .lock()
+                .unwrap()
+                .last_queued
+                .is_none(),
+            "the stalled replica cannot have produced a sample"
+        );
+        fleet.shutdown();
+        live1.shutdown();
+        live2.shutdown();
+        drop(stall);
     }
 
     #[test]

@@ -8,6 +8,14 @@
 //! that protocol: thread-per-connection [`NetServer`] and the
 //! event-driven [`ReactorServer`] (one loop thread, all connections,
 //! cross-connection batching via [`batcher`]).
+//!
+//! The artifact tier is self-healing: routers hot-reload models behind
+//! an `RwLock` ([`Router::install_artifact`] — atomic rename, live
+//! swap), corrupt boot-time artifacts are quarantined instead of
+//! re-failed forever, and the background [`Repairer`] diffs the local
+//! manifest against placement peers over the wire's manifest/fetch
+//! frames and refills anything missing or stale — chunked, resumable,
+//! checksum-verified before install.
 
 pub mod batcher;
 pub mod engine;
@@ -16,6 +24,7 @@ pub mod metrics;
 pub mod net;
 pub mod pjrt_engine;
 pub mod reactor;
+pub mod repair;
 pub mod router;
 pub mod server;
 pub mod wire;
@@ -32,6 +41,7 @@ pub use net::{
 };
 pub use pjrt_engine::PjrtEngine;
 pub use reactor::{ReactorCfg, ReactorServer};
-pub use router::Router;
+pub use repair::{Repairer, RepairCfg};
+pub use router::{ArtifactStore, Router};
 pub use server::{InferError, Payload, Server, ServerCfg, ServerHandle};
 pub use wire::{Dtype, ErrCode};

@@ -22,7 +22,18 @@
 //!   half-closes every connection's read side, lets writers flush a
 //!   response (or clean error frame) for every request already read,
 //!   then drains the in-process servers. Accepted work is never
-//!   silently dropped.
+//!   silently dropped. [`NetServer::begin_drain`] is the announced
+//!   phase before that: connections stay readable, health pings answer
+//!   `draining=true`, new requests bounce with a typed `Shutdown`
+//!   error, and accepted work keeps finishing.
+//! * **Self-healing tier.** Off the inference path the front-end also
+//!   serves the store frames: manifest request/response (what artifacts
+//!   this replica holds, with versions and checksums) and chunked
+//!   artifact fetch (resumable by offset), which the repair loop
+//!   ([`super::repair`]) uses to refill a diverged peer. The health
+//!   pong carries the store's inventory digest so divergence shows up
+//!   in a single frame. Model lookup goes through the [`Router`] per
+//!   request, so an artifact installed live is served immediately.
 //!
 //! Steady state reuses per-connection read/write buffers; the only
 //! per-request allocations are the owned payload handed to the batcher
@@ -30,11 +41,10 @@
 //! in-process [`super::server::Server`].
 
 use super::router::Router;
-use super::server::{InferError, Payload, ServerHandle};
-use super::wire::{self, Dtype, ErrCode, Frame};
+use super::server::{InferError, Payload};
+use super::wire::{self, Dtype, ErrCode, Frame, ManifestEntry};
 use crate::util::fault::{self, FrameFault};
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -70,7 +80,8 @@ impl Default for NetCfg {
 }
 
 /// What the reader hands the writer: a pending in-process response to
-/// await, an immediately-encodable error, or a health pong.
+/// await, an immediately-encodable error, a health pong, or one of the
+/// store frames (manifest / artifact chunk).
 enum WriteItem {
     Pending {
         req_id: u64,
@@ -87,6 +98,18 @@ enum WriteItem {
         draining: bool,
         models: u16,
         queued: u32,
+        digest: u64,
+    },
+    Manifest {
+        req_id: u64,
+        entries: Vec<ManifestEntry>,
+    },
+    Chunk {
+        req_id: u64,
+        model: String,
+        offset: u64,
+        total_len: u64,
+        data: Vec<u8>,
     },
 }
 
@@ -116,6 +139,7 @@ pub(crate) fn retry_hint(e: &InferError) -> u32 {
 pub struct NetServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>>,
     router: Option<Router>,
@@ -146,13 +170,15 @@ impl NetServer {
             .set_nonblocking(true)
             .context("setting listener non-blocking")?;
         let addr = listener.local_addr().context("reading bound address")?;
-        let handles = router.handles();
         let stop = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>> =
             Arc::new(Mutex::new(Vec::new()));
         let conn_cfg = cfg.clone();
+        let conn_router = router.clone();
 
         let stop_a = Arc::clone(&stop);
+        let draining_a = Arc::clone(&draining);
         let conns_a = Arc::clone(&conns);
         let accept = std::thread::Builder::new()
             .name("qnn-accept".into())
@@ -193,14 +219,16 @@ impl NetServer {
                         let Ok(registered) = stream.try_clone() else {
                             continue;
                         };
-                        // Every connection gets its own handle map clone
-                        // (cheap: names + channel senders).
-                        let handles = handles.clone();
+                        // Every connection shares the router (cheap
+                        // clone) and looks models up per request, so
+                        // hot-installed artifacts are served instantly.
+                        let router = conn_router.clone();
                         let stop_c = Arc::clone(&stop_a);
+                        let draining_c = Arc::clone(&draining_a);
                         let cfg_c = conn_cfg.clone();
                         let h = std::thread::Builder::new()
                             .name("qnn-conn".into())
-                            .spawn(move || serve_conn(stream, handles, stop_c, cfg_c))
+                            .spawn(move || serve_conn(stream, router, stop_c, draining_c, cfg_c))
                             .expect("spawn connection thread");
                         conns_a.lock().unwrap().push((registered, h));
                     }
@@ -215,10 +243,21 @@ impl NetServer {
         Ok(NetServer {
             addr,
             stop,
+            draining,
             accept: Some(accept),
             conns,
             router: Some(router),
         })
+    }
+
+    /// Announce a drain without severing anything: health pings start
+    /// answering `draining=true`, new inference requests bounce with a
+    /// typed `Shutdown` error, and requests already accepted keep
+    /// running to completion. Peers (the fleet health checker, the
+    /// repair loop) observe the flag and route around this replica;
+    /// call [`NetServer::shutdown`] to finish the drain.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
     }
 
     /// The bound address (useful with port 0).
@@ -232,6 +271,7 @@ impl NetServer {
     }
 
     fn shutdown_impl(&mut self) {
+        self.draining.store(true, Ordering::SeqCst);
         self.stop.store(true, Ordering::SeqCst);
         if let Some(a) = self.accept.take() {
             let _ = a.join();
@@ -293,8 +333,9 @@ impl Drop for NetServer {
 /// Per-connection reader loop: frame → route → submit → queue reply.
 fn serve_conn(
     stream: TcpStream,
-    handles: BTreeMap<String, ServerHandle>,
+    router: Router,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
     cfg: NetCfg,
 ) {
     let Ok(wstream) = stream.try_clone() else {
@@ -346,15 +387,57 @@ fn serve_conn(
                 (req_id, model, dtype, deadline_ms, payload)
             }
             Ok(Frame::HealthPing { req_id }) => {
-                // Answer from the handle map without touching any
-                // engine: drain state + total queue depth, the signals
-                // the fleet's health checker watches.
-                let queued: usize = handles.values().map(|h| h.queued()).sum();
+                // Answer without touching any engine: drain state,
+                // total queue depth, and the store's inventory digest —
+                // the signals the fleet health checker and the repair
+                // loop watch.
                 let item = WriteItem::Pong {
                     req_id,
-                    draining: stop.load(Ordering::SeqCst),
-                    models: handles.len().min(u16::MAX as usize) as u16,
-                    queued: queued.min(u32::MAX as usize) as u32,
+                    draining: draining.load(Ordering::SeqCst) || stop.load(Ordering::SeqCst),
+                    models: router.model_count().min(u16::MAX as usize) as u16,
+                    queued: router.queued_total(),
+                    digest: router.store_digest(),
+                };
+                if wtx.send(item).is_err() {
+                    break;
+                }
+                continue;
+            }
+            Ok(Frame::ManifestRequest { req_id }) => {
+                // Off the inference path: what artifacts this replica
+                // holds. An empty manifest is a legal answer (a healing
+                // replica that booted bare).
+                let item = WriteItem::Manifest { req_id, entries: router.manifest() };
+                if wtx.send(item).is_err() {
+                    break;
+                }
+                continue;
+            }
+            Ok(Frame::FetchRequest { req_id, model, offset, max_len }) => {
+                let chunk = match router.store() {
+                    Some(store) => store.read_chunk(model, offset, max_len),
+                    None => Ok(None),
+                };
+                let item = match chunk {
+                    Ok(Some((total_len, data))) => WriteItem::Chunk {
+                        req_id,
+                        model: model.to_string(),
+                        offset,
+                        total_len,
+                        data,
+                    },
+                    Ok(None) => WriteItem::Error {
+                        req_id,
+                        code: ErrCode::NoModel,
+                        retry_after_ms: 0,
+                        msg: format!("no artifact for model {model:?} in the store"),
+                    },
+                    Err(e) => WriteItem::Error {
+                        req_id,
+                        code: ErrCode::Internal,
+                        retry_after_ms: 0,
+                        msg: format!("{e:#}"),
+                    },
                 };
                 if wtx.send(item).is_err() {
                     break;
@@ -362,7 +445,7 @@ fn serve_conn(
                 continue;
             }
             Ok(_) => {
-                // A client sending response/error/pong frames is
+                // A client sending response/error/pong/chunk frames is
                 // confused but the framing is intact; answer and carry
                 // on.
                 if wtx
@@ -370,7 +453,8 @@ fn serve_conn(
                         req_id: 0,
                         code: ErrCode::BadRequest,
                         retry_after_ms: 0,
-                        msg: "only request and health ping frames are accepted".into(),
+                        msg: "only request, health ping, manifest and fetch frames are accepted"
+                            .into(),
                     })
                     .is_err()
                 {
@@ -395,20 +479,42 @@ fn serve_conn(
                 continue;
             }
         };
-        let Some(handle) = handles.get(model) else {
-            let known: Vec<&str> = handles.keys().map(|s| s.as_str()).collect();
+        if draining.load(Ordering::SeqCst) {
+            // Announced drain: accepted work is still finishing, but
+            // nothing new gets in. The typed error tells clients to
+            // reconnect elsewhere.
             if wtx
                 .send(WriteItem::Error {
                     req_id,
-                    code: ErrCode::NoModel,
+                    code: ErrCode::Shutdown,
                     retry_after_ms: 0,
-                    msg: format!("no model {model:?} (have {known:?})"),
+                    msg: "server is draining; reconnect elsewhere".into(),
                 })
                 .is_err()
             {
                 break;
             }
             continue;
+        }
+        let handle = match router.handle(model) {
+            Ok(h) => h,
+            Err(_) => {
+                // A miss on a model this replica should own is a
+                // divergence signal — the repair loop hooks this.
+                router.note_missing(model);
+                if wtx
+                    .send(WriteItem::Error {
+                        req_id,
+                        code: ErrCode::NoModel,
+                        retry_after_ms: 0,
+                        msg: format!("no model {model:?} (have {:?})", router.models()),
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
         };
         let payload = match dtype {
             Dtype::F32Le => match wire::payload_f32s_into(payload, &mut fbuf) {
@@ -485,8 +591,14 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<WriteItem>) {
             WriteItem::Error { req_id, code, retry_after_ms, msg } => {
                 wire::encode_error(&mut wbuf, req_id, code, retry_after_ms, &msg)
             }
-            WriteItem::Pong { req_id, draining, models, queued } => {
-                wire::encode_health_pong(&mut wbuf, req_id, draining, models, queued)
+            WriteItem::Pong { req_id, draining, models, queued, digest } => {
+                wire::encode_health_pong(&mut wbuf, req_id, draining, models, queued, digest)
+            }
+            WriteItem::Manifest { req_id, entries } => {
+                wire::encode_manifest_response(&mut wbuf, req_id, &entries)
+            }
+            WriteItem::Chunk { req_id, model, offset, total_len, data } => {
+                wire::encode_fetch_chunk(&mut wbuf, req_id, &model, offset, total_len, &data)
             }
         }
         if !write_frame_injecting_faults(&mut stream, &wbuf) {
@@ -618,6 +730,11 @@ pub struct HealthStatus {
     pub models: u16,
     /// Total requests outstanding across its bounded queues.
     pub queued: u32,
+    /// Inventory digest over its artifact store
+    /// ([`wire::inventory_digest`]): two replicas with equal digests
+    /// hold identical artifact sets — divergence is visible in one
+    /// frame, no manifest exchange needed.
+    pub digest: u64,
 }
 
 /// Blocking wire-protocol client with reused frame buffers. Supports
@@ -723,13 +840,44 @@ impl NetClient {
     /// transport → `Io`, torn/garbled bytes → `Protocol`.
     fn read_next_frame(&mut self) -> Result<(), ClientError> {
         match wire::read_frame(&mut self.reader, &mut self.rbuf) {
-            Ok(true) => Ok(()),
+            Ok(true) => self.apply_read_fault(),
             Ok(false) => Err(ClientError::Protocol(
                 "connection closed before response".into(),
             )),
             Err(e) if e.is_timeout() => Err(ClientError::Timeout),
             Err(wire::ReadError::Io { source, .. }) => Err(ClientError::Io(source)),
             Err(e) => Err(ClientError::Protocol(format!("{e:#}"))),
+        }
+    }
+
+    /// Apply the chaos harness's read-path verdict to the frame just
+    /// received ([`crate::util::fault::on_read_frame`]; dark unless the
+    /// plan arms `read=1`). A dropped frame surfaces as `Timeout` (it
+    /// "never arrived"), a truncation as a torn-stream `Protocol`
+    /// error, and a bit flip corrupts `rbuf` in place so the checksum
+    /// verification in `parse_frame` catches it — exactly the failures
+    /// the repair loop's resume/retry path must survive.
+    fn apply_read_fault(&mut self) -> Result<(), ClientError> {
+        if !fault::is_enabled() {
+            return Ok(());
+        }
+        match fault::on_read_frame(self.rbuf.len()) {
+            FrameFault::Deliver => Ok(()),
+            FrameFault::Delay(d) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+            FrameFault::Drop => Err(ClientError::Timeout),
+            FrameFault::Truncate(n) => {
+                self.rbuf.truncate(n);
+                Err(ClientError::Protocol("injected read-side truncation".into()))
+            }
+            FrameFault::BitFlip(pos, mask) => {
+                if pos < self.rbuf.len() {
+                    self.rbuf[pos] ^= mask;
+                }
+                Ok(())
+            }
         }
     }
 
@@ -782,6 +930,7 @@ impl NetClient {
                 draining,
                 models,
                 queued,
+                digest,
             } => {
                 if req_id != id {
                     return Err(ClientError::Protocol(format!(
@@ -792,10 +941,88 @@ impl NetClient {
                     draining,
                     models,
                     queued,
+                    digest,
                 })
             }
             other => Err(ClientError::Protocol(format!(
                 "expected health pong, got: {other:?}"
+            ))),
+        }
+    }
+
+    /// Fetch the server's artifact manifest: one entry per stored
+    /// model with its version, byte length and FNV-1a checksum. Same
+    /// no-outstanding-responses requirement as [`NetClient::ping`].
+    pub fn fetch_manifest(&mut self) -> Result<Vec<ManifestEntry>, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::encode_manifest_request(&mut self.wbuf, id);
+        self.stream.write_all(&self.wbuf)?;
+        self.read_next_frame()?;
+        let proto = |e: anyhow::Error| ClientError::Protocol(format!("{e:#}"));
+        match wire::parse_frame(&self.rbuf).map_err(proto)? {
+            Frame::ManifestResponse { req_id, entries } => {
+                if req_id != id {
+                    return Err(ClientError::Protocol(format!(
+                        "manifest id {req_id} != request id {id}"
+                    )));
+                }
+                Ok(entries)
+            }
+            Frame::Error { code, retry_after_ms, msg, .. } => {
+                Err(ClientError::Remote(RemoteError {
+                    code,
+                    retry_after_ms,
+                    msg: msg.to_string(),
+                }))
+            }
+            other => Err(ClientError::Protocol(format!(
+                "expected manifest response, got: {other:?}"
+            ))),
+        }
+    }
+
+    /// Fetch one chunk of a model's artifact: up to `max_len` bytes at
+    /// `offset` (the server clamps). Returns the artifact's total
+    /// length plus the chunk bytes — an empty chunk at `offset ==
+    /// total` means the transfer is complete. Transfers resume by
+    /// simply asking again from the last good offset; the repair loop
+    /// leans on exactly that after a drop or truncation.
+    pub fn fetch_chunk(
+        &mut self,
+        model: &str,
+        offset: u64,
+        max_len: u32,
+    ) -> Result<(u64, Vec<u8>), ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::encode_fetch_request(&mut self.wbuf, id, model, offset, max_len);
+        self.stream.write_all(&self.wbuf)?;
+        self.read_next_frame()?;
+        let proto = |e: anyhow::Error| ClientError::Protocol(format!("{e:#}"));
+        match wire::parse_frame(&self.rbuf).map_err(proto)? {
+            Frame::FetchChunk { req_id, model: m, offset: o, total_len, data } => {
+                if req_id != id {
+                    return Err(ClientError::Protocol(format!(
+                        "chunk id {req_id} != request id {id}"
+                    )));
+                }
+                if m != model || o != offset {
+                    return Err(ClientError::Protocol(format!(
+                        "chunk for {m:?}@{o} answers a request for {model:?}@{offset}"
+                    )));
+                }
+                Ok((total_len, data.to_vec()))
+            }
+            Frame::Error { code, retry_after_ms, msg, .. } => {
+                Err(ClientError::Remote(RemoteError {
+                    code,
+                    retry_after_ms,
+                    msg: msg.to_string(),
+                }))
+            }
+            other => Err(ClientError::Protocol(format!(
+                "expected fetch chunk, got: {other:?}"
             ))),
         }
     }
@@ -902,7 +1129,7 @@ mod tests {
     }
 
     fn boot() -> NetServer {
-        let mut router = Router::new();
+        let router = Router::new();
         router.register(
             "sum",
             Server::start(Arc::new(SumEngine), ServerCfg::default()),
@@ -1053,7 +1280,7 @@ mod tests {
                 out[..batch].copy_from_slice(&flat[..batch]);
             }
         }
-        let mut router = Router::new();
+        let router = Router::new();
         router.register(
             "slow",
             Server::start(
@@ -1147,7 +1374,7 @@ mod tests {
                 out[..batch].copy_from_slice(&flat[..batch]);
             }
         }
-        let mut router = Router::new();
+        let router = Router::new();
         router.register(
             "slow",
             Server::start(

@@ -35,8 +35,9 @@
 //! does exactly this).
 
 use super::batcher::{Batcher, BatcherCfg, BatcherHandle, Completion, CompletionSink};
-use super::engine::{self, Backend};
+use super::engine::Backend;
 use super::net::{code_for, retry_hint};
+use super::router::{scan_artifact_dir, ArtifactStore};
 use super::server::Payload;
 use super::wire::{self, Dtype, ErrCode, Frame, FrameAssembler};
 use crate::util::fault::{self, FrameFault};
@@ -95,6 +96,7 @@ const TOKEN_FIRST_CONN: u64 = 2;
 pub struct ReactorServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    soft_drain: Arc<AtomicBool>,
     hard_abort: Arc<AtomicBool>,
     wake: Arc<WakePipe>,
     event_loop: Option<JoinHandle<()>>,
@@ -114,27 +116,43 @@ impl ReactorServer {
     }
 
     /// Load every `.qnn` artifact in `dir` (model name = file stem) and
-    /// serve the lot — the reactor twin of `Router::load_dir`.
+    /// serve the lot — the reactor twin of `Router::load_dir`, sharing
+    /// its quarantining scan: a corrupt artifact is moved to
+    /// `dir/quarantine/` with a reason sidecar instead of failing the
+    /// boot; only a directory with no bootable artifact errors. The
+    /// resulting server also answers manifest/fetch frames from the
+    /// directory, so peers can heal from it.
     pub fn bind_dir(
         addr: impl ToSocketAddrs,
         dir: impl AsRef<std::path::Path>,
         cfg: ReactorCfg,
     ) -> Result<ReactorServer> {
         let dir = dir.as_ref();
-        let mut paths: Vec<_> = std::fs::read_dir(dir)
-            .with_context(|| format!("reading artifact dir {}", dir.display()))?
-            .filter_map(|e| e.ok().map(|e| e.path()))
-            .filter(|p| p.extension().map(|e| e == "qnn").unwrap_or(false))
-            .collect();
-        paths.sort();
-        anyhow::ensure!(!paths.is_empty(), "no .qnn artifacts in {}", dir.display());
-        let mut models = Vec::new();
-        for p in &paths {
-            let backend = engine::load_backend(p)
-                .with_context(|| format!("loading {}", p.display()))?;
-            models.push((engine::model_name(p), backend));
+        let scanned = scan_artifact_dir(dir)?;
+        anyhow::ensure!(scanned.files_seen > 0, "no .qnn artifacts in {}", dir.display());
+        for (file, why) in &scanned.quarantined {
+            eprintln!("qnn-reactor: skipping artifact {file}: {why}");
         }
-        Self::bind_with(addr, models, cfg)
+        if scanned.booted.is_empty() {
+            let detail: Vec<String> = scanned
+                .quarantined
+                .iter()
+                .map(|(f, e)| format!("{f}: {e}"))
+                .collect();
+            anyhow::bail!(
+                "no artifact in {} could be booted: {}",
+                dir.display(),
+                detail.join("; ")
+            );
+        }
+        let mut models = Vec::new();
+        let mut entries = BTreeMap::new();
+        for (name, backend, entry) in scanned.booted {
+            entries.insert(name.clone(), entry);
+            models.push((name, backend));
+        }
+        let store = Arc::new(ArtifactStore::with_entries(dir.to_path_buf(), entries));
+        Self::bind_with_store(addr, models, cfg, Some(store))
     }
 
     /// [`Self::bind`] with an explicit configuration.
@@ -142,6 +160,19 @@ impl ReactorServer {
         addr: impl ToSocketAddrs,
         models: Vec<(String, Arc<dyn Backend>)>,
         cfg: ReactorCfg,
+    ) -> Result<ReactorServer> {
+        Self::bind_with_store(addr, models, cfg, None)
+    }
+
+    /// [`Self::bind_with`] plus an artifact store: when present, the
+    /// server answers manifest/fetch frames from it and stamps its
+    /// inventory digest on health pongs — the serving surface the
+    /// repair loop heals from.
+    pub fn bind_with_store(
+        addr: impl ToSocketAddrs,
+        models: Vec<(String, Arc<dyn Backend>)>,
+        cfg: ReactorCfg,
+        store: Option<Arc<ArtifactStore>>,
     ) -> Result<ReactorServer> {
         anyhow::ensure!(!models.is_empty(), "reactor needs at least one model");
         // Arm the chaos harness from the environment exactly once per
@@ -193,6 +224,7 @@ impl ReactorServer {
         }
 
         let stop = Arc::new(AtomicBool::new(false));
+        let soft_drain = Arc::new(AtomicBool::new(false));
         let hard_abort = Arc::new(AtomicBool::new(false));
         let peak_conns = Arc::new(AtomicUsize::new(0));
 
@@ -204,7 +236,9 @@ impl ReactorServer {
                 completions,
                 wake: Arc::clone(&wake),
                 stop: Arc::clone(&stop),
+                soft_drain: Arc::clone(&soft_drain),
                 hard_abort: Arc::clone(&hard_abort),
+                store,
                 cfg,
                 conns: HashMap::new(),
                 next_token: TOKEN_FIRST_CONN,
@@ -225,6 +259,7 @@ impl ReactorServer {
         Ok(ReactorServer {
             addr,
             stop,
+            soft_drain,
             hard_abort,
             wake,
             event_loop: Some(event_loop),
@@ -233,6 +268,17 @@ impl ReactorServer {
             peak_conns,
             poller_backend,
         })
+    }
+
+    /// Announce a drain without severing anything: health pings answer
+    /// `draining=true`, new inference requests bounce with a typed
+    /// `Shutdown` error, and accepted work keeps resolving. Peers (the
+    /// fleet health checker, the repair loop) observe the flag and
+    /// route around this replica; call [`ReactorServer::shutdown`] to
+    /// finish the drain.
+    pub fn begin_drain(&self) {
+        self.soft_drain.store(true, Ordering::SeqCst);
+        self.wake.wake();
     }
 
     /// The bound address (useful with port 0).
@@ -335,7 +381,13 @@ struct ReactorLoop {
     completions: Arc<Mutex<Vec<Completion>>>,
     wake: Arc<WakePipe>,
     stop: Arc<AtomicBool>,
+    soft_drain: Arc<AtomicBool>,
     hard_abort: Arc<AtomicBool>,
+    /// When present: the manifest/fetch serving surface plus the
+    /// digest stamped on pongs. Chunk reads hit the disk on the loop
+    /// thread, but they are bounded (`FETCH_CHUNK_CAP`) and repair
+    /// traffic is rare by construction.
+    store: Option<Arc<ArtifactStore>>,
     cfg: ReactorCfg,
     conns: HashMap<u64, Conn>,
     next_token: u64,
@@ -609,7 +661,17 @@ impl ReactorLoop {
         let fbuf = std::mem::take(&mut self.fbuf);
         match wire::parse_frame(&fbuf) {
             Ok(Frame::Request { req_id, model, dtype, deadline_ms, payload }) => {
-                if !self.handles.contains_key(model) {
+                if self.soft_drain.load(Ordering::SeqCst) {
+                    // Announced drain: accepted work keeps resolving,
+                    // nothing new gets in.
+                    self.send_error(
+                        conn,
+                        req_id,
+                        ErrCode::Shutdown,
+                        0,
+                        "server is draining; reconnect elsewhere",
+                    );
+                } else if !self.handles.contains_key(model) {
                     let known: Vec<String> = self.handles.keys().cloned().collect();
                     let msg = format!("no model {model:?} (have {known:?})");
                     self.send_error(conn, req_id, ErrCode::NoModel, 0, &msg);
@@ -664,16 +726,51 @@ impl ReactorLoop {
             }
             Ok(Frame::HealthPing { req_id }) => {
                 let queued: usize = self.handles.values().map(|h| h.queued()).sum();
-                let draining = self.stop.load(Ordering::SeqCst);
+                let draining = self.stop.load(Ordering::SeqCst)
+                    || self.soft_drain.load(Ordering::SeqCst);
                 let models = self.handles.len().min(u16::MAX as usize) as u16;
+                let digest = self.store.as_ref().map(|s| s.digest()).unwrap_or(0);
                 wire::encode_health_pong(
                     &mut self.ebuf,
                     req_id,
                     draining,
                     models,
                     queued.min(u32::MAX as usize) as u32,
+                    digest,
                 );
                 self.append_wire(conn);
+            }
+            Ok(Frame::ManifestRequest { req_id }) => {
+                let entries = self.store.as_ref().map(|s| s.manifest()).unwrap_or_default();
+                wire::encode_manifest_response(&mut self.ebuf, req_id, &entries);
+                self.append_wire(conn);
+            }
+            Ok(Frame::FetchRequest { req_id, model, offset, max_len }) => {
+                let chunk = match &self.store {
+                    Some(s) => s.read_chunk(model, offset, max_len),
+                    None => Ok(None),
+                };
+                match chunk {
+                    Ok(Some((total_len, data))) => {
+                        wire::encode_fetch_chunk(
+                            &mut self.ebuf,
+                            req_id,
+                            model,
+                            offset,
+                            total_len,
+                            &data,
+                        );
+                        self.append_wire(conn);
+                    }
+                    Ok(None) => {
+                        let msg = format!("no artifact for model {model:?} in the store");
+                        self.send_error(conn, req_id, ErrCode::NoModel, 0, &msg);
+                    }
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        self.send_error(conn, req_id, ErrCode::Internal, 0, &msg);
+                    }
+                }
             }
             Ok(_) => {
                 self.send_error(
@@ -681,7 +778,7 @@ impl ReactorLoop {
                     0,
                     ErrCode::BadRequest,
                     0,
-                    "only request and health ping frames are accepted",
+                    "only request, health ping, manifest and fetch frames are accepted",
                 );
             }
             Err(e) => {

@@ -1,0 +1,611 @@
+//! The repair loop of the self-healing artifact tier.
+//!
+//! A replica's artifact directory can diverge from its placement peers:
+//! a disk swap emptied it, a partial deploy corrupted a file (now
+//! sitting in `quarantine/`), or it simply missed a model pushed while
+//! it was down. The [`Repairer`] closes that gap in the background:
+//!
+//! 1. **Detect.** Each pass pings every peer; a pong whose inventory
+//!    digest matches ours means nothing to do — one frame, no manifest
+//!    exchange. A draining peer is skipped entirely (its artifacts are
+//!    about to move anyway, and fetching from it races its shutdown).
+//! 2. **Diff.** Otherwise fetch the peer's manifest and diff against
+//!    the local store: fetch what is missing, and what the peer holds
+//!    at a strictly newer version with a different checksum.
+//! 3. **Fetch.** Artifacts move in bounded chunks
+//!    ([`NetClient::fetch_chunk`]); a drop, truncation or timeout
+//!    reconnects and **resumes from the last good offset** — progress
+//!    is never thrown away. Retries are bounded per artifact with
+//!    exponential backoff plus seeded jitter, so a fleet of healing
+//!    replicas does not stampede one healthy peer in lockstep.
+//! 4. **Install.** The assembled bytes are checksum-verified against
+//!    the manifest entry, then handed to [`Router::install_artifact`]
+//!    (which re-verifies, proves the artifact boots, renames it into
+//!    place atomically and swaps it live without disturbing in-flight
+//!    requests).
+//!
+//! The loop also registers itself as the router's missing-model hook:
+//! a `no_model` answer on the serving path **kicks** an immediate pass
+//! instead of waiting out the interval — traffic told us exactly what
+//! is missing.
+
+use super::net::{ClientError, NetClient, NetClientCfg};
+use super::router::Router;
+use super::wire::ManifestEntry;
+use crate::util::fnv::fnv1a;
+use crate::util::rng::Xoshiro256;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Repair-loop tuning.
+#[derive(Clone, Debug)]
+pub struct RepairCfg {
+    /// Cadence of background passes (a kick runs one immediately).
+    pub interval: Duration,
+    /// Bytes requested per fetch chunk (the server clamps too).
+    pub chunk_len: u32,
+    /// Fetch attempts per artifact before the pass gives up on it
+    /// (the next pass starts fresh).
+    pub max_retries: usize,
+    /// First backoff after a failed fetch attempt; doubles per attempt.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// TCP connect bound for peer dials.
+    pub connect_timeout: Duration,
+    /// Read/write bound on manifest and chunk traffic.
+    pub io_timeout: Duration,
+    /// Seeds the jitter RNG — chaos runs replay bit-identically.
+    pub seed: u64,
+}
+
+impl Default for RepairCfg {
+    fn default() -> Self {
+        Self {
+            interval: Duration::from_millis(500),
+            chunk_len: 256 * 1024,
+            max_retries: 8,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_secs(2),
+            connect_timeout: Duration::from_millis(1000),
+            io_timeout: Duration::from_millis(2000),
+            seed: 0x9e3a,
+        }
+    }
+}
+
+impl RepairCfg {
+    /// Defaults with the ops knobs applied: `QNN_REPAIR_INTERVAL_MS`
+    /// (pass cadence) and `QNN_REPAIR_CHUNK` (fetch chunk bytes).
+    /// Unparseable values fall back to the defaults silently — a bad
+    /// knob must not keep a replica from healing.
+    pub fn from_env() -> RepairCfg {
+        let mut cfg = RepairCfg::default();
+        if let Ok(v) = std::env::var("QNN_REPAIR_INTERVAL_MS") {
+            if let Ok(ms) = v.trim().parse::<u64>() {
+                if ms > 0 {
+                    cfg.interval = Duration::from_millis(ms);
+                }
+            }
+        }
+        if let Ok(v) = std::env::var("QNN_REPAIR_CHUNK") {
+            if let Ok(n) = v.trim().parse::<u32>() {
+                if n > 0 {
+                    cfg.chunk_len = n;
+                }
+            }
+        }
+        cfg
+    }
+}
+
+/// Monotonic counters describing what the loop has done — what the
+/// heal bench and the chaos tests assert on.
+#[derive(Default)]
+struct Counters {
+    passes: AtomicU64,
+    installed: AtomicU64,
+    bytes_fetched: AtomicU64,
+    retries: AtomicU64,
+    skipped_draining: AtomicU64,
+    peer_failures: AtomicU64,
+    install_failures: AtomicU64,
+}
+
+/// Snapshot of the repair counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RepairStats {
+    /// Completed background passes.
+    pub passes: u64,
+    /// Artifacts fetched, verified and installed live.
+    pub installed: u64,
+    /// Artifact payload bytes pulled over the wire (progress kept
+    /// across resumes counts once).
+    pub bytes_fetched: u64,
+    /// Fetch attempts that failed and were retried (backoff + resume).
+    pub retries: u64,
+    /// Peer visits skipped because the peer reported `draining`.
+    pub skipped_draining: u64,
+    /// Peers that could not be dialed or queried this pass.
+    pub peer_failures: u64,
+    /// Artifacts that failed verification/boot/install after fetching.
+    pub install_failures: u64,
+}
+
+struct Gate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct GateState {
+    stop: bool,
+    kicked: bool,
+}
+
+/// Background peer-repair loop bound to one router. Stop it with
+/// [`Repairer::stop`] (dropping it also stops it).
+pub struct Repairer {
+    gate: Arc<Gate>,
+    counters: Arc<Counters>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Repairer {
+    /// Start repairing `router` against `peers` (wire front-end
+    /// addresses, typically this model range's placement peers). Also
+    /// registers the router's missing-model hook so a `no_model` hit on
+    /// the serving path triggers an immediate pass.
+    pub fn start(router: Router, peers: Vec<String>, cfg: RepairCfg) -> Repairer {
+        let gate = Arc::new(Gate {
+            state: Mutex::new(GateState::default()),
+            cv: Condvar::new(),
+        });
+        let counters = Arc::new(Counters::default());
+        let hook_gate = Arc::clone(&gate);
+        router.on_missing_model(move |_model| {
+            let mut st = hook_gate.state.lock().unwrap();
+            st.kicked = true;
+            hook_gate.cv.notify_all();
+        });
+        let loop_gate = Arc::clone(&gate);
+        let loop_counters = Arc::clone(&counters);
+        let thread = std::thread::Builder::new()
+            .name("qnn-repair".into())
+            .spawn(move || repair_loop(router, peers, cfg, loop_gate, loop_counters))
+            .expect("spawn repair thread");
+        Repairer {
+            gate,
+            counters,
+            thread: Some(thread),
+        }
+    }
+
+    /// Request an immediate pass (idempotent; coalesces with a pass
+    /// already pending).
+    pub fn kick(&self) {
+        let mut st = self.gate.state.lock().unwrap();
+        st.kicked = true;
+        self.gate.cv.notify_all();
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> RepairStats {
+        RepairStats {
+            passes: self.counters.passes.load(Ordering::Relaxed),
+            installed: self.counters.installed.load(Ordering::Relaxed),
+            bytes_fetched: self.counters.bytes_fetched.load(Ordering::Relaxed),
+            retries: self.counters.retries.load(Ordering::Relaxed),
+            skipped_draining: self.counters.skipped_draining.load(Ordering::Relaxed),
+            peer_failures: self.counters.peer_failures.load(Ordering::Relaxed),
+            install_failures: self.counters.install_failures.load(Ordering::Relaxed),
+        }
+    }
+
+    fn stop_impl(&mut self) {
+        {
+            let mut st = self.gate.state.lock().unwrap();
+            st.stop = true;
+            self.gate.cv.notify_all();
+        }
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Stop the loop and join its thread. A pass in flight finishes
+    /// its current artifact first (installs stay atomic).
+    pub fn stop(mut self) {
+        self.stop_impl();
+    }
+}
+
+impl Drop for Repairer {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+fn repair_loop(
+    router: Router,
+    peers: Vec<String>,
+    cfg: RepairCfg,
+    gate: Arc<Gate>,
+    counters: Arc<Counters>,
+) {
+    let mut rng = Xoshiro256::new(cfg.seed);
+    loop {
+        // Wait out the interval — or a kick, whichever first.
+        {
+            let mut st = gate.state.lock().unwrap();
+            if !st.stop && !st.kicked {
+                let (next, _timeout) = gate
+                    .cv
+                    .wait_timeout_while(st, cfg.interval, |s| !s.stop && !s.kicked)
+                    .unwrap();
+                st = next;
+            }
+            if st.stop {
+                return;
+            }
+            st.kicked = false;
+        }
+        run_pass(&router, &peers, &cfg, &counters, &mut rng);
+        counters.passes.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+fn client_cfg(cfg: &RepairCfg) -> NetClientCfg {
+    NetClientCfg {
+        connect_timeout: Some(cfg.connect_timeout),
+        read_timeout: Some(cfg.io_timeout),
+        write_timeout: Some(cfg.io_timeout),
+    }
+}
+
+/// One pass: visit every peer, diff, fetch, install. Failures are
+/// per-peer and per-artifact — one sick peer never blocks healing from
+/// the rest.
+fn run_pass(
+    router: &Router,
+    peers: &[String],
+    cfg: &RepairCfg,
+    counters: &Counters,
+    rng: &mut Xoshiro256,
+) {
+    for peer in peers {
+        let mut client = match NetClient::connect_with(peer.as_str(), client_cfg(cfg)) {
+            Ok(c) => c,
+            Err(_) => {
+                counters.peer_failures.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        };
+        let pong = match client.ping() {
+            Ok(p) => p,
+            Err(_) => {
+                counters.peer_failures.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        };
+        if pong.draining {
+            // Never fetch from a peer on its way out.
+            counters.skipped_draining.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        // Digest parity = identical artifact sets; the common steady
+        // state costs one ping per peer per pass. (Recomputed per peer:
+        // an install from the previous peer changes ours.)
+        if pong.digest == router.store_digest() {
+            continue;
+        }
+        let manifest = match client.fetch_manifest() {
+            Ok(m) => m,
+            Err(_) => {
+                counters.peer_failures.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        };
+        for entry in manifest {
+            if !wanted(router, &entry) {
+                continue;
+            }
+            match fetch_artifact(peer, &entry, cfg, counters, rng) {
+                Ok(bytes) => {
+                    match router.install_artifact(&entry.model, &bytes, Some(entry.checksum)) {
+                        Ok(()) => {
+                            counters.installed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            counters.install_failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                Err(_) => {
+                    counters.install_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Should we pull this peer artifact? Missing → yes. Present with a
+/// different checksum → only when the peer's version is strictly
+/// newer; same-version/different-bytes is divergence we must not flap
+/// on (two peers would otherwise trade the model back and forth
+/// forever).
+fn wanted(router: &Router, entry: &ManifestEntry) -> bool {
+    let store = match router.store() {
+        Some(s) => s,
+        None => return false,
+    };
+    match store.entry(&entry.model) {
+        None => true,
+        Some(local) => local.checksum != entry.checksum && entry.version > local.version,
+    }
+}
+
+/// Pull one artifact, chunk by chunk. Any failure reconnects and
+/// resumes from the last good offset; attempts are bounded with
+/// exponential backoff plus seeded jitter. The assembled bytes are
+/// verified against the manifest checksum before they are returned.
+fn fetch_artifact(
+    peer: &str,
+    entry: &ManifestEntry,
+    cfg: &RepairCfg,
+    counters: &Counters,
+    rng: &mut Xoshiro256,
+) -> Result<Vec<u8>> {
+    let mut buf: Vec<u8> = Vec::with_capacity(entry.len.min(1 << 24) as usize);
+    let mut client: Option<NetClient> = None;
+    let mut attempt = 0usize;
+    let started = Instant::now();
+    while (buf.len() as u64) < entry.len {
+        // Hard stop: a peer that keeps accepting but never makes
+        // progress must not wedge the loop forever.
+        if started.elapsed() > cfg.io_timeout * (cfg.max_retries as u32 + 2).max(4) {
+            anyhow::bail!(
+                "fetch of {:?} from {peer} stalled at {}/{} bytes",
+                entry.model,
+                buf.len(),
+                entry.len
+            );
+        }
+        let step: std::result::Result<(u64, Vec<u8>), ClientError> = match client.as_mut() {
+            Some(c) => c.fetch_chunk(&entry.model, buf.len() as u64, cfg.chunk_len),
+            None => match NetClient::connect_with(peer, client_cfg(cfg)) {
+                Ok(c) => {
+                    client = Some(c);
+                    client
+                        .as_mut()
+                        .unwrap()
+                        .fetch_chunk(&entry.model, buf.len() as u64, cfg.chunk_len)
+                }
+                Err(e) => Err(ClientError::Io(e)),
+            },
+        };
+        match step {
+            Ok((total, data)) => {
+                anyhow::ensure!(
+                    total == entry.len,
+                    "peer {peer} changed {:?} mid-fetch ({} -> {total} bytes); retrying next pass",
+                    entry.model,
+                    entry.len
+                );
+                anyhow::ensure!(
+                    !data.is_empty(),
+                    "peer {peer} ended {:?} early at {}/{} bytes",
+                    entry.model,
+                    buf.len(),
+                    entry.len
+                );
+                counters
+                    .bytes_fetched
+                    .fetch_add(data.len() as u64, Ordering::Relaxed);
+                buf.extend_from_slice(&data);
+                // Progress resets the retry budget: only consecutive
+                // failures count against it.
+                attempt = 0;
+            }
+            Err(e) => {
+                // The stream state is suspect after any failure —
+                // reconnect, then resume from buf.len().
+                client = None;
+                attempt += 1;
+                counters.retries.fetch_add(1, Ordering::Relaxed);
+                if attempt > cfg.max_retries {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "fetching {:?} from {peer}: gave up after {} consecutive failures \
+                             at offset {}",
+                            entry.model,
+                            attempt - 1,
+                            buf.len()
+                        )
+                    });
+                }
+                std::thread::sleep(backoff(cfg, attempt, rng));
+            }
+        }
+    }
+    let sum = fnv1a(&buf);
+    anyhow::ensure!(
+        sum == entry.checksum,
+        "artifact {:?} fetched from {peer} fails its manifest checksum \
+         (got {sum:#018x}, want {:#018x})",
+        entry.model,
+        entry.checksum
+    );
+    Ok(buf)
+}
+
+/// Exponential backoff with seeded jitter: `base·2^(attempt-1)` capped
+/// at `max`, plus up to half of itself again, so simultaneous healers
+/// desynchronize.
+fn backoff(cfg: &RepairCfg, attempt: usize, rng: &mut Xoshiro256) -> Duration {
+    let exp = cfg
+        .base_backoff
+        .saturating_mul(1u32 << (attempt - 1).min(16) as u32)
+        .min(cfg.max_backoff);
+    let jitter_us = if exp.as_micros() > 1 {
+        rng.next_u64() % (exp.as_micros() as u64 / 2)
+    } else {
+        0
+    };
+    exp + Duration::from_micros(jitter_us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::net::NetServer;
+    use crate::nn::{ActSpec, NetSpec, Network};
+    use crate::util::rng::Xoshiro256 as Rng;
+
+    fn mk_artifact(dir: &std::path::Path, name: &str, seed: u64) -> Vec<u8> {
+        let spec = NetSpec::mlp(name, 4, &[4], 2, ActSpec::tanh_d(16));
+        let net = Network::from_spec(&spec, &mut Rng::new(seed));
+        let path = dir.join(format!("{name}.qnn"));
+        net.save(path.to_str().unwrap()).unwrap();
+        std::fs::read(&path).unwrap()
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("qnn_repair_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fast_cfg() -> RepairCfg {
+        RepairCfg {
+            interval: Duration::from_millis(20),
+            chunk_len: 64, // many chunks even for tiny artifacts
+            ..RepairCfg::default()
+        }
+    }
+
+    #[test]
+    fn empty_replica_heals_from_peer_and_serves_bit_exact() {
+        let dir_a = temp_dir("src");
+        let dir_b = temp_dir("dst");
+        mk_artifact(&dir_a, "m", 7);
+
+        let peer_router = Router::load_dir(&dir_a).unwrap();
+        let want = peer_router.infer("m", vec![0.25; 4]).unwrap();
+        let peer = NetServer::bind("127.0.0.1:0", peer_router).unwrap();
+
+        let router = Router::open_dir(&dir_b).unwrap();
+        assert_eq!(router.model_count(), 0);
+        let repairer = Repairer::start(
+            router.clone(),
+            vec![peer.local_addr().to_string()],
+            fast_cfg(),
+        );
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while router.model_count() == 0 {
+            assert!(Instant::now() < deadline, "replica never healed");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // The healed replica answers bit-exactly what the peer does.
+        assert_eq!(router.infer("m", vec![0.25; 4]).unwrap(), want);
+        assert!(dir_b.join("m.qnn").is_file());
+        let stats = repairer.stats();
+        assert_eq!(stats.installed, 1, "{stats:?}");
+        assert!(stats.bytes_fetched > 0);
+
+        // Steady state: digests match, so further passes install
+        // nothing.
+        let before = repairer.stats().installed;
+        std::thread::sleep(Duration::from_millis(120));
+        assert_eq!(repairer.stats().installed, before);
+
+        repairer.stop();
+        router.shutdown();
+        peer.shutdown();
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn repair_never_fetches_from_a_draining_peer() {
+        let dir_a = temp_dir("drain_src");
+        let dir_b = temp_dir("drain_dst");
+        mk_artifact(&dir_a, "m", 11);
+
+        let peer = NetServer::bind("127.0.0.1:0", Router::load_dir(&dir_a).unwrap()).unwrap();
+        peer.begin_drain();
+
+        let router = Router::open_dir(&dir_b).unwrap();
+        let repairer = Repairer::start(
+            router.clone(),
+            vec![peer.local_addr().to_string()],
+            fast_cfg(),
+        );
+        // Give it several passes' worth of chances to misbehave.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while repairer.stats().skipped_draining < 3 {
+            assert!(Instant::now() < deadline, "loop never visited the peer");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(router.model_count(), 0, "fetched from a draining peer");
+        assert_eq!(repairer.stats().installed, 0);
+
+        repairer.stop();
+        router.shutdown();
+        peer.shutdown();
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn missing_model_hit_kicks_an_immediate_pass() {
+        let dir_a = temp_dir("kick_src");
+        let dir_b = temp_dir("kick_dst");
+        mk_artifact(&dir_a, "m", 13);
+
+        let peer = NetServer::bind("127.0.0.1:0", Router::load_dir(&dir_a).unwrap()).unwrap();
+        let router = Router::open_dir(&dir_b).unwrap();
+        // Interval far beyond the test horizon: only a kick can heal.
+        let repairer = Repairer::start(
+            router.clone(),
+            vec![peer.local_addr().to_string()],
+            RepairCfg {
+                interval: Duration::from_secs(3600),
+                chunk_len: 64,
+                ..RepairCfg::default()
+            },
+        );
+        // Let the loop park in its interval wait first.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(repairer.stats().passes, 0);
+        // A no_model hit on the serving path (here: direct note) kicks.
+        router.note_missing("m");
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while router.model_count() == 0 {
+            assert!(Instant::now() < deadline, "kick never triggered a pass");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(router.infer("m", vec![0.0; 4]).is_ok());
+
+        repairer.stop();
+        router.shutdown();
+        peer.shutdown();
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn stale_version_is_refetched_but_same_version_divergence_is_not() {
+        let r = Router::new();
+        // No store: nothing is ever wanted.
+        assert!(!wanted(
+            &r,
+            &ManifestEntry { model: "m".into(), version: 3, len: 10, checksum: 1 }
+        ));
+        r.shutdown();
+    }
+}

@@ -7,19 +7,227 @@
 //! directory of `.qnn` artifacts and it boots a server per model file —
 //! integer LUT artifacts and float networks alike, dispatched on the
 //! file magic.
+//!
+//! # Self-healing store
+//!
+//! The router is the *store* layer of the self-healing artifact tier:
+//!
+//! * The model map lives behind an `RwLock`, so
+//!   [`Router::install_artifact`] can register a model **live** —
+//!   tmp-file write → checksum verify → atomic rename → map swap —
+//!   without disturbing in-flight requests (they finish on the replaced
+//!   server, which drains gracefully after the swap).
+//! * Unparseable artifacts found at boot are **quarantined**: moved to
+//!   a `quarantine/` subdirectory with a `<file>.reason` sidecar
+//!   explaining why, instead of being re-parsed (and re-failed) every
+//!   boot.
+//! * [`Router::open_dir`] boots *tolerantly* — a replica whose artifact
+//!   dir was emptied or corrupted still comes up (serving `no_model`)
+//!   so the repair loop ([`super::repair`]) can refill it over the
+//!   wire. [`Router::load_dir`] keeps the strict contract: no models,
+//!   no boot.
+//! * The attached [`ArtifactStore`] serves the manifest/fetch wire
+//!   frames (off the inference path) and computes the inventory digest
+//!   the health pong carries.
 
-use super::engine::load_backend;
+use super::engine::{load_backend, load_backend_as, Backend};
 use super::server::{Server, ServerCfg, ServerHandle};
+use super::wire::{inventory_digest, ManifestEntry};
+use crate::runtime::qnn_artifact::artifact_version;
+use crate::util::fnv::fnv1a;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::io::{Read, Seek};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
 
-/// Routes requests to named backends.
+/// Server-side clamp on one fetch chunk's payload: far under
+/// [`super::wire::MAX_FRAME_LEN`], large enough that even big artifacts
+/// move in a handful of round trips.
+pub const FETCH_CHUNK_CAP: u32 = 1 << 20;
+
+/// The on-disk side of a served artifact directory: per-model manifest
+/// entries (version, length, FNV-1a checksum) plus chunked reads for
+/// the fetch frames. Shared by both front-ends; all methods are
+/// lock-cheap and off the inference path.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    entries: RwLock<BTreeMap<String, ManifestEntry>>,
+}
+
+impl ArtifactStore {
+    pub(crate) fn with_entries(
+        dir: PathBuf,
+        entries: BTreeMap<String, ManifestEntry>,
+    ) -> ArtifactStore {
+        ArtifactStore { dir, entries: RwLock::new(entries) }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The canonical artifact path for a model in this store.
+    pub fn path_for(&self, model: &str) -> PathBuf {
+        self.dir.join(format!("{model}.qnn"))
+    }
+
+    /// Every entry, in name order.
+    pub fn manifest(&self) -> Vec<ManifestEntry> {
+        self.entries.read().unwrap().values().cloned().collect()
+    }
+
+    pub fn entry(&self, model: &str) -> Option<ManifestEntry> {
+        self.entries.read().unwrap().get(model).cloned()
+    }
+
+    /// Inventory digest over the store ([`inventory_digest`]) — what the
+    /// health pong carries so peers spot divergence in one frame.
+    pub fn digest(&self) -> u64 {
+        let entries = self.entries.read().unwrap();
+        inventory_digest(entries.values().map(|e| (e.model.as_str(), e.checksum)))
+    }
+
+    fn register(&self, entry: ManifestEntry) {
+        self.entries.write().unwrap().insert(entry.model.clone(), entry);
+    }
+
+    /// Read up to `max_len` bytes of `model`'s artifact at `offset`
+    /// (clamped to [`FETCH_CHUNK_CAP`]). `Ok(None)` when the model is
+    /// not in the store; an offset at or past the end returns an empty
+    /// chunk with the total length, so a fetcher can always learn where
+    /// the artifact ends.
+    pub fn read_chunk(
+        &self,
+        model: &str,
+        offset: u64,
+        max_len: u32,
+    ) -> Result<Option<(u64, Vec<u8>)>> {
+        let entry = match self.entry(model) {
+            Some(e) => e,
+            None => return Ok(None),
+        };
+        let total = entry.len;
+        if offset >= total {
+            return Ok(Some((total, Vec::new())));
+        }
+        let want = (max_len.min(FETCH_CHUNK_CAP) as u64).min(total - offset) as usize;
+        let path = self.path_for(model);
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("opening artifact {path:?} for fetch"))?;
+        f.seek(std::io::SeekFrom::Start(offset))
+            .with_context(|| format!("seeking to {offset} in {path:?}"))?;
+        let mut data = vec![0u8; want];
+        let mut got = 0;
+        while got < want {
+            match f.read(&mut data[got..]) {
+                Ok(0) => break,
+                Ok(n) => got += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).with_context(|| format!("reading {path:?}")),
+            }
+        }
+        data.truncate(got);
+        Ok(Some((total, data)))
+    }
+}
+
+/// Move a bad artifact into `dir/quarantine/` with a `<file>.reason`
+/// sidecar. Best-effort: a quarantine that fails (exotic permissions)
+/// must not take the boot down, so errors are folded into the reason
+/// string the caller records.
+fn quarantine(dir: &Path, path: &Path, file: &str, reason: &str) -> String {
+    let qdir = dir.join("quarantine");
+    let attempt = std::fs::create_dir_all(&qdir)
+        .map_err(anyhow::Error::from)
+        .and_then(|_| {
+            std::fs::rename(path, qdir.join(file))?;
+            std::fs::write(qdir.join(format!("{file}.reason")), reason)?;
+            Ok(())
+        });
+    match attempt {
+        Ok(()) => format!("{reason} [quarantined to {}]", qdir.join(file).display()),
+        Err(e) => format!("{reason} [quarantine failed: {e}]"),
+    }
+}
+
+pub(crate) struct ScannedDir {
+    /// `.qnn` files seen (booted or quarantined).
+    pub files_seen: usize,
+    /// Booted backends with their manifest entries, in name order.
+    pub booted: Vec<(String, Arc<dyn Backend>, ManifestEntry)>,
+    /// `(file name, reason)` for artifacts moved to quarantine.
+    pub quarantined: Vec<(String, String)>,
+}
+
+/// Scan an artifact directory: boot every parseable `.qnn` file,
+/// quarantine the rest. Shared by [`Router::open_dir`] and the
+/// reactor's `bind_dir`.
+pub(crate) fn scan_artifact_dir(dir: &Path) -> Result<ScannedDir> {
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading artifact directory {dir:?}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.is_file() && p.extension().map(|e| e == "qnn").unwrap_or(false))
+        .collect();
+    paths.sort();
+    let mut scanned = ScannedDir {
+        files_seen: paths.len(),
+        booted: Vec::new(),
+        quarantined: Vec::new(),
+    };
+    for path in paths {
+        let file = path
+            .file_name()
+            .map(|f| f.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        let loaded = std::fs::read(&path)
+            .with_context(|| format!("reading artifact {path:?}"))
+            .and_then(|bytes| load_backend(&path).map(|b| (bytes, b)));
+        match loaded {
+            Ok((bytes, backend)) => {
+                let name = backend.name().to_string();
+                let entry = ManifestEntry {
+                    model: name.clone(),
+                    version: artifact_version(&bytes).unwrap_or(0),
+                    len: bytes.len() as u64,
+                    checksum: fnv1a(&bytes),
+                };
+                scanned.booted.push((name, backend, entry));
+            }
+            Err(e) => {
+                let why = quarantine(dir, &path, &file, &format!("{e:#}"));
+                scanned.quarantined.push((file, why));
+            }
+        }
+    }
+    Ok(scanned)
+}
+
+struct Inner {
+    servers: RwLock<BTreeMap<String, Server>>,
+    /// `(file name, error chain)` for artifacts that failed to boot —
+    /// the healthy rest keep serving.
+    load_errors: Mutex<Vec<(String, String)>>,
+    /// Present when the router was booted from a directory; the
+    /// manifest/fetch wire frames and [`Router::install_artifact`] need
+    /// it.
+    store: Mutex<Option<Arc<ArtifactStore>>>,
+    /// Config applied to hot-installed servers.
+    cfg: Mutex<ServerCfg>,
+    /// Observer for `no_model` hits — the repair loop hooks this to
+    /// trigger an immediate pass when traffic wants a model this
+    /// replica should own but lacks.
+    missing_hook: Mutex<Option<Arc<dyn Fn(&str) + Send + Sync>>>,
+}
+
+/// Routes requests to named backends. Cheap to clone (shared state): a
+/// front-end, the repair loop and the owner can all hold the same
+/// router, and a model installed by one is immediately visible to the
+/// others.
+#[derive(Clone)]
 pub struct Router {
-    servers: BTreeMap<String, Server>,
-    /// `(file name, error chain)` for artifacts that failed to boot in
-    /// [`Router::load_dir`] — the healthy rest keep serving.
-    load_errors: Vec<(String, String)>,
+    inner: Arc<Inner>,
 }
 
 impl Default for Router {
@@ -31,8 +239,13 @@ impl Default for Router {
 impl Router {
     pub fn new() -> Router {
         Router {
-            servers: BTreeMap::new(),
-            load_errors: Vec::new(),
+            inner: Arc::new(Inner {
+                servers: RwLock::new(BTreeMap::new()),
+                load_errors: Mutex::new(Vec::new()),
+                store: Mutex::new(None),
+                cfg: Mutex::new(ServerCfg::default()),
+                missing_hook: Mutex::new(None),
+            }),
         }
     }
 
@@ -40,9 +253,10 @@ impl Router {
     /// server. Model names are the file stems.
     ///
     /// A corrupt or unreadable artifact does not take the deployment
-    /// down: it is skipped and recorded in [`Router::load_errors`]
-    /// (surfaced by [`Router::report`]). Only when *nothing* boots is
-    /// the whole load an error.
+    /// down: it is quarantined (moved to `dir/quarantine/` with a
+    /// reason sidecar), recorded in [`Router::load_errors`] and
+    /// surfaced by [`Router::report`]. Only when *nothing* boots is the
+    /// whole load an error.
     pub fn load_dir(dir: impl AsRef<Path>) -> Result<Router> {
         Self::load_dir_with(dir, ServerCfg::default())
     }
@@ -50,34 +264,14 @@ impl Router {
     /// [`Self::load_dir`] with an explicit server configuration.
     pub fn load_dir_with(dir: impl AsRef<Path>, cfg: ServerCfg) -> Result<Router> {
         let dir = dir.as_ref();
-        let mut paths: Vec<_> = std::fs::read_dir(dir)
-            .with_context(|| format!("reading artifact directory {dir:?}"))?
-            .filter_map(|e| e.ok())
-            .map(|e| e.path())
-            .filter(|p| p.extension().map(|e| e == "qnn").unwrap_or(false))
-            .collect();
-        paths.sort();
-        anyhow::ensure!(!paths.is_empty(), "no .qnn artifacts found in {dir:?}");
-        let mut router = Router::new();
-        for path in paths {
-            let file = path
-                .file_name()
-                .map(|f| f.to_string_lossy().into_owned())
-                .unwrap_or_else(|| path.display().to_string());
-            match load_backend(&path) {
-                Ok(backend) => {
-                    let name = backend.name().to_string();
-                    router.register(&name, Server::start(backend, cfg.clone()));
-                }
-                Err(e) => router.load_errors.push((file, format!("{e:#}"))),
+        let router = Self::open_dir_with(dir, cfg)?;
+        if router.model_count() == 0 {
+            let errors = router.load_errors();
+            if errors.is_empty() {
+                anyhow::bail!("no .qnn artifacts found in {dir:?}");
             }
-        }
-        if router.servers.is_empty() {
-            let detail: Vec<String> = router
-                .load_errors
-                .iter()
-                .map(|(f, e)| format!("{f}: {e}"))
-                .collect();
+            let detail: Vec<String> =
+                errors.iter().map(|(f, e)| format!("{f}: {e}")).collect();
             anyhow::bail!(
                 "no artifact in {dir:?} could be booted: {}",
                 detail.join("; ")
@@ -86,34 +280,191 @@ impl Router {
         Ok(router)
     }
 
-    /// Artifacts skipped by [`Router::load_dir`]: `(file name, error)`.
-    pub fn load_errors(&self) -> &[(String, String)] {
-        &self.load_errors
+    /// Tolerant boot for self-healing replicas: come up with whatever
+    /// parses — possibly **zero models** — quarantine the rest, and
+    /// attach the artifact store so [`Router::install_artifact`] (fed
+    /// by the repair loop) can refill the map live. The strict
+    /// [`Router::load_dir`] is this plus a nothing-booted error.
+    pub fn open_dir(dir: impl AsRef<Path>) -> Result<Router> {
+        Self::open_dir_with(dir, ServerCfg::default())
     }
 
-    pub fn register(&mut self, name: &str, server: Server) {
-        self.servers.insert(name.to_string(), server);
+    /// [`Self::open_dir`] with an explicit server configuration.
+    pub fn open_dir_with(dir: impl AsRef<Path>, cfg: ServerCfg) -> Result<Router> {
+        let dir = dir.as_ref();
+        let scanned = scan_artifact_dir(dir)?;
+        let router = Router::new();
+        *router.inner.cfg.lock().unwrap() = cfg.clone();
+        let mut entries = BTreeMap::new();
+        for (name, backend, entry) in scanned.booted {
+            entries.insert(name.clone(), entry);
+            router.register(&name, Server::start(backend, cfg.clone()));
+        }
+        *router.inner.load_errors.lock().unwrap() = scanned.quarantined;
+        *router.inner.store.lock().unwrap() =
+            Some(Arc::new(ArtifactStore::with_entries(dir.to_path_buf(), entries)));
+        Ok(router)
     }
 
-    pub fn models(&self) -> Vec<&str> {
-        self.servers.keys().map(|s| s.as_str()).collect()
+    /// Artifacts skipped at boot: `(file name, error)`. They have been
+    /// moved to the directory's `quarantine/` subdir.
+    pub fn load_errors(&self) -> Vec<(String, String)> {
+        self.inner.load_errors.lock().unwrap().clone()
+    }
+
+    /// Register a running server under a name, replacing (and
+    /// gracefully draining) any server previously registered there.
+    pub fn register(&self, name: &str, server: Server) {
+        let old = {
+            let mut servers = self.inner.servers.write().unwrap();
+            servers.insert(name.to_string(), server)
+        };
+        if let Some(old) = old {
+            old.shutdown();
+        }
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.inner.servers.read().unwrap().keys().cloned().collect()
+    }
+
+    pub fn model_count(&self) -> usize {
+        self.inner.servers.read().unwrap().len()
     }
 
     pub fn handle(&self, name: &str) -> Result<ServerHandle> {
-        self.servers
+        self.inner
+            .servers
+            .read()
+            .unwrap()
             .get(name)
             .map(|s| s.handle())
             .ok_or_else(|| anyhow::anyhow!("no model {name:?} (have {:?})", self.models()))
     }
 
-    /// Submission handles for every served model (cheap clones) — the
-    /// routing table the TCP front-end hands each connection, so the
-    /// per-request path never touches the router itself.
+    /// Submission handles for every served model (cheap clones) — a
+    /// point-in-time snapshot of the routing table. Front-ends that
+    /// must observe hot installs look up per request via
+    /// [`Router::handle`] instead.
     pub fn handles(&self) -> BTreeMap<String, ServerHandle> {
-        self.servers
+        self.inner
+            .servers
+            .read()
+            .unwrap()
             .iter()
             .map(|(name, s)| (name.clone(), s.handle()))
             .collect()
+    }
+
+    /// Total queued requests across every model — the health pong's
+    /// coarse load signal.
+    pub fn queued_total(&self) -> u32 {
+        self.inner
+            .servers
+            .read()
+            .unwrap()
+            .values()
+            .map(|s| s.handle().queued() as u32)
+            .sum()
+    }
+
+    /// The artifact store, when this router was booted from a
+    /// directory — the manifest/fetch serving surface.
+    pub fn store(&self) -> Option<Arc<ArtifactStore>> {
+        self.inner.store.lock().unwrap().clone()
+    }
+
+    /// Manifest of dir-backed artifacts (empty when the router was
+    /// assembled via [`Router::register`] alone).
+    pub fn manifest(&self) -> Vec<ManifestEntry> {
+        self.store().map(|s| s.manifest()).unwrap_or_default()
+    }
+
+    /// Inventory digest for the health pong (0 without a store).
+    pub fn store_digest(&self) -> u64 {
+        self.store().map(|s| s.digest()).unwrap_or(0)
+    }
+
+    /// Install an artifact from bytes fetched off a peer (or produced
+    /// locally): verify the checksum, write a tmp file, prove it boots,
+    /// atomically rename it into the artifact dir, then swap the new
+    /// server into the live map. In-flight requests on the replaced
+    /// model finish on the old server (drained gracefully after the
+    /// swap); a request never observes a torn model.
+    pub fn install_artifact(
+        &self,
+        name: &str,
+        bytes: &[u8],
+        expected_checksum: Option<u64>,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            !name.is_empty()
+                && name.len() <= 255
+                && !name.contains('/')
+                && !name.contains('\\')
+                && !name.contains(".."),
+            "refusing install under suspicious model name {name:?}"
+        );
+        let store = self
+            .store()
+            .context("router has no artifact dir (boot via open_dir/load_dir)")?;
+        let sum = fnv1a(bytes);
+        if let Some(want) = expected_checksum {
+            anyhow::ensure!(
+                sum == want,
+                "artifact {name:?} checksum mismatch before install \
+                 (got {sum:#018x}, manifest says {want:#018x})"
+            );
+        }
+        let version = artifact_version(bytes)
+            .with_context(|| format!("artifact {name:?} has no recognizable magic"))?;
+        let tmp = store.dir().join(format!("{name}.qnn.part"));
+        std::fs::write(&tmp, bytes).with_context(|| format!("writing {tmp:?}"))?;
+        // Re-read and re-checksum: what the rename publishes is what the
+        // disk actually holds, not what we think we wrote.
+        let disk = std::fs::read(&tmp).with_context(|| format!("reading back {tmp:?}"))?;
+        if fnv1a(&disk) != sum {
+            std::fs::remove_file(&tmp).ok();
+            anyhow::bail!("tmp artifact {tmp:?} did not survive the disk round trip");
+        }
+        // Prove the bytes boot *before* they can ever be served.
+        let backend = match load_backend_as(&tmp, name) {
+            Ok(b) => b,
+            Err(e) => {
+                std::fs::remove_file(&tmp).ok();
+                return Err(e).with_context(|| format!("artifact {name:?} does not boot"));
+            }
+        };
+        let path = store.path_for(name);
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("moving artifact into place at {path:?}"))?;
+        let cfg = self.inner.cfg.lock().unwrap().clone();
+        let server = Server::start(backend, cfg);
+        store.register(ManifestEntry {
+            model: name.to_string(),
+            version,
+            len: bytes.len() as u64,
+            checksum: sum,
+        });
+        // `register` swaps under the write lock and drains the old
+        // server after the swap — the live-reload moment.
+        self.register(name, server);
+        Ok(())
+    }
+
+    /// Hook invoked (with the model name) whenever a front-end answers
+    /// `no_model` — the repair loop registers itself here so a miss on
+    /// a model this replica should own triggers an immediate pass.
+    pub fn on_missing_model(&self, hook: impl Fn(&str) + Send + Sync + 'static) {
+        *self.inner.missing_hook.lock().unwrap() = Some(Arc::new(hook));
+    }
+
+    /// Report a `no_model` hit (called by front-ends).
+    pub fn note_missing(&self, model: &str) {
+        let hook = self.inner.missing_hook.lock().unwrap().clone();
+        if let Some(hook) = hook {
+            hook(model);
+        }
     }
 
     /// Blocking inference through a named model.
@@ -123,7 +474,10 @@ impl Router {
 
     /// Model-memory footprint in bytes, per model name.
     pub fn memory_bytes(&self) -> BTreeMap<String, usize> {
-        self.servers
+        self.inner
+            .servers
+            .read()
+            .unwrap()
             .iter()
             .map(|(name, s)| (name.clone(), s.backend.memory_bytes()))
             .collect()
@@ -132,7 +486,7 @@ impl Router {
     /// Metrics + memory line for every model.
     pub fn report(&self) -> String {
         let mut s = String::new();
-        for (name, server) in &self.servers {
+        for (name, server) in self.inner.servers.read().unwrap().iter() {
             s.push_str(&format!(
                 "{name} [{}] mem={:.1} KB: {}\n",
                 server.engine_name,
@@ -140,15 +494,17 @@ impl Router {
                 server.metrics.snapshot()
             ));
         }
-        for (file, err) in &self.load_errors {
+        for (file, err) in self.inner.load_errors.lock().unwrap().iter() {
             s.push_str(&format!("SKIPPED {file}: {err}\n"));
         }
         s
     }
 
-    /// Shut all servers down.
+    /// Shut all servers down (drains each). Other clones of this router
+    /// see an empty map afterwards.
     pub fn shutdown(self) {
-        for (_, s) in self.servers {
+        let servers = std::mem::take(&mut *self.inner.servers.write().unwrap());
+        for (_, s) in servers {
             s.shutdown();
         }
     }
@@ -182,7 +538,7 @@ mod tests {
 
     #[test]
     fn routes_by_name() {
-        let mut r = Router::new();
+        let r = Router::new();
         r.register("a", Server::start(Arc::new(ConstEngine(1.0)), ServerCfg::default()));
         r.register("b", Server::start(Arc::new(ConstEngine(2.0)), ServerCfg::default()));
         assert_eq!(r.infer("a", vec![0.0, 0.0]).unwrap(), vec![1.0]);
@@ -192,6 +548,22 @@ mod tests {
         assert!(r.report().contains("a [const]"));
         assert!(r.report().contains("mem="));
         assert_eq!(r.memory_bytes()["a"], 4);
+        // No artifact dir: no manifest, digest 0, installs refused.
+        assert!(r.manifest().is_empty());
+        assert_eq!(r.store_digest(), 0);
+        assert!(r.install_artifact("x", b"junk", None).is_err());
+        r.shutdown();
+    }
+
+    #[test]
+    fn register_replaces_and_drains_the_old_server() {
+        let r = Router::new();
+        r.register("m", Server::start(Arc::new(ConstEngine(1.0)), ServerCfg::default()));
+        let old_handle = r.handle("m").unwrap();
+        r.register("m", Server::start(Arc::new(ConstEngine(2.0)), ServerCfg::default()));
+        assert_eq!(r.infer("m", vec![0.0, 0.0]).unwrap(), vec![2.0]);
+        // The replaced server was drained: its handle now refuses work.
+        assert!(old_handle.infer(vec![0.0, 0.0]).is_err());
         r.shutdown();
     }
 
@@ -202,15 +574,21 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let e = Router::load_dir(&dir).unwrap_err();
         assert!(format!("{e:#}").contains("no .qnn artifacts"), "{e:#}");
+        // The tolerant boot accepts the same empty dir with zero models.
+        let r = Router::open_dir(&dir).unwrap();
+        assert_eq!(r.model_count(), 0);
+        assert!(r.manifest().is_empty());
+        r.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    fn load_dir_skips_corrupt_artifacts_and_records_why() {
+    fn load_dir_quarantines_corrupt_artifacts_and_records_why() {
         use crate::nn::{ActSpec, NetSpec, Network};
         use crate::util::rng::Xoshiro256;
 
         let dir = std::env::temp_dir().join(format!("qnn_rtr_corrupt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
         std::fs::create_dir_all(&dir).unwrap();
 
         // One healthy float artifact...
@@ -236,14 +614,146 @@ mod tests {
         assert!(report.contains("SKIPPED junk.qnn"), "{report}");
         assert!(router.infer("good", vec![0.0; 4]).is_ok());
 
+        // The bad files moved to quarantine/ with reason sidecars — the
+        // next boot never re-parses them.
+        let qdir = dir.join("quarantine");
+        for file in ["torn.qnn", "junk.qnn"] {
+            assert!(qdir.join(file).is_file(), "{file} not quarantined");
+            assert!(!dir.join(file).exists(), "{file} still in the serving dir");
+            let reason =
+                std::fs::read_to_string(qdir.join(format!("{file}.reason"))).unwrap();
+            assert!(!reason.trim().is_empty(), "empty reason for {file}");
+        }
+        let again = Router::load_dir(&dir).expect("reboot");
+        assert!(again.load_errors().is_empty(), "quarantined files were re-parsed");
+        again.shutdown();
+
+        // The healthy artifact is manifested with its real checksum.
+        let manifest = router.manifest();
+        assert_eq!(manifest.len(), 1);
+        assert_eq!(manifest[0].model, "good");
+        assert_eq!(manifest[0].len, bytes.len() as u64);
+        assert_eq!(manifest[0].checksum, fnv1a(&bytes));
+        assert_ne!(router.store_digest(), 0);
+
         // A directory of *only* corrupt artifacts is a hard error that
         // names every casualty.
-        std::fs::remove_file(&good).unwrap();
-        let e = Router::load_dir(&dir).unwrap_err();
+        let dir2 = std::env::temp_dir().join(format!("qnn_rtr_allbad_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir2).ok();
+        std::fs::create_dir_all(&dir2).unwrap();
+        std::fs::write(dir2.join("torn.qnn"), &bytes[..bytes.len() / 2]).unwrap();
+        std::fs::write(dir2.join("junk.qnn"), b"definitely not an artifact").unwrap();
+        let e = Router::load_dir(&dir2).unwrap_err();
         let chain = format!("{e:#}");
         assert!(chain.contains("torn.qnn") && chain.contains("junk.qnn"), "{chain}");
 
         router.shutdown();
         std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    #[test]
+    fn store_chunks_roundtrip_and_clamp() {
+        use crate::nn::{ActSpec, NetSpec, Network};
+        use crate::util::rng::Xoshiro256;
+
+        let dir = std::env::temp_dir().join(format!("qnn_rtr_chunks_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = NetSpec::mlp("m", 4, &[4], 2, ActSpec::tanh_d(16));
+        let net = Network::from_spec(&spec, &mut Xoshiro256::new(5));
+        net.save(dir.join("m.qnn").to_str().unwrap()).unwrap();
+        let bytes = std::fs::read(dir.join("m.qnn")).unwrap();
+
+        let router = Router::load_dir(&dir).unwrap();
+        let store = router.store().unwrap();
+        // Reassemble via small chunks and compare bit-for-bit.
+        let mut got = Vec::new();
+        loop {
+            let (total, data) =
+                store.read_chunk("m", got.len() as u64, 37).unwrap().unwrap();
+            assert_eq!(total, bytes.len() as u64);
+            if data.is_empty() {
+                break;
+            }
+            got.extend_from_slice(&data);
+        }
+        assert_eq!(got, bytes);
+        // Unknown model: None, not an error.
+        assert!(store.read_chunk("nope", 0, 64).unwrap().is_none());
+        // Past-the-end offsets yield the empty tail chunk.
+        let (total, data) = store.read_chunk("m", u64::MAX, 64).unwrap().unwrap();
+        assert_eq!(total, bytes.len() as u64);
+        assert!(data.is_empty());
+        router.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn install_artifact_verifies_boots_and_goes_live() {
+        use crate::nn::{ActSpec, NetSpec, Network};
+        use crate::util::rng::Xoshiro256;
+
+        let dir = std::env::temp_dir().join(format!("qnn_rtr_install_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let router = Router::open_dir(&dir).unwrap();
+        assert_eq!(router.model_count(), 0);
+
+        let spec = NetSpec::mlp("fresh", 4, &[4], 2, ActSpec::tanh_d(16));
+        let net = Network::from_spec(&spec, &mut Xoshiro256::new(9));
+        let tmp = std::env::temp_dir().join(format!("qnn_install_src_{}.qnn", std::process::id()));
+        net.save(tmp.to_str().unwrap()).unwrap();
+        let bytes = std::fs::read(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+
+        // Wrong expected checksum: refused, nothing registered, no
+        // leftover tmp file.
+        let e = router.install_artifact("fresh", &bytes, Some(123)).unwrap_err();
+        assert!(format!("{e:#}").contains("checksum"), "{e:#}");
+        assert_eq!(router.model_count(), 0);
+        // Garbage bytes: refused before anything goes live.
+        assert!(router.install_artifact("fresh", b"garbage", None).is_err());
+        assert_eq!(router.model_count(), 0);
+        assert!(
+            std::fs::read_dir(&dir).unwrap().filter_map(|e| e.ok()).count() == 0,
+            "failed installs must not leave files behind"
+        );
+
+        // A good install goes live and is manifested.
+        router.install_artifact("fresh", &bytes, Some(fnv1a(&bytes))).unwrap();
+        assert_eq!(router.models(), vec!["fresh"]);
+        assert!(router.infer("fresh", vec![0.0; 4]).is_ok());
+        assert!(dir.join("fresh.qnn").is_file());
+        let m = router.manifest();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].checksum, fnv1a(&bytes));
+
+        // A reboot from the same dir serves the installed model.
+        let router2 = Router::load_dir(&dir).unwrap();
+        assert_eq!(router2.models(), vec!["fresh"]);
+        router2.shutdown();
+
+        // Hostile names never touch the filesystem.
+        assert!(router.install_artifact("../escape", &bytes, None).is_err());
+        assert!(router.install_artifact("a/b", &bytes, None).is_err());
+        router.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_model_hook_fires() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let r = Router::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        r.on_missing_model(move |name| {
+            assert_eq!(name, "ghost");
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        r.note_missing("ghost");
+        r.note_missing("ghost");
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        r.shutdown();
     }
 }

@@ -8,7 +8,9 @@
 //! magic    4 bytes  b"QWF2" (protocol major version rides in the magic)
 //! len      u32 LE   bytes after this field (kind .. checksum inclusive)
 //! kind     u8       0 = request, 1 = response, 2 = error,
-//!                   3 = health ping, 4 = health pong
+//!                   3 = health ping, 4 = health pong,
+//!                   5 = manifest request, 6 = manifest response,
+//!                   7 = fetch request, 8 = fetch chunk
 //! req id   u64 LE   caller-chosen correlation id, echoed in the reply
 //! ...kind-specific body (below)...
 //! checksum u64 LE   FNV-1a over magic .. end of body
@@ -23,8 +25,27 @@
 //! error        code u8 · retry_after_ms u32 (0 = no hint) ·
 //!              msg_len u16 · message (UTF-8)
 //! health ping  (empty)
-//! health pong  status u8 (0 = ok, 1 = draining) · models u16 · queued u32
+//! health pong  status u8 (0 = ok, 1 = draining) · models u16 ·
+//!              queued u32 · digest u64 (artifact inventory digest)
+//! manifest req (empty)
+//! manifest rsp count u16 · per model: name_len u8 · name (UTF-8) ·
+//!              version u32 · len u64 · checksum u64 (FNV-1a of the
+//!              artifact bytes)
+//! fetch req    name_len u8 · name (UTF-8) · offset u64 · max_len u32
+//! fetch chunk  name_len u8 · name (UTF-8) · offset u64 · total_len u64 ·
+//!              data_len u32 · data
 //! ```
+//!
+//! The manifest and fetch kinds are the **self-healing artifact tier**'s
+//! vocabulary: off the inference path, a replica that boots with missing
+//! or corrupt `.qnn` artifacts asks a placement peer for its manifest,
+//! diffs it against its own, and pulls what it lacks in bounded chunks.
+//! Fetches are addressed `(model, offset, max_len)` so a transfer torn
+//! by a drop or truncation resumes from the last verified offset instead
+//! of restarting; the fetched artifact is checksum-verified against the
+//! manifest entry before it is installed. The pong's inventory digest
+//! ([`inventory_digest`]) makes divergence detectable in a single
+//! health frame — equal digests mean no manifest exchange is needed.
 //!
 //! Version 2 additions (the fleet tier's reliability vocabulary):
 //!
@@ -172,6 +193,34 @@ impl ErrCode {
     }
 }
 
+/// One model's entry in a manifest response: enough to decide staleness
+/// (version), size a resumable fetch (len), and verify the reassembled
+/// bytes before install (checksum = FNV-1a over the artifact file).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub model: String,
+    pub version: u32,
+    pub len: u64,
+    pub checksum: u64,
+}
+
+/// Digest of an artifact inventory: FNV-1a over `(name_len u8 · name ·
+/// checksum u64 LE)` for every entry in **name order**. Carried in the
+/// health pong so two replicas can detect artifact divergence in one
+/// frame; both sides must feed entries the same way, so this helper is
+/// the only implementation. Entries need not arrive sorted.
+pub fn inventory_digest<'a>(entries: impl Iterator<Item = (&'a str, u64)>) -> u64 {
+    let mut sorted: Vec<(&str, u64)> = entries.collect();
+    sorted.sort_unstable_by(|a, b| a.0.cmp(b.0));
+    let mut bytes = Vec::with_capacity(sorted.len() * 24);
+    for (name, checksum) in sorted {
+        bytes.push(name.len().min(255) as u8);
+        bytes.extend_from_slice(name.as_bytes());
+        bytes.extend_from_slice(&checksum.to_le_bytes());
+    }
+    fnv1a(&bytes)
+}
+
 /// A parsed frame, borrowing the read buffer (zero-copy parse).
 #[derive(Debug, PartialEq)]
 pub enum Frame<'a> {
@@ -199,12 +248,39 @@ pub enum Frame<'a> {
     },
     /// Lightweight liveness probe (empty body).
     HealthPing { req_id: u64 },
-    /// Probe reply: drain state plus a coarse load signal.
+    /// Probe reply: drain state plus a coarse load signal and the
+    /// artifact inventory digest ([`inventory_digest`]).
     HealthPong {
         req_id: u64,
         draining: bool,
         models: u16,
         queued: u32,
+        digest: u64,
+    },
+    /// Ask a peer for its artifact manifest (empty body).
+    ManifestRequest { req_id: u64 },
+    /// The peer's artifact inventory, one entry per served model.
+    ManifestResponse {
+        req_id: u64,
+        entries: Vec<ManifestEntry>,
+    },
+    /// Ask for up to `max_len` artifact bytes starting at `offset` — the
+    /// resumable unit of a peer-repair transfer.
+    FetchRequest {
+        req_id: u64,
+        model: &'a str,
+        offset: u64,
+        max_len: u32,
+    },
+    /// One chunk of artifact bytes. `total_len` repeats the artifact's
+    /// full size on every chunk so the fetcher always knows how far it
+    /// is, even when it resumed mid-transfer.
+    FetchChunk {
+        req_id: u64,
+        model: &'a str,
+        offset: u64,
+        total_len: u64,
+        data: &'a [u8],
     },
 }
 
@@ -325,18 +401,79 @@ pub fn encode_health_ping(buf: &mut Vec<u8>, req_id: u64) {
     finish(buf);
 }
 
-/// Encode a health pong: drain state + coarse load signal.
+/// Encode a health pong: drain state + coarse load signal + artifact
+/// inventory digest ([`inventory_digest`]; 0 when the server has no
+/// artifact store to digest).
 pub fn encode_health_pong(
     buf: &mut Vec<u8>,
     req_id: u64,
     draining: bool,
     models: u16,
     queued: u32,
+    digest: u64,
 ) {
     start(buf, 4, req_id);
     buf.push(draining as u8);
     buf.extend_from_slice(&models.to_le_bytes());
     buf.extend_from_slice(&queued.to_le_bytes());
+    buf.extend_from_slice(&digest.to_le_bytes());
+    finish(buf);
+}
+
+/// Encode a manifest request (empty body).
+pub fn encode_manifest_request(buf: &mut Vec<u8>, req_id: u64) {
+    start(buf, 5, req_id);
+    finish(buf);
+}
+
+/// Encode a manifest response. Panics if an entry's model name exceeds
+/// 255 bytes or there are more than `u16::MAX` entries — names are file
+/// stems and model counts are small; enforce at the edge.
+pub fn encode_manifest_response(buf: &mut Vec<u8>, req_id: u64, entries: &[ManifestEntry]) {
+    assert!(entries.len() <= u16::MAX as usize, "manifest with {} entries", entries.len());
+    start(buf, 6, req_id);
+    buf.extend_from_slice(&(entries.len() as u16).to_le_bytes());
+    for e in entries {
+        assert!(e.model.len() <= 255, "model name longer than 255 bytes");
+        buf.push(e.model.len() as u8);
+        buf.extend_from_slice(e.model.as_bytes());
+        buf.extend_from_slice(&e.version.to_le_bytes());
+        buf.extend_from_slice(&e.len.to_le_bytes());
+        buf.extend_from_slice(&e.checksum.to_le_bytes());
+    }
+    finish(buf);
+}
+
+/// Encode a fetch request for up to `max_len` bytes of `model`'s
+/// artifact starting at `offset`.
+pub fn encode_fetch_request(buf: &mut Vec<u8>, req_id: u64, model: &str, offset: u64, max_len: u32) {
+    assert!(model.len() <= 255, "model name longer than 255 bytes");
+    start(buf, 7, req_id);
+    buf.push(model.len() as u8);
+    buf.extend_from_slice(model.as_bytes());
+    buf.extend_from_slice(&offset.to_le_bytes());
+    buf.extend_from_slice(&max_len.to_le_bytes());
+    finish(buf);
+}
+
+/// Encode one chunk of artifact bytes. The chunk plus framing must fit
+/// [`MAX_FRAME_LEN`]; servers clamp `data` well below it.
+pub fn encode_fetch_chunk(
+    buf: &mut Vec<u8>,
+    req_id: u64,
+    model: &str,
+    offset: u64,
+    total_len: u64,
+    data: &[u8],
+) {
+    assert!(model.len() <= 255, "model name longer than 255 bytes");
+    start(buf, 8, req_id);
+    buf.push(model.len() as u8);
+    buf.extend_from_slice(model.as_bytes());
+    buf.extend_from_slice(&offset.to_le_bytes());
+    buf.extend_from_slice(&total_len.to_le_bytes());
+    buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    buf.extend_from_slice(data);
     finish(buf);
 }
 
@@ -525,12 +662,49 @@ pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
             anyhow::ensure!(status <= 1, "unknown health pong status {status}");
             let models = c.u16()?;
             let queued = c.u32()?;
+            let digest = c.u64()?;
             Frame::HealthPong {
                 req_id,
                 draining: status == 1,
                 models,
                 queued,
+                digest,
             }
+        }
+        5 => Frame::ManifestRequest { req_id },
+        6 => {
+            let count = c.u16()? as usize;
+            let mut entries = Vec::with_capacity(count);
+            for _ in 0..count {
+                let name_len = c.u8()? as usize;
+                let model = c.str_bytes(name_len)?.to_string();
+                let version = c.u32()?;
+                let len = c.u64()?;
+                let checksum = c.u64()?;
+                entries.push(ManifestEntry { model, version, len, checksum });
+            }
+            Frame::ManifestResponse { req_id, entries }
+        }
+        7 => {
+            let name_len = c.u8()? as usize;
+            let model = c.str_bytes(name_len)?;
+            let offset = c.u64()?;
+            let max_len = c.u32()?;
+            Frame::FetchRequest { req_id, model, offset, max_len }
+        }
+        8 => {
+            let name_len = c.u8()? as usize;
+            let model = c.str_bytes(name_len)?;
+            let offset = c.u64()?;
+            let total_len = c.u64()?;
+            let data_len = c.u32()? as usize;
+            let data = c.take(data_len)?;
+            anyhow::ensure!(
+                offset + data.len() as u64 <= total_len,
+                "fetch chunk overruns its artifact: offset {offset} + {} > total {total_len}",
+                data.len()
+            );
+            Frame::FetchChunk { req_id, model, offset, total_len, data }
         }
         t => bail!("unknown frame kind {t}"),
     };
@@ -742,23 +916,99 @@ mod tests {
         assert!(ok);
         assert_eq!(parse_frame(&frame).unwrap(), Frame::HealthPing { req_id: 31 });
 
-        encode_health_pong(&mut buf, 31, true, 3, 17);
+        encode_health_pong(&mut buf, 31, true, 3, 17, 0xFEED);
         match parse_frame(&buf).unwrap() {
-            Frame::HealthPong { req_id, draining, models, queued } => {
+            Frame::HealthPong { req_id, draining, models, queued, digest } => {
                 assert_eq!(req_id, 31);
                 assert!(draining);
                 assert_eq!(models, 3);
                 assert_eq!(queued, 17);
+                assert_eq!(digest, 0xFEED);
             }
             f => panic!("wrong frame {f:?}"),
         }
         // An unknown pong status byte is a parse error, not a guess.
-        encode_health_pong(&mut buf, 1, false, 1, 1);
+        encode_health_pong(&mut buf, 1, false, 1, 1, 0);
         let body_end = buf.len() - 8;
         buf[HEADER_LEN + 9] = 7;
         let sum = fnv1a(&buf[..body_end]);
         buf[body_end..].copy_from_slice(&sum.to_le_bytes());
         assert!(parse_frame(&buf).is_err());
+    }
+
+    #[test]
+    fn manifest_frames_roundtrip() {
+        let mut buf = Vec::new();
+        encode_manifest_request(&mut buf, 5);
+        let (frame, ok) = roundtrip(&buf);
+        assert!(ok);
+        assert_eq!(parse_frame(&frame).unwrap(), Frame::ManifestRequest { req_id: 5 });
+
+        let entries = vec![
+            ManifestEntry { model: "digits-lut".into(), version: 3, len: 4096, checksum: 0xABCD },
+            ManifestEntry { model: "mnist".into(), version: 1, len: 1 << 20, checksum: 7 },
+        ];
+        encode_manifest_response(&mut buf, 6, &entries);
+        match parse_frame(&buf).unwrap() {
+            Frame::ManifestResponse { req_id, entries: got } => {
+                assert_eq!(req_id, 6);
+                assert_eq!(got, entries);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+
+        // The empty manifest (a replica that booted with nothing) is a
+        // legal, parseable frame.
+        encode_manifest_response(&mut buf, 7, &[]);
+        match parse_frame(&buf).unwrap() {
+            Frame::ManifestResponse { entries, .. } => assert!(entries.is_empty()),
+            f => panic!("wrong frame {f:?}"),
+        }
+    }
+
+    #[test]
+    fn fetch_frames_roundtrip() {
+        let mut buf = Vec::new();
+        encode_fetch_request(&mut buf, 9, "digits-lut", 65536, 4096);
+        match parse_frame(&buf).unwrap() {
+            Frame::FetchRequest { req_id, model, offset, max_len } => {
+                assert_eq!(req_id, 9);
+                assert_eq!(model, "digits-lut");
+                assert_eq!(offset, 65536);
+                assert_eq!(max_len, 4096);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        encode_fetch_chunk(&mut buf, 10, "digits-lut", 500, 1500, &data);
+        match parse_frame(&buf).unwrap() {
+            Frame::FetchChunk { req_id, model, offset, total_len, data: got } => {
+                assert_eq!(req_id, 10);
+                assert_eq!(model, "digits-lut");
+                assert_eq!(offset, 500);
+                assert_eq!(total_len, 1500);
+                assert_eq!(got, &data[..]);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+
+        // A chunk claiming bytes past its own total is corrupt, not a
+        // longer artifact.
+        encode_fetch_chunk(&mut buf, 11, "m", 1200, 1500, &data);
+        assert!(parse_frame(&buf).is_err());
+    }
+
+    #[test]
+    fn inventory_digest_is_order_invariant_and_content_sensitive() {
+        let a = inventory_digest([("alpha", 1u64), ("beta", 2)].into_iter());
+        let b = inventory_digest([("beta", 2u64), ("alpha", 1)].into_iter());
+        assert_eq!(a, b, "digest must not depend on iteration order");
+        let c = inventory_digest([("alpha", 1u64), ("beta", 3)].into_iter());
+        assert_ne!(a, c, "a changed checksum must change the digest");
+        let d = inventory_digest([("alpha", 1u64)].into_iter());
+        assert_ne!(a, d, "a missing model must change the digest");
+        assert_ne!(inventory_digest(std::iter::empty()), a);
     }
 
     #[test]
@@ -1103,15 +1353,20 @@ mod tests {
                         let draining = g.bool();
                         let models = (g.rng().next_u64() & 0xffff) as u16;
                         let queued = (g.rng().next_u64() & 0xffff_ffff) as u32;
-                        encode_health_pong(&mut buf, req_id, draining, models, queued);
+                        let digest = g.rng().next_u64();
+                        encode_health_pong(&mut buf, req_id, draining, models, queued, digest);
                         match parse_frame(&buf).unwrap() {
                             Frame::HealthPong {
                                 req_id: r,
                                 draining: d,
                                 models: m,
                                 queued: q,
+                                digest: ig,
                             } => {
-                                assert_eq!((r, d, m, q), (req_id, draining, models, queued));
+                                assert_eq!(
+                                    (r, d, m, q, ig),
+                                    (req_id, draining, models, queued, digest)
+                                );
                             }
                             f => panic!("wrong frame {f:?}"),
                         }

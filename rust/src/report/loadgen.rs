@@ -2,7 +2,7 @@
 //! ([`crate::coordinator::NetServer`] or
 //! [`crate::coordinator::ReactorServer`] — same wire protocol) — the
 //! serving-side perf trajectory (`BENCH_serving.json`, schema
-//! `qnn.bench_serving.v3`).
+//! `qnn.bench_serving.v4`).
 //!
 //! Three standard load shapes:
 //!
@@ -914,11 +914,42 @@ pub fn reactor_section_json(
     ])
 }
 
-/// Assemble the `qnn.bench_serving.v3` document: the runs, the wire
+/// The `heal` section of a `qnn.bench_serving.v4` document: a replica
+/// restarted with an emptied-plus-corrupted store, healing itself from
+/// a donor peer over the wire's manifest/fetch frames — how long
+/// convergence took, what the repair loop moved, what boot-time
+/// quarantine caught, and how available the healed replica is under
+/// load afterwards (the v4 gate's floor).
+pub fn heal_section_json(
+    time_to_heal_s: f64,
+    models_recovered: usize,
+    quarantined: usize,
+    bytes_fetched: u64,
+    fetch_retries: u64,
+    post_heal: &LoadReport,
+) -> Json {
+    let availability = if post_heal.sent == 0 {
+        1.0
+    } else {
+        post_heal.ok as f64 / post_heal.sent as f64
+    };
+    Json::obj(vec![
+        ("time_to_heal_s", Json::Num(time_to_heal_s)),
+        ("models_recovered", Json::Num(models_recovered as f64)),
+        ("quarantined", Json::Num(quarantined as f64)),
+        ("bytes_fetched", Json::Num(bytes_fetched as f64)),
+        ("fetch_retries", Json::Num(fetch_retries as f64)),
+        ("post_heal_availability", Json::Num(availability)),
+        ("post_heal_load", post_heal.to_json()),
+    ])
+}
+
+/// Assemble the `qnn.bench_serving.v4` document: the runs, the wire
 /// bytes-per-request comparison (the qidx headline), the best
 /// closed-loop throughput as the saturation point, and (when the bench
-/// ran them) the fleet chaos section ([`fleet_section_json`]) and the
-/// reactor connection-scaling section ([`reactor_section_json`]).
+/// ran them) the fleet chaos section ([`fleet_section_json`]), the
+/// reactor connection-scaling section ([`reactor_section_json`]) and
+/// the self-healing section ([`heal_section_json`]).
 pub fn serving_bench_doc(
     model: &str,
     input_len: usize,
@@ -926,6 +957,7 @@ pub fn serving_bench_doc(
     reports: &[LoadReport],
     fleet: Option<Json>,
     reactor: Option<Json>,
+    heal: Option<Json>,
     provenance: &str,
 ) -> Json {
     let f32_bytes = reports
@@ -943,10 +975,11 @@ pub fn serving_bench_doc(
         .filter(|r| r.mode == "closed")
         .max_by(|a, b| a.throughput_rps.total_cmp(&b.throughput_rps));
     Json::obj(vec![
-        ("schema", Json::Str("qnn.bench_serving.v3".into())),
+        ("schema", Json::Str("qnn.bench_serving.v4".into())),
         ("provenance", Json::Str(provenance.into())),
         ("fleet", fleet.unwrap_or(Json::Null)),
         ("reactor", reactor.unwrap_or(Json::Null)),
+        ("heal", heal.unwrap_or(Json::Null)),
         ("model", Json::Str(model.into())),
         ("input_len", Json::Num(input_len as f64)),
         ("output_len", Json::Num(output_len as f64)),
@@ -1004,11 +1037,12 @@ mod tests {
             report("closed", "qidx", 11000.0, 105),
             report("open", "qidx", 6000.0, 105),
         ];
-        let doc = serving_bench_doc("digits-lut", 64, 10, &reports, None, None, "unit-test");
+        let doc = serving_bench_doc("digits-lut", 64, 10, &reports, None, None, None, "unit-test");
         let back = Json::parse(&doc.to_pretty()).unwrap();
-        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v3"));
+        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v4"));
         assert_eq!(back.get("fleet"), &Json::Null);
         assert_eq!(back.get("reactor"), &Json::Null);
+        assert_eq!(back.get("heal"), &Json::Null);
         assert_eq!(back.get("model").as_str(), Some("digits-lut"));
         let wire = back.get("wire_bytes_per_request");
         assert_eq!(wire.get("f32le").as_usize(), Some(297));
@@ -1060,7 +1094,8 @@ mod tests {
             replicas: Vec::new(),
         };
         let section = fleet_section_json(3, 3, true, true, &load, &snap);
-        let doc = serving_bench_doc("digits-lut", 64, 10, &[], Some(section), None, "unit-test");
+        let doc =
+            serving_bench_doc("digits-lut", 64, 10, &[], Some(section), None, None, "unit-test");
         let back = Json::parse(&doc.to_pretty()).unwrap();
         let fleet = back.get("fleet");
         assert_eq!(fleet.get("replicas").as_usize(), Some(3));
@@ -1080,6 +1115,26 @@ mod tests {
     }
 
     #[test]
+    fn heal_section_carries_the_gateable_signals() {
+        let post = report("closed", "qidx", 9000.0, 105);
+        let section = heal_section_json(1.25, 1, 2, 48_000, 3, &post);
+        let doc =
+            serving_bench_doc("digits-lut", 64, 10, &[], None, None, Some(section), "unit-test");
+        let back = Json::parse(&doc.to_pretty()).unwrap();
+        let heal = back.get("heal");
+        assert!(heal.get("time_to_heal_s").as_f64().unwrap() > 0.0);
+        assert_eq!(heal.get("models_recovered").as_usize(), Some(1));
+        assert_eq!(heal.get("quarantined").as_usize(), Some(2));
+        assert_eq!(heal.get("bytes_fetched").as_usize(), Some(48_000));
+        // report() succeeds 398/400 — above the gate's 0.99 floor.
+        assert!(heal.get("post_heal_availability").as_f64().unwrap() >= 0.99);
+        assert_eq!(
+            heal.get("post_heal_load").get("encoding").as_str(),
+            Some("qidx")
+        );
+    }
+
+    #[test]
     fn reactor_section_carries_tiers_and_batch_signal() {
         let mk = |rps: f64| {
             let mut r = report("open", "qidx", rps, 105);
@@ -1091,7 +1146,8 @@ mod tests {
             (1024, mk(8500.0), mk(4000.0)),
         ];
         let section = reactor_section_json("epoll", 1026, 11.7, 64, 2000, &tiers);
-        let doc = serving_bench_doc("digits-lut", 64, 10, &[], None, Some(section), "unit-test");
+        let doc =
+            serving_bench_doc("digits-lut", 64, 10, &[], None, Some(section), None, "unit-test");
         let back = Json::parse(&doc.to_pretty()).unwrap();
         let reactor = back.get("reactor");
         assert_eq!(reactor.get("poller").as_str(), Some("epoll"));

@@ -15,6 +15,6 @@ pub mod qnn_artifact;
 pub use artifact::{ArtifactEntry, Manifest};
 pub use client::{LoadedGraph, Runtime};
 pub use qnn_artifact::{
-    artifact_meta, is_float_artifact, is_lut_artifact, QNN_FLOAT_MAGIC, QNN_LUT_MAGIC,
-    QNN_LUT_VERSION,
+    artifact_meta, artifact_version, is_float_artifact, is_lut_artifact, QNN_FLOAT_MAGIC,
+    QNN_LUT_MAGIC, QNN_LUT_VERSION,
 };

@@ -945,6 +945,21 @@ pub fn artifact_meta(bytes: &[u8]) -> Result<Json> {
     Json::parse(text).map_err(|e| anyhow::anyhow!("bad meta JSON: {e}"))
 }
 
+/// The artifact's format version without a full parse: the u32 right
+/// after the LUT magic, or 1 for float (`QNN1`) artifacts, whose format
+/// is unversioned. This is what rides in a peer-repair manifest entry,
+/// so replicas can tell *stale* from *missing* in one comparison.
+pub fn artifact_version(bytes: &[u8]) -> Result<u32> {
+    if is_lut_artifact(bytes) {
+        anyhow::ensure!(bytes.len() >= 12, "truncated artifact header");
+        Ok(u32::from_le_bytes(bytes[8..12].try_into().unwrap()))
+    } else if is_float_artifact(bytes) {
+        Ok(1)
+    } else {
+        anyhow::bail!("neither a LUT (QNNLUT01) nor a float (QNN1) artifact")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -18,8 +18,17 @@
 //! (`QNN_FAULT="drop=0.02,truncate=0.01,bitflip=0.01,delay=0.05,delay_ms=20"`
 //! plus `QNN_FAULT_SEED=n`), which servers consult once at bind time.
 //!
-//! [`counts`] reports how many of each fault actually fired, so chaos
-//! tests can assert the harness was live rather than vacuously passing.
+//! The plan can also arm the **read path** (`read=1` in `QNN_FAULT`, or
+//! [`FaultPlan::read`]): [`on_read_frame`] rolls the same probabilities
+//! against frames a *client* has just received, so inbound corruption —
+//! exactly what a repairing replica sees when fetching artifacts from a
+//! faulty peer — is injectable with the same plan and seed. Read faults
+//! are off unless asked for, so write-only chaos jobs keep their
+//! historical behavior.
+//!
+//! [`counts`] / [`counts_read`] report how many of each fault actually
+//! fired on each side, so chaos tests can assert the harness was live
+//! rather than vacuously passing.
 
 use super::rng::Xoshiro256;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -44,6 +53,10 @@ pub struct FaultPlan {
     pub delay_prob: f64,
     /// Delay applied when the delay fault fires.
     pub delay_ms: u64,
+    /// Arm [`on_read_frame`] too: the same probabilities then also
+    /// corrupt frames as clients receive them (both sides of a
+    /// transfer). Off by default so write-only plans stay unchanged.
+    pub read: bool,
 }
 
 impl FaultPlan {
@@ -55,6 +68,7 @@ impl FaultPlan {
             bitflip_prob: 0.02,
             delay_prob: 0.05,
             delay_ms: 5,
+            read: false,
         }
     }
 
@@ -97,6 +111,7 @@ struct FaultState {
     plan: FaultPlan,
     rng: Xoshiro256,
     counts: FaultCounts,
+    read_counts: FaultCounts,
 }
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
@@ -115,6 +130,7 @@ pub fn install(plan: FaultPlan, seed: u64) {
         plan,
         rng: Xoshiro256::new(seed),
         counts: FaultCounts::default(),
+        read_counts: FaultCounts::default(),
     });
     ENABLED.store(true, Ordering::Release);
 }
@@ -131,13 +147,25 @@ pub fn is_enabled() -> bool {
     ENABLED.load(Ordering::Acquire)
 }
 
-/// Counters since the last [`install`] (zeroes when disabled).
+/// Write-path counters since the last [`install`] (zeroes when
+/// disabled).
 pub fn counts() -> FaultCounts {
     STATE
         .lock()
         .unwrap()
         .as_ref()
         .map(|s| s.counts)
+        .unwrap_or_default()
+}
+
+/// Read-path counters since the last [`install`] (zeroes when disabled
+/// or when the plan never armed the read path).
+pub fn counts_read() -> FaultCounts {
+    STATE
+        .lock()
+        .unwrap()
+        .as_ref()
+        .map(|s| s.read_counts)
         .unwrap_or_default()
 }
 
@@ -155,11 +183,42 @@ pub fn on_frame(frame_len: usize) -> FrameFault {
         Some(s) => s,
         None => return FrameFault::Deliver,
     };
-    let u = s.rng.uniform();
-    let p = &s.plan;
+    roll(&mut s.rng, &s.plan, &mut s.counts, frame_len)
+}
+
+/// Roll the dice for one *inbound* frame of `frame_len` bytes — the
+/// read-path twin of [`on_frame`], live only when the installed plan set
+/// [`FaultPlan::read`]. Same probabilities, same seeded stream, separate
+/// counters ([`counts_read`]). Callers apply the verdict to the bytes
+/// they just received: a dropped inbound frame looks like a lost
+/// response (the reader times out), a truncated one like a torn stream,
+/// a flipped bit is caught by the frame checksum.
+pub fn on_read_frame(frame_len: usize) -> FrameFault {
+    if !is_enabled() {
+        return FrameFault::Deliver;
+    }
+    let mut guard = STATE.lock().unwrap();
+    let s = match guard.as_mut() {
+        Some(s) => s,
+        None => return FrameFault::Deliver,
+    };
+    if !s.plan.read {
+        return FrameFault::Deliver;
+    }
+    let plan = s.plan;
+    roll(&mut s.rng, &plan, &mut s.read_counts, frame_len)
+}
+
+fn roll(
+    rng: &mut Xoshiro256,
+    p: &FaultPlan,
+    counts: &mut FaultCounts,
+    frame_len: usize,
+) -> FrameFault {
+    let u = rng.uniform();
     let mut edge = p.drop_prob;
     if u < edge {
-        s.counts.drops += 1;
+        counts.drops += 1;
         return FrameFault::Drop;
     }
     edge += p.truncate_prob;
@@ -167,8 +226,8 @@ pub fn on_frame(frame_len: usize) -> FrameFault {
         if frame_len < 2 {
             return FrameFault::Deliver;
         }
-        let n = s.rng.range_usize(1, frame_len);
-        s.counts.truncations += 1;
+        let n = rng.range_usize(1, frame_len);
+        counts.truncations += 1;
         return FrameFault::Truncate(n);
     }
     edge += p.bitflip_prob;
@@ -176,14 +235,14 @@ pub fn on_frame(frame_len: usize) -> FrameFault {
         if frame_len == 0 {
             return FrameFault::Deliver;
         }
-        let pos = s.rng.below(frame_len);
-        let mask = 1u8 << s.rng.below(8);
-        s.counts.bitflips += 1;
+        let pos = rng.below(frame_len);
+        let mask = 1u8 << rng.below(8);
+        counts.bitflips += 1;
         return FrameFault::BitFlip(pos, mask);
     }
     edge += p.delay_prob;
     if u < edge {
-        s.counts.delays += 1;
+        counts.delays += 1;
         return FrameFault::Delay(Duration::from_millis(p.delay_ms));
     }
     FrameFault::Deliver
@@ -192,8 +251,9 @@ pub fn on_frame(frame_len: usize) -> FrameFault {
 /// Install a plan from `QNN_FAULT` / `QNN_FAULT_SEED` if set.
 ///
 /// `QNN_FAULT` is a comma-separated key=value list with keys `drop`,
-/// `truncate`, `bitflip`, `delay` (probabilities) and `delay_ms`
-/// (milliseconds); unknown keys and malformed values are errors so a
+/// `truncate`, `bitflip`, `delay` (probabilities), `delay_ms`
+/// (milliseconds) and `read` (nonzero arms the client read path too);
+/// unknown keys and malformed values are errors so a
 /// typo'd chaos job fails loudly instead of running clean. The seed
 /// defaults to 0 when `QNN_FAULT_SEED` is unset. Returns the installed
 /// (plan, seed) for logging, or `Ok(None)` when `QNN_FAULT` is unset.
@@ -221,6 +281,7 @@ pub fn install_from_env() -> Result<Option<(FaultPlan, u64)>, String> {
             "bitflip" => plan.bitflip_prob = parse(val)?,
             "delay" => plan.delay_prob = parse(val)?,
             "delay_ms" => plan.delay_ms = parse(val)? as u64,
+            "read" => plan.read = parse(val)? != 0.0,
             k => return Err(format!("QNN_FAULT has unknown key '{k}'")),
         }
     }
@@ -300,17 +361,58 @@ mod tests {
     }
 
     #[test]
+    fn read_path_is_dark_until_armed() {
+        let _l = TEST_LOCK.lock().unwrap();
+        // A write-only plan never touches inbound frames and never
+        // advances the shared RNG from the read side: the write-path
+        // stream is identical with or without interleaved read rolls.
+        let plan = FaultPlan::chaos();
+        install(plan, 11);
+        let pure: Vec<FrameFault> = (0..200).map(|_| on_frame(96)).collect();
+        install(plan, 11);
+        let interleaved: Vec<FrameFault> = (0..200)
+            .map(|_| {
+                assert_eq!(on_read_frame(96), FrameFault::Deliver);
+                on_frame(96)
+            })
+            .collect();
+        assert_eq!(pure, interleaved);
+        assert_eq!(counts_read(), FaultCounts::default());
+        clear();
+    }
+
+    #[test]
+    fn armed_read_path_replays_and_counts_separately() {
+        let _l = TEST_LOCK.lock().unwrap();
+        let plan = FaultPlan { read: true, ..FaultPlan::chaos() };
+        install(plan, 23);
+        let a: Vec<FrameFault> = (0..400).map(|_| on_read_frame(128)).collect();
+        let (wa, ra) = (counts(), counts_read());
+        install(plan, 23);
+        let b: Vec<FrameFault> = (0..400).map(|_| on_read_frame(128)).collect();
+        assert_eq!(a, b, "same seed must replay the same read-fault stream");
+        assert_eq!((wa, ra), (counts(), counts_read()));
+        assert_eq!(wa, FaultCounts::default(), "read rolls must not count as writes");
+        assert!(
+            ra.drops > 0 && ra.truncations > 0 && ra.bitflips > 0 && ra.delays > 0,
+            "{ra:?}"
+        );
+        clear();
+    }
+
+    #[test]
     fn env_spec_parses_and_rejects() {
         let _l = TEST_LOCK.lock().unwrap();
         // install_from_env reads the process environment; drive the
         // parser through a scoped set/unset.
-        std::env::set_var("QNN_FAULT", "drop=0.1,delay=0.2,delay_ms=15");
+        std::env::set_var("QNN_FAULT", "drop=0.1,delay=0.2,delay_ms=15,read=1");
         std::env::set_var("QNN_FAULT_SEED", "99");
         let got = install_from_env().unwrap().expect("plan installed");
         assert_eq!(got.1, 99);
         assert!((got.0.drop_prob - 0.1).abs() < 1e-12);
         assert!((got.0.delay_prob - 0.2).abs() < 1e-12);
         assert_eq!(got.0.delay_ms, 15);
+        assert!(got.0.read, "read=1 must arm the read path");
         assert!(is_enabled());
         clear();
 

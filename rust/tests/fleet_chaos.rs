@@ -55,7 +55,7 @@ impl Backend for SumEngine {
 }
 
 fn boot_replica(addr: &str) -> NetServer {
-    let mut router = Router::new();
+    let router = Router::new();
     router.register(
         "sum",
         Server::start(Arc::new(SumEngine), ServerCfg::default()),
@@ -91,6 +91,7 @@ fn chaos_every_request_gets_exactly_one_terminal_answer() {
                 bitflip_prob: 0.01,
                 delay_prob: 0.03,
                 delay_ms: 2,
+                read: false,
             };
             fault::install(plan, seed);
             (plan, seed)

@@ -1,0 +1,358 @@
+//! The heal chaos suite: two replicas serving real `.qnn` artifacts
+//! behind the [`Fleet`] dispatcher, seeded fault injection live on
+//! **both** sides of every transfer (server frame writers and client
+//! frame readers), and one replica killed mid-load and restarted with
+//! an emptied-plus-corrupted artifact directory. The restarted replica
+//! must heal itself: quarantine the corrupt files, refill its store
+//! from the healthy peer over the wire's manifest/fetch frames, and
+//! converge back to serving every model bit-exactly.
+//!
+//! The contracts asserted:
+//!
+//! * **Convergence** — the healed replica's manifest reaches the full
+//!   model set with checksums identical to the donor's, under active
+//!   drop/truncate/bit-flip injection on the repair path itself.
+//! * **Bit-exactness** — after healing, the replica's answers match
+//!   `forward_naive` exactly, for every model; a repaired artifact is
+//!   indistinguishable from the original.
+//! * **Quarantine** — the corrupt boot-time files are moved aside with
+//!   reason sidecars, not silently deleted and not re-parsed forever.
+//! * **Availability ≥ 0.99** across the whole episode: the fleet fails
+//!   over around the healing replica (its `no_model` answers are not
+//!   terminal) while accepted requests keep getting exactly one
+//!   terminal answer each.
+//! * **No thread leaks** — repairer, fleet, and both replicas join
+//!   everything on shutdown.
+//!
+//! The fault plan and seed come from `QNN_FAULT` / `QNN_FAULT_SEED`
+//! when set (the CI chaos job sets and logs them) and fall back to a
+//! built-in two-sided plan with a fixed seed; either way they are
+//! printed, so a failing run replays bit-identically.
+
+use qnn::coordinator::wire::Dtype;
+use qnn::coordinator::{
+    Fleet, FleetCfg, NetClient, NetServer, RepairCfg, Repairer, Router, ServerCfg,
+};
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::report::loadgen::{run_fleet_load, FleetLoadCfg};
+use qnn::util::fault::{self, FaultPlan};
+use qnn::util::rng::Xoshiro256;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+const FEAT: usize = 16;
+const OUT: usize = 4;
+const CLIENTS: usize = 8;
+const PER_CLIENT: usize = 125;
+const MODELS: [&str; 2] = ["heal-m0", "heal-m1"];
+
+fn small_lut(name: &str, seed: u64) -> LutNetwork {
+    let spec = NetSpec::mlp(name, FEAT, &[24], OUT, ActSpec::tanh_d(16));
+    let mut rng = Xoshiro256::new(seed);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(32), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap()
+}
+
+/// Oracle answers for `rows` under `lut`, via the naive interpreter —
+/// the same descale path the serving engine uses.
+fn oracle(lut: &LutNetwork, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let scale_inv = 1.0 / lut.plan.scale();
+    rows.iter()
+        .map(|row| {
+            let idx = lut.input_quant.quantize_to_indices(row);
+            lut.forward_naive(&idx, 1)
+                .sums
+                .iter()
+                .map(|&s| (s as f64 * scale_inv) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+fn serve_cfg() -> ServerCfg {
+    ServerCfg {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        max_queue: 256,
+        ..ServerCfg::default()
+    }
+}
+
+fn thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|n| n.parse().ok())
+}
+
+fn checksums(manifest: &[qnn::coordinator::wire::ManifestEntry]) -> BTreeMap<String, u64> {
+    manifest
+        .iter()
+        .map(|e| (e.model.clone(), e.checksum))
+        .collect()
+}
+
+/// Wipe `dir` and reseed it with junk: a torn prefix of a real
+/// artifact (parses far enough to look plausible, then ends) and a
+/// file that is not a `.qnn` artifact at all.
+fn corrupt_dir(dir: &Path, torn_source: &[u8]) {
+    std::fs::remove_dir_all(dir).ok();
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join(format!("{}.qnn", MODELS[0])),
+        &torn_source[..torn_source.len() / 2],
+    )
+    .unwrap();
+    std::fs::write(dir.join("junk.qnn"), b"definitely not a qnn artifact").unwrap();
+}
+
+#[test]
+fn heal_chaos_replica_restarted_with_corrupt_store_converges_bit_exact() {
+    let baseline_threads = thread_count();
+
+    let (plan, seed) = match fault::install_from_env().expect("QNN_FAULT must parse") {
+        Some((plan, seed)) => (plan, seed),
+        None => {
+            let seed = std::env::var("QNN_FAULT_SEED")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0x4EA1);
+            let plan = FaultPlan {
+                drop_prob: 0.01,
+                truncate_prob: 0.005,
+                bitflip_prob: 0.01,
+                delay_prob: 0.03,
+                delay_ms: 2,
+                // Two-sided: the repairing replica's *reads* are faulty
+                // too — exactly what it sees from a flaky donor.
+                read: true,
+            };
+            fault::install(plan, seed);
+            (plan, seed)
+        }
+    };
+    println!("QNN_FAULT_SEED={seed} plan={plan:?}");
+
+    // Two artifact dirs with the full model set each.
+    let base = std::env::temp_dir().join(format!("qnn_heal_chaos_{}", std::process::id()));
+    let dir_a = base.join("a");
+    let dir_b = base.join("b");
+    std::fs::create_dir_all(&dir_a).unwrap();
+    std::fs::create_dir_all(&dir_b).unwrap();
+    let luts: Vec<LutNetwork> = MODELS
+        .iter()
+        .zip([21u64, 22])
+        .map(|(name, s)| small_lut(name, s))
+        .collect();
+    for (name, lut) in MODELS.iter().zip(&luts) {
+        let file = format!("{name}.qnn");
+        lut.save(dir_a.join(&file)).unwrap();
+        std::fs::copy(dir_a.join(&file), dir_b.join(&file)).unwrap();
+    }
+    let torn_source = std::fs::read(dir_a.join(format!("{}.qnn", MODELS[0]))).unwrap();
+
+    // Deterministic request rows plus their oracle answers per model.
+    let mut rng = Xoshiro256::new(33);
+    let rows: Vec<Vec<f32>> = (0..24)
+        .map(|_| (0..FEAT).map(|_| rng.uniform_f32()).collect())
+        .collect();
+    let expected: Vec<Vec<Vec<f32>>> = luts.iter().map(|l| oracle(l, &rows)).collect();
+
+    let srv_a = NetServer::bind(
+        "127.0.0.1:0",
+        Router::load_dir_with(&dir_a, serve_cfg()).unwrap(),
+    )
+    .unwrap();
+    let addr_a = srv_a.local_addr().to_string();
+    let srv_b = NetServer::bind(
+        "127.0.0.1:0",
+        Router::load_dir_with(&dir_b, serve_cfg()).unwrap(),
+    )
+    .unwrap();
+    let addr_b = srv_b.local_addr().to_string();
+
+    let fleet = Fleet::connect(
+        &[addr_a.clone(), addr_b.clone()],
+        FleetCfg {
+            replication: 2,
+            max_retries: 3,
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_millis(300),
+            health_interval: Duration::from_millis(20),
+            health_timeout: Duration::from_millis(300),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(100),
+            default_deadline: Some(Duration::from_secs(10)),
+            ..FleetCfg::default()
+        },
+    );
+
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    let (report, healing) = std::thread::scope(|s| {
+        let fleet_ref = &fleet;
+        let addr_a = addr_a.clone();
+        let addr_b = addr_b.clone();
+        let dir_b = dir_b.clone();
+        let torn = torn_source.clone();
+        let killer = s.spawn(move || {
+            while fleet_ref.metrics().requests() < total / 3 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            srv_b.abort();
+            corrupt_dir(&dir_b, &torn);
+            println!("killed {addr_b} and corrupted its artifact dir");
+            // Restart on the same port with a store that can boot
+            // nothing: quarantine happens here, healing right after.
+            let router = Router::open_dir_with(&dir_b, serve_cfg()).unwrap();
+            let back = NetServer::bind(addr_b.as_str(), router.clone()).unwrap();
+            let repairer = Repairer::start(
+                router.clone(),
+                vec![addr_a],
+                RepairCfg {
+                    interval: Duration::from_millis(25),
+                    chunk_len: 1024,
+                    max_retries: 8,
+                    ..RepairCfg::default()
+                },
+            );
+            println!("restarted {addr_b} empty; repair loop running");
+            (back, repairer, router)
+        });
+        let report = run_fleet_load(
+            fleet_ref,
+            &FleetLoadCfg {
+                model: MODELS[0].into(),
+                encoding: Dtype::F32Le,
+                clients: CLIENTS,
+                requests_per_client: PER_CLIENT,
+            },
+            &rows,
+            None,
+        )
+        .expect("fleet load");
+        (report, killer.join().expect("restart thread panicked"))
+    });
+    let (srv_b, repairer, router_b) = healing;
+
+    println!("report: {report:?}");
+
+    // Convergence: the healed store reaches the donor's full model
+    // set, checksums identical, still under fault injection.
+    let donor: BTreeMap<String, u64> = MODELS
+        .iter()
+        .map(|name| {
+            let bytes = std::fs::read(dir_a.join(format!("{name}.qnn"))).unwrap();
+            (name.to_string(), qnn::util::fnv::fnv1a(&bytes))
+        })
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if checksums(&router_b.manifest()) == donor {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "store never converged (seed {seed}): manifest {:?}, repair {:?}",
+            router_b.manifest(),
+            repairer.stats()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let stats = repairer.stats();
+    println!("repair stats: {stats:?}");
+    assert!(
+        stats.installed >= MODELS.len() as u64,
+        "healing installed too little: {stats:?}"
+    );
+
+    // The harness must demonstrably have fired on both sides.
+    let write_counts = fault::counts();
+    let read_counts = fault::counts_read();
+    println!("fault counts: write={write_counts:?} read={read_counts:?}");
+    assert!(
+        write_counts.total() > 0,
+        "write-side fault injection never fired: {write_counts:?}"
+    );
+    assert!(
+        read_counts.total() > 0,
+        "read-side fault injection never fired: {read_counts:?}"
+    );
+
+    // One terminal answer per request, and availability despite a
+    // kill, a corrupt store, and a healing window full of `no_model`.
+    assert_eq!(report.sent, CLIENTS * PER_CLIENT);
+    assert_eq!(
+        report.sent,
+        report.ok
+            + report.rejected
+            + report.deadline_exceeded
+            + report.exhausted
+            + report.no_replica,
+        "terminal outcomes must partition sent exactly: {report:?}"
+    );
+    // (No `rejected == 0` assert: a request whose whole retry budget
+    // lands on the healing replica's `no_model` window is a legitimate
+    // rejection, and availability already charges for it.)
+    assert!(
+        report.availability >= 0.99,
+        "availability {} < 0.99 (seed {seed}): {report:?}",
+        report.availability
+    );
+
+    // Quarantine: both corrupt boot files were moved aside with reason
+    // sidecars, and the healed artifacts live in the store proper.
+    let qdir = dir_b.join("quarantine");
+    for file in [format!("{}.qnn", MODELS[0]), "junk.qnn".into()] {
+        assert!(qdir.join(&file).exists(), "{file} was not quarantined");
+        assert!(
+            qdir.join(format!("{file}.reason")).exists(),
+            "{file} has no reason sidecar"
+        );
+    }
+    for name in MODELS {
+        assert!(dir_b.join(format!("{name}.qnn")).exists(), "{name} missing");
+    }
+
+    // Bit-exactness after healing: the repaired replica answers every
+    // model exactly like forward_naive. Faults off — transfer chaos is
+    // already proven; this is about artifact integrity.
+    fault::clear();
+    let mut client = NetClient::connect(addr_b.as_str()).unwrap();
+    for (mi, name) in MODELS.iter().enumerate() {
+        for (r, row) in rows.iter().enumerate() {
+            let out = client.infer_f32(name, row).unwrap();
+            assert_eq!(out, expected[mi][r], "model {name} row {r} not bit-exact");
+        }
+    }
+    drop(client);
+
+    repairer.stop();
+    fleet.shutdown();
+    srv_a.shutdown();
+    srv_b.shutdown();
+    std::fs::remove_dir_all(&base).ok();
+
+    // Thread hygiene: everything joined, nothing leaked. (Skipped off
+    // Linux where /proc is unavailable.)
+    if let Some(base) = baseline_threads {
+        let mut now = thread_count().unwrap();
+        for _ in 0..200 {
+            if now <= base {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+            now = thread_count().unwrap();
+        }
+        assert!(now <= base, "thread leak: {now} threads > baseline {base}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Atomicity proof for [`Router::install_artifact`]: a client
+//! hammering one model over the wire while the artifact is reinstalled
+//! underneath it sees only complete answers — the old model's or the
+//! new model's, never a torn in-between and never an error. Lives in
+//! its own test binary so no sibling test's process-global fault plan
+//! can touch the hammer's connection.
+
+use qnn::coordinator::{NetClient, NetServer, Router, ServerCfg};
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::util::fnv::fnv1a;
+use qnn::util::rng::Xoshiro256;
+use std::time::Duration;
+
+const FEAT: usize = 16;
+const OUT: usize = 4;
+
+fn small_lut(name: &str, seed: u64) -> LutNetwork {
+    let spec = NetSpec::mlp(name, FEAT, &[24], OUT, ActSpec::tanh_d(16));
+    let mut rng = Xoshiro256::new(seed);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(32), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default()).unwrap()
+}
+
+/// Oracle answers for `rows` under `lut`, via the naive interpreter.
+fn oracle(lut: &LutNetwork, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let scale_inv = 1.0 / lut.plan.scale();
+    rows.iter()
+        .map(|row| {
+            let idx = lut.input_quant.quantize_to_indices(row);
+            lut.forward_naive(&idx, 1)
+                .sums
+                .iter()
+                .map(|&s| (s as f64 * scale_inv) as f32)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn hot_reinstall_under_load_never_serves_a_torn_model() {
+    let dir = std::env::temp_dir().join(format!("qnn_hot_reload_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let old = small_lut("swap", 77);
+    let new = small_lut("swap", 78);
+    old.save(dir.join("swap.qnn")).unwrap();
+    let new_bytes = {
+        let staged = dir.join("staged.bin");
+        new.save(&staged).unwrap();
+        let b = std::fs::read(&staged).unwrap();
+        std::fs::remove_file(&staged).unwrap();
+        b
+    };
+
+    let mut rng = Xoshiro256::new(9);
+    let rows: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..FEAT).map(|_| rng.uniform_f32()).collect())
+        .collect();
+    let want_old = oracle(&old, &rows);
+    let want_new = oracle(&new, &rows);
+    for (o, n) in want_old.iter().zip(&want_new) {
+        assert_ne!(o, n, "old and new models must be distinguishable");
+    }
+
+    let router = Router::load_dir_with(
+        &dir,
+        ServerCfg {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            max_queue: 256,
+            ..ServerCfg::default()
+        },
+    )
+    .unwrap();
+    let srv = NetServer::bind("127.0.0.1:0", router.clone()).unwrap();
+    let addr = srv.local_addr();
+
+    let (flips, ended_on_new) = std::thread::scope(|s| {
+        let rows = &rows;
+        let (want_old, want_new) = (&want_old, &want_new);
+        let hammer = s.spawn(move || {
+            let mut client = NetClient::connect(addr).unwrap();
+            let mut flips = 0u32;
+            let mut last_was_new = false;
+            for k in 0..4000usize {
+                let r = k % rows.len();
+                let out = client.infer_f32("swap", &rows[r]).unwrap();
+                let is_new = out == want_new[r];
+                assert!(
+                    is_new || out == want_old[r],
+                    "row {r} answered neither old nor new model: {out:?}"
+                );
+                if k > 0 && is_new != last_was_new {
+                    flips += 1;
+                }
+                last_was_new = is_new;
+            }
+            (flips, last_was_new)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        router
+            .install_artifact("swap", &new_bytes, Some(fnv1a(&new_bytes)))
+            .unwrap();
+        hammer.join().expect("hammer thread panicked")
+    });
+
+    // The swap is a single atomic transition: answers flip from old to
+    // new at most once, and end on the new model.
+    assert!(
+        flips <= 1,
+        "answers flip-flopped {flips} times across the swap"
+    );
+    assert!(
+        ended_on_new,
+        "the hammer never observed the new model after install"
+    );
+    assert_eq!(
+        router.store().unwrap().entry("swap").unwrap().checksum,
+        fnv1a(&new_bytes),
+        "the store manifest must describe the installed bytes"
+    );
+
+    srv.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -145,7 +145,7 @@ impl Backend for SlowEngine {
 /// reply.
 #[test]
 fn busy_frames_when_bounded_queue_is_full() {
-    let mut router = Router::new();
+    let router = Router::new();
     router.register(
         "slow",
         Server::start(
@@ -196,7 +196,7 @@ fn busy_frames_when_bounded_queue_is_full() {
 /// client never hangs and never sees a torn stream.
 #[test]
 fn net_shutdown_under_load_drains_accepted_requests() {
-    let mut router = Router::new();
+    let router = Router::new();
     router.register(
         "slow",
         Server::start(
@@ -253,6 +253,54 @@ fn net_shutdown_under_load_drains_accepted_requests() {
     client_thread.join().unwrap();
 }
 
+/// Graceful drain: `begin_drain` keeps accepted work flowing while the
+/// health pong flips to `draining=true` and *new* requests bounce with
+/// a typed `Shutdown` error — the one-frame signal the fleet and the
+/// repair loop use to steer away before the hard stop.
+#[test]
+fn drain_pong_reports_draining_while_accepted_requests_finish() {
+    let router = Router::new();
+    router.register(
+        "slow",
+        Server::start(
+            Arc::new(SlowEngine),
+            ServerCfg {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                workers: 1,
+                max_queue: 64,
+                ..ServerCfg::default()
+            },
+        ),
+    );
+    let net = NetServer::bind("127.0.0.1:0", router).unwrap();
+    let addr = net.local_addr();
+
+    let mut client = NetClient::connect(addr).unwrap();
+    // Put a slow request in flight; the ping doubles as an ordering
+    // barrier — frames on one connection are processed in order, so a
+    // pong proves the request was read and admitted before the drain.
+    let id = client.send_f32("slow", &[0.0, 0.0]).unwrap();
+    assert!(!client.ping().unwrap().draining, "not draining yet");
+    net.begin_drain();
+    // The listener still accepts, pings still answer — but honestly.
+    let mut probe = NetClient::connect(addr).unwrap();
+    assert!(
+        probe.ping().unwrap().draining,
+        "pong must announce the drain"
+    );
+    // New work is bounced with a typed Shutdown error...
+    match probe.infer_f32("slow", &[0.0, 0.0]) {
+        Err(ClientError::Remote(e)) => assert_eq!(e.code, ErrCode::Shutdown, "{e}"),
+        other => panic!("draining server accepted new work: {other:?}"),
+    }
+    // ...while the already-accepted request finishes normally.
+    let (rid, res) = client.recv_response().unwrap();
+    assert_eq!(rid, id);
+    assert_eq!(res.expect("accepted request must finish"), vec![7.0]);
+    net.shutdown();
+}
+
 /// Property: an arbitrary pipelined interleaving of valid requests,
 /// wrong-length payloads, out-of-range qidx indices, and unknown-model
 /// requests comes back **in order**, every response matched to its
@@ -284,7 +332,7 @@ fn property_pipelined_interleaved_outcomes_stay_matched() {
         }
     }
 
-    let mut router = Router::new();
+    let router = Router::new();
     router.register(
         "sum",
         Server::start(
@@ -357,7 +405,7 @@ fn property_pipelined_interleaved_outcomes_stay_matched() {
 fn loadgen_closed_loop_over_real_socket() {
     let lut = small_lut();
     let quant = lut.input_quant.clone();
-    let mut router = Router::new();
+    let router = Router::new();
     router.register(
         "m",
         Server::start(

@@ -308,6 +308,54 @@ fn reactor_shutdown_under_load_drains_accepted_requests() {
     client_thread.join().unwrap();
 }
 
+/// Soft drain on the event loop: `begin_drain` keeps accepted work
+/// flowing while pongs flip to `draining=true` and *new* requests
+/// bounce with a typed `Shutdown` error — the one-frame signal the
+/// fleet and the repair loop use to steer away before the hard stop.
+#[test]
+fn reactor_drain_pong_reports_draining_while_accepted_requests_finish() {
+    let reactor = ReactorServer::bind_with(
+        "127.0.0.1:0",
+        vec![("slow".to_string(), Arc::new(SlowEngine) as Arc<dyn Backend>)],
+        ReactorCfg {
+            batch: BatcherCfg {
+                max_batch: 1,
+                max_delay: Duration::ZERO,
+                workers: 1,
+                max_queue: 64,
+                ..BatcherCfg::default()
+            },
+            ..ReactorCfg::default()
+        },
+    )
+    .unwrap();
+    let addr = reactor.local_addr();
+
+    let mut client = NetClient::connect(addr).unwrap();
+    // Put a slow request in flight; the ping doubles as an ordering
+    // barrier — frames on one connection are processed in order, so a
+    // pong proves the request was read and admitted before the drain.
+    let id = client.send_f32("slow", &[0.0, 0.0]).unwrap();
+    assert!(!client.ping().unwrap().draining, "not draining yet");
+    reactor.begin_drain();
+    // The loop still accepts and answers pings — but honestly.
+    let mut probe = NetClient::connect(addr).unwrap();
+    assert!(
+        probe.ping().unwrap().draining,
+        "pong must announce the drain"
+    );
+    // New work is bounced with a typed Shutdown error...
+    match probe.infer_f32("slow", &[0.0, 0.0]) {
+        Err(ClientError::Remote(e)) => assert_eq!(e.code, ErrCode::Shutdown, "{e}"),
+        other => panic!("draining reactor accepted new work: {other:?}"),
+    }
+    // ...while the already-accepted request finishes normally.
+    let (rid, res) = client.recv_response().unwrap();
+    assert_eq!(rid, id);
+    assert_eq!(res.expect("accepted request must finish"), vec![7.0]);
+    reactor.shutdown();
+}
+
 /// Property: flip any single bit of a valid request frame past the
 /// length header and the reactor answers a typed `BadRequest` naming
 /// the checksum, attributed to req id 0 (the id can't be trusted in a
