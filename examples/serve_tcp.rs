@@ -23,23 +23,32 @@
 //! installed), and must serve the full load bit-exact afterwards —
 //! time-to-heal and post-heal availability are measured and gated.
 //!
-//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v4`) at the
+//! Then the observability story: qnn-scope must be free when disabled
+//! — the engine is timed with tracing and profiling off vs forced on —
+//! and then a traced, profiled burst runs against the live server and
+//! the unified metrics registry is scraped back over the wire via the
+//! stats frame (kinds 9/10), exactly as an operator tool would.
+//!
+//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v5`) at the
 //! repository root: closed-loop saturation sweep, an open-loop run at a
 //! fraction of saturation, the wire bytes-per-request comparison, the
-//! fleet chaos section, the reactor tier comparison, and the heal
-//! section — all gated in CI (`python/check_bench.py`).
+//! fleet chaos section, the reactor tier comparison, the heal section,
+//! the knob-stamped `meta` block, the `scope` instrumentation A/B and
+//! the `stats` registry scrape — all gated in CI
+//! (`python/check_bench.py`).
 //!
 //!     cargo run --release --example serve_tcp [-- --full]
 
 use qnn::coordinator::wire::Dtype;
 use qnn::coordinator::{
-    BatcherCfg, Fleet, FleetCfg, NetServer, ReactorCfg, ReactorServer, RepairCfg, Repairer,
-    Router, ServerCfg,
+    BatcherCfg, Fleet, FleetCfg, NetClient, NetServer, ReactorCfg, ReactorServer, RepairCfg,
+    Repairer, Router, ServerCfg,
 };
 use qnn::data::digits;
-use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::inference::{set_profile, CodebookSet, CompileCfg, LutNetwork};
 use qnn::nn::{ActSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::report::loadgen::{bench_meta_json, scope_section_json, stats_section_json};
 use qnn::report::loadgen::{
     fleet_section_json, heal_section_json, reactor_section_json, run_fleet_load, run_load,
     run_mux_load, serving_bench_doc, FleetLoadCfg, LoadCfg, MuxLoadCfg,
@@ -48,6 +57,7 @@ use qnn::report::perf::write_bench_file;
 use qnn::report::table::TableBuilder;
 use qnn::util::fnv::fnv1a;
 use qnn::util::rng::Xoshiro256;
+use qnn::util::trace;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
@@ -331,8 +341,9 @@ fn main() -> anyhow::Result<()> {
         "reactor peak connections {} | mean engine batch {mean_batch:.2}",
         reactor.peak_connections()
     );
+    let poller_backend = reactor.poller_backend().to_string();
     let reactor_section = reactor_section_json(
-        reactor.poller_backend(),
+        &poller_backend,
         reactor.peak_connections(),
         mean_batch,
         reactor_batch.max_batch,
@@ -424,6 +435,72 @@ fn main() -> anyhow::Result<()> {
     heal_srv.shutdown();
     std::fs::remove_dir_all(&heal_dir).ok();
 
+    // ---- scope phase: the qnn-scope overhead A/B. Same engine, same
+    // rows — ns/row with tracing and profiling off (the production
+    // default, and the state every phase above ran in) vs forced on via
+    // the runtime overrides, so the disabled baseline is measured first
+    // in-process.
+    trace::set_rate(0);
+    set_profile(false);
+    let ab_rows = rows.len();
+    let fwd_ns = |reps: usize| {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(lut.forward(&pool));
+        }
+        t0.elapsed().as_secs_f64() * 1e9 / (reps * ab_rows) as f64
+    };
+    let reps = if full { 200 } else { 50 };
+    let _ = fwd_ns(reps / 5 + 1); // warm the path
+    let ns_off = fwd_ns(reps);
+    trace::set_rate(1);
+    set_profile(true);
+    let ns_on = fwd_ns(reps);
+    println!(
+        "\nscope A/B: {ns_off:.0} ns/row instrumentation off vs {ns_on:.0} ns/row on \
+         ({:.3}x)",
+        ns_on / ns_off.max(1e-9)
+    );
+    let scope_section = scope_section_json(ns_off, ns_on);
+
+    // Traced + profiled burst against the still-live front-end, then
+    // scrape the unified registry back over the wire — the stats frame
+    // any operator tool would use.
+    let traced = run_load(
+        &LoadCfg {
+            addr: addr.clone(),
+            model: "digits-lut".into(),
+            encoding: Dtype::QIdx,
+            clients: 2,
+            requests_per_client: per_client,
+            rate_rps: None,
+        },
+        &rows,
+        Some(&quant),
+    )?;
+    let mut scrape = NetClient::connect(&addr[..])?;
+    let exposition = scrape
+        .fetch_stats()
+        .map_err(|e| anyhow::anyhow!("stats scrape failed: {e}"))?;
+    println!(
+        "traced burst: {} ok at {:.0} rps; stats frame carries {} counters:",
+        traced.ok,
+        traced.throughput_rps,
+        exposition.lines().count()
+    );
+    for line in exposition
+        .lines()
+        .filter(|l| l.starts_with("qnn.trace.") || l.starts_with("qnn.fault.total"))
+    {
+        println!("  {line}");
+    }
+    assert!(
+        exposition.contains("qnn.profile."),
+        "profiling armed but no per-layer counters in the stats frame"
+    );
+    let stats_section = stats_section_json(&exposition);
+    let meta = bench_meta_json(&poller_backend, reactor_batch.workers);
+
     let doc = serving_bench_doc(
         "digits-lut",
         digits::FEATURES,
@@ -432,6 +509,9 @@ fn main() -> anyhow::Result<()> {
         Some(fleet_section),
         Some(reactor_section),
         Some(heal_section),
+        Some(meta),
+        Some(scope_section),
+        Some(stats_section),
         if full {
             "cargo run --release --example serve_tcp -- --full"
         } else {

@@ -1,0 +1,106 @@
+//! qnn-scope in action: sample every request through BOTH front-ends,
+//! then dump the recorded traces as Chrome trace-event JSON.
+//!
+//! Boots a digits LUT artifact behind the thread-per-connection
+//! `NetServer` and the event-driven `ReactorServer`, sets the trace
+//! sample rate to 1 (every request), drives a burst of traffic through
+//! each, and writes `TRACE_qnn.json` — open it at `chrome://tracing` or
+//! <https://ui.perfetto.dev> to see per-request accept → decode →
+//! enqueue → batch → infer → flush spans. Also scrapes the stats frame
+//! from each front-end to show the registry view of the same run.
+//!
+//!     cargo run --release --example trace_dump [-- <out.json>]
+
+use qnn::coordinator::{NetClient, NetServer, ReactorCfg, ReactorServer, Router, ServerCfg};
+use qnn::data::digits;
+use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::nn::{ActSpec, NetSpec, Network};
+use qnn::quant::{kmeans_1d, KMeansCfg};
+use qnn::util::rng::Xoshiro256;
+use qnn::util::trace;
+
+fn main() -> anyhow::Result<()> {
+    let out_path = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "TRACE_qnn.json".into());
+
+    // A small quantized digits classifier (e2e_digits has the full
+    // training story; this example is about observing the serving path).
+    let spec = NetSpec::mlp(
+        "digits",
+        digits::FEATURES,
+        &[32],
+        digits::CLASSES,
+        ActSpec::tanh_d(32),
+    );
+    let mut rng = Xoshiro256::new(7);
+    let mut net = Network::from_spec(&spec, &mut rng);
+    let mut flat = net.flat_weights();
+    let cb = kmeans_1d(&flat, &KMeansCfg::with_k(256), &mut rng);
+    cb.quantize_slice(&mut flat);
+    net.set_flat_weights(&flat);
+    let lut = LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default())?;
+
+    let dir = std::env::temp_dir().join(format!("qnn_trace_dump_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    lut.save(dir.join("digits-lut.qnn"))?;
+
+    // Sample EVERY request (the serving default is the QNN_TRACE
+    // 1-in-N knob; a demo wants the full picture).
+    trace::set_rate(1);
+
+    let router = Router::load_dir_with(&dir, ServerCfg::default())?;
+    let net_srv = NetServer::bind("127.0.0.1:0", router)?;
+    let reactor = ReactorServer::bind_dir("127.0.0.1:0", &dir, ReactorCfg::default())?;
+    println!(
+        "net front-end on {}, reactor front-end on {} ({} backend)",
+        net_srv.local_addr(),
+        reactor.local_addr(),
+        reactor.poller_backend()
+    );
+
+    let dcfg = digits::DigitsCfg::default();
+    let (pool, _) = digits::batch(32, &dcfg, &mut rng);
+    let rows: Vec<Vec<f32>> = (0..32)
+        .map(|i| pool.data()[i * digits::FEATURES..(i + 1) * digits::FEATURES].to_vec())
+        .collect();
+
+    for (label, addr) in [
+        ("net", net_srv.local_addr()),
+        ("reactor", reactor.local_addr()),
+    ] {
+        let mut c = NetClient::connect(addr)?;
+        for row in &rows {
+            let _ = c.infer_f32("digits-lut", row)?;
+        }
+        // The stats frame carries the registry view of the same run.
+        let stats = c.fetch_stats()?;
+        let traced: Vec<&str> = stats
+            .lines()
+            .filter(|l| l.starts_with("qnn.trace."))
+            .collect();
+        println!(
+            "{label}: drove {} requests; stats frame has {} counters, {:?}",
+            rows.len(),
+            stats.lines().count(),
+            traced
+        );
+    }
+
+    trace::set_rate(0);
+    let traces = trace::completed();
+    let complete = traces.iter().filter(|t| t.is_complete()).count();
+    let (started, completed, dropped) = trace::counters();
+    println!(
+        "captured {} traces, {complete} with every stage stamped \
+         (started {started}, completed {completed}, dropped {dropped})"
+    );
+    let json = trace::chrome_json(&traces);
+    std::fs::write(&out_path, &json)?;
+    println!("wrote {out_path} — open in chrome://tracing or ui.perfetto.dev");
+
+    reactor.shutdown();
+    net_srv.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

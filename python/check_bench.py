@@ -41,6 +41,20 @@ Dispatches on the document's `schema` field:
   bytes were fetched from the peer, time-to-heal is missing or exceeds
   the ceiling, or post-heal availability on the healed replica is
   below 99%.
+* ``qnn.bench_serving.v5`` — v4 plus the qnn-scope observability
+  sections. ``meta`` must stamp every reproducibility knob (fault
+  plan and seed, thread knobs, poller backend, worker counts);
+  ``scope`` must carry the instrumentation A/B with the on/off
+  overhead ratio under the ceiling (both sides are measured
+  back-to-back in-process, so the ratio is noise-robust); ``stats``
+  must carry a registry scrape taken over the wire from the live
+  server that is self-consistent — requests >= responses >= 0, traces
+  completed while sampling was on, per-layer profile counters present
+  while profiling was on.
+
+``--self-test`` (as the first argument) builds a synthetic v5 document
+in-process, asserts the checker passes it, and asserts every v5
+invariant actually fires when broken — the gate gating itself.
 
 Timings themselves are never asserted — CI machines are noisy;
 regressions should show in the trajectory, not flake the gate. The one
@@ -48,7 +62,7 @@ exception is the few-level-vs-gather *ratio*: both sides are measured
 back-to-back in the same process on the same weights, so the comparison
 is noise-robust, and losing it means the tier stopped paying for itself.
 
-    python3 python/check_bench.py [BENCH_file.json ...]
+    python3 python/check_bench.py [--self-test] [BENCH_file.json ...]
 """
 
 import json
@@ -439,6 +453,95 @@ def check_serving_v4(path: str, doc: dict) -> str:
     )
 
 
+# The scope A/B measures the engine back-to-back in the same process on
+# the same rows, so the ratio is noise-robust the same way the
+# few-level-vs-gather ratio is. The ceiling is deliberately loose: it
+# exists to catch "instrumentation got expensive" regressions, not to
+# measure nanoseconds on a noisy CI machine.
+SCOPE_OVERHEAD_CEILING = 2.0
+
+# Every knob the meta section must stamp so two bench runs are
+# comparable (null means "unset, built-in default" — still stamped).
+META_KNOBS = ("fault", "fault_seed", "threads", "serial", "trace", "profile")
+
+
+def check_serving_v5(path: str, doc: dict) -> str:
+    summary = check_serving_v4(path, doc)
+
+    meta = doc.get("meta")
+    if not isinstance(meta, dict):
+        fail(f"{path}: v5 document has no meta section (got {meta!r})")
+    if meta.get("poller") not in ("epoll", "poll"):
+        fail(f"{path}: meta section has unknown poller backend {meta.get('poller')!r}")
+    for knob in META_KNOBS:
+        if knob not in meta:
+            fail(f"{path}: meta section does not stamp the {knob!r} knob")
+    if not positive_number(meta.get("batcher_workers")):
+        fail(f"{path}: meta section lacks a positive batcher_workers count")
+
+    scope = doc.get("scope")
+    if not isinstance(scope, dict):
+        fail(f"{path}: v5 document has no scope section (got {scope!r})")
+    for field in ("ns_per_row_off", "ns_per_row_on", "overhead_ratio"):
+        if not positive_number(scope.get(field)):
+            fail(
+                f"{path}: scope section missing or non-positive {field!r} "
+                f"(got {scope.get(field)!r})"
+            )
+    off, on, ratio = (
+        scope["ns_per_row_off"],
+        scope["ns_per_row_on"],
+        scope["overhead_ratio"],
+    )
+    if abs(ratio - on / off) > 1e-6 * (1.0 + ratio):
+        fail(
+            f"{path}: scope overhead_ratio {ratio:.4f} does not match "
+            f"ns_per_row_on/ns_per_row_off ({on / off:.4f})"
+        )
+    if ratio > SCOPE_OVERHEAD_CEILING:
+        fail(
+            f"{path}: instrumentation overhead {ratio:.2f}x exceeds the "
+            f"{SCOPE_OVERHEAD_CEILING:.1f}x ceiling ({off:.0f} ns/row off vs "
+            f"{on:.0f} ns/row on)"
+        )
+
+    stats = doc.get("stats")
+    if not isinstance(stats, dict):
+        fail(f"{path}: v5 document has no stats section (got {stats!r})")
+    requests = stats.get("requests")
+    responses = stats.get("responses")
+    if not nonneg_int(requests) or not nonneg_int(responses):
+        fail(
+            f"{path}: stats scrape lacks integer request/response totals "
+            f"(got requests={requests!r}, responses={responses!r})"
+        )
+    if not int(requests) >= int(responses) >= 0:
+        fail(
+            f"{path}: stats scrape is self-inconsistent: requests "
+            f"{int(requests)} < responses {int(responses)}"
+        )
+    if not positive_number(requests):
+        fail(f"{path}: stats scrape saw no requests — the registry was empty")
+    completed = stats.get("trace_completed")
+    if not positive_number(completed):
+        fail(
+            f"{path}: sampling was on for the traced burst but the scrape "
+            f"shows trace_completed={completed!r}"
+        )
+    profiled = stats.get("profile_counters")
+    if not positive_number(profiled):
+        fail(
+            f"{path}: profiling was on for the traced burst but the scrape "
+            f"carries no qnn.profile.* counters (got {profiled!r})"
+        )
+
+    return (
+        f"{summary}; scope overhead {ratio:.2f}x, stats scrape "
+        f"{int(requests)} req / {int(responses)} rsp, "
+        f"{int(completed)} traces, {int(profiled)} profile counters"
+    )
+
+
 CHECKERS = {
     "qnn.bench_lut_engine.v2": check_lut_engine,
     "qnn.bench_lut_engine.v3": check_lut_engine_v3,
@@ -446,6 +549,7 @@ CHECKERS = {
     "qnn.bench_serving.v2": check_serving_v2,
     "qnn.bench_serving.v3": check_serving_v3,
     "qnn.bench_serving.v4": check_serving_v4,
+    "qnn.bench_serving.v5": check_serving_v5,
 }
 
 
@@ -468,8 +572,183 @@ def check_file(path: str) -> None:
     print(f"check_bench: ok — {path}: schema {schema}, {summary}")
 
 
+def _synthetic_v5_doc() -> dict:
+    """A minimal document satisfying every v1..v5 invariant — the
+    fixture ``--self-test`` mutates one invariant at a time."""
+
+    def run(mode, encoding, clients, rps, req_bytes, **extra):
+        r = {
+            "mode": mode,
+            "encoding": encoding,
+            "clients": clients,
+            "sent": 400,
+            "ok": 400,
+            "busy": 0,
+            "errors": 0,
+            "elapsed_s": 0.05,
+            "throughput_rps": rps,
+            "p50_ms": 0.4,
+            "p95_ms": 0.9,
+            "p99_ms": 1.7,
+            "request_frame_bytes": req_bytes,
+            "response_frame_bytes": 61,
+        }
+        r.update(extra)
+        return r
+
+    return {
+        "schema": "qnn.bench_serving.v5",
+        "provenance": "check_bench --self-test",
+        "meta": {
+            "fault": None,
+            "fault_seed": None,
+            "threads": None,
+            "serial": None,
+            "trace": None,
+            "profile": None,
+            "poller": "epoll",
+            "batcher_workers": 2,
+        },
+        "scope": {
+            "ns_per_row_off": 800.0,
+            "ns_per_row_on": 850.0,
+            "overhead_ratio": 850.0 / 800.0,
+        },
+        "stats": {
+            "lines": 40,
+            "requests": 1650,
+            "responses": 1648,
+            "trace_started": 240,
+            "trace_completed": 238,
+            "trace_dropped": 0,
+            "profile_counters": 12,
+        },
+        "fleet": {
+            "replicas": 3,
+            "replication": 3,
+            "killed_replica": True,
+            "restarted_replica": True,
+            "availability": 0.9975,
+            "failovers": 5,
+            "load": {
+                "encoding": "qidx",
+                "clients": 8,
+                "sent": 800,
+                "ok": 798,
+                "rejected": 0,
+                "deadline_exceeded": 1,
+                "exhausted": 1,
+                "no_replica": 0,
+            },
+            "outcomes": {"ok": 798, "deadline_exceeded": 1, "timeout": 1},
+        },
+        "reactor": {
+            "poller": "epoll",
+            "peak_connections": 1026,
+            "mean_batch": 11.7,
+            "batcher": {"max_batch": 64, "max_delay_us": 2000},
+            "tiers": [
+                {
+                    "connections": 256,
+                    "reactor": run("open-mux", "qidx", 256, 9500.0, 105),
+                    "net": run("open-mux", "qidx", 256, 9400.0, 105),
+                },
+                {
+                    "connections": 1024,
+                    "reactor": run("open-mux", "qidx", 1024, 9000.0, 105),
+                    "net": run("open-mux", "qidx", 1024, 8000.0, 105),
+                },
+            ],
+        },
+        "heal": {
+            "time_to_heal_s": 0.8,
+            "models_recovered": 1,
+            "quarantined": 2,
+            "bytes_fetched": 48_000,
+            "fetch_retries": 0,
+            "post_heal_availability": 1.0,
+            "post_heal_load": run("closed", "qidx", 4, 9000.0, 105),
+        },
+        "wire_bytes_per_request": {
+            "f32le": 297,
+            "qidx": 105,
+            "qidx_over_f32le": 105 / 297,
+        },
+        "saturation": run("closed", "qidx", 8, 11000.0, 105),
+        "results": [
+            run("closed", "f32le", 8, 9000.0, 297),
+            run("closed", "qidx", 8, 11000.0, 105),
+            run("open", "f32le", 4, 6000.0, 297, offered_rps=6600.0),
+            run("open", "qidx", 4, 6000.0, 105, offered_rps=6600.0),
+        ],
+    }
+
+
+def _selftest() -> None:
+    import contextlib
+    import copy
+    import io
+
+    doc = _synthetic_v5_doc()
+    check_serving_v5("<selftest>", doc)
+
+    def must_fail(why, mutate):
+        broken = copy.deepcopy(doc)
+        mutate(broken)
+        try:
+            # fail() prints before exiting; keep the expected noise out
+            # of the self-test's own output.
+            with contextlib.redirect_stderr(io.StringIO()):
+                check_serving_v5("<selftest>", broken)
+        except SystemExit:
+            return
+        fail(f"self-test: {why} was not caught")
+
+    must_fail("missing stats section", lambda d: d.pop("stats"))
+    must_fail(
+        "requests < responses in the scrape",
+        lambda d: d["stats"].update(requests=10, responses=11),
+    )
+    must_fail(
+        "no traces despite sampling",
+        lambda d: d["stats"].update(trace_completed=0),
+    )
+    must_fail(
+        "no profile counters despite profiling",
+        lambda d: d["stats"].update(profile_counters=0),
+    )
+    must_fail("missing scope section", lambda d: d.pop("scope"))
+    must_fail(
+        "instrumentation overhead over the ceiling",
+        lambda d: d["scope"].update(ns_per_row_on=2400.0, overhead_ratio=3.0),
+    )
+    must_fail(
+        "overhead ratio inconsistent with its own sides",
+        lambda d: d["scope"].update(overhead_ratio=1.0),
+    )
+    must_fail("missing meta section", lambda d: d.pop("meta"))
+    must_fail(
+        "meta without the fault seed stamped",
+        lambda d: d["meta"].pop("fault_seed"),
+    )
+    must_fail(
+        "meta with an unknown poller",
+        lambda d: d["meta"].update(poller="kqueue"),
+    )
+
+
 def main() -> None:
-    paths = sys.argv[1:] or ["BENCH_lut_engine.json"]
+    args = sys.argv[1:]
+    if args and args[0] == "--self-test":
+        _selftest()
+        print(
+            "check_bench: ok — self-test: synthetic v5 doc passes; "
+            "broken observability invariants are caught"
+        )
+        args = args[1:]
+        if not args:
+            return
+    paths = args or ["BENCH_lut_engine.json"]
     for path in paths:
         check_file(path)
 

@@ -28,6 +28,7 @@ use super::metrics::{Metrics, Outcome};
 use super::server::{InferError, Payload};
 use crate::fixedpoint::UniformQuant;
 use crate::util::threadpool::ThreadPool;
+use crate::util::trace;
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -77,6 +78,9 @@ pub struct Completion {
     /// its buffers — the reactor's event loop pools these instead of
     /// allocating per request.
     pub payload: Payload,
+    /// Trace context carried from submission; the response writer
+    /// stamps `Flush` and finishes it ([`trace::UNTRACED`] is a no-op).
+    pub trace: trace::Ctx,
 }
 
 /// Where completions go: called from worker threads, once per accepted
@@ -89,6 +93,7 @@ struct Entry {
     payload: Payload,
     enqueued: Instant,
     deadline: Option<Instant>,
+    trace: trace::Ctx,
 }
 
 /// Submission side of a [`Batcher`] (cheap to clone).
@@ -157,6 +162,20 @@ impl BatcherHandle {
         payload: Payload,
         deadline: Option<Instant>,
     ) -> Result<(), InferError> {
+        self.submit_traced(conn, req_id, payload, deadline, trace::UNTRACED)
+    }
+
+    /// [`Self::submit`] with a trace context: the `Enqueue` stage is
+    /// stamped on admission and the context rides the entry through
+    /// batch formation to the completion sink.
+    pub fn submit_traced(
+        &self,
+        conn: u64,
+        req_id: u64,
+        payload: Payload,
+        deadline: Option<Instant>,
+        tctx: trace::Ctx,
+    ) -> Result<(), InferError> {
         // Held (shared) until the send below completes: the collector
         // closes this gate exclusively before its final drain, so an
         // `Ok(())` here is a hard guarantee the entry will be received.
@@ -191,12 +210,14 @@ impl BatcherHandle {
                 Err(now) => cur = now,
             }
         }
+        trace::stamp(tctx, trace::Stage::Enqueue);
         let entry = Entry {
             conn,
             req_id,
             payload,
             enqueued: Instant::now(),
             deadline,
+            trace: tctx,
         };
         if self.tx.send(entry).is_err() {
             self.depth.fetch_sub(1, Ordering::SeqCst);
@@ -282,6 +303,9 @@ impl Batcher {
                     let depth = Arc::clone(&d);
                     let sink = Arc::clone(&sink);
                     let dispatched = Instant::now();
+                    for e in &batch {
+                        trace::stamp(e.trace, trace::Stage::Batch);
+                    }
                     workers.execute(move || {
                         thread_local! {
                             static BUFS: RefCell<WorkerScratch> =
@@ -306,6 +330,7 @@ impl Batcher {
                                         req_id: e.req_id,
                                         result: Err(InferError::DeadlineExceeded),
                                         payload: e.payload,
+                                        trace: e.trace,
                                     });
                                     None
                                 }
@@ -317,6 +342,9 @@ impl Batcher {
                         }
                         let n = batch.len();
                         let out_len = engine.output_len();
+                        for e in &batch {
+                            trace::stamp(e.trace, trace::Stage::InferStart);
+                        }
                         BUFS.with(|b| {
                             let s = &mut *b.borrow_mut();
                             // Partition by payload encoding (stable): a
@@ -378,6 +406,9 @@ impl Batcher {
                                     }
                                 }
                             }
+                            for e in &batch {
+                                trace::stamp(e.trace, trace::Stage::InferEnd);
+                            }
                             // Record metrics BEFORE completing so a
                             // snapshot read right after a response sees
                             // the request counted.
@@ -403,6 +434,7 @@ impl Batcher {
                                     req_id: e.req_id,
                                     result: Ok(s.out[i * out_len..(i + 1) * out_len].to_vec()),
                                     payload: e.payload,
+                                    trace: e.trace,
                                 });
                             }
                         });

@@ -89,6 +89,15 @@ pub trait Backend: Send + Sync {
     fn max_batch(&self) -> usize {
         256
     }
+
+    /// qnn-scope per-layer kernel-profiling counters as `(name, value)`
+    /// pairs (e.g. `layer00.dense/fewlevel/i16.ns`), empty unless the
+    /// backend supports profiling **and** `QNN_PROFILE` has been armed.
+    /// The registry surfaces these under `qnn.profile.<model>.*`; see
+    /// [`crate::inference::lut`]'s profiling docs for the schema.
+    fn profile_counters(&self) -> Vec<(String, u64)> {
+        Vec::new()
+    }
 }
 
 /// Model name for an artifact path: the file stem.
@@ -183,6 +192,9 @@ impl Backend for LutEngine {
     }
     fn memory_bytes(&self) -> usize {
         self.lut.memory_bytes()
+    }
+    fn profile_counters(&self) -> Vec<(String, u64)> {
+        self.lut.profile_counters()
     }
     fn input_quant(&self) -> Option<UniformQuant> {
         // qidx is a u8 wire encoding; a finer grid cannot ride on it.

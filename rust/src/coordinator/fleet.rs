@@ -47,6 +47,7 @@
 
 use super::metrics::{Outcome, OutcomeCounters};
 use super::net::{ClientError, NetClient, NetClientCfg, RemoteError};
+use super::registry;
 use super::wire::ErrCode;
 use crate::util::fnv::fnv1a;
 use crate::util::rng::Xoshiro256;
@@ -270,6 +271,9 @@ struct FleetInner {
 pub struct Fleet {
     inner: Arc<FleetInner>,
     health: Vec<JoinHandle<()>>,
+    /// Keeps the dispatch counters visible in the global metrics
+    /// registry; dropping the fleet deregisters them.
+    _registration: registry::Registration,
 }
 
 impl Fleet {
@@ -324,7 +328,23 @@ impl Fleet {
                     .expect("spawning fleet health thread"),
             );
         }
-        Fleet { inner, health }
+        // Publish dispatch counters under `qnn.fleet.*` for the stats
+        // frame: a scrape of any co-located front-end sees the client
+        // side of the reliability policy next to the serving side.
+        let scrape = Arc::clone(&inner);
+        let registration = registry::global().register(move |out| {
+            let m = &scrape.metrics;
+            registry::kv(out, "qnn.fleet.requests", m.requests());
+            registry::kv(out, "qnn.fleet.retries", m.retries());
+            registry::kv(out, "qnn.fleet.failovers", m.failovers());
+            registry::kv(out, "qnn.fleet.ejections", m.ejections());
+            registry::kv(out, "qnn.fleet.readmissions", m.readmissions());
+            registry::kvf(out, "qnn.fleet.availability", m.availability());
+            for (o, n) in m.outcomes.snapshot() {
+                registry::kv(out, &format!("qnn.fleet.outcome.{}", o.name()), n);
+            }
+        });
+        Fleet { inner, health, _registration: registration }
     }
 
     /// One-shot `f32le` inference with the full reliability policy.

@@ -439,6 +439,65 @@ mod tests {
     }
 
     #[test]
+    fn empty_ring_percentiles_are_zero_across_splits() {
+        let s = Metrics::with_window(0).snapshot();
+        assert_eq!(s.p50_ms, 0.0);
+        assert_eq!(s.p95_ms, 0.0);
+        assert_eq!(s.queue_p50_ms, 0.0);
+        assert_eq!(s.queue_p95_ms, 0.0);
+        assert_eq!(s.service_p50_ms, 0.0);
+        assert_eq!(s.service_p95_ms, 0.0);
+        assert_eq!(s.latency_samples, 0);
+        assert_eq!(s.mean_batch, 0.0);
+    }
+
+    #[test]
+    fn window_wraps_at_exactly_latency_window() {
+        // Exactly LATENCY_WINDOW samples fill the ring without
+        // evicting; the next push wraps and only the sample count
+        // saturates, never the request count.
+        let m = Metrics::new();
+        for _ in 0..LATENCY_WINDOW {
+            m.record_batch(&[7.0], &[3.0], &[4.0]);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests as usize, LATENCY_WINDOW);
+        assert_eq!(s.latency_samples, LATENCY_WINDOW);
+        assert_eq!(s.p50_ms, 7.0);
+        m.record_batch(&[7.0], &[3.0], &[4.0]);
+        let s = m.snapshot();
+        assert_eq!(s.requests as usize, LATENCY_WINDOW + 1);
+        assert_eq!(s.latency_samples, LATENCY_WINDOW);
+        assert_eq!(s.p99_ms, 7.0);
+    }
+
+    #[test]
+    fn outcome_totals_hold_under_concurrent_recorders() {
+        // 8 threads hammer the counters over every outcome variant:
+        // the grand total and the snapshot sum must both be exact.
+        let m = std::sync::Arc::new(OutcomeCounters::new());
+        let threads: Vec<_> = (0..8u64)
+            .map(|t| {
+                let m = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        let o = Outcome::ALL
+                            [((t + i) % Outcome::ALL.len() as u64) as usize];
+                        m.record(o);
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        assert_eq!(m.total(), 8_000);
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), Outcome::ALL.len());
+        assert_eq!(snap.iter().map(|&(_, n)| n).sum::<u64>(), 8_000);
+    }
+
+    #[test]
     fn outcome_counters_tally_and_surface() {
         let m = Metrics::new();
         m.outcomes.record(Outcome::Ok);

@@ -24,6 +24,7 @@ pub mod metrics;
 pub mod net;
 pub mod pjrt_engine;
 pub mod reactor;
+pub mod registry;
 pub mod repair;
 pub mod router;
 pub mod server;
@@ -41,6 +42,7 @@ pub use net::{
 };
 pub use pjrt_engine::PjrtEngine;
 pub use reactor::{ReactorCfg, ReactorServer};
+pub use registry::{Registration, Registry};
 pub use repair::{Repairer, RepairCfg};
 pub use router::{ArtifactStore, Router};
 pub use server::{InferError, Payload, Server, ServerCfg, ServerHandle};

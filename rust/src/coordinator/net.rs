@@ -40,10 +40,12 @@
 //! and the response row it scatters back — the same contract as the
 //! in-process [`super::server::Server`].
 
+use super::registry;
 use super::router::Router;
 use super::server::{InferError, Payload};
 use super::wire::{self, Dtype, ErrCode, Frame, ManifestEntry};
 use crate::util::fault::{self, FrameFault};
+use crate::util::trace;
 use anyhow::{Context, Result};
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -86,6 +88,9 @@ enum WriteItem {
     Pending {
         req_id: u64,
         rx: std::sync::mpsc::Receiver<std::result::Result<Vec<f32>, InferError>>,
+        /// qnn-scope context: the writer stamps the flush and retires
+        /// the trace once the response frame hits the socket.
+        trace: trace::Ctx,
     },
     Error {
         req_id: u64,
@@ -110,6 +115,11 @@ enum WriteItem {
         offset: u64,
         total_len: u64,
         data: Vec<u8>,
+    },
+    /// A rendered metrics-registry exposition (stats frame answer).
+    Stats {
+        req_id: u64,
+        text: String,
     },
 }
 
@@ -143,6 +153,9 @@ pub struct NetServer {
     accept: Option<JoinHandle<()>>,
     conns: Arc<Mutex<Vec<(TcpStream, JoinHandle<()>)>>>,
     router: Option<Router>,
+    /// Keeps this server's models in the global metrics registry for
+    /// its lifetime; dropping it deregisters the scrape source.
+    _registration: registry::Registration,
 }
 
 impl NetServer {
@@ -240,6 +253,13 @@ impl NetServer {
             })
             .expect("spawn accept thread");
 
+        // Scrape source for the stats frame / registry dump: walks the
+        // live routing table, so hot-installed models appear without
+        // re-registration.
+        let scrape = router.clone();
+        let registration =
+            registry::global().register(move |out| scrape.render_registry(out, "net"));
+
         Ok(NetServer {
             addr,
             stop,
@@ -247,6 +267,7 @@ impl NetServer {
             accept: Some(accept),
             conns,
             router: Some(router),
+            _registration: registration,
         })
     }
 
@@ -382,8 +403,18 @@ fn serve_conn(
             }
         }
         let arrival = Instant::now();
+        // Admit request frames into the trace sampler before the parse,
+        // so the accept stamp marks frame arrival and the decode stamp
+        // brackets parse + checksum. Non-request frames are never
+        // sampled; `tctx` is UNTRACED on the common path.
+        let tctx = if wire::frame_kind(&rbuf) == Some(0) {
+            trace::begin("net", wire::peek_req_id(&rbuf))
+        } else {
+            trace::UNTRACED
+        };
         let (req_id, model, dtype, deadline_ms, payload) = match wire::parse_frame(&rbuf) {
             Ok(Frame::Request { req_id, model, dtype, deadline_ms, payload }) => {
+                trace::stamp(tctx, trace::Stage::Decode);
                 (req_id, model, dtype, deadline_ms, payload)
             }
             Ok(Frame::HealthPing { req_id }) => {
@@ -408,6 +439,16 @@ fn serve_conn(
                 // holds. An empty manifest is a legal answer (a healing
                 // replica that booted bare).
                 let item = WriteItem::Manifest { req_id, entries: router.manifest() };
+                if wtx.send(item).is_err() {
+                    break;
+                }
+                continue;
+            }
+            Ok(Frame::StatsRequest { req_id }) => {
+                // qnn-scope: render the global metrics registry off the
+                // inference path — every server/batcher/fleet/repair/
+                // fault/trace counter in one text exposition.
+                let item = WriteItem::Stats { req_id, text: registry::global().render() };
                 if wtx.send(item).is_err() {
                     break;
                 }
@@ -453,7 +494,8 @@ fn serve_conn(
                         req_id: 0,
                         code: ErrCode::BadRequest,
                         retry_after_ms: 0,
-                        msg: "only request, health ping, manifest and fetch frames are accepted"
+                        msg: "only request, health ping, stats, manifest and fetch frames \
+                              are accepted"
                             .into(),
                     })
                     .is_err()
@@ -464,7 +506,10 @@ fn serve_conn(
             }
             Err(e) => {
                 // Checksum/validation failure inside a well-framed
-                // frame: report it and keep the connection.
+                // frame: report it and keep the connection. A sampled
+                // request that fails validation retires its (partial)
+                // trace here instead of leaking the slot.
+                trace::finish(tctx);
                 if wtx
                     .send(WriteItem::Error {
                         req_id: 0,
@@ -483,6 +528,7 @@ fn serve_conn(
             // Announced drain: accepted work is still finishing, but
             // nothing new gets in. The typed error tells clients to
             // reconnect elsewhere.
+            trace::finish(tctx);
             if wtx
                 .send(WriteItem::Error {
                     req_id,
@@ -502,6 +548,7 @@ fn serve_conn(
                 // A miss on a model this replica should own is a
                 // divergence signal — the repair loop hooks this.
                 router.note_missing(model);
+                trace::finish(tctx);
                 if wtx
                     .send(WriteItem::Error {
                         req_id,
@@ -520,6 +567,7 @@ fn serve_conn(
             Dtype::F32Le => match wire::payload_f32s_into(payload, &mut fbuf) {
                 Ok(()) => Payload::F32(fbuf.clone()),
                 Err(e) => {
+                    trace::finish(tctx);
                     if wtx
                         .send(WriteItem::Error {
                             req_id,
@@ -540,14 +588,17 @@ fn serve_conn(
         // arrival so server-side queueing counts against it.
         let deadline = (deadline_ms > 0)
             .then(|| arrival + Duration::from_millis(deadline_ms as u64));
-        let item = match handle.submit_with_deadline(payload, deadline) {
-            Ok(rx) => WriteItem::Pending { req_id, rx },
-            Err(e) => WriteItem::Error {
-                req_id,
-                code: code_for(&e),
-                retry_after_ms: retry_hint(&e),
-                msg: e.to_string(),
-            },
+        let item = match handle.submit_traced(payload, deadline, tctx) {
+            Ok(rx) => WriteItem::Pending { req_id, rx, trace: tctx },
+            Err(e) => {
+                trace::finish(tctx);
+                WriteItem::Error {
+                    req_id,
+                    code: code_for(&e),
+                    retry_after_ms: retry_hint(&e),
+                    msg: e.to_string(),
+                }
+            }
         };
         // sync_channel: blocks when the pipeline window is full — the
         // socket back-pressures instead of buffering unboundedly.
@@ -566,28 +617,33 @@ fn serve_conn(
 fn writer_loop(mut stream: TcpStream, rx: Receiver<WriteItem>) {
     let mut wbuf: Vec<u8> = Vec::new();
     while let Ok(item) = rx.recv() {
+        let mut tctx = trace::UNTRACED;
         match item {
-            WriteItem::Pending { req_id, rx } => match rx.recv() {
-                Ok(Ok(out)) => wire::encode_response_f32(&mut wbuf, req_id, &out),
-                // The batcher resolved it with a typed error (deadline
-                // shed, for instance) — forward it on the wire.
-                Ok(Err(e)) => wire::encode_error(
-                    &mut wbuf,
-                    req_id,
-                    code_for(&e),
-                    retry_hint(&e),
-                    &e.to_string(),
-                ),
-                // The server dropped the request mid-shutdown: a clean
-                // typed error, never silence.
-                Err(_) => wire::encode_error(
-                    &mut wbuf,
-                    req_id,
-                    ErrCode::Shutdown,
-                    0,
-                    &InferError::Dropped.to_string(),
-                ),
-            },
+            WriteItem::Pending { req_id, rx, trace: t } => {
+                tctx = t;
+                match rx.recv() {
+                    Ok(Ok(out)) => wire::encode_response_f32(&mut wbuf, req_id, &out),
+                    // The batcher resolved it with a typed error
+                    // (deadline shed, for instance) — forward it on the
+                    // wire.
+                    Ok(Err(e)) => wire::encode_error(
+                        &mut wbuf,
+                        req_id,
+                        code_for(&e),
+                        retry_hint(&e),
+                        &e.to_string(),
+                    ),
+                    // The server dropped the request mid-shutdown: a
+                    // clean typed error, never silence.
+                    Err(_) => wire::encode_error(
+                        &mut wbuf,
+                        req_id,
+                        ErrCode::Shutdown,
+                        0,
+                        &InferError::Dropped.to_string(),
+                    ),
+                }
+            }
             WriteItem::Error { req_id, code, retry_after_ms, msg } => {
                 wire::encode_error(&mut wbuf, req_id, code, retry_after_ms, &msg)
             }
@@ -600,8 +656,16 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<WriteItem>) {
             WriteItem::Chunk { req_id, model, offset, total_len, data } => {
                 wire::encode_fetch_chunk(&mut wbuf, req_id, &model, offset, total_len, &data)
             }
+            WriteItem::Stats { req_id, text } => {
+                wire::encode_stats_response(&mut wbuf, req_id, &text)
+            }
         }
-        if !write_frame_injecting_faults(&mut stream, &wbuf) {
+        let delivered = write_frame_injecting_faults(&mut stream, &wbuf);
+        // Retire the trace whether or not the write stuck: the flush
+        // stamp marks the hand-off to the socket.
+        trace::stamp(tctx, trace::Stage::Flush);
+        trace::finish(tctx);
+        if !delivered {
             break; // client gone (or a fault severed us); receivers drop
         }
     }
@@ -1027,6 +1091,39 @@ impl NetClient {
         }
     }
 
+    /// Fetch the server's metrics-registry exposition (qnn-scope stats
+    /// frame): one `name value` line per counter, covering every
+    /// registered source plus the process-level fault/trace built-ins.
+    /// Same no-outstanding-responses requirement as [`NetClient::ping`].
+    pub fn fetch_stats(&mut self) -> Result<String, ClientError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        wire::encode_stats_request(&mut self.wbuf, id);
+        self.stream.write_all(&self.wbuf)?;
+        self.read_next_frame()?;
+        let proto = |e: anyhow::Error| ClientError::Protocol(format!("{e:#}"));
+        match wire::parse_frame(&self.rbuf).map_err(proto)? {
+            Frame::StatsResponse { req_id, text } => {
+                if req_id != id {
+                    return Err(ClientError::Protocol(format!(
+                        "stats id {req_id} != request id {id}"
+                    )));
+                }
+                Ok(text.to_string())
+            }
+            Frame::Error { code, retry_after_ms, msg, .. } => {
+                Err(ClientError::Remote(RemoteError {
+                    code,
+                    retry_after_ms,
+                    msg: msg.to_string(),
+                }))
+            }
+            other => Err(ClientError::Protocol(format!(
+                "expected stats response, got: {other:?}"
+            ))),
+        }
+    }
+
     fn finish(&mut self, id: u64) -> Result<Vec<f32>, ClientError> {
         let (rid, res) = self.recv_response()?;
         if rid != id && rid != 0 {
@@ -1230,6 +1327,43 @@ mod tests {
         assert_eq!(c.infer_f32("sum", &[1.0; 4]).unwrap(), vec![4.0]);
         let h = c.ping().unwrap();
         assert_eq!(h.models, 1);
+        net.shutdown();
+    }
+
+    #[test]
+    fn stats_frame_exposes_registry() {
+        let net = boot();
+        let mut c = NetClient::connect(net.local_addr()).unwrap();
+        for _ in 0..3 {
+            assert_eq!(c.infer_f32("sum", &[1.0; 4]).unwrap(), vec![4.0]);
+        }
+        let text = c.fetch_stats().unwrap();
+        // Process-level built-ins are always present.
+        assert!(text.contains("qnn.fault.total "), "{text}");
+        assert!(text.contains("qnn.trace.started "), "{text}");
+        // Our router registered a "net"-prefixed source. Other tests in
+        // this process may register their own, so pair each requests
+        // line with the responses line that follows it from the same
+        // source and check the invariant rather than exact counts.
+        let mut saw_model = false;
+        let mut lines = text.lines();
+        while let Some(line) = lines.next() {
+            let Some(req) = line.strip_prefix("qnn.net.sum.requests ") else {
+                continue;
+            };
+            saw_model = true;
+            let requests: u64 = req.trim().parse().unwrap();
+            let responses: u64 = lines
+                .find_map(|l| l.strip_prefix("qnn.net.sum.responses "))
+                .expect("responses line follows requests line")
+                .trim()
+                .parse()
+                .unwrap();
+            assert!(requests >= responses, "{requests} < {responses}");
+        }
+        assert!(saw_model, "no qnn.net.sum.requests line in:\n{text}");
+        // The connection keeps serving inference after a stats scrape.
+        assert_eq!(c.infer_f32("sum", &[2.0; 4]).unwrap(), vec![8.0]);
         net.shutdown();
     }
 

@@ -37,11 +37,13 @@
 use super::batcher::{Batcher, BatcherCfg, BatcherHandle, Completion, CompletionSink};
 use super::engine::Backend;
 use super::net::{code_for, retry_hint};
+use super::registry;
 use super::router::{scan_artifact_dir, ArtifactStore};
 use super::server::Payload;
 use super::wire::{self, Dtype, ErrCode, Frame, FrameAssembler};
 use crate::util::fault::{self, FrameFault};
 use crate::util::poll::{Event, Interest, Poller, WakePipe};
+use crate::util::trace;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
@@ -104,6 +106,9 @@ pub struct ReactorServer {
     handles: BTreeMap<String, BatcherHandle>,
     peak_conns: Arc<AtomicUsize>,
     poller_backend: &'static str,
+    /// Keeps this front-end's models visible in the global metrics
+    /// registry; dropping the server deregisters them.
+    _registration: registry::Registration,
 }
 
 impl ReactorServer {
@@ -223,6 +228,31 @@ impl ReactorServer {
             batchers.push(b);
         }
 
+        // Register every model with the global metrics registry: the
+        // stats frame (and any other front-end's scrape) sees this
+        // reactor's per-model counters under the `reactor` prefix.
+        let scrape: Vec<_> = batchers
+            .iter()
+            .map(|b| {
+                (
+                    b.engine_name.clone(),
+                    Arc::clone(&b.metrics),
+                    Arc::clone(&b.backend),
+                    b.handle(),
+                )
+            })
+            .collect();
+        let registration = registry::global().register(move |out| {
+            for (name, metrics, backend, handle) in &scrape {
+                registry::render_model(out, "reactor", name, metrics, Some(backend.as_ref()));
+                registry::kv(
+                    out,
+                    &format!("qnn.reactor.{name}.queued"),
+                    handle.queued() as u64,
+                );
+            }
+        });
+
         let stop = Arc::new(AtomicBool::new(false));
         let soft_drain = Arc::new(AtomicBool::new(false));
         let hard_abort = Arc::new(AtomicBool::new(false));
@@ -267,6 +297,7 @@ impl ReactorServer {
             handles,
             peak_conns,
             poller_backend,
+            _registration: registration,
         })
     }
 
@@ -659,8 +690,16 @@ impl ReactorLoop {
         // Take the frame buffer so the zero-copy parse borrow does not
         // pin `self` (handlers below need it mutably).
         let fbuf = std::mem::take(&mut self.fbuf);
+        // Trace sampling happens on the raw bytes, before parsing, so
+        // `Accept` marks frame arrival (a peek, not a validation).
+        let tctx = if wire::frame_kind(&fbuf) == Some(0) {
+            trace::begin("reactor", wire::peek_req_id(&fbuf))
+        } else {
+            trace::UNTRACED
+        };
         match wire::parse_frame(&fbuf) {
             Ok(Frame::Request { req_id, model, dtype, deadline_ms, payload }) => {
+                trace::stamp(tctx, trace::Stage::Decode);
                 if self.soft_drain.load(Ordering::SeqCst) {
                     // Announced drain: accepted work keeps resolving,
                     // nothing new gets in.
@@ -671,10 +710,12 @@ impl ReactorLoop {
                         0,
                         "server is draining; reconnect elsewhere",
                     );
+                    trace::finish(tctx);
                 } else if !self.handles.contains_key(model) {
                     let known: Vec<String> = self.handles.keys().cloned().collect();
                     let msg = format!("no model {model:?} (have {known:?})");
                     self.send_error(conn, req_id, ErrCode::NoModel, 0, &msg);
+                    trace::finish(tctx);
                 } else {
                     // Decode into a recycled buffer (returned by the
                     // completion path) — no per-request allocation on
@@ -688,6 +729,7 @@ impl ReactorLoop {
                                     let msg = format!("{e:#}");
                                     self.recycle_f32(buf);
                                     self.send_error(conn, req_id, ErrCode::BadRequest, 0, &msg);
+                                    trace::finish(tctx);
                                     None
                                 }
                             }
@@ -708,7 +750,7 @@ impl ReactorLoop {
                         // By-ref lookup: a handle clone per frame is an
                         // avoidable allocation on the hot path.
                         let h = self.handles.get(model).expect("checked above");
-                        match h.submit(conn.token, req_id, payload, deadline) {
+                        match h.submit_traced(conn.token, req_id, payload, deadline, tctx) {
                             Ok(()) => conn.inflight += 1,
                             Err(e) => {
                                 let msg = e.to_string();
@@ -719,6 +761,7 @@ impl ReactorLoop {
                                     retry_hint(&e),
                                     &msg,
                                 );
+                                trace::finish(tctx);
                             }
                         }
                     }
@@ -743,6 +786,13 @@ impl ReactorLoop {
             Ok(Frame::ManifestRequest { req_id }) => {
                 let entries = self.store.as_ref().map(|s| s.manifest()).unwrap_or_default();
                 wire::encode_manifest_response(&mut self.ebuf, req_id, &entries);
+                self.append_wire(conn);
+            }
+            Ok(Frame::StatsRequest { req_id }) => {
+                // Served off the inference path, like ping/pong: the
+                // render walks every registered source in-process.
+                let text = registry::global().render();
+                wire::encode_stats_response(&mut self.ebuf, req_id, &text);
                 self.append_wire(conn);
             }
             Ok(Frame::FetchRequest { req_id, model, offset, max_len }) => {
@@ -778,7 +828,7 @@ impl ReactorLoop {
                     0,
                     ErrCode::BadRequest,
                     0,
-                    "only request, health ping, manifest and fetch frames are accepted",
+                    "only request, health ping, stats, manifest and fetch frames are accepted",
                 );
             }
             Err(e) => {
@@ -786,6 +836,7 @@ impl ReactorLoop {
                 // frame: report it and keep the connection.
                 let msg = format!("{e:#}");
                 self.send_error(conn, 0, ErrCode::BadRequest, 0, &msg);
+                trace::finish(tctx);
             }
         }
         self.fbuf = fbuf;
@@ -897,7 +948,7 @@ impl ReactorLoop {
         for c in batch {
             // A completion for a connection that died in the meantime
             // has nowhere to go; its work is simply discarded.
-            let Completion { conn: token, req_id, result, payload } = c;
+            let Completion { conn: token, req_id, result, payload, trace: tctx } = c;
             self.with_conn(token, |lp, conn| {
                 conn.inflight = conn.inflight.saturating_sub(1);
                 match result {
@@ -924,6 +975,7 @@ impl ReactorLoop {
                     Payload::QIdx(v) => lp.recycle_u8(v),
                 }
                 lp.flush(conn);
+                trace::stamp(tctx, trace::Stage::Flush);
                 // inflight dropped (and the flush may have cleared the
                 // write cap): frames parked in the assembler under
                 // backpressure get processed now — there is no pending
@@ -934,6 +986,9 @@ impl ReactorLoop {
                 }
                 lp.maybe_finish(conn);
             });
+            // Outside `with_conn` so a completion whose connection died
+            // (discarded above) still releases its trace slot.
+            trace::finish(tctx);
         }
     }
 
@@ -1056,6 +1111,37 @@ mod tests {
         let h = c.ping().unwrap();
         assert!(!h.draining);
         assert_eq!(h.models, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn sampled_request_traces_end_to_end() {
+        let _g = trace::test_lock();
+        trace::set_rate(1);
+        let srv = boot();
+        let mut c = NetClient::connect(srv.local_addr()).unwrap();
+        for i in 0..8 {
+            let out = c.infer_f32("sum", &[i as f32, 0.0, 0.0, 0.0]).unwrap();
+            assert_eq!(out, vec![i as f32]);
+        }
+        trace::set_rate(0);
+        // The last request's finish can race our read of the ring, but
+        // request k+1 cannot complete before request k's trace retired
+        // — with 8 sequential requests a complete one must be visible.
+        let traces = trace::completed();
+        let t = traces
+            .iter()
+            .rev()
+            .find(|t| t.frontend == "reactor" && t.is_complete())
+            .expect("a complete reactor trace");
+        assert!(t.stamps.iter().all(|&s| s != 0), "{:?}", t.stamps);
+        // The dump of everything we captured is valid trace-event JSON.
+        let json = trace::chrome_json(&traces);
+        assert!(crate::util::json::Json::parse(&json).is_ok());
+        // And the stats frame exposes this front-end's models.
+        let text = c.fetch_stats().unwrap();
+        assert!(text.contains("qnn.reactor.sum.requests "), "{text}");
+        assert!(text.contains("qnn.reactor.sum.queued "), "{text}");
         srv.shutdown();
     }
 

@@ -1,0 +1,240 @@
+//! qnn-scope metrics registry: one process-global scrape point for
+//! every counter the serving stack grows.
+//!
+//! Before this module, the stack's signals were fragmented: server
+//! [`super::Metrics`] lived per front-end, the batcher's queue/batch
+//! stats inside the reactor, [`super::FleetMetrics`] inside each
+//! dispatcher, repair and quarantine state inside the router/repairer,
+//! and fault-injection counters in `util::fault` — five places to look,
+//! none on the wire. The registry unifies them: components
+//! [`Registry::register`] a render closure at construction (holding the
+//! returned [`Registration`] guard so shutdown deregisters them), and
+//! [`Registry::render`] concatenates every source into a text
+//! exposition — one `name value` pair per line under stable
+//! hierarchical dot-separated names:
+//!
+//! ```text
+//! qnn.net.digits-lut.requests 1024
+//! qnn.net.digits-lut.responses 1019
+//! qnn.reactor.digits-lut.outcome.busy 5
+//! qnn.fleet.failovers 2
+//! qnn.repair.installed 1
+//! qnn.store.quarantined 0
+//! qnn.fault.drops 13
+//! qnn.trace.completed 37
+//! qnn.profile.digits-lut.layer00.dense/fewlevel/i16.ns 812345
+//! ```
+//!
+//! The same rendering is served on the wire (stats request/response
+//! frames, kinds 9/10 — both front-ends answer it off the inference
+//! path like ping/pong) and dumped as text for humans and CI; values
+//! are integers or decimal floats, names never contain spaces, so one
+//! `split_whitespace` parses a line.
+//!
+//! Always-on process-level sources (fault counters, trace counters) are
+//! appended by [`Registry::render`] itself — they exist even when no
+//! component has registered.
+
+use crate::util::fault;
+use crate::util::trace;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+type Source = Box<dyn Fn(&mut String) + Send + Sync>;
+
+struct Entry {
+    id: u64,
+    render: Source,
+}
+
+/// The registry: an ordered set of render closures. Cheap to scrape
+/// (one lock, one pass), cheap to ignore (components on the hot path
+/// never touch it — rendering reads their atomics from the scrape
+/// thread).
+pub struct Registry {
+    sources: Mutex<Vec<Entry>>,
+    next_id: AtomicU64,
+}
+
+/// Deregistration guard returned by [`Registry::register`]: dropping it
+/// removes the source, so a shut-down server can never be scraped into
+/// a dangling read.
+pub struct Registration {
+    id: u64,
+}
+
+impl Drop for Registration {
+    fn drop(&mut self) {
+        let mut sources = global().sources.lock().unwrap();
+        sources.retain(|e| e.id != self.id);
+    }
+}
+
+/// The process-global registry.
+pub fn global() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        sources: Mutex::new(Vec::new()),
+        next_id: AtomicU64::new(1),
+    })
+}
+
+/// Append one `name value` line. The helper every source uses, so the
+/// exposition format has exactly one implementation.
+pub fn kv(out: &mut String, name: &str, value: u64) {
+    debug_assert!(!name.contains(char::is_whitespace), "metric name {name:?}");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+/// [`kv`] for float-valued metrics (latency percentiles, rates).
+pub fn kvf(out: &mut String, name: &str, value: f64) {
+    debug_assert!(!name.contains(char::is_whitespace), "metric name {name:?}");
+    let _ = writeln!(out, "{name} {value:.6}");
+}
+
+impl Registry {
+    /// Add a render source; it stays registered until the returned
+    /// guard drops. Sources render in registration order.
+    #[must_use = "dropping the Registration immediately deregisters the source"]
+    pub fn register(&self, render: impl Fn(&mut String) + Send + Sync + 'static) -> Registration {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.sources.lock().unwrap().push(Entry { id, render: Box::new(render) });
+        Registration { id }
+    }
+
+    /// Number of registered sources (diagnostics/tests).
+    pub fn sources(&self) -> usize {
+        self.sources.lock().unwrap().len()
+    }
+
+    /// Render the full text exposition: every registered source in
+    /// order, then the always-on process-level built-ins.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        {
+            let sources = self.sources.lock().unwrap();
+            for e in sources.iter() {
+                (e.render)(&mut out);
+            }
+        }
+        // Built-ins: fault-injection counters (write + read side) and
+        // trace sampler counters exist process-wide regardless of which
+        // components are up.
+        let w = fault::counts();
+        kv(&mut out, "qnn.fault.delays", w.delays);
+        kv(&mut out, "qnn.fault.drops", w.drops);
+        kv(&mut out, "qnn.fault.truncations", w.truncations);
+        kv(&mut out, "qnn.fault.bitflips", w.bitflips);
+        kv(&mut out, "qnn.fault.total", w.total());
+        let r = fault::counts_read();
+        kv(&mut out, "qnn.fault.read.delays", r.delays);
+        kv(&mut out, "qnn.fault.read.drops", r.drops);
+        kv(&mut out, "qnn.fault.read.truncations", r.truncations);
+        kv(&mut out, "qnn.fault.read.bitflips", r.bitflips);
+        kv(&mut out, "qnn.fault.read.total", r.total());
+        let (started, completed, dropped) = trace::counters();
+        kv(&mut out, "qnn.trace.rate", trace::rate());
+        kv(&mut out, "qnn.trace.started", started);
+        kv(&mut out, "qnn.trace.completed", completed);
+        kv(&mut out, "qnn.trace.dropped", dropped);
+        out
+    }
+}
+
+/// Render a per-model serving source under `qnn.<prefix>.<model>.*`:
+/// request/outcome counters, latency percentiles, batch stats, memory,
+/// and (when `QNN_PROFILE` is on) the backend's per-layer kernel
+/// profile under `qnn.profile.<model>.*`. Shared by both front-ends so
+/// the name schema has one implementation.
+pub fn render_model(
+    out: &mut String,
+    prefix: &str,
+    model: &str,
+    metrics: &super::Metrics,
+    backend: Option<&dyn super::Backend>,
+) {
+    let base = format!("qnn.{prefix}.{model}");
+    let snap = metrics.snapshot();
+    // requests counts every recorded outcome; responses only the OKs —
+    // so `requests >= responses` holds by construction, which the CI
+    // stats gate leans on.
+    kv(out, &format!("{base}.requests"), metrics.outcomes.total());
+    kv(out, &format!("{base}.responses"), metrics.outcomes.get(super::Outcome::Ok));
+    for (outcome, count) in metrics.outcomes.snapshot() {
+        kv(out, &format!("{base}.outcome.{}", outcome.name()), count);
+    }
+    kv(out, &format!("{base}.batches"), snap.batches);
+    kvf(out, &format!("{base}.mean_batch"), snap.mean_batch);
+    kvf(out, &format!("{base}.throughput_rps"), snap.throughput_rps);
+    kvf(out, &format!("{base}.p50_ms"), snap.p50_ms);
+    kvf(out, &format!("{base}.p95_ms"), snap.p95_ms);
+    kvf(out, &format!("{base}.p99_ms"), snap.p99_ms);
+    kvf(out, &format!("{base}.queue_p50_ms"), snap.queue_p50_ms);
+    kvf(out, &format!("{base}.queue_p95_ms"), snap.queue_p95_ms);
+    kvf(out, &format!("{base}.service_p50_ms"), snap.service_p50_ms);
+    kvf(out, &format!("{base}.service_p95_ms"), snap.service_p95_ms);
+    kv(out, &format!("{base}.latency_samples"), snap.latency_samples as u64);
+    if let Some(backend) = backend {
+        kv(out, &format!("{base}.mem_bytes"), backend.memory_bytes() as u64);
+        for (name, value) in backend.profile_counters() {
+            kv(out, &format!("qnn.profile.{model}.{name}"), value);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Metrics, Outcome};
+
+    #[test]
+    fn register_render_deregister() {
+        let before = global().sources();
+        let reg = global().register(|out| kv(out, "qnn.test.alpha", 7));
+        let reg2 = global().register(|out| kvf(out, "qnn.test.beta", 1.25));
+        assert_eq!(global().sources(), before + 2);
+        let text = global().render();
+        assert!(text.contains("qnn.test.alpha 7\n"), "{text}");
+        assert!(text.contains("qnn.test.beta 1.250000\n"), "{text}");
+        // Built-ins are always present, even with no fleet running.
+        assert!(text.contains("qnn.fault.total "), "{text}");
+        assert!(text.contains("qnn.trace.started "), "{text}");
+        // Every line is exactly `name value`.
+        for line in text.lines() {
+            let mut parts = line.split_whitespace();
+            let name = parts.next().unwrap();
+            let value = parts.next().unwrap();
+            assert!(parts.next().is_none(), "extra tokens in {line:?}");
+            assert!(name.starts_with("qnn."), "{line:?}");
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        }
+        drop(reg);
+        let text = global().render();
+        assert!(!text.contains("qnn.test.alpha"), "dropped source still rendered");
+        assert!(text.contains("qnn.test.beta"), "{text}");
+        drop(reg2);
+        assert_eq!(global().sources(), before);
+    }
+
+    #[test]
+    fn model_source_keeps_requests_at_least_responses() {
+        let m = Metrics::new();
+        m.outcomes.record(Outcome::Ok);
+        m.outcomes.record(Outcome::Ok);
+        m.outcomes.record(Outcome::Busy);
+        let mut out = String::new();
+        render_model(&mut out, "net", "digits", &m, None);
+        let get = |suffix: &str| -> u64 {
+            out.lines()
+                .find(|l| l.starts_with(&format!("qnn.net.digits.{suffix} ")))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| panic!("missing {suffix} in {out}"))
+        };
+        assert_eq!(get("requests"), 3);
+        assert_eq!(get("responses"), 2);
+        assert_eq!(get("outcome.busy"), 1);
+        assert!(get("requests") >= get("responses"));
+    }
+}

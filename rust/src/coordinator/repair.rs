@@ -135,6 +135,18 @@ pub struct RepairStats {
     pub install_failures: u64,
 }
 
+fn stats_of(counters: &Counters) -> RepairStats {
+    RepairStats {
+        passes: counters.passes.load(Ordering::Relaxed),
+        installed: counters.installed.load(Ordering::Relaxed),
+        bytes_fetched: counters.bytes_fetched.load(Ordering::Relaxed),
+        retries: counters.retries.load(Ordering::Relaxed),
+        skipped_draining: counters.skipped_draining.load(Ordering::Relaxed),
+        peer_failures: counters.peer_failures.load(Ordering::Relaxed),
+        install_failures: counters.install_failures.load(Ordering::Relaxed),
+    }
+}
+
 struct Gate {
     state: Mutex<GateState>,
     cv: Condvar,
@@ -194,15 +206,7 @@ impl Repairer {
 
     /// Counter snapshot.
     pub fn stats(&self) -> RepairStats {
-        RepairStats {
-            passes: self.counters.passes.load(Ordering::Relaxed),
-            installed: self.counters.installed.load(Ordering::Relaxed),
-            bytes_fetched: self.counters.bytes_fetched.load(Ordering::Relaxed),
-            retries: self.counters.retries.load(Ordering::Relaxed),
-            skipped_draining: self.counters.skipped_draining.load(Ordering::Relaxed),
-            peer_failures: self.counters.peer_failures.load(Ordering::Relaxed),
-            install_failures: self.counters.install_failures.load(Ordering::Relaxed),
-        }
+        stats_of(&self.counters)
     }
 
     fn stop_impl(&mut self) {
@@ -255,6 +259,10 @@ fn repair_loop(
         }
         run_pass(&router, &peers, &cfg, &counters, &mut rng);
         counters.passes.fetch_add(1, Ordering::Relaxed);
+        // Publish the pass's counters into the router so its report and
+        // the stats wire frame surface healing activity next to the
+        // models it healed.
+        router.set_repair_stats(stats_of(&counters));
     }
 }
 

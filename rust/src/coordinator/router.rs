@@ -31,6 +31,7 @@
 //!   the health pong carries.
 
 use super::engine::{load_backend, load_backend_as, Backend};
+use super::repair::RepairStats;
 use super::server::{Server, ServerCfg, ServerHandle};
 use super::wire::{inventory_digest, ManifestEntry};
 use crate::runtime::qnn_artifact::artifact_version;
@@ -219,6 +220,11 @@ struct Inner {
     /// trigger an immediate pass when traffic wants a model this
     /// replica should own but lacks.
     missing_hook: Mutex<Option<Arc<dyn Fn(&str) + Send + Sync>>>,
+    /// Last published [`RepairStats`] snapshot — the attached repair
+    /// loop pushes one here after every pass so [`Router::report`] and
+    /// the stats frame can surface healing activity next to the models
+    /// it healed.
+    repair_stats: Mutex<Option<RepairStats>>,
 }
 
 /// Routes requests to named backends. Cheap to clone (shared state): a
@@ -245,6 +251,7 @@ impl Router {
                 store: Mutex::new(None),
                 cfg: Mutex::new(ServerCfg::default()),
                 missing_hook: Mutex::new(None),
+                repair_stats: Mutex::new(None),
             }),
         }
     }
@@ -483,7 +490,61 @@ impl Router {
             .collect()
     }
 
-    /// Metrics + memory line for every model.
+    /// Record the latest repair-loop counters (called by the attached
+    /// [`super::Repairer`] after every pass).
+    pub fn set_repair_stats(&self, stats: RepairStats) {
+        *self.inner.repair_stats.lock().unwrap() = Some(stats);
+    }
+
+    /// The last repair-pass counters, when a repair loop is attached.
+    pub fn repair_stats(&self) -> Option<RepairStats> {
+        *self.inner.repair_stats.lock().unwrap()
+    }
+
+    /// Point-in-time `(name, metrics, backend)` for every served model —
+    /// the registry source behind the stats wire frame.
+    pub fn model_stats(
+        &self,
+    ) -> Vec<(String, Arc<super::Metrics>, Arc<dyn Backend>)> {
+        self.inner
+            .servers
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, s)| {
+                (name.clone(), Arc::clone(&s.metrics), Arc::clone(&s.backend))
+            })
+            .collect()
+    }
+
+    /// Render this router's slice of the metrics registry: one block per
+    /// model (`qnn.<prefix>.<model>.*`, see
+    /// [`super::registry::render_model`]) plus the quarantine count and
+    /// the last repair-pass counters.
+    pub fn render_registry(&self, out: &mut String, prefix: &str) {
+        use super::registry::kv;
+        for (name, metrics, backend) in self.model_stats() {
+            super::registry::render_model(out, prefix, &name, &metrics, Some(backend.as_ref()));
+        }
+        kv(
+            out,
+            &format!("qnn.{prefix}.quarantined"),
+            self.inner.load_errors.lock().unwrap().len() as u64,
+        );
+        if let Some(rs) = self.repair_stats() {
+            let base = format!("qnn.{prefix}.repair");
+            kv(out, &format!("{base}.passes"), rs.passes);
+            kv(out, &format!("{base}.installed"), rs.installed);
+            kv(out, &format!("{base}.bytes_fetched"), rs.bytes_fetched);
+            kv(out, &format!("{base}.retries"), rs.retries);
+            kv(out, &format!("{base}.skipped_draining"), rs.skipped_draining);
+            kv(out, &format!("{base}.peer_failures"), rs.peer_failures);
+            kv(out, &format!("{base}.install_failures"), rs.install_failures);
+        }
+    }
+
+    /// Metrics + memory line for every model, followed by the
+    /// quarantine and repair state of the self-healing tier.
     pub fn report(&self) -> String {
         let mut s = String::new();
         for (name, server) in self.inner.servers.read().unwrap().iter() {
@@ -494,8 +555,26 @@ impl Router {
                 server.metrics.snapshot()
             ));
         }
-        for (file, err) in self.inner.load_errors.lock().unwrap().iter() {
+        let errors = self.inner.load_errors.lock().unwrap();
+        if !errors.is_empty() {
+            s.push_str(&format!("quarantined: {} artifact(s)\n", errors.len()));
+        }
+        for (file, err) in errors.iter() {
             s.push_str(&format!("SKIPPED {file}: {err}\n"));
+        }
+        drop(errors);
+        if let Some(rs) = self.repair_stats() {
+            s.push_str(&format!(
+                "repair: passes={} installed={} bytes_fetched={} retries={} \
+                 skipped_draining={} peer_failures={} install_failures={}\n",
+                rs.passes,
+                rs.installed,
+                rs.bytes_fetched,
+                rs.retries,
+                rs.skipped_draining,
+                rs.peer_failures,
+                rs.install_failures,
+            ));
         }
         s
     }

@@ -30,6 +30,7 @@ use super::engine::Backend;
 use super::metrics::{Metrics, Outcome};
 use crate::fixedpoint::UniformQuant;
 use crate::util::threadpool::ThreadPool;
+use crate::util::trace;
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -143,6 +144,9 @@ struct Request {
     /// Absolute point past which the answer is worthless; the batcher
     /// sheds expired requests at dispatch with a typed error.
     deadline: Option<Instant>,
+    /// qnn-scope trace context ([`trace::UNTRACED`] for the unsampled
+    /// common case — every stamp on it is a single branch).
+    trace: trace::Ctx,
     resp: mpsc::Sender<Result<Vec<f32>, InferError>>,
 }
 
@@ -214,6 +218,18 @@ impl ServerHandle {
         payload: Payload,
         deadline: Option<Instant>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>, InferError>>, InferError> {
+        self.submit_traced(payload, deadline, trace::UNTRACED)
+    }
+
+    /// [`ServerHandle::submit_with_deadline`] carrying a qnn-scope trace
+    /// context: the enqueue is stamped here, and the batcher stamps the
+    /// batch-formation and engine stages as the request moves through.
+    pub fn submit_traced(
+        &self,
+        payload: Payload,
+        deadline: Option<Instant>,
+        tctx: trace::Ctx,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, InferError>>, InferError> {
         if self.shutdown.load(Ordering::SeqCst) {
             self.metrics.outcomes.record(Outcome::PeerShutdown);
             return Err(InferError::Shutdown);
@@ -245,10 +261,12 @@ impl ServerHandle {
             }
         }
         let (rtx, rrx) = mpsc::channel();
+        trace::stamp(tctx, trace::Stage::Enqueue);
         let req = Request {
             payload,
             enqueued: Instant::now(),
             deadline,
+            trace: tctx,
             resp: rtx,
         };
         if self.tx.send(req).is_err() {
@@ -348,6 +366,9 @@ impl Server {
                     let metrics = Arc::clone(&m);
                     let depth = Arc::clone(&d);
                     let dispatched = Instant::now();
+                    for r in &batch {
+                        trace::stamp(r.trace, trace::Stage::Batch);
+                    }
                     workers.execute(move || {
                         thread_local! {
                             static BUFS: RefCell<WorkerScratch> =
@@ -378,6 +399,9 @@ impl Server {
                         }
                         let n = batch.len();
                         let out_len = engine.output_len();
+                        for r in &batch {
+                            trace::stamp(r.trace, trace::Stage::InferStart);
+                        }
                         BUFS.with(|b| {
                             let s = &mut *b.borrow_mut();
                             // Partition by payload encoding (stable):
@@ -439,6 +463,9 @@ impl Server {
                                             );
                                     }
                                 }
+                            }
+                            for r in &batch {
+                                trace::stamp(r.trace, trace::Stage::InferEnd);
                             }
                             // Record metrics BEFORE replying so a client
                             // that reads the snapshot right after its

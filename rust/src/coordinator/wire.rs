@@ -10,7 +10,8 @@
 //! kind     u8       0 = request, 1 = response, 2 = error,
 //!                   3 = health ping, 4 = health pong,
 //!                   5 = manifest request, 6 = manifest response,
-//!                   7 = fetch request, 8 = fetch chunk
+//!                   7 = fetch request, 8 = fetch chunk,
+//!                   9 = stats request, 10 = stats response
 //! req id   u64 LE   caller-chosen correlation id, echoed in the reply
 //! ...kind-specific body (below)...
 //! checksum u64 LE   FNV-1a over magic .. end of body
@@ -34,7 +35,17 @@
 //! fetch req    name_len u8 · name (UTF-8) · offset u64 · max_len u32
 //! fetch chunk  name_len u8 · name (UTF-8) · offset u64 · total_len u64 ·
 //!              data_len u32 · data
+//! stats req    (empty)
+//! stats rsp    text_len u32 · text (UTF-8)
 //! ```
+//!
+//! The stats kinds are **qnn-scope**'s scrape surface: the response
+//! body is the process-global metrics registry's text exposition
+//! (`coordinator::registry`, one `name value` pair per line under
+//! stable hierarchical names), served off the inference path by both
+//! front-ends exactly like ping/pong — one frame unifies server,
+//! batcher, fleet, repair, quarantine, fault-injection, trace, and
+//! per-layer kernel-profiling counters.
 //!
 //! The manifest and fetch kinds are the **self-healing artifact tier**'s
 //! vocabulary: off the inference path, a replica that boots with missing
@@ -97,6 +108,24 @@ pub const MAX_FRAME_LEN: usize = 1 << 26;
 const HEADER_LEN: usize = 8;
 /// Smallest legal `len`: kind + req id + checksum.
 const MIN_BODY_LEN: usize = 1 + 8 + 8;
+
+/// Peek a whole frame's kind tag without parsing (or verifying) it.
+/// The front-ends use this to decide whether to admit a frame into the
+/// request-trace sampler before paying for the full parse; a frame too
+/// short to carry a kind returns `None` and the parse path reports it.
+pub(crate) fn frame_kind(frame: &[u8]) -> Option<u8> {
+    frame.get(HEADER_LEN).copied()
+}
+
+/// Peek a whole frame's request id without parsing it (0 when the frame
+/// is too short). Companion to [`frame_kind`] for the trace sampler;
+/// the id is unverified — the parse path still owns validation.
+pub(crate) fn peek_req_id(frame: &[u8]) -> u64 {
+    frame
+        .get(HEADER_LEN + 1..HEADER_LEN + 9)
+        .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+        .unwrap_or(0)
+}
 
 /// Request payload encoding.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -282,6 +311,11 @@ pub enum Frame<'a> {
         total_len: u64,
         data: &'a [u8],
     },
+    /// Ask for the unified metrics-registry snapshot (empty body).
+    StatsRequest { req_id: u64 },
+    /// The registry's text exposition: `name value` lines under stable
+    /// hierarchical names (see `coordinator::registry`).
+    StatsResponse { req_id: u64, text: &'a str },
 }
 
 // ---- encoding ----
@@ -474,6 +508,22 @@ pub fn encode_fetch_chunk(
     buf.extend_from_slice(&total_len.to_le_bytes());
     buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
     buf.extend_from_slice(data);
+    finish(buf);
+}
+
+/// Encode a stats request (empty body, like the health ping).
+pub fn encode_stats_request(buf: &mut Vec<u8>, req_id: u64) {
+    start(buf, 9, req_id);
+    finish(buf);
+}
+
+/// Encode a stats response carrying the registry's text exposition.
+/// The text plus framing must fit [`MAX_FRAME_LEN`]; the registry's
+/// render is a few KB per model, far below it.
+pub fn encode_stats_response(buf: &mut Vec<u8>, req_id: u64, text: &str) {
+    start(buf, 10, req_id);
+    buf.extend_from_slice(&(text.len() as u32).to_le_bytes());
+    buf.extend_from_slice(text.as_bytes());
     finish(buf);
 }
 
@@ -705,6 +755,12 @@ pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
                 data.len()
             );
             Frame::FetchChunk { req_id, model, offset, total_len, data }
+        }
+        9 => Frame::StatsRequest { req_id },
+        10 => {
+            let text_len = c.u32()? as usize;
+            let text = c.str_bytes(text_len)?;
+            Frame::StatsResponse { req_id, text }
         }
         t => bail!("unknown frame kind {t}"),
     };
@@ -1000,6 +1056,40 @@ mod tests {
     }
 
     #[test]
+    fn stats_frames_roundtrip() {
+        let mut buf = Vec::new();
+        encode_stats_request(&mut buf, 21);
+        assert_eq!(parse_frame(&buf).unwrap(), Frame::StatsRequest { req_id: 21 });
+
+        let text = "qnn.net.digits.requests 42\nqnn.fault.total 0\n";
+        encode_stats_response(&mut buf, 22, text);
+        match parse_frame(&buf).unwrap() {
+            Frame::StatsResponse { req_id, text: got } => {
+                assert_eq!(req_id, 22);
+                assert_eq!(got, text);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+
+        // The empty exposition (nothing registered yet) is legal.
+        encode_stats_response(&mut buf, 23, "");
+        match parse_frame(&buf).unwrap() {
+            Frame::StatsResponse { text, .. } => assert!(text.is_empty()),
+            f => panic!("wrong frame {f:?}"),
+        }
+
+        // A stats response whose text length overruns the frame is a
+        // parse error, not a panic or over-read.
+        encode_stats_response(&mut buf, 24, "abcdef");
+        let body_end = buf.len() - 8;
+        let lenpos = HEADER_LEN + 1 + 8;
+        buf[lenpos..lenpos + 4].copy_from_slice(&1000u32.to_le_bytes());
+        let sum = fnv1a(&buf[..body_end]);
+        buf[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(parse_frame(&buf).is_err());
+    }
+
+    #[test]
     fn inventory_digest_is_order_invariant_and_content_sensitive() {
         let a = inventory_digest([("alpha", 1u64), ("beta", 2)].into_iter());
         let b = inventory_digest([("beta", 2u64), ("alpha", 1)].into_iter());
@@ -1127,7 +1217,7 @@ mod tests {
         // Kind tag lives right after the header; patch it and re-seal
         // the checksum so only the tag is wrong.
         let body_end = buf.len() - 8;
-        buf[HEADER_LEN] = 9;
+        buf[HEADER_LEN] = 11;
         let sum = fnv1a(&buf[..body_end]);
         buf[body_end..].copy_from_slice(&sum.to_le_bytes());
         let e = parse_frame(&buf).unwrap_err();

@@ -92,7 +92,9 @@ use crate::tensor::{Conv2dSpec, Tensor};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Once, OnceLock};
+use std::time::Instant;
 
 /// Rows processed per `w_idx` pass in dense layers (cache blocking: one
 /// streamed read of the index matrix serves this many examples).
@@ -430,6 +432,61 @@ fn parallel_enabled() -> bool {
     *ON.get_or_init(|| std::env::var("QNN_SERIAL").map(|v| v != "1").unwrap_or(true))
 }
 
+static PROFILE_ON: AtomicBool = AtomicBool::new(false);
+static PROFILE_INIT: Once = Once::new();
+
+/// qnn-scope per-layer kernel-profiling gate, seeded from
+/// `QNN_PROFILE=1` on first read. With the gate off the executor pays
+/// one relaxed atomic load per chunk and allocates nothing
+/// (`tests/zero_alloc.rs` pins it); with it on, every layer records
+/// wall ns, rows, and calls into [`LayerProf`] atomics.
+#[inline]
+pub fn profile_enabled() -> bool {
+    PROFILE_INIT.call_once(|| {
+        PROFILE_ON.store(
+            std::env::var("QNN_PROFILE").map(|v| v == "1").unwrap_or(false),
+            Ordering::Relaxed,
+        );
+    });
+    PROFILE_ON.load(Ordering::Relaxed)
+}
+
+/// Runtime override of the profiling gate (wins over `QNN_PROFILE`) —
+/// lets a harness measure its knobs-off baseline first and arm
+/// profiling mid-process for an A/B.
+pub fn set_profile(on: bool) {
+    PROFILE_INIT.call_once(|| {});
+    PROFILE_ON.store(on, Ordering::Relaxed);
+}
+
+/// One layer's profiling slot: the kernel tier the plan chose for it
+/// (fixed at compile time) plus lock-free accumulation counters. `ns`
+/// sums per-chunk wall times across worker threads, so under batch
+/// parallelism it can exceed wall clock — it is CPU-layer-time, the
+/// right denominator for a per-layer cost ranking.
+pub struct LayerProf {
+    /// e.g. `dense/fewlevel/i16`, `conv/gather/i32`, `maxpool`.
+    pub tier: &'static str,
+    /// Table/position indices streamed per example row at this layer —
+    /// the paper's op-budget quantity. `indices = rows × idx_per_row`.
+    pub idx_per_row: u64,
+    ns: AtomicU64,
+    rows: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl LayerProf {
+    fn new(tier: &'static str, idx_per_row: u64) -> LayerProf {
+        LayerProf {
+            tier,
+            idx_per_row,
+            ns: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            calls: AtomicU64::new(0),
+        }
+    }
+}
+
 /// The compiled integer network.
 pub struct LutNetwork {
     pub plan: FixedPointPlan,
@@ -454,6 +511,9 @@ pub struct LutNetwork {
     /// Compile options, preserved for artifact round-tripping (the exec
     /// plan rebuild needs `compact_tables`).
     pub(crate) cfg: CompileCfg,
+    /// qnn-scope per-layer profiling slots, built lazily on the first
+    /// profiled pass — never touched while `QNN_PROFILE` is off.
+    pub(crate) prof: OnceLock<Vec<LayerProf>>,
 }
 
 /// Result of an integer forward pass: raw fixed-point sums of the final
@@ -736,6 +796,7 @@ impl LutNetwork {
             books: books.clone(),
             table_info: table_key,
             cfg: cfg.clone(),
+            prof: OnceLock::new(),
         })
     }
 
@@ -754,6 +815,101 @@ impl LutNetwork {
     /// cleared; 0 when `CompileCfg::few_level` is off).
     pub fn fewlevel_layers(&self) -> usize {
         self.exec.few.iter().filter(|f| f.is_some()).count()
+    }
+
+    /// The per-layer profiling slots, built on first use. Tier labels
+    /// mirror the executor's dispatch exactly: `dense`/`conv` ×
+    /// `gather`/`fewlevel` × accumulator width, plus `maxpool` and
+    /// `flatten` for the unparameterized layers.
+    fn profile_slots(&self) -> &[LayerProf] {
+        self.prof.get_or_init(|| {
+            let kernel = self.exec.kernel;
+            let use_i16 = kernel == Kernel::I16xI32;
+            let gather = |kind: &str| match (kind, kernel) {
+                ("dense", Kernel::I16xI32) => "dense/gather/i16",
+                ("dense", Kernel::I32xI32) => "dense/gather/i32",
+                ("dense", Kernel::I32xI64) => "dense/gather/i64",
+                (_, Kernel::I16xI32) => "conv/gather/i16",
+                (_, Kernel::I32xI32) => "conv/gather/i32",
+                (_, Kernel::I32xI64) => "conv/gather/i64",
+            };
+            let fewlevel = |kind: &str, f: &FewLevelLayer| match (
+                kind,
+                use_i16 && f.dcols16.is_some(),
+                kernel,
+            ) {
+                ("dense", true, _) => "dense/fewlevel/i16",
+                ("dense", _, Kernel::I32xI64) => "dense/fewlevel/i64",
+                ("dense", ..) => "dense/fewlevel/i32",
+                (_, true, _) => "conv/fewlevel/i16",
+                (_, _, Kernel::I32xI64) => "conv/fewlevel/i64",
+                _ => "conv/fewlevel/i32",
+            };
+            self.layers
+                .iter()
+                .enumerate()
+                .map(|(li, layer)| {
+                    let few = self.exec.few[li].as_ref();
+                    match layer {
+                        LutLayer::Dense { w_idx, .. } => match few {
+                            Some(f) => LayerProf::new(fewlevel("dense", f), f.pos.len() as u64),
+                            None => LayerProf::new(gather("dense"), w_idx.len() as u64),
+                        },
+                        LutLayer::Conv { spec, w_idx, .. } => {
+                            let positions = (spec.out_h() * spec.out_w()) as u64;
+                            match few {
+                                Some(f) => LayerProf::new(
+                                    fewlevel("conv", f),
+                                    positions * f.pos.len() as u64,
+                                ),
+                                None => LayerProf::new(
+                                    gather("conv"),
+                                    positions * w_idx.len() as u64,
+                                ),
+                            }
+                        }
+                        LutLayer::MaxPool { k, chans, out_h, out_w, .. } => LayerProf::new(
+                            "maxpool",
+                            (out_h * out_w * chans * k * k) as u64,
+                        ),
+                        LutLayer::Flatten => LayerProf::new("flatten", 0),
+                    }
+                })
+                .collect()
+        })
+    }
+
+    /// qnn-scope per-layer profile as `(name, value)` pairs —
+    /// `layer<NN>.<tier>.{ns,rows,calls,indices}` — empty unless
+    /// [`profile_enabled`]. `indices` is the streamed table/position
+    /// index count (`rows × idx_per_row`): the live-traffic form of the
+    /// paper's op-budget accounting.
+    pub fn profile_counters(&self) -> Vec<(String, u64)> {
+        if !profile_enabled() {
+            return Vec::new();
+        }
+        let slots = self.profile_slots();
+        let mut out = Vec::with_capacity(slots.len() * 4);
+        for (li, p) in slots.iter().enumerate() {
+            let rows = p.rows.load(Ordering::Relaxed);
+            let base = format!("layer{li:02}.{}", p.tier);
+            out.push((format!("{base}.ns"), p.ns.load(Ordering::Relaxed)));
+            out.push((format!("{base}.rows"), rows));
+            out.push((format!("{base}.calls"), p.calls.load(Ordering::Relaxed)));
+            out.push((format!("{base}.indices"), rows.saturating_mul(p.idx_per_row)));
+        }
+        out
+    }
+
+    /// Zero the profiling counters (tier labels stay).
+    pub fn reset_profile(&self) {
+        if let Some(slots) = self.prof.get() {
+            for p in slots {
+                p.ns.store(0, Ordering::Relaxed);
+                p.rows.store(0, Ordering::Relaxed);
+                p.calls.store(0, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Rows per executor work chunk (the batch-parallel granularity).
@@ -959,7 +1115,12 @@ impl LutNetwork {
                 .copy_from_slice(&input[r * feat..(r + 1) * feat]);
         }
 
+        // qnn-scope: one relaxed load per chunk when off; per-layer
+        // wall-time + row counters into preallocated atomics when on.
+        let prof = profile_enabled().then(|| self.profile_slots());
+
         for (li, layer) in self.layers.iter().enumerate() {
+            let t0 = prof.map(|_| Instant::now());
             match layer {
                 LutLayer::Dense {
                     in_dim,
@@ -1409,6 +1570,12 @@ impl LutNetwork {
                     std::mem::swap(cur, nxt);
                 }
                 LutLayer::Flatten => {} // row layout is already flat
+            }
+            if let (Some(slots), Some(t0)) = (prof, t0) {
+                let p = &slots[li];
+                p.ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                p.rows.fetch_add(rows as u64, Ordering::Relaxed);
+                p.calls.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -3802,5 +3969,60 @@ mod tests {
         let lut = mlp_lut(5, 16, &CompileCfg::default());
         let out = lut.forward_indices(&[], 0);
         assert!(out.sums.is_empty());
+    }
+
+    #[test]
+    fn profiling_counts_layers_rows_and_indices() {
+        let lut = mlp_lut(11, 16, &CompileCfg::default());
+        let mut rng = Xoshiro256::new(4);
+        let batch = 9;
+        let idx = random_indices(&mut rng, &lut, batch);
+
+        // Off (the default): no counters at all.
+        set_profile(false);
+        lut.forward_indices(&idx, batch);
+        assert!(lut.profile_counters().is_empty());
+
+        // On: every layer reports its tier, rows seen, and streamed
+        // index budget — and the answer stays bit-identical.
+        set_profile(true);
+        lut.reset_profile();
+        let baseline = lut.forward_indices(&idx, batch);
+        let counters = lut.profile_counters();
+        set_profile(false);
+        let unprofiled = lut.forward_indices(&idx, batch);
+        assert_eq!(baseline.sums, unprofiled.sums, "profiling must not change results");
+
+        assert_eq!(counters.len(), lut.layers.len() * 4, "{counters:?}");
+        let get = |suffix: &str| -> Vec<u64> {
+            counters
+                .iter()
+                .filter(|(n, _)| n.ends_with(suffix))
+                .map(|&(_, v)| v)
+                .collect()
+        };
+        for rows in get(".rows") {
+            assert_eq!(rows, batch as u64, "{counters:?}");
+        }
+        assert!(get(".calls").iter().all(|&c| c >= 1), "{counters:?}");
+        // Dense layers stream w_idx once per row on the gather ladder,
+        // fewer on the few-level tier; either way the budget is > 0 for
+        // parameterized layers.
+        let per_layer_idx = get(".indices");
+        assert_eq!(per_layer_idx.len(), lut.layers.len());
+        for (li, layer) in lut.layers.iter().enumerate() {
+            let expect_some = matches!(layer, LutLayer::Dense { .. } | LutLayer::Conv { .. });
+            if expect_some {
+                assert!(per_layer_idx[li] > 0, "layer {li} has no index budget");
+            }
+        }
+        // Names carry the tier schema the registry exposes.
+        for (name, _) in &counters {
+            assert!(name.starts_with("layer"), "{name}");
+            assert!(
+                name.contains("dense/") || name.contains("maxpool") || name.contains("flatten"),
+                "{name}"
+            );
+        }
     }
 }

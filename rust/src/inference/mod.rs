@@ -7,5 +7,8 @@ pub mod simd;
 pub mod verify;
 
 pub use float::FloatEngine;
-pub use lut::{CodebookSet, CompileCfg, ExecScratch, Kernel, LutNetwork, LutOutput};
+pub use lut::{
+    profile_enabled, set_profile, CodebookSet, CompileCfg, ExecScratch, Kernel, LayerProf,
+    LutNetwork, LutOutput,
+};
 pub use verify::{verify, VerifyReport};

@@ -2,7 +2,7 @@
 //! ([`crate::coordinator::NetServer`] or
 //! [`crate::coordinator::ReactorServer`] — same wire protocol) — the
 //! serving-side perf trajectory (`BENCH_serving.json`, schema
-//! `qnn.bench_serving.v4`).
+//! `qnn.bench_serving.v5`).
 //!
 //! Three standard load shapes:
 //!
@@ -944,12 +944,95 @@ pub fn heal_section_json(
     ])
 }
 
-/// Assemble the `qnn.bench_serving.v4` document: the runs, the wire
+/// The `meta` section of a `qnn.bench_serving.v5` document: every knob
+/// that changes what the numbers mean, stamped so two bench runs are
+/// comparable (or visibly not). Environment knobs record the value the
+/// process actually saw — `null` when unset, i.e. the built-in default.
+pub fn bench_meta_json(poller: &str, batcher_workers: usize) -> Json {
+    let env = |k: &str| std::env::var(k).map(Json::Str).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("fault", env("QNN_FAULT")),
+        ("fault_seed", env("QNN_FAULT_SEED")),
+        ("threads", env("QNN_THREADS")),
+        ("serial", env("QNN_SERIAL")),
+        ("trace", env("QNN_TRACE")),
+        ("profile", env("QNN_PROFILE")),
+        ("poller", Json::Str(poller.into())),
+        ("batcher_workers", Json::Num(batcher_workers as f64)),
+    ])
+}
+
+/// The `scope` section of a `qnn.bench_serving.v5` document: the
+/// qnn-scope zero-overhead claim, measured. Same engine, same rows —
+/// once with tracing and profiling off (the production default) and
+/// once with both forced on — and the ratio the gate bounds.
+pub fn scope_section_json(ns_per_row_off: f64, ns_per_row_on: f64) -> Json {
+    let ratio = if ns_per_row_off <= 0.0 {
+        0.0
+    } else {
+        ns_per_row_on / ns_per_row_off
+    };
+    Json::obj(vec![
+        ("ns_per_row_off", Json::Num(ns_per_row_off)),
+        ("ns_per_row_on", Json::Num(ns_per_row_on)),
+        ("overhead_ratio", Json::Num(ratio)),
+    ])
+}
+
+/// The `stats` section of a `qnn.bench_serving.v5` document: the
+/// unified registry scraped over the wire (stats frame, kinds 9/10)
+/// from the live server at the end of the run, reduced to the totals
+/// the gate checks. `requests`/`responses` sum every `*.requests` /
+/// `*.responses` line across sources; every source that emits both
+/// satisfies requests ≥ responses, and request-only sources (the fleet
+/// dispatcher) only widen the gap, so the invariant survives the sum.
+pub fn stats_section_json(exposition: &str) -> Json {
+    let mut requests = 0u64;
+    let mut responses = 0u64;
+    let mut trace_started = 0u64;
+    let mut trace_completed = 0u64;
+    let mut trace_dropped = 0u64;
+    let mut profile_counters = 0usize;
+    for line in exposition.lines() {
+        let Some((name, value)) = line.rsplit_once(' ') else {
+            continue;
+        };
+        let v = value.parse::<f64>().unwrap_or(0.0) as u64;
+        if name.starts_with("qnn.profile.") {
+            profile_counters += 1;
+        } else if name == "qnn.trace.started" {
+            trace_started = v;
+        } else if name == "qnn.trace.completed" {
+            trace_completed = v;
+        } else if name == "qnn.trace.dropped" {
+            trace_dropped = v;
+        } else if name.ends_with(".requests") {
+            requests += v;
+        } else if name.ends_with(".responses") {
+            responses += v;
+        }
+    }
+    Json::obj(vec![
+        ("lines", Json::Num(exposition.lines().count() as f64)),
+        ("requests", Json::Num(requests as f64)),
+        ("responses", Json::Num(responses as f64)),
+        ("trace_started", Json::Num(trace_started as f64)),
+        ("trace_completed", Json::Num(trace_completed as f64)),
+        ("trace_dropped", Json::Num(trace_dropped as f64)),
+        ("profile_counters", Json::Num(profile_counters as f64)),
+    ])
+}
+
+/// Assemble the `qnn.bench_serving.v5` document: the runs, the wire
 /// bytes-per-request comparison (the qidx headline), the best
 /// closed-loop throughput as the saturation point, and (when the bench
 /// ran them) the fleet chaos section ([`fleet_section_json`]), the
-/// reactor connection-scaling section ([`reactor_section_json`]) and
-/// the self-healing section ([`heal_section_json`]).
+/// reactor connection-scaling section ([`reactor_section_json`]), the
+/// self-healing section ([`heal_section_json`]), the reproducibility
+/// meta block ([`bench_meta_json`]), the instrumentation-overhead A/B
+/// ([`scope_section_json`]) and the scraped registry totals
+/// ([`stats_section_json`]).
+#[allow(clippy::too_many_arguments)]
 pub fn serving_bench_doc(
     model: &str,
     input_len: usize,
@@ -958,6 +1041,9 @@ pub fn serving_bench_doc(
     fleet: Option<Json>,
     reactor: Option<Json>,
     heal: Option<Json>,
+    meta: Option<Json>,
+    scope: Option<Json>,
+    stats: Option<Json>,
     provenance: &str,
 ) -> Json {
     let f32_bytes = reports
@@ -975,8 +1061,11 @@ pub fn serving_bench_doc(
         .filter(|r| r.mode == "closed")
         .max_by(|a, b| a.throughput_rps.total_cmp(&b.throughput_rps));
     Json::obj(vec![
-        ("schema", Json::Str("qnn.bench_serving.v4".into())),
+        ("schema", Json::Str("qnn.bench_serving.v5".into())),
         ("provenance", Json::Str(provenance.into())),
+        ("meta", meta.unwrap_or(Json::Null)),
+        ("scope", scope.unwrap_or(Json::Null)),
+        ("stats", stats.unwrap_or(Json::Null)),
         ("fleet", fleet.unwrap_or(Json::Null)),
         ("reactor", reactor.unwrap_or(Json::Null)),
         ("heal", heal.unwrap_or(Json::Null)),
@@ -1037,12 +1126,27 @@ mod tests {
             report("closed", "qidx", 11000.0, 105),
             report("open", "qidx", 6000.0, 105),
         ];
-        let doc = serving_bench_doc("digits-lut", 64, 10, &reports, None, None, None, "unit-test");
+        let doc = serving_bench_doc(
+            "digits-lut",
+            64,
+            10,
+            &reports,
+            None,
+            None,
+            None,
+            None,
+            None,
+            None,
+            "unit-test",
+        );
         let back = Json::parse(&doc.to_pretty()).unwrap();
-        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v4"));
+        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v5"));
         assert_eq!(back.get("fleet"), &Json::Null);
         assert_eq!(back.get("reactor"), &Json::Null);
         assert_eq!(back.get("heal"), &Json::Null);
+        assert_eq!(back.get("meta"), &Json::Null);
+        assert_eq!(back.get("scope"), &Json::Null);
+        assert_eq!(back.get("stats"), &Json::Null);
         assert_eq!(back.get("model").as_str(), Some("digits-lut"));
         let wire = back.get("wire_bytes_per_request");
         assert_eq!(wire.get("f32le").as_usize(), Some(297));
@@ -1094,8 +1198,19 @@ mod tests {
             replicas: Vec::new(),
         };
         let section = fleet_section_json(3, 3, true, true, &load, &snap);
-        let doc =
-            serving_bench_doc("digits-lut", 64, 10, &[], Some(section), None, None, "unit-test");
+        let doc = serving_bench_doc(
+            "digits-lut",
+            64,
+            10,
+            &[],
+            Some(section),
+            None,
+            None,
+            None,
+            None,
+            None,
+            "unit-test",
+        );
         let back = Json::parse(&doc.to_pretty()).unwrap();
         let fleet = back.get("fleet");
         assert_eq!(fleet.get("replicas").as_usize(), Some(3));
@@ -1118,8 +1233,19 @@ mod tests {
     fn heal_section_carries_the_gateable_signals() {
         let post = report("closed", "qidx", 9000.0, 105);
         let section = heal_section_json(1.25, 1, 2, 48_000, 3, &post);
-        let doc =
-            serving_bench_doc("digits-lut", 64, 10, &[], None, None, Some(section), "unit-test");
+        let doc = serving_bench_doc(
+            "digits-lut",
+            64,
+            10,
+            &[],
+            None,
+            None,
+            Some(section),
+            None,
+            None,
+            None,
+            "unit-test",
+        );
         let back = Json::parse(&doc.to_pretty()).unwrap();
         let heal = back.get("heal");
         assert!(heal.get("time_to_heal_s").as_f64().unwrap() > 0.0);
@@ -1146,8 +1272,19 @@ mod tests {
             (1024, mk(8500.0), mk(4000.0)),
         ];
         let section = reactor_section_json("epoll", 1026, 11.7, 64, 2000, &tiers);
-        let doc =
-            serving_bench_doc("digits-lut", 64, 10, &[], None, Some(section), None, "unit-test");
+        let doc = serving_bench_doc(
+            "digits-lut",
+            64,
+            10,
+            &[],
+            None,
+            Some(section),
+            None,
+            None,
+            None,
+            None,
+            "unit-test",
+        );
         let back = Json::parse(&doc.to_pretty()).unwrap();
         let reactor = back.get("reactor");
         assert_eq!(reactor.get("poller").as_str(), Some("epoll"));
@@ -1163,5 +1300,58 @@ mod tests {
         let r_rps = high.get("reactor").get("throughput_rps").as_f64().unwrap();
         let n_rps = high.get("net").get("throughput_rps").as_f64().unwrap();
         assert!(r_rps >= n_rps);
+    }
+
+    #[test]
+    fn scope_meta_and_stats_sections_carry_the_v5_signals() {
+        let exposition = "qnn.net.digits-lut.requests 120\n\
+                          qnn.net.digits-lut.responses 118\n\
+                          qnn.net.digits-lut.p50_ms 0.4\n\
+                          qnn.fleet.requests 30\n\
+                          qnn.trace.started 12\n\
+                          qnn.trace.completed 11\n\
+                          qnn.trace.dropped 0\n\
+                          qnn.profile.digits-lut.layer00.lut16.ns 5400\n\
+                          qnn.profile.digits-lut.layer00.lut16.rows 120\n\
+                          not a metric line\n";
+        let meta = bench_meta_json("epoll", 2);
+        let scope = scope_section_json(800.0, 812.0);
+        let stats = stats_section_json(exposition);
+        let doc = serving_bench_doc(
+            "digits-lut",
+            64,
+            10,
+            &[],
+            None,
+            None,
+            None,
+            Some(meta),
+            Some(scope),
+            Some(stats),
+            "unit-test",
+        );
+        let pretty = doc.to_pretty();
+        let back = Json::parse(&pretty).unwrap();
+        let meta = back.get("meta");
+        assert_eq!(meta.get("poller").as_str(), Some("epoll"));
+        assert_eq!(meta.get("batcher_workers").as_usize(), Some(2));
+        // Env knobs render as string-or-null; either way the key is
+        // stamped, so two runs are always comparable field by field.
+        assert!(pretty.contains("\"fault_seed\""));
+        assert!(pretty.contains("\"trace\""));
+        let scope = back.get("scope");
+        let ratio = scope.get("overhead_ratio").as_f64().unwrap();
+        assert!((ratio - 812.0 / 800.0).abs() < 1e-12, "ratio {ratio}");
+        let stats = back.get("stats");
+        // Registry totals: the fleet's request-only counter widens the
+        // requests side; responses only come from sources that also
+        // emit requests, so requests ≥ responses by construction.
+        assert_eq!(stats.get("requests").as_usize(), Some(150));
+        assert_eq!(stats.get("responses").as_usize(), Some(118));
+        assert_eq!(stats.get("trace_started").as_usize(), Some(12));
+        assert_eq!(stats.get("trace_completed").as_usize(), Some(11));
+        assert_eq!(stats.get("trace_dropped").as_usize(), Some(0));
+        assert_eq!(stats.get("profile_counters").as_usize(), Some(2));
+        assert_eq!(stats.get("lines").as_usize(), Some(10));
     }
 }

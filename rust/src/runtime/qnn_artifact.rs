@@ -916,6 +916,7 @@ impl LutNetwork {
             books,
             table_info,
             cfg,
+            prof: Default::default(),
         })
     }
 

@@ -16,3 +16,4 @@ pub mod rng;
 pub mod stats;
 pub mod threadpool;
 pub mod timer;
+pub mod trace;

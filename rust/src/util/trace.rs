@@ -1,0 +1,420 @@
+//! qnn-scope request tracing: a sampled, allocation-free span recorder.
+//!
+//! A request admitted by either front-end may carry a [`Ctx`] — a
+//! packed `u64` handle into a preallocated slot pool — through frame
+//! decode → batcher enqueue → batch formation → engine inference →
+//! response flush. Each stage calls [`stamp`], which writes one
+//! monotonic nanosecond timestamp into the slot; [`finish`] moves the
+//! completed slot into a bounded ring of [`CompletedTrace`]s that
+//! [`chrome_json`] renders as Chrome trace-event JSON (open the dump in
+//! any `about:tracing`-compatible viewer).
+//!
+//! The untraced path is designed to cost nothing measurable:
+//! [`begin`] is one relaxed atomic load when sampling is off, and a
+//! `Ctx` of [`UNTRACED`] (the common case) turns every later call into
+//! a single branch. No allocation ever happens on the untraced path;
+//! traced requests write into slots allocated once, on first use
+//! (`tests/zero_alloc.rs` pins the disabled-path claim under a counting
+//! allocator).
+//!
+//! Sampling is 1-in-N via `QNN_TRACE=N` (`0`/unset = off). The rate
+//! lives in an atomic, not a latched `OnceLock`, so a harness can turn
+//! tracing on mid-process with [`set_rate`] after measuring its
+//! knobs-off baseline.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+/// Trace context handle carried alongside a request. `0` =
+/// [`UNTRACED`]; otherwise packs a slot index (low 16 bits, +1) and the
+/// trace id (high 48 bits) so a stale handle can never stamp a recycled
+/// slot.
+pub type Ctx = u64;
+
+/// The null context: every trace call on it is a no-op.
+pub const UNTRACED: Ctx = 0;
+
+/// Pipeline stages a request passes through, in order. Used as indices
+/// into a trace's stamp array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Frame bytes fully received from the socket.
+    Accept = 0,
+    /// Frame parsed and checksum-verified.
+    Decode = 1,
+    /// Handed to the batcher / server queue.
+    Enqueue = 2,
+    /// Picked into a formed batch by the collector.
+    Batch = 3,
+    /// Engine `infer_*` entered for this request's batch.
+    InferStart = 4,
+    /// Engine `infer_*` returned.
+    InferEnd = 5,
+    /// Response frame handed to the socket.
+    Flush = 6,
+}
+
+/// Number of recorded stages.
+pub const NSTAGES: usize = 7;
+
+/// Stage names, indexed by `Stage as usize`.
+pub const STAGE_NAMES: [&str; NSTAGES] =
+    ["accept", "decode", "enqueue", "batch", "infer_start", "infer_end", "flush"];
+
+/// Active-slot pool size: traces in flight beyond this are dropped
+/// (counted, never blocked on).
+const SLOTS: usize = 256;
+
+/// Completed-trace ring capacity: oldest traces are overwritten.
+const RING: usize = 1024;
+
+struct Slot {
+    /// The owning `Ctx` while active, 0 while free. Acquire/release
+    /// pairs make the stamp array writes of a previous owner visible
+    /// before reuse.
+    owner: AtomicU64,
+    /// Which front-end admitted the request (index into `FRONTENDS`).
+    frontend: AtomicU64,
+    req_id: AtomicU64,
+    /// ns since process epoch per stage; 0 = not stamped.
+    stamps: [AtomicU64; NSTAGES],
+}
+
+const FRONTENDS: [&str; 3] = ["net", "reactor", "other"];
+
+/// One finished request trace.
+#[derive(Clone, Debug)]
+pub struct CompletedTrace {
+    /// Monotonically increasing trace id (shared counter with sampling).
+    pub id: u64,
+    /// `"net"` or `"reactor"`.
+    pub frontend: &'static str,
+    pub req_id: u64,
+    /// ns since process epoch per [`Stage`]; 0 = stage never reached.
+    pub stamps: [u64; NSTAGES],
+}
+
+impl CompletedTrace {
+    /// True when every stage was stamped in nondecreasing order — the
+    /// "complete multi-stage trace" acceptance shape.
+    pub fn is_complete(&self) -> bool {
+        self.stamps.iter().all(|&s| s != 0)
+            && self.stamps.windows(2).all(|w| w[0] <= w[1])
+    }
+}
+
+struct Ring {
+    buf: Vec<CompletedTrace>,
+    next: usize,
+    len: usize,
+}
+
+struct State {
+    slots: Vec<Slot>,
+    ring: Mutex<Ring>,
+}
+
+static RATE: AtomicU64 = AtomicU64::new(0);
+static RATE_INIT: Once = Once::new();
+static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+static STARTED: AtomicU64 = AtomicU64::new(0);
+static COMPLETED: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static STATE: OnceLock<State> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn state() -> &'static State {
+    STATE.get_or_init(|| {
+        let slots = (0..SLOTS)
+            .map(|_| Slot {
+                owner: AtomicU64::new(0),
+                frontend: AtomicU64::new(0),
+                req_id: AtomicU64::new(0),
+                stamps: std::array::from_fn(|_| AtomicU64::new(0)),
+            })
+            .collect();
+        State {
+            slots,
+            ring: Mutex::new(Ring { buf: Vec::with_capacity(RING), next: 0, len: 0 }),
+        }
+    })
+}
+
+/// ns since the process trace epoch, never 0 (0 means "not stamped").
+fn now_ns() -> u64 {
+    let epoch = EPOCH.get_or_init(Instant::now);
+    (epoch.elapsed().as_nanos() as u64).max(1)
+}
+
+/// The live sample rate: trace 1 in N requests; 0 = off. Seeded from
+/// `QNN_TRACE` on first read.
+pub fn rate() -> u64 {
+    RATE_INIT.call_once(|| {
+        let n = std::env::var("QNN_TRACE")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(0);
+        RATE.store(n, Ordering::Relaxed);
+    });
+    RATE.load(Ordering::Relaxed)
+}
+
+/// Override the sample rate at runtime (wins over `QNN_TRACE`).
+pub fn set_rate(n: u64) {
+    RATE_INIT.call_once(|| {});
+    RATE.store(n, Ordering::Relaxed);
+}
+
+/// Admit a request into the sampler. Returns [`UNTRACED`] (the cheap
+/// common case) unless this request is the 1-in-N pick **and** a free
+/// slot exists; otherwise stamps [`Stage::Accept`] and returns a live
+/// context.
+pub fn begin(frontend: &'static str, req_id: u64) -> Ctx {
+    let n = rate();
+    if n == 0 {
+        return UNTRACED;
+    }
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    if n > 1 && id % n != 0 {
+        return UNTRACED;
+    }
+    let st = state();
+    let fe = FRONTENDS.iter().position(|&f| f == frontend).unwrap_or(2) as u64;
+    for (i, slot) in st.slots.iter().enumerate() {
+        let ctx = ((id + 1) << 16) | (i as u64 + 1);
+        if slot.owner.compare_exchange(0, ctx, Ordering::Acquire, Ordering::Relaxed).is_ok() {
+            for s in &slot.stamps {
+                s.store(0, Ordering::Relaxed);
+            }
+            slot.frontend.store(fe, Ordering::Relaxed);
+            slot.req_id.store(req_id, Ordering::Relaxed);
+            slot.stamps[Stage::Accept as usize].store(now_ns(), Ordering::Relaxed);
+            STARTED.fetch_add(1, Ordering::Relaxed);
+            return ctx;
+        }
+    }
+    DROPPED.fetch_add(1, Ordering::Relaxed);
+    UNTRACED
+}
+
+fn slot_for(ctx: Ctx) -> Option<&'static Slot> {
+    if ctx == UNTRACED {
+        return None;
+    }
+    let idx = ((ctx & 0xffff) as usize).wrapping_sub(1);
+    let slot = state().slots.get(idx)?;
+    (slot.owner.load(Ordering::Relaxed) == ctx).then_some(slot)
+}
+
+/// Record that `ctx` reached `stage` now. No-op on [`UNTRACED`] or a
+/// stale handle.
+#[inline]
+pub fn stamp(ctx: Ctx, stage: Stage) {
+    if ctx == UNTRACED {
+        return;
+    }
+    if let Some(slot) = slot_for(ctx) {
+        slot.stamps[stage as usize].store(now_ns(), Ordering::Relaxed);
+    }
+}
+
+/// Stamp [`Stage::Flush`] (unless already stamped) and retire the
+/// trace into the completed ring, freeing the slot.
+pub fn finish(ctx: Ctx) {
+    let slot = match slot_for(ctx) {
+        Some(s) => s,
+        None => return,
+    };
+    let fl = &slot.stamps[Stage::Flush as usize];
+    if fl.load(Ordering::Relaxed) == 0 {
+        fl.store(now_ns(), Ordering::Relaxed);
+    }
+    let done = CompletedTrace {
+        id: (ctx >> 16) - 1,
+        frontend: FRONTENDS[(slot.frontend.load(Ordering::Relaxed) as usize).min(2)],
+        req_id: slot.req_id.load(Ordering::Relaxed),
+        stamps: std::array::from_fn(|i| slot.stamps[i].load(Ordering::Relaxed)),
+    };
+    {
+        let mut ring = state().ring.lock().unwrap();
+        let next = ring.next;
+        if ring.buf.len() < RING {
+            ring.buf.push(done);
+        } else {
+            ring.buf[next] = done;
+        }
+        ring.next = (next + 1) % RING;
+        ring.len = (ring.len + 1).min(RING);
+    }
+    COMPLETED.fetch_add(1, Ordering::Relaxed);
+    slot.owner.store(0, Ordering::Release);
+}
+
+/// Snapshot of the completed-trace ring, oldest first.
+pub fn completed() -> Vec<CompletedTrace> {
+    let st = match STATE.get() {
+        Some(s) => s,
+        None => return Vec::new(),
+    };
+    let ring = st.ring.lock().unwrap();
+    let n = ring.buf.len();
+    (0..n)
+        .map(|i| ring.buf[(ring.next + RING - n + i) % RING].clone())
+        .collect()
+}
+
+/// `(started, completed, dropped)` lifetime counters — the registry's
+/// `qnn.trace.*` lines.
+pub fn counters() -> (u64, u64, u64) {
+    (
+        STARTED.load(Ordering::Relaxed),
+        COMPLETED.load(Ordering::Relaxed),
+        DROPPED.load(Ordering::Relaxed),
+    )
+}
+
+/// Render traces as Chrome trace-event JSON (`{"traceEvents": [...]}`):
+/// one `"X"` complete event per adjacent stamped stage pair plus a
+/// whole-request span, `tid` = trace id, so a dump opens directly in a
+/// trace viewer.
+pub fn chrome_json(traces: &[CompletedTrace]) -> String {
+    let mut events = Vec::new();
+    for t in traces {
+        let us = |ns: u64| ns as f64 / 1000.0;
+        let span = |name: &str, a: u64, b: u64| {
+            Json::obj(vec![
+                ("name", Json::Str(name.to_string())),
+                ("ph", Json::Str("X".into())),
+                ("cat", Json::Str(t.frontend.to_string())),
+                ("ts", Json::Num(us(a))),
+                ("dur", Json::Num(us(b.saturating_sub(a)))),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(t.id as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("req_id", Json::Num(t.req_id as f64)),
+                        ("frontend", Json::Str(t.frontend.to_string())),
+                    ]),
+                ),
+            ])
+        };
+        let first = t.stamps[0];
+        let last = *t.stamps.iter().filter(|&&s| s != 0).max().unwrap_or(&0);
+        if first != 0 && last >= first {
+            events.push(span("request", first, last));
+        }
+        let mut prev: Option<(usize, u64)> = None;
+        for (si, &s) in t.stamps.iter().enumerate() {
+            if s == 0 {
+                continue;
+            }
+            if let Some((_, pns)) = prev {
+                events.push(span(STAGE_NAMES[si], pns, s));
+            }
+            prev = Some((si, s));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ns".into())),
+    ])
+    .to_pretty()
+}
+
+/// Serializes tests (crate-wide) that touch the global sampler: any
+/// test calling [`set_rate`] or asserting on [`counters`]/[`completed`]
+/// must hold this, or a concurrent test changes the rate under it.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests in this file share the global sampler; serialize them.
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        test_lock()
+    }
+
+    #[test]
+    fn untraced_path_is_inert() {
+        let _g = locked();
+        set_rate(0);
+        assert_eq!(begin("net", 7), UNTRACED);
+        // All no-ops, no panic.
+        stamp(UNTRACED, Stage::Decode);
+        finish(UNTRACED);
+    }
+
+    #[test]
+    fn full_trace_roundtrips_and_renders_chrome_json() {
+        let _g = locked();
+        set_rate(1);
+        let before = completed().len();
+        let ctx = begin("reactor", 42);
+        assert_ne!(ctx, UNTRACED);
+        for st in [Stage::Decode, Stage::Enqueue, Stage::Batch, Stage::InferStart, Stage::InferEnd]
+        {
+            stamp(ctx, st);
+        }
+        finish(ctx);
+        // The slot is free again; a stale stamp on the old ctx is inert.
+        stamp(ctx, Stage::Decode);
+        finish(ctx);
+        let traces = completed();
+        assert!(traces.len() > before);
+        let t = traces.last().unwrap();
+        assert_eq!(t.req_id, 42);
+        assert_eq!(t.frontend, "reactor");
+        assert!(t.is_complete(), "{:?}", t.stamps);
+        let json = chrome_json(&traces);
+        let parsed = Json::parse(&json).expect("chrome dump must be valid JSON");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert!(events.len() >= NSTAGES, "one span per stage pair plus the request span");
+        for e in events {
+            assert!(e.get("ts").and_then(|v| v.as_f64()).is_some());
+            assert!(e.get("dur").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        }
+        set_rate(0);
+    }
+
+    #[test]
+    fn sampling_rate_picks_one_in_n() {
+        let _g = locked();
+        set_rate(1000);
+        let (started0, ..) = counters();
+        let mut live = 0;
+        for i in 0..2000 {
+            let ctx = begin("net", i);
+            if ctx != UNTRACED {
+                live += 1;
+                finish(ctx);
+            }
+        }
+        let (started1, ..) = counters();
+        assert_eq!(started1 - started0, live as u64);
+        assert!(
+            (1..=3).contains(&live),
+            "1-in-1000 over 2000 requests should pick ~2, got {live}"
+        );
+        set_rate(0);
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let _g = locked();
+        set_rate(1);
+        for i in 0..(RING as u64 + 50) {
+            let ctx = begin("net", i);
+            finish(ctx);
+        }
+        assert!(completed().len() <= RING);
+        set_rate(0);
+    }
+}

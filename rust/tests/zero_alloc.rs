@@ -1,5 +1,5 @@
-//! Proves two zero-allocation acceptance criteria with a counting global
-//! allocator:
+//! Proves three zero-allocation acceptance criteria with a counting
+//! global allocator:
 //!
 //! 1. after warmup, the serial LUT forward pass (`forward_into` with a
 //!    caller-owned scratch arena and output buffer) performs **zero heap
@@ -7,17 +7,21 @@
 //! 2. the serving steady state — the `Backend::infer_batch_into` hot
 //!    path a warm server worker drives — is equally clean: float
 //!    quantization, integer forward, and float descale all run in
-//!    reused buffers.
+//!    reused buffers;
+//! 3. qnn-scope off is free: with the trace sample rate at 0 and
+//!    profiling disabled, the per-request begin/stamp/finish calls the
+//!    front-ends make never touch the heap either.
 //!
 //! This file is its own test binary on purpose — the `#[global_allocator]`
 //! must not interfere with the rest of the suite, and the single test
 //! keeps the counter free of concurrent-test noise.
 
 use qnn::coordinator::{Backend, LutEngine};
-use qnn::inference::{CodebookSet, CompileCfg, LutNetwork};
+use qnn::inference::{set_profile, CodebookSet, CompileCfg, LutNetwork};
 use qnn::nn::{ActSpec, LayerSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
 use qnn::util::rng::Xoshiro256;
+use qnn::util::trace;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -193,6 +197,32 @@ fn forward_into_allocates_nothing_after_warmup() {
         after - before,
         0,
         "serving: infer_quantized_batch_into allocated {} times in 10 warm calls",
+        after - before
+    );
+
+    // ---- qnn-scope off: the instrumented hot path stays clean ----
+    // With the sample rate at 0 and profiling disabled, the per-request
+    // begin/stamp/finish calls the front-ends make around every frame —
+    // and the profiling hooks inside the executors — must not touch the
+    // heap. This is the disabled-instrumentation half of the scope A/B
+    // the serving bench measures.
+    trace::set_rate(0);
+    set_profile(false);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for i in 0..10u64 {
+        let tctx = trace::begin("net", i);
+        assert_eq!(tctx, trace::UNTRACED, "rate 0 must never admit a request");
+        trace::stamp(tctx, trace::Stage::Decode);
+        trace::stamp(tctx, trace::Stage::Enqueue);
+        engine.infer_quantized_batch_into(&qidx, batch, &mut out);
+        trace::stamp(tctx, trace::Stage::Flush);
+        trace::finish(tctx);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "scope off: the untraced/unprofiled path allocated {} times in 10 warm requests",
         after - before
     );
 }
