@@ -23,42 +23,89 @@
 //! installed), and must serve the full load bit-exact afterwards —
 //! time-to-heal and post-heal availability are measured and gated.
 //!
+//! Then the overload story: a throttled primary is offered load well
+//! past its admission ceiling and qnn-guard must tell the whole arc —
+//! the AIMD limit shrinks under queue-wait pressure, low-value work is
+//! shed as `Busy`, the guard trips Degraded and dispatches to the
+//! `@coarse` pair (the same network recompiled with a 16-entry
+//! codebook — the paper's quantization knob, turned down, as the cheap
+//! fallback), and after the burst drains the limit re-opens and the
+//! primary serves undegraded again.
+//!
 //! Then the observability story: qnn-scope must be free when disabled
 //! — the engine is timed with tracing and profiling off vs forced on —
 //! and then a traced, profiled burst runs against the live server and
 //! the unified metrics registry is scraped back over the wire via the
 //! stats frame (kinds 9/10), exactly as an operator tool would.
 //!
-//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v5`) at the
+//! Emits `BENCH_serving.json` (schema `qnn.bench_serving.v6`) at the
 //! repository root: closed-loop saturation sweep, an open-loop run at a
 //! fraction of saturation, the wire bytes-per-request comparison, the
 //! fleet chaos section, the reactor tier comparison, the heal section,
-//! the knob-stamped `meta` block, the `scope` instrumentation A/B and
-//! the `stats` registry scrape — all gated in CI
-//! (`python/check_bench.py`).
+//! the `guard` overload section, the knob-stamped `meta` block, the
+//! `scope` instrumentation A/B and the `stats` registry scrape — all
+//! gated in CI (`python/check_bench.py`).
 //!
 //!     cargo run --release --example serve_tcp [-- --full]
 
 use qnn::coordinator::wire::Dtype;
 use qnn::coordinator::{
-    BatcherCfg, Fleet, FleetCfg, NetClient, NetServer, ReactorCfg, ReactorServer, RepairCfg,
-    Repairer, Router, ServerCfg,
+    Backend, BatcherCfg, Fleet, FleetCfg, GuardCfg, GuardState, LutEngine, NetClient, NetServer,
+    ReactorCfg, ReactorServer, RepairCfg, Repairer, Router, ServerCfg,
 };
 use qnn::data::digits;
+use qnn::fixedpoint::UniformQuant;
 use qnn::inference::{set_profile, CodebookSet, CompileCfg, LutNetwork};
 use qnn::nn::{ActSpec, NetSpec, Network};
 use qnn::quant::{kmeans_1d, KMeansCfg};
 use qnn::report::loadgen::{bench_meta_json, scope_section_json, stats_section_json};
 use qnn::report::loadgen::{
-    fleet_section_json, heal_section_json, reactor_section_json, run_fleet_load, run_load,
-    run_mux_load, serving_bench_doc, FleetLoadCfg, LoadCfg, MuxLoadCfg,
+    fleet_section_json, guard_section_json, heal_section_json, reactor_section_json,
+    run_fleet_load, run_load, run_mux_load, serving_bench_doc, FleetLoadCfg, LoadCfg, MuxLoadCfg,
 };
 use qnn::report::perf::write_bench_file;
 use qnn::report::table::TableBuilder;
 use qnn::util::fnv::fnv1a;
 use qnn::util::rng::Xoshiro256;
 use qnn::util::trace;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// A [`LutEngine`] that stalls before every batch. The digits LUT is
+/// far too fast for a bench-sized burst to ever build queue-wait
+/// pressure against it, so the guard phase throttles the primary — a
+/// stand-in for a model whose queue can actually fall behind — while
+/// its `@coarse` pair runs unthrottled.
+struct ThrottledEngine {
+    inner: LutEngine,
+    stall: Duration,
+}
+
+impl Backend for ThrottledEngine {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn input_len(&self) -> usize {
+        self.inner.input_len()
+    }
+    fn output_len(&self) -> usize {
+        self.inner.output_len()
+    }
+    fn memory_bytes(&self) -> usize {
+        self.inner.memory_bytes()
+    }
+    fn input_quant(&self) -> Option<UniformQuant> {
+        self.inner.input_quant()
+    }
+    fn infer_batch_into(&self, flat: &[f32], batch: usize, out: &mut [f32]) {
+        std::thread::sleep(self.stall);
+        self.inner.infer_batch_into(flat, batch, out);
+    }
+    fn infer_quantized_batch_into(&self, idx: &[u8], batch: usize, out: &mut [f32]) {
+        std::thread::sleep(self.stall);
+        self.inner.infer_quantized_batch_into(idx, batch, out);
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
@@ -188,11 +235,14 @@ fn main() -> anyhow::Result<()> {
     table.print();
 
     // ---- fleet phase: 3 replicas, kill + restart the primary mid-load.
+    // The replicas are reactor-fronted: the fleet's reliability contract
+    // (placement, health checks, failover) holds over the event-driven
+    // front-end exactly as it did over thread-per-connection serving.
     println!("\nbooting 3-replica fleet from {}", dir.display());
-    let mut replicas: Vec<(String, NetServer)> = (0..3)
+    let mut replicas: Vec<(String, ReactorServer)> = (0..3)
         .map(|_| {
-            let router = Router::load_dir_with(&dir, server_cfg.clone()).expect("replica boot");
-            let srv = NetServer::bind("127.0.0.1:0", router).expect("replica bind");
+            let srv = ReactorServer::bind_dir("127.0.0.1:0", &dir, ReactorCfg::default())
+                .expect("replica boot");
             (srv.local_addr().to_string(), srv)
         })
         .collect();
@@ -222,7 +272,6 @@ fn main() -> anyhow::Result<()> {
     println!("fleet primary for digits-lut: {victim_addr} (will be killed mid-load)");
 
     let restart_dir = dir.clone();
-    let restart_cfg = server_cfg.clone();
     let (fleet_load, restarted) = std::thread::scope(|s| {
         let fleet_ref = &fleet;
         let killer = s.spawn(move || {
@@ -236,9 +285,9 @@ fn main() -> anyhow::Result<()> {
             while fleet_ref.metrics().requests() < 2 * total / 3 {
                 std::thread::sleep(Duration::from_millis(2));
             }
-            let back = Router::load_dir_with(&restart_dir, restart_cfg)
-                .ok()
-                .and_then(|r| NetServer::bind(victim_addr.as_str(), r).ok());
+            let back =
+                ReactorServer::bind_dir(victim_addr.as_str(), &restart_dir, ReactorCfg::default())
+                    .ok();
             println!(
                 "restart on {victim_addr}: {}",
                 if back.is_some() { "up" } else { "port not reusable" }
@@ -351,6 +400,135 @@ fn main() -> anyhow::Result<()> {
         &tiers,
     );
     reactor.shutdown();
+
+    // ---- guard phase: offer a throttled primary far more than its
+    // admission ceiling and let qnn-guard tell the whole overload arc:
+    // the AIMD limit shrinks under queue-wait pressure, excess work is
+    // shed as `Busy`, the guard trips Degraded and dispatches to the
+    // `@coarse` pair, and once the burst drains it walks back to
+    // Healthy with the limit re-opened.
+    const GUARD_CEILING: usize = 8;
+    // The coarse fallback is the same network recompiled with a
+    // 16-entry codebook — the paper's quantization knob, turned down.
+    let coarse_lut = {
+        let mut w = net.flat_weights();
+        let cb = kmeans_1d(&w, &KMeansCfg::with_k(16), &mut rng);
+        cb.quantize_slice(&mut w);
+        net.set_flat_weights(&w);
+        LutNetwork::compile(&net, &CodebookSet::Global(cb), &CompileCfg::default())?
+    };
+    let guard_reactor = ReactorServer::bind_with(
+        "127.0.0.1:0",
+        vec![
+            (
+                "digits-lut".to_string(),
+                Arc::new(ThrottledEngine {
+                    inner: LutEngine::from_artifact(dir.join("digits-lut.qnn"))?,
+                    stall: Duration::from_millis(5),
+                }) as Arc<dyn Backend>,
+            ),
+            (
+                "digits-lut@coarse".to_string(),
+                Arc::new(LutEngine::new("digits-lut@coarse", coarse_lut, digits::FEATURES)),
+            ),
+        ],
+        ReactorCfg {
+            batch: BatcherCfg {
+                max_batch: GUARD_CEILING,
+                max_delay: Duration::from_micros(200),
+                workers: 2,
+                max_queue: GUARD_CEILING,
+                busy_retry_after: None,
+                guard: GuardCfg {
+                    target_wait: Duration::from_millis(2),
+                    adjust_interval: Duration::from_millis(2),
+                    degrade_after: 2,
+                    recover_hold: Duration::from_millis(150),
+                    healthy_hold: Duration::from_millis(150),
+                    shed_age: Duration::from_millis(100),
+                    ..GuardCfg::default()
+                },
+            },
+            ..ReactorCfg::default()
+        },
+    )?;
+    let gaddr = guard_reactor.local_addr().to_string();
+    let glimiter = Arc::clone(guard_reactor.handle("digits-lut").expect("guard model").limiter());
+    // The throttled primary tops out near max_batch/stall per worker;
+    // offer ~4x that so the burst saturates by construction, paced on
+    // an open-loop schedule so shed turnaround cannot burn the offered
+    // load early.
+    let burst = run_load(
+        &LoadCfg {
+            addr: gaddr.clone(),
+            model: "digits-lut".into(),
+            encoding: Dtype::F32Le,
+            clients: 4 * GUARD_CEILING,
+            requests_per_client: if full { 160 } else { 80 },
+            rate_rps: Some(12_000.0),
+        },
+        &rows,
+        None,
+    )?;
+    println!(
+        "\nguard burst on {gaddr}: {}/{} ok, {} shed busy, {} served degraded \
+         (limit {} -> floor {}, {} shrinks)",
+        burst.ok,
+        burst.sent,
+        burst.busy,
+        burst.degraded,
+        GUARD_CEILING,
+        glimiter.limit_floor(),
+        glimiter.shrinks()
+    );
+    // Trickle light probes until the guard settles Healthy with the
+    // limit re-opened — both hysteresis edges, observed.
+    let recover_t0 = Instant::now();
+    let mut probe = NetClient::connect(&gaddr[..])?;
+    while glimiter.state() != GuardState::Healthy || glimiter.limit() < GUARD_CEILING / 2 {
+        anyhow::ensure!(
+            recover_t0.elapsed() < Duration::from_secs(30),
+            "guard never recovered: state {:?}, limit {}",
+            glimiter.state(),
+            glimiter.limit()
+        );
+        let _ = probe.infer_f32("digits-lut", &rows[0]);
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let recovered = glimiter.state() == GuardState::Healthy;
+    let post_burst = run_load(
+        &LoadCfg {
+            addr: gaddr.clone(),
+            model: "digits-lut".into(),
+            encoding: Dtype::F32Le,
+            clients: 2,
+            requests_per_client: per_client.min(60),
+            rate_rps: None,
+        },
+        &rows,
+        None,
+    )?;
+    println!(
+        "guard recovered in {:.3} s: limit back to {} ({} reopens), \
+         post-burst {}/{} ok",
+        recover_t0.elapsed().as_secs_f64(),
+        glimiter.limit(),
+        glimiter.reopens(),
+        post_burst.ok,
+        post_burst.sent
+    );
+    let guard_section = guard_section_json(
+        GUARD_CEILING,
+        glimiter.limit_floor(),
+        glimiter.shrinks(),
+        glimiter.reopens(),
+        glimiter.codel_sheds(),
+        glimiter.degraded_requests(),
+        recovered,
+        &burst,
+        &post_burst,
+    );
+    guard_reactor.shutdown();
 
     // ---- heal phase: a replica boots from a corrupt store — a torn
     // prefix of the real artifact plus a junk file — quarantines both,
@@ -509,6 +687,7 @@ fn main() -> anyhow::Result<()> {
         Some(fleet_section),
         Some(reactor_section),
         Some(heal_section),
+        Some(guard_section),
         Some(meta),
         Some(scope_section),
         Some(stats_section),

@@ -51,9 +51,18 @@ Dispatches on the document's `schema` field:
   server that is self-consistent — requests >= responses >= 0, traces
   completed while sampling was on, per-layer profile counters present
   while profiling was on.
+* ``qnn.bench_serving.v6`` — v5 plus the qnn-guard overload section: a
+  throttled primary offered load well past its admission ceiling.
+  Fails if the burst never shed (``Busy``) — overload was vacuous; if
+  the adaptive limit did not move *both* ways (``shrinks`` and
+  ``reopens`` both >= 1); if degrade-to-coarse never engaged
+  (``degraded_requests`` and the burst's client-observed ``degraded``
+  tally both >= 1); if the guard did not walk back to Healthy
+  (``recovered``); or if post-burst availability on the recovered
+  primary is below 99%.
 
-``--self-test`` (as the first argument) builds a synthetic v5 document
-in-process, asserts the checker passes it, and asserts every v5
+``--self-test`` (as the first argument) builds a synthetic v6 document
+in-process, asserts the checker passes it, and asserts every v5/v6
 invariant actually fires when broken — the gate gating itself.
 
 Timings themselves are never asserted — CI machines are noisy;
@@ -542,6 +551,80 @@ def check_serving_v5(path: str, doc: dict) -> str:
     )
 
 
+# The recovered primary must serve light load essentially untouched —
+# same bar the fleet and heal phases hold.
+GUARD_AVAILABILITY_FLOOR = 0.99
+
+
+def check_serving_v6(path: str, doc: dict) -> str:
+    summary = check_serving_v5(path, doc)
+
+    guard = doc.get("guard")
+    if not isinstance(guard, dict):
+        fail(f"{path}: v6 document has no guard section (got {guard!r})")
+
+    ceiling = guard.get("limit_ceiling")
+    floor = guard.get("limit_floor")
+    if not positive_number(ceiling):
+        fail(f"{path}: guard section lacks a positive limit_ceiling (got {ceiling!r})")
+    if not positive_number(floor) or floor >= ceiling:
+        fail(
+            f"{path}: guard limit never shrank below its ceiling "
+            f"(floor={floor!r}, ceiling={ceiling!r}) — admission was never under pressure"
+        )
+
+    # The adaptive limit must demonstrably move both ways.
+    shrinks = guard.get("shrinks")
+    reopens = guard.get("reopens")
+    if not positive_number(shrinks):
+        fail(f"{path}: guard limit never shrank under overload (shrinks={shrinks!r})")
+    if not positive_number(reopens):
+        fail(f"{path}: guard limit never re-opened after overload (reopens={reopens!r})")
+    if not nonneg_int(guard.get("shed_codel")):
+        fail(f"{path}: guard section missing shed_codel counter (got {guard.get('shed_codel')!r})")
+
+    # Degrade-to-coarse must have engaged — on the server's own tally
+    # and on the wire flag the burst's clients observed.
+    degraded = guard.get("degraded_requests")
+    if not positive_number(degraded):
+        fail(
+            f"{path}: guard never redirected to the coarse variant "
+            f"(degraded_requests={degraded!r})"
+        )
+
+    burst = guard.get("burst_load")
+    check_mux_record(path, "guard burst", burst)
+    if not positive_number(burst.get("busy")):
+        fail(
+            f"{path}: guard burst never shed a request (busy={burst.get('busy')!r}) "
+            f"— the overload was vacuous"
+        )
+    if not positive_number(burst.get("degraded")):
+        fail(
+            f"{path}: no burst client ever saw the degraded response flag "
+            f"(degraded={burst.get('degraded')!r})"
+        )
+
+    if guard.get("recovered") is not True:
+        fail(f"{path}: guard did not walk back to Healthy after the burst drained")
+    availability = guard.get("post_burst_availability")
+    if not isinstance(availability, (int, float)) or isinstance(availability, bool):
+        fail(f"{path}: guard section has no numeric post_burst_availability")
+    if availability < GUARD_AVAILABILITY_FLOOR:
+        fail(
+            f"{path}: post-burst availability {availability:.4f} is below the "
+            f"{GUARD_AVAILABILITY_FLOOR:.2f} floor — the primary never really recovered"
+        )
+    check_mux_record(path, "post-burst load", guard.get("post_burst_load"))
+
+    return (
+        f"{summary}; guard limit {int(ceiling)}->{int(floor)}->reopened "
+        f"({int(shrinks)} shrinks / {int(reopens)} reopens), "
+        f"{int(degraded)} degraded, {int(burst['busy'])} shed, "
+        f"recovered at availability {availability:.4f}"
+    )
+
+
 CHECKERS = {
     "qnn.bench_lut_engine.v2": check_lut_engine,
     "qnn.bench_lut_engine.v3": check_lut_engine_v3,
@@ -550,6 +633,7 @@ CHECKERS = {
     "qnn.bench_serving.v3": check_serving_v3,
     "qnn.bench_serving.v4": check_serving_v4,
     "qnn.bench_serving.v5": check_serving_v5,
+    "qnn.bench_serving.v6": check_serving_v6,
 }
 
 
@@ -572,8 +656,8 @@ def check_file(path: str) -> None:
     print(f"check_bench: ok — {path}: schema {schema}, {summary}")
 
 
-def _synthetic_v5_doc() -> dict:
-    """A minimal document satisfying every v1..v5 invariant — the
+def _synthetic_v6_doc() -> dict:
+    """A minimal document satisfying every v1..v6 invariant — the
     fixture ``--self-test`` mutates one invariant at a time."""
 
     def run(mode, encoding, clients, rps, req_bytes, **extra):
@@ -585,6 +669,7 @@ def _synthetic_v5_doc() -> dict:
             "ok": 400,
             "busy": 0,
             "errors": 0,
+            "degraded": 0,
             "elapsed_s": 0.05,
             "throughput_rps": rps,
             "p50_ms": 0.4,
@@ -597,7 +682,7 @@ def _synthetic_v5_doc() -> dict:
         return r
 
     return {
-        "schema": "qnn.bench_serving.v5",
+        "schema": "qnn.bench_serving.v6",
         "provenance": "check_bench --self-test",
         "meta": {
             "fault": None,
@@ -669,6 +754,20 @@ def _synthetic_v5_doc() -> dict:
             "post_heal_availability": 1.0,
             "post_heal_load": run("closed", "qidx", 4, 9000.0, 105),
         },
+        "guard": {
+            "limit_ceiling": 8,
+            "limit_floor": 1,
+            "shrinks": 6,
+            "reopens": 4,
+            "shed_codel": 9,
+            "degraded_requests": 120,
+            "recovered": True,
+            "post_burst_availability": 1.0,
+            "burst_load": run(
+                "open", "f32le", 32, 4000.0, 297, ok=310, busy=85, errors=5, degraded=120
+            ),
+            "post_burst_load": run("closed", "f32le", 2, 9000.0, 297),
+        },
         "wire_bytes_per_request": {
             "f32le": 297,
             "qidx": 105,
@@ -689,8 +788,8 @@ def _selftest() -> None:
     import copy
     import io
 
-    doc = _synthetic_v5_doc()
-    check_serving_v5("<selftest>", doc)
+    doc = _synthetic_v6_doc()
+    check_serving_v6("<selftest>", doc)
 
     def must_fail(why, mutate):
         broken = copy.deepcopy(doc)
@@ -699,7 +798,7 @@ def _selftest() -> None:
             # fail() prints before exiting; keep the expected noise out
             # of the self-test's own output.
             with contextlib.redirect_stderr(io.StringIO()):
-                check_serving_v5("<selftest>", broken)
+                check_serving_v6("<selftest>", broken)
         except SystemExit:
             return
         fail(f"self-test: {why} was not caught")
@@ -735,6 +834,39 @@ def _selftest() -> None:
         "meta with an unknown poller",
         lambda d: d["meta"].update(poller="kqueue"),
     )
+    must_fail("missing guard section", lambda d: d.pop("guard"))
+    must_fail(
+        "guard limit that never shrank",
+        lambda d: d["guard"].update(shrinks=0),
+    )
+    must_fail(
+        "guard limit that never re-opened",
+        lambda d: d["guard"].update(reopens=0),
+    )
+    must_fail(
+        "guard floor that never left the ceiling",
+        lambda d: d["guard"].update(limit_floor=8),
+    )
+    must_fail(
+        "overload that never engaged degrade-to-coarse",
+        lambda d: d["guard"].update(degraded_requests=0),
+    )
+    must_fail(
+        "burst whose clients never saw the degraded flag",
+        lambda d: d["guard"]["burst_load"].update(degraded=0),
+    )
+    must_fail(
+        "burst that never shed — vacuous overload",
+        lambda d: d["guard"]["burst_load"].update(busy=0),
+    )
+    must_fail(
+        "guard stuck short of Healthy",
+        lambda d: d["guard"].update(recovered=False),
+    )
+    must_fail(
+        "post-burst availability under the floor",
+        lambda d: d["guard"].update(post_burst_availability=0.97),
+    )
 
 
 def main() -> None:
@@ -742,8 +874,8 @@ def main() -> None:
     if args and args[0] == "--self-test":
         _selftest()
         print(
-            "check_bench: ok — self-test: synthetic v5 doc passes; "
-            "broken observability invariants are caught"
+            "check_bench: ok — self-test: synthetic v6 doc passes; "
+            "broken observability and overload invariants are caught"
         )
         args = args[1:]
         if not args:

@@ -24,13 +24,15 @@
 //! not a channel pair.
 
 use super::engine::Backend;
+use super::guard::{GuardCfg, Limiter};
 use super::metrics::{Metrics, Outcome};
 use super::server::{InferError, Payload};
 use crate::fixedpoint::UniformQuant;
 use crate::util::threadpool::ThreadPool;
 use crate::util::trace;
+use crate::util::watchdog;
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -46,11 +48,17 @@ pub struct BatcherCfg {
     pub max_delay: Duration,
     /// Worker threads running the engine.
     pub workers: usize,
-    /// Admission bound: max requests outstanding (queued or in
-    /// service); past it submissions fail fast with [`InferError::Busy`].
+    /// Admission ceiling: max requests outstanding (queued or in
+    /// service). The live bound is the guard's adaptive limit, floating
+    /// at or below this; past it submissions fail fast with
+    /// [`InferError::Busy`].
     pub max_queue: usize,
-    /// Back-off hint attached to `Busy` rejections.
-    pub busy_retry_after: Duration,
+    /// Back-off hint attached to `Busy` rejections: `None` derives it
+    /// adaptively from the live limit and depth, `Some(d)` pins it.
+    pub busy_retry_after: Option<Duration>,
+    /// Overload-control policy: AIMD limit adaptation, CoDel age
+    /// shedding, and degrade hysteresis (see [`crate::coordinator::guard`]).
+    pub guard: GuardCfg,
 }
 
 impl Default for BatcherCfg {
@@ -60,7 +68,8 @@ impl Default for BatcherCfg {
             max_delay: Duration::from_micros(500),
             workers: 2,
             max_queue: 1024,
-            busy_retry_after: Duration::from_millis(2),
+            busy_retry_after: None,
+            guard: GuardCfg::from_env(),
         }
     }
 }
@@ -81,6 +90,10 @@ pub struct Completion {
     /// Trace context carried from submission; the response writer
     /// stamps `Flush` and finishes it ([`trace::UNTRACED`] is a no-op).
     pub trace: trace::Ctx,
+    /// Echoed from [`BatcherHandle::submit_opts`]: the guard dispatched
+    /// this request to a coarse fallback engine, and the response frame
+    /// should carry the degraded flag so the client can tally it.
+    pub degraded: bool,
 }
 
 /// Where completions go: called from worker threads, once per accepted
@@ -94,21 +107,25 @@ struct Entry {
     enqueued: Instant,
     deadline: Option<Instant>,
     trace: trace::Ctx,
+    /// Wire priority flag: low-priority entries shed first (half the
+    /// CoDel age, half the admission limit).
+    low_priority: bool,
+    /// Dispatched to a coarse fallback — echoed into the completion.
+    degraded: bool,
 }
 
 /// Submission side of a [`Batcher`] (cheap to clone).
 #[derive(Clone)]
 pub struct BatcherHandle {
     tx: mpsc::Sender<Entry>,
-    depth: Arc<AtomicUsize>,
+    limiter: Arc<Limiter>,
     /// Admission gate. [`Self::submit`] holds it shared across the
     /// check-and-send; the collector's shutdown path flips it to
     /// `false` under the write lock *before* its final drain, so every
     /// entry a submit ever got an `Ok(())` for is provably received —
     /// a send cannot race past the drain into a dropped receiver.
     gate: Arc<RwLock<bool>>,
-    max_queue: usize,
-    busy_retry_after_ms: u64,
+    busy_retry_after: Option<Duration>,
     input_len: usize,
     output_len: usize,
     input_quant: Option<UniformQuant>,
@@ -133,7 +150,14 @@ impl BatcherHandle {
     /// Requests outstanding (queued or in service) — the health pong's
     /// load signal.
     pub fn queued(&self) -> usize {
-        self.depth.load(Ordering::Relaxed)
+        self.limiter.depth()
+    }
+
+    /// This batcher's overload guard: the adaptive limit, CoDel
+    /// counters, and per-model health state. The reactor consults it
+    /// for degrade-to-coarse dispatch; the registry renders it.
+    pub fn limiter(&self) -> &Arc<Limiter> {
+        &self.limiter
     }
 
     fn validate(&self, payload: &Payload) -> Result<(), InferError> {
@@ -176,6 +200,25 @@ impl BatcherHandle {
         deadline: Option<Instant>,
         tctx: trace::Ctx,
     ) -> Result<(), InferError> {
+        self.submit_opts(conn, req_id, payload, deadline, tctx, false, false)
+    }
+
+    /// Full-control submission: [`Self::submit_traced`] plus the wire
+    /// priority flag (low-priority traffic is admitted against half the
+    /// live limit and sheds at half the CoDel age) and the degraded
+    /// marker (echoed into the completion so the response frame carries
+    /// the flag when the guard dispatched to a coarse fallback).
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_opts(
+        &self,
+        conn: u64,
+        req_id: u64,
+        payload: Payload,
+        deadline: Option<Instant>,
+        tctx: trace::Ctx,
+        low_priority: bool,
+        degraded: bool,
+    ) -> Result<(), InferError> {
         // Held (shared) until the send below completes: the collector
         // closes this gate exclusively before its final drain, so an
         // `Ok(())` here is a hard guarantee the entry will be received.
@@ -188,27 +231,15 @@ impl BatcherHandle {
             self.metrics.outcomes.record(Outcome::BadRequest);
             return Err(e);
         }
-        // Reserve a slot: CAS loop so concurrent submitters never
-        // overshoot the bound.
-        let mut cur = self.depth.load(Ordering::Relaxed);
-        loop {
-            if cur >= self.max_queue {
-                self.metrics.outcomes.record(Outcome::Busy);
-                return Err(InferError::Busy {
-                    queued: cur,
-                    max_queue: self.max_queue,
-                    retry_after_ms: self.busy_retry_after_ms,
-                });
-            }
-            match self.depth.compare_exchange_weak(
-                cur,
-                cur + 1,
-                Ordering::SeqCst,
-                Ordering::Relaxed,
-            ) {
-                Ok(_) => break,
-                Err(now) => cur = now,
-            }
+        // Reserve a slot against the guard's live limit (at or below
+        // the configured `max_queue` ceiling).
+        if let Err(cur) = self.limiter.try_acquire(low_priority) {
+            self.metrics.outcomes.record(Outcome::Busy);
+            return Err(InferError::Busy {
+                queued: cur,
+                max_queue: self.limiter.ceiling(),
+                retry_after_ms: self.limiter.retry_hint_ms(self.busy_retry_after),
+            });
         }
         trace::stamp(tctx, trace::Stage::Enqueue);
         let entry = Entry {
@@ -218,9 +249,11 @@ impl BatcherHandle {
             enqueued: Instant::now(),
             deadline,
             trace: tctx,
+            low_priority,
+            degraded,
         };
         if self.tx.send(entry).is_err() {
-            self.depth.fetch_sub(1, Ordering::SeqCst);
+            self.limiter.release(1);
             self.metrics.outcomes.record(Outcome::PeerShutdown);
             return Err(InferError::Shutdown);
         }
@@ -231,13 +264,13 @@ impl BatcherHandle {
 /// Returns a batch's admission slots on drop — including during unwind,
 /// so a panicking backend cannot leak queue capacity.
 struct SlotGuard {
-    depth: Arc<AtomicUsize>,
+    limiter: Arc<Limiter>,
     n: usize,
 }
 
 impl Drop for SlotGuard {
     fn drop(&mut self) {
-        self.depth.fetch_sub(self.n, Ordering::SeqCst);
+        self.limiter.release(self.n);
     }
 }
 
@@ -258,6 +291,89 @@ struct WorkerScratch {
     service: Vec<f64>,
 }
 
+/// Run one shed-filtered batch through the engine and record its
+/// metrics — the panic-isolated section of a worker job. Returns the
+/// per-entry output rows; a backend panic unwinds out and the caller
+/// resolves every entry with a typed error instead.
+fn run_entries(
+    engine: &dyn Backend,
+    metrics: &Metrics,
+    s: &mut WorkerScratch,
+    batch: &[Entry],
+    dispatched: Instant,
+) -> Vec<Vec<f32>> {
+    let n = batch.len();
+    let out_len = engine.output_len();
+    // Partition by payload encoding (stable): a mixed batch costs at
+    // most two engine entries, never per-row dispatch.
+    s.rows_f.clear();
+    s.rows_q.clear();
+    for (i, e) in batch.iter().enumerate() {
+        match e.payload {
+            Payload::F32(_) => s.rows_f.push(i),
+            Payload::QIdx(_) => s.rows_q.push(i),
+        }
+    }
+    s.out.clear();
+    s.out.resize(n * out_len, 0.0);
+    if !s.rows_f.is_empty() {
+        s.flat.clear();
+        for &i in &s.rows_f {
+            if let Payload::F32(v) = &batch[i].payload {
+                s.flat.extend_from_slice(v);
+            }
+        }
+        if s.rows_f.len() == n {
+            engine.infer_batch_into(&s.flat, n, &mut s.out);
+        } else {
+            s.part.clear();
+            s.part.resize(s.rows_f.len() * out_len, 0.0);
+            engine.infer_batch_into(&s.flat, s.rows_f.len(), &mut s.part);
+            for (k, &i) in s.rows_f.iter().enumerate() {
+                s.out[i * out_len..(i + 1) * out_len]
+                    .copy_from_slice(&s.part[k * out_len..(k + 1) * out_len]);
+            }
+        }
+    }
+    if !s.rows_q.is_empty() {
+        s.qidx.clear();
+        for &i in &s.rows_q {
+            if let Payload::QIdx(v) = &batch[i].payload {
+                s.qidx.extend_from_slice(v);
+            }
+        }
+        if s.rows_q.len() == n {
+            engine.infer_quantized_batch_into(&s.qidx, n, &mut s.out);
+        } else {
+            s.part.clear();
+            s.part.resize(s.rows_q.len() * out_len, 0.0);
+            engine.infer_quantized_batch_into(&s.qidx, s.rows_q.len(), &mut s.part);
+            for (k, &i) in s.rows_q.iter().enumerate() {
+                s.out[i * out_len..(i + 1) * out_len]
+                    .copy_from_slice(&s.part[k * out_len..(k + 1) * out_len]);
+            }
+        }
+    }
+    for e in batch {
+        trace::stamp(e.trace, trace::Stage::InferEnd);
+    }
+    // Record metrics BEFORE completing so a snapshot read right after a
+    // response sees the request counted.
+    let service_ms = dispatched.elapsed().as_secs_f64() * 1e3;
+    s.e2e.clear();
+    s.queue.clear();
+    s.service.clear();
+    for e in batch {
+        s.queue
+            .push(dispatched.saturating_duration_since(e.enqueued).as_secs_f64() * 1e3);
+        s.e2e.push(e.enqueued.elapsed().as_secs_f64() * 1e3);
+        s.service.push(service_ms);
+    }
+    metrics.record_batch(&s.e2e, &s.queue, &s.service);
+    metrics.outcomes.add(Outcome::Ok, n as u64);
+    (0..n).map(|i| s.out[i * out_len..(i + 1) * out_len].to_vec()).collect()
+}
+
 /// A running cross-connection batcher for one engine.
 pub struct Batcher {
     handle: BatcherHandle,
@@ -275,7 +391,7 @@ impl Batcher {
         let shutdown = Arc::new(AtomicBool::new(false));
         let gate = Arc::new(RwLock::new(true));
         let handle_gate = Arc::clone(&gate);
-        let depth = Arc::new(AtomicUsize::new(0));
+        let limiter = Arc::new(Limiter::new(cfg.guard.clone(), cfg.max_queue.max(1)));
         let input_len = engine.input_len();
         let output_len = engine.output_len();
         let engine_name = engine.name().to_string();
@@ -284,7 +400,8 @@ impl Batcher {
 
         let m = Arc::clone(&metrics);
         let stop = Arc::clone(&shutdown);
-        let d = Arc::clone(&depth);
+        let l = Arc::clone(&limiter);
+        let busy_hint = cfg.busy_retry_after;
         let max_batch = cfg.max_batch.min(engine.max_batch()).max(1);
         let max_delay = cfg.max_delay;
         let workers = ThreadPool::new(cfg.workers.max(1));
@@ -295,12 +412,21 @@ impl Batcher {
             .name("qnn-xbatcher".into())
             .spawn(move || {
                 let rx = rx.lock().unwrap();
+                // Watchdog hearts: the collector beats per loop
+                // iteration; the workers share one heart whose
+                // active-count composes across concurrent jobs. Both
+                // drop (deregistering) when this thread exits.
+                let heart = watchdog::register(&format!("qnn-xbatcher:{}", engine.name()));
+                let wheart =
+                    Arc::new(watchdog::register(&format!("qnn-xworker:{}", engine.name())));
                 // Hand one batch to the worker pool (used by both the
                 // live loop and the shutdown drain below).
                 let dispatch = |batch: Vec<Entry>| {
                     let engine = Arc::clone(&engine);
                     let metrics = Arc::clone(&m);
-                    let depth = Arc::clone(&d);
+                    let limiter = Arc::clone(&l);
+                    let wheart = Arc::clone(&wheart);
+                    let hint = busy_hint;
                     let sink = Arc::clone(&sink);
                     let dispatched = Instant::now();
                     for e in &batch {
@@ -311,140 +437,118 @@ impl Batcher {
                             static BUFS: RefCell<WorkerScratch> =
                                 RefCell::new(WorkerScratch::default());
                         }
+                        let _watch = wheart.busy();
                         let mut batch = batch;
                         // Slots return when this guard drops — after the
                         // completions below normally, during unwind if
                         // the backend panics. Shed entries count too.
-                        let _slots = SlotGuard { depth, n: batch.len() };
-                        // Deadline shedding: budgets that expired while
-                        // queued resolve with a typed error now, before
-                        // any engine time is spent on them.
+                        let _slots = SlotGuard { limiter: Arc::clone(&limiter), n: batch.len() };
+                        // Feed the AIMD controller the batch's worst
+                        // queue wait — including entries about to shed,
+                        // which are exactly the pressure signal.
                         let now = Instant::now();
+                        let mut worst = Duration::ZERO;
+                        for e in &batch {
+                            worst = worst.max(now.saturating_duration_since(e.enqueued));
+                        }
+                        limiter.observe(worst);
+                        // Shedding: budgets that expired while queued
+                        // resolve with a typed error now, and entries
+                        // older than the CoDel age resolve as Busy —
+                        // before any engine time is spent on them.
                         batch = batch
                             .into_iter()
-                            .filter_map(|e| match e.deadline {
-                                Some(d) if now >= d => {
-                                    metrics.outcomes.record(Outcome::DeadlineExceeded);
+                            .filter_map(|e| {
+                                if let Some(d) = e.deadline {
+                                    if now >= d {
+                                        metrics.outcomes.record(Outcome::DeadlineExceeded);
+                                        sink(Completion {
+                                            conn: e.conn,
+                                            req_id: e.req_id,
+                                            result: Err(InferError::DeadlineExceeded),
+                                            payload: e.payload,
+                                            trace: e.trace,
+                                            degraded: e.degraded,
+                                        });
+                                        return None;
+                                    }
+                                }
+                                let age = now.saturating_duration_since(e.enqueued);
+                                if age > limiter.shed_age(e.low_priority) {
+                                    limiter.record_codel_shed();
+                                    metrics.outcomes.record(Outcome::Busy);
                                     sink(Completion {
                                         conn: e.conn,
                                         req_id: e.req_id,
-                                        result: Err(InferError::DeadlineExceeded),
+                                        result: Err(InferError::Busy {
+                                            queued: limiter.depth(),
+                                            max_queue: limiter.ceiling(),
+                                            retry_after_ms: limiter.retry_hint_ms(hint),
+                                        }),
                                         payload: e.payload,
                                         trace: e.trace,
+                                        degraded: e.degraded,
                                     });
-                                    None
+                                    return None;
                                 }
-                                _ => Some(e),
+                                Some(e)
                             })
                             .collect();
                         if batch.is_empty() {
                             return;
                         }
                         let n = batch.len();
-                        let out_len = engine.output_len();
                         for e in &batch {
                             trace::stamp(e.trace, trace::Stage::InferStart);
                         }
-                        BUFS.with(|b| {
-                            let s = &mut *b.borrow_mut();
-                            // Partition by payload encoding (stable): a
-                            // mixed batch costs at most two engine
-                            // entries, never per-row dispatch.
-                            s.rows_f.clear();
-                            s.rows_q.clear();
-                            for (i, e) in batch.iter().enumerate() {
-                                match e.payload {
-                                    Payload::F32(_) => s.rows_f.push(i),
-                                    Payload::QIdx(_) => s.rows_q.push(i),
+                        // Engine + metrics run panic-isolated: a
+                        // panicking backend resolves every entry in the
+                        // batch (typed error below) instead of silently
+                        // dropping completions — a leak the reactor
+                        // would feel as a stuck connection window.
+                        let outs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            BUFS.with(|b| {
+                                let s = &mut *b.borrow_mut();
+                                run_entries(&*engine, &metrics, s, &batch, dispatched)
+                            })
+                        }));
+                        match outs {
+                            Ok(outs) => {
+                                for (e, out) in batch.into_iter().zip(outs) {
+                                    sink(Completion {
+                                        conn: e.conn,
+                                        req_id: e.req_id,
+                                        result: Ok(out),
+                                        payload: e.payload,
+                                        trace: e.trace,
+                                        degraded: e.degraded,
+                                    });
                                 }
                             }
-                            s.out.clear();
-                            s.out.resize(n * out_len, 0.0);
-                            if !s.rows_f.is_empty() {
-                                s.flat.clear();
-                                for &i in &s.rows_f {
-                                    if let Payload::F32(v) = &batch[i].payload {
-                                        s.flat.extend_from_slice(v);
-                                    }
-                                }
-                                if s.rows_f.len() == n {
-                                    engine.infer_batch_into(&s.flat, n, &mut s.out);
-                                } else {
-                                    s.part.clear();
-                                    s.part.resize(s.rows_f.len() * out_len, 0.0);
-                                    engine.infer_batch_into(&s.flat, s.rows_f.len(), &mut s.part);
-                                    for (k, &i) in s.rows_f.iter().enumerate() {
-                                        s.out[i * out_len..(i + 1) * out_len]
-                                            .copy_from_slice(
-                                                &s.part[k * out_len..(k + 1) * out_len],
-                                            );
-                                    }
+                            Err(_) => {
+                                watchdog::note_worker_panic();
+                                metrics.outcomes.add(Outcome::Internal, n as u64);
+                                for e in batch {
+                                    sink(Completion {
+                                        conn: e.conn,
+                                        req_id: e.req_id,
+                                        result: Err(InferError::Dropped),
+                                        payload: e.payload,
+                                        trace: e.trace,
+                                        degraded: e.degraded,
+                                    });
                                 }
                             }
-                            if !s.rows_q.is_empty() {
-                                s.qidx.clear();
-                                for &i in &s.rows_q {
-                                    if let Payload::QIdx(v) = &batch[i].payload {
-                                        s.qidx.extend_from_slice(v);
-                                    }
-                                }
-                                if s.rows_q.len() == n {
-                                    engine.infer_quantized_batch_into(&s.qidx, n, &mut s.out);
-                                } else {
-                                    s.part.clear();
-                                    s.part.resize(s.rows_q.len() * out_len, 0.0);
-                                    engine.infer_quantized_batch_into(
-                                        &s.qidx,
-                                        s.rows_q.len(),
-                                        &mut s.part,
-                                    );
-                                    for (k, &i) in s.rows_q.iter().enumerate() {
-                                        s.out[i * out_len..(i + 1) * out_len]
-                                            .copy_from_slice(
-                                                &s.part[k * out_len..(k + 1) * out_len],
-                                            );
-                                    }
-                                }
-                            }
-                            for e in &batch {
-                                trace::stamp(e.trace, trace::Stage::InferEnd);
-                            }
-                            // Record metrics BEFORE completing so a
-                            // snapshot read right after a response sees
-                            // the request counted.
-                            let service_ms = dispatched.elapsed().as_secs_f64() * 1e3;
-                            s.e2e.clear();
-                            s.queue.clear();
-                            s.service.clear();
-                            for e in &batch {
-                                s.queue.push(
-                                    dispatched
-                                        .saturating_duration_since(e.enqueued)
-                                        .as_secs_f64()
-                                        * 1e3,
-                                );
-                                s.e2e.push(e.enqueued.elapsed().as_secs_f64() * 1e3);
-                                s.service.push(service_ms);
-                            }
-                            metrics.record_batch(&s.e2e, &s.queue, &s.service);
-                            metrics.outcomes.add(Outcome::Ok, n as u64);
-                            for (i, e) in batch.into_iter().enumerate() {
-                                sink(Completion {
-                                    conn: e.conn,
-                                    req_id: e.req_id,
-                                    result: Ok(s.out[i * out_len..(i + 1) * out_len].to_vec()),
-                                    payload: e.payload,
-                                    trace: e.trace,
-                                });
-                            }
-                        });
+                        }
                     });
                 };
 
                 loop {
                     // Block for the first entry (with periodic shutdown
-                    // checks).
+                    // checks). Parked here the collector is idle, not
+                    // stalled — the heart's active count is zero.
                     let first = loop {
+                        heart.beat();
                         match rx.recv_timeout(Duration::from_millis(20)) {
                             Ok(e) => break Some(e),
                             Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -456,6 +560,7 @@ impl Batcher {
                         }
                     };
                     let Some(first) = first else { break };
+                    let _work = heart.busy();
 
                     // The dispatch policy: fill to max_batch, or age the
                     // oldest entry (== `first`) to max_delay, whichever
@@ -506,10 +611,9 @@ impl Batcher {
         Batcher {
             handle: BatcherHandle {
                 tx,
-                depth,
+                limiter,
                 gate: handle_gate,
-                max_queue: cfg.max_queue.max(1),
-                busy_retry_after_ms: cfg.busy_retry_after.as_millis() as u64,
+                busy_retry_after: cfg.busy_retry_after,
                 input_len,
                 output_len,
                 input_quant,
@@ -549,6 +653,7 @@ impl Drop for Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
     /// Deterministic toy engine: output = [sum(input)] per row.
     struct SumEngine;
@@ -686,7 +791,8 @@ mod tests {
                 max_delay: Duration::from_millis(0),
                 workers: 1,
                 max_queue: 2,
-                busy_retry_after: Duration::from_millis(7),
+                busy_retry_after: Some(Duration::from_millis(7)),
+                ..Default::default()
             },
             sink,
         );
@@ -753,6 +859,76 @@ mod tests {
         // Slots return when the worker's batch guard drops, a beat
         // after the completions land.
         wait_for(|| h.queued() == 0);
+    }
+
+    /// Panics on the first batch only, then behaves.
+    struct FlakyEngine(AtomicBool);
+    impl Backend for FlakyEngine {
+        fn name(&self) -> &str {
+            "flaky"
+        }
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+        fn infer_batch_into(&self, _flat: &[f32], batch: usize, out: &mut [f32]) {
+            if !self.0.swap(true, Ordering::SeqCst) {
+                panic!("injected backend panic");
+            }
+            out[..batch].fill(2.0);
+        }
+    }
+
+    #[test]
+    fn worker_panic_resolves_every_entry_and_batcher_keeps_serving() {
+        // A silently dropped completion would leak the reactor's
+        // per-connection inflight window forever — the panic path must
+        // resolve every accepted entry with a typed error.
+        let (sink, got) = collecting_sink();
+        let b = Batcher::start(
+            Arc::new(FlakyEngine(AtomicBool::new(false))),
+            BatcherCfg { max_batch: 1, workers: 1, ..Default::default() },
+            sink,
+        );
+        let h = b.handle();
+        h.submit(3, 1, Payload::F32(vec![0.0, 0.0]), None).unwrap();
+        wait_for(|| got.lock().unwrap().len() == 1);
+        assert_eq!(got.lock().unwrap()[0].result, Err(InferError::Dropped));
+        assert!(b.metrics.outcomes.get(Outcome::Internal) >= 1);
+        // Slots returned and the worker survived: next entry serves.
+        wait_for(|| h.queued() == 0);
+        h.submit(3, 2, Payload::F32(vec![0.0, 0.0]), None).unwrap();
+        wait_for(|| got.lock().unwrap().len() == 2);
+        let got = got.lock().unwrap();
+        let ok = got.iter().find(|c| c.req_id == 2).unwrap();
+        assert_eq!(ok.result, Ok(vec![2.0]));
+    }
+
+    #[test]
+    fn degraded_marker_is_echoed_into_completions() {
+        let (sink, got) = collecting_sink();
+        let b = Batcher::start(Arc::new(SumEngine), BatcherCfg::default(), sink);
+        let h = b.handle();
+        h.submit_opts(
+            9,
+            1,
+            Payload::F32(vec![1.0, 2.0, 3.0, 4.0]),
+            None,
+            trace::UNTRACED,
+            false,
+            true,
+        )
+        .unwrap();
+        h.submit(9, 2, Payload::F32(vec![1.0, 2.0, 3.0, 4.0]), None).unwrap();
+        wait_for(|| got.lock().unwrap().len() == 2);
+        let got = got.lock().unwrap();
+        assert!(got.iter().find(|c| c.req_id == 1).unwrap().degraded);
+        assert!(!got.iter().find(|c| c.req_id == 2).unwrap().degraded);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Fault-tolerant fleet dispatch over the QWF wire protocol.
 //!
-//! A [`Fleet`] fronts N [`super::net::NetServer`] replicas and gives
-//! callers one reliability contract: **every accepted request gets
+//! A [`Fleet`] fronts N QWF replicas — [`super::net::NetServer`] or
+//! [`super::reactor::ReactorServer`], the wire does not care — and
+//! gives callers one reliability contract: **every accepted request gets
 //! exactly one terminal answer** — a result, a typed rejection, or a
 //! typed exhaustion — no matter which replicas crash, hang, or corrupt
 //! frames along the way. The pieces:
@@ -155,6 +156,10 @@ pub struct FleetMetrics {
     failovers: AtomicU64,
     ejections: AtomicU64,
     readmissions: AtomicU64,
+    /// Successful answers served by a coarse fallback (the response
+    /// frame carried the degraded flag) — the fleet-wide tally of
+    /// qnn-guard's graceful degradation.
+    degraded: AtomicU64,
 }
 
 impl FleetMetrics {
@@ -186,6 +191,10 @@ impl FleetMetrics {
     pub fn readmissions(&self) -> u64 {
         self.readmissions.load(Ordering::Relaxed)
     }
+
+    pub fn degraded(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
+    }
 }
 
 /// Point-in-time fleet state for reports and benches.
@@ -196,6 +205,8 @@ pub struct FleetSnapshot {
     pub failovers: u64,
     pub ejections: u64,
     pub readmissions: u64,
+    /// Answers served degraded (coarse fallback) across the fleet.
+    pub degraded: u64,
     pub availability: f64,
     /// Nonzero terminal outcomes, in [`Outcome::ALL`] order.
     pub outcomes: Vec<(&'static str, u64)>,
@@ -339,6 +350,7 @@ impl Fleet {
             registry::kv(out, "qnn.fleet.failovers", m.failovers());
             registry::kv(out, "qnn.fleet.ejections", m.ejections());
             registry::kv(out, "qnn.fleet.readmissions", m.readmissions());
+            registry::kv(out, "qnn.fleet.degraded", m.degraded());
             registry::kvf(out, "qnn.fleet.availability", m.availability());
             for (o, n) in m.outcomes.snapshot() {
                 registry::kv(out, &format!("qnn.fleet.outcome.{}", o.name()), n);
@@ -378,6 +390,7 @@ impl Fleet {
             failovers: m.failovers(),
             ejections: m.ejections(),
             readmissions: m.readmissions(),
+            degraded: m.degraded(),
             availability: m.availability(),
             outcomes: m
                 .outcomes
@@ -472,8 +485,12 @@ impl Fleet {
                         d.saturating_duration_since(Instant::now())
                             .max(Duration::from_millis(1))
                     }));
+                    let degraded_before = conn.degraded_seen();
                     match attempt_fn(&mut conn, model) {
                         Ok(out) => {
+                            if conn.degraded_seen() > degraded_before {
+                                inner.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                            }
                             inner.checkin(ri, conn);
                             inner.mark_success(ri);
                             inner.metrics.outcomes.record(Outcome::Ok);

@@ -1,0 +1,603 @@
+//! qnn-guard: adaptive overload control for the serving stack.
+//!
+//! Every admission bound before this module was a static `max_queue`:
+//! overload meant a wall of `Busy` frames with a fixed 2 ms hint and an
+//! unbounded queue-wait p99 for whatever did get in. The guard replaces
+//! that with a per-model [`Limiter`] doing three jobs:
+//!
+//! - **Adaptive admission (AIMD).** The configured `max_queue` stays
+//!   the hard ceiling, but the *live* concurrency limit floats below
+//!   it: each time measured queue wait exceeds
+//!   [`GuardCfg::target_wait`], the limit shrinks multiplicatively
+//!   (`limit × backoff`); each calm observation re-opens it
+//!   additively (+1) back toward the ceiling. Queue wait — not depth —
+//!   is the controlled variable, so a fast engine keeps a deep queue
+//!   and a slow one sheds early.
+//! - **CoDel-style age shedding.** Entries older than
+//!   [`GuardCfg::shed_age`] at batch-formation time resolve as `Busy`
+//!   instead of occupying the engine: under saturation it is better to
+//!   answer "retry" in 1 ms than "here" in 2 s. Low-priority requests
+//!   (wire flag bit, [`super::wire::FLAG_LOW_PRIORITY`]) shed at half
+//!   the age and are admitted against half the limit, so best-effort
+//!   traffic drains first.
+//! - **Degrade hysteresis.** Sustained pressure (a shrink streak of
+//!   [`GuardCfg::degrade_after`] consecutive adjust ticks) trips the
+//!   per-model state machine Healthy → Degraded; the router then
+//!   dispatches to the paired `model@coarse` variant (the cheap end of
+//!   the paper's precision spectrum). After `recover_hold` without
+//!   pressure it probes primary again (Recovering), and either falls
+//!   back to Degraded on renewed pressure or settles Healthy after
+//!   `healthy_hold`.
+//!
+//! `Busy` retry hints are derived from the live limit and depth
+//! ([`Limiter::retry_hint_ms`]) unless the operator pins a fixed hint.
+//! Everything the guard decides is observable: [`Limiter::render`]
+//! emits `qnn.guard.<model>.*` counters for the registry scrape.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Guard policy knobs. Defaults suit the test engines here (tens of ms
+/// service times); production values come from `QNN_GUARD_*` env vars
+/// via [`GuardCfg::from_env`].
+#[derive(Clone, Debug)]
+pub struct GuardCfg {
+    /// Queue-wait target: measured waits above this count as pressure
+    /// and shrink the limit (`QNN_GUARD_TARGET_MS`).
+    pub target_wait: Duration,
+    /// The adaptive limit never shrinks below this
+    /// (`QNN_GUARD_MIN_LIMIT`).
+    pub min_limit: usize,
+    /// Minimum spacing between limit adjustments, so one slow batch
+    /// doesn't collapse the limit in a burst of observations
+    /// (`QNN_GUARD_INTERVAL_MS`).
+    pub adjust_interval: Duration,
+    /// Multiplicative-decrease factor applied on pressure
+    /// (`QNN_GUARD_BACKOFF`, clamped to (0, 1)).
+    pub backoff: f64,
+    /// CoDel shed threshold: entries older than this at batch
+    /// formation resolve as `Busy` instead of running
+    /// (`QNN_GUARD_SHED_AGE_MS`). Low-priority entries shed at half
+    /// this age.
+    pub shed_age: Duration,
+    /// Consecutive shrink ticks before Healthy trips to Degraded
+    /// (`QNN_GUARD_DEGRADE_AFTER`).
+    pub degrade_after: u32,
+    /// Pressure-free time in Degraded before probing primary again
+    /// (`QNN_GUARD_RECOVER_MS`).
+    pub recover_hold: Duration,
+    /// Pressure-free time in Recovering before settling Healthy
+    /// (`QNN_GUARD_HEALTHY_MS`).
+    pub healthy_hold: Duration,
+}
+
+impl Default for GuardCfg {
+    fn default() -> Self {
+        Self {
+            target_wait: Duration::from_millis(25),
+            min_limit: 1,
+            adjust_interval: Duration::from_millis(10),
+            backoff: 0.7,
+            shed_age: Duration::from_millis(200),
+            degrade_after: 3,
+            recover_hold: Duration::from_millis(300),
+            healthy_hold: Duration::from_millis(300),
+        }
+    }
+}
+
+fn env_ms(key: &str, default: Duration) -> Duration {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(default)
+}
+
+impl GuardCfg {
+    /// Defaults overridden by any `QNN_GUARD_*` env vars present.
+    /// Unparseable values fall back to the default rather than
+    /// panicking at serve time.
+    pub fn from_env() -> Self {
+        let d = Self::default();
+        Self {
+            target_wait: env_ms("QNN_GUARD_TARGET_MS", d.target_wait),
+            min_limit: std::env::var("QNN_GUARD_MIN_LIMIT")
+                .ok()
+                .and_then(|v| v.trim().parse().ok())
+                .filter(|&n: &usize| n >= 1)
+                .unwrap_or(d.min_limit),
+            adjust_interval: env_ms("QNN_GUARD_INTERVAL_MS", d.adjust_interval),
+            backoff: std::env::var("QNN_GUARD_BACKOFF")
+                .ok()
+                .and_then(|v| v.trim().parse::<f64>().ok())
+                .filter(|b| *b > 0.0 && *b < 1.0)
+                .unwrap_or(d.backoff),
+            shed_age: env_ms("QNN_GUARD_SHED_AGE_MS", d.shed_age),
+            degrade_after: std::env::var("QNN_GUARD_DEGRADE_AFTER")
+                .ok()
+                .and_then(|v| v.trim().parse().ok())
+                .filter(|&n: &u32| n >= 1)
+                .unwrap_or(d.degrade_after),
+            recover_hold: env_ms("QNN_GUARD_RECOVER_MS", d.recover_hold),
+            healthy_hold: env_ms("QNN_GUARD_HEALTHY_MS", d.healthy_hold),
+        }
+    }
+}
+
+/// Per-model health, driven by sustained limit pressure with hysteresis
+/// on both edges — a single slow batch never flips dispatch, and a
+/// single calm one never flips it back.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GuardState {
+    /// Primary engine serves; limit floats freely.
+    Healthy,
+    /// Sustained pressure: dispatch goes to the `@coarse` variant.
+    Degraded,
+    /// Pressure has been absent for `recover_hold`: primary serves
+    /// again as a probe; renewed pressure falls back to Degraded.
+    Recovering,
+}
+
+impl GuardState {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            1 => GuardState::Degraded,
+            2 => GuardState::Recovering,
+            _ => GuardState::Healthy,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            GuardState::Healthy => 0,
+            GuardState::Degraded => 1,
+            GuardState::Recovering => 2,
+        }
+    }
+
+    /// Stable scrape name.
+    pub fn name(self) -> &'static str {
+        match self {
+            GuardState::Healthy => "healthy",
+            GuardState::Degraded => "degraded",
+            GuardState::Recovering => "recovering",
+        }
+    }
+}
+
+/// The per-model adaptive concurrency limiter + guard state machine.
+/// All hot-path operations are lock-free atomics; the state machine
+/// advances lazily on [`Limiter::state`] reads (benign CAS races pick
+/// one winner, losers re-read).
+pub struct Limiter {
+    cfg: GuardCfg,
+    /// The configured `max_queue`: the hard bound the live limit floats
+    /// beneath, and the value `Busy` errors report as `max_queue`.
+    ceiling: usize,
+    /// Time origin for all `*_ns` fields.
+    epoch: Instant,
+    limit: AtomicUsize,
+    depth: AtomicUsize,
+    last_adjust_ns: AtomicU64,
+    /// Last instant pressure (over-target queue wait) was observed, as
+    /// ns since `epoch`. Both hysteresis holds measure from here.
+    pressure_ns: AtomicU64,
+    shrink_streak: AtomicU32,
+    state: AtomicU8,
+    state_since_ns: AtomicU64,
+    /// Lowest limit ever reached — the bench's witness that the limit
+    /// actually shrank.
+    limit_floor: AtomicUsize,
+    shrinks: AtomicU64,
+    reopens: AtomicU64,
+    shed_codel: AtomicU64,
+    shed_low: AtomicU64,
+    degraded_requests: AtomicU64,
+}
+
+impl Limiter {
+    /// A limiter starting wide open at `ceiling` (the configured
+    /// `max_queue`, clamped ≥ 1).
+    pub fn new(cfg: GuardCfg, ceiling: usize) -> Self {
+        let ceiling = ceiling.max(1);
+        Self {
+            ceiling,
+            epoch: Instant::now(),
+            limit: AtomicUsize::new(ceiling),
+            depth: AtomicUsize::new(0),
+            last_adjust_ns: AtomicU64::new(0),
+            pressure_ns: AtomicU64::new(0),
+            shrink_streak: AtomicU32::new(0),
+            state: AtomicU8::new(GuardState::Healthy.as_u8()),
+            state_since_ns: AtomicU64::new(0),
+            limit_floor: AtomicUsize::new(ceiling),
+            shrinks: AtomicU64::new(0),
+            reopens: AtomicU64::new(0),
+            shed_codel: AtomicU64::new(0),
+            shed_low: AtomicU64::new(0),
+            degraded_requests: AtomicU64::new(0),
+            cfg,
+        }
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// The hard admission ceiling (reported as `max_queue` in `Busy`).
+    pub fn ceiling(&self) -> usize {
+        self.ceiling
+    }
+
+    /// The live adaptive limit.
+    pub fn limit(&self) -> usize {
+        self.limit.load(Ordering::Relaxed)
+    }
+
+    /// Requests outstanding (queued or in service).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// The guard policy this limiter runs.
+    pub fn cfg(&self) -> &GuardCfg {
+        &self.cfg
+    }
+
+    /// CoDel shed threshold for an entry: low-priority traffic sheds at
+    /// half the configured age.
+    pub fn shed_age(&self, low_priority: bool) -> Duration {
+        if low_priority {
+            self.cfg.shed_age / 2
+        } else {
+            self.cfg.shed_age
+        }
+    }
+
+    /// Reserve an admission slot against the *live* limit (low-priority
+    /// requests see half of it, so they shed first under pressure).
+    /// `Err(depth)` means nothing was reserved; the caller answers
+    /// `Busy`. CAS loop so concurrent submitters never overshoot.
+    pub fn try_acquire(&self, low_priority: bool) -> Result<(), usize> {
+        let limit = self.limit.load(Ordering::Relaxed).min(self.ceiling);
+        let effective = if low_priority { limit / 2 } else { limit };
+        let mut cur = self.depth.load(Ordering::Relaxed);
+        loop {
+            if cur >= effective {
+                if low_priority {
+                    self.shed_low.fetch_add(1, Ordering::Relaxed);
+                }
+                return Err(cur);
+            }
+            match self.depth.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Ok(()),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Return `n` admission slots.
+    pub fn release(&self, n: usize) {
+        self.depth.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Feed one measured queue wait (typically the max across a
+    /// dispatched batch) into the AIMD controller. Rate-limited to one
+    /// limit adjustment per `adjust_interval`; pressure is recorded on
+    /// every call so the hysteresis holds see it.
+    pub fn observe(&self, queue_wait: Duration) {
+        let now = self.now_ns();
+        let over = queue_wait > self.cfg.target_wait;
+        if over {
+            self.pressure_ns.store(now, Ordering::Relaxed);
+        }
+        let prev = self.last_adjust_ns.load(Ordering::Relaxed);
+        if now.saturating_sub(prev) < self.cfg.adjust_interval.as_nanos() as u64 {
+            return;
+        }
+        if self
+            .last_adjust_ns
+            .compare_exchange(prev, now, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return; // someone else owns this tick
+        }
+        if over {
+            let lim = self.limit.load(Ordering::Relaxed);
+            let next = ((lim as f64) * self.cfg.backoff) as usize;
+            let next = next.min(lim.saturating_sub(1)).max(self.cfg.min_limit);
+            if next < lim {
+                self.limit.store(next, Ordering::Relaxed);
+                self.shrinks.fetch_add(1, Ordering::Relaxed);
+                self.limit_floor.fetch_min(next, Ordering::Relaxed);
+            }
+            // The streak counts pressure ticks even once the limit is
+            // pinned at min_limit — saturation at the floor is exactly
+            // when degrading matters most.
+            let streak = self.shrink_streak.fetch_add(1, Ordering::Relaxed) + 1;
+            if streak >= self.cfg.degrade_after
+                && self.state.load(Ordering::Relaxed) == GuardState::Healthy.as_u8()
+            {
+                self.enter(GuardState::Degraded, now);
+            }
+        } else {
+            self.shrink_streak.store(0, Ordering::Relaxed);
+            let lim = self.limit.load(Ordering::Relaxed);
+            if lim < self.ceiling {
+                self.limit.store(lim + 1, Ordering::Relaxed);
+                self.reopens.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn enter(&self, next: GuardState, now: u64) {
+        self.state.store(next.as_u8(), Ordering::Relaxed);
+        self.state_since_ns.store(now, Ordering::Relaxed);
+        if next == GuardState::Healthy {
+            self.shrink_streak.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Current guard state, advancing the hysteresis clock lazily: the
+    /// recover/healthy holds are evaluated against wall time on read,
+    /// so an idle model heals without needing traffic to drive ticks.
+    pub fn state(&self) -> GuardState {
+        let now = self.now_ns();
+        let cur = GuardState::from_u8(self.state.load(Ordering::Relaxed));
+        let since = self.state_since_ns.load(Ordering::Relaxed);
+        let pressure = self.pressure_ns.load(Ordering::Relaxed);
+        match cur {
+            GuardState::Healthy => GuardState::Healthy,
+            GuardState::Degraded => {
+                // Hold until pressure has been absent for recover_hold,
+                // measured from whichever is later: the last pressure
+                // or entering the state.
+                let calm_since = pressure.max(since);
+                if now.saturating_sub(calm_since) >= self.cfg.recover_hold.as_nanos() as u64 {
+                    self.enter(GuardState::Recovering, now);
+                    GuardState::Recovering
+                } else {
+                    GuardState::Degraded
+                }
+            }
+            GuardState::Recovering => {
+                if pressure > since {
+                    // The probe found renewed pressure: back to coarse.
+                    self.enter(GuardState::Degraded, now);
+                    GuardState::Degraded
+                } else if now.saturating_sub(since) >= self.cfg.healthy_hold.as_nanos() as u64 {
+                    self.enter(GuardState::Healthy, now);
+                    GuardState::Healthy
+                } else {
+                    GuardState::Recovering
+                }
+            }
+        }
+    }
+
+    /// The `Busy` retry hint: the operator's pinned value if set,
+    /// otherwise an estimate of when a slot frees up — the queue-wait
+    /// target scaled by how oversubscribed the limiter is, clamped to
+    /// [1 ms, 10 s].
+    pub fn retry_hint_ms(&self, configured: Option<Duration>) -> u64 {
+        if let Some(d) = configured {
+            return d.as_millis() as u64;
+        }
+        let limit = self.limit.load(Ordering::Relaxed).max(1) as u64;
+        let depth = self.depth.load(Ordering::Relaxed) as u64;
+        let target = (self.cfg.target_wait.as_millis() as u64).max(1);
+        (target * (depth + 1) / limit).clamp(1, 10_000)
+    }
+
+    /// Count a dispatch that the guard redirected to the coarse
+    /// variant.
+    pub fn note_degraded_dispatch(&self) {
+        self.degraded_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count an entry shed for queue age at batch formation.
+    pub fn record_codel_shed(&self) {
+        self.shed_codel.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Dispatches redirected to coarse so far.
+    pub fn degraded_requests(&self) -> u64 {
+        self.degraded_requests.load(Ordering::Relaxed)
+    }
+
+    /// Limit shrink events so far.
+    pub fn shrinks(&self) -> u64 {
+        self.shrinks.load(Ordering::Relaxed)
+    }
+
+    /// Limit re-open events so far.
+    pub fn reopens(&self) -> u64 {
+        self.reopens.load(Ordering::Relaxed)
+    }
+
+    /// Lowest limit ever reached.
+    pub fn limit_floor(&self) -> usize {
+        self.limit_floor.load(Ordering::Relaxed)
+    }
+
+    /// Entries shed for queue age so far.
+    pub fn codel_sheds(&self) -> u64 {
+        self.shed_codel.load(Ordering::Relaxed)
+    }
+
+    /// Append this limiter's `qnn.guard.<model>.*` lines to a registry
+    /// scrape.
+    pub fn render(&self, out: &mut String, model: &str) {
+        use super::registry::kv;
+        let base = format!("qnn.guard.{model}");
+        kv(out, &format!("{base}.state"), self.state().as_u8() as u64);
+        kv(out, &format!("{base}.limit"), self.limit() as u64);
+        kv(out, &format!("{base}.limit_ceiling"), self.ceiling as u64);
+        kv(out, &format!("{base}.limit_floor"), self.limit_floor() as u64);
+        kv(out, &format!("{base}.depth"), self.depth() as u64);
+        kv(out, &format!("{base}.shrinks"), self.shrinks());
+        kv(out, &format!("{base}.reopens"), self.reopens());
+        kv(out, &format!("{base}.shed_codel"), self.codel_sheds());
+        kv(out, &format!("{base}.shed_low_priority"), self.shed_low.load(Ordering::Relaxed));
+        kv(out, &format!("{base}.degraded_requests"), self.degraded_requests());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GuardCfg {
+        GuardCfg {
+            target_wait: Duration::from_millis(10),
+            min_limit: 1,
+            adjust_interval: Duration::from_millis(0),
+            backoff: 0.5,
+            shed_age: Duration::from_millis(100),
+            degrade_after: 3,
+            recover_hold: Duration::from_millis(40),
+            healthy_hold: Duration::from_millis(40),
+        }
+    }
+
+    #[test]
+    fn acquire_respects_live_limit_and_low_priority_sees_half() {
+        let l = Limiter::new(cfg(), 8);
+        for _ in 0..8 {
+            l.try_acquire(false).unwrap();
+        }
+        assert_eq!(l.try_acquire(false), Err(8));
+        l.release(8);
+        assert_eq!(l.depth(), 0);
+        // Low priority admits against limit/2.
+        for _ in 0..4 {
+            l.try_acquire(true).unwrap();
+        }
+        assert_eq!(l.try_acquire(true), Err(4));
+        l.try_acquire(false).unwrap(); // normal traffic still fits
+        l.release(5);
+    }
+
+    #[test]
+    fn aimd_shrinks_on_pressure_and_reopens_when_calm() {
+        let l = Limiter::new(cfg(), 16);
+        l.observe(Duration::from_millis(50)); // over target → 16*0.5 = 8
+        assert_eq!(l.limit(), 8);
+        l.observe(Duration::from_millis(50));
+        assert_eq!(l.limit(), 4);
+        assert_eq!(l.limit_floor(), 4);
+        assert!(l.shrinks() >= 2);
+        // Calm observations re-open additively.
+        l.observe(Duration::from_millis(1));
+        l.observe(Duration::from_millis(1));
+        assert_eq!(l.limit(), 6);
+        assert!(l.reopens() >= 2);
+        // Never shrinks below min_limit, never opens past the ceiling.
+        for _ in 0..20 {
+            l.observe(Duration::from_millis(50));
+        }
+        assert_eq!(l.limit(), 1);
+        for _ in 0..40 {
+            l.observe(Duration::from_millis(1));
+        }
+        assert_eq!(l.limit(), 16);
+    }
+
+    #[test]
+    fn adjustments_are_rate_limited() {
+        let c = GuardCfg { adjust_interval: Duration::from_secs(60), ..cfg() };
+        let l = Limiter::new(c, 16);
+        // First observation may land inside the first interval (epoch
+        // starts the clock), so at most one adjustment total.
+        for _ in 0..10 {
+            l.observe(Duration::from_millis(50));
+        }
+        assert!(l.shrinks() <= 1, "rate limit ignored: {} shrinks", l.shrinks());
+    }
+
+    #[test]
+    fn sustained_pressure_degrades_then_recovers_with_hysteresis() {
+        let l = Limiter::new(cfg(), 16);
+        // Two pressure ticks: still healthy (degrade_after = 3).
+        l.observe(Duration::from_millis(50));
+        l.observe(Duration::from_millis(50));
+        assert_eq!(l.state(), GuardState::Healthy);
+        l.observe(Duration::from_millis(50));
+        assert_eq!(l.state(), GuardState::Degraded);
+        // Still degraded while pressure keeps arriving.
+        std::thread::sleep(Duration::from_millis(25));
+        l.observe(Duration::from_millis(50));
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(l.state(), GuardState::Degraded);
+        // Calm for recover_hold → probing.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(l.state(), GuardState::Recovering);
+        // Calm through healthy_hold → healthy, streak reset.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(l.state(), GuardState::Healthy);
+        // One new pressure tick doesn't re-trip (hysteresis).
+        l.observe(Duration::from_millis(50));
+        assert_eq!(l.state(), GuardState::Healthy);
+    }
+
+    #[test]
+    fn recovering_probe_falls_back_on_renewed_pressure() {
+        let l = Limiter::new(cfg(), 16);
+        for _ in 0..3 {
+            l.observe(Duration::from_millis(50));
+        }
+        assert_eq!(l.state(), GuardState::Degraded);
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(l.state(), GuardState::Recovering);
+        // Pressure during the probe → straight back to Degraded.
+        l.observe(Duration::from_millis(50));
+        assert_eq!(l.state(), GuardState::Degraded);
+    }
+
+    #[test]
+    fn retry_hint_is_pinned_or_adaptive() {
+        let l = Limiter::new(cfg(), 8);
+        assert_eq!(l.retry_hint_ms(Some(Duration::from_millis(7))), 7);
+        // Adaptive: target 10ms, depth 0, limit 8 → 10*1/8 → clamped 1.
+        assert_eq!(l.retry_hint_ms(None), 1);
+        for _ in 0..8 {
+            l.try_acquire(false).unwrap();
+        }
+        // depth 8, limit 8 → 10*9/8 = 11.
+        assert_eq!(l.retry_hint_ms(None), 11);
+        l.release(8);
+    }
+
+    #[test]
+    fn render_emits_guard_lines() {
+        let l = Limiter::new(cfg(), 8);
+        l.observe(Duration::from_millis(50));
+        l.note_degraded_dispatch();
+        l.record_codel_shed();
+        let mut out = String::new();
+        l.render(&mut out, "digits");
+        assert!(out.contains("qnn.guard.digits.limit 4\n"), "{out}");
+        assert!(out.contains("qnn.guard.digits.limit_ceiling 8\n"), "{out}");
+        assert!(out.contains("qnn.guard.digits.shrinks 1\n"), "{out}");
+        assert!(out.contains("qnn.guard.digits.degraded_requests 1\n"), "{out}");
+        assert!(out.contains("qnn.guard.digits.shed_codel 1\n"), "{out}");
+        for line in out.lines() {
+            assert_eq!(line.split_whitespace().count(), 2, "{line:?}");
+        }
+    }
+
+    #[test]
+    fn from_env_falls_back_on_garbage() {
+        // Only uses vars that are almost certainly unset; the point is
+        // the defaults path doesn't panic.
+        let c = GuardCfg::from_env();
+        assert!(c.min_limit >= 1);
+        assert!(c.backoff > 0.0 && c.backoff < 1.0);
+    }
+}

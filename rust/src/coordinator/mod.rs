@@ -20,6 +20,7 @@
 pub mod batcher;
 pub mod engine;
 pub mod fleet;
+pub mod guard;
 pub mod metrics;
 pub mod net;
 pub mod pjrt_engine;
@@ -36,6 +37,7 @@ pub use engine::{load_backend, Backend, FloatNetEngine, LutEngine};
 /// own pace.
 pub use engine::Backend as Engine;
 pub use fleet::{Fleet, FleetCfg, FleetError, FleetMetrics, FleetSnapshot};
+pub use guard::{GuardCfg, GuardState, Limiter};
 pub use metrics::{Metrics, MetricsSnapshot, Outcome, OutcomeCounters, LATENCY_WINDOW};
 pub use net::{
     ClientError, HealthStatus, NetCfg, NetClient, NetClientCfg, NetServer, RemoteError,

@@ -15,9 +15,13 @@
 //!   request id. A reader thread parses and submits; a writer thread
 //!   owns the socket's write half and a reused encode buffer.
 //! * **Admission control.** Submission goes through the in-process
-//!   server's bounded queue; a full queue answers with a `Busy` error
-//!   frame immediately instead of queueing unboundedly — load sheds at
-//!   the socket, clients back off.
+//!   server's adaptive guard ([`super::guard`]): an AIMD concurrency
+//!   limit floating under the configured ceiling, CoDel-style queue-age
+//!   shedding, and a wire priority bit so low-priority traffic sheds
+//!   first. Rejections answer with a `Busy` frame carrying an adaptive
+//!   retry hint — load sheds at the socket, clients back off. A
+//!   degraded primary with a paired `model@coarse` variant serves
+//!   through the pair, flagged on the response frame.
 //! * **Graceful drain.** [`NetServer::shutdown`] stops accepting,
 //!   half-closes every connection's read side, lets writers flush a
 //!   response (or clean error frame) for every request already read,
@@ -91,6 +95,9 @@ enum WriteItem {
         /// qnn-scope context: the writer stamps the flush and retires
         /// the trace once the response frame hits the socket.
         trace: trace::Ctx,
+        /// The guard redirected this request to the model's coarse
+        /// variant; the response frame carries [`wire::FLAG_DEGRADED`].
+        degraded: bool,
     },
     Error {
         req_id: u64,
@@ -412,10 +419,11 @@ fn serve_conn(
         } else {
             trace::UNTRACED
         };
-        let (req_id, model, dtype, deadline_ms, payload) = match wire::parse_frame(&rbuf) {
-            Ok(Frame::Request { req_id, model, dtype, deadline_ms, payload }) => {
+        let parsed = wire::parse_frame(&rbuf);
+        let (req_id, model, dtype, deadline_ms, payload, low_priority) = match parsed {
+            Ok(Frame::Request { req_id, model, dtype, deadline_ms, payload, low_priority }) => {
                 trace::stamp(tctx, trace::Stage::Decode);
-                (req_id, model, dtype, deadline_ms, payload)
+                (req_id, model, dtype, deadline_ms, payload, low_priority)
             }
             Ok(Frame::HealthPing { req_id }) => {
                 // Answer without touching any engine: drain state,
@@ -542,8 +550,11 @@ fn serve_conn(
             }
             continue;
         }
-        let handle = match router.handle(model) {
-            Ok(h) => h,
+        // Guard-aware routing: a degraded primary with a registered
+        // coarse pair serves through the pair, and the response frame
+        // says so.
+        let (handle, degraded) = match router.dispatch(model) {
+            Ok(hd) => hd,
             Err(_) => {
                 // A miss on a model this replica should own is a
                 // divergence signal — the repair loop hooks this.
@@ -588,8 +599,8 @@ fn serve_conn(
         // arrival so server-side queueing counts against it.
         let deadline = (deadline_ms > 0)
             .then(|| arrival + Duration::from_millis(deadline_ms as u64));
-        let item = match handle.submit_traced(payload, deadline, tctx) {
-            Ok(rx) => WriteItem::Pending { req_id, rx, trace: tctx },
+        let item = match handle.submit_opts(payload, deadline, tctx, low_priority) {
+            Ok(rx) => WriteItem::Pending { req_id, rx, trace: tctx, degraded },
             Err(e) => {
                 trace::finish(tctx);
                 WriteItem::Error {
@@ -619,10 +630,12 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<WriteItem>) {
     while let Ok(item) = rx.recv() {
         let mut tctx = trace::UNTRACED;
         match item {
-            WriteItem::Pending { req_id, rx, trace: t } => {
+            WriteItem::Pending { req_id, rx, trace: t, degraded } => {
                 tctx = t;
                 match rx.recv() {
-                    Ok(Ok(out)) => wire::encode_response_f32(&mut wbuf, req_id, &out),
+                    Ok(Ok(out)) => {
+                        wire::encode_response_f32_opts(&mut wbuf, req_id, &out, degraded)
+                    }
                     // The batcher resolved it with a typed error
                     // (deadline shed, for instance) — forward it on the
                     // wire.
@@ -813,6 +826,13 @@ pub struct NetClient {
     /// Deadline budget stamped on every outgoing request (0 on the wire
     /// when unset). The server sheds work whose budget expires queued.
     deadline: Option<Duration>,
+    /// Priority bit stamped on every outgoing request: low-priority
+    /// traffic is admitted against half the guard limit and shed first
+    /// under overload ([`wire::FLAG_LOW_PRIORITY`]).
+    low_priority: bool,
+    /// Responses seen with the degraded flag — served by a coarse
+    /// variant while the primary was overloaded.
+    degraded_seen: u64,
 }
 
 impl NetClient {
@@ -866,12 +886,26 @@ impl NetClient {
             wbuf: Vec::new(),
             next_id: 1,
             deadline: None,
+            low_priority: false,
+            degraded_seen: 0,
         })
     }
 
     /// Set (or clear) the deadline budget stamped on future requests.
     pub fn set_deadline(&mut self, deadline: Option<Duration>) {
         self.deadline = deadline;
+    }
+
+    /// Mark future requests as low priority: they are admitted against
+    /// half the server's live limit and shed first under overload.
+    pub fn set_low_priority(&mut self, low: bool) {
+        self.low_priority = low;
+    }
+
+    /// How many responses so far carried the degraded flag (served by a
+    /// coarse variant while the primary was overloaded).
+    pub fn degraded_seen(&self) -> u64 {
+        self.degraded_seen
     }
 
     fn deadline_ms(&self) -> u32 {
@@ -884,7 +918,8 @@ impl NetClient {
     pub fn send_f32(&mut self, model: &str, input: &[f32]) -> Result<u64, ClientError> {
         let id = self.next_id;
         self.next_id += 1;
-        wire::encode_request_f32(&mut self.wbuf, id, model, input, self.deadline_ms());
+        let (dl, low) = (self.deadline_ms(), self.low_priority);
+        wire::encode_request_f32_opts(&mut self.wbuf, id, model, input, dl, low);
         self.stream.write_all(&self.wbuf)?;
         Ok(id)
     }
@@ -894,7 +929,8 @@ impl NetClient {
     pub fn send_qidx(&mut self, model: &str, idx: &[u8]) -> Result<u64, ClientError> {
         let id = self.next_id;
         self.next_id += 1;
-        wire::encode_request_qidx(&mut self.wbuf, id, model, idx, self.deadline_ms());
+        let (dl, low) = (self.deadline_ms(), self.low_priority);
+        wire::encode_request_qidx_opts(&mut self.wbuf, id, model, idx, dl, low);
         self.stream.write_all(&self.wbuf)?;
         Ok(id)
     }
@@ -948,13 +984,28 @@ impl NetClient {
     /// Receive the next response frame (in request order): the request
     /// id it answers plus the outputs or the server's typed error.
     pub fn recv_response(&mut self) -> Result<(u64, Result<Vec<f32>, RemoteError>), ClientError> {
+        let (req_id, _, res) = self.recv_response_tagged()?;
+        Ok((req_id, res))
+    }
+
+    /// [`recv_response`](NetClient::recv_response) plus the response's
+    /// degraded flag: `true` means the server's guard redirected this
+    /// request to the model's coarse variant. Also accumulates
+    /// [`degraded_seen`](NetClient::degraded_seen).
+    #[allow(clippy::type_complexity)]
+    pub fn recv_response_tagged(
+        &mut self,
+    ) -> Result<(u64, bool, Result<Vec<f32>, RemoteError>), ClientError> {
         self.read_next_frame()?;
         let proto = |e: anyhow::Error| ClientError::Protocol(format!("{e:#}"));
         match wire::parse_frame(&self.rbuf).map_err(proto)? {
-            Frame::Response { req_id, payload } => {
+            Frame::Response { req_id, degraded, payload } => {
                 let mut out = Vec::new();
                 wire::payload_f32s_into(payload, &mut out).map_err(proto)?;
-                Ok((req_id, Ok(out)))
+                if degraded {
+                    self.degraded_seen += 1;
+                }
+                Ok((req_id, degraded, Ok(out)))
             }
             Frame::Error {
                 req_id,
@@ -963,6 +1014,7 @@ impl NetClient {
                 msg,
             } => Ok((
                 req_id,
+                false,
                 Err(RemoteError {
                     code,
                     retry_after_ms,
@@ -1423,7 +1475,7 @@ mod tests {
                     max_batch: 1,
                     max_queue: 1,
                     workers: 1,
-                    busy_retry_after: Duration::from_millis(9),
+                    busy_retry_after: Some(Duration::from_millis(9)),
                     ..ServerCfg::default()
                 },
             ),
@@ -1448,6 +1500,41 @@ mod tests {
         // And the retrying helper rides the hint to eventual success.
         let out = c.infer_f32_retrying("slow", &[2.5], 64).unwrap();
         assert_eq!(out, vec![2.5]);
+        net.shutdown();
+    }
+
+    #[test]
+    fn degraded_responses_carry_the_flag_over_the_wire() {
+        use crate::coordinator::guard::GuardCfg;
+        // One pressure tick trips Degraded; a long recover hold keeps
+        // the primary pinned there for the whole test.
+        let guard = GuardCfg {
+            target_wait: Duration::from_millis(1),
+            adjust_interval: Duration::ZERO,
+            degrade_after: 1,
+            recover_hold: Duration::from_secs(60),
+            ..GuardCfg::default()
+        };
+        let cfg = ServerCfg { guard, ..ServerCfg::default() };
+        let router = Router::new();
+        router.register("sum", Server::start(Arc::new(SumEngine), cfg.clone()));
+        router.register("sum@coarse", Server::start(Arc::new(SumEngine), cfg));
+        router
+            .handle("sum")
+            .unwrap()
+            .limiter()
+            .observe(Duration::from_millis(50));
+        let net = NetServer::bind("127.0.0.1:0", router).unwrap();
+        let mut c = NetClient::connect(net.local_addr()).unwrap();
+        let id = c.send_f32("sum", &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let (rid, degraded, res) = c.recv_response_tagged().unwrap();
+        assert_eq!(rid, id);
+        assert!(degraded, "degraded primary with a pair must flag the response");
+        assert_eq!(res.unwrap(), vec![10.0]);
+        assert_eq!(c.degraded_seen(), 1);
+        // The low-priority bit parses and serves normally when idle.
+        c.set_low_priority(true);
+        assert_eq!(c.infer_f32("sum", &[1.0; 4]).unwrap(), vec![4.0]);
         net.shutdown();
     }
 

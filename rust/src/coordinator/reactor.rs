@@ -36,14 +36,16 @@
 
 use super::batcher::{Batcher, BatcherCfg, BatcherHandle, Completion, CompletionSink};
 use super::engine::Backend;
+use super::guard::GuardState;
 use super::net::{code_for, retry_hint};
 use super::registry;
-use super::router::{scan_artifact_dir, ArtifactStore};
+use super::router::{coarse_variant, scan_artifact_dir, ArtifactStore};
 use super::server::Payload;
 use super::wire::{self, Dtype, ErrCode, Frame, FrameAssembler};
 use crate::util::fault::{self, FrameFault};
 use crate::util::poll::{Event, Interest, Poller, WakePipe};
 use crate::util::trace;
+use crate::util::watchdog;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
@@ -250,8 +252,20 @@ impl ReactorServer {
                     &format!("qnn.reactor.{name}.queued"),
                     handle.queued() as u64,
                 );
+                handle.limiter().render(out, &format!("reactor.{name}"));
             }
         });
+
+        // Pair each model with its registered coarse variant once at
+        // bind: dispatch checks a precomputed name instead of
+        // formatting one per request.
+        let coarse: BTreeMap<String, String> = handles
+            .keys()
+            .filter_map(|name| {
+                let c = coarse_variant(name);
+                (handles.contains_key(&c) && *name != c).then(|| (name.clone(), c))
+            })
+            .collect();
 
         let stop = Arc::new(AtomicBool::new(false));
         let soft_drain = Arc::new(AtomicBool::new(false));
@@ -263,6 +277,7 @@ impl ReactorServer {
                 poller,
                 listener,
                 handles: handles.clone(),
+                coarse,
                 completions,
                 wake: Arc::clone(&wake),
                 stop: Arc::clone(&stop),
@@ -331,6 +346,12 @@ impl ReactorServer {
     /// Requests outstanding across every model's bounded queue.
     pub fn queued_total(&self) -> usize {
         self.handles.values().map(|h| h.queued()).sum()
+    }
+
+    /// Batcher handle for one model — the route to its admission
+    /// [`Limiter`](super::guard::Limiter) for tests and chaos drivers.
+    pub fn handle(&self, model: &str) -> Option<&BatcherHandle> {
+        self.handles.get(model)
     }
 
     /// Per-model serving metrics (name, metrics) — mean batch size here
@@ -409,6 +430,10 @@ struct ReactorLoop {
     poller: Poller,
     listener: TcpListener,
     handles: BTreeMap<String, BatcherHandle>,
+    /// Model → its registered `@coarse` pair ([`coarse_variant`]),
+    /// precomputed at bind; dispatch flips here while a primary's guard
+    /// is Degraded.
+    coarse: BTreeMap<String, String>,
     completions: Arc<Mutex<Vec<Completion>>>,
     wake: Arc<WakePipe>,
     stop: Arc<AtomicBool>,
@@ -450,8 +475,10 @@ impl ReactorLoop {
         // The listener and wake pipe were registered in `bind_with`
         // (before this thread existed) so registration failures surface
         // to the caller.
+        let heart = watchdog::register("qnn-reactor");
         let mut events: Vec<Event> = Vec::new();
         loop {
+            heart.beat();
             if self.stop.load(Ordering::SeqCst) {
                 if self.draining_since.is_none() {
                     self.begin_drain();
@@ -474,6 +501,10 @@ impl ReactorLoop {
             // Bounded wait so timers (sweeps, drain deadline) always
             // get a look even on a silent fleet of sockets.
             let _ = self.poller.wait(&mut events, Some(Duration::from_millis(25)));
+            // Active only while handling work: a quiet poll loop is
+            // idle, not stalled, so only this span counts against the
+            // watchdog deadline.
+            let _working = heart.busy();
             for i in 0..events.len() {
                 let ev = events[i];
                 match ev.token {
@@ -698,7 +729,7 @@ impl ReactorLoop {
             trace::UNTRACED
         };
         match wire::parse_frame(&fbuf) {
-            Ok(Frame::Request { req_id, model, dtype, deadline_ms, payload }) => {
+            Ok(Frame::Request { req_id, model, dtype, deadline_ms, payload, low_priority }) => {
                 trace::stamp(tctx, trace::Stage::Decode);
                 if self.soft_drain.load(Ordering::SeqCst) {
                     // Announced drain: accepted work keeps resolving,
@@ -749,8 +780,26 @@ impl ReactorLoop {
                             .then(|| arrival + Duration::from_millis(deadline_ms as u64));
                         // By-ref lookup: a handle clone per frame is an
                         // avoidable allocation on the hot path.
-                        let h = self.handles.get(model).expect("checked above");
-                        match h.submit_traced(conn.token, req_id, payload, deadline, tctx) {
+                        let mut target = model;
+                        let mut degraded = false;
+                        if let Some(cname) = self.coarse.get(model) {
+                            let primary = self.handles.get(model).expect("checked above");
+                            if primary.limiter().state() == GuardState::Degraded {
+                                primary.limiter().note_degraded_dispatch();
+                                target = cname.as_str();
+                                degraded = true;
+                            }
+                        }
+                        let h = self.handles.get(target).expect("checked above");
+                        match h.submit_opts(
+                            conn.token,
+                            req_id,
+                            payload,
+                            deadline,
+                            tctx,
+                            low_priority,
+                            degraded,
+                        ) {
                             Ok(()) => conn.inflight += 1,
                             Err(e) => {
                                 let msg = e.to_string();
@@ -948,12 +997,12 @@ impl ReactorLoop {
         for c in batch {
             // A completion for a connection that died in the meantime
             // has nowhere to go; its work is simply discarded.
-            let Completion { conn: token, req_id, result, payload, trace: tctx } = c;
+            let Completion { conn: token, req_id, result, payload, trace: tctx, degraded } = c;
             self.with_conn(token, |lp, conn| {
                 conn.inflight = conn.inflight.saturating_sub(1);
                 match result {
                     Ok(out) => {
-                        wire::encode_response_f32(&mut lp.ebuf, req_id, &out);
+                        wire::encode_response_f32_opts(&mut lp.ebuf, req_id, &out, degraded);
                         lp.append_wire(conn);
                         lp.recycle_f32(out);
                     }
@@ -1208,7 +1257,7 @@ mod tests {
         s.write_all(&buf).unwrap();
         assert!(wire::read_frame(&mut reader, &mut rbuf).unwrap());
         match wire::parse_frame(&rbuf).unwrap() {
-            Frame::Response { req_id, payload } => {
+            Frame::Response { req_id, payload, .. } => {
                 assert_eq!(req_id, 2);
                 let mut out = Vec::new();
                 wire::payload_f32s_into(payload, &mut out).unwrap();
@@ -1249,7 +1298,8 @@ mod tests {
                     max_delay: Duration::from_millis(0),
                     workers: 1,
                     max_queue: 2,
-                    busy_retry_after: Duration::from_millis(9),
+                    busy_retry_after: Some(Duration::from_millis(9)),
+                    ..BatcherCfg::default()
                 },
                 ..ReactorCfg::default()
             },
@@ -1278,6 +1328,53 @@ mod tests {
         assert!(ok >= 1, "nothing admitted");
         assert!(busy >= 1, "admission bound never triggered");
         assert_eq!(ok + busy, 10);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn degraded_primary_dispatches_to_its_coarse_pair() {
+        use crate::coordinator::guard::GuardCfg;
+        // One observation over target trips Degraded; the long hold
+        // pins the state for the duration of the test.
+        let guard = GuardCfg {
+            target_wait: Duration::from_millis(1),
+            adjust_interval: Duration::ZERO,
+            degrade_after: 1,
+            recover_hold: Duration::from_secs(60),
+            ..GuardCfg::default()
+        };
+        let srv = ReactorServer::bind_with(
+            "127.0.0.1:0",
+            vec![
+                ("sum".to_string(), Arc::new(SumEngine) as Arc<dyn Backend>),
+                ("sum@coarse".to_string(), Arc::new(SumEngine)),
+            ],
+            ReactorCfg {
+                batch: BatcherCfg { guard, ..BatcherCfg::default() },
+                ..ReactorCfg::default()
+            },
+        )
+        .unwrap();
+        let mut c = NetClient::connect(srv.local_addr()).unwrap();
+        let id = c.send_f32("sum", &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let (rid, degraded, res) = c.recv_response_tagged().unwrap();
+        assert_eq!(rid, id);
+        assert!(!degraded, "healthy primary must serve directly");
+        assert_eq!(res.unwrap(), vec![10.0]);
+        // Trip the primary's guard; the pair keeps answering, flagged.
+        let lim = srv.handle("sum").unwrap().limiter();
+        lim.observe(Duration::from_millis(50));
+        let id = c.send_f32("sum", &[1.0, 1.0, 1.0, 1.0]).unwrap();
+        let (rid, degraded, res) = c.recv_response_tagged().unwrap();
+        assert_eq!(rid, id);
+        assert!(degraded, "degraded primary must route to the coarse pair");
+        assert_eq!(res.unwrap(), vec![4.0]);
+        assert_eq!(c.degraded_seen(), 1);
+        assert_eq!(lim.degraded_requests(), 1);
+        let text = c.fetch_stats().unwrap();
+        assert!(text.contains("qnn.guard.reactor.sum.state 1\n"), "{text}");
+        assert!(text.contains("qnn.guard.reactor.sum.degraded_requests 1\n"), "{text}");
+        assert!(text.contains("qnn.guard.reactor.sum@coarse.state 0\n"), "{text}");
         srv.shutdown();
     }
 

@@ -37,6 +37,7 @@
 
 use crate::util::fault;
 use crate::util::trace;
+use crate::util::watchdog;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -138,6 +139,11 @@ impl Registry {
         kv(&mut out, "qnn.trace.started", started);
         kv(&mut out, "qnn.trace.completed", completed);
         kv(&mut out, "qnn.trace.dropped", dropped);
+        let (hearts, stalls, recoveries, worker_panics) = watchdog::counters();
+        kv(&mut out, "qnn.watchdog.hearts", hearts);
+        kv(&mut out, "qnn.watchdog.stalls", stalls);
+        kv(&mut out, "qnn.watchdog.recoveries", recoveries);
+        kv(&mut out, "qnn.watchdog.worker_panics", worker_panics);
         out
     }
 }

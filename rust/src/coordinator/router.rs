@@ -31,6 +31,7 @@
 //!   the health pong carries.
 
 use super::engine::{load_backend, load_backend_as, Backend};
+use super::guard::{GuardState, Limiter};
 use super::repair::RepairStats;
 use super::server::{Server, ServerCfg, ServerHandle};
 use super::wire::{inventory_digest, ManifestEntry};
@@ -133,6 +134,14 @@ impl ArtifactStore {
     }
 }
 
+/// The paired coarse variant's model name: `model@coarse`. The guard
+/// degrades dispatch to this name when the primary is overloaded
+/// ([`Router::dispatch`]); `@` passes the install-name filter, so the
+/// pair can be hot-installed like any other artifact.
+pub fn coarse_variant(model: &str) -> String {
+    format!("{model}@coarse")
+}
+
 /// Move a bad artifact into `dir/quarantine/` with a `<file>.reason`
 /// sidecar. Best-effort: a quarantine that fails (exotic permissions)
 /// must not take the boot down, so errors are folded into the reason
@@ -142,14 +151,40 @@ fn quarantine(dir: &Path, path: &Path, file: &str, reason: &str) -> String {
     let attempt = std::fs::create_dir_all(&qdir)
         .map_err(anyhow::Error::from)
         .and_then(|_| {
-            std::fs::rename(path, qdir.join(file))?;
-            std::fs::write(qdir.join(format!("{file}.reason")), reason)?;
-            Ok(())
+            let slot = quarantine_slot(&qdir, file);
+            std::fs::rename(path, &slot)?;
+            std::fs::write(sidecar_of(&slot), reason)?;
+            Ok(slot)
         });
     match attempt {
-        Ok(()) => format!("{reason} [quarantined to {}]", qdir.join(file).display()),
+        Ok(slot) => format!("{reason} [quarantined to {}]", slot.display()),
         Err(e) => format!("{reason} [quarantine failed: {e}]"),
     }
+}
+
+/// First free quarantine path for `file`: the bare name when unused,
+/// else `<file>.2`, `<file>.3`, … — earlier casualties (and their
+/// `.reason` sidecars) are evidence and must never be overwritten by a
+/// later file arriving under the same name.
+fn quarantine_slot(qdir: &Path, file: &str) -> PathBuf {
+    let bare = qdir.join(file);
+    if !bare.exists() && !sidecar_of(&bare).exists() {
+        return bare;
+    }
+    for n in 2u32.. {
+        let cand = qdir.join(format!("{file}.{n}"));
+        if !cand.exists() && !sidecar_of(&cand).exists() {
+            return cand;
+        }
+    }
+    unreachable!("quarantine suffixes exhausted")
+}
+
+/// The `.reason` sidecar path next to a quarantined file.
+fn sidecar_of(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_owned();
+    s.push(".reason");
+    PathBuf::from(s)
 }
 
 pub(crate) struct ScannedDir {
@@ -349,6 +384,45 @@ impl Router {
             .ok_or_else(|| anyhow::anyhow!("no model {name:?} (have {:?})", self.models()))
     }
 
+    /// The guard-aware routing decision: resolve `model` to the handle
+    /// requests should actually run on. Returns `(handle, degraded)`:
+    /// when the primary's guard is [`GuardState::Degraded`] **and** a
+    /// paired coarse variant (`model@coarse`, see [`coarse_variant`]) is
+    /// registered, the coarse handle is returned with `degraded = true`
+    /// and the redirect is tallied on the primary's limiter.
+    /// `Recovering` keeps dispatching to the primary — that is the
+    /// probe that tells the guard whether pressure really drained — and
+    /// a model without a pair always serves itself.
+    pub fn dispatch(&self, model: &str) -> Result<(ServerHandle, bool)> {
+        let servers = self.inner.servers.read().unwrap();
+        let primary = match servers.get(model) {
+            Some(s) => s.handle(),
+            None => {
+                let have: Vec<String> = servers.keys().cloned().collect();
+                anyhow::bail!("no model {model:?} (have {have:?})");
+            }
+        };
+        if primary.limiter().state() == GuardState::Degraded {
+            if let Some(coarse) = servers.get(&coarse_variant(model)) {
+                primary.limiter().note_degraded_dispatch();
+                return Ok((coarse.handle(), true));
+            }
+        }
+        Ok((primary, false))
+    }
+
+    /// Point-in-time `(name, limiter)` for every served model — the
+    /// guard slice of the registry scrape.
+    pub fn limiters(&self) -> Vec<(String, Arc<Limiter>)> {
+        self.inner
+            .servers
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(name, s)| (name.clone(), Arc::clone(s.handle().limiter())))
+            .collect()
+    }
+
     /// Submission handles for every served model (cheap clones) — a
     /// point-in-time snapshot of the routing table. Front-ends that
     /// must observe hot installs look up per request via
@@ -519,12 +593,17 @@ impl Router {
 
     /// Render this router's slice of the metrics registry: one block per
     /// model (`qnn.<prefix>.<model>.*`, see
-    /// [`super::registry::render_model`]) plus the quarantine count and
-    /// the last repair-pass counters.
+    /// [`super::registry::render_model`]), each model's guard lines
+    /// (`qnn.guard.<prefix>.<model>.*` — prefixed so two front-ends
+    /// serving the same model in one process stay distinguishable),
+    /// plus the quarantine count and the last repair-pass counters.
     pub fn render_registry(&self, out: &mut String, prefix: &str) {
         use super::registry::kv;
         for (name, metrics, backend) in self.model_stats() {
             super::registry::render_model(out, prefix, &name, &metrics, Some(backend.as_ref()));
+        }
+        for (name, limiter) in self.limiters() {
+            limiter.render(out, &format!("{prefix}.{name}"));
         }
         kv(
             out,
@@ -816,6 +895,145 @@ mod tests {
         // Hostile names never touch the filesystem.
         assert!(router.install_artifact("../escape", &bytes, None).is_err());
         assert!(router.install_artifact("a/b", &bytes, None).is_err());
+        router.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dispatch_prefers_coarse_only_while_degraded() {
+        use crate::coordinator::guard::GuardCfg;
+        use std::time::Duration;
+
+        // One pressure tick trips Degraded; a long recover hold keeps
+        // the state pinned for the rest of the test.
+        let guard = GuardCfg {
+            target_wait: Duration::from_millis(1),
+            adjust_interval: Duration::ZERO,
+            degrade_after: 1,
+            recover_hold: Duration::from_secs(60),
+            ..GuardCfg::default()
+        };
+        let cfg = ServerCfg { guard, ..ServerCfg::default() };
+        let r = Router::new();
+        r.register("m", Server::start(Arc::new(ConstEngine(1.0)), cfg.clone()));
+        r.register(&coarse_variant("m"), Server::start(Arc::new(ConstEngine(9.0)), cfg.clone()));
+        r.register("solo", Server::start(Arc::new(ConstEngine(3.0)), cfg));
+
+        // Healthy: the primary serves, nothing marked degraded.
+        let (h, degraded) = r.dispatch("m").unwrap();
+        assert!(!degraded);
+        assert_eq!(h.infer(vec![0.0, 0.0]).unwrap(), vec![1.0]);
+
+        // Sustained pressure flips dispatch to the coarse pair and
+        // tallies the redirect on the primary's limiter.
+        let primary = r.handle("m").unwrap();
+        primary.limiter().observe(Duration::from_millis(50));
+        assert_eq!(primary.limiter().state(), GuardState::Degraded);
+        let (h, degraded) = r.dispatch("m").unwrap();
+        assert!(degraded);
+        assert_eq!(h.infer(vec![0.0, 0.0]).unwrap(), vec![9.0]);
+        assert_eq!(primary.limiter().degraded_requests(), 1);
+
+        // A degraded model without a pair keeps serving itself.
+        let solo = r.handle("solo").unwrap();
+        solo.limiter().observe(Duration::from_millis(50));
+        assert_eq!(solo.limiter().state(), GuardState::Degraded);
+        let (h, degraded) = r.dispatch("solo").unwrap();
+        assert!(!degraded);
+        assert_eq!(h.infer(vec![0.0, 0.0]).unwrap(), vec![3.0]);
+
+        // Unknown models still error.
+        assert!(r.dispatch("ghost").is_err());
+
+        // The registry slice carries every model's guard lines.
+        let mut out = String::new();
+        r.render_registry(&mut out, "net");
+        assert!(out.contains("qnn.guard.net.m.state 1\n"), "{out}");
+        assert!(out.contains("qnn.guard.net.m.degraded_requests 1\n"), "{out}");
+        assert!(out.contains("qnn.guard.net.m@coarse.state 0\n"), "{out}");
+        r.shutdown();
+    }
+
+    #[test]
+    fn requarantine_never_overwrites_earlier_casualties() {
+        let dir = std::env::temp_dir().join(format!("qnn_rtr_requar_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let qdir = dir.join("quarantine");
+
+        // Three generations of a bad artifact arriving under one name.
+        for (i, body) in ["bad one", "bad two", "bad three"].iter().enumerate() {
+            std::fs::write(dir.join("junk.qnn"), body).unwrap();
+            let r = Router::open_dir(&dir).unwrap();
+            assert_eq!(r.model_count(), 0);
+            assert_eq!(r.load_errors().len(), 1, "generation {i}");
+            r.shutdown();
+        }
+
+        // Every casualty kept its own slot and sidecar — nothing was
+        // overwritten by a later arrival under the same name.
+        assert_eq!(std::fs::read_to_string(qdir.join("junk.qnn")).unwrap(), "bad one");
+        assert_eq!(std::fs::read_to_string(qdir.join("junk.qnn.2")).unwrap(), "bad two");
+        assert_eq!(std::fs::read_to_string(qdir.join("junk.qnn.3")).unwrap(), "bad three");
+        for slot in ["junk.qnn", "junk.qnn.2", "junk.qnn.3"] {
+            let reason =
+                std::fs::read_to_string(qdir.join(format!("{slot}.reason"))).unwrap();
+            assert!(!reason.trim().is_empty(), "empty reason for {slot}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_installs_leave_the_live_store_untouched() {
+        use crate::nn::{ActSpec, NetSpec, Network};
+        use crate::util::rng::Xoshiro256;
+
+        let dir = std::env::temp_dir().join(format!("qnn_rtr_failinst_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = NetSpec::mlp("live", 4, &[4], 2, ActSpec::tanh_d(16));
+        let net = Network::from_spec(&spec, &mut Xoshiro256::new(11));
+        net.save(dir.join("live.qnn").to_str().unwrap()).unwrap();
+        let live_bytes = std::fs::read(dir.join("live.qnn")).unwrap();
+
+        let router = Router::load_dir(&dir).unwrap();
+        let manifest_before = router.manifest();
+        let digest_before = router.store_digest();
+        assert_ne!(digest_before, 0);
+
+        // Candidate replacement bytes: a valid artifact under the same
+        // name with different weights.
+        let net2 = Network::from_spec(&spec, &mut Xoshiro256::new(12));
+        let tmp =
+            std::env::temp_dir().join(format!("qnn_failinst_src_{}.qnn", std::process::id()));
+        net2.save(tmp.to_str().unwrap()).unwrap();
+        let new_bytes = std::fs::read(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+
+        // (1) Checksum mismatch: refused before anything is written.
+        let e = router
+            .install_artifact("live", &new_bytes, Some(fnv1a(&new_bytes) ^ 1))
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("checksum"), "{e:#}");
+
+        // (2) Torn tmp write: a directory squats on the `.part` path so
+        // the tmp write itself fails mid-install.
+        let part = dir.join("live.qnn.part");
+        std::fs::create_dir_all(&part).unwrap();
+        let e = router
+            .install_artifact("live", &new_bytes, Some(fnv1a(&new_bytes)))
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("live.qnn.part"), "{e:#}");
+        std::fs::remove_dir_all(&part).unwrap();
+
+        // After both failures: same model set, manifest, digest, and
+        // on-disk bytes; the live server still answers.
+        assert_eq!(router.models(), vec!["live"]);
+        assert_eq!(router.manifest(), manifest_before);
+        assert_eq!(router.store_digest(), digest_before);
+        assert_eq!(std::fs::read(dir.join("live.qnn")).unwrap(), live_bytes);
+        assert!(router.infer("live", vec![0.0; 4]).is_ok());
+
         router.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -27,12 +27,14 @@
 //! [`Backend::infer_quantized_batch_into`].
 
 use super::engine::Backend;
+use super::guard::{GuardCfg, Limiter};
 use super::metrics::{Metrics, Outcome};
 use crate::fixedpoint::UniformQuant;
 use crate::util::threadpool::ThreadPool;
 use crate::util::trace;
+use crate::util::watchdog;
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -43,14 +45,20 @@ pub struct ServerCfg {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub workers: usize,
-    /// Admission-control bound: the maximum number of accepted requests
-    /// that may be outstanding (queued or in service) at once. Further
-    /// submissions fail fast with [`InferError::Busy`].
+    /// Admission-control ceiling: the maximum number of accepted
+    /// requests that may be outstanding (queued or in service) at once.
+    /// The live bound is the guard's adaptive limit, which floats at or
+    /// below this. Past it, submissions fail fast with
+    /// [`InferError::Busy`].
     pub max_queue: usize,
-    /// Back-off hint attached to `Busy` rejections: roughly how long
-    /// until a shed caller should expect capacity back. Travels on the
-    /// wire in the error frame's retry-after field.
-    pub busy_retry_after: Duration,
+    /// Back-off hint attached to `Busy` rejections. `None` (the
+    /// default) derives the hint adaptively from the live limit and
+    /// depth; `Some(d)` pins it — both travel on the wire in the error
+    /// frame's retry-after field.
+    pub busy_retry_after: Option<Duration>,
+    /// Overload-control policy: AIMD limit adaptation, CoDel age
+    /// shedding, and degrade hysteresis (see [`crate::coordinator::guard`]).
+    pub guard: GuardCfg,
 }
 
 impl Default for ServerCfg {
@@ -60,7 +68,8 @@ impl Default for ServerCfg {
             max_wait: Duration::from_millis(2),
             workers: 2,
             max_queue: 1024,
-            busy_retry_after: Duration::from_millis(2),
+            busy_retry_after: None,
+            guard: GuardCfg::from_env(),
         }
     }
 }
@@ -147,6 +156,9 @@ struct Request {
     /// qnn-scope trace context ([`trace::UNTRACED`] for the unsampled
     /// common case — every stamp on it is a single branch).
     trace: trace::Ctx,
+    /// Wire priority flag: low-priority requests shed first under
+    /// pressure (half the CoDel age, half the admission limit).
+    low_priority: bool,
     resp: mpsc::Sender<Result<Vec<f32>, InferError>>,
 }
 
@@ -154,10 +166,9 @@ struct Request {
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: mpsc::Sender<Request>,
-    depth: Arc<AtomicUsize>,
+    limiter: Arc<Limiter>,
     shutdown: Arc<AtomicBool>,
-    max_queue: usize,
-    busy_retry_after_ms: u64,
+    busy_retry_after: Option<Duration>,
     input_len: usize,
     output_len: usize,
     input_quant: Option<UniformQuant>,
@@ -196,7 +207,14 @@ impl ServerHandle {
     /// Requests currently outstanding (queued or in service) — the load
     /// signal health pongs report.
     pub fn queued(&self) -> usize {
-        self.depth.load(Ordering::Relaxed)
+        self.limiter.depth()
+    }
+
+    /// This server's overload guard: the adaptive limit, CoDel
+    /// counters, and per-model health state. The router consults it for
+    /// degrade-to-coarse dispatch; the registry renders it.
+    pub fn limiter(&self) -> &Arc<Limiter> {
+        &self.limiter
     }
 
     /// Non-blocking submission with admission control: validates the
@@ -230,6 +248,20 @@ impl ServerHandle {
         deadline: Option<Instant>,
         tctx: trace::Ctx,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>, InferError>>, InferError> {
+        self.submit_opts(payload, deadline, tctx, false)
+    }
+
+    /// Full-control submission: [`ServerHandle::submit_traced`] plus the
+    /// wire priority flag. Low-priority requests are admitted against
+    /// half the live limit and shed at half the CoDel age, so
+    /// best-effort traffic drains first under pressure.
+    pub fn submit_opts(
+        &self,
+        payload: Payload,
+        deadline: Option<Instant>,
+        tctx: trace::Ctx,
+        low_priority: bool,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>, InferError>>, InferError> {
         if self.shutdown.load(Ordering::SeqCst) {
             self.metrics.outcomes.record(Outcome::PeerShutdown);
             return Err(InferError::Shutdown);
@@ -238,27 +270,15 @@ impl ServerHandle {
             self.metrics.outcomes.record(Outcome::BadRequest);
             return Err(e);
         }
-        // Reserve a slot: CAS loop so concurrent submitters never
-        // overshoot the bound.
-        let mut cur = self.depth.load(Ordering::Relaxed);
-        loop {
-            if cur >= self.max_queue {
-                self.metrics.outcomes.record(Outcome::Busy);
-                return Err(InferError::Busy {
-                    queued: cur,
-                    max_queue: self.max_queue,
-                    retry_after_ms: self.busy_retry_after_ms,
-                });
-            }
-            match self.depth.compare_exchange_weak(
-                cur,
-                cur + 1,
-                Ordering::SeqCst,
-                Ordering::Relaxed,
-            ) {
-                Ok(_) => break,
-                Err(now) => cur = now,
-            }
+        // Reserve a slot against the guard's live limit (at or below
+        // the configured `max_queue` ceiling).
+        if let Err(cur) = self.limiter.try_acquire(low_priority) {
+            self.metrics.outcomes.record(Outcome::Busy);
+            return Err(InferError::Busy {
+                queued: cur,
+                max_queue: self.limiter.ceiling(),
+                retry_after_ms: self.limiter.retry_hint_ms(self.busy_retry_after),
+            });
         }
         let (rtx, rrx) = mpsc::channel();
         trace::stamp(tctx, trace::Stage::Enqueue);
@@ -267,10 +287,11 @@ impl ServerHandle {
             enqueued: Instant::now(),
             deadline,
             trace: tctx,
+            low_priority,
             resp: rtx,
         };
         if self.tx.send(req).is_err() {
-            self.depth.fetch_sub(1, Ordering::SeqCst);
+            self.limiter.release(1);
             self.metrics.outcomes.record(Outcome::PeerShutdown);
             return Err(InferError::Shutdown);
         }
@@ -295,13 +316,13 @@ impl ServerHandle {
 /// so a panicking backend cannot permanently leak queue capacity and
 /// wedge the server into answering `Busy` forever.
 struct SlotGuard {
-    depth: Arc<AtomicUsize>,
+    limiter: Arc<Limiter>,
     n: usize,
 }
 
 impl Drop for SlotGuard {
     fn drop(&mut self) {
-        self.depth.fetch_sub(self.n, Ordering::SeqCst);
+        self.limiter.release(self.n);
     }
 }
 
@@ -322,6 +343,90 @@ struct WorkerScratch {
     service: Vec<f64>,
 }
 
+/// Run one shed-filtered batch through the engine and record its
+/// metrics — the panic-isolated section of a worker job. Returns the
+/// per-request output rows; a backend panic unwinds out and the caller
+/// resolves the batch with typed errors instead.
+fn run_batch(
+    engine: &dyn Backend,
+    metrics: &Metrics,
+    s: &mut WorkerScratch,
+    batch: &[Request],
+    dispatched: Instant,
+) -> Vec<Vec<f32>> {
+    let n = batch.len();
+    let out_len = engine.output_len();
+    // Partition by payload encoding (stable): each encoding runs as one
+    // batched call, so a mixed batch costs at most two engine entries,
+    // never per-row dispatch.
+    s.rows_f.clear();
+    s.rows_q.clear();
+    for (i, r) in batch.iter().enumerate() {
+        match r.payload {
+            Payload::F32(_) => s.rows_f.push(i),
+            Payload::QIdx(_) => s.rows_q.push(i),
+        }
+    }
+    s.out.clear();
+    s.out.resize(n * out_len, 0.0);
+    if !s.rows_f.is_empty() {
+        s.flat.clear();
+        for &i in &s.rows_f {
+            if let Payload::F32(v) = &batch[i].payload {
+                s.flat.extend_from_slice(v);
+            }
+        }
+        if s.rows_f.len() == n {
+            engine.infer_batch_into(&s.flat, n, &mut s.out);
+        } else {
+            s.part.clear();
+            s.part.resize(s.rows_f.len() * out_len, 0.0);
+            engine.infer_batch_into(&s.flat, s.rows_f.len(), &mut s.part);
+            for (k, &i) in s.rows_f.iter().enumerate() {
+                s.out[i * out_len..(i + 1) * out_len]
+                    .copy_from_slice(&s.part[k * out_len..(k + 1) * out_len]);
+            }
+        }
+    }
+    if !s.rows_q.is_empty() {
+        s.qidx.clear();
+        for &i in &s.rows_q {
+            if let Payload::QIdx(v) = &batch[i].payload {
+                s.qidx.extend_from_slice(v);
+            }
+        }
+        if s.rows_q.len() == n {
+            engine.infer_quantized_batch_into(&s.qidx, n, &mut s.out);
+        } else {
+            s.part.clear();
+            s.part.resize(s.rows_q.len() * out_len, 0.0);
+            engine.infer_quantized_batch_into(&s.qidx, s.rows_q.len(), &mut s.part);
+            for (k, &i) in s.rows_q.iter().enumerate() {
+                s.out[i * out_len..(i + 1) * out_len]
+                    .copy_from_slice(&s.part[k * out_len..(k + 1) * out_len]);
+            }
+        }
+    }
+    for r in batch {
+        trace::stamp(r.trace, trace::Stage::InferEnd);
+    }
+    // Record metrics BEFORE replying so a client that reads the
+    // snapshot right after its response sees its own request counted.
+    let service_ms = dispatched.elapsed().as_secs_f64() * 1e3;
+    s.e2e.clear();
+    s.queue.clear();
+    s.service.clear();
+    for r in batch {
+        s.queue
+            .push(dispatched.saturating_duration_since(r.enqueued).as_secs_f64() * 1e3);
+        s.e2e.push(r.enqueued.elapsed().as_secs_f64() * 1e3);
+        s.service.push(service_ms);
+    }
+    metrics.record_batch(&s.e2e, &s.queue, &s.service);
+    metrics.outcomes.add(Outcome::Ok, n as u64);
+    (0..n).map(|i| s.out[i * out_len..(i + 1) * out_len].to_vec()).collect()
+}
+
 /// A running server instance.
 pub struct Server {
     handle: ServerHandle,
@@ -339,7 +444,7 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Arc::new(Metrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
-        let depth = Arc::new(AtomicUsize::new(0));
+        let limiter = Arc::new(Limiter::new(cfg.guard.clone(), cfg.max_queue.max(1)));
         let input_len = engine.input_len();
         let output_len = engine.output_len();
         let engine_name = engine.name().to_string();
@@ -348,7 +453,8 @@ impl Server {
 
         let m = Arc::clone(&metrics);
         let stop = Arc::clone(&shutdown);
-        let d = Arc::clone(&depth);
+        let l = Arc::clone(&limiter);
+        let busy_hint = cfg.busy_retry_after;
         let max_batch = cfg.max_batch.min(engine.max_batch()).max(1);
         let max_wait = cfg.max_wait;
         let workers = ThreadPool::new(cfg.workers.max(1));
@@ -359,12 +465,21 @@ impl Server {
             .name("qnn-batcher".into())
             .spawn(move || {
                 let rx = rx.lock().unwrap();
+                // Watchdog hearts: the collector beats per loop
+                // iteration; the workers share one heart whose
+                // active-count composes across concurrent jobs. Both
+                // drop (deregistering) when this thread exits.
+                let heart = watchdog::register(&format!("qnn-batcher:{}", engine.name()));
+                let wheart =
+                    Arc::new(watchdog::register(&format!("qnn-worker:{}", engine.name())));
                 // Hand one batch to the worker pool (used by both the
                 // live loop and the shutdown drain below).
                 let dispatch = |batch: Vec<Request>| {
                     let engine = Arc::clone(&engine);
                     let metrics = Arc::clone(&m);
-                    let depth = Arc::clone(&d);
+                    let limiter = Arc::clone(&l);
+                    let wheart = Arc::clone(&wheart);
+                    let hint = busy_hint;
                     let dispatched = Instant::now();
                     for r in &batch {
                         trace::stamp(r.trace, trace::Stage::Batch);
@@ -374,132 +489,92 @@ impl Server {
                             static BUFS: RefCell<WorkerScratch> =
                                 RefCell::new(WorkerScratch::default());
                         }
+                        let _watch = wheart.busy();
                         let mut batch = batch;
                         // Slots return when this guard drops — after the
                         // replies below in the normal case, and during
                         // unwind if the backend panics, so `max_queue`
                         // capacity is never leaked. Shed requests count
                         // too: their slots were reserved at admission.
-                        let _slots = SlotGuard { depth, n: batch.len() };
-                        // Deadline shedding: a budget that expired while
-                        // the request queued gets a typed error now —
-                        // engine time goes to answers someone is still
-                        // waiting for.
+                        let _slots = SlotGuard { limiter: Arc::clone(&limiter), n: batch.len() };
+                        // Feed the AIMD controller the batch's worst
+                        // queue wait — including entries about to shed,
+                        // which are exactly the pressure signal.
                         let now = Instant::now();
-                        batch.retain(|r| match r.deadline {
-                            Some(d) if now >= d => {
-                                metrics.outcomes.record(Outcome::DeadlineExceeded);
-                                let _ = r.resp.send(Err(InferError::DeadlineExceeded));
-                                false
+                        let mut worst = Duration::ZERO;
+                        for r in &batch {
+                            worst = worst.max(now.saturating_duration_since(r.enqueued));
+                        }
+                        limiter.observe(worst);
+                        // Shedding: budgets that expired while queued
+                        // get their typed error now, and entries older
+                        // than the CoDel age resolve as Busy — under
+                        // saturation "retry" in 1 ms beats "here" in
+                        // 2 s. Engine time goes to answers someone is
+                        // still waiting for.
+                        batch.retain(|r| {
+                            if let Some(d) = r.deadline {
+                                if now >= d {
+                                    metrics.outcomes.record(Outcome::DeadlineExceeded);
+                                    let _ = r.resp.send(Err(InferError::DeadlineExceeded));
+                                    return false;
+                                }
                             }
-                            _ => true,
+                            let age = now.saturating_duration_since(r.enqueued);
+                            if age > limiter.shed_age(r.low_priority) {
+                                limiter.record_codel_shed();
+                                metrics.outcomes.record(Outcome::Busy);
+                                let _ = r.resp.send(Err(InferError::Busy {
+                                    queued: limiter.depth(),
+                                    max_queue: limiter.ceiling(),
+                                    retry_after_ms: limiter.retry_hint_ms(hint),
+                                }));
+                                return false;
+                            }
+                            true
                         });
                         if batch.is_empty() {
                             return;
                         }
                         let n = batch.len();
-                        let out_len = engine.output_len();
                         for r in &batch {
                             trace::stamp(r.trace, trace::Stage::InferStart);
                         }
-                        BUFS.with(|b| {
-                            let s = &mut *b.borrow_mut();
-                            // Partition by payload encoding (stable):
-                            // each encoding runs as one batched call,
-                            // so a mixed batch costs at most two engine
-                            // entries, never per-row dispatch.
-                            s.rows_f.clear();
-                            s.rows_q.clear();
-                            for (i, r) in batch.iter().enumerate() {
-                                match r.payload {
-                                    Payload::F32(_) => s.rows_f.push(i),
-                                    Payload::QIdx(_) => s.rows_q.push(i),
+                        // Engine + metrics run panic-isolated: a
+                        // panicking backend resolves every request in
+                        // the batch (typed error below) instead of
+                        // hanging its callers, and the pool thread
+                        // survives to take the next job.
+                        let outs = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            BUFS.with(|b| {
+                                let s = &mut *b.borrow_mut();
+                                run_batch(&*engine, &metrics, s, &batch, dispatched)
+                            })
+                        }));
+                        match outs {
+                            Ok(outs) => {
+                                for (r, out) in batch.into_iter().zip(outs) {
+                                    // Receiver may have given up; ignore errors.
+                                    let _ = r.resp.send(Ok(out));
                                 }
                             }
-                            s.out.clear();
-                            s.out.resize(n * out_len, 0.0);
-                            if !s.rows_f.is_empty() {
-                                s.flat.clear();
-                                for &i in &s.rows_f {
-                                    if let Payload::F32(v) = &batch[i].payload {
-                                        s.flat.extend_from_slice(v);
-                                    }
-                                }
-                                if s.rows_f.len() == n {
-                                    engine.infer_batch_into(&s.flat, n, &mut s.out);
-                                } else {
-                                    s.part.clear();
-                                    s.part.resize(s.rows_f.len() * out_len, 0.0);
-                                    engine.infer_batch_into(&s.flat, s.rows_f.len(), &mut s.part);
-                                    for (k, &i) in s.rows_f.iter().enumerate() {
-                                        s.out[i * out_len..(i + 1) * out_len]
-                                            .copy_from_slice(
-                                                &s.part[k * out_len..(k + 1) * out_len],
-                                            );
-                                    }
+                            Err(_) => {
+                                watchdog::note_worker_panic();
+                                metrics.outcomes.add(Outcome::Internal, n as u64);
+                                for r in batch {
+                                    let _ = r.resp.send(Err(InferError::Dropped));
                                 }
                             }
-                            if !s.rows_q.is_empty() {
-                                s.qidx.clear();
-                                for &i in &s.rows_q {
-                                    if let Payload::QIdx(v) = &batch[i].payload {
-                                        s.qidx.extend_from_slice(v);
-                                    }
-                                }
-                                if s.rows_q.len() == n {
-                                    engine.infer_quantized_batch_into(&s.qidx, n, &mut s.out);
-                                } else {
-                                    s.part.clear();
-                                    s.part.resize(s.rows_q.len() * out_len, 0.0);
-                                    engine.infer_quantized_batch_into(
-                                        &s.qidx,
-                                        s.rows_q.len(),
-                                        &mut s.part,
-                                    );
-                                    for (k, &i) in s.rows_q.iter().enumerate() {
-                                        s.out[i * out_len..(i + 1) * out_len]
-                                            .copy_from_slice(
-                                                &s.part[k * out_len..(k + 1) * out_len],
-                                            );
-                                    }
-                                }
-                            }
-                            for r in &batch {
-                                trace::stamp(r.trace, trace::Stage::InferEnd);
-                            }
-                            // Record metrics BEFORE replying so a client
-                            // that reads the snapshot right after its
-                            // response sees its own request counted.
-                            let service_ms = dispatched.elapsed().as_secs_f64() * 1e3;
-                            s.e2e.clear();
-                            s.queue.clear();
-                            s.service.clear();
-                            for r in &batch {
-                                s.queue.push(
-                                    dispatched
-                                        .saturating_duration_since(r.enqueued)
-                                        .as_secs_f64()
-                                        * 1e3,
-                                );
-                                s.e2e.push(r.enqueued.elapsed().as_secs_f64() * 1e3);
-                                s.service.push(service_ms);
-                            }
-                            metrics.record_batch(&s.e2e, &s.queue, &s.service);
-                            metrics.outcomes.add(Outcome::Ok, n as u64);
-                            for (i, r) in batch.into_iter().enumerate() {
-                                // Receiver may have given up; ignore errors.
-                                let _ = r
-                                    .resp
-                                    .send(Ok(s.out[i * out_len..(i + 1) * out_len].to_vec()));
-                            }
-                        });
+                        }
                     });
                 };
 
                 loop {
                     // Block for the first request (with periodic shutdown
-                    // checks).
+                    // checks). Parked here the collector is idle, not
+                    // stalled — the heart's active count is zero.
                     let first = loop {
+                        heart.beat();
                         match rx.recv_timeout(Duration::from_millis(20)) {
                             Ok(r) => break Some(r),
                             Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -511,6 +586,7 @@ impl Server {
                         }
                     };
                     let Some(first) = first else { break };
+                    let _work = heart.busy();
 
                     // Gather stragglers until the batch fills or the
                     // deadline passes.
@@ -553,10 +629,9 @@ impl Server {
         Server {
             handle: ServerHandle {
                 tx,
-                depth,
+                limiter,
                 shutdown: Arc::clone(&shutdown),
-                max_queue: cfg.max_queue.max(1),
-                busy_retry_after_ms: cfg.busy_retry_after.as_millis() as u64,
+                busy_retry_after: cfg.busy_retry_after,
                 input_len,
                 output_len,
                 input_quant,
@@ -823,7 +898,7 @@ mod tests {
                 max_wait: Duration::from_millis(0),
                 workers: 1,
                 max_queue: 1,
-                busy_retry_after: Duration::from_millis(7),
+                busy_retry_after: Some(Duration::from_millis(7)),
                 ..ServerCfg::default()
             },
         );
@@ -846,6 +921,155 @@ mod tests {
         }
         assert!(saw_busy, "bounded queue never rejected");
         assert!(server.metrics.outcomes.get(Outcome::Busy) >= 1);
+        server.shutdown();
+    }
+
+    /// Panics on the first batch only, then behaves.
+    struct FlakyEngine(std::sync::atomic::AtomicBool);
+    impl Backend for FlakyEngine {
+        fn name(&self) -> &str {
+            "flaky"
+        }
+        fn input_len(&self) -> usize {
+            2
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn memory_bytes(&self) -> usize {
+            0
+        }
+        fn infer_batch_into(&self, _flat: &[f32], batch: usize, out: &mut [f32]) {
+            if !self.0.swap(true, Ordering::SeqCst) {
+                panic!("injected backend panic");
+            }
+            out[..batch].fill(2.0);
+        }
+    }
+
+    #[test]
+    fn worker_panic_resolves_batch_and_server_keeps_serving() {
+        let server = Server::start(
+            Arc::new(FlakyEngine(AtomicBool::new(false))),
+            ServerCfg { max_batch: 1, workers: 1, ..ServerCfg::default() },
+        );
+        let h = server.handle();
+        // First request hits the injected panic: its caller gets a
+        // typed error, not a hang.
+        assert_eq!(h.infer(vec![0.0, 0.0]), Err(InferError::Dropped));
+        assert!(server.metrics.outcomes.get(Outcome::Internal) >= 1);
+        // The worker and its admission slots survived: the next request
+        // is served normally.
+        assert_eq!(h.infer(vec![0.0, 0.0]), Ok(vec![2.0]));
+        assert_eq!(h.queued(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn stale_queued_requests_are_codel_shed_as_busy() {
+        // Shed age 10ms, engine 60ms: requests stuck behind the first
+        // one age out and resolve as Busy instead of occupying the
+        // engine long after the client gave up.
+        let server = Server::start(
+            Arc::new(SlowEngine(Duration::from_millis(60))),
+            ServerCfg {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                workers: 1,
+                max_queue: 64,
+                guard: GuardCfg {
+                    shed_age: Duration::from_millis(10),
+                    ..GuardCfg::default()
+                },
+                ..ServerCfg::default()
+            },
+        );
+        let h = server.handle();
+        let first = h.submit(Payload::F32(vec![0.0, 0.0])).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let stale = h.submit(Payload::F32(vec![0.0, 0.0])).unwrap();
+        assert_eq!(first.recv().unwrap(), Ok(vec![1.0]));
+        match stale.recv().unwrap() {
+            Err(InferError::Busy { retry_after_ms, .. }) => {
+                assert!(retry_after_ms >= 1);
+            }
+            other => panic!("expected CoDel shed as Busy, got {other:?}"),
+        }
+        assert!(h.limiter().codel_sheds() >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn low_priority_admits_against_half_the_limit() {
+        // Hold 2 of 4 slots: low-priority traffic (half limit = 2) is
+        // already shed while normal traffic still fits.
+        let server = Server::start(
+            Arc::new(SlowEngine(Duration::from_millis(80))),
+            ServerCfg {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                workers: 1,
+                max_queue: 4,
+                ..ServerCfg::default()
+            },
+        );
+        let h = server.handle();
+        let _a = h.submit(Payload::F32(vec![0.0, 0.0])).unwrap();
+        let _b = h.submit(Payload::F32(vec![0.0, 0.0])).unwrap();
+        let low =
+            h.submit_opts(Payload::F32(vec![0.0, 0.0]), None, trace::UNTRACED, true);
+        assert!(matches!(low, Err(InferError::Busy { .. })), "low not shed: {low:?}");
+        let normal =
+            h.submit_opts(Payload::F32(vec![0.0, 0.0]), None, trace::UNTRACED, false);
+        assert!(normal.is_ok(), "normal traffic shed early: {:?}", normal.err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn adaptive_limit_shrinks_under_pressure_and_reopens() {
+        // Saturate a slow engine well past the queue-wait target, then
+        // go idle: the live limit must shrink below the ceiling and
+        // climb back as calm observations arrive.
+        let server = Server::start(
+            Arc::new(SlowEngine(Duration::from_millis(30))),
+            ServerCfg {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                workers: 1,
+                max_queue: 32,
+                guard: GuardCfg {
+                    target_wait: Duration::from_millis(5),
+                    adjust_interval: Duration::from_millis(1),
+                    shed_age: Duration::from_secs(5),
+                    ..GuardCfg::default()
+                },
+                ..ServerCfg::default()
+            },
+        );
+        let h = server.handle();
+        let mut pending = Vec::new();
+        for _ in 0..12 {
+            if let Ok(rx) = h.submit(Payload::F32(vec![0.0, 0.0])) {
+                pending.push(rx);
+            }
+        }
+        for rx in pending {
+            let _ = rx.recv();
+        }
+        assert!(
+            h.limiter().limit_floor() < 32,
+            "limit never shrank: floor {}",
+            h.limiter().limit_floor()
+        );
+        assert!(h.limiter().shrinks() >= 1);
+        // Calm traffic re-opens the limit.
+        for _ in 0..40 {
+            let _ = h.infer(vec![0.0, 0.0]);
+            if h.limiter().reopens() >= 1 {
+                break;
+            }
+        }
+        assert!(h.limiter().reopens() >= 1, "limit never re-opened");
         server.shutdown();
     }
 

@@ -39,6 +39,22 @@
 //! stats rsp    text_len u32 · text (UTF-8)
 //! ```
 //!
+//! The dtype byte's low 7 bits carry the payload encoding tag; bit 7 is
+//! a **flag bit** (qnn-guard's overload vocabulary, checksummed like
+//! every other bit):
+//!
+//! * on a request, `0x80` marks the request **low priority** — under
+//!   overload the admission limiter sheds low-priority traffic first
+//!   ([`FLAG_LOW_PRIORITY`]);
+//! * on a response, `0x80` marks the answer **degraded** — it was
+//!   served by the model's paired coarse variant (`model@coarse`)
+//!   because the primary was overloaded, so clients and the fleet can
+//!   tally degraded answers ([`FLAG_DEGRADED`]).
+//!
+//! Both flags cost zero wire bytes, so frame sizes (and
+//! [`request_frame_bytes`]) are identical whether or not they are set;
+//! a v2 peer that never sets them interoperates unchanged.
+//!
 //! The stats kinds are **qnn-scope**'s scrape surface: the response
 //! body is the process-global metrics registry's text exposition
 //! (`coordinator::registry`, one `name value` pair per line under
@@ -108,6 +124,15 @@ pub const MAX_FRAME_LEN: usize = 1 << 26;
 const HEADER_LEN: usize = 8;
 /// Smallest legal `len`: kind + req id + checksum.
 const MIN_BODY_LEN: usize = 1 + 8 + 8;
+/// Request dtype-byte flag: this request is low priority — shed it
+/// first under overload (qnn-guard's admission limiter halves the
+/// concurrency limit for flagged traffic).
+pub const FLAG_LOW_PRIORITY: u8 = 0x80;
+/// Response dtype-byte flag: this answer came from the model's paired
+/// coarse variant because the primary was overloaded.
+pub const FLAG_DEGRADED: u8 = 0x80;
+/// Low 7 bits of the dtype byte: the payload encoding tag.
+const DTYPE_TAG_MASK: u8 = 0x7f;
 
 /// Peek a whole frame's kind tag without parsing (or verifying) it.
 /// The front-ends use this to decide whether to admit a frame into the
@@ -260,10 +285,16 @@ pub enum Frame<'a> {
         /// Remaining latency budget in ms (0 = no deadline). The server
         /// sheds requests whose budget expires before dispatch.
         deadline_ms: u32,
+        /// [`FLAG_LOW_PRIORITY`] was set: shed this request first under
+        /// overload.
+        low_priority: bool,
         payload: &'a [u8],
     },
     Response {
         req_id: u64,
+        /// [`FLAG_DEGRADED`] was set: the paired coarse variant served
+        /// this answer because the primary was overloaded.
+        degraded: bool,
         /// f32le output bytes (use [`payload_f32s_into`] to decode).
         payload: &'a [u8],
     },
@@ -351,11 +382,25 @@ pub fn encode_request(
     deadline_ms: u32,
     payload: &[u8],
 ) {
+    encode_request_opts(buf, req_id, model, dtype, deadline_ms, payload, false);
+}
+
+/// [`encode_request`] with the low-priority flag explicit: a flagged
+/// request is shed first under overload ([`FLAG_LOW_PRIORITY`]).
+pub fn encode_request_opts(
+    buf: &mut Vec<u8>,
+    req_id: u64,
+    model: &str,
+    dtype: Dtype,
+    deadline_ms: u32,
+    payload: &[u8],
+    low_priority: bool,
+) {
     assert!(model.len() <= 255, "model name longer than 255 bytes");
     start(buf, 0, req_id);
     buf.push(model.len() as u8);
     buf.extend_from_slice(model.as_bytes());
-    buf.push(dtype.tag());
+    buf.push(dtype.tag() | if low_priority { FLAG_LOW_PRIORITY } else { 0 });
     buf.extend_from_slice(&deadline_ms.to_le_bytes());
     buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     buf.extend_from_slice(payload);
@@ -370,11 +415,23 @@ pub fn encode_request_f32(
     input: &[f32],
     deadline_ms: u32,
 ) {
+    encode_request_f32_opts(buf, req_id, model, input, deadline_ms, false);
+}
+
+/// [`encode_request_f32`] with the low-priority flag explicit.
+pub fn encode_request_f32_opts(
+    buf: &mut Vec<u8>,
+    req_id: u64,
+    model: &str,
+    input: &[f32],
+    deadline_ms: u32,
+    low_priority: bool,
+) {
     assert!(model.len() <= 255, "model name longer than 255 bytes");
     start(buf, 0, req_id);
     buf.push(model.len() as u8);
     buf.extend_from_slice(model.as_bytes());
-    buf.push(Dtype::F32Le.tag());
+    buf.push(Dtype::F32Le.tag() | if low_priority { FLAG_LOW_PRIORITY } else { 0 });
     buf.extend_from_slice(&deadline_ms.to_le_bytes());
     buf.extend_from_slice(&((input.len() * 4) as u32).to_le_bytes());
     for &x in input {
@@ -391,13 +448,32 @@ pub fn encode_request_qidx(
     idx: &[u8],
     deadline_ms: u32,
 ) {
-    encode_request(buf, req_id, model, Dtype::QIdx, deadline_ms, idx);
+    encode_request_opts(buf, req_id, model, Dtype::QIdx, deadline_ms, idx, false);
+}
+
+/// [`encode_request_qidx`] with the low-priority flag explicit.
+pub fn encode_request_qidx_opts(
+    buf: &mut Vec<u8>,
+    req_id: u64,
+    model: &str,
+    idx: &[u8],
+    deadline_ms: u32,
+    low_priority: bool,
+) {
+    encode_request_opts(buf, req_id, model, Dtype::QIdx, deadline_ms, idx, low_priority);
 }
 
 /// Encode a response frame carrying f32le outputs.
 pub fn encode_response_f32(buf: &mut Vec<u8>, req_id: u64, out: &[f32]) {
+    encode_response_f32_opts(buf, req_id, out, false);
+}
+
+/// [`encode_response_f32`] with the degraded flag explicit: a flagged
+/// response was served by the model's paired coarse variant
+/// ([`FLAG_DEGRADED`]).
+pub fn encode_response_f32_opts(buf: &mut Vec<u8>, req_id: u64, out: &[f32], degraded: bool) {
     start(buf, 1, req_id);
-    buf.push(Dtype::F32Le.tag());
+    buf.push(Dtype::F32Le.tag() | if degraded { FLAG_DEGRADED } else { 0 });
     buf.extend_from_slice(&((out.len() * 4) as u32).to_le_bytes());
     for &x in out {
         buf.extend_from_slice(&x.to_bits().to_le_bytes());
@@ -670,7 +746,9 @@ pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
         0 => {
             let name_len = c.u8()? as usize;
             let model = c.str_bytes(name_len)?;
-            let dtype = Dtype::from_tag(c.u8()?)?;
+            let tag = c.u8()?;
+            let dtype = Dtype::from_tag(tag & DTYPE_TAG_MASK)?;
+            let low_priority = tag & FLAG_LOW_PRIORITY != 0;
             let deadline_ms = c.u32()?;
             let payload_len = c.u32()? as usize;
             let payload = c.take(payload_len)?;
@@ -679,11 +757,14 @@ pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
                 model,
                 dtype,
                 deadline_ms,
+                low_priority,
                 payload,
             }
         }
         1 => {
-            let dtype = Dtype::from_tag(c.u8()?)?;
+            let tag = c.u8()?;
+            let dtype = Dtype::from_tag(tag & DTYPE_TAG_MASK)?;
+            let degraded = tag & FLAG_DEGRADED != 0;
             anyhow::ensure!(
                 dtype == Dtype::F32Le,
                 "response frames carry f32le payloads, got {}",
@@ -692,7 +773,7 @@ pub fn parse_frame(buf: &[u8]) -> Result<Frame<'_>> {
             let payload_len = c.u32()? as usize;
             anyhow::ensure!(payload_len % 4 == 0, "f32le payload of {payload_len} bytes");
             let payload = c.take(payload_len)?;
-            Frame::Response { req_id, payload }
+            Frame::Response { req_id, degraded, payload }
         }
         2 => {
             let code = ErrCode::from_tag(c.u8()?)?;
@@ -937,11 +1018,12 @@ mod tests {
         let (frame, ok) = roundtrip(&buf);
         assert!(ok);
         match parse_frame(&frame).unwrap() {
-            Frame::Request { req_id, model, dtype, deadline_ms, payload } => {
+            Frame::Request { req_id, model, dtype, deadline_ms, low_priority, payload } => {
                 assert_eq!(req_id, 42);
                 assert_eq!(model, "digits-lut");
                 assert_eq!(dtype, Dtype::F32Le);
                 assert_eq!(deadline_ms, 0);
+                assert!(!low_priority, "unflagged request parsed as low priority");
                 let mut xs = Vec::new();
                 payload_f32s_into(payload, &mut xs).unwrap();
                 assert_eq!(xs, vec![0.25, -1.5, 3.0]);
@@ -952,16 +1034,66 @@ mod tests {
 
         encode_request_qidx(&mut buf, 7, "m", &[0, 3, 15, 255], 250);
         match parse_frame(&buf).unwrap() {
-            Frame::Request { req_id, model, dtype, deadline_ms, payload } => {
+            Frame::Request { req_id, model, dtype, deadline_ms, low_priority, payload } => {
                 assert_eq!(req_id, 7);
                 assert_eq!(model, "m");
                 assert_eq!(dtype, Dtype::QIdx);
                 assert_eq!(deadline_ms, 250);
+                assert!(!low_priority);
                 assert_eq!(payload, &[0, 3, 15, 255]);
             }
             f => panic!("wrong frame {f:?}"),
         }
         assert_eq!(buf.len(), request_frame_bytes("m", 4, Dtype::QIdx));
+    }
+
+    #[test]
+    fn priority_and_degraded_flags_roundtrip_at_zero_wire_cost() {
+        // The flag bits ride the dtype byte: frame sizes are identical
+        // with and without them, and both survive the roundtrip.
+        let mut buf = Vec::new();
+        encode_request_f32_opts(&mut buf, 1, "digits-lut", &[0.5, 1.0], 30, true);
+        assert_eq!(buf.len(), request_frame_bytes("digits-lut", 2, Dtype::F32Le));
+        match parse_frame(&buf).unwrap() {
+            Frame::Request { dtype, deadline_ms, low_priority, .. } => {
+                assert_eq!(dtype, Dtype::F32Le);
+                assert_eq!(deadline_ms, 30);
+                assert!(low_priority, "FLAG_LOW_PRIORITY lost in the roundtrip");
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        encode_request_qidx_opts(&mut buf, 2, "m", &[1, 2, 3], 0, true);
+        assert_eq!(buf.len(), request_frame_bytes("m", 3, Dtype::QIdx));
+        match parse_frame(&buf).unwrap() {
+            Frame::Request { dtype, low_priority, payload, .. } => {
+                assert_eq!(dtype, Dtype::QIdx);
+                assert!(low_priority);
+                assert_eq!(payload, &[1, 2, 3]);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        let mut plain = Vec::new();
+        encode_response_f32(&mut plain, 3, &[7.0]);
+        encode_response_f32_opts(&mut buf, 3, &[7.0], true);
+        assert_eq!(buf.len(), plain.len(), "degraded flag must cost zero bytes");
+        match parse_frame(&buf).unwrap() {
+            Frame::Response { req_id, degraded, payload } => {
+                assert_eq!(req_id, 3);
+                assert!(degraded, "FLAG_DEGRADED lost in the roundtrip");
+                let mut xs = Vec::new();
+                payload_f32s_into(payload, &mut xs).unwrap();
+                assert_eq!(xs, vec![7.0]);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        // Masked-off encodings stay rejected: a flagged byte whose low 7
+        // bits are not a known dtype is still a parse error, on both
+        // request and response frames.
+        let body_end = buf.len() - 8;
+        buf[HEADER_LEN + 9] = FLAG_DEGRADED | 0x05;
+        let sum = fnv1a(&buf[..body_end]);
+        buf[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(parse_frame(&buf).is_err(), "flagged unknown dtype accepted");
     }
 
     #[test]
@@ -1116,8 +1248,9 @@ mod tests {
         let mut buf = Vec::new();
         encode_response_f32(&mut buf, 9, &[1.0, 2.0]);
         match parse_frame(&buf).unwrap() {
-            Frame::Response { req_id, payload } => {
+            Frame::Response { req_id, degraded, payload } => {
                 assert_eq!(req_id, 9);
+                assert!(!degraded, "unflagged response parsed as degraded");
                 let mut xs = Vec::new();
                 payload_f32s_into(payload, &mut xs).unwrap();
                 assert_eq!(xs, vec![1.0, 2.0]);
@@ -1370,7 +1503,9 @@ mod tests {
                         let xs = g.vec_f32(0, 200, -1e6, 1e6);
                         encode_request_f32(&mut buf, req_id, &name, &xs, deadline);
                         match parse_frame(&buf).unwrap() {
-                            Frame::Request { req_id: r, model, dtype, deadline_ms, payload } => {
+                            Frame::Request {
+                                req_id: r, model, dtype, deadline_ms, payload, ..
+                            } => {
                                 assert_eq!(r, req_id);
                                 assert_eq!(model, name);
                                 assert_eq!(dtype, Dtype::F32Le);
@@ -1402,10 +1537,12 @@ mod tests {
                 }
                 1 => {
                     let xs = g.vec_f32(0, 64, -1e3, 1e3);
-                    encode_response_f32(&mut buf, req_id, &xs);
+                    let degraded = g.bool();
+                    encode_response_f32_opts(&mut buf, req_id, &xs, degraded);
                     match parse_frame(&buf).unwrap() {
-                        Frame::Response { req_id: r, payload } => {
+                        Frame::Response { req_id: r, degraded: d, payload } => {
                             assert_eq!(r, req_id);
+                            assert_eq!(d, degraded);
                             assert_eq!(payload.len(), xs.len() * 4);
                         }
                         f => panic!("wrong frame {f:?}"),

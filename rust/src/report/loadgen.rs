@@ -2,7 +2,7 @@
 //! ([`crate::coordinator::NetServer`] or
 //! [`crate::coordinator::ReactorServer`] — same wire protocol) — the
 //! serving-side perf trajectory (`BENCH_serving.json`, schema
-//! `qnn.bench_serving.v5`).
+//! `qnn.bench_serving.v6`).
 //!
 //! Three standard load shapes:
 //!
@@ -80,6 +80,10 @@ pub struct LoadReport {
     pub busy: usize,
     /// Other server-side error frames.
     pub errors: usize,
+    /// Successful answers whose response frame carried the degraded
+    /// flag — served by a coarse fallback while the primary's guard was
+    /// tripped. Always ≤ `ok`.
+    pub degraded: usize,
     pub elapsed_s: f64,
     /// Successful responses per second over the run.
     pub throughput_rps: f64,
@@ -102,6 +106,7 @@ impl LoadReport {
             ("ok", Json::Num(self.ok as f64)),
             ("busy", Json::Num(self.busy as f64)),
             ("errors", Json::Num(self.errors as f64)),
+            ("degraded", Json::Num(self.degraded as f64)),
             ("elapsed_s", Json::Num(self.elapsed_s)),
             ("throughput_rps", Json::Num(self.throughput_rps)),
             ("p50_ms", Json::Num(self.p50_ms)),
@@ -122,6 +127,7 @@ struct ClientStats {
     ok: usize,
     busy: usize,
     errors: usize,
+    degraded: usize,
     started: Instant,
     finished: Instant,
 }
@@ -193,6 +199,7 @@ pub fn run_load(
                 ok: 0,
                 busy: 0,
                 errors: 0,
+                degraded: 0,
                 started: Instant::now(),
                 finished: Instant::now(),
             };
@@ -229,13 +236,14 @@ pub fn run_load(
                     Err(e) => return Err(anyhow::anyhow!("client {c} failed: {e}")),
                 }
             }
+            stats.degraded = client.degraded_seen() as usize;
             stats.finished = Instant::now();
             Ok(stats)
         }));
     }
 
     let mut lats = Vec::new();
-    let (mut ok, mut busy, mut errors) = (0usize, 0usize, 0usize);
+    let (mut ok, mut busy, mut errors, mut degraded) = (0usize, 0usize, 0usize, 0usize);
     let mut first = None::<Instant>;
     let mut last = None::<Instant>;
     for j in joins {
@@ -244,6 +252,7 @@ pub fn run_load(
         ok += s.ok;
         busy += s.busy;
         errors += s.errors;
+        degraded += s.degraded;
         first = Some(first.map_or(s.started, |f: Instant| f.min(s.started)));
         last = Some(last.map_or(s.finished, |l: Instant| l.max(s.finished)));
     }
@@ -261,6 +270,7 @@ pub fn run_load(
         ok,
         busy,
         errors,
+        degraded,
         elapsed_s,
         throughput_rps: ok as f64 / elapsed_s,
         p50_ms: percentile_f64(&lats, 50.0),
@@ -408,7 +418,7 @@ pub fn run_mux_load(
     }
 
     let mut lats = Vec::new();
-    let (mut ok, mut busy, mut errors) = (0usize, 0usize, 0usize);
+    let (mut ok, mut busy, mut errors, mut degraded) = (0usize, 0usize, 0usize, 0usize);
     let mut first = None::<Instant>;
     let mut last = None::<Instant>;
     for j in joins {
@@ -417,6 +427,7 @@ pub fn run_mux_load(
         ok += s.ok;
         busy += s.busy;
         errors += s.errors;
+        degraded += s.degraded;
         first = Some(first.map_or(s.started, |f: Instant| f.min(s.started)));
         last = Some(last.map_or(s.finished, |l: Instant| l.max(s.finished)));
     }
@@ -434,6 +445,7 @@ pub fn run_mux_load(
         ok,
         busy,
         errors,
+        degraded,
         elapsed_s,
         throughput_rps: ok as f64 / elapsed_s,
         p50_ms: percentile_f64(&lats, 50.0),
@@ -487,6 +499,7 @@ fn mux_thread(
         ok: 0,
         busy: 0,
         errors: 0,
+        degraded: 0,
         started: t0,
         finished: t0,
     };
@@ -627,9 +640,12 @@ fn read_mux_conn(
                 }
             };
             match wire::parse_frame(frame) {
-                Ok(Frame::Response { req_id, .. }) => {
+                Ok(Frame::Response { req_id, degraded, .. }) => {
                     if let Some(sched) = conn.pending.remove(&req_id) {
                         stats.ok += 1;
+                        if degraded {
+                            stats.degraded += 1;
+                        }
                         stats
                             .lats_ms
                             .push(sched.elapsed().as_secs_f64() * 1e3);
@@ -1023,13 +1039,52 @@ pub fn stats_section_json(exposition: &str) -> Json {
     ])
 }
 
-/// Assemble the `qnn.bench_serving.v5` document: the runs, the wire
+/// The `guard` section of a `qnn.bench_serving.v6` document: the
+/// qnn-guard overload story, measured. A saturation burst (offered well
+/// past the admission ceiling) with its shed/degraded tallies, the
+/// adaptive limit's excursion (shrinks under pressure, re-opens after),
+/// whether the guard walked all the way back to Healthy, and how
+/// available the recovered primary is under light load afterwards —
+/// the v6 gate's floors.
+#[allow(clippy::too_many_arguments)]
+pub fn guard_section_json(
+    ceiling: usize,
+    limit_floor: usize,
+    shrinks: u64,
+    reopens: u64,
+    codel_sheds: u64,
+    degraded_requests: u64,
+    recovered: bool,
+    burst: &LoadReport,
+    post_burst: &LoadReport,
+) -> Json {
+    let availability = if post_burst.sent == 0 {
+        1.0
+    } else {
+        post_burst.ok as f64 / post_burst.sent as f64
+    };
+    Json::obj(vec![
+        ("limit_ceiling", Json::Num(ceiling as f64)),
+        ("limit_floor", Json::Num(limit_floor as f64)),
+        ("shrinks", Json::Num(shrinks as f64)),
+        ("reopens", Json::Num(reopens as f64)),
+        ("shed_codel", Json::Num(codel_sheds as f64)),
+        ("degraded_requests", Json::Num(degraded_requests as f64)),
+        ("recovered", Json::Bool(recovered)),
+        ("post_burst_availability", Json::Num(availability)),
+        ("burst_load", burst.to_json()),
+        ("post_burst_load", post_burst.to_json()),
+    ])
+}
+
+/// Assemble the `qnn.bench_serving.v6` document: the runs, the wire
 /// bytes-per-request comparison (the qidx headline), the best
 /// closed-loop throughput as the saturation point, and (when the bench
 /// ran them) the fleet chaos section ([`fleet_section_json`]), the
 /// reactor connection-scaling section ([`reactor_section_json`]), the
-/// self-healing section ([`heal_section_json`]), the reproducibility
-/// meta block ([`bench_meta_json`]), the instrumentation-overhead A/B
+/// self-healing section ([`heal_section_json`]), the overload-control
+/// section ([`guard_section_json`]), the reproducibility meta block
+/// ([`bench_meta_json`]), the instrumentation-overhead A/B
 /// ([`scope_section_json`]) and the scraped registry totals
 /// ([`stats_section_json`]).
 #[allow(clippy::too_many_arguments)]
@@ -1041,6 +1096,7 @@ pub fn serving_bench_doc(
     fleet: Option<Json>,
     reactor: Option<Json>,
     heal: Option<Json>,
+    guard: Option<Json>,
     meta: Option<Json>,
     scope: Option<Json>,
     stats: Option<Json>,
@@ -1061,7 +1117,7 @@ pub fn serving_bench_doc(
         .filter(|r| r.mode == "closed")
         .max_by(|a, b| a.throughput_rps.total_cmp(&b.throughput_rps));
     Json::obj(vec![
-        ("schema", Json::Str("qnn.bench_serving.v5".into())),
+        ("schema", Json::Str("qnn.bench_serving.v6".into())),
         ("provenance", Json::Str(provenance.into())),
         ("meta", meta.unwrap_or(Json::Null)),
         ("scope", scope.unwrap_or(Json::Null)),
@@ -1069,6 +1125,7 @@ pub fn serving_bench_doc(
         ("fleet", fleet.unwrap_or(Json::Null)),
         ("reactor", reactor.unwrap_or(Json::Null)),
         ("heal", heal.unwrap_or(Json::Null)),
+        ("guard", guard.unwrap_or(Json::Null)),
         ("model", Json::Str(model.into())),
         ("input_len", Json::Num(input_len as f64)),
         ("output_len", Json::Num(output_len as f64)),
@@ -1109,6 +1166,7 @@ mod tests {
             ok: 398,
             busy: 2,
             errors: 0,
+            degraded: 0,
             elapsed_s: 398.0 / rps,
             throughput_rps: rps,
             p50_ms: 0.4,
@@ -1137,13 +1195,15 @@ mod tests {
             None,
             None,
             None,
+            None,
             "unit-test",
         );
         let back = Json::parse(&doc.to_pretty()).unwrap();
-        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v5"));
+        assert_eq!(back.get("schema").as_str(), Some("qnn.bench_serving.v6"));
         assert_eq!(back.get("fleet"), &Json::Null);
         assert_eq!(back.get("reactor"), &Json::Null);
         assert_eq!(back.get("heal"), &Json::Null);
+        assert_eq!(back.get("guard"), &Json::Null);
         assert_eq!(back.get("meta"), &Json::Null);
         assert_eq!(back.get("scope"), &Json::Null);
         assert_eq!(back.get("stats"), &Json::Null);
@@ -1193,6 +1253,7 @@ mod tests {
             failovers: 7,
             ejections: 1,
             readmissions: 1,
+            degraded: 0,
             availability: load.availability,
             outcomes: vec![("ok", 795), ("deadline_exceeded", 2), ("timeout", 3)],
             replicas: Vec::new(),
@@ -1204,6 +1265,7 @@ mod tests {
             10,
             &[],
             Some(section),
+            None,
             None,
             None,
             None,
@@ -1244,6 +1306,7 @@ mod tests {
             None,
             None,
             None,
+            None,
             "unit-test",
         );
         let back = Json::parse(&doc.to_pretty()).unwrap();
@@ -1258,6 +1321,45 @@ mod tests {
             heal.get("post_heal_load").get("encoding").as_str(),
             Some("qidx")
         );
+    }
+
+    #[test]
+    fn guard_section_carries_the_gateable_signals() {
+        let mut burst = report("closed", "f32le", 4000.0, 297);
+        burst.ok = 310;
+        burst.busy = 85;
+        burst.errors = 5;
+        burst.degraded = 42;
+        let post = report("closed", "f32le", 9000.0, 297);
+        let section = guard_section_json(32, 3, 6, 4, 9, 42, true, &burst, &post);
+        let doc = serving_bench_doc(
+            "digits-lut",
+            64,
+            10,
+            &[],
+            None,
+            None,
+            None,
+            Some(section),
+            None,
+            None,
+            None,
+            "unit-test",
+        );
+        let back = Json::parse(&doc.to_pretty()).unwrap();
+        let guard = back.get("guard");
+        assert_eq!(guard.get("limit_ceiling").as_usize(), Some(32));
+        assert_eq!(guard.get("limit_floor").as_usize(), Some(3));
+        // The gate's invariants: the limit moved both ways, degradation
+        // demonstrably engaged, and the recovered primary is available.
+        assert_eq!(guard.get("shrinks").as_usize(), Some(6));
+        assert_eq!(guard.get("reopens").as_usize(), Some(4));
+        assert_eq!(guard.get("degraded_requests").as_usize(), Some(42));
+        assert_eq!(guard.get("recovered").as_bool(), Some(true));
+        assert!(guard.get("post_burst_availability").as_f64().unwrap() >= 0.99);
+        let b = guard.get("burst_load");
+        assert_eq!(b.get("degraded").as_usize(), Some(42));
+        assert_eq!(b.get("busy").as_usize(), Some(85));
     }
 
     #[test]
@@ -1279,6 +1381,7 @@ mod tests {
             &[],
             None,
             Some(section),
+            None,
             None,
             None,
             None,
@@ -1322,6 +1425,7 @@ mod tests {
             64,
             10,
             &[],
+            None,
             None,
             None,
             None,

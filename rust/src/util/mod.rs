@@ -17,3 +17,4 @@ pub mod stats;
 pub mod threadpool;
 pub mod timer;
 pub mod trace;
+pub mod watchdog;

@@ -1,0 +1,309 @@
+//! Stall watchdog: heartbeat supervision for the serving stack's
+//! long-lived loops.
+//!
+//! A wedged reactor loop, batcher collector, or worker is invisible
+//! from the outside — the process is up, the socket accepts, and
+//! clients just time out. The watchdog makes it observable: each loop
+//! [`register`]s a [`Heartbeat`] and calls [`Heartbeat::beat`] once per
+//! iteration, wrapping blocking work in [`Heartbeat::enter`]/[`exit`]
+//! (or the RAII [`Heartbeat::busy`]). A heart is **stalled** when it is
+//! active (inside entered work) and hasn't beaten within the deadline —
+//! an idle loop parked on `recv` is *not* stalled, so quiet components
+//! never false-positive.
+//!
+//! A single monitor thread (`qnn-watchdog`) is spawned lazily on first
+//! registration and exits when the last heart drops — components own
+//! their supervision cost, and a fully shut-down stack leaves no extra
+//! thread behind (the fleet chaos suite counts threads). Stall
+//! detections and recoveries are process-global counters rendered by
+//! the metrics registry as `qnn.watchdog.*` (the registry depends on
+//! this module, not the reverse — same layering as `util::fault`).
+//!
+//! Env knobs: `QNN_WATCHDOG_DEADLINE_MS` (stall deadline, default
+//! 5000), `QNN_WATCHDOG_TICK_MS` (monitor poll interval, default 100).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::{Duration, Instant};
+
+fn env_ms(key: &str, default: u64) -> Duration {
+    let ms = std::env::var(key)
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default);
+    Duration::from_millis(ms)
+}
+
+/// The stall deadline the monitor applies (`QNN_WATCHDOG_DEADLINE_MS`).
+pub fn deadline() -> Duration {
+    env_ms("QNN_WATCHDOG_DEADLINE_MS", 5000)
+}
+
+struct HeartInner {
+    name: String,
+    /// Last beat, ns since the watchdog epoch.
+    last_beat_ns: AtomicU64,
+    /// Entered-work depth: >0 means the component is mid-work and the
+    /// deadline applies; 0 means idle (never stalled).
+    active: AtomicUsize,
+    /// Latched while past deadline, cleared on the next beat — so one
+    /// stall counts once, and its recovery once.
+    stalled: AtomicBool,
+}
+
+struct State {
+    inner: Mutex<Registered>,
+    epoch: Instant,
+    stalls: AtomicU64,
+    recoveries: AtomicU64,
+    worker_panics: AtomicU64,
+}
+
+struct Registered {
+    hearts: Vec<Weak<HeartInner>>,
+    monitor_up: bool,
+}
+
+fn state() -> &'static State {
+    static STATE: OnceLock<State> = OnceLock::new();
+    STATE.get_or_init(|| State {
+        inner: Mutex::new(Registered { hearts: Vec::new(), monitor_up: false }),
+        epoch: Instant::now(),
+        stalls: AtomicU64::new(0),
+        recoveries: AtomicU64::new(0),
+        worker_panics: AtomicU64::new(0),
+    })
+}
+
+fn now_ns() -> u64 {
+    state().epoch.elapsed().as_nanos() as u64
+}
+
+/// A registered component's pulse. Dropping it deregisters; when the
+/// last one drops the monitor thread exits.
+pub struct Heartbeat {
+    inner: Arc<HeartInner>,
+}
+
+impl Heartbeat {
+    /// Record liveness. Call once per loop iteration; cheap enough for
+    /// any hot path (one atomic store, plus one more if clearing a
+    /// latched stall).
+    pub fn beat(&self) {
+        self.inner.last_beat_ns.store(now_ns(), Ordering::Relaxed);
+        if self.inner.stalled.swap(false, Ordering::Relaxed) {
+            state().recoveries.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Mark the start of supervised work: from here until [`exit`],
+    /// a missed deadline counts as a stall. Also beats.
+    ///
+    /// [`exit`]: Heartbeat::exit
+    pub fn enter(&self) {
+        self.beat();
+        self.inner.active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mark the end of supervised work (idle components never stall).
+    /// Also beats, so a long job's completion registers as liveness.
+    pub fn exit(&self) {
+        self.inner.active.fetch_sub(1, Ordering::Relaxed);
+        self.beat();
+    }
+
+    /// RAII [`enter`]/[`exit`] for a scope. The depth is a count, so
+    /// concurrent jobs sharing one heart (a worker pool) compose.
+    ///
+    /// [`enter`]: Heartbeat::enter
+    /// [`exit`]: Heartbeat::exit
+    pub fn busy(&self) -> BusyGuard<'_> {
+        self.enter();
+        BusyGuard { heart: self }
+    }
+}
+
+/// Scope guard from [`Heartbeat::busy`].
+pub struct BusyGuard<'a> {
+    heart: &'a Heartbeat,
+}
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        self.heart.exit();
+    }
+}
+
+/// Register a component under `name` and get its [`Heartbeat`]. Spawns
+/// the monitor thread if it isn't running.
+pub fn register(name: &str) -> Heartbeat {
+    let inner = Arc::new(HeartInner {
+        name: name.to_string(),
+        last_beat_ns: AtomicU64::new(now_ns()),
+        active: AtomicUsize::new(0),
+        stalled: AtomicBool::new(false),
+    });
+    let s = state();
+    let mut reg = s.inner.lock().unwrap();
+    reg.hearts.push(Arc::downgrade(&inner));
+    if !reg.monitor_up {
+        reg.monitor_up = true;
+        let tick = env_ms("QNN_WATCHDOG_TICK_MS", 100);
+        let dl = deadline();
+        std::thread::Builder::new()
+            .name("qnn-watchdog".into())
+            .spawn(move || monitor(tick, dl))
+            .expect("spawn watchdog monitor");
+    }
+    drop(reg);
+    Heartbeat { inner }
+}
+
+/// One monitor pass over the live hearts; prunes dropped ones and
+/// returns whether any heart remains. Factored out so tests (and the
+/// monitor loop) share the exact detection logic.
+fn sweep(dl: Duration) -> bool {
+    let s = state();
+    let now = now_ns();
+    let dl_ns = dl.as_nanos() as u64;
+    let mut reg = s.inner.lock().unwrap();
+    reg.hearts.retain(|w| {
+        let Some(h) = w.upgrade() else { return false };
+        let active = h.active.load(Ordering::Relaxed) > 0;
+        let age = now.saturating_sub(h.last_beat_ns.load(Ordering::Relaxed));
+        if active && age > dl_ns {
+            if !h.stalled.swap(true, Ordering::Relaxed) {
+                s.stalls.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "qnn-watchdog: {:?} stalled ({}ms past deadline {}ms)",
+                    h.name,
+                    (age - dl_ns) / 1_000_000,
+                    dl.as_millis(),
+                );
+            }
+        }
+        true
+    });
+    let alive = !reg.hearts.is_empty();
+    if !alive {
+        reg.monitor_up = false; // monitor exits; next register respawns
+    }
+    alive
+}
+
+fn monitor(tick: Duration, dl: Duration) {
+    loop {
+        std::thread::sleep(tick);
+        if !sweep(dl) {
+            return;
+        }
+    }
+}
+
+/// Run one detection pass now with an explicit deadline — deterministic
+/// hook for tests (the background monitor uses the env-configured
+/// deadline on its own clock).
+pub fn check_now(dl: Duration) {
+    sweep(dl);
+}
+
+/// Count a worker panic caught and resolved by a supervisor (the
+/// batcher's per-batch restart path).
+pub fn note_worker_panic() {
+    state().worker_panics.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Process-global watchdog counters for the registry scrape:
+/// `(hearts, stalls, recoveries, worker_panics)`.
+pub fn counters() -> (u64, u64, u64, u64) {
+    let s = state();
+    let hearts = {
+        let reg = s.inner.lock().unwrap();
+        reg.hearts.iter().filter(|w| w.strong_count() > 0).count() as u64
+    };
+    (
+        hearts,
+        s.stalls.load(Ordering::Relaxed),
+        s.recoveries.load(Ordering::Relaxed),
+        s.worker_panics.load(Ordering::Relaxed),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_hearts_never_stall() {
+        let h = register("idle-loop");
+        h.beat();
+        std::thread::sleep(Duration::from_millis(5));
+        let (_, stalls_before, _, _) = counters();
+        // Way past a 1ms deadline, but inactive → not a stall.
+        check_now(Duration::from_millis(1));
+        let (_, stalls_after, _, _) = counters();
+        assert_eq!(stalls_after, stalls_before);
+        drop(h);
+    }
+
+    #[test]
+    fn active_heart_past_deadline_stalls_once_then_recovers() {
+        let h = register("busy-loop");
+        h.enter();
+        std::thread::sleep(Duration::from_millis(10));
+        let (_, stalls0, recov0, _) = counters();
+        check_now(Duration::from_millis(2));
+        check_now(Duration::from_millis(2)); // latched: counts once
+        let (_, stalls1, _, _) = counters();
+        assert_eq!(stalls1, stalls0 + 1);
+        h.beat(); // recovery clears the latch
+        let (_, _, recov1, _) = counters();
+        assert_eq!(recov1, recov0 + 1);
+        // Stall again after another silent active stretch.
+        std::thread::sleep(Duration::from_millis(10));
+        check_now(Duration::from_millis(2));
+        let (_, stalls2, _, _) = counters();
+        assert_eq!(stalls2, stalls1 + 1);
+        h.exit();
+        drop(h);
+    }
+
+    #[test]
+    fn busy_guard_composes_across_concurrent_jobs() {
+        let h = register("pool");
+        {
+            let _a = h.busy();
+            let _b = h.busy();
+            assert_eq!(h.inner.active.load(Ordering::Relaxed), 2);
+        }
+        assert_eq!(h.inner.active.load(Ordering::Relaxed), 0);
+        drop(h);
+    }
+
+    #[test]
+    fn monitor_thread_exits_when_last_heart_drops() {
+        let h = register("transient");
+        // The monitor is up (or about to be): registering flagged it.
+        drop(h);
+        // After all hearts drop, a sweep empties the list and the
+        // monitor exits on its next tick; check_now models that sweep.
+        check_now(Duration::from_millis(1));
+        let s = state();
+        let reg = s.inner.lock().unwrap();
+        // No hearts from *this* test remain (other tests may race their
+        // own, so assert ours is gone rather than emptiness).
+        assert!(reg.hearts.iter().all(|w| w
+            .upgrade()
+            .map(|h| h.name != "transient")
+            .unwrap_or(true)));
+    }
+
+    #[test]
+    fn worker_panics_accumulate() {
+        let (_, _, _, before) = counters();
+        note_worker_panic();
+        let (_, _, _, after) = counters();
+        assert_eq!(after, before + 1);
+    }
+}

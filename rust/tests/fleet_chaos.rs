@@ -24,7 +24,7 @@
 //! failing run replays bit-identically.
 
 use qnn::coordinator::wire::Dtype;
-use qnn::coordinator::{Backend, Fleet, FleetCfg, NetServer, Router, Server, ServerCfg};
+use qnn::coordinator::{Backend, Fleet, FleetCfg, ReactorServer};
 use qnn::report::loadgen::{run_fleet_load, FleetLoadCfg};
 use qnn::util::fault::{self, FaultPlan};
 use std::sync::Arc;
@@ -54,13 +54,15 @@ impl Backend for SumEngine {
     }
 }
 
-fn boot_replica(addr: &str) -> NetServer {
-    let router = Router::new();
-    router.register(
-        "sum",
-        Server::start(Arc::new(SumEngine), ServerCfg::default()),
-    );
-    NetServer::bind(addr, router).unwrap()
+fn boot_replica(addr: &str) -> ReactorServer {
+    // Reactor-fronted replicas: the fleet's reliability contract holds
+    // over the event-driven front-end (cross-connection batching, guard
+    // admission) exactly as it did over thread-per-connection serving.
+    ReactorServer::bind(
+        addr,
+        vec![("sum".to_string(), Arc::new(SumEngine) as Arc<dyn Backend>)],
+    )
+    .unwrap()
 }
 
 fn thread_count() -> Option<usize> {
@@ -99,7 +101,7 @@ fn chaos_every_request_gets_exactly_one_terminal_answer() {
     };
     println!("QNN_FAULT_SEED={seed} plan={plan:?}");
 
-    let replicas_boot: Vec<(String, NetServer)> = (0..3)
+    let replicas_boot: Vec<(String, ReactorServer)> = (0..3)
         .map(|_| {
             let srv = boot_replica("127.0.0.1:0");
             (srv.local_addr().to_string(), srv)

@@ -202,7 +202,8 @@ fn reactor_busy_frames_account_for_every_pipelined_request() {
                 max_delay: Duration::ZERO,
                 workers: 1,
                 max_queue: 2,
-                busy_retry_after: Duration::from_millis(7),
+                busy_retry_after: Some(Duration::from_millis(7)),
+                ..BatcherCfg::default()
             },
             ..ReactorCfg::default()
         },
@@ -398,7 +399,7 @@ fn property_bit_flips_get_checksum_errors_and_the_conn_survives() {
     stream.write_all(&good).unwrap();
     read_one(&mut stream, &mut rbuf);
     let reference = match wire::parse_frame(&rbuf).unwrap() {
-        Frame::Response { req_id, payload } => {
+        Frame::Response { req_id, payload, .. } => {
             assert_eq!(req_id, 7);
             payload.to_vec()
         }
@@ -440,7 +441,7 @@ fn property_bit_flips_get_checksum_errors_and_the_conn_survives() {
     stream.write_all(&again).unwrap();
     read_one(&mut stream, &mut rbuf);
     match wire::parse_frame(&rbuf).unwrap() {
-        Frame::Response { req_id, payload } => {
+        Frame::Response { req_id, payload, .. } => {
             assert_eq!(req_id, 9);
             assert_eq!(payload, &reference[..], "post-corruption answer drifted");
         }
